@@ -1,0 +1,52 @@
+//! Correlated-congestion study (the paper's Table III headline).
+//!
+//! Sweeps the asymptotic variance sigma_inf^2 of the perfectly-correlated
+//! BTD process and reports, per policy, the mean time to target plus
+//! NAC-FL's sample-path gain — showing the paper's core finding: the
+//! NAC-FL advantage over Fixed-Error grows with temporal correlation,
+//! because Fixed-Error's per-round variance budget cannot shift work
+//! between calm and congested stretches.
+//!
+//! Run: `cargo run --release --example correlated_congestion`
+
+use nacfl::config::ExperimentConfig;
+use nacfl::exp::{run_cell, Tier};
+use nacfl::metrics::{gain_vs, Summary};
+use nacfl::netsim::ScenarioKind;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = ExperimentConfig::paper();
+    cfg.seeds = (0..20).collect();
+    let tier = Tier::Analytic { k_eps: 300.0 };
+
+    println!(
+        "{:<12} {:>14} {:>14} {:>14} {:>16} {:>12}",
+        "sigma_inf^2", "fixed:1 mean", "fixed:2 mean", "error mean", "nacfl mean", "gain vs FE"
+    );
+    for si2 in [1.0, 1.5625, 4.0, 16.0, 64.0] {
+        cfg.scenario = ScenarioKind::PerfectlyCorrelated { sigma_inf_sq: si2 };
+        let results = run_cell(&cfg, tier, |_, _, _| {})?;
+        let by = |prefix: &str| {
+            results
+                .iter()
+                .find(|r| r.policy.starts_with(prefix))
+                .unwrap()
+        };
+        let nac = by("nacfl");
+        let fe = by("error");
+        println!(
+            "{:<12} {:>14.4e} {:>14.4e} {:>14.4e} {:>16.4e} {:>11.1}%",
+            si2,
+            Summary::of(&by("fixed:1").times).mean,
+            Summary::of(&by("fixed:2").times).mean,
+            Summary::of(&fe.times).mean,
+            Summary::of(&nac.times).mean,
+            gain_vs(&nac.times, &fe.times),
+        );
+    }
+    println!(
+        "\npaper reference (Table III gains vs Fixed-Error): 13% @ 1.56, 27% @ 4, 21% @ 16 —\n\
+         the monotone-in-correlation trend is the reproduction target (DESIGN.md §6)."
+    );
+    Ok(())
+}

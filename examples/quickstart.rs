@@ -1,0 +1,75 @@
+//! Quickstart: the NAC-FL public API in ~60 lines.
+//!
+//! Builds a small synthetic federated dataset, instantiates the paper's
+//! congestion model and policy roster, and trains the (784, 250, 10)
+//! MLP with FedCOM-V under NAC-FL, printing the simulated wall clock as
+//! it goes.  Uses the pure-rust engine so it runs before `make
+//! artifacts`; pass `--engine xla` (via the `nacfl` CLI) for the
+//! AOT/PJRT path.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use nacfl::config::ExperimentConfig;
+use nacfl::data::synth::{generate, SynthConfig};
+use nacfl::data::{partition, PartitionKind};
+use nacfl::fl::engine::RustEngine;
+use nacfl::fl::fedcom::{run_fedcom, FedcomOptions};
+use nacfl::netsim::{Scenario, ScenarioKind};
+use nacfl::policy::parse_policy;
+use nacfl::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Experiment config: the paper's hyperparameters, scaled down.
+    let mut cfg = ExperimentConfig::paper();
+    cfg.train_n = 5_000;
+    cfg.test_n = 1_000;
+    cfg.eval_samples = 1_000;
+    cfg.train_eval_samples = 1_000;
+    cfg.max_rounds = 150;
+    cfg.eval_every = 5;
+    cfg.engine = "rust".into();
+    cfg.scenario = ScenarioKind::PartiallyCorrelated { sigma_inf_sq: 4.0 };
+
+    // 2. Data: synthetic MNIST-like corpus, one label per client (the
+    //    paper's heterogeneous FL setting).
+    let sc = SynthConfig::default();
+    let train = generate(cfg.train_n, cfg.data_seed, &sc);
+    let test = generate(cfg.test_n, cfg.data_seed ^ 1, &sc);
+    let part = partition(&train, cfg.m, PartitionKind::Heterogeneous, 0);
+
+    // 3. Congestion: partially correlated BTD (paper §IV-A2).
+    let scenario = Scenario::new(cfg.scenario, cfg.m);
+    let mut process = scenario.process(Rng::new(0).derive("net", 0))?;
+
+    // 4. Policy + engine, then train.
+    let mut policy = parse_policy("nacfl:1")?;
+    let mut engine = RustEngine::new();
+    println!("training with {} under {}...", policy.name(), cfg.scenario.label());
+    let trace = run_fedcom(
+        &cfg,
+        &train,
+        &test,
+        &part,
+        policy.as_mut(),
+        &mut process,
+        &mut engine,
+        /*seed=*/ 0,
+        &FedcomOptions::default(),
+    )?;
+
+    for p in &trace.points {
+        println!(
+            "round {:>4}  simulated wall {:>11.3e} s  train loss {:>7.4}  test acc {:>5.1}%  mean bits {:>5.2}",
+            p.round,
+            p.wall,
+            p.train_loss,
+            p.test_acc * 100.0,
+            p.mean_bits
+        );
+    }
+    match trace.time_to_accuracy(cfg.target_acc) {
+        Some(t) => println!("\nreached 90% test accuracy at {t:.3e} simulated seconds"),
+        None => println!("\nrun the full-size example (e2e_train) to reach 90%"),
+    }
+    Ok(())
+}

@@ -1,0 +1,161 @@
+"""AOT: lower every L2 graph to HLO *text* + emit golden parity vectors.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (under --out-dir, default ../artifacts):
+
+  local_round.hlo.txt   quantize.hlo.txt   global_step.hlo.txt
+  eval_chunk.hlo.txt    manifest.json      golden/*.bin + golden/manifest.json
+
+The golden vectors are produced by the pure-jnp oracles in ``kernels.ref``
+and by the L2 graphs themselves; rust unit tests (``cargo test``) replay
+them against the rust-native quantizer and MLP so the three layers share
+one numeric contract.  Python never runs after this step.
+
+Usage: python -m compile.aot [--out-dir DIR] [--skip-golden]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def write_bin(path: str, arr: np.ndarray) -> dict:
+    """Raw little-endian dump + shape/dtype record for the manifest."""
+    a = np.ascontiguousarray(arr)
+    with open(path, "wb") as f:
+        if a.dtype == np.float32:
+            f.write(a.astype("<f4").tobytes())
+        elif a.dtype in (np.int32, np.int64):
+            f.write(a.astype("<i4").tobytes())
+        else:
+            raise ValueError(f"unsupported golden dtype {a.dtype}")
+    return {
+        "file": os.path.basename(path),
+        "shape": list(a.shape),
+        "dtype": "f32" if a.dtype == np.float32 else "i32",
+    }
+
+
+def lower_all(out_dir: str) -> dict:
+    entries = {}
+    for name, (fn, specs) in model.lowering_specs().items():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        entries[name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [
+                {"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs
+            ],
+            "chars": len(text),
+        }
+        print(f"lowered {name}: {len(text)} chars -> {path}")
+    entries["_dims"] = {
+        "P": model.P,
+        "D_IN": model.D_IN,
+        "HIDDEN": model.HIDDEN,
+        "N_CLASSES": model.N_CLASSES,
+        "TAU": model.TAU,
+        "BATCH": model.BATCH,
+        "EVAL_CHUNK": model.EVAL_CHUNK,
+    }
+    return entries
+
+
+def emit_golden(out_dir: str) -> None:
+    """Deterministic parity vectors for the rust-side implementations."""
+    gdir = os.path.join(out_dir, "golden")
+    os.makedirs(gdir, exist_ok=True)
+    man = {}
+    rng = np.random.default_rng(20230217)  # fixed seed: goldens are stable
+
+    # -- quantizer parity (several bit-widths, incl. degenerate inputs) ----
+    n = 4096
+    x = rng.standard_normal(n).astype(np.float32)
+    u = rng.random(n).astype(np.float32)
+    man["quant_x"] = write_bin(os.path.join(gdir, "quant_x.bin"), x)
+    man["quant_u"] = write_bin(os.path.join(gdir, "quant_u.bin"), u)
+    for b in (1, 2, 3, 8):
+        s = float(2**b - 1)
+        dq = np.asarray(ref.quantize_dequantize(jnp.asarray(x), jnp.asarray(u), jnp.float32(s)))
+        man[f"quant_dq_b{b}"] = write_bin(os.path.join(gdir, f"quant_dq_b{b}.bin"), dq)
+    man["quant_norm"] = write_bin(
+        os.path.join(gdir, "quant_norm.bin"),
+        np.asarray([float(ref.inf_norm(jnp.asarray(x)))], dtype=np.float32),
+    )
+
+    # -- MLP parity: forward logits, eval stats, one local round ----------
+    w = (rng.standard_normal(model.P) * 0.05).astype(np.float32)
+    bx = rng.standard_normal((8, model.D_IN)).astype(np.float32)
+    by = rng.integers(0, model.N_CLASSES, size=(8,)).astype(np.int32)
+    man["mlp_w"] = write_bin(os.path.join(gdir, "mlp_w.bin"), w)
+    man["mlp_x"] = write_bin(os.path.join(gdir, "mlp_x.bin"), bx)
+    man["mlp_y"] = write_bin(os.path.join(gdir, "mlp_y.bin"), by)
+
+    logits = np.asarray(model.forward(jnp.asarray(w), jnp.asarray(bx)))
+    man["mlp_logits"] = write_bin(os.path.join(gdir, "mlp_logits.bin"), logits)
+
+    loss_sum, correct = model.eval_chunk(jnp.asarray(w), jnp.asarray(bx), jnp.asarray(by))
+    man["mlp_eval"] = write_bin(
+        os.path.join(gdir, "mlp_eval.bin"),
+        np.asarray([float(loss_sum), float(int(correct))], dtype=np.float32),
+    )
+
+    xs = rng.standard_normal((model.TAU, 8, model.D_IN)).astype(np.float32)
+    ys = rng.integers(0, model.N_CLASSES, size=(model.TAU, 8)).astype(np.int32)
+    eta = np.float32(0.07)
+    (upd,) = model.local_round(jnp.asarray(w), jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(eta))
+    man["round_xs"] = write_bin(os.path.join(gdir, "round_xs.bin"), xs)
+    man["round_ys"] = write_bin(os.path.join(gdir, "round_ys.bin"), ys)
+    man["round_update"] = write_bin(os.path.join(gdir, "round_update.bin"), np.asarray(upd))
+    man["round_eta"] = {"value": 0.07}
+
+    with open(os.path.join(gdir, "manifest.json"), "w") as f:
+        json.dump(man, f, indent=1)
+    print(f"golden vectors -> {gdir} ({len(man)} entries)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--skip-golden", action="store_true")
+    args = ap.parse_args()
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    entries = lower_all(out_dir)
+    if not args.skip_golden:
+        emit_golden(out_dir)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(entries, f, indent=1)
+    print(f"manifest -> {os.path.join(out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

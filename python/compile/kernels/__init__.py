@@ -1,0 +1,11 @@
+"""L1 Pallas kernels (build-time only; lowered with interpret=True).
+
+Modules:
+  quantizer -- stochastic infinity-norm quantizer (paper eq. (11)):
+               inf-norm reduction kernel + quantize-dequantize kernel.
+  dense     -- tiled matmul / fused dense(+sigmoid) kernels used by the
+               (784, 250, 10) MLP, with a custom_vjp whose backward pass
+               is also expressed with the pallas matmul kernel.
+  ref       -- pure-jnp oracles for every kernel (the correctness contract
+               checked by python/tests).
+"""

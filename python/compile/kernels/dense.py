@@ -1,0 +1,177 @@
+"""Tiled Pallas matmul / fused dense kernels with Pallas backward passes.
+
+The (784, 250, 10) sigmoid MLP's fwd *and* bwd are expressed through one
+tiled matmul kernel (:func:`mm`) plus a fused dense+sigmoid forward
+(:func:`dense_sigmoid`).  ``custom_vjp`` wires the backward pass through
+the same Pallas matmul (dx = dz @ W^T, dW = x^T @ dz) and an elementwise
+Pallas kernel for the sigmoid gradient, so the whole training graph —
+not just inference — routes through L1 kernels.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): tiles are (M_BLK, N) with
+the K dimension kept whole in VMEM — at the paper's dims the largest
+operand tile is W1 (784x250 f32 = 766 KiB), far under the ~16 MiB VMEM
+budget, so no K-loop accumulation is needed; ``jnp.dot`` with
+``preferred_element_type=f32`` maps onto the MXU.  ``interpret=True``
+everywhere (CPU PJRT cannot execute Mosaic custom-calls).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-tile size: one tile for the training batch (64), 8 tiles for the
+# eval chunk (512); N and K stay whole (small at the paper's dims).
+M_BLK = 64
+
+
+def _ceil_to(n: int, b: int) -> int:
+    return ((n + b - 1) // b) * b
+
+
+# --------------------------------------------------------------------------
+# Tiled matmul
+# --------------------------------------------------------------------------
+
+
+def _mm_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+
+def mm(a: jax.Array, b: jax.Array, *, m_blk: int = M_BLK) -> jax.Array:
+    """a @ b via a Pallas kernel tiled over rows of ``a``.
+
+    Pads M up to a tile multiple (zero rows contribute zero outputs and
+    are sliced away); K and N are kept whole per tile.
+    """
+    assert a.ndim == 2 and b.ndim == 2 and a.shape[1] == b.shape[0]
+    m, k = a.shape
+    n = b.shape[1]
+    mb = min(m_blk, _ceil_to(m, 8))
+    mp = _ceil_to(m, mb)
+    ap = jnp.pad(a, ((0, mp - m), (0, 0))) if mp != m else a
+    out = pl.pallas_call(
+        _mm_kernel,
+        grid=(mp // mb,),
+        in_specs=[
+            pl.BlockSpec((mb, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((mb, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, n), jnp.float32),
+        interpret=True,
+    )(ap, b)
+    return out[:m]
+
+
+# --------------------------------------------------------------------------
+# Fused dense (+ sigmoid) forward
+# --------------------------------------------------------------------------
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref, *, sigmoid: bool):
+    z = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    z = z + b_ref[...]
+    o_ref[...] = jax.nn.sigmoid(z) if sigmoid else z
+
+
+def _dense_fwd_pallas(x, w, b, sigmoid: bool, m_blk: int = M_BLK):
+    m, k = x.shape
+    n = w.shape[1]
+    mb = min(m_blk, _ceil_to(m, 8))
+    mp = _ceil_to(m, mb)
+    xp = jnp.pad(x, ((0, mp - m), (0, 0))) if mp != m else x
+    b2 = jnp.reshape(b, (1, n))
+    out = pl.pallas_call(
+        lambda x_ref, w_ref, b_ref, o_ref: _dense_kernel(
+            x_ref, w_ref, b_ref, o_ref, sigmoid=sigmoid
+        ),
+        grid=(mp // mb,),
+        in_specs=[
+            pl.BlockSpec((mb, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((mb, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, n), jnp.float32),
+        interpret=True,
+    )(xp, w, b2)
+    return out[:m]
+
+
+# --------------------------------------------------------------------------
+# Elementwise sigmoid-gradient kernel
+# --------------------------------------------------------------------------
+
+
+def _sig_bwd_kernel(y_ref, dy_ref, o_ref):
+    y = y_ref[...]
+    o_ref[...] = dy_ref[...] * y * (1.0 - y)
+
+
+def sigmoid_bwd(y: jax.Array, dy: jax.Array) -> jax.Array:
+    """dz = dy * y * (1 - y) as an elementwise Pallas kernel."""
+    assert y.shape == dy.shape and y.ndim == 2
+    m, n = y.shape
+    return pl.pallas_call(
+        _sig_bwd_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((m, n), lambda i: (0, 0)),
+            pl.BlockSpec((m, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, n), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(y, dy)
+
+
+# --------------------------------------------------------------------------
+# custom_vjp wrappers: the MLP's building blocks
+# --------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def dense_sigmoid(x, w, b):
+    """y = sigmoid(x @ w + b), Pallas fwd and Pallas bwd."""
+    return _dense_fwd_pallas(x, w, b, sigmoid=True)
+
+
+def _ds_fwd(x, w, b):
+    y = _dense_fwd_pallas(x, w, b, sigmoid=True)
+    return y, (x, w, y)
+
+
+def _ds_bwd(res, dy):
+    x, w, y = res
+    dz = sigmoid_bwd(y, dy)
+    dx = mm(dz, jnp.transpose(w))
+    dw = mm(jnp.transpose(x), dz)
+    db = jnp.sum(dz, axis=0)
+    return dx, dw, db
+
+
+dense_sigmoid.defvjp(_ds_fwd, _ds_bwd)
+
+
+@jax.custom_vjp
+def dense_linear(x, w, b):
+    """y = x @ w + b (logits layer), Pallas fwd and Pallas bwd."""
+    return _dense_fwd_pallas(x, w, b, sigmoid=False)
+
+
+def _dl_fwd(x, w, b):
+    y = _dense_fwd_pallas(x, w, b, sigmoid=False)
+    return y, (x, w)
+
+
+def _dl_bwd(res, dy):
+    x, w = res
+    dx = mm(dy, jnp.transpose(w))
+    dw = mm(jnp.transpose(x), dy)
+    db = jnp.sum(dy, axis=0)
+    return dx, dw, db
+
+
+dense_linear.defvjp(_dl_fwd, _dl_bwd)

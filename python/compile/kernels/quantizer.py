@@ -1,0 +1,165 @@
+"""Stochastic infinity-norm quantizer as Pallas kernels (paper eq. (11)).
+
+The compressor used by every policy in the paper is the QSGD-style
+stochastic quantizer
+
+    Q_q(x, b) = ||x||_inf * sign(x) * zeta(x, b)
+
+where ``zeta`` uniformly quantizes ``|x_i| / ||x||_inf`` onto ``s = 2^b - 1``
+levels with unbiased stochastic rounding.  On the wire a client sends the
+sign bits, the per-coordinate level integers (b bits each) and the norm
+(32 bits), i.e. ``s(b) = d*(b+1) + 32`` bits; the server *dequantizes* to
+``norm * sign * level / s``.  These kernels compute the server-side
+dequantized view directly (what the aggregation consumes), plus the norm.
+
+Two kernels:
+
+  * :func:`inf_norm` — single-pass blocked max-|x| reduction.
+  * :func:`quantize_dequantize` — elementwise stochastic round given the
+    norm, the level count ``s`` (a runtime scalar, so one compiled artifact
+    serves every bit-width b in {1..32}) and externally supplied uniform
+    randomness ``u`` (supplied by the rust coordinator's PRNG so the
+    rust-side and python-side quantizers are bit-for-bit comparable).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): both kernels tile the flat
+parameter vector with ``BlockSpec((BLK,))`` so each tile (input + uniforms
++ output, 3*BLK*4 bytes = 96 KiB at BLK=8192) sits in VMEM; the norm is a
+two-pass HBM->VMEM schedule (reduce, then broadcast as a scalar operand)
+instead of a GPU warp reduction.  Lowered with ``interpret=True`` for the
+CPU PJRT runtime.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile size for the flat vector kernels.
+#
+# Perf iteration (EXPERIMENTS.md §Perf L1-1): at the paper's P = 198,760
+# a single 2^18 tile (1 MiB/operand, ~3 MiB total — comfortably inside a
+# TPU core's ~16 MiB VMEM) turns the interpret-mode grid loop into one
+# step and is 4.9x faster than the original BLK = 8192 (25 grid steps);
+# larger models fall back to the grid automatically.
+BLK = 262_144
+
+
+def _pad_to_multiple(x: jax.Array, blk: int) -> jax.Array:
+    n = x.shape[0]
+    rem = (-n) % blk
+    if rem == 0:
+        return x
+    return jnp.pad(x, (0, rem))
+
+
+# --------------------------------------------------------------------------
+# inf-norm reduction kernel
+# --------------------------------------------------------------------------
+
+
+def _inf_norm_kernel(x_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[0, 0] = 0.0
+
+    o_ref[0, 0] = jnp.maximum(o_ref[0, 0], jnp.max(jnp.abs(x_ref[...])))
+
+
+def inf_norm(x: jax.Array, *, blk: int = BLK) -> jax.Array:
+    """max(|x|) over a 1-D vector, as a blocked Pallas reduction.
+
+    Returns a (1, 1) f32 array (scalar layout shared with the quantize
+    kernel's norm operand).
+    """
+    assert x.ndim == 1, "inf_norm expects a flat vector"
+    xp = _pad_to_multiple(x, blk)  # zero padding never changes max|x| >= 0
+    grid = (xp.shape[0] // blk,)
+    return pl.pallas_call(
+        _inf_norm_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((blk,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=True,
+    )(xp)
+
+
+# --------------------------------------------------------------------------
+# quantize-dequantize kernel
+# --------------------------------------------------------------------------
+
+
+def _quantize_kernel(x_ref, u_ref, norm_ref, s_ref, o_ref):
+    x = x_ref[...]
+    u = u_ref[...]
+    norm = norm_ref[0, 0]
+    s = s_ref[0, 0]
+    # Guard the all-zero vector: inv = 0 makes t = 0 everywhere and the
+    # output collapses to sign(x)*0 = 0, which is the exact answer.
+    inv = jnp.where(norm > 0.0, 1.0 / norm, 0.0)
+    t = jnp.abs(x) * inv * s  # in [0, s]
+    low = jnp.floor(t)
+    frac = t - low
+    lev = low + jnp.where(u < frac, 1.0, 0.0)  # unbiased stochastic round
+    # t == s exactly (|x_i| == norm) gives low = s, frac = 0 -> lev = s. A
+    # float blip t = s + eps would give lev = s + 1; clamp for safety.
+    lev = jnp.minimum(lev, s)
+    o_ref[...] = jnp.sign(x) * lev * norm / s
+
+
+def quantize_dequantize(
+    x: jax.Array,
+    u: jax.Array,
+    norm: jax.Array,
+    s: jax.Array,
+    *,
+    blk: int = BLK,
+) -> jax.Array:
+    """Stochastically quantize ``x`` to ``s`` levels and dequantize.
+
+    Args:
+      x:    flat f32 vector (the pre-compression client update).
+      u:    uniforms in [0, 1), same shape as ``x`` (external randomness).
+      norm: (1, 1) f32 — ``||x||_inf`` (from :func:`inf_norm`).
+      s:    (1, 1) f32 — level count ``2^b - 1`` as a *runtime* scalar.
+
+    Returns the dequantized vector ``norm * sign(x) * lev / s`` with
+    ``E[out] = x`` (unbiased, Assumption 8).
+    """
+    assert x.ndim == 1 and x.shape == u.shape
+    n = x.shape[0]
+    xp = _pad_to_multiple(x, blk)
+    up = _pad_to_multiple(u, blk)
+    grid = (xp.shape[0] // blk,)
+    out = pl.pallas_call(
+        _quantize_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0],), jnp.float32),
+        interpret=True,
+    )(xp, up, norm, s)
+    return out[:n]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def quantize(x: jax.Array, u: jax.Array, s: jax.Array):
+    """Full compressor: norm reduction + stochastic quantize-dequantize.
+
+    ``s`` may be shaped () or (1, 1); returns ``(dequantized, norm)`` with
+    norm shaped (1, 1).  This is the graph lowered to
+    ``artifacts/quantize.hlo.txt`` and run by the rust coordinator for
+    every (client, round) pair.
+    """
+    s2 = jnp.reshape(s.astype(jnp.float32), (1, 1))
+    norm = inf_norm(x)
+    dq = quantize_dequantize(x, u, norm, s2)
+    return dq, norm

@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function here is the mathematically transparent definition the Pallas
+kernels must reproduce; ``python/tests/test_kernel.py`` asserts allclose
+between kernel and oracle across shape/dtype sweeps (hypothesis), and
+``aot.py`` emits golden vectors from these oracles that the rust
+implementations (``rust/src/quant``, ``rust/src/model``) are tested
+against — a single parity chain from paper equation to the hot path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def inf_norm(x: jax.Array) -> jax.Array:
+    """||x||_inf of a flat vector."""
+    return jnp.max(jnp.abs(x))
+
+
+def quantize_dequantize(x: jax.Array, u: jax.Array, s: jax.Array) -> jax.Array:
+    """Paper eq. (11): stochastic s-level quantizer, dequantized view.
+
+    zeta_i rounds |x_i|/||x||_inf * s to floor or ceil with probability
+    equal to the fractional part (unbiased).  ``u`` is uniform [0,1)
+    external randomness.
+    """
+    s = s.astype(jnp.float32)
+    norm = inf_norm(x)
+    inv = jnp.where(norm > 0.0, 1.0 / norm, 0.0)
+    t = jnp.abs(x) * inv * s
+    low = jnp.floor(t)
+    frac = t - low
+    lev = jnp.minimum(low + jnp.where(u < frac, 1.0, 0.0), s)
+    return jnp.sign(x) * lev * norm / s
+
+
+def mm(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Plain matmul oracle."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def dense(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Affine layer: x @ w + b."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32) + b
+
+
+def dense_sigmoid(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Fused affine + logistic sigmoid."""
+    return jax.nn.sigmoid(dense(x, w, b))
+
+
+def sigmoid_bwd(y: jax.Array, dy: jax.Array) -> jax.Array:
+    """d/dz sigmoid(z) expressed through the forward output y."""
+    return dy * y * (1.0 - y)

@@ -1,0 +1,140 @@
+"""L2: the paper's FL compute graphs in JAX, built on the L1 Pallas kernels.
+
+The paper trains a fully-connected (784, 250, 10) network with a sigmoid
+hidden layer on (heterogeneously partitioned) MNIST via FedCOM-V
+(Algorithm 2): each round every client runs ``tau = 2`` local SGD steps
+from the broadcast global model and sends the *pre-compressed update*
+``g_j = (w^n - w_j^{tau+1,n}) / eta_n`` (the sum of its local stochastic
+gradients); the server averages stochastically-quantized updates and steps
+``w^{n+1} = w^n - eta_n * gamma_n * mean_j Q(g_j)``.
+
+Everything here is build-time only.  ``aot.py`` lowers four graphs to HLO
+text; the rust coordinator (L3) loads them once and drives every round
+through PJRT:
+
+  local_round   (w[P], xs[TAU,B,784], ys[TAU,B] i32, eta)   -> update[P]
+  quantize_fn   (v[P], u[P], s)                             -> (dq[P], norm)
+  global_step   (w[P], agg[P], eta_gamma)                   -> w'[P]
+  eval_chunk    (w[P], x[E,784], y[E] i32)                  -> (loss_sum, correct)
+
+Parameters travel as ONE flat f32 vector (layout below) so the rust side
+marshals a single literal and the quantizer consumes the update without
+re-layout — exactly what goes on the wire in the paper.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import dense as kdense
+from .kernels import quantizer as kquant
+
+# Paper dimensions (section IV-A5).
+D_IN = 784
+HIDDEN = 250
+N_CLASSES = 10
+TAU = 2        # local computations per round
+BATCH = 64     # client minibatch per local step
+EVAL_CHUNK = 1000  # test/train evaluation chunk size
+
+# Flat parameter layout: [W1 | b1 | W2 | b2]
+_SIZES = (D_IN * HIDDEN, HIDDEN, HIDDEN * N_CLASSES, N_CLASSES)
+P = sum(_SIZES)  # 198,760
+
+
+def unflatten(w: jax.Array):
+    """Split the flat parameter vector into (W1, b1, W2, b2)."""
+    o1 = _SIZES[0]
+    o2 = o1 + _SIZES[1]
+    o3 = o2 + _SIZES[2]
+    w1 = jnp.reshape(w[:o1], (D_IN, HIDDEN))
+    b1 = w[o1:o2]
+    w2 = jnp.reshape(w[o2:o3], (HIDDEN, N_CLASSES))
+    b2 = w[o3:]
+    return w1, b1, w2, b2
+
+
+def flatten(w1, b1, w2, b2) -> jax.Array:
+    return jnp.concatenate(
+        [jnp.ravel(w1), jnp.ravel(b1), jnp.ravel(w2), jnp.ravel(b2)]
+    )
+
+
+def forward(w: jax.Array, x: jax.Array) -> jax.Array:
+    """Logits for a batch ``x`` [B, 784] under flat params ``w``."""
+    w1, b1, w2, b2 = unflatten(w)
+    h = kdense.dense_sigmoid(x, w1, b1)
+    return kdense.dense_linear(h, w2, b2)
+
+
+def _ce_loss_mean(w: jax.Array, x: jax.Array, y: jax.Array) -> jax.Array:
+    """Mean cross-entropy over the batch (y: int32 labels)."""
+    logits = forward(w, x)
+    logz = jax.nn.logsumexp(logits, axis=1)
+    picked = jnp.take_along_axis(logits, y[:, None].astype(jnp.int32), axis=1)[:, 0]
+    return jnp.mean(logz - picked)
+
+
+def local_round(w: jax.Array, xs: jax.Array, ys: jax.Array, eta: jax.Array):
+    """FedCOM-V local stage: TAU SGD steps, return the pre-compressed update.
+
+    xs: [TAU, B, 784], ys: [TAU, B] — a fresh minibatch per local step
+    (Algorithm 2 line 5).  Returns ``(w - w_final) / eta`` which equals the
+    sum of the TAU stochastic gradients.
+    """
+    eta = jnp.reshape(eta, ())
+    wk = w
+    for a in range(TAU):  # static unroll; TAU is a paper constant
+        g = jax.grad(_ce_loss_mean)(wk, xs[a], ys[a])
+        wk = wk - eta * g
+    return ((w - wk) / eta,)
+
+
+def quantize_fn(v: jax.Array, u: jax.Array, s: jax.Array):
+    """Stochastic quantize-dequantize of an update vector (L1 kernel)."""
+    dq, norm = kquant.quantize(v, u, s)
+    return dq, norm
+
+
+def global_step(w: jax.Array, agg: jax.Array, eta_gamma: jax.Array):
+    """Server step: w' = w - eta*gamma * mean-aggregated dequantized update."""
+    return (w - jnp.reshape(eta_gamma, ()) * agg,)
+
+
+def eval_chunk(w: jax.Array, x: jax.Array, y: jax.Array):
+    """Summed CE loss and correct-prediction count over an eval chunk."""
+    logits = forward(w, x)
+    logz = jax.nn.logsumexp(logits, axis=1)
+    picked = jnp.take_along_axis(logits, y[:, None].astype(jnp.int32), axis=1)[:, 0]
+    loss_sum = jnp.sum(logz - picked)
+    correct = jnp.sum((jnp.argmax(logits, axis=1) == y).astype(jnp.int32))
+    return loss_sum, correct
+
+
+# ---------------------------------------------------------------------------
+# Example-input specs for lowering (shapes/dtypes only).
+# ---------------------------------------------------------------------------
+
+
+def lowering_specs():
+    f32, i32 = jnp.float32, jnp.int32
+    sd = jax.ShapeDtypeStruct
+    return {
+        "local_round": (
+            local_round,
+            (sd((P,), f32), sd((TAU, BATCH, D_IN), f32), sd((TAU, BATCH), i32), sd((), f32)),
+        ),
+        "quantize": (
+            quantize_fn,
+            (sd((P,), f32), sd((P,), f32), sd((), f32)),
+        ),
+        "global_step": (
+            global_step,
+            (sd((P,), f32), sd((P,), f32), sd((), f32)),
+        ),
+        "eval_chunk": (
+            eval_chunk,
+            (sd((P,), f32), sd((EVAL_CHUNK, D_IN), f32), sd((EVAL_CHUNK,), i32)),
+        ),
+    }

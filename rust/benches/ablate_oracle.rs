@@ -1,0 +1,63 @@
+//! Ablation A2 (DESIGN.md §6): Theorem-1 convergence.
+//!
+//! On a finite Markov congestion chain (Assumption 4) with a computable
+//! eq.-(4) optimum, tracks NAC-FL's running-estimate objective
+//! r_hat * d_hat and its realized wall-clock rate against the oracle's,
+//! plus NAC-FL's alpha sensitivity (alpha = 1 is the calibrated value
+//! for our analytic variance model; see DESIGN.md §6 note).
+
+use nacfl::config::ExperimentConfig;
+use nacfl::netsim::{MarkovChain, NetworkProcess};
+use nacfl::policy::{CompressionPolicy, NacFl, OraclePolicy};
+use nacfl::util::rng::Rng;
+
+fn main() {
+    let cfg = ExperimentConfig::paper();
+    let ctx = cfg.policy_ctx();
+    let m = cfg.m;
+    let mut srng = Rng::new(21);
+    let states: Vec<Vec<f64>> = (0..8)
+        .map(|_| (0..m).map(|_| srng.normal_ms(1.0, 1.0).exp()).collect())
+        .collect();
+    let chain = MarkovChain::uniform_mixing(states, 0.4, Rng::new(4)).unwrap();
+    let oracle = OraclePolicy::solve(&ctx, &chain);
+    println!(
+        "oracle (eq. 4): E[rho] = {:.4}, E[d] = {:.4e}, objective = {:.4e}\n",
+        oracle.expected_rho,
+        oracle.expected_d,
+        oracle.objective()
+    );
+
+    println!("{:>8} {:>14} {:>10}   (NAC-FL alpha = 1, beta_n = 1/n)", "rounds", "r_hat*d_hat", "gap");
+    let mut nac = NacFl::new(1.0);
+    let mut c2 = chain.clone();
+    for n in 1..=50_000usize {
+        let c = c2.next_state();
+        nac.choose(&ctx, &c);
+        if [10usize, 50, 200, 1000, 5000, 50_000].contains(&n) {
+            let (r, d) = nac.estimates();
+            println!(
+                "{n:>8} {:>14.4e} {:>9.2}%",
+                r * d,
+                (r * d / oracle.objective() - 1.0) * 100.0
+            );
+        }
+    }
+
+    println!("\nalpha sensitivity (objective after 20k rounds; optimum = eq. 4):");
+    for alpha in [0.5, 1.0, 2.0, 4.0] {
+        let mut nac = NacFl::new(alpha);
+        let mut c3 = chain.clone();
+        for _ in 0..20_000 {
+            let c = c3.next_state();
+            nac.choose(&ctx, &c);
+        }
+        let (r, d) = nac.estimates();
+        println!(
+            "  alpha = {alpha:<4} -> r_hat*d_hat = {:.4e} (gap {:+.2}%)",
+            r * d,
+            (r * d / oracle.objective() - 1.0) * 100.0
+        );
+    }
+    println!("\nalpha = 1 recovers the Frank-Wolfe objective exactly (Theorem 1); alpha != 1\nbiases toward duration (>1) or rounds (<1) — the paper tunes alpha = 2 for its\nempirically-calibrated h_eps, ours is analytic so alpha = 1 is the equivalent.");
+}

@@ -1,0 +1,42 @@
+//! Shared support for the paper-table bench targets.
+//!
+//! Each `cargo bench` target regenerates one paper artifact on the
+//! analytic tier (Assumption-1 stopping rule; see `nacfl::sim`) with the
+//! paper's 20 seeds, prints our rows next to the paper's published rows,
+//! and times the regeneration.  `NACFL_BENCH_SEEDS` overrides the seed
+//! count; `NACFL_BENCH_TIER=ml` switches to full FedCOM-V training
+//! (slow; used for the recorded EXPERIMENTS.md runs).
+
+use nacfl::config::ExperimentConfig;
+use nacfl::exp::{run_cell, table_cells, table_for, Tier};
+
+pub fn bench_config() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::paper();
+    if let Ok(s) = std::env::var("NACFL_BENCH_SEEDS") {
+        cfg.seeds = (0..s.parse::<u64>().expect("NACFL_BENCH_SEEDS")).collect();
+    }
+    cfg
+}
+
+pub fn bench_tier() -> Tier {
+    match std::env::var("NACFL_BENCH_TIER").as_deref() {
+        Ok("ml") => Tier::Ml,
+        _ => Tier::Analytic { k_eps: 300.0 },
+    }
+}
+
+/// Regenerate one table and print it alongside the paper's numbers.
+pub fn run_table(table: &str, paper_reference: &str) {
+    let cfg = bench_config();
+    let tier = bench_tier();
+    let started = std::time::Instant::now();
+    for (label, cell_cfg) in table_cells(table, &cfg).expect("preset") {
+        let t0 = std::time::Instant::now();
+        let results = run_cell(&cell_cfg, tier, |_, _, _| {}).expect("cell");
+        let t = table_for(&label, &results);
+        println!("{}", t.render());
+        println!("  (cell regenerated in {:.2?})\n", t0.elapsed());
+    }
+    println!("--- paper's published rows for comparison ---\n{paper_reference}");
+    println!("total: {:.2?}", started.elapsed());
+}

@@ -1,0 +1,66 @@
+//! Regenerates the paper's Fig. 2 illustration: round duration as a
+//! (convex, decreasing) function of the compression parameter q for a
+//! fixed network state — the geometry behind Assumption 3.
+//!
+//! We plot d(tau, b(q), c) against r = h(q) = sqrt(q+1) on the
+//! achievable grid and verify decreasing monotonicity plus midpoint
+//! convexity along the achievable frontier.
+
+use nacfl::config::ExperimentConfig;
+use nacfl::policy::RoundsModel;
+
+fn main() {
+    let cfg = ExperimentConfig::paper();
+    let ctx = cfg.policy_ctx();
+    let c = vec![1.0; cfg.m];
+    println!(
+        "{:>4} {:>12} {:>12} {:>16}   (Fig. 2: duration decreasing + convex in r = h(q))",
+        "b", "q(b)", "r = h(q)", "duration d"
+    );
+    let mut pts: Vec<(f64, f64)> = Vec::new();
+    for b in 1..=16u8 {
+        let q = ctx.rounds.var.q_of_bits(b);
+        let r = RoundsModel::h_of_q(q);
+        let d = ctx.duration(&vec![b; cfg.m], &c);
+        println!("{:>4} {:>12.4} {:>12.4} {:>16.4e}", b, q, r, d);
+        pts.push((r, d));
+    }
+    // Duration decreases in r (more compression error <=> shorter rounds).
+    for w in pts.windows(2) {
+        assert!(
+            w[1].1 >= w[0].1,
+            "d must decrease as r increases (b grows -> r shrinks, d grows)"
+        );
+    }
+    // Midpoint convexity along the achievable frontier (interpolating in r).
+    let interp = |r: f64| -> f64 {
+        // piecewise-linear interpolation of d over the (sorted-in-r) grid
+        let mut sorted = pts.clone();
+        sorted.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        for w in sorted.windows(2) {
+            if r >= w[0].0 && r <= w[1].0 {
+                let f = (r - w[0].0) / (w[1].0 - w[0].0);
+                return w[0].1 * (1.0 - f) + w[1].1 * f;
+            }
+        }
+        f64::NAN
+    };
+    let mut convex_ok = 0;
+    let mut total = 0;
+    let rs: Vec<f64> = pts.iter().map(|p| p.0).collect();
+    for i in 0..rs.len() {
+        for j in (i + 2)..rs.len() {
+            let mid = 0.5 * (rs[i] + rs[j]);
+            let lhs = interp(mid);
+            let rhs = 0.5 * (interp(rs[i]) + interp(rs[j]));
+            if lhs.is_finite() && rhs.is_finite() {
+                total += 1;
+                if lhs <= rhs + 1e-9 {
+                    convex_ok += 1;
+                }
+            }
+        }
+    }
+    println!("\nmidpoint convexity held on {convex_ok}/{total} chord checks");
+    assert!(convex_ok == total, "Assumption 3 convexity violated on the frontier");
+}

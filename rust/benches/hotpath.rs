@@ -1,0 +1,145 @@
+//! P1 (DESIGN.md §6 / §Perf): hot-path microbenchmarks.
+//!
+//! Times every component on the per-round path, per layer:
+//!   L3  policy argmin (eq. 6), Fixed-Error solver, netsim step,
+//!       rust quantizer (throughput), aggregation reduce;
+//!   L2/L1 (via PJRT) local_round / quantize / global_step / eval_chunk
+//!       graph executions, plus an end-to-end threaded coordinator round.
+//!
+//! Results feed EXPERIMENTS.md §Perf (before/after optimization log).
+
+use nacfl::config::ExperimentConfig;
+use nacfl::coordinator::{Coordinator, FailureConfig};
+use nacfl::data::synth::{generate, SynthConfig};
+use nacfl::data::{partition, PartitionKind};
+use nacfl::fl::engine::{make_engine, ComputeEngine, RustEngine};
+use nacfl::model::{Mlp, MlpDims};
+use nacfl::netsim::{NetworkProcess, Scenario, ScenarioKind};
+use nacfl::policy::{parse_policy, solver, CompressionPolicy, NacFl};
+use nacfl::quant::stochastic::quantize_into;
+use nacfl::runtime::{dims, Runtime};
+use nacfl::util::bench::{bench, black_box};
+use nacfl::util::rng::Rng;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() {
+    let cfg = ExperimentConfig::paper();
+    let ctx = cfg.policy_ctx();
+    let budget = Duration::from_millis(400);
+    let mut rng = Rng::new(0);
+    println!("== L3 coordinator hot path ==");
+
+    // Policy argmin (eq. 6), m = 10.
+    let c: Vec<f64> = (0..cfg.m).map(|_| rng.normal_ms(1.0, 1.0).exp()).collect();
+    let mut nac = NacFl::new(1.0);
+    nac.choose(&ctx, &c); // warm estimates
+    let s = bench("nacfl_choose (eq.6 argmin, m=10)", budget, || {
+        let mut p = nac.clone();
+        black_box(p.choose(&ctx, &c));
+    });
+    println!("{}", s.report());
+
+    let s = bench("fixed_error_solver (m=10)", budget, || {
+        black_box(solver::min_duration_with_error_budget(&ctx, &c, 5.25));
+    });
+    println!("{}", s.report());
+
+    // Congestion process step.
+    let sc = Scenario::new(ScenarioKind::PartiallyCorrelated { sigma_inf_sq: 4.0 }, cfg.m);
+    let mut proc = sc.process(Rng::new(1)).unwrap();
+    let s = bench("netsim_step (AR(1) m=10)", budget, || {
+        black_box(proc.next_state());
+    });
+    println!("{}", s.report());
+
+    // Rust quantizer throughput on a full update vector.
+    let v: Vec<f32> = (0..dims::P).map(|_| rng.normal() as f32).collect();
+    let mut out = vec![0.0f32; dims::P];
+    let mut qrng = Rng::new(2);
+    let s = bench("quantize_into (rust, P=198,760)", budget, || {
+        black_box(quantize_into(&v, 3.0, &mut qrng, &mut out));
+    });
+    println!("{} [{:.2} GB/s]", s.report(), s.throughput(dims::P * 4) / 1e9);
+
+    // Aggregation reduce (m adds over P).
+    let dqs: Vec<Vec<f32>> = (0..cfg.m).map(|_| v.clone()).collect();
+    let mut agg = vec![0.0f32; dims::P];
+    let s = bench("aggregate_reduce (m=10, P)", budget, || {
+        agg.fill(0.0);
+        for dq in &dqs {
+            for (a, &x) in agg.iter_mut().zip(dq.iter()) {
+                *a += x * 0.1;
+            }
+        }
+        black_box(agg[0]);
+    });
+    println!("{}", s.report());
+
+    // Rust engine local round (fallback compute).
+    let mut re = RustEngine::new();
+    let d = re.dims();
+    let mlp = Mlp::new(MlpDims::paper());
+    let w = mlp.init_params(&mut rng);
+    let xs: Vec<f32> = (0..d.tau * d.batch * d.d_in).map(|_| rng.uniform_f32()).collect();
+    let ys: Vec<i32> = (0..d.tau * d.batch).map(|i| (i % 10) as i32).collect();
+    let s = bench("local_round (rust engine)", budget, || {
+        black_box(re.local_round(&w, &xs, &ys, 0.07).unwrap());
+    });
+    println!("{}", s.report());
+
+    // PJRT path (skipped without artifacts).
+    if Runtime::artifacts_present("artifacts") {
+        println!("\n== L2/L1 via PJRT (AOT artifacts) ==");
+        let mut xe = make_engine("xla", "artifacts").unwrap();
+        let s = bench("local_round (xla engine)", budget, || {
+            black_box(xe.local_round(&w, &xs, &ys, 0.07).unwrap());
+        });
+        println!("{}", s.report());
+        let mut u = vec![0.0f32; d.p];
+        rng.fill_uniform_f32(&mut u);
+        let upd = xe.local_round(&w, &xs, &ys, 0.07).unwrap();
+        let s = bench("quantize (xla graph, P)", budget, || {
+            black_box(xe.quantize(&upd, 3.0, &u).unwrap());
+        });
+        println!("{} [{:.2} GB/s]", s.report(), s.throughput(dims::P * 4) / 1e9);
+        let s = bench("global_step (xla graph, P)", budget, || {
+            black_box(xe.global_step(&w, &upd, 0.07).unwrap());
+        });
+        println!("{}", s.report());
+        let ex: Vec<f32> = (0..d.eval_chunk * d.d_in).map(|_| rng.uniform_f32()).collect();
+        let ey: Vec<i32> = (0..d.eval_chunk).map(|i| (i % 10) as i32).collect();
+        let s = bench("eval_chunk (xla graph, 1000 rows)", budget, || {
+            black_box(xe.eval_chunk(&w, &ex, &ey).unwrap());
+        });
+        println!("{}", s.report());
+
+        // End-to-end threaded round (the real per-round cost).
+        println!("\n== end-to-end coordinator round (threaded, xla) ==");
+        let mut cfg2 = cfg.clone();
+        cfg2.train_n = 4000;
+        cfg2.test_n = 1000;
+        cfg2.max_rounds = 8;
+        cfg2.eval_every = 1000; // no eval inside the timed window
+        cfg2.target_acc = 2.0;
+        let train = Arc::new(generate(cfg2.train_n, 0, &SynthConfig::default()));
+        let test = Arc::new(generate(cfg2.test_n, 1, &SynthConfig::default()));
+        let part = partition(&train, cfg2.m, PartitionKind::Heterogeneous, 0);
+        let t0 = std::time::Instant::now();
+        let mut co =
+            Coordinator::new(&cfg2, train, test, &part, 0, &FailureConfig::default()).unwrap();
+        let setup = t0.elapsed();
+        let mut pol = parse_policy("nacfl:1").unwrap();
+        let mut proc = sc.process(Rng::new(3)).unwrap();
+        let t1 = std::time::Instant::now();
+        co.run(pol.as_mut(), &mut proc).unwrap();
+        let per_round = t1.elapsed() / cfg2.max_rounds as u32;
+        println!(
+            "coordinator: setup (PJRT client(s) + compile) {setup:.2?}; \
+             {} rounds -> {per_round:.2?}/round",
+            cfg2.max_rounds
+        );
+    } else {
+        println!("\n(artifacts missing: PJRT benches skipped — run `make artifacts`)");
+    }
+}

@@ -1,0 +1,303 @@
+//! Typed experiment configuration with the paper's §IV defaults.
+//!
+//! Loadable from a TOML-subset file ([`super::toml_lite`]) and
+//! overridable from CLI flags; `ExperimentConfig::paper()` is exactly the
+//! setup of §IV-A5 (m = 10, heterogeneous 1-label partition, eta0 = 0.07
+//! decayed 0.9/10 rounds, gamma = 1, tau = 2, alpha = 2, beta_n = 1/n,
+//! target 90 % test accuracy).
+
+use super::toml_lite::{self, Doc};
+use crate::data::PartitionKind;
+use crate::netsim::{DelayModel, ScenarioKind};
+use crate::policy::{PolicyCtx, RoundsModel};
+use crate::quant::{SizeModel, VarianceModel};
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// Number of clients m.
+    pub m: usize,
+    /// Seeds for the multi-run cells (paper: 20).
+    pub seeds: Vec<u64>,
+    pub scenario: ScenarioKind,
+    /// Policy specs (see `policy::parse_policy`).
+    pub policies: Vec<String>,
+    pub partition: PartitionKind,
+    pub delay: DelayModel,
+
+    // FedCOM-V hyperparameters (§IV-A5).
+    pub tau: usize,
+    pub batch: usize,
+    pub eta0: f64,
+    pub lr_decay: f64,
+    pub lr_decay_every: usize,
+    pub gamma: f64,
+
+    // Stopping / evaluation.
+    pub target_acc: f64,
+    pub max_rounds: usize,
+    pub eval_every: usize,
+    /// Test samples per evaluation (subsampled for speed; 10_000 = full).
+    pub eval_samples: usize,
+    /// Train samples per training-loss evaluation.
+    pub train_eval_samples: usize,
+
+    // Compression model.
+    pub c_q: f64,
+    pub alpha: f64,
+
+    // Data.
+    pub train_n: usize,
+    pub test_n: usize,
+    pub data_seed: u64,
+    /// Directory with real MNIST IDX files (falls back to synthetic).
+    pub data_dir: Option<String>,
+
+    // Engine.
+    /// "xla" (AOT artifacts via PJRT) or "rust" (pure-rust fallback).
+    pub engine: String,
+    pub artifact_dir: String,
+    /// Worker threads for client-parallel local compute (0 = #clients).
+    pub workers: usize,
+}
+
+impl ExperimentConfig {
+    /// The paper's §IV setup.
+    pub fn paper() -> Self {
+        ExperimentConfig {
+            m: 10,
+            seeds: (0..20).collect(),
+            scenario: ScenarioKind::HomogeneousIndependent { sigma_sq: 1.0 },
+            policies: crate::policy::paper_roster(),
+            partition: PartitionKind::Heterogeneous,
+            delay: DelayModel::paper_default(),
+            tau: 2,
+            batch: 64,
+            eta0: 0.07,
+            lr_decay: 0.9,
+            lr_decay_every: 10,
+            gamma: 1.0,
+            target_acc: 0.90,
+            max_rounds: 2000,
+            eval_every: 5,
+            eval_samples: 2000,
+            train_eval_samples: 2000,
+            c_q: 6.25,
+            alpha: 2.0,
+            train_n: 60_000,
+            test_n: 10_000,
+            data_seed: 7,
+            data_dir: None,
+            engine: "xla".into(),
+            artifact_dir: "artifacts".into(),
+            workers: 0,
+        }
+    }
+
+    /// A scaled-down config for smoke tests / CI.
+    pub fn smoke() -> Self {
+        let mut c = Self::paper();
+        c.seeds = vec![0, 1];
+        c.max_rounds = 40;
+        c.train_n = 2000;
+        c.test_n = 500;
+        c.eval_samples = 500;
+        c.train_eval_samples = 500;
+        c.engine = "rust".into();
+        c
+    }
+
+    /// Derived policy context (dim = flat parameter count).
+    pub fn policy_ctx(&self) -> PolicyCtx {
+        PolicyCtx {
+            tau: self.tau,
+            delay: self.delay,
+            size: SizeModel::new(crate::runtime::dims::P),
+            rounds: RoundsModel::new(VarianceModel::new(self.c_q)),
+        }
+    }
+
+    /// Learning rate for round n (1-based): eta0 * decay^(n/every).
+    pub fn eta(&self, round: usize) -> f64 {
+        self.eta0 * self.lr_decay.powi(((round - 1) / self.lr_decay_every) as i32)
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::from_doc(&toml_lite::parse(&text)?)
+    }
+
+    pub fn from_doc(doc: &Doc) -> Result<Self> {
+        let mut c = Self::paper();
+        let get = |sec: &str, key: &str| doc.get(sec).and_then(|s| s.get(key));
+        macro_rules! set_usize {
+            ($sec:expr, $key:expr, $field:expr) => {
+                if let Some(v) = get($sec, $key) {
+                    $field = v
+                        .as_i64()
+                        .ok_or_else(|| anyhow!("{}::{} must be an integer", $sec, $key))?
+                        as usize;
+                }
+            };
+        }
+        macro_rules! set_f64 {
+            ($sec:expr, $key:expr, $field:expr) => {
+                if let Some(v) = get($sec, $key) {
+                    $field = v
+                        .as_f64()
+                        .ok_or_else(|| anyhow!("{}::{} must be a number", $sec, $key))?;
+                }
+            };
+        }
+
+        set_usize!("", "m", c.m);
+        if let Some(v) = get("", "seeds") {
+            match v {
+                toml_lite::Value::Int(n) => c.seeds = (0..*n as u64).collect(),
+                toml_lite::Value::Array(a) => {
+                    c.seeds = a
+                        .iter()
+                        .map(|x| x.as_i64().map(|i| i as u64))
+                        .collect::<Option<Vec<_>>>()
+                        .ok_or_else(|| anyhow!("seeds array must be integers"))?;
+                }
+                _ => return Err(anyhow!("seeds must be an int or int array")),
+            }
+        }
+        if let Some(v) = get("", "scenario") {
+            c.scenario = ScenarioKind::parse(
+                v.as_str().ok_or_else(|| anyhow!("scenario must be a string"))?,
+            )?;
+        }
+        if let Some(v) = get("", "policies") {
+            let arr = v.as_array().ok_or_else(|| anyhow!("policies must be an array"))?;
+            c.policies = arr
+                .iter()
+                .map(|x| x.as_str().map(str::to_string))
+                .collect::<Option<Vec<_>>>()
+                .ok_or_else(|| anyhow!("policies must be strings"))?;
+        }
+        if let Some(v) = get("", "partition") {
+            c.partition = PartitionKind::parse(
+                v.as_str().ok_or_else(|| anyhow!("partition must be a string"))?,
+            )?;
+        }
+        if let Some(v) = get("", "delay") {
+            c.delay = DelayModel::parse(
+                v.as_str().ok_or_else(|| anyhow!("delay must be a string"))?,
+            )?;
+        }
+
+        set_usize!("fl", "tau", c.tau);
+        set_usize!("fl", "batch", c.batch);
+        set_f64!("fl", "eta0", c.eta0);
+        set_f64!("fl", "lr_decay", c.lr_decay);
+        set_usize!("fl", "lr_decay_every", c.lr_decay_every);
+        set_f64!("fl", "gamma", c.gamma);
+        set_f64!("fl", "target_acc", c.target_acc);
+        set_usize!("fl", "max_rounds", c.max_rounds);
+        set_usize!("fl", "eval_every", c.eval_every);
+        set_usize!("fl", "eval_samples", c.eval_samples);
+        set_usize!("fl", "train_eval_samples", c.train_eval_samples);
+
+        set_f64!("quant", "c_q", c.c_q);
+        set_f64!("quant", "alpha", c.alpha);
+
+        set_usize!("data", "train_n", c.train_n);
+        set_usize!("data", "test_n", c.test_n);
+        if let Some(v) = get("data", "seed") {
+            c.data_seed = v.as_i64().ok_or_else(|| anyhow!("data::seed int"))? as u64;
+        }
+        if let Some(v) = get("data", "dir") {
+            c.data_dir = Some(v.as_str().ok_or_else(|| anyhow!("data::dir string"))?.into());
+        }
+
+        if let Some(v) = get("engine", "kind") {
+            c.engine = v.as_str().ok_or_else(|| anyhow!("engine::kind string"))?.into();
+        }
+        if let Some(v) = get("engine", "artifact_dir") {
+            c.artifact_dir = v
+                .as_str()
+                .ok_or_else(|| anyhow!("engine::artifact_dir string"))?
+                .into();
+        }
+        set_usize!("engine", "workers", c.workers);
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.m == 0 || self.seeds.is_empty() || self.policies.is_empty() {
+            return Err(anyhow!("m, seeds, policies must be non-empty"));
+        }
+        if !(0.0..=1.0).contains(&self.target_acc) {
+            return Err(anyhow!("target_acc must be in [0, 1]"));
+        }
+        if self.engine != "xla" && self.engine != "rust" {
+            return Err(anyhow!("engine must be `xla` or `rust`"));
+        }
+        for p in &self.policies {
+            crate::policy::parse_policy(p)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_defaults_are_the_papers() {
+        let c = ExperimentConfig::paper();
+        assert_eq!(c.m, 10);
+        assert_eq!(c.seeds.len(), 20);
+        assert_eq!(c.tau, 2);
+        assert!((c.eta0 - 0.07).abs() < 1e-12);
+        assert!((c.alpha - 2.0).abs() < 1e-12);
+        assert_eq!(c.partition, PartitionKind::Heterogeneous);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn eta_decays_every_10_rounds() {
+        let c = ExperimentConfig::paper();
+        assert!((c.eta(1) - 0.07).abs() < 1e-12);
+        assert!((c.eta(10) - 0.07).abs() < 1e-12);
+        assert!((c.eta(11) - 0.07 * 0.9).abs() < 1e-12);
+        assert!((c.eta(21) - 0.07 * 0.81).abs() < 1e-12);
+    }
+
+    #[test]
+    fn from_doc_overrides_and_validates() {
+        let doc = toml_lite::parse(
+            r#"
+seeds = 5
+scenario = "perf:4"
+policies = ["nacfl", "fixed:2"]
+[fl]
+max_rounds = 100
+eta0 = 0.1
+[engine]
+kind = "rust"
+"#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.seeds, vec![0, 1, 2, 3, 4]);
+        assert_eq!(c.scenario, ScenarioKind::PerfectlyCorrelated { sigma_inf_sq: 4.0 });
+        assert_eq!(c.policies.len(), 2);
+        assert_eq!(c.max_rounds, 100);
+        assert_eq!(c.engine, "rust");
+    }
+
+    #[test]
+    fn rejects_bad_policy_and_engine() {
+        let doc = toml_lite::parse("policies = [\"bogus\"]").unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_err());
+        let doc = toml_lite::parse("[engine]\nkind = \"cuda\"").unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! Configuration system: a TOML-subset parser (in-tree `serde`/`toml`
+//! replacement) plus the typed experiment configuration consumed by the
+//! runner, the coordinator and the benches.
+
+pub mod experiment;
+pub mod toml_lite;
+
+pub use experiment::ExperimentConfig;
+pub use toml_lite::{parse as parse_toml, Value};

@@ -1,0 +1,227 @@
+//! TOML-subset parser.
+//!
+//! Supported grammar (sufficient for experiment configs):
+//!   * `[section]` headers (dotted names allowed, stored verbatim);
+//!   * `key = value` with string ("..."), integer, float, boolean,
+//!     and flat arrays of those;
+//!   * `#` comments and blank lines.
+//! Unsupported (rejected loudly rather than silently): multi-line
+//! strings, inline tables, arrays of tables, datetimes.
+
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// section -> key -> value; keys before any `[section]` land in "".
+pub type Doc = BTreeMap<String, BTreeMap<String, Value>>;
+
+pub fn parse(text: &str) -> Result<Doc> {
+    let mut doc: Doc = BTreeMap::new();
+    let mut section = String::new();
+    doc.entry(section.clone()).or_default();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(body) = line.strip_prefix('[') {
+            let name = body
+                .strip_suffix(']')
+                .ok_or_else(|| anyhow!("line {}: unterminated section", lineno + 1))?
+                .trim();
+            if name.is_empty() || name.starts_with('[') {
+                return Err(anyhow!("line {}: unsupported section `{line}`", lineno + 1));
+            }
+            section = name.to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let (key, val) = line
+            .split_once('=')
+            .ok_or_else(|| anyhow!("line {}: expected `key = value`", lineno + 1))?;
+        let key = key.trim();
+        if key.is_empty() {
+            return Err(anyhow!("line {}: empty key", lineno + 1));
+        }
+        let value = parse_value(val.trim())
+            .map_err(|e| anyhow!("line {}: {e}", lineno + 1))?;
+        doc.get_mut(&section).unwrap().insert(key.to_string(), value);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A `#` outside quotes starts a comment.
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if s.is_empty() {
+        return Err(anyhow!("empty value"));
+    }
+    if let Some(body) = s.strip_prefix('"') {
+        let inner = body
+            .strip_suffix('"')
+            .ok_or_else(|| anyhow!("unterminated string"))?;
+        if inner.contains('"') {
+            return Err(anyhow!("embedded quotes unsupported"));
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let inner = body
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow!("unterminated array"))?
+            .trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(Vec::new()));
+        }
+        let items = split_top_level(inner)?
+            .into_iter()
+            .map(|it| parse_value(it.trim()))
+            .collect::<Result<Vec<_>>>()?;
+        return Ok(Value::Array(items));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+            return Ok(Value::Int(i));
+        }
+    }
+    if let Ok(f) = s.replace('_', "").parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(anyhow!("cannot parse value `{s}` (bare strings must be quoted)"))
+}
+
+fn split_top_level(s: &str) -> Result<Vec<&str>> {
+    // No nested arrays in the subset; plain comma split respecting quotes.
+    let mut out = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, ch) in s.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '[' if !in_str => return Err(anyhow!("nested arrays unsupported")),
+            ',' if !in_str => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_document() {
+        let doc = parse(
+            r#"
+# experiment config
+seeds = 20
+[fl]
+eta0 = 0.07          # learning rate
+decay = 0.9
+clients = 10
+policies = ["fixed:1", "nacfl"]
+hetero = true
+[net]
+scenario = "perf:4"
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc[""]["seeds"], Value::Int(20));
+        assert_eq!(doc["fl"]["eta0"].as_f64(), Some(0.07));
+        assert_eq!(doc["fl"]["hetero"], Value::Bool(true));
+        assert_eq!(
+            doc["fl"]["policies"].as_array().unwrap()[1],
+            Value::Str("nacfl".into())
+        );
+        assert_eq!(doc["net"]["scenario"].as_str(), Some("perf:4"));
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = parse("k = \"a#b\"").unwrap();
+        assert_eq!(doc[""]["k"].as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(parse("[unterminated").is_err());
+        assert!(parse("novalue =").is_err());
+        assert!(parse("bare = string").is_err());
+        assert!(parse("arr = [1, [2]]").is_err());
+        assert!(parse("justtext").is_err());
+    }
+
+    #[test]
+    fn numbers_with_underscores_and_floats() {
+        let doc = parse("a = 1_000\nb = 2.5e7").unwrap();
+        assert_eq!(doc[""]["a"], Value::Int(1000));
+        assert_eq!(doc[""]["b"].as_f64(), Some(2.5e7));
+    }
+}

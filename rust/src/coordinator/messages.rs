@@ -1,0 +1,61 @@
+//! Leader <-> worker wire types.
+
+use std::sync::Arc;
+
+/// Work order for one client for one round.
+#[derive(Clone, Debug)]
+pub struct RoundWork {
+    pub round: usize,
+    /// Broadcast global model (shared, read-only).
+    pub w: Arc<Vec<f32>>,
+    pub eta: f32,
+    /// This client's chosen bit-width.
+    pub bits: u8,
+}
+
+/// Worker -> leader response.
+#[derive(Clone, Debug)]
+pub enum WorkerMsg {
+    /// Quantized (dequantized-view) update ready for aggregation.
+    Update {
+        client: usize,
+        round: usize,
+        dq: Vec<f32>,
+        norm: f32,
+    },
+    /// Injected failure: the update was lost in transit.
+    Dropped { client: usize, round: usize },
+    /// Unrecoverable worker error (engine failure).
+    Fatal { client: usize, error: String },
+}
+
+impl WorkerMsg {
+    pub fn client(&self) -> usize {
+        match self {
+            WorkerMsg::Update { client, .. }
+            | WorkerMsg::Dropped { client, .. }
+            | WorkerMsg::Fatal { client, .. } => *client,
+        }
+    }
+
+    pub fn round(&self) -> Option<usize> {
+        match self {
+            WorkerMsg::Update { round, .. } | WorkerMsg::Dropped { round, .. } => Some(*round),
+            WorkerMsg::Fatal { .. } => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accessors() {
+        let m = WorkerMsg::Dropped { client: 3, round: 9 };
+        assert_eq!(m.client(), 3);
+        assert_eq!(m.round(), Some(9));
+        let f = WorkerMsg::Fatal { client: 1, error: "x".into() };
+        assert_eq!(f.round(), None);
+    }
+}

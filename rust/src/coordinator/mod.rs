@@ -1,0 +1,19 @@
+//! The L3 coordinator: leader/worker round pipeline.
+//!
+//! The leader owns the policy engine, the congestion observation, the
+//! global model and the simulated wall clock; one worker thread per
+//! client owns a private compute engine (its own PJRT client for the XLA
+//! path) plus its data shard and RNG streams.  A round is a broadcast of
+//! [`messages::RoundWork`] followed by an aggregation barrier over
+//! [`messages::WorkerMsg`]; updates are reduced in client order so the
+//! parallel loop is bit-identical to the sequential reference
+//! (`fl::fedcom`) — enforced by the `coordinator_parity` integration
+//! test.  Failure injection (update drops, stragglers) exercises the
+//! barrier's degraded paths.
+
+pub mod leader;
+pub mod messages;
+pub mod worker;
+
+pub use leader::{Coordinator, FailureConfig};
+pub use messages::{RoundWork, WorkerMsg};

@@ -1,0 +1,95 @@
+//! Client worker: owns a private compute engine, a data shard, and the
+//! client's RNG streams; executes local rounds + quantization on demand.
+//!
+//! Streams are derived with the same labels as the sequential reference
+//! (`batch`/`quant` keyed by client id), so the threaded pipeline
+//! reproduces it bit-for-bit.
+
+use super::messages::{RoundWork, WorkerMsg};
+use crate::data::Dataset;
+use crate::fl::engine::{make_engine, ComputeEngine};
+use crate::quant::levels;
+use crate::util::rng::Rng;
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+
+/// Per-worker failure-injection knobs (see `leader::FailureConfig`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WorkerFaults {
+    /// Probability an update is dropped after compute.
+    pub drop_prob: f64,
+    /// Artificial straggler delay per round (coordination latency, not
+    /// simulated wall clock).
+    pub straggle: Option<std::time::Duration>,
+}
+
+pub struct WorkerSpec {
+    pub id: usize,
+    pub engine_kind: String,
+    pub artifact_dir: String,
+    pub train: Arc<Dataset>,
+    pub shard: Vec<usize>,
+    pub seed: u64,
+    pub tau: usize,
+    pub batch: usize,
+    pub faults: WorkerFaults,
+}
+
+/// Worker thread body: loop over work orders until the channel closes.
+pub fn run_worker(spec: WorkerSpec, rx: Receiver<RoundWork>, tx: Sender<WorkerMsg>) {
+    let root = Rng::new(spec.seed);
+    let mut batch_rng = root.derive("batch", spec.id as u64);
+    let mut quant_rng = root.derive("quant", spec.id as u64);
+    let mut fault_rng = root.derive("fault", spec.id as u64);
+
+    let mut engine: Box<dyn ComputeEngine> =
+        match make_engine(&spec.engine_kind, &spec.artifact_dir) {
+            Ok(e) => e,
+            Err(e) => {
+                let _ = tx.send(WorkerMsg::Fatal { client: spec.id, error: e.to_string() });
+                return;
+            }
+        };
+    let dims = engine.dims();
+    let mut uniforms = vec![0.0f32; dims.p];
+
+    while let Ok(work) = rx.recv() {
+        // Sample tau stacked minibatches from this client's shard.
+        let mut xs = Vec::with_capacity(spec.tau * spec.batch * spec.train.dim);
+        let mut ys = Vec::with_capacity(spec.tau * spec.batch);
+        for _ in 0..spec.tau {
+            for _ in 0..spec.batch {
+                let i = spec.shard[batch_rng.below(spec.shard.len())];
+                xs.extend_from_slice(spec.train.image(i));
+                ys.push(spec.train.labels[i] as i32);
+            }
+        }
+
+        let result = engine
+            .local_round(&work.w, &xs, &ys, work.eta)
+            .and_then(|upd| {
+                quant_rng.fill_uniform_f32(&mut uniforms);
+                engine.quantize(&upd, levels(work.bits), &uniforms)
+            });
+
+        if let Some(d) = spec.faults.straggle {
+            std::thread::sleep(d);
+        }
+
+        let msg = match result {
+            Ok((dq, norm)) => {
+                // Fault path consumes randomness AFTER compute so the
+                // fault-free stream matches the sequential reference.
+                if spec.faults.drop_prob > 0.0 && fault_rng.uniform() < spec.faults.drop_prob {
+                    WorkerMsg::Dropped { client: spec.id, round: work.round }
+                } else {
+                    WorkerMsg::Update { client: spec.id, round: work.round, dq, norm }
+                }
+            }
+            Err(e) => WorkerMsg::Fatal { client: spec.id, error: e.to_string() },
+        };
+        if tx.send(msg).is_err() {
+            return; // leader gone
+        }
+    }
+}

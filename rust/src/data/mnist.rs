@@ -1,0 +1,154 @@
+//! Real-MNIST IDX loader (optional path; see DESIGN.md §4).
+//!
+//! Reads the classic IDX format (`train-images-idx3-ubyte` etc.), with
+//! transparent gzip support.  When the four files are present under a
+//! data directory the experiment runner uses them instead of the
+//! synthetic corpus, making the no-network substitution drop-out.
+
+use super::Dataset;
+use anyhow::{anyhow, Context, Result};
+use std::io::Read;
+use std::path::Path;
+
+fn read_maybe_gz(path: &Path) -> Result<Vec<u8>> {
+    let gz = path.with_extension(format!(
+        "{}gz",
+        path.extension().map(|e| format!("{}.", e.to_string_lossy())).unwrap_or_default()
+    ));
+    let (bytes, gzipped) = if path.exists() {
+        (std::fs::read(path)?, false)
+    } else if gz.exists() {
+        (std::fs::read(&gz)?, true)
+    } else {
+        return Err(anyhow!("missing {} (or .gz)", path.display()));
+    };
+    if gzipped || bytes.starts_with(&[0x1f, 0x8b]) {
+        let mut d = flate2::read::GzDecoder::new(&bytes[..]);
+        let mut out = Vec::new();
+        d.read_to_end(&mut out).context("gunzip")?;
+        Ok(out)
+    } else {
+        Ok(bytes)
+    }
+}
+
+fn be_u32(b: &[u8]) -> u32 {
+    u32::from_be_bytes([b[0], b[1], b[2], b[3]])
+}
+
+/// Parse an IDX images file into (n, rows*cols, pixels scaled to [0,1]).
+pub fn parse_idx_images(bytes: &[u8]) -> Result<(usize, usize, Vec<f32>)> {
+    if bytes.len() < 16 || be_u32(&bytes[0..4]) != 0x0000_0803 {
+        return Err(anyhow!("bad IDX image magic"));
+    }
+    let n = be_u32(&bytes[4..8]) as usize;
+    let rows = be_u32(&bytes[8..12]) as usize;
+    let cols = be_u32(&bytes[12..16]) as usize;
+    let dim = rows * cols;
+    if bytes.len() < 16 + n * dim {
+        return Err(anyhow!("IDX image payload truncated"));
+    }
+    let px = bytes[16..16 + n * dim]
+        .iter()
+        .map(|&b| b as f32 / 255.0)
+        .collect();
+    Ok((n, dim, px))
+}
+
+/// Parse an IDX labels file.
+pub fn parse_idx_labels(bytes: &[u8]) -> Result<Vec<u8>> {
+    if bytes.len() < 8 || be_u32(&bytes[0..4]) != 0x0000_0801 {
+        return Err(anyhow!("bad IDX label magic"));
+    }
+    let n = be_u32(&bytes[4..8]) as usize;
+    if bytes.len() < 8 + n {
+        return Err(anyhow!("IDX label payload truncated"));
+    }
+    Ok(bytes[8..8 + n].to_vec())
+}
+
+fn load_split(dir: &Path, images: &str, labels: &str) -> Result<Dataset> {
+    let (n, dim, px) = parse_idx_images(&read_maybe_gz(&dir.join(images))?)?;
+    let lb = parse_idx_labels(&read_maybe_gz(&dir.join(labels))?)?;
+    if lb.len() != n {
+        return Err(anyhow!("image/label count mismatch: {n} vs {}", lb.len()));
+    }
+    Ok(Dataset { images: px, labels: lb, dim, n_classes: 10 })
+}
+
+/// Load the (train, test) pair from a directory of IDX(.gz) files.
+pub fn load_pair(dir: impl AsRef<Path>) -> Result<(Dataset, Dataset)> {
+    let d = dir.as_ref();
+    Ok((
+        load_split(d, "train-images-idx3-ubyte", "train-labels-idx1-ubyte")?,
+        load_split(d, "t10k-images-idx3-ubyte", "t10k-labels-idx1-ubyte")?,
+    ))
+}
+
+/// True when a directory holds a full MNIST IDX set.
+pub fn available(dir: impl AsRef<Path>) -> bool {
+    load_pair(dir).is_ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_idx(n: usize, dim_side: usize) -> (Vec<u8>, Vec<u8>) {
+        let mut img = Vec::new();
+        img.extend_from_slice(&0x0000_0803u32.to_be_bytes());
+        img.extend_from_slice(&(n as u32).to_be_bytes());
+        img.extend_from_slice(&(dim_side as u32).to_be_bytes());
+        img.extend_from_slice(&(dim_side as u32).to_be_bytes());
+        for i in 0..n * dim_side * dim_side {
+            img.push((i % 256) as u8);
+        }
+        let mut lab = Vec::new();
+        lab.extend_from_slice(&0x0000_0801u32.to_be_bytes());
+        lab.extend_from_slice(&(n as u32).to_be_bytes());
+        for i in 0..n {
+            lab.push((i % 10) as u8);
+        }
+        (img, lab)
+    }
+
+    #[test]
+    fn parses_synthetic_idx() {
+        let (img, lab) = fake_idx(5, 4);
+        let (n, dim, px) = parse_idx_images(&img).unwrap();
+        assert_eq!((n, dim), (5, 16));
+        assert!((px[1] - 1.0 / 255.0).abs() < 1e-7);
+        let labels = parse_idx_labels(&lab).unwrap();
+        assert_eq!(labels, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(parse_idx_images(&[0u8; 16]).is_err());
+        assert!(parse_idx_labels(&[0u8; 8]).is_err());
+    }
+
+    #[test]
+    fn full_round_trip_via_tempdir_with_gzip() {
+        let dir = std::env::temp_dir().join(format!("nacfl_mnist_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let (img, lab) = fake_idx(10, 28);
+        // train split plain, test split gzipped
+        std::fs::write(dir.join("train-images-idx3-ubyte"), &img).unwrap();
+        std::fs::write(dir.join("train-labels-idx1-ubyte"), &lab).unwrap();
+        for (name, bytes) in [
+            ("t10k-images-idx3-ubyte.gz", &img),
+            ("t10k-labels-idx1-ubyte.gz", &lab),
+        ] {
+            let f = std::fs::File::create(dir.join(name)).unwrap();
+            let mut enc = flate2::write::GzEncoder::new(f, flate2::Compression::fast());
+            std::io::Write::write_all(&mut enc, bytes).unwrap();
+            enc.finish().unwrap();
+        }
+        let (train, test) = load_pair(&dir).unwrap();
+        assert_eq!(train.len(), 10);
+        assert_eq!(test.len(), 10);
+        assert_eq!(train.dim, 784);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

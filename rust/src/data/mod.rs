@@ -1,0 +1,63 @@
+//! Datasets + client partitioning (paper §IV-A5).
+//!
+//! The paper uses MNIST (60k train / 10k test, 10 labels) partitioned
+//! heterogeneously: each of the m = 10 clients holds exactly one label.
+//! The build image has no network access, so [`synth`] provides a
+//! deterministic synthetic digit corpus with the same shape and a
+//! difficulty calibrated so the (784, 250, 10) MLP reaches ~90 % test
+//! accuracy after a few hundred FedCOM-V rounds (DESIGN.md §4 documents
+//! why this preserves the paper's relative-time metrics).  [`mnist`]
+//! loads real MNIST IDX files when present, making the substitution
+//! drop-out: point `--data-dir` at the IDX files and the real corpus is
+//! used instead.
+
+pub mod mnist;
+pub mod partition;
+pub mod synth;
+
+pub use partition::{partition, Partition, PartitionKind};
+
+/// An in-memory image-classification dataset (row-major f32 pixels).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// n * dim pixels in [0, 1].
+    pub images: Vec<f32>,
+    /// n labels in [0, n_classes).
+    pub labels: Vec<u8>,
+    pub dim: usize,
+    pub n_classes: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn image(&self, i: usize) -> &[f32] {
+        &self.images[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Gather rows into a dense batch (images flat, labels i32).
+    pub fn gather(&self, idx: &[usize]) -> (Vec<f32>, Vec<i32>) {
+        let mut xs = Vec::with_capacity(idx.len() * self.dim);
+        let mut ys = Vec::with_capacity(idx.len());
+        for &i in idx {
+            xs.extend_from_slice(self.image(i));
+            ys.push(self.labels[i] as i32);
+        }
+        (xs, ys)
+    }
+
+    /// Per-class counts (test helper + partition sanity checks).
+    pub fn label_histogram(&self) -> Vec<usize> {
+        let mut h = vec![0usize; self.n_classes];
+        for &l in &self.labels {
+            h[l as usize] += 1;
+        }
+        h
+    }
+}

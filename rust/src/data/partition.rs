@@ -1,0 +1,131 @@
+//! Client data partitioning (paper §IV-A5).
+//!
+//! * Heterogeneous (paper default): each client holds data of exactly one
+//!   label (m = 10, 1 unique label per client); for general m, label l
+//!   goes to client `l % m`.
+//! * Homogeneous: a seeded shuffle split into m equal shards.
+
+use super::Dataset;
+use crate::util::rng::Rng;
+use anyhow::{anyhow, Result};
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PartitionKind {
+    /// i.i.d. shards.
+    Homogeneous,
+    /// 1 label per client (the paper's FL-realistic case).
+    Heterogeneous,
+}
+
+impl PartitionKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "homogeneous" | "iid" => Ok(PartitionKind::Homogeneous),
+            "heterogeneous" | "label" => Ok(PartitionKind::Heterogeneous),
+            _ => Err(anyhow!("unknown partition `{s}` (homogeneous | heterogeneous)")),
+        }
+    }
+}
+
+/// Per-client index lists into the shared dataset.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    pub clients: Vec<Vec<usize>>,
+}
+
+impl Partition {
+    pub fn client(&self, j: usize) -> &[usize] {
+        &self.clients[j]
+    }
+
+    pub fn m(&self) -> usize {
+        self.clients.len()
+    }
+}
+
+/// Split `data` across `m` clients.
+pub fn partition(data: &Dataset, m: usize, kind: PartitionKind, seed: u64) -> Partition {
+    assert!(m >= 1);
+    let n = data.len();
+    match kind {
+        PartitionKind::Homogeneous => {
+            let mut idx: Vec<usize> = (0..n).collect();
+            let mut rng = Rng::new(seed).derive("partition", 0);
+            rng.shuffle(&mut idx);
+            let per = n / m;
+            let clients = (0..m)
+                .map(|j| idx[j * per..(j + 1) * per].to_vec())
+                .collect();
+            Partition { clients }
+        }
+        PartitionKind::Heterogeneous => {
+            let mut clients = vec![Vec::new(); m];
+            for i in 0..n {
+                let l = data.labels[i] as usize;
+                clients[l % m].push(i);
+            }
+            Partition { clients }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthConfig};
+
+    fn data() -> Dataset {
+        generate(1000, 1, &SynthConfig::default())
+    }
+
+    #[test]
+    fn heterogeneous_gives_one_label_per_client() {
+        let d = data();
+        let p = partition(&d, 10, PartitionKind::Heterogeneous, 0);
+        assert_eq!(p.m(), 10);
+        for j in 0..10 {
+            let labels: Vec<u8> = p.client(j).iter().map(|&i| d.labels[i]).collect();
+            assert!(!labels.is_empty());
+            assert!(labels.iter().all(|&l| l == labels[0]), "client {j} mixed labels");
+        }
+    }
+
+    #[test]
+    fn heterogeneous_wraps_labels_for_small_m() {
+        let d = data();
+        let p = partition(&d, 4, PartitionKind::Heterogeneous, 0);
+        // client 0 holds labels {0, 4, 8}
+        let mut ls: Vec<u8> = p.client(0).iter().map(|&i| d.labels[i]).collect();
+        ls.sort();
+        ls.dedup();
+        assert_eq!(ls, vec![0, 4, 8]);
+    }
+
+    #[test]
+    fn homogeneous_shards_are_disjoint_equal_and_mixed() {
+        let d = data();
+        let p = partition(&d, 10, PartitionKind::Homogeneous, 7);
+        let mut seen = vec![false; d.len()];
+        for j in 0..10 {
+            assert_eq!(p.client(j).len(), 100);
+            let mut labels: Vec<u8> = p.client(j).iter().map(|&i| d.labels[i]).collect();
+            for &i in p.client(j) {
+                assert!(!seen[i], "index {i} duplicated");
+                seen[i] = true;
+            }
+            labels.sort();
+            labels.dedup();
+            assert!(labels.len() >= 5, "client {j} insufficient label mix");
+        }
+    }
+
+    #[test]
+    fn homogeneous_is_seed_deterministic() {
+        let d = data();
+        let a = partition(&d, 5, PartitionKind::Homogeneous, 3);
+        let b = partition(&d, 5, PartitionKind::Homogeneous, 3);
+        assert_eq!(a.clients, b.clients);
+        let c = partition(&d, 5, PartitionKind::Homogeneous, 4);
+        assert_ne!(a.clients, c.clients);
+    }
+}

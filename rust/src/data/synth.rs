@@ -1,0 +1,212 @@
+//! Deterministic synthetic digit corpus (MNIST stand-in; DESIGN.md §4).
+//!
+//! Each class is a procedural 28x28 prototype: a class-seeded set of
+//! Gaussian strokes (blobs along random short line segments), giving 10
+//! visually distinct but overlapping patterns.  A sample applies
+//! per-example nuisance transforms — random translation, intensity jitter,
+//! a random occlusion patch, distractor blobs and pixel noise — chosen so
+//! a linear model cannot trivially separate the classes but the paper's
+//! (784, 250, 10) MLP reaches ~90 % test accuracy after a few hundred
+//! heterogeneous FedCOM-V rounds (matching the paper's round counts).
+
+use super::Dataset;
+use crate::util::rng::Rng;
+
+pub const SIDE: usize = 28;
+pub const DIM: usize = SIDE * SIDE;
+pub const N_CLASSES: usize = 10;
+
+/// Nuisance-strength knobs (defaults tuned for the paper-scale runs).
+#[derive(Clone, Copy, Debug)]
+pub struct SynthConfig {
+    pub noise_sd: f32,
+    pub max_shift: i32,
+    pub occlusion: usize,
+    pub distractors: usize,
+}
+
+impl Default for SynthConfig {
+    fn default() -> Self {
+        SynthConfig { noise_sd: 0.38, max_shift: 3, occlusion: 7, distractors: 2 }
+    }
+}
+
+/// One Gaussian stroke: a chain of blobs between two endpoints.
+fn add_stroke(proto: &mut [f32], rng: &mut Rng) {
+    let (x0, y0) = (2.0 + rng.uniform() * 24.0, 2.0 + rng.uniform() * 24.0);
+    let (x1, y1) = (
+        (x0 + rng.normal() * 8.0).clamp(2.0, 26.0),
+        (y0 + rng.normal() * 8.0).clamp(2.0, 26.0),
+    );
+    let sigma = 1.1 + rng.uniform() * 0.8;
+    let steps = 14;
+    for t in 0..=steps {
+        let f = t as f64 / steps as f64;
+        let cx = x0 + f * (x1 - x0);
+        let cy = y0 + f * (y1 - y0);
+        stamp_blob(proto, cx, cy, sigma, 0.9);
+    }
+}
+
+fn stamp_blob(img: &mut [f32], cx: f64, cy: f64, sigma: f64, amp: f64) {
+    let r = (3.0 * sigma).ceil() as i64;
+    let (icx, icy) = (cx.round() as i64, cy.round() as i64);
+    for dy in -r..=r {
+        for dx in -r..=r {
+            let (x, y) = (icx + dx, icy + dy);
+            if x < 0 || y < 0 || x >= SIDE as i64 || y >= SIDE as i64 {
+                continue;
+            }
+            let d2 = (x as f64 - cx).powi(2) + (y as f64 - cy).powi(2);
+            let v = amp * (-d2 / (2.0 * sigma * sigma)).exp();
+            let p = &mut img[y as usize * SIDE + x as usize];
+            *p = (*p + v as f32).min(1.0);
+        }
+    }
+}
+
+/// The 10 class prototypes, deterministic in `seed`.
+pub fn prototypes(seed: u64) -> Vec<Vec<f32>> {
+    (0..N_CLASSES)
+        .map(|c| {
+            let mut rng = Rng::new(seed).derive("class_proto", c as u64);
+            let mut proto = vec![0.0f32; DIM];
+            let strokes = 3 + rng.below(3);
+            for _ in 0..strokes {
+                add_stroke(&mut proto, &mut rng);
+            }
+            proto
+        })
+        .collect()
+}
+
+fn render_sample(proto: &[f32], cfg: &SynthConfig, rng: &mut Rng, out: &mut [f32]) {
+    // Random translation.
+    let sx = rng.below(2 * cfg.max_shift as usize + 1) as i32 - cfg.max_shift;
+    let sy = rng.below(2 * cfg.max_shift as usize + 1) as i32 - cfg.max_shift;
+    let gain = 0.7 + 0.5 * rng.uniform_f32();
+    for y in 0..SIDE as i32 {
+        for x in 0..SIDE as i32 {
+            let (px, py) = (x - sx, y - sy);
+            let v = if px >= 0 && py >= 0 && px < SIDE as i32 && py < SIDE as i32 {
+                proto[py as usize * SIDE + px as usize]
+            } else {
+                0.0
+            };
+            out[y as usize * SIDE + x as usize] = v * gain;
+        }
+    }
+    // Distractor blobs (class-independent clutter).
+    for _ in 0..cfg.distractors {
+        let cx = 2.0 + rng.uniform() * 24.0;
+        let cy = 2.0 + rng.uniform() * 24.0;
+        stamp_blob(out, cx, cy, 1.0 + rng.uniform() * 0.5, 0.5);
+    }
+    // Occlusion patch.
+    if cfg.occlusion > 0 {
+        let ox = rng.below(SIDE - cfg.occlusion);
+        let oy = rng.below(SIDE - cfg.occlusion);
+        for y in oy..oy + cfg.occlusion {
+            for x in ox..ox + cfg.occlusion {
+                out[y * SIDE + x] = 0.0;
+            }
+        }
+    }
+    // Pixel noise, clamped to [0, 1].
+    for p in out.iter_mut() {
+        *p = (*p + (rng.normal() as f32) * cfg.noise_sd).clamp(0.0, 1.0);
+    }
+}
+
+/// Generate a dataset of `n` samples with balanced classes.
+pub fn generate(n: usize, seed: u64, cfg: &SynthConfig) -> Dataset {
+    generate_with_protos(n, seed, seed, cfg)
+}
+
+/// The paper-scale pair: 60k train / 10k test from disjoint RNG streams
+/// (same prototypes, different nuisance draws).
+pub fn paper_pair(seed: u64, cfg: &SynthConfig) -> (Dataset, Dataset) {
+    (generate(60_000, seed, cfg), generate_with_protos(10_000, seed, seed ^ 0x7e57_da7a, cfg))
+}
+
+/// Like [`generate`] but with prototype seed decoupled from sample seed —
+/// train/test share classes while drawing independent nuisances.
+pub fn generate_with_protos(n: usize, proto_seed: u64, sample_seed: u64, cfg: &SynthConfig) -> Dataset {
+    let protos = prototypes(proto_seed);
+    let mut rng = Rng::new(sample_seed).derive("synth_samples", 1);
+    let mut images = vec![0.0f32; n * DIM];
+    let mut labels = vec![0u8; n];
+    let mut buf = vec![0.0f32; DIM];
+    for i in 0..n {
+        let c = i % N_CLASSES;
+        render_sample(&protos[c], cfg, &mut rng, &mut buf);
+        images[i * DIM..(i + 1) * DIM].copy_from_slice(&buf);
+        labels[i] = c as u8;
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    let mut srng = Rng::new(sample_seed).derive("synth_order", 2);
+    srng.shuffle(&mut order);
+    let mut im2 = vec![0.0f32; n * DIM];
+    let mut lb2 = vec![0u8; n];
+    for (dst, &src) in order.iter().enumerate() {
+        im2[dst * DIM..(dst + 1) * DIM].copy_from_slice(&images[src * DIM..(src + 1) * DIM]);
+        lb2[dst] = labels[src];
+    }
+    Dataset { images: im2, labels: lb2, dim: DIM, n_classes: N_CLASSES }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_calls() {
+        let cfg = SynthConfig::default();
+        let a = generate(64, 9, &cfg);
+        let b = generate(64, 9, &cfg);
+        assert_eq!(a.images, b.images);
+        assert_eq!(a.labels, b.labels);
+        let c = generate(64, 10, &cfg);
+        assert_ne!(a.images, c.images);
+    }
+
+    #[test]
+    fn balanced_classes_and_valid_pixels() {
+        let d = generate(1000, 3, &SynthConfig::default());
+        let h = d.label_histogram();
+        assert_eq!(h, vec![100; 10]);
+        assert!(d.images.iter().all(|&p| (0.0..=1.0).contains(&p)));
+    }
+
+    #[test]
+    fn classes_are_separated_by_prototype_distance() {
+        // Nearest-prototype classification on clean prototypes must be
+        // perfect, and on noisy samples clearly above chance — the
+        // dataset is learnable but not trivial.
+        let cfg = SynthConfig::default();
+        let protos = prototypes(7);
+        let d = generate(500, 7, &cfg);
+        let mut correct = 0;
+        for i in 0..d.len() {
+            let img = d.image(i);
+            let (mut best, mut bd) = (0usize, f64::INFINITY);
+            for (c, p) in protos.iter().enumerate() {
+                let dist: f64 = img
+                    .iter()
+                    .zip(p.iter())
+                    .map(|(a, b)| ((a - b) as f64).powi(2))
+                    .sum();
+                if dist < bd {
+                    bd = dist;
+                    best = c;
+                }
+            }
+            if best == d.labels[i] as usize {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / d.len() as f64;
+        assert!(acc > 0.5, "nearest-prototype acc {acc} too low (unlearnable)");
+        assert!(acc < 0.999, "nearest-prototype acc {acc} — dataset trivial");
+    }
+}

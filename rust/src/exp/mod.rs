@@ -1,0 +1,8 @@
+//! Experiment runner: multi-seed cells, the paper's table presets, and
+//! gain computation (DESIGN.md §6 experiment index).
+
+pub mod presets;
+pub mod runner;
+
+pub use presets::{fig3_cells, table_cells};
+pub use runner::{run_cell, table_for, CellResult, Tier};

@@ -1,0 +1,99 @@
+//! The paper's experiment presets: one config per table cell / figure
+//! panel (DESIGN.md §6 experiment index).
+
+use crate::config::ExperimentConfig;
+use crate::netsim::ScenarioKind;
+use anyhow::{anyhow, Result};
+
+/// Table presets: returns (cell label, config) pairs.
+///
+/// * table1 — homogeneous independent BTD, sigma^2 in {1, 2, 3}
+/// * table2 — heterogeneous independent BTD
+/// * table3 — perfectly correlated BTD, sigma_inf^2 in {1.56, 4, 16}
+/// * table4 — partially correlated BTD, sigma_inf^2 = 4
+pub fn table_cells(table: &str, base: &ExperimentConfig) -> Result<Vec<(String, ExperimentConfig)>> {
+    let mut cells = Vec::new();
+    let mut with = |label: String, kind: ScenarioKind| {
+        let mut c = base.clone();
+        c.scenario = kind;
+        cells.push((label, c));
+    };
+    match table {
+        "table1" => {
+            for s2 in [1.0, 2.0, 3.0] {
+                with(
+                    format!("Table I, sigma^2 = {s2}"),
+                    ScenarioKind::HomogeneousIndependent { sigma_sq: s2 },
+                );
+            }
+        }
+        "table2" => {
+            with("Table II".into(), ScenarioKind::HeterogeneousIndependent);
+        }
+        "table3" => {
+            for si2 in [1.5625, 4.0, 16.0] {
+                with(
+                    format!("Table III, sigma_inf^2 = {si2}"),
+                    ScenarioKind::PerfectlyCorrelated { sigma_inf_sq: si2 },
+                );
+            }
+        }
+        "table4" => {
+            with(
+                "Table IV, sigma_inf^2 = 4".into(),
+                ScenarioKind::PartiallyCorrelated { sigma_inf_sq: 4.0 },
+            );
+        }
+        _ => return Err(anyhow!("unknown table `{table}` (table1..table4)")),
+    }
+    Ok(cells)
+}
+
+/// Fig. 3 sample-path panels: (panel label, config) — one seed each.
+pub fn fig3_cells(base: &ExperimentConfig) -> Vec<(String, ExperimentConfig)> {
+    let mk = |label: &str, kind: ScenarioKind| {
+        let mut c = base.clone();
+        c.scenario = kind;
+        c.seeds = vec![base.seeds.first().copied().unwrap_or(0)];
+        (label.to_string(), c)
+    };
+    vec![
+        mk("Fig3 (a,d) homog sigma^2=2", ScenarioKind::HomogeneousIndependent { sigma_sq: 2.0 }),
+        mk("Fig3 (b,e) heterog", ScenarioKind::HeterogeneousIndependent),
+        mk("Fig3 (c,f) perf sigma_inf^2=4", ScenarioKind::PerfectlyCorrelated { sigma_inf_sq: 4.0 }),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tables_build() {
+        let base = ExperimentConfig::paper();
+        assert_eq!(table_cells("table1", &base).unwrap().len(), 3);
+        assert_eq!(table_cells("table2", &base).unwrap().len(), 1);
+        assert_eq!(table_cells("table3", &base).unwrap().len(), 3);
+        assert_eq!(table_cells("table4", &base).unwrap().len(), 1);
+        assert!(table_cells("table9", &base).is_err());
+    }
+
+    #[test]
+    fn table3_matches_paper_sigmas() {
+        let base = ExperimentConfig::paper();
+        let cells = table_cells("table3", &base).unwrap();
+        match cells[0].1.scenario {
+            ScenarioKind::PerfectlyCorrelated { sigma_inf_sq } => {
+                assert!((sigma_inf_sq - 1.5625).abs() < 1e-12)
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn fig3_has_three_panels_one_seed() {
+        let cells = fig3_cells(&ExperimentConfig::paper());
+        assert_eq!(cells.len(), 3);
+        assert!(cells.iter().all(|(_, c)| c.seeds.len() == 1));
+    }
+}

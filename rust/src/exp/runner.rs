@@ -1,0 +1,228 @@
+//! Multi-seed experiment execution.
+//!
+//! A *cell* is (scenario, policy roster, seeds); its result is, per
+//! policy, the per-seed time to reach the target — simulated wall-clock
+//! seconds in both tiers:
+//!
+//! * [`Tier::Analytic`] — the Assumption-1 stopping rule (`crate::sim`),
+//!   milliseconds per cell; used by the `cargo bench` table regenerators.
+//! * [`Tier::Ml`] — full FedCOM-V training through the coordinator
+//!   (threaded workers; XLA or rust engine); the end-to-end reproduction.
+//!
+//! Policies are *sample-path paired* (same seed → same congestion path,
+//! same data, same init) exactly as the paper's gain metric requires.
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::{Coordinator, FailureConfig};
+use crate::data::{mnist, partition, synth, Dataset};
+use crate::metrics::{gain_vs, RunTrace, Summary, TableWriter};
+use crate::policy::parse_policy;
+use crate::sim::simulate;
+use crate::util::rng::Rng;
+use anyhow::{Context, Result};
+use std::sync::Arc;
+
+#[derive(Clone, Copy, Debug)]
+pub enum Tier {
+    /// Analytic stopping rule with eps-scale K (uncompressed rounds).
+    Analytic { k_eps: f64 },
+    /// Full ML training (engine from the config).
+    Ml,
+}
+
+impl Tier {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "ml" => Ok(Tier::Ml),
+            "sim" => Ok(Tier::Analytic { k_eps: 100.0 }),
+            _ => {
+                if let Some(k) = s.strip_prefix("sim:") {
+                    Ok(Tier::Analytic { k_eps: k.parse()? })
+                } else {
+                    anyhow::bail!("unknown tier `{s}` (ml | sim[:k_eps])")
+                }
+            }
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    pub policy: String,
+    /// Per-seed time to target (simulated seconds).
+    pub times: Vec<f64>,
+    /// Per-seed rounds to target.
+    pub rounds: Vec<usize>,
+    /// ML tier only: full traces (Fig. 3 source).
+    pub traces: Vec<RunTrace>,
+    /// Seeds that never reached the target (times hold max-round wall).
+    pub unconverged: usize,
+}
+
+/// Load (or synthesize) the dataset pair for a config.
+pub fn load_data(cfg: &ExperimentConfig) -> (Arc<Dataset>, Arc<Dataset>) {
+    if let Some(dir) = &cfg.data_dir {
+        if let Ok((tr, te)) = mnist::load_pair(dir) {
+            eprintln!("using real MNIST from {dir}");
+            return (Arc::new(tr), Arc::new(te));
+        }
+        eprintln!("MNIST not found under {dir}; falling back to synthetic corpus");
+    }
+    let sc = synth::SynthConfig::default();
+    let train = synth::generate_with_protos(cfg.train_n, cfg.data_seed, cfg.data_seed, &sc);
+    let test = synth::generate_with_protos(
+        cfg.test_n,
+        cfg.data_seed,
+        cfg.data_seed ^ 0x7e57_da7a,
+        &sc,
+    );
+    (Arc::new(train), Arc::new(test))
+}
+
+/// Run one cell; `progress` gets one callback per finished (policy, seed).
+pub fn run_cell(
+    cfg: &ExperimentConfig,
+    tier: Tier,
+    mut progress: impl FnMut(&str, u64, f64),
+) -> Result<Vec<CellResult>> {
+    let ctx = cfg.policy_ctx();
+    let mut out = Vec::with_capacity(cfg.policies.len());
+
+    // ML tier: share data across policies/seeds (paired comparisons).
+    let data = matches!(tier, Tier::Ml).then(|| {
+        let (train, test) = load_data(cfg);
+        let part = partition(&train, cfg.m, cfg.partition, cfg.data_seed);
+        (train, test, part)
+    });
+
+    for spec in &cfg.policies {
+        let mut times = Vec::with_capacity(cfg.seeds.len());
+        let mut rounds = Vec::with_capacity(cfg.seeds.len());
+        let mut traces = Vec::new();
+        let mut unconverged = 0usize;
+        for &seed in &cfg.seeds {
+            let mut policy = parse_policy(spec)?;
+            let scenario = crate::netsim::Scenario::new(cfg.scenario, cfg.m);
+            let mut process = scenario
+                .process(Rng::new(seed).derive("net", 0))
+                .context("instantiating congestion process")?;
+            match tier {
+                Tier::Analytic { k_eps } => {
+                    let r = simulate(&ctx, policy.as_mut(), &mut process, k_eps, 10_000_000);
+                    progress(spec, seed, r.wall);
+                    times.push(r.wall);
+                    rounds.push(r.rounds);
+                }
+                Tier::Ml => {
+                    let (train, test, part) = data.as_ref().unwrap();
+                    let mut co = Coordinator::new(
+                        cfg,
+                        Arc::clone(train),
+                        Arc::clone(test),
+                        part,
+                        seed,
+                        &FailureConfig::default(),
+                    )?;
+                    let trace = co.run(policy.as_mut(), &mut process)?;
+                    let t = match trace.time_to_accuracy(cfg.target_acc) {
+                        Some(t) => t,
+                        None => {
+                            unconverged += 1;
+                            trace.points.last().map(|p| p.wall).unwrap_or(f64::NAN)
+                        }
+                    };
+                    progress(spec, seed, t);
+                    times.push(t);
+                    rounds.push(trace.points.last().map(|p| p.round).unwrap_or(0));
+                    traces.push(trace);
+                }
+            }
+        }
+        out.push(CellResult { policy: spec.clone(), times, rounds, traces, unconverged });
+    }
+    Ok(out)
+}
+
+/// Render a cell as a paper-style table (Mean / 90th / 10th / Gain rows).
+pub fn table_for(title: &str, results: &[CellResult]) -> TableWriter {
+    let nacfl = results
+        .iter()
+        .find(|r| r.policy.starts_with("nacfl"))
+        .expect("roster must include nacfl for the gain row");
+    // Paper convention: one power-of-ten scale for the whole table.
+    let max_mean = results
+        .iter()
+        .map(|r| Summary::of(&r.times).mean)
+        .fold(0.0f64, f64::max);
+    let scale = 10f64.powf(max_mean.log10().floor());
+    let cols: Vec<&str> = results.iter().map(|r| r.policy.as_str()).collect();
+    let mut t = TableWriter::new(
+        format!("{title}  [units of {scale:.0e} simulated seconds]"),
+        &cols,
+    );
+    let fmt_row = |f: &dyn Fn(&CellResult) -> String| -> Vec<String> {
+        results.iter().map(f).collect()
+    };
+    t.row("Mean", fmt_row(&|r| TableWriter::scaled(Summary::of(&r.times).mean, scale)));
+    t.row("90th", fmt_row(&|r| TableWriter::scaled(Summary::of(&r.times).p90, scale)));
+    t.row("10th", fmt_row(&|r| TableWriter::scaled(Summary::of(&r.times).p10, scale)));
+    t.row(
+        "Gain",
+        fmt_row(&|r| {
+            if std::ptr::eq(r, nacfl) {
+                "-".into()
+            } else {
+                format!("{:.0}%", gain_vs(&nacfl.times, &r.times))
+            }
+        }),
+    );
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tier_parses() {
+        assert!(matches!(Tier::parse("ml").unwrap(), Tier::Ml));
+        assert!(matches!(Tier::parse("sim").unwrap(), Tier::Analytic { .. }));
+        match Tier::parse("sim:250").unwrap() {
+            Tier::Analytic { k_eps } => assert_eq!(k_eps, 250.0),
+            _ => panic!(),
+        }
+        assert!(Tier::parse("gpu").is_err());
+    }
+
+    #[test]
+    fn analytic_cell_produces_paper_shaped_table() {
+        let mut cfg = ExperimentConfig::paper();
+        cfg.seeds = (0..6).collect();
+        let results = run_cell(&cfg, Tier::Analytic { k_eps: 100.0 }, |_, _, _| {}).unwrap();
+        assert_eq!(results.len(), 5);
+        let table = table_for("Table I (test)", &results);
+        let body = table.render();
+        assert!(body.contains("Mean") && body.contains("Gain"));
+        // NAC-FL should not lose to any fixed-bit policy in mean time.
+        let nacfl_mean = Summary::of(&results[4].times).mean;
+        for r in &results[..3] {
+            assert!(
+                nacfl_mean < Summary::of(&r.times).mean,
+                "nacfl {nacfl_mean:.3e} vs {} {:.3e}",
+                r.policy,
+                Summary::of(&r.times).mean
+            );
+        }
+    }
+
+    #[test]
+    fn pairing_is_sample_path_consistent() {
+        // Same seed, same scenario -> identical congestion path across
+        // policies; fixed:1 and fixed:2 then have deterministic ratio of
+        // round-1 durations = s(1)/s(2) when paths match.
+        let mut cfg = ExperimentConfig::paper();
+        cfg.seeds = vec![42];
+        let r = run_cell(&cfg, Tier::Analytic { k_eps: 30.0 }, |_, _, _| {}).unwrap();
+        assert!(r.iter().all(|c| c.times.len() == 1));
+    }
+}

@@ -1,0 +1,246 @@
+//! Compute engines: the FL round's numeric work behind one trait, so the
+//! coordinator is agnostic to whether compute runs through the AOT
+//! HLO artifacts (PJRT) or the pure-rust reference implementation.
+//!
+//! Both engines implement the same four graphs with the same shapes; the
+//! quantizer takes externally generated uniforms in both, so the two
+//! paths are directly comparable (integration test `engine_parity`).
+
+use crate::model::{mlp, Mlp, MlpDims};
+use crate::quant::stochastic;
+use crate::runtime::{self, dims, Runtime};
+use anyhow::{anyhow, Result};
+
+/// Static shapes shared by both engines (baked into the HLO artifacts).
+#[derive(Clone, Copy, Debug)]
+pub struct EngineDims {
+    pub p: usize,
+    pub d_in: usize,
+    pub tau: usize,
+    pub batch: usize,
+    pub eval_chunk: usize,
+}
+
+impl EngineDims {
+    pub fn paper() -> Self {
+        EngineDims {
+            p: dims::P,
+            d_in: dims::D_IN,
+            tau: dims::TAU,
+            batch: dims::BATCH,
+            eval_chunk: dims::EVAL_CHUNK,
+        }
+    }
+}
+
+/// NOTE: deliberately NOT `Send` — the XLA engine wraps PJRT FFI handles
+/// (`Rc` internals in the `xla` crate).  Each coordinator worker thread
+/// constructs its own engine *inside* the thread (see
+/// `coordinator::worker::run_worker`), which is both sound and faster
+/// (independent PJRT clients execute truly in parallel).
+pub trait ComputeEngine {
+    fn dims(&self) -> EngineDims;
+
+    /// FedCOM-V local stage: tau SGD steps over stacked minibatches
+    /// (`xs`: [tau * batch * d_in], `ys`: [tau * batch]); returns the
+    /// pre-compressed update vector of length P.
+    fn local_round(&mut self, w: &[f32], xs: &[f32], ys: &[i32], eta: f32) -> Result<Vec<f32>>;
+
+    /// Stochastic quantize-dequantize with `s = 2^b - 1` levels and
+    /// external uniforms; returns (dequantized update, inf-norm).
+    fn quantize(&mut self, v: &[f32], s_levels: f64, uniforms: &[f32]) -> Result<(Vec<f32>, f32)>;
+
+    /// Server step: w' = w - eta_gamma * agg.
+    fn global_step(&mut self, w: &[f32], agg: &[f32], eta_gamma: f32) -> Result<Vec<f32>>;
+
+    /// Summed CE loss + correct count over one eval chunk
+    /// (`x`: [eval_chunk * d_in] for the XLA engine; rust accepts any
+    /// row count).
+    fn eval_chunk(&mut self, w: &[f32], x: &[f32], y: &[i32]) -> Result<(f64, usize)>;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-rust engine (tests / fallback).
+pub struct RustEngine {
+    mlp: Mlp,
+    scratch: mlp::Scratch,
+    d: EngineDims,
+}
+
+impl RustEngine {
+    pub fn new() -> Self {
+        RustEngine {
+            mlp: Mlp::new(MlpDims::paper()),
+            scratch: mlp::Scratch::default(),
+            d: EngineDims::paper(),
+        }
+    }
+}
+
+impl Default for RustEngine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ComputeEngine for RustEngine {
+    fn dims(&self) -> EngineDims {
+        self.d
+    }
+
+    fn local_round(&mut self, w: &[f32], xs: &[f32], ys: &[i32], eta: f32) -> Result<Vec<f32>> {
+        Ok(self
+            .mlp
+            .local_round(w, xs, ys, self.d.tau, self.d.batch, eta, &mut self.scratch))
+    }
+
+    fn quantize(&mut self, v: &[f32], s_levels: f64, uniforms: &[f32]) -> Result<(Vec<f32>, f32)> {
+        let q = stochastic::quantize_with_uniforms(v, s_levels, uniforms);
+        Ok((q.dequantized, q.norm))
+    }
+
+    fn global_step(&mut self, w: &[f32], agg: &[f32], eta_gamma: f32) -> Result<Vec<f32>> {
+        Ok(w.iter()
+            .zip(agg.iter())
+            .map(|(&a, &g)| a - eta_gamma * g)
+            .collect())
+    }
+
+    fn eval_chunk(&mut self, w: &[f32], x: &[f32], y: &[i32]) -> Result<(f64, usize)> {
+        Ok(self.mlp.eval_chunk(w, x, y, &mut self.scratch))
+    }
+
+    fn name(&self) -> &'static str {
+        "rust"
+    }
+}
+
+/// PJRT engine over the AOT artifacts (the production path).
+pub struct XlaEngine {
+    rt: Runtime,
+    d: EngineDims,
+}
+
+impl XlaEngine {
+    pub fn new(artifact_dir: &str) -> Result<Self> {
+        if !Runtime::artifacts_present(artifact_dir) {
+            return Err(anyhow!(
+                "artifacts missing under `{artifact_dir}` — run `make artifacts`"
+            ));
+        }
+        let mut rt = Runtime::cpu(artifact_dir)?;
+        rt.load_all()?;
+        Ok(XlaEngine { rt, d: EngineDims::paper() })
+    }
+}
+
+impl ComputeEngine for XlaEngine {
+    fn dims(&self) -> EngineDims {
+        self.d
+    }
+
+    fn local_round(&mut self, w: &[f32], xs: &[f32], ys: &[i32], eta: f32) -> Result<Vec<f32>> {
+        let d = self.d;
+        let args = [
+            runtime::f32_tensor(w, &[d.p as i64])?,
+            runtime::f32_tensor(xs, &[d.tau as i64, d.batch as i64, d.d_in as i64])?,
+            runtime::i32_tensor(ys, &[d.tau as i64, d.batch as i64])?,
+            runtime::f32_scalar(eta),
+        ];
+        let out = self.rt.exec("local_round", &args)?;
+        runtime::to_f32_vec(&out[0])
+    }
+
+    fn quantize(&mut self, v: &[f32], s_levels: f64, uniforms: &[f32]) -> Result<(Vec<f32>, f32)> {
+        let d = self.d;
+        let args = [
+            runtime::f32_tensor(v, &[d.p as i64])?,
+            runtime::f32_tensor(uniforms, &[d.p as i64])?,
+            runtime::f32_scalar(s_levels as f32),
+        ];
+        let out = self.rt.exec("quantize", &args)?;
+        Ok((
+            runtime::to_f32_vec(&out[0])?,
+            runtime::to_f32_scalar(&out[1])?,
+        ))
+    }
+
+    fn global_step(&mut self, w: &[f32], agg: &[f32], eta_gamma: f32) -> Result<Vec<f32>> {
+        let d = self.d;
+        let args = [
+            runtime::f32_tensor(w, &[d.p as i64])?,
+            runtime::f32_tensor(agg, &[d.p as i64])?,
+            runtime::f32_scalar(eta_gamma),
+        ];
+        let out = self.rt.exec("global_step", &args)?;
+        runtime::to_f32_vec(&out[0])
+    }
+
+    fn eval_chunk(&mut self, w: &[f32], x: &[f32], y: &[i32]) -> Result<(f64, usize)> {
+        let d = self.d;
+        if y.len() != d.eval_chunk {
+            return Err(anyhow!(
+                "xla eval_chunk needs exactly {} rows, got {}",
+                d.eval_chunk,
+                y.len()
+            ));
+        }
+        let args = [
+            runtime::f32_tensor(w, &[d.p as i64])?,
+            runtime::f32_tensor(x, &[d.eval_chunk as i64, d.d_in as i64])?,
+            runtime::i32_tensor(y, &[d.eval_chunk as i64])?,
+        ];
+        let out = self.rt.exec("eval_chunk", &args)?;
+        Ok((
+            runtime::to_f32_scalar(&out[0])? as f64,
+            runtime::to_i32_scalar(&out[1])? as usize,
+        ))
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+/// Engine factory from a config spec.
+pub fn make_engine(kind: &str, artifact_dir: &str) -> Result<Box<dyn ComputeEngine>> {
+    match kind {
+        "rust" => Ok(Box::new(RustEngine::new())),
+        "xla" => Ok(Box::new(XlaEngine::new(artifact_dir)?)),
+        _ => Err(anyhow!("unknown engine `{kind}`")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn rust_engine_round_trip() {
+        let mut e = RustEngine::new();
+        let d = e.dims();
+        let mut rng = Rng::new(0);
+        let mlp = Mlp::new(MlpDims::paper());
+        let w = mlp.init_params(&mut rng);
+        let xs: Vec<f32> = (0..d.tau * d.batch * d.d_in)
+            .map(|_| rng.uniform_f32())
+            .collect();
+        let ys: Vec<i32> = (0..d.tau * d.batch).map(|i| (i % 10) as i32).collect();
+        let upd = e.local_round(&w, &xs, &ys, 0.07).unwrap();
+        assert_eq!(upd.len(), d.p);
+        let mut u = vec![0.0f32; d.p];
+        rng.fill_uniform_f32(&mut u);
+        let (dq, norm) = e.quantize(&upd, 3.0, &u).unwrap();
+        assert!(norm > 0.0);
+        let w2 = e.global_step(&w, &dq, 0.07).unwrap();
+        assert_eq!(w2.len(), d.p);
+        assert_ne!(w, w2);
+    }
+
+    #[test]
+    fn factory_rejects_unknown() {
+        assert!(make_engine("cuda", "artifacts").is_err());
+    }
+}

@@ -1,0 +1,254 @@
+//! FedCOM-V reference training loop (paper Algorithm 2 driven by a
+//! compression policy, with simulated wall-clock accounting).
+//!
+//! One round n:
+//!   1. observe the network state c^n (BTD vector) — optionally through
+//!      the §V in-band probe estimator;
+//!   2. policy chooses per-client bit-widths b^n (NAC-FL: eq. (6));
+//!   3. every client runs tau local SGD steps from the broadcast model
+//!      and its update is stochastically quantized at b_j^n;
+//!   4. the server averages dequantized updates and steps the model;
+//!   5. the simulated wall clock advances by d(tau, b^n, c^n).
+//!
+//! This is the single-threaded reference; `coordinator::Leader` runs the
+//! same round pipeline with client-parallel workers and is checked
+//! against this loop for bit-identical results.
+
+use crate::config::ExperimentConfig;
+use crate::data::{Dataset, Partition};
+use crate::fl::engine::ComputeEngine;
+use crate::metrics::{RunTrace, TracePoint};
+use crate::model::{Mlp, MlpDims};
+use crate::netsim::estimator::ProbeEstimator;
+use crate::netsim::NetworkProcess;
+use crate::policy::{CompressionPolicy, PolicyCtx};
+use crate::quant::{levels, EmpiricalVariance};
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+#[derive(Clone, Debug, Default)]
+pub struct FedcomOptions {
+    /// Feed policies probe *estimates* of the BTD instead of the truth
+    /// (None = perfect observation, the paper's simulation setting).
+    pub probe_noise: Option<f64>,
+    /// Track the empirical quantizer variance (c_q calibration ablation).
+    pub track_variance: bool,
+}
+
+/// Sample a stacked tau-minibatch for one client.
+fn sample_batches(
+    data: &Dataset,
+    shard: &[usize],
+    tau: usize,
+    batch: usize,
+    rng: &mut Rng,
+) -> (Vec<f32>, Vec<i32>) {
+    let mut xs = Vec::with_capacity(tau * batch * data.dim);
+    let mut ys = Vec::with_capacity(tau * batch);
+    for _ in 0..tau {
+        for _ in 0..batch {
+            let i = shard[rng.below(shard.len())];
+            xs.extend_from_slice(data.image(i));
+            ys.push(data.labels[i] as i32);
+        }
+    }
+    (xs, ys)
+}
+
+/// Evaluate accuracy/loss over a fixed sampled subset, in engine chunks.
+pub fn evaluate(
+    engine: &mut dyn ComputeEngine,
+    w: &[f32],
+    data: &Dataset,
+    idx: &[usize],
+) -> Result<(f64, f64)> {
+    let chunk = engine.dims().eval_chunk;
+    let mut loss_sum = 0.0;
+    let mut correct = 0usize;
+    let mut n = 0usize;
+    let mut pos = 0;
+    while pos < idx.len() {
+        let take = (idx.len() - pos).min(chunk);
+        if engine.name() == "xla" && take < chunk {
+            break; // xla graphs have a fixed chunk shape; drop the tail
+        }
+        let (x, y) = data.gather(&idx[pos..pos + take]);
+        let (ls, c) = engine.eval_chunk(w, &x, &y)?;
+        loss_sum += ls;
+        correct += c;
+        n += take;
+        pos += take;
+    }
+    if n == 0 {
+        return Ok((f64::NAN, 0.0));
+    }
+    Ok((loss_sum / n as f64, correct as f64 / n as f64))
+}
+
+/// Run one seeded FedCOM-V training to the target accuracy (or
+/// max_rounds); returns the trace with per-eval wall-clock samples.
+#[allow(clippy::too_many_arguments)]
+pub fn run_fedcom(
+    cfg: &ExperimentConfig,
+    train: &Dataset,
+    test: &Dataset,
+    part: &Partition,
+    policy: &mut dyn CompressionPolicy,
+    process: &mut dyn NetworkProcess,
+    engine: &mut dyn ComputeEngine,
+    seed: u64,
+    opts: &FedcomOptions,
+) -> Result<RunTrace> {
+    let ctx: PolicyCtx = cfg.policy_ctx();
+    let m = cfg.m;
+    let d = engine.dims();
+    let root = Rng::new(seed);
+
+    // Model init (shared across policies for sample-path pairing).
+    let mlp = Mlp::new(MlpDims::paper());
+    let mut w = mlp.init_params(&mut root.derive("init", 0));
+
+    // Fixed eval subsets.
+    let mut eval_rng = root.derive("eval", 0);
+    let test_idx = eval_rng.sample_indices(test.len(), cfg.eval_samples.min(test.len()));
+    let train_idx =
+        eval_rng.sample_indices(train.len(), cfg.train_eval_samples.min(train.len()));
+
+    // Per-client streams.
+    let mut batch_rngs: Vec<Rng> = (0..m).map(|j| root.derive("batch", j as u64)).collect();
+    let mut quant_rngs: Vec<Rng> = (0..m).map(|j| root.derive("quant", j as u64)).collect();
+
+    let mut probe = opts
+        .probe_noise
+        .map(|noise| ProbeEstimator::new(m, 0.5, noise, root.derive("probe", 0)));
+    let mut emp_var = opts.track_variance.then(EmpiricalVariance::new);
+
+    let mut trace = RunTrace::new(&policy.name(), &cfg.scenario.label(), seed);
+    let mut wall = 0.0f64;
+    let mut uniforms = vec![0.0f32; d.p];
+    let mut agg = vec![0.0f32; d.p];
+
+    for n in 1..=cfg.max_rounds {
+        // (1) network state, possibly through the probe estimator.
+        let c_true = process.next_state();
+        let c_seen = match probe.as_mut() {
+            Some(p) => p.observe(&c_true),
+            None => c_true.clone(),
+        };
+
+        // (2) compression choice.
+        let bits = policy.choose(&ctx, &c_seen);
+        debug_assert_eq!(bits.len(), m);
+
+        // (3) local stages + quantization (sequential reference path).
+        let eta = cfg.eta(n) as f32;
+        agg.fill(0.0);
+        for j in 0..m {
+            let (xs, ys) =
+                sample_batches(train, part.client(j), d.tau, d.batch, &mut batch_rngs[j]);
+            let upd = engine.local_round(&w, &xs, &ys, eta)?;
+            quant_rngs[j].fill_uniform_f32(&mut uniforms);
+            let (dq, _norm) = engine.quantize(&upd, levels(bits[j]), &uniforms)?;
+            if let Some(ev) = emp_var.as_mut() {
+                ev.observe(bits[j], &upd, &dq);
+            }
+            // Multiply by the reciprocal — a per-element divide cost ~2x
+            // on this reduce (§Perf L3-1).  The coordinator leader uses
+            // the identical expression, preserving bit-parity.
+            let inv_m = 1.0f32 / m as f32;
+            for (a, &v) in agg.iter_mut().zip(dq.iter()) {
+                *a += v * inv_m;
+            }
+        }
+
+        // (4) server step.
+        w = engine.global_step(&w, &agg, (cfg.eta(n) * cfg.gamma) as f32)?;
+
+        // (5) simulated wall clock uses the TRUE network state.
+        wall += ctx.duration(&bits, &c_true);
+
+        if n % cfg.eval_every == 0 || n == cfg.max_rounds {
+            let (train_loss, _) = evaluate(engine, &w, train, &train_idx)?;
+            let (_, test_acc) = evaluate(engine, &w, test, &test_idx)?;
+            trace.push(TracePoint {
+                round: n,
+                wall,
+                train_loss,
+                test_acc,
+                mean_bits: bits.iter().map(|&b| b as f64).sum::<f64>() / m as f64,
+            });
+            if test_acc >= cfg.target_acc {
+                break;
+            }
+        }
+    }
+    Ok(trace)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthConfig};
+    use crate::data::{partition, PartitionKind};
+    use crate::fl::engine::RustEngine;
+    use crate::netsim::Scenario;
+    use crate::policy::parse_policy;
+
+    fn smoke_cfg() -> ExperimentConfig {
+        let mut c = ExperimentConfig::smoke();
+        c.max_rounds = 30;
+        c.eval_every = 5;
+        c.target_acc = 2.0; // never stop early: we check the loss trend
+        c
+    }
+
+    #[test]
+    fn loss_decreases_under_training() {
+        let cfg = smoke_cfg();
+        let train = generate(cfg.train_n, cfg.data_seed, &SynthConfig::default());
+        let test = generate(cfg.test_n, cfg.data_seed ^ 1, &SynthConfig::default());
+        let part = partition(&train, cfg.m, PartitionKind::Heterogeneous, 0);
+        let mut policy = parse_policy("fixed:3").unwrap();
+        let mut proc = Scenario::new(cfg.scenario, cfg.m)
+            .process(Rng::new(5))
+            .unwrap();
+        let mut engine = RustEngine::new();
+        let trace = run_fedcom(
+            &cfg, &train, &test, &part, policy.as_mut(), &mut proc, &mut engine, 0,
+            &FedcomOptions::default(),
+        )
+        .unwrap();
+        assert!(trace.points.len() >= 4);
+        let first = trace.points.first().unwrap().train_loss;
+        let last = trace.points.last().unwrap().train_loss;
+        assert!(last < first, "train loss should fall: {first} -> {last}");
+        assert!(trace.points.last().unwrap().wall > 0.0);
+    }
+
+    #[test]
+    fn deterministic_given_seed_and_policy() {
+        let cfg = smoke_cfg();
+        let train = generate(cfg.train_n, cfg.data_seed, &SynthConfig::default());
+        let test = generate(cfg.test_n, cfg.data_seed ^ 1, &SynthConfig::default());
+        let part = partition(&train, cfg.m, PartitionKind::Heterogeneous, 0);
+        let mut run = |seed: u64| {
+            let mut policy = parse_policy("nacfl").unwrap();
+            let mut proc = Scenario::new(cfg.scenario, cfg.m)
+                .process(Rng::new(seed ^ 0xAA))
+                .unwrap();
+            let mut engine = RustEngine::new();
+            run_fedcom(
+                &cfg, &train, &test, &part, policy.as_mut(), &mut proc, &mut engine, seed,
+                &FedcomOptions::default(),
+            )
+            .unwrap()
+        };
+        let a = run(3);
+        let b = run(3);
+        assert_eq!(a.points.len(), b.points.len());
+        for (pa, pb) in a.points.iter().zip(b.points.iter()) {
+            assert_eq!(pa.wall.to_bits(), pb.wall.to_bits());
+            assert_eq!(pa.test_acc.to_bits(), pb.test_acc.to_bits());
+        }
+    }
+}

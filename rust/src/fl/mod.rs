@@ -1,0 +1,19 @@
+//! FedCOM-V federated training (paper Algorithm 2 + §IV-A5).
+//!
+//! * [`engine`] — the compute-engine abstraction: `XlaEngine` executes the
+//!   AOT artifacts through PJRT (the production path; python never runs),
+//!   `RustEngine` is the numerically-matching pure-rust fallback used by
+//!   tests and artifact-less environments.
+//! * [`fedcom`] — the single-threaded reference training loop (one round
+//!   = policy choice → local stages → quantize → aggregate → global step
+//!   → simulated wall-clock accounting).  The multi-threaded production
+//!   loop lives in [`crate::coordinator`].
+//! * [`schedule`] — learning-rate schedules (paper decay + the Theorem-5
+//!   theoretical schedule as an extension).
+
+pub mod engine;
+pub mod fedcom;
+pub mod schedule;
+
+pub use engine::{make_engine, ComputeEngine, EngineDims, RustEngine};
+pub use fedcom::{run_fedcom, FedcomOptions};

@@ -1,0 +1,89 @@
+//! Learning-rate / local-computation schedules.
+//!
+//! * [`PaperSchedule`] — §IV-A5: eta0 = 0.07 decayed by 0.9 every 10
+//!   rounds; gamma = 1 and tau = 2 fixed.
+//! * [`TheoremSchedule`] — the Theorem-5 theoretical rates
+//!   (eta_n = c_eta/(L n), gamma_n = c_gamma/sqrt(q_bar^n + 1),
+//!   tau_n = n/(2 c_eta)), provided as an extension for the convergence
+//!   ablation; not used by the table reproductions.
+
+/// Per-round hyperparameters handed to the engines.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RoundHyper {
+    pub eta: f64,
+    pub gamma: f64,
+    pub tau: usize,
+}
+
+pub trait Schedule: Send {
+    /// Hyperparameters for round n (1-based); `q_bar` is the across-client
+    /// average normalized variance chosen this round (Theorem 5's gamma_n
+    /// adapts to it; the paper schedule ignores it).
+    fn round(&self, n: usize, q_bar: f64) -> RoundHyper;
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct PaperSchedule {
+    pub eta0: f64,
+    pub decay: f64,
+    pub every: usize,
+    pub gamma: f64,
+    pub tau: usize,
+}
+
+impl PaperSchedule {
+    pub fn paper() -> Self {
+        PaperSchedule { eta0: 0.07, decay: 0.9, every: 10, gamma: 1.0, tau: 2 }
+    }
+}
+
+impl Schedule for PaperSchedule {
+    fn round(&self, n: usize, _q_bar: f64) -> RoundHyper {
+        let k = ((n - 1) / self.every) as i32;
+        RoundHyper { eta: self.eta0 * self.decay.powi(k), gamma: self.gamma, tau: self.tau }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct TheoremSchedule {
+    /// c_eta = 2 (L Δ_f sqrt(m) (q_max/m + 1) / sigma)^2 — treated as a
+    /// tunable here since L, Δ_f, sigma are unknown a priori.
+    pub c_eta: f64,
+    /// c_gamma = 1 / (2 (q_max/m + 1)).
+    pub c_gamma: f64,
+    /// Smoothness placeholder.
+    pub l: f64,
+}
+
+impl Schedule for TheoremSchedule {
+    fn round(&self, n: usize, q_bar: f64) -> RoundHyper {
+        RoundHyper {
+            eta: self.c_eta / (self.l * n as f64),
+            gamma: self.c_gamma / (q_bar + 1.0).sqrt(),
+            tau: ((n as f64 / (2.0 * self.c_eta)).ceil() as usize).max(1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_schedule_matches_section_iv() {
+        let s = PaperSchedule::paper();
+        assert_eq!(s.round(1, 0.0), RoundHyper { eta: 0.07, gamma: 1.0, tau: 2 });
+        assert!((s.round(11, 0.0).eta - 0.063).abs() < 1e-12);
+        assert!((s.round(25, 0.0).eta - 0.07 * 0.81).abs() < 1e-12);
+    }
+
+    #[test]
+    fn theorem_schedule_shapes() {
+        let s = TheoremSchedule { c_eta: 1.0, c_gamma: 0.5, l: 1.0 };
+        let r1 = s.round(1, 0.0);
+        let r4 = s.round(4, 3.0);
+        assert!(r4.eta < r1.eta, "eta decays");
+        assert!(r4.gamma < r1.gamma, "gamma shrinks with q_bar");
+        assert!(r4.tau >= r1.tau, "tau grows ~ n");
+    }
+}

@@ -1,0 +1,29 @@
+//! # nacfl — Network Adaptive Federated Learning (NAC-FL)
+//!
+//! Production-shaped reproduction of *"Network Adaptive Federated
+//! Learning: Congestion and Lossy Compression"* (Hegde, de Veciana,
+//! Mokhtari, 2023) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the FL coordinator: round orchestration,
+//!   network-congestion simulation, compression-policy engine (NAC-FL and
+//!   baselines), simulated wall-clock accounting, metrics, config, CLI.
+//! * **L2/L1 (`python/compile`)** — FedCOM-V compute graphs + Pallas
+//!   quantizer/dense kernels, AOT-lowered once to `artifacts/*.hlo.txt`.
+//! * **runtime** — PJRT CPU loader/executor for those artifacts; python
+//!   never runs on the round path.
+//!
+//! See `DESIGN.md` for the full system inventory and experiment index.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod exp;
+pub mod fl;
+pub mod metrics;
+pub mod model;
+pub mod netsim;
+pub mod policy;
+pub mod quant;
+pub mod runtime;
+pub mod sim;
+pub mod util;

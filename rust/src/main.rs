@@ -1,0 +1,321 @@
+//! `nacfl` — NAC-FL leader CLI.
+//!
+//! Subcommands:
+//!   exp <table1..table4|fig3|all>   regenerate a paper table / figure
+//!   train                           one full FedCOM-V training run
+//!   sim                             one analytic-tier cell (fast)
+//!   oracle                          Theorem-1 ablation: NAC-FL vs eq.(4)
+//!   check                           load + execute all AOT artifacts
+//!
+//! Examples:
+//!   nacfl check
+//!   nacfl sim --scenario perf:4 --seeds 20
+//!   nacfl train --policy nacfl --scenario homog:2 --engine xla
+//!   nacfl exp table3 --tier sim --seeds 20 --out results
+
+use anyhow::Result;
+use nacfl::config::ExperimentConfig;
+use nacfl::data::PartitionKind;
+use nacfl::exp::{fig3_cells, run_cell, table_cells, table_for, Tier};
+use nacfl::netsim::{MarkovChain, Scenario, ScenarioKind};
+use nacfl::policy::{NacFl, OraclePolicy};
+use nacfl::util::cli::{bool_flag, flag, Args};
+use nacfl::util::rng::Rng;
+
+fn flags() -> Vec<nacfl::util::cli::FlagSpec> {
+    vec![
+        flag("config", "experiment config file (TOML subset)", None),
+        flag("tier", "ml | sim[:k_eps]", Some("sim")),
+        flag("seeds", "number of seeds", None),
+        flag("scenario", "homog[:s2] | heterog | perf[:si2] | part[:si2]", None),
+        flag("policy", "policy spec for `train`", Some("nacfl")),
+        flag("policies", "comma-separated roster override", None),
+        flag("engine", "xla | rust", None),
+        flag("artifacts", "artifact directory", Some("artifacts")),
+        flag("data-dir", "MNIST IDX directory (else synthetic corpus)", None),
+        flag("partition", "heterogeneous | homogeneous", None),
+        flag("seed", "single-run seed", Some("0")),
+        flag("max-rounds", "round cap", None),
+        flag("target-acc", "stopping accuracy", None),
+        flag("out", "output directory for CSVs", Some("results")),
+        flag("train-n", "training samples (synthetic)", None),
+        flag("test-n", "test samples (synthetic)", None),
+        flag("c-q", "quantizer variance calibration c_q (q(b)=c_q/(2^b-1)^2)", None),
+        bool_flag("quiet", "suppress per-run progress"),
+    ]
+}
+
+fn build_config(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => ExperimentConfig::load(path)?,
+        None => ExperimentConfig::paper(),
+    };
+    if let Some(n) = args.get("seeds") {
+        cfg.seeds = (0..n.parse::<u64>()?).collect();
+    }
+    if let Some(s) = args.get("scenario") {
+        cfg.scenario = ScenarioKind::parse(s)?;
+    }
+    if let Some(p) = args.get("policies") {
+        cfg.policies = p.split(',').map(str::to_string).collect();
+    }
+    if let Some(e) = args.get("engine") {
+        cfg.engine = e.to_string();
+    }
+    if let Some(a) = args.get("artifacts") {
+        cfg.artifact_dir = a.to_string();
+    }
+    if let Some(d) = args.get("data-dir") {
+        cfg.data_dir = Some(d.to_string());
+    }
+    if let Some(p) = args.get("partition") {
+        cfg.partition = PartitionKind::parse(p)?;
+    }
+    if let Some(r) = args.get("max-rounds") {
+        cfg.max_rounds = r.parse()?;
+    }
+    if let Some(t) = args.get("target-acc") {
+        cfg.target_acc = t.parse()?;
+    }
+    if let Some(n) = args.get("train-n") {
+        cfg.train_n = n.parse()?;
+    }
+    if let Some(n) = args.get("test-n") {
+        cfg.test_n = n.parse()?;
+    }
+    if let Some(c) = args.get("c-q") {
+        cfg.c_q = c.parse()?;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_exp(args: &Args, which: &str) -> Result<()> {
+    let cfg = build_config(args)?;
+    let tier = Tier::parse(args.get("tier").unwrap_or("sim"))?;
+    let out_dir = args.get_str("out")?;
+    std::fs::create_dir_all(&out_dir)?;
+    let quiet = args.get_bool("quiet");
+
+    let tables: Vec<&str> = if which == "all" {
+        vec!["table1", "table2", "table3", "table4"]
+    } else {
+        vec![which]
+    };
+
+    for tname in tables {
+        if tname == "fig3" {
+            return cmd_fig3(args, &cfg);
+        }
+        for (label, cell_cfg) in table_cells(tname, &cfg)? {
+            let started = std::time::Instant::now();
+            let results = run_cell(&cell_cfg, tier, |p, s, t| {
+                if !quiet {
+                    eprintln!("  [{label}] {p} seed {s}: {t:.3e} s");
+                }
+            })?;
+            let table = table_for(&label, &results);
+            println!("{}", table.render());
+            let fname = format!(
+                "{out_dir}/{}.csv",
+                label.to_lowercase().replace([' ', ',', '^', '='], "_")
+            );
+            table.write_csv(&fname)?;
+            if !quiet {
+                eprintln!("  ({label}: {:.1?}, csv -> {fname})", started.elapsed());
+            }
+            for r in &results {
+                if r.unconverged > 0 {
+                    eprintln!(
+                        "  warning: {} had {}/{} unconverged runs",
+                        r.policy,
+                        r.unconverged,
+                        r.times.len()
+                    );
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_fig3(args: &Args, base: &ExperimentConfig) -> Result<()> {
+    let out_dir = args.get_str("out")?;
+    std::fs::create_dir_all(&out_dir)?;
+    for (label, cfg) in fig3_cells(base) {
+        eprintln!("[{label}] running {} policies...", cfg.policies.len());
+        let results = run_cell(&cfg, Tier::Ml, |p, s, t| {
+            eprintln!("  {p} seed {s}: {t:.3e} s");
+        })?;
+        for r in &results {
+            for trace in &r.traces {
+                let fname = format!(
+                    "{out_dir}/fig3_{}_{}.csv",
+                    label.split_whitespace().next().unwrap_or("panel"),
+                    r.policy.replace([':', '.'], "_")
+                );
+                trace.write_csv(&fname)?;
+                println!("{label} {}: wrote {fname}", r.policy);
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut cfg = build_config(args)?;
+    let seed: u64 = args.get_u64("seed")?;
+    cfg.seeds = vec![seed];
+    let spec = args.get_str("policy")?;
+    cfg.policies = vec![spec.clone()];
+    let out_dir = args.get_str("out")?;
+    std::fs::create_dir_all(&out_dir)?;
+
+    eprintln!(
+        "training: policy={spec} scenario={} engine={} seed={seed}",
+        cfg.scenario.label(),
+        cfg.engine
+    );
+    let results = run_cell(&cfg, Tier::Ml, |_, _, _| {})?;
+    let r = &results[0];
+    let trace = &r.traces[0];
+    for p in &trace.points {
+        println!(
+            "round {:>5}  wall {:>12.4e}  loss {:>8.4}  acc {:>6.3}  bits {:>5.2}",
+            p.round, p.wall, p.train_loss, p.test_acc, p.mean_bits
+        );
+    }
+    match trace.time_to_accuracy(cfg.target_acc) {
+        Some(t) => println!("time to {:.0}% accuracy: {t:.4e} simulated seconds", cfg.target_acc * 100.0),
+        None => println!("did not reach {:.0}% within {} rounds", cfg.target_acc * 100.0, cfg.max_rounds),
+    }
+    let fname = format!("{out_dir}/train_{}_{seed}.csv", spec.replace([':', '.'], "_"));
+    trace.write_csv(&fname)?;
+    eprintln!("trace -> {fname}");
+    Ok(())
+}
+
+fn cmd_sim(args: &Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    let tier = Tier::parse(args.get("tier").unwrap_or("sim"))?;
+    let results = run_cell(&cfg, tier, |_, _, _| {})?;
+    let table = table_for(&format!("scenario {}", cfg.scenario.label()), &results);
+    println!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_oracle(args: &Args) -> Result<()> {
+    // Theorem-1 ablation on a finite Markov chain: run NAC-FL with
+    // beta_n = 1/n and compare its (r_hat, d_hat) to the eq.-(4) optimum.
+    let cfg = build_config(args)?;
+    let ctx = cfg.policy_ctx();
+    let m = cfg.m;
+    let seed: u64 = args.get_u64("seed")?;
+    // Discretize the configured scenario into 8 states by sampling.
+    let sc = Scenario::new(cfg.scenario, m);
+    let mut proc = sc.process(Rng::new(seed))?;
+    let states: Vec<Vec<f64>> = (0..8)
+        .map(|_| {
+            use nacfl::netsim::NetworkProcess;
+            for _ in 0..20 {
+                proc.next_state();
+            }
+            proc.next_state()
+        })
+        .collect();
+    let mut chain = MarkovChain::uniform_mixing(states, 0.5, Rng::new(seed ^ 1))?;
+    let oracle = OraclePolicy::solve(&ctx, &chain);
+    println!(
+        "oracle optimum: E[rho] = {:.4}, E[d] = {:.4e}, objective = {:.4e}",
+        oracle.expected_rho,
+        oracle.expected_d,
+        oracle.objective()
+    );
+    let mut nac = NacFl::new(1.0);
+    use nacfl::netsim::NetworkProcess;
+    use nacfl::policy::CompressionPolicy;
+    for n in [100usize, 1000, 10_000] {
+        let mut p = NacFl::new(1.0);
+        std::mem::swap(&mut p, &mut nac); // fresh policy per horizon
+        let mut chain2 = chain.clone();
+        for _ in 0..n {
+            let c = chain2.next_state();
+            nac.choose(&ctx, &c);
+        }
+        let (r_hat, d_hat) = nac.estimates();
+        println!(
+            "NAC-FL after {n:>6} rounds: r_hat = {r_hat:.4} d_hat = {d_hat:.4e} product = {:.4e} (opt {:.4e})",
+            r_hat * d_hat,
+            oracle.objective()
+        );
+        let _ = &mut chain;
+    }
+    Ok(())
+}
+
+fn cmd_check(args: &Args) -> Result<()> {
+    use nacfl::fl::engine::make_engine;
+    let dir = args.get_str("artifacts")?;
+    let mut e = make_engine("xla", &dir)?;
+    let d = e.dims();
+    println!("artifacts loaded from `{dir}`; running smoke executions...");
+    let mut rng = Rng::new(0);
+    let mlp = nacfl::model::Mlp::new(nacfl::model::MlpDims::paper());
+    let w = mlp.init_params(&mut rng);
+    let xs: Vec<f32> = (0..d.tau * d.batch * d.d_in).map(|_| rng.uniform_f32()).collect();
+    let ys: Vec<i32> = (0..d.tau * d.batch).map(|i| (i % 10) as i32).collect();
+    let upd = e.local_round(&w, &xs, &ys, 0.07)?;
+    println!("  local_round ok (|upd| = {})", upd.len());
+    let mut u = vec![0.0f32; d.p];
+    rng.fill_uniform_f32(&mut u);
+    let (dq, norm) = e.quantize(&upd, 3.0, &u)?;
+    println!("  quantize ok (norm = {norm:.4})");
+    let w2 = e.global_step(&w, &dq, 0.07)?;
+    println!("  global_step ok ({} params)", w2.len());
+    let ex: Vec<f32> = (0..d.eval_chunk * d.d_in).map(|_| rng.uniform_f32()).collect();
+    let ey: Vec<i32> = (0..d.eval_chunk).map(|i| (i % 10) as i32).collect();
+    let (loss, correct) = e.eval_chunk(&w2, &ex, &ey)?;
+    println!("  eval_chunk ok (loss = {loss:.4}, correct = {correct})");
+    println!("check OK");
+    Ok(())
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(flags(), &argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let subcommands = [
+        ("exp", "regenerate a paper table/figure (table1..table4, fig3, all)"),
+        ("train", "one full FedCOM-V training run"),
+        ("sim", "one analytic-tier cell"),
+        ("oracle", "Theorem-1 ablation vs the eq.(4) oracle"),
+        ("check", "load + execute all AOT artifacts"),
+    ];
+    let result = match args.subcommand.as_deref() {
+        Some("exp") => {
+            let which = args
+                .positionals
+                .first()
+                .cloned()
+                .unwrap_or_else(|| "all".to_string());
+            cmd_exp(&args, &which)
+        }
+        Some("train") => cmd_train(&args),
+        Some("sim") => cmd_sim(&args),
+        Some("oracle") => cmd_oracle(&args),
+        Some("check") => cmd_check(&args),
+        _ => {
+            print!("{}", args.usage("nacfl", &subcommands));
+            return;
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,11 @@
+//! Metrics substrate: the paper's summary statistics (§IV-A5b), run
+//! traces, and tabular/CSV writers used by the bench harness.
+
+pub mod stats;
+pub mod plot;
+pub mod table;
+pub mod trace;
+
+pub use stats::{gain_vs, mean, percentile, Summary};
+pub use table::TableWriter;
+pub use trace::{RunTrace, TracePoint};

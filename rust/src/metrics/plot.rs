@@ -1,0 +1,129 @@
+//! Terminal ASCII plots for run traces — a quick-look Fig. 3 without
+//! leaving the shell.  Renders one or more (x, y) series on a shared
+//! axis with per-series glyphs.
+
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub label: String,
+    pub points: Vec<(f64, f64)>,
+    pub glyph: char,
+}
+
+/// Render series into a `width` x `height` character canvas with axis
+/// annotations.  X and Y ranges are the unions across series.
+pub fn render(series: &[Series], width: usize, height: usize) -> String {
+    assert!(width >= 16 && height >= 4);
+    let pts = || series.iter().flat_map(|s| s.points.iter());
+    if pts().count() == 0 {
+        return "(no data)\n".to_string();
+    }
+    let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y) in pts() {
+        x0 = x0.min(x);
+        x1 = x1.max(x);
+        y0 = y0.min(y);
+        y1 = y1.max(y);
+    }
+    if (x1 - x0).abs() < 1e-300 {
+        x1 = x0 + 1.0;
+    }
+    if (y1 - y0).abs() < 1e-300 {
+        y1 = y0 + 1.0;
+    }
+    let mut canvas = vec![vec![' '; width]; height];
+    for s in series {
+        for &(x, y) in &s.points {
+            let cx = ((x - x0) / (x1 - x0) * (width - 1) as f64).round() as usize;
+            let cy = ((y - y0) / (y1 - y0) * (height - 1) as f64).round() as usize;
+            let row = height - 1 - cy.min(height - 1);
+            canvas[row][cx.min(width - 1)] = s.glyph;
+        }
+    }
+    let mut out = String::new();
+    for (i, row) in canvas.iter().enumerate() {
+        let ylab = if i == 0 {
+            format!("{y1:>9.3e} ")
+        } else if i == height - 1 {
+            format!("{y0:>9.3e} ")
+        } else {
+            " ".repeat(10)
+        };
+        out.push_str(&ylab);
+        out.push('|');
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&" ".repeat(10));
+    out.push('+');
+    out.push_str(&"-".repeat(width));
+    out.push('\n');
+    out.push_str(&format!(
+        "{}{:<.3e}{}{:>.3e}\n",
+        " ".repeat(11),
+        x0,
+        " ".repeat(width.saturating_sub(20)),
+        x1
+    ));
+    for s in series {
+        out.push_str(&format!("  {} {}\n", s.glyph, s.label));
+    }
+    out
+}
+
+/// Convenience: accuracy-vs-wall-clock comparison of run traces.
+pub fn accuracy_plot(traces: &[&super::RunTrace], width: usize, height: usize) -> String {
+    let glyphs = ['*', 'o', '+', 'x', '#', '@'];
+    let series: Vec<Series> = traces
+        .iter()
+        .enumerate()
+        .map(|(i, t)| Series {
+            label: t.policy.clone(),
+            points: t.points.iter().map(|p| (p.wall, p.test_acc)).collect(),
+            glyph: glyphs[i % glyphs.len()],
+        })
+        .collect();
+    render(&series, width, height)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::{RunTrace, TracePoint};
+
+    #[test]
+    fn renders_points_within_canvas() {
+        let s = Series {
+            label: "test".into(),
+            points: vec![(0.0, 0.0), (1.0, 1.0), (0.5, 0.8)],
+            glyph: '*',
+        };
+        let out = render(&[s], 40, 10);
+        assert!(out.contains('*'));
+        assert!(out.contains("test"));
+        assert_eq!(out.lines().count(), 10 + 2 + 1);
+    }
+
+    #[test]
+    fn handles_degenerate_ranges() {
+        let s = Series { label: "flat".into(), points: vec![(1.0, 2.0); 5], glyph: 'o' };
+        let out = render(&[s], 20, 4);
+        assert!(out.contains('o'));
+    }
+
+    #[test]
+    fn accuracy_plot_from_traces() {
+        let mut t = RunTrace::new("nacfl", "homog:1", 0);
+        for i in 0..10 {
+            t.push(TracePoint {
+                round: i,
+                wall: i as f64,
+                train_loss: 1.0,
+                test_acc: i as f64 / 10.0,
+                mean_bits: 2.0,
+            });
+        }
+        let out = accuracy_plot(&[&t], 30, 8);
+        assert!(out.contains("nacfl"));
+    }
+}

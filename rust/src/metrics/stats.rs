@@ -1,0 +1,104 @@
+//! Summary statistics matching the paper's Table I-IV rows: mean, 90th
+//! and 10th percentile of time-to-accuracy across seeds, plus the
+//! sample-path *gain* metric of §IV-A5b.
+
+/// Arithmetic mean.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Linear-interpolation percentile (numpy `percentile(..., 'linear')`),
+/// p in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = p / 100.0 * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let f = rank - lo as f64;
+        v[lo] * (1.0 - f) + v[hi] * f
+    }
+}
+
+/// The paper's gain of NAC-FL over another policy:
+/// `100 * mean_i(y_i / x_i - 1)` where x_i = NAC-FL's time on seed i and
+/// y_i = the other policy's time on the same seed (sample-path pairing).
+pub fn gain_vs(nacfl_times: &[f64], other_times: &[f64]) -> f64 {
+    assert_eq!(nacfl_times.len(), other_times.len());
+    assert!(!nacfl_times.is_empty());
+    let s: f64 = nacfl_times
+        .iter()
+        .zip(other_times.iter())
+        .map(|(&x, &y)| y / x - 1.0)
+        .sum();
+    100.0 * s / nacfl_times.len() as f64
+}
+
+/// One table-cell summary.
+#[derive(Clone, Debug)]
+pub struct Summary {
+    pub mean: f64,
+    pub p90: f64,
+    pub p10: f64,
+    pub n: usize,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Self {
+        Summary {
+            mean: mean(xs),
+            p90: percentile(xs, 90.0),
+            p10: percentile(xs, 10.0),
+            n: xs.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_percentiles() {
+        let xs: Vec<f64> = (1..=10).map(|i| i as f64).collect();
+        assert!((mean(&xs) - 5.5).abs() < 1e-12);
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 10.0).abs() < 1e-12);
+        assert!((percentile(&xs, 50.0) - 5.5).abs() < 1e-12);
+        // numpy: percentile(1..10, 90) = 9.1
+        assert!((percentile(&xs, 90.0) - 9.1).abs() < 1e-9);
+        assert!((percentile(&xs, 10.0) - 1.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_is_order_invariant() {
+        let a = vec![3.0, 1.0, 2.0];
+        let b = vec![1.0, 2.0, 3.0];
+        assert_eq!(percentile(&a, 90.0), percentile(&b, 90.0));
+    }
+
+    #[test]
+    fn gain_matches_paper_definition() {
+        // x = (1, 2), y = (2, 2): gain = 100 * ((2/1-1) + (2/2-1)) / 2 = 50%
+        let g = gain_vs(&[1.0, 2.0], &[2.0, 2.0]);
+        assert!((g - 50.0).abs() < 1e-12);
+        // identical policies: 0 gain
+        assert_eq!(gain_vs(&[3.0, 4.0], &[3.0, 4.0]), 0.0);
+    }
+
+    #[test]
+    fn summary_bundles_stats() {
+        let s = Summary::of(&[1.0, 2.0, 3.0]);
+        assert_eq!(s.n, 3);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,100 @@
+//! Per-run traces: (round, simulated wall clock, loss, accuracy, bits)
+//! samples, time-to-accuracy extraction (the paper's target metric), and
+//! JSONL/CSV export for the Fig. 3 sample-path plots.
+
+use std::io::Write;
+use std::path::Path;
+
+#[derive(Clone, Debug)]
+pub struct TracePoint {
+    pub round: usize,
+    pub wall: f64,
+    pub train_loss: f64,
+    pub test_acc: f64,
+    /// Across-client mean bit-width chosen this round.
+    pub mean_bits: f64,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct RunTrace {
+    pub points: Vec<TracePoint>,
+    pub policy: String,
+    pub scenario: String,
+    pub seed: u64,
+}
+
+impl RunTrace {
+    pub fn new(policy: &str, scenario: &str, seed: u64) -> Self {
+        RunTrace { points: Vec::new(), policy: policy.into(), scenario: scenario.into(), seed }
+    }
+
+    pub fn push(&mut self, p: TracePoint) {
+        self.points.push(p);
+    }
+
+    /// First simulated wall-clock time at which test accuracy reaches
+    /// `target` (the paper's time-to-90%).  None if never reached.
+    pub fn time_to_accuracy(&self, target: f64) -> Option<f64> {
+        self.points
+            .iter()
+            .find(|p| p.test_acc >= target)
+            .map(|p| p.wall)
+    }
+
+    /// Final recorded accuracy.
+    pub fn final_accuracy(&self) -> Option<f64> {
+        self.points.last().map(|p| p.test_acc)
+    }
+
+    /// Write a CSV usable for the Fig.-3 style plots.
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "round,wall,train_loss,test_acc,mean_bits")?;
+        for p in &self.points {
+            writeln!(
+                f,
+                "{},{:.6e},{:.6},{:.4},{:.2}",
+                p.round, p.wall, p.train_loss, p.test_acc, p.mean_bits
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tr() -> RunTrace {
+        let mut t = RunTrace::new("nacfl", "homog:1", 0);
+        for (i, acc) in [0.2, 0.5, 0.85, 0.91, 0.93].iter().enumerate() {
+            t.push(TracePoint {
+                round: i * 5,
+                wall: i as f64 * 100.0,
+                train_loss: 2.0 - i as f64 * 0.3,
+                test_acc: *acc,
+                mean_bits: 1.5,
+            });
+        }
+        t
+    }
+
+    #[test]
+    fn time_to_accuracy_first_crossing() {
+        let t = tr();
+        assert_eq!(t.time_to_accuracy(0.9), Some(300.0));
+        assert_eq!(t.time_to_accuracy(0.99), None);
+        assert_eq!(t.time_to_accuracy(0.1), Some(0.0));
+    }
+
+    #[test]
+    fn csv_round_trips_header_and_rows() {
+        let t = tr();
+        let path = std::env::temp_dir().join(format!("nacfl_trace_{}.csv", std::process::id()));
+        t.write_csv(&path).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.starts_with("round,wall,"));
+        assert_eq!(body.lines().count(), 6);
+        std::fs::remove_file(&path).ok();
+    }
+}

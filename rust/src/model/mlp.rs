@@ -1,0 +1,427 @@
+//! Pure-rust MLP with the exact math of `python/compile/model.py`:
+//! `logits = sigmoid(x W1 + b1) W2 + b2`, mean cross-entropy loss, SGD
+//! local rounds returning the FedCOM-V pre-compressed update
+//! `(w0 - w_tau) / eta` (= sum of local stochastic gradients).
+//!
+//! Flat parameter layout (identical to the python side): [W1 | b1 | W2 | b2].
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MlpDims {
+    pub d_in: usize,
+    pub hidden: usize,
+    pub classes: usize,
+}
+
+impl MlpDims {
+    /// The paper's architecture.
+    pub fn paper() -> Self {
+        MlpDims { d_in: 784, hidden: 250, classes: 10 }
+    }
+
+    /// Flat parameter count P.
+    pub fn p(&self) -> usize {
+        self.d_in * self.hidden + self.hidden + self.hidden * self.classes + self.classes
+    }
+
+    fn offsets(&self) -> (usize, usize, usize) {
+        let o1 = self.d_in * self.hidden;
+        let o2 = o1 + self.hidden;
+        let o3 = o2 + self.hidden * self.classes;
+        (o1, o2, o3)
+    }
+}
+
+/// Stateless compute helper bound to a dimension triple; all parameters
+/// travel as flat slices so callers own the memory.
+#[derive(Clone, Copy, Debug)]
+pub struct Mlp {
+    pub dims: MlpDims,
+}
+
+/// Scratch buffers reused across forward/backward calls (hot path).
+#[derive(Clone, Debug, Default)]
+pub struct Scratch {
+    h: Vec<f32>,      // [b, hidden]
+    logits: Vec<f32>, // [b, classes]
+    dlog: Vec<f32>,   // [b, classes]
+    dh: Vec<f32>,     // [b, hidden]
+}
+
+impl Mlp {
+    pub fn new(dims: MlpDims) -> Self {
+        Mlp { dims }
+    }
+
+    /// Glorot-style init: W ~ N(0, 1/sqrt(fan_in)), biases zero.
+    pub fn init_params(&self, rng: &mut Rng) -> Vec<f32> {
+        let d = self.dims;
+        let (o1, o2, o3) = d.offsets();
+        let mut w = vec![0.0f32; d.p()];
+        rng.fill_normal_f32(&mut w[..o1], 1.0 / (d.d_in as f32).sqrt());
+        // b1 zero
+        rng.fill_normal_f32(&mut w[o2..o3], 1.0 / (d.hidden as f32).sqrt());
+        // b2 zero
+        w[o1..o2].fill(0.0);
+        w[o3..].fill(0.0);
+        w
+    }
+
+    /// Forward pass: fills scratch.h and scratch.logits for batch size b.
+    pub fn forward(&self, w: &[f32], x: &[f32], b: usize, s: &mut Scratch) {
+        let d = self.dims;
+        debug_assert_eq!(w.len(), d.p());
+        debug_assert_eq!(x.len(), b * d.d_in);
+        let (o1, o2, o3) = d.offsets();
+        let (w1, b1, w2, b2) = (&w[..o1], &w[o1..o2], &w[o2..o3], &w[o3..]);
+        s.h.resize(b * d.hidden, 0.0);
+        s.logits.resize(b * d.classes, 0.0);
+        // h = sigmoid(x @ W1 + b1)
+        matmul_bias(x, w1, b1, b, d.d_in, d.hidden, &mut s.h);
+        for v in s.h.iter_mut() {
+            *v = sigmoid(*v);
+        }
+        // logits = h @ W2 + b2
+        matmul_bias(&s.h, w2, b2, b, d.hidden, d.classes, &mut s.logits);
+    }
+
+    /// Mean CE loss + gradient wrt flat params (accumulated into `grad`,
+    /// which is zeroed here).  Returns the loss.
+    pub fn loss_grad(
+        &self,
+        w: &[f32],
+        x: &[f32],
+        y: &[i32],
+        s: &mut Scratch,
+        grad: &mut [f32],
+    ) -> f32 {
+        let d = self.dims;
+        let b = y.len();
+        self.forward(w, x, b, s);
+        let (o1, o2, o3) = d.offsets();
+        grad.fill(0.0);
+
+        // dlogits = (softmax - onehot) / b ; loss = mean CE
+        s.dlog.resize(b * d.classes, 0.0);
+        let mut loss = 0.0f64;
+        for i in 0..b {
+            let row = &s.logits[i * d.classes..(i + 1) * d.classes];
+            let mx = row.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+            let mut z = 0.0f64;
+            for &v in row {
+                z += ((v - mx) as f64).exp();
+            }
+            let logz = z.ln() as f32 + mx;
+            let yi = y[i] as usize;
+            loss += (logz - row[yi]) as f64;
+            for c in 0..d.classes {
+                let p = ((row[c] - logz) as f64).exp() as f32;
+                s.dlog[i * d.classes + c] =
+                    (p - if c == yi { 1.0 } else { 0.0 }) / b as f32;
+            }
+        }
+
+        let (w1g, rest) = grad.split_at_mut(o1);
+        let (b1g, rest) = rest.split_at_mut(o2 - o1);
+        let (w2g, b2g) = rest.split_at_mut(o3 - o2);
+        let w2 = &w[o2..o3];
+
+        // dW2 = h^T dlog ; db2 = col-sum dlog
+        at_b(&s.h, &s.dlog, b, d.hidden, d.classes, w2g);
+        col_sum(&s.dlog, b, d.classes, b2g);
+        // dh = dlog @ W2^T, then dz = dh * h * (1 - h)
+        s.dh.resize(b * d.hidden, 0.0);
+        a_bt(&s.dlog, w2, b, d.classes, d.hidden, &mut s.dh);
+        for (dv, &hv) in s.dh.iter_mut().zip(s.h.iter()) {
+            *dv *= hv * (1.0 - hv);
+        }
+        // dW1 = x^T dz ; db1 = col-sum dz
+        at_b(x, &s.dh, b, d.d_in, d.hidden, w1g);
+        col_sum(&s.dh, b, d.hidden, b1g);
+
+        (loss / b as f64) as f32
+    }
+
+    /// FedCOM-V local stage: `tau` SGD steps over fresh minibatches;
+    /// returns the pre-compressed update (sum of the tau gradients).
+    /// `xs`/`ys` hold tau stacked minibatches.
+    pub fn local_round(
+        &self,
+        w0: &[f32],
+        xs: &[f32],
+        ys: &[i32],
+        tau: usize,
+        batch: usize,
+        eta: f32,
+        s: &mut Scratch,
+    ) -> Vec<f32> {
+        let d = self.dims;
+        debug_assert_eq!(xs.len(), tau * batch * d.d_in);
+        debug_assert_eq!(ys.len(), tau * batch);
+        let mut w = w0.to_vec();
+        let mut grad = vec![0.0f32; d.p()];
+        for a in 0..tau {
+            let x = &xs[a * batch * d.d_in..(a + 1) * batch * d.d_in];
+            let y = &ys[a * batch..(a + 1) * batch];
+            self.loss_grad(&w, x, y, s, &mut grad);
+            for (wv, &g) in w.iter_mut().zip(grad.iter()) {
+                *wv -= eta * g;
+            }
+        }
+        w0.iter()
+            .zip(w.iter())
+            .map(|(&a, &b)| (a - b) / eta)
+            .collect()
+    }
+
+    /// Summed CE loss and correct count over a chunk.
+    pub fn eval_chunk(&self, w: &[f32], x: &[f32], y: &[i32], s: &mut Scratch) -> (f64, usize) {
+        let d = self.dims;
+        let b = y.len();
+        self.forward(w, x, b, s);
+        let mut loss = 0.0f64;
+        let mut correct = 0usize;
+        for i in 0..b {
+            let row = &s.logits[i * d.classes..(i + 1) * d.classes];
+            let mx = row.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+            let mut z = 0.0f64;
+            let mut arg = 0usize;
+            for (c, &v) in row.iter().enumerate() {
+                z += ((v - mx) as f64).exp();
+                if v > row[arg] {
+                    arg = c;
+                }
+            }
+            let logz = z.ln() + mx as f64;
+            loss += logz - row[y[i] as usize] as f64;
+            if arg == y[i] as usize {
+                correct += 1;
+            }
+        }
+        (loss, correct)
+    }
+}
+
+#[inline]
+fn sigmoid(v: f32) -> f32 {
+    1.0 / (1.0 + (-v).exp())
+}
+
+/// out[b,n] = x[b,k] @ w[k,n] + bias[n]
+fn matmul_bias(x: &[f32], w: &[f32], bias: &[f32], b: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), b * n);
+    for i in 0..b {
+        let xi = &x[i * k..(i + 1) * k];
+        let oi = &mut out[i * n..(i + 1) * n];
+        oi.copy_from_slice(bias);
+        for (kk, &xv) in xi.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wr = &w[kk * n..(kk + 1) * n];
+            for (o, &wv) in oi.iter_mut().zip(wr.iter()) {
+                *o += xv * wv;
+            }
+        }
+    }
+}
+
+/// out[k,n] += a^T b  where a: [m,k], b: [m,n]  (out pre-zeroed by caller)
+fn at_b(a: &[f32], bm: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), k * n);
+    for i in 0..m {
+        let ai = &a[i * k..(i + 1) * k];
+        let bi = &bm[i * n..(i + 1) * n];
+        for (kk, &av) in ai.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut out[kk * n..(kk + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(bi.iter()) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// out[m,n] = a[m,k] @ b^T  where b: [n,k]
+fn a_bt(a: &[f32], bm: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let ai = &a[i * k..(i + 1) * k];
+        let oi = &mut out[i * n..(i + 1) * n];
+        for (j, o) in oi.iter_mut().enumerate() {
+            let bj = &bm[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for (av, bv) in ai.iter().zip(bj.iter()) {
+                acc += av * bv;
+            }
+            *o = acc;
+        }
+    }
+}
+
+fn col_sum(a: &[f32], m: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), n);
+    for i in 0..m {
+        for (o, &v) in out.iter_mut().zip(a[i * n..(i + 1) * n].iter()) {
+            *o += v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> (Mlp, Vec<f32>, Vec<f32>, Vec<i32>, Scratch) {
+        let dims = MlpDims { d_in: 6, hidden: 5, classes: 4 };
+        let mlp = Mlp::new(dims);
+        let mut rng = Rng::new(42);
+        let w = mlp.init_params(&mut rng);
+        let b = 3;
+        let x: Vec<f32> = (0..b * dims.d_in).map(|_| rng.normal() as f32).collect();
+        let y: Vec<i32> = (0..b).map(|_| rng.below(dims.classes) as i32).collect();
+        (mlp, w, x, y, Scratch::default())
+    }
+
+    #[test]
+    fn grad_check_against_finite_differences() {
+        let (mlp, mut w, x, y, mut s) = tiny();
+        let mut grad = vec![0.0f32; mlp.dims.p()];
+        let loss0 = mlp.loss_grad(&w, &x, &y, &mut s, &mut grad);
+        assert!(loss0.is_finite());
+        let eps = 1e-3f32;
+        let mut checked = 0;
+        // Probe a spread of parameter indices across all four blocks.
+        for idx in (0..mlp.dims.p()).step_by(5) {
+            let orig = w[idx];
+            w[idx] = orig + eps;
+            let lp = {
+                let mut g = vec![0.0f32; mlp.dims.p()];
+                mlp.loss_grad(&w, &x, &y, &mut s, &mut g)
+            };
+            w[idx] = orig - eps;
+            let lm = {
+                let mut g = vec![0.0f32; mlp.dims.p()];
+                mlp.loss_grad(&w, &x, &y, &mut s, &mut g)
+            };
+            w[idx] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            let an = grad[idx];
+            assert!(
+                (fd - an).abs() < 2e-3 + 0.05 * fd.abs().max(an.abs()),
+                "param {idx}: fd {fd} vs analytic {an}"
+            );
+            checked += 1;
+        }
+        assert!(checked > 10);
+    }
+
+    #[test]
+    fn local_round_reduces_loss() {
+        let (mlp, w, _, _, mut s) = tiny();
+        let mut rng = Rng::new(1);
+        let (tau, batch) = (2, 16);
+        let xs: Vec<f32> = (0..tau * batch * mlp.dims.d_in)
+            .map(|_| rng.normal() as f32)
+            .collect();
+        let ys: Vec<i32> = (0..tau * batch).map(|i| (i % mlp.dims.classes) as i32).collect();
+        let eta = 0.5f32;
+        let upd = mlp.local_round(&w, &xs, &ys, tau, batch, eta, &mut s);
+        let w2: Vec<f32> = w.iter().zip(upd.iter()).map(|(&a, &u)| a - eta * u).collect();
+        let (l0, _) = mlp.eval_chunk(&w, &xs[..batch * mlp.dims.d_in], &ys[..batch], &mut s);
+        let (l1, _) = mlp.eval_chunk(&w2, &xs[..batch * mlp.dims.d_in], &ys[..batch], &mut s);
+        assert!(l1 < l0, "loss did not decrease: {l0} -> {l1}");
+    }
+
+    #[test]
+    fn update_equals_sum_of_grads_for_tau_1() {
+        let (mlp, w, x, y, mut s) = tiny();
+        let mut grad = vec![0.0f32; mlp.dims.p()];
+        mlp.loss_grad(&w, &x, &y, &mut s, &mut grad);
+        let upd = mlp.local_round(&w, &x, &y, 1, y.len(), 0.1, &mut s);
+        for (u, g) in upd.iter().zip(grad.iter()) {
+            assert!((u - g).abs() < 1e-4, "update {u} vs grad {g}");
+        }
+    }
+
+    #[test]
+    fn eval_counts_correct_predictions() {
+        let dims = MlpDims { d_in: 2, hidden: 3, classes: 2 };
+        let mlp = Mlp::new(dims);
+        // Hand-built params: logits = [x0, x1] (roughly) so label = argmax.
+        let mut w = vec![0.0f32; dims.p()];
+        // W1: map x -> h with strong weights so sigmoid saturates.
+        let (o1, o2, _o3) = dims.offsets();
+        w[0] = 8.0; // x0 -> h0
+        w[dims.hidden + 1] = 8.0; // x1 -> h1
+        // W2: h0 -> class0, h1 -> class1
+        w[o2] = 4.0;
+        w[o2 + dims.classes + 1] = 4.0;
+        let _ = o1;
+        let x = vec![1.0, -1.0, -1.0, 1.0];
+        let y = vec![0, 1];
+        let mut s = Scratch::default();
+        let (_, correct) = mlp.eval_chunk(&w, &x, &y, &mut s);
+        assert_eq!(correct, 2);
+    }
+
+    #[test]
+    fn golden_parity_with_jax_model() {
+        // Full-dimension parity against artifacts/golden (skip pre-make).
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/golden");
+        if !dir.join("mlp_w.bin").exists() {
+            eprintln!("skipping mlp golden parity (run `make artifacts` first)");
+            return;
+        }
+        let rf = |n: &str| -> Vec<f32> {
+            std::fs::read(dir.join(n))
+                .unwrap()
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect()
+        };
+        let ri = |n: &str| -> Vec<i32> {
+            std::fs::read(dir.join(n))
+                .unwrap()
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect()
+        };
+        let mlp = Mlp::new(MlpDims::paper());
+        let w = rf("mlp_w.bin");
+        let x = rf("mlp_x.bin");
+        let y = ri("mlp_y.bin");
+        let mut s = Scratch::default();
+
+        // forward logits
+        let expect_logits = rf("mlp_logits.bin");
+        mlp.forward(&w, &x, y.len(), &mut s);
+        let max_diff = s
+            .logits
+            .iter()
+            .zip(expect_logits.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 2e-4, "logits diff {max_diff}");
+
+        // eval stats
+        let ev = rf("mlp_eval.bin");
+        let (loss_sum, correct) = mlp.eval_chunk(&w, &x, &y, &mut s);
+        assert!((loss_sum as f32 - ev[0]).abs() < 2e-3, "loss {loss_sum} vs {}", ev[0]);
+        assert_eq!(correct as f32, ev[1]);
+
+        // one local round (tau = 2, batch 8)
+        let xs = rf("round_xs.bin");
+        let ys = ri("round_ys.bin");
+        let expect_upd = rf("round_update.bin");
+        let upd = mlp.local_round(&w, &xs, &ys, 2, 8, 0.07, &mut s);
+        let mut worst = 0.0f32;
+        for (a, b) in upd.iter().zip(expect_upd.iter()) {
+            worst = worst.max((a - b).abs());
+        }
+        assert!(worst < 5e-3, "local_round update diff {worst}");
+    }
+}

@@ -1,0 +1,8 @@
+//! Model substrate: a pure-rust (784, 250, 10) sigmoid MLP numerically
+//! matching the L2 JAX graphs — used as the no-artifact fallback compute
+//! engine, the golden-parity oracle for the HLO path, and the
+//! grad-check reference.
+
+pub mod mlp;
+
+pub use mlp::{Mlp, MlpDims};

@@ -1,0 +1,174 @@
+//! First-order vector autoregressive process (paper eq. (12)):
+//! `Z^n = A Z^{n-1} + E^n`, `E^n ~ N(mu, Sigma)` i.i.d., `Z^0 = 0`.
+
+use crate::util::linalg::Mat;
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+#[derive(Clone, Debug)]
+pub struct Ar1Process {
+    a: Mat,
+    mu: Vec<f64>,
+    /// Cholesky factor of Sigma (innovations are mu + L * std-normal).
+    l: Mat,
+    z: Vec<f64>,
+    rng: Rng,
+}
+
+impl Ar1Process {
+    /// Build from (A, mu, Sigma); fails if Sigma is not PSD.
+    pub fn new(a: Mat, mu: Vec<f64>, sigma: &Mat, rng: Rng) -> Result<Self> {
+        assert_eq!(a.rows, a.cols);
+        assert_eq!(a.rows, mu.len());
+        assert_eq!(sigma.rows, mu.len());
+        let l = sigma.cholesky()?;
+        let z = vec![0.0; mu.len()];
+        Ok(Ar1Process { a, mu, l, z, rng })
+    }
+
+    pub fn dim(&self) -> usize {
+        self.mu.len()
+    }
+
+    /// Current state Z^n.
+    pub fn state(&self) -> &[f64] {
+        &self.z
+    }
+
+    /// Advance one step and return the new state.
+    pub fn step(&mut self) -> &[f64] {
+        let m = self.dim();
+        // E = mu + L * g, g ~ N(0, I)
+        let g: Vec<f64> = (0..m).map(|_| self.rng.normal()).collect();
+        let lg = self.l.matvec(&g);
+        let az = self.a.matvec(&self.z);
+        for i in 0..m {
+            self.z[i] = az[i] + self.mu[i] + lg[i];
+        }
+        &self.z
+    }
+
+    /// Stationarity check: spectral radius of A must be < 1.
+    pub fn is_stationary(&self) -> bool {
+        self.a.spectral_radius_est(200) < 1.0 - 1e-9
+    }
+
+    /// Asymptotic variance (paper eq. (14)) of the *scalar* AR(1) marginal
+    /// with coefficient `a`: `sigma_inf^2 = 1 / (1 - a)^2` (unit-variance
+    /// innovations).  Used by Table III to parameterize correlation.
+    pub fn asymptotic_variance_scalar(a: f64) -> f64 {
+        1.0 / ((1.0 - a) * (1.0 - a))
+    }
+
+    /// Inverse map: the `a` giving a target asymptotic variance.
+    pub fn a_for_asymptotic_variance(sigma_inf_sq: f64) -> f64 {
+        1.0 - 1.0 / sigma_inf_sq.sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{check, Config};
+
+    fn scalar_ar1(a: f64, seed: u64) -> Ar1Process {
+        Ar1Process::new(
+            Mat::constant(1, 1, a),
+            vec![0.0],
+            &Mat::eye(1),
+            Rng::new(seed),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn iid_case_matches_innovation_moments() {
+        // A = 0 reduces to i.i.d. N(mu, sigma^2).
+        let mut p = Ar1Process::new(
+            Mat::zeros(1, 1),
+            vec![1.0],
+            &Mat::constant(1, 1, 2.0),
+            Rng::new(11),
+        )
+        .unwrap();
+        let n = 100_000;
+        let (mut s1, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = p.step()[0];
+            s1 += z;
+            s2 += z * z;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!((mean - 1.0).abs() < 0.02, "mean {mean}");
+        assert!((var - 2.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn stationary_variance_of_scalar_ar1() {
+        // var(Z) -> 1 / (1 - a^2) for unit innovations.
+        let a = 0.5;
+        let mut p = scalar_ar1(a, 5);
+        // burn-in
+        for _ in 0..1000 {
+            p.step();
+        }
+        let n = 200_000;
+        let (mut s1, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = p.step()[0];
+            s1 += z;
+            s2 += z * z;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        let expect = 1.0 / (1.0 - a * a);
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - expect).abs() / expect < 0.05, "var {var} expect {expect}");
+    }
+
+    #[test]
+    fn asymptotic_variance_empirical_matches_formula() {
+        // sigma_inf^2 = lim E[(Z1+..+Zn)^2]/n = 1/(1-a)^2 (paper eq. 14).
+        let a = 0.6;
+        let expect = Ar1Process::asymptotic_variance_scalar(a);
+        let trials = 400;
+        let horizon = 2000;
+        let mut acc = 0.0;
+        for t in 0..trials {
+            let mut p = scalar_ar1(a, 1000 + t as u64);
+            let mut sum = 0.0;
+            for _ in 0..horizon {
+                sum += p.step()[0];
+            }
+            acc += sum * sum / horizon as f64;
+        }
+        let est = acc / trials as f64;
+        assert!(
+            (est - expect).abs() / expect < 0.15,
+            "sigma_inf^2 est {est} expect {expect}"
+        );
+    }
+
+    #[test]
+    fn a_for_asymptotic_variance_round_trips() {
+        check(
+            Config::named("a_sigma_inf_round_trip").cases(64),
+            |rng| 1.0 + rng.uniform() * 30.0,
+            |&s| {
+                let a = Ar1Process::a_for_asymptotic_variance(s);
+                (Ar1Process::asymptotic_variance_scalar(a) - s).abs() < 1e-9
+                    && (0.0..1.0).contains(&a)
+            },
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut p1 = scalar_ar1(0.3, 99);
+        let mut p2 = scalar_ar1(0.3, 99);
+        for _ in 0..50 {
+            assert_eq!(p1.step()[0].to_bits(), p2.step()[0].to_bits());
+        }
+    }
+}

@@ -1,0 +1,125 @@
+//! Bit-Transmission-Delay process: `C^n = exp(Z^n)` (coordinate-wise) over
+//! an [`Ar1Process`] — log-normal marginals with tunable correlation
+//! across clients and time (paper §IV-A2).
+
+use super::ar1::Ar1Process;
+use crate::util::rng::Rng;
+
+/// Anything that can produce the per-round BTD vector.  The coordinator
+/// only sees this trait, so the AR(1) simulator, the finite-state Markov
+/// model, and replayed traces are interchangeable.
+pub trait NetworkProcess: Send {
+    /// Number of clients m.
+    fn dim(&self) -> usize;
+    /// Advance one round; returns the BTD vector `c^n` (seconds per bit).
+    fn next_state(&mut self) -> Vec<f64>;
+}
+
+/// Log-normal BTD over an AR(1) latent process.
+#[derive(Clone, Debug)]
+pub struct BtdProcess {
+    inner: Ar1Process,
+}
+
+impl BtdProcess {
+    pub fn new(inner: Ar1Process) -> Self {
+        BtdProcess { inner }
+    }
+
+    pub fn latent(&self) -> &Ar1Process {
+        &self.inner
+    }
+}
+
+impl NetworkProcess for BtdProcess {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn next_state(&mut self) -> Vec<f64> {
+        self.inner.step().iter().map(|z| z.exp()).collect()
+    }
+}
+
+/// Replay a pre-recorded trace (repeats cyclically) — used by tests and
+/// by the trace-driven examples.
+#[derive(Clone, Debug)]
+pub struct TraceProcess {
+    trace: Vec<Vec<f64>>,
+    pos: usize,
+}
+
+impl TraceProcess {
+    pub fn new(trace: Vec<Vec<f64>>) -> Self {
+        assert!(!trace.is_empty());
+        TraceProcess { trace, pos: 0 }
+    }
+}
+
+impl NetworkProcess for TraceProcess {
+    fn dim(&self) -> usize {
+        self.trace[0].len()
+    }
+
+    fn next_state(&mut self) -> Vec<f64> {
+        let c = self.trace[self.pos % self.trace.len()].clone();
+        self.pos += 1;
+        c
+    }
+}
+
+/// I.i.d. log-normal shortcut used in micro-tests.
+pub struct IidLogNormal {
+    pub m: usize,
+    pub mu: f64,
+    pub sigma: f64,
+    pub rng: Rng,
+}
+
+impl NetworkProcess for IidLogNormal {
+    fn dim(&self) -> usize {
+        self.m
+    }
+
+    fn next_state(&mut self) -> Vec<f64> {
+        (0..self.m)
+            .map(|_| self.rng.normal_ms(self.mu, self.sigma).exp())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::linalg::Mat;
+
+    #[test]
+    fn btd_is_positive_lognormal() {
+        let ar = Ar1Process::new(
+            Mat::zeros(3, 3),
+            vec![1.0, 1.0, 1.0],
+            &Mat::eye(3),
+            Rng::new(1),
+        )
+        .unwrap();
+        let mut p = BtdProcess::new(ar);
+        let n = 50_000;
+        let mut sum_log = 0.0;
+        for _ in 0..n {
+            let c = p.next_state();
+            assert!(c.iter().all(|&x| x > 0.0));
+            sum_log += c[0].ln();
+        }
+        // log C ~ N(1, 1)
+        let mean_log = sum_log / n as f64;
+        assert!((mean_log - 1.0).abs() < 0.03, "mean log {mean_log}");
+    }
+
+    #[test]
+    fn trace_replays_cyclically() {
+        let mut t = TraceProcess::new(vec![vec![1.0], vec![2.0]]);
+        assert_eq!(t.next_state(), vec![1.0]);
+        assert_eq!(t.next_state(), vec![2.0]);
+        assert_eq!(t.next_state(), vec![1.0]);
+    }
+}

@@ -1,0 +1,123 @@
+//! Round-duration function `d(tau, b, c)` (paper §II + §IV-A3).
+//!
+//! The paper's simulations use the max-across-clients form
+//! `d = max_j [theta*tau + c_j * s(b_j)]` with theta = 0; the model setup
+//! also allows a shared-resource TDMA form (sum of delays).  Both are
+//! implemented — the delay model is an injection point for the policies'
+//! argmin solvers (`policy::solver`).
+
+use crate::quant::SizeModel;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum DelayModel {
+    /// Round ends when the slowest client's upload lands.
+    Max { theta: f64 },
+    /// Clients share one resource in TDMA fashion: durations add.
+    TdmaSum { theta: f64 },
+}
+
+impl DelayModel {
+    /// Paper default: max with zero compute time.
+    pub fn paper_default() -> Self {
+        DelayModel::Max { theta: 0.0 }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "max" => Ok(DelayModel::Max { theta: 0.0 }),
+            "tdma" => Ok(DelayModel::TdmaSum { theta: 0.0 }),
+            _ => Err(anyhow::anyhow!("unknown delay model `{s}` (max | tdma)")),
+        }
+    }
+
+    /// Per-client upload delay: theta*tau + c_j * s(b_j).
+    #[inline]
+    pub fn client_delay(&self, tau: usize, b: u8, c_j: f64, size: &SizeModel) -> f64 {
+        let theta = match self {
+            DelayModel::Max { theta } | DelayModel::TdmaSum { theta } => *theta,
+        };
+        theta * tau as f64 + c_j * size.bits(b)
+    }
+
+    /// Round duration d(tau, b, c).
+    pub fn duration(&self, tau: usize, bits: &[u8], c: &[f64], size: &SizeModel) -> f64 {
+        assert_eq!(bits.len(), c.len());
+        match self {
+            DelayModel::Max { .. } => bits
+                .iter()
+                .zip(c.iter())
+                .map(|(&b, &cj)| self.client_delay(tau, b, cj, size))
+                .fold(0.0, f64::max),
+            DelayModel::TdmaSum { .. } => bits
+                .iter()
+                .zip(c.iter())
+                .map(|(&b, &cj)| self.client_delay(tau, b, cj, size))
+                .sum(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{check, Config};
+    use crate::util::rng::Rng;
+
+    fn size() -> SizeModel {
+        SizeModel::new(1000)
+    }
+
+    #[test]
+    fn max_model_picks_slowest() {
+        let d = DelayModel::Max { theta: 0.0 };
+        let dur = d.duration(2, &[1, 1, 1], &[1.0, 5.0, 2.0], &size());
+        assert_eq!(dur, 5.0 * size().bits(1));
+    }
+
+    #[test]
+    fn tdma_model_sums() {
+        let d = DelayModel::TdmaSum { theta: 0.0 };
+        let dur = d.duration(2, &[1, 2], &[1.0, 1.0], &size());
+        assert_eq!(dur, size().bits(1) + size().bits(2));
+    }
+
+    #[test]
+    fn theta_adds_compute_time() {
+        let d = DelayModel::Max { theta: 3.0 };
+        let dur = d.duration(2, &[1], &[0.0], &size());
+        assert_eq!(dur, 6.0);
+    }
+
+    #[test]
+    fn prop_duration_increases_with_bits_and_congestion() {
+        // d is increasing in every b_j (bigger files) and every c_j
+        // (Assumption 3's monotonicity, stated on r = h(q): more rounds
+        // <=> more compression <=> fewer bits <=> shorter rounds).
+        check(
+            Config::named("delay_monotone").cases(128),
+            |rng| {
+                let m = 1 + rng.below(10);
+                let bits: Vec<u8> = (0..m).map(|_| 1 + rng.below(30) as u8).collect();
+                let c: Vec<f64> = (0..m).map(|_| rng.uniform() * 10.0 + 1e-3).collect();
+                let j = rng.below(m);
+                let tdma = rng.uniform() < 0.5;
+                (bits, c, j, tdma)
+            },
+            |(bits, c, j, tdma)| {
+                let d = if *tdma {
+                    DelayModel::TdmaSum { theta: 0.0 }
+                } else {
+                    DelayModel::Max { theta: 0.0 }
+                };
+                let s = size();
+                let base = d.duration(2, bits, c, &s);
+                let mut more_bits = bits.clone();
+                more_bits[*j] = (more_bits[*j] + 1).min(32);
+                let mut more_cong = c.clone();
+                more_cong[*j] *= 2.0;
+                d.duration(2, &more_bits, c, &s) >= base
+                    && d.duration(2, bits, &more_cong, &s) >= base
+            },
+        );
+    }
+}

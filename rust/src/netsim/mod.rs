@@ -1,0 +1,30 @@
+//! Network congestion substrate (paper §II + §IV-A2/3).
+//!
+//! The paper's exogenous *network state* `c^n` is the per-client Bit
+//! Transmission Delay (BTD) vector.  Two generative models are provided:
+//!
+//! * [`ar1`]/[`btd`]/[`scenarios`] — the simulation model of §IV-A2:
+//!   `C^n = exp(Z^n)` with `Z^n = A Z^{n-1} + E^n`, `E^n ~ N(mu, Sigma)`,
+//!   plus the four paper scenarios (homogeneous/heterogeneous independent,
+//!   perfectly/partially correlated).
+//! * [`markov`] — the finite-state irreducible aperiodic Markov chain of
+//!   Assumption 4 (used by the oracle policy and the Theorem-1
+//!   convergence ablation).
+//!
+//! [`delay`] implements the round-duration function
+//! `d(tau, b, c) = max_j [theta*tau + c_j * s(b_j)]` (and a TDMA-sum
+//! variant), and [`estimator`] the in-band BTD probing of §V.
+
+pub mod ar1;
+pub mod btd;
+pub mod delay;
+pub mod estimator;
+pub mod markov;
+pub mod scenarios;
+pub mod trace_io;
+
+pub use ar1::Ar1Process;
+pub use btd::{BtdProcess, NetworkProcess};
+pub use delay::DelayModel;
+pub use markov::MarkovChain;
+pub use scenarios::{Scenario, ScenarioKind};

@@ -1,0 +1,214 @@
+//! The four congestion scenarios of §IV-A2, parameterized exactly as in
+//! the paper, plus the Table-III mapping from asymptotic variance
+//! `sigma_inf^2` to the AR coefficient `a = 1 - 1/sigma_inf`.
+
+use super::ar1::Ar1Process;
+use super::btd::BtdProcess;
+use crate::util::linalg::Mat;
+use crate::util::rng::Rng;
+use anyhow::{anyhow, Result};
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ScenarioKind {
+    /// A = 0, mu = 1, Sigma = sigma^2 I — i.i.d. across clients and time.
+    HomogeneousIndependent { sigma_sq: f64 },
+    /// A = 0, mu_i = 0 (first half) / 2 (second half), Sigma = I.
+    HeterogeneousIndependent,
+    /// A_ij = a/m, mu = 0, Sigma_ij = 1 for all i,j (rank-1: all clients
+    /// share one innovation) — identical, time-correlated delays.
+    PerfectlyCorrelated { sigma_inf_sq: f64 },
+    /// A_ij = a/m, mu = 0, Sigma_ii = 1, Sigma_ij = 1/2 — positive but
+    /// partial correlation across clients, correlated across time.
+    PartiallyCorrelated { sigma_inf_sq: f64 },
+}
+
+impl ScenarioKind {
+    /// Parse "homog:2", "heterog", "perf:4", "part:4".
+    pub fn parse(s: &str) -> Result<Self> {
+        let (name, arg) = match s.split_once(':') {
+            Some((n, a)) => (n, Some(a)),
+            None => (s, None),
+        };
+        let num = |d: f64| -> Result<f64> {
+            arg.map(|a| a.parse().map_err(|e| anyhow!("scenario arg: {e}")))
+                .unwrap_or(Ok(d))
+        };
+        match name {
+            "homog" => Ok(ScenarioKind::HomogeneousIndependent { sigma_sq: num(1.0)? }),
+            "heterog" => Ok(ScenarioKind::HeterogeneousIndependent),
+            "perf" => Ok(ScenarioKind::PerfectlyCorrelated { sigma_inf_sq: num(4.0)? }),
+            "part" => Ok(ScenarioKind::PartiallyCorrelated { sigma_inf_sq: num(4.0)? }),
+            _ => Err(anyhow!(
+                "unknown scenario `{s}` (expect homog[:s2] | heterog | perf[:si2] | part[:si2])"
+            )),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            ScenarioKind::HomogeneousIndependent { sigma_sq } => format!("homog:{sigma_sq}"),
+            ScenarioKind::HeterogeneousIndependent => "heterog".into(),
+            ScenarioKind::PerfectlyCorrelated { sigma_inf_sq } => format!("perf:{sigma_inf_sq}"),
+            ScenarioKind::PartiallyCorrelated { sigma_inf_sq } => format!("part:{sigma_inf_sq}"),
+        }
+    }
+}
+
+/// A fully instantiated scenario for m clients.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub kind: ScenarioKind,
+    pub m: usize,
+    pub a: Mat,
+    pub mu: Vec<f64>,
+    pub sigma: Mat,
+}
+
+impl Scenario {
+    pub fn new(kind: ScenarioKind, m: usize) -> Self {
+        let (a, mu, sigma) = match kind {
+            ScenarioKind::HomogeneousIndependent { sigma_sq } => {
+                let mut s = Mat::zeros(m, m);
+                for i in 0..m {
+                    s[(i, i)] = sigma_sq;
+                }
+                (Mat::zeros(m, m), vec![1.0; m], s)
+            }
+            ScenarioKind::HeterogeneousIndependent => {
+                let mut mu = vec![0.0; m];
+                for (i, v) in mu.iter_mut().enumerate() {
+                    if i >= m / 2 {
+                        *v = 2.0;
+                    }
+                }
+                (Mat::zeros(m, m), mu, Mat::eye(m))
+            }
+            ScenarioKind::PerfectlyCorrelated { sigma_inf_sq } => {
+                let a = Ar1Process::a_for_asymptotic_variance(sigma_inf_sq);
+                (
+                    Mat::constant(m, m, a / m as f64),
+                    vec![0.0; m],
+                    Mat::constant(m, m, 1.0),
+                )
+            }
+            ScenarioKind::PartiallyCorrelated { sigma_inf_sq } => {
+                let a = Ar1Process::a_for_asymptotic_variance(sigma_inf_sq);
+                let mut s = Mat::constant(m, m, 0.5);
+                for i in 0..m {
+                    s[(i, i)] = 1.0;
+                }
+                (Mat::constant(m, m, a / m as f64), vec![0.0; m], s)
+            }
+        };
+        Scenario { kind, m, a, mu, sigma }
+    }
+
+    /// Instantiate the BTD process with its own RNG stream.
+    pub fn process(&self, rng: Rng) -> Result<BtdProcess> {
+        Ok(BtdProcess::new(Ar1Process::new(
+            self.a.clone(),
+            self.mu.clone(),
+            &self.sigma,
+            rng,
+        )?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::btd::NetworkProcess;
+
+    const M: usize = 10;
+
+    #[test]
+    fn parse_round_trips() {
+        for s in ["homog:2", "heterog", "perf:4", "part:16"] {
+            let k = ScenarioKind::parse(s).unwrap();
+            assert_eq!(k.label(), s);
+        }
+        assert!(ScenarioKind::parse("nope").is_err());
+    }
+
+    #[test]
+    fn homogeneous_params_match_paper() {
+        let sc = Scenario::new(ScenarioKind::HomogeneousIndependent { sigma_sq: 3.0 }, M);
+        assert_eq!(sc.a, Mat::zeros(M, M));
+        assert_eq!(sc.mu, vec![1.0; M]);
+        assert_eq!(sc.sigma[(0, 0)], 3.0);
+        assert_eq!(sc.sigma[(0, 1)], 0.0);
+    }
+
+    #[test]
+    fn heterogeneous_splits_clients() {
+        let sc = Scenario::new(ScenarioKind::HeterogeneousIndependent, M);
+        assert_eq!(&sc.mu[..5], &[0.0; 5]);
+        assert_eq!(&sc.mu[5..], &[2.0; 5]);
+    }
+
+    #[test]
+    fn perfectly_correlated_clients_see_identical_delays() {
+        let sc = Scenario::new(ScenarioKind::PerfectlyCorrelated { sigma_inf_sq: 4.0 }, M);
+        // a = 1 - 1/2 = 0.5
+        assert!((sc.a[(0, 0)] - 0.5 / M as f64).abs() < 1e-12);
+        let mut p = sc.process(Rng::new(3)).unwrap();
+        for _ in 0..20 {
+            let c = p.next_state();
+            for j in 1..M {
+                assert!((c[j] - c[0]).abs() < 1e-12, "clients differ: {c:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn partially_correlated_is_positive_but_not_perfect() {
+        let sc = Scenario::new(ScenarioKind::PartiallyCorrelated { sigma_inf_sq: 4.0 }, M);
+        let mut p = sc.process(Rng::new(4)).unwrap();
+        // Sample correlation of log-delays between two clients in (0.2, 0.9).
+        let n = 30_000;
+        let (mut sx, mut sy, mut sxx, mut syy, mut sxy) = (0.0, 0.0, 0.0, 0.0, 0.0);
+        for _ in 0..n {
+            let c = p.next_state();
+            let (x, y) = (c[0].ln(), c[1].ln());
+            sx += x;
+            sy += y;
+            sxx += x * x;
+            syy += y * y;
+            sxy += x * y;
+        }
+        let nf = n as f64;
+        let cov = sxy / nf - sx / nf * sy / nf;
+        let vx = sxx / nf - (sx / nf) * (sx / nf);
+        let vy = syy / nf - (sy / nf) * (sy / nf);
+        let corr = cov / (vx * vy).sqrt();
+        assert!(corr > 0.2 && corr < 0.95, "corr {corr}");
+    }
+
+    #[test]
+    fn correlated_scenarios_have_time_correlation() {
+        let sc = Scenario::new(ScenarioKind::PerfectlyCorrelated { sigma_inf_sq: 4.0 }, M);
+        let mut p = sc.process(Rng::new(5)).unwrap();
+        // lag-1 autocorrelation of log-delay should be near a = 0.5... of
+        // the latent AR(1): corr = a for stationary scalar AR(1).
+        for _ in 0..500 {
+            p.next_state();
+        }
+        let n = 50_000;
+        let mut prev = p.next_state()[0].ln();
+        let (mut s1, mut s11, mut s12) = (0.0, 0.0, 0.0);
+        let mut vals = Vec::with_capacity(n);
+        for _ in 0..n {
+            let cur = p.next_state()[0].ln();
+            s12 += prev * cur;
+            vals.push(cur);
+            s1 += cur;
+            s11 += cur * cur;
+            prev = cur;
+        }
+        let nf = n as f64;
+        let mean = s1 / nf;
+        let var = s11 / nf - mean * mean;
+        let ac1 = (s12 / nf - mean * mean) / var;
+        assert!((ac1 - 0.5).abs() < 0.05, "lag-1 autocorr {ac1}");
+    }
+}

@@ -1,0 +1,99 @@
+//! Congestion-trace replay: load per-round BTD vectors from CSV so
+//! recorded (or externally generated) congestion can drive the policies
+//! — the deployment path of §V, where the server probes real delays.
+//!
+//! Format: one row per round, `m` comma-separated positive floats
+//! (seconds/bit); `#` comments and a header row are tolerated.
+
+use super::btd::TraceProcess;
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// Parse CSV text into a BTD trace.
+pub fn parse_trace(text: &str) -> Result<Vec<Vec<f64>>> {
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let parsed: Result<Vec<f64>, _> =
+            line.split(',').map(|f| f.trim().parse::<f64>()).collect();
+        match parsed {
+            Ok(vals) => {
+                if vals.iter().any(|&v| !(v > 0.0) || !v.is_finite()) {
+                    return Err(anyhow!("line {}: BTDs must be positive/finite", lineno + 1));
+                }
+                if let Some(first) = rows.first() {
+                    if vals.len() != first.len() {
+                        return Err(anyhow!(
+                            "line {}: {} columns, expected {}",
+                            lineno + 1,
+                            vals.len(),
+                            first.len()
+                        ));
+                    }
+                }
+                rows.push(vals);
+            }
+            Err(_) if rows.is_empty() => continue, // header row
+            Err(e) => return Err(anyhow!("line {}: {e}", lineno + 1)),
+        }
+    }
+    if rows.is_empty() {
+        return Err(anyhow!("trace has no data rows"));
+    }
+    Ok(rows)
+}
+
+/// Load a replayable process from a CSV file.
+pub fn load_trace(path: impl AsRef<Path>) -> Result<TraceProcess> {
+    let text = std::fs::read_to_string(path.as_ref())
+        .with_context(|| format!("reading {}", path.as_ref().display()))?;
+    Ok(TraceProcess::new(parse_trace(&text)?))
+}
+
+/// Write a trace (e.g. one sampled from a [`super::Scenario`]) to CSV —
+/// lets experiments be re-run against a frozen congestion path.
+pub fn save_trace(path: impl AsRef<Path>, rows: &[Vec<f64>]) -> Result<()> {
+    use std::io::Write;
+    let mut f = std::fs::File::create(path.as_ref())?;
+    writeln!(f, "# nacfl BTD trace: one row per round, seconds/bit per client")?;
+    for row in rows {
+        let cells: Vec<String> = row.iter().map(|v| format!("{v:.9e}")).collect();
+        writeln!(f, "{}", cells.join(","))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::btd::NetworkProcess;
+
+    #[test]
+    fn parses_with_header_and_comments() {
+        let t = parse_trace("# comment\nc1,c2\n1.0,2.0\n3.0,4.0\n").unwrap();
+        assert_eq!(t, vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+    }
+
+    #[test]
+    fn rejects_ragged_nonpositive_empty() {
+        assert!(parse_trace("1.0,2.0\n3.0\n").is_err());
+        assert!(parse_trace("1.0,-2.0\n").is_err());
+        assert!(parse_trace("# nothing\n").is_err());
+    }
+
+    #[test]
+    fn round_trips_via_file_and_replays() {
+        let rows = vec![vec![0.5, 1.5], vec![2.5, 3.5]];
+        let path = std::env::temp_dir().join(format!("nacfl_trace_{}.csv", std::process::id()));
+        save_trace(&path, &rows).unwrap();
+        let mut proc = load_trace(&path).unwrap();
+        assert_eq!(proc.dim(), 2);
+        assert_eq!(proc.next_state(), vec![0.5, 1.5]);
+        assert_eq!(proc.next_state(), vec![2.5, 3.5]);
+        assert_eq!(proc.next_state(), vec![0.5, 1.5]); // cyclic
+        std::fs::remove_file(&path).ok();
+    }
+}

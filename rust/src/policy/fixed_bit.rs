@@ -1,0 +1,49 @@
+//! Fixed-Bit baseline (§IV-A4a): every client always quantizes with the
+//! same bit-width b, regardless of network state.
+
+use super::{CompressionPolicy, PolicyCtx};
+use crate::quant::{B_MAX, B_MIN};
+use anyhow::{anyhow, Result};
+
+#[derive(Clone, Copy, Debug)]
+pub struct FixedBit {
+    pub bits: u8,
+}
+
+impl FixedBit {
+    pub fn new(bits: u8) -> Result<Self> {
+        if !(B_MIN..=B_MAX).contains(&bits) {
+            return Err(anyhow!("fixed-bit policy: b={bits} outside [1, 32]"));
+        }
+        Ok(FixedBit { bits })
+    }
+}
+
+impl CompressionPolicy for FixedBit {
+    fn name(&self) -> String {
+        format!("fixed({} bit)", self.bits)
+    }
+
+    fn choose(&mut self, _ctx: &PolicyCtx, c: &[f64]) -> Vec<u8> {
+        vec![self.bits; c.len()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_regardless_of_state() {
+        let ctx = PolicyCtx::paper_default(1000);
+        let mut p = FixedBit::new(2).unwrap();
+        assert_eq!(p.choose(&ctx, &[1.0, 9.0]), vec![2, 2]);
+        assert_eq!(p.choose(&ctx, &[100.0, 0.1]), vec![2, 2]);
+    }
+
+    #[test]
+    fn rejects_out_of_range() {
+        assert!(FixedBit::new(0).is_err());
+        assert!(FixedBit::new(33).is_err());
+    }
+}

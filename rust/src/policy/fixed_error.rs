@@ -1,0 +1,77 @@
+//! Fixed-Error baseline (§IV-A4b, after [13]): each round, choose the
+//! bit vector minimizing the round duration subject to the average
+//! normalized variance staying under a fixed budget q (paper: q = 5.25).
+//! Exploits congestion diversity *across clients* but not across time.
+
+use super::solver::min_duration_with_error_budget;
+use super::{CompressionPolicy, PolicyCtx};
+
+#[derive(Clone, Copy, Debug)]
+pub struct FixedError {
+    pub q_budget: f64,
+}
+
+impl FixedError {
+    pub fn new(q_budget: f64) -> Self {
+        assert!(q_budget > 0.0);
+        FixedError { q_budget }
+    }
+}
+
+impl CompressionPolicy for FixedError {
+    fn name(&self) -> String {
+        format!("fixed-error(q={})", self.q_budget)
+    }
+
+    fn choose(&mut self, ctx: &PolicyCtx, c: &[f64]) -> Vec<u8> {
+        min_duration_with_error_budget(ctx, c, self.q_budget)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{check, Config};
+
+    #[test]
+    fn respects_budget_and_compresses_slow_clients() {
+        let ctx = PolicyCtx::paper_default(198_760);
+        let mut p = FixedError::new(5.25);
+        let c = vec![0.1, 0.1, 10.0, 10.0];
+        let bits = p.choose(&ctx, &c);
+        assert!(ctx.rounds.var.q_bar(&bits) <= 5.25 + 1e-12);
+        // Slow clients get at most the fast clients' precision.
+        assert!(bits[2] <= bits[0] && bits[3] <= bits[1], "{bits:?}");
+    }
+
+    #[test]
+    fn prop_budget_always_met() {
+        check(
+            Config::named("fixed_error_budget").cases(64),
+            |rng| {
+                let m = 1 + rng.below(10);
+                let c: Vec<f64> = (0..m).map(|_| 0.05 + rng.uniform() * 8.0).collect();
+                c
+            },
+            |c| {
+                let ctx = PolicyCtx::paper_default(198_760);
+                let mut p = FixedError::new(5.25);
+                let bits = p.choose(&ctx, c);
+                ctx.rounds.var.q_bar(&bits) <= 5.25 + 1e-9
+            },
+        );
+    }
+
+    #[test]
+    fn insensitive_to_time_correlation() {
+        // Memoryless: identical states yield identical choices no matter
+        // the history — the property NAC-FL exploits and this can't.
+        let ctx = PolicyCtx::paper_default(198_760);
+        let mut p = FixedError::new(5.25);
+        let first = p.choose(&ctx, &[1.0, 2.0]);
+        for _ in 0..10 {
+            p.choose(&ctx, &[50.0, 60.0]);
+        }
+        assert_eq!(p.choose(&ctx, &[1.0, 2.0]), first);
+    }
+}

@@ -1,0 +1,121 @@
+//! Compression-level choice policies (paper §III + §IV-A4).
+//!
+//! * [`nacfl`] — the paper's contribution: Algorithm 1, a stochastic
+//!   Frank-Wolfe scheme over running estimates of the expected rounds
+//!   proxy and the mean round duration.
+//! * [`fixed_bit`] / [`fixed_error`] — the baselines of §IV-A4.
+//! * [`oracle`] — solves the known-distribution program (4) for a finite
+//!   Markov state space (Theorem-1 convergence reference).
+//! * [`solver`] — the per-round argmin over client bit vectors shared by
+//!   NAC-FL and the oracle (exact candidate-duration sweep for the max
+//!   delay model; coordinate descent for TDMA).
+//! * [`rounds_model`] — `h_eps`: the rounds-to-converge proxy
+//!   `rho(b) = sqrt(1 + q_bar(b))` from Theorem 2.
+
+pub mod fixed_bit;
+pub mod fixed_error;
+pub mod nacfl;
+pub mod oracle;
+pub mod rounds_model;
+pub mod solver;
+
+pub use fixed_bit::FixedBit;
+pub use fixed_error::FixedError;
+pub use nacfl::NacFl;
+pub use oracle::OraclePolicy;
+pub use rounds_model::RoundsModel;
+
+use crate::netsim::DelayModel;
+use crate::quant::{SizeModel, VarianceModel};
+use anyhow::{anyhow, Result};
+
+/// Everything a policy needs to price a candidate bit vector.
+#[derive(Clone, Debug)]
+pub struct PolicyCtx {
+    pub tau: usize,
+    pub delay: DelayModel,
+    pub size: SizeModel,
+    pub rounds: RoundsModel,
+}
+
+impl PolicyCtx {
+    pub fn paper_default(dim: usize) -> Self {
+        PolicyCtx {
+            tau: 2,
+            delay: DelayModel::paper_default(),
+            size: SizeModel::new(dim),
+            rounds: RoundsModel::new(VarianceModel::default()),
+        }
+    }
+
+    /// Round duration for a bit vector under network state c.
+    pub fn duration(&self, bits: &[u8], c: &[f64]) -> f64 {
+        self.delay.duration(self.tau, bits, c, &self.size)
+    }
+}
+
+/// A compression-level choice policy: sees the (estimated) network state
+/// each round, returns per-client bit-widths.  Policies are stateful
+/// (NAC-FL updates running averages) and owned by the coordinator leader.
+pub trait CompressionPolicy: Send {
+    fn name(&self) -> String;
+    /// Choose bit-widths for round `n` (1-based) given network state `c`.
+    fn choose(&mut self, ctx: &PolicyCtx, c: &[f64]) -> Vec<u8>;
+}
+
+/// Parse a policy spec: `nacfl[:alpha]`, `fixed:<b>`, `error[:q]`.
+/// (`oracle` needs a Markov model and is constructed explicitly.)
+pub fn parse_policy(spec: &str) -> Result<Box<dyn CompressionPolicy>> {
+    let (name, arg) = match spec.split_once(':') {
+        Some((n, a)) => (n, Some(a)),
+        None => (spec, None),
+    };
+    match name {
+        "nacfl" => {
+            let alpha = arg.map(|a| a.parse()).transpose()?.unwrap_or(2.0);
+            Ok(Box::new(NacFl::new(alpha)))
+        }
+        "fixed" => {
+            let b: u8 = arg
+                .ok_or_else(|| anyhow!("fixed:<bits> requires a bit-width"))?
+                .parse()?;
+            Ok(Box::new(FixedBit::new(b)?))
+        }
+        "error" => {
+            let q = arg.map(|a| a.parse()).transpose()?.unwrap_or(5.25);
+            Ok(Box::new(FixedError::new(q)))
+        }
+        _ => Err(anyhow!("unknown policy `{spec}` (nacfl[:a] | fixed:<b> | error[:q])")),
+    }
+}
+
+/// The paper's §IV policy roster for a table row.
+pub fn paper_roster() -> Vec<String> {
+    vec![
+        "fixed:1".into(),
+        "fixed:2".into(),
+        "fixed:3".into(),
+        "error:5.25".into(),
+        "nacfl:1".into(),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_all_specs() {
+        for s in ["nacfl", "nacfl:1", "fixed:1", "fixed:3", "error", "error:5.25"] {
+            parse_policy(s).unwrap();
+        }
+        assert!(parse_policy("fixed").is_err());
+        assert!(parse_policy("fixed:0").is_err());
+        assert!(parse_policy("bogus").is_err());
+    }
+
+    #[test]
+    fn roster_matches_paper() {
+        assert_eq!(paper_roster().len(), 5);
+    }
+}

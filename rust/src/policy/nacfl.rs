@@ -1,0 +1,195 @@
+//! NAC-FL (paper Algorithm 1): network-adaptive compression via a
+//! stochastic Frank-Wolfe scheme.
+//!
+//! Keeps running estimates
+//!
+//! ```text
+//! r_hat^n = (1 - beta_n) r_hat^{n-1} + beta_n * rho(b^n)
+//! d_hat^n = (1 - beta_n) d_hat^{n-1} + beta_n * d(tau, b^n, c^n)
+//! ```
+//!
+//! and at each round, after observing the network state c^n, plays
+//!
+//! ```text
+//! b^n = argmin_b  alpha * r_hat^{n-1} * d(tau, b, c^n)
+//!               + d_hat^{n-1} * rho(b)                       (eq. 6)
+//! ```
+//!
+//! With beta_n = 1/n and alpha = 1 this is exactly the informal
+//! description of §III-B; the paper's experiments use alpha = 2 (§IV-A5),
+//! which is our default.  A constant step size beta is also supported
+//! (the Theorem-1 regime and the §III-C remark ablation).
+
+use super::solver::argmin_cost;
+use super::{CompressionPolicy, PolicyCtx};
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum StepSize {
+    /// beta_n = 1/n (paper simulations).
+    Harmonic,
+    /// beta_n = beta (Theorem 1 analysis regime).
+    Constant(f64),
+}
+
+#[derive(Clone, Debug)]
+pub struct NacFl {
+    pub alpha: f64,
+    pub step: StepSize,
+    r_hat: f64,
+    d_hat: f64,
+    n: usize,
+}
+
+impl NacFl {
+    /// Paper defaults: beta_n = 1/n, estimates cold-started on round 1.
+    pub fn new(alpha: f64) -> Self {
+        NacFl { alpha, step: StepSize::Harmonic, r_hat: 0.0, d_hat: 0.0, n: 0 }
+    }
+
+    pub fn with_step(alpha: f64, step: StepSize) -> Self {
+        NacFl { alpha, step, r_hat: 0.0, d_hat: 0.0, n: 0 }
+    }
+
+    /// Warm-start the running estimates (r_hat^(0), d_hat^(0)).
+    pub fn with_init(mut self, r0: f64, d0: f64) -> Self {
+        self.r_hat = r0;
+        self.d_hat = d0;
+        self
+    }
+
+    /// Current estimates (X^n of Appendix B) — exposed for the Theorem-1
+    /// convergence ablation.
+    pub fn estimates(&self) -> (f64, f64) {
+        (self.r_hat, self.d_hat)
+    }
+
+    fn beta(&self, n: usize) -> f64 {
+        match self.step {
+            StepSize::Harmonic => 1.0 / n as f64,
+            StepSize::Constant(b) => b,
+        }
+    }
+}
+
+impl CompressionPolicy for NacFl {
+    fn name(&self) -> String {
+        match self.step {
+            StepSize::Harmonic => format!("nacfl(alpha={})", self.alpha),
+            StepSize::Constant(b) => format!("nacfl(alpha={},beta={b})", self.alpha),
+        }
+    }
+
+    fn choose(&mut self, ctx: &PolicyCtx, c: &[f64]) -> Vec<u8> {
+        self.n += 1;
+        // Round 1 (cold start, r_hat = d_hat = 0): the objective is flat,
+        // so seed with a balanced weighting — equivalent to initializing
+        // the estimates with the first observation, as Algorithm 1's
+        // free initialization allows.
+        let (a_coef, b_coef) = if self.r_hat == 0.0 && self.d_hat == 0.0 {
+            // Normalize by the 1-bit duration so both terms are O(1).
+            let d1 = ctx.duration(&vec![1; c.len()], c);
+            (self.alpha / d1.max(1e-300), 1.0)
+        } else {
+            (self.alpha * self.r_hat, self.d_hat)
+        };
+        let bits = argmin_cost(ctx, c, a_coef, b_coef);
+
+        // Algorithm 1 lines 4-5: update the running averages.
+        let beta = self.beta(self.n);
+        let rho = ctx.rounds.rho(&bits);
+        let dur = ctx.duration(&bits, c);
+        self.r_hat = (1.0 - beta) * self.r_hat + beta * rho;
+        self.d_hat = (1.0 - beta) * self.d_hat + beta * dur;
+        bits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{check, Config};
+
+    fn ctx() -> PolicyCtx {
+        PolicyCtx::paper_default(198_760)
+    }
+
+    #[test]
+    fn estimates_track_running_averages() {
+        let ctx = ctx();
+        let mut p = NacFl::new(2.0);
+        let states = [vec![1.0, 2.0], vec![0.5, 0.7], vec![3.0, 3.0]];
+        let mut rhos = Vec::new();
+        let mut durs = Vec::new();
+        for c in &states {
+            let bits = p.choose(&ctx, c);
+            rhos.push(ctx.rounds.rho(&bits));
+            durs.push(ctx.duration(&bits, c));
+        }
+        let (r_hat, d_hat) = p.estimates();
+        let r_expect: f64 = rhos.iter().sum::<f64>() / rhos.len() as f64;
+        let d_expect: f64 = durs.iter().sum::<f64>() / durs.len() as f64;
+        // beta_n = 1/n makes the estimate the exact running mean.
+        assert!((r_hat - r_expect).abs() < 1e-12, "{r_hat} vs {r_expect}");
+        assert!((d_hat - d_expect).abs() < 1e-12, "{d_hat} vs {d_expect}");
+    }
+
+    #[test]
+    fn congested_state_gets_more_compression() {
+        // §III-B: if delays under c are higher than under c', NAC-FL
+        // chooses (weakly) more compression under c.
+        let ctx = ctx();
+        let mut p = NacFl::new(2.0);
+        // Burn in the estimates on a moderate state.
+        for _ in 0..50 {
+            p.choose(&ctx, &[1.0; 10]);
+        }
+        let mut p2 = p.clone();
+        let bits_low = p.choose(&ctx, &[0.2; 10]);
+        let bits_high = p2.choose(&ctx, &[5.0; 10]);
+        assert!(
+            bits_high.iter().zip(bits_low.iter()).all(|(h, l)| h <= l),
+            "high congestion {bits_high:?} vs low {bits_low:?}"
+        );
+        assert!(bits_high.iter().sum::<u8>() < bits_low.iter().sum::<u8>());
+    }
+
+    #[test]
+    fn prop_scale_invariance_of_argmin() {
+        // The eq.-(6) argmin is invariant to jointly scaling (r_hat,
+        // d_hat) — the h_eps constant cancels (rounds_model docs).
+        check(
+            Config::named("nacfl_scale_invariant").cases(48),
+            |rng| {
+                let m = 2 + rng.below(6);
+                let c: Vec<f64> = (0..m).map(|_| 0.1 + rng.uniform() * 5.0).collect();
+                let r0 = 0.5 + rng.uniform() * 10.0;
+                let d0 = 1e4 * (0.5 + rng.uniform() * 10.0);
+                let k = 10f64.powf(rng.uniform() * 4.0 - 2.0);
+                (c, r0, d0, k)
+            },
+            |(c, r0, d0, k)| {
+                let ctx = ctx();
+                let mut a = NacFl::new(2.0).with_init(*r0, *d0);
+                let mut b = NacFl::new(2.0).with_init(r0 * k, d0 * k);
+                a.choose(&ctx, c) == b.choose(&ctx, c)
+            },
+        );
+    }
+
+    #[test]
+    fn constant_step_keeps_adapting() {
+        let ctx = ctx();
+        let mut p = NacFl::with_step(1.0, StepSize::Constant(0.05));
+        for _ in 0..200 {
+            p.choose(&ctx, &[1.0; 4]);
+        }
+        let (r1, d1) = p.estimates();
+        // Shift the regime; constant-beta estimates must move materially.
+        for _ in 0..200 {
+            p.choose(&ctx, &[20.0; 4]);
+        }
+        let (r2, d2) = p.estimates();
+        assert!(d2 > d1 * 2.0, "d_hat should track the new regime: {d1} -> {d2}");
+        assert!(r2 >= r1, "more congestion -> more compression -> larger rho");
+    }
+}

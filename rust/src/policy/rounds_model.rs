@@ -1,0 +1,92 @@
+//! The rounds-to-converge proxy `h_eps` (Assumption 1 + Theorem 2).
+//!
+//! For FedCOM-V, Theorem 2 gives `r_eps = O(log(1/eps) E[sqrt(Q_bar+1)] / eps)`
+//! with `Q_bar` the across-client average normalized variance, i.e. the
+//! norm in Assumption 1 evaluates to
+//!
+//! ```text
+//! ||h_eps(q)|| ∝ rho(b) = sqrt(1 + (1/m) sum_j q(b_j)).
+//! ```
+//!
+//! The eps-dependent constant cancels inside NAC-FL's argmin (both the
+//! `r_hat * d` and `d_hat * ||h||` terms carry one factor of it), so all
+//! policies work with the unscaled proxy `rho`.
+
+use crate::quant::VarianceModel;
+
+#[derive(Clone, Copy, Debug)]
+pub struct RoundsModel {
+    pub var: VarianceModel,
+}
+
+impl RoundsModel {
+    pub fn new(var: VarianceModel) -> Self {
+        RoundsModel { var }
+    }
+
+    /// Scalar h(q) = sqrt(q + 1) (strictly increasing, continuous,
+    /// bounded on q in [0, q_max] — Assumption 1).
+    #[inline]
+    pub fn h_of_q(q: f64) -> f64 {
+        (q + 1.0).sqrt()
+    }
+
+    /// Rounds proxy for a client bit vector: sqrt(1 + q_bar(b)).
+    pub fn rho(&self, bits: &[u8]) -> f64 {
+        Self::h_of_q(self.var.q_bar(bits))
+    }
+
+    /// Rounds proxy from a precomputed q_bar (solver hot path).
+    #[inline]
+    pub fn rho_from_qbar(&self, q_bar: f64) -> f64 {
+        Self::h_of_q(q_bar)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{check, Config};
+
+    #[test]
+    fn h_is_strictly_increasing_from_one() {
+        assert_eq!(RoundsModel::h_of_q(0.0), 1.0);
+        let mut prev = 0.0;
+        for i in 0..100 {
+            let h = RoundsModel::h_of_q(i as f64 * 0.5);
+            assert!(h > prev);
+            prev = h;
+        }
+    }
+
+    #[test]
+    fn rho_decreases_with_more_bits() {
+        let rm = RoundsModel::new(VarianceModel::default());
+        assert!(rm.rho(&[1; 10]) > rm.rho(&[2; 10]));
+        assert!(rm.rho(&[2; 10]) > rm.rho(&[8; 10]));
+        // No compression noise -> proxy tends to 1.
+        assert!((rm.rho(&[32; 10]) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prop_rho_monotone_elementwise() {
+        let rm = RoundsModel::new(VarianceModel::default());
+        check(
+            Config::named("rho_monotone").cases(128),
+            |rng| {
+                let m = 1 + rng.below(10);
+                let bits: Vec<u8> = (0..m).map(|_| 1 + rng.below(31) as u8).collect();
+                let j = rng.below(m);
+                (bits, j)
+            },
+            |(bits, j)| {
+                if bits[*j] >= 32 {
+                    return true;
+                }
+                let mut hi = bits.clone();
+                hi[*j] += 1;
+                rm.rho(&hi) <= rm.rho(bits)
+            },
+        );
+    }
+}

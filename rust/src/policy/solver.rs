@@ -1,0 +1,388 @@
+//! Argmin solvers over client bit vectors.
+//!
+//! NAC-FL's per-round program (paper eq. (6)) is
+//!
+//! ```text
+//! b* = argmin_b  A * d(tau, b, c) + B * rho(b)
+//! ```
+//!
+//! with `A = alpha * r_hat`, `B = d_hat`, `rho(b) = sqrt(1 + q_bar(b))`.
+//!
+//! * **Max delay model** — solved *exactly* by sweeping candidate
+//!   durations: for any bit vector with duration D, replacing it by the
+//!   per-client maximal bits under D (`b_j(D) = max{b : c_j s(b) <= D}`)
+//!   weakly lowers both terms, and the optimal D is one of the m*32
+//!   values `{c_j s(b)}`.  O(m * 32 * log) per round.
+//! * **TDMA-sum model** — the norm couples clients; solved by cyclic
+//!   coordinate descent (each sweep is exact per coordinate), verified
+//!   against exhaustive search on small instances by property tests.
+//!
+//! The same machinery serves the Fixed-Error baseline (min duration
+//! subject to q_bar <= budget) since feasibility under the max model is
+//! monotone in the candidate duration.
+
+use super::PolicyCtx;
+use crate::quant::{B_MAX, B_MIN};
+
+/// Exact argmin of `a_coef * d(b, c) + b_coef * rho(b)`.
+pub fn argmin_cost(ctx: &PolicyCtx, c: &[f64], a_coef: f64, b_coef: f64) -> Vec<u8> {
+    match ctx.delay {
+        crate::netsim::DelayModel::Max { .. } => argmin_cost_max(ctx, c, a_coef, b_coef),
+        crate::netsim::DelayModel::TdmaSum { .. } => {
+            argmin_cost_coordinate_descent(ctx, c, a_coef, b_coef)
+        }
+    }
+}
+
+/// Cost of a specific bit vector (shared by tests and the oracle).
+pub fn cost_of(ctx: &PolicyCtx, c: &[f64], bits: &[u8], a_coef: f64, b_coef: f64) -> f64 {
+    a_coef * ctx.duration(bits, c) + b_coef * ctx.rounds.rho(bits)
+}
+
+/// For each client, the largest bit-width whose upload fits in `d_max`
+/// (None if even b = 1 does not fit).
+fn maximal_bits_under(ctx: &PolicyCtx, c: &[f64], d_max: f64) -> Option<Vec<u8>> {
+    let mut bits = Vec::with_capacity(c.len());
+    for &cj in c {
+        // c_j * s(b) <= d_max  <=>  b <= (d_max/c_j - 32)/dim - 1
+        let budget = d_max / cj;
+        let raw = (budget - 32.0) / ctx.size.dim as f64 - 1.0;
+        if raw < B_MIN as f64 {
+            return None;
+        }
+        bits.push(raw.min(B_MAX as f64) as u8);
+    }
+    Some(bits)
+}
+
+fn argmin_cost_max(ctx: &PolicyCtx, c: &[f64], a_coef: f64, b_coef: f64) -> Vec<u8> {
+    let m = c.len();
+    // Candidate max-terms: c_j * s(b) for all clients and bit-widths, but
+    // only those >= the forced floor max_j c_j*s(1) are feasible.
+    let floor = c
+        .iter()
+        .map(|&cj| cj * ctx.size.bits(B_MIN))
+        .fold(0.0, f64::max);
+    let mut cands: Vec<f64> = Vec::with_capacity(m * 32);
+    for &cj in c {
+        for b in B_MIN..=B_MAX {
+            let d = cj * ctx.size.bits(b);
+            if d >= floor - 1e-12 {
+                cands.push(d);
+            }
+        }
+    }
+    cands.push(floor);
+    cands.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    cands.dedup_by(|a, b| (*a - *b).abs() < 1e-12);
+
+    let mut best: Option<(f64, Vec<u8>)> = None;
+    for &d_max in &cands {
+        if let Some(bits) = maximal_bits_under(ctx, c, d_max * (1.0 + 1e-12)) {
+            let cost = cost_of(ctx, c, &bits, a_coef, b_coef);
+            if best.as_ref().map(|(bc, _)| cost < *bc).unwrap_or(true) {
+                best = Some((cost, bits));
+            }
+        }
+    }
+    best.expect("max-model argmin: floor candidate is always feasible").1
+}
+
+fn argmin_cost_coordinate_descent(
+    ctx: &PolicyCtx,
+    c: &[f64],
+    a_coef: f64,
+    b_coef: f64,
+) -> Vec<u8> {
+    let m = c.len();
+    let mut bits = vec![B_MIN; m];
+    let mut cost = cost_of(ctx, c, &bits, a_coef, b_coef);
+    // Cyclic exact line search per coordinate; objective strictly
+    // decreases each accepted move, so this terminates.
+    for _sweep in 0..64 {
+        let mut improved = false;
+        for j in 0..m {
+            let mut best_b = bits[j];
+            let mut best_cost = cost;
+            let saved = bits[j];
+            for b in B_MIN..=B_MAX {
+                if b == saved {
+                    continue;
+                }
+                bits[j] = b;
+                let cnew = cost_of(ctx, c, &bits, a_coef, b_coef);
+                if cnew < best_cost - 1e-15 {
+                    best_cost = cnew;
+                    best_b = b;
+                }
+            }
+            bits[j] = best_b;
+            if best_b != saved {
+                cost = best_cost;
+                improved = true;
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+    bits
+}
+
+/// Exhaustive argmin (test reference; exponential — small instances only).
+pub fn argmin_exhaustive(
+    ctx: &PolicyCtx,
+    c: &[f64],
+    a_coef: f64,
+    b_coef: f64,
+    b_max: u8,
+) -> Vec<u8> {
+    let m = c.len();
+    let mut bits = vec![B_MIN; m];
+    let mut best = bits.clone();
+    let mut best_cost = cost_of(ctx, c, &bits, a_coef, b_coef);
+    loop {
+        // increment base-(b_max) counter
+        let mut i = 0;
+        loop {
+            if i == m {
+                return best;
+            }
+            if bits[i] < b_max {
+                bits[i] += 1;
+                break;
+            }
+            bits[i] = B_MIN;
+            i += 1;
+        }
+        let cost = cost_of(ctx, c, &bits, a_coef, b_coef);
+        if cost < best_cost {
+            best_cost = cost;
+            best = bits.clone();
+        }
+    }
+}
+
+/// Fixed-Error program ([13]): minimize round duration subject to
+/// `q_bar(b) <= q_budget`.  Exact for the max model (duration-candidate
+/// sweep + monotone feasibility); greedy relaxation for TDMA.
+pub fn min_duration_with_error_budget(ctx: &PolicyCtx, c: &[f64], q_budget: f64) -> Vec<u8> {
+    match ctx.delay {
+        crate::netsim::DelayModel::Max { .. } => {
+            let m = c.len();
+            let floor = c
+                .iter()
+                .map(|&cj| cj * ctx.size.bits(B_MIN))
+                .fold(0.0, f64::max);
+            let mut cands: Vec<f64> = Vec::with_capacity(m * 32);
+            for &cj in c {
+                for b in B_MIN..=B_MAX {
+                    let d = cj * ctx.size.bits(b);
+                    if d >= floor - 1e-12 {
+                        cands.push(d);
+                    }
+                }
+            }
+            cands.push(floor);
+            cands.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            cands.dedup_by(|a, b| (*a - *b).abs() < 1e-12);
+            // q_bar of maximal bits under D is non-increasing in D; take
+            // the smallest feasible candidate.
+            for &d_max in &cands {
+                if let Some(bits) = maximal_bits_under(ctx, c, d_max * (1.0 + 1e-12)) {
+                    if ctx.rounds.var.q_bar(&bits) <= q_budget {
+                        return bits;
+                    }
+                }
+            }
+            // Budget unreachable even at b = 32 everywhere: send max bits.
+            vec![B_MAX; m]
+        }
+        crate::netsim::DelayModel::TdmaSum { .. } => {
+            // Greedy: start at minimum duration (all 1-bit); while over
+            // budget, raise the bit-width that buys the most variance
+            // reduction per unit duration increase.
+            let m = c.len();
+            let mut bits = vec![B_MIN; m];
+            let var = &ctx.rounds.var;
+            while var.q_bar(&bits) > q_budget {
+                let mut best: Option<(f64, usize)> = None;
+                for j in 0..m {
+                    if bits[j] >= B_MAX {
+                        continue;
+                    }
+                    let dv = var.q_of_bits(bits[j]) - var.q_of_bits(bits[j] + 1);
+                    let dd = c[j] * (ctx.size.bits(bits[j] + 1) - ctx.size.bits(bits[j]));
+                    let score = dv / dd.max(1e-300);
+                    if best.map(|(s, _)| score > s).unwrap_or(true) {
+                        best = Some((score, j));
+                    }
+                }
+                match best {
+                    Some((_, j)) => bits[j] += 1,
+                    None => break, // everyone at B_MAX
+                }
+            }
+            bits
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::DelayModel;
+    use crate::quant::{SizeModel, VarianceModel};
+    use crate::policy::RoundsModel;
+    use crate::util::check::{check, Config};
+
+    fn ctx(delay: DelayModel, dim: usize) -> PolicyCtx {
+        PolicyCtx {
+            tau: 2,
+            delay,
+            size: SizeModel::new(dim),
+            rounds: RoundsModel::new(VarianceModel::default()),
+        }
+    }
+
+    #[test]
+    fn high_duration_weight_forces_min_duration() {
+        // Duration-dominated: the chosen vector must achieve the floor
+        // duration (slowest client at 1 bit).  Under the max model other
+        // clients keep any bits that are free within that duration.
+        let ctx = ctx(DelayModel::paper_default(), 1000);
+        let c = vec![1.0, 2.0, 0.5];
+        let bits = argmin_cost(&ctx, &c, 1e9, 1e-9);
+        let floor = 2.0 * ctx.size.bits(1);
+        assert_eq!(bits[1], 1, "slowest client fully compressed: {bits:?}");
+        assert!(
+            (ctx.duration(&bits, &c) - floor).abs() < 1e-9,
+            "must hit the floor duration: {bits:?}"
+        );
+        // Faster clients use the slack (strictly more bits).
+        assert!(bits[0] > 1 && bits[2] > bits[0], "{bits:?}");
+        // Under TDMA every extra bit costs time, so there it IS all-ones.
+        let ctx_tdma = ctx_t(DelayModel::TdmaSum { theta: 0.0 }, 1000);
+        let bits = argmin_cost(&ctx_tdma, &c, 1e9, 1e-9);
+        assert_eq!(bits, vec![1, 1, 1]);
+    }
+
+    fn ctx_t(delay: DelayModel, dim: usize) -> PolicyCtx {
+        ctx(delay, dim)
+    }
+
+    #[test]
+    fn high_rounds_weight_forces_min_compression() {
+        let ctx = ctx(DelayModel::paper_default(), 1000);
+        let c = vec![1.0, 2.0, 0.5];
+        let bits = argmin_cost(&ctx, &c, 1e-12, 1e12);
+        assert!(bits.iter().all(|&b| b >= 16), "rounds-dominated -> many bits: {bits:?}");
+    }
+
+    #[test]
+    fn slower_clients_get_fewer_bits() {
+        let ctx = ctx(DelayModel::paper_default(), 100_000);
+        let c = vec![0.1, 1.0, 10.0];
+        let bits = argmin_cost(&ctx, &c, 1.0, 1e6);
+        assert!(bits[0] >= bits[1] && bits[1] >= bits[2], "bits {bits:?}");
+        assert!(bits[0] > bits[2], "diversity should be exploited: {bits:?}");
+    }
+
+    #[test]
+    fn prop_max_solver_matches_exhaustive() {
+        check(
+            Config::named("max_solver_exact").cases(80),
+            |rng| {
+                let m = 1 + rng.below(3);
+                let c: Vec<f64> = (0..m).map(|_| 0.05 + rng.uniform() * 5.0).collect();
+                let a = 10f64.powf(rng.uniform() * 8.0 - 4.0);
+                let b = 10f64.powf(rng.uniform() * 8.0 - 4.0);
+                (c, a, b)
+            },
+            |(c, a, b)| {
+                // Restrict exhaustive reference to b <= 6 and use a small
+                // dim so the candidate space stays tiny but non-trivial.
+                let ctx = ctx(DelayModel::paper_default(), 64);
+                let fast = argmin_cost(&ctx, c, *a, *b);
+                let brute = argmin_exhaustive(&ctx, c, *a, *b, 6);
+                let cf = cost_of(&ctx, c, &fast, *a, *b);
+                let cb = cost_of(&ctx, c, &brute, *a, *b);
+                // fast may use b > 6; it must be at least as good.
+                cf <= cb * (1.0 + 1e-9)
+            },
+        );
+    }
+
+    #[test]
+    fn prop_tdma_solver_near_exhaustive() {
+        check(
+            Config::named("tdma_solver_near_exact").cases(60),
+            |rng| {
+                let m = 1 + rng.below(3);
+                let c: Vec<f64> = (0..m).map(|_| 0.05 + rng.uniform() * 5.0).collect();
+                let a = 10f64.powf(rng.uniform() * 6.0 - 3.0);
+                let b = 10f64.powf(rng.uniform() * 6.0 - 3.0);
+                (c, a, b)
+            },
+            |(c, a, b)| {
+                let ctx = ctx(DelayModel::TdmaSum { theta: 0.0 }, 64);
+                let fast = argmin_cost(&ctx, c, *a, *b);
+                let brute = argmin_exhaustive(&ctx, c, *a, *b, 6);
+                let cf = cost_of(&ctx, c, &fast, *a, *b);
+                let cb = cost_of(&ctx, c, &brute, *a, *b);
+                cf <= cb * (1.0 + 1e-9)
+            },
+        );
+    }
+
+    #[test]
+    fn error_budget_is_respected_and_duration_minimal() {
+        let ctx = ctx(DelayModel::paper_default(), 198_760);
+        let c = vec![0.5, 1.0, 2.0, 4.0];
+        let q = 5.25;
+        let bits = min_duration_with_error_budget(&ctx, &c, q);
+        assert!(ctx.rounds.var.q_bar(&bits) <= q + 1e-12);
+        // Tightness: lowering any single client's bits (shorter file)
+        // either breaks the budget or cannot reduce the max-duration.
+        let d0 = ctx.duration(&bits, &c);
+        for j in 0..c.len() {
+            if bits[j] > B_MIN {
+                let mut fewer = bits.clone();
+                fewer[j] -= 1;
+                let still_feasible = ctx.rounds.var.q_bar(&fewer) <= q;
+                let shorter = ctx.duration(&fewer, &c) < d0 - 1e-9;
+                assert!(
+                    !(still_feasible && shorter),
+                    "client {j} could have compressed more: {bits:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prop_error_budget_feasible_whenever_possible() {
+        check(
+            Config::named("error_budget_feasible").cases(80),
+            |rng| {
+                let m = 1 + rng.below(8);
+                let c: Vec<f64> = (0..m).map(|_| 0.05 + rng.uniform() * 5.0).collect();
+                let q = 0.05 + rng.uniform() * 8.0;
+                let tdma = rng.uniform() < 0.5;
+                (c, q, tdma)
+            },
+            |(c, q, tdma)| {
+                let ctx = ctx(
+                    if *tdma {
+                        DelayModel::TdmaSum { theta: 0.0 }
+                    } else {
+                        DelayModel::paper_default()
+                    },
+                    4096,
+                );
+                let bits = min_duration_with_error_budget(&ctx, c, *q);
+                // q(32) ~ 0 so the budget is always reachable.
+                ctx.rounds.var.q_bar(&bits) <= *q + 1e-9
+            },
+        );
+    }
+}

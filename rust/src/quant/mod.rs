@@ -1,0 +1,32 @@
+//! Lossy compression substrate (paper §IV-A1 + Assumption 8).
+//!
+//! * [`stochastic`] — rust-native stochastic infinity-norm quantizer,
+//!   bit-for-bit identical to the L1 Pallas kernel given the same
+//!   uniforms (parity enforced against `artifacts/golden`).
+//! * [`size`] — the wire-size model `s(b) = d*(b+1) + 32` bits.
+//! * [`variance`] — the normalized-variance model `q(b)` used by the
+//!   policies' `h_eps` round-count proxy, plus an online empirical
+//!   estimator that can calibrate it from observed quantization error.
+
+pub mod size;
+pub mod stochastic;
+pub mod variance;
+
+pub use size::SizeModel;
+pub use stochastic::{quantize_into, quantize_with_uniforms, Quantized};
+pub use variance::{EmpiricalVariance, VarianceModel};
+
+/// Valid bit-width range for the paper's quantizer (b in {1..32}).
+pub const B_MIN: u8 = 1;
+pub const B_MAX: u8 = 32;
+
+/// Levels for a bit-width: s = 2^b - 1 (saturates at u32::MAX for b=32).
+#[inline]
+pub fn levels(b: u8) -> f64 {
+    debug_assert!((B_MIN..=B_MAX).contains(&b));
+    if b >= 32 {
+        u32::MAX as f64
+    } else {
+        ((1u64 << b) - 1) as f64
+    }
+}

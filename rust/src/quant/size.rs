@@ -1,0 +1,60 @@
+//! Wire-size model (paper §IV-A1): a d-dimensional update quantized at b
+//! bits per coordinate costs `s(b) = d*(b+1) + 32` bits — b level bits +
+//! 1 sign bit per coordinate, plus one f32 for the infinity norm.
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SizeModel {
+    /// Update dimensionality d (= flat parameter count P).
+    pub dim: usize,
+}
+
+impl SizeModel {
+    pub fn new(dim: usize) -> Self {
+        SizeModel { dim }
+    }
+
+    /// File size in bits for bit-width b.
+    #[inline]
+    pub fn bits(&self, b: u8) -> f64 {
+        self.dim as f64 * (b as f64 + 1.0) + 32.0
+    }
+
+    /// File size in bytes (for logging).
+    #[inline]
+    pub fn bytes(&self, b: u8) -> f64 {
+        self.bits(b) / 8.0
+    }
+
+    /// Compression ratio vs. raw f32 (32 bits/coordinate).
+    #[inline]
+    pub fn ratio(&self, b: u8) -> f64 {
+        (self.dim as f64 * 32.0) / self.bits(b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_paper_formula() {
+        let s = SizeModel::new(198_760);
+        assert_eq!(s.bits(1), 198_760.0 * 2.0 + 32.0);
+        assert_eq!(s.bits(3), 198_760.0 * 4.0 + 32.0);
+    }
+
+    #[test]
+    fn monotone_in_b() {
+        let s = SizeModel::new(1000);
+        for b in 1..32u8 {
+            assert!(s.bits(b + 1) > s.bits(b));
+        }
+    }
+
+    #[test]
+    fn one_bit_is_near_16x_compression() {
+        let s = SizeModel::new(198_760);
+        let r = s.ratio(1);
+        assert!((r - 16.0).abs() < 0.01, "ratio {r}");
+    }
+}

@@ -1,0 +1,247 @@
+//! Rust-native stochastic infinity-norm quantizer (paper eq. (11)).
+//!
+//! Mirrors the L1 Pallas kernel exactly: given the same uniforms it is
+//! bit-for-bit identical (checked against `artifacts/golden`).  The
+//! coordinator uses this implementation on the simulation-only path (the
+//! policy benches, which never touch XLA) and for failure-injection
+//! tests; the full-FL path routes quantization through the AOT
+//! `quantize.hlo.txt` graph instead.
+
+use crate::util::rng::Rng;
+
+/// A quantized update: the server-side dequantized view plus the scalars
+/// a real wire message would carry.
+#[derive(Clone, Debug)]
+pub struct Quantized {
+    pub dequantized: Vec<f32>,
+    pub norm: f32,
+    /// Level count s = 2^b - 1 used.
+    pub levels: f64,
+}
+
+/// Quantize with externally supplied uniforms (parity path — identical
+/// math to `kernels/quantizer.py::_quantize_kernel`).
+pub fn quantize_with_uniforms(x: &[f32], s: f64, u: &[f32]) -> Quantized {
+    assert_eq!(x.len(), u.len());
+    let norm = x.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+    let mut out = vec![0.0f32; x.len()];
+    quantize_core(x, s, u, norm, &mut out);
+    Quantized { dequantized: out, norm, levels: s }
+}
+
+/// Quantize drawing uniforms from `rng`, writing into a caller buffer
+/// (hot-path variant that avoids per-round allocation).
+pub fn quantize_into(x: &[f32], s: f64, rng: &mut Rng, out: &mut [f32]) -> f32 {
+    assert_eq!(x.len(), out.len());
+    let norm = x.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+    if norm <= 0.0 {
+        out.fill(0.0);
+        return norm;
+    }
+    let sf = s as f32;
+    let inv = sf / norm;
+    let scale = norm / sf;
+    for (o, &v) in out.iter_mut().zip(x.iter()) {
+        let t = v.abs() * inv;
+        let low = t.floor();
+        let frac = t - low;
+        let lev = (low + f32::from(rng.uniform_f32() < frac)).min(sf);
+        *o = v.signum() * lev * scale;
+    }
+    norm
+}
+
+#[inline]
+fn quantize_core(x: &[f32], s: f64, u: &[f32], norm: f32, out: &mut [f32]) {
+    let sf = s as f32;
+    if norm <= 0.0 {
+        out.fill(0.0);
+        return;
+    }
+    let inv = 1.0 / norm;
+    for i in 0..x.len() {
+        let v = x[i];
+        let t = v.abs() * inv * sf;
+        let low = t.floor();
+        let frac = t - low;
+        let lev = (low + f32::from(u[i] < frac)).min(sf);
+        // Matches the kernel's `sign(x) * lev * norm / s` order of ops.
+        out[i] = sign(v) * lev * norm / sf;
+    }
+}
+
+/// jnp.sign semantics (sign(0) = 0), to stay bit-identical with the kernel.
+#[inline]
+fn sign(v: f32) -> f32 {
+    if v > 0.0 {
+        1.0
+    } else if v < 0.0 {
+        -1.0
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::levels;
+    use crate::util::check::{check, Config};
+
+    fn randn(n: usize, rng: &mut Rng) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn zero_vector_quantizes_to_zero() {
+        let x = vec![0.0f32; 64];
+        let mut rng = Rng::new(0);
+        let mut out = vec![9.0f32; 64];
+        let norm = quantize_into(&x, 3.0, &mut rng, &mut out);
+        assert_eq!(norm, 0.0);
+        assert!(out.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn max_coordinate_is_exact() {
+        // |x_i| == norm quantizes exactly to x_i for any b.
+        let x = vec![-2.0f32, 1.0, 0.5];
+        let q = quantize_with_uniforms(&x, levels(2), &[0.3, 0.3, 0.3]);
+        assert_eq!(q.norm, 2.0);
+        assert_eq!(q.dequantized[0], -2.0);
+    }
+
+    #[test]
+    fn unbiasedness() {
+        // E[Q(x)] = x (Assumption 8): average many independent draws.
+        let mut rng = Rng::new(7);
+        let x = randn(32, &mut rng);
+        let trials = 20_000;
+        let mut acc = vec![0.0f64; 32];
+        let mut out = vec![0.0f32; 32];
+        for _ in 0..trials {
+            quantize_into(&x, 1.0, &mut rng, &mut out);
+            for (a, &o) in acc.iter_mut().zip(out.iter()) {
+                *a += o as f64;
+            }
+        }
+        // With s = 1 the per-draw variance is up to (norm/2)^2, so the
+        // standard error of the mean is ~ norm / (2 sqrt(trials)).
+        let norm = x.iter().fold(0.0f32, |a, &v| a.max(v.abs())) as f64;
+        let tol = 5.0 * norm / (2.0 * (trials as f64).sqrt());
+        for (i, a) in acc.iter().enumerate() {
+            let mean = a / trials as f64;
+            let err = (mean - x[i] as f64).abs();
+            assert!(err < tol, "coord {i}: mean {mean} vs {} (tol {tol})", x[i]);
+        }
+    }
+
+    #[test]
+    fn variance_within_worst_case_bound() {
+        // E||Q(x)-x||^2 <= d/4 * ||x||_inf^2 / s^2 (each coord err <= step,
+        // Bernoulli variance <= 1/4 step^2).
+        let mut rng = Rng::new(8);
+        let x = randn(256, &mut rng);
+        let norm = x.iter().fold(0.0f32, |a, &v| a.max(v.abs())) as f64;
+        for b in [1u8, 2, 3] {
+            let s = levels(b);
+            let bound = 256.0 / 4.0 * norm * norm / (s * s);
+            let trials = 2000;
+            let mut acc = 0.0;
+            let mut out = vec![0.0f32; 256];
+            for _ in 0..trials {
+                quantize_into(&x, s, &mut rng, &mut out);
+                let e: f64 = out
+                    .iter()
+                    .zip(x.iter())
+                    .map(|(&q, &v)| ((q - v) as f64).powi(2))
+                    .sum();
+                acc += e;
+            }
+            let mean_err = acc / trials as f64;
+            assert!(mean_err <= bound * 1.05, "b={b}: {mean_err} > bound {bound}");
+        }
+    }
+
+    #[test]
+    fn prop_levels_are_on_grid() {
+        // Every output is norm * k / s for integer k in [-s, s].
+        check(
+            Config::named("quantizer_grid").cases(64),
+            |rng| {
+                let n = 1 + rng.below(100);
+                let b = 1 + rng.below(8) as u8;
+                let x: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+                let u: Vec<f32> = (0..n).map(|_| rng.uniform_f32()).collect();
+                (x, u, b)
+            },
+            |(x, u, b)| {
+                let s = levels(*b);
+                let q = quantize_with_uniforms(x, s, u);
+                if q.norm == 0.0 {
+                    return q.dequantized.iter().all(|&v| v == 0.0);
+                }
+                q.dequantized.iter().all(|&v| {
+                    let k = (v.abs() as f64) * s / q.norm as f64;
+                    (k - k.round()).abs() < 1e-3 && k.round() <= s
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn prop_error_bounded_by_one_step() {
+        check(
+            Config::named("quantizer_step_bound").cases(64),
+            |rng| {
+                let n = 1 + rng.below(200);
+                let b = 1 + rng.below(6) as u8;
+                let x: Vec<f32> = (0..n).map(|_| (rng.normal() * 3.0) as f32).collect();
+                let u: Vec<f32> = (0..n).map(|_| rng.uniform_f32()).collect();
+                (x, u, b)
+            },
+            |(x, u, b)| {
+                let s = levels(*b);
+                let q = quantize_with_uniforms(x, s, u);
+                let step = q.norm as f64 / s + 1e-6;
+                q.dequantized
+                    .iter()
+                    .zip(x.iter())
+                    .all(|(&qv, &xv)| ((qv - xv) as f64).abs() <= step)
+            },
+        );
+    }
+
+    #[test]
+    fn golden_parity_with_pallas_kernel() {
+        // Replays artifacts/golden vectors produced by the python oracle.
+        // Skipped when artifacts have not been built yet.
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/golden");
+        if !dir.join("quant_x.bin").exists() {
+            eprintln!("skipping golden_parity (run `make artifacts` first)");
+            return;
+        }
+        let read_f32 = |name: &str| -> Vec<f32> {
+            let bytes = std::fs::read(dir.join(name)).unwrap();
+            bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect()
+        };
+        let x = read_f32("quant_x.bin");
+        let u = read_f32("quant_u.bin");
+        let norm = read_f32("quant_norm.bin")[0];
+        for b in [1u8, 2, 3, 8] {
+            let expect = read_f32(&format!("quant_dq_b{b}.bin"));
+            let got = quantize_with_uniforms(&x, levels(b), &u);
+            assert_eq!(got.norm, norm, "norm mismatch");
+            let nbad = got
+                .dequantized
+                .iter()
+                .zip(expect.iter())
+                .filter(|(a, b)| a != b)
+                .count();
+            assert_eq!(nbad, 0, "b={b}: {nbad} coords differ from pallas golden");
+        }
+    }
+}

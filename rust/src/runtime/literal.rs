@@ -1,0 +1,82 @@
+//! Marshalling helpers between rust slices and `xla::Literal`s.
+//!
+//! The L2 graphs exchange everything as f32 tensors plus i32 label
+//! tensors; these helpers centralize the (shape, dtype) bookkeeping so the
+//! coordinator code reads like the paper's pseudocode.
+
+use anyhow::{anyhow, Result};
+use xla::{ElementType, Literal};
+
+/// View a scalar slice as raw bytes (same process + endianness as XLA,
+/// so this is exactly what the literal constructor expects).
+fn as_bytes<T>(data: &[T]) -> &[u8] {
+    // SAFETY: plain-old-data scalar slices reinterpreted as bytes.
+    unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+    }
+}
+
+/// Build an f32 literal of the given dims from a flat slice.
+/// Single-copy path (`create_from_shape_and_untyped_data`); the previous
+/// `vec1 + reshape` path copied the payload twice (§Perf L3-2).
+pub fn f32_tensor(data: &[f32], dims: &[i64]) -> Result<Literal> {
+    let n: i64 = dims.iter().product();
+    if n as usize != data.len() {
+        return Err(anyhow!(
+            "f32_tensor: {} elements for dims {:?} (expect {})",
+            data.len(),
+            dims,
+            n
+        ));
+    }
+    let dims: Vec<usize> = dims.iter().map(|&d| d as usize).collect();
+    Ok(Literal::create_from_shape_and_untyped_data(
+        ElementType::F32,
+        &dims,
+        as_bytes(data),
+    )?)
+}
+
+/// Build an i32 literal of the given dims from a flat slice.
+pub fn i32_tensor(data: &[i32], dims: &[i64]) -> Result<Literal> {
+    let n: i64 = dims.iter().product();
+    if n as usize != data.len() {
+        return Err(anyhow!(
+            "i32_tensor: {} elements for dims {:?} (expect {})",
+            data.len(),
+            dims,
+            n
+        ));
+    }
+    let dims: Vec<usize> = dims.iter().map(|&d| d as usize).collect();
+    Ok(Literal::create_from_shape_and_untyped_data(
+        ElementType::S32,
+        &dims,
+        as_bytes(data),
+    )?)
+}
+
+/// Scalar f32 literal (rank 0).
+pub fn f32_scalar(v: f32) -> Literal {
+    Literal::scalar(v)
+}
+
+/// Extract a flat `Vec<f32>` from a literal.
+pub fn to_f32_vec(lit: &Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Extract a flat `Vec<i32>` from a literal.
+pub fn to_i32_vec(lit: &Literal) -> Result<Vec<i32>> {
+    Ok(lit.to_vec::<i32>()?)
+}
+
+/// Extract a scalar f32 (works for rank-0 and single-element tensors).
+pub fn to_f32_scalar(lit: &Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+/// Extract a scalar i32.
+pub fn to_i32_scalar(lit: &Literal) -> Result<i32> {
+    Ok(lit.get_first_element::<i32>()?)
+}

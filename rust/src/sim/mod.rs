@@ -1,0 +1,208 @@
+//! Analytic-tier simulator: policy dynamics without the ML substrate.
+//!
+//! Assumption 1 says the FL algorithm reaches tolerance eps at the first
+//! round r with `r > (K_eps / r) * sum_{n<=r} rho(q^n)` — i.e. the
+//! *shape* of a training run is fully determined by the sequence of
+//! rounds-proxies rho(b^n) once the eps-scale `K_eps` is fixed.  This
+//! tier exploits that: it runs the real policies against the real
+//! congestion processes and the real delay model, but replaces the MLP
+//! with the analytic stopping rule — letting the table benches sweep
+//! 20 seeds x 5 policies x several variance settings in milliseconds.
+//! The ML tier (`fl::fedcom` / `coordinator`) validates that the shape
+//! holds end-to-end.
+//!
+//! Calibration: with no compression (rho = 1) the rule stops at
+//! `r = K_eps` rounds, so K_eps is "rounds the uncompressed algorithm
+//! needs" — the paper's few-hundred-round scale gives K_eps ~ 100.
+
+use crate::metrics::{RunTrace, TracePoint};
+use crate::netsim::NetworkProcess;
+use crate::policy::{CompressionPolicy, PolicyCtx};
+
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    /// Simulated wall-clock time at the stopping round.
+    pub wall: f64,
+    /// Stopping round r_eps.
+    pub rounds: usize,
+    /// Mean rho over the run (diagnostic).
+    pub mean_rho: f64,
+    /// Mean across-client bits (diagnostic).
+    pub mean_bits: f64,
+}
+
+/// Run the analytic simulation until the Assumption-1 stopping rule
+/// fires (or max_rounds).
+pub fn simulate(
+    ctx: &PolicyCtx,
+    policy: &mut dyn CompressionPolicy,
+    process: &mut dyn NetworkProcess,
+    k_eps: f64,
+    max_rounds: usize,
+) -> SimResult {
+    let mut wall = 0.0f64;
+    let mut rho_sum = 0.0f64;
+    let mut bits_sum = 0.0f64;
+    let mut r = 0usize;
+    while r < max_rounds {
+        r += 1;
+        let c = process.next_state();
+        let bits = policy.choose(ctx, &c);
+        rho_sum += ctx.rounds.rho(&bits);
+        bits_sum += bits.iter().map(|&b| b as f64).sum::<f64>() / bits.len() as f64;
+        wall += ctx.duration(&bits, &c);
+        // Assumption 1: stop when r > (K_eps / r) * sum rho.
+        if (r * r) as f64 > k_eps * rho_sum {
+            break;
+        }
+    }
+    SimResult {
+        wall,
+        rounds: r,
+        mean_rho: rho_sum / r as f64,
+        mean_bits: bits_sum / r as f64,
+    }
+}
+
+/// Like [`simulate`] but the policy observes the network state through
+/// the §V in-band probe estimator while the wall clock is charged on the
+/// TRUE state — the deployment setting where BTDs are estimated from
+/// sign-bit arrival times rather than known exactly.
+pub fn simulate_observed(
+    ctx: &PolicyCtx,
+    policy: &mut dyn CompressionPolicy,
+    process: &mut dyn NetworkProcess,
+    estimator: &mut crate::netsim::estimator::ProbeEstimator,
+    k_eps: f64,
+    max_rounds: usize,
+) -> SimResult {
+    let mut wall = 0.0f64;
+    let mut rho_sum = 0.0f64;
+    let mut bits_sum = 0.0f64;
+    let mut r = 0usize;
+    while r < max_rounds {
+        r += 1;
+        let c_true = process.next_state();
+        let c_seen = estimator.observe(&c_true);
+        let bits = policy.choose(ctx, &c_seen);
+        rho_sum += ctx.rounds.rho(&bits);
+        bits_sum += bits.iter().map(|&b| b as f64).sum::<f64>() / bits.len() as f64;
+        wall += ctx.duration(&bits, &c_true);
+        if (r * r) as f64 > k_eps * rho_sum {
+            break;
+        }
+    }
+    SimResult {
+        wall,
+        rounds: r,
+        mean_rho: rho_sum / r as f64,
+        mean_bits: bits_sum / r as f64,
+    }
+}
+
+/// Trace variant for Fig.-1-style sweeps: records cumulative wall clock
+/// and the proxy "progress" r^2 / (K_eps * sum rho) per round.
+pub fn simulate_traced(
+    ctx: &PolicyCtx,
+    policy: &mut dyn CompressionPolicy,
+    process: &mut dyn NetworkProcess,
+    k_eps: f64,
+    max_rounds: usize,
+) -> (SimResult, RunTrace) {
+    let mut trace = RunTrace::new(&policy.name(), "analytic", 0);
+    let mut wall = 0.0f64;
+    let mut rho_sum = 0.0f64;
+    let mut bits_sum = 0.0f64;
+    let mut r = 0usize;
+    while r < max_rounds {
+        r += 1;
+        let c = process.next_state();
+        let bits = policy.choose(ctx, &c);
+        rho_sum += ctx.rounds.rho(&bits);
+        bits_sum += bits.iter().map(|&b| b as f64).sum::<f64>() / bits.len() as f64;
+        wall += ctx.duration(&bits, &c);
+        let progress = (r * r) as f64 / (k_eps * rho_sum);
+        trace.push(TracePoint {
+            round: r,
+            wall,
+            train_loss: 1.0 / progress.max(1e-12), // proxy "distance left"
+            test_acc: progress.min(1.0),
+            mean_bits: bits.iter().map(|&b| b as f64).sum::<f64>() / bits.len() as f64,
+        });
+        if progress > 1.0 {
+            break;
+        }
+    }
+    (
+        SimResult { wall, rounds: r, mean_rho: rho_sum / r as f64, mean_bits: bits_sum / r as f64 },
+        trace,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::btd::IidLogNormal;
+    use crate::policy::{parse_policy, PolicyCtx};
+    use crate::util::rng::Rng;
+
+    fn ctx() -> PolicyCtx {
+        PolicyCtx::paper_default(198_760)
+    }
+
+    fn process(seed: u64) -> IidLogNormal {
+        IidLogNormal { m: 10, mu: 1.0, sigma: 1.0, rng: Rng::new(seed) }
+    }
+
+    #[test]
+    fn uncompressed_policy_stops_near_k_eps() {
+        let ctx = ctx();
+        let mut p = parse_policy("fixed:32").unwrap();
+        let mut net = process(0);
+        let r = simulate(&ctx, p.as_mut(), &mut net, 100.0, 10_000);
+        // rho(32 bits) ~ 1 => r ~ K_eps.
+        assert!((r.rounds as f64 - 100.0).abs() <= 2.0, "rounds {}", r.rounds);
+    }
+
+    #[test]
+    fn more_compression_means_more_rounds_but_shorter_ones() {
+        let ctx = ctx();
+        let mut net1 = process(1);
+        let mut net2 = process(1); // same path
+        let mut p1 = parse_policy("fixed:1").unwrap();
+        let mut p8 = parse_policy("fixed:8").unwrap();
+        let r1 = simulate(&ctx, p1.as_mut(), &mut net1, 100.0, 100_000);
+        let r8 = simulate(&ctx, p8.as_mut(), &mut net2, 100.0, 100_000);
+        assert!(r1.rounds > r8.rounds, "1-bit needs more rounds");
+        assert!(
+            r1.wall / r1.rounds as f64 <= r8.wall / r8.rounds as f64,
+            "1-bit rounds are shorter on average"
+        );
+    }
+
+    #[test]
+    fn nacfl_beats_fixed_bit_on_wall_clock() {
+        let ctx = ctx();
+        let seeds = 12u64;
+        let (mut w_nacfl, mut w_best_fixed) = (0.0, f64::INFINITY);
+        for b in [1u8, 2, 3] {
+            let mut tot = 0.0;
+            for s in 0..seeds {
+                let mut p = parse_policy(&format!("fixed:{b}")).unwrap();
+                let mut net = process(100 + s);
+                tot += simulate(&ctx, p.as_mut(), &mut net, 100.0, 1_000_000).wall;
+            }
+            w_best_fixed = w_best_fixed.min(tot / seeds as f64);
+        }
+        for s in 0..seeds {
+            let mut p = parse_policy("nacfl").unwrap();
+            let mut net = process(100 + s);
+            w_nacfl += simulate(&ctx, p.as_mut(), &mut net, 100.0, 1_000_000).wall;
+        }
+        w_nacfl /= seeds as f64;
+        assert!(
+            w_nacfl < w_best_fixed,
+            "NAC-FL {w_nacfl:.3e} should beat best fixed {w_best_fixed:.3e}"
+        );
+    }
+}

@@ -1,0 +1,85 @@
+//! Timing harness for `cargo bench` targets (in-tree `criterion`
+//! replacement; bench targets use `harness = false`).
+//!
+//! Features: warm-up, adaptive iteration count targeting a wall-time
+//! budget, and robust summaries (median / p95 / mean) so one-off outliers
+//! don't skew the §Perf numbers recorded in EXPERIMENTS.md.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl BenchStats {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10} iters  mean {:>12?}  median {:>12?}  p95 {:>12?}  min {:>12?}",
+            self.name, self.iters, self.mean, self.median, self.p95, self.min
+        )
+    }
+
+    /// Throughput helper: bytes/sec given bytes processed per iteration.
+    pub fn throughput(&self, bytes_per_iter: usize) -> f64 {
+        bytes_per_iter as f64 / self.mean.as_secs_f64()
+    }
+}
+
+/// Benchmark a closure: warm up, then sample until ~`budget` elapses
+/// (at least `min_iters`).
+pub fn bench(name: &str, budget: Duration, mut f: impl FnMut()) -> BenchStats {
+    // Warm-up: a few calls, also estimates per-iter cost.
+    let warm_start = Instant::now();
+    let mut warm_iters = 0usize;
+    while warm_iters < 3 || (warm_start.elapsed() < budget / 10 && warm_iters < 1000) {
+        f();
+        warm_iters += 1;
+    }
+    let est = warm_start.elapsed() / warm_iters as u32;
+    let target = (budget.as_secs_f64() / est.as_secs_f64().max(1e-9)).clamp(5.0, 10_000.0) as usize;
+
+    let mut samples = Vec::with_capacity(target);
+    for _ in 0..target {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    let n = samples.len();
+    let mean = samples.iter().sum::<Duration>() / n as u32;
+    BenchStats {
+        name: name.to_string(),
+        iters: n,
+        mean,
+        median: samples[n / 2],
+        p95: samples[((n as f64 * 0.95) as usize).min(n - 1)],
+        min: samples[0],
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let s = bench("noop-ish", Duration::from_millis(30), || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(s.iters >= 5);
+        assert!(s.min <= s.median && s.median <= s.p95);
+        assert!(!s.report().is_empty());
+    }
+}

@@ -1,0 +1,170 @@
+//! Declarative CLI flag parser (in-tree `clap` replacement).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and a
+//! leading positional subcommand; generates usage text from the
+//! registered flag table.
+
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+
+#[derive(Clone, Debug)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub boolean: bool,
+}
+
+/// A parsed command line: subcommand + flag map + trailing positionals.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: HashMap<String, String>,
+    specs: Vec<FlagSpec>,
+    pub positionals: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(specs: Vec<FlagSpec>, argv: &[String]) -> Result<Args> {
+        let mut out = Args { specs, ..Default::default() };
+        let known: HashMap<&str, FlagSpec> =
+            out.specs.iter().map(|s| (s.name, s.clone())).collect();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = known
+                    .get(name.as_str())
+                    .ok_or_else(|| anyhow!("unknown flag --{name}"))?;
+                let val = if spec.boolean {
+                    inline_val.unwrap_or_else(|| "true".to_string())
+                } else if let Some(v) = inline_val {
+                    v
+                } else {
+                    i += 1;
+                    argv.get(i)
+                        .cloned()
+                        .ok_or_else(|| anyhow!("flag --{name} needs a value"))?
+                };
+                out.flags.insert(name, val);
+            } else if out.subcommand.is_none() && out.positionals.is_empty() {
+                out.subcommand = Some(a.clone());
+            } else {
+                out.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        // Fill defaults.
+        for s in &out.specs {
+            if let Some(d) = s.default {
+                out.flags.entry(s.name.to_string()).or_insert_with(|| d.to_string());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, name: &str) -> Result<String> {
+        self.get(name)
+            .map(str::to_string)
+            .ok_or_else(|| anyhow!("missing required flag --{name}"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64> {
+        self.get_str(name)?
+            .parse()
+            .map_err(|e| anyhow!("--{name}: {e}"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize> {
+        self.get_str(name)?
+            .parse()
+            .map_err(|e| anyhow!("--{name}: {e}"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64> {
+        self.get_str(name)?
+            .parse()
+            .map_err(|e| anyhow!("--{name}: {e}"))
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        matches!(self.get(name), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn usage(&self, prog: &str, subcommands: &[(&str, &str)]) -> String {
+        let mut s = format!("usage: {prog} <subcommand> [flags]\n\nsubcommands:\n");
+        for (name, help) in subcommands {
+            s.push_str(&format!("  {name:<18} {help}\n"));
+        }
+        s.push_str("\nflags:\n");
+        for f in &self.specs {
+            let d = f.default.map(|d| format!(" (default {d})")).unwrap_or_default();
+            s.push_str(&format!("  --{:<20} {}{}\n", f.name, f.help, d));
+        }
+        s
+    }
+}
+
+/// Convenience macro-free builder for a flag table.
+pub fn flag(name: &'static str, help: &'static str, default: Option<&'static str>) -> FlagSpec {
+    FlagSpec { name, help, default, boolean: false }
+}
+
+pub fn bool_flag(name: &'static str, help: &'static str) -> FlagSpec {
+    FlagSpec { name, help, default: None, boolean: true }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_positionals() {
+        let specs = vec![
+            flag("seeds", "number of seeds", Some("20")),
+            flag("scenario", "congestion scenario", None),
+            bool_flag("verbose", "chatty"),
+        ];
+        let a = Args::parse(
+            specs,
+            &argv(&["exp", "--scenario=homog", "--seeds", "5", "--verbose", "extra"]),
+        )
+        .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("exp"));
+        assert_eq!(a.get("scenario"), Some("homog"));
+        assert_eq!(a.get_usize("seeds").unwrap(), 5);
+        assert!(a.get_bool("verbose"));
+        assert_eq!(a.positionals, vec!["extra".to_string()]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let specs = vec![flag("seeds", "n", Some("20"))];
+        let a = Args::parse(specs, &argv(&["exp"])).unwrap();
+        assert_eq!(a.get_usize("seeds").unwrap(), 20);
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        let a = Args::parse(vec![], &argv(&["--nope", "1"]));
+        assert!(a.is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        let specs = vec![flag("seeds", "n", None)];
+        assert!(Args::parse(specs, &argv(&["--seeds"])).is_err());
+    }
+}

@@ -1,0 +1,171 @@
+//! Small dense linear algebra for the congestion model (m ≈ 10):
+//! matrix-vector products for the AR(1) drive and a Cholesky factor for
+//! sampling correlated innovations E^n ~ N(mu, Sigma) (paper eq. (12)).
+
+use anyhow::{anyhow, Result};
+
+/// Row-major dense matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Constant matrix (every entry = v) — e.g. A_{ij} = a/m.
+    pub fn constant(rows: usize, cols: usize, v: f64) -> Self {
+        Mat { rows, cols, data: vec![v; rows * cols] }
+    }
+
+    pub fn from_rows(rows: &[&[f64]]) -> Self {
+        let r = rows.len();
+        let c = rows[0].len();
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c);
+            data.extend_from_slice(row);
+        }
+        Mat { rows: r, cols: c, data }
+    }
+
+    /// y = self * x.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0; self.rows];
+        for i in 0..self.rows {
+            let row = &self.data[i * self.cols..(i + 1) * self.cols];
+            let mut acc = 0.0;
+            for (a, b) in row.iter().zip(x.iter()) {
+                acc += a * b;
+            }
+            y[i] = acc;
+        }
+        y
+    }
+
+    /// Lower-triangular Cholesky factor L with self = L L^T.
+    /// Fails on non-positive-definite input (tolerates tiny negative
+    /// pivots from rounding by clamping at `eps`).
+    pub fn cholesky(&self) -> Result<Mat> {
+        if self.rows != self.cols {
+            return Err(anyhow!("cholesky: non-square {}x{}", self.rows, self.cols));
+        }
+        let n = self.rows;
+        let mut l = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut sum = self[(i, j)];
+                for k in 0..j {
+                    sum -= l[(i, k)] * l[(j, k)];
+                }
+                if i == j {
+                    if sum < -1e-10 {
+                        return Err(anyhow!("cholesky: not PD at pivot {i} ({sum})"));
+                    }
+                    l[(i, j)] = sum.max(0.0).sqrt();
+                } else {
+                    let d = l[(j, j)];
+                    l[(i, j)] = if d.abs() < 1e-300 { 0.0 } else { sum / d };
+                }
+            }
+        }
+        Ok(l)
+    }
+
+    /// Spectral radius estimate via power iteration (stationarity check
+    /// for the AR(1) drive matrix A).
+    pub fn spectral_radius_est(&self, iters: usize) -> f64 {
+        assert_eq!(self.rows, self.cols);
+        let n = self.rows;
+        let mut v = vec![1.0 / (n as f64).sqrt(); n];
+        let mut lambda = 0.0;
+        for _ in 0..iters {
+            let w = self.matvec(&v);
+            let norm = w.iter().map(|x| x * x).sum::<f64>().sqrt();
+            if norm < 1e-300 {
+                return 0.0;
+            }
+            lambda = norm;
+            for (vi, wi) in v.iter_mut().zip(w.iter()) {
+                *vi = wi / norm;
+            }
+        }
+        lambda
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matvec_identity() {
+        let m = Mat::eye(3);
+        assert_eq!(m.matvec(&[1.0, 2.0, 3.0]), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        // Sigma_ii = 1, Sigma_ij = 1/2 (the paper's partially-correlated case).
+        let n = 5;
+        let mut s = Mat::constant(n, n, 0.5);
+        for i in 0..n {
+            s[(i, i)] = 1.0;
+        }
+        let l = s.cholesky().unwrap();
+        // check L L^T == Sigma
+        for i in 0..n {
+            for j in 0..n {
+                let mut acc = 0.0;
+                for k in 0..n {
+                    acc += l[(i, k)] * l[(j, k)];
+                }
+                assert!((acc - s[(i, j)]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let s = Mat::from_rows(&[&[1.0, 2.0], &[2.0, 1.0]]); // eigenvalue -1
+        assert!(s.cholesky().is_err());
+    }
+
+    #[test]
+    fn spectral_radius_of_uniform_matrix() {
+        // A_{ij} = a/m has eigenvalues {a, 0, ...} — radius a.
+        let m = 10;
+        let a = 0.6;
+        let mat = Mat::constant(m, m, a / m as f64);
+        let r = mat.spectral_radius_est(100);
+        assert!((r - a).abs() < 1e-6, "radius {r}");
+    }
+}

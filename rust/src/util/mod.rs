@@ -1,0 +1,10 @@
+//! Dependency-free substrates: PRNG, CLI parsing, property testing,
+//! small linear algebra.  (The offline build environment vendors only the
+//! `xla` crate's dependency closure, so `rand`/`clap`/`proptest`
+//! equivalents are implemented in-tree — see DESIGN.md §2.)
+
+pub mod bench;
+pub mod check;
+pub mod cli;
+pub mod linalg;
+pub mod rng;

@@ -1,0 +1,145 @@
+//! Integration: the threaded coordinator reproduces the sequential
+//! reference loop bit-for-bit, and its degraded paths hold invariants.
+
+use nacfl::config::ExperimentConfig;
+use nacfl::coordinator::{Coordinator, FailureConfig};
+use nacfl::data::synth::{generate, SynthConfig};
+use nacfl::data::{partition, Dataset, PartitionKind};
+use nacfl::fl::engine::RustEngine;
+use nacfl::fl::fedcom::{run_fedcom, FedcomOptions};
+use nacfl::metrics::RunTrace;
+use nacfl::netsim::Scenario;
+use nacfl::policy::parse_policy;
+use nacfl::util::rng::Rng;
+use std::sync::Arc;
+
+fn setup(max_rounds: usize) -> (ExperimentConfig, Arc<Dataset>, Arc<Dataset>) {
+    let mut cfg = ExperimentConfig::smoke();
+    cfg.max_rounds = max_rounds;
+    cfg.eval_every = 5;
+    cfg.target_acc = 2.0; // run to the cap
+    let train = Arc::new(generate(cfg.train_n, cfg.data_seed, &SynthConfig::default()));
+    let test = Arc::new(generate(cfg.test_n, cfg.data_seed ^ 1, &SynthConfig::default()));
+    (cfg, train, test)
+}
+
+fn run_sequential(
+    cfg: &ExperimentConfig,
+    train: &Dataset,
+    test: &Dataset,
+    seed: u64,
+    policy_spec: &str,
+) -> RunTrace {
+    let part = partition(train, cfg.m, PartitionKind::Heterogeneous, 0);
+    let mut policy = parse_policy(policy_spec).unwrap();
+    let mut proc = Scenario::new(cfg.scenario, cfg.m)
+        .process(Rng::new(seed).derive("net", 0))
+        .unwrap();
+    let mut engine = RustEngine::new();
+    run_fedcom(
+        cfg,
+        train,
+        test,
+        &part,
+        policy.as_mut(),
+        &mut proc,
+        &mut engine,
+        seed,
+        &FedcomOptions::default(),
+    )
+    .unwrap()
+}
+
+fn run_threaded(
+    cfg: &ExperimentConfig,
+    train: &Arc<Dataset>,
+    test: &Arc<Dataset>,
+    seed: u64,
+    policy_spec: &str,
+    faults: &FailureConfig,
+) -> (RunTrace, Vec<usize>) {
+    let part = partition(train, cfg.m, PartitionKind::Heterogeneous, 0);
+    let mut policy = parse_policy(policy_spec).unwrap();
+    let mut proc = Scenario::new(cfg.scenario, cfg.m)
+        .process(Rng::new(seed).derive("net", 0))
+        .unwrap();
+    let mut co =
+        Coordinator::new(cfg, Arc::clone(train), Arc::clone(test), &part, seed, faults).unwrap();
+    let trace = co.run(policy.as_mut(), &mut proc).unwrap();
+    let degraded = co.degraded_rounds.clone();
+    (trace, degraded)
+}
+
+#[test]
+fn threaded_coordinator_is_bit_identical_to_sequential() {
+    let (cfg, train, test) = setup(15);
+    for policy in ["nacfl", "fixed:2", "error:5.25"] {
+        let seq = run_sequential(&cfg, &train, &test, 11, policy);
+        let (par, degraded) =
+            run_threaded(&cfg, &train, &test, 11, policy, &FailureConfig::default());
+        assert!(degraded.is_empty());
+        assert_eq!(seq.points.len(), par.points.len(), "{policy}: trace length");
+        for (a, b) in seq.points.iter().zip(par.points.iter()) {
+            assert_eq!(a.round, b.round);
+            assert_eq!(a.wall.to_bits(), b.wall.to_bits(), "{policy}: wall clock");
+            assert_eq!(
+                a.test_acc.to_bits(),
+                b.test_acc.to_bits(),
+                "{policy}: accuracy at round {}",
+                a.round
+            );
+            assert_eq!(
+                a.train_loss.to_bits(),
+                b.train_loss.to_bits(),
+                "{policy}: loss at round {}",
+                a.round
+            );
+        }
+    }
+}
+
+#[test]
+fn wall_clock_is_policy_independent_noise_but_identical_network_path() {
+    // Different policies on the same seed must see the same congestion
+    // path: their round-1 durations must be in the exact ratio of the
+    // file sizes they chose.  (Sample-path pairing for the gain metric.)
+    let (mut cfg, train, test) = setup(5);
+    cfg.eval_every = 1;
+    let (t1, _) = run_threaded(&cfg, &train, &test, 3, "fixed:1", &FailureConfig::default());
+    let (t2, _) = run_threaded(&cfg, &train, &test, 3, "fixed:2", &FailureConfig::default());
+    let r = t2.points[0].wall / t1.points[0].wall;
+    let size = nacfl::quant::SizeModel::new(nacfl::runtime::dims::P);
+    let expect = size.bits(2) / size.bits(1);
+    assert!(
+        (r - expect).abs() < 1e-9,
+        "duration ratio {r} vs size ratio {expect}"
+    );
+}
+
+#[test]
+fn drops_do_not_stall_and_are_recorded() {
+    let (cfg, train, test) = setup(10);
+    let faults = FailureConfig { drop_prob: 0.5, straggler: None };
+    let (trace, degraded) = run_threaded(&cfg, &train, &test, 7, "fixed:1", &faults);
+    assert_eq!(trace.points.last().unwrap().round, 10);
+    assert!(!degraded.is_empty());
+    // Monotone wall clock even across degraded rounds.
+    let mut prev = 0.0;
+    for p in &trace.points {
+        assert!(p.wall >= prev);
+        prev = p.wall;
+    }
+}
+
+#[test]
+fn total_drop_rounds_skip_model_update_but_advance_time() {
+    let (mut cfg, train, test) = setup(4);
+    cfg.eval_every = 1;
+    let faults = FailureConfig { drop_prob: 1.0, straggler: None };
+    let (trace, degraded) = run_threaded(&cfg, &train, &test, 9, "fixed:1", &faults);
+    assert_eq!(degraded.len(), 4, "every round degraded");
+    assert!(trace.points.last().unwrap().wall > 0.0, "time still advances");
+    // Model never moved: accuracy identical across evals.
+    let accs: Vec<f64> = trace.points.iter().map(|p| p.test_acc).collect();
+    assert!(accs.windows(2).all(|w| w[0] == w[1]), "model should be frozen: {accs:?}");
+}

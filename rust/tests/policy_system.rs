@@ -1,0 +1,151 @@
+//! System-level policy invariants: the paper's qualitative claims,
+//! checked on the analytic tier (fast, deterministic).
+
+use nacfl::config::ExperimentConfig;
+use nacfl::exp::{run_cell, Tier};
+use nacfl::metrics::{gain_vs, Summary};
+use nacfl::netsim::{MarkovChain, NetworkProcess, ScenarioKind};
+use nacfl::policy::{CompressionPolicy, NacFl, OraclePolicy};
+use nacfl::util::rng::Rng;
+
+fn cell(scenario: ScenarioKind, seeds: u64) -> Vec<nacfl::exp::CellResult> {
+    let mut cfg = ExperimentConfig::paper();
+    cfg.scenario = scenario;
+    cfg.seeds = (0..seeds).collect();
+    run_cell(&cfg, Tier::Analytic { k_eps: 100.0 }, |_, _, _| {}).unwrap()
+}
+
+fn mean_time(results: &[nacfl::exp::CellResult], policy_prefix: &str) -> f64 {
+    Summary::of(
+        &results
+            .iter()
+            .find(|r| r.policy.starts_with(policy_prefix))
+            .unwrap()
+            .times,
+    )
+    .mean
+}
+
+#[test]
+fn nacfl_beats_every_fixed_bit_in_every_scenario() {
+    // The paper's universal finding (Tables I-IV).
+    for scenario in [
+        ScenarioKind::HomogeneousIndependent { sigma_sq: 1.0 },
+        ScenarioKind::HeterogeneousIndependent,
+        ScenarioKind::PerfectlyCorrelated { sigma_inf_sq: 4.0 },
+        ScenarioKind::PartiallyCorrelated { sigma_inf_sq: 4.0 },
+    ] {
+        let results = cell(scenario, 10);
+        let nacfl = mean_time(&results, "nacfl");
+        for bits in ["fixed:1", "fixed:2", "fixed:3"] {
+            let other = mean_time(&results, bits);
+            assert!(
+                nacfl < other,
+                "{scenario:?}: nacfl {nacfl:.3e} should beat {bits} {other:.3e}"
+            );
+        }
+    }
+}
+
+#[test]
+fn nacfl_gains_over_fixed_error_grow_with_time_correlation() {
+    // Table III's headline: the NAC-FL advantage over Fixed-Error is
+    // specific to temporally correlated congestion.
+    let iid = cell(ScenarioKind::HomogeneousIndependent { sigma_sq: 1.0 }, 16);
+    let corr = cell(ScenarioKind::PerfectlyCorrelated { sigma_inf_sq: 16.0 }, 16);
+
+    let gain = |results: &[nacfl::exp::CellResult]| {
+        let nac = &results.iter().find(|r| r.policy.starts_with("nacfl")).unwrap().times;
+        let err = &results.iter().find(|r| r.policy.starts_with("error")).unwrap().times;
+        gain_vs(nac, err)
+    };
+    let g_iid = gain(&iid);
+    let g_corr = gain(&corr);
+    assert!(
+        g_corr > g_iid,
+        "correlated gain {g_corr:.1}% should exceed iid gain {g_iid:.1}%"
+    );
+    assert!(g_corr > 0.0, "NAC-FL must win under correlation ({g_corr:.1}%)");
+}
+
+#[test]
+fn fixed_one_bit_is_much_worse_than_nacfl_as_in_paper() {
+    // Paper Table I reports 145-881% gains over fixed-bit policies; we
+    // only require the right order of magnitude (> 30%).
+    let results = cell(ScenarioKind::HomogeneousIndependent { sigma_sq: 2.0 }, 12);
+    let nac = &results.iter().find(|r| r.policy.starts_with("nacfl")).unwrap().times;
+    let one = &results.iter().find(|r| r.policy == "fixed:1").unwrap().times;
+    let g = gain_vs(nac, one);
+    assert!(g > 30.0, "gain over 1-bit {g:.1}% suspiciously small");
+}
+
+#[test]
+fn theorem1_nacfl_estimates_converge_to_oracle_objective() {
+    // Run NAC-FL (alpha = 1, beta_n = 1/n) on a finite Markov chain and
+    // compare r_hat * d_hat with the eq.-(4) optimum from the oracle.
+    let cfg = ExperimentConfig::paper();
+    let ctx = cfg.policy_ctx();
+    let m = cfg.m;
+    // 6 states sampled from the homogeneous scenario's marginal.
+    let mut srng = Rng::new(42);
+    let states: Vec<Vec<f64>> = (0..6)
+        .map(|_| (0..m).map(|_| srng.normal_ms(1.0, 1.0).exp()).collect())
+        .collect();
+    let mut chain = MarkovChain::uniform_mixing(states, 0.3, Rng::new(7)).unwrap();
+    let oracle = OraclePolicy::solve(&ctx, &chain);
+    let opt = oracle.objective();
+
+    let mut nac = NacFl::new(1.0);
+    let mut product_at = Vec::new();
+    for n in 1..=20_000usize {
+        let c = chain.next_state();
+        nac.choose(&ctx, &c);
+        if n == 200 || n == 20_000 {
+            let (r, d) = nac.estimates();
+            product_at.push(r * d);
+        }
+    }
+    let early = (product_at[0] - opt).abs() / opt;
+    let late = (product_at[1] - opt).abs() / opt;
+    assert!(
+        late < 0.05,
+        "after 20k rounds NAC-FL objective {:.4e} should be within 5% of optimum {:.4e}",
+        product_at[1],
+        opt
+    );
+    assert!(late <= early + 1e-9, "estimate error should not grow: {early} -> {late}");
+}
+
+#[test]
+fn nacfl_tracks_oracle_bit_choices_on_markov_chain() {
+    // Beyond the objective: after burn-in NAC-FL's per-state choices
+    // should match the oracle plan on most states.
+    let cfg = ExperimentConfig::paper();
+    let ctx = cfg.policy_ctx();
+    let m = cfg.m;
+    let mut srng = Rng::new(9);
+    let states: Vec<Vec<f64>> = (0..4)
+        .map(|_| (0..m).map(|_| srng.normal_ms(1.0, 1.0).exp()).collect())
+        .collect();
+    let mut chain = MarkovChain::uniform_mixing(states.clone(), 0.3, Rng::new(3)).unwrap();
+    let mut oracle = OraclePolicy::solve(&ctx, &chain);
+    let mut nac = NacFl::new(1.0);
+    for _ in 0..5000 {
+        let c = chain.next_state();
+        nac.choose(&ctx, &c);
+    }
+    let mut agree = 0usize;
+    let mut total = 0usize;
+    for s in &states {
+        let nb = nac.choose(&ctx, s);
+        let ob = oracle.choose(&ctx, s);
+        for (a, b) in nb.iter().zip(ob.iter()) {
+            total += 1;
+            if (*a as i32 - *b as i32).abs() <= 1 {
+                agree += 1;
+            }
+        }
+    }
+    let frac = agree as f64 / total as f64;
+    assert!(frac > 0.8, "NAC-FL agrees with oracle on only {frac:.2} of choices");
+}

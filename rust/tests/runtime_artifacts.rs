@@ -1,0 +1,143 @@
+//! Integration: the AOT artifacts load, compile and execute through PJRT,
+//! and the XLA engine agrees numerically with the pure-rust engine.
+//!
+//! All tests skip (with a notice) when `artifacts/` has not been built —
+//! run `make artifacts` first for full coverage.
+
+use nacfl::fl::engine::{ComputeEngine, RustEngine, XlaEngine};
+use nacfl::model::{Mlp, MlpDims};
+use nacfl::runtime::{dims, Runtime};
+use nacfl::util::rng::Rng;
+
+fn artifact_dir() -> String {
+    format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+}
+
+fn artifacts_ready() -> bool {
+    let ok = Runtime::artifacts_present(artifact_dir());
+    if !ok {
+        eprintln!("SKIP: artifacts missing; run `make artifacts`");
+    }
+    ok
+}
+
+#[test]
+fn artifacts_load_and_compile() {
+    if !artifacts_ready() {
+        return;
+    }
+    let mut rt = Runtime::cpu(artifact_dir()).unwrap();
+    rt.load_all().unwrap();
+}
+
+#[test]
+fn xla_engine_matches_rust_engine_end_to_end() {
+    if !artifacts_ready() {
+        return;
+    }
+    let mut xe = XlaEngine::new(&artifact_dir()).unwrap();
+    let mut re = RustEngine::new();
+    let d = xe.dims();
+    let mut rng = Rng::new(99);
+    let mlp = Mlp::new(MlpDims::paper());
+    let w = mlp.init_params(&mut rng);
+    let xs: Vec<f32> = (0..d.tau * d.batch * d.d_in).map(|_| rng.uniform_f32()).collect();
+    let ys: Vec<i32> = (0..d.tau * d.batch).map(|_| rng.below(10) as i32).collect();
+
+    // local_round parity
+    let ux = xe.local_round(&w, &xs, &ys, 0.07).unwrap();
+    let ur = re.local_round(&w, &xs, &ys, 0.07).unwrap();
+    let scale = ux.iter().fold(0.0f32, |a, &v| a.max(v.abs())).max(1e-6);
+    let worst = ux
+        .iter()
+        .zip(ur.iter())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(
+        worst < 5e-3 * scale.max(1.0),
+        "local_round divergence {worst} (scale {scale})"
+    );
+
+    // quantize parity: identical uniforms => identical grids
+    let mut u = vec![0.0f32; d.p];
+    rng.fill_uniform_f32(&mut u);
+    let (qx, nx) = xe.quantize(&ux, 7.0, &u).unwrap();
+    let (qr, nr) = re.quantize(&ux, 7.0, &u).unwrap();
+    assert_eq!(nx, nr, "norms differ");
+    let nbad = qx.iter().zip(qr.iter()).filter(|(a, b)| a != b).count();
+    assert_eq!(nbad, 0, "{nbad} quantized coords differ");
+
+    // global_step parity (up to FMA-contraction differences in XLA)
+    let wx = xe.global_step(&w, &qx, 0.05).unwrap();
+    let wr = re.global_step(&w, &qr, 0.05).unwrap();
+    let worst_gs = wx
+        .iter()
+        .zip(wr.iter())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(worst_gs <= 1e-6, "global_step divergence {worst_gs}");
+
+    // eval parity
+    let ex: Vec<f32> = (0..d.eval_chunk * d.d_in).map(|_| rng.uniform_f32()).collect();
+    let ey: Vec<i32> = (0..d.eval_chunk).map(|_| rng.below(10) as i32).collect();
+    let (lx, cx) = xe.eval_chunk(&w, &ex, &ey).unwrap();
+    let (lr, cr) = re.eval_chunk(&w, &ex, &ey).unwrap();
+    assert_eq!(cx, cr, "correct-count mismatch");
+    assert!((lx - lr).abs() < 1e-2 * lr.abs().max(1.0), "loss {lx} vs {lr}");
+}
+
+#[test]
+fn quantize_graph_handles_all_bitwidths() {
+    if !artifacts_ready() {
+        return;
+    }
+    let mut xe = XlaEngine::new(&artifact_dir()).unwrap();
+    let d = xe.dims();
+    let mut rng = Rng::new(5);
+    let v: Vec<f32> = (0..d.p).map(|_| rng.normal() as f32).collect();
+    let mut u = vec![0.0f32; d.p];
+    rng.fill_uniform_f32(&mut u);
+    for b in [1u8, 2, 3, 8, 16, 32] {
+        let s = nacfl::quant::levels(b);
+        let (dq, norm) = xe.quantize(&v, s, &u).unwrap();
+        assert!(norm > 0.0);
+        // grid property — only meaningful while s fits f32's mantissa
+        if b <= 16 {
+            for (i, &q) in dq.iter().enumerate().step_by(9973) {
+                let k = (q.abs() as f64) * s / norm as f64;
+                assert!((k - k.round()).abs() < 1e-2, "b={b} coord {i}: k={k}");
+            }
+        }
+        // error bounded by one step (+ f32 rounding slack at high b)
+        let step = norm as f64 * (1.0 / s + 1e-5);
+        let worst = v
+            .iter()
+            .zip(dq.iter())
+            .map(|(&a, &b)| ((a - b) as f64).abs())
+            .fold(0.0, f64::max);
+        assert!(worst <= step, "b={b}: err {worst} > step {step}");
+    }
+}
+
+#[test]
+fn dims_match_manifest() {
+    // The rust-side constants must agree with what python lowered.
+    let manifest = format!("{}/manifest.json", artifact_dir());
+    let Ok(text) = std::fs::read_to_string(&manifest) else {
+        eprintln!("SKIP: no manifest");
+        return;
+    };
+    // crude but dependency-free: check the _dims block values.
+    for (key, val) in [
+        ("\"P\"", dims::P.to_string()),
+        ("\"TAU\"", dims::TAU.to_string()),
+        ("\"BATCH\"", dims::BATCH.to_string()),
+        ("\"EVAL_CHUNK\"", dims::EVAL_CHUNK.to_string()),
+    ] {
+        let needle = format!("{key}: {val}");
+        assert!(
+            text.contains(&needle),
+            "manifest disagrees on {key} (wanted `{needle}`)"
+        );
+    }
+}
