@@ -1,0 +1,65 @@
+//! DES discipline tour: what breaking round synchrony buys you.
+//!
+//! Runs the paper's policy roster under the heterogeneous-independent
+//! congestion scenario with two injected stragglers (clients 8 and 9
+//! upload 8x slower), across the three aggregation disciplines:
+//!
+//! * `sync`        — wait for everyone (the paper's setting);
+//! * `semi-sync:7` — aggregate after the fastest 7 of 10;
+//! * `async:0.5`   — aggregate on every arrival, staleness-discounted.
+//!
+//! The sweep fans out over the work-stealing grid executor, and the
+//! merged table shows mean time-to-target per (discipline, policy).
+//!
+//! Run: `cargo run --release --example async_rounds`
+
+use nacfl::config::ExperimentConfig;
+use nacfl::des::{Discipline, FaultModel};
+use nacfl::exp::{run_sweep, sweep_table, SweepSpec};
+use nacfl::netsim::ScenarioKind;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = ExperimentConfig::paper();
+    let ctx = cfg.policy_ctx();
+    let spec = SweepSpec {
+        m: cfg.m,
+        scenarios: vec![ScenarioKind::HeterogeneousIndependent],
+        disciplines: vec![
+            Discipline::Sync,
+            Discipline::SemiSync { k: 7 },
+            Discipline::Async { staleness_exp: 0.5 },
+        ],
+        policies: cfg.policies.clone(),
+        seeds: (0..10).collect(),
+        faults: FaultModel::none().with_stragglers(cfg.m, &[8, 9], 8.0),
+        k_eps: 100.0,
+        max_rounds: 1_000_000,
+    };
+
+    println!(
+        "sweeping {} disciplines x {} policies x {} seeds on all cores...\n",
+        spec.disciplines.len(),
+        spec.policies.len(),
+        spec.seeds.len()
+    );
+    let cells = run_sweep(&ctx, &spec, 0)?;
+    let table = sweep_table("heterog + stragglers: mean time-to-target", &spec, &cells)?;
+    println!("{}", table.render());
+
+    for d in &spec.disciplines {
+        let sel: Vec<_> = cells.iter().filter(|c| c.discipline == d.label()).collect();
+        let n = sel.len().max(1) as f64;
+        let round = sel.iter().map(|c| c.result.mean_round_duration()).sum::<f64>() / n;
+        let late = sel.iter().map(|c| c.result.late_updates).sum::<usize>() as f64 / n;
+        let rho = sel.iter().map(|c| c.result.mean_rho).sum::<f64>() / n;
+        println!(
+            "{:<14} mean round {round:>10.3e} s   late updates/run {late:>7.1}   mean rho_eff {rho:.3}",
+            d.label()
+        );
+    }
+    println!(
+        "\nsemi-sync stops waiting for the stragglers (shorter rounds, higher rho_eff);\n\
+         async removes the barrier entirely — the trade NAC-FL navigates per round."
+    );
+    Ok(())
+}

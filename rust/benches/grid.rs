@@ -1,0 +1,81 @@
+//! Grid executor bench: sequential `run_cell` vs the work-stealing
+//! parallel path, plus DES discipline throughput.
+//!
+//! Prints the measured wall-clock speedup of the parallel sweep (the
+//! acceptance target is >= 2x on a 4-core host) and verifies en route
+//! that both paths render bit-identical tables.  `NACFL_BENCH_SEEDS`
+//! scales the cell; `NACFL_BENCH_THREADS` pins the parallel worker count.
+
+use nacfl::config::ExperimentConfig;
+use nacfl::des::{simulate_des, DesConfig, Discipline, FaultModel};
+use nacfl::exp::{default_threads, run_cell, run_cell_parallel, table_for, Tier};
+use nacfl::netsim::{Scenario, ScenarioKind};
+use nacfl::policy::parse_policy;
+use nacfl::util::rng::Rng;
+use std::time::Instant;
+
+fn main() {
+    let mut cfg = ExperimentConfig::paper();
+    let seeds: u64 = std::env::var("NACFL_BENCH_SEEDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(20);
+    cfg.seeds = (0..seeds).collect();
+    cfg.scenario = ScenarioKind::HomogeneousIndependent { sigma_sq: 2.0 };
+    let tier = Tier::Analytic { k_eps: 300.0 };
+    // 0 = resolve to all cores, same convention as run_cell_parallel.
+    let threads: usize = std::env::var("NACFL_BENCH_THREADS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .filter(|&t| t > 0)
+        .unwrap_or_else(default_threads);
+
+    println!(
+        "== grid sweep: {} policies x {} seeds, k_eps = 300 ==",
+        cfg.policies.len(),
+        cfg.seeds.len()
+    );
+    let t0 = Instant::now();
+    let seq = run_cell(&cfg, tier, |_, _, _| {}).expect("sequential cell");
+    let t_seq = t0.elapsed();
+    println!("sequential run_cell:        {t_seq:>10.2?}");
+
+    let t1 = Instant::now();
+    let par = run_cell_parallel(&cfg, tier, threads, |_, _, _| {}).expect("parallel cell");
+    let t_par = t1.elapsed();
+    println!("parallel  run_cell ({threads} thr): {t_par:>10.2?}");
+
+    // Bit-identity gate: the speedup is only meaningful if the tables match.
+    let ts = table_for("grid bench", &seq).expect("table").render();
+    let tp = table_for("grid bench", &par).expect("table").render();
+    assert_eq!(ts, tp, "parallel table must be bit-identical to sequential");
+    let speedup = t_seq.as_secs_f64() / t_par.as_secs_f64().max(1e-9);
+    println!("speedup: {speedup:.2}x (bit-identical tables verified; target >= 2x on 4 cores)");
+
+    // DES discipline throughput on one straggler-heavy cell.
+    println!("\n== DES disciplines: heterog + stragglers(8,9 x8), fixed:2, seed 0 ==");
+    let ctx = cfg.policy_ctx();
+    let faults = FaultModel::none().with_stragglers(cfg.m, &[8, 9], 8.0);
+    for d in [
+        Discipline::Sync,
+        Discipline::SemiSync { k: 7 },
+        Discipline::Async { staleness_exp: 0.5 },
+    ] {
+        let mut policy = parse_policy("fixed:2").expect("policy");
+        let mut process = Scenario::new(ScenarioKind::HeterogeneousIndependent, cfg.m)
+            .process(Rng::new(0).derive("net", 0))
+            .expect("process");
+        let des = DesConfig::new(d, 300.0).with_faults(faults.clone());
+        let t = Instant::now();
+        let r = simulate_des(&ctx, policy.as_mut(), &mut process, &des, Rng::new(17))
+            .expect("des run");
+        println!(
+            "{:<14} wall {:>10.3e} s  rounds {:>6}  mean round {:>10.3e} s  ({:.2?} real)",
+            d.label(),
+            r.wall,
+            r.rounds,
+            r.mean_round_duration(),
+            t.elapsed()
+        );
+    }
+}

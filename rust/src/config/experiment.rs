@@ -8,6 +8,7 @@
 
 use super::toml_lite::{self, Doc};
 use crate::data::PartitionKind;
+use crate::des::{Discipline, FaultModel};
 use crate::netsim::{DelayModel, ScenarioKind};
 use crate::policy::{PolicyCtx, RoundsModel};
 use crate::quant::{SizeModel, VarianceModel};
@@ -60,6 +61,17 @@ pub struct ExperimentConfig {
     pub artifact_dir: String,
     /// Worker threads for client-parallel local compute (0 = #clients).
     pub workers: usize,
+
+    // DES tier (aggregation discipline + fault injection).
+    pub discipline: Discipline,
+    /// Per-(client, round) update-loss probability.
+    pub dropout: f64,
+    /// Client ids slowed by `straggler_mult`.
+    pub stragglers: Vec<usize>,
+    pub straggler_mult: f64,
+
+    /// Grid sweep worker threads (0 = all cores).
+    pub grid_threads: usize,
 }
 
 impl ExperimentConfig {
@@ -92,6 +104,11 @@ impl ExperimentConfig {
             engine: "xla".into(),
             artifact_dir: "artifacts".into(),
             workers: 0,
+            discipline: Discipline::Sync,
+            dropout: 0.0,
+            stragglers: Vec::new(),
+            straggler_mult: 1.0,
+            grid_threads: 0,
         }
     }
 
@@ -116,6 +133,19 @@ impl ExperimentConfig {
             size: SizeModel::new(crate::runtime::dims::P),
             rounds: RoundsModel::new(VarianceModel::new(self.c_q)),
         }
+    }
+
+    /// Fault model for the DES tier, from the config's dropout/straggler
+    /// settings (call after [`ExperimentConfig::validate`]).
+    pub fn fault_model(&self) -> FaultModel {
+        let mut f = FaultModel::none();
+        if self.dropout > 0.0 {
+            f = f.with_dropout(self.dropout);
+        }
+        if !self.stragglers.is_empty() {
+            f = f.with_stragglers(self.m, &self.stragglers, self.straggler_mult);
+        }
+        f
     }
 
     /// Learning rate for round n (1-based): eta0 * decay^(n/every).
@@ -214,6 +244,23 @@ impl ExperimentConfig {
             c.data_dir = Some(v.as_str().ok_or_else(|| anyhow!("data::dir string"))?.into());
         }
 
+        if let Some(v) = get("des", "discipline") {
+            c.discipline = Discipline::parse(
+                v.as_str().ok_or_else(|| anyhow!("des::discipline must be a string"))?,
+            )?;
+        }
+        set_f64!("des", "dropout", c.dropout);
+        set_f64!("des", "straggler_mult", c.straggler_mult);
+        if let Some(v) = get("des", "stragglers") {
+            let arr = v.as_array().ok_or_else(|| anyhow!("des::stragglers must be an array"))?;
+            c.stragglers = arr
+                .iter()
+                .map(|x| x.as_i64().filter(|&i| i >= 0).map(|i| i as usize))
+                .collect::<Option<Vec<_>>>()
+                .ok_or_else(|| anyhow!("des::stragglers must be non-negative integers"))?;
+        }
+        set_usize!("grid", "threads", c.grid_threads);
+
         if let Some(v) = get("engine", "kind") {
             c.engine = v.as_str().ok_or_else(|| anyhow!("engine::kind string"))?.into();
         }
@@ -240,6 +287,20 @@ impl ExperimentConfig {
         }
         for p in &self.policies {
             crate::policy::parse_policy(p)?;
+        }
+        if !(0.0..1.0).contains(&self.dropout) {
+            return Err(anyhow!("des::dropout must be in [0, 1)"));
+        }
+        if self.straggler_mult < 1.0 {
+            return Err(anyhow!("des::straggler_mult must be >= 1"));
+        }
+        if let Some(&j) = self.stragglers.iter().find(|&&j| j >= self.m) {
+            return Err(anyhow!("des::stragglers id {j} out of range for m = {}", self.m));
+        }
+        if let Discipline::SemiSync { k } = self.discipline {
+            if k == 0 || k > self.m {
+                return Err(anyhow!("semi-sync K must be in 1..={}, got {k}", self.m));
+            }
         }
         Ok(())
     }
@@ -291,6 +352,36 @@ kind = "rust"
         assert_eq!(c.policies.len(), 2);
         assert_eq!(c.max_rounds, 100);
         assert_eq!(c.engine, "rust");
+    }
+
+    #[test]
+    fn des_section_parses_and_validates() {
+        let doc = toml_lite::parse(
+            r#"
+[des]
+discipline = "semi-sync:7"
+dropout = 0.1
+stragglers = [0, 3]
+straggler_mult = 4.0
+[grid]
+threads = 2
+"#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.discipline, Discipline::SemiSync { k: 7 });
+        assert!((c.dropout - 0.1).abs() < 1e-12);
+        assert_eq!(c.stragglers, vec![0, 3]);
+        assert_eq!(c.grid_threads, 2);
+        let f = c.fault_model();
+        assert_eq!(f.slowdown_of(3), 4.0);
+        assert_eq!(f.slowdown_of(1), 1.0);
+
+        // Out-of-range K is rejected at validate time (m = 10).
+        let doc = toml_lite::parse("[des]\ndiscipline = \"semi-sync:11\"").unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_err());
+        let doc = toml_lite::parse("[des]\ndropout = 1.5").unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_err());
     }
 
     #[test]

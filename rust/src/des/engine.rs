@@ -1,0 +1,530 @@
+//! The DES engine: per-client transfer events + aggregation disciplines.
+//!
+//! ## Disciplines
+//!
+//! Every round-based discipline draws one network state `c^n`, asks the
+//! (unmodified) policy for a bit vector, and schedules one arrival event
+//! per client at its own compute+upload delay
+//! `theta*tau + c_j s(b_j) * slowdown_j` — sequentially chained for the
+//! TDMA delay model, concurrent for the max model:
+//!
+//! * **sync** waits for all M arrivals.  Fault-free, this reproduces the
+//!   analytic tier bit-for-bit: the round duration is the max (or TDMA
+//!   sum) of the same per-client delays in the same float order, and the
+//!   stopping rule below degenerates to Assumption 1 exactly.
+//! * **semi-sync:K** stops the round at the K-th arrival; the remaining
+//!   M-K transfers are cancelled (`late_updates`).
+//! * **async:g** has no rounds at all: each client cycles independently
+//!   (per-client virtual clock), and every arrival triggers an
+//!   aggregation with staleness-discounted weight `(1+s)^-g`, where `s`
+//!   counts aggregations since that client read the model.
+//!
+//! ## Generalized stopping rule
+//!
+//! Assumption 1 stops at the first round `r` with `r^2 > K_eps * sum_n
+//! rho(b^n)`.  The DES tier generalizes to weighted partial aggregation:
+//! each aggregation contributes progress weight `u` (1 for a full round,
+//! `(1+s)^-g / M` for one async update) and an *effective* proxy
+//!
+//! ```text
+//! rho_eff = sqrt(1 + (M/k) * q_bar_k),   q_bar_k = (1/k) sum_{j in K} q(b_j)
+//! ```
+//!
+//! over the k delivered updates — the (M/k) factor charges the higher
+//! variance of averaging fewer updates.  With `A = sum u` and
+//! `S = sum u * rho_eff`, the run stops when `A^2 > K_eps * S`; for
+//! k = M and u = 1 this is Assumption 1 verbatim.
+
+use super::event::EventQueue;
+use super::faults::FaultModel;
+use crate::netsim::{DelayModel, NetworkProcess};
+use crate::policy::{CompressionPolicy, PolicyCtx, RoundsModel};
+use crate::util::rng::Rng;
+use anyhow::{anyhow, Result};
+
+/// Aggregation discipline for the DES tier.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Discipline {
+    /// Aggregate when every client has arrived (the parity anchor).
+    Sync,
+    /// Aggregate after the fastest K of M clients; late updates dropped.
+    SemiSync { k: usize },
+    /// Aggregate on every arrival, weighted by `(1+staleness)^-exp`.
+    Async { staleness_exp: f64 },
+}
+
+impl Discipline {
+    /// Parse `sync`, `semi-sync:<k>` (alias `semisync:<k>`), `async[:exp]`.
+    pub fn parse(s: &str) -> Result<Self> {
+        const USAGE: &str = "sync | semi-sync:<k> | async[:exp]";
+        match s.split_once(':') {
+            None => match s {
+                "sync" => Ok(Discipline::Sync),
+                "async" => Ok(Discipline::Async { staleness_exp: 0.5 }),
+                _ => Err(anyhow!("unknown discipline `{s}` ({USAGE})")),
+            },
+            Some((name, arg)) => match name {
+                "semi-sync" | "semisync" => {
+                    let k: usize = arg.parse().map_err(|e| anyhow!("semi-sync K: {e}"))?;
+                    if k == 0 {
+                        return Err(anyhow!("semi-sync K must be >= 1"));
+                    }
+                    Ok(Discipline::SemiSync { k })
+                }
+                "async" => {
+                    let g: f64 = arg.parse().map_err(|e| anyhow!("async exponent: {e}"))?;
+                    if g < 0.0 || !g.is_finite() {
+                        return Err(anyhow!("async staleness exponent must be finite and >= 0"));
+                    }
+                    Ok(Discipline::Async { staleness_exp: g })
+                }
+                _ => Err(anyhow!("unknown discipline `{s}` ({USAGE})")),
+            },
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Discipline::Sync => "sync".into(),
+            Discipline::SemiSync { k } => format!("semi-sync:{k}"),
+            Discipline::Async { staleness_exp } => format!("async:{staleness_exp}"),
+        }
+    }
+}
+
+/// Configuration for one DES run.
+#[derive(Clone, Debug)]
+pub struct DesConfig {
+    pub discipline: Discipline,
+    pub faults: FaultModel,
+    /// Assumption-1 eps-scale (rounds the uncompressed algorithm needs).
+    pub k_eps: f64,
+    /// Round cap (async: per-client round-start cap).
+    pub max_rounds: usize,
+}
+
+impl DesConfig {
+    pub fn new(discipline: Discipline, k_eps: f64) -> Self {
+        DesConfig { discipline, faults: FaultModel::none(), k_eps, max_rounds: 10_000_000 }
+    }
+
+    pub fn with_faults(mut self, faults: FaultModel) -> Self {
+        self.faults = faults;
+        self
+    }
+
+    pub fn with_max_rounds(mut self, max_rounds: usize) -> Self {
+        self.max_rounds = max_rounds;
+        self
+    }
+}
+
+/// Outcome of one DES run.
+#[derive(Clone, Debug)]
+pub struct DesResult {
+    /// Simulated wall-clock time at stop.
+    pub wall: f64,
+    /// Global rounds (async: client round starts).
+    pub rounds: usize,
+    /// Aggregation events performed.
+    pub aggregations: usize,
+    /// Accumulated progress weight A (sync fault-free: = aggregations).
+    pub effective_rounds: f64,
+    /// Progress-weighted mean effective rounds-proxy.
+    pub mean_rho: f64,
+    /// Mean across-client bit-width per policy invocation.
+    pub mean_bits: f64,
+    /// Updates lost to dropout.
+    pub dropped_updates: usize,
+    /// Updates abandoned because the round closed early (semi-sync).
+    pub late_updates: usize,
+    /// Whether the stopping rule fired before the round cap.
+    pub converged: bool,
+}
+
+impl DesResult {
+    /// Mean wall-clock duration of a global round (async: of one
+    /// client-round).
+    pub fn mean_round_duration(&self) -> f64 {
+        if self.rounds == 0 {
+            0.0
+        } else {
+            self.wall / self.rounds as f64
+        }
+    }
+}
+
+/// Effective rounds-proxy for an aggregate of `delivered` updates out of
+/// `m` clients (module docs): `sqrt(1 + (m/k) q_bar_k)`.  For k = m this
+/// is exactly `RoundsModel::rho`, float-op for float-op.
+fn rho_effective(ctx: &PolicyCtx, delivered: &[u8], m: usize) -> f64 {
+    debug_assert!(!delivered.is_empty());
+    let kd = delivered.len() as f64;
+    let q_bar_k = delivered
+        .iter()
+        .map(|&b| ctx.rounds.var.q_of_bits(b))
+        .sum::<f64>()
+        / kd;
+    RoundsModel::h_of_q((m as f64 / kd) * q_bar_k)
+}
+
+/// Run the DES tier until the generalized stopping rule fires (or the
+/// round cap).  `fault_rng` drives dropout draws only; fault-free runs
+/// consume none of it, so paired comparisons with the analytic tier stay
+/// sample-path aligned through the shared `process`.
+pub fn simulate_des(
+    ctx: &PolicyCtx,
+    policy: &mut dyn CompressionPolicy,
+    process: &mut dyn NetworkProcess,
+    cfg: &DesConfig,
+    fault_rng: Rng,
+) -> Result<DesResult> {
+    if process.dim() == 0 {
+        return Err(anyhow!("network process has zero clients"));
+    }
+    match cfg.discipline {
+        Discipline::Async { staleness_exp } => {
+            run_async(ctx, policy, process, cfg, fault_rng, staleness_exp)
+        }
+        _ => run_round_based(ctx, policy, process, cfg, fault_rng),
+    }
+}
+
+fn run_round_based(
+    ctx: &PolicyCtx,
+    policy: &mut dyn CompressionPolicy,
+    process: &mut dyn NetworkProcess,
+    cfg: &DesConfig,
+    mut rng: Rng,
+) -> Result<DesResult> {
+    let m = process.dim();
+    let need = match cfg.discipline {
+        Discipline::Sync => m,
+        Discipline::SemiSync { k } => {
+            if k == 0 || k > m {
+                return Err(anyhow!("semi-sync K must be in 1..={m}, got {k}"));
+            }
+            k
+        }
+        Discipline::Async { .. } => unreachable!("async dispatches to run_async"),
+    };
+    let tdma = matches!(ctx.delay, DelayModel::TdmaSum { .. });
+
+    let mut q: EventQueue<usize> = EventQueue::new();
+    let mut lost = vec![false; m];
+    let mut got = vec![false; m];
+    let mut wall = 0.0f64;
+    let (mut a, mut s_rho) = (0.0f64, 0.0f64);
+    let mut aggregations = 0usize;
+    let mut rounds = 0usize;
+    let mut bits_sum = 0.0f64;
+    let mut dropped = 0usize;
+    let mut late = 0usize;
+    let mut converged = false;
+
+    while rounds < cfg.max_rounds {
+        rounds += 1;
+        let c = process.next_state();
+        let bits = policy.choose(ctx, &c);
+        bits_sum += bits.iter().map(|&b| b as f64).sum::<f64>() / bits.len() as f64;
+
+        // Schedule this round's arrivals; per-client virtual clocks are
+        // round-relative (everyone re-syncs at the aggregation barrier).
+        q.clear();
+        let mut offset = 0.0f64;
+        for j in 0..m {
+            let d = ctx.client_delay(bits[j], c[j] * cfg.faults.slowdown_of(j));
+            let at = if tdma {
+                offset += d;
+                offset
+            } else {
+                d
+            };
+            lost[j] = cfg.faults.draw_drop(&mut rng);
+            q.push(at, j);
+        }
+
+        // Pop arrivals until the discipline closes the round.
+        for g in got.iter_mut() {
+            *g = false;
+        }
+        let mut popped = 0usize;
+        let mut dur = 0.0f64;
+        while popped < need {
+            let Some((t, j)) = q.pop() else { break };
+            got[j] = true;
+            popped += 1;
+            dur = t;
+        }
+        late += m - popped;
+        wall += dur;
+
+        // Collect delivered bits in client order: deterministic, and for
+        // full delivery the float order matches `RoundsModel::rho` exactly
+        // (analytic-tier parity).
+        let delivered: Vec<u8> = (0..m)
+            .filter(|&j| got[j] && !lost[j])
+            .map(|j| bits[j])
+            .collect();
+        dropped += popped - delivered.len();
+        if !delivered.is_empty() {
+            aggregations += 1;
+            a += 1.0;
+            s_rho += rho_effective(ctx, &delivered, m);
+            if a * a > cfg.k_eps * s_rho {
+                converged = true;
+                break;
+            }
+        }
+    }
+
+    Ok(DesResult {
+        wall,
+        rounds,
+        aggregations,
+        effective_rounds: a,
+        mean_rho: if a > 0.0 { s_rho / a } else { 0.0 },
+        mean_bits: bits_sum / rounds.max(1) as f64,
+        dropped_updates: dropped,
+        late_updates: late,
+        converged,
+    })
+}
+
+/// One in-flight async upload.
+struct AsyncArrival {
+    client: usize,
+    /// Model version the client read at round start (staleness base).
+    read_version: u64,
+    bit: u8,
+    lost: bool,
+}
+
+/// Begin one async client-round at `now`: draw the network state, let the
+/// policy pick bits (it sees the full vector, as always), and schedule
+/// the client's arrival.  Returns the across-client mean of the chosen
+/// bits (diagnostics).
+#[allow(clippy::too_many_arguments)]
+fn start_async_round(
+    ctx: &PolicyCtx,
+    policy: &mut dyn CompressionPolicy,
+    process: &mut dyn NetworkProcess,
+    faults: &FaultModel,
+    rng: &mut Rng,
+    q: &mut EventQueue<AsyncArrival>,
+    j: usize,
+    now: f64,
+    version: u64,
+) -> f64 {
+    let c = process.next_state();
+    let bits = policy.choose(ctx, &c);
+    let d = ctx.client_delay(bits[j], c[j] * faults.slowdown_of(j));
+    let lost = faults.draw_drop(rng);
+    q.push(now + d, AsyncArrival { client: j, read_version: version, bit: bits[j], lost });
+    bits.iter().map(|&b| b as f64).sum::<f64>() / bits.len() as f64
+}
+
+fn run_async(
+    ctx: &PolicyCtx,
+    policy: &mut dyn CompressionPolicy,
+    process: &mut dyn NetworkProcess,
+    cfg: &DesConfig,
+    mut rng: Rng,
+    staleness_exp: f64,
+) -> Result<DesResult> {
+    let m = process.dim();
+    let mut q: EventQueue<AsyncArrival> = EventQueue::new();
+    let mut version: u64 = 0;
+    let mut wall = 0.0f64;
+    let (mut a, mut s_rho) = (0.0f64, 0.0f64);
+    let mut aggregations = 0usize;
+    let mut rounds = 0usize;
+    let mut bits_sum = 0.0f64;
+    let mut dropped = 0usize;
+    let mut converged = false;
+    // Per-client round-start budget, like max_rounds in the other tiers.
+    let max_starts = cfg.max_rounds.saturating_mul(m);
+
+    for j in 0..m {
+        bits_sum +=
+            start_async_round(ctx, policy, process, &cfg.faults, &mut rng, &mut q, j, 0.0, version);
+        rounds += 1;
+    }
+
+    while let Some((t, arr)) = q.pop() {
+        wall = t;
+        if arr.lost {
+            dropped += 1;
+        } else {
+            let stale = (version - arr.read_version) as f64;
+            let u = (1.0 + stale).powf(-staleness_exp) / m as f64;
+            a += u;
+            s_rho += u * rho_effective(ctx, &[arr.bit], m);
+            version += 1;
+            aggregations += 1;
+            if a * a > cfg.k_eps * s_rho {
+                converged = true;
+                break;
+            }
+        }
+        if rounds >= max_starts {
+            // Budget exhausted: drain nothing further, report unconverged.
+            break;
+        }
+        bits_sum += start_async_round(
+            ctx,
+            policy,
+            process,
+            &cfg.faults,
+            &mut rng,
+            &mut q,
+            arr.client,
+            t,
+            version,
+        );
+        rounds += 1;
+    }
+
+    Ok(DesResult {
+        wall,
+        rounds,
+        aggregations,
+        effective_rounds: a,
+        mean_rho: if a > 0.0 { s_rho / a } else { 0.0 },
+        mean_bits: bits_sum / rounds.max(1) as f64,
+        dropped_updates: dropped,
+        late_updates: 0,
+        converged,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::btd::IidLogNormal;
+    use crate::policy::parse_policy;
+    use crate::sim::simulate;
+
+    fn ctx() -> PolicyCtx {
+        PolicyCtx::paper_default(198_760)
+    }
+
+    fn process(seed: u64) -> IidLogNormal {
+        IidLogNormal { m: 10, mu: 1.0, sigma: 1.0, rng: Rng::new(seed) }
+    }
+
+    #[test]
+    fn parse_and_label_round_trip() {
+        for s in ["sync", "semi-sync:7", "async:0.5", "async:1"] {
+            let d = Discipline::parse(s).unwrap();
+            assert_eq!(Discipline::parse(&d.label()).unwrap(), d);
+        }
+        assert_eq!(Discipline::parse("semisync:3").unwrap(), Discipline::SemiSync { k: 3 });
+        assert!(matches!(Discipline::parse("async").unwrap(), Discipline::Async { .. }));
+        assert!(Discipline::parse("semi-sync:0").is_err());
+        assert!(Discipline::parse("async:-1").is_err());
+        assert!(Discipline::parse("lockstep").is_err());
+    }
+
+    #[test]
+    fn sync_reproduces_analytic_tier_exactly() {
+        let ctx = ctx();
+        for seed in [0u64, 3, 11] {
+            for spec in ["fixed:2", "nacfl:1", "error:5.25"] {
+                let mut p1 = parse_policy(spec).unwrap();
+                let mut p2 = parse_policy(spec).unwrap();
+                let mut n1 = process(seed);
+                let mut n2 = process(seed); // paired sample path
+                let r_sim = simulate(&ctx, p1.as_mut(), &mut n1, 100.0, 100_000);
+                let cfg = DesConfig::new(Discipline::Sync, 100.0).with_max_rounds(100_000);
+                let r_des =
+                    simulate_des(&ctx, p2.as_mut(), &mut n2, &cfg, Rng::new(999)).unwrap();
+                assert_eq!(r_des.rounds, r_sim.rounds, "{spec} seed {seed}");
+                let rel = (r_des.wall - r_sim.wall).abs() / r_sim.wall;
+                assert!(rel <= 1e-12, "{spec} seed {seed}: rel {rel}");
+                assert!(r_des.converged);
+                assert_eq!(r_des.aggregations, r_sim.rounds);
+            }
+        }
+    }
+
+    #[test]
+    fn semi_sync_rounds_are_shorter() {
+        let ctx = ctx();
+        let mut p1 = parse_policy("fixed:2").unwrap();
+        let mut p2 = parse_policy("fixed:2").unwrap();
+        let mut n1 = process(5);
+        let mut n2 = process(5);
+        let sync_cfg = DesConfig::new(Discipline::Sync, 100.0);
+        let semi_cfg = DesConfig::new(Discipline::SemiSync { k: 6 }, 100.0);
+        let r_sync = simulate_des(&ctx, p1.as_mut(), &mut n1, &sync_cfg, Rng::new(0)).unwrap();
+        let r_semi = simulate_des(&ctx, p2.as_mut(), &mut n2, &semi_cfg, Rng::new(0)).unwrap();
+        assert!(
+            r_semi.mean_round_duration() < r_sync.mean_round_duration(),
+            "semi-sync {:.3e} vs sync {:.3e}",
+            r_semi.mean_round_duration(),
+            r_sync.mean_round_duration()
+        );
+        assert!(r_semi.late_updates > 0);
+        // Fewer clients per aggregate => higher effective rho => more rounds.
+        assert!(r_semi.mean_rho > r_sync.mean_rho);
+    }
+
+    #[test]
+    fn semi_sync_k_bounds_are_checked() {
+        let ctx = ctx();
+        let mut p = parse_policy("fixed:1").unwrap();
+        let mut n = process(0);
+        let cfg = DesConfig::new(Discipline::SemiSync { k: 11 }, 50.0);
+        assert!(simulate_des(&ctx, p.as_mut(), &mut n, &cfg, Rng::new(0)).is_err());
+    }
+
+    #[test]
+    fn async_converges_and_counts_aggregations() {
+        let ctx = ctx();
+        let mut p = parse_policy("fixed:2").unwrap();
+        let mut n = process(9);
+        let cfg = DesConfig::new(Discipline::Async { staleness_exp: 0.5 }, 50.0);
+        let r = simulate_des(&ctx, p.as_mut(), &mut n, &cfg, Rng::new(1)).unwrap();
+        assert!(r.converged, "async should converge: {r:?}");
+        assert!(r.aggregations > 0);
+        assert!(r.effective_rounds > 0.0);
+        assert!(r.wall > 0.0);
+        // One aggregation per non-lost arrival; every start eventually
+        // arrives or remains in flight at stop.
+        assert!(r.aggregations <= r.rounds);
+    }
+
+    #[test]
+    fn dropout_loses_updates_but_still_converges() {
+        let ctx = ctx();
+        let mut p = parse_policy("fixed:2").unwrap();
+        let mut n = process(2);
+        let cfg = DesConfig::new(Discipline::Sync, 60.0)
+            .with_faults(FaultModel::none().with_dropout(0.3));
+        let r = simulate_des(&ctx, p.as_mut(), &mut n, &cfg, Rng::new(12)).unwrap();
+        assert!(r.converged);
+        assert!(r.dropped_updates > 0);
+        // Lossy aggregation costs extra rounds vs the fault-free run.
+        let mut p2 = parse_policy("fixed:2").unwrap();
+        let mut n2 = process(2);
+        let clean = DesConfig::new(Discipline::Sync, 60.0);
+        let r_clean = simulate_des(&ctx, p2.as_mut(), &mut n2, &clean, Rng::new(12)).unwrap();
+        assert!(r.rounds >= r_clean.rounds);
+    }
+
+    #[test]
+    fn straggler_slowdown_stretches_sync_rounds() {
+        let ctx = ctx();
+        let mut p1 = parse_policy("fixed:2").unwrap();
+        let mut p2 = parse_policy("fixed:2").unwrap();
+        let mut n1 = process(4);
+        let mut n2 = process(4);
+        let clean = DesConfig::new(Discipline::Sync, 40.0);
+        let slow = DesConfig::new(Discipline::Sync, 40.0)
+            .with_faults(FaultModel::none().with_stragglers(10, &[0], 20.0));
+        let r_clean = simulate_des(&ctx, p1.as_mut(), &mut n1, &clean, Rng::new(0)).unwrap();
+        let r_slow = simulate_des(&ctx, p2.as_mut(), &mut n2, &slow, Rng::new(0)).unwrap();
+        assert!(r_slow.mean_round_duration() > r_clean.mean_round_duration());
+    }
+}

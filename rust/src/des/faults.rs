@@ -1,0 +1,118 @@
+//! Client fault injection for the DES tier.
+//!
+//! Two orthogonal fault channels, composing with every discipline:
+//!
+//! * **dropout** — with probability `dropout_prob`, a client's update for
+//!   a given round is lost.  Matching the coordinator's semantics, the
+//!   transfer still happens (time is still paid, the arrival event still
+//!   fires); only the payload is discarded at aggregation.
+//! * **stragglers** — per-client multiplicative slowdown on the
+//!   *transfer* term (`c_j * s(b_j)`; the `theta*tau` compute term is
+//!   untouched), modelling persistently slow links beyond what the BTD
+//!   process already captures.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug, Default)]
+pub struct FaultModel {
+    /// Per-(client, round) probability that the produced update is lost.
+    pub dropout_prob: f64,
+    /// Per-client multiplicative slowdown on the transfer term
+    /// (empty = no slowdown anywhere).
+    pub slowdown: Vec<f64>,
+}
+
+impl FaultModel {
+    /// No faults: the DES engine consumes no fault randomness in this
+    /// configuration, keeping fault-free runs stream-aligned with the
+    /// analytic tier.
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn with_dropout(mut self, p: f64) -> Self {
+        assert!((0.0..1.0).contains(&p), "dropout_prob must be in [0, 1), got {p}");
+        self.dropout_prob = p;
+        self
+    }
+
+    /// Mark `stragglers` (client ids) as slowed by `mult` (>= 1).
+    pub fn with_stragglers(mut self, m: usize, stragglers: &[usize], mult: f64) -> Self {
+        assert!(mult >= 1.0, "straggler multiplier must be >= 1, got {mult}");
+        let mut s = vec![1.0; m];
+        for &j in stragglers {
+            assert!(j < m, "straggler id {j} out of range for m = {m}");
+            s[j] = mult;
+        }
+        self.slowdown = s;
+        self
+    }
+
+    /// Transfer-delay multiplier for client `j`.
+    #[inline]
+    pub fn slowdown_of(&self, j: usize) -> f64 {
+        self.slowdown.get(j).copied().unwrap_or(1.0)
+    }
+
+    /// True when this model injects nothing.
+    pub fn is_none(&self) -> bool {
+        self.dropout_prob == 0.0 && self.slowdown.iter().all(|&s| s == 1.0)
+    }
+
+    /// Draw whether one (client, round) update is lost.  Consumes no
+    /// randomness when dropout is disabled.
+    #[inline]
+    pub fn draw_drop(&self, rng: &mut Rng) -> bool {
+        self.dropout_prob > 0.0 && rng.uniform() < self.dropout_prob
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_faultless() {
+        let f = FaultModel::none();
+        assert!(f.is_none());
+        assert_eq!(f.slowdown_of(0), 1.0);
+        assert_eq!(f.slowdown_of(99), 1.0);
+        let mut rng = Rng::new(0);
+        let before = rng.clone().next_u64();
+        assert!(!f.draw_drop(&mut rng));
+        // No randomness consumed.
+        assert_eq!(rng.next_u64(), before);
+    }
+
+    #[test]
+    fn stragglers_slow_only_marked_clients() {
+        let f = FaultModel::none().with_stragglers(5, &[1, 3], 8.0);
+        assert_eq!(f.slowdown_of(0), 1.0);
+        assert_eq!(f.slowdown_of(1), 8.0);
+        assert_eq!(f.slowdown_of(3), 8.0);
+        assert_eq!(f.slowdown_of(4), 1.0);
+        assert!(!f.is_none());
+    }
+
+    #[test]
+    fn dropout_rate_is_approximately_honored() {
+        let f = FaultModel::none().with_dropout(0.3);
+        let mut rng = Rng::new(7);
+        let n = 50_000;
+        let drops = (0..n).filter(|_| f.draw_drop(&mut rng)).count();
+        let rate = drops as f64 / n as f64;
+        assert!((rate - 0.3).abs() < 0.01, "rate {rate}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_out_of_range_dropout() {
+        let _ = FaultModel::none().with_dropout(1.5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_out_of_range_straggler() {
+        let _ = FaultModel::none().with_stragglers(3, &[3], 2.0);
+    }
+}

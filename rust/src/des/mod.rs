@@ -1,0 +1,40 @@
+//! Discrete-event simulation (DES) tier: asynchronous and semi-synchronous
+//! FL rounds over the same congestion substrate and policy engine as the
+//! analytic tier.
+//!
+//! The paper's round-duration model `d(tau, b, c) = max_j [theta*tau +
+//! c_j s(b_j)]` assumes perfectly synchronous rounds: every client is
+//! waited on, every round.  This tier drops that assumption.  Each
+//! client's compute + upload is an individual timestamped *transfer
+//! event* driven by the same `netsim::NetworkProcess` BTD states, ordered
+//! through a deterministic binary-heap event queue ([`event`]), with
+//! per-client virtual clocks.  On top of the event engine three
+//! aggregation *disciplines* ([`Discipline`]) are available:
+//!
+//! * `sync` — aggregate when every transmitting client has arrived.  The
+//!   parity anchor: on a fault-free paired sample path it reproduces the
+//!   analytic tier's wall clock **exactly** (see `engine::tests` and the
+//!   `des_system` integration test).
+//! * `semi-sync:K` — aggregate as soon as the fastest K of M clients have
+//!   arrived; the remaining transfers are abandoned and those updates are
+//!   dropped.  Trades statistical efficiency for shorter rounds.
+//! * `async[:g]` — aggregate on *every* arrival with staleness-discounted
+//!   weight `(1 + staleness)^-g`; clients immediately begin their next
+//!   local round.  No client ever waits on another.
+//!
+//! Client faults ([`faults::FaultModel`]) — per-round update-loss
+//! (dropout) probability and per-client straggler slowdown multipliers —
+//! compose with every discipline.  Policies see the usual
+//! `PolicyCtx`-shaped interface and run unmodified.
+//!
+//! Convergence accounting generalizes the Assumption-1 stopping rule to
+//! partial/weighted aggregation; see `engine` for the exact rule and
+//! DESIGN.md §DES for the derivation.
+
+pub mod engine;
+pub mod event;
+pub mod faults;
+
+pub use engine::{simulate_des, DesConfig, DesResult, Discipline};
+pub use event::EventQueue;
+pub use faults::FaultModel;

@@ -1,8 +1,11 @@
-//! Experiment runner: multi-seed cells, the paper's table presets, and
-//! gain computation (DESIGN.md §6 experiment index).
+//! Experiment runner: multi-seed cells, the paper's table presets, the
+//! work-stealing parallel grid, and gain computation (DESIGN.md §6
+//! experiment index).
 
+pub mod grid;
 pub mod presets;
 pub mod runner;
 
+pub use grid::{default_threads, run_cell_parallel, run_sweep, sweep_table, SweepCell, SweepSpec};
 pub use presets::{fig3_cells, table_cells};
 pub use runner::{run_cell, table_for, CellResult, Tier};

@@ -16,11 +16,33 @@ use crate::config::ExperimentConfig;
 use crate::coordinator::{Coordinator, FailureConfig};
 use crate::data::{mnist, partition, synth, Dataset};
 use crate::metrics::{gain_vs, RunTrace, Summary, TableWriter};
-use crate::policy::parse_policy;
+use crate::policy::{parse_policy, PolicyCtx};
 use crate::sim::simulate;
 use crate::util::rng::Rng;
 use anyhow::{Context, Result};
 use std::sync::Arc;
+
+/// Round budget for analytic-tier runs (sequential and parallel grid).
+pub(crate) const ANALYTIC_ROUND_CAP: usize = 10_000_000;
+
+/// One analytic-tier run for (policy spec, seed) — the single float path
+/// shared by [`run_cell`] and `exp::grid::run_cell_parallel`, so the
+/// sequential and parallel tables can never diverge.
+pub(crate) fn run_analytic_once(
+    ctx: &PolicyCtx,
+    cfg: &ExperimentConfig,
+    spec: &str,
+    seed: u64,
+    k_eps: f64,
+) -> Result<(f64, usize)> {
+    let mut policy = parse_policy(spec)?;
+    let scenario = crate::netsim::Scenario::new(cfg.scenario, cfg.m);
+    let mut process = scenario
+        .process(Rng::new(seed).derive("net", 0))
+        .context("instantiating congestion process")?;
+    let r = simulate(ctx, policy.as_mut(), &mut process, k_eps, ANALYTIC_ROUND_CAP);
+    Ok((r.wall, r.rounds))
+}
 
 #[derive(Clone, Copy, Debug)]
 pub enum Tier {
@@ -101,19 +123,19 @@ pub fn run_cell(
         let mut traces = Vec::new();
         let mut unconverged = 0usize;
         for &seed in &cfg.seeds {
-            let mut policy = parse_policy(spec)?;
-            let scenario = crate::netsim::Scenario::new(cfg.scenario, cfg.m);
-            let mut process = scenario
-                .process(Rng::new(seed).derive("net", 0))
-                .context("instantiating congestion process")?;
             match tier {
                 Tier::Analytic { k_eps } => {
-                    let r = simulate(&ctx, policy.as_mut(), &mut process, k_eps, 10_000_000);
-                    progress(spec, seed, r.wall);
-                    times.push(r.wall);
-                    rounds.push(r.rounds);
+                    let (wall, r) = run_analytic_once(&ctx, cfg, spec, seed, k_eps)?;
+                    progress(spec, seed, wall);
+                    times.push(wall);
+                    rounds.push(r);
                 }
                 Tier::Ml => {
+                    let mut policy = parse_policy(spec)?;
+                    let scenario = crate::netsim::Scenario::new(cfg.scenario, cfg.m);
+                    let mut process = scenario
+                        .process(Rng::new(seed).derive("net", 0))
+                        .context("instantiating congestion process")?;
                     let (train, test, part) = data.as_ref().unwrap();
                     let mut co = Coordinator::new(
                         cfg,
@@ -144,17 +166,25 @@ pub fn run_cell(
 }
 
 /// Render a cell as a paper-style table (Mean / 90th / 10th / Gain rows).
-pub fn table_for(title: &str, results: &[CellResult]) -> TableWriter {
+/// Errors when the roster lacks a `nacfl` entry (the gain baseline).
+pub fn table_for(title: &str, results: &[CellResult]) -> Result<TableWriter> {
     let nacfl = results
         .iter()
         .find(|r| r.policy.starts_with("nacfl"))
-        .expect("roster must include nacfl for the gain row");
-    // Paper convention: one power-of-ten scale for the whole table.
+        .ok_or_else(|| {
+            let roster: Vec<&str> = results.iter().map(|r| r.policy.as_str()).collect();
+            anyhow::anyhow!(
+                "policy roster must include `nacfl` for the gain row (got {roster:?})"
+            )
+        })?;
+    // Paper convention: one power-of-ten scale for the whole table;
+    // zero/non-finite means (e.g. nothing converged) fall back to 1.
     let max_mean = results
         .iter()
         .map(|r| Summary::of(&r.times).mean)
+        .filter(|m| m.is_finite())
         .fold(0.0f64, f64::max);
-    let scale = 10f64.powf(max_mean.log10().floor());
+    let scale = TableWriter::pow10_scale(max_mean);
     let cols: Vec<&str> = results.iter().map(|r| r.policy.as_str()).collect();
     let mut t = TableWriter::new(
         format!("{title}  [units of {scale:.0e} simulated seconds]"),
@@ -176,7 +206,7 @@ pub fn table_for(title: &str, results: &[CellResult]) -> TableWriter {
             }
         }),
     );
-    t
+    Ok(t)
 }
 
 #[cfg(test)]
@@ -200,7 +230,7 @@ mod tests {
         cfg.seeds = (0..6).collect();
         let results = run_cell(&cfg, Tier::Analytic { k_eps: 100.0 }, |_, _, _| {}).unwrap();
         assert_eq!(results.len(), 5);
-        let table = table_for("Table I (test)", &results);
+        let table = table_for("Table I (test)", &results).unwrap();
         let body = table.render();
         assert!(body.contains("Mean") && body.contains("Gain"));
         // NAC-FL should not lose to any fixed-bit policy in mean time.
@@ -224,5 +254,33 @@ mod tests {
         cfg.seeds = vec![42];
         let r = run_cell(&cfg, Tier::Analytic { k_eps: 30.0 }, |_, _, _| {}).unwrap();
         assert!(r.iter().all(|c| c.times.len() == 1));
+    }
+
+    #[test]
+    fn table_for_errors_without_nacfl_instead_of_panicking() {
+        let results = vec![CellResult {
+            policy: "fixed:1".into(),
+            times: vec![1.0, 2.0],
+            rounds: vec![10, 20],
+            traces: Vec::new(),
+            unconverged: 0,
+        }];
+        let err = table_for("no baseline", &results).unwrap_err();
+        assert!(err.to_string().contains("nacfl"), "err: {err}");
+    }
+
+    #[test]
+    fn table_for_survives_degenerate_means() {
+        // All-NaN times (every seed unconverged) must not poison the
+        // scale computation into NaN column text.
+        let mk = |policy: &str| CellResult {
+            policy: policy.into(),
+            times: vec![f64::NAN, f64::NAN],
+            rounds: vec![0, 0],
+            traces: Vec::new(),
+            unconverged: 2,
+        };
+        let table = table_for("degenerate", &[mk("fixed:1"), mk("nacfl:1")]).unwrap();
+        assert!(table.title.contains("1e0"), "title: {}", table.title);
     }
 }

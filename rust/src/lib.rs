@@ -6,7 +6,9 @@
 //!
 //! * **L3 (this crate)** — the FL coordinator: round orchestration,
 //!   network-congestion simulation, compression-policy engine (NAC-FL and
-//!   baselines), simulated wall-clock accounting, metrics, config, CLI.
+//!   baselines), simulated wall-clock accounting, metrics, config, CLI,
+//!   plus the discrete-event simulation tier (`des`) for async/semi-sync
+//!   rounds and the parallel experiment grid (`exp::grid`).
 //! * **L2/L1 (`python/compile`)** — FedCOM-V compute graphs + Pallas
 //!   quantizer/dense kernels, AOT-lowered once to `artifacts/*.hlo.txt`.
 //! * **runtime** — PJRT CPU loader/executor for those artifacts; python
@@ -17,6 +19,7 @@
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod des;
 pub mod exp;
 pub mod fl;
 pub mod metrics;

@@ -4,19 +4,25 @@
 //!   exp <table1..table4|fig3|all>   regenerate a paper table / figure
 //!   train                           one full FedCOM-V training run
 //!   sim                             one analytic-tier cell (fast)
+//!   des                             DES sweep: disciplines x roster x seeds
 //!   oracle                          Theorem-1 ablation: NAC-FL vs eq.(4)
 //!   check                           load + execute all AOT artifacts
 //!
 //! Examples:
 //!   nacfl check
 //!   nacfl sim --scenario perf:4 --seeds 20
+//!   nacfl des --scenario heterog --discipline semi-sync:7 --stragglers 8,9 --straggle-mult 8
 //!   nacfl train --policy nacfl --scenario homog:2 --engine xla
 //!   nacfl exp table3 --tier sim --seeds 20 --out results
 
 use anyhow::Result;
 use nacfl::config::ExperimentConfig;
 use nacfl::data::PartitionKind;
-use nacfl::exp::{fig3_cells, run_cell, table_cells, table_for, Tier};
+use nacfl::des::Discipline;
+use nacfl::exp::{
+    fig3_cells, run_cell, run_cell_parallel, run_sweep, sweep_table, table_cells, table_for,
+    SweepSpec, Tier,
+};
 use nacfl::netsim::{MarkovChain, Scenario, ScenarioKind};
 use nacfl::policy::{NacFl, OraclePolicy};
 use nacfl::util::cli::{bool_flag, flag, Args};
@@ -41,6 +47,11 @@ fn flags() -> Vec<nacfl::util::cli::FlagSpec> {
         flag("train-n", "training samples (synthetic)", None),
         flag("test-n", "test samples (synthetic)", None),
         flag("c-q", "quantizer variance calibration c_q (q(b)=c_q/(2^b-1)^2)", None),
+        flag("discipline", "sync | semi-sync:<k> | async[:exp] (des only)", None),
+        flag("threads", "grid/sweep worker threads (0 = all cores)", None),
+        flag("dropout", "per-round client update-loss probability (des only)", None),
+        flag("stragglers", "comma-separated straggler client ids (des only)", None),
+        flag("straggle-mult", "straggler transfer slowdown multiplier >= 1 (des only)", None),
         bool_flag("quiet", "suppress per-run progress"),
     ]
 }
@@ -86,6 +97,24 @@ fn build_config(args: &Args) -> Result<ExperimentConfig> {
     if let Some(c) = args.get("c-q") {
         cfg.c_q = c.parse()?;
     }
+    if let Some(d) = args.get("discipline") {
+        cfg.discipline = Discipline::parse(d)?;
+    }
+    if let Some(t) = args.get("threads") {
+        cfg.grid_threads = t.parse()?;
+    }
+    if let Some(p) = args.get("dropout") {
+        cfg.dropout = p.parse()?;
+    }
+    if let Some(s) = args.get("stragglers") {
+        cfg.stragglers = s
+            .split(',')
+            .map(|x| x.trim().parse::<usize>())
+            .collect::<std::result::Result<Vec<_>, _>>()?;
+    }
+    if let Some(m) = args.get("straggle-mult") {
+        cfg.straggler_mult = m.parse()?;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -109,12 +138,13 @@ fn cmd_exp(args: &Args, which: &str) -> Result<()> {
         }
         for (label, cell_cfg) in table_cells(tname, &cfg)? {
             let started = std::time::Instant::now();
-            let results = run_cell(&cell_cfg, tier, |p, s, t| {
+            // Analytic-tier cells fan out over the work-stealing grid.
+            let results = run_cell_parallel(&cell_cfg, tier, cfg.grid_threads, |p, s, t| {
                 if !quiet {
                     eprintln!("  [{label}] {p} seed {s}: {t:.3e} s");
                 }
             })?;
-            let table = table_for(&label, &results);
+            let table = table_for(&label, &results)?;
             println!("{}", table.render());
             let fname = format!(
                 "{out_dir}/{}.csv",
@@ -198,9 +228,77 @@ fn cmd_train(args: &Args) -> Result<()> {
 fn cmd_sim(args: &Args) -> Result<()> {
     let cfg = build_config(args)?;
     let tier = Tier::parse(args.get("tier").unwrap_or("sim"))?;
-    let results = run_cell(&cfg, tier, |_, _, _| {})?;
-    let table = table_for(&format!("scenario {}", cfg.scenario.label()), &results);
+    let results = run_cell_parallel(&cfg, tier, cfg.grid_threads, |_, _, _| {})?;
+    let table = table_for(&format!("scenario {}", cfg.scenario.label()), &results)?;
     println!("{}", table.render());
+    Ok(())
+}
+
+/// DES sweep: (scenario x discipline x policy x seed) cells in parallel.
+/// `--discipline` narrows to one discipline; the default tours all three.
+fn cmd_des(args: &Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    let ctx = cfg.policy_ctx();
+    let k_eps = match Tier::parse(args.get("tier").unwrap_or("sim"))? {
+        Tier::Analytic { k_eps } => k_eps,
+        Tier::Ml => anyhow::bail!("the des subcommand runs on the analytic tier (use --tier sim[:k])"),
+    };
+    // A discipline picked via --discipline or the config's [des] section
+    // runs alone; otherwise tour all three (sync included, so a config
+    // that says "sync" loses nothing to the tour).
+    let disciplines = if args.get("discipline").is_some() || cfg.discipline != Discipline::Sync {
+        vec![cfg.discipline]
+    } else {
+        vec![
+            Discipline::Sync,
+            // Three-quarters barrier (rounded up) as the semi-sync default.
+            Discipline::SemiSync { k: cfg.m - cfg.m / 4 },
+            Discipline::Async { staleness_exp: 0.5 },
+        ]
+    };
+    let spec = SweepSpec {
+        m: cfg.m,
+        scenarios: vec![cfg.scenario],
+        disciplines,
+        policies: cfg.policies.clone(),
+        seeds: cfg.seeds.clone(),
+        faults: cfg.fault_model(),
+        k_eps,
+        max_rounds: 10_000_000,
+    };
+    let started = std::time::Instant::now();
+    let cells = run_sweep(&ctx, &spec, cfg.grid_threads)?;
+    let table = sweep_table("DES sweep: mean time-to-target", &spec, &cells)?;
+    println!("{}", table.render());
+    let unconverged = cells.iter().filter(|c| !c.result.converged).count();
+    if unconverged > 0 {
+        eprintln!(
+            "  warning: {unconverged}/{} cells hit the round cap before the target; \
+             their table entries are budget-exhaustion walls, not time-to-target",
+            cells.len()
+        );
+    }
+    if !args.get_bool("quiet") {
+        for d in &spec.disciplines {
+            let (mut dur, mut drop, mut late) = (0.0, 0usize, 0usize);
+            let mut n = 0usize;
+            for c in cells.iter().filter(|c| c.discipline == d.label()) {
+                dur += c.result.mean_round_duration();
+                drop += c.result.dropped_updates;
+                late += c.result.late_updates;
+                n += 1;
+            }
+            let nf = n.max(1) as f64;
+            eprintln!(
+                "  {}: mean round {:.3e} s, {:.1} dropped + {:.1} late updates/run",
+                d.label(),
+                dur / nf,
+                drop as f64 / nf,
+                late as f64 / nf,
+            );
+        }
+        eprintln!("  ({} cells in {:.2?})", cells.len(), started.elapsed());
+    }
     Ok(())
 }
 
@@ -293,6 +391,7 @@ fn main() {
         ("exp", "regenerate a paper table/figure (table1..table4, fig3, all)"),
         ("train", "one full FedCOM-V training run"),
         ("sim", "one analytic-tier cell"),
+        ("des", "DES sweep: aggregation disciplines x roster x seeds"),
         ("oracle", "Theorem-1 ablation vs the eq.(4) oracle"),
         ("check", "load + execute all AOT artifacts"),
     ];
@@ -307,6 +406,7 @@ fn main() {
         }
         Some("train") => cmd_train(&args),
         Some("sim") => cmd_sim(&args),
+        Some("des") => cmd_des(&args),
         Some("oracle") => cmd_oracle(&args),
         Some("check") => cmd_check(&args),
         _ => {

@@ -17,7 +17,9 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
         return f64::NAN;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: NaNs (unconverged runs) sort to the end instead of
+    // panicking the comparator.
+    v.sort_by(|a, b| a.total_cmp(b));
     let rank = p / 100.0 * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -84,6 +86,14 @@ mod tests {
         let a = vec![3.0, 1.0, 2.0];
         let b = vec![1.0, 2.0, 3.0];
         assert_eq!(percentile(&a, 90.0), percentile(&b, 90.0));
+    }
+
+    #[test]
+    fn percentile_tolerates_nan_without_panicking() {
+        // Unconverged seeds surface as NaN times; they sort to the end.
+        let xs = vec![2.0, f64::NAN, 1.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert!(percentile(&xs, 100.0).is_nan());
     }
 
     #[test]

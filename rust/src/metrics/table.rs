@@ -31,6 +31,18 @@ impl TableWriter {
         format!("{:.3}", v / scale)
     }
 
+    /// Paper convention: one power-of-ten scale for a whole table, from
+    /// its largest mean.  Guards the degenerate cases — zero, negative,
+    /// NaN or infinite input (e.g. every run unconverged) falls back to
+    /// scale 1 instead of poisoning the table with NaNs.
+    pub fn pow10_scale(max_mean: f64) -> f64 {
+        if max_mean.is_finite() && max_mean > 0.0 {
+            10f64.powf(max_mean.log10().floor())
+        } else {
+            1.0
+        }
+    }
+
     pub fn render(&self) -> String {
         let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
         let mut label_w = 4usize;
@@ -84,6 +96,16 @@ mod tests {
     #[test]
     fn scaled_matches_paper_convention() {
         assert_eq!(TableWriter::scaled(1.58e7, 1e7), "1.580");
+    }
+
+    #[test]
+    fn pow10_scale_guards_degenerate_means() {
+        assert!((TableWriter::pow10_scale(1.58e7) - 1e7).abs() / 1e7 < 1e-12);
+        assert!((TableWriter::pow10_scale(9.99) - 1.0).abs() < 1e-12);
+        assert_eq!(TableWriter::pow10_scale(0.0), 1.0);
+        assert_eq!(TableWriter::pow10_scale(-5.0), 1.0);
+        assert_eq!(TableWriter::pow10_scale(f64::NAN), 1.0);
+        assert_eq!(TableWriter::pow10_scale(f64::INFINITY), 1.0);
     }
 
     #[test]

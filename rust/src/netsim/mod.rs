@@ -24,7 +24,9 @@ pub mod scenarios;
 pub mod trace_io;
 
 pub use ar1::Ar1Process;
-pub use btd::{BtdProcess, NetworkProcess};
+pub use btd::{BtdProcess, NetworkProcess, TraceProcess};
 pub use delay::DelayModel;
+pub use estimator::ProbeEstimator;
 pub use markov::MarkovChain;
 pub use scenarios::{Scenario, ScenarioKind};
+pub use trace_io::{load_trace, parse_trace, save_trace};

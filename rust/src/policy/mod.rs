@@ -52,6 +52,14 @@ impl PolicyCtx {
     pub fn duration(&self, bits: &[u8], c: &[f64]) -> f64 {
         self.delay.duration(self.tau, bits, c, &self.size)
     }
+
+    /// One client's compute+upload delay under its network-state entry —
+    /// the per-event quantity the DES tier schedules (same float path as
+    /// [`PolicyCtx::duration`], which folds these per client).
+    #[inline]
+    pub fn client_delay(&self, b: u8, c_j: f64) -> f64 {
+        self.delay.client_delay(self.tau, b, c_j, &self.size)
+    }
 }
 
 /// A compression-level choice policy: sees the (estimated) network state

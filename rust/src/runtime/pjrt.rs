@@ -1,0 +1,92 @@
+//! The real PJRT runtime (feature `xla`): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`, with tuple
+//! outputs (graphs are lowered with `return_tuple=True`) decomposed into
+//! per-output literals.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::GRAPHS;
+
+/// A compiled-artifact registry bound to one PJRT CPU client.
+pub struct Runtime {
+    client: PjRtClient,
+    dir: PathBuf,
+    exes: HashMap<String, PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create a CPU runtime rooted at an artifact directory (no graphs
+    /// loaded yet — see [`Runtime::load`] / [`Runtime::load_all`]).
+    pub fn cpu(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
+        Ok(Self {
+            client,
+            dir: artifact_dir.as_ref().to_path_buf(),
+            exes: HashMap::new(),
+        })
+    }
+
+    /// Directory this runtime loads artifacts from.
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// True if all four graph artifacts exist on disk.
+    pub fn artifacts_present(dir: impl AsRef<Path>) -> bool {
+        super::artifacts_present(dir)
+    }
+
+    /// Load + compile one graph by name (idempotent).
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.exes.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = HloModuleProto::from_text_file(path.to_str().unwrap())
+            .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e}"))?;
+        self.exes.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Load + compile every standard graph.
+    pub fn load_all(&mut self) -> Result<()> {
+        for g in GRAPHS {
+            self.load(g).with_context(|| format!("loading graph {g}"))?;
+        }
+        Ok(())
+    }
+
+    /// Execute a loaded graph; returns the decomposed tuple outputs.
+    pub fn exec(&self, name: &str, args: &[Literal]) -> Result<Vec<Literal>> {
+        let exe = self
+            .exes
+            .get(name)
+            .ok_or_else(|| anyhow!("graph {name} not loaded"))?;
+        let out = exe
+            .execute::<Literal>(args)
+            .map_err(|e| anyhow!("execute {name}: {e}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e}"))?;
+        // Graphs are lowered with return_tuple=True: always a tuple.
+        Ok(lit.to_tuple().map_err(|e| anyhow!("untuple {name}: {e}"))?)
+    }
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime")
+            .field("dir", &self.dir)
+            .field("loaded", &self.exes.keys().collect::<Vec<_>>())
+            .finish()
+    }
+}

@@ -1,0 +1,99 @@
+//! Stand-in runtime for builds without the `xla` feature.
+//!
+//! Mirrors the API surface of the real PJRT runtime (`pjrt.rs` +
+//! `literal.rs`) so `fl::engine::XlaEngine` and the integration tests
+//! compile unchanged.  Every entry point that would touch PJRT returns a
+//! descriptive error instead; `artifacts_present` still answers honestly
+//! from the filesystem so callers skip the XLA path cleanly.
+
+use anyhow::{anyhow, Result};
+use std::path::{Path, PathBuf};
+
+const NO_XLA: &str = "nacfl was built without the `xla` feature; add the xla-rs \
+dependency and rebuild with `--features xla` for the PJRT path (the `rust` \
+engine needs no artifacts)";
+
+/// Placeholder for `xla::Literal` (never instantiated with data).
+#[derive(Clone, Debug, Default)]
+pub struct Literal;
+
+/// Stub registry: constructors fail, filesystem probes still work.
+#[derive(Debug)]
+pub struct Runtime {
+    dir: PathBuf,
+}
+
+impl Runtime {
+    pub fn cpu(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        let _ = artifact_dir;
+        Err(anyhow!(NO_XLA))
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// True if all four graph artifacts exist on disk (same check as the
+    /// real runtime — lets tests and benches skip the XLA path uniformly).
+    pub fn artifacts_present(dir: impl AsRef<Path>) -> bool {
+        super::artifacts_present(dir)
+    }
+
+    pub fn load(&mut self, _name: &str) -> Result<()> {
+        Err(anyhow!(NO_XLA))
+    }
+
+    pub fn load_all(&mut self) -> Result<()> {
+        Err(anyhow!(NO_XLA))
+    }
+
+    pub fn exec(&self, _name: &str, _args: &[Literal]) -> Result<Vec<Literal>> {
+        Err(anyhow!(NO_XLA))
+    }
+}
+
+pub fn f32_tensor(_data: &[f32], _dims: &[i64]) -> Result<Literal> {
+    Err(anyhow!(NO_XLA))
+}
+
+pub fn i32_tensor(_data: &[i32], _dims: &[i64]) -> Result<Literal> {
+    Err(anyhow!(NO_XLA))
+}
+
+pub fn f32_scalar(_v: f32) -> Literal {
+    Literal
+}
+
+pub fn to_f32_vec(_lit: &Literal) -> Result<Vec<f32>> {
+    Err(anyhow!(NO_XLA))
+}
+
+pub fn to_i32_vec(_lit: &Literal) -> Result<Vec<i32>> {
+    Err(anyhow!(NO_XLA))
+}
+
+pub fn to_f32_scalar(_lit: &Literal) -> Result<f32> {
+    Err(anyhow!(NO_XLA))
+}
+
+pub fn to_i32_scalar(_lit: &Literal) -> Result<i32> {
+    Err(anyhow!(NO_XLA))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_errors_mention_the_feature() {
+        let err = Runtime::cpu("artifacts").unwrap_err();
+        assert!(err.to_string().contains("xla"));
+        assert!(f32_tensor(&[1.0], &[1]).is_err());
+        assert!(to_f32_vec(&Literal).is_err());
+    }
+
+    #[test]
+    fn artifacts_present_is_filesystem_honest() {
+        assert!(!Runtime::artifacts_present("/nonexistent/nacfl-artifacts"));
+    }
+}

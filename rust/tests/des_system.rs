@@ -1,0 +1,178 @@
+//! System tests for the DES tier and the parallel experiment grid.
+//!
+//! * `sync` discipline parity: on paired sample paths the DES engine
+//!   reproduces the analytic tier's wall clock within 1e-6 relative
+//!   tolerance (in fact bit-exactly — same float path) across scenarios
+//!   and policies.
+//! * `semi-sync:K` strictly shortens mean round duration vs `sync` under
+//!   the heterogeneous-independent scenario with straggler injection.
+//! * The work-stealing grid produces bit-identical tables to the
+//!   sequential `run_cell` path for a fixed seed set.
+
+use nacfl::config::ExperimentConfig;
+use nacfl::des::{simulate_des, DesConfig, Discipline, FaultModel};
+use nacfl::exp::{run_cell, run_cell_parallel, table_for, Tier};
+use nacfl::netsim::{Scenario, ScenarioKind};
+use nacfl::policy::parse_policy;
+use nacfl::sim::simulate;
+use nacfl::util::rng::Rng;
+
+const K_EPS: f64 = 100.0;
+
+fn scenarios() -> Vec<ScenarioKind> {
+    vec![
+        ScenarioKind::HomogeneousIndependent { sigma_sq: 2.0 },
+        ScenarioKind::HeterogeneousIndependent,
+        ScenarioKind::PerfectlyCorrelated { sigma_inf_sq: 4.0 },
+        ScenarioKind::PartiallyCorrelated { sigma_inf_sq: 4.0 },
+    ]
+}
+
+#[test]
+fn sync_discipline_reproduces_analytic_wall_clock() {
+    let cfg = ExperimentConfig::paper();
+    let ctx = cfg.policy_ctx();
+    for kind in scenarios() {
+        for spec in ["fixed:1", "fixed:3", "error:5.25", "nacfl:1"] {
+            for seed in [0u64, 7, 42] {
+                let scenario = Scenario::new(kind, cfg.m);
+                // Paired sample paths: same derived stream for both tiers.
+                let mut proc_a = scenario.process(Rng::new(seed).derive("net", 0)).unwrap();
+                let mut proc_b = scenario.process(Rng::new(seed).derive("net", 0)).unwrap();
+                let mut pol_a = parse_policy(spec).unwrap();
+                let mut pol_b = parse_policy(spec).unwrap();
+
+                let r_sim = simulate(&ctx, pol_a.as_mut(), &mut proc_a, K_EPS, 10_000_000);
+                let des = DesConfig::new(Discipline::Sync, K_EPS);
+                let r_des =
+                    simulate_des(&ctx, pol_b.as_mut(), &mut proc_b, &des, Rng::new(1)).unwrap();
+
+                let rel = (r_des.wall - r_sim.wall).abs() / r_sim.wall.abs().max(1e-300);
+                assert!(
+                    rel <= 1e-6,
+                    "{} {spec} seed {seed}: DES wall {:.12e} vs sim {:.12e} (rel {rel:.3e})",
+                    kind.label(),
+                    r_des.wall,
+                    r_sim.wall
+                );
+                assert_eq!(
+                    r_des.rounds, r_sim.rounds,
+                    "{} {spec} seed {seed}: stopping round mismatch",
+                    kind.label()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn semi_sync_strictly_reduces_mean_round_duration_under_stragglers() {
+    let cfg = ExperimentConfig::paper();
+    let ctx = cfg.policy_ctx();
+    let faults = FaultModel::none().with_stragglers(cfg.m, &[8, 9], 8.0);
+    let mut improved = 0usize;
+    let seeds: Vec<u64> = (0..6).collect();
+    for &seed in &seeds {
+        let scenario = Scenario::new(ScenarioKind::HeterogeneousIndependent, cfg.m);
+        let mut proc_sync = scenario.process(Rng::new(seed).derive("net", 0)).unwrap();
+        let mut proc_semi = scenario.process(Rng::new(seed).derive("net", 0)).unwrap();
+        let mut pol_sync = parse_policy("fixed:2").unwrap();
+        let mut pol_semi = parse_policy("fixed:2").unwrap();
+
+        let sync_cfg = DesConfig::new(Discipline::Sync, K_EPS).with_faults(faults.clone());
+        let semi_cfg =
+            DesConfig::new(Discipline::SemiSync { k: 7 }, K_EPS).with_faults(faults.clone());
+        let r_sync =
+            simulate_des(&ctx, pol_sync.as_mut(), &mut proc_sync, &sync_cfg, Rng::new(0)).unwrap();
+        let r_semi =
+            simulate_des(&ctx, pol_semi.as_mut(), &mut proc_semi, &semi_cfg, Rng::new(0)).unwrap();
+
+        assert!(
+            r_semi.mean_round_duration() < r_sync.mean_round_duration(),
+            "seed {seed}: semi-sync mean round {:.3e} !< sync {:.3e}",
+            r_semi.mean_round_duration(),
+            r_sync.mean_round_duration()
+        );
+        assert!(r_semi.late_updates > 0, "seed {seed}: no late updates recorded");
+        improved += 1;
+    }
+    assert_eq!(improved, seeds.len());
+}
+
+#[test]
+fn async_discipline_beats_sync_under_extreme_stragglers() {
+    // With one client 50x slower, sync pays the straggler every round;
+    // async keeps aggregating the other nine and wins on wall clock
+    // despite its staleness-discounted progress accounting.
+    let cfg = ExperimentConfig::paper();
+    let ctx = cfg.policy_ctx();
+    let faults = FaultModel::none().with_stragglers(cfg.m, &[0], 50.0);
+    let mut wins = 0usize;
+    let seeds = [0u64, 1, 2];
+    for &seed in &seeds {
+        let scenario = Scenario::new(ScenarioKind::HomogeneousIndependent { sigma_sq: 1.0 }, cfg.m);
+        let mut proc_sync = scenario.process(Rng::new(seed).derive("net", 0)).unwrap();
+        let mut proc_async = scenario.process(Rng::new(seed).derive("net", 0)).unwrap();
+        let mut pol_sync = parse_policy("fixed:2").unwrap();
+        let mut pol_async = parse_policy("fixed:2").unwrap();
+        let sync_cfg = DesConfig::new(Discipline::Sync, K_EPS).with_faults(faults.clone());
+        let async_cfg = DesConfig::new(Discipline::Async { staleness_exp: 0.5 }, K_EPS)
+            .with_faults(faults.clone());
+        let r_sync =
+            simulate_des(&ctx, pol_sync.as_mut(), &mut proc_sync, &sync_cfg, Rng::new(0)).unwrap();
+        let r_async =
+            simulate_des(&ctx, pol_async.as_mut(), &mut proc_async, &async_cfg, Rng::new(0))
+                .unwrap();
+        assert!(r_sync.converged && r_async.converged);
+        if r_async.wall < r_sync.wall {
+            wins += 1;
+        }
+    }
+    assert!(
+        wins >= 2,
+        "async should beat sync under a 50x straggler on most seeds (won {wins}/{})",
+        seeds.len()
+    );
+}
+
+#[test]
+fn policies_run_unmodified_across_disciplines() {
+    // The PolicyCtx hook: every roster policy drives every discipline
+    // without modification and converges.
+    let cfg = ExperimentConfig::paper();
+    let ctx = cfg.policy_ctx();
+    for spec in ["fixed:1", "fixed:2", "fixed:3", "error:5.25", "nacfl:1"] {
+        for d in [
+            Discipline::Sync,
+            Discipline::SemiSync { k: 7 },
+            Discipline::Async { staleness_exp: 0.5 },
+        ] {
+            let scenario = Scenario::new(ScenarioKind::HeterogeneousIndependent, cfg.m);
+            let mut process = scenario.process(Rng::new(3).derive("net", 0)).unwrap();
+            let mut policy = parse_policy(spec).unwrap();
+            let des = DesConfig::new(d, 60.0);
+            let r = simulate_des(&ctx, policy.as_mut(), &mut process, &des, Rng::new(5)).unwrap();
+            assert!(r.converged, "{spec} under {} did not converge", d.label());
+            assert!(r.wall > 0.0 && r.aggregations > 0);
+        }
+    }
+}
+
+#[test]
+fn grid_tables_are_bit_identical_to_sequential_for_fixed_seeds() {
+    let mut cfg = ExperimentConfig::paper();
+    cfg.seeds = (0..8).collect();
+    let tier = Tier::Analytic { k_eps: 80.0 };
+    let seq = run_cell(&cfg, tier, |_, _, _| {}).unwrap();
+    for threads in [2usize, 4, 8] {
+        let par = run_cell_parallel(&cfg, tier, threads, |_, _, _| {}).unwrap();
+        for (a, b) in seq.iter().zip(par.iter()) {
+            assert_eq!(a.policy, b.policy);
+            assert_eq!(a.times, b.times, "{} with {threads} threads", a.policy);
+            assert_eq!(a.rounds, b.rounds);
+        }
+        let ts = table_for("parity", &seq).unwrap().render();
+        let tp = table_for("parity", &par).unwrap().render();
+        assert_eq!(ts, tp, "{threads}-thread table differs from sequential");
+    }
+}

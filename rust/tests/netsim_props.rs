@@ -1,0 +1,102 @@
+//! Integration properties for the netsim observation layer:
+//! the §V probe estimator converges toward the true BTD as probes
+//! accumulate, and trace save→load round-trips preserve the trace.
+
+use nacfl::netsim::estimator::ProbeEstimator;
+use nacfl::netsim::trace_io::{load_trace, parse_trace, save_trace};
+use nacfl::netsim::{NetworkProcess, Scenario, ScenarioKind};
+use nacfl::util::rng::Rng;
+
+#[test]
+fn probe_estimator_converges_toward_true_btd_with_probe_count() {
+    // Mean absolute relative error across independent estimator streams
+    // must shrink as probes accumulate, and end close to the truth.
+    let c_true = vec![3.0, 0.5, 12.0];
+    // With alpha = 0.02 the EWMA's memory of the first noisy probe decays
+    // over ~200 probes, so the three checkpoints sit in cleanly separated
+    // error regimes (~0.23, ~0.17, ~0.03 mean abs relative error).
+    let checkpoints = [2usize, 20, 200];
+    let n_streams = 20u64;
+    let mut errs = vec![0.0f64; checkpoints.len()];
+    for s in 0..n_streams {
+        let mut est = ProbeEstimator::new(c_true.len(), 0.02, 0.3, Rng::new(1000 + s));
+        let mut probes = 0usize;
+        for (ci, &upto) in checkpoints.iter().enumerate() {
+            let mut last = Vec::new();
+            while probes < upto {
+                last = est.observe(&c_true);
+                probes += 1;
+            }
+            let err: f64 = last
+                .iter()
+                .zip(c_true.iter())
+                .map(|(e, t)| ((e - t) / t).abs())
+                .sum::<f64>()
+                / c_true.len() as f64;
+            errs[ci] += err / n_streams as f64;
+        }
+    }
+    assert!(
+        errs[0] > errs[1] && errs[1] > errs[2],
+        "error must shrink with probe count: {errs:?}"
+    );
+    assert!(errs[2] < 0.06, "converged error too large: {errs:?}");
+}
+
+#[test]
+fn probe_estimator_is_unbiased_in_the_long_run() {
+    let c_true = vec![4.0];
+    let mut est = ProbeEstimator::new(1, 0.2, 0.25, Rng::new(9));
+    // Burn in, then average the estimate over many probes.
+    for _ in 0..500 {
+        est.observe(&c_true);
+    }
+    let n = 20_000;
+    let mut acc = 0.0;
+    for _ in 0..n {
+        acc += est.observe(&c_true)[0];
+    }
+    let mean = acc / n as f64;
+    assert!((mean - 4.0).abs() / 4.0 < 0.03, "long-run mean {mean}");
+}
+
+#[test]
+fn trace_write_read_round_trip_preserves_the_trace() {
+    // A trace sampled from a real scenario, saved and reloaded, replays
+    // the same BTD path (to the 1e-9 precision of the CSV format).
+    let m = 7;
+    let rounds = 50;
+    let scenario = Scenario::new(ScenarioKind::PartiallyCorrelated { sigma_inf_sq: 4.0 }, m);
+    let mut process = scenario.process(Rng::new(11).derive("net", 0)).unwrap();
+    let rows: Vec<Vec<f64>> = (0..rounds).map(|_| process.next_state()).collect();
+
+    let path = std::env::temp_dir().join(format!("nacfl_roundtrip_{}.csv", std::process::id()));
+    save_trace(&path, &rows).unwrap();
+    let mut replay = load_trace(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    assert_eq!(replay.dim(), m);
+    for (n, row) in rows.iter().enumerate() {
+        let got = replay.next_state();
+        assert_eq!(got.len(), m);
+        for (j, (&g, &want)) in got.iter().zip(row.iter()).enumerate() {
+            let rel = (g - want).abs() / want.abs();
+            assert!(rel < 1e-8, "round {n} client {j}: {g} vs {want} (rel {rel:.2e})");
+        }
+    }
+    // And the replay is cyclic: round `rounds` equals round 0.
+    let wrapped = replay.next_state();
+    let rel = (wrapped[0] - rows[0][0]).abs() / rows[0][0].abs();
+    assert!(rel < 1e-8);
+}
+
+#[test]
+fn parse_trace_rejects_malformed_input_cleanly() {
+    assert!(parse_trace("1.0,2.0\n3.0\n").is_err(), "ragged rows");
+    assert!(parse_trace("1.0,-2.0\n").is_err(), "non-positive BTD");
+    assert!(parse_trace("1.0,nan\n").is_err(), "NaN BTD");
+    assert!(parse_trace("# only comments\n").is_err(), "no data rows");
+    // Header + comments are tolerated.
+    let t = parse_trace("# hdr\nc1,c2\n0.25,0.75\n").unwrap();
+    assert_eq!(t, vec![vec![0.25, 0.75]]);
+}
