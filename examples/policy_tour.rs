@@ -32,8 +32,8 @@ fn main() -> anyhow::Result<()> {
         ("mixed fast/slow", vec![0.2, 0.2, 0.2, 0.2, 0.2, 4.0, 4.0, 4.0, 4.0, 4.0]),
     ] {
         let mut p = nac.clone();
-        let bits = p.choose(&ctx, &state);
-        println!("  {label:<22} -> bits {bits:?}");
+        let levels: Vec<u8> = p.choose(&ctx, &state).iter().map(|x| x.level).collect();
+        println!("  {label:<22} -> bits {levels:?}");
     }
 
     // -- (2) Theorem-1 convergence to the oracle ------------------------

@@ -7,7 +7,7 @@
 //! convexity along the achievable frontier.
 
 use nacfl::config::ExperimentConfig;
-use nacfl::policy::RoundsModel;
+use nacfl::policy::{uniform_choices, RoundsModel};
 
 fn main() {
     let cfg = ExperimentConfig::paper();
@@ -19,9 +19,9 @@ fn main() {
     );
     let mut pts: Vec<(f64, f64)> = Vec::new();
     for b in 1..=16u8 {
-        let q = ctx.rounds.var.q_of_bits(b);
+        let q = ctx.q_of_level(b);
         let r = RoundsModel::h_of_q(q);
-        let d = ctx.duration(&vec![b; cfg.m], &c);
+        let d = ctx.duration(&uniform_choices(b, cfg.m), &c);
         println!("{:>4} {:>12.4} {:>12.4} {:>16.4e}", b, q, r, d);
         pts.push((r, d));
     }

@@ -9,9 +9,9 @@
 use super::toml_lite::{self, Doc};
 use crate::data::PartitionKind;
 use crate::des::{Discipline, FaultModel};
-use crate::netsim::{DelayModel, ScenarioKind};
-use crate::policy::{PolicyCtx, RoundsModel};
-use crate::quant::{SizeModel, VarianceModel};
+use crate::netsim::{BtdProcess, DelayModel, Scenario, ScenarioKind};
+use crate::policy::{PolicyCtx, PolicySpec};
+use crate::quant::{parse_compressor, CompressorEnv};
 use anyhow::{anyhow, Context, Result};
 use std::path::Path;
 
@@ -45,6 +45,9 @@ pub struct ExperimentConfig {
     pub train_eval_samples: usize,
 
     // Compression model.
+    /// Compressor spec (`quant::parse_compressor`): `quant:inf` |
+    /// `topk:<frac>` | `errbound:<q1>`.
+    pub compressor: String,
     pub c_q: f64,
     pub alpha: f64,
 
@@ -95,6 +98,7 @@ impl ExperimentConfig {
             eval_every: 5,
             eval_samples: 2000,
             train_eval_samples: 2000,
+            compressor: "quant:inf".into(),
             c_q: 6.25,
             alpha: 2.0,
             train_n: 60_000,
@@ -125,14 +129,27 @@ impl ExperimentConfig {
         c
     }
 
-    /// Derived policy context (dim = flat parameter count).
+    /// The compressor-registry construction environment (dim = flat
+    /// parameter count, c_q from `[quant]`).
+    pub fn compressor_env(&self) -> CompressorEnv {
+        CompressorEnv { dim: crate::runtime::dims::P, c_q: self.c_q }
+    }
+
+    /// Derived policy context: delay model + the registered compressor.
+    /// The spec is checked by [`ExperimentConfig::validate`]; call that
+    /// first on externally supplied configs.
     pub fn policy_ctx(&self) -> PolicyCtx {
-        PolicyCtx {
-            tau: self.tau,
-            delay: self.delay,
-            size: SizeModel::new(crate::runtime::dims::P),
-            rounds: RoundsModel::new(VarianceModel::new(self.c_q)),
-        }
+        let compressor = parse_compressor(&self.compressor, &self.compressor_env())
+            .expect("compressor spec must be validated before policy_ctx()");
+        PolicyCtx { tau: self.tau, delay: self.delay, compressor }
+    }
+
+    /// The cell's paired congestion sample path for a seed (the single
+    /// derivation shared by the sequential runner, the parallel grid and
+    /// the ML coordinator — see [`Scenario::paired_process`]).
+    pub fn congestion_process(&self, seed: u64) -> Result<BtdProcess> {
+        Scenario::paired_process(self.scenario, self.m, seed)
+            .context("instantiating congestion process")
     }
 
     /// Fault model for the DES tier, from the config's dropout/straggler
@@ -234,6 +251,12 @@ impl ExperimentConfig {
 
         set_f64!("quant", "c_q", c.c_q);
         set_f64!("quant", "alpha", c.alpha);
+        if let Some(v) = get("quant", "compressor") {
+            c.compressor = v
+                .as_str()
+                .ok_or_else(|| anyhow!("quant::compressor must be a string"))?
+                .into();
+        }
 
         set_usize!("data", "train_n", c.train_n);
         set_usize!("data", "test_n", c.test_n);
@@ -286,8 +309,9 @@ impl ExperimentConfig {
             return Err(anyhow!("engine must be `xla` or `rust`"));
         }
         for p in &self.policies {
-            crate::policy::parse_policy(p)?;
+            PolicySpec::parse(p)?;
         }
+        parse_compressor(&self.compressor, &self.compressor_env())?;
         if !(0.0..1.0).contains(&self.dropout) {
             return Err(anyhow!("des::dropout must be in [0, 1)"));
         }
@@ -390,5 +414,32 @@ threads = 2
         assert!(ExperimentConfig::from_doc(&doc).is_err());
         let doc = toml_lite::parse("[engine]\nkind = \"cuda\"").unwrap();
         assert!(ExperimentConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn compressor_spec_parses_and_validates() {
+        let doc = toml_lite::parse("[quant]\ncompressor = \"topk:0.1\"").unwrap();
+        let c = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.compressor, "topk:0.1");
+        assert_eq!(c.policy_ctx().compressor.spec(), "topk:0.1");
+        let doc = toml_lite::parse("[quant]\ncompressor = \"zip:9\"").unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_err());
+        // oracle is a valid roster entry at the config layer.
+        let doc = toml_lite::parse("policies = [\"nacfl\", \"oracle:8\"]").unwrap();
+        ExperimentConfig::from_doc(&doc).unwrap();
+    }
+
+    #[test]
+    fn congestion_process_matches_paired_derivation() {
+        // Pin the helper to the literal legacy derivation — if the
+        // pairing stream ever drifts, every tier's sample paths change.
+        use crate::netsim::NetworkProcess;
+        use crate::util::rng::Rng;
+        let cfg = ExperimentConfig::paper();
+        let mut a = cfg.congestion_process(3).unwrap();
+        let mut b = crate::netsim::Scenario::new(cfg.scenario, cfg.m)
+            .process(Rng::new(3).derive("net", 0))
+            .unwrap();
+        assert_eq!(a.next_state(), b.next_state());
     }
 }

@@ -73,6 +73,15 @@ impl Coordinator {
         if part.m() != m {
             return Err(anyhow!("partition has {} clients, config wants {m}", part.m()));
         }
+        let compressor = crate::quant::parse_compressor(&cfg.compressor, &cfg.compressor_env())
+            .map_err(|e| anyhow!("invalid compressor spec `{}`: {e}", cfg.compressor))?;
+        if !compressor.spec().starts_with("quant") {
+            return Err(anyhow!(
+                "the ML tier's AOT quantizer kernels implement the `quant:inf` compressor \
+                 only; got `{}` (run other families on the analytic/DES tiers)",
+                cfg.compressor
+            ));
+        }
         let eval_engine = make_engine(&cfg.engine, &cfg.artifact_dir)?;
 
         // Resolve the worker count: 0 = auto (threads only when the host
@@ -226,7 +235,8 @@ impl Coordinator {
 
         for n in 1..=cfg.max_rounds {
             let c = process.next_state();
-            let bits = policy.choose(&ctx, &c);
+            let choices = policy.choose(&ctx, &c);
+            let bits: Vec<u8> = choices.iter().map(|x| x.level).collect();
             let eta = cfg.eta(n) as f32;
 
             for slot in slots.iter_mut() {
@@ -283,7 +293,7 @@ impl Coordinator {
                 w = Arc::new(w_next);
             }
             // Every update lost: the model freezes but time is still paid.
-            wall += ctx.duration(&bits, &c);
+            wall += ctx.duration(&choices, &c);
 
             if n % cfg.eval_every == 0 || n == cfg.max_rounds {
                 let (train_loss, _) =

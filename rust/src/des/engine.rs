@@ -33,12 +33,14 @@
 //! over the k delivered updates — the (M/k) factor charges the higher
 //! variance of averaging fewer updates.  With `A = sum u` and
 //! `S = sum u * rho_eff`, the run stops when `A^2 > K_eps * S`; for
-//! k = M and u = 1 this is Assumption 1 verbatim.
+//! k = M and u = 1 this is Assumption 1 verbatim.  The accounting is the
+//! analytic tier's [`StoppingRule`], reused with non-unit weights.
 
 use super::event::EventQueue;
 use super::faults::FaultModel;
 use crate::netsim::{DelayModel, NetworkProcess};
-use crate::policy::{CompressionPolicy, PolicyCtx, RoundsModel};
+use crate::policy::{mean_level, CompressionChoice, CompressionPolicy, PolicyCtx, RoundsModel};
+use crate::sim::StoppingRule;
 use crate::util::rng::Rng;
 use anyhow::{anyhow, Result};
 
@@ -89,6 +91,12 @@ impl Discipline {
             Discipline::SemiSync { k } => format!("semi-sync:{k}"),
             Discipline::Async { staleness_exp } => format!("async:{staleness_exp}"),
         }
+    }
+}
+
+impl std::fmt::Display for Discipline {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.label())
     }
 }
 
@@ -156,13 +164,13 @@ impl DesResult {
 
 /// Effective rounds-proxy for an aggregate of `delivered` updates out of
 /// `m` clients (module docs): `sqrt(1 + (m/k) q_bar_k)`.  For k = m this
-/// is exactly `RoundsModel::rho`, float-op for float-op.
-fn rho_effective(ctx: &PolicyCtx, delivered: &[u8], m: usize) -> f64 {
+/// is exactly `PolicyCtx::rho`, float-op for float-op.
+fn rho_effective(ctx: &PolicyCtx, delivered: &[CompressionChoice], m: usize) -> f64 {
     debug_assert!(!delivered.is_empty());
     let kd = delivered.len() as f64;
     let q_bar_k = delivered
         .iter()
-        .map(|&b| ctx.rounds.var.q_of_bits(b))
+        .map(|x| ctx.q_of_level(x.level))
         .sum::<f64>()
         / kd;
     RoundsModel::h_of_q((m as f64 / kd) * q_bar_k)
@@ -214,7 +222,7 @@ fn run_round_based(
     let mut lost = vec![false; m];
     let mut got = vec![false; m];
     let mut wall = 0.0f64;
-    let (mut a, mut s_rho) = (0.0f64, 0.0f64);
+    let mut rule = StoppingRule::new(cfg.k_eps);
     let mut aggregations = 0usize;
     let mut rounds = 0usize;
     let mut bits_sum = 0.0f64;
@@ -225,15 +233,15 @@ fn run_round_based(
     while rounds < cfg.max_rounds {
         rounds += 1;
         let c = process.next_state();
-        let bits = policy.choose(ctx, &c);
-        bits_sum += bits.iter().map(|&b| b as f64).sum::<f64>() / bits.len() as f64;
+        let choices = policy.choose(ctx, &c);
+        bits_sum += mean_level(&choices);
 
         // Schedule this round's arrivals; per-client virtual clocks are
         // round-relative (everyone re-syncs at the aggregation barrier).
         q.clear();
         let mut offset = 0.0f64;
         for j in 0..m {
-            let d = ctx.client_delay(bits[j], c[j] * cfg.faults.slowdown_of(j));
+            let d = ctx.client_delay(choices[j].level, c[j] * cfg.faults.slowdown_of(j));
             let at = if tdma {
                 offset += d;
                 offset
@@ -259,19 +267,17 @@ fn run_round_based(
         late += m - popped;
         wall += dur;
 
-        // Collect delivered bits in client order: deterministic, and for
-        // full delivery the float order matches `RoundsModel::rho` exactly
-        // (analytic-tier parity).
-        let delivered: Vec<u8> = (0..m)
+        // Collect delivered choices in client order: deterministic, and
+        // for full delivery the float order matches `PolicyCtx::rho`
+        // exactly (analytic-tier parity).
+        let delivered: Vec<CompressionChoice> = (0..m)
             .filter(|&j| got[j] && !lost[j])
-            .map(|j| bits[j])
+            .map(|j| choices[j])
             .collect();
         dropped += popped - delivered.len();
         if !delivered.is_empty() {
             aggregations += 1;
-            a += 1.0;
-            s_rho += rho_effective(ctx, &delivered, m);
-            if a * a > cfg.k_eps * s_rho {
+            if rule.record(1.0, rho_effective(ctx, &delivered, m)) {
                 converged = true;
                 break;
             }
@@ -282,8 +288,8 @@ fn run_round_based(
         wall,
         rounds,
         aggregations,
-        effective_rounds: a,
-        mean_rho: if a > 0.0 { s_rho / a } else { 0.0 },
+        effective_rounds: rule.progress(),
+        mean_rho: rule.mean_rho(),
         mean_bits: bits_sum / rounds.max(1) as f64,
         dropped_updates: dropped,
         late_updates: late,
@@ -296,7 +302,7 @@ struct AsyncArrival {
     client: usize,
     /// Model version the client read at round start (staleness base).
     read_version: u64,
-    bit: u8,
+    choice: CompressionChoice,
     lost: bool,
 }
 
@@ -317,11 +323,14 @@ fn start_async_round(
     version: u64,
 ) -> f64 {
     let c = process.next_state();
-    let bits = policy.choose(ctx, &c);
-    let d = ctx.client_delay(bits[j], c[j] * faults.slowdown_of(j));
+    let choices = policy.choose(ctx, &c);
+    let d = ctx.client_delay(choices[j].level, c[j] * faults.slowdown_of(j));
     let lost = faults.draw_drop(rng);
-    q.push(now + d, AsyncArrival { client: j, read_version: version, bit: bits[j], lost });
-    bits.iter().map(|&b| b as f64).sum::<f64>() / bits.len() as f64
+    q.push(
+        now + d,
+        AsyncArrival { client: j, read_version: version, choice: choices[j], lost },
+    );
+    mean_level(&choices)
 }
 
 fn run_async(
@@ -336,7 +345,7 @@ fn run_async(
     let mut q: EventQueue<AsyncArrival> = EventQueue::new();
     let mut version: u64 = 0;
     let mut wall = 0.0f64;
-    let (mut a, mut s_rho) = (0.0f64, 0.0f64);
+    let mut rule = StoppingRule::new(cfg.k_eps);
     let mut aggregations = 0usize;
     let mut rounds = 0usize;
     let mut bits_sum = 0.0f64;
@@ -358,11 +367,10 @@ fn run_async(
         } else {
             let stale = (version - arr.read_version) as f64;
             let u = (1.0 + stale).powf(-staleness_exp) / m as f64;
-            a += u;
-            s_rho += u * rho_effective(ctx, &[arr.bit], m);
+            let fired = rule.record(u, rho_effective(ctx, &[arr.choice], m));
             version += 1;
             aggregations += 1;
-            if a * a > cfg.k_eps * s_rho {
+            if fired {
                 converged = true;
                 break;
             }
@@ -389,8 +397,8 @@ fn run_async(
         wall,
         rounds,
         aggregations,
-        effective_rounds: a,
-        mean_rho: if a > 0.0 { s_rho / a } else { 0.0 },
+        effective_rounds: rule.progress(),
+        mean_rho: rule.mean_rho(),
         mean_bits: bits_sum / rounds.max(1) as f64,
         dropped_updates: dropped,
         late_updates: 0,

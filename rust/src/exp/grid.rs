@@ -21,7 +21,7 @@ use crate::des::{simulate_des, DesConfig, DesResult, Discipline, FaultModel};
 use crate::exp::runner::{run_analytic_once, run_cell, CellResult, Tier};
 use crate::metrics::{mean, TableWriter};
 use crate::netsim::{Scenario, ScenarioKind};
-use crate::policy::{parse_policy, PolicyCtx};
+use crate::policy::{PolicyCtx, PolicyEnv, PolicySpec};
 use crate::util::rng::Rng;
 use anyhow::{anyhow, Context, Result};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -189,9 +189,9 @@ fn run_sweep_task(ctx: &PolicyCtx, spec: &SweepSpec, i: usize) -> Result<SweepCe
     let kind = spec.scenarios[si];
     let discipline = spec.disciplines[di];
     let seed = spec.seeds[ki];
-    let mut policy = parse_policy(&spec.policies[pi])?;
-    let mut process = Scenario::new(kind, spec.m)
-        .process(Rng::new(seed).derive("net", 0))
+    let env = PolicyEnv::for_cell(ctx, kind, spec.m, seed);
+    let mut policy = PolicySpec::parse(&spec.policies[pi])?.build(&env)?;
+    let mut process = Scenario::paired_process(kind, spec.m, seed)
         .context("instantiating congestion process")?;
     // Fault stream is a pure function of the cell coordinates, so the
     // sweep is reproducible under any thread count or steal order.

@@ -11,6 +11,8 @@ use anyhow::{anyhow, Result};
 /// * table2 — heterogeneous independent BTD
 /// * table3 — perfectly correlated BTD, sigma_inf^2 in {1.56, 4, 16}
 /// * table4 — partially correlated BTD, sigma_inf^2 = 4
+/// * theorem1 — perfectly correlated BTD with the Theorem-1 roster
+///   (paper roster + the eq.-(4) `oracle:8` reference)
 pub fn table_cells(table: &str, base: &ExperimentConfig) -> Result<Vec<(String, ExperimentConfig)>> {
     let mut cells = Vec::new();
     let mut with = |label: String, kind: ScenarioKind| {
@@ -19,6 +21,12 @@ pub fn table_cells(table: &str, base: &ExperimentConfig) -> Result<Vec<(String, 
         cells.push((label, c));
     };
     match table {
+        "theorem1" => {
+            let mut c = base.clone();
+            c.scenario = ScenarioKind::PerfectlyCorrelated { sigma_inf_sq: 4.0 };
+            c.policies = crate::policy::theorem1_roster();
+            cells.push(("Theorem 1, sigma_inf^2 = 4 (oracle roster)".into(), c));
+        }
         "table1" => {
             for s2 in [1.0, 2.0, 3.0] {
                 with(
@@ -44,7 +52,7 @@ pub fn table_cells(table: &str, base: &ExperimentConfig) -> Result<Vec<(String, 
                 ScenarioKind::PartiallyCorrelated { sigma_inf_sq: 4.0 },
             );
         }
-        _ => return Err(anyhow!("unknown table `{table}` (table1..table4)")),
+        _ => return Err(anyhow!("unknown table `{table}` (table1..table4 | theorem1)")),
     }
     Ok(cells)
 }
@@ -76,6 +84,17 @@ mod tests {
         assert_eq!(table_cells("table3", &base).unwrap().len(), 3);
         assert_eq!(table_cells("table4", &base).unwrap().len(), 1);
         assert!(table_cells("table9", &base).is_err());
+    }
+
+    #[test]
+    fn theorem1_preset_carries_the_oracle_roster() {
+        let base = ExperimentConfig::paper();
+        let cells = table_cells("theorem1", &base).unwrap();
+        assert_eq!(cells.len(), 1);
+        let cfg = &cells[0].1;
+        assert_eq!(cfg.policies.len(), 6);
+        assert!(cfg.policies.iter().any(|p| p.starts_with("oracle")));
+        cfg.validate().unwrap();
     }
 
     #[test]

@@ -16,10 +16,10 @@ use crate::config::ExperimentConfig;
 use crate::coordinator::{Coordinator, FailureConfig};
 use crate::data::{mnist, partition, synth, Dataset};
 use crate::metrics::{gain_vs, RunTrace, Summary, TableWriter};
-use crate::policy::{parse_policy, PolicyCtx};
+use crate::policy::{PolicyCtx, PolicyEnv, PolicySpec};
 use crate::sim::simulate;
-use crate::util::rng::Rng;
-use anyhow::{Context, Result};
+use crate::util::spec::Spec;
+use anyhow::Result;
 use std::sync::Arc;
 
 /// Round budget for analytic-tier runs (sequential and parallel grid).
@@ -35,16 +35,14 @@ pub(crate) fn run_analytic_once(
     seed: u64,
     k_eps: f64,
 ) -> Result<(f64, usize)> {
-    let mut policy = parse_policy(spec)?;
-    let scenario = crate::netsim::Scenario::new(cfg.scenario, cfg.m);
-    let mut process = scenario
-        .process(Rng::new(seed).derive("net", 0))
-        .context("instantiating congestion process")?;
+    let env = PolicyEnv::for_cell(ctx, cfg.scenario, cfg.m, seed);
+    let mut policy = PolicySpec::parse(spec)?.build(&env)?;
+    let mut process = cfg.congestion_process(seed)?;
     let r = simulate(ctx, policy.as_mut(), &mut process, k_eps, ANALYTIC_ROUND_CAP);
     Ok((r.wall, r.rounds))
 }
 
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Tier {
     /// Analytic stopping rule with eps-scale K (uncompressed rounds).
     Analytic { k_eps: f64 },
@@ -54,17 +52,36 @@ pub enum Tier {
 
 impl Tier {
     pub fn parse(s: &str) -> Result<Self> {
-        match s {
-            "ml" => Ok(Tier::Ml),
-            "sim" => Ok(Tier::Analytic { k_eps: 100.0 }),
-            _ => {
-                if let Some(k) = s.strip_prefix("sim:") {
-                    Ok(Tier::Analytic { k_eps: k.parse()? })
-                } else {
-                    anyhow::bail!("unknown tier `{s}` (ml | sim[:k_eps])")
-                }
+        let sp = Spec::parse(s)?;
+        match sp.name.as_str() {
+            "ml" => {
+                sp.max_args(0)?;
+                Ok(Tier::Ml)
             }
+            "sim" => {
+                sp.max_args(1)?;
+                let k_eps: f64 = sp.arg_or(0, 100.0)?;
+                if !k_eps.is_finite() || k_eps <= 0.0 {
+                    anyhow::bail!("sim k_eps must be positive, got {k_eps}");
+                }
+                Ok(Tier::Analytic { k_eps })
+            }
+            _ => anyhow::bail!("unknown tier `{s}` (ml | sim[:k_eps])"),
         }
+    }
+
+    /// Canonical spec label (round-trips through [`Tier::parse`]).
+    pub fn label(&self) -> String {
+        match self {
+            Tier::Ml => "ml".into(),
+            Tier::Analytic { k_eps } => format!("sim:{k_eps}"),
+        }
+    }
+}
+
+impl std::fmt::Display for Tier {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.label())
     }
 }
 
@@ -131,11 +148,9 @@ pub fn run_cell(
                     rounds.push(r);
                 }
                 Tier::Ml => {
-                    let mut policy = parse_policy(spec)?;
-                    let scenario = crate::netsim::Scenario::new(cfg.scenario, cfg.m);
-                    let mut process = scenario
-                        .process(Rng::new(seed).derive("net", 0))
-                        .context("instantiating congestion process")?;
+                    let env = PolicyEnv::for_cell(&ctx, cfg.scenario, cfg.m, seed);
+                    let mut policy = PolicySpec::parse(spec)?.build(&env)?;
+                    let mut process = cfg.congestion_process(seed)?;
                     let (train, test, part) = data.as_ref().unwrap();
                     let mut co = Coordinator::new(
                         cfg,
@@ -222,6 +237,15 @@ mod tests {
             _ => panic!(),
         }
         assert!(Tier::parse("gpu").is_err());
+        assert!(Tier::parse("ml:1").is_err());
+        assert!(Tier::parse("sim:nan").is_err());
+        assert!(Tier::parse("sim:-5").is_err());
+        assert!(Tier::parse("sim:inf").is_err());
+        // Canonical labels round-trip.
+        for t in [Tier::Ml, Tier::Analytic { k_eps: 100.0 }, Tier::Analytic { k_eps: 2.5 }] {
+            assert_eq!(Tier::parse(&t.label()).unwrap(), t);
+        }
+        assert_eq!(Tier::parse("sim").unwrap().label(), "sim:100");
     }
 
     #[test]

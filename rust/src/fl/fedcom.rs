@@ -137,8 +137,8 @@ pub fn run_fedcom(
         };
 
         // (2) compression choice.
-        let bits = policy.choose(&ctx, &c_seen);
-        debug_assert_eq!(bits.len(), m);
+        let choices = policy.choose(&ctx, &c_seen);
+        debug_assert_eq!(choices.len(), m);
 
         // (3) local stages + quantization (sequential reference path).
         let eta = cfg.eta(n) as f32;
@@ -148,9 +148,9 @@ pub fn run_fedcom(
                 sample_batches(train, part.client(j), d.tau, d.batch, &mut batch_rngs[j]);
             let upd = engine.local_round(&w, &xs, &ys, eta)?;
             quant_rngs[j].fill_uniform_f32(&mut uniforms);
-            let (dq, _norm) = engine.quantize(&upd, levels(bits[j]), &uniforms)?;
+            let (dq, _norm) = engine.quantize(&upd, levels(choices[j].level), &uniforms)?;
             if let Some(ev) = emp_var.as_mut() {
-                ev.observe(bits[j], &upd, &dq);
+                ev.observe(choices[j].level, &upd, &dq);
             }
             // Multiply by the reciprocal — a per-element divide cost ~2x
             // on this reduce (§Perf L3-1).  The coordinator leader uses
@@ -165,7 +165,7 @@ pub fn run_fedcom(
         w = engine.global_step(&w, &agg, (cfg.eta(n) * cfg.gamma) as f32)?;
 
         // (5) simulated wall clock uses the TRUE network state.
-        wall += ctx.duration(&bits, &c_true);
+        wall += ctx.duration(&choices, &c_true);
 
         if n % cfg.eval_every == 0 || n == cfg.max_rounds {
             let (train_loss, _) = evaluate(engine, &w, train, &train_idx)?;
@@ -175,7 +175,7 @@ pub fn run_fedcom(
                 wall,
                 train_loss,
                 test_acc,
-                mean_bits: bits.iter().map(|&b| b as f64).sum::<f64>() / m as f64,
+                mean_bits: choices.iter().map(|x| x.level as f64).sum::<f64>() / m as f64,
             });
             if test_acc >= cfg.target_acc {
                 break;

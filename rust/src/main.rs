@@ -1,17 +1,26 @@
 //! `nacfl` — NAC-FL leader CLI.
 //!
 //! Subcommands:
-//!   exp <table1..table4|fig3|all>   regenerate a paper table / figure
+//!   exp <table1..table4|theorem1|fig3|all>   regenerate a paper table / figure
 //!   train                           one full FedCOM-V training run
 //!   sim                             one analytic-tier cell (fast)
 //!   des                             DES sweep: disciplines x roster x seeds
 //!   oracle                          Theorem-1 ablation: NAC-FL vs eq.(4)
 //!   check                           load + execute all AOT artifacts
 //!
+//! Every flag that names an object takes a unified `name[:arg]` spec
+//! with round-trip Display: policies `nacfl:2 | fixed:3 | error:5.25 |
+//! oracle:8`, compressors `quant:inf | topk:0.05 | errbound:1.5625`,
+//! scenarios `homog:2 | heterog | perf:4 | part:4`, tiers `ml |
+//! sim:100`, disciplines `sync | semi-sync:7 | async:0.5`.
+//!
 //! Examples:
 //!   nacfl check
 //!   nacfl sim --scenario perf:4 --seeds 20
+//!   nacfl sim --compressor topk:0.05 --seeds 10
 //!   nacfl des --scenario heterog --discipline semi-sync:7 --stragglers 8,9 --straggle-mult 8
+//!   nacfl des --compressor errbound:1.5625 --seeds 10
+//!   nacfl exp theorem1 --tier sim --seeds 10 --out results
 //!   nacfl train --policy nacfl --scenario homog:2 --engine xla
 //!   nacfl exp table3 --tier sim --seeds 20 --out results
 
@@ -23,7 +32,7 @@ use nacfl::exp::{
     fig3_cells, run_cell, run_cell_parallel, run_sweep, sweep_table, table_cells, table_for,
     SweepSpec, Tier,
 };
-use nacfl::netsim::{MarkovChain, Scenario, ScenarioKind};
+use nacfl::netsim::ScenarioKind;
 use nacfl::policy::{NacFl, OraclePolicy};
 use nacfl::util::cli::{bool_flag, flag, Args};
 use nacfl::util::rng::Rng;
@@ -34,8 +43,13 @@ fn flags() -> Vec<nacfl::util::cli::FlagSpec> {
         flag("tier", "ml | sim[:k_eps]", Some("sim")),
         flag("seeds", "number of seeds", None),
         flag("scenario", "homog[:s2] | heterog | perf[:si2] | part[:si2]", None),
-        flag("policy", "policy spec for `train`", Some("nacfl")),
+        flag(
+            "policy",
+            "policy spec for `train` (nacfl[:a] | fixed:<l> | error[:q] | oracle[:k])",
+            Some("nacfl"),
+        ),
         flag("policies", "comma-separated roster override", None),
+        flag("compressor", "quant:inf | topk:<frac> | errbound:<q1>", None),
         flag("engine", "xla | rust", None),
         flag("artifacts", "artifact directory", Some("artifacts")),
         flag("data-dir", "MNIST IDX directory (else synthetic corpus)", None),
@@ -69,6 +83,9 @@ fn build_config(args: &Args) -> Result<ExperimentConfig> {
     }
     if let Some(p) = args.get("policies") {
         cfg.policies = p.split(',').map(str::to_string).collect();
+    }
+    if let Some(c) = args.get("compressor") {
+        cfg.compressor = c.to_string();
     }
     if let Some(e) = args.get("engine") {
         cfg.engine = e.to_string();
@@ -305,23 +322,13 @@ fn cmd_des(args: &Args) -> Result<()> {
 fn cmd_oracle(args: &Args) -> Result<()> {
     // Theorem-1 ablation on a finite Markov chain: run NAC-FL with
     // beta_n = 1/n and compare its (r_hat, d_hat) to the eq.-(4) optimum.
+    // The discretization is the same one `oracle:<states>` specs use.
+    use nacfl::netsim::NetworkProcess;
+    use nacfl::policy::CompressionPolicy;
     let cfg = build_config(args)?;
     let ctx = cfg.policy_ctx();
-    let m = cfg.m;
     let seed: u64 = args.get_u64("seed")?;
-    // Discretize the configured scenario into 8 states by sampling.
-    let sc = Scenario::new(cfg.scenario, m);
-    let mut proc = sc.process(Rng::new(seed))?;
-    let states: Vec<Vec<f64>> = (0..8)
-        .map(|_| {
-            use nacfl::netsim::NetworkProcess;
-            for _ in 0..20 {
-                proc.next_state();
-            }
-            proc.next_state()
-        })
-        .collect();
-    let mut chain = MarkovChain::uniform_mixing(states, 0.5, Rng::new(seed ^ 1))?;
+    let chain = OraclePolicy::discretized_chain(cfg.scenario, cfg.m, 8, seed)?;
     let oracle = OraclePolicy::solve(&ctx, &chain);
     println!(
         "oracle optimum: E[rho] = {:.4}, E[d] = {:.4e}, objective = {:.4e}",
@@ -329,12 +336,8 @@ fn cmd_oracle(args: &Args) -> Result<()> {
         oracle.expected_d,
         oracle.objective()
     );
-    let mut nac = NacFl::new(1.0);
-    use nacfl::netsim::NetworkProcess;
-    use nacfl::policy::CompressionPolicy;
     for n in [100usize, 1000, 10_000] {
-        let mut p = NacFl::new(1.0);
-        std::mem::swap(&mut p, &mut nac); // fresh policy per horizon
+        let mut nac = NacFl::new(1.0);
         let mut chain2 = chain.clone();
         for _ in 0..n {
             let c = chain2.next_state();
@@ -346,7 +349,6 @@ fn cmd_oracle(args: &Args) -> Result<()> {
             r_hat * d_hat,
             oracle.objective()
         );
-        let _ = &mut chain;
     }
     Ok(())
 }
@@ -388,7 +390,7 @@ fn main() {
         }
     };
     let subcommands = [
-        ("exp", "regenerate a paper table/figure (table1..table4, fig3, all)"),
+        ("exp", "regenerate a paper table/figure (table1..table4, theorem1, fig3, all)"),
         ("train", "one full FedCOM-V training run"),
         ("sim", "one analytic-tier cell"),
         ("des", "DES sweep: aggregation disciplines x roster x seeds"),

@@ -1,12 +1,13 @@
-//! Round-duration function `d(tau, b, c)` (paper §II + §IV-A3).
+//! Round-duration model `d(tau, b, c)` (paper §II + §IV-A3).
 //!
 //! The paper's simulations use the max-across-clients form
 //! `d = max_j [theta*tau + c_j * s(b_j)]` with theta = 0; the model setup
 //! also allows a shared-resource TDMA form (sum of delays).  Both are
-//! implemented — the delay model is an injection point for the policies'
-//! argmin solvers (`policy::solver`).
-
-use crate::quant::SizeModel;
+//! implemented.  The per-client transfer size `s(·)` comes from the
+//! experiment's registered compressor, so this module only prices a
+//! *wire size in bits* — the fold over clients lives in
+//! [`crate::policy::PolicyCtx::duration`], which is the delay model's
+//! injection point into the policy argmin solvers.
 
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum DelayModel {
@@ -30,62 +31,79 @@ impl DelayModel {
         }
     }
 
-    /// Per-client upload delay: theta*tau + c_j * s(b_j).
+    /// Canonical spec label (round-trips through [`DelayModel::parse`]).
+    pub fn label(&self) -> String {
+        match self {
+            DelayModel::Max { .. } => "max".into(),
+            DelayModel::TdmaSum { .. } => "tdma".into(),
+        }
+    }
+
+    /// Per-client upload delay for a `wire_bits`-bit payload:
+    /// `theta*tau + c_j * wire_bits`.
     #[inline]
-    pub fn client_delay(&self, tau: usize, b: u8, c_j: f64, size: &SizeModel) -> f64 {
+    pub fn client_delay_bits(&self, tau: usize, wire_bits: f64, c_j: f64) -> f64 {
         let theta = match self {
             DelayModel::Max { theta } | DelayModel::TdmaSum { theta } => *theta,
         };
-        theta * tau as f64 + c_j * size.bits(b)
+        theta * tau as f64 + c_j * wire_bits
     }
+}
 
-    /// Round duration d(tau, b, c).
-    pub fn duration(&self, tau: usize, bits: &[u8], c: &[f64], size: &SizeModel) -> f64 {
-        assert_eq!(bits.len(), c.len());
-        match self {
-            DelayModel::Max { .. } => bits
-                .iter()
-                .zip(c.iter())
-                .map(|(&b, &cj)| self.client_delay(tau, b, cj, size))
-                .fold(0.0, f64::max),
-            DelayModel::TdmaSum { .. } => bits
-                .iter()
-                .zip(c.iter())
-                .map(|(&b, &cj)| self.client_delay(tau, b, cj, size))
-                .sum(),
-        }
+impl std::fmt::Display for DelayModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.label())
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::policy::{CompressionChoice, PolicyCtx};
+    use crate::quant::{InfNormQuantizer, VarianceModel};
     use crate::util::check::{check, Config};
-    use crate::util::rng::Rng;
+    use std::sync::Arc;
 
-    fn size() -> SizeModel {
-        SizeModel::new(1000)
+    fn ctx(delay: DelayModel) -> PolicyCtx {
+        PolicyCtx::new(
+            2,
+            delay,
+            Arc::new(InfNormQuantizer::new(1000, VarianceModel::default())),
+        )
+    }
+
+    fn ch(levels: &[u8]) -> Vec<CompressionChoice> {
+        levels.iter().map(|&l| CompressionChoice::new(l)).collect()
     }
 
     #[test]
     fn max_model_picks_slowest() {
-        let d = DelayModel::Max { theta: 0.0 };
-        let dur = d.duration(2, &[1, 1, 1], &[1.0, 5.0, 2.0], &size());
-        assert_eq!(dur, 5.0 * size().bits(1));
+        let ctx = ctx(DelayModel::Max { theta: 0.0 });
+        let dur = ctx.duration(&ch(&[1, 1, 1]), &[1.0, 5.0, 2.0]);
+        assert_eq!(dur, 5.0 * ctx.wire_bits(1));
     }
 
     #[test]
     fn tdma_model_sums() {
-        let d = DelayModel::TdmaSum { theta: 0.0 };
-        let dur = d.duration(2, &[1, 2], &[1.0, 1.0], &size());
-        assert_eq!(dur, size().bits(1) + size().bits(2));
+        let ctx = ctx(DelayModel::TdmaSum { theta: 0.0 });
+        let dur = ctx.duration(&ch(&[1, 2]), &[1.0, 1.0]);
+        assert_eq!(dur, ctx.wire_bits(1) + ctx.wire_bits(2));
     }
 
     #[test]
     fn theta_adds_compute_time() {
         let d = DelayModel::Max { theta: 3.0 };
-        let dur = d.duration(2, &[1], &[0.0], &size());
-        assert_eq!(dur, 6.0);
+        assert_eq!(d.client_delay_bits(2, 0.0, 1.0), 6.0);
+    }
+
+    #[test]
+    fn parse_label_round_trips() {
+        for s in ["max", "tdma"] {
+            let d = DelayModel::parse(s).unwrap();
+            assert_eq!(d.label(), s);
+            assert_eq!(DelayModel::parse(&d.to_string()).unwrap(), d);
+        }
+        assert!(DelayModel::parse("fifo").is_err());
     }
 
     #[test]
@@ -97,26 +115,25 @@ mod tests {
             Config::named("delay_monotone").cases(128),
             |rng| {
                 let m = 1 + rng.below(10);
-                let bits: Vec<u8> = (0..m).map(|_| 1 + rng.below(30) as u8).collect();
+                let levels: Vec<u8> = (0..m).map(|_| 1 + rng.below(30) as u8).collect();
                 let c: Vec<f64> = (0..m).map(|_| rng.uniform() * 10.0 + 1e-3).collect();
                 let j = rng.below(m);
                 let tdma = rng.uniform() < 0.5;
-                (bits, c, j, tdma)
+                (levels, c, j, tdma)
             },
-            |(bits, c, j, tdma)| {
-                let d = if *tdma {
+            |(levels, c, j, tdma)| {
+                let ctx = ctx(if *tdma {
                     DelayModel::TdmaSum { theta: 0.0 }
                 } else {
                     DelayModel::Max { theta: 0.0 }
-                };
-                let s = size();
-                let base = d.duration(2, bits, c, &s);
-                let mut more_bits = bits.clone();
-                more_bits[*j] = (more_bits[*j] + 1).min(32);
+                });
+                let choices = ch(levels);
+                let base = ctx.duration(&choices, c);
+                let mut more_bits = choices.clone();
+                more_bits[*j].level = (more_bits[*j].level + 1).min(32);
                 let mut more_cong = c.clone();
                 more_cong[*j] *= 2.0;
-                d.duration(2, &more_bits, c, &s) >= base
-                    && d.duration(2, bits, &more_cong, &s) >= base
+                ctx.duration(&more_bits, c) >= base && ctx.duration(&choices, &more_cong) >= base
             },
         );
     }

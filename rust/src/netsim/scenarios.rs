@@ -54,6 +54,12 @@ impl ScenarioKind {
     }
 }
 
+impl std::fmt::Display for ScenarioKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.label())
+    }
+}
+
 /// A fully instantiated scenario for m clients.
 #[derive(Clone, Debug)]
 pub struct Scenario {
@@ -112,6 +118,17 @@ impl Scenario {
             rng,
         )?))
     }
+
+    /// The canonical *paired* sample path for an experiment-cell seed:
+    /// every tier and executor (sequential runner, parallel grid, DES
+    /// sweep, ML coordinator) derives the congestion stream as
+    /// `Rng::new(seed).derive("net", 0)`, so identical seeds see
+    /// identical congestion paths across policies and tiers — the
+    /// sample-path pairing the paper's gain metric requires.  This is
+    /// the one place that derivation lives.
+    pub fn paired_process(kind: ScenarioKind, m: usize, seed: u64) -> Result<BtdProcess> {
+        Scenario::new(kind, m).process(Rng::new(seed).derive("net", 0))
+    }
 }
 
 #[cfg(test)]
@@ -126,8 +143,20 @@ mod tests {
         for s in ["homog:2", "heterog", "perf:4", "part:16"] {
             let k = ScenarioKind::parse(s).unwrap();
             assert_eq!(k.label(), s);
+            assert_eq!(ScenarioKind::parse(&k.to_string()).unwrap(), k);
         }
         assert!(ScenarioKind::parse("nope").is_err());
+    }
+
+    #[test]
+    fn paired_process_is_deterministic_in_the_seed() {
+        let kind = ScenarioKind::PartiallyCorrelated { sigma_inf_sq: 4.0 };
+        let mut a = Scenario::paired_process(kind, M, 7).unwrap();
+        let mut b = Scenario::paired_process(kind, M, 7).unwrap();
+        let mut c = Scenario::paired_process(kind, M, 8).unwrap();
+        let (sa, sb, sc) = (a.next_state(), b.next_state(), c.next_state());
+        assert_eq!(sa, sb, "same seed -> same path");
+        assert_ne!(sa, sc, "different seed -> different path");
     }
 
     #[test]

@@ -1,8 +1,8 @@
-//! Fixed-Bit baseline (§IV-A4a): every client always quantizes with the
-//! same bit-width b, regardless of network state.
+//! Fixed-level baseline (§IV-A4a): every client always compresses at the
+//! same level, regardless of network state.  (For the paper's quantizer
+//! the level is a bit-width, hence the historical name.)
 
-use super::{CompressionPolicy, PolicyCtx};
-use crate::quant::{B_MAX, B_MIN};
+use super::{CompressionChoice, CompressionPolicy, PolicyCtx};
 use anyhow::{anyhow, Result};
 
 #[derive(Clone, Copy, Debug)]
@@ -12,8 +12,8 @@ pub struct FixedBit {
 
 impl FixedBit {
     pub fn new(bits: u8) -> Result<Self> {
-        if !(B_MIN..=B_MAX).contains(&bits) {
-            return Err(anyhow!("fixed-bit policy: b={bits} outside [1, 32]"));
+        if !(1..=32).contains(&bits) {
+            return Err(anyhow!("fixed-level policy: level {bits} outside [1, 32]"));
         }
         Ok(FixedBit { bits })
     }
@@ -24,26 +24,45 @@ impl CompressionPolicy for FixedBit {
         format!("fixed({} bit)", self.bits)
     }
 
-    fn choose(&mut self, _ctx: &PolicyCtx, c: &[f64]) -> Vec<u8> {
-        vec![self.bits; c.len()]
+    fn choose(&mut self, ctx: &PolicyCtx, c: &[f64]) -> Vec<CompressionChoice> {
+        // Clamp into the registered compressor's level range (identity
+        // for the paper quantizer, whose range is the full [1, 32]).
+        let (lo, hi) = ctx.level_range();
+        vec![CompressionChoice::new(self.bits.clamp(lo, hi)); c.len()]
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::policy::uniform_choices;
 
     #[test]
     fn constant_regardless_of_state() {
         let ctx = PolicyCtx::paper_default(1000);
         let mut p = FixedBit::new(2).unwrap();
-        assert_eq!(p.choose(&ctx, &[1.0, 9.0]), vec![2, 2]);
-        assert_eq!(p.choose(&ctx, &[100.0, 0.1]), vec![2, 2]);
+        assert_eq!(p.choose(&ctx, &[1.0, 9.0]), uniform_choices(2, 2));
+        assert_eq!(p.choose(&ctx, &[100.0, 0.1]), uniform_choices(2, 2));
     }
 
     #[test]
     fn rejects_out_of_range() {
         assert!(FixedBit::new(0).is_err());
         assert!(FixedBit::new(33).is_err());
+    }
+
+    #[test]
+    fn clamps_to_the_compressor_level_range() {
+        use crate::quant::TopKSparsifier;
+        use crate::netsim::DelayModel;
+        use std::sync::Arc;
+        // topk:0.25 has levels 1..=4; fixed:32 degrades to level 4.
+        let ctx = PolicyCtx::new(
+            2,
+            DelayModel::paper_default(),
+            Arc::new(TopKSparsifier::new(1000, 0.25).unwrap()),
+        );
+        let mut p = FixedBit::new(32).unwrap();
+        assert_eq!(p.choose(&ctx, &[1.0; 3]), uniform_choices(4, 3));
     }
 }

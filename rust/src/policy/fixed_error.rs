@@ -1,10 +1,10 @@
 //! Fixed-Error baseline (§IV-A4b, after [13]): each round, choose the
-//! bit vector minimizing the round duration subject to the average
+//! choice vector minimizing the round duration subject to the average
 //! normalized variance staying under a fixed budget q (paper: q = 5.25).
 //! Exploits congestion diversity *across clients* but not across time.
 
 use super::solver::min_duration_with_error_budget;
-use super::{CompressionPolicy, PolicyCtx};
+use super::{CompressionChoice, CompressionPolicy, PolicyCtx};
 
 #[derive(Clone, Copy, Debug)]
 pub struct FixedError {
@@ -23,7 +23,7 @@ impl CompressionPolicy for FixedError {
         format!("fixed-error(q={})", self.q_budget)
     }
 
-    fn choose(&mut self, ctx: &PolicyCtx, c: &[f64]) -> Vec<u8> {
+    fn choose(&mut self, ctx: &PolicyCtx, c: &[f64]) -> Vec<CompressionChoice> {
         min_duration_with_error_budget(ctx, c, self.q_budget)
     }
 }
@@ -38,10 +38,10 @@ mod tests {
         let ctx = PolicyCtx::paper_default(198_760);
         let mut p = FixedError::new(5.25);
         let c = vec![0.1, 0.1, 10.0, 10.0];
-        let bits = p.choose(&ctx, &c);
-        assert!(ctx.rounds.var.q_bar(&bits) <= 5.25 + 1e-12);
+        let ch = p.choose(&ctx, &c);
+        assert!(ctx.q_bar(&ch) <= 5.25 + 1e-12);
         // Slow clients get at most the fast clients' precision.
-        assert!(bits[2] <= bits[0] && bits[3] <= bits[1], "{bits:?}");
+        assert!(ch[2] <= ch[0] && ch[3] <= ch[1], "{ch:?}");
     }
 
     #[test]
@@ -56,8 +56,8 @@ mod tests {
             |c| {
                 let ctx = PolicyCtx::paper_default(198_760);
                 let mut p = FixedError::new(5.25);
-                let bits = p.choose(&ctx, c);
-                ctx.rounds.var.q_bar(&bits) <= 5.25 + 1e-9
+                let ch = p.choose(&ctx, c);
+                ctx.q_bar(&ch) <= 5.25 + 1e-9
             },
         );
     }

@@ -5,12 +5,19 @@
 //!   proxy and the mean round duration.
 //! * [`fixed_bit`] / [`fixed_error`] — the baselines of §IV-A4.
 //! * [`oracle`] — solves the known-distribution program (4) for a finite
-//!   Markov state space (Theorem-1 convergence reference).
-//! * [`solver`] — the per-round argmin over client bit vectors shared by
-//!   NAC-FL and the oracle (exact candidate-duration sweep for the max
+//!   Markov state space (Theorem-1 convergence reference); constructible
+//!   from a spec (`oracle:<states>`) by discretizing the cell's
+//!   congestion scenario.
+//! * [`solver`] — the per-round argmin over client compression levels
+//!   shared by NAC-FL and the oracle, priced entirely through the
+//!   [`Compressor`] trait (exact candidate-duration sweep for the max
 //!   delay model; coordinate descent for TDMA).
 //! * [`rounds_model`] — `h_eps`: the rounds-to-converge proxy
-//!   `rho(b) = sqrt(1 + q_bar(b))` from Theorem 2.
+//!   `rho = sqrt(1 + q_bar)` from Theorem 2.
+//!
+//! Policies return typed per-client [`CompressionChoice`]s; the
+//! [`PolicyCtx`] prices any choice vector (duration, variance, rounds
+//! proxy) through whichever [`Compressor`] the experiment registered.
 
 pub mod fixed_bit;
 pub mod fixed_error;
@@ -25,76 +32,235 @@ pub use nacfl::NacFl;
 pub use oracle::OraclePolicy;
 pub use rounds_model::RoundsModel;
 
-use crate::netsim::DelayModel;
-use crate::quant::{SizeModel, VarianceModel};
-use anyhow::{anyhow, Result};
+pub use crate::quant::{mean_level, uniform_choices, CompressionChoice};
 
-/// Everything a policy needs to price a candidate bit vector.
-#[derive(Clone, Debug)]
+use crate::netsim::{DelayModel, ScenarioKind};
+use crate::quant::{Compressor, InfNormQuantizer, VarianceModel};
+use crate::util::spec::Spec;
+use anyhow::{anyhow, Result};
+use std::fmt;
+use std::sync::Arc;
+
+/// Everything a policy needs to price a candidate choice vector: the
+/// local-computation count, the delay model, and the experiment's
+/// registered compressor (wire size + variance proxy per level).
+#[derive(Clone)]
 pub struct PolicyCtx {
     pub tau: usize,
     pub delay: DelayModel,
-    pub size: SizeModel,
-    pub rounds: RoundsModel,
+    pub compressor: Arc<dyn Compressor>,
+}
+
+impl fmt::Debug for PolicyCtx {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("PolicyCtx")
+            .field("tau", &self.tau)
+            .field("delay", &self.delay)
+            .field("compressor", &self.compressor.spec())
+            .finish()
+    }
 }
 
 impl PolicyCtx {
+    pub fn new(tau: usize, delay: DelayModel, compressor: Arc<dyn Compressor>) -> Self {
+        PolicyCtx { tau, delay, compressor }
+    }
+
+    /// Paper defaults: max delay model, ∞-norm quantizer with c_q = 6.25.
     pub fn paper_default(dim: usize) -> Self {
         PolicyCtx {
             tau: 2,
             delay: DelayModel::paper_default(),
-            size: SizeModel::new(dim),
-            rounds: RoundsModel::new(VarianceModel::default()),
+            compressor: Arc::new(InfNormQuantizer::new(dim, VarianceModel::default())),
         }
     }
 
-    /// Round duration for a bit vector under network state c.
-    pub fn duration(&self, bits: &[u8], c: &[f64]) -> f64 {
-        self.delay.duration(self.tau, bits, c, &self.size)
+    /// The compressor's inclusive level range.
+    #[inline]
+    pub fn level_range(&self) -> (u8, u8) {
+        self.compressor.level_range()
+    }
+
+    /// Wire size in bits at a level.
+    #[inline]
+    pub fn wire_bits(&self, level: u8) -> f64 {
+        self.compressor.wire_bits(level)
+    }
+
+    /// Normalized-variance proxy at a level.
+    #[inline]
+    pub fn q_of_level(&self, level: u8) -> f64 {
+        self.compressor.q_of_level(level)
+    }
+
+    /// Across-client average normalized variance (eq. (15)).
+    pub fn q_bar(&self, ch: &[CompressionChoice]) -> f64 {
+        ch.iter().map(|x| self.compressor.q_of_level(x.level)).sum::<f64>() / ch.len() as f64
+    }
+
+    /// Rounds proxy for a choice vector: `sqrt(1 + q_bar)` (Theorem 2).
+    pub fn rho(&self, ch: &[CompressionChoice]) -> f64 {
+        RoundsModel::h_of_q(self.q_bar(ch))
+    }
+
+    /// Round duration d(tau, choices, c) under network state c.
+    pub fn duration(&self, ch: &[CompressionChoice], c: &[f64]) -> f64 {
+        assert_eq!(ch.len(), c.len());
+        match self.delay {
+            DelayModel::Max { .. } => ch
+                .iter()
+                .zip(c.iter())
+                .map(|(x, &cj)| self.client_delay(x.level, cj))
+                .fold(0.0, f64::max),
+            DelayModel::TdmaSum { .. } => ch
+                .iter()
+                .zip(c.iter())
+                .map(|(x, &cj)| self.client_delay(x.level, cj))
+                .sum(),
+        }
     }
 
     /// One client's compute+upload delay under its network-state entry —
     /// the per-event quantity the DES tier schedules (same float path as
     /// [`PolicyCtx::duration`], which folds these per client).
     #[inline]
-    pub fn client_delay(&self, b: u8, c_j: f64) -> f64 {
-        self.delay.client_delay(self.tau, b, c_j, &self.size)
+    pub fn client_delay(&self, level: u8, c_j: f64) -> f64 {
+        self.delay
+            .client_delay_bits(self.tau, self.compressor.wire_bits(level), c_j)
     }
 }
 
 /// A compression-level choice policy: sees the (estimated) network state
-/// each round, returns per-client bit-widths.  Policies are stateful
-/// (NAC-FL updates running averages) and owned by the coordinator leader.
+/// each round, returns per-client compression choices.  Policies are
+/// stateful (NAC-FL updates running averages) and owned by the
+/// coordinator leader.
 pub trait CompressionPolicy: Send {
     fn name(&self) -> String;
-    /// Choose bit-widths for round `n` (1-based) given network state `c`.
-    fn choose(&mut self, ctx: &PolicyCtx, c: &[f64]) -> Vec<u8>;
+    /// Choose per-client levels for round `n` (1-based) given network
+    /// state `c`.
+    fn choose(&mut self, ctx: &PolicyCtx, c: &[f64]) -> Vec<CompressionChoice>;
 }
 
-/// Parse a policy spec: `nacfl[:alpha]`, `fixed:<b>`, `error[:q]`.
-/// (`oracle` needs a Markov model and is constructed explicitly.)
-pub fn parse_policy(spec: &str) -> Result<Box<dyn CompressionPolicy>> {
-    let (name, arg) = match spec.split_once(':') {
-        Some((n, a)) => (n, Some(a)),
-        None => (spec, None),
-    };
-    match name {
-        "nacfl" => {
-            let alpha = arg.map(|a| a.parse()).transpose()?.unwrap_or(2.0);
-            Ok(Box::new(NacFl::new(alpha)))
+/// A parsed-but-not-yet-instantiated policy: the syntax layer of the
+/// unified spec grammar.  `Display` emits the canonical spec, which
+/// round-trips through [`PolicySpec::parse`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PolicySpec {
+    /// `nacfl[:alpha]` — Algorithm 1 (default alpha 2, §IV-A5).
+    NacFl { alpha: f64 },
+    /// `fixed:<level>` — every client at one compression level.
+    Fixed { level: u8 },
+    /// `error[:q]` — min duration subject to `q_bar <= q` (default 5.25).
+    FixedError { q: f64 },
+    /// `oracle[:states]` — eq. (4) solved on a `states`-state Markov
+    /// discretization of the cell's scenario (default 8 states).
+    Oracle { states: usize },
+}
+
+/// Usage string for error messages and CLI help.
+pub const POLICY_USAGE: &str = "nacfl[:alpha] | fixed:<level> | error[:q] | oracle[:states]";
+
+impl PolicySpec {
+    pub fn parse(spec: &str) -> Result<Self> {
+        let sp = Spec::parse(spec)?;
+        sp.max_args(1)?;
+        match sp.name.as_str() {
+            "nacfl" => {
+                let alpha: f64 = sp.arg_or(0, 2.0)?;
+                if !alpha.is_finite() || alpha <= 0.0 {
+                    return Err(anyhow!("nacfl alpha must be positive, got {alpha}"));
+                }
+                Ok(PolicySpec::NacFl { alpha })
+            }
+            "fixed" => {
+                let level: u8 = sp.req(0, "a compression level (fixed:<level>)")?;
+                if !(1..=32).contains(&level) {
+                    return Err(anyhow!("fixed level {level} outside [1, 32]"));
+                }
+                Ok(PolicySpec::Fixed { level })
+            }
+            "error" => {
+                let q: f64 = sp.arg_or(0, 5.25)?;
+                if !q.is_finite() || q <= 0.0 {
+                    return Err(anyhow!("error budget must be positive, got {q}"));
+                }
+                Ok(PolicySpec::FixedError { q })
+            }
+            "oracle" => {
+                let states: usize = sp.arg_or(0, 8)?;
+                if states < 2 {
+                    return Err(anyhow!("oracle needs >= 2 Markov states, got {states}"));
+                }
+                Ok(PolicySpec::Oracle { states })
+            }
+            other => Err(anyhow!("unknown policy `{other}` ({POLICY_USAGE})")),
         }
-        "fixed" => {
-            let b: u8 = arg
-                .ok_or_else(|| anyhow!("fixed:<bits> requires a bit-width"))?
-                .parse()?;
-            Ok(Box::new(FixedBit::new(b)?))
-        }
-        "error" => {
-            let q = arg.map(|a| a.parse()).transpose()?.unwrap_or(5.25);
-            Ok(Box::new(FixedError::new(q)))
-        }
-        _ => Err(anyhow!("unknown policy `{spec}` (nacfl[:a] | fixed:<b> | error[:q])")),
     }
+
+    /// Instantiate.  The oracle needs the cell environment (policy
+    /// context + scenario + seed) to discretize its Markov model; every
+    /// other policy ignores `env`.
+    pub fn build(&self, env: &PolicyEnv<'_>) -> Result<Box<dyn CompressionPolicy>> {
+        match *self {
+            PolicySpec::NacFl { alpha } => Ok(Box::new(NacFl::new(alpha))),
+            PolicySpec::Fixed { level } => Ok(Box::new(FixedBit::new(level)?)),
+            PolicySpec::FixedError { q } => Ok(Box::new(FixedError::new(q))),
+            PolicySpec::Oracle { states } => {
+                let ctx = env.ctx.ok_or_else(|| {
+                    anyhow!("oracle:<states> needs a PolicyCtx in its PolicyEnv")
+                })?;
+                let (kind, m) = env.scenario.ok_or_else(|| {
+                    anyhow!(
+                        "oracle:<states> needs a congestion scenario; run it through the \
+                         experiment runner (which passes the cell's scenario + seed)"
+                    )
+                })?;
+                Ok(Box::new(OraclePolicy::from_scenario(ctx, kind, m, states, env.seed)?))
+            }
+        }
+    }
+}
+
+impl fmt::Display for PolicySpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PolicySpec::NacFl { alpha } => write!(f, "nacfl:{alpha}"),
+            PolicySpec::Fixed { level } => write!(f, "fixed:{level}"),
+            PolicySpec::FixedError { q } => write!(f, "error:{q}"),
+            PolicySpec::Oracle { states } => write!(f, "oracle:{states}"),
+        }
+    }
+}
+
+/// Instantiation environment for [`PolicySpec::build`]: the cell's
+/// policy context, congestion scenario `(kind, m)`, and seed.  Scenario
+/// and seed pin the oracle's Markov discretization to the cell, so the
+/// parallel grid stays deterministic under any thread count.
+#[derive(Clone, Copy, Debug)]
+pub struct PolicyEnv<'a> {
+    pub ctx: Option<&'a PolicyCtx>,
+    pub scenario: Option<(ScenarioKind, usize)>,
+    pub seed: u64,
+}
+
+impl<'a> PolicyEnv<'a> {
+    /// Full cell environment (what the experiment runner passes).
+    pub fn for_cell(ctx: &'a PolicyCtx, kind: ScenarioKind, m: usize, seed: u64) -> Self {
+        PolicyEnv { ctx: Some(ctx), scenario: Some((kind, m)), seed }
+    }
+
+    /// No environment: only scenario-free policies can be built.
+    pub fn unscoped() -> PolicyEnv<'static> {
+        PolicyEnv { ctx: None, scenario: None, seed: 0 }
+    }
+}
+
+/// Parse + instantiate a scenario-free policy spec (`nacfl[:a]`,
+/// `fixed:<level>`, `error[:q]`).  The oracle, which must discretize a
+/// congestion scenario, errors here — build it via [`PolicySpec::build`]
+/// with a cell environment (the experiment runner does).
+pub fn parse_policy(spec: &str) -> Result<Box<dyn CompressionPolicy>> {
+    PolicySpec::parse(spec)?.build(&PolicyEnv::unscoped())
 }
 
 /// The paper's §IV policy roster for a table row.
@@ -108,6 +274,14 @@ pub fn paper_roster() -> Vec<String> {
     ]
 }
 
+/// The Theorem-1 roster: the paper roster plus the eq.-(4) oracle on an
+/// 8-state discretization of the cell's scenario.
+pub fn theorem1_roster() -> Vec<String> {
+    let mut r = paper_roster();
+    r.push("oracle:8".into());
+    r
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -119,11 +293,52 @@ mod tests {
         }
         assert!(parse_policy("fixed").is_err());
         assert!(parse_policy("fixed:0").is_err());
+        assert!(parse_policy("fixed:33").is_err());
         assert!(parse_policy("bogus").is_err());
+        assert!(parse_policy("error:-1").is_err());
+        assert!(parse_policy("nacfl:-1").is_err());
+        assert!(parse_policy("nacfl:0").is_err());
+        assert!(parse_policy("nacfl:inf").is_err());
+    }
+
+    #[test]
+    fn oracle_is_spec_parseable_but_needs_an_environment() {
+        let p = PolicySpec::parse("oracle:6").unwrap();
+        assert_eq!(p, PolicySpec::Oracle { states: 6 });
+        assert_eq!(PolicySpec::parse("oracle").unwrap(), PolicySpec::Oracle { states: 8 });
+        assert!(PolicySpec::parse("oracle:1").is_err());
+        // Unscoped instantiation fails with a pointer to the runner.
+        let err = parse_policy("oracle:6").unwrap_err().to_string();
+        assert!(err.contains("PolicyCtx") || err.contains("scenario"), "{err}");
+    }
+
+    #[test]
+    fn specs_round_trip_through_display() {
+        for s in ["nacfl:2", "nacfl:1.5", "fixed:3", "error:5.25", "oracle:8"] {
+            let p = PolicySpec::parse(s).unwrap();
+            assert_eq!(p.to_string(), s);
+            assert_eq!(PolicySpec::parse(&p.to_string()).unwrap(), p);
+        }
+        // Defaults canonicalize.
+        assert_eq!(PolicySpec::parse("nacfl").unwrap().to_string(), "nacfl:2");
+        assert_eq!(PolicySpec::parse("error").unwrap().to_string(), "error:5.25");
     }
 
     #[test]
     fn roster_matches_paper() {
         assert_eq!(paper_roster().len(), 5);
+        assert_eq!(theorem1_roster().len(), 6);
+        assert!(theorem1_roster().last().unwrap().starts_with("oracle"));
+    }
+
+    #[test]
+    fn ctx_prices_choices_through_the_compressor() {
+        let ctx = PolicyCtx::paper_default(1000);
+        let ch = uniform_choices(1, 3);
+        let c = vec![1.0, 2.0, 0.5];
+        // Max model: slowest client dominates; wire = 1000*2 + 32.
+        assert_eq!(ctx.duration(&ch, &c), 2.0 * 2032.0);
+        assert!((ctx.q_bar(&ch) - 6.25).abs() < 1e-12);
+        assert!((ctx.rho(&ch) - (7.25f64).sqrt()).abs() < 1e-12);
     }
 }

@@ -21,7 +21,7 @@
 //! (the Theorem-1 regime and the §III-C remark ablation).
 
 use super::solver::argmin_cost;
-use super::{CompressionPolicy, PolicyCtx};
+use super::{uniform_choices, CompressionChoice, CompressionPolicy, PolicyCtx};
 
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum StepSize {
@@ -79,28 +79,29 @@ impl CompressionPolicy for NacFl {
         }
     }
 
-    fn choose(&mut self, ctx: &PolicyCtx, c: &[f64]) -> Vec<u8> {
+    fn choose(&mut self, ctx: &PolicyCtx, c: &[f64]) -> Vec<CompressionChoice> {
         self.n += 1;
         // Round 1 (cold start, r_hat = d_hat = 0): the objective is flat,
         // so seed with a balanced weighting — equivalent to initializing
         // the estimates with the first observation, as Algorithm 1's
         // free initialization allows.
         let (a_coef, b_coef) = if self.r_hat == 0.0 && self.d_hat == 0.0 {
-            // Normalize by the 1-bit duration so both terms are O(1).
-            let d1 = ctx.duration(&vec![1; c.len()], c);
+            // Normalize by the minimum-level duration so both terms are O(1).
+            let (lo, _) = ctx.level_range();
+            let d1 = ctx.duration(&uniform_choices(lo, c.len()), c);
             (self.alpha / d1.max(1e-300), 1.0)
         } else {
             (self.alpha * self.r_hat, self.d_hat)
         };
-        let bits = argmin_cost(ctx, c, a_coef, b_coef);
+        let ch = argmin_cost(ctx, c, a_coef, b_coef);
 
         // Algorithm 1 lines 4-5: update the running averages.
         let beta = self.beta(self.n);
-        let rho = ctx.rounds.rho(&bits);
-        let dur = ctx.duration(&bits, c);
+        let rho = ctx.rho(&ch);
+        let dur = ctx.duration(&ch, c);
         self.r_hat = (1.0 - beta) * self.r_hat + beta * rho;
         self.d_hat = (1.0 - beta) * self.d_hat + beta * dur;
-        bits
+        ch
     }
 }
 
@@ -121,9 +122,9 @@ mod tests {
         let mut rhos = Vec::new();
         let mut durs = Vec::new();
         for c in &states {
-            let bits = p.choose(&ctx, c);
-            rhos.push(ctx.rounds.rho(&bits));
-            durs.push(ctx.duration(&bits, c));
+            let ch = p.choose(&ctx, c);
+            rhos.push(ctx.rho(&ch));
+            durs.push(ctx.duration(&ch, c));
         }
         let (r_hat, d_hat) = p.estimates();
         let r_expect: f64 = rhos.iter().sum::<f64>() / rhos.len() as f64;
@@ -144,13 +145,16 @@ mod tests {
             p.choose(&ctx, &[1.0; 10]);
         }
         let mut p2 = p.clone();
-        let bits_low = p.choose(&ctx, &[0.2; 10]);
-        let bits_high = p2.choose(&ctx, &[5.0; 10]);
+        let ch_low = p.choose(&ctx, &[0.2; 10]);
+        let ch_high = p2.choose(&ctx, &[5.0; 10]);
         assert!(
-            bits_high.iter().zip(bits_low.iter()).all(|(h, l)| h <= l),
-            "high congestion {bits_high:?} vs low {bits_low:?}"
+            ch_high.iter().zip(ch_low.iter()).all(|(h, l)| h <= l),
+            "high congestion {ch_high:?} vs low {ch_low:?}"
         );
-        assert!(bits_high.iter().sum::<u8>() < bits_low.iter().sum::<u8>());
+        assert!(
+            ch_high.iter().map(|x| x.level as u32).sum::<u32>()
+                < ch_low.iter().map(|x| x.level as u32).sum::<u32>()
+        );
     }
 
     #[test]

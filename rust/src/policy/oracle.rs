@@ -14,21 +14,31 @@
 //!
 //! is solved exactly for the max delay model by the same
 //! candidate-duration sweep as eq. (6) (for a candidate duration the
-//! maximal bit vector minimizes both factors).  The objective decreases
-//! monotonically, so iteration converges to a fixed point — by
+//! maximal choice vector minimizes both factors).  The objective
+//! decreases monotonically, so iteration converges to a fixed point — by
 //! Proposition B.2 the unique optimum under Assumption 5.  Used as the
 //! Theorem-1 reference: NAC-FL's `(r_hat, d_hat)` must approach this
 //! policy's `(E[rho], E[d])`.
+//!
+//! Spec-grammar construction (`oracle:<states>`): the cell's congestion
+//! scenario is discretized into a sampled finite state space with a
+//! uniform-mixing chain ([`OraclePolicy::from_scenario`]); on states
+//! outside the plan (the continuous AR(1) scenarios never revisit a
+//! state exactly) the policy plays the nearest planned state in L1.
 
-use super::{CompressionPolicy, PolicyCtx};
-use crate::netsim::MarkovChain;
-use crate::quant::{B_MAX, B_MIN};
+use super::solver::{duration_candidates, maximal_choices_under};
+use super::{CompressionChoice, CompressionPolicy, PolicyCtx};
+use crate::netsim::{MarkovChain, NetworkProcess, Scenario, ScenarioKind};
+use crate::util::rng::Rng;
+use anyhow::Result;
 use std::collections::HashMap;
 
 #[derive(Clone, Debug)]
 pub struct OraclePolicy {
-    /// bit vector per Markov state index.
-    pub plan: Vec<Vec<u8>>,
+    /// Choice vector per Markov state index.
+    pub plan: Vec<Vec<CompressionChoice>>,
+    /// The planned states' BTD vectors (nearest-state fallback).
+    states: Vec<Vec<f64>>,
     /// Lookup from a state's BTD vector (bit pattern) to its plan entry.
     by_state: HashMap<Vec<u64>, usize>,
     /// The optimal objective value (E[rho] * E[d]) and its factors.
@@ -46,13 +56,17 @@ impl OraclePolicy {
         let mu = chain.invariant();
         let states = &chain.states;
         let k = states.len();
-        let mut plan: Vec<Vec<u8>> = states.iter().map(|s| vec![B_MIN; s.len()]).collect();
+        let (lo, _) = ctx.level_range();
+        let mut plan: Vec<Vec<CompressionChoice>> = states
+            .iter()
+            .map(|s| vec![CompressionChoice::new(lo); s.len()])
+            .collect();
 
-        let eval = |plan: &[Vec<u8>]| -> (f64, f64) {
+        let eval = |plan: &[Vec<CompressionChoice>]| -> (f64, f64) {
             let mut er = 0.0;
             let mut ed = 0.0;
             for s in 0..k {
-                er += mu[s] * ctx.rounds.rho(&plan[s]);
+                er += mu[s] * ctx.rho(&plan[s]);
                 ed += mu[s] * ctx.duration(&plan[s], &states[s]);
             }
             (er, ed)
@@ -62,17 +76,17 @@ impl OraclePolicy {
         for _pass in 0..200 {
             let mut improved = false;
             for s in 0..k {
-                let rho_s = ctx.rounds.rho(&plan[s]);
+                let rho_s = ctx.rho(&plan[s]);
                 let d_s = ctx.duration(&plan[s], &states[s]);
                 let r_rest = er - mu[s] * rho_s;
                 let d_rest = ed - mu[s] * d_s;
-                if let Some((bits, rho_new, d_new)) =
+                if let Some((ch, rho_new, d_new)) =
                     best_response(ctx, &states[s], mu[s], r_rest, d_rest)
                 {
                     let cur = (r_rest + mu[s] * rho_s) * (d_rest + mu[s] * d_s);
                     let new = (r_rest + mu[s] * rho_new) * (d_rest + mu[s] * d_new);
                     if new < cur - 1e-15 {
-                        plan[s] = bits;
+                        plan[s] = ch;
                         er = r_rest + mu[s] * rho_new;
                         ed = d_rest + mu[s] * d_new;
                         improved = true;
@@ -89,7 +103,51 @@ impl OraclePolicy {
             .enumerate()
             .map(|(i, s)| (key_of(s), i))
             .collect();
-        OraclePolicy { plan, by_state, expected_rho: er, expected_d: ed }
+        OraclePolicy {
+            plan,
+            states: states.clone(),
+            by_state,
+            expected_rho: er,
+            expected_d: ed,
+        }
+    }
+
+    /// Discretize a congestion scenario into `k` sampled states joined by
+    /// a uniform-mixing chain (irreducible + aperiodic, Assumption 4).
+    /// Deterministic in `(kind, m, k, seed)`, so grid cells reproduce
+    /// under any thread count.
+    pub fn discretized_chain(
+        kind: ScenarioKind,
+        m: usize,
+        k: usize,
+        seed: u64,
+    ) -> Result<MarkovChain> {
+        let root = Rng::new(seed).derive("oracle", k as u64);
+        let mut proc = Scenario::new(kind, m).process(root.derive("disc", 0))?;
+        let states: Vec<Vec<f64>> = (0..k)
+            .map(|_| {
+                // Burn between samples so states spread over the
+                // process's stationary distribution.
+                for _ in 0..20 {
+                    proc.next_state();
+                }
+                proc.next_state()
+            })
+            .collect();
+        MarkovChain::uniform_mixing(states, 0.5, root.derive("mix", 0))
+    }
+
+    /// `oracle:<states>` instantiation: discretize + solve (the
+    /// spec-parser path used by the experiment runner and grid).
+    pub fn from_scenario(
+        ctx: &PolicyCtx,
+        kind: ScenarioKind,
+        m: usize,
+        k: usize,
+        seed: u64,
+    ) -> Result<Self> {
+        let chain = Self::discretized_chain(kind, m, k, seed)?;
+        Ok(Self::solve(ctx, &chain))
     }
 
     /// The optimal objective t_hat = E[rho] * E[d] (eq. (3) scale).
@@ -98,7 +156,7 @@ impl OraclePolicy {
     }
 }
 
-/// Exact per-state best response for the max delay model via the
+/// Exact per-state best response for the max delay model via the shared
 /// candidate-duration sweep; coordinate descent would be used for TDMA
 /// but the oracle is only exercised with the paper's max model.
 fn best_response(
@@ -107,45 +165,18 @@ fn best_response(
     mu_s: f64,
     r_rest: f64,
     d_rest: f64,
-) -> Option<(Vec<u8>, f64, f64)> {
-    let m = c.len();
-    let floor = c
-        .iter()
-        .map(|&cj| cj * ctx.size.bits(B_MIN))
-        .fold(0.0, f64::max);
-    let mut cands: Vec<f64> = Vec::with_capacity(m * 32);
-    for &cj in c {
-        for b in B_MIN..=B_MAX {
-            let d = cj * ctx.size.bits(b);
-            if d >= floor - 1e-12 {
-                cands.push(d);
-            }
-        }
-    }
-    cands.push(floor);
-    cands.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    cands.dedup_by(|a, b| (*a - *b).abs() < 1e-12);
-
-    let mut best: Option<(f64, Vec<u8>, f64, f64)> = None;
+) -> Option<(Vec<CompressionChoice>, f64, f64)> {
+    let cands = duration_candidates(ctx, c);
+    let mut best: Option<(f64, Vec<CompressionChoice>, f64, f64)> = None;
     for &d_max in &cands {
-        let mut bits = Vec::with_capacity(m);
-        let mut feasible = true;
-        for &cj in c {
-            let raw = (d_max * (1.0 + 1e-12) / cj - 32.0) / ctx.size.dim as f64 - 1.0;
-            if raw < B_MIN as f64 {
-                feasible = false;
-                break;
-            }
-            bits.push(raw.min(B_MAX as f64) as u8);
-        }
-        if !feasible {
+        let Some(ch) = maximal_choices_under(ctx, c, d_max * (1.0 + 1e-12)) else {
             continue;
-        }
-        let rho = ctx.rounds.rho(&bits);
-        let d = ctx.duration(&bits, c);
+        };
+        let rho = ctx.rho(&ch);
+        let d = ctx.duration(&ch, c);
         let obj = (r_rest + mu_s * rho) * (d_rest + mu_s * d);
         if best.as_ref().map(|(o, ..)| obj < *o).unwrap_or(true) {
-            best = Some((obj, bits, rho, d));
+            best = Some((obj, ch, rho, d));
         }
     }
     best.map(|(_, b, r, d)| (b, r, d))
@@ -153,24 +184,18 @@ fn best_response(
 
 impl CompressionPolicy for OraclePolicy {
     fn name(&self) -> String {
-        "oracle(eq.4)".into()
+        format!("oracle(eq.4,{} states)", self.plan.len())
     }
 
-    fn choose(&mut self, _ctx: &PolicyCtx, c: &[f64]) -> Vec<u8> {
+    fn choose(&mut self, _ctx: &PolicyCtx, c: &[f64]) -> Vec<CompressionChoice> {
         match self.by_state.get(&key_of(c)) {
             Some(&i) => self.plan[i].clone(),
-            // Unknown state (shouldn't happen when driven by the same
-            // chain): nearest state by L1 distance.
+            // Unknown state (continuous scenarios): nearest planned
+            // state by L1 distance.
             None => {
                 let mut best = 0;
                 let mut bd = f64::INFINITY;
-                for (i, _) in self.plan.iter().enumerate() {
-                    let s = self
-                        .by_state
-                        .iter()
-                        .find(|(_, &v)| v == i)
-                        .map(|(k, _)| k.iter().map(|&b| f64::from_bits(b)).collect::<Vec<_>>())
-                        .unwrap();
+                for (i, s) in self.states.iter().enumerate() {
                     let d: f64 = s.iter().zip(c.iter()).map(|(a, b)| (a - b).abs()).sum();
                     if d < bd {
                         bd = d;
@@ -186,7 +211,6 @@ impl CompressionPolicy for OraclePolicy {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::rng::Rng;
 
     fn chain() -> MarkovChain {
         // Two states: calm (all clients fast) and congested (all slow).
@@ -208,7 +232,8 @@ mod tests {
             congested.iter().zip(calm.iter()).all(|(h, l)| h <= l),
             "congested {congested:?} should compress >= calm {calm:?}"
         );
-        assert!(congested.iter().sum::<u8>() < calm.iter().sum::<u8>());
+        let sum = |ch: &[CompressionChoice]| ch.iter().map(|x| x.level as u32).sum::<u32>();
+        assert!(sum(congested) < sum(calm));
     }
 
     #[test]
@@ -218,15 +243,12 @@ mod tests {
         let mu = mc.invariant();
         let oracle = OraclePolicy::solve(&ctx, &mc);
         for b in 1..=8u8 {
-            let bits = vec![b; 3];
-            let er: f64 = mu
-                .iter()
-                .map(|&m| m * ctx.rounds.rho(&bits))
-                .sum();
+            let ch = crate::policy::uniform_choices(b, 3);
+            let er: f64 = mu.iter().map(|&m| m * ctx.rho(&ch)).sum();
             let ed: f64 = mu
                 .iter()
                 .zip(mc.states.iter())
-                .map(|(&m, s)| m * ctx.duration(&bits, s))
+                .map(|(&m, s)| m * ctx.duration(&ch, s))
                 .sum();
             assert!(
                 oracle.objective() <= er * ed * (1.0 + 1e-9),
@@ -243,5 +265,19 @@ mod tests {
         let mut oracle = OraclePolicy::solve(&ctx, &chain());
         let plan0 = oracle.plan[0].clone();
         assert_eq!(oracle.choose(&ctx, &[0.2, 0.2, 0.2]), plan0);
+    }
+
+    #[test]
+    fn from_scenario_is_deterministic_and_state_covering() {
+        let ctx = PolicyCtx::paper_default(198_760);
+        let kind = ScenarioKind::PerfectlyCorrelated { sigma_inf_sq: 4.0 };
+        let a = OraclePolicy::from_scenario(&ctx, kind, 10, 6, 3).unwrap();
+        let b = OraclePolicy::from_scenario(&ctx, kind, 10, 6, 3).unwrap();
+        assert_eq!(a.plan, b.plan, "same (scenario, k, seed) -> same plan");
+        assert_eq!(a.plan.len(), 6);
+        // Nearest-state fallback answers off-plan states.
+        let mut a = a;
+        let ch = a.choose(&ctx, &[1.0; 10]);
+        assert_eq!(ch.len(), 10);
     }
 }

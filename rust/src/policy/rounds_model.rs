@@ -5,47 +5,35 @@
 //! norm in Assumption 1 evaluates to
 //!
 //! ```text
-//! ||h_eps(q)|| ∝ rho(b) = sqrt(1 + (1/m) sum_j q(b_j)).
+//! ||h_eps(q)|| ∝ rho = sqrt(1 + q_bar).
 //! ```
 //!
 //! The eps-dependent constant cancels inside NAC-FL's argmin (both the
 //! `r_hat * d` and `d_hat * ||h||` terms carry one factor of it), so all
 //! policies work with the unscaled proxy `rho`.
+//!
+//! Where `q_bar` comes from is the registered compressor's business:
+//! [`crate::policy::PolicyCtx::rho`] averages
+//! `Compressor::q_of_level` across clients and applies [`RoundsModel::h_of_q`].
+//! This module keeps only the scalar map `h`.
 
-use crate::quant::VarianceModel;
-
-#[derive(Clone, Copy, Debug)]
-pub struct RoundsModel {
-    pub var: VarianceModel,
-}
+/// The scalar Assumption-1 map `h(q) = sqrt(q + 1)`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RoundsModel;
 
 impl RoundsModel {
-    pub fn new(var: VarianceModel) -> Self {
-        RoundsModel { var }
-    }
-
     /// Scalar h(q) = sqrt(q + 1) (strictly increasing, continuous,
     /// bounded on q in [0, q_max] — Assumption 1).
     #[inline]
     pub fn h_of_q(q: f64) -> f64 {
         (q + 1.0).sqrt()
     }
-
-    /// Rounds proxy for a client bit vector: sqrt(1 + q_bar(b)).
-    pub fn rho(&self, bits: &[u8]) -> f64 {
-        Self::h_of_q(self.var.q_bar(bits))
-    }
-
-    /// Rounds proxy from a precomputed q_bar (solver hot path).
-    #[inline]
-    pub fn rho_from_qbar(&self, q_bar: f64) -> f64 {
-        Self::h_of_q(q_bar)
-    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::policy::{uniform_choices, PolicyCtx};
     use crate::util::check::{check, Config};
 
     #[test]
@@ -61,31 +49,33 @@ mod tests {
 
     #[test]
     fn rho_decreases_with_more_bits() {
-        let rm = RoundsModel::new(VarianceModel::default());
-        assert!(rm.rho(&[1; 10]) > rm.rho(&[2; 10]));
-        assert!(rm.rho(&[2; 10]) > rm.rho(&[8; 10]));
+        let ctx = PolicyCtx::paper_default(198_760);
+        assert!(ctx.rho(&uniform_choices(1, 10)) > ctx.rho(&uniform_choices(2, 10)));
+        assert!(ctx.rho(&uniform_choices(2, 10)) > ctx.rho(&uniform_choices(8, 10)));
         // No compression noise -> proxy tends to 1.
-        assert!((rm.rho(&[32; 10]) - 1.0).abs() < 1e-9);
+        assert!((ctx.rho(&uniform_choices(32, 10)) - 1.0).abs() < 1e-9);
     }
 
     #[test]
     fn prop_rho_monotone_elementwise() {
-        let rm = RoundsModel::new(VarianceModel::default());
+        let ctx = PolicyCtx::paper_default(198_760);
         check(
             Config::named("rho_monotone").cases(128),
             |rng| {
                 let m = 1 + rng.below(10);
-                let bits: Vec<u8> = (0..m).map(|_| 1 + rng.below(31) as u8).collect();
+                let levels: Vec<u8> = (0..m).map(|_| 1 + rng.below(31) as u8).collect();
                 let j = rng.below(m);
-                (bits, j)
+                (levels, j)
             },
-            |(bits, j)| {
-                if bits[*j] >= 32 {
+            |(levels, j)| {
+                if levels[*j] >= 32 {
                     return true;
                 }
-                let mut hi = bits.clone();
-                hi[*j] += 1;
-                rm.rho(&hi) <= rm.rho(bits)
+                let ch: Vec<_> =
+                    levels.iter().map(|&l| crate::policy::CompressionChoice::new(l)).collect();
+                let mut hi = ch.clone();
+                hi[*j].level += 1;
+                ctx.rho(&hi) <= ctx.rho(&ch)
             },
         );
     }

@@ -1,4 +1,4 @@
-//! Argmin solvers over client bit vectors.
+//! Argmin solvers over client compression-choice vectors.
 //!
 //! NAC-FL's per-round program (paper eq. (6)) is
 //!
@@ -7,12 +7,18 @@
 //! ```
 //!
 //! with `A = alpha * r_hat`, `B = d_hat`, `rho(b) = sqrt(1 + q_bar(b))`.
+//! Candidates are priced entirely through the registered
+//! [`Compressor`](crate::quant::Compressor): wire size drives the
+//! duration term, `q_of_level` drives the rounds proxy — so the same
+//! solvers serve the ∞-norm quantizer, top-k sparsification and
+//! error-bounded compression unmodified.
 //!
 //! * **Max delay model** — solved *exactly* by sweeping candidate
-//!   durations: for any bit vector with duration D, replacing it by the
-//!   per-client maximal bits under D (`b_j(D) = max{b : c_j s(b) <= D}`)
-//!   weakly lowers both terms, and the optimal D is one of the m*32
-//!   values `{c_j s(b)}`.  O(m * 32 * log) per round.
+//!   durations: for any choice vector with duration D, replacing it by
+//!   the per-client maximal levels under D (`l_j(D) = max{l : c_j s(l)
+//!   <= D}`, via `Compressor::max_level_within`) weakly lowers both
+//!   terms, and the optimal D is one of the `m * |levels|` values
+//!   `{c_j s(l)}`.  O(m * |levels| * log) per round.
 //! * **TDMA-sum model** — the norm couples clients; solved by cyclic
 //!   coordinate descent (each sweep is exact per coordinate), verified
 //!   against exhaustive search on small instances by property tests.
@@ -21,11 +27,10 @@
 //! subject to q_bar <= budget) since feasibility under the max model is
 //! monotone in the candidate duration.
 
-use super::PolicyCtx;
-use crate::quant::{B_MAX, B_MIN};
+use super::{CompressionChoice, PolicyCtx};
 
-/// Exact argmin of `a_coef * d(b, c) + b_coef * rho(b)`.
-pub fn argmin_cost(ctx: &PolicyCtx, c: &[f64], a_coef: f64, b_coef: f64) -> Vec<u8> {
+/// Exact argmin of `a_coef * d(ch, c) + b_coef * rho(ch)`.
+pub fn argmin_cost(ctx: &PolicyCtx, c: &[f64], a_coef: f64, b_coef: f64) -> Vec<CompressionChoice> {
     match ctx.delay {
         crate::netsim::DelayModel::Max { .. } => argmin_cost_max(ctx, c, a_coef, b_coef),
         crate::netsim::DelayModel::TdmaSum { .. } => {
@@ -34,39 +39,30 @@ pub fn argmin_cost(ctx: &PolicyCtx, c: &[f64], a_coef: f64, b_coef: f64) -> Vec<
     }
 }
 
-/// Cost of a specific bit vector (shared by tests and the oracle).
-pub fn cost_of(ctx: &PolicyCtx, c: &[f64], bits: &[u8], a_coef: f64, b_coef: f64) -> f64 {
-    a_coef * ctx.duration(bits, c) + b_coef * ctx.rounds.rho(bits)
+/// Cost of a specific choice vector (shared by tests and the oracle).
+pub fn cost_of(
+    ctx: &PolicyCtx,
+    c: &[f64],
+    ch: &[CompressionChoice],
+    a_coef: f64,
+    b_coef: f64,
+) -> f64 {
+    a_coef * ctx.duration(ch, c) + b_coef * ctx.rho(ch)
 }
 
-/// For each client, the largest bit-width whose upload fits in `d_max`
-/// (None if even b = 1 does not fit).
-fn maximal_bits_under(ctx: &PolicyCtx, c: &[f64], d_max: f64) -> Option<Vec<u8>> {
-    let mut bits = Vec::with_capacity(c.len());
-    for &cj in c {
-        // c_j * s(b) <= d_max  <=>  b <= (d_max/c_j - 32)/dim - 1
-        let budget = d_max / cj;
-        let raw = (budget - 32.0) / ctx.size.dim as f64 - 1.0;
-        if raw < B_MIN as f64 {
-            return None;
-        }
-        bits.push(raw.min(B_MAX as f64) as u8);
-    }
-    Some(bits)
-}
-
-fn argmin_cost_max(ctx: &PolicyCtx, c: &[f64], a_coef: f64, b_coef: f64) -> Vec<u8> {
-    let m = c.len();
-    // Candidate max-terms: c_j * s(b) for all clients and bit-widths, but
-    // only those >= the forced floor max_j c_j*s(1) are feasible.
+/// The candidate durations of the max-model sweep: every `c_j * s(l)` at
+/// or above the forced floor `max_j c_j * s(lo)`, sorted and deduped.
+/// Shared with the oracle's per-state best response.
+pub(crate) fn duration_candidates(ctx: &PolicyCtx, c: &[f64]) -> Vec<f64> {
+    let (lo, hi) = ctx.level_range();
     let floor = c
         .iter()
-        .map(|&cj| cj * ctx.size.bits(B_MIN))
+        .map(|&cj| cj * ctx.wire_bits(lo))
         .fold(0.0, f64::max);
-    let mut cands: Vec<f64> = Vec::with_capacity(m * 32);
+    let mut cands: Vec<f64> = Vec::with_capacity(c.len() * (hi - lo + 1) as usize);
     for &cj in c {
-        for b in B_MIN..=B_MAX {
-            let d = cj * ctx.size.bits(b);
+        for l in lo..=hi {
+            let d = cj * ctx.wire_bits(l);
             if d >= floor - 1e-12 {
                 cands.push(d);
             }
@@ -75,13 +71,40 @@ fn argmin_cost_max(ctx: &PolicyCtx, c: &[f64], a_coef: f64, b_coef: f64) -> Vec<
     cands.push(floor);
     cands.sort_by(|a, b| a.partial_cmp(b).unwrap());
     cands.dedup_by(|a, b| (*a - *b).abs() < 1e-12);
+    cands
+}
 
-    let mut best: Option<(f64, Vec<u8>)> = None;
+/// For each client, the largest level whose upload fits in `d_max`
+/// (None if even the minimum level does not fit).  Callers pass the
+/// candidate pre-inflated by `(1 + 1e-12)` to absorb float ties.
+pub(crate) fn maximal_choices_under(
+    ctx: &PolicyCtx,
+    c: &[f64],
+    d_max: f64,
+) -> Option<Vec<CompressionChoice>> {
+    let mut ch = Vec::with_capacity(c.len());
+    for &cj in c {
+        match ctx.compressor.max_level_within(d_max / cj) {
+            Some(l) => ch.push(CompressionChoice::new(l)),
+            None => return None,
+        }
+    }
+    Some(ch)
+}
+
+fn argmin_cost_max(
+    ctx: &PolicyCtx,
+    c: &[f64],
+    a_coef: f64,
+    b_coef: f64,
+) -> Vec<CompressionChoice> {
+    let cands = duration_candidates(ctx, c);
+    let mut best: Option<(f64, Vec<CompressionChoice>)> = None;
     for &d_max in &cands {
-        if let Some(bits) = maximal_bits_under(ctx, c, d_max * (1.0 + 1e-12)) {
-            let cost = cost_of(ctx, c, &bits, a_coef, b_coef);
+        if let Some(ch) = maximal_choices_under(ctx, c, d_max * (1.0 + 1e-12)) {
+            let cost = cost_of(ctx, c, &ch, a_coef, b_coef);
             if best.as_ref().map(|(bc, _)| cost < *bc).unwrap_or(true) {
-                best = Some((cost, bits));
+                best = Some((cost, ch));
             }
         }
     }
@@ -93,31 +116,32 @@ fn argmin_cost_coordinate_descent(
     c: &[f64],
     a_coef: f64,
     b_coef: f64,
-) -> Vec<u8> {
+) -> Vec<CompressionChoice> {
     let m = c.len();
-    let mut bits = vec![B_MIN; m];
-    let mut cost = cost_of(ctx, c, &bits, a_coef, b_coef);
+    let (lo, hi) = ctx.level_range();
+    let mut ch = vec![CompressionChoice::new(lo); m];
+    let mut cost = cost_of(ctx, c, &ch, a_coef, b_coef);
     // Cyclic exact line search per coordinate; objective strictly
     // decreases each accepted move, so this terminates.
     for _sweep in 0..64 {
         let mut improved = false;
         for j in 0..m {
-            let mut best_b = bits[j];
+            let mut best_l = ch[j].level;
             let mut best_cost = cost;
-            let saved = bits[j];
-            for b in B_MIN..=B_MAX {
-                if b == saved {
+            let saved = ch[j].level;
+            for l in lo..=hi {
+                if l == saved {
                     continue;
                 }
-                bits[j] = b;
-                let cnew = cost_of(ctx, c, &bits, a_coef, b_coef);
+                ch[j].level = l;
+                let cnew = cost_of(ctx, c, &ch, a_coef, b_coef);
                 if cnew < best_cost - 1e-15 {
                     best_cost = cnew;
-                    best_b = b;
+                    best_l = l;
                 }
             }
-            bits[j] = best_b;
-            if best_b != saved {
+            ch[j].level = best_l;
+            if best_l != saved {
                 cost = best_cost;
                 improved = true;
             }
@@ -126,7 +150,7 @@ fn argmin_cost_coordinate_descent(
             break;
         }
     }
-    bits
+    ch
 }
 
 /// Exhaustive argmin (test reference; exponential — small instances only).
@@ -135,95 +159,85 @@ pub fn argmin_exhaustive(
     c: &[f64],
     a_coef: f64,
     b_coef: f64,
-    b_max: u8,
-) -> Vec<u8> {
+    l_max: u8,
+) -> Vec<CompressionChoice> {
     let m = c.len();
-    let mut bits = vec![B_MIN; m];
-    let mut best = bits.clone();
-    let mut best_cost = cost_of(ctx, c, &bits, a_coef, b_coef);
+    let (lo, _) = ctx.level_range();
+    let mut ch = vec![CompressionChoice::new(lo); m];
+    let mut best = ch.clone();
+    let mut best_cost = cost_of(ctx, c, &ch, a_coef, b_coef);
     loop {
-        // increment base-(b_max) counter
+        // increment base-(l_max) counter
         let mut i = 0;
         loop {
             if i == m {
                 return best;
             }
-            if bits[i] < b_max {
-                bits[i] += 1;
+            if ch[i].level < l_max {
+                ch[i].level += 1;
                 break;
             }
-            bits[i] = B_MIN;
+            ch[i].level = lo;
             i += 1;
         }
-        let cost = cost_of(ctx, c, &bits, a_coef, b_coef);
+        let cost = cost_of(ctx, c, &ch, a_coef, b_coef);
         if cost < best_cost {
             best_cost = cost;
-            best = bits.clone();
+            best = ch.clone();
         }
     }
 }
 
 /// Fixed-Error program ([13]): minimize round duration subject to
-/// `q_bar(b) <= q_budget`.  Exact for the max model (duration-candidate
+/// `q_bar(ch) <= q_budget`.  Exact for the max model (duration-candidate
 /// sweep + monotone feasibility); greedy relaxation for TDMA.
-pub fn min_duration_with_error_budget(ctx: &PolicyCtx, c: &[f64], q_budget: f64) -> Vec<u8> {
+pub fn min_duration_with_error_budget(
+    ctx: &PolicyCtx,
+    c: &[f64],
+    q_budget: f64,
+) -> Vec<CompressionChoice> {
+    let (lo, hi) = ctx.level_range();
     match ctx.delay {
         crate::netsim::DelayModel::Max { .. } => {
-            let m = c.len();
-            let floor = c
-                .iter()
-                .map(|&cj| cj * ctx.size.bits(B_MIN))
-                .fold(0.0, f64::max);
-            let mut cands: Vec<f64> = Vec::with_capacity(m * 32);
-            for &cj in c {
-                for b in B_MIN..=B_MAX {
-                    let d = cj * ctx.size.bits(b);
-                    if d >= floor - 1e-12 {
-                        cands.push(d);
-                    }
-                }
-            }
-            cands.push(floor);
-            cands.sort_by(|a, b| a.partial_cmp(b).unwrap());
-            cands.dedup_by(|a, b| (*a - *b).abs() < 1e-12);
-            // q_bar of maximal bits under D is non-increasing in D; take
+            let cands = duration_candidates(ctx, c);
+            // q_bar of maximal levels under D is non-increasing in D; take
             // the smallest feasible candidate.
             for &d_max in &cands {
-                if let Some(bits) = maximal_bits_under(ctx, c, d_max * (1.0 + 1e-12)) {
-                    if ctx.rounds.var.q_bar(&bits) <= q_budget {
-                        return bits;
+                if let Some(ch) = maximal_choices_under(ctx, c, d_max * (1.0 + 1e-12)) {
+                    if ctx.q_bar(&ch) <= q_budget {
+                        return ch;
                     }
                 }
             }
-            // Budget unreachable even at b = 32 everywhere: send max bits.
-            vec![B_MAX; m]
+            // Budget unreachable even at the top level everywhere: send
+            // the maximum precision available.
+            vec![CompressionChoice::new(hi); c.len()]
         }
         crate::netsim::DelayModel::TdmaSum { .. } => {
-            // Greedy: start at minimum duration (all 1-bit); while over
-            // budget, raise the bit-width that buys the most variance
-            // reduction per unit duration increase.
+            // Greedy: start at minimum duration (everyone at the lowest
+            // level); while over budget, raise the level that buys the
+            // most variance reduction per unit duration increase.
             let m = c.len();
-            let mut bits = vec![B_MIN; m];
-            let var = &ctx.rounds.var;
-            while var.q_bar(&bits) > q_budget {
+            let mut ch = vec![CompressionChoice::new(lo); m];
+            while ctx.q_bar(&ch) > q_budget {
                 let mut best: Option<(f64, usize)> = None;
                 for j in 0..m {
-                    if bits[j] >= B_MAX {
+                    if ch[j].level >= hi {
                         continue;
                     }
-                    let dv = var.q_of_bits(bits[j]) - var.q_of_bits(bits[j] + 1);
-                    let dd = c[j] * (ctx.size.bits(bits[j] + 1) - ctx.size.bits(bits[j]));
+                    let dv = ctx.q_of_level(ch[j].level) - ctx.q_of_level(ch[j].level + 1);
+                    let dd = c[j] * (ctx.wire_bits(ch[j].level + 1) - ctx.wire_bits(ch[j].level));
                     let score = dv / dd.max(1e-300);
                     if best.map(|(s, _)| score > s).unwrap_or(true) {
                         best = Some((score, j));
                     }
                 }
                 match best {
-                    Some((_, j)) => bits[j] += 1,
-                    None => break, // everyone at B_MAX
+                    Some((_, j)) => ch[j].level += 1,
+                    None => break, // everyone at the top level
                 }
             }
-            bits
+            ch
         }
     }
 }
@@ -232,17 +246,16 @@ pub fn min_duration_with_error_budget(ctx: &PolicyCtx, c: &[f64], q_budget: f64)
 mod tests {
     use super::*;
     use crate::netsim::DelayModel;
-    use crate::quant::{SizeModel, VarianceModel};
-    use crate::policy::RoundsModel;
+    use crate::quant::{InfNormQuantizer, VarianceModel};
     use crate::util::check::{check, Config};
+    use std::sync::Arc;
 
     fn ctx(delay: DelayModel, dim: usize) -> PolicyCtx {
-        PolicyCtx {
-            tau: 2,
+        PolicyCtx::new(
+            2,
             delay,
-            size: SizeModel::new(dim),
-            rounds: RoundsModel::new(VarianceModel::default()),
-        }
+            Arc::new(InfNormQuantizer::new(dim, VarianceModel::default())),
+        )
     }
 
     #[test]
@@ -252,19 +265,19 @@ mod tests {
         // clients keep any bits that are free within that duration.
         let ctx = ctx(DelayModel::paper_default(), 1000);
         let c = vec![1.0, 2.0, 0.5];
-        let bits = argmin_cost(&ctx, &c, 1e9, 1e-9);
-        let floor = 2.0 * ctx.size.bits(1);
-        assert_eq!(bits[1], 1, "slowest client fully compressed: {bits:?}");
+        let ch = argmin_cost(&ctx, &c, 1e9, 1e-9);
+        let floor = 2.0 * ctx.wire_bits(1);
+        assert_eq!(ch[1].level, 1, "slowest client fully compressed: {ch:?}");
         assert!(
-            (ctx.duration(&bits, &c) - floor).abs() < 1e-9,
-            "must hit the floor duration: {bits:?}"
+            (ctx.duration(&ch, &c) - floor).abs() < 1e-9,
+            "must hit the floor duration: {ch:?}"
         );
         // Faster clients use the slack (strictly more bits).
-        assert!(bits[0] > 1 && bits[2] > bits[0], "{bits:?}");
+        assert!(ch[0].level > 1 && ch[2].level > ch[0].level, "{ch:?}");
         // Under TDMA every extra bit costs time, so there it IS all-ones.
         let ctx_tdma = ctx_t(DelayModel::TdmaSum { theta: 0.0 }, 1000);
-        let bits = argmin_cost(&ctx_tdma, &c, 1e9, 1e-9);
-        assert_eq!(bits, vec![1, 1, 1]);
+        let ch = argmin_cost(&ctx_tdma, &c, 1e9, 1e-9);
+        assert_eq!(ch, crate::policy::uniform_choices(1, 3));
     }
 
     fn ctx_t(delay: DelayModel, dim: usize) -> PolicyCtx {
@@ -275,17 +288,20 @@ mod tests {
     fn high_rounds_weight_forces_min_compression() {
         let ctx = ctx(DelayModel::paper_default(), 1000);
         let c = vec![1.0, 2.0, 0.5];
-        let bits = argmin_cost(&ctx, &c, 1e-12, 1e12);
-        assert!(bits.iter().all(|&b| b >= 16), "rounds-dominated -> many bits: {bits:?}");
+        let ch = argmin_cost(&ctx, &c, 1e-12, 1e12);
+        assert!(
+            ch.iter().all(|x| x.level >= 16),
+            "rounds-dominated -> many bits: {ch:?}"
+        );
     }
 
     #[test]
     fn slower_clients_get_fewer_bits() {
         let ctx = ctx(DelayModel::paper_default(), 100_000);
         let c = vec![0.1, 1.0, 10.0];
-        let bits = argmin_cost(&ctx, &c, 1.0, 1e6);
-        assert!(bits[0] >= bits[1] && bits[1] >= bits[2], "bits {bits:?}");
-        assert!(bits[0] > bits[2], "diversity should be exploited: {bits:?}");
+        let ch = argmin_cost(&ctx, &c, 1.0, 1e6);
+        assert!(ch[0] >= ch[1] && ch[1] >= ch[2], "levels {ch:?}");
+        assert!(ch[0] > ch[2], "diversity should be exploited: {ch:?}");
     }
 
     #[test]
@@ -300,14 +316,14 @@ mod tests {
                 (c, a, b)
             },
             |(c, a, b)| {
-                // Restrict exhaustive reference to b <= 6 and use a small
+                // Restrict exhaustive reference to l <= 6 and use a small
                 // dim so the candidate space stays tiny but non-trivial.
                 let ctx = ctx(DelayModel::paper_default(), 64);
                 let fast = argmin_cost(&ctx, c, *a, *b);
                 let brute = argmin_exhaustive(&ctx, c, *a, *b, 6);
                 let cf = cost_of(&ctx, c, &fast, *a, *b);
                 let cb = cost_of(&ctx, c, &brute, *a, *b);
-                // fast may use b > 6; it must be at least as good.
+                // fast may use l > 6; it must be at least as good.
                 cf <= cb * (1.0 + 1e-9)
             },
         );
@@ -340,20 +356,20 @@ mod tests {
         let ctx = ctx(DelayModel::paper_default(), 198_760);
         let c = vec![0.5, 1.0, 2.0, 4.0];
         let q = 5.25;
-        let bits = min_duration_with_error_budget(&ctx, &c, q);
-        assert!(ctx.rounds.var.q_bar(&bits) <= q + 1e-12);
-        // Tightness: lowering any single client's bits (shorter file)
+        let ch = min_duration_with_error_budget(&ctx, &c, q);
+        assert!(ctx.q_bar(&ch) <= q + 1e-12);
+        // Tightness: lowering any single client's level (shorter file)
         // either breaks the budget or cannot reduce the max-duration.
-        let d0 = ctx.duration(&bits, &c);
+        let d0 = ctx.duration(&ch, &c);
         for j in 0..c.len() {
-            if bits[j] > B_MIN {
-                let mut fewer = bits.clone();
-                fewer[j] -= 1;
-                let still_feasible = ctx.rounds.var.q_bar(&fewer) <= q;
+            if ch[j].level > 1 {
+                let mut fewer = ch.clone();
+                fewer[j].level -= 1;
+                let still_feasible = ctx.q_bar(&fewer) <= q;
                 let shorter = ctx.duration(&fewer, &c) < d0 - 1e-9;
                 assert!(
                     !(still_feasible && shorter),
-                    "client {j} could have compressed more: {bits:?}"
+                    "client {j} could have compressed more: {ch:?}"
                 );
             }
         }
@@ -379,10 +395,38 @@ mod tests {
                     },
                     4096,
                 );
-                let bits = min_duration_with_error_budget(&ctx, c, *q);
+                let ch = min_duration_with_error_budget(&ctx, c, *q);
                 // q(32) ~ 0 so the budget is always reachable.
-                ctx.rounds.var.q_bar(&bits) <= *q + 1e-9
+                ctx.q_bar(&ch) <= *q + 1e-9
             },
         );
+    }
+
+    #[test]
+    fn solver_prices_alternative_compressors() {
+        // The same argmin machinery must drive topk and errbound.
+        use crate::quant::{ErrorBoundQuantizer, TopKSparsifier};
+        for comp in [
+            Arc::new(TopKSparsifier::new(4096, 0.1).unwrap()) as Arc<dyn crate::quant::Compressor>,
+            Arc::new(ErrorBoundQuantizer::new(4096, 1.5625).unwrap()),
+        ] {
+            let ctx = PolicyCtx::new(2, DelayModel::paper_default(), comp);
+            let (lo, hi) = ctx.level_range();
+            let c = vec![0.1, 1.0, 10.0];
+            // Duration-dominated: floor duration, slowest client at lo.
+            let ch = argmin_cost(&ctx, &c, 1e9, 1e-9);
+            assert_eq!(ch[2].level, lo, "{}: {ch:?}", ctx.compressor.spec());
+            // Rounds-dominated: everyone at (or near) the top level.
+            let ch = argmin_cost(&ctx, &c, 1e-12, 1e12);
+            assert!(
+                ch.iter().all(|x| x.level == hi),
+                "{}: {ch:?}",
+                ctx.compressor.spec()
+            );
+            // Error budget reachable at the top of the ladder.
+            let q_top = ctx.q_of_level(hi);
+            let ch = min_duration_with_error_budget(&ctx, &c, q_top + 0.5);
+            assert!(ctx.q_bar(&ch) <= q_top + 0.5 + 1e-9, "{ch:?}");
+        }
     }
 }

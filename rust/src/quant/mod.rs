@@ -1,19 +1,45 @@
 //! Lossy compression substrate (paper §IV-A1 + Assumption 8).
 //!
-//! * [`stochastic`] — rust-native stochastic infinity-norm quantizer,
+//! The central abstraction is the pluggable [`Compressor`] trait plus its
+//! spec registry ([`parse_compressor`]): a compression family exposes a
+//! finite *level* range, a data-independent wire-size model, a
+//! normalized-variance proxy `q(level)`, and an unbiased
+//! encode/decode — everything the policy layer needs to price and
+//! optimize per-client [`CompressionChoice`]s.  Registered families:
+//!
+//! * [`compressor::InfNormQuantizer`] (`quant:inf`) — the paper's
+//!   stochastic ∞-norm quantizer; [`SizeModel`]/[`VarianceModel`] are
+//!   its implementation details.
+//! * [`topk::TopKSparsifier`] (`topk:<frac>`) — magnitude-weighted
+//!   unbiased sparsification.
+//! * [`errbound::ErrorBoundQuantizer`] (`errbound:<q1>`) — hard
+//!   per-coordinate error bounds, FedSZ-style.
+//!
+//! Supporting modules:
+//!
+//! * [`stochastic`] — rust-native stochastic ∞-norm quantizer kernel,
 //!   bit-for-bit identical to the L1 Pallas kernel given the same
-//!   uniforms (parity enforced against `artifacts/golden`).
+//!   uniforms (parity enforced against `artifacts/golden`); shared by
+//!   the `quant:inf` and `errbound` families.
 //! * [`size`] — the wire-size model `s(b) = d*(b+1) + 32` bits.
-//! * [`variance`] — the normalized-variance model `q(b)` used by the
-//!   policies' `h_eps` round-count proxy, plus an online empirical
-//!   estimator that can calibrate it from observed quantization error.
+//! * [`variance`] — the normalized-variance model `q(b)` plus an online
+//!   empirical estimator that can calibrate it from observed error.
 
+pub mod compressor;
+pub mod errbound;
 pub mod size;
 pub mod stochastic;
+pub mod topk;
 pub mod variance;
 
+pub use compressor::{
+    mean_level, parse_compressor, registry_specs, uniform_choices, CompressionChoice, Compressor,
+    CompressorEnv, InfNormQuantizer, COMPRESSOR_USAGE,
+};
+pub use errbound::ErrorBoundQuantizer;
 pub use size::SizeModel;
 pub use stochastic::{quantize_into, quantize_with_uniforms, Quantized};
+pub use topk::TopKSparsifier;
 pub use variance::{EmpiricalVariance, VarianceModel};
 
 /// Valid bit-width range for the paper's quantizer (b in {1..32}).

@@ -1,0 +1,262 @@
+//! Magnitude-weighted unbiased sparsification (`topk:<frac>`).
+//!
+//! A top-k-flavoured sparsifier in the spirit of importance-sampling
+//! gradient sparsification (Wangni et al., 2018): coordinate `i` is kept
+//! with probability `p_i = min(1, |x_i| / τ)` and rescaled to
+//! `x_i / p_i`, so the largest-magnitude coordinates are kept surely
+//! (the "top" of top-k) while the tail is kept stochastically with
+//! exactly the compensation that makes the whole map **unbiased**:
+//! `E[Q(x)_i] = p_i · x_i/p_i = x_i`.  The water-filling threshold τ is
+//! chosen per call so the expected kept count `Σ p_i` equals the level's
+//! budget `k` *exactly* (saturated coordinates are peeled off and the
+//! remaining budget redistributed), so the reported wire model is the
+//! true expected payload, not just an upper bound.
+//!
+//! ## Level semantics
+//!
+//! The spec fraction `frac` is the kept fraction at level 1; level ℓ
+//! keeps `f(ℓ) = min(1, frac·ℓ)` of the `d` coordinates, so the level
+//! range runs up to the first ℓ with `f(ℓ) = 1` (capped at 32).  Wire
+//! model: each kept coordinate costs a 32-bit value plus `⌈log₂ d⌉`
+//! index bits, plus a 32-bit count header:
+//!
+//! ```text
+//! s(ℓ) = k(ℓ) · (32 + ⌈log₂ d⌉) + 32,     k(ℓ) = ⌈f(ℓ) · d⌉.
+//! ```
+//!
+//! Variance proxy (exact for flat-magnitude vectors, a calibrated model
+//! otherwise, like the quantizer's `c_q`): `q(ℓ) = 1/f(ℓ) − 1` — zero
+//! once everything is kept, `1/frac − 1` at level 1.
+
+use super::compressor::Compressor;
+use crate::util::rng::Rng;
+use anyhow::{anyhow, Result};
+
+#[derive(Clone, Debug)]
+pub struct TopKSparsifier {
+    dim: usize,
+    /// Kept fraction at level 1 (level ℓ keeps `min(1, frac·ℓ)`).
+    frac: f64,
+    /// Index bits per kept coordinate: ⌈log₂ d⌉ (min 1).
+    idx_bits: f64,
+    hi: u8,
+}
+
+impl TopKSparsifier {
+    pub fn new(dim: usize, frac: f64) -> Result<Self> {
+        if dim == 0 {
+            return Err(anyhow!("topk: zero-dimensional update"));
+        }
+        if !frac.is_finite() || frac <= 0.0 || frac > 1.0 {
+            return Err(anyhow!("topk fraction must be in (0, 1], got {frac}"));
+        }
+        let hi = (1.0 / frac).ceil().min(32.0).max(1.0) as u8;
+        let idx_bits = (dim as f64).log2().ceil().max(1.0);
+        Ok(TopKSparsifier { dim, frac, idx_bits, hi })
+    }
+
+    /// Kept fraction at a level.
+    pub fn kept_fraction(&self, level: u8) -> f64 {
+        (self.frac * level as f64).min(1.0)
+    }
+
+    /// Kept-coordinate budget k(ℓ) = ⌈f·d⌉ (at least 1).
+    pub fn kept(&self, level: u8) -> usize {
+        ((self.kept_fraction(level) * self.dim as f64).ceil() as usize).clamp(1, self.dim)
+    }
+}
+
+impl Compressor for TopKSparsifier {
+    fn spec(&self) -> String {
+        format!("topk:{}", self.frac)
+    }
+
+    fn level_range(&self) -> (u8, u8) {
+        (1, self.hi)
+    }
+
+    fn wire_bits(&self, level: u8) -> f64 {
+        self.kept(level) as f64 * (32.0 + self.idx_bits) + 32.0
+    }
+
+    fn q_of_level(&self, level: u8) -> f64 {
+        1.0 / self.kept_fraction(level) - 1.0
+    }
+
+    fn compress_into(&self, x: &[f32], level: u8, rng: &mut Rng, out: &mut [f32]) -> f64 {
+        assert_eq!(x.len(), out.len());
+        let k = self.kept(level);
+        let tau = water_fill_threshold(x, k);
+        if tau.is_nan() {
+            // Zero vector: nothing to send beyond the count header.
+            out.fill(0.0);
+            return 32.0;
+        }
+        let mut kept = 0usize;
+        for (o, &v) in out.iter_mut().zip(x.iter()) {
+            let mag = (v as f64).abs();
+            if mag >= tau {
+                *o = v;
+                kept += 1;
+            } else {
+                // mag < tau (tau > 0 here), so p in [0, 1).
+                let p = mag / tau;
+                if p > 0.0 && rng.uniform() < p {
+                    *o = ((v as f64) / p) as f32;
+                    kept += 1;
+                } else {
+                    *o = 0.0;
+                }
+            }
+        }
+        kept as f64 * (32.0 + self.idx_bits) + 32.0
+    }
+}
+
+/// Water-filling threshold τ with `Σ_i min(1, |x_i|/τ) = k`: sort
+/// magnitudes descending, peel off coordinates that saturate (`|x| >
+/// τ`) one at a time and redistribute the remaining budget over the
+/// tail.  Returns NaN for the zero vector.  When fewer than k
+/// coordinates are nonzero, every nonzero coordinate saturates and the
+/// returned τ is the smallest nonzero magnitude, so all of them take
+/// the keep-surely branch and the zeros are dropped (harmlessly — a
+/// zero needs no compensation).
+fn water_fill_threshold(x: &[f32], k: usize) -> f64 {
+    let mut mags: Vec<f64> = x.iter().map(|&v| (v as f64).abs()).collect();
+    mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let total: f64 = mags.iter().sum();
+    if total <= 0.0 {
+        return f64::NAN;
+    }
+    let k = k.min(x.len());
+    let mut tail = total;
+    let mut m0 = 0usize; // saturated coordinates (kept surely)
+    while m0 < k {
+        let remaining = tail;
+        if remaining <= 0.0 {
+            // Only zeros left: keep the m0 saturated ones.
+            return mags[m0 - 1].min(mags[0]).max(f64::MIN_POSITIVE);
+        }
+        let tau = remaining / (k - m0) as f64;
+        if mags[m0] <= tau {
+            return tau;
+        }
+        tail -= mags[m0];
+        m0 += 1;
+    }
+    // Budget exhausted by saturated coordinates (k of them): keep
+    // exactly those — threshold just below the k-th magnitude.
+    mags[k - 1].max(f64::MIN_POSITIVE)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gaussian(n: usize, rng: &mut Rng) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn level_range_covers_the_fraction_ladder() {
+        let t = TopKSparsifier::new(1000, 0.25).unwrap();
+        assert_eq!(t.level_range(), (1, 4));
+        assert_eq!(t.kept_fraction(4), 1.0);
+        assert_eq!(t.q_of_level(4), 0.0);
+        assert!(t.q_of_level(1) > t.q_of_level(2));
+        // Tiny fractions cap the ladder at 32 levels.
+        let t = TopKSparsifier::new(1000, 0.001).unwrap();
+        assert_eq!(t.level_range(), (1, 32));
+        assert!(t.kept_fraction(32) < 1.0);
+    }
+
+    #[test]
+    fn wire_bits_monotone_and_matches_kept_budget() {
+        let t = TopKSparsifier::new(4096, 0.1).unwrap();
+        let (lo, hi) = t.level_range();
+        for l in lo..hi {
+            assert!(t.wire_bits(l + 1) >= t.wire_bits(l));
+        }
+        // d = 4096 -> 12 index bits; k(1) = 410.
+        assert_eq!(t.wire_bits(1), 410.0 * 44.0 + 32.0);
+    }
+
+    #[test]
+    fn rejects_degenerate_parameters() {
+        assert!(TopKSparsifier::new(0, 0.5).is_err());
+        assert!(TopKSparsifier::new(10, 0.0).is_err());
+        assert!(TopKSparsifier::new(10, 1.5).is_err());
+        assert!(TopKSparsifier::new(10, f64::NAN).is_err());
+    }
+
+    #[test]
+    fn top_magnitude_coordinates_are_kept_exactly() {
+        // A dominating coordinate has p = 1 and passes through unchanged.
+        let t = TopKSparsifier::new(8, 0.25).unwrap();
+        let mut x = vec![0.01f32; 8];
+        x[3] = 100.0;
+        let mut out = vec![0.0f32; 8];
+        let mut rng = Rng::new(0);
+        t.compress_into(&x, 1, &mut rng, &mut out);
+        assert_eq!(out[3], 100.0);
+    }
+
+    #[test]
+    fn unbiased_in_expectation() {
+        let t = TopKSparsifier::new(64, 0.25).unwrap();
+        let mut rng = Rng::new(7);
+        let x = gaussian(64, &mut rng);
+        let trials = 30_000;
+        let mut acc = vec![0.0f64; 64];
+        let mut out = vec![0.0f32; 64];
+        for _ in 0..trials {
+            t.compress_into(&x, 1, &mut rng, &mut out);
+            for (a, &o) in acc.iter_mut().zip(out.iter()) {
+                *a += o as f64;
+            }
+        }
+        // Per-coordinate variance of x_i/p_i is at most |x_i|^2 (1-p)/p;
+        // use a loose uniform tolerance from the l1 mass.
+        let l1: f64 = x.iter().map(|&v| (v as f64).abs()).sum();
+        let tol = 6.0 * (l1 / 16.0) / (trials as f64).sqrt();
+        for (i, a) in acc.iter().enumerate() {
+            let mean = a / trials as f64;
+            assert!(
+                (mean - x[i] as f64).abs() < tol,
+                "coord {i}: mean {mean} vs {} (tol {tol})",
+                x[i]
+            );
+        }
+    }
+
+    #[test]
+    fn payload_tracks_wire_model_in_expectation() {
+        let t = TopKSparsifier::new(512, 0.25).unwrap();
+        let mut rng = Rng::new(3);
+        let x = gaussian(512, &mut rng);
+        let mut out = vec![0.0f32; 512];
+        let trials = 400;
+        let mut acc = 0.0;
+        for _ in 0..trials {
+            acc += t.compress_into(&x, 2, &mut rng, &mut out);
+        }
+        let mean = acc / trials as f64;
+        let model = t.wire_bits(2);
+        assert!(
+            (mean - model).abs() / model < 0.1,
+            "mean payload {mean} vs model {model}"
+        );
+        // And the realized payload never exceeds the all-kept ceiling.
+        assert!(mean <= t.wire_bits(t.level_range().1) + 1e-9);
+    }
+
+    #[test]
+    fn zero_vector_costs_only_the_header() {
+        let t = TopKSparsifier::new(16, 0.5).unwrap();
+        let x = vec![0.0f32; 16];
+        let mut out = vec![9.0f32; 16];
+        let bits = t.compress_into(&x, 1, &mut Rng::new(0), &mut out);
+        assert_eq!(bits, 32.0);
+        assert!(out.iter().all(|&v| v == 0.0));
+    }
+}

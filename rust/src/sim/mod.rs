@@ -1,4 +1,4 @@
-//! Analytic-tier simulator: policy dynamics without the ML substrate.
+//! Analytic-tier simulator: one generic round loop with observer hooks.
 //!
 //! Assumption 1 says the FL algorithm reaches tolerance eps at the first
 //! round r with `r > (K_eps / r) * sum_{n<=r} rho(q^n)` — i.e. the
@@ -11,13 +11,206 @@
 //! The ML tier (`fl::fedcom` / `coordinator`) validates that the shape
 //! holds end-to-end.
 //!
+//! ## Architecture
+//!
+//! There is exactly **one** round loop, [`Session::run`].  Everything
+//! that used to be a copy-pasted loop variant (probe-estimated
+//! observation, Fig.-1 tracing, fault injection) is a composable
+//! [`RoundHook`]:
+//!
+//! * [`ProbeHook`] — routes the policy's view of the network state
+//!   through the §V in-band [`ProbeEstimator`] while the wall clock is
+//!   charged on the TRUE state (the deployment setting).
+//! * [`TraceHook`] — records a [`RunTrace`] point per round (Fig.-1/3
+//!   style sweeps).
+//! * [`SlowdownHook`] — injects per-client straggler slowdowns from a
+//!   DES [`FaultModel`] into the true state (analytic-tier fault
+//!   injection).
+//!
+//! The convenience wrappers [`simulate`], [`simulate_observed`] and
+//! [`simulate_traced`] are thin compositions over the one loop.  The
+//! Assumption-1 stopping rule itself is factored into [`StoppingRule`],
+//! which the DES tier's generalized weighted-aggregation rule reuses
+//! verbatim (`des::engine`).
+//!
 //! Calibration: with no compression (rho = 1) the rule stops at
 //! `r = K_eps` rounds, so K_eps is "rounds the uncompressed algorithm
 //! needs" — the paper's few-hundred-round scale gives K_eps ~ 100.
 
+use crate::des::FaultModel;
 use crate::metrics::{RunTrace, TracePoint};
-use crate::netsim::NetworkProcess;
-use crate::policy::{CompressionPolicy, PolicyCtx};
+use crate::netsim::{NetworkProcess, ProbeEstimator};
+use crate::policy::{mean_level, CompressionChoice, CompressionPolicy, PolicyCtx};
+
+/// The Assumption-1 stopping rule, generalized to weighted aggregations:
+/// with progress weight `A = sum u` and weighted proxy mass
+/// `S = sum u * rho`, the run stops when `A^2 > K_eps * S`.  The
+/// analytic tier records `u = 1` per round — exactly `r^2 > K_eps *
+/// sum rho` — while the DES tier records partial weights for semi-sync
+/// and staleness-discounted async aggregations.
+#[derive(Clone, Copy, Debug)]
+pub struct StoppingRule {
+    k_eps: f64,
+    progress: f64,
+    weighted_rho: f64,
+}
+
+impl StoppingRule {
+    pub fn new(k_eps: f64) -> Self {
+        StoppingRule { k_eps, progress: 0.0, weighted_rho: 0.0 }
+    }
+
+    /// Record one aggregation with progress weight `weight` and
+    /// effective rounds-proxy `rho`; returns true when the rule fires.
+    pub fn record(&mut self, weight: f64, rho: f64) -> bool {
+        self.progress += weight;
+        self.weighted_rho += weight * rho;
+        self.fired()
+    }
+
+    /// `A^2 > K_eps * S`.
+    pub fn fired(&self) -> bool {
+        self.progress * self.progress > self.k_eps * self.weighted_rho
+    }
+
+    /// Accumulated progress weight A (rounds, for the analytic tier).
+    pub fn progress(&self) -> f64 {
+        self.progress
+    }
+
+    /// Accumulated weighted proxy mass S.
+    pub fn rho_sum(&self) -> f64 {
+        self.weighted_rho
+    }
+
+    /// Progress-weighted mean rho (0 before any aggregation).
+    pub fn mean_rho(&self) -> f64 {
+        if self.progress > 0.0 {
+            self.weighted_rho / self.progress
+        } else {
+            0.0
+        }
+    }
+
+    /// `A^2 / (K_eps * S)` — crosses 1 at the stopping round (the
+    /// Fig.-1 "progress" ordinate).
+    pub fn progress_ratio(&self) -> f64 {
+        self.progress * self.progress / (self.k_eps * self.weighted_rho)
+    }
+}
+
+/// Everything a hook may inspect about a finished round.
+#[derive(Debug)]
+pub struct RoundRecord<'a> {
+    /// 1-based round index.
+    pub round: usize,
+    /// The true network state the wall clock was charged on.
+    pub c_true: &'a [f64],
+    /// What the policy observed (== `c_true` unless a hook remapped it).
+    pub c_seen: &'a [f64],
+    /// The policy's per-client choices.
+    pub choices: &'a [CompressionChoice],
+    /// This round's duration and the cumulative wall clock after it.
+    pub duration: f64,
+    pub wall: f64,
+    /// The round's rounds-proxy rho.
+    pub rho: f64,
+    /// `r^2 / (K_eps * sum rho)` after this round (> 1 <=> stopped).
+    pub progress: f64,
+}
+
+/// A composable observer of the analytic round loop.  All methods have
+/// no-op defaults; a hook overrides what it needs:
+///
+/// * [`RoundHook::perturb`] edits the TRUE state before anything reads
+///   it (fault injection);
+/// * [`RoundHook::observe`] maps the state the policy will see (probe
+///   estimation) — hooks chain, each seeing its predecessor's output;
+/// * [`RoundHook::on_round`] inspects the finished round (tracing).
+pub trait RoundHook {
+    fn perturb(&mut self, _c_true: &mut [f64]) {}
+    fn observe(&mut self, _c: &[f64]) -> Option<Vec<f64>> {
+        None
+    }
+    fn on_round(&mut self, _r: &RoundRecord<'_>) {}
+}
+
+/// §V in-band probe estimation as a hook: the policy sees the
+/// estimator's EWMA view of the state; time is still charged on truth.
+pub struct ProbeHook<'e> {
+    pub estimator: &'e mut ProbeEstimator,
+}
+
+impl<'e> ProbeHook<'e> {
+    pub fn new(estimator: &'e mut ProbeEstimator) -> Self {
+        ProbeHook { estimator }
+    }
+}
+
+impl RoundHook for ProbeHook<'_> {
+    fn observe(&mut self, c: &[f64]) -> Option<Vec<f64>> {
+        Some(self.estimator.observe(c))
+    }
+}
+
+/// Fig.-1-style tracing as a hook: one [`TracePoint`] per round, with
+/// the progress ratio as proxy "accuracy" and its reciprocal as proxy
+/// "distance left".
+pub struct TraceHook {
+    pub trace: RunTrace,
+}
+
+impl TraceHook {
+    pub fn new(policy: &str, scenario: &str, seed: u64) -> Self {
+        TraceHook { trace: RunTrace::new(policy, scenario, seed) }
+    }
+}
+
+impl RoundHook for TraceHook {
+    fn on_round(&mut self, r: &RoundRecord<'_>) {
+        self.trace.push(TracePoint {
+            round: r.round,
+            wall: r.wall,
+            train_loss: 1.0 / r.progress.max(1e-12), // proxy "distance left"
+            test_acc: r.progress.min(1.0),
+            mean_bits: mean_level(r.choices),
+        });
+    }
+}
+
+/// Analytic-tier fault injection with the DES engine's transfer-term
+/// semantics: a DES [`FaultModel`]'s per-client straggler slowdowns
+/// stretch the *wall clock* (the true state the duration is charged
+/// on), while the policy keeps observing the raw, unslowed BTD state —
+/// exactly like `des::engine`, where `policy.choose` sees `c` but each
+/// transfer is scheduled at `c_j * slowdown_j`.  Attach this hook
+/// before any observation-mapping hook (e.g. [`ProbeHook`]) so the
+/// estimator probes the unslowed state too.
+pub struct SlowdownHook {
+    pub faults: FaultModel,
+    unslowed: Vec<f64>,
+}
+
+impl SlowdownHook {
+    pub fn new(faults: FaultModel) -> Self {
+        SlowdownHook { faults, unslowed: Vec::new() }
+    }
+}
+
+impl RoundHook for SlowdownHook {
+    fn perturb(&mut self, c_true: &mut [f64]) {
+        self.unslowed.clear();
+        self.unslowed.extend_from_slice(c_true);
+        for (j, c) in c_true.iter_mut().enumerate() {
+            *c *= self.faults.slowdown_of(j);
+        }
+    }
+
+    fn observe(&mut self, _c: &[f64]) -> Option<Vec<f64>> {
+        // The policy stays blind to the injected slowdown (DES parity).
+        Some(self.unslowed.clone())
+    }
+}
 
 #[derive(Clone, Debug)]
 pub struct SimResult {
@@ -27,12 +220,99 @@ pub struct SimResult {
     pub rounds: usize,
     /// Mean rho over the run (diagnostic).
     pub mean_rho: f64,
-    /// Mean across-client bits (diagnostic).
+    /// Mean across-client compression level (diagnostic; bit-width for
+    /// the paper's quantizer, historically named).
     pub mean_bits: f64,
 }
 
-/// Run the analytic simulation until the Assumption-1 stopping rule
-/// fires (or max_rounds).
+/// The one analytic round loop, parameterized by hooks.
+pub struct Session<'a> {
+    ctx: &'a PolicyCtx,
+    k_eps: f64,
+    max_rounds: usize,
+    hooks: Vec<&'a mut dyn RoundHook>,
+}
+
+impl<'a> Session<'a> {
+    pub fn new(ctx: &'a PolicyCtx, k_eps: f64, max_rounds: usize) -> Self {
+        Session { ctx, k_eps, max_rounds, hooks: Vec::new() }
+    }
+
+    /// Attach a hook (evaluated in attachment order each round).
+    pub fn hook(mut self, h: &'a mut dyn RoundHook) -> Self {
+        self.hooks.push(h);
+        self
+    }
+
+    /// Run until the Assumption-1 stopping rule fires (or max_rounds).
+    pub fn run(
+        mut self,
+        policy: &mut dyn CompressionPolicy,
+        process: &mut dyn NetworkProcess,
+    ) -> SimResult {
+        let ctx = self.ctx;
+        let mut rule = StoppingRule::new(self.k_eps);
+        let mut wall = 0.0f64;
+        let mut level_sum = 0.0f64;
+        let mut r = 0usize;
+        while r < self.max_rounds {
+            r += 1;
+            let mut c_true = process.next_state();
+            for h in self.hooks.iter_mut() {
+                h.perturb(&mut c_true);
+            }
+            // Observation chain: each hook sees its predecessor's view.
+            let mut c_seen: Option<Vec<f64>> = None;
+            for h in self.hooks.iter_mut() {
+                let cur: &[f64] = match &c_seen {
+                    Some(v) => v,
+                    None => &c_true,
+                };
+                if let Some(mapped) = h.observe(cur) {
+                    c_seen = Some(mapped);
+                }
+            }
+            let observed: &[f64] = match &c_seen {
+                Some(v) => v,
+                None => &c_true,
+            };
+            let choices = policy.choose(ctx, observed);
+            let rho = ctx.rho(&choices);
+            level_sum += mean_level(&choices);
+            let duration = ctx.duration(&choices, &c_true);
+            wall += duration;
+            // Assumption 1: stop when r^2 > K_eps * sum rho.
+            let stop = rule.record(1.0, rho);
+            if !self.hooks.is_empty() {
+                let rec = RoundRecord {
+                    round: r,
+                    c_true: &c_true,
+                    c_seen: observed,
+                    choices: &choices,
+                    duration,
+                    wall,
+                    rho,
+                    progress: rule.progress_ratio(),
+                };
+                for h in self.hooks.iter_mut() {
+                    h.on_round(&rec);
+                }
+            }
+            if stop {
+                break;
+            }
+        }
+        SimResult {
+            wall,
+            rounds: r,
+            mean_rho: rule.rho_sum() / r as f64,
+            mean_bits: level_sum / r as f64,
+        }
+    }
+}
+
+/// Run the plain analytic simulation (no hooks) until the Assumption-1
+/// stopping rule fires (or max_rounds).
 pub fn simulate(
     ctx: &PolicyCtx,
     policy: &mut dyn CompressionPolicy,
@@ -40,28 +320,7 @@ pub fn simulate(
     k_eps: f64,
     max_rounds: usize,
 ) -> SimResult {
-    let mut wall = 0.0f64;
-    let mut rho_sum = 0.0f64;
-    let mut bits_sum = 0.0f64;
-    let mut r = 0usize;
-    while r < max_rounds {
-        r += 1;
-        let c = process.next_state();
-        let bits = policy.choose(ctx, &c);
-        rho_sum += ctx.rounds.rho(&bits);
-        bits_sum += bits.iter().map(|&b| b as f64).sum::<f64>() / bits.len() as f64;
-        wall += ctx.duration(&bits, &c);
-        // Assumption 1: stop when r > (K_eps / r) * sum rho.
-        if (r * r) as f64 > k_eps * rho_sum {
-            break;
-        }
-    }
-    SimResult {
-        wall,
-        rounds: r,
-        mean_rho: rho_sum / r as f64,
-        mean_bits: bits_sum / r as f64,
-    }
+    Session::new(ctx, k_eps, max_rounds).run(policy, process)
 }
 
 /// Like [`simulate`] but the policy observes the network state through
@@ -72,32 +331,14 @@ pub fn simulate_observed(
     ctx: &PolicyCtx,
     policy: &mut dyn CompressionPolicy,
     process: &mut dyn NetworkProcess,
-    estimator: &mut crate::netsim::estimator::ProbeEstimator,
+    estimator: &mut ProbeEstimator,
     k_eps: f64,
     max_rounds: usize,
 ) -> SimResult {
-    let mut wall = 0.0f64;
-    let mut rho_sum = 0.0f64;
-    let mut bits_sum = 0.0f64;
-    let mut r = 0usize;
-    while r < max_rounds {
-        r += 1;
-        let c_true = process.next_state();
-        let c_seen = estimator.observe(&c_true);
-        let bits = policy.choose(ctx, &c_seen);
-        rho_sum += ctx.rounds.rho(&bits);
-        bits_sum += bits.iter().map(|&b| b as f64).sum::<f64>() / bits.len() as f64;
-        wall += ctx.duration(&bits, &c_true);
-        if (r * r) as f64 > k_eps * rho_sum {
-            break;
-        }
-    }
-    SimResult {
-        wall,
-        rounds: r,
-        mean_rho: rho_sum / r as f64,
-        mean_bits: bits_sum / r as f64,
-    }
+    let mut probe = ProbeHook::new(estimator);
+    Session::new(ctx, k_eps, max_rounds)
+        .hook(&mut probe)
+        .run(policy, process)
 }
 
 /// Trace variant for Fig.-1-style sweeps: records cumulative wall clock
@@ -109,34 +350,11 @@ pub fn simulate_traced(
     k_eps: f64,
     max_rounds: usize,
 ) -> (SimResult, RunTrace) {
-    let mut trace = RunTrace::new(&policy.name(), "analytic", 0);
-    let mut wall = 0.0f64;
-    let mut rho_sum = 0.0f64;
-    let mut bits_sum = 0.0f64;
-    let mut r = 0usize;
-    while r < max_rounds {
-        r += 1;
-        let c = process.next_state();
-        let bits = policy.choose(ctx, &c);
-        rho_sum += ctx.rounds.rho(&bits);
-        bits_sum += bits.iter().map(|&b| b as f64).sum::<f64>() / bits.len() as f64;
-        wall += ctx.duration(&bits, &c);
-        let progress = (r * r) as f64 / (k_eps * rho_sum);
-        trace.push(TracePoint {
-            round: r,
-            wall,
-            train_loss: 1.0 / progress.max(1e-12), // proxy "distance left"
-            test_acc: progress.min(1.0),
-            mean_bits: bits.iter().map(|&b| b as f64).sum::<f64>() / bits.len() as f64,
-        });
-        if progress > 1.0 {
-            break;
-        }
-    }
-    (
-        SimResult { wall, rounds: r, mean_rho: rho_sum / r as f64, mean_bits: bits_sum / r as f64 },
-        trace,
-    )
+    let mut tracer = TraceHook::new(&policy.name(), "analytic", 0);
+    let res = Session::new(ctx, k_eps, max_rounds)
+        .hook(&mut tracer)
+        .run(policy, process);
+    (res, tracer.trace)
 }
 
 #[cfg(test)]
@@ -204,5 +422,112 @@ mod tests {
             w_nacfl < w_best_fixed,
             "NAC-FL {w_nacfl:.3e} should beat best fixed {w_best_fixed:.3e}"
         );
+    }
+
+    #[test]
+    fn hookless_session_matches_legacy_loop_shape() {
+        // The simulate() wrapper IS the Session; sanity-check the rule's
+        // factored accounting against a hand-rolled reference loop.
+        let ctx = ctx();
+        let mut p_a = parse_policy("nacfl:1").unwrap();
+        let mut p_b = parse_policy("nacfl:1").unwrap();
+        let mut net_a = process(5);
+        let mut net_b = process(5);
+        let got = simulate(&ctx, p_a.as_mut(), &mut net_a, 100.0, 100_000);
+
+        let (mut wall, mut rho_sum, mut r) = (0.0f64, 0.0f64, 0usize);
+        while r < 100_000 {
+            r += 1;
+            let c = net_b.next_state();
+            let ch = p_b.choose(&ctx, &c);
+            rho_sum += ctx.rho(&ch);
+            wall += ctx.duration(&ch, &c);
+            if (r * r) as f64 > 100.0 * rho_sum {
+                break;
+            }
+        }
+        assert_eq!(got.rounds, r);
+        assert_eq!(got.wall.to_bits(), wall.to_bits(), "bit-identical wall clock");
+    }
+
+    #[test]
+    fn trace_hook_matches_plain_result() {
+        let ctx = ctx();
+        let mut p1 = parse_policy("fixed:2").unwrap();
+        let mut p2 = parse_policy("fixed:2").unwrap();
+        let mut n1 = process(3);
+        let mut n2 = process(3);
+        let plain = simulate(&ctx, p1.as_mut(), &mut n1, 80.0, 100_000);
+        let (traced, trace) = simulate_traced(&ctx, p2.as_mut(), &mut n2, 80.0, 100_000);
+        assert_eq!(plain.rounds, traced.rounds);
+        assert_eq!(plain.wall.to_bits(), traced.wall.to_bits());
+        assert_eq!(trace.points.len(), traced.rounds, "one trace point per round");
+        let last = trace.points.last().unwrap();
+        assert!(last.test_acc >= 1.0 - 1e-12, "final progress saturates");
+        assert_eq!(last.wall.to_bits(), traced.wall.to_bits());
+    }
+
+    #[test]
+    fn probe_hook_changes_observation_not_the_clock() {
+        // With zero probe noise and alpha = 1 the estimate equals truth,
+        // so observed == plain; with noise the policy's view (and hence
+        // possibly the run) differs, but wall stays charged on truth.
+        let ctx = ctx();
+        let mut p1 = parse_policy("nacfl:1").unwrap();
+        let mut p2 = parse_policy("nacfl:1").unwrap();
+        let mut n1 = process(9);
+        let mut n2 = process(9);
+        let mut clean = ProbeEstimator::new(10, 1.0, 0.0, Rng::new(1));
+        let plain = simulate(&ctx, p1.as_mut(), &mut n1, 60.0, 100_000);
+        let observed =
+            simulate_observed(&ctx, p2.as_mut(), &mut n2, &mut clean, 60.0, 100_000);
+        assert_eq!(plain.rounds, observed.rounds);
+        assert_eq!(plain.wall.to_bits(), observed.wall.to_bits());
+    }
+
+    #[test]
+    fn slowdown_hook_stretches_the_clock_but_not_the_policy_view() {
+        // DES parity: the policy is blind to straggler slowdown, so an
+        // adaptive policy's choices — and hence the stopping round —
+        // match the fault-free run exactly, while the wall clock grows.
+        let ctx = ctx();
+        let mut p1 = parse_policy("nacfl:1").unwrap();
+        let mut p2 = parse_policy("nacfl:1").unwrap();
+        let mut n1 = process(4);
+        let mut n2 = process(4);
+        let plain = simulate(&ctx, p1.as_mut(), &mut n1, 60.0, 100_000);
+        let mut slow = SlowdownHook::new(
+            crate::des::FaultModel::none().with_stragglers(10, &[0], 20.0),
+        );
+        let slowed = Session::new(&ctx, 60.0, 100_000)
+            .hook(&mut slow)
+            .run(p2.as_mut(), &mut n2);
+        assert_eq!(
+            slowed.rounds, plain.rounds,
+            "policy view must be unslowed (rounds driven by choices only)"
+        );
+        assert_eq!(slowed.mean_bits, plain.mean_bits, "choices must match");
+        assert!(
+            slowed.wall > plain.wall,
+            "straggler slowdown must cost wall clock: {} vs {}",
+            slowed.wall,
+            plain.wall
+        );
+    }
+
+    #[test]
+    fn stopping_rule_weighted_accounting() {
+        // u = 1 twice with rho = 1: fires at A = 2 (4 > k*2 for k < 2).
+        let mut rule = StoppingRule::new(1.5);
+        assert!(!rule.record(1.0, 1.0));
+        assert!(rule.record(1.0, 1.0));
+        assert!((rule.progress() - 2.0).abs() < 1e-15);
+        assert!((rule.mean_rho() - 1.0).abs() < 1e-15);
+        // Fractional weights delay firing proportionally.
+        let mut rule = StoppingRule::new(1.5);
+        for _ in 0..3 {
+            assert!(!rule.record(0.5, 1.0));
+        }
+        assert!(rule.record(0.5, 1.0));
     }
 }

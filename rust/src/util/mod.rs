@@ -8,3 +8,4 @@ pub mod check;
 pub mod cli;
 pub mod linalg;
 pub mod rng;
+pub mod spec;

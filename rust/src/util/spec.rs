@@ -1,0 +1,138 @@
+//! Unified `name[:arg[:arg…]]` spec grammar.
+//!
+//! Every parseable object in the system — policies, compressors,
+//! congestion scenarios, experiment tiers, aggregation disciplines —
+//! shares this one grammar: a short lowercase name followed by
+//! colon-separated arguments (`nacfl:2`, `quant:inf`, `semi-sync:7`,
+//! `sim:250`).  Each such object also implements `Display` with a
+//! canonical form that **round-trips** (`parse(x.to_string())` yields an
+//! equivalent object), so CLI flags, TOML values, table labels and CSV
+//! columns are interchangeable — one string format everywhere.
+
+use anyhow::{anyhow, Result};
+use std::fmt;
+use std::str::FromStr;
+
+/// A parsed `name[:arg[:arg…]]` string.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Spec {
+    pub name: String,
+    pub args: Vec<String>,
+}
+
+impl Spec {
+    /// Split a spec string into name + arguments.  The name must be
+    /// non-empty and use only `[A-Za-z0-9_-]`; arguments must be
+    /// non-empty (their syntax is checked by the consuming parser).
+    pub fn parse(s: &str) -> Result<Self> {
+        let mut parts = s.split(':');
+        let name = parts.next().unwrap_or("").trim();
+        if name.is_empty() {
+            return Err(anyhow!("empty spec"));
+        }
+        if !name
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_')
+        {
+            return Err(anyhow!("spec name `{name}` has invalid characters"));
+        }
+        let args: Vec<String> = parts.map(|a| a.trim().to_string()).collect();
+        if args.iter().any(String::is_empty) {
+            return Err(anyhow!("spec `{s}` has an empty argument"));
+        }
+        Ok(Spec { name: name.to_string(), args })
+    }
+
+    /// i-th argument as a raw string.
+    pub fn arg(&self, i: usize) -> Option<&str> {
+        self.args.get(i).map(String::as_str)
+    }
+
+    /// i-th argument parsed as `T`, or `default` when absent.
+    pub fn arg_or<T: FromStr>(&self, i: usize, default: T) -> Result<T>
+    where
+        T::Err: fmt::Display,
+    {
+        match self.args.get(i) {
+            None => Ok(default),
+            Some(a) => a
+                .parse()
+                .map_err(|e| anyhow!("spec `{}` argument {}: {e}", self, i + 1)),
+        }
+    }
+
+    /// i-th argument parsed as `T`; errors when the argument is missing.
+    pub fn req<T: FromStr>(&self, i: usize, what: &str) -> Result<T>
+    where
+        T::Err: fmt::Display,
+    {
+        let a = self
+            .args
+            .get(i)
+            .ok_or_else(|| anyhow!("spec `{}` requires {what}", self))?;
+        a.parse().map_err(|e| anyhow!("spec `{}` {what}: {e}", self))
+    }
+
+    /// Errors when the spec carries more than `n` arguments.
+    pub fn max_args(&self, n: usize) -> Result<()> {
+        if self.args.len() > n {
+            return Err(anyhow!("spec `{}` takes at most {n} argument(s)", self));
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for Spec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.name)?;
+        for a in &self.args {
+            write!(f, ":{a}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_name_and_args() {
+        let s = Spec::parse("semi-sync:7").unwrap();
+        assert_eq!(s.name, "semi-sync");
+        assert_eq!(s.args, vec!["7"]);
+        let s = Spec::parse("nacfl").unwrap();
+        assert!(s.args.is_empty());
+        let s = Spec::parse("errbound:1.5625").unwrap();
+        assert_eq!(s.arg_or::<f64>(0, 0.0).unwrap(), 1.5625);
+    }
+
+    #[test]
+    fn display_round_trips() {
+        for raw in ["nacfl:2", "quant:inf", "sim:250", "topk:0.05", "plain"] {
+            let s = Spec::parse(raw).unwrap();
+            assert_eq!(s.to_string(), raw);
+            assert_eq!(Spec::parse(&s.to_string()).unwrap(), s);
+        }
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Spec::parse("").is_err());
+        assert!(Spec::parse(":3").is_err());
+        assert!(Spec::parse("fixed:").is_err());
+        assert!(Spec::parse("a b:1").is_err());
+    }
+
+    #[test]
+    fn typed_argument_helpers() {
+        let s = Spec::parse("fixed:3").unwrap();
+        assert_eq!(s.req::<u8>(0, "a bit-width").unwrap(), 3);
+        assert!(s.max_args(1).is_ok());
+        assert!(s.max_args(0).is_err());
+        let s = Spec::parse("fixed").unwrap();
+        assert!(s.req::<u8>(0, "a bit-width").is_err());
+        let s = Spec::parse("fixed:x").unwrap();
+        assert!(s.req::<u8>(0, "a bit-width").is_err());
+    }
+}

@@ -1,0 +1,241 @@
+//! Registry-wide compressor properties (ISSUE-2 satellite): every
+//! registered compression family must
+//!
+//! 1. be **unbiased** in expectation (Assumption 8's premise),
+//! 2. report a wire size that matches its actual encoded payload
+//!    (exactly for fixed-size encoders, in expectation for
+//!    stochastic-size ones),
+//! 3. round-trip its canonical spec through `Display`/parse,
+//! 4. satisfy the solver's monotonicity contract (wire size
+//!    non-decreasing, variance proxy non-increasing in the level, and
+//!    `max_level_within` consistent with `wire_bits`).
+//!
+//! Plus grammar-wide round-trip checks for policy/scenario/tier/
+//! discipline specs — one spec grammar everywhere.
+
+use nacfl::des::Discipline;
+use nacfl::exp::Tier;
+use nacfl::netsim::ScenarioKind;
+use nacfl::policy::PolicySpec;
+use nacfl::quant::{parse_compressor, registry_specs, Compressor, CompressorEnv};
+use nacfl::util::rng::Rng;
+
+const DIM: usize = 256;
+
+fn env() -> CompressorEnv {
+    CompressorEnv::paper_default(DIM)
+}
+
+fn registry() -> Vec<std::sync::Arc<dyn Compressor>> {
+    registry_specs()
+        .iter()
+        .map(|s| parse_compressor(s, &env()).unwrap())
+        .collect()
+}
+
+fn gaussian(n: usize, rng: &mut Rng) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
+
+#[test]
+fn every_registered_compressor_round_trips_its_spec() {
+    for c in registry() {
+        let spec = c.spec();
+        let reparsed = parse_compressor(&spec, &env()).unwrap();
+        assert_eq!(reparsed.spec(), spec, "spec must round-trip: {spec}");
+        // And the reparsed instance prices identically.
+        let (lo, hi) = c.level_range();
+        assert_eq!(reparsed.level_range(), (lo, hi));
+        for l in lo..=hi {
+            assert_eq!(reparsed.wire_bits(l).to_bits(), c.wire_bits(l).to_bits(), "{spec} s({l})");
+            assert_eq!(
+                reparsed.q_of_level(l).to_bits(),
+                c.q_of_level(l).to_bits(),
+                "{spec} q({l})"
+            );
+        }
+    }
+}
+
+#[test]
+fn every_registered_compressor_is_monotone_in_the_level() {
+    for c in registry() {
+        let spec = c.spec();
+        let (lo, hi) = c.level_range();
+        assert!(lo >= 1 && hi >= lo, "{spec}: degenerate range ({lo}, {hi})");
+        for l in lo..hi {
+            assert!(
+                c.wire_bits(l + 1) >= c.wire_bits(l),
+                "{spec}: wire must not shrink with the level"
+            );
+            assert!(
+                c.q_of_level(l + 1) <= c.q_of_level(l),
+                "{spec}: variance proxy must not grow with the level"
+            );
+        }
+        assert!(c.q_of_level(lo).is_finite() && c.q_of_level(lo) >= 0.0);
+    }
+}
+
+#[test]
+fn max_level_within_agrees_with_wire_bits() {
+    for c in registry() {
+        let spec = c.spec();
+        let (lo, hi) = c.level_range();
+        // Below the minimum wire size: no level fits.
+        assert_eq!(c.max_level_within(c.wire_bits(lo) * 0.5), None, "{spec}");
+        // At each level's exact wire size, that level (or a same-size
+        // larger one) fits and nothing bigger does.
+        for l in lo..=hi {
+            let got = c.max_level_within(c.wire_bits(l) * (1.0 + 1e-12)).unwrap();
+            assert!(got >= l, "{spec}: level {l} must fit in its own wire size");
+            assert!(
+                c.wire_bits(got) <= c.wire_bits(l) * (1.0 + 1e-9),
+                "{spec}: max_level_within returned an oversized level"
+            );
+        }
+        // A huge budget admits the top level.
+        assert_eq!(c.max_level_within(f64::INFINITY), Some(hi), "{spec}");
+    }
+}
+
+#[test]
+fn every_registered_compressor_is_unbiased() {
+    for c in registry() {
+        let spec = c.spec();
+        let mut rng = Rng::new(42);
+        let x = gaussian(DIM, &mut rng);
+        let (lo, hi) = c.level_range();
+        // Exercise the noisiest level: bias would be largest there.
+        for level in [lo, hi.min(lo + 2)] {
+            let trials = 8000;
+            let mut sum = vec![0.0f64; DIM];
+            let mut sum_sq = vec![0.0f64; DIM];
+            let mut out = vec![0.0f32; DIM];
+            for _ in 0..trials {
+                c.compress_into(&x, level, &mut rng, &mut out);
+                for ((s, s2), &o) in sum.iter_mut().zip(sum_sq.iter_mut()).zip(out.iter()) {
+                    *s += o as f64;
+                    *s2 += (o as f64) * (o as f64);
+                }
+            }
+            // Self-calibrating tolerance: 6 empirical standard errors
+            // (plus a float-noise floor).  Per-coordinate CLT checks are
+            // restricted to coordinates with enough mass for the normal
+            // approximation; the magnitude-aligned aggregate below covers
+            // the tail (a biased encoder — e.g. deterministic top-k,
+            // which zeroes small coordinates — shifts it decisively).
+            let mut agg_bias = 0.0f64;
+            let mut agg_var = 0.0f64;
+            for i in 0..DIM {
+                let mean = sum[i] / trials as f64;
+                let var = (sum_sq[i] / trials as f64 - mean * mean).max(0.0);
+                let bias = mean - x[i] as f64;
+                agg_bias += bias * (x[i] as f64).signum();
+                agg_var += var / trials as f64;
+                if x[i].abs() >= 0.1 {
+                    let tol = 6.0 * (var / trials as f64).sqrt() + 1e-4;
+                    assert!(
+                        bias.abs() < tol,
+                        "{spec} level {level} coord {i}: mean {mean} vs {} (tol {tol})",
+                        x[i]
+                    );
+                }
+            }
+            let agg_tol = 6.0 * agg_var.sqrt() + 1e-3;
+            assert!(
+                agg_bias.abs() < agg_tol,
+                "{spec} level {level}: aggregate bias {agg_bias} (tol {agg_tol})"
+            );
+        }
+    }
+}
+
+#[test]
+fn reported_wire_size_matches_actual_payload() {
+    for c in registry() {
+        let spec = c.spec();
+        let mut rng = Rng::new(9);
+        let x = gaussian(DIM, &mut rng);
+        let (lo, hi) = c.level_range();
+        let mut out = vec![0.0f32; DIM];
+        for level in [lo, (lo + hi) / 2, hi] {
+            let trials = 300;
+            let mut acc = 0.0;
+            for _ in 0..trials {
+                acc += c.compress_into(&x, level, &mut rng, &mut out);
+            }
+            let mean = acc / trials as f64;
+            let model = c.wire_bits(level);
+            assert!(
+                (mean - model).abs() / model < 0.1,
+                "{spec} level {level}: mean payload {mean} vs model {model}"
+            );
+        }
+    }
+}
+
+#[test]
+fn deterministic_encoders_report_exact_payloads() {
+    for spec in ["quant:inf", "errbound:1.5625"] {
+        let c = parse_compressor(spec, &env()).unwrap();
+        let mut rng = Rng::new(1);
+        let x = gaussian(DIM, &mut rng);
+        let mut out = vec![0.0f32; DIM];
+        let (lo, hi) = c.level_range();
+        for level in lo..=hi {
+            let actual = c.compress_into(&x, level, &mut rng, &mut out);
+            assert_eq!(
+                actual.to_bits(),
+                c.wire_bits(level).to_bits(),
+                "{spec} level {level}"
+            );
+        }
+    }
+}
+
+// ---- unified spec grammar: round-trip Display everywhere -------------
+
+#[test]
+fn policy_specs_round_trip() {
+    for s in ["nacfl:2", "nacfl:1", "fixed:1", "fixed:32", "error:5.25", "oracle:8"] {
+        let p = PolicySpec::parse(s).unwrap();
+        assert_eq!(p.to_string(), s);
+        assert_eq!(PolicySpec::parse(&p.to_string()).unwrap(), p);
+    }
+}
+
+#[test]
+fn scenario_specs_round_trip() {
+    for s in ["homog:1", "homog:2.5", "heterog", "perf:4", "part:16"] {
+        let k = ScenarioKind::parse(s).unwrap();
+        assert_eq!(k.to_string(), s);
+        assert_eq!(ScenarioKind::parse(&k.to_string()).unwrap(), k);
+    }
+}
+
+#[test]
+fn tier_specs_round_trip() {
+    for s in ["ml", "sim:100", "sim:2.5"] {
+        let t = Tier::parse(s).unwrap();
+        assert_eq!(t.to_string(), s);
+        assert_eq!(Tier::parse(&t.to_string()).unwrap(), t);
+    }
+}
+
+#[test]
+fn discipline_specs_round_trip() {
+    for s in ["sync", "semi-sync:7", "async:0.5", "async:1"] {
+        let d = Discipline::parse(s).unwrap();
+        assert_eq!(d.to_string(), s);
+        assert_eq!(Discipline::parse(&d.to_string()).unwrap(), d);
+    }
+}
+
+#[test]
+fn compressor_specs_round_trip_via_config_strings() {
+    for s in registry_specs() {
+        let c = parse_compressor(&s, &env()).unwrap();
+        assert_eq!(c.spec(), s);
+    }
+}

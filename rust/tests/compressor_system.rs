@@ -1,0 +1,174 @@
+//! End-to-end regression per compressor family (ISSUE-2 acceptance):
+//! `topk` and `errbound` must drive the full paper roster through BOTH
+//! tiers — the analytic experiment path (`nacfl exp`/`sim`, i.e.
+//! `run_cell_parallel`) and the DES path (`nacfl des`, i.e.
+//! `run_sweep`) — converging and preserving the tiers' parity
+//! invariants; and the spec-built `oracle:<states>` policy must run
+//! inside a roster like any other policy (Theorem-1 preset).
+
+use nacfl::config::ExperimentConfig;
+use nacfl::des::{Discipline, FaultModel};
+use nacfl::exp::{
+    run_cell, run_cell_parallel, run_sweep, sweep_table, table_cells, table_for, SweepSpec, Tier,
+};
+use nacfl::metrics::Summary;
+use nacfl::netsim::ScenarioKind;
+
+fn cfg_for(compressor: &str) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::paper();
+    cfg.compressor = compressor.into();
+    cfg.seeds = (0..6).collect();
+    cfg.validate().unwrap();
+    cfg
+}
+
+/// The analytic `nacfl exp` path: full roster, parallel grid, rendered
+/// table — once per new compressor family.
+#[test]
+fn topk_and_errbound_run_the_analytic_exp_path_end_to_end() {
+    for compressor in ["topk:0.05", "errbound:1.5625"] {
+        let cfg = cfg_for(compressor);
+        let tier = Tier::Analytic { k_eps: 60.0 };
+        let results = run_cell_parallel(&cfg, tier, 4, |_, _, _| {}).unwrap();
+        assert_eq!(results.len(), 5, "{compressor}: full paper roster");
+        for r in &results {
+            assert_eq!(r.times.len(), cfg.seeds.len());
+            assert!(
+                r.times.iter().all(|t| t.is_finite() && *t > 0.0),
+                "{compressor} {}: non-finite time-to-target",
+                r.policy
+            );
+            // Convergence, not budget exhaustion.
+            assert!(
+                r.rounds.iter().all(|&n| n > 0 && n < 10_000_000),
+                "{compressor} {}: hit the round cap",
+                r.policy
+            );
+        }
+        // Adaptivity must still pay: NAC-FL beats the worst fixed level.
+        let nacfl = Summary::of(&results[4].times).mean;
+        let worst_fixed = results[..3]
+            .iter()
+            .map(|r| Summary::of(&r.times).mean)
+            .fold(0.0f64, f64::max);
+        assert!(
+            nacfl < worst_fixed,
+            "{compressor}: nacfl {nacfl:.3e} vs worst fixed {worst_fixed:.3e}"
+        );
+        // And the rendered table still builds (gain row present).
+        let table = table_for(&format!("{compressor} cell"), &results).unwrap();
+        assert!(table.render().contains("Gain"));
+
+        // Parallel grid parity holds for the new families too.
+        let seq = run_cell(&cfg, tier, |_, _, _| {}).unwrap();
+        for (a, b) in seq.iter().zip(results.iter()) {
+            assert_eq!(a.times, b.times, "{compressor} {}: grid parity", a.policy);
+        }
+    }
+}
+
+/// The `nacfl des` path: sweep all three disciplines per family.
+#[test]
+fn topk_and_errbound_run_the_des_sweep_end_to_end() {
+    for compressor in ["topk:0.05", "errbound:1.5625"] {
+        let cfg = cfg_for(compressor);
+        let ctx = cfg.policy_ctx();
+        let spec = SweepSpec {
+            m: cfg.m,
+            scenarios: vec![ScenarioKind::HeterogeneousIndependent],
+            disciplines: vec![
+                Discipline::Sync,
+                Discipline::SemiSync { k: 7 },
+                Discipline::Async { staleness_exp: 0.5 },
+            ],
+            policies: vec!["fixed:2".into(), "nacfl:1".into()],
+            seeds: (0..3).collect(),
+            faults: FaultModel::none(),
+            k_eps: 40.0,
+            max_rounds: 500_000,
+        };
+        let cells = run_sweep(&ctx, &spec, 4).unwrap();
+        assert_eq!(cells.len(), 3 * 2 * 3, "{compressor}");
+        for c in &cells {
+            assert!(c.result.converged, "{compressor} {} {}: unconverged", c.discipline, c.policy);
+            assert!(c.result.wall > 0.0 && c.result.aggregations > 0);
+        }
+        let table = sweep_table("des", &spec, &cells).unwrap();
+        assert!(table.render().contains("semi-sync:7"));
+    }
+}
+
+/// Fault-free sync DES must reproduce the analytic tier for the new
+/// families exactly as it does for the quantizer (shared float path).
+#[test]
+fn sync_des_parity_holds_for_new_compressor_families() {
+    use nacfl::des::{simulate_des, DesConfig};
+    use nacfl::policy::{PolicyEnv, PolicySpec};
+    use nacfl::sim::simulate;
+    use nacfl::util::rng::Rng;
+    for compressor in ["topk:0.1", "errbound:1.5625"] {
+        let cfg = cfg_for(compressor);
+        let ctx = cfg.policy_ctx();
+        for seed in [0u64, 3] {
+            let env = PolicyEnv::for_cell(&ctx, cfg.scenario, cfg.m, seed);
+            let mut p1 = PolicySpec::parse("nacfl:1").unwrap().build(&env).unwrap();
+            let mut p2 = PolicySpec::parse("nacfl:1").unwrap().build(&env).unwrap();
+            let mut n1 = cfg.congestion_process(seed).unwrap();
+            let mut n2 = cfg.congestion_process(seed).unwrap();
+            let r_sim = simulate(&ctx, p1.as_mut(), &mut n1, 50.0, 1_000_000);
+            let des = DesConfig::new(Discipline::Sync, 50.0);
+            let r_des = simulate_des(&ctx, p2.as_mut(), &mut n2, &des, Rng::new(7)).unwrap();
+            assert_eq!(r_des.rounds, r_sim.rounds, "{compressor} seed {seed}");
+            let rel = (r_des.wall - r_sim.wall).abs() / r_sim.wall;
+            assert!(rel <= 1e-12, "{compressor} seed {seed}: rel {rel}");
+        }
+    }
+}
+
+/// The Theorem-1 preset: `oracle:8` built from its spec inside a normal
+/// roster, through the same analytic cell path as everything else.
+#[test]
+fn oracle_spec_runs_inside_the_theorem1_roster() {
+    let base = {
+        let mut c = ExperimentConfig::paper();
+        c.seeds = (0..3).collect();
+        c
+    };
+    let cells = table_cells("theorem1", &base).unwrap();
+    let (label, cfg) = &cells[0];
+    assert!(label.contains("Theorem 1"));
+    let results = run_cell_parallel(cfg, Tier::Analytic { k_eps: 60.0 }, 4, |_, _, _| {}).unwrap();
+    assert_eq!(results.len(), 6);
+    let oracle = results.iter().find(|r| r.policy.starts_with("oracle")).unwrap();
+    assert!(oracle.times.iter().all(|t| t.is_finite() && *t > 0.0));
+    // Determinism under threading: oracle cells must match sequential.
+    let seq = run_cell(cfg, Tier::Analytic { k_eps: 60.0 }, |_, _, _| {}).unwrap();
+    let oracle_seq = seq.iter().find(|r| r.policy.starts_with("oracle")).unwrap();
+    assert_eq!(oracle.times, oracle_seq.times);
+    // The gain table renders with the oracle column present.
+    let table = table_for(label, &results).unwrap().render();
+    assert!(table.contains("oracle:8"));
+}
+
+/// Legacy guard: the default config still registers the paper quantizer
+/// and the roster's analytic numbers remain deterministic across
+/// executors (the bit-identity regression the redesign must preserve).
+#[test]
+fn default_compressor_is_the_paper_quantizer_and_tables_are_stable() {
+    let cfg = {
+        let mut c = ExperimentConfig::paper();
+        c.seeds = (0..8).collect();
+        c
+    };
+    assert_eq!(cfg.compressor, "quant:inf");
+    assert_eq!(cfg.policy_ctx().compressor.spec(), "quant:inf");
+    let tier = Tier::Analytic { k_eps: 80.0 };
+    let seq = run_cell(&cfg, tier, |_, _, _| {}).unwrap();
+    for threads in [2usize, 8] {
+        let par = run_cell_parallel(&cfg, tier, threads, |_, _, _| {}).unwrap();
+        for (a, b) in seq.iter().zip(par.iter()) {
+            assert_eq!(a.times, b.times, "{} with {threads} threads", a.policy);
+            assert_eq!(a.rounds, b.rounds);
+        }
+    }
+}

@@ -141,7 +141,7 @@ fn nacfl_tracks_oracle_bit_choices_on_markov_chain() {
         let ob = oracle.choose(&ctx, s);
         for (a, b) in nb.iter().zip(ob.iter()) {
             total += 1;
-            if (*a as i32 - *b as i32).abs() <= 1 {
+            if (a.level as i32 - b.level as i32).abs() <= 1 {
                 agree += 1;
             }
         }

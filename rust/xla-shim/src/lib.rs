@@ -1,0 +1,138 @@
+//! Type-check shim for the `xla` (xla-rs) crate.
+//!
+//! Mirrors exactly the API surface `nacfl`'s feature-gated PJRT modules
+//! consume (`runtime::pjrt` + `runtime::literal`), so `cargo check
+//! --features xla` keeps those modules honest without vendoring the
+//! real crate.  Every operation returns [`Error`] at runtime; swap this
+//! path dependency for the actual xla-rs to execute (see
+//! `xla-shim/Cargo.toml`).
+
+use std::fmt;
+
+const SHIM_MSG: &str = "the in-tree `xla` crate is a type-check shim; vendor the real xla-rs \
+                        (see rust/xla-shim/Cargo.toml) to execute the PJRT runtime";
+
+/// The shim's only error: "this is a shim".
+#[derive(Debug, Clone)]
+pub struct Error(&'static str);
+
+impl Default for Error {
+    fn default() -> Self {
+        Error(SHIM_MSG)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+type Result<T> = std::result::Result<T, Error>;
+
+/// Element dtypes used by the nacfl literal helpers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+/// Host-side tensor value (shim: carries nothing).
+#[derive(Debug, Default)]
+pub struct Literal(());
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _dims: &[usize],
+        _data: &[u8],
+    ) -> Result<Literal> {
+        Err(Error::default())
+    }
+
+    pub fn scalar<T>(_v: T) -> Literal {
+        Literal(())
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::default())
+    }
+
+    pub fn get_first_element<T>(&self) -> Result<T> {
+        Err(Error::default())
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::default())
+    }
+}
+
+/// Parsed HLO module proto.
+#[derive(Debug, Default)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::default())
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Debug, Default)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// Device-side buffer handle returned by an execution.
+#[derive(Debug, Default)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::default())
+    }
+}
+
+/// A PJRT client (shim: construction always fails).
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::default())
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::default())
+    }
+}
+
+/// A compiled executable bound to a client.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::default())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_reports_the_shim() {
+        assert!(PjRtClient::cpu().unwrap_err().to_string().contains("shim"));
+        assert!(HloModuleProto::from_text_file("x").is_err());
+        assert!(Literal::scalar(1.0f32).to_vec::<f32>().is_err());
+        assert!(Literal::create_from_shape_and_untyped_data(ElementType::F32, &[1], &[0; 4])
+            .is_err());
+    }
+}
