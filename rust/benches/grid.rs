@@ -8,7 +8,7 @@
 
 use nacfl::config::ExperimentConfig;
 use nacfl::des::{simulate_des, DesConfig, Discipline, FaultModel};
-use nacfl::exp::{default_threads, run_cell, run_cell_parallel, table_for, Tier};
+use nacfl::exp::{resolve_threads, run_cell, run_cell_parallel, table_for, Tier};
 use nacfl::netsim::{Scenario, ScenarioKind};
 use nacfl::policy::parse_policy;
 use nacfl::util::rng::Rng;
@@ -24,11 +24,12 @@ fn main() {
     cfg.scenario = ScenarioKind::HomogeneousIndependent { sigma_sq: 2.0 };
     let tier = Tier::Analytic { k_eps: 300.0 };
     // 0 = resolve to all cores, same convention as run_cell_parallel.
-    let threads: usize = std::env::var("NACFL_BENCH_THREADS")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .filter(|&t| t > 0)
-        .unwrap_or_else(default_threads);
+    let threads = resolve_threads(
+        std::env::var("NACFL_BENCH_THREADS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0),
+    );
 
     println!(
         "== grid sweep: {} policies x {} seeds, k_eps = 300 ==",

@@ -1,12 +1,20 @@
-//! P1 (DESIGN.md §6 / §Perf): hot-path microbenchmarks.
+//! P1 (DESIGN.md §6 / §9): hot-path microbenchmarks.
 //!
 //! Times every component on the per-round path, per layer:
-//!   L3  policy argmin (eq. 6), Fixed-Error solver, netsim step,
-//!       rust quantizer (throughput), aggregation reduce;
+//!   L3  policy argmin (eq. 6) — workspace fast path AND the retained
+//!       direct reference (so one run shows the solver speedup),
+//!       Fixed-Error solver (both paths), TDMA coordinate descent,
+//!       netsim step, rust quantizer (throughput), top-k water-filling
+//!       sparsifier (throughput), aggregation reduce;
 //!   L2/L1 (via PJRT) local_round / quantize / global_step / eval_chunk
 //!       graph executions, plus an end-to-end threaded coordinator round.
 //!
-//! Results feed EXPERIMENTS.md §Perf (before/after optimization log).
+//! Flags (after `cargo bench --bench hotpath --`):
+//!   --json <path>     write the machine-readable report (BENCH_hotpath
+//!                     schema: component -> ns/op, GB/s) for the perf
+//!                     trajectory tracked across PRs (see DESIGN.md §9);
+//!   --budget-ms <n>   per-component wall-time budget (default 400;
+//!                     CI smoke uses a tiny budget).
 
 use nacfl::config::ExperimentConfig;
 use nacfl::coordinator::{Coordinator, FailureConfig};
@@ -14,19 +22,62 @@ use nacfl::data::synth::{generate, SynthConfig};
 use nacfl::data::{partition, PartitionKind};
 use nacfl::fl::engine::{make_engine, ComputeEngine, RustEngine};
 use nacfl::model::{Mlp, MlpDims};
-use nacfl::netsim::{NetworkProcess, Scenario, ScenarioKind};
-use nacfl::policy::{parse_policy, solver, CompressionPolicy, NacFl};
+use nacfl::netsim::{DelayModel, NetworkProcess, Scenario, ScenarioKind};
+use nacfl::policy::solver::{reference, SolverWorkspace};
+use nacfl::policy::{parse_policy, CompressionPolicy, NacFl, PolicyCtx};
 use nacfl::quant::stochastic::quantize_into;
+use nacfl::quant::{Compressor, TopKSparsifier};
 use nacfl::runtime::{dims, Runtime};
-use nacfl::util::bench::{bench, black_box};
+use nacfl::util::bench::{bench, black_box, BenchJson};
 use nacfl::util::rng::Rng;
 use std::sync::Arc;
 use std::time::Duration;
 
+struct Options {
+    json: Option<String>,
+    budget: Duration,
+}
+
+fn parse_args() -> Options {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut json = None;
+    let mut budget_ms: u64 = 400;
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--json" => {
+                let Some(path) = argv.get(i + 1) else {
+                    eprintln!("--json needs a path");
+                    std::process::exit(2);
+                };
+                json = Some(path.clone());
+                i += 2;
+            }
+            "--budget-ms" => {
+                let Some(ms) = argv.get(i + 1).and_then(|s| s.parse().ok()) else {
+                    eprintln!("--budget-ms needs an integer");
+                    std::process::exit(2);
+                };
+                budget_ms = ms;
+                i += 2;
+            }
+            // cargo bench passes --bench through to harness=false targets.
+            "--bench" => i += 1,
+            other => {
+                eprintln!("(hotpath: ignoring argument `{other}`)");
+                i += 1;
+            }
+        }
+    }
+    Options { json, budget: Duration::from_millis(budget_ms.max(1)) }
+}
+
 fn main() {
+    let opts = parse_args();
     let cfg = ExperimentConfig::paper();
     let ctx = cfg.policy_ctx();
-    let budget = Duration::from_millis(400);
+    let budget = opts.budget;
+    let mut report = BenchJson::new("hotpath");
     let mut rng = Rng::new(0);
     println!("== L3 coordinator hot path ==");
 
@@ -34,16 +85,60 @@ fn main() {
     let c: Vec<f64> = (0..cfg.m).map(|_| rng.normal_ms(1.0, 1.0).exp()).collect();
     let mut nac = NacFl::new(1.0);
     nac.choose(&ctx, &c); // warm estimates
+    let (r_hat, d_hat) = nac.estimates();
+    // Persistent warmed instance: times the per-round choose (solve +
+    // estimate update) without paying a policy clone per iteration —
+    // with beta_n = 1/n the estimates are stationary after warm-up.
+    let mut p = nac.clone();
     let s = bench("nacfl_choose (eq.6 argmin, m=10)", budget, || {
-        let mut p = nac.clone();
         black_box(p.choose(&ctx, &c));
     });
     println!("{}", s.report());
+    report.record("nacfl_choose", &s);
 
-    let s = bench("fixed_error_solver (m=10)", budget, || {
-        black_box(solver::min_duration_with_error_budget(&ctx, &c, 5.25));
+    // The solver alone: workspace event sweep vs the retained direct
+    // reference (same warmed coefficients), so this run witnesses the
+    // allocation-free speedup directly.
+    let (a_coef, b_coef) = (r_hat, d_hat);
+    let mut ws = SolverWorkspace::new();
+    let s = bench("argmin_max (workspace, m=10)", budget, || {
+        black_box(ws.argmin_cost(&ctx, &c, a_coef, b_coef));
     });
     println!("{}", s.report());
+    report.record("argmin_max_workspace", &s);
+    let s = bench("argmin_max (reference, m=10)", budget, || {
+        black_box(reference::argmin_cost(&ctx, &c, a_coef, b_coef));
+    });
+    println!("{}", s.report());
+    report.record("argmin_max_reference", &s);
+
+    let s = bench("fixed_error_solver (m=10)", budget, || {
+        black_box(ws.min_duration_with_error_budget(&ctx, &c, 5.25));
+    });
+    println!("{}", s.report());
+    report.record("fixed_error_solver", &s);
+    let s = bench("fixed_error (reference, m=10)", budget, || {
+        black_box(reference::min_duration_with_error_budget(&ctx, &c, 5.25));
+    });
+    println!("{}", s.report());
+    report.record("fixed_error_reference", &s);
+
+    // TDMA coordinate descent (running-sum moves vs O(m) re-pricing).
+    let ctx_tdma = PolicyCtx::new(
+        cfg.tau,
+        DelayModel::TdmaSum { theta: 0.0 },
+        Arc::clone(&ctx.compressor),
+    );
+    let s = bench("argmin_tdma (workspace, m=10)", budget, || {
+        black_box(ws.argmin_cost(&ctx_tdma, &c, a_coef, b_coef));
+    });
+    println!("{}", s.report());
+    report.record("argmin_tdma_workspace", &s);
+    let s = bench("argmin_tdma (reference, m=10)", budget, || {
+        black_box(reference::argmin_cost(&ctx_tdma, &c, a_coef, b_coef));
+    });
+    println!("{}", s.report());
+    report.record("argmin_tdma_reference", &s);
 
     // Congestion process step.
     let sc = Scenario::new(ScenarioKind::PartiallyCorrelated { sigma_inf_sq: 4.0 }, cfg.m);
@@ -52,6 +147,7 @@ fn main() {
         black_box(proc.next_state());
     });
     println!("{}", s.report());
+    report.record("netsim_step", &s);
 
     // Rust quantizer throughput on a full update vector.
     let v: Vec<f32> = (0..dims::P).map(|_| rng.normal() as f32).collect();
@@ -61,6 +157,16 @@ fn main() {
         black_box(quantize_into(&v, 3.0, &mut qrng, &mut out));
     });
     println!("{} [{:.2} GB/s]", s.report(), s.throughput(dims::P * 4) / 1e9);
+    report.record_throughput("quantize_into", &s, dims::P * 4);
+
+    // Top-k water-filling sparsifier (select_nth-based threshold).
+    let topk = TopKSparsifier::new(dims::P, 0.05).unwrap();
+    let mut trng = Rng::new(4);
+    let s = bench("topk_compress (frac=0.05, P)", budget, || {
+        black_box(topk.compress_into(&v, 1, &mut trng, &mut out));
+    });
+    println!("{} [{:.2} GB/s]", s.report(), s.throughput(dims::P * 4) / 1e9);
+    report.record_throughput("topk_compress", &s, dims::P * 4);
 
     // Aggregation reduce (m adds over P).
     let dqs: Vec<Vec<f32>> = (0..cfg.m).map(|_| v.clone()).collect();
@@ -75,6 +181,7 @@ fn main() {
         black_box(agg[0]);
     });
     println!("{}", s.report());
+    report.record("aggregate_reduce", &s);
 
     // Rust engine local round (fallback compute).
     let mut re = RustEngine::new();
@@ -87,6 +194,7 @@ fn main() {
         black_box(re.local_round(&w, &xs, &ys, 0.07).unwrap());
     });
     println!("{}", s.report());
+    report.record("local_round_rust", &s);
 
     // PJRT path (skipped without artifacts).
     if Runtime::artifacts_present("artifacts") {
@@ -96,6 +204,7 @@ fn main() {
             black_box(xe.local_round(&w, &xs, &ys, 0.07).unwrap());
         });
         println!("{}", s.report());
+        report.record("local_round_xla", &s);
         let mut u = vec![0.0f32; d.p];
         rng.fill_uniform_f32(&mut u);
         let upd = xe.local_round(&w, &xs, &ys, 0.07).unwrap();
@@ -103,16 +212,19 @@ fn main() {
             black_box(xe.quantize(&upd, 3.0, &u).unwrap());
         });
         println!("{} [{:.2} GB/s]", s.report(), s.throughput(dims::P * 4) / 1e9);
+        report.record_throughput("quantize_xla", &s, dims::P * 4);
         let s = bench("global_step (xla graph, P)", budget, || {
             black_box(xe.global_step(&w, &upd, 0.07).unwrap());
         });
         println!("{}", s.report());
+        report.record("global_step_xla", &s);
         let ex: Vec<f32> = (0..d.eval_chunk * d.d_in).map(|_| rng.uniform_f32()).collect();
         let ey: Vec<i32> = (0..d.eval_chunk).map(|i| (i % 10) as i32).collect();
         let s = bench("eval_chunk (xla graph, 1000 rows)", budget, || {
             black_box(xe.eval_chunk(&w, &ex, &ey).unwrap());
         });
         println!("{}", s.report());
+        report.record("eval_chunk_xla", &s);
 
         // End-to-end threaded round (the real per-round cost).
         println!("\n== end-to-end coordinator round (threaded, xla) ==");
@@ -141,5 +253,13 @@ fn main() {
         );
     } else {
         println!("\n(artifacts missing: PJRT benches skipped — run `make artifacts`)");
+    }
+
+    if let Some(path) = &opts.json {
+        report.write(path).unwrap_or_else(|e| {
+            eprintln!("error writing {path}: {e}");
+            std::process::exit(1);
+        });
+        println!("\nmachine-readable report -> {path}");
     }
 }

@@ -141,7 +141,7 @@ impl ExperimentConfig {
     pub fn policy_ctx(&self) -> PolicyCtx {
         let compressor = parse_compressor(&self.compressor, &self.compressor_env())
             .expect("compressor spec must be validated before policy_ctx()");
-        PolicyCtx { tau: self.tau, delay: self.delay, compressor }
+        PolicyCtx::new(self.tau, self.delay, compressor)
     }
 
     /// The cell's paired congestion sample path for a seed (the single

@@ -221,6 +221,8 @@ fn run_round_based(
     let mut q: EventQueue<usize> = EventQueue::new();
     let mut lost = vec![false; m];
     let mut got = vec![false; m];
+    // Per-round delivered-choices buffer, reused across rounds.
+    let mut delivered: Vec<CompressionChoice> = Vec::with_capacity(m);
     let mut wall = 0.0f64;
     let mut rule = StoppingRule::new(cfg.k_eps);
     let mut aggregations = 0usize;
@@ -270,10 +272,8 @@ fn run_round_based(
         // Collect delivered choices in client order: deterministic, and
         // for full delivery the float order matches `PolicyCtx::rho`
         // exactly (analytic-tier parity).
-        let delivered: Vec<CompressionChoice> = (0..m)
-            .filter(|&j| got[j] && !lost[j])
-            .map(|j| choices[j])
-            .collect();
+        delivered.clear();
+        delivered.extend((0..m).filter(|&j| got[j] && !lost[j]).map(|j| choices[j]));
         dropped += popped - delivered.len();
         if !delivered.is_empty() {
             aggregations += 1;

@@ -32,6 +32,17 @@ pub fn default_threads() -> usize {
     std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
 }
 
+/// Resolve a user-facing `threads` setting to a concrete worker count:
+/// `0` means "all available cores" (the one `--threads` convention,
+/// shared by the cell grid, the DES sweep, the CLI and the benches).
+pub fn resolve_threads(threads: usize) -> usize {
+    if threads == 0 {
+        default_threads()
+    } else {
+        threads
+    }
+}
+
 /// The shared work-stealing harness: run `n_tasks` index-addressed tasks
 /// over `threads` workers and return results in task-index order.
 /// `on_result` fires on the collecting thread as results stream in
@@ -102,7 +113,7 @@ pub fn run_cell_parallel(
         Tier::Analytic { k_eps } => k_eps,
         Tier::Ml => return run_cell(cfg, tier, progress),
     };
-    let threads = if threads == 0 { default_threads() } else { threads };
+    let threads = resolve_threads(threads);
     let n_seeds = cfg.seeds.len();
     let n_tasks = cfg.policies.len() * n_seeds;
     if threads <= 1 || n_tasks <= 1 {
@@ -219,7 +230,7 @@ pub fn run_sweep(ctx: &PolicyCtx, spec: &SweepSpec, threads: usize) -> Result<Ve
     if n_tasks == 0 {
         return Err(anyhow!("empty sweep: scenarios/disciplines/policies/seeds required"));
     }
-    let threads = if threads == 0 { default_threads() } else { threads };
+    let threads = resolve_threads(threads);
     if threads <= 1 || n_tasks == 1 {
         return (0..n_tasks).map(|i| run_sweep_task(ctx, spec, i)).collect();
     }
@@ -282,6 +293,14 @@ mod tests {
         let mut cfg = ExperimentConfig::paper();
         cfg.seeds = (0..5).collect();
         cfg
+    }
+
+    #[test]
+    fn resolve_threads_maps_zero_to_all_cores() {
+        assert_eq!(resolve_threads(0), default_threads());
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(1), 1);
+        assert_eq!(resolve_threads(7), 7);
     }
 
     #[test]

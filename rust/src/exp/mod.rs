@@ -6,6 +6,9 @@ pub mod grid;
 pub mod presets;
 pub mod runner;
 
-pub use grid::{default_threads, run_cell_parallel, run_sweep, sweep_table, SweepCell, SweepSpec};
+pub use grid::{
+    default_threads, resolve_threads, run_cell_parallel, run_sweep, sweep_table, SweepCell,
+    SweepSpec,
+};
 pub use presets::{fig3_cells, table_cells};
 pub use runner::{run_cell, table_for, CellResult, Tier};

@@ -29,8 +29,8 @@ use nacfl::config::ExperimentConfig;
 use nacfl::data::PartitionKind;
 use nacfl::des::Discipline;
 use nacfl::exp::{
-    fig3_cells, run_cell, run_cell_parallel, run_sweep, sweep_table, table_cells, table_for,
-    SweepSpec, Tier,
+    fig3_cells, resolve_threads, run_cell, run_cell_parallel, run_sweep, sweep_table, table_cells,
+    table_for, SweepSpec, Tier,
 };
 use nacfl::netsim::ScenarioKind;
 use nacfl::policy::{NacFl, OraclePolicy};
@@ -284,7 +284,8 @@ fn cmd_des(args: &Args) -> Result<()> {
         max_rounds: 10_000_000,
     };
     let started = std::time::Instant::now();
-    let cells = run_sweep(&ctx, &spec, cfg.grid_threads)?;
+    let threads = resolve_threads(cfg.grid_threads);
+    let cells = run_sweep(&ctx, &spec, threads)?;
     let table = sweep_table("DES sweep: mean time-to-target", &spec, &cells)?;
     println!("{}", table.render());
     let unconverged = cells.iter().filter(|c| !c.result.converged).count();
@@ -314,7 +315,11 @@ fn cmd_des(args: &Args) -> Result<()> {
                 late as f64 / nf,
             );
         }
-        eprintln!("  ({} cells in {:.2?})", cells.len(), started.elapsed());
+        eprintln!(
+            "  ({} cells on {threads} worker threads in {:.2?})",
+            cells.len(),
+            started.elapsed()
+        );
     }
     Ok(())
 }

@@ -39,14 +39,19 @@ impl DelayModel {
         }
     }
 
+    /// Per-update compute-time coefficient theta (either variant).
+    #[inline]
+    pub fn theta(&self) -> f64 {
+        match self {
+            DelayModel::Max { theta } | DelayModel::TdmaSum { theta } => *theta,
+        }
+    }
+
     /// Per-client upload delay for a `wire_bits`-bit payload:
     /// `theta*tau + c_j * wire_bits`.
     #[inline]
     pub fn client_delay_bits(&self, tau: usize, wire_bits: f64, c_j: f64) -> f64 {
-        let theta = match self {
-            DelayModel::Max { theta } | DelayModel::TdmaSum { theta } => *theta,
-        };
-        theta * tau as f64 + c_j * wire_bits
+        self.theta() * tau as f64 + c_j * wire_bits
     }
 }
 

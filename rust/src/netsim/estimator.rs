@@ -31,6 +31,15 @@ impl ProbeEstimator {
     /// Observe the true state through the probe channel; returns the
     /// current estimate vector (what the policy gets to see).
     pub fn observe(&mut self, c_true: &[f64]) -> Vec<f64> {
+        let mut out = Vec::with_capacity(c_true.len());
+        self.observe_into(c_true, &mut out);
+        out
+    }
+
+    /// Allocation-free [`ProbeEstimator::observe`]: updates the EWMA and
+    /// writes the estimate into `out` (cleared first) — the per-round
+    /// path `sim::ProbeHook` uses so its buffer is reused across rounds.
+    pub fn observe_into(&mut self, c_true: &[f64], out: &mut Vec<f64>) {
         assert_eq!(c_true.len(), self.est.len());
         for (e, &c) in self.est.iter_mut().zip(c_true.iter()) {
             let xi = self.rng.normal() * self.noise;
@@ -42,7 +51,8 @@ impl ProbeEstimator {
             };
         }
         self.initialized = true;
-        self.est.clone()
+        out.clear();
+        out.extend_from_slice(&self.est);
     }
 
     pub fn estimate(&self) -> &[f64] {

@@ -3,18 +3,20 @@
 //! normalized variance staying under a fixed budget q (paper: q = 5.25).
 //! Exploits congestion diversity *across clients* but not across time.
 
-use super::solver::min_duration_with_error_budget;
+use super::solver::SolverWorkspace;
 use super::{CompressionChoice, CompressionPolicy, PolicyCtx};
 
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct FixedError {
     pub q_budget: f64,
+    /// Reusable solver scratch (the program re-solves every round).
+    ws: SolverWorkspace,
 }
 
 impl FixedError {
     pub fn new(q_budget: f64) -> Self {
         assert!(q_budget > 0.0);
-        FixedError { q_budget }
+        FixedError { q_budget, ws: SolverWorkspace::new() }
     }
 }
 
@@ -24,7 +26,7 @@ impl CompressionPolicy for FixedError {
     }
 
     fn choose(&mut self, ctx: &PolicyCtx, c: &[f64]) -> Vec<CompressionChoice> {
-        min_duration_with_error_budget(ctx, c, self.q_budget)
+        self.ws.min_duration_with_error_budget(ctx, c, self.q_budget)
     }
 }
 

@@ -41,14 +41,76 @@ use anyhow::{anyhow, Result};
 use std::fmt;
 use std::sync::Arc;
 
+/// Flat per-level pricing tables snapshotted from the registered
+/// compressor at [`PolicyCtx`] construction.  The solver hot loops index
+/// these instead of calling through `Arc<dyn Compressor>` — the values
+/// are the compressor's own (`wire_at(l)` is bit-for-bit
+/// `compressor.wire_bits(l)`), so nothing about the float path changes,
+/// only the dispatch cost.
+#[derive(Clone, Debug)]
+pub struct LevelTables {
+    /// Inclusive level range `(lo, hi)` the tables cover.
+    pub lo: u8,
+    pub hi: u8,
+    /// `wire[l - lo] = compressor.wire_bits(l)`.
+    pub wire: Vec<f64>,
+    /// `q[l - lo] = compressor.q_of_level(l)`.
+    pub q: Vec<f64>,
+}
+
+impl LevelTables {
+    fn snapshot(c: &dyn Compressor) -> Self {
+        let (lo, hi) = c.level_range();
+        assert!(lo <= hi, "compressor level range ({lo}, {hi}) is empty");
+        let n = (hi - lo) as usize + 1;
+        let mut wire = Vec::with_capacity(n);
+        let mut q = Vec::with_capacity(n);
+        for l in lo..=hi {
+            wire.push(c.wire_bits(l));
+            q.push(c.q_of_level(l));
+        }
+        LevelTables { lo, hi, wire, q }
+    }
+
+    /// Number of levels (`hi - lo + 1`).
+    #[inline]
+    pub fn n_levels(&self) -> usize {
+        self.wire.len()
+    }
+
+    /// Wire size in bits at `level` (must be within `[lo, hi]`).
+    #[inline]
+    pub fn wire_at(&self, level: u8) -> f64 {
+        self.wire[(level - self.lo) as usize]
+    }
+
+    /// Normalized-variance proxy at `level` (must be within `[lo, hi]`).
+    #[inline]
+    pub fn q_at(&self, level: u8) -> f64 {
+        self.q[(level - self.lo) as usize]
+    }
+
+    #[inline]
+    fn contains(&self, level: u8) -> bool {
+        (self.lo..=self.hi).contains(&level)
+    }
+}
+
 /// Everything a policy needs to price a candidate choice vector: the
 /// local-computation count, the delay model, and the experiment's
 /// registered compressor (wire size + variance proxy per level).
+///
+/// Construct via [`PolicyCtx::new`]: construction snapshots the
+/// compressor's per-level wire/variance models into flat [`LevelTables`]
+/// so the solver inner loops never pay virtual dispatch.  The public
+/// fields are read-only by convention — swapping `compressor` or `delay`
+/// after construction would leave the cached tables stale.
 #[derive(Clone)]
 pub struct PolicyCtx {
     pub tau: usize,
     pub delay: DelayModel,
     pub compressor: Arc<dyn Compressor>,
+    tables: Arc<LevelTables>,
 }
 
 impl fmt::Debug for PolicyCtx {
@@ -63,39 +125,56 @@ impl fmt::Debug for PolicyCtx {
 
 impl PolicyCtx {
     pub fn new(tau: usize, delay: DelayModel, compressor: Arc<dyn Compressor>) -> Self {
-        PolicyCtx { tau, delay, compressor }
+        let tables = Arc::new(LevelTables::snapshot(compressor.as_ref()));
+        PolicyCtx { tau, delay, compressor, tables }
     }
 
     /// Paper defaults: max delay model, ∞-norm quantizer with c_q = 6.25.
     pub fn paper_default(dim: usize) -> Self {
-        PolicyCtx {
-            tau: 2,
-            delay: DelayModel::paper_default(),
-            compressor: Arc::new(InfNormQuantizer::new(dim, VarianceModel::default())),
-        }
+        PolicyCtx::new(
+            2,
+            DelayModel::paper_default(),
+            Arc::new(InfNormQuantizer::new(dim, VarianceModel::default())),
+        )
+    }
+
+    /// The cached per-level pricing tables (solver hot path).
+    #[inline]
+    pub fn tables(&self) -> &LevelTables {
+        &self.tables
     }
 
     /// The compressor's inclusive level range.
     #[inline]
     pub fn level_range(&self) -> (u8, u8) {
-        self.compressor.level_range()
+        (self.tables.lo, self.tables.hi)
     }
 
-    /// Wire size in bits at a level.
+    /// Wire size in bits at a level (cached table lookup in range,
+    /// compressor call outside it — same floats either way).
     #[inline]
     pub fn wire_bits(&self, level: u8) -> f64 {
-        self.compressor.wire_bits(level)
+        if self.tables.contains(level) {
+            self.tables.wire_at(level)
+        } else {
+            self.compressor.wire_bits(level)
+        }
     }
 
-    /// Normalized-variance proxy at a level.
+    /// Normalized-variance proxy at a level (cached table lookup in
+    /// range, compressor call outside it — same floats either way).
     #[inline]
     pub fn q_of_level(&self, level: u8) -> f64 {
-        self.compressor.q_of_level(level)
+        if self.tables.contains(level) {
+            self.tables.q_at(level)
+        } else {
+            self.compressor.q_of_level(level)
+        }
     }
 
     /// Across-client average normalized variance (eq. (15)).
     pub fn q_bar(&self, ch: &[CompressionChoice]) -> f64 {
-        ch.iter().map(|x| self.compressor.q_of_level(x.level)).sum::<f64>() / ch.len() as f64
+        ch.iter().map(|x| self.q_of_level(x.level)).sum::<f64>() / ch.len() as f64
     }
 
     /// Rounds proxy for a choice vector: `sqrt(1 + q_bar)` (Theorem 2).
@@ -126,7 +205,7 @@ impl PolicyCtx {
     #[inline]
     pub fn client_delay(&self, level: u8, c_j: f64) -> f64 {
         self.delay
-            .client_delay_bits(self.tau, self.compressor.wire_bits(level), c_j)
+            .client_delay_bits(self.tau, self.wire_bits(level), c_j)
     }
 }
 
@@ -329,6 +408,31 @@ mod tests {
         assert_eq!(paper_roster().len(), 5);
         assert_eq!(theorem1_roster().len(), 6);
         assert!(theorem1_roster().last().unwrap().starts_with("oracle"));
+    }
+
+    #[test]
+    fn level_tables_snapshot_the_compressor_bitwise() {
+        use crate::quant::{parse_compressor, registry_specs, CompressorEnv};
+        for spec in registry_specs() {
+            let comp = parse_compressor(&spec, &CompressorEnv::paper_default(4096)).unwrap();
+            let ctx = PolicyCtx::new(2, DelayModel::paper_default(), comp);
+            let t = ctx.tables();
+            let (lo, hi) = ctx.compressor.level_range();
+            assert_eq!((t.lo, t.hi), (lo, hi), "{spec}");
+            assert_eq!(t.n_levels(), (hi - lo) as usize + 1, "{spec}");
+            for l in lo..=hi {
+                assert_eq!(
+                    ctx.wire_bits(l).to_bits(),
+                    ctx.compressor.wire_bits(l).to_bits(),
+                    "{spec} level {l}"
+                );
+                assert_eq!(
+                    ctx.q_of_level(l).to_bits(),
+                    ctx.compressor.q_of_level(l).to_bits(),
+                    "{spec} level {l}"
+                );
+            }
+        }
     }
 
     #[test]

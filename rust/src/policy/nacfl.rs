@@ -20,7 +20,7 @@
 //! which is our default.  A constant step size beta is also supported
 //! (the Theorem-1 regime and the §III-C remark ablation).
 
-use super::solver::argmin_cost;
+use super::solver::SolverWorkspace;
 use super::{uniform_choices, CompressionChoice, CompressionPolicy, PolicyCtx};
 
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -38,16 +38,20 @@ pub struct NacFl {
     r_hat: f64,
     d_hat: f64,
     n: usize,
+    /// Reusable solver scratch: the eq.-(6) argmin runs every round, so
+    /// the workspace keeps its buffers across rounds (allocation-free
+    /// after round 1).
+    ws: SolverWorkspace,
 }
 
 impl NacFl {
     /// Paper defaults: beta_n = 1/n, estimates cold-started on round 1.
     pub fn new(alpha: f64) -> Self {
-        NacFl { alpha, step: StepSize::Harmonic, r_hat: 0.0, d_hat: 0.0, n: 0 }
+        Self::with_step(alpha, StepSize::Harmonic)
     }
 
     pub fn with_step(alpha: f64, step: StepSize) -> Self {
-        NacFl { alpha, step, r_hat: 0.0, d_hat: 0.0, n: 0 }
+        NacFl { alpha, step, r_hat: 0.0, d_hat: 0.0, n: 0, ws: SolverWorkspace::new() }
     }
 
     /// Warm-start the running estimates (r_hat^(0), d_hat^(0)).
@@ -93,7 +97,7 @@ impl CompressionPolicy for NacFl {
         } else {
             (self.alpha * self.r_hat, self.d_hat)
         };
-        let ch = argmin_cost(ctx, c, a_coef, b_coef);
+        let ch = self.ws.argmin_cost(ctx, c, a_coef, b_coef);
 
         // Algorithm 1 lines 4-5: update the running averages.
         let beta = self.beta(self.n);

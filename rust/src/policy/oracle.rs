@@ -26,7 +26,7 @@
 //! outside the plan (the continuous AR(1) scenarios never revisit a
 //! state exactly) the policy plays the nearest planned state in L1.
 
-use super::solver::{duration_candidates, maximal_choices_under};
+use super::solver::SolverWorkspace;
 use super::{CompressionChoice, CompressionPolicy, PolicyCtx};
 use crate::netsim::{MarkovChain, NetworkProcess, Scenario, ScenarioKind};
 use crate::util::rng::Rng;
@@ -73,6 +73,7 @@ impl OraclePolicy {
         };
 
         let (mut er, mut ed) = eval(&plan);
+        let mut ws = SolverWorkspace::new();
         for _pass in 0..200 {
             let mut improved = false;
             for s in 0..k {
@@ -81,7 +82,7 @@ impl OraclePolicy {
                 let r_rest = er - mu[s] * rho_s;
                 let d_rest = ed - mu[s] * d_s;
                 if let Some((ch, rho_new, d_new)) =
-                    best_response(ctx, &states[s], mu[s], r_rest, d_rest)
+                    best_response(ctx, &mut ws, &states[s], mu[s], r_rest, d_rest)
                 {
                     let cur = (r_rest + mu[s] * rho_s) * (d_rest + mu[s] * d_s);
                     let new = (r_rest + mu[s] * rho_new) * (d_rest + mu[s] * d_new);
@@ -157,29 +158,25 @@ impl OraclePolicy {
 }
 
 /// Exact per-state best response for the max delay model via the shared
-/// candidate-duration sweep; coordinate descent would be used for TDMA
-/// but the oracle is only exercised with the paper's max model.
+/// workspace event sweep (`SolverWorkspace::best_response_max`);
+/// coordinate descent would be used for TDMA but the oracle is only
+/// exercised with the paper's max model.  The returned `(rho, d)` are
+/// re-priced freshly on the materialized vector so the caller's
+/// running `(E[rho], E[d])` accounting matches the direct reference
+/// implementation float-for-float.
 fn best_response(
     ctx: &PolicyCtx,
+    ws: &mut SolverWorkspace,
     c: &[f64],
     mu_s: f64,
     r_rest: f64,
     d_rest: f64,
 ) -> Option<(Vec<CompressionChoice>, f64, f64)> {
-    let cands = duration_candidates(ctx, c);
-    let mut best: Option<(f64, Vec<CompressionChoice>, f64, f64)> = None;
-    for &d_max in &cands {
-        let Some(ch) = maximal_choices_under(ctx, c, d_max * (1.0 + 1e-12)) else {
-            continue;
-        };
-        let rho = ctx.rho(&ch);
-        let d = ctx.duration(&ch, c);
-        let obj = (r_rest + mu_s * rho) * (d_rest + mu_s * d);
-        if best.as_ref().map(|(o, ..)| obj < *o).unwrap_or(true) {
-            best = Some((obj, ch, rho, d));
-        }
-    }
-    best.map(|(_, b, r, d)| (b, r, d))
+    let anchor = ws.best_response_max(ctx, c, mu_s, r_rest, d_rest)?;
+    let ch = ws.rebuild_max(ctx, c, anchor);
+    let rho = ctx.rho(&ch);
+    let d = ctx.duration(&ch, c);
+    Some((ch, rho, d))
 }
 
 impl CompressionPolicy for OraclePolicy {
@@ -265,6 +262,89 @@ mod tests {
         let mut oracle = OraclePolicy::solve(&ctx, &chain());
         let plan0 = oracle.plan[0].clone();
         assert_eq!(oracle.choose(&ctx, &[0.2, 0.2, 0.2]), plan0);
+    }
+
+    #[test]
+    fn workspace_best_response_matches_reference_solve_bitwise() {
+        use crate::policy::solver::reference;
+        // The pre-workspace per-state best response, verbatim.
+        fn best_response_ref(
+            ctx: &PolicyCtx,
+            c: &[f64],
+            mu_s: f64,
+            r_rest: f64,
+            d_rest: f64,
+        ) -> Option<(Vec<CompressionChoice>, f64, f64)> {
+            let cands = reference::duration_candidates(ctx, c);
+            let mut best: Option<(f64, Vec<CompressionChoice>, f64, f64)> = None;
+            for &d_max in &cands {
+                let Some(ch) = reference::maximal_choices_under(ctx, c, d_max * (1.0 + 1e-12))
+                else {
+                    continue;
+                };
+                let rho = ctx.rho(&ch);
+                let d = ctx.duration(&ch, c);
+                let obj = (r_rest + mu_s * rho) * (d_rest + mu_s * d);
+                if best.as_ref().map(|(o, ..)| obj < *o).unwrap_or(true) {
+                    best = Some((obj, ch, rho, d));
+                }
+            }
+            best.map(|(_, b, r, d)| (b, r, d))
+        }
+        // A reference solve: the same cyclic descent, reference responses.
+        fn solve_ref(ctx: &PolicyCtx, chain: &MarkovChain) -> (Vec<Vec<CompressionChoice>>, f64, f64)
+        {
+            let mu = chain.invariant();
+            let states = &chain.states;
+            let k = states.len();
+            let (lo, _) = ctx.level_range();
+            let mut plan: Vec<Vec<CompressionChoice>> = states
+                .iter()
+                .map(|s| vec![CompressionChoice::new(lo); s.len()])
+                .collect();
+            let mut er = 0.0;
+            let mut ed = 0.0;
+            for s in 0..k {
+                er += mu[s] * ctx.rho(&plan[s]);
+                ed += mu[s] * ctx.duration(&plan[s], &states[s]);
+            }
+            for _pass in 0..200 {
+                let mut improved = false;
+                for s in 0..k {
+                    let rho_s = ctx.rho(&plan[s]);
+                    let d_s = ctx.duration(&plan[s], &states[s]);
+                    let r_rest = er - mu[s] * rho_s;
+                    let d_rest = ed - mu[s] * d_s;
+                    if let Some((ch, rho_new, d_new)) =
+                        best_response_ref(ctx, &states[s], mu[s], r_rest, d_rest)
+                    {
+                        let cur = (r_rest + mu[s] * rho_s) * (d_rest + mu[s] * d_s);
+                        let new = (r_rest + mu[s] * rho_new) * (d_rest + mu[s] * d_new);
+                        if new < cur - 1e-15 {
+                            plan[s] = ch;
+                            er = r_rest + mu[s] * rho_new;
+                            ed = d_rest + mu[s] * d_new;
+                            improved = true;
+                        }
+                    }
+                }
+                if !improved {
+                    break;
+                }
+            }
+            (plan, er, ed)
+        }
+
+        let ctx = PolicyCtx::paper_default(198_760);
+        for seed in [0u64, 5, 9] {
+            let kind = ScenarioKind::PartiallyCorrelated { sigma_inf_sq: 4.0 };
+            let chain = OraclePolicy::discretized_chain(kind, 6, 5, seed).unwrap();
+            let fast = OraclePolicy::solve(&ctx, &chain);
+            let (plan, er, ed) = solve_ref(&ctx, &chain);
+            assert_eq!(fast.plan, plan, "seed {seed}: plans must be bit-identical");
+            assert_eq!(fast.expected_rho.to_bits(), er.to_bits(), "seed {seed}");
+            assert_eq!(fast.expected_d.to_bits(), ed.to_bits(), "seed {seed}");
+        }
     }
 
     #[test]

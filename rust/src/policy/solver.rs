@@ -7,36 +7,76 @@
 //! ```
 //!
 //! with `A = alpha * r_hat`, `B = d_hat`, `rho(b) = sqrt(1 + q_bar(b))`.
-//! Candidates are priced entirely through the registered
-//! [`Compressor`](crate::quant::Compressor): wire size drives the
-//! duration term, `q_of_level` drives the rounds proxy — so the same
-//! solvers serve the ∞-norm quantizer, top-k sparsification and
-//! error-bounded compression unmodified.
+//! Candidates are priced through the registered
+//! [`Compressor`](crate::quant::Compressor)'s per-level wire/variance
+//! models — snapshotted into the [`PolicyCtx`]'s flat
+//! [`LevelTables`](crate::policy::LevelTables) — so the same solvers
+//! serve the ∞-norm quantizer, top-k sparsification and error-bounded
+//! compression unmodified.
+//!
+//! This module is the analytic tier's hot path: the program is re-solved
+//! on every simulated round of every cell of every sweep.  The fast
+//! implementations live on a [`SolverWorkspace`] that each policy owns
+//! across rounds, so the per-round cost is allocation-free after warmup:
 //!
 //! * **Max delay model** — solved *exactly* by sweeping candidate
 //!   durations: for any choice vector with duration D, replacing it by
 //!   the per-client maximal levels under D (`l_j(D) = max{l : c_j s(l)
-//!   <= D}`, via `Compressor::max_level_within`) weakly lowers both
-//!   terms, and the optimal D is one of the `m * |levels|` values
-//!   `{c_j s(l)}`.  O(m * |levels| * log) per round.
+//!   <= D}`) weakly lowers both terms, and the optimal D is one of the
+//!   `m * |levels|` values `{c_j s(l)}`.  The workspace turns this into
+//!   ONE sorted event sweep: each `(c_j s(l), j, l)` event advances
+//!   client j's level pointer and updates running `(max duration,
+//!   sum q)` aggregates, so pricing a candidate is O(1) instead of the
+//!   former O(m) `maximal_choices_under` + `cost_of` rebuild per
+//!   candidate (and allocates nothing).
 //! * **TDMA-sum model** — the norm couples clients; solved by cyclic
-//!   coordinate descent (each sweep is exact per coordinate), verified
-//!   against exhaustive search on small instances by property tests.
+//!   coordinate descent (each sweep is exact per coordinate) over a
+//!   precomputed per-client delay table with running duration/variance
+//!   sums, so each candidate move is O(1) instead of O(m).
 //!
 //! The same machinery serves the Fixed-Error baseline (min duration
 //! subject to q_bar <= budget) since feasibility under the max model is
 //! monotone in the candidate duration.
+//!
+//! The pre-workspace direct implementations are retained verbatim in
+//! [`reference`] as executable specifications: property tests assert the
+//! fast paths return **bit-identical** choices across delay models and
+//! compressor families (and `argmin_exhaustive` remains the ground-truth
+//! oracle on small instances).  The guarantee holds away from exact
+//! float ties: running-aggregate pricing rounds differently from the
+//! reference's fresh reductions in the last ulp, so two candidates whose
+//! costs agree to within ~1 ulp could in principle rank differently —
+//! a measure-zero coincidence no random or paper instance exhibits.
 
-use super::{CompressionChoice, PolicyCtx};
+use super::{CompressionChoice, PolicyCtx, RoundsModel};
+use crate::netsim::DelayModel;
 
-/// Exact argmin of `a_coef * d(ch, c) + b_coef * rho(ch)`.
-pub fn argmin_cost(ctx: &PolicyCtx, c: &[f64], a_coef: f64, b_coef: f64) -> Vec<CompressionChoice> {
-    match ctx.delay {
-        crate::netsim::DelayModel::Max { .. } => argmin_cost_max(ctx, c, a_coef, b_coef),
-        crate::netsim::DelayModel::TdmaSum { .. } => {
-            argmin_cost_coordinate_descent(ctx, c, a_coef, b_coef)
-        }
-    }
+/// Relative tie-absorption guard shared by every candidate-duration
+/// consumer (`duration_candidates` inflation and the event sweep).
+const TIE_EPS: f64 = 1e-12;
+
+/// Exact argmin of `a_coef * d(ch, c) + b_coef * rho(ch)` (one-shot
+/// convenience over a fresh [`SolverWorkspace`]; policies that solve
+/// every round should own a workspace instead).
+pub fn argmin_cost(
+    ctx: &PolicyCtx,
+    c: &[f64],
+    a_coef: f64,
+    b_coef: f64,
+) -> Vec<CompressionChoice> {
+    SolverWorkspace::new().argmin_cost(ctx, c, a_coef, b_coef)
+}
+
+/// Fixed-Error program ([13]): minimize round duration subject to
+/// `q_bar(ch) <= q_budget` (one-shot convenience over a fresh
+/// [`SolverWorkspace`]).  Exact for the max model (duration-candidate
+/// sweep + monotone feasibility); greedy relaxation for TDMA.
+pub fn min_duration_with_error_budget(
+    ctx: &PolicyCtx,
+    c: &[f64],
+    q_budget: f64,
+) -> Vec<CompressionChoice> {
+    SolverWorkspace::new().min_duration_with_error_budget(ctx, c, q_budget)
 }
 
 /// Cost of a specific choice vector (shared by tests and the oracle).
@@ -50,107 +90,400 @@ pub fn cost_of(
     a_coef * ctx.duration(ch, c) + b_coef * ctx.rho(ch)
 }
 
-/// The candidate durations of the max-model sweep: every `c_j * s(l)` at
-/// or above the forced floor `max_j c_j * s(lo)`, sorted and deduped.
-/// Shared with the oracle's per-state best response.
-pub(crate) fn duration_candidates(ctx: &PolicyCtx, c: &[f64]) -> Vec<f64> {
-    let (lo, hi) = ctx.level_range();
-    let floor = c
-        .iter()
-        .map(|&cj| cj * ctx.wire_bits(lo))
-        .fold(0.0, f64::max);
-    let mut cands: Vec<f64> = Vec::with_capacity(c.len() * (hi - lo + 1) as usize);
-    for &cj in c {
-        for l in lo..=hi {
-            let d = cj * ctx.wire_bits(l);
-            if d >= floor - 1e-12 {
-                cands.push(d);
+/// One `(duration, client, level)` point of the max-model sweep:
+/// client `client` can afford level `level` iff the candidate round
+/// duration is at least `d = c_j * s(level)`.
+#[derive(Clone, Copy, Debug)]
+struct SweepEvent {
+    d: f64,
+    client: u32,
+    level: u8,
+}
+
+/// Reusable scratch for the per-round argmin solvers.  Owned by each
+/// policy across rounds so the hot path allocates nothing after the
+/// first round (all buffers retain capacity).
+#[derive(Clone, Debug, Default)]
+pub struct SolverWorkspace {
+    /// Max model: all `(c_j s(l), j, l)` events, sorted by duration.
+    events: Vec<SweepEvent>,
+    /// Max model: candidate anchors (sorted, tie-deduped event values at
+    /// or above the floor) — the same list `reference::duration_candidates`
+    /// builds.
+    cands: Vec<f64>,
+    /// Per-client current level during a sweep / descent.
+    lev: Vec<u8>,
+    /// Per-client "has any affordable level yet" flag (sweep feasibility).
+    got: Vec<bool>,
+    /// TDMA: flat `m x n_levels` per-client delay table.
+    delays: Vec<f64>,
+}
+
+impl SolverWorkspace {
+    pub fn new() -> Self {
+        SolverWorkspace::default()
+    }
+
+    /// Exact argmin of `a_coef * d(ch, c) + b_coef * rho(ch)`.
+    pub fn argmin_cost(
+        &mut self,
+        ctx: &PolicyCtx,
+        c: &[f64],
+        a_coef: f64,
+        b_coef: f64,
+    ) -> Vec<CompressionChoice> {
+        match ctx.delay {
+            DelayModel::Max { .. } => self.argmin_cost_max(ctx, c, a_coef, b_coef),
+            DelayModel::TdmaSum { .. } => self.argmin_cost_tdma(ctx, c, a_coef, b_coef),
+        }
+    }
+
+    /// Fixed-Error program: minimize duration subject to `q_bar <=
+    /// q_budget` (exact under the max model, greedy under TDMA).
+    pub fn min_duration_with_error_budget(
+        &mut self,
+        ctx: &PolicyCtx,
+        c: &[f64],
+        q_budget: f64,
+    ) -> Vec<CompressionChoice> {
+        match ctx.delay {
+            DelayModel::Max { .. } => self.min_duration_max(ctx, c, q_budget),
+            DelayModel::TdmaSum { .. } => self.min_duration_tdma(ctx, c, q_budget),
+        }
+    }
+
+    /// Build the sorted event list + candidate anchors for `c`.  The
+    /// anchor list replicates `reference::duration_candidates` exactly
+    /// (same values, same tie clustering), so the sweep visits the same
+    /// candidates the reference solver prices.
+    fn prepare_max(&mut self, ctx: &PolicyCtx, c: &[f64]) {
+        let t = ctx.tables();
+        let floor = c.iter().map(|&cj| cj * t.wire[0]).fold(0.0, f64::max);
+        self.events.clear();
+        for (j, &cj) in c.iter().enumerate() {
+            for (li, &w) in t.wire.iter().enumerate() {
+                self.events.push(SweepEvent {
+                    d: cj * w,
+                    client: j as u32,
+                    level: t.lo + li as u8,
+                });
+            }
+        }
+        // Total order (duration, client, level): deterministic under any
+        // sort algorithm, so tied events always process in client order.
+        self.events.sort_unstable_by(|a, b| {
+            a.d.partial_cmp(&b.d)
+                .unwrap()
+                .then(a.client.cmp(&b.client))
+                .then(a.level.cmp(&b.level))
+        });
+        self.cands.clear();
+        for e in &self.events {
+            if e.d >= floor - TIE_EPS {
+                self.cands.push(e.d);
+            }
+        }
+        self.cands.push(floor);
+        self.cands.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        self.cands.dedup_by(|a, b| (*a - *b).abs() < TIE_EPS);
+    }
+
+    /// The one event sweep behind every max-model solver: visits each
+    /// candidate anchor in ascending duration order with the running
+    /// aggregates of the per-client-maximal choice vector under that
+    /// candidate — `x_max` (the vector's realized `max_j c_j s(l_j)`) and
+    /// `q_sum` (its `sum_j q(l_j)`).  Infeasible candidates (some client
+    /// cannot afford even its minimum level) are skipped, exactly like
+    /// the reference's `maximal_choices_under` returning `None`.  `visit`
+    /// returns `true` to stop early.
+    fn sweep_max(
+        &mut self,
+        ctx: &PolicyCtx,
+        m: usize,
+        mut visit: impl FnMut(f64, f64, f64) -> bool,
+    ) {
+        let t = ctx.tables();
+        self.lev.clear();
+        self.lev.resize(m, t.lo);
+        self.got.clear();
+        self.got.resize(m, false);
+        let mut unready = m;
+        let mut q_sum = 0.0f64;
+        let mut x_max = f64::NEG_INFINITY;
+        let mut p = 0usize;
+        for &anchor in &self.cands {
+            let d_max = anchor * (1.0 + TIE_EPS);
+            while p < self.events.len() && self.events[p].d <= d_max {
+                let e = self.events[p];
+                p += 1;
+                // Events arrive in ascending duration order, and a
+                // client's realized delay is its largest processed event,
+                // so the vector's max duration is the last processed d.
+                x_max = e.d;
+                let j = e.client as usize;
+                if !self.got[j] {
+                    self.got[j] = true;
+                    unready -= 1;
+                    self.lev[j] = e.level;
+                    q_sum += t.q_at(e.level);
+                } else if e.level > self.lev[j] {
+                    q_sum += t.q_at(e.level) - t.q_at(self.lev[j]);
+                    self.lev[j] = e.level;
+                }
+            }
+            if unready > 0 {
+                continue;
+            }
+            if visit(anchor, x_max, q_sum) {
+                return;
             }
         }
     }
-    cands.push(floor);
-    cands.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    cands.dedup_by(|a, b| (*a - *b).abs() < 1e-12);
-    cands
-}
 
-/// For each client, the largest level whose upload fits in `d_max`
-/// (None if even the minimum level does not fit).  Callers pass the
-/// candidate pre-inflated by `(1 + 1e-12)` to absorb float ties.
-pub(crate) fn maximal_choices_under(
-    ctx: &PolicyCtx,
-    c: &[f64],
-    d_max: f64,
-) -> Option<Vec<CompressionChoice>> {
-    let mut ch = Vec::with_capacity(c.len());
-    for &cj in c {
-        match ctx.compressor.max_level_within(d_max / cj) {
-            Some(l) => ch.push(CompressionChoice::new(l)),
-            None => return None,
+    fn argmin_cost_max(
+        &mut self,
+        ctx: &PolicyCtx,
+        c: &[f64],
+        a_coef: f64,
+        b_coef: f64,
+    ) -> Vec<CompressionChoice> {
+        self.prepare_max(ctx, c);
+        let theta_tau = ctx.delay.theta() * ctx.tau as f64;
+        let m_f = c.len() as f64;
+        let mut best: Option<(f64, f64)> = None; // (cost, anchor)
+        self.sweep_max(ctx, c.len(), |anchor, x_max, q_sum| {
+            let cost = a_coef * (theta_tau + x_max) + b_coef * RoundsModel::h_of_q(q_sum / m_f);
+            if best.map(|(bc, _)| cost < bc).unwrap_or(true) {
+                best = Some((cost, anchor));
+            }
+            false
+        });
+        let (_, anchor) = best.expect("max-model argmin: floor candidate is always feasible");
+        self.rebuild_max(ctx, c, anchor)
+    }
+
+    fn min_duration_max(
+        &mut self,
+        ctx: &PolicyCtx,
+        c: &[f64],
+        q_budget: f64,
+    ) -> Vec<CompressionChoice> {
+        self.prepare_max(ctx, c);
+        let m_f = c.len() as f64;
+        // q_bar of maximal levels under D is non-increasing in D; take
+        // the smallest feasible candidate.
+        let mut found: Option<f64> = None;
+        self.sweep_max(ctx, c.len(), |anchor, _x_max, q_sum| {
+            if q_sum / m_f <= q_budget {
+                found = Some(anchor);
+                true
+            } else {
+                false
+            }
+        });
+        match found {
+            Some(anchor) => self.rebuild_max(ctx, c, anchor),
+            // Budget unreachable even at the top level everywhere: send
+            // the maximum precision available.
+            None => vec![CompressionChoice::new(ctx.tables().hi); c.len()],
         }
     }
-    Some(ch)
-}
 
-fn argmin_cost_max(
-    ctx: &PolicyCtx,
-    c: &[f64],
-    a_coef: f64,
-    b_coef: f64,
-) -> Vec<CompressionChoice> {
-    let cands = duration_candidates(ctx, c);
-    let mut best: Option<(f64, Vec<CompressionChoice>)> = None;
-    for &d_max in &cands {
-        if let Some(ch) = maximal_choices_under(ctx, c, d_max * (1.0 + 1e-12)) {
-            let cost = cost_of(ctx, c, &ch, a_coef, b_coef);
-            if best.as_ref().map(|(bc, _)| cost < *bc).unwrap_or(true) {
-                best = Some((cost, ch));
+    /// Per-state best response for the oracle's eq.-(4) cyclic descent:
+    /// minimize `(r_rest + mu_s rho(b)) (d_rest + mu_s d(b, c))` over the
+    /// candidate sweep; returns the winning candidate anchor.
+    pub(crate) fn best_response_max(
+        &mut self,
+        ctx: &PolicyCtx,
+        c: &[f64],
+        mu_s: f64,
+        r_rest: f64,
+        d_rest: f64,
+    ) -> Option<f64> {
+        self.prepare_max(ctx, c);
+        let theta_tau = ctx.delay.theta() * ctx.tau as f64;
+        let m_f = c.len() as f64;
+        let mut best: Option<(f64, f64)> = None; // (objective, anchor)
+        self.sweep_max(ctx, c.len(), |anchor, x_max, q_sum| {
+            let rho = RoundsModel::h_of_q(q_sum / m_f);
+            let d = theta_tau + x_max;
+            let obj = (r_rest + mu_s * rho) * (d_rest + mu_s * d);
+            if best.map(|(o, _)| obj < o).unwrap_or(true) {
+                best = Some((obj, anchor));
+            }
+            false
+        });
+        best.map(|(_, anchor)| anchor)
+    }
+
+    /// Materialize the per-client maximal choice vector at a winning
+    /// candidate anchor.  The primary path is the compressor's
+    /// `max_level_within` closed form — the exact float path of the
+    /// reference solver, so the returned vector matches it bit-for-bit.
+    pub(crate) fn rebuild_max(
+        &self,
+        ctx: &PolicyCtx,
+        c: &[f64],
+        anchor: f64,
+    ) -> Vec<CompressionChoice> {
+        let d_max = anchor * (1.0 + TIE_EPS);
+        let mut out = Vec::with_capacity(c.len());
+        for &cj in c {
+            match ctx.compressor.max_level_within(d_max / cj) {
+                Some(l) => out.push(CompressionChoice::new(l)),
+                None => {
+                    // Quotient-vs-product rounding disagreed by an ulp at
+                    // an exact feasibility boundary; rebuild from the
+                    // event stream the sweep actually priced.
+                    return self.rebuild_max_from_events(ctx, c.len(), d_max);
+                }
             }
         }
+        out
     }
-    best.expect("max-model argmin: floor candidate is always feasible").1
-}
 
-fn argmin_cost_coordinate_descent(
-    ctx: &PolicyCtx,
-    c: &[f64],
-    a_coef: f64,
-    b_coef: f64,
-) -> Vec<CompressionChoice> {
-    let m = c.len();
-    let (lo, hi) = ctx.level_range();
-    let mut ch = vec![CompressionChoice::new(lo); m];
-    let mut cost = cost_of(ctx, c, &ch, a_coef, b_coef);
-    // Cyclic exact line search per coordinate; objective strictly
-    // decreases each accepted move, so this terminates.
-    for _sweep in 0..64 {
-        let mut improved = false;
-        for j in 0..m {
-            let mut best_l = ch[j].level;
-            let mut best_cost = cost;
-            let saved = ch[j].level;
-            for l in lo..=hi {
-                if l == saved {
+    /// Fallback rebuild with the sweep's own product comparisons.
+    fn rebuild_max_from_events(
+        &self,
+        ctx: &PolicyCtx,
+        m: usize,
+        d_max: f64,
+    ) -> Vec<CompressionChoice> {
+        let lo = ctx.tables().lo;
+        let mut out = vec![CompressionChoice::new(lo); m];
+        for e in &self.events {
+            if e.d > d_max {
+                break;
+            }
+            let j = e.client as usize;
+            if e.level > out[j].level {
+                out[j].level = e.level;
+            }
+        }
+        out
+    }
+
+    /// TDMA-sum argmin by cyclic exact coordinate descent over a
+    /// precomputed per-client delay table.  Candidate moves are priced in
+    /// O(1) from running duration/variance sums; the sums are re-anchored
+    /// to the fresh client-order reduction after every accepted move, so
+    /// the accept/reject trajectory matches the reference's fresh
+    /// `cost_of` evaluations away from exact float ties (delta pricing
+    /// can differ from a fresh reduction in the last ulp, so two
+    /// candidate costs equal to within ~1 ulp could in principle rank
+    /// differently — a measure-zero event the equivalence property tests
+    /// pin in practice).
+    fn argmin_cost_tdma(
+        &mut self,
+        ctx: &PolicyCtx,
+        c: &[f64],
+        a_coef: f64,
+        b_coef: f64,
+    ) -> Vec<CompressionChoice> {
+        let t = ctx.tables();
+        let (lo, nl) = (t.lo, t.n_levels());
+        let m = c.len();
+        self.delays.clear();
+        for &cj in c {
+            for &w in &t.wire {
+                self.delays.push(ctx.delay.client_delay_bits(ctx.tau, w, cj));
+            }
+        }
+        self.lev.clear();
+        self.lev.resize(m, lo);
+        let m_f = m as f64;
+        let fresh_sums = |lev: &[u8], delays: &[f64]| -> (f64, f64) {
+            // The reference `cost_of` reductions: left-to-right client
+            // order, so re-anchored costs are bit-identical to it.
+            let mut dur = 0.0f64;
+            let mut q = 0.0f64;
+            for (j, &l) in lev.iter().enumerate() {
+                dur += delays[j * nl + (l - lo) as usize];
+                q += t.q_at(l);
+            }
+            (dur, q)
+        };
+        let (mut dur_sum, mut q_sum) = fresh_sums(&self.lev, &self.delays);
+        let mut cost = a_coef * dur_sum + b_coef * RoundsModel::h_of_q(q_sum / m_f);
+        // Cyclic exact line search per coordinate; objective strictly
+        // decreases each accepted move, so this terminates.
+        for _sweep in 0..64 {
+            let mut improved = false;
+            for j in 0..m {
+                let saved = self.lev[j];
+                let d_cur = self.delays[j * nl + (saved - lo) as usize];
+                let q_cur = t.q_at(saved);
+                let mut best_l = saved;
+                let mut best_cost = cost;
+                for li in 0..nl {
+                    let l = lo + li as u8;
+                    if l == saved {
+                        continue;
+                    }
+                    let dnew = dur_sum - d_cur + self.delays[j * nl + li];
+                    let qnew = q_sum - q_cur + t.q[li];
+                    let cnew = a_coef * dnew + b_coef * RoundsModel::h_of_q(qnew / m_f);
+                    if cnew < best_cost - 1e-15 {
+                        best_cost = cnew;
+                        best_l = l;
+                    }
+                }
+                if best_l != saved {
+                    self.lev[j] = best_l;
+                    let (d, q) = fresh_sums(&self.lev, &self.delays);
+                    dur_sum = d;
+                    q_sum = q;
+                    cost = a_coef * dur_sum + b_coef * RoundsModel::h_of_q(q_sum / m_f);
+                    improved = true;
+                }
+            }
+            if !improved {
+                break;
+            }
+        }
+        self.lev.iter().map(|&l| CompressionChoice::new(l)).collect()
+    }
+
+    /// TDMA Fixed-Error greedy: start at minimum duration (everyone at
+    /// the lowest level); while over budget, raise the level that buys
+    /// the most variance reduction per unit duration increase.  Table
+    /// lookups replace the reference's per-step virtual calls; the float
+    /// path is otherwise identical.
+    fn min_duration_tdma(
+        &mut self,
+        ctx: &PolicyCtx,
+        c: &[f64],
+        q_budget: f64,
+    ) -> Vec<CompressionChoice> {
+        let t = ctx.tables();
+        let (lo, hi) = (t.lo, t.hi);
+        let m = c.len();
+        self.lev.clear();
+        self.lev.resize(m, lo);
+        loop {
+            let q_bar = self.lev.iter().map(|&l| t.q_at(l)).sum::<f64>() / m as f64;
+            if q_bar <= q_budget {
+                break;
+            }
+            let mut best: Option<(f64, usize)> = None;
+            for j in 0..m {
+                if self.lev[j] >= hi {
                     continue;
                 }
-                ch[j].level = l;
-                let cnew = cost_of(ctx, c, &ch, a_coef, b_coef);
-                if cnew < best_cost - 1e-15 {
-                    best_cost = cnew;
-                    best_l = l;
+                let dv = t.q_at(self.lev[j]) - t.q_at(self.lev[j] + 1);
+                let dd = c[j] * (t.wire_at(self.lev[j] + 1) - t.wire_at(self.lev[j]));
+                let score = dv / dd.max(1e-300);
+                if best.map(|(s, _)| score > s).unwrap_or(true) {
+                    best = Some((score, j));
                 }
             }
-            ch[j].level = best_l;
-            if best_l != saved {
-                cost = best_cost;
-                improved = true;
+            match best {
+                Some((_, j)) => self.lev[j] += 1,
+                None => break, // everyone at the top level
             }
         }
-        if !improved {
-            break;
-        }
+        self.lev.iter().map(|&l| CompressionChoice::new(l)).collect()
     }
-    ch
 }
 
 /// Exhaustive argmin (test reference; exponential — small instances only).
@@ -188,56 +521,182 @@ pub fn argmin_exhaustive(
     }
 }
 
-/// Fixed-Error program ([13]): minimize round duration subject to
-/// `q_bar(ch) <= q_budget`.  Exact for the max model (duration-candidate
-/// sweep + monotone feasibility); greedy relaxation for TDMA.
-pub fn min_duration_with_error_budget(
-    ctx: &PolicyCtx,
-    c: &[f64],
-    q_budget: f64,
-) -> Vec<CompressionChoice> {
-    let (lo, hi) = ctx.level_range();
-    match ctx.delay {
-        crate::netsim::DelayModel::Max { .. } => {
-            let cands = duration_candidates(ctx, c);
-            // q_bar of maximal levels under D is non-increasing in D; take
-            // the smallest feasible candidate.
-            for &d_max in &cands {
-                if let Some(ch) = maximal_choices_under(ctx, c, d_max * (1.0 + 1e-12)) {
-                    if ctx.q_bar(&ch) <= q_budget {
-                        return ch;
-                    }
+/// The pre-workspace direct solvers, retained verbatim as executable
+/// specifications.  Property tests assert the [`SolverWorkspace`] paths
+/// return bit-identical choices; `benches/hotpath.rs` times them to
+/// measure the workspace speedup.  Not for production use: every
+/// candidate re-allocates and re-prices from scratch.
+pub mod reference {
+    use super::*;
+
+    /// Exact argmin of `a_coef * d(ch, c) + b_coef * rho(ch)`.
+    pub fn argmin_cost(
+        ctx: &PolicyCtx,
+        c: &[f64],
+        a_coef: f64,
+        b_coef: f64,
+    ) -> Vec<CompressionChoice> {
+        match ctx.delay {
+            DelayModel::Max { .. } => argmin_cost_max(ctx, c, a_coef, b_coef),
+            DelayModel::TdmaSum { .. } => argmin_cost_coordinate_descent(ctx, c, a_coef, b_coef),
+        }
+    }
+
+    /// The candidate durations of the max-model sweep: every `c_j * s(l)`
+    /// at or above the forced floor `max_j c_j * s(lo)`, sorted and
+    /// deduped.
+    pub(crate) fn duration_candidates(ctx: &PolicyCtx, c: &[f64]) -> Vec<f64> {
+        let (lo, hi) = ctx.level_range();
+        let floor = c
+            .iter()
+            .map(|&cj| cj * ctx.wire_bits(lo))
+            .fold(0.0, f64::max);
+        let mut cands: Vec<f64> = Vec::with_capacity(c.len() * (hi - lo + 1) as usize);
+        for &cj in c {
+            for l in lo..=hi {
+                let d = cj * ctx.wire_bits(l);
+                if d >= floor - TIE_EPS {
+                    cands.push(d);
                 }
             }
-            // Budget unreachable even at the top level everywhere: send
-            // the maximum precision available.
-            vec![CompressionChoice::new(hi); c.len()]
         }
-        crate::netsim::DelayModel::TdmaSum { .. } => {
-            // Greedy: start at minimum duration (everyone at the lowest
-            // level); while over budget, raise the level that buys the
-            // most variance reduction per unit duration increase.
-            let m = c.len();
-            let mut ch = vec![CompressionChoice::new(lo); m];
-            while ctx.q_bar(&ch) > q_budget {
-                let mut best: Option<(f64, usize)> = None;
-                for j in 0..m {
-                    if ch[j].level >= hi {
+        cands.push(floor);
+        cands.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        cands.dedup_by(|a, b| (*a - *b).abs() < TIE_EPS);
+        cands
+    }
+
+    /// For each client, the largest level whose upload fits in `d_max`
+    /// (None if even the minimum level does not fit).  Callers pass the
+    /// candidate pre-inflated by `(1 + 1e-12)` to absorb float ties.
+    pub(crate) fn maximal_choices_under(
+        ctx: &PolicyCtx,
+        c: &[f64],
+        d_max: f64,
+    ) -> Option<Vec<CompressionChoice>> {
+        let mut ch = Vec::with_capacity(c.len());
+        for &cj in c {
+            match ctx.compressor.max_level_within(d_max / cj) {
+                Some(l) => ch.push(CompressionChoice::new(l)),
+                None => return None,
+            }
+        }
+        Some(ch)
+    }
+
+    fn argmin_cost_max(
+        ctx: &PolicyCtx,
+        c: &[f64],
+        a_coef: f64,
+        b_coef: f64,
+    ) -> Vec<CompressionChoice> {
+        let cands = duration_candidates(ctx, c);
+        let mut best: Option<(f64, Vec<CompressionChoice>)> = None;
+        for &d_max in &cands {
+            if let Some(ch) = maximal_choices_under(ctx, c, d_max * (1.0 + TIE_EPS)) {
+                let cost = cost_of(ctx, c, &ch, a_coef, b_coef);
+                if best.as_ref().map(|(bc, _)| cost < *bc).unwrap_or(true) {
+                    best = Some((cost, ch));
+                }
+            }
+        }
+        best.expect("max-model argmin: floor candidate is always feasible").1
+    }
+
+    fn argmin_cost_coordinate_descent(
+        ctx: &PolicyCtx,
+        c: &[f64],
+        a_coef: f64,
+        b_coef: f64,
+    ) -> Vec<CompressionChoice> {
+        let m = c.len();
+        let (lo, hi) = ctx.level_range();
+        let mut ch = vec![CompressionChoice::new(lo); m];
+        let mut cost = cost_of(ctx, c, &ch, a_coef, b_coef);
+        // Cyclic exact line search per coordinate; objective strictly
+        // decreases each accepted move, so this terminates.
+        for _sweep in 0..64 {
+            let mut improved = false;
+            for j in 0..m {
+                let mut best_l = ch[j].level;
+                let mut best_cost = cost;
+                let saved = ch[j].level;
+                for l in lo..=hi {
+                    if l == saved {
                         continue;
                     }
-                    let dv = ctx.q_of_level(ch[j].level) - ctx.q_of_level(ch[j].level + 1);
-                    let dd = c[j] * (ctx.wire_bits(ch[j].level + 1) - ctx.wire_bits(ch[j].level));
-                    let score = dv / dd.max(1e-300);
-                    if best.map(|(s, _)| score > s).unwrap_or(true) {
-                        best = Some((score, j));
+                    ch[j].level = l;
+                    let cnew = cost_of(ctx, c, &ch, a_coef, b_coef);
+                    if cnew < best_cost - 1e-15 {
+                        best_cost = cnew;
+                        best_l = l;
                     }
                 }
-                match best {
-                    Some((_, j)) => ch[j].level += 1,
-                    None => break, // everyone at the top level
+                ch[j].level = best_l;
+                if best_l != saved {
+                    cost = best_cost;
+                    improved = true;
                 }
             }
-            ch
+            if !improved {
+                break;
+            }
+        }
+        ch
+    }
+
+    /// Fixed-Error program: minimize round duration subject to
+    /// `q_bar(ch) <= q_budget`.
+    pub fn min_duration_with_error_budget(
+        ctx: &PolicyCtx,
+        c: &[f64],
+        q_budget: f64,
+    ) -> Vec<CompressionChoice> {
+        let (lo, hi) = ctx.level_range();
+        match ctx.delay {
+            DelayModel::Max { .. } => {
+                let cands = duration_candidates(ctx, c);
+                // q_bar of maximal levels under D is non-increasing in D;
+                // take the smallest feasible candidate.
+                for &d_max in &cands {
+                    if let Some(ch) = maximal_choices_under(ctx, c, d_max * (1.0 + TIE_EPS)) {
+                        if ctx.q_bar(&ch) <= q_budget {
+                            return ch;
+                        }
+                    }
+                }
+                // Budget unreachable even at the top level everywhere:
+                // send the maximum precision available.
+                vec![CompressionChoice::new(hi); c.len()]
+            }
+            DelayModel::TdmaSum { .. } => {
+                // Greedy: start at minimum duration (everyone at the
+                // lowest level); while over budget, raise the level that
+                // buys the most variance reduction per unit duration
+                // increase.
+                let m = c.len();
+                let mut ch = vec![CompressionChoice::new(lo); m];
+                while ctx.q_bar(&ch) > q_budget {
+                    let mut best: Option<(f64, usize)> = None;
+                    for j in 0..m {
+                        if ch[j].level >= hi {
+                            continue;
+                        }
+                        let dv = ctx.q_of_level(ch[j].level) - ctx.q_of_level(ch[j].level + 1);
+                        let dd =
+                            c[j] * (ctx.wire_bits(ch[j].level + 1) - ctx.wire_bits(ch[j].level));
+                        let score = dv / dd.max(1e-300);
+                        if best.map(|(s, _)| score > s).unwrap_or(true) {
+                            best = Some((score, j));
+                        }
+                    }
+                    match best {
+                        Some((_, j)) => ch[j].level += 1,
+                        None => break, // everyone at the top level
+                    }
+                }
+                ch
+            }
         }
     }
 }
@@ -246,7 +705,9 @@ pub fn min_duration_with_error_budget(
 mod tests {
     use super::*;
     use crate::netsim::DelayModel;
-    use crate::quant::{InfNormQuantizer, VarianceModel};
+    use crate::quant::{
+        Compressor, ErrorBoundQuantizer, InfNormQuantizer, TopKSparsifier, VarianceModel,
+    };
     use crate::util::check::{check, Config};
     use std::sync::Arc;
 
@@ -256,6 +717,16 @@ mod tests {
             delay,
             Arc::new(InfNormQuantizer::new(dim, VarianceModel::default())),
         )
+    }
+
+    /// One context per compressor family for the equivalence sweeps.
+    fn family_ctx(family: usize, delay: DelayModel) -> PolicyCtx {
+        let comp: Arc<dyn Compressor> = match family {
+            0 => Arc::new(InfNormQuantizer::new(4096, VarianceModel::default())),
+            1 => Arc::new(TopKSparsifier::new(4096, 0.07).unwrap()),
+            _ => Arc::new(ErrorBoundQuantizer::new(4096, 1.5625).unwrap()),
+        };
+        PolicyCtx::new(2, delay, comp)
     }
 
     #[test]
@@ -352,6 +823,89 @@ mod tests {
     }
 
     #[test]
+    fn prop_workspace_argmin_bit_identical_to_reference() {
+        // ISSUE-3 acceptance: the event-sweep / running-sum solvers must
+        // return the same choices as the retained direct implementations
+        // across delay models and all three compressor families.
+        check(
+            Config::named("ws_argmin_bit_identical").cases(120),
+            |rng| {
+                let m = 1 + rng.below(10);
+                let c: Vec<f64> = (0..m).map(|_| 0.05 + rng.uniform() * 8.0).collect();
+                let a = 10f64.powf(rng.uniform() * 8.0 - 4.0);
+                let b = 10f64.powf(rng.uniform() * 8.0 - 4.0);
+                let family = rng.below(3);
+                let tdma = rng.uniform() < 0.5;
+                (c, a, b, family, tdma)
+            },
+            |(c, a, b, family, tdma)| {
+                let delay = if *tdma {
+                    DelayModel::TdmaSum { theta: 0.0 }
+                } else {
+                    DelayModel::paper_default()
+                };
+                let ctx = family_ctx(*family, delay);
+                let mut ws = SolverWorkspace::new();
+                let fast = ws.argmin_cost(&ctx, c, *a, *b);
+                let slow = reference::argmin_cost(&ctx, c, *a, *b);
+                fast == slow
+            },
+        );
+    }
+
+    #[test]
+    fn prop_workspace_fixed_error_bit_identical_to_reference() {
+        check(
+            Config::named("ws_fixed_error_bit_identical").cases(120),
+            |rng| {
+                let m = 1 + rng.below(10);
+                let c: Vec<f64> = (0..m).map(|_| 0.05 + rng.uniform() * 8.0).collect();
+                let q = 0.02 + rng.uniform() * 10.0;
+                let family = rng.below(3);
+                let tdma = rng.uniform() < 0.5;
+                (c, q, family, tdma)
+            },
+            |(c, q, family, tdma)| {
+                let delay = if *tdma {
+                    DelayModel::TdmaSum { theta: 0.0 }
+                } else {
+                    DelayModel::paper_default()
+                };
+                let ctx = family_ctx(*family, delay);
+                let mut ws = SolverWorkspace::new();
+                let fast = ws.min_duration_with_error_budget(&ctx, c, *q);
+                let slow = reference::min_duration_with_error_budget(&ctx, c, *q);
+                fast == slow
+            },
+        );
+    }
+
+    #[test]
+    fn workspace_reuse_across_rounds_is_stateless() {
+        // Solving different instances back to back on ONE workspace must
+        // give the same answers as fresh workspaces (no state leakage).
+        let ctx = ctx(DelayModel::paper_default(), 4096);
+        let mut ws = SolverWorkspace::new();
+        let instances = [
+            (vec![1.0, 2.0, 0.5], 1.0, 1e4),
+            (vec![0.1; 8], 1e3, 1.0),
+            (vec![5.0, 0.2], 1e-2, 1e2),
+        ];
+        for (c, a, b) in &instances {
+            let reused = ws.argmin_cost(&ctx, c, *a, *b);
+            let fresh = SolverWorkspace::new().argmin_cost(&ctx, c, *a, *b);
+            assert_eq!(reused, fresh, "instance {c:?}");
+        }
+        // And workspaces survive delay-model switches.
+        let ctx_tdma = ctx_t(DelayModel::TdmaSum { theta: 0.0 }, 4096);
+        let c = vec![0.3, 1.5, 0.9];
+        assert_eq!(
+            ws.argmin_cost(&ctx_tdma, &c, 2.0, 3e4),
+            reference::argmin_cost(&ctx_tdma, &c, 2.0, 3e4)
+        );
+    }
+
+    #[test]
     fn error_budget_is_respected_and_duration_minimal() {
         let ctx = ctx(DelayModel::paper_default(), 198_760);
         let c = vec![0.5, 1.0, 2.0, 4.0];
@@ -405,7 +959,6 @@ mod tests {
     #[test]
     fn solver_prices_alternative_compressors() {
         // The same argmin machinery must drive topk and errbound.
-        use crate::quant::{ErrorBoundQuantizer, TopKSparsifier};
         for comp in [
             Arc::new(TopKSparsifier::new(4096, 0.1).unwrap()) as Arc<dyn crate::quant::Compressor>,
             Arc::new(ErrorBoundQuantizer::new(4096, 1.5625).unwrap()),
@@ -427,6 +980,28 @@ mod tests {
             let q_top = ctx.q_of_level(hi);
             let ch = min_duration_with_error_budget(&ctx, &c, q_top + 0.5);
             assert!(ctx.q_bar(&ch) <= q_top + 0.5 + 1e-9, "{ch:?}");
+        }
+    }
+
+    #[test]
+    fn workspace_handles_nonzero_compute_time() {
+        // theta > 0 shifts every per-client delay by the same constant;
+        // the sweep's `theta_tau + x_max` pricing must keep matching the
+        // reference's per-client fold.
+        for delay in [DelayModel::Max { theta: 3.5 }, DelayModel::TdmaSum { theta: 3.5 }] {
+            let ctx = ctx(delay, 512);
+            let c = vec![0.4, 1.1, 2.3, 0.05];
+            let mut ws = SolverWorkspace::new();
+            assert_eq!(
+                ws.argmin_cost(&ctx, &c, 0.7, 2e3),
+                reference::argmin_cost(&ctx, &c, 0.7, 2e3),
+                "{delay:?}"
+            );
+            assert_eq!(
+                ws.min_duration_with_error_budget(&ctx, &c, 2.5),
+                reference::min_duration_with_error_budget(&ctx, &c, 2.5),
+                "{delay:?}"
+            );
         }
     }
 }

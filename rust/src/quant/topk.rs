@@ -113,40 +113,77 @@ impl Compressor for TopKSparsifier {
     }
 }
 
-/// Water-filling threshold τ with `Σ_i min(1, |x_i|/τ) = k`: sort
-/// magnitudes descending, peel off coordinates that saturate (`|x| >
-/// τ`) one at a time and redistribute the remaining budget over the
-/// tail.  Returns NaN for the zero vector.  When fewer than k
-/// coordinates are nonzero, every nonzero coordinate saturates and the
-/// returned τ is the smallest nonzero magnitude, so all of them take
-/// the keep-surely branch and the zeros are dropped (harmlessly — a
-/// zero needs no compensation).
+/// Water-filling threshold τ with `Σ_i min(1, |x_i|/τ) = k`: peel off
+/// coordinates that saturate (`|x| > τ`) one at a time — largest first —
+/// and redistribute the remaining budget over the tail.  Returns NaN for
+/// the zero vector.  When fewer than k coordinates are nonzero, every
+/// nonzero coordinate saturates and the returned τ is the smallest
+/// nonzero magnitude, so all of them take the keep-surely branch and the
+/// zeros are dropped (harmlessly — a zero needs no compensation).
+///
+/// The peel only ever inspects the k largest magnitudes (descending) and
+/// the grand total, so instead of a full O(d log d) descending sort this
+/// selects the top k with `select_nth_unstable_by` and sorts just that
+/// prefix — O(d + k log k).  `water_fill_threshold_by_sort` is the
+/// full-sort reference; a property test pins the two to bit-identical τ.
 fn water_fill_threshold(x: &[f32], k: usize) -> f64 {
-    let mut mags: Vec<f64> = x.iter().map(|&v| (v as f64).abs()).collect();
-    mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
-    let total: f64 = mags.iter().sum();
+    // Grand total in input order (shared float path with the reference).
+    let mut total = 0.0f64;
+    for &v in x {
+        total += (v as f64).abs();
+    }
     if total <= 0.0 {
         return f64::NAN;
     }
     let k = k.min(x.len());
+    let mut mags: Vec<f64> = x.iter().map(|&v| (v as f64).abs()).collect();
+    if k < mags.len() {
+        mags.select_nth_unstable_by(k - 1, |a, b| b.partial_cmp(a).unwrap());
+    }
+    let top = &mut mags[..k];
+    top.sort_unstable_by(|a, b| b.partial_cmp(a).unwrap());
+    threshold_from_top(top, total, k)
+}
+
+/// Full-sort reference for [`water_fill_threshold`] (test oracle for the
+/// partial-selection fast path).
+#[cfg(test)]
+fn water_fill_threshold_by_sort(x: &[f32], k: usize) -> f64 {
+    let mut total = 0.0f64;
+    for &v in x {
+        total += (v as f64).abs();
+    }
+    if total <= 0.0 {
+        return f64::NAN;
+    }
+    let k = k.min(x.len());
+    let mut mags: Vec<f64> = x.iter().map(|&v| (v as f64).abs()).collect();
+    mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    threshold_from_top(&mags[..k], total, k)
+}
+
+/// The water-filling peel over the k largest magnitudes (descending) and
+/// the grand total — the float path shared by the fast and reference
+/// threshold computations.
+fn threshold_from_top(top: &[f64], total: f64, k: usize) -> f64 {
     let mut tail = total;
     let mut m0 = 0usize; // saturated coordinates (kept surely)
     while m0 < k {
         let remaining = tail;
         if remaining <= 0.0 {
             // Only zeros left: keep the m0 saturated ones.
-            return mags[m0 - 1].min(mags[0]).max(f64::MIN_POSITIVE);
+            return top[m0 - 1].min(top[0]).max(f64::MIN_POSITIVE);
         }
         let tau = remaining / (k - m0) as f64;
-        if mags[m0] <= tau {
+        if top[m0] <= tau {
             return tau;
         }
-        tail -= mags[m0];
+        tail -= top[m0];
         m0 += 1;
     }
     // Budget exhausted by saturated coordinates (k of them): keep
     // exactly those — threshold just below the k-th magnitude.
-    mags[k - 1].max(f64::MIN_POSITIVE)
+    top[k - 1].max(f64::MIN_POSITIVE)
 }
 
 #[cfg(test)]
@@ -248,6 +285,57 @@ mod tests {
         );
         // And the realized payload never exceeds the all-kept ceiling.
         assert!(mean <= t.wire_bits(t.level_range().1) + 1e-9);
+    }
+
+    #[test]
+    fn prop_threshold_matches_sort_reference_bitwise() {
+        use crate::util::check::{check, Config};
+        check(
+            Config::named("topk_tau_select_vs_sort").cases(160),
+            |rng| {
+                let n = 1 + rng.below(300);
+                let k = 1 + rng.below(n);
+                let mut x: Vec<f32> = (0..n)
+                    .map(|_| {
+                        if rng.uniform() < 0.25 {
+                            0.0 // sparse zeros exercise the saturation peel
+                        } else {
+                            (rng.normal() * 3.0) as f32
+                        }
+                    })
+                    .collect();
+                // Inject exact-tie magnitudes around the selection cut.
+                if n >= 4 {
+                    let v = x[0];
+                    x[n / 2] = v;
+                    x[n - 1] = -v;
+                }
+                (x, k)
+            },
+            |(x, k)| {
+                let fast = water_fill_threshold(x, *k);
+                let slow = water_fill_threshold_by_sort(x, *k);
+                (fast.is_nan() && slow.is_nan()) || fast.to_bits() == slow.to_bits()
+            },
+        );
+    }
+
+    #[test]
+    fn threshold_edge_cases_match_reference() {
+        for (x, k) in [
+            (vec![0.0f32; 7], 3usize),                  // zero vector -> NaN
+            (vec![1.0, 0.0, 0.0, 0.0], 3),              // fewer nonzero than k
+            (vec![2.0, 2.0, 2.0, 2.0], 2),              // all tied, saturated
+            (vec![5.0, 1e-30, 1e-30, 1e-30], 1),        // dominant coordinate
+            (vec![1.0, 0.5, 0.25, 0.125, 0.0625], 5),   // k == d
+        ] {
+            let fast = water_fill_threshold(&x, k);
+            let slow = water_fill_threshold_by_sort(&x, k);
+            assert!(
+                (fast.is_nan() && slow.is_nan()) || fast.to_bits() == slow.to_bits(),
+                "x={x:?} k={k}: {fast} vs {slow}"
+            );
+        }
     }
 
     #[test]

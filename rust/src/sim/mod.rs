@@ -125,12 +125,17 @@ pub struct RoundRecord<'a> {
 /// * [`RoundHook::perturb`] edits the TRUE state before anything reads
 ///   it (fault injection);
 /// * [`RoundHook::observe`] maps the state the policy will see (probe
-///   estimation) — hooks chain, each seeing its predecessor's output;
+///   estimation) — hooks chain, each seeing its predecessor's output.
+///   A hook that remaps writes its view into `out` (which arrives with
+///   arbitrary previous-round contents — overwrite, don't append) and
+///   returns `true`; the default leaves the view unchanged.  The loop
+///   owns `out` and reuses it across rounds, so remapping allocates
+///   nothing in steady state;
 /// * [`RoundHook::on_round`] inspects the finished round (tracing).
 pub trait RoundHook {
     fn perturb(&mut self, _c_true: &mut [f64]) {}
-    fn observe(&mut self, _c: &[f64]) -> Option<Vec<f64>> {
-        None
+    fn observe(&mut self, _c: &[f64], _out: &mut Vec<f64>) -> bool {
+        false
     }
     fn on_round(&mut self, _r: &RoundRecord<'_>) {}
 }
@@ -148,8 +153,9 @@ impl<'e> ProbeHook<'e> {
 }
 
 impl RoundHook for ProbeHook<'_> {
-    fn observe(&mut self, c: &[f64]) -> Option<Vec<f64>> {
-        Some(self.estimator.observe(c))
+    fn observe(&mut self, c: &[f64], out: &mut Vec<f64>) -> bool {
+        self.estimator.observe_into(c, out);
+        true
     }
 }
 
@@ -206,9 +212,11 @@ impl RoundHook for SlowdownHook {
         }
     }
 
-    fn observe(&mut self, _c: &[f64]) -> Option<Vec<f64>> {
+    fn observe(&mut self, _c: &[f64], out: &mut Vec<f64>) -> bool {
         // The policy stays blind to the injected slowdown (DES parity).
-        Some(self.unslowed.clone())
+        out.clear();
+        out.extend_from_slice(&self.unslowed);
+        true
     }
 }
 
@@ -255,6 +263,10 @@ impl<'a> Session<'a> {
         let mut wall = 0.0f64;
         let mut level_sum = 0.0f64;
         let mut r = 0usize;
+        // Observation-chain buffers, reused across rounds (hooks write
+        // their remapped views into these; no per-round allocation).
+        let mut seen_buf: Vec<f64> = Vec::new();
+        let mut map_buf: Vec<f64> = Vec::new();
         while r < self.max_rounds {
             r += 1;
             let mut c_true = process.next_state();
@@ -262,20 +274,15 @@ impl<'a> Session<'a> {
                 h.perturb(&mut c_true);
             }
             // Observation chain: each hook sees its predecessor's view.
-            let mut c_seen: Option<Vec<f64>> = None;
+            let mut have_seen = false;
             for h in self.hooks.iter_mut() {
-                let cur: &[f64] = match &c_seen {
-                    Some(v) => v,
-                    None => &c_true,
-                };
-                if let Some(mapped) = h.observe(cur) {
-                    c_seen = Some(mapped);
+                let cur: &[f64] = if have_seen { &seen_buf } else { &c_true };
+                if h.observe(cur, &mut map_buf) {
+                    std::mem::swap(&mut seen_buf, &mut map_buf);
+                    have_seen = true;
                 }
             }
-            let observed: &[f64] = match &c_seen {
-                Some(v) => v,
-                None => &c_true,
-            };
+            let observed: &[f64] = if have_seen { &seen_buf } else { &c_true };
             let choices = policy.choose(ctx, observed);
             let rho = ctx.rho(&choices);
             level_sum += mean_level(&choices);

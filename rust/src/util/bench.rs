@@ -2,8 +2,10 @@
 //! replacement; bench targets use `harness = false`).
 //!
 //! Features: warm-up, adaptive iteration count targeting a wall-time
-//! budget, and robust summaries (median / p95 / mean) so one-off outliers
-//! don't skew the §Perf numbers recorded in EXPERIMENTS.md.
+//! budget, robust summaries (median / p95 / mean) so one-off outliers
+//! don't skew the §Perf numbers recorded in DESIGN.md, and a
+//! machine-readable [`BenchJson`] collector for the `BENCH_*.json`
+//! perf-trajectory files tracked across PRs.
 
 use std::time::{Duration, Instant};
 
@@ -28,6 +30,88 @@ impl BenchStats {
     /// Throughput helper: bytes/sec given bytes processed per iteration.
     pub fn throughput(&self, bytes_per_iter: usize) -> f64 {
         bytes_per_iter as f64 / self.mean.as_secs_f64()
+    }
+
+    /// Mean nanoseconds per iteration (the `ns_per_op` of `BENCH_*.json`).
+    pub fn ns_per_op(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e9
+    }
+}
+
+/// Collector for a machine-readable bench report: stable component keys
+/// mapped to `ns_per_op` (+ optional GB/s), serialized as a small JSON
+/// document without external dependencies.  `benches/hotpath.rs --json
+/// <path>` writes one of these so the perf trajectory is diffable across
+/// PRs and checkable in CI.
+#[derive(Clone, Debug, Default)]
+pub struct BenchJson {
+    bench: String,
+    components: Vec<(String, BenchStats, Option<f64>)>,
+}
+
+impl BenchJson {
+    pub fn new(bench: &str) -> Self {
+        BenchJson { bench: bench.to_string(), components: Vec::new() }
+    }
+
+    /// Record a component's stats under a stable machine key.
+    pub fn record(&mut self, key: &str, stats: &BenchStats) {
+        self.components.push((key.to_string(), stats.clone(), None));
+    }
+
+    /// Like [`BenchJson::record`], with a GB/s throughput figure.
+    pub fn record_throughput(&mut self, key: &str, stats: &BenchStats, bytes_per_iter: usize) {
+        let gbps = stats.throughput(bytes_per_iter) / 1e9;
+        self.components.push((key.to_string(), stats.clone(), Some(gbps)));
+    }
+
+    /// Serialize to a JSON document (stable key order = record order).
+    pub fn to_json(&self) -> String {
+        fn esc(s: &str) -> String {
+            s.replace('\\', "\\\\").replace('"', "\\\"")
+        }
+        fn num(v: f64) -> String {
+            // JSON has no NaN/inf literal; a bench that produced one is
+            // broken anyway, so surface it as 0 rather than corrupt the
+            // document.
+            if v.is_finite() {
+                format!("{v:.3}")
+            } else {
+                "0".into()
+            }
+        }
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"bench\": \"{}\",\n", esc(&self.bench)));
+        out.push_str("  \"schema\": 1,\n");
+        out.push_str("  \"components\": {\n");
+        for (i, (key, s, gbps)) in self.components.iter().enumerate() {
+            out.push_str(&format!(
+                "    \"{}\": {{\"ns_per_op\": {}, \"median_ns\": {}, \"p95_ns\": {}, \
+                 \"min_ns\": {}, \"iters\": {}",
+                esc(key),
+                num(s.ns_per_op()),
+                num(s.median.as_secs_f64() * 1e9),
+                num(s.p95.as_secs_f64() * 1e9),
+                num(s.min.as_secs_f64() * 1e9),
+                s.iters,
+            ));
+            if let Some(g) = gbps {
+                out.push_str(&format!(", \"gb_per_s\": {}", num(*g)));
+            }
+            out.push('}');
+            if i + 1 < self.components.len() {
+                out.push(',');
+            }
+            out.push('\n');
+        }
+        out.push_str("  }\n}\n");
+        out
+    }
+
+    /// Write the JSON document to `path`.
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
     }
 }
 
@@ -81,5 +165,50 @@ mod tests {
         assert!(s.iters >= 5);
         assert!(s.min <= s.median && s.median <= s.p95);
         assert!(!s.report().is_empty());
+        assert!(s.ns_per_op() > 0.0);
+    }
+
+    #[test]
+    fn bench_json_emits_all_components_with_required_keys() {
+        let s = bench("x", Duration::from_millis(10), || {
+            black_box((0..50).sum::<u64>());
+        });
+        let mut j = BenchJson::new("hotpath");
+        j.record("nacfl_choose", &s);
+        j.record_throughput("quantize_into", &s, 1_000_000);
+        let doc = j.to_json();
+        for needle in [
+            "\"bench\": \"hotpath\"",
+            "\"schema\": 1",
+            "\"nacfl_choose\"",
+            "\"quantize_into\"",
+            "\"ns_per_op\"",
+            "\"gb_per_s\"",
+        ] {
+            assert!(doc.contains(needle), "missing {needle} in {doc}");
+        }
+        // Balanced braces => structurally plausible JSON.
+        assert_eq!(
+            doc.matches('{').count(),
+            doc.matches('}').count(),
+            "unbalanced braces: {doc}"
+        );
+        // No trailing comma before a closing brace.
+        assert!(!doc.contains(",\n  }"), "trailing comma: {doc}");
+    }
+
+    #[test]
+    fn bench_json_round_trips_through_a_file() {
+        let s = bench("y", Duration::from_millis(5), || {
+            black_box(1u64 + 1);
+        });
+        let mut j = BenchJson::new("smoke");
+        j.record("only", &s);
+        let path = std::env::temp_dir().join("nacfl_bench_json_test.json");
+        let path = path.to_str().unwrap();
+        j.write(path).unwrap();
+        let back = std::fs::read_to_string(path).unwrap();
+        assert_eq!(back, j.to_json());
+        let _ = std::fs::remove_file(path);
     }
 }
