@@ -3,15 +3,18 @@
 //! Each `cargo bench` target regenerates one paper artifact on the
 //! analytic tier (Assumption-1 stopping rule; see `nacfl::sim`) with the
 //! paper's 20 seeds, prints our rows next to the paper's published rows,
-//! and times the regeneration.  Cells fan out over the work-stealing
-//! grid executor (`exp::grid`), which is bit-identical to the sequential
-//! runner.  `NACFL_BENCH_SEEDS` overrides the seed count;
-//! `NACFL_BENCH_THREADS` pins the worker count (default: all cores);
+//! and times the regeneration.  Since ISSUE-4 the cells run as
+//! single-group `ExperimentPlan`s through the unified campaign engine
+//! (`exp::execute` + `TableSink`), which fans runs over the
+//! work-stealing pool and is bit-identical to the retained legacy
+//! `run_cell` path (pinned by the `campaign_system` integration test).
+//! `NACFL_BENCH_SEEDS` overrides the seed count; `NACFL_BENCH_THREADS`
+//! pins the worker count (default: all cores, or `NACFL_THREADS`);
 //! `NACFL_BENCH_TIER=ml` switches to full FedCOM-V training (slow; used
 //! for the recorded EXPERIMENTS.md runs).
 
 use nacfl::config::ExperimentConfig;
-use nacfl::exp::{run_cell_parallel, table_cells, table_for, Tier};
+use nacfl::exp::{execute, table_plans, ExecOptions, TableSink, Tier};
 
 pub fn bench_config() -> ExperimentConfig {
     let mut cfg = ExperimentConfig::paper();
@@ -32,20 +35,28 @@ pub fn bench_threads() -> usize {
     std::env::var("NACFL_BENCH_THREADS")
         .ok()
         .and_then(|s| s.parse().ok())
-        .unwrap_or(0) // 0 = all cores
+        .unwrap_or(0) // 0 = NACFL_THREADS env or all cores
 }
 
-/// Regenerate one table and print it alongside the paper's numbers.
+/// Regenerate one table through the campaign engine and print it
+/// alongside the paper's numbers.
 pub fn run_table(table: &str, paper_reference: &str) {
     let cfg = bench_config();
     let tier = bench_tier();
     let threads = bench_threads();
     let started = std::time::Instant::now();
-    for (label, cell_cfg) in table_cells(table, &cfg).expect("preset") {
+    for (label, plan) in table_plans(table, &cfg, tier).expect("preset") {
         let t0 = std::time::Instant::now();
-        let results = run_cell_parallel(&cell_cfg, tier, threads, |_, _, _| {}).expect("cell");
-        let t = table_for(&label, &results).expect("table");
-        println!("{}", t.render());
+        let mut sink = TableSink::new(Some(label));
+        execute(
+            &plan,
+            &ExecOptions { threads, ledger: None },
+            &mut [&mut sink],
+        )
+        .expect("cell");
+        for t in &sink.tables {
+            println!("{}", t.render());
+        }
         println!("  (cell regenerated in {:.2?})\n", t0.elapsed());
     }
     println!("--- paper's published rows for comparison ---\n{paper_reference}");

@@ -8,7 +8,10 @@
 
 use nacfl::config::ExperimentConfig;
 use nacfl::des::{simulate_des, DesConfig, Discipline, FaultModel};
-use nacfl::exp::{resolve_threads, run_cell, run_cell_parallel, table_for, Tier};
+use nacfl::exp::{
+    execute, resolve_threads, run_cell, run_cell_parallel, table_for, ExecOptions,
+    ExperimentPlan, TableSink, Tier,
+};
 use nacfl::netsim::{Scenario, ScenarioKind};
 use nacfl::policy::parse_policy;
 use nacfl::util::rng::Rng;
@@ -46,10 +49,21 @@ fn main() {
     let t_par = t1.elapsed();
     println!("parallel  run_cell ({threads} thr): {t_par:>10.2?}");
 
+    // The unified campaign engine on the same cell (single-group plan).
+    let t2 = Instant::now();
+    let plan = ExperimentPlan::run_cell_plan("grid bench", &cfg, tier);
+    let mut sink = TableSink::new(Some("grid bench".to_string()));
+    execute(&plan, &ExecOptions { threads, ledger: None }, &mut [&mut sink])
+        .expect("engine cell");
+    let t_eng = t2.elapsed();
+    println!("campaign engine    ({threads} thr): {t_eng:>10.2?}");
+
     // Bit-identity gate: the speedup is only meaningful if the tables match.
     let ts = table_for("grid bench", &seq).expect("table").render();
     let tp = table_for("grid bench", &par).expect("table").render();
     assert_eq!(ts, tp, "parallel table must be bit-identical to sequential");
+    let te = sink.tables[0].render();
+    assert_eq!(ts, te, "campaign-engine table must be bit-identical to sequential");
     let speedup = t_seq.as_secs_f64() / t_par.as_secs_f64().max(1e-9);
     println!("speedup: {speedup:.2}x (bit-identical tables verified; target >= 2x on 4 cores)");
 

@@ -1,12 +1,22 @@
-//! TOML-subset parser.
+//! TOML-subset parser and renderer.
 //!
-//! Supported grammar (sufficient for experiment configs):
+//! Supported grammar (sufficient for experiment configs and campaign
+//! manifests):
 //!   * `[section]` headers (dotted names allowed, stored verbatim);
+//!     re-opening a section merges into it;
 //!   * `key = value` with string ("..."), integer, float, boolean,
 //!     and flat arrays of those;
-//!   * `#` comments and blank lines.
+//!   * `#` comments (inline after values too) and blank lines;
+//!   * duplicate keys: **last wins** (a re-assignment silently replaces
+//!     the earlier value, including across re-opened sections — the
+//!     override-file idiom).
 //! Unsupported (rejected loudly rather than silently): multi-line
-//! strings, inline tables, arrays of tables, datetimes.
+//! strings, inline tables, arrays of tables, datetimes, embedded `"`
+//! inside strings.
+//!
+//! [`render`] is the inverse: for any document this parser produced,
+//! `parse(&render(&doc))` reconstructs it exactly (pinned by a
+//! generator-driven property test below).
 
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
@@ -94,6 +104,59 @@ pub fn parse(text: &str) -> Result<Doc> {
         doc.get_mut(&section).unwrap().insert(key.to_string(), value);
     }
     Ok(doc)
+}
+
+/// Render a document back to the subset grammar.  Root (`""`) keys come
+/// first, then each named section in `BTreeMap` order; floats use
+/// Rust's shortest round-trip formatting (forced to contain `.`/`e` so
+/// they re-parse as floats).  Assumes values are representable in the
+/// subset — i.e. strings without `"` or newlines, exactly what
+/// [`parse`] can produce.
+pub fn render(doc: &Doc) -> String {
+    let mut out = String::new();
+    if let Some(root) = doc.get("") {
+        for (k, v) in root {
+            out.push_str(&format!("{k} = {}\n", render_value(v)));
+        }
+    }
+    for (section, keys) in doc {
+        if section.is_empty() {
+            continue;
+        }
+        if !out.is_empty() {
+            out.push('\n');
+        }
+        out.push_str(&format!("[{section}]\n"));
+        for (k, v) in keys {
+            out.push_str(&format!("{k} = {}\n", render_value(v)));
+        }
+    }
+    out
+}
+
+fn render_value(v: &Value) -> String {
+    match v {
+        Value::Str(s) => format!("\"{s}\""),
+        Value::Int(i) => i.to_string(),
+        Value::Float(f) => render_float(*f),
+        Value::Bool(b) => b.to_string(),
+        Value::Array(a) => {
+            let items: Vec<String> = a.iter().map(render_value).collect();
+            format!("[{}]", items.join(", "))
+        }
+    }
+}
+
+fn render_float(f: f64) -> String {
+    // `{:?}` is the shortest representation that round-trips exactly;
+    // ensure it re-parses as a float, not an int (parse_value keys on
+    // the presence of `.`/`e`).
+    let s = format!("{f:?}");
+    if s.contains('.') || s.contains('e') || s.contains('E') || s.contains("inf") || s.contains("NaN") {
+        s
+    } else {
+        format!("{s}.0")
+    }
 }
 
 fn strip_comment(line: &str) -> &str {
@@ -223,5 +286,119 @@ scenario = "perf:4"
         let doc = parse("a = 1_000\nb = 2.5e7").unwrap();
         assert_eq!(doc[""]["a"], Value::Int(1000));
         assert_eq!(doc[""]["b"].as_f64(), Some(2.5e7));
+    }
+
+    #[test]
+    fn inline_comments_after_values() {
+        let doc = parse(
+            "a = 1 # trailing comment\nb = \"x#y\" # the first # is data\narr = [1, 2] # done",
+        )
+        .unwrap();
+        assert_eq!(doc[""]["a"], Value::Int(1));
+        assert_eq!(doc[""]["b"].as_str(), Some("x#y"));
+        assert_eq!(doc[""]["arr"].as_array().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn empty_tables_parse_and_render() {
+        let doc = parse("[empty]\n[also.empty]").unwrap();
+        assert!(doc["empty"].is_empty());
+        assert!(doc["also.empty"].is_empty());
+        // Empty sections survive a render cycle.
+        let back = parse(&render(&doc)).unwrap();
+        assert_eq!(back, doc);
+    }
+
+    #[test]
+    fn duplicate_keys_last_wins() {
+        let doc = parse("a = 1\na = 2").unwrap();
+        assert_eq!(doc[""]["a"], Value::Int(2));
+        // ...including across a re-opened section.
+        let doc = parse("[s]\nk = \"old\"\n[t]\nx = 1\n[s]\nk = \"new\"").unwrap();
+        assert_eq!(doc["s"]["k"].as_str(), Some("new"));
+        assert_eq!(doc["t"]["x"], Value::Int(1));
+    }
+
+    #[test]
+    fn render_round_trips_a_handwritten_corpus() {
+        for text in [
+            "",
+            "a = 1\nb = \"two\"\nc = true\n",
+            "x = 2.5\n\n[fl]\neta0 = 0.07\npolicies = [\"fixed:1\", \"nacfl\"]\n",
+            "neg = -3\nbig = 1e300\nlist = []\n\n[a.b]\nk = [1, 2.5, \"s\", false]\n",
+        ] {
+            let doc = parse(text).unwrap();
+            let rendered = render(&doc);
+            let back = parse(&rendered).unwrap();
+            assert_eq!(back, doc, "round trip failed for:\n{text}\nrendered:\n{rendered}");
+            assert_eq!(render(&back), rendered, "render must be idempotent");
+        }
+    }
+
+    #[test]
+    fn parse_render_parse_is_stable_on_generated_docs() {
+        // Fuzz-ish property test: pseudo-random documents built from the
+        // subset's value space must survive parse(render(doc)) exactly.
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0xD0C5_11FE);
+        for trial in 0..200 {
+            let doc = random_doc(&mut rng);
+            let text = render(&doc);
+            let back = parse(&text).unwrap_or_else(|e| {
+                panic!("trial {trial}: render produced unparseable text:\n{text}\n{e}")
+            });
+            assert_eq!(back, doc, "trial {trial}: round-trip mismatch for:\n{text}");
+            assert_eq!(render(&back), text, "trial {trial}: render not idempotent");
+        }
+    }
+
+    fn random_doc(rng: &mut Rng) -> Doc {
+        let mut doc: Doc = Doc::new();
+        // parse() always materializes the root section.
+        doc.insert(String::new(), random_section(rng));
+        for _ in 0..rng.below(3) {
+            let name = random_key(rng);
+            doc.insert(name, random_section(rng));
+        }
+        doc
+    }
+
+    fn random_section(rng: &mut Rng) -> std::collections::BTreeMap<String, Value> {
+        let mut sec = std::collections::BTreeMap::new();
+        for _ in 0..rng.below(4) {
+            sec.insert(random_key(rng), random_value(rng, true));
+        }
+        sec
+    }
+
+    fn random_key(rng: &mut Rng) -> String {
+        let alphabet = b"abcdefghijklmnopqrstuvwxyz_";
+        (0..1 + rng.below(7))
+            .map(|_| alphabet[rng.below(alphabet.len())] as char)
+            .collect()
+    }
+
+    fn random_value(rng: &mut Rng, allow_array: bool) -> Value {
+        // Strings exercise the characters the grammar treats specially
+        // outside quotes: '#', ',', ':', '[', ']', '='.
+        let string_alphabet: Vec<char> =
+            "abcxyz019 #,:[]=.-".chars().collect();
+        match rng.below(if allow_array { 5 } else { 4 }) {
+            0 => Value::Str(
+                (0..rng.below(10))
+                    .map(|_| string_alphabet[rng.below(string_alphabet.len())])
+                    .collect(),
+            ),
+            1 => Value::Int(rng.next_u64() as i64 / 1000),
+            2 => {
+                // Finite floats only (NaN breaks Eq, not the grammar).
+                let f = (rng.uniform() - 0.5) * 1e6;
+                Value::Float(f)
+            }
+            3 => Value::Bool(rng.below(2) == 0),
+            _ => Value::Array(
+                (0..rng.below(4)).map(|_| random_value(rng, false)).collect(),
+            ),
+        }
     }
 }

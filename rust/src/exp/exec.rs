@@ -1,0 +1,532 @@
+//! The unified execution engine: one consumer for every
+//! [`ExperimentPlan`].
+//!
+//! [`execute`] expands a plan into its run cells, schedules them on the
+//! existing work-stealing pool (`exp::grid::run_tasks`), and streams one
+//! [`RunRecord`] per finished run into the attached [`ResultSink`]s.
+//! It subsumes the legacy entry points — `run_cell`,
+//! `run_cell_parallel`, `run_sweep` and the `nacfl des` sweep loop —
+//! which are retained for one release as the parity anchor (the
+//! `campaign_system` integration test pins bit-identical paper tables
+//! across both paths).
+//!
+//! Per-cell routing:
+//!
+//! * `sim` tier, sync discipline, fault-free → the analytic closed form
+//!   (`exp::runner::run_analytic_once`, the exact float path of the
+//!   legacy table benches);
+//! * `sim` tier otherwise → the DES engine (`des::simulate_des`), with
+//!   a fault stream derived purely from the cell coordinates so results
+//!   never depend on plan shape, thread count or steal order;
+//! * `ml` tier → full FedCOM-V training through the coordinator,
+//!   sequential (the coordinator already parallelizes across client
+//!   workers), with the dataset loaded once per campaign.
+//!
+//! With [`ExecOptions::ledger`] set, every finished run is appended to
+//! a JSONL ledger and already-present runs are skipped on the next
+//! invocation — interrupted campaigns resume where they stopped.
+
+use super::grid::{resolve_threads, run_tasks};
+use super::plan::{ExperimentPlan, PlanCell};
+use super::runner::{load_data, run_analytic_once, Tier, ANALYTIC_ROUND_CAP};
+use super::sink::{read_ledger, JsonlSink, ResultSink, RunRecord};
+use crate::coordinator::{Coordinator, FailureConfig};
+use crate::data::{partition, Dataset, Partition};
+use crate::des::{simulate_des, DesConfig, Discipline};
+use crate::metrics::TableWriter;
+use crate::policy::{PolicyCtx, PolicyEnv, PolicySpec};
+use crate::util::rng::Rng;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
+
+/// Round cap for DES-tier campaign runs (matches the legacy `nacfl des`
+/// sweep).
+const DES_ROUND_CAP: usize = 10_000_000;
+
+/// Engine options.
+#[derive(Clone, Debug, Default)]
+pub struct ExecOptions {
+    /// Worker threads for the analytic/DES fan-out: explicit value, or
+    /// `0` for the `NACFL_THREADS` env var, or all cores
+    /// (`exp::resolve_threads`).
+    pub threads: usize,
+    /// JSONL ledger path.  Every finished run is appended (and flushed)
+    /// here; on start, runs already present are skipped and replayed
+    /// into the sinks — interrupted campaigns resume for free.
+    pub ledger: Option<String>,
+}
+
+/// A finished campaign.
+#[derive(Clone, Debug)]
+pub struct CampaignSummary {
+    /// One record per plan cell, in [`ExperimentPlan::cells`] order.
+    pub records: Vec<RunRecord>,
+    /// Runs served from the ledger (skip-completed).
+    pub n_cached: usize,
+    /// Runs executed by this invocation.
+    pub n_executed: usize,
+}
+
+/// Run a campaign: every plan cell exactly once, streaming records into
+/// `sinks` (completion order) and returning them in plan order.
+pub fn execute(
+    plan: &ExperimentPlan,
+    opts: &ExecOptions,
+    sinks: &mut [&mut dyn ResultSink],
+) -> Result<CampaignSummary> {
+    plan.validate()?;
+    let cells = plan.cells();
+    let n = cells.len();
+    let fp = plan.config_fingerprint();
+    for s in sinks.iter_mut() {
+        s.on_start(plan)?;
+    }
+
+    // One context per compressor, shared across every run of the
+    // campaign (the PR-3 level-table snapshot is not rebuilt per run —
+    // same hoisting the legacy per-cell runner did).
+    let mut ctxs: HashMap<String, PolicyCtx> = HashMap::new();
+    for comp in &plan.compressors {
+        let mut c = plan.base.clone();
+        c.compressor = comp.clone();
+        ctxs.insert(comp.clone(), c.policy_ctx());
+    }
+
+    // Resume: index the ledger's completed runs by coordinate key; a
+    // record is reused only if its base-config fingerprint still
+    // matches (an edited base re-executes instead of serving stale
+    // results — the fresh record is appended and wins on later loads).
+    let mut cached: HashMap<String, RunRecord> = HashMap::new();
+    if let Some(path) = &opts.ledger {
+        if Path::new(path).exists() {
+            for rec in read_ledger(path)? {
+                cached.insert(rec.key(), rec);
+            }
+        }
+    }
+    let mut ledger = match &opts.ledger {
+        Some(path) => Some(JsonlSink::append(path)?),
+        None => None,
+    };
+
+    let mut slots: Vec<Option<RunRecord>> = vec![None; n];
+    let mut pending: Vec<usize> = Vec::new();
+    for (i, cell) in cells.iter().enumerate() {
+        match cached.remove(&cell.key()) {
+            Some(rec) if rec.config == fp => slots[i] = Some(rec),
+            _ => pending.push(i),
+        }
+    }
+    let n_cached = n - pending.len();
+    // Replay cached runs into the sinks (plan order); the ledger already
+    // holds them, so only fresh runs are appended below.
+    for rec in slots.iter().flatten() {
+        for s in sinks.iter_mut() {
+            s.on_record(rec)?;
+        }
+    }
+
+    let (ml, grid): (Vec<usize>, Vec<usize>) = pending
+        .iter()
+        .copied()
+        .partition(|&i| matches!(cells[i].tier, Tier::Ml));
+
+    // Analytic + DES runs fan out over the work-stealing pool.
+    if !grid.is_empty() {
+        let threads = resolve_threads(opts.threads);
+        let mut sink_err: Option<anyhow::Error> = None;
+        let recs = if threads <= 1 || grid.len() == 1 {
+            let mut out = Vec::with_capacity(grid.len());
+            for &i in &grid {
+                let cell = &cells[i];
+                let rec = execute_grid_run(plan, cell, &ctxs[cell.compressor.as_str()], &fp)?;
+                emit(&mut ledger, sinks, &rec)?;
+                out.push(rec);
+            }
+            out
+        } else {
+            run_tasks(
+                grid.len(),
+                threads,
+                |k| {
+                    let cell = &cells[grid[k]];
+                    execute_grid_run(plan, cell, &ctxs[cell.compressor.as_str()], &fp)
+                },
+                |_, rec| {
+                    // The ledger write is independent of the display
+                    // sinks: even after a sink error, finished runs
+                    // keep landing in the ledger so the compute already
+                    // spent survives into the next (resumed) invocation.
+                    if let Some(l) = ledger.as_mut() {
+                        if let Err(e) = l.on_record(rec) {
+                            if sink_err.is_none() {
+                                sink_err = Some(e);
+                            }
+                            return;
+                        }
+                    }
+                    if sink_err.is_none() {
+                        for s in sinks.iter_mut() {
+                            if let Err(e) = s.on_record(rec) {
+                                sink_err = Some(e);
+                                break;
+                            }
+                        }
+                    }
+                },
+            )?
+        };
+        if let Some(e) = sink_err {
+            return Err(e);
+        }
+        for (k, rec) in recs.into_iter().enumerate() {
+            slots[grid[k]] = Some(rec);
+        }
+    }
+
+    // ML runs are sequential (the coordinator parallelizes internally);
+    // the dataset and partition are shared across the whole campaign,
+    // exactly like the legacy run_cell's per-cell sharing.
+    if !ml.is_empty() {
+        let mut data: Option<(Arc<Dataset>, Arc<Dataset>, Partition)> = None;
+        for &i in &ml {
+            let cell = &cells[i];
+            let cfg = plan.cell_config(cell);
+            if data.is_none() {
+                let (train, test) = load_data(&cfg);
+                let part = partition(&train, cfg.m, cfg.partition, cfg.data_seed);
+                data = Some((train, test, part));
+            }
+            let (train, test, part) = data.as_ref().unwrap();
+            let ctx = &ctxs[cell.compressor.as_str()];
+            let env = PolicyEnv::for_cell(ctx, cfg.scenario, cfg.m, cell.seed);
+            let mut policy = PolicySpec::parse(&cell.policy)?.build(&env)?;
+            let mut process = cfg.congestion_process(cell.seed)?;
+            let mut co = Coordinator::new(
+                &cfg,
+                Arc::clone(train),
+                Arc::clone(test),
+                part,
+                cell.seed,
+                &FailureConfig::default(),
+            )?;
+            let trace = co.run(policy.as_mut(), &mut process)?;
+            let (wall, converged) = match trace.time_to_accuracy(cfg.target_acc) {
+                Some(t) => (t, true),
+                None => (
+                    trace.points.last().map(|p| p.wall).unwrap_or(f64::NAN),
+                    false,
+                ),
+            };
+            let rounds = trace.points.last().map(|p| p.round).unwrap_or(0);
+            let mut rec = base_record(plan, cell, &fp);
+            rec.wall = wall;
+            rec.rounds = rounds;
+            rec.converged = converged;
+            rec.aggregations = rounds;
+            rec.trace = Some(trace);
+            emit(&mut ledger, sinks, &rec)?;
+            slots[i] = Some(rec);
+        }
+    }
+
+    let records: Vec<RunRecord> = slots
+        .into_iter()
+        .enumerate()
+        .map(|(i, s)| s.ok_or_else(|| anyhow!("run {i} missing ({})", cells[i].key())))
+        .collect::<Result<_>>()?;
+    for s in sinks.iter_mut() {
+        s.on_finish(&records)?;
+    }
+    Ok(CampaignSummary { records, n_cached, n_executed: n - n_cached })
+}
+
+fn emit(
+    ledger: &mut Option<JsonlSink>,
+    sinks: &mut [&mut dyn ResultSink],
+    rec: &RunRecord,
+) -> Result<()> {
+    if let Some(l) = ledger.as_mut() {
+        l.on_record(rec)?;
+    }
+    for s in sinks.iter_mut() {
+        s.on_record(rec)?;
+    }
+    Ok(())
+}
+
+fn base_record(plan: &ExperimentPlan, cell: &PlanCell, fp: &str) -> RunRecord {
+    RunRecord {
+        campaign: plan.name.clone(),
+        scenario: cell.scenario.label(),
+        compressor: cell.compressor.clone(),
+        tier: cell.tier.label(),
+        discipline: cell.discipline.label(),
+        policy: cell.policy.clone(),
+        seed: cell.seed,
+        config: fp.to_string(),
+        wall: f64::NAN,
+        rounds: 0,
+        converged: false,
+        aggregations: 0,
+        dropped: 0,
+        late: 0,
+        trace: None,
+    }
+}
+
+/// Hash of the cell's (scenario, discipline) labels: the DES fault
+/// stream index.  A pure function of the coordinates, so fault draws
+/// never depend on the plan's shape, the thread count or steal order.
+fn fault_stream_id(scenario: &str, discipline: &str) -> u64 {
+    crate::util::rng::fnv1a(format!("{scenario}|{discipline}").as_bytes())
+}
+
+/// One analytic- or DES-tier run (the parallel task body).
+fn execute_grid_run(
+    plan: &ExperimentPlan,
+    cell: &PlanCell,
+    ctx: &PolicyCtx,
+    fp: &str,
+) -> Result<RunRecord> {
+    let k_eps = match cell.tier {
+        Tier::Analytic { k_eps } => k_eps,
+        Tier::Ml => return Err(anyhow!("ml cells are not grid tasks")),
+    };
+    let cfg = plan.cell_config(cell);
+    let mut rec = base_record(plan, cell, fp);
+    if cell.discipline == Discipline::Sync && !plan.has_faults() {
+        // The exact single-run float path the legacy tables use.
+        let (wall, rounds) =
+            run_analytic_once(ctx, &cfg, &cell.policy, cell.seed, k_eps)?;
+        rec.wall = wall;
+        rec.rounds = rounds;
+        rec.converged = rounds < ANALYTIC_ROUND_CAP;
+        rec.aggregations = rounds;
+    } else {
+        let env = PolicyEnv::for_cell(ctx, cfg.scenario, cfg.m, cell.seed);
+        let mut policy = PolicySpec::parse(&cell.policy)?.build(&env)?;
+        let mut process = cfg.congestion_process(cell.seed)?;
+        let des = DesConfig {
+            discipline: cell.discipline,
+            faults: cfg.fault_model(),
+            k_eps,
+            max_rounds: DES_ROUND_CAP,
+        };
+        let fault_rng = Rng::new(cell.seed)
+            .derive("des-fault", fault_stream_id(&rec.scenario, &rec.discipline));
+        let r = simulate_des(ctx, policy.as_mut(), &mut process, &des, fault_rng)?;
+        rec.wall = r.wall;
+        rec.rounds = r.rounds;
+        rec.converged = r.converged;
+        rec.aggregations = r.aggregations;
+        rec.dropped = r.dropped_updates;
+        rec.late = r.late_updates;
+    }
+    Ok(rec)
+}
+
+/// Merged sweep-style table over a finished campaign: one row per table
+/// group (scenario × discipline, annotated with compressor / tier when
+/// those axes vary), one column per policy, mean wall across seeds at
+/// one shared power-of-ten scale — the engine-side successor of
+/// `exp::grid::sweep_table`.
+pub fn campaign_table(
+    title: &str,
+    plan: &ExperimentPlan,
+    records: &[RunRecord],
+) -> Result<TableWriter> {
+    if records.len() != plan.n_runs() {
+        return Err(anyhow!(
+            "campaign has {} records, plan wants {}",
+            records.len(),
+            plan.n_runs()
+        ));
+    }
+    let walls: HashMap<String, f64> = records.iter().map(|r| (r.key(), r.wall)).collect();
+    let mut rows: Vec<(String, Vec<f64>)> = Vec::new();
+    for &scenario in &plan.scenarios {
+        for compressor in &plan.compressors {
+            for &tier in &plan.tiers {
+                for &discipline in &plan.disciplines {
+                    let mut label = format!("{} {}", scenario.label(), discipline.label());
+                    if plan.compressors.len() > 1 {
+                        label = format!("{label} {compressor}");
+                    }
+                    if plan.tiers.len() > 1 {
+                        label = format!("{label} {}", tier.label());
+                    }
+                    let mut means = Vec::with_capacity(plan.policies.len());
+                    for policy in &plan.policies {
+                        let mut acc = 0.0f64;
+                        for &seed in &plan.seeds {
+                            let cell = PlanCell {
+                                scenario,
+                                compressor: compressor.clone(),
+                                tier,
+                                discipline,
+                                policy: policy.clone(),
+                                seed,
+                            };
+                            let key = cell.key();
+                            acc += walls
+                                .get(&key)
+                                .copied()
+                                .ok_or_else(|| anyhow!("campaign is missing run {key}"))?;
+                        }
+                        means.push(acc / plan.seeds.len() as f64);
+                    }
+                    rows.push((label, means));
+                }
+            }
+        }
+    }
+    let max_mean = rows
+        .iter()
+        .flat_map(|(_, m)| m.iter())
+        .copied()
+        .filter(|m| m.is_finite())
+        .fold(0.0f64, f64::max);
+    let scale = TableWriter::pow10_scale(max_mean);
+    let cols: Vec<&str> = plan.policies.iter().map(String::as_str).collect();
+    let mut t = TableWriter::new(
+        format!("{title}  [units of {scale:.0e} simulated seconds]"),
+        &cols,
+    );
+    for (label, means) in rows {
+        t.row(
+            label,
+            means.iter().map(|&v| TableWriter::scaled(v, scale)).collect(),
+        );
+    }
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::exp::runner::run_cell;
+    use crate::exp::sink::MemorySink;
+    use crate::netsim::ScenarioKind;
+
+    fn small_cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::paper();
+        cfg.seeds = (0..4).collect();
+        cfg
+    }
+
+    #[test]
+    fn engine_matches_legacy_run_cell_bitwise() {
+        let cfg = small_cfg();
+        let tier = Tier::Analytic { k_eps: 60.0 };
+        let legacy = run_cell(&cfg, tier, |_, _, _| {}).unwrap();
+        let plan = ExperimentPlan::run_cell_plan("parity", &cfg, tier);
+        for threads in [1usize, 4] {
+            let mut mem = MemorySink::default();
+            let mut sinks: Vec<&mut dyn ResultSink> = vec![&mut mem];
+            let summary = execute(
+                &plan,
+                &ExecOptions { threads, ledger: None },
+                &mut sinks,
+            )
+            .unwrap();
+            assert_eq!(summary.records.len(), cfg.policies.len() * cfg.seeds.len());
+            assert_eq!(summary.n_executed, summary.records.len());
+            let mut it = summary.records.iter();
+            for cr in &legacy {
+                for (si, &t) in cr.times.iter().enumerate() {
+                    let rec = it.next().unwrap();
+                    assert_eq!(rec.policy, cr.policy);
+                    assert_eq!(rec.seed, cfg.seeds[si]);
+                    assert_eq!(
+                        rec.wall.to_bits(),
+                        t.to_bits(),
+                        "bit-identical wall for {} seed {}",
+                        rec.policy,
+                        rec.seed
+                    );
+                    assert_eq!(rec.rounds, cr.rounds[si]);
+                }
+            }
+            // The streaming sink saw every record exactly once.
+            assert_eq!(mem.records.len(), summary.records.len());
+        }
+    }
+
+    #[test]
+    fn mixed_disciplines_route_sync_to_analytic_and_rest_to_des() {
+        let mut cfg = small_cfg();
+        cfg.policies = vec!["fixed:2".into(), "nacfl:1".into()];
+        cfg.seeds = (0..2).collect();
+        let plan = ExperimentPlan::builder("mixed")
+            .base(cfg.clone())
+            .tiers(vec![Tier::Analytic { k_eps: 50.0 }])
+            .disciplines(vec![Discipline::Sync, Discipline::SemiSync { k: 7 }])
+            .build()
+            .unwrap();
+        let mut sinks: Vec<&mut dyn ResultSink> = Vec::new();
+        let summary = execute(&plan, &ExecOptions::default(), &mut sinks).unwrap();
+        assert_eq!(summary.records.len(), 2 * 2 * 2);
+        // Sync cells took the analytic path: aggregations == rounds,
+        // nothing dropped or late.
+        for r in summary.records.iter().filter(|r| r.discipline == "sync") {
+            assert_eq!(r.aggregations, r.rounds);
+            assert_eq!(r.late, 0);
+        }
+        // Semi-sync closes rounds early: some updates must arrive late.
+        let late: usize = summary
+            .records
+            .iter()
+            .filter(|r| r.discipline == "semi-sync:7")
+            .map(|r| r.late)
+            .sum();
+        assert!(late > 0, "semi-sync cells should abandon some transfers");
+        // Thread count must not change anything.
+        let mut sinks: Vec<&mut dyn ResultSink> = Vec::new();
+        let again = execute(
+            &plan,
+            &ExecOptions { threads: 3, ledger: None },
+            &mut sinks,
+        )
+        .unwrap();
+        for (a, b) in summary.records.iter().zip(again.records.iter()) {
+            assert_eq!(a.key(), b.key());
+            assert_eq!(a.wall.to_bits(), b.wall.to_bits());
+        }
+    }
+
+    #[test]
+    fn campaign_table_has_one_row_per_group() {
+        let mut cfg = small_cfg();
+        cfg.policies = vec!["fixed:2".into(), "nacfl:1".into()];
+        cfg.seeds = (0..2).collect();
+        let plan = ExperimentPlan::builder("rows")
+            .base(cfg)
+            .scenarios(vec![
+                ScenarioKind::HomogeneousIndependent { sigma_sq: 1.0 },
+                ScenarioKind::HeterogeneousIndependent,
+            ])
+            .tiers(vec![Tier::Analytic { k_eps: 40.0 }])
+            .disciplines(vec![Discipline::Sync, Discipline::Async { staleness_exp: 0.5 }])
+            .build()
+            .unwrap();
+        let mut sinks: Vec<&mut dyn ResultSink> = Vec::new();
+        let summary = execute(&plan, &ExecOptions::default(), &mut sinks).unwrap();
+        let t = campaign_table("sweep", &plan, &summary.records).unwrap();
+        assert_eq!(t.rows.len(), 4);
+        let body = t.render();
+        assert!(body.contains("async:0.5") && body.contains("heterog"), "body: {body}");
+        assert!(campaign_table("sweep", &plan, &summary.records[1..]).is_err());
+    }
+
+    #[test]
+    fn fault_stream_id_is_coordinate_pure() {
+        let a = fault_stream_id("homog:2", "sync");
+        assert_eq!(a, fault_stream_id("homog:2", "sync"));
+        assert_ne!(a, fault_stream_id("homog:2", "semi-sync:7"));
+        assert_ne!(a, fault_stream_id("perf:4", "sync"));
+    }
+}

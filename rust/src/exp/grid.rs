@@ -32,22 +32,38 @@ pub fn default_threads() -> usize {
     std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
 }
 
-/// Resolve a user-facing `threads` setting to a concrete worker count:
-/// `0` means "all available cores" (the one `--threads` convention,
-/// shared by the cell grid, the DES sweep, the CLI and the benches).
+/// Resolve a user-facing `threads` setting to a concrete worker count.
+/// Precedence: an explicit setting (CLI flag / config) wins; `0` defers
+/// to the `NACFL_THREADS` environment variable; an unset (or
+/// unparseable / zero) variable falls back to all available cores.  The
+/// one `--threads` convention, shared by the cell grid, the DES sweep,
+/// the campaign engine, the CLI and the benches.
 pub fn resolve_threads(threads: usize) -> usize {
-    if threads == 0 {
-        default_threads()
-    } else {
-        threads
+    resolve_threads_from(threads, std::env::var("NACFL_THREADS").ok().as_deref())
+}
+
+/// [`resolve_threads`] with the environment value injected (the
+/// unit-testable core; tests never mutate process-global env).
+pub fn resolve_threads_from(threads: usize, env: Option<&str>) -> usize {
+    if threads > 0 {
+        return threads;
     }
+    if let Some(s) = env {
+        if let Ok(n) = s.trim().parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    default_threads()
 }
 
 /// The shared work-stealing harness: run `n_tasks` index-addressed tasks
 /// over `threads` workers and return results in task-index order.
 /// `on_result` fires on the collecting thread as results stream in
-/// (completion order) — used for progress reporting.
-fn run_tasks<T: Send>(
+/// (completion order) — used for progress reporting and the campaign
+/// engine's streaming sinks (`exp::exec`).
+pub(crate) fn run_tasks<T: Send>(
     n_tasks: usize,
     threads: usize,
     task: impl Fn(usize) -> Result<T> + Sync,
@@ -296,11 +312,19 @@ mod tests {
     }
 
     #[test]
-    fn resolve_threads_maps_zero_to_all_cores() {
-        assert_eq!(resolve_threads(0), default_threads());
-        assert!(resolve_threads(0) >= 1);
+    fn resolve_threads_precedence_is_flag_then_env_then_cores() {
+        // An explicit (CLI/config) value always wins.
         assert_eq!(resolve_threads(1), 1);
         assert_eq!(resolve_threads(7), 7);
+        assert_eq!(resolve_threads_from(3, Some("8")), 3);
+        // `0` defers to NACFL_THREADS...
+        assert_eq!(resolve_threads_from(0, Some("8")), 8);
+        assert_eq!(resolve_threads_from(0, Some(" 6 ")), 6);
+        // ...and anything unusable falls back to all cores.
+        assert_eq!(resolve_threads_from(0, Some("0")), default_threads());
+        assert_eq!(resolve_threads_from(0, Some("lots")), default_threads());
+        assert_eq!(resolve_threads_from(0, None), default_threads());
+        assert!(default_threads() >= 1);
     }
 
     #[test]

@@ -1,14 +1,36 @@
-//! Experiment runner: multi-seed cells, the paper's table presets, the
-//! work-stealing parallel grid, and gain computation (DESIGN.md §6
-//! experiment index).
+//! Experiment layer: declarative campaigns over one execution engine.
+//!
+//! * [`plan`] — [`ExperimentPlan`]: the typed cross product of axes
+//!   (scenarios × compressors × tiers × disciplines × roster × seeds),
+//!   built fluently, parsed from a `[campaign]` TOML manifest, printed
+//!   back to it (round-trip Display over the `util::spec` grammar).
+//! * [`exec`] — the one engine: expands any plan, fans analytic/DES
+//!   runs over the work-stealing pool, streams [`RunRecord`]s, resumes
+//!   from the JSONL ledger.
+//! * [`sink`] — composable [`ResultSink`]s: JSONL ledger, CSV,
+//!   in-memory, paper-table writer, progress.
+//! * [`runner`] / [`grid`] / [`presets`] — the retained legacy path
+//!   (`run_cell`, `run_cell_parallel`, `run_sweep`, table presets);
+//!   kept for one release as the bit-identity parity anchor for the
+//!   paper tables (see the `campaign_system` integration test and
+//!   DESIGN.md §10).
 
+pub mod exec;
 pub mod grid;
+pub mod plan;
 pub mod presets;
 pub mod runner;
+pub mod sink;
 
+pub use exec::{campaign_table, execute, CampaignSummary, ExecOptions};
 pub use grid::{
-    default_threads, resolve_threads, run_cell_parallel, run_sweep, sweep_table, SweepCell,
-    SweepSpec,
+    default_threads, resolve_threads, resolve_threads_from, run_cell_parallel, run_sweep,
+    sweep_table, SweepCell, SweepSpec,
 };
-pub use presets::{fig3_cells, table_cells};
+pub use plan::{ExperimentPlan, PlanBuilder, PlanCell};
+pub use presets::{fig3_cells, table_cells, table_plans};
 pub use runner::{run_cell, table_for, CellResult, Tier};
+pub use sink::{
+    build_tables, cell_results, read_ledger, CsvSink, JsonlSink, MemorySink, ProgressSink,
+    ResultSink, RunRecord, TableSink,
+};

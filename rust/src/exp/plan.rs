@@ -1,0 +1,700 @@
+//! Declarative experiment campaigns.
+//!
+//! An [`ExperimentPlan`] is the typed cross product of experiment axes —
+//! scenarios × compressors × tiers × disciplines × policy roster ×
+//! seeds — over one base [`ExperimentConfig`].  Plans are constructible
+//! three ways, all equivalent:
+//!
+//! * the [`PlanBuilder`] API (`ExperimentPlan::builder("name")…`);
+//! * a `[campaign]` TOML manifest (`ExperimentPlan::load` /
+//!   `nacfl run plan.toml`), whose axis values are the same
+//!   `util::spec` strings the CLI flags use;
+//! * the legacy-shaped constructors [`ExperimentPlan::run_cell_plan`]
+//!   (one cell, sync + fault-free, exactly `exp::runner::run_cell`
+//!   semantics) and [`ExperimentPlan::from_config`] (one cell
+//!   inheriting the config's discipline and fault settings).
+//!
+//! `Display` prints the canonical `[campaign]` section
+//! (`config::toml_lite::render`) — the **axes only**, which round-trip
+//! through the spec grammar.  A non-default base config is *not*
+//! serialized: it travels in the other sections of the manifest file
+//! the plan was loaded from (re-serializing a full config is a ROADMAP
+//! follow-on), and [`ExperimentPlan::config_fingerprint`] guards
+//! resume against the two drifting apart.  The one execution engine
+//! (`exp::exec`) consumes any plan; see DESIGN.md §10.
+
+use crate::config::toml_lite::{self, Doc, Value};
+use crate::config::ExperimentConfig;
+use crate::des::Discipline;
+use crate::exp::runner::Tier;
+use crate::netsim::ScenarioKind;
+use crate::policy::PolicySpec;
+use crate::quant::parse_compressor;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One fully-resolved run coordinate — a point of the plan's cross
+/// product.  `seed` varies fastest in [`ExperimentPlan::cells`] order,
+/// then policy, discipline, tier, compressor, scenario.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlanCell {
+    pub scenario: ScenarioKind,
+    pub compressor: String,
+    pub tier: Tier,
+    pub discipline: Discipline,
+    pub policy: String,
+    pub seed: u64,
+}
+
+impl PlanCell {
+    /// The resume/ledger key: every coordinate `|`-joined (spec strings
+    /// never contain `|`).  Matches `RunRecord::key` for the record the
+    /// cell produces.
+    pub fn key(&self) -> String {
+        format!(
+            "{}|{}|{}|{}|{}|{}",
+            self.scenario.label(),
+            self.compressor,
+            self.tier.label(),
+            self.discipline.label(),
+            self.policy,
+            self.seed
+        )
+    }
+}
+
+/// The declarative campaign: axes × one base config.
+#[derive(Clone, Debug)]
+pub struct ExperimentPlan {
+    /// Campaign name (ledger file stem, table titles, `[campaign] name`).
+    pub name: String,
+    /// Base configuration every cell starts from: FL hyperparameters,
+    /// delay model, fault settings, data/engine sections.  The axes
+    /// below override its scenario / compressor / discipline / roster /
+    /// seeds per cell.
+    pub base: ExperimentConfig,
+    pub scenarios: Vec<ScenarioKind>,
+    pub compressors: Vec<String>,
+    pub tiers: Vec<Tier>,
+    pub disciplines: Vec<Discipline>,
+    pub policies: Vec<String>,
+    pub seeds: Vec<u64>,
+}
+
+/// Keys accepted in a `[campaign]` manifest section.
+const CAMPAIGN_KEYS: &[&str] = &[
+    "name",
+    "scenarios",
+    "compressors",
+    "tiers",
+    "disciplines",
+    "policies",
+    "seeds",
+];
+
+impl ExperimentPlan {
+    /// Start a builder with the paper's base config; every unset axis
+    /// defaults from the base at [`PlanBuilder::build`] time.
+    pub fn builder(name: impl Into<String>) -> PlanBuilder {
+        PlanBuilder {
+            name: name.into(),
+            base: ExperimentConfig::paper(),
+            scenarios: None,
+            compressors: None,
+            tiers: None,
+            disciplines: None,
+            policies: None,
+            seeds: None,
+        }
+    }
+
+    /// The plan equivalent of the legacy `exp::runner::run_cell` cell:
+    /// one scenario/compressor, sync discipline, faults cleared — the
+    /// analytic (or ML) tier exactly as the retained legacy path runs
+    /// it, so tables stay bit-identical through the engine.
+    pub fn run_cell_plan(name: impl Into<String>, cfg: &ExperimentConfig, tier: Tier) -> Self {
+        let mut base = cfg.clone();
+        base.discipline = Discipline::Sync;
+        base.dropout = 0.0;
+        base.stragglers = Vec::new();
+        ExperimentPlan {
+            name: name.into(),
+            scenarios: vec![base.scenario],
+            compressors: vec![base.compressor.clone()],
+            tiers: vec![tier],
+            disciplines: vec![Discipline::Sync],
+            policies: base.policies.clone(),
+            seeds: base.seeds.clone(),
+            base,
+        }
+    }
+
+    /// One cell inheriting the config's discipline and fault settings
+    /// (the `nacfl des` / `nacfl run` semantics: non-sync disciplines or
+    /// faults route through the DES engine).
+    pub fn from_config(name: impl Into<String>, cfg: &ExperimentConfig, tier: Tier) -> Self {
+        ExperimentPlan {
+            name: name.into(),
+            base: cfg.clone(),
+            scenarios: vec![cfg.scenario],
+            compressors: vec![cfg.compressor.clone()],
+            tiers: vec![tier],
+            disciplines: vec![cfg.discipline],
+            policies: cfg.policies.clone(),
+            seeds: cfg.seeds.clone(),
+        }
+    }
+
+    /// Materialize the cross product in canonical order (seed fastest).
+    pub fn cells(&self) -> Vec<PlanCell> {
+        let mut out = Vec::with_capacity(self.n_runs());
+        for &scenario in &self.scenarios {
+            for compressor in &self.compressors {
+                for &tier in &self.tiers {
+                    for &discipline in &self.disciplines {
+                        for policy in &self.policies {
+                            for &seed in &self.seeds {
+                                out.push(PlanCell {
+                                    scenario,
+                                    compressor: compressor.clone(),
+                                    tier,
+                                    discipline,
+                                    policy: policy.clone(),
+                                    seed,
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Total runs in the plan.
+    pub fn n_runs(&self) -> usize {
+        self.scenarios.len()
+            * self.compressors.len()
+            * self.tiers.len()
+            * self.disciplines.len()
+            * self.policies.len()
+            * self.seeds.len()
+    }
+
+    /// Table groups (the cross product sans the policy and seed axes):
+    /// one paper-style table per group.
+    pub fn n_groups(&self) -> usize {
+        self.scenarios.len() * self.compressors.len() * self.tiers.len() * self.disciplines.len()
+    }
+
+    /// Whether the base config injects faults (dropout / stragglers);
+    /// faulty sync cells run through the DES engine, not the analytic
+    /// closed form.
+    pub fn has_faults(&self) -> bool {
+        self.base.dropout > 0.0 || !self.base.stragglers.is_empty()
+    }
+
+    /// Per-cell configuration: the base with the cell's scenario,
+    /// compressor and discipline applied.
+    pub fn cell_config(&self, cell: &PlanCell) -> ExperimentConfig {
+        let mut c = self.base.clone();
+        c.scenario = cell.scenario;
+        c.compressor = cell.compressor.clone();
+        c.discipline = cell.discipline;
+        c
+    }
+
+    /// Check every axis: non-empty, parseable specs, discipline bounds,
+    /// and the ML-tier restriction (the coordinator is sync-only).
+    pub fn validate(&self) -> Result<()> {
+        if self.name.is_empty() {
+            return Err(anyhow!("campaign name must be non-empty"));
+        }
+        for (axis, empty) in [
+            ("scenarios", self.scenarios.is_empty()),
+            ("compressors", self.compressors.is_empty()),
+            ("tiers", self.tiers.is_empty()),
+            ("disciplines", self.disciplines.is_empty()),
+            ("policies", self.policies.is_empty()),
+            ("seeds", self.seeds.is_empty()),
+        ] {
+            if empty {
+                return Err(anyhow!("campaign `{}`: {axis} axis is empty", self.name));
+            }
+        }
+        for p in &self.policies {
+            PolicySpec::parse(p)?;
+        }
+        for c in &self.compressors {
+            parse_compressor(c, &self.base.compressor_env())?;
+        }
+        for d in &self.disciplines {
+            if let Discipline::SemiSync { k } = *d {
+                if k == 0 || k > self.base.m {
+                    return Err(anyhow!(
+                        "campaign `{}`: semi-sync K must be in 1..={}, got {k}",
+                        self.name,
+                        self.base.m
+                    ));
+                }
+            }
+        }
+        let has_ml = self.tiers.iter().any(|t| matches!(t, Tier::Ml));
+        if has_ml
+            && (self.disciplines.iter().any(|d| *d != Discipline::Sync) || self.has_faults())
+        {
+            return Err(anyhow!(
+                "campaign `{}`: the ml tier runs through the (sync-only) coordinator; \
+                 drop non-sync disciplines and fault settings, or use the sim tier",
+                self.name
+            ));
+        }
+        Ok(())
+    }
+
+    /// FNV-1a fingerprint (hex) of every base-config field that
+    /// influences run results but is not a plan axis.  Stamped on each
+    /// ledger record; resume only reuses records whose fingerprint
+    /// still matches, so editing a `[fl]`/`[quant]`/`[des]`/`[data]`/
+    /// `[engine]` section re-executes instead of silently serving stale
+    /// results.  Axes (scenario, compressor, tier, discipline, policy,
+    /// seed) live in the record key; output paths and thread counts are
+    /// deliberately excluded.
+    pub fn config_fingerprint(&self) -> String {
+        let b = &self.base;
+        let repr = format!(
+            "{:?}|{:?}|{:?}|{:?}|{:?}|{:?}|{:?}|{:?}|{:?}|{:?}|{:?}|{:?}|{:?}|{:?}|{:?}|\
+             {:?}|{:?}|{:?}|{:?}|{:?}|{:?}|{:?}",
+            b.m,
+            b.partition,
+            b.delay,
+            b.tau,
+            b.batch,
+            b.eta0,
+            b.lr_decay,
+            b.lr_decay_every,
+            b.gamma,
+            b.target_acc,
+            b.max_rounds,
+            b.eval_every,
+            b.eval_samples,
+            b.train_eval_samples,
+            b.c_q,
+            b.alpha,
+            b.train_n,
+            b.test_n,
+            b.data_seed,
+            b.data_dir,
+            b.engine,
+            (b.dropout, &b.stragglers, b.straggler_mult),
+        );
+        format!("{:016x}", crate::util::rng::fnv1a(repr.as_bytes()))
+    }
+
+    /// Load a campaign manifest from disk: a TOML file with a
+    /// `[campaign]` section for the axes plus the usual
+    /// `ExperimentConfig` sections for the base.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::parse_manifest(&text)
+            .with_context(|| format!("parsing campaign manifest {}", path.as_ref().display()))
+    }
+
+    /// Parse a manifest from text (see [`ExperimentPlan::from_doc`]).
+    pub fn parse_manifest(text: &str) -> Result<Self> {
+        Self::from_doc(&toml_lite::parse(text)?)
+    }
+
+    /// Build a plan from a parsed document.  The document's non-campaign
+    /// sections configure the base ([`ExperimentConfig::from_doc`]);
+    /// `[campaign]` holds the axes — every value the same spec string
+    /// the CLI flags take.  Axes absent from the section default from
+    /// the base config (`tiers` defaults to `["sim:100"]`).
+    pub fn from_doc(doc: &Doc) -> Result<Self> {
+        let base = ExperimentConfig::from_doc(doc)?;
+        let sec = doc
+            .get("campaign")
+            .ok_or_else(|| anyhow!("campaign manifest needs a [campaign] section"))?;
+        for k in sec.keys() {
+            if !CAMPAIGN_KEYS.contains(&k.as_str()) {
+                return Err(anyhow!(
+                    "unknown [campaign] key `{k}` (expected one of {CAMPAIGN_KEYS:?})"
+                ));
+            }
+        }
+        let str_list = |key: &str| -> Result<Option<Vec<String>>> {
+            match sec.get(key) {
+                None => Ok(None),
+                Some(v) => {
+                    let arr = v.as_array().ok_or_else(|| {
+                        anyhow!("campaign::{key} must be an array of spec strings")
+                    })?;
+                    arr.iter()
+                        .map(|x| {
+                            x.as_str()
+                                .map(str::to_string)
+                                .ok_or_else(|| anyhow!("campaign::{key} entries must be strings"))
+                        })
+                        .collect::<Result<Vec<_>>>()
+                        .map(Some)
+                }
+            }
+        };
+
+        let name = match sec.get("name") {
+            None => "campaign".to_string(),
+            Some(v) => v
+                .as_str()
+                .ok_or_else(|| anyhow!("campaign::name must be a string"))?
+                .to_string(),
+        };
+        let mut b = ExperimentPlan::builder(name).base(base);
+        if let Some(xs) = str_list("scenarios")? {
+            b = b.scenarios(
+                xs.iter()
+                    .map(|s| ScenarioKind::parse(s))
+                    .collect::<Result<Vec<_>>>()?,
+            );
+        }
+        if let Some(xs) = str_list("compressors")? {
+            b = b.compressors(xs);
+        }
+        if let Some(xs) = str_list("tiers")? {
+            b = b.tiers(xs.iter().map(|s| Tier::parse(s)).collect::<Result<Vec<_>>>()?);
+        }
+        if let Some(xs) = str_list("disciplines")? {
+            b = b.disciplines(
+                xs.iter()
+                    .map(|s| Discipline::parse(s))
+                    .collect::<Result<Vec<_>>>()?,
+            );
+        }
+        if let Some(xs) = str_list("policies")? {
+            b = b.policies(xs);
+        }
+        match sec.get("seeds") {
+            None => {}
+            Some(Value::Int(n)) if *n >= 0 => b = b.seed_count(*n as u64),
+            Some(Value::Array(a)) => {
+                let seeds = a
+                    .iter()
+                    .map(|x| x.as_i64().filter(|&i| i >= 0).map(|i| i as u64))
+                    .collect::<Option<Vec<_>>>()
+                    .ok_or_else(|| {
+                        anyhow!("campaign::seeds array must be non-negative integers")
+                    })?;
+                b = b.seeds(seeds);
+            }
+            Some(_) => {
+                return Err(anyhow!(
+                    "campaign::seeds must be a seed count or an int array"
+                ))
+            }
+        }
+        b.build()
+    }
+
+    /// The `[campaign]` section as a `toml_lite` document — axes only;
+    /// the base config travels in the manifest's other sections when the
+    /// plan is loaded from disk.
+    pub fn to_doc(&self) -> Doc {
+        let strs =
+            |xs: Vec<String>| Value::Array(xs.into_iter().map(Value::Str).collect::<Vec<_>>());
+        let mut sec = BTreeMap::new();
+        sec.insert("name".to_string(), Value::Str(self.name.clone()));
+        sec.insert(
+            "scenarios".to_string(),
+            strs(self.scenarios.iter().map(|s| s.label()).collect()),
+        );
+        sec.insert("compressors".to_string(), strs(self.compressors.clone()));
+        sec.insert(
+            "tiers".to_string(),
+            strs(self.tiers.iter().map(|t| t.label()).collect()),
+        );
+        sec.insert(
+            "disciplines".to_string(),
+            strs(self.disciplines.iter().map(|d| d.label()).collect()),
+        );
+        sec.insert("policies".to_string(), strs(self.policies.clone()));
+        sec.insert(
+            "seeds".to_string(),
+            Value::Array(self.seeds.iter().map(|&s| Value::Int(s as i64)).collect()),
+        );
+        let mut doc: Doc = BTreeMap::new();
+        doc.insert("campaign".to_string(), sec);
+        doc
+    }
+
+    /// Canonical `[campaign]` manifest text — axes only (see the module
+    /// docs); re-parses to an equivalent plan for a default base via
+    /// [`ExperimentPlan::parse_manifest`].
+    pub fn manifest(&self) -> String {
+        toml_lite::render(&self.to_doc())
+    }
+}
+
+impl std::fmt::Display for ExperimentPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.manifest())
+    }
+}
+
+/// Fluent constructor for [`ExperimentPlan`]; unset axes default from
+/// the base config at [`PlanBuilder::build`] time.
+pub struct PlanBuilder {
+    name: String,
+    base: ExperimentConfig,
+    scenarios: Option<Vec<ScenarioKind>>,
+    compressors: Option<Vec<String>>,
+    tiers: Option<Vec<Tier>>,
+    disciplines: Option<Vec<Discipline>>,
+    policies: Option<Vec<String>>,
+    seeds: Option<Vec<u64>>,
+}
+
+impl PlanBuilder {
+    pub fn base(mut self, cfg: ExperimentConfig) -> Self {
+        self.base = cfg;
+        self
+    }
+
+    pub fn scenarios(mut self, v: impl IntoIterator<Item = ScenarioKind>) -> Self {
+        self.scenarios = Some(v.into_iter().collect());
+        self
+    }
+
+    pub fn compressors<S: Into<String>>(mut self, v: impl IntoIterator<Item = S>) -> Self {
+        self.compressors = Some(v.into_iter().map(Into::into).collect());
+        self
+    }
+
+    pub fn tiers(mut self, v: impl IntoIterator<Item = Tier>) -> Self {
+        self.tiers = Some(v.into_iter().collect());
+        self
+    }
+
+    pub fn disciplines(mut self, v: impl IntoIterator<Item = Discipline>) -> Self {
+        self.disciplines = Some(v.into_iter().collect());
+        self
+    }
+
+    pub fn policies<S: Into<String>>(mut self, v: impl IntoIterator<Item = S>) -> Self {
+        self.policies = Some(v.into_iter().map(Into::into).collect());
+        self
+    }
+
+    pub fn seeds(mut self, v: impl IntoIterator<Item = u64>) -> Self {
+        self.seeds = Some(v.into_iter().collect());
+        self
+    }
+
+    /// Shorthand for `seeds(0..n)`.
+    pub fn seed_count(mut self, n: u64) -> Self {
+        self.seeds = Some((0..n).collect());
+        self
+    }
+
+    /// Resolve defaults from the base and validate.
+    pub fn build(self) -> Result<ExperimentPlan> {
+        let base = self.base;
+        let plan = ExperimentPlan {
+            name: self.name,
+            scenarios: self.scenarios.unwrap_or_else(|| vec![base.scenario]),
+            compressors: self
+                .compressors
+                .unwrap_or_else(|| vec![base.compressor.clone()]),
+            tiers: self
+                .tiers
+                .unwrap_or_else(|| vec![Tier::Analytic { k_eps: 100.0 }]),
+            disciplines: self.disciplines.unwrap_or_else(|| vec![base.discipline]),
+            policies: self.policies.unwrap_or_else(|| base.policies.clone()),
+            seeds: self.seeds.unwrap_or_else(|| base.seeds.clone()),
+            base,
+        };
+        plan.validate()?;
+        Ok(plan)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults_from_base_and_cross_product_counts() {
+        let plan = ExperimentPlan::builder("t").build().unwrap();
+        let base = ExperimentConfig::paper();
+        assert_eq!(plan.scenarios, vec![base.scenario]);
+        assert_eq!(plan.policies, base.policies);
+        assert_eq!(plan.seeds, base.seeds);
+        assert_eq!(plan.n_runs(), base.policies.len() * base.seeds.len());
+        assert_eq!(plan.n_groups(), 1);
+
+        let plan = ExperimentPlan::builder("t2")
+            .scenarios(vec![
+                ScenarioKind::HomogeneousIndependent { sigma_sq: 1.0 },
+                ScenarioKind::HeterogeneousIndependent,
+            ])
+            .disciplines(vec![Discipline::Sync, Discipline::SemiSync { k: 7 }])
+            .policies(vec!["fixed:2", "nacfl:1"])
+            .seed_count(3)
+            .build()
+            .unwrap();
+        assert_eq!(plan.n_runs(), 2 * 2 * 2 * 3);
+        assert_eq!(plan.n_groups(), 4);
+        let cells = plan.cells();
+        assert_eq!(cells.len(), plan.n_runs());
+        // Seed varies fastest, then policy.
+        assert_eq!(cells[0].seed, 0);
+        assert_eq!(cells[1].seed, 1);
+        assert_eq!(cells[0].policy, cells[2].policy);
+        assert_ne!(cells[2].policy, cells[3].policy);
+    }
+
+    #[test]
+    fn validation_rejects_bad_axes() {
+        assert!(ExperimentPlan::builder("t")
+            .policies(Vec::<String>::new())
+            .build()
+            .is_err());
+        assert!(ExperimentPlan::builder("t")
+            .policies(vec!["bogus:9"])
+            .build()
+            .is_err());
+        assert!(ExperimentPlan::builder("t")
+            .compressors(vec!["zip:9"])
+            .build()
+            .is_err());
+        // Semi-sync K out of range for m = 10.
+        assert!(ExperimentPlan::builder("t")
+            .disciplines(vec![Discipline::SemiSync { k: 11 }])
+            .build()
+            .is_err());
+        // ML tier + non-sync discipline is rejected.
+        assert!(ExperimentPlan::builder("t")
+            .tiers(vec![Tier::Ml])
+            .disciplines(vec![Discipline::Async { staleness_exp: 0.5 }])
+            .build()
+            .is_err());
+        // ML tier + faults is rejected.
+        let mut faulty = ExperimentConfig::paper();
+        faulty.dropout = 0.1;
+        assert!(ExperimentPlan::builder("t")
+            .base(faulty)
+            .tiers(vec![Tier::Ml])
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn manifest_display_round_trips() {
+        let plan = ExperimentPlan::builder("roundtrip")
+            .scenarios(vec![ScenarioKind::PerfectlyCorrelated { sigma_inf_sq: 4.0 }])
+            .compressors(vec!["topk:0.05"])
+            .tiers(vec![Tier::Analytic { k_eps: 250.0 }])
+            .disciplines(vec![Discipline::Sync, Discipline::Async { staleness_exp: 0.5 }])
+            .policies(vec!["fixed:2", "nacfl:1"])
+            .seed_count(4)
+            .build()
+            .unwrap();
+        let text = plan.to_string();
+        assert!(text.contains("[campaign]"), "manifest: {text}");
+        let back = ExperimentPlan::parse_manifest(&text).unwrap();
+        assert_eq!(back.name, plan.name);
+        assert_eq!(back.cells(), plan.cells());
+        // Display is idempotent through a parse cycle.
+        assert_eq!(back.to_string(), text);
+    }
+
+    #[test]
+    fn manifest_defaults_and_errors() {
+        // Axes default from the base config sections of the same file.
+        let plan = ExperimentPlan::parse_manifest(
+            r#"
+scenario = "perf:4"
+policies = ["nacfl:1"]
+seeds = 2
+[campaign]
+name = "defaults"
+"#,
+        )
+        .unwrap();
+        assert_eq!(
+            plan.scenarios,
+            vec![ScenarioKind::PerfectlyCorrelated { sigma_inf_sq: 4.0 }]
+        );
+        assert_eq!(plan.policies, vec!["nacfl:1".to_string()]);
+        assert_eq!(plan.seeds, vec![0, 1]);
+        assert_eq!(plan.tiers, vec![Tier::Analytic { k_eps: 100.0 }]);
+
+        // [campaign] seeds overrides the base seeds.
+        let plan = ExperimentPlan::parse_manifest(
+            "seeds = 9\n[campaign]\nname = \"s\"\nseeds = [3, 5]\n",
+        )
+        .unwrap();
+        assert_eq!(plan.seeds, vec![3, 5]);
+
+        assert!(ExperimentPlan::parse_manifest("seeds = 2").is_err(), "no [campaign]");
+        assert!(
+            ExperimentPlan::parse_manifest("[campaign]\nnacfl = true").is_err(),
+            "unknown campaign key"
+        );
+        assert!(
+            ExperimentPlan::parse_manifest("[campaign]\ntiers = [\"warp:9\"]").is_err(),
+            "bad tier spec"
+        );
+    }
+
+    #[test]
+    fn run_cell_plan_matches_legacy_cell_shape() {
+        let mut cfg = ExperimentConfig::paper();
+        cfg.discipline = Discipline::SemiSync { k: 7 };
+        cfg.dropout = 0.25;
+        cfg.stragglers = vec![1];
+        let tier = Tier::Analytic { k_eps: 80.0 };
+        // run_cell_plan clears discipline/faults: legacy run_cell ignored both.
+        let legacy = ExperimentPlan::run_cell_plan("cell", &cfg, tier);
+        assert_eq!(legacy.disciplines, vec![Discipline::Sync]);
+        assert!(!legacy.has_faults());
+        assert_eq!(legacy.n_runs(), cfg.policies.len() * cfg.seeds.len());
+        // from_config inherits them.
+        let full = ExperimentPlan::from_config("cfg", &cfg, tier);
+        assert_eq!(full.disciplines, vec![Discipline::SemiSync { k: 7 }]);
+        assert!(full.has_faults());
+    }
+
+    #[test]
+    fn config_fingerprint_tracks_base_not_axes() {
+        let plan = ExperimentPlan::builder("fp").build().unwrap();
+        let fp = plan.config_fingerprint();
+        assert_eq!(fp.len(), 16, "hex u64");
+        assert_eq!(fp, plan.config_fingerprint(), "deterministic");
+        // Axis edits (covered by the record key) leave it unchanged...
+        let mut axes = plan.clone();
+        axes.policies = vec!["fixed:1".into()];
+        axes.seeds = vec![9];
+        assert_eq!(axes.config_fingerprint(), fp);
+        // ...but base-config edits change it.
+        let mut edited = plan.clone();
+        edited.base.c_q *= 2.0;
+        assert_ne!(edited.config_fingerprint(), fp);
+        let mut faulty = plan.clone();
+        faulty.base.dropout = 0.1;
+        assert_ne!(faulty.config_fingerprint(), fp);
+    }
+
+    #[test]
+    fn cell_key_is_coordinate_stable() {
+        let cell = PlanCell {
+            scenario: ScenarioKind::HomogeneousIndependent { sigma_sq: 2.0 },
+            compressor: "topk:0.05".into(),
+            tier: Tier::Analytic { k_eps: 100.0 },
+            discipline: Discipline::SemiSync { k: 7 },
+            policy: "nacfl:1".into(),
+            seed: 3,
+        };
+        assert_eq!(cell.key(), "homog:2|topk:0.05|sim:100|semi-sync:7|nacfl:1|3");
+    }
+}

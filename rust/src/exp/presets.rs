@@ -2,6 +2,8 @@
 //! panel (DESIGN.md §6 experiment index).
 
 use crate::config::ExperimentConfig;
+use crate::exp::plan::ExperimentPlan;
+use crate::exp::runner::Tier;
 use crate::netsim::ScenarioKind;
 use anyhow::{anyhow, Result};
 
@@ -57,6 +59,24 @@ pub fn table_cells(table: &str, base: &ExperimentConfig) -> Result<Vec<(String, 
     Ok(cells)
 }
 
+/// Plan constructors over the table presets: one single-group
+/// [`ExperimentPlan`] per labeled cell, with legacy `run_cell`
+/// semantics (sync, fault-free), for the unified engine (`nacfl exp`,
+/// the table bench regenerators).
+pub fn table_plans(
+    table: &str,
+    base: &ExperimentConfig,
+    tier: Tier,
+) -> Result<Vec<(String, ExperimentPlan)>> {
+    Ok(table_cells(table, base)?
+        .into_iter()
+        .map(|(label, cfg)| {
+            let plan = ExperimentPlan::run_cell_plan(&label, &cfg, tier);
+            (label, plan)
+        })
+        .collect())
+}
+
 /// Fig. 3 sample-path panels: (panel label, config) — one seed each.
 pub fn fig3_cells(base: &ExperimentConfig) -> Vec<(String, ExperimentConfig)> {
     let mk = |label: &str, kind: ScenarioKind| {
@@ -107,6 +127,24 @@ mod tests {
             }
             _ => panic!(),
         }
+    }
+
+    #[test]
+    fn table_plans_mirror_table_cells() {
+        let base = ExperimentConfig::paper();
+        let tier = Tier::Analytic { k_eps: 100.0 };
+        let plans = table_plans("table3", &base, tier).unwrap();
+        assert_eq!(plans.len(), 3);
+        for ((label, cfg), (plabel, plan)) in
+            table_cells("table3", &base).unwrap().iter().zip(plans.iter())
+        {
+            assert_eq!(label, plabel);
+            assert_eq!(plan.scenarios, vec![cfg.scenario]);
+            assert_eq!(plan.policies, cfg.policies);
+            assert_eq!(plan.tiers, vec![tier]);
+            assert_eq!(plan.n_groups(), 1);
+        }
+        assert!(table_plans("table9", &base, tier).is_err());
     }
 
     #[test]

@@ -1,0 +1,766 @@
+//! Streaming campaign results: [`RunRecord`] + composable [`ResultSink`]s.
+//!
+//! The execution engine (`exp::exec`) emits one [`RunRecord`] per
+//! finished run into every attached sink, in completion order, then
+//! calls [`ResultSink::on_finish`] once with the full plan-ordered
+//! record set.  Sinks provided here:
+//!
+//! * [`JsonlSink`] — one flat JSON object per line, flushed per record;
+//!   this is the campaign *ledger*: [`read_ledger`] re-reads it on the
+//!   next invocation so completed runs are skipped (resume after a
+//!   mid-run kill; torn lines are skipped and their runs re-execute,
+//!   and a record is only reused while its base-config fingerprint
+//!   still matches the plan's).
+//! * [`CsvSink`] — the same records as a flat CSV (RFC-4180 quoting via
+//!   `metrics::csv_escape`, so spec names survive).
+//! * [`MemorySink`] — collects records in memory (tests, custom
+//!   post-processing, Fig.-3 trace extraction).
+//! * [`TableSink`] — groups records by (scenario, compressor, tier,
+//!   discipline) and renders one paper-style table per group; with a
+//!   single group and a title override this reproduces the legacy
+//!   `exp::runner::table_for` tables byte-for-byte.
+//! * [`ProgressSink`] — per-run stderr progress lines.
+//!
+//! JSON read/write is in-tree (the ledger is flat; no serde).
+
+use super::plan::ExperimentPlan;
+use super::runner::{table_for, CellResult};
+use crate::metrics::{csv_escape, RunTrace, Summary, TableWriter};
+use crate::util::json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// One finished run: every plan coordinate plus the outcome.  The
+/// coordinate fields hold canonical spec strings (round-trip Display),
+/// so ledger lines, CSV rows and table columns all speak the same
+/// grammar as the CLI flags.
+#[derive(Clone, Debug)]
+pub struct RunRecord {
+    pub campaign: String,
+    pub scenario: String,
+    pub compressor: String,
+    pub tier: String,
+    pub discipline: String,
+    pub policy: String,
+    pub seed: u64,
+    /// Fingerprint (hex) of the plan's base config
+    /// ([`ExperimentPlan::config_fingerprint`]): resume only reuses a
+    /// ledger record whose fingerprint still matches, so editing a base
+    /// section re-executes instead of silently serving stale results.
+    pub config: String,
+    /// Simulated seconds to target (NaN when an ML run recorded no
+    /// trace points; serialized as JSON `null`).
+    pub wall: f64,
+    pub rounds: usize,
+    /// Whether the stopping rule / target accuracy fired before the cap.
+    pub converged: bool,
+    /// Aggregation events (analytic tier: = rounds).
+    pub aggregations: usize,
+    /// DES only: updates lost to dropout.
+    pub dropped: usize,
+    /// DES only: updates abandoned at early round close.
+    pub late: usize,
+    /// ML tier only: the full trace (not serialized to the ledger).
+    pub trace: Option<RunTrace>,
+}
+
+impl RunRecord {
+    /// The resume key — must match `PlanCell::key` for the producing
+    /// cell (the campaign name is deliberately excluded so renaming a
+    /// campaign does not orphan its ledger).
+    pub fn key(&self) -> String {
+        format!(
+            "{}|{}|{}|{}|{}|{}",
+            self.scenario, self.compressor, self.tier, self.discipline, self.policy, self.seed
+        )
+    }
+
+    /// One flat JSON object (a single ledger line, no trailing newline).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"schema\":1,\"campaign\":{},\"scenario\":{},\"compressor\":{},\"tier\":{},\
+             \"discipline\":{},\"policy\":{},\"seed\":{},\"config\":{},\"wall\":{},\
+             \"rounds\":{},\"converged\":{},\"aggregations\":{},\"dropped\":{},\"late\":{}}}",
+            json::string(&self.campaign),
+            json::string(&self.scenario),
+            json::string(&self.compressor),
+            json::string(&self.tier),
+            json::string(&self.discipline),
+            json::string(&self.policy),
+            self.seed,
+            json::string(&self.config),
+            json::num(self.wall),
+            self.rounds,
+            self.converged,
+            self.aggregations,
+            self.dropped,
+            self.late,
+        )
+    }
+
+    /// Parse one ledger line (inverse of [`RunRecord::to_json`]; floats
+    /// use shortest round-trip formatting, so `wall` is bit-exact).
+    pub fn from_json(line: &str) -> Result<Self> {
+        let obj = parse_flat_object(line)?;
+        let s = |k: &str| -> Result<String> {
+            match obj.get(k) {
+                Some(JsonVal::Str(v)) => Ok(v.clone()),
+                _ => Err(anyhow!("ledger line missing string field `{k}`")),
+            }
+        };
+        // Only `wall` may be null (an unconverged ML run's NaN).
+        let n = |k: &str| -> Result<f64> {
+            match obj.get(k) {
+                Some(JsonVal::Num(v)) => Ok(*v),
+                Some(JsonVal::Null) => Ok(f64::NAN),
+                _ => Err(anyhow!("ledger line missing numeric field `{k}`")),
+            }
+        };
+        let u = |k: &str| -> Result<u64> {
+            match obj.get(k) {
+                Some(JsonVal::Num(v)) if v.is_finite() && *v >= 0.0 && v.fract() == 0.0 => {
+                    Ok(*v as u64)
+                }
+                _ => Err(anyhow!("ledger line field `{k}` must be a non-negative integer")),
+            }
+        };
+        let b = |k: &str| -> Result<bool> {
+            match obj.get(k) {
+                Some(JsonVal::Bool(v)) => Ok(*v),
+                _ => Err(anyhow!("ledger line missing bool field `{k}`")),
+            }
+        };
+        match obj.get("schema") {
+            Some(JsonVal::Num(v)) if *v == 1.0 => {}
+            other => return Err(anyhow!("unsupported ledger schema {other:?}")),
+        }
+        Ok(RunRecord {
+            campaign: s("campaign")?,
+            scenario: s("scenario")?,
+            compressor: s("compressor")?,
+            tier: s("tier")?,
+            discipline: s("discipline")?,
+            policy: s("policy")?,
+            seed: u("seed")?,
+            config: s("config")?,
+            wall: n("wall")?,
+            rounds: u("rounds")? as usize,
+            converged: b("converged")?,
+            aggregations: u("aggregations")? as usize,
+            dropped: u("dropped")? as usize,
+            late: u("late")? as usize,
+            trace: None,
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+enum JsonVal {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Null,
+}
+
+/// Minimal scanner for one *flat* JSON object (string / number / bool /
+/// null values — the ledger never nests).
+struct Scanner {
+    chars: Vec<char>,
+    pos: usize,
+}
+
+impl Scanner {
+    fn new(s: &str) -> Self {
+        Scanner { chars: s.chars().collect(), pos: 0 }
+    }
+
+    fn peek(&self) -> Option<char> {
+        self.chars.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.peek();
+        if c.is_some() {
+            self.pos += 1;
+        }
+        c
+    }
+
+    fn skip_ws(&mut self) {
+        while self.peek().is_some_and(|c| c.is_whitespace()) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, want: char) -> Result<()> {
+        match self.bump() {
+            Some(c) if c == want => Ok(()),
+            other => Err(anyhow!("expected `{want}`, found {other:?}")),
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect('"')?;
+        let mut out = String::new();
+        loop {
+            match self.bump().ok_or_else(|| anyhow!("unterminated string"))? {
+                '"' => return Ok(out),
+                '\\' => match self.bump().ok_or_else(|| anyhow!("truncated escape"))? {
+                    '"' => out.push('"'),
+                    '\\' => out.push('\\'),
+                    '/' => out.push('/'),
+                    'n' => out.push('\n'),
+                    'r' => out.push('\r'),
+                    't' => out.push('\t'),
+                    'u' => {
+                        let mut v = 0u32;
+                        for _ in 0..4 {
+                            let c = self.bump().ok_or_else(|| anyhow!("truncated \\u"))?;
+                            v = v * 16 + c.to_digit(16).ok_or_else(|| anyhow!("bad \\u digit"))?;
+                        }
+                        out.push(char::from_u32(v).ok_or_else(|| anyhow!("bad codepoint"))?);
+                    }
+                    c => return Err(anyhow!("unsupported escape \\{c}")),
+                },
+                c => out.push(c),
+            }
+        }
+    }
+
+    fn value(&mut self) -> Result<JsonVal> {
+        self.skip_ws();
+        match self.peek().ok_or_else(|| anyhow!("truncated value"))? {
+            '"' => Ok(JsonVal::Str(self.string()?)),
+            c if c.is_ascii_alphabetic() => {
+                let start = self.pos;
+                while self.peek().is_some_and(|c| c.is_ascii_alphabetic()) {
+                    self.pos += 1;
+                }
+                let word: String = self.chars[start..self.pos].iter().collect();
+                match word.as_str() {
+                    "true" => Ok(JsonVal::Bool(true)),
+                    "false" => Ok(JsonVal::Bool(false)),
+                    "null" => Ok(JsonVal::Null),
+                    w => Err(anyhow!("bad literal `{w}`")),
+                }
+            }
+            _ => {
+                let start = self.pos;
+                while self
+                    .peek()
+                    .is_some_and(|c| c != ',' && c != '}' && !c.is_whitespace())
+                {
+                    self.pos += 1;
+                }
+                let tok: String = self.chars[start..self.pos].iter().collect();
+                tok.parse::<f64>()
+                    .map(JsonVal::Num)
+                    .map_err(|e| anyhow!("bad number `{tok}`: {e}"))
+            }
+        }
+    }
+}
+
+fn parse_flat_object(line: &str) -> Result<HashMap<String, JsonVal>> {
+    let mut sc = Scanner::new(line);
+    sc.skip_ws();
+    sc.expect('{')?;
+    let mut out = HashMap::new();
+    sc.skip_ws();
+    if sc.peek() == Some('}') {
+        return Ok(out);
+    }
+    loop {
+        sc.skip_ws();
+        let key = sc.string()?;
+        sc.skip_ws();
+        sc.expect(':')?;
+        let val = sc.value()?;
+        out.insert(key, val);
+        sc.skip_ws();
+        match sc.bump() {
+            Some(',') => continue,
+            Some('}') => break,
+            other => return Err(anyhow!("expected `,` or `}}`, found {other:?}")),
+        }
+    }
+    Ok(out)
+}
+
+/// Read a JSONL ledger, skipping blank lines.  A line that fails to
+/// parse — the torn tail of a mid-write kill, or foreign garbage — is
+/// skipped with a warning: its run simply re-executes and re-appends,
+/// so a damaged ledger degrades to repeated work, never to a wedged
+/// campaign.
+pub fn read_ledger(path: impl AsRef<Path>) -> Result<Vec<RunRecord>> {
+    let path = path.as_ref();
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading campaign ledger {}", path.display()))?;
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        match RunRecord::from_json(line) {
+            Ok(rec) => out.push(rec),
+            Err(e) => {
+                eprintln!(
+                    "ledger {} line {}: skipping unparseable line (interrupted write?): {e}",
+                    path.display(),
+                    i + 1
+                );
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// A streaming consumer of campaign results.  All methods default to
+/// no-ops except [`ResultSink::on_record`].
+pub trait ResultSink {
+    /// Called once before any run, with the validated plan.
+    fn on_start(&mut self, _plan: &ExperimentPlan) -> Result<()> {
+        Ok(())
+    }
+
+    /// Called per finished run, in completion order (cached ledger runs
+    /// are replayed first, in plan order).
+    fn on_record(&mut self, rec: &RunRecord) -> Result<()>;
+
+    /// Called once at campaign end with every record in plan order.
+    fn on_finish(&mut self, _records: &[RunRecord]) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// The JSONL ledger writer: one [`RunRecord::to_json`] line per record,
+/// flushed immediately so a killed campaign loses at most the in-flight
+/// line.
+pub struct JsonlSink {
+    out: BufWriter<File>,
+}
+
+impl JsonlSink {
+    /// Truncate (or create) `path` and stream records into it.
+    pub fn create(path: impl AsRef<Path>) -> Result<Self> {
+        let f = File::create(path.as_ref())
+            .with_context(|| format!("creating {}", path.as_ref().display()))?;
+        Ok(JsonlSink { out: BufWriter::new(f) })
+    }
+
+    /// Append to `path` (creating it if needed) — the resume mode.  If
+    /// the file ends mid-line (a record torn by a kill), a newline is
+    /// written first so the torn tail cannot swallow the next record.
+    pub fn append(path: impl AsRef<Path>) -> Result<Self> {
+        use std::io::{Read, Seek, SeekFrom};
+        let path = path.as_ref();
+        let mut needs_newline = false;
+        if std::fs::metadata(path).map(|m| m.len() > 0).unwrap_or(false) {
+            let mut f = File::open(path)
+                .with_context(|| format!("opening ledger {}", path.display()))?;
+            f.seek(SeekFrom::End(-1))?;
+            let mut last = [0u8; 1];
+            f.read_exact(&mut last)?;
+            needs_newline = last[0] != b'\n';
+        }
+        let f = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("opening ledger {}", path.display()))?;
+        let mut out = BufWriter::new(f);
+        if needs_newline {
+            writeln!(out)?;
+            out.flush()?;
+        }
+        Ok(JsonlSink { out })
+    }
+}
+
+impl ResultSink for JsonlSink {
+    fn on_record(&mut self, rec: &RunRecord) -> Result<()> {
+        writeln!(self.out, "{}", rec.to_json())?;
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+/// Flat CSV of the run records (header + one row per run).
+pub struct CsvSink {
+    out: BufWriter<File>,
+}
+
+impl CsvSink {
+    pub fn create(path: impl AsRef<Path>) -> Result<Self> {
+        let f = File::create(path.as_ref())
+            .with_context(|| format!("creating {}", path.as_ref().display()))?;
+        let mut out = BufWriter::new(f);
+        writeln!(
+            out,
+            "campaign,scenario,compressor,tier,discipline,policy,seed,wall,rounds,\
+             converged,aggregations,dropped,late"
+        )?;
+        Ok(CsvSink { out })
+    }
+}
+
+impl ResultSink for CsvSink {
+    fn on_record(&mut self, rec: &RunRecord) -> Result<()> {
+        writeln!(
+            self.out,
+            "{},{},{},{},{},{},{},{:?},{},{},{},{},{}",
+            csv_escape(&rec.campaign),
+            csv_escape(&rec.scenario),
+            csv_escape(&rec.compressor),
+            csv_escape(&rec.tier),
+            csv_escape(&rec.discipline),
+            csv_escape(&rec.policy),
+            rec.seed,
+            rec.wall,
+            rec.rounds,
+            rec.converged,
+            rec.aggregations,
+            rec.dropped,
+            rec.late,
+        )?;
+        Ok(())
+    }
+
+    fn on_finish(&mut self, _records: &[RunRecord]) -> Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+/// Collects every record in memory (streaming order).
+#[derive(Debug, Default)]
+pub struct MemorySink {
+    pub records: Vec<RunRecord>,
+}
+
+impl ResultSink for MemorySink {
+    fn on_record(&mut self, rec: &RunRecord) -> Result<()> {
+        self.records.push(rec.clone());
+        Ok(())
+    }
+}
+
+/// Per-run stderr progress lines (one per finished run, completion
+/// order).  Single-group plans print the legacy compact form; plans
+/// with several table groups include the group coordinates.
+pub struct ProgressSink {
+    label: String,
+    quiet: bool,
+    verbose_coords: bool,
+}
+
+impl ProgressSink {
+    pub fn new(label: impl Into<String>, quiet: bool) -> Self {
+        ProgressSink { label: label.into(), quiet, verbose_coords: false }
+    }
+}
+
+impl ResultSink for ProgressSink {
+    fn on_start(&mut self, plan: &ExperimentPlan) -> Result<()> {
+        self.verbose_coords = plan.n_groups() > 1;
+        Ok(())
+    }
+
+    fn on_record(&mut self, rec: &RunRecord) -> Result<()> {
+        if self.quiet {
+            return Ok(());
+        }
+        if self.verbose_coords {
+            eprintln!(
+                "  [{}] {} {} {} seed {}: {:.3e} s",
+                self.label, rec.scenario, rec.discipline, rec.policy, rec.seed, rec.wall
+            );
+        } else {
+            eprintln!(
+                "  [{}] {} seed {}: {:.3e} s",
+                self.label, rec.policy, rec.seed, rec.wall
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Paper-table writer: groups the plan-ordered records by (scenario,
+/// compressor, tier, discipline) and renders one table per group.
+/// Groups whose roster includes a `nacfl` policy get the full legacy
+/// Mean / 90th / 10th / Gain layout (`exp::runner::table_for`, byte-
+/// identical for single-group legacy plans); others drop the Gain row
+/// instead of erroring.
+pub struct TableSink {
+    title: Option<String>,
+    pub tables: Vec<TableWriter>,
+}
+
+impl TableSink {
+    /// `title` overrides the table title when the campaign has exactly
+    /// one group (legacy `nacfl exp` cell titles).
+    pub fn new(title: Option<String>) -> Self {
+        TableSink { title, tables: Vec::new() }
+    }
+}
+
+impl ResultSink for TableSink {
+    fn on_record(&mut self, _rec: &RunRecord) -> Result<()> {
+        Ok(())
+    }
+
+    fn on_finish(&mut self, records: &[RunRecord]) -> Result<()> {
+        self.tables = build_tables(self.title.as_deref(), records)?;
+        Ok(())
+    }
+}
+
+/// Re-group one table-group's records into legacy [`CellResult`]s
+/// (policy order = first-seen order = plan roster order).
+pub fn cell_results(recs: &[&RunRecord]) -> Vec<CellResult> {
+    let mut out: Vec<CellResult> = Vec::new();
+    for r in recs {
+        let idx = match out.iter().position(|c| c.policy == r.policy) {
+            Some(i) => i,
+            None => {
+                out.push(CellResult {
+                    policy: r.policy.clone(),
+                    times: Vec::new(),
+                    rounds: Vec::new(),
+                    traces: Vec::new(),
+                    unconverged: 0,
+                });
+                out.len() - 1
+            }
+        };
+        let cr = &mut out[idx];
+        cr.times.push(r.wall);
+        cr.rounds.push(r.rounds);
+        if let Some(trace) = &r.trace {
+            cr.traces.push(trace.clone());
+        }
+        if !r.converged {
+            cr.unconverged += 1;
+        }
+    }
+    out
+}
+
+fn group_key(r: &RunRecord) -> String {
+    format!("{}|{}|{}|{}", r.scenario, r.compressor, r.tier, r.discipline)
+}
+
+/// Build one paper-style table per record group (records must be in
+/// plan order, as handed to [`ResultSink::on_finish`]).
+pub fn build_tables(title: Option<&str>, records: &[RunRecord]) -> Result<Vec<TableWriter>> {
+    let mut groups: Vec<(String, Vec<&RunRecord>)> = Vec::new();
+    for r in records {
+        let k = group_key(r);
+        let idx = match groups.iter().position(|(g, _)| *g == k) {
+            Some(i) => i,
+            None => {
+                groups.push((k, Vec::new()));
+                groups.len() - 1
+            }
+        };
+        groups[idx].1.push(r);
+    }
+    let single = groups.len() == 1;
+    let mut out = Vec::with_capacity(groups.len());
+    for (_, recs) in &groups {
+        let cells = cell_results(recs);
+        let r0 = recs[0];
+        let table_title = match (title, single) {
+            (Some(t), true) => t.to_string(),
+            _ => format!(
+                "{} · {} {} {} {}",
+                r0.campaign, r0.scenario, r0.compressor, r0.tier, r0.discipline
+            ),
+        };
+        if cells.iter().any(|c| c.policy.starts_with("nacfl")) {
+            out.push(table_for(&table_title, &cells)?);
+        } else {
+            out.push(table_without_gain(&table_title, &cells));
+        }
+    }
+    Ok(out)
+}
+
+/// Mean / 90th / 10th table for rosters without a `nacfl` gain baseline.
+fn table_without_gain(title: &str, results: &[CellResult]) -> TableWriter {
+    let max_mean = results
+        .iter()
+        .map(|r| Summary::of(&r.times).mean)
+        .filter(|m| m.is_finite())
+        .fold(0.0f64, f64::max);
+    let scale = TableWriter::pow10_scale(max_mean);
+    let cols: Vec<&str> = results.iter().map(|r| r.policy.as_str()).collect();
+    let mut t = TableWriter::new(
+        format!("{title}  [units of {scale:.0e} simulated seconds]"),
+        &cols,
+    );
+    let fmt_row = |f: &dyn Fn(&CellResult) -> String| -> Vec<String> {
+        results.iter().map(f).collect()
+    };
+    t.row("Mean", fmt_row(&|r| TableWriter::scaled(Summary::of(&r.times).mean, scale)));
+    t.row("90th", fmt_row(&|r| TableWriter::scaled(Summary::of(&r.times).p90, scale)));
+    t.row("10th", fmt_row(&|r| TableWriter::scaled(Summary::of(&r.times).p10, scale)));
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(policy: &str, seed: u64, wall: f64) -> RunRecord {
+        RunRecord {
+            campaign: "t".into(),
+            scenario: "homog:2".into(),
+            compressor: "quant:inf".into(),
+            tier: "sim:100".into(),
+            discipline: "sync".into(),
+            policy: policy.into(),
+            seed,
+            config: "deadbeef".into(),
+            wall,
+            rounds: 7,
+            converged: true,
+            aggregations: 7,
+            dropped: 0,
+            late: 0,
+            trace: None,
+        }
+    }
+
+    #[test]
+    fn json_round_trips_bitwise() {
+        let mut r = rec("topk:0.05", 3, 1.5812345678901234e7);
+        r.campaign = "quo\"te\\and\ttab".into();
+        let line = r.to_json();
+        let back = RunRecord::from_json(&line).unwrap();
+        assert_eq!(back.campaign, r.campaign);
+        assert_eq!(back.policy, r.policy);
+        assert_eq!(back.seed, r.seed);
+        assert_eq!(back.config, r.config);
+        assert_eq!(back.wall.to_bits(), r.wall.to_bits(), "shortest float repr is exact");
+        assert_eq!(back.rounds, r.rounds);
+        assert!(back.converged);
+        assert_eq!(back.key(), r.key());
+    }
+
+    #[test]
+    fn nan_wall_serializes_as_null() {
+        let r = rec("nacfl:1", 0, f64::NAN);
+        let line = r.to_json();
+        assert!(line.contains("\"wall\":null"), "line: {line}");
+        let back = RunRecord::from_json(&line).unwrap();
+        assert!(back.wall.is_nan());
+    }
+
+    #[test]
+    fn from_json_rejects_malformed_lines() {
+        assert!(RunRecord::from_json("").is_err());
+        assert!(RunRecord::from_json("{\"schema\":1").is_err(), "truncated");
+        assert!(RunRecord::from_json("{\"schema\":2}").is_err(), "wrong schema");
+        let r = rec("fixed:2", 0, 1.0);
+        let line = r.to_json();
+        assert!(RunRecord::from_json(&line[..line.len() / 2]).is_err(), "torn line");
+        // Integer fields must really be integers — null is only legal
+        // for `wall` (a NaN ML run), never for a resume-key field.
+        let nulled = line.replace("\"seed\":0", "\"seed\":null");
+        assert!(RunRecord::from_json(&nulled).is_err(), "null seed must not parse as 0");
+        let frac = line.replace("\"rounds\":7", "\"rounds\":7.5");
+        assert!(RunRecord::from_json(&frac).is_err(), "fractional rounds rejected");
+    }
+
+    #[test]
+    fn ledger_skips_torn_lines_and_appends_after_them_safely() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("nacfl_ledger_{}.jsonl", std::process::id()));
+        let a = rec("fixed:2", 0, 1.0).to_json();
+        let b = rec("fixed:2", 1, 2.0).to_json();
+        // Torn trailing line (mid-write kill): skipped.
+        std::fs::write(&path, format!("{a}\n{b}\n{}", &a[..a.len() / 2])).unwrap();
+        let recs = read_ledger(&path).unwrap();
+        assert_eq!(recs.len(), 2);
+        // Appending after the torn tail must not merge into it: the
+        // sink repairs the missing newline first.
+        {
+            let mut sink = JsonlSink::append(&path).unwrap();
+            sink.on_record(&rec("nacfl:1", 5, 3.0)).unwrap();
+        }
+        let recs = read_ledger(&path).unwrap();
+        assert_eq!(recs.len(), 3, "fresh record must survive next to the torn line");
+        assert_eq!(recs[2].seed, 5);
+        // A torn line in the middle is skipped too (its run re-executes).
+        std::fs::write(&path, format!("{}\n{b}\n", &a[..a.len() / 2])).unwrap();
+        let recs = read_ledger(&path).unwrap();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].seed, 1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn jsonl_sink_appends_and_read_ledger_round_trips() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("nacfl_sink_{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut sink = JsonlSink::append(&path).unwrap();
+            sink.on_record(&rec("fixed:2", 0, 1.25)).unwrap();
+        }
+        {
+            let mut sink = JsonlSink::append(&path).unwrap();
+            sink.on_record(&rec("fixed:2", 1, 2.5)).unwrap();
+        }
+        let recs = read_ledger(&path).unwrap();
+        assert_eq!(recs.len(), 2, "append mode must not truncate");
+        assert_eq!(recs[1].seed, 1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn tables_group_by_coordinates_and_match_legacy_layout() {
+        let mut records = Vec::new();
+        for policy in ["fixed:2", "nacfl:1"] {
+            for seed in 0..3u64 {
+                records.push(rec(policy, seed, 10.0 + seed as f64));
+            }
+        }
+        // A second discipline group.
+        for policy in ["fixed:2", "nacfl:1"] {
+            for seed in 0..3u64 {
+                let mut r = rec(policy, seed, 20.0 + seed as f64);
+                r.discipline = "semi-sync:7".into();
+                records.push(r);
+            }
+        }
+        let tables = build_tables(Some("override"), &records).unwrap();
+        assert_eq!(tables.len(), 2);
+        // Multi-group: the override is ignored, coordinates label the tables.
+        assert!(tables[0].title.contains("sync"), "title: {}", tables[0].title);
+        assert!(tables[1].title.contains("semi-sync:7"), "title: {}", tables[1].title);
+        assert!(tables[0].render().contains("Gain"));
+
+        // Single group + title override = legacy table_for byte-for-byte.
+        let single = &records[..6];
+        let tables = build_tables(Some("Table I (test)"), single).unwrap();
+        assert_eq!(tables.len(), 1);
+        let legacy = table_for("Table I (test)", &cell_results(&single.iter().collect::<Vec<_>>()))
+            .unwrap();
+        assert_eq!(tables[0].render(), legacy.render());
+    }
+
+    #[test]
+    fn tables_without_nacfl_drop_the_gain_row() {
+        let records: Vec<RunRecord> =
+            (0..2).map(|s| rec("fixed:2", s, 1.0 + s as f64)).collect();
+        let tables = build_tables(None, &records).unwrap();
+        assert_eq!(tables.len(), 1);
+        let body = tables[0].render();
+        assert!(body.contains("Mean") && !body.contains("Gain"), "body: {body}");
+    }
+}

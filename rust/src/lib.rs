@@ -7,8 +7,11 @@
 //! * **L3 (this crate)** — the FL coordinator: round orchestration,
 //!   network-congestion simulation, compression-policy engine (NAC-FL and
 //!   baselines), simulated wall-clock accounting, metrics, config, CLI,
-//!   plus the discrete-event simulation tier (`des`) for async/semi-sync
-//!   rounds and the parallel experiment grid (`exp::grid`).
+//!   the discrete-event simulation tier (`des`) for async/semi-sync
+//!   rounds, and the declarative campaign layer (`exp::{plan, exec,
+//!   sink}`): one `ExperimentPlan` cross product, one work-stealing
+//!   execution engine, streaming `RunRecord` sinks with a resumable
+//!   JSONL ledger.
 //! * **L2/L1 (`python/compile`)** — FedCOM-V compute graphs + Pallas
 //!   quantizer/dense kernels, AOT-lowered once to `artifacts/*.hlo.txt`.
 //! * **runtime** — PJRT CPU loader/executor for those artifacts; python

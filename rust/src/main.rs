@@ -1,12 +1,22 @@
 //! `nacfl` — NAC-FL leader CLI.
 //!
 //! Subcommands:
+//!   run <plan.toml>                 execute a declarative campaign manifest
 //!   exp <table1..table4|theorem1|fig3|all>   regenerate a paper table / figure
 //!   train                           one full FedCOM-V training run
 //!   sim                             one analytic-tier cell (fast)
 //!   des                             DES sweep: disciplines x roster x seeds
 //!   oracle                          Theorem-1 ablation: NAC-FL vs eq.(4)
 //!   check                           load + execute all AOT artifacts
+//!
+//! Every subcommand is a thin *plan constructor*: it builds an
+//! `exp::ExperimentPlan` (a declarative cross product of scenarios x
+//! compressors x tiers x disciplines x policies x seeds) and hands it to
+//! the one execution engine (`exp::execute`), which streams `RunRecord`s
+//! into composable sinks — progress lines, paper tables, CSV, and the
+//! JSONL campaign ledger.  `nacfl run` executes a `[campaign]` TOML
+//! manifest directly and *resumes* from its ledger: rerun after a kill
+//! and completed runs are skipped (see DESIGN.md §10).
 //!
 //! Every flag that names an object takes a unified `name[:arg]` spec
 //! with round-trip Display: policies `nacfl:2 | fixed:3 | error:5.25 |
@@ -16,6 +26,9 @@
 //!
 //! Examples:
 //!   nacfl check
+//!   nacfl run examples/campaign.toml --out results
+//!   nacfl run examples/campaign.toml --out results      # resumes from the ledger
+//!   nacfl run examples/campaign.toml --fresh            # ignore the ledger
 //!   nacfl sim --scenario perf:4 --seeds 20
 //!   nacfl sim --compressor topk:0.05 --seeds 10
 //!   nacfl des --scenario heterog --discipline semi-sync:7 --stragglers 8,9 --straggle-mult 8
@@ -29,8 +42,8 @@ use nacfl::config::ExperimentConfig;
 use nacfl::data::PartitionKind;
 use nacfl::des::Discipline;
 use nacfl::exp::{
-    fig3_cells, resolve_threads, run_cell, run_cell_parallel, run_sweep, sweep_table, table_cells,
-    table_for, SweepSpec, Tier,
+    campaign_table, execute, fig3_cells, resolve_threads, run_cell, table_plans, CsvSink,
+    ExecOptions, ExperimentPlan, ProgressSink, TableSink, Tier,
 };
 use nacfl::netsim::ScenarioKind;
 use nacfl::policy::{NacFl, OraclePolicy};
@@ -57,15 +70,17 @@ fn flags() -> Vec<nacfl::util::cli::FlagSpec> {
         flag("seed", "single-run seed", Some("0")),
         flag("max-rounds", "round cap", None),
         flag("target-acc", "stopping accuracy", None),
-        flag("out", "output directory for CSVs", Some("results")),
+        flag("out", "output directory for CSVs and campaign ledgers", Some("results")),
         flag("train-n", "training samples (synthetic)", None),
         flag("test-n", "test samples (synthetic)", None),
         flag("c-q", "quantizer variance calibration c_q (q(b)=c_q/(2^b-1)^2)", None),
         flag("discipline", "sync | semi-sync:<k> | async[:exp] (des only)", None),
-        flag("threads", "grid/sweep worker threads (0 = all cores)", None),
+        flag("threads", "worker threads (0 = NACFL_THREADS env or all cores)", None),
         flag("dropout", "per-round client update-loss probability (des only)", None),
         flag("stragglers", "comma-separated straggler client ids (des only)", None),
         flag("straggle-mult", "straggler transfer slowdown multiplier >= 1 (des only)", None),
+        flag("ledger", "campaign ledger path (run only; default <out>/<name>.jsonl)", None),
+        bool_flag("fresh", "ignore an existing campaign ledger (run only)"),
         bool_flag("quiet", "suppress per-run progress"),
     ]
 }
@@ -136,6 +151,72 @@ fn build_config(args: &Args) -> Result<ExperimentConfig> {
     Ok(cfg)
 }
 
+/// Slug a campaign/table label into a filename stem.
+fn file_slug(label: &str) -> String {
+    label.to_lowercase().replace([' ', ',', '^', '=', ':', '/'], "_")
+}
+
+/// `nacfl run <plan.toml>`: execute a `[campaign]` manifest through the
+/// engine, streaming the JSONL ledger (resume on rerun), a per-run CSV,
+/// and paper-style tables per (scenario, compressor, tier, discipline)
+/// group.
+fn cmd_run(args: &Args) -> Result<()> {
+    let path = args.positionals.first().ok_or_else(|| {
+        anyhow::anyhow!("usage: nacfl run <plan.toml> [--out dir] [--threads n] [--fresh]")
+    })?;
+    let mut plan = ExperimentPlan::load(path)?;
+    // CLI overrides (flag > manifest).
+    if let Some(n) = args.get("seeds") {
+        plan.seeds = (0..n.parse::<u64>()?).collect();
+    }
+    let threads = match args.get("threads") {
+        Some(t) => t.parse()?,
+        None => plan.base.grid_threads,
+    };
+    plan.validate()?;
+
+    let out_dir = args.get_str("out")?;
+    std::fs::create_dir_all(&out_dir)?;
+    let slug = file_slug(&plan.name);
+    let ledger = args
+        .get("ledger")
+        .map(str::to_string)
+        .unwrap_or_else(|| format!("{out_dir}/{slug}.jsonl"));
+    if args.get_bool("fresh") && std::path::Path::new(&ledger).exists() {
+        std::fs::remove_file(&ledger)?;
+    }
+    eprintln!(
+        "campaign `{}`: {} runs in {} groups, ledger -> {ledger}",
+        plan.name,
+        plan.n_runs(),
+        plan.n_groups()
+    );
+
+    let mut progress = ProgressSink::new(plan.name.clone(), args.get_bool("quiet"));
+    let mut tables = TableSink::new(None);
+    let csv_path = format!("{out_dir}/{slug}_runs.csv");
+    let mut csv = CsvSink::create(&csv_path)?;
+    let started = std::time::Instant::now();
+    let summary = execute(
+        &plan,
+        &ExecOptions { threads, ledger: Some(ledger.clone()) },
+        &mut [&mut progress, &mut tables, &mut csv],
+    )?;
+    for t in &tables.tables {
+        println!("{}", t.render());
+    }
+    eprintln!(
+        "campaign `{}` done in {:.2?}: {} runs ({} resumed from ledger, {} executed); \
+         ledger -> {ledger}, runs csv -> {csv_path}",
+        plan.name,
+        started.elapsed(),
+        summary.records.len(),
+        summary.n_cached,
+        summary.n_executed
+    );
+    Ok(())
+}
+
 fn cmd_exp(args: &Args, which: &str) -> Result<()> {
     let cfg = build_config(args)?;
     let tier = Tier::parse(args.get("tier").unwrap_or("sim"))?;
@@ -153,31 +234,32 @@ fn cmd_exp(args: &Args, which: &str) -> Result<()> {
         if tname == "fig3" {
             return cmd_fig3(args, &cfg);
         }
-        for (label, cell_cfg) in table_cells(tname, &cfg)? {
+        for (label, plan) in table_plans(tname, &cfg, tier)? {
             let started = std::time::Instant::now();
-            // Analytic-tier cells fan out over the work-stealing grid.
-            let results = run_cell_parallel(&cell_cfg, tier, cfg.grid_threads, |p, s, t| {
+            let mut progress = ProgressSink::new(label.clone(), quiet);
+            let mut table_sink = TableSink::new(Some(label.clone()));
+            let summary = execute(
+                &plan,
+                &ExecOptions { threads: cfg.grid_threads, ledger: None },
+                &mut [&mut progress, &mut table_sink],
+            )?;
+            for table in &table_sink.tables {
+                println!("{}", table.render());
+                let fname = format!("{out_dir}/{}.csv", file_slug(&label));
+                table.write_csv(&fname)?;
                 if !quiet {
-                    eprintln!("  [{label}] {p} seed {s}: {t:.3e} s");
+                    eprintln!("  ({label}: {:.1?}, csv -> {fname})", started.elapsed());
                 }
-            })?;
-            let table = table_for(&label, &results)?;
-            println!("{}", table.render());
-            let fname = format!(
-                "{out_dir}/{}.csv",
-                label.to_lowercase().replace([' ', ',', '^', '='], "_")
-            );
-            table.write_csv(&fname)?;
-            if !quiet {
-                eprintln!("  ({label}: {:.1?}, csv -> {fname})", started.elapsed());
             }
-            for r in &results {
-                if r.unconverged > 0 {
+            for p in &plan.policies {
+                let bad =
+                    summary.records.iter().filter(|r| &r.policy == p && !r.converged).count();
+                if bad > 0 {
                     eprintln!(
                         "  warning: {} had {}/{} unconverged runs",
-                        r.policy,
-                        r.unconverged,
-                        r.times.len()
+                        p,
+                        bad,
+                        plan.seeds.len()
                     );
                 }
             }
@@ -191,11 +273,11 @@ fn cmd_fig3(args: &Args, base: &ExperimentConfig) -> Result<()> {
     std::fs::create_dir_all(&out_dir)?;
     for (label, cfg) in fig3_cells(base) {
         eprintln!("[{label}] running {} policies...", cfg.policies.len());
-        let results = run_cell(&cfg, Tier::Ml, |p, s, t| {
-            eprintln!("  {p} seed {s}: {t:.3e} s");
-        })?;
-        for r in &results {
-            for trace in &r.traces {
+        let plan = ExperimentPlan::run_cell_plan(&label, &cfg, Tier::Ml);
+        let mut progress = ProgressSink::new(label.clone(), args.get_bool("quiet"));
+        let summary = execute(&plan, &ExecOptions::default(), &mut [&mut progress])?;
+        for r in &summary.records {
+            if let Some(trace) = &r.trace {
                 let fname = format!(
                     "{out_dir}/fig3_{}_{}.csv",
                     label.split_whitespace().next().unwrap_or("panel"),
@@ -245,17 +327,25 @@ fn cmd_train(args: &Args) -> Result<()> {
 fn cmd_sim(args: &Args) -> Result<()> {
     let cfg = build_config(args)?;
     let tier = Tier::parse(args.get("tier").unwrap_or("sim"))?;
-    let results = run_cell_parallel(&cfg, tier, cfg.grid_threads, |_, _, _| {})?;
-    let table = table_for(&format!("scenario {}", cfg.scenario.label()), &results)?;
-    println!("{}", table.render());
+    let title = format!("scenario {}", cfg.scenario.label());
+    let plan = ExperimentPlan::run_cell_plan(&title, &cfg, tier);
+    let mut table_sink = TableSink::new(Some(title));
+    execute(
+        &plan,
+        &ExecOptions { threads: cfg.grid_threads, ledger: None },
+        &mut [&mut table_sink],
+    )?;
+    for table in &table_sink.tables {
+        println!("{}", table.render());
+    }
     Ok(())
 }
 
-/// DES sweep: (scenario x discipline x policy x seed) cells in parallel.
-/// `--discipline` narrows to one discipline; the default tours all three.
+/// DES sweep: (scenario x discipline x policy x seed) cells in parallel,
+/// expressed as a plan with a disciplines axis.  `--discipline` narrows
+/// to one discipline; the default tours all three.
 fn cmd_des(args: &Args) -> Result<()> {
     let cfg = build_config(args)?;
-    let ctx = cfg.policy_ctx();
     let k_eps = match Tier::parse(args.get("tier").unwrap_or("sim"))? {
         Tier::Analytic { k_eps } => k_eps,
         Tier::Ml => anyhow::bail!("the des subcommand runs on the analytic tier (use --tier sim[:k])"),
@@ -273,43 +363,41 @@ fn cmd_des(args: &Args) -> Result<()> {
             Discipline::Async { staleness_exp: 0.5 },
         ]
     };
-    let spec = SweepSpec {
-        m: cfg.m,
-        scenarios: vec![cfg.scenario],
-        disciplines,
-        policies: cfg.policies.clone(),
-        seeds: cfg.seeds.clone(),
-        faults: cfg.fault_model(),
-        k_eps,
-        max_rounds: 10_000_000,
-    };
+    let plan = ExperimentPlan::builder(format!("des {}", cfg.scenario.label()))
+        .base(cfg.clone())
+        .tiers(vec![Tier::Analytic { k_eps }])
+        .disciplines(disciplines)
+        .build()?;
     let started = std::time::Instant::now();
     let threads = resolve_threads(cfg.grid_threads);
-    let cells = run_sweep(&ctx, &spec, threads)?;
-    let table = sweep_table("DES sweep: mean time-to-target", &spec, &cells)?;
+    let summary = execute(&plan, &ExecOptions { threads, ledger: None }, &mut [])?;
+    let table = campaign_table("DES sweep: mean time-to-target", &plan, &summary.records)?;
     println!("{}", table.render());
-    let unconverged = cells.iter().filter(|c| !c.result.converged).count();
+    let unconverged = summary.records.iter().filter(|c| !c.converged).count();
     if unconverged > 0 {
         eprintln!(
             "  warning: {unconverged}/{} cells hit the round cap before the target; \
              their table entries are budget-exhaustion walls, not time-to-target",
-            cells.len()
+            summary.records.len()
         );
     }
     if !args.get_bool("quiet") {
-        for d in &spec.disciplines {
+        for d in &plan.disciplines {
+            let label = d.label();
             let (mut dur, mut drop, mut late) = (0.0, 0usize, 0usize);
             let mut n = 0usize;
-            for c in cells.iter().filter(|c| c.discipline == d.label()) {
-                dur += c.result.mean_round_duration();
-                drop += c.result.dropped_updates;
-                late += c.result.late_updates;
+            for c in summary.records.iter().filter(|c| c.discipline == label) {
+                if c.rounds > 0 {
+                    dur += c.wall / c.rounds as f64;
+                }
+                drop += c.dropped;
+                late += c.late;
                 n += 1;
             }
             let nf = n.max(1) as f64;
             eprintln!(
                 "  {}: mean round {:.3e} s, {:.1} dropped + {:.1} late updates/run",
-                d.label(),
+                label,
                 dur / nf,
                 drop as f64 / nf,
                 late as f64 / nf,
@@ -317,7 +405,7 @@ fn cmd_des(args: &Args) -> Result<()> {
         }
         eprintln!(
             "  ({} cells on {threads} worker threads in {:.2?})",
-            cells.len(),
+            summary.records.len(),
             started.elapsed()
         );
     }
@@ -395,6 +483,7 @@ fn main() {
         }
     };
     let subcommands = [
+        ("run", "execute a declarative [campaign] manifest (resumes from its ledger)"),
         ("exp", "regenerate a paper table/figure (table1..table4, theorem1, fig3, all)"),
         ("train", "one full FedCOM-V training run"),
         ("sim", "one analytic-tier cell"),
@@ -403,6 +492,7 @@ fn main() {
         ("check", "load + execute all AOT artifacts"),
     ];
     let result = match args.subcommand.as_deref() {
+        Some("run") => cmd_run(&args),
         Some("exp") => {
             let which = args
                 .positionals

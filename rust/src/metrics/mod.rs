@@ -7,5 +7,5 @@ pub mod table;
 pub mod trace;
 
 pub use stats::{gain_vs, mean, percentile, Summary};
-pub use table::TableWriter;
+pub use table::{csv_escape, csv_split, TableWriter};
 pub use trace::{RunTrace, TracePoint};

@@ -4,6 +4,51 @@
 use std::io::Write;
 use std::path::Path;
 
+/// Escape one CSV field (RFC 4180): values containing a comma, quote or
+/// newline are wrapped in double quotes with embedded quotes doubled,
+/// so spec-grammar names (`topk:0.05`, roster lists with commas) and
+/// free-text labels survive a round trip unmangled.  Colons need no
+/// quoting in CSV; commas are the corrupter.
+pub fn csv_escape(field: &str) -> String {
+    if field.contains(',') || field.contains('"') || field.contains('\n') {
+        format!("\"{}\"", field.replace('"', "\"\""))
+    } else {
+        field.to_string()
+    }
+}
+
+/// Split one CSV line into unescaped fields (inverse of [`csv_escape`];
+/// used by the header-roundtrip tests and ad-hoc readers).
+pub fn csv_split(line: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut quoted = false;
+    let mut at_field_start = true;
+    let mut chars = line.chars().peekable();
+    while let Some(ch) = chars.next() {
+        match ch {
+            '"' if quoted => {
+                if chars.peek() == Some(&'"') {
+                    cur.push('"');
+                    chars.next();
+                } else {
+                    quoted = false;
+                }
+            }
+            '"' if at_field_start => quoted = true,
+            ',' if !quoted => {
+                out.push(std::mem::take(&mut cur));
+                at_field_start = true;
+                continue;
+            }
+            c => cur.push(c),
+        }
+        at_field_start = false;
+    }
+    out.push(cur);
+    out
+}
+
 #[derive(Clone, Debug, Default)]
 pub struct TableWriter {
     pub title: String,
@@ -69,10 +114,13 @@ impl TableWriter {
     }
 
     pub fn write_csv(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        let esc = |xs: &[String]| -> String {
+            xs.iter().map(|x| csv_escape(x)).collect::<Vec<_>>().join(",")
+        };
         let mut f = std::fs::File::create(path)?;
-        writeln!(f, "row,{}", self.columns.join(","))?;
+        writeln!(f, "row,{}", esc(&self.columns))?;
         for (label, cells) in &self.rows {
-            writeln!(f, "{},{}", label, cells.join(","))?;
+            writeln!(f, "{},{}", csv_escape(label), esc(cells))?;
         }
         Ok(())
     }
@@ -106,6 +154,44 @@ mod tests {
         assert_eq!(TableWriter::pow10_scale(-5.0), 1.0);
         assert_eq!(TableWriter::pow10_scale(f64::NAN), 1.0);
         assert_eq!(TableWriter::pow10_scale(f64::INFINITY), 1.0);
+    }
+
+    #[test]
+    fn csv_escape_round_trips_through_split() {
+        for raw in [
+            "plain",
+            "topk:0.05",
+            "a,b",
+            "quote\"inside",
+            "both,\"of,them\"",
+            "",
+        ] {
+            let line = format!("{},{}", csv_escape(raw), csv_escape("x"));
+            let fields = csv_split(&line);
+            assert_eq!(fields.len(), 2, "line: {line}");
+            assert_eq!(fields[0], raw, "line: {line}");
+            assert_eq!(fields[1], "x");
+        }
+        // Unquoted colons pass through untouched.
+        assert_eq!(csv_escape("semi-sync:7"), "semi-sync:7");
+        assert_eq!(csv_split("a:1,b:2"), vec!["a:1".to_string(), "b:2".to_string()]);
+    }
+
+    #[test]
+    fn write_csv_quotes_fields_with_commas() {
+        let mut t = TableWriter::new("x", &["roster fixed:1,fixed:2", "nacfl:1"]);
+        t.row("Mean, scaled", vec!["1.0".into(), "2.0".into()]);
+        let path =
+            std::env::temp_dir().join(format!("nacfl_tablecsv_{}.csv", std::process::id()));
+        t.write_csv(&path).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        let mut lines = body.lines();
+        let header = csv_split(lines.next().unwrap());
+        assert_eq!(header.len(), 3, "body: {body}");
+        assert_eq!(header[1], "roster fixed:1,fixed:2");
+        let row = csv_split(lines.next().unwrap());
+        assert_eq!(row[0], "Mean, scaled");
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

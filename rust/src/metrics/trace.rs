@@ -1,7 +1,14 @@
 //! Per-run traces: (round, simulated wall clock, loss, accuracy, bits)
 //! samples, time-to-accuracy extraction (the paper's target metric), and
-//! JSONL/CSV export for the Fig. 3 sample-path plots.
+//! CSV/JSONL export for the Fig. 3 sample-path plots.
+//!
+//! Both exports carry the run's identity (policy / scenario specs +
+//! seed) on every row, with spec-grammar values escaped — CSV fields
+//! are RFC-4180 quoted ([`super::table::csv_escape`]), so roster names
+//! containing commas cannot shift columns, and `topk:0.05`-style colons
+//! pass through verbatim; JSONL strings are JSON-escaped.
 
+use super::table::csv_escape;
 use std::io::Write;
 use std::path::Path;
 
@@ -46,15 +53,43 @@ impl RunTrace {
         self.points.last().map(|p| p.test_acc)
     }
 
-    /// Write a CSV usable for the Fig.-3 style plots.
+    /// Write a CSV usable for the Fig.-3 style plots.  The run identity
+    /// (policy / scenario / seed) rides on every row, escaped, so
+    /// per-run files can be concatenated and still split cleanly.
     pub fn write_csv(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
         let mut f = std::fs::File::create(path)?;
-        writeln!(f, "round,wall,train_loss,test_acc,mean_bits")?;
+        writeln!(f, "round,wall,train_loss,test_acc,mean_bits,policy,scenario,seed")?;
+        let (policy, scenario) = (csv_escape(&self.policy), csv_escape(&self.scenario));
         for p in &self.points {
             writeln!(
                 f,
-                "{},{:.6e},{:.6},{:.4},{:.2}",
-                p.round, p.wall, p.train_loss, p.test_acc, p.mean_bits
+                "{},{:.6e},{:.6},{:.4},{:.2},{},{},{}",
+                p.round, p.wall, p.train_loss, p.test_acc, p.mean_bits, policy, scenario,
+                self.seed
+            )?;
+        }
+        Ok(())
+    }
+
+    /// Write the trace as JSONL: one flat object per point, identity on
+    /// every line (string values JSON-escaped; the same `util::json`
+    /// escape/number policy the campaign ledger uses).
+    pub fn write_jsonl(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        use crate::util::json;
+        let mut f = std::fs::File::create(path)?;
+        for p in &self.points {
+            writeln!(
+                f,
+                "{{\"round\":{},\"wall\":{},\"train_loss\":{},\"test_acc\":{},\
+                 \"mean_bits\":{},\"policy\":{},\"scenario\":{},\"seed\":{}}}",
+                p.round,
+                json::num(p.wall),
+                json::num(p.train_loss),
+                json::num(p.test_acc),
+                json::num(p.mean_bits),
+                json::string(&self.policy),
+                json::string(&self.scenario),
+                self.seed
             )?;
         }
         Ok(())
@@ -95,6 +130,62 @@ mod tests {
         let body = std::fs::read_to_string(&path).unwrap();
         assert!(body.starts_with("round,wall,"));
         assert_eq!(body.lines().count(), 6);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn csv_header_and_spec_values_round_trip_escaped() {
+        use crate::metrics::csv_split;
+        // A policy name carrying both spec colons and a comma — the
+        // exact shape that used to shift columns.
+        let mut t = RunTrace::new("topk:0.05,errbound:1.5", "perf:4", 9);
+        t.push(TracePoint {
+            round: 1,
+            wall: 10.0,
+            train_loss: 1.0,
+            test_acc: 0.5,
+            mean_bits: 2.0,
+        });
+        let path =
+            std::env::temp_dir().join(format!("nacfl_trace_esc_{}.csv", std::process::id()));
+        t.write_csv(&path).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        let mut lines = body.lines();
+        let header = csv_split(lines.next().unwrap());
+        assert_eq!(
+            header,
+            vec![
+                "round",
+                "wall",
+                "train_loss",
+                "test_acc",
+                "mean_bits",
+                "policy",
+                "scenario",
+                "seed"
+            ]
+        );
+        let row = csv_split(lines.next().unwrap());
+        assert_eq!(row.len(), header.len(), "escaping must keep the column count");
+        assert_eq!(row[5], "topk:0.05,errbound:1.5");
+        assert_eq!(row[6], "perf:4");
+        assert_eq!(row[7], "9");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn jsonl_export_is_one_flat_object_per_point() {
+        let t = tr();
+        let path =
+            std::env::temp_dir().join(format!("nacfl_trace_{}.jsonl", std::process::id()));
+        t.write_jsonl(&path).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(body.lines().count(), t.points.len());
+        for line in body.lines() {
+            assert!(line.starts_with("{\"round\":") && line.ends_with('}'), "line: {line}");
+            assert!(line.contains("\"policy\":\"nacfl\""), "line: {line}");
+            assert!(line.contains("\"scenario\":\"homog:1\""), "line: {line}");
+        }
         std::fs::remove_file(&path).ok();
     }
 }

@@ -1,0 +1,54 @@
+//! Shared JSON *writing* primitives for the in-tree JSONL emitters (the
+//! campaign ledger `exp::sink`, trace export `metrics::trace`).  One
+//! escape table and one number policy, so the formats cannot drift.
+
+/// Escape a string's content for embedding inside a JSON string literal
+/// (no surrounding quotes).
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// A quoted JSON string literal.
+pub fn string(s: &str) -> String {
+    format!("\"{}\"", escape(s))
+}
+
+/// A JSON number: shortest exact round-trip form for finite floats
+/// (`{:?}`), `null` for NaN/inf (JSON has no literal for them).
+pub fn num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:?}")
+    } else {
+        "null".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn escapes_specials_and_round_trip_floats() {
+        assert_eq!(escape("plain topk:0.05"), "plain topk:0.05");
+        assert_eq!(escape("a\"b\\c\nd\te"), "a\\\"b\\\\c\\nd\\te");
+        assert_eq!(escape("\u{1}"), "\\u0001");
+        assert_eq!(string("x\"y"), "\"x\\\"y\"");
+        assert_eq!(num(1.5), "1.5");
+        assert_eq!(num(f64::NAN), "null");
+        assert_eq!(num(f64::INFINITY), "null");
+        let v = 1.5812345678901234e7;
+        assert_eq!(num(v).parse::<f64>().unwrap().to_bits(), v.to_bits());
+    }
+}

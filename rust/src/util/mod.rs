@@ -6,6 +6,7 @@
 pub mod bench;
 pub mod check;
 pub mod cli;
+pub mod json;
 pub mod linalg;
 pub mod rng;
 pub mod spec;

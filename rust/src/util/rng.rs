@@ -7,6 +7,19 @@
 
 /// SplitMix64 step — used for seeding and stream derivation.
 #[inline]
+/// FNV-1a 64-bit content hash — the one stable, dependency-free hash
+/// used for deterministic stream ids (`exp::exec` DES fault streams)
+/// and config fingerprints (`exp::plan`).  Do not change the constants:
+/// ledger fingerprints and fault sample paths depend on them.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
 pub fn splitmix64(state: &mut u64) -> u64 {
     *state = state.wrapping_add(0x9E3779B97F4A7C15);
     let mut z = *state;

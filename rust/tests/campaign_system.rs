@@ -1,0 +1,251 @@
+//! System tests for the declarative campaign layer (ISSUE-4):
+//!
+//! * paper-table parity — every `nacfl exp` preset produces
+//!   bit-identical tables through the unified engine and the retained
+//!   legacy `run_cell` path;
+//! * manifest execution — a `[campaign]` TOML manifest parses, round-
+//!   trips through Display, and executes a mixed analytic + DES
+//!   campaign;
+//! * ledger resume — a campaign interrupted mid-run (torn trailing
+//!   ledger line included) resumes from its JSONL ledger and finishes
+//!   bit-identically to an uninterrupted run.
+
+use nacfl::config::ExperimentConfig;
+use nacfl::des::Discipline;
+use nacfl::exp::{
+    execute, run_cell, table_cells, table_for, table_plans, ExecOptions, ExperimentPlan,
+    MemorySink, ResultSink, TableSink, Tier,
+};
+use nacfl::netsim::ScenarioKind;
+
+fn temp_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("nacfl_{tag}_{}", std::process::id()))
+}
+
+#[test]
+fn engine_tables_are_bit_identical_to_legacy_for_all_presets() {
+    let mut base = ExperimentConfig::paper();
+    base.seeds = (0..4).collect();
+    let tier = Tier::Analytic { k_eps: 80.0 };
+    for table in ["table1", "table2", "table3", "table4", "theorem1"] {
+        let cells = table_cells(table, &base).unwrap();
+        let plans = table_plans(table, &base, tier).unwrap();
+        assert_eq!(cells.len(), plans.len());
+        for ((label, cfg), (_, plan)) in cells.iter().zip(plans.iter()) {
+            let legacy = run_cell(cfg, tier, |_, _, _| {}).unwrap();
+            let legacy_render = table_for(label, &legacy).unwrap().render();
+
+            let mut sink = TableSink::new(Some(label.clone()));
+            let summary = execute(
+                plan,
+                &ExecOptions { threads: 4, ledger: None },
+                &mut [&mut sink],
+            )
+            .unwrap();
+
+            // Per-run walls are bit-identical, policy-major seed-minor.
+            let mut it = summary.records.iter();
+            for cr in &legacy {
+                for (si, &wall) in cr.times.iter().enumerate() {
+                    let rec = it.next().unwrap();
+                    assert_eq!(rec.policy, cr.policy, "{table} {label}");
+                    assert_eq!(rec.seed, cfg.seeds[si]);
+                    assert_eq!(
+                        rec.wall.to_bits(),
+                        wall.to_bits(),
+                        "{table} {label}: {} seed {}",
+                        rec.policy,
+                        rec.seed
+                    );
+                    assert_eq!(rec.rounds, cr.rounds[si]);
+                }
+            }
+            assert!(it.next().is_none(), "{table} {label}: extra engine records");
+
+            // And the rendered paper table is byte-identical.
+            assert_eq!(sink.tables.len(), 1, "{table} {label}");
+            assert_eq!(sink.tables[0].render(), legacy_render, "{table} {label}");
+        }
+    }
+}
+
+#[test]
+fn manifest_executes_a_mixed_analytic_plus_des_campaign() {
+    let text = r#"
+# Mixed campaign: sync cells take the analytic closed form, semi-sync
+# cells run through the DES engine — one plan, one engine.
+[campaign]
+name = "mixed smoke"
+scenarios = ["homog:2"]
+policies = ["fixed:2", "nacfl:1"]
+tiers = ["sim:60"]
+disciplines = ["sync", "semi-sync:7"]
+seeds = 2
+"#;
+    let plan = ExperimentPlan::parse_manifest(text).unwrap();
+    assert_eq!(plan.n_runs(), 8, "2 disciplines x 2 policies x 2 seeds");
+
+    // Display round-trips to an equivalent plan.
+    let back = ExperimentPlan::parse_manifest(&plan.to_string()).unwrap();
+    assert_eq!(back.cells(), plan.cells());
+
+    let mut mem = MemorySink::default();
+    let mut sinks: Vec<&mut dyn ResultSink> = vec![&mut mem];
+    let summary = execute(&plan, &ExecOptions::default(), &mut sinks).unwrap();
+    assert_eq!(summary.records.len(), plan.n_runs());
+    assert_eq!(mem.records.len(), plan.n_runs());
+
+    // The sync half is the analytic tier exactly: compare against the
+    // legacy run_cell on the equivalent config.
+    let mut cfg = plan.base.clone();
+    cfg.scenario = ScenarioKind::HomogeneousIndependent { sigma_sq: 2.0 };
+    cfg.policies = plan.policies.clone();
+    cfg.seeds = plan.seeds.clone();
+    let legacy = run_cell(&cfg, Tier::Analytic { k_eps: 60.0 }, |_, _, _| {}).unwrap();
+    for cr in &legacy {
+        for (si, &wall) in cr.times.iter().enumerate() {
+            let rec = summary
+                .records
+                .iter()
+                .find(|r| {
+                    r.discipline == "sync" && r.policy == cr.policy && r.seed == cfg.seeds[si]
+                })
+                .unwrap();
+            assert_eq!(rec.wall.to_bits(), wall.to_bits());
+        }
+    }
+    // The semi-sync half really went through the DES engine.
+    let late: usize = summary
+        .records
+        .iter()
+        .filter(|r| r.discipline == "semi-sync:7")
+        .map(|r| r.late)
+        .sum();
+    assert!(late > 0, "semi-sync cells must abandon some transfers");
+}
+
+#[test]
+fn campaign_resumes_bit_identically_from_a_torn_ledger() {
+    let ledger_path = temp_path("resume_ledger");
+    let ledger = ledger_path.to_str().unwrap().to_string();
+    let _ = std::fs::remove_file(&ledger);
+
+    let mut base = ExperimentConfig::paper();
+    base.seeds = (0..3).collect();
+    base.policies = vec!["fixed:2".into(), "nacfl:1".into()];
+    let plan = ExperimentPlan::builder("resume demo")
+        .base(base)
+        .scenarios(vec![ScenarioKind::HomogeneousIndependent { sigma_sq: 2.0 }])
+        .tiers(vec![Tier::Analytic { k_eps: 60.0 }])
+        .disciplines(vec![Discipline::Sync, Discipline::SemiSync { k: 7 }])
+        .build()
+        .unwrap();
+    let n = plan.n_runs();
+    assert_eq!(n, 12);
+
+    // Uninterrupted reference run, streaming the ledger.
+    let mut sinks: Vec<&mut dyn ResultSink> = Vec::new();
+    let full = execute(
+        &plan,
+        &ExecOptions { threads: 2, ledger: Some(ledger.clone()) },
+        &mut sinks,
+    )
+    .unwrap();
+    assert_eq!(full.n_executed, n);
+    assert_eq!(full.n_cached, 0);
+
+    // Simulate a mid-run kill: keep 5 complete ledger lines plus one
+    // torn half-line (the write that was interrupted).
+    let text = std::fs::read_to_string(&ledger).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), n, "one ledger line per run");
+    let mut torn = lines[..5].join("\n");
+    torn.push('\n');
+    torn.push_str(&lines[5][..lines[5].len() / 2]);
+    std::fs::write(&ledger, &torn).unwrap();
+
+    // Resume: 5 runs come from the ledger, the rest re-execute, and the
+    // final records are bit-identical to the uninterrupted run.
+    let mut sinks: Vec<&mut dyn ResultSink> = Vec::new();
+    let resumed = execute(
+        &plan,
+        &ExecOptions { threads: 2, ledger: Some(ledger.clone()) },
+        &mut sinks,
+    )
+    .unwrap();
+    assert_eq!(resumed.n_cached, 5);
+    assert_eq!(resumed.n_executed, n - 5);
+    assert_eq!(resumed.records.len(), n);
+    for (a, b) in full.records.iter().zip(resumed.records.iter()) {
+        assert_eq!(a.key(), b.key(), "plan order must be stable");
+        assert_eq!(
+            a.wall.to_bits(),
+            b.wall.to_bits(),
+            "resumed wall must be bit-identical for {}",
+            a.key()
+        );
+        assert_eq!(a.rounds, b.rounds);
+        assert_eq!(a.converged, b.converged);
+    }
+
+    // A third invocation is fully cached (skip-completed on rerun).
+    let mut sinks: Vec<&mut dyn ResultSink> = Vec::new();
+    let third = execute(
+        &plan,
+        &ExecOptions { threads: 1, ledger: Some(ledger.clone()) },
+        &mut sinks,
+    )
+    .unwrap();
+    assert_eq!(third.n_cached, n);
+    assert_eq!(third.n_executed, 0);
+    for (a, b) in full.records.iter().zip(third.records.iter()) {
+        assert_eq!(a.wall.to_bits(), b.wall.to_bits());
+    }
+
+    // Editing the base config invalidates every cached record (the
+    // fingerprint no longer matches), so nothing stale is served.
+    let mut edited = plan.clone();
+    edited.base.c_q *= 2.0;
+    let mut sinks: Vec<&mut dyn ResultSink> = Vec::new();
+    let fourth = execute(
+        &edited,
+        &ExecOptions { threads: 1, ledger: Some(ledger.clone()) },
+        &mut sinks,
+    )
+    .unwrap();
+    assert_eq!(fourth.n_cached, 0, "changed base config must re-execute");
+    assert_eq!(fourth.n_executed, n);
+
+    std::fs::remove_file(&ledger).ok();
+}
+
+#[test]
+fn compressor_axis_fans_out_within_one_campaign() {
+    let mut base = ExperimentConfig::paper();
+    base.seeds = (0..2).collect();
+    base.policies = vec!["fixed:2".into(), "nacfl:1".into()];
+    let plan = ExperimentPlan::builder("compressors")
+        .base(base)
+        .compressors(vec!["quant:inf", "topk:0.05", "errbound:1.5625"])
+        .tiers(vec![Tier::Analytic { k_eps: 50.0 }])
+        .build()
+        .unwrap();
+    let mut sinks: Vec<&mut dyn ResultSink> = Vec::new();
+    let summary = execute(&plan, &ExecOptions { threads: 2, ledger: None }, &mut sinks).unwrap();
+    assert_eq!(summary.records.len(), 3 * 2 * 2);
+    // Each compressor family prices differently, so the same (policy,
+    // seed) cell must not produce identical walls across all families.
+    let wall_of = |comp: &str| {
+        summary
+            .records
+            .iter()
+            .find(|r| r.compressor == comp && r.policy == "nacfl:1" && r.seed == 0)
+            .unwrap()
+            .wall
+    };
+    let (a, b, c) = (wall_of("quant:inf"), wall_of("topk:0.05"), wall_of("errbound:1.5625"));
+    assert!(
+        a != b || b != c,
+        "compressor axis had no effect: {a:.3e} {b:.3e} {c:.3e}"
+    );
+}
