@@ -8,58 +8,66 @@
 //! * `semi-sync:7` — aggregate after the fastest 7 of 10;
 //! * `async:0.5`   — aggregate on every arrival, staleness-discounted.
 //!
-//! The sweep fans out over the work-stealing grid executor, and the
-//! merged table shows mean time-to-target per (discipline, policy).
+//! The disciplines are one axis of an `ExperimentPlan`; the campaign
+//! engine fans the runs over the work-stealing pool and the merged
+//! table shows mean time-to-target per (discipline, policy).
 //!
 //! Run: `cargo run --release --example async_rounds`
 
 use nacfl::config::ExperimentConfig;
-use nacfl::des::{Discipline, FaultModel};
-use nacfl::exp::{run_sweep, sweep_table, SweepSpec};
+use nacfl::des::Discipline;
+use nacfl::exp::{campaign_table, execute, ExecOptions, ExperimentPlan, Tier};
 use nacfl::netsim::ScenarioKind;
 
 fn main() -> anyhow::Result<()> {
-    let cfg = ExperimentConfig::paper();
-    let ctx = cfg.policy_ctx();
-    let spec = SweepSpec {
-        m: cfg.m,
-        scenarios: vec![ScenarioKind::HeterogeneousIndependent],
-        disciplines: vec![
+    let mut cfg = ExperimentConfig::paper();
+    cfg.scenario = ScenarioKind::HeterogeneousIndependent;
+    cfg.seeds = (0..10).collect();
+    cfg.stragglers = vec![8, 9];
+    cfg.straggler_mult = 8.0;
+    let plan = ExperimentPlan::builder("async rounds")
+        .base(cfg)
+        .tiers(vec![Tier::Analytic { k_eps: 100.0 }])
+        .disciplines(vec![
             Discipline::Sync,
             Discipline::SemiSync { k: 7 },
             Discipline::Async { staleness_exp: 0.5 },
-        ],
-        policies: cfg.policies.clone(),
-        seeds: (0..10).collect(),
-        faults: FaultModel::none().with_stragglers(cfg.m, &[8, 9], 8.0),
-        k_eps: 100.0,
-        max_rounds: 1_000_000,
-    };
+        ])
+        .build()?;
 
     println!(
         "sweeping {} disciplines x {} policies x {} seeds on all cores...\n",
-        spec.disciplines.len(),
-        spec.policies.len(),
-        spec.seeds.len()
+        plan.disciplines.len(),
+        plan.policies.len(),
+        plan.seeds.len()
     );
-    let cells = run_sweep(&ctx, &spec, 0)?;
-    let table = sweep_table("heterog + stragglers: mean time-to-target", &spec, &cells)?;
+    let summary = execute(&plan, &ExecOptions::default(), &mut [])?;
+    let table =
+        campaign_table("heterog + stragglers: mean time-to-target", &plan, &summary.records)?;
     println!("{}", table.render());
 
-    for d in &spec.disciplines {
-        let sel: Vec<_> = cells.iter().filter(|c| c.discipline == d.label()).collect();
+    for d in &plan.disciplines {
+        let label = d.label();
+        let sel: Vec<_> =
+            summary.records.iter().filter(|r| r.discipline == label).collect();
         let n = sel.len().max(1) as f64;
-        let round = sel.iter().map(|c| c.result.mean_round_duration()).sum::<f64>() / n;
-        let late = sel.iter().map(|c| c.result.late_updates).sum::<usize>() as f64 / n;
-        let rho = sel.iter().map(|c| c.result.mean_rho).sum::<f64>() / n;
+        let per_round: Vec<f64> = sel
+            .iter()
+            .filter(|r| r.rounds > 0)
+            .map(|r| r.wall / r.rounds as f64)
+            .collect();
+        let round = per_round.iter().sum::<f64>() / per_round.len().max(1) as f64;
+        let late = sel.iter().map(|r| r.late).sum::<usize>() as f64 / n;
+        let agg = sel.iter().map(|r| r.aggregations).sum::<usize>() as f64 / n;
         println!(
-            "{:<14} mean round {round:>10.3e} s   late updates/run {late:>7.1}   mean rho_eff {rho:.3}",
-            d.label()
+            "{label:<14} mean round {round:>10.3e} s   late updates/run {late:>7.1}   \
+             aggregations/run {agg:>8.0}"
         );
     }
     println!(
-        "\nsemi-sync stops waiting for the stragglers (shorter rounds, higher rho_eff);\n\
-         async removes the barrier entirely — the trade NAC-FL navigates per round."
+        "\nsemi-sync stops waiting for the stragglers (shorter rounds, more late \
+         updates);\nasync removes the barrier entirely — the trade NAC-FL navigates \
+         per round."
     );
     Ok(())
 }

@@ -10,7 +10,7 @@
 //! Run: `cargo run --release --example correlated_congestion`
 
 use nacfl::config::ExperimentConfig;
-use nacfl::exp::{run_cell, Tier};
+use nacfl::exp::{cell_results, execute, ExecOptions, ExperimentPlan, RunRecord, Tier};
 use nacfl::metrics::{gain_vs, Summary};
 use nacfl::netsim::ScenarioKind;
 
@@ -25,7 +25,10 @@ fn main() -> anyhow::Result<()> {
     );
     for si2 in [1.0, 1.5625, 4.0, 16.0, 64.0] {
         cfg.scenario = ScenarioKind::PerfectlyCorrelated { sigma_inf_sq: si2 };
-        let results = run_cell(&cfg, tier, |_, _, _| {})?;
+        let plan = ExperimentPlan::run_cell_plan("correlated", &cfg, tier);
+        let summary = execute(&plan, &ExecOptions::default(), &mut [])?;
+        let refs: Vec<&RunRecord> = summary.records.iter().collect();
+        let results = cell_results(&refs);
         let by = |prefix: &str| {
             results
                 .iter()

@@ -7,7 +7,7 @@
 //! policies compress everyone harder (lower mean bits).
 
 use nacfl::config::ExperimentConfig;
-use nacfl::exp::{run_cell, Tier};
+use nacfl::exp::{cell_results, execute, ExecOptions, ExperimentPlan, RunRecord, Tier};
 use nacfl::metrics::Summary;
 use nacfl::netsim::{DelayModel, ScenarioKind};
 
@@ -21,7 +21,11 @@ fn main() {
         ("TDMA-sum", DelayModel::TdmaSum { theta: 0.0 }),
     ] {
         cfg.delay = model;
-        let results = run_cell(&cfg, Tier::Analytic { k_eps: 300.0 }, |_, _, _| {}).unwrap();
+        let plan =
+            ExperimentPlan::run_cell_plan(name, &cfg, Tier::Analytic { k_eps: 300.0 });
+        let summary = execute(&plan, &ExecOptions::default(), &mut []).unwrap();
+        let refs: Vec<&RunRecord> = summary.records.iter().collect();
+        let results = cell_results(&refs);
         println!("== {name} ==");
         let mut best = (String::new(), f64::INFINITY);
         for r in &results {

@@ -6,8 +6,9 @@
 //! and times the regeneration.  Since ISSUE-4 the cells run as
 //! single-group `ExperimentPlan`s through the unified campaign engine
 //! (`exp::execute` + `TableSink`), which fans runs over the
-//! work-stealing pool and is bit-identical to the retained legacy
-//! `run_cell` path (pinned by the `campaign_system` integration test).
+//! work-stealing pool and is bit-identical to the frozen legacy float
+//! path (pinned by the `campaign_system` integration test's inline
+//! reference).
 //! `NACFL_BENCH_SEEDS` overrides the seed count; `NACFL_BENCH_THREADS`
 //! pins the worker count (default: all cores, or `NACFL_THREADS`);
 //! `NACFL_BENCH_TIER=ml` switches to full FedCOM-V training (slow; used
@@ -48,12 +49,8 @@ pub fn run_table(table: &str, paper_reference: &str) {
     for (label, plan) in table_plans(table, &cfg, tier).expect("preset") {
         let t0 = std::time::Instant::now();
         let mut sink = TableSink::new(Some(label));
-        execute(
-            &plan,
-            &ExecOptions { threads, ledger: None },
-            &mut [&mut sink],
-        )
-        .expect("cell");
+        execute(&plan, &ExecOptions::with_threads(threads), &mut [&mut sink])
+            .expect("cell");
         for t in &sink.tables {
             println!("{}", t.render());
         }

@@ -1,17 +1,15 @@
-//! Grid executor bench: sequential `run_cell` vs the work-stealing
-//! parallel path, plus DES discipline throughput.
+//! Grid executor bench: the campaign engine single-threaded vs the
+//! work-stealing parallel fan-out, plus DES discipline throughput.
 //!
-//! Prints the measured wall-clock speedup of the parallel sweep (the
+//! Prints the measured wall-clock speedup of the parallel engine (the
 //! acceptance target is >= 2x on a 4-core host) and verifies en route
-//! that both paths render bit-identical tables.  `NACFL_BENCH_SEEDS`
-//! scales the cell; `NACFL_BENCH_THREADS` pins the parallel worker count.
+//! that every thread count renders bit-identical tables.
+//! `NACFL_BENCH_SEEDS` scales the cell; `NACFL_BENCH_THREADS` pins the
+//! parallel worker count.
 
 use nacfl::config::ExperimentConfig;
 use nacfl::des::{simulate_des, DesConfig, Discipline, FaultModel};
-use nacfl::exp::{
-    execute, resolve_threads, run_cell, run_cell_parallel, table_for, ExecOptions,
-    ExperimentPlan, TableSink, Tier,
-};
+use nacfl::exp::{execute, resolve_threads, ExecOptions, ExperimentPlan, TableSink, Tier};
 use nacfl::netsim::{Scenario, ScenarioKind};
 use nacfl::policy::parse_policy;
 use nacfl::util::rng::Rng;
@@ -26,7 +24,7 @@ fn main() {
     cfg.seeds = (0..seeds).collect();
     cfg.scenario = ScenarioKind::HomogeneousIndependent { sigma_sq: 2.0 };
     let tier = Tier::Analytic { k_eps: 300.0 };
-    // 0 = resolve to all cores, same convention as run_cell_parallel.
+    // 0 = resolve to all cores, same convention as the engine.
     let threads = resolve_threads(
         std::env::var("NACFL_BENCH_THREADS")
             .ok()
@@ -39,31 +37,29 @@ fn main() {
         cfg.policies.len(),
         cfg.seeds.len()
     );
+    let plan = ExperimentPlan::run_cell_plan("grid bench", &cfg, tier);
+    let run = |threads: usize| {
+        let mut sink = TableSink::new(Some("grid bench".to_string()));
+        execute(&plan, &ExecOptions::with_threads(threads), &mut [&mut sink])
+            .expect("engine cell");
+        sink.tables[0].render()
+    };
+
     let t0 = Instant::now();
-    let seq = run_cell(&cfg, tier, |_, _, _| {}).expect("sequential cell");
+    let seq_table = run(1);
     let t_seq = t0.elapsed();
-    println!("sequential run_cell:        {t_seq:>10.2?}");
+    println!("engine, 1 thread:          {t_seq:>10.2?}");
 
     let t1 = Instant::now();
-    let par = run_cell_parallel(&cfg, tier, threads, |_, _, _| {}).expect("parallel cell");
+    let par_table = run(threads);
     let t_par = t1.elapsed();
-    println!("parallel  run_cell ({threads} thr): {t_par:>10.2?}");
-
-    // The unified campaign engine on the same cell (single-group plan).
-    let t2 = Instant::now();
-    let plan = ExperimentPlan::run_cell_plan("grid bench", &cfg, tier);
-    let mut sink = TableSink::new(Some("grid bench".to_string()));
-    execute(&plan, &ExecOptions { threads, ledger: None }, &mut [&mut sink])
-        .expect("engine cell");
-    let t_eng = t2.elapsed();
-    println!("campaign engine    ({threads} thr): {t_eng:>10.2?}");
+    println!("engine, {threads} threads:         {t_par:>10.2?}");
 
     // Bit-identity gate: the speedup is only meaningful if the tables match.
-    let ts = table_for("grid bench", &seq).expect("table").render();
-    let tp = table_for("grid bench", &par).expect("table").render();
-    assert_eq!(ts, tp, "parallel table must be bit-identical to sequential");
-    let te = sink.tables[0].render();
-    assert_eq!(ts, te, "campaign-engine table must be bit-identical to sequential");
+    assert_eq!(
+        seq_table, par_table,
+        "parallel table must be bit-identical to single-threaded"
+    );
     let speedup = t_seq.as_secs_f64() / t_par.as_secs_f64().max(1e-9);
     println!("speedup: {speedup:.2}x (bit-identical tables verified; target >= 2x on 4 cores)");
 

@@ -6,7 +6,7 @@
 //! decayed 0.9/10 rounds, gamma = 1, tau = 2, alpha = 2, beta_n = 1/n,
 //! target 90 % test accuracy).
 
-use super::toml_lite::{self, Doc};
+use super::toml_lite::{self, Doc, Value};
 use crate::data::PartitionKind;
 use crate::des::{Discipline, FaultModel};
 use crate::netsim::{BtdProcess, DelayModel, Scenario, ScenarioKind};
@@ -298,6 +298,78 @@ impl ExperimentConfig {
         Ok(c)
     }
 
+    /// Serialize every field [`ExperimentConfig::from_doc`] reads back
+    /// into a `toml_lite` document — the inverse of `from_doc`, so a
+    /// loaded config can be re-emitted as one self-contained file (the
+    /// campaign manifest's base sections; see `ExperimentPlan::
+    /// manifest`).  Pinned by a parse → emit → parse round-trip test.
+    pub fn to_doc(&self) -> Doc {
+        let ints = |xs: &[u64]| Value::Array(xs.iter().map(|&v| Value::Int(v as i64)).collect());
+        let strs =
+            |xs: &[String]| Value::Array(xs.iter().map(|s| Value::Str(s.clone())).collect());
+        let mut doc: Doc = Doc::new();
+
+        let mut root = std::collections::BTreeMap::new();
+        root.insert("m".into(), Value::Int(self.m as i64));
+        root.insert("seeds".into(), ints(&self.seeds));
+        root.insert("scenario".into(), Value::Str(self.scenario.label()));
+        root.insert("policies".into(), strs(&self.policies));
+        root.insert("partition".into(), Value::Str(self.partition.label().into()));
+        root.insert("delay".into(), Value::Str(self.delay.label()));
+        doc.insert(String::new(), root);
+
+        let mut fl = std::collections::BTreeMap::new();
+        fl.insert("tau".into(), Value::Int(self.tau as i64));
+        fl.insert("batch".into(), Value::Int(self.batch as i64));
+        fl.insert("eta0".into(), Value::Float(self.eta0));
+        fl.insert("lr_decay".into(), Value::Float(self.lr_decay));
+        fl.insert("lr_decay_every".into(), Value::Int(self.lr_decay_every as i64));
+        fl.insert("gamma".into(), Value::Float(self.gamma));
+        fl.insert("target_acc".into(), Value::Float(self.target_acc));
+        fl.insert("max_rounds".into(), Value::Int(self.max_rounds as i64));
+        fl.insert("eval_every".into(), Value::Int(self.eval_every as i64));
+        fl.insert("eval_samples".into(), Value::Int(self.eval_samples as i64));
+        fl.insert("train_eval_samples".into(), Value::Int(self.train_eval_samples as i64));
+        doc.insert("fl".into(), fl);
+
+        let mut quant = std::collections::BTreeMap::new();
+        quant.insert("compressor".into(), Value::Str(self.compressor.clone()));
+        quant.insert("c_q".into(), Value::Float(self.c_q));
+        quant.insert("alpha".into(), Value::Float(self.alpha));
+        doc.insert("quant".into(), quant);
+
+        let mut data = std::collections::BTreeMap::new();
+        data.insert("train_n".into(), Value::Int(self.train_n as i64));
+        data.insert("test_n".into(), Value::Int(self.test_n as i64));
+        data.insert("seed".into(), Value::Int(self.data_seed as i64));
+        if let Some(dir) = &self.data_dir {
+            data.insert("dir".into(), Value::Str(dir.clone()));
+        }
+        doc.insert("data".into(), data);
+
+        let mut des = std::collections::BTreeMap::new();
+        des.insert("discipline".into(), Value::Str(self.discipline.label()));
+        des.insert("dropout".into(), Value::Float(self.dropout));
+        des.insert(
+            "stragglers".into(),
+            Value::Array(self.stragglers.iter().map(|&j| Value::Int(j as i64)).collect()),
+        );
+        des.insert("straggler_mult".into(), Value::Float(self.straggler_mult));
+        doc.insert("des".into(), des);
+
+        let mut engine = std::collections::BTreeMap::new();
+        engine.insert("kind".into(), Value::Str(self.engine.clone()));
+        engine.insert("artifact_dir".into(), Value::Str(self.artifact_dir.clone()));
+        engine.insert("workers".into(), Value::Int(self.workers as i64));
+        doc.insert("engine".into(), engine);
+
+        let mut grid = std::collections::BTreeMap::new();
+        grid.insert("threads".into(), Value::Int(self.grid_threads as i64));
+        doc.insert("grid".into(), grid);
+
+        doc
+    }
+
     pub fn validate(&self) -> Result<()> {
         if self.m == 0 || self.seeds.is_empty() || self.policies.is_empty() {
             return Err(anyhow!("m, seeds, policies must be non-empty"));
@@ -427,6 +499,56 @@ threads = 2
         // oracle is a valid roster entry at the config layer.
         let doc = toml_lite::parse("policies = [\"nacfl\", \"oracle:8\"]").unwrap();
         ExperimentConfig::from_doc(&doc).unwrap();
+    }
+
+    #[test]
+    fn to_doc_round_trips_through_parse_and_render() {
+        // Non-default everything that from_doc can read back.
+        let mut c = ExperimentConfig::paper();
+        c.m = 8;
+        c.seeds = vec![3, 5, 8];
+        c.scenario = ScenarioKind::PerfectlyCorrelated { sigma_inf_sq: 4.0 };
+        c.policies = vec!["fixed:2".into(), "nacfl:1".into()];
+        c.partition = PartitionKind::Homogeneous;
+        c.tau = 3;
+        c.eta0 = 0.05;
+        c.target_acc = 0.85;
+        c.compressor = "topk:0.05".into();
+        c.c_q = 12.5;
+        c.train_n = 4000;
+        c.test_n = 800;
+        c.data_seed = 11;
+        c.data_dir = Some("mnist-idx".into());
+        c.engine = "rust".into();
+        c.discipline = Discipline::SemiSync { k: 7 };
+        c.dropout = 0.1;
+        c.stragglers = vec![0, 3];
+        c.straggler_mult = 4.0;
+        c.grid_threads = 2;
+        c.validate().unwrap();
+
+        // parse(render(to_doc)) reconstructs the document exactly...
+        let doc = c.to_doc();
+        let text = toml_lite::render(&doc);
+        let back_doc = toml_lite::parse(&text).unwrap();
+        assert_eq!(back_doc, doc, "rendered manifest must re-parse exactly:\n{text}");
+
+        // ...and from_doc reconstructs an equivalent config: emitting it
+        // again yields the identical document (field-complete inverse).
+        let back = ExperimentConfig::from_doc(&back_doc).unwrap();
+        assert_eq!(back.to_doc(), doc);
+        assert_eq!(back.seeds, c.seeds);
+        assert_eq!(back.scenario, c.scenario);
+        assert_eq!(back.discipline, c.discipline);
+        assert_eq!(back.data_dir, c.data_dir);
+        assert_eq!(back.stragglers, c.stragglers);
+
+        // data_dir = None simply omits the key.
+        let mut no_dir = c.clone();
+        no_dir.data_dir = None;
+        let doc2 = no_dir.to_doc();
+        assert!(!doc2["data"].contains_key("dir"));
+        assert_eq!(ExperimentConfig::from_doc(&doc2).unwrap().data_dir, None);
     }
 
     #[test]

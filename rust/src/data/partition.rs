@@ -9,7 +9,7 @@ use super::Dataset;
 use crate::util::rng::Rng;
 use anyhow::{anyhow, Result};
 
-#[derive(Clone, Copy, Debug, PartialEq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum PartitionKind {
     /// i.i.d. shards.
     Homogeneous,
@@ -23,6 +23,14 @@ impl PartitionKind {
             "homogeneous" | "iid" => Ok(PartitionKind::Homogeneous),
             "heterogeneous" | "label" => Ok(PartitionKind::Heterogeneous),
             _ => Err(anyhow!("unknown partition `{s}` (homogeneous | heterogeneous)")),
+        }
+    }
+
+    /// Canonical label (round-trips through [`PartitionKind::parse`]).
+    pub fn label(&self) -> &'static str {
+        match self {
+            PartitionKind::Homogeneous => "homogeneous",
+            PartitionKind::Heterogeneous => "heterogeneous",
         }
     }
 }

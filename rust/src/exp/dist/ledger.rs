@@ -1,0 +1,321 @@
+//! Distributed ledger line types and the three-way line dispatcher.
+//!
+//! A distributed ledger is the ordinary campaign JSONL ledger plus two
+//! `"kind"`-tagged control line types sharing the same flat-object
+//! grammar (`exp::sink`'s scanner):
+//!
+//! * `"kind":"plan"` — the [`PlanHeader`], first line of the file:
+//!   campaign identity ([`ExperimentPlan::plan_hash`]) + base-config
+//!   fingerprint + expected run count;
+//! * `"kind":"claim"` — a [`ClaimRecord`]: worker id, wall-clock
+//!   timestamp and lease duration for one pending coordinate key.
+//!
+//! Untagged lines are [`RunRecord`]s exactly as before.  All three are
+//! append-only; readers resolve conflicts by *last-writer-wins per key*
+//! for claims and completed records (runs are idempotent by coordinate
+//! purity, so duplicated records are identical bits).
+
+use crate::exp::plan::ExperimentPlan;
+use crate::exp::sink::{parse_flat_object, JsonVal, RunRecord};
+use crate::util::json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Seconds since the Unix epoch (claim timestamps / lease expiry).
+pub fn now_unix() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
+
+fn get_str(obj: &HashMap<String, JsonVal>, k: &str) -> Result<String> {
+    obj.get(k)
+        .and_then(JsonVal::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| anyhow!("control line missing string field `{k}`"))
+}
+
+fn get_u64(obj: &HashMap<String, JsonVal>, k: &str) -> Result<u64> {
+    obj.get(k)
+        .and_then(JsonVal::as_u64)
+        .ok_or_else(|| anyhow!("control line field `{k}` must be a non-negative integer"))
+}
+
+/// The plan-identity header — first line of a distributed ledger.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PlanHeader {
+    /// Campaign name (informational; the identity is `plan`).
+    pub campaign: String,
+    /// [`ExperimentPlan::plan_hash`] — axes + base-config fingerprint.
+    pub plan: String,
+    /// [`ExperimentPlan::config_fingerprint`] of the base config.
+    pub config: String,
+    /// Total runs in the plan's cross product.
+    pub n_runs: usize,
+}
+
+impl PlanHeader {
+    pub fn for_plan(plan: &ExperimentPlan) -> Self {
+        PlanHeader {
+            campaign: plan.name.clone(),
+            plan: plan.plan_hash(),
+            config: plan.config_fingerprint(),
+            n_runs: plan.n_runs(),
+        }
+    }
+
+    /// One flat JSON line (no trailing newline).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"schema\":2,\"kind\":\"plan\",\"campaign\":{},\"plan\":{},\"config\":{},\
+             \"n_runs\":{}}}",
+            json::string(&self.campaign),
+            json::string(&self.plan),
+            json::string(&self.config),
+            self.n_runs,
+        )
+    }
+
+    fn from_obj(obj: &HashMap<String, JsonVal>) -> Result<Self> {
+        Ok(PlanHeader {
+            campaign: get_str(obj, "campaign")?,
+            plan: get_str(obj, "plan")?,
+            config: get_str(obj, "config")?,
+            n_runs: get_u64(obj, "n_runs")? as usize,
+        })
+    }
+
+    /// Whether two headers describe the same campaign (name excluded —
+    /// renames don't orphan ledgers, matching the record-key rule).
+    pub fn same_campaign(&self, other: &PlanHeader) -> bool {
+        self.plan == other.plan
+    }
+}
+
+/// A claim/lease line: `worker` announces it is executing the run at
+/// `key`, valid for `lease_s` seconds from `ts`.  Advisory: claims only
+/// gate the *work-stealing* path, never correctness — a completed run
+/// record for the key always supersedes any claim.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ClaimRecord {
+    /// The claimed run's coordinate key (`PlanCell::key`).
+    pub key: String,
+    /// Claiming worker's id (`--worker`, default
+    /// `<host>-pid<n>-<nonce>`).
+    pub worker: String,
+    /// Unix timestamp of the claim.
+    pub ts: u64,
+    /// Lease duration in seconds; an expired lease marks the worker
+    /// dead and the run stealable.
+    pub lease_s: u64,
+}
+
+impl ClaimRecord {
+    pub fn new(key: impl Into<String>, worker: impl Into<String>, ts: u64, lease_s: u64) -> Self {
+        ClaimRecord { key: key.into(), worker: worker.into(), ts, lease_s }
+    }
+
+    /// Whether the lease is still live at `now` (a live foreign claim
+    /// blocks stealing; an expired one does not).
+    pub fn live(&self, now: u64) -> bool {
+        now < self.ts.saturating_add(self.lease_s)
+    }
+
+    /// One flat JSON line (no trailing newline).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"schema\":2,\"kind\":\"claim\",\"key\":{},\"worker\":{},\"ts\":{},\
+             \"lease_s\":{}}}",
+            json::string(&self.key),
+            json::string(&self.worker),
+            self.ts,
+            self.lease_s,
+        )
+    }
+
+    fn from_obj(obj: &HashMap<String, JsonVal>) -> Result<Self> {
+        Ok(ClaimRecord {
+            key: get_str(obj, "key")?,
+            worker: get_str(obj, "worker")?,
+            ts: get_u64(obj, "ts")?,
+            lease_s: get_u64(obj, "lease_s")?,
+        })
+    }
+}
+
+/// A fully-dispatched distributed ledger.
+#[derive(Debug, Default)]
+pub struct DistLedger {
+    /// The plan header, if the file carries one (legacy ledgers don't).
+    pub header: Option<PlanHeader>,
+    /// Latest claim per key (later lines overwrite earlier ones).
+    pub claims: HashMap<String, ClaimRecord>,
+    /// Run records in file order (duplicates preserved; callers dedup
+    /// by key, last wins).
+    pub runs: Vec<RunRecord>,
+    /// Unparseable lines skipped (torn writes, foreign garbage).
+    pub n_torn: usize,
+    /// Valid-but-outdated schema-1 run lines (pre-`data_seed`); their
+    /// runs re-execute.  Counted apart from `n_torn` so a v1 ledger
+    /// reads as "needs re-execution", not "corrupted".
+    pub n_legacy: usize,
+}
+
+/// Read and dispatch a distributed ledger.  Torn lines are counted and
+/// skipped (their runs re-execute); schema-1 run lines are counted as
+/// `n_legacy` with one warning per file.  Conflicting plan headers in
+/// one file — e.g. two campaigns' ledgers `cat`-ed together — are an
+/// error; duplicated *identical* headers (a benign double-write from
+/// two workers racing on a fresh shared ledger) are accepted.
+pub fn read_dist_ledger(path: impl AsRef<Path>) -> Result<DistLedger> {
+    let path = path.as_ref();
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading campaign ledger {}", path.display()))?;
+    let mut out = DistLedger::default();
+    for line in text.lines() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let obj = match parse_flat_object(line) {
+            Ok(obj) => obj,
+            Err(_) => {
+                out.n_torn += 1;
+                continue;
+            }
+        };
+        if matches!(obj.get("schema"), Some(JsonVal::Num(v)) if *v == 1.0) {
+            out.n_legacy += 1;
+            continue;
+        }
+        match obj.get("kind").and_then(JsonVal::as_str) {
+            Some("plan") => match PlanHeader::from_obj(&obj) {
+                Ok(h) => match &out.header {
+                    None => out.header = Some(h),
+                    Some(first) if first.same_campaign(&h) => {}
+                    Some(first) => {
+                        return Err(anyhow!(
+                            "ledger {}: conflicting plan headers ({} vs {}) — refusing to \
+                             mix campaigns in one file",
+                            path.display(),
+                            first.plan,
+                            h.plan
+                        ))
+                    }
+                },
+                Err(_) => out.n_torn += 1,
+            },
+            Some("claim") => match ClaimRecord::from_obj(&obj) {
+                Ok(c) => {
+                    out.claims.insert(c.key.clone(), c);
+                }
+                Err(_) => out.n_torn += 1,
+            },
+            Some(_) => out.n_torn += 1,
+            None => match RunRecord::from_obj(&obj) {
+                Ok(r) => out.runs.push(r),
+                Err(_) => out.n_torn += 1,
+            },
+        }
+    }
+    if out.n_legacy > 0 {
+        eprintln!(
+            "ledger {}: {} schema-1 line(s) predate the data_seeds axis; \
+             their runs re-execute (the file is not corrupted)",
+            path.display(),
+            out.n_legacy
+        );
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("nacfl_dist_{tag}_{}.jsonl", std::process::id()))
+    }
+
+    #[test]
+    fn header_round_trips_and_tracks_the_plan() {
+        let plan = ExperimentPlan::builder("hdr").build().unwrap();
+        let h = PlanHeader::for_plan(&plan);
+        assert_eq!(h.plan, plan.plan_hash());
+        assert_eq!(h.config, plan.config_fingerprint());
+        assert_eq!(h.n_runs, plan.n_runs());
+        let obj = parse_flat_object(&h.to_json()).unwrap();
+        assert_eq!(obj.get("kind").and_then(JsonVal::as_str), Some("plan"));
+        let back = PlanHeader::from_obj(&obj).unwrap();
+        assert_eq!(back, h);
+        // Renamed campaigns are still the same campaign.
+        let mut renamed = h.clone();
+        renamed.campaign = "other".into();
+        assert!(h.same_campaign(&renamed));
+    }
+
+    #[test]
+    fn claim_round_trips_and_lease_expires() {
+        let c = ClaimRecord::new("a|b|c|d|e|7|0", "worker-1", 1000, 600);
+        let obj = parse_flat_object(&c.to_json()).unwrap();
+        let back = ClaimRecord::from_obj(&obj).unwrap();
+        assert_eq!(back, c);
+        assert!(c.live(1000));
+        assert!(c.live(1599));
+        assert!(!c.live(1600), "lease expired exactly at ts + lease_s");
+        // Saturating add: a u64::MAX lease cannot overflow-wrap into
+        // the past.
+        let forever = ClaimRecord::new("k", "w", u64::MAX - 1, u64::MAX);
+        assert!(forever.live(u64::MAX - 1));
+    }
+
+    #[test]
+    fn dispatcher_sorts_lines_and_keeps_latest_claim() {
+        let path = tmp("dispatch");
+        let plan = ExperimentPlan::builder("d").build().unwrap();
+        let h = PlanHeader::for_plan(&plan);
+        let c1 = ClaimRecord::new("k1", "w1", 10, 60);
+        let c2 = ClaimRecord::new("k1", "w2", 20, 60);
+        let mut body = format!("{}\n{}\n{}\n", h.to_json(), c1.to_json(), c2.to_json());
+        body.push_str("{\"torn\":tru");
+        body.push('\n');
+        // A pre-data_seed (schema 1) record: outdated, not corrupted.
+        body.push_str("{\"schema\":1,\"campaign\":\"old\",\"policy\":\"fixed:2\",\"seed\":0}");
+        body.push('\n');
+        std::fs::write(&path, &body).unwrap();
+        let led = read_dist_ledger(&path).unwrap();
+        assert_eq!(led.header.as_ref().unwrap().plan, h.plan);
+        assert_eq!(led.claims.len(), 1);
+        assert_eq!(led.claims["k1"].worker, "w2", "last claim wins");
+        assert_eq!(led.runs.len(), 0);
+        assert_eq!(led.n_torn, 1, "schema-1 lines are legacy, not torn");
+        assert_eq!(led.n_legacy, 1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn conflicting_headers_in_one_file_are_rejected() {
+        let path = tmp("conflict");
+        let a = ExperimentPlan::builder("a").build().unwrap();
+        let mut b = a.clone();
+        b.seeds = vec![0];
+        let body = format!(
+            "{}\n{}\n",
+            PlanHeader::for_plan(&a).to_json(),
+            PlanHeader::for_plan(&b).to_json()
+        );
+        std::fs::write(&path, body).unwrap();
+        let err = read_dist_ledger(&path).unwrap_err();
+        assert!(err.to_string().contains("conflicting plan headers"), "err: {err}");
+        // An identical duplicated header (shared-ledger race) is fine.
+        let body = format!(
+            "{}\n{}\n",
+            PlanHeader::for_plan(&a).to_json(),
+            PlanHeader::for_plan(&a).to_json()
+        );
+        std::fs::write(&path, body).unwrap();
+        assert!(read_dist_ledger(&path).is_ok());
+        std::fs::remove_file(&path).ok();
+    }
+}

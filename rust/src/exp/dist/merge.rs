@@ -1,0 +1,310 @@
+//! Cross-machine ledger merge: the fleet's results → one campaign.
+//!
+//! [`merge_ledgers`] combines any number of (possibly overlapping,
+//! possibly torn) distributed ledgers: it validates that every plan
+//! header names the same campaign, dedups run records by coordinate key
+//! (last writer wins — completed records are idempotent bits, so the
+//! choice never changes a value), and, given the plan, reports coverage
+//! gaps and returns the records in **plan order** — exactly what the
+//! `TableSink`/CSV sinks consume, so paper tables regenerate from a
+//! merged fleet ledger bit-identically to a single-machine run.
+
+use super::ledger::{read_dist_ledger, PlanHeader};
+use crate::exp::plan::ExperimentPlan;
+use crate::exp::sink::{JsonlSink, ResultSink, RunRecord};
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// What a merge produced (and what it had to discard on the way).
+#[derive(Debug)]
+pub struct MergeOutcome {
+    /// Deduped run records — plan order when a plan was given, first-
+    /// seen order otherwise.
+    pub records: Vec<RunRecord>,
+    /// Header for the merged ledger: synthesized from the plan when
+    /// given, else the first input header (if any).
+    pub header: Option<PlanHeader>,
+    /// Ledger files read.
+    pub n_inputs: usize,
+    /// Run records dropped as duplicates of an earlier key.
+    pub n_duplicates: usize,
+    /// Unparseable lines skipped across all inputs (torn writes).
+    pub n_torn: usize,
+    /// Outdated schema-1 run lines skipped across all inputs (their
+    /// runs must re-execute; the files are not corrupted).
+    pub n_legacy: usize,
+    /// Records that matched no plan cell (or carried a stale base-config
+    /// fingerprint); 0 when no plan was given.
+    pub n_foreign: usize,
+    /// Plan coordinate keys with no usable record (empty = full
+    /// coverage; always empty when no plan was given).
+    pub missing: Vec<String>,
+}
+
+impl MergeOutcome {
+    /// Full coverage: every plan cell has a usable record.
+    pub fn complete(&self) -> bool {
+        self.missing.is_empty()
+    }
+}
+
+/// Merge distributed ledgers; see the module docs.  With `plan`, every
+/// input header must match [`ExperimentPlan::plan_hash`] — merging a
+/// different campaign's ledger is refused, not silently mixed.
+pub fn merge_ledgers(
+    paths: &[impl AsRef<Path>],
+    plan: Option<&ExperimentPlan>,
+) -> Result<MergeOutcome> {
+    if paths.is_empty() {
+        return Err(anyhow!("merge needs at least one ledger file"));
+    }
+    let mut headers: Vec<(String, PlanHeader)> = Vec::new();
+    let mut by_key: HashMap<String, RunRecord> = HashMap::new();
+    let mut order: Vec<String> = Vec::new();
+    let mut n_duplicates = 0usize;
+    let mut n_torn = 0usize;
+    let mut n_legacy = 0usize;
+    for p in paths {
+        let path = p.as_ref();
+        let led = read_dist_ledger(path)?;
+        n_torn += led.n_torn;
+        n_legacy += led.n_legacy;
+        if let Some(h) = led.header {
+            headers.push((path.display().to_string(), h));
+        }
+        for rec in led.runs {
+            let key = rec.key();
+            if by_key.insert(key.clone(), rec).is_some() {
+                n_duplicates += 1;
+            } else {
+                order.push(key);
+            }
+        }
+    }
+
+    // Every header must agree — with the plan when given, and with each
+    // other always.
+    if let Some(plan) = plan {
+        let want = plan.plan_hash();
+        for (path, h) in &headers {
+            if h.plan != want {
+                return Err(anyhow!(
+                    "{path}: ledger belongs to a different campaign \
+                     (plan hash {} != {want} for `{}`)",
+                    h.plan,
+                    plan.name
+                ));
+            }
+        }
+    }
+    if let Some((first_path, first)) = headers.first() {
+        for (path, h) in &headers[1..] {
+            if !first.same_campaign(h) {
+                return Err(anyhow!(
+                    "cannot merge different campaigns: {first_path} has plan hash {} \
+                     but {path} has {}",
+                    first.plan,
+                    h.plan
+                ));
+            }
+        }
+    }
+
+    let (records, header, n_foreign, missing) = match plan {
+        Some(plan) => {
+            let fp = plan.config_fingerprint();
+            let mut records = Vec::new();
+            let mut missing = Vec::new();
+            for cell in plan.cells() {
+                let key = cell.key();
+                match by_key.get(&key) {
+                    Some(rec) if rec.config == fp => records.push(rec.clone()),
+                    _ => missing.push(key),
+                }
+            }
+            let n_foreign = by_key.len() - records.len();
+            (records, Some(PlanHeader::for_plan(plan)), n_foreign, missing)
+        }
+        None => {
+            let records = order
+                .iter()
+                .map(|k| by_key.remove(k).expect("first-seen key present"))
+                .collect();
+            let header = headers.into_iter().next().map(|(_, h)| h);
+            (records, header, 0, Vec::new())
+        }
+    };
+
+    Ok(MergeOutcome {
+        records,
+        header,
+        n_inputs: paths.len(),
+        n_duplicates,
+        n_torn,
+        n_legacy,
+        n_foreign,
+        missing,
+    })
+}
+
+/// Write a (merged) ledger: the header line first, then one record per
+/// line — the same format `exp::exec` streams, so the output resumes
+/// and re-merges like any worker ledger.
+pub fn write_ledger(
+    path: impl AsRef<Path>,
+    header: Option<&PlanHeader>,
+    records: &[RunRecord],
+) -> Result<()> {
+    let mut sink = JsonlSink::create(path)?;
+    if let Some(h) = header {
+        sink.raw_line(&h.to_json())?;
+    }
+    for rec in records {
+        sink.on_record(rec)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exp::dist::ledger::ClaimRecord;
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("nacfl_merge_{tag}_{}.jsonl", std::process::id()))
+    }
+
+    fn rec(plan: &ExperimentPlan, idx: usize, wall: f64) -> RunRecord {
+        let cell = &plan.cells()[idx];
+        RunRecord {
+            campaign: plan.name.clone(),
+            scenario: cell.scenario.label(),
+            compressor: cell.compressor.clone(),
+            tier: cell.tier.label(),
+            discipline: cell.discipline.label(),
+            policy: cell.policy.clone(),
+            data_seed: cell.data_seed,
+            seed: cell.seed,
+            config: plan.config_fingerprint(),
+            wall,
+            rounds: 5,
+            converged: true,
+            aggregations: 5,
+            dropped: 0,
+            late: 0,
+            trace: None,
+        }
+    }
+
+    fn small_plan() -> ExperimentPlan {
+        ExperimentPlan::builder("merge-test")
+            .policies(vec!["fixed:2", "nacfl:1"])
+            .seed_count(2)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn merge_dedups_reports_gaps_and_orders_by_plan() {
+        let plan = small_plan();
+        let h = PlanHeader::for_plan(&plan);
+        let n = plan.n_runs();
+        assert_eq!(n, 4);
+        // Ledger a: runs 0, 1 (+ a claim + a torn tail). Ledger b: runs
+        // 1 (duplicate, later writer), 3 — run 2 is the coverage gap.
+        let pa = tmp("a");
+        let pb = tmp("b");
+        let mut body = format!(
+            "{}\n{}\n{}\n",
+            h.to_json(),
+            rec(&plan, 0, 1.0).to_json(),
+            rec(&plan, 1, 2.0).to_json()
+        );
+        body.push_str(&ClaimRecord::new("x", "w", 1, 1).to_json());
+        body.push('\n');
+        body.push_str("{\"half\":");
+        std::fs::write(&pa, &body).unwrap();
+        std::fs::write(
+            &pb,
+            format!(
+                "{}\n{}\n{}\n",
+                h.to_json(),
+                rec(&plan, 1, 2.0).to_json(),
+                rec(&plan, 3, 4.0).to_json()
+            ),
+        )
+        .unwrap();
+
+        let out = merge_ledgers(&[&pa, &pb], Some(&plan)).unwrap();
+        assert_eq!(out.n_inputs, 2);
+        assert_eq!(out.n_duplicates, 1);
+        assert_eq!(out.n_torn, 1);
+        assert_eq!(out.n_foreign, 0);
+        assert!(!out.complete());
+        assert_eq!(out.missing, vec![plan.cells()[2].key()]);
+        // Records come back in plan order.
+        let keys: Vec<String> = out.records.iter().map(|r| r.key()).collect();
+        let want: Vec<String> =
+            [0usize, 1, 3].iter().map(|&i| plan.cells()[i].key()).collect();
+        assert_eq!(keys, want);
+
+        // Without a plan: first-seen order, no gap analysis.
+        let free = merge_ledgers(&[&pa, &pb], None).unwrap();
+        assert_eq!(free.records.len(), 3);
+        assert!(free.complete());
+        assert_eq!(free.header.as_ref().unwrap().plan, h.plan);
+
+        std::fs::remove_file(&pa).ok();
+        std::fs::remove_file(&pb).ok();
+    }
+
+    #[test]
+    fn merge_refuses_a_different_campaign() {
+        let plan = small_plan();
+        let mut other = plan.clone();
+        other.seeds = vec![0];
+        let pa = tmp("own");
+        let pb = tmp("foreign");
+        write_ledger(&pa, Some(&PlanHeader::for_plan(&plan)), &[rec(&plan, 0, 1.0)]).unwrap();
+        write_ledger(&pb, Some(&PlanHeader::for_plan(&other)), &[]).unwrap();
+        // Against the plan...
+        let err = merge_ledgers(&[&pb], Some(&plan)).unwrap_err();
+        assert!(err.to_string().contains("different campaign"), "err: {err}");
+        // ...and against each other even without a plan.
+        let err = merge_ledgers(&[&pa, &pb], None).unwrap_err();
+        assert!(err.to_string().contains("different campaigns"), "err: {err}");
+        std::fs::remove_file(&pa).ok();
+        std::fs::remove_file(&pb).ok();
+    }
+
+    #[test]
+    fn stale_fingerprint_records_count_as_foreign_not_covered() {
+        let plan = small_plan();
+        let pa = tmp("stale");
+        let mut stale = rec(&plan, 0, 1.0);
+        stale.config = "0000000000000000".into();
+        write_ledger(&pa, Some(&PlanHeader::for_plan(&plan)), &[stale, rec(&plan, 1, 2.0)])
+            .unwrap();
+        let out = merge_ledgers(&[&pa], Some(&plan)).unwrap();
+        assert_eq!(out.records.len(), 1);
+        assert_eq!(out.n_foreign, 1, "stale record is unusable");
+        assert!(out.missing.contains(&plan.cells()[0].key()));
+        std::fs::remove_file(&pa).ok();
+    }
+
+    #[test]
+    fn write_ledger_round_trips_through_read() {
+        let plan = small_plan();
+        let p = tmp("rt");
+        let recs: Vec<RunRecord> = (0..plan.n_runs()).map(|i| rec(&plan, i, i as f64)).collect();
+        write_ledger(&p, Some(&PlanHeader::for_plan(&plan)), &recs).unwrap();
+        let out = merge_ledgers(&[&p], Some(&plan)).unwrap();
+        assert!(out.complete());
+        for (a, b) in recs.iter().zip(out.records.iter()) {
+            assert_eq!(a.key(), b.key());
+            assert_eq!(a.wall.to_bits(), b.wall.to_bits(), "floats survive bit-exactly");
+        }
+        std::fs::remove_file(&p).ok();
+    }
+}

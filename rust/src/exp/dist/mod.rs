@@ -1,0 +1,42 @@
+//! Distributed campaign execution: shard one [`ExperimentPlan`] across
+//! independent workers and merge their ledgers (DESIGN.md §11).
+//!
+//! Three pieces, layered on the PR-4 campaign engine's two invariants —
+//! every run is addressable by a pure coordinate key, and the JSONL
+//! ledger is machine-independent:
+//!
+//! * [`ledger`] — the distributed ledger line types.  A **plan-identity
+//!   header** ([`PlanHeader`], `"kind":"plan"`) opens every ledger with
+//!   an FNV content-hash of the fully-resolved plan
+//!   ([`ExperimentPlan::plan_hash`]: axes + base-config fingerprint), so
+//!   a worker refuses to resume — and the merge engine refuses to
+//!   combine — a different campaign.  **Claim/lease records**
+//!   ([`ClaimRecord`], `"kind":"claim"`) announce which worker is
+//!   executing which pending key; they are advisory and append-only, so
+//!   a torn or duplicated claim never corrupts anything — completed run
+//!   records are idempotent by coordinate purity and always win
+//!   (last-writer-wins on identical bits).
+//! * [`shard`] — deterministic work assignment.  `nacfl run plan.toml
+//!   --shard i/n` gives each worker the pending keys whose FNV-1a hash
+//!   falls in its range ([`ShardSpec`]); shards are disjoint and jointly
+//!   exhaustive by construction, with no coordination channel needed.
+//!   With `--steal`, a worker that finishes its shard re-reads the
+//!   (shared) ledger and reclaims pending keys whose claims have
+//!   expired — reclaiming runs from dead workers.
+//! * [`merge`] — `nacfl merge a.jsonl b.jsonl … --output merged.jsonl`
+//!   validates that all headers carry the same plan hash, dedups run
+//!   records by coordinate key, reports coverage gaps against the plan,
+//!   and (via the existing `TableSink`/CSV sinks) regenerates paper
+//!   tables **bit-identically** to a single-machine run — every run is
+//!   deterministic in its coordinates and floats round-trip exactly.
+//!
+//! [`ExperimentPlan`]: crate::exp::plan::ExperimentPlan
+//! [`ExperimentPlan::plan_hash`]: crate::exp::plan::ExperimentPlan::plan_hash
+
+pub mod ledger;
+pub mod merge;
+pub mod shard;
+
+pub use ledger::{now_unix, read_dist_ledger, ClaimRecord, DistLedger, PlanHeader};
+pub use merge::{merge_ledgers, write_ledger, MergeOutcome};
+pub use shard::{shard_of, ShardSpec};

@@ -1,0 +1,102 @@
+//! Deterministic shard assignment over coordinate keys.
+//!
+//! `--shard i/n` hash-partitions the plan's *pending* coordinate keys:
+//! key `k` belongs to shard `fnv1a(k) mod n`.  Every key lands in
+//! exactly one shard for any `n` (disjoint and jointly exhaustive by
+//! construction), the assignment is a pure function of the key — no
+//! coordination channel, no shared state — and it is stable under
+//! resume: a re-run worker gets exactly the keys it had before.
+
+use crate::util::rng::fnv1a;
+use anyhow::{anyhow, Result};
+
+/// Which shard a key belongs to when the campaign is split `n` ways.
+pub fn shard_of(key: &str, count: u32) -> u32 {
+    debug_assert!(count >= 1);
+    (fnv1a(key.as_bytes()) % count as u64) as u32
+}
+
+/// One worker's slice of a campaign: `index` of `count` hash shards.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardSpec {
+    pub index: u32,
+    pub count: u32,
+}
+
+impl ShardSpec {
+    /// The whole campaign (the unsharded default).
+    pub fn solo() -> Self {
+        ShardSpec { index: 0, count: 1 }
+    }
+
+    /// Parse `"i/n"` with `0 <= i < n`.
+    pub fn parse(s: &str) -> Result<Self> {
+        let (i, n) = s
+            .split_once('/')
+            .ok_or_else(|| anyhow!("shard spec must be `i/n`, got `{s}`"))?;
+        let index: u32 = i.trim().parse().map_err(|e| anyhow!("shard index `{i}`: {e}"))?;
+        let count: u32 = n.trim().parse().map_err(|e| anyhow!("shard count `{n}`: {e}"))?;
+        if count == 0 {
+            return Err(anyhow!("shard count must be >= 1"));
+        }
+        if index >= count {
+            return Err(anyhow!("shard index {index} out of range for count {count}"));
+        }
+        Ok(ShardSpec { index, count })
+    }
+
+    /// Whether this worker owns `key`.
+    pub fn contains(&self, key: &str) -> bool {
+        shard_of(key, self.count) == self.index
+    }
+
+    /// Canonical `i/n` form (round-trips through [`ShardSpec::parse`]).
+    pub fn label(&self) -> String {
+        format!("{}/{}", self.index, self.count)
+    }
+}
+
+impl std::fmt::Display for ShardSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.label())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_valid_and_rejects_invalid() {
+        assert_eq!(ShardSpec::parse("0/1").unwrap(), ShardSpec::solo());
+        assert_eq!(ShardSpec::parse("2/4").unwrap(), ShardSpec { index: 2, count: 4 });
+        for bad in ["", "3", "1/0", "4/4", "5/4", "a/2", "1/b", "-1/2"] {
+            assert!(ShardSpec::parse(bad).is_err(), "`{bad}` should be rejected");
+        }
+        for s in ["0/1", "2/4", "7/8"] {
+            assert_eq!(ShardSpec::parse(s).unwrap().label(), s, "label round-trips");
+        }
+    }
+
+    #[test]
+    fn every_key_lands_in_exactly_one_shard() {
+        // The tentpole disjointness property, over real coordinate keys.
+        let plan = crate::exp::plan::ExperimentPlan::builder("shard")
+            .policies(vec!["fixed:1", "fixed:2", "nacfl:1"])
+            .seed_count(5)
+            .build()
+            .unwrap();
+        let keys: Vec<String> = plan.cells().iter().map(|c| c.key()).collect();
+        for n in 1..=8u32 {
+            for key in &keys {
+                let owners: Vec<u32> = (0..n)
+                    .filter(|&i| ShardSpec { index: i, count: n }.contains(key))
+                    .collect();
+                assert_eq!(owners.len(), 1, "key {key} owned by {owners:?} of {n} shards");
+                assert_eq!(owners[0], shard_of(key, n));
+            }
+        }
+        // The solo shard owns everything.
+        assert!(keys.iter().all(|k| ShardSpec::solo().contains(k)));
+    }
+}

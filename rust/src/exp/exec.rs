@@ -4,11 +4,10 @@
 //! [`execute`] expands a plan into its run cells, schedules them on the
 //! existing work-stealing pool (`exp::grid::run_tasks`), and streams one
 //! [`RunRecord`] per finished run into the attached [`ResultSink`]s.
-//! It subsumes the legacy entry points — `run_cell`,
-//! `run_cell_parallel`, `run_sweep` and the `nacfl des` sweep loop —
-//! which are retained for one release as the parity anchor (the
-//! `campaign_system` integration test pins bit-identical paper tables
-//! across both paths).
+//! It is the sole execution path — the legacy entry points (`run_cell`,
+//! `run_cell_parallel`, `run_sweep`, the old `nacfl des` sweep loop)
+//! were retired after one release; the `campaign_system` integration
+//! test pins the engine to the frozen analytic float path instead.
 //!
 //! Per-cell routing:
 //!
@@ -20,18 +19,29 @@
 //!   never depend on plan shape, thread count or steal order;
 //! * `ml` tier → full FedCOM-V training through the coordinator,
 //!   sequential (the coordinator already parallelizes across client
-//!   workers), with the dataset loaded once per campaign.
+//!   workers), with datasets/partitions served by a campaign-level
+//!   keyed cache (`DataCache`, keyed on `(data_seed, partition, m,
+//!   corpus)`) — so `data_seeds` is a real plan axis, not one shared
+//!   dataset.
 //!
 //! With [`ExecOptions::ledger`] set, every finished run is appended to
 //! a JSONL ledger and already-present runs are skipped on the next
-//! invocation — interrupted campaigns resume where they stopped.
+//! invocation — interrupted campaigns resume where they stopped.  The
+//! first ledger line is a plan-identity header (`exp::dist`): resuming
+//! a ledger whose header hashes a *different* campaign is refused.
+//! [`ExecOptions::shard`] restricts execution to one hash shard of the
+//! pending keys (`nacfl run --shard i/n`), and [`ExecOptions::steal`]
+//! adds a work-stealing phase that reclaims expired-lease runs from
+//! dead workers on a shared ledger.  See DESIGN.md §11.
 
+use super::dist::{now_unix, read_dist_ledger, ClaimRecord, PlanHeader, ShardSpec};
 use super::grid::{resolve_threads, run_tasks};
 use super::plan::{ExperimentPlan, PlanCell};
 use super::runner::{load_data, run_analytic_once, Tier, ANALYTIC_ROUND_CAP};
-use super::sink::{read_ledger, JsonlSink, ResultSink, RunRecord};
+use super::sink::{JsonlSink, ResultSink, RunRecord};
+use crate::config::ExperimentConfig;
 use crate::coordinator::{Coordinator, FailureConfig};
-use crate::data::{partition, Dataset, Partition};
+use crate::data::{partition, Dataset, Partition, PartitionKind};
 use crate::des::{simulate_des, DesConfig, Discipline};
 use crate::metrics::TableWriter;
 use crate::policy::{PolicyCtx, PolicyEnv, PolicySpec};
@@ -45,8 +55,12 @@ use std::sync::Arc;
 /// sweep).
 const DES_ROUND_CAP: usize = 10_000_000;
 
+/// Default claim lease: a worker silent for this long is presumed dead
+/// and its claimed runs become stealable (`--lease` overrides).
+pub const DEFAULT_LEASE_S: u64 = 600;
+
 /// Engine options.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct ExecOptions {
     /// Worker threads for the analytic/DES fan-out: explicit value, or
     /// `0` for the `NACFL_THREADS` env var, or all cores
@@ -54,23 +68,119 @@ pub struct ExecOptions {
     pub threads: usize,
     /// JSONL ledger path.  Every finished run is appended (and flushed)
     /// here; on start, runs already present are skipped and replayed
-    /// into the sinks — interrupted campaigns resume for free.
+    /// into the sinks — interrupted campaigns resume for free.  A fresh
+    /// ledger opens with a plan-identity header; resuming a ledger
+    /// whose header belongs to a different campaign is an error.
     pub ledger: Option<String>,
+    /// This worker's hash shard of the pending keys (default: the whole
+    /// campaign).  With `count > 1` the summary may be partial —
+    /// `nacfl merge` combines the fleet's ledgers.
+    pub shard: ShardSpec,
+    /// After finishing the own shard, repeatedly re-read the (shared)
+    /// ledger and execute pending runs whose claims are absent or
+    /// expired — reclaiming work from dead workers.
+    pub steal: bool,
+    /// Worker id stamped on claim lines (default `<host>-pid<n>-<nonce>`
+    /// when sharding or stealing; claims are only written when an id is
+    /// in effect).
+    pub worker: Option<String>,
+    /// Claim lease duration in seconds.  Claims are stamped once per
+    /// batch (not renewed per run), so on a shared steal ledger the
+    /// lease should exceed the expected *batch* duration, not one
+    /// run's — a too-short lease costs duplicated (bit-identical) work,
+    /// never correctness.  Per-run renewal is a ROADMAP follow-on.
+    pub lease_s: u64,
 }
 
-/// A finished campaign.
+impl Default for ExecOptions {
+    fn default() -> Self {
+        ExecOptions {
+            threads: 0,
+            ledger: None,
+            shard: ShardSpec::solo(),
+            steal: false,
+            worker: None,
+            lease_s: DEFAULT_LEASE_S,
+        }
+    }
+}
+
+impl ExecOptions {
+    /// The common case: pick a thread count, default everything else.
+    pub fn with_threads(threads: usize) -> Self {
+        ExecOptions { threads, ..Default::default() }
+    }
+}
+
+/// A finished campaign (or this worker's completed slice of one).
 #[derive(Clone, Debug)]
 pub struct CampaignSummary {
-    /// One record per plan cell, in [`ExperimentPlan::cells`] order.
+    /// Completed records in [`ExperimentPlan::cells`] order.  For an
+    /// unsharded run this is every plan cell; a sharded worker returns
+    /// only the cells its ledger covers (`n_skipped` counts the rest).
     pub records: Vec<RunRecord>,
-    /// Runs served from the ledger (skip-completed).
+    /// Runs served from the ledger (skip-completed + runs adopted from
+    /// other workers on a shared ledger).
     pub n_cached: usize,
     /// Runs executed by this invocation.
     pub n_executed: usize,
+    /// Pending runs left to other shards/workers (0 when unsharded).
+    pub n_skipped: usize,
 }
 
-/// Run a campaign: every plan cell exactly once, streaming records into
-/// `sinks` (completion order) and returning them in plan order.
+/// Campaign-level keyed dataset/partition cache (ml tier).  Keyed on
+/// every field that shapes the loaded corpus and its split, so cells
+/// that differ along the `data_seeds` axis (or any future data axis)
+/// get distinct datasets while identical cells share one load.
+#[derive(Default)]
+pub(crate) struct DataCache {
+    map: HashMap<DataKey, (Arc<Dataset>, Arc<Dataset>, Arc<Partition>)>,
+    /// Distinct corpora actually loaded (test observability).
+    pub(crate) loads: usize,
+}
+
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+struct DataKey {
+    data_seed: u64,
+    partition: PartitionKind,
+    m: usize,
+    train_n: usize,
+    test_n: usize,
+    data_dir: Option<String>,
+}
+
+impl DataCache {
+    fn key(cfg: &ExperimentConfig) -> DataKey {
+        DataKey {
+            data_seed: cfg.data_seed,
+            partition: cfg.partition,
+            m: cfg.m,
+            train_n: cfg.train_n,
+            test_n: cfg.test_n,
+            data_dir: cfg.data_dir.clone(),
+        }
+    }
+
+    pub(crate) fn get(
+        &mut self,
+        cfg: &ExperimentConfig,
+    ) -> (Arc<Dataset>, Arc<Dataset>, Arc<Partition>) {
+        let key = Self::key(cfg);
+        if let Some(v) = self.map.get(&key) {
+            return v.clone();
+        }
+        let (train, test) = load_data(cfg);
+        let part = Arc::new(partition(&train, cfg.m, cfg.partition, cfg.data_seed));
+        self.loads += 1;
+        self.map
+            .insert(key, (Arc::clone(&train), Arc::clone(&test), Arc::clone(&part)));
+        (train, test, part)
+    }
+}
+
+/// Run a campaign: every plan cell exactly once (per fleet), streaming
+/// records into `sinks` (completion order) and returning the completed
+/// ones in plan order.
 pub fn execute(
     plan: &ExperimentPlan,
     opts: &ExecOptions,
@@ -80,13 +190,13 @@ pub fn execute(
     let cells = plan.cells();
     let n = cells.len();
     let fp = plan.config_fingerprint();
+    let header = PlanHeader::for_plan(plan);
     for s in sinks.iter_mut() {
         s.on_start(plan)?;
     }
 
     // One context per compressor, shared across every run of the
-    // campaign (the PR-3 level-table snapshot is not rebuilt per run —
-    // same hoisting the legacy per-cell runner did).
+    // campaign (the PR-3 level-table snapshot is not rebuilt per run).
     let mut ctxs: HashMap<String, PolicyCtx> = HashMap::new();
     for comp in &plan.compressors {
         let mut c = plan.base.clone();
@@ -96,20 +206,41 @@ pub fn execute(
 
     // Resume: index the ledger's completed runs by coordinate key; a
     // record is reused only if its base-config fingerprint still
-    // matches (an edited base re-executes instead of serving stale
-    // results — the fresh record is appended and wins on later loads).
+    // matches.  A plan-identity header guards the whole file: resuming
+    // a different campaign's ledger is refused outright.
     let mut cached: HashMap<String, RunRecord> = HashMap::new();
+    let mut ledger: Option<JsonlSink> = None;
     if let Some(path) = &opts.ledger {
-        if Path::new(path).exists() {
-            for rec in read_ledger(path)? {
+        let existing = Path::new(path).exists()
+            && std::fs::metadata(path).map(|m| m.len() > 0).unwrap_or(false);
+        if existing {
+            let led = read_dist_ledger(path)?;
+            match &led.header {
+                Some(h) if !h.same_campaign(&header) => {
+                    return Err(anyhow!(
+                        "ledger {path} belongs to a different campaign \
+                         (plan hash {} != {} for `{}`); pass --fresh or use another --ledger",
+                        h.plan,
+                        header.plan,
+                        plan.name
+                    ));
+                }
+                Some(_) => {}
+                None => eprintln!(
+                    "ledger {path}: no plan header (pre-dist or foreign file); \
+                     relying on per-record fingerprints"
+                ),
+            }
+            for rec in led.runs {
                 cached.insert(rec.key(), rec);
             }
         }
+        let mut sink = JsonlSink::append(path)?;
+        if !existing {
+            sink.raw_line(&header.to_json())?;
+        }
+        ledger = Some(sink);
     }
-    let mut ledger = match &opts.ledger {
-        Some(path) => Some(JsonlSink::append(path)?),
-        None => None,
-    };
 
     let mut slots: Vec<Option<RunRecord>> = vec![None; n];
     let mut pending: Vec<usize> = Vec::new();
@@ -119,7 +250,7 @@ pub fn execute(
             _ => pending.push(i),
         }
     }
-    let n_cached = n - pending.len();
+    let mut n_cached = n - pending.len();
     // Replay cached runs into the sinks (plan order); the ledger already
     // holds them, so only fresh runs are appended below.
     for rec in slots.iter().flatten() {
@@ -128,21 +259,162 @@ pub fn execute(
         }
     }
 
-    let (ml, grid): (Vec<usize>, Vec<usize>) = pending
+    // This worker's slice of the pending keys.
+    let mine: Vec<usize> = pending
         .iter()
         .copied()
-        .partition(|&i| matches!(cells[i].tier, Tier::Ml));
+        .filter(|&i| opts.shard.contains(&cells[i].key()))
+        .collect();
 
-    // Analytic + DES runs fan out over the work-stealing pool.
+    // Claim identity: explicit id, or derived once claims matter.  The
+    // derived id mixes hostname, pid and a time nonce — pids alone
+    // collide across the machines sharing a steal ledger, and a
+    // collision would make each worker treat the other's live claims
+    // as its own.  (The id never influences results, only stealing.)
+    let worker = opts
+        .worker
+        .clone()
+        .or_else(|| (opts.steal || opts.shard.count > 1).then(default_worker_id));
+
+    let bc = BatchCtx { plan, cells: &cells, ctxs: &ctxs, fp: &fp, threads: opts.threads };
+    let mut data = DataCache::default();
+    let mut n_executed = 0usize;
+    write_claims(&mut ledger, worker.as_deref(), opts.lease_s, &cells, &mine)?;
+    n_executed += execute_batch(&bc, &mine, &mut data, &mut ledger, sinks, &mut slots)?;
+
+    // Work stealing: adopt other workers' finished runs from the shared
+    // ledger, then take over pending keys with no live foreign claim.
+    // Each round either completes at least one run or stops, so the
+    // loop terminates; keys under a live foreign lease are left alone.
+    if opts.steal {
+        if let Some(path) = &opts.ledger {
+            loop {
+                let led = read_dist_ledger(path)?;
+                let me = worker.as_deref().unwrap_or("");
+                let now = now_unix();
+                let mut foreign: HashMap<String, RunRecord> = HashMap::new();
+                for rec in led.runs {
+                    foreign.insert(rec.key(), rec);
+                }
+                let mut steal: Vec<usize> = Vec::new();
+                for i in 0..n {
+                    if slots[i].is_some() {
+                        continue;
+                    }
+                    let key = cells[i].key();
+                    if let Some(rec) = foreign.remove(&key) {
+                        if rec.config == fp {
+                            for s in sinks.iter_mut() {
+                                s.on_record(&rec)?;
+                            }
+                            slots[i] = Some(rec);
+                            n_cached += 1;
+                            continue;
+                        }
+                    }
+                    match led.claims.get(&key) {
+                        Some(c) if c.worker != me && c.live(now) => {}
+                        _ => steal.push(i),
+                    }
+                }
+                if steal.is_empty() {
+                    break;
+                }
+                write_claims(&mut ledger, worker.as_deref(), opts.lease_s, &cells, &steal)?;
+                n_executed +=
+                    execute_batch(&bc, &steal, &mut data, &mut ledger, sinks, &mut slots)?;
+            }
+        }
+    }
+
+    let mut records: Vec<RunRecord> = Vec::with_capacity(n);
+    for (i, slot) in slots.into_iter().enumerate() {
+        match slot {
+            Some(rec) => records.push(rec),
+            // Sharded workers legitimately leave other shards' runs to
+            // the rest of the fleet; an unsharded run must be complete.
+            None if opts.shard.count > 1 => {}
+            None => return Err(anyhow!("run {i} missing ({})", cells[i].key())),
+        }
+    }
+    let n_skipped = n - records.len();
+    for s in sinks.iter_mut() {
+        s.on_finish(&records)?;
+    }
+    Ok(CampaignSummary { records, n_cached, n_executed, n_skipped })
+}
+
+/// Machine-unique default worker id: hostname (when the environment
+/// exposes one) + pid + a sub-second time nonce.
+fn default_worker_id() -> String {
+    let host = std::env::var("HOSTNAME")
+        .or_else(|_| std::env::var("COMPUTERNAME"))
+        .unwrap_or_else(|_| "host".into());
+    let nonce = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.subsec_nanos())
+        .unwrap_or(0);
+    format!("{host}-pid{}-{nonce:08x}", std::process::id())
+}
+
+/// Shared per-campaign context for [`execute_batch`].
+struct BatchCtx<'a> {
+    plan: &'a ExperimentPlan,
+    cells: &'a [PlanCell],
+    ctxs: &'a HashMap<String, PolicyCtx>,
+    fp: &'a str,
+    threads: usize,
+}
+
+/// Append claim lines for a batch of cells (no-op without a ledger or a
+/// worker id).  Claims are advisory — see `exp::dist::ledger`.
+fn write_claims(
+    ledger: &mut Option<JsonlSink>,
+    worker: Option<&str>,
+    lease_s: u64,
+    cells: &[PlanCell],
+    idxs: &[usize],
+) -> Result<()> {
+    let (Some(l), Some(w)) = (ledger.as_mut(), worker) else {
+        return Ok(());
+    };
+    let now = now_unix();
+    for &i in idxs {
+        l.raw_line(&ClaimRecord::new(cells[i].key(), w, now, lease_s).to_json())?;
+    }
+    Ok(())
+}
+
+/// Execute one batch of cell indices: analytic + DES runs fan out over
+/// the work-stealing pool, ML runs go sequentially through the
+/// coordinator with the campaign [`DataCache`].  Fills `slots`, streams
+/// every record to the ledger and sinks, returns the batch size.
+fn execute_batch(
+    bc: &BatchCtx<'_>,
+    idxs: &[usize],
+    data: &mut DataCache,
+    ledger: &mut Option<JsonlSink>,
+    sinks: &mut [&mut dyn ResultSink],
+    slots: &mut [Option<RunRecord>],
+) -> Result<usize> {
+    if idxs.is_empty() {
+        return Ok(0);
+    }
+    let (ml, grid): (Vec<usize>, Vec<usize>) = idxs
+        .iter()
+        .copied()
+        .partition(|&i| matches!(bc.cells[i].tier, Tier::Ml));
+
     if !grid.is_empty() {
-        let threads = resolve_threads(opts.threads);
+        let threads = resolve_threads(bc.threads);
         let mut sink_err: Option<anyhow::Error> = None;
         let recs = if threads <= 1 || grid.len() == 1 {
             let mut out = Vec::with_capacity(grid.len());
             for &i in &grid {
-                let cell = &cells[i];
-                let rec = execute_grid_run(plan, cell, &ctxs[cell.compressor.as_str()], &fp)?;
-                emit(&mut ledger, sinks, &rec)?;
+                let cell = &bc.cells[i];
+                let rec =
+                    execute_grid_run(bc.plan, cell, &bc.ctxs[cell.compressor.as_str()], bc.fp)?;
+                emit(ledger, sinks, &rec)?;
                 out.push(rec);
             }
             out
@@ -151,8 +423,8 @@ pub fn execute(
                 grid.len(),
                 threads,
                 |k| {
-                    let cell = &cells[grid[k]];
-                    execute_grid_run(plan, cell, &ctxs[cell.compressor.as_str()], &fp)
+                    let cell = &bc.cells[grid[k]];
+                    execute_grid_run(bc.plan, cell, &bc.ctxs[cell.compressor.as_str()], bc.fp)
                 },
                 |_, rec| {
                     // The ledger write is independent of the display
@@ -187,60 +459,44 @@ pub fn execute(
     }
 
     // ML runs are sequential (the coordinator parallelizes internally);
-    // the dataset and partition are shared across the whole campaign,
-    // exactly like the legacy run_cell's per-cell sharing.
-    if !ml.is_empty() {
-        let mut data: Option<(Arc<Dataset>, Arc<Dataset>, Partition)> = None;
-        for &i in &ml {
-            let cell = &cells[i];
-            let cfg = plan.cell_config(cell);
-            if data.is_none() {
-                let (train, test) = load_data(&cfg);
-                let part = partition(&train, cfg.m, cfg.partition, cfg.data_seed);
-                data = Some((train, test, part));
-            }
-            let (train, test, part) = data.as_ref().unwrap();
-            let ctx = &ctxs[cell.compressor.as_str()];
-            let env = PolicyEnv::for_cell(ctx, cfg.scenario, cfg.m, cell.seed);
-            let mut policy = PolicySpec::parse(&cell.policy)?.build(&env)?;
-            let mut process = cfg.congestion_process(cell.seed)?;
-            let mut co = Coordinator::new(
-                &cfg,
-                Arc::clone(train),
-                Arc::clone(test),
-                part,
-                cell.seed,
-                &FailureConfig::default(),
-            )?;
-            let trace = co.run(policy.as_mut(), &mut process)?;
-            let (wall, converged) = match trace.time_to_accuracy(cfg.target_acc) {
-                Some(t) => (t, true),
-                None => (
-                    trace.points.last().map(|p| p.wall).unwrap_or(f64::NAN),
-                    false,
-                ),
-            };
-            let rounds = trace.points.last().map(|p| p.round).unwrap_or(0);
-            let mut rec = base_record(plan, cell, &fp);
-            rec.wall = wall;
-            rec.rounds = rounds;
-            rec.converged = converged;
-            rec.aggregations = rounds;
-            rec.trace = Some(trace);
-            emit(&mut ledger, sinks, &rec)?;
-            slots[i] = Some(rec);
-        }
+    // datasets and partitions come from the campaign-level keyed cache,
+    // so cells sharing a data coordinate share one load while distinct
+    // `data_seeds` get distinct corpora.
+    for &i in &ml {
+        let cell = &bc.cells[i];
+        let cfg = bc.plan.cell_config(cell);
+        let (train, test, part) = data.get(&cfg);
+        let ctx = &bc.ctxs[cell.compressor.as_str()];
+        let env = PolicyEnv::for_cell(ctx, cfg.scenario, cfg.m, cell.seed);
+        let mut policy = PolicySpec::parse(&cell.policy)?.build(&env)?;
+        let mut process = cfg.congestion_process(cell.seed)?;
+        let mut co = Coordinator::new(
+            &cfg,
+            Arc::clone(&train),
+            Arc::clone(&test),
+            &part,
+            cell.seed,
+            &FailureConfig::default(),
+        )?;
+        let trace = co.run(policy.as_mut(), &mut process)?;
+        let (wall, converged) = match trace.time_to_accuracy(cfg.target_acc) {
+            Some(t) => (t, true),
+            None => (
+                trace.points.last().map(|p| p.wall).unwrap_or(f64::NAN),
+                false,
+            ),
+        };
+        let rounds = trace.points.last().map(|p| p.round).unwrap_or(0);
+        let mut rec = base_record(bc.plan, cell, bc.fp);
+        rec.wall = wall;
+        rec.rounds = rounds;
+        rec.converged = converged;
+        rec.aggregations = rounds;
+        rec.trace = Some(trace);
+        emit(ledger, sinks, &rec)?;
+        slots[i] = Some(rec);
     }
-
-    let records: Vec<RunRecord> = slots
-        .into_iter()
-        .enumerate()
-        .map(|(i, s)| s.ok_or_else(|| anyhow!("run {i} missing ({})", cells[i].key())))
-        .collect::<Result<_>>()?;
-    for s in sinks.iter_mut() {
-        s.on_finish(&records)?;
-    }
-    Ok(CampaignSummary { records, n_cached, n_executed: n - n_cached })
+    Ok(idxs.len())
 }
 
 fn emit(
@@ -265,6 +521,7 @@ fn base_record(plan: &ExperimentPlan, cell: &PlanCell, fp: &str) -> RunRecord {
         tier: cell.tier.label(),
         discipline: cell.discipline.label(),
         policy: cell.policy.clone(),
+        data_seed: cell.data_seed,
         seed: cell.seed,
         config: fp.to_string(),
         wall: f64::NAN,
@@ -330,9 +587,8 @@ fn execute_grid_run(
 
 /// Merged sweep-style table over a finished campaign: one row per table
 /// group (scenario × discipline, annotated with compressor / tier when
-/// those axes vary), one column per policy, mean wall across seeds at
-/// one shared power-of-ten scale — the engine-side successor of
-/// `exp::grid::sweep_table`.
+/// those axes vary), one column per policy, mean wall across (data)
+/// seeds at one shared power-of-ten scale.
 pub fn campaign_table(
     title: &str,
     plan: &ExperimentPlan,
@@ -361,22 +617,27 @@ pub fn campaign_table(
                     let mut means = Vec::with_capacity(plan.policies.len());
                     for policy in &plan.policies {
                         let mut acc = 0.0f64;
-                        for &seed in &plan.seeds {
-                            let cell = PlanCell {
-                                scenario,
-                                compressor: compressor.clone(),
-                                tier,
-                                discipline,
-                                policy: policy.clone(),
-                                seed,
-                            };
-                            let key = cell.key();
-                            acc += walls
-                                .get(&key)
-                                .copied()
-                                .ok_or_else(|| anyhow!("campaign is missing run {key}"))?;
+                        for &data_seed in &plan.data_seeds {
+                            for &seed in &plan.seeds {
+                                let cell = PlanCell {
+                                    scenario,
+                                    compressor: compressor.clone(),
+                                    tier,
+                                    discipline,
+                                    policy: policy.clone(),
+                                    data_seed,
+                                    seed,
+                                };
+                                let key = cell.key();
+                                acc += walls
+                                    .get(&key)
+                                    .copied()
+                                    .ok_or_else(|| anyhow!("campaign is missing run {key}"))?;
+                            }
                         }
-                        means.push(acc / plan.seeds.len() as f64);
+                        means.push(
+                            acc / (plan.seeds.len() * plan.data_seeds.len()) as f64,
+                        );
                     }
                     rows.push((label, means));
                 }
@@ -408,7 +669,6 @@ pub fn campaign_table(
 mod tests {
     use super::*;
     use crate::config::ExperimentConfig;
-    use crate::exp::runner::run_cell;
     use crate::exp::sink::MemorySink;
     use crate::netsim::ScenarioKind;
 
@@ -419,37 +679,28 @@ mod tests {
     }
 
     #[test]
-    fn engine_matches_legacy_run_cell_bitwise() {
+    fn engine_is_thread_count_invariant() {
         let cfg = small_cfg();
         let tier = Tier::Analytic { k_eps: 60.0 };
-        let legacy = run_cell(&cfg, tier, |_, _, _| {}).unwrap();
         let plan = ExperimentPlan::run_cell_plan("parity", &cfg, tier);
-        for threads in [1usize, 4] {
+        let baseline = execute(&plan, &ExecOptions::with_threads(1), &mut []).unwrap();
+        assert_eq!(baseline.records.len(), cfg.policies.len() * cfg.seeds.len());
+        assert_eq!(baseline.n_executed, baseline.records.len());
+        assert_eq!(baseline.n_skipped, 0);
+        for threads in [2usize, 4] {
             let mut mem = MemorySink::default();
             let mut sinks: Vec<&mut dyn ResultSink> = vec![&mut mem];
-            let summary = execute(
-                &plan,
-                &ExecOptions { threads, ledger: None },
-                &mut sinks,
-            )
-            .unwrap();
-            assert_eq!(summary.records.len(), cfg.policies.len() * cfg.seeds.len());
-            assert_eq!(summary.n_executed, summary.records.len());
-            let mut it = summary.records.iter();
-            for cr in &legacy {
-                for (si, &t) in cr.times.iter().enumerate() {
-                    let rec = it.next().unwrap();
-                    assert_eq!(rec.policy, cr.policy);
-                    assert_eq!(rec.seed, cfg.seeds[si]);
-                    assert_eq!(
-                        rec.wall.to_bits(),
-                        t.to_bits(),
-                        "bit-identical wall for {} seed {}",
-                        rec.policy,
-                        rec.seed
-                    );
-                    assert_eq!(rec.rounds, cr.rounds[si]);
-                }
+            let summary =
+                execute(&plan, &ExecOptions::with_threads(threads), &mut sinks).unwrap();
+            for (a, b) in baseline.records.iter().zip(summary.records.iter()) {
+                assert_eq!(a.key(), b.key(), "plan order is stable");
+                assert_eq!(
+                    a.wall.to_bits(),
+                    b.wall.to_bits(),
+                    "bit-identical wall for {} under {threads} threads",
+                    a.key()
+                );
+                assert_eq!(a.rounds, b.rounds);
             }
             // The streaming sink saw every record exactly once.
             assert_eq!(mem.records.len(), summary.records.len());
@@ -486,16 +737,70 @@ mod tests {
         assert!(late > 0, "semi-sync cells should abandon some transfers");
         // Thread count must not change anything.
         let mut sinks: Vec<&mut dyn ResultSink> = Vec::new();
-        let again = execute(
-            &plan,
-            &ExecOptions { threads: 3, ledger: None },
-            &mut sinks,
-        )
-        .unwrap();
+        let again = execute(&plan, &ExecOptions::with_threads(3), &mut sinks).unwrap();
         for (a, b) in summary.records.iter().zip(again.records.iter()) {
             assert_eq!(a.key(), b.key());
             assert_eq!(a.wall.to_bits(), b.wall.to_bits());
         }
+    }
+
+    #[test]
+    fn shards_partition_the_campaign_and_union_to_the_full_run() {
+        let mut cfg = small_cfg();
+        cfg.policies = vec!["fixed:2".into(), "nacfl:1".into()];
+        let plan = ExperimentPlan::builder("sharded")
+            .base(cfg)
+            .tiers(vec![Tier::Analytic { k_eps: 50.0 }])
+            .build()
+            .unwrap();
+        let n = plan.n_runs();
+        let full = execute(&plan, &ExecOptions::default(), &mut []).unwrap();
+        assert_eq!(full.records.len(), n);
+
+        let mut seen: HashMap<String, u64> = HashMap::new();
+        for index in 0..3u32 {
+            let opts = ExecOptions {
+                shard: ShardSpec { index, count: 3 },
+                ..Default::default()
+            };
+            let part = execute(&plan, &opts, &mut []).unwrap();
+            assert_eq!(part.records.len() + part.n_skipped, n);
+            for rec in &part.records {
+                // Disjoint: no key appears in two shards.
+                assert!(
+                    seen.insert(rec.key(), rec.wall.to_bits()).is_none(),
+                    "duplicate key {} across shards",
+                    rec.key()
+                );
+            }
+        }
+        // Exhaustive, and bit-identical to the unsharded run.
+        assert_eq!(seen.len(), n);
+        for rec in &full.records {
+            assert_eq!(seen[&rec.key()], rec.wall.to_bits(), "{}", rec.key());
+        }
+    }
+
+    #[test]
+    fn data_cache_shares_identical_corpora_and_splits_distinct_seeds() {
+        let mut cfg = ExperimentConfig::smoke();
+        cfg.train_n = 300;
+        cfg.test_n = 60;
+        let mut cache = DataCache::default();
+        let (tr1, _, p1) = cache.get(&cfg);
+        let (tr2, _, p2) = cache.get(&cfg);
+        assert_eq!(cache.loads, 1, "identical data coordinates share one load");
+        assert!(Arc::ptr_eq(&tr1, &tr2) && Arc::ptr_eq(&p1, &p2));
+        let mut other = cfg.clone();
+        other.data_seed += 1;
+        let (tr3, _, _) = cache.get(&other);
+        assert_eq!(cache.loads, 2, "a new data_seed is a new corpus");
+        assert!(!Arc::ptr_eq(&tr1, &tr3));
+        // Partition kind is part of the key too.
+        let mut homog = cfg.clone();
+        homog.partition = PartitionKind::Homogeneous;
+        cache.get(&homog);
+        assert_eq!(cache.loads, 3);
     }
 
     #[test]

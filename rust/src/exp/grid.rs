@@ -1,29 +1,21 @@
-//! Work-stealing parallel experiment grid.
+//! The work-stealing task pool and the one `--threads` convention.
 //!
-//! Two executors, both plain `std::thread` + an atomic task cursor (idle
-//! workers "steal" the next index), both **deterministic**: every task's
-//! RNG streams are derived from its cell coordinates (seed, scenario,
-//! discipline) — never from thread identity or execution order — and
-//! results land in an index-addressed table before assembly.  The
-//! parallel cell runner is therefore *bit-identical* to the sequential
-//! `exp::runner::run_cell` path (verified by the `des_system` integration
-//! test), while using every core.
+//! `run_tasks` is plain `std::thread` + an atomic task cursor (idle
+//! workers "steal" the next index) and it is **deterministic**: task
+//! bodies must derive their RNG streams from task coordinates — never
+//! from thread identity or execution order — and results land in an
+//! index-addressed table before assembly, so any thread count produces
+//! bit-identical output.  The campaign engine (`exp::exec`) fans every
+//! analytic/DES run of a plan over this pool; the legacy per-cell and
+//! sweep drivers that used to live here (`run_cell_parallel`,
+//! `run_sweep`, `sweep_table`) were retired after their one-release
+//! deprecation window — build an `ExperimentPlan` instead.
 //!
-//! * [`run_cell_parallel`] — drop-in replacement for `run_cell` on the
-//!   analytic tier; the default path for the table benches.  The ML tier
-//!   falls through to the sequential runner, which already parallelizes
-//!   across client workers inside the coordinator.
-//! * [`run_sweep`] — the (scenario × policy × seed × discipline) DES
-//!   sweep, with merged [`TableWriter`] output via [`sweep_table`].
+//! [`resolve_threads`] is the shared `--threads` resolution (explicit
+//! value > `NACFL_THREADS` env var > all cores) used by the engine, the
+//! CLI and the benches.
 
-use crate::config::ExperimentConfig;
-use crate::des::{simulate_des, DesConfig, DesResult, Discipline, FaultModel};
-use crate::exp::runner::{run_analytic_once, run_cell, CellResult, Tier};
-use crate::metrics::{mean, TableWriter};
-use crate::netsim::{Scenario, ScenarioKind};
-use crate::policy::{PolicyCtx, PolicyEnv, PolicySpec};
-use crate::util::rng::Rng;
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, Result};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc;
 
@@ -35,9 +27,7 @@ pub fn default_threads() -> usize {
 /// Resolve a user-facing `threads` setting to a concrete worker count.
 /// Precedence: an explicit setting (CLI flag / config) wins; `0` defers
 /// to the `NACFL_THREADS` environment variable; an unset (or
-/// unparseable / zero) variable falls back to all available cores.  The
-/// one `--threads` convention, shared by the cell grid, the DES sweep,
-/// the campaign engine, the CLI and the benches.
+/// unparseable / zero) variable falls back to all available cores.
 pub fn resolve_threads(threads: usize) -> usize {
     resolve_threads_from(threads, std::env::var("NACFL_THREADS").ok().as_deref())
 }
@@ -115,201 +105,9 @@ pub(crate) fn run_tasks<T: Send>(
     })
 }
 
-/// Parallel drop-in for [`run_cell`] (analytic tier). `threads = 0` uses
-/// every core; `threads = 1` (or the ML tier) delegates to the sequential
-/// runner. `progress` fires on the calling thread as results stream in —
-/// completion order, not seed order.
-pub fn run_cell_parallel(
-    cfg: &ExperimentConfig,
-    tier: Tier,
-    threads: usize,
-    mut progress: impl FnMut(&str, u64, f64),
-) -> Result<Vec<CellResult>> {
-    let k_eps = match tier {
-        Tier::Analytic { k_eps } => k_eps,
-        Tier::Ml => return run_cell(cfg, tier, progress),
-    };
-    let threads = resolve_threads(threads);
-    let n_seeds = cfg.seeds.len();
-    let n_tasks = cfg.policies.len() * n_seeds;
-    if threads <= 1 || n_tasks <= 1 {
-        return run_cell(cfg, tier, progress);
-    }
-
-    let ctx = cfg.policy_ctx();
-    // Tasks run the exact single-run helper `run_cell` uses, so the
-    // parallel table is bit-identical to the sequential one.
-    let slots = run_tasks(
-        n_tasks,
-        threads,
-        |i| run_analytic_once(&ctx, cfg, &cfg.policies[i / n_seeds], cfg.seeds[i % n_seeds], k_eps),
-        |i, &(wall, _)| progress(&cfg.policies[i / n_seeds], cfg.seeds[i % n_seeds], wall),
-    )?;
-
-    let mut out = Vec::with_capacity(cfg.policies.len());
-    for (pi, spec) in cfg.policies.iter().enumerate() {
-        let mut times = Vec::with_capacity(n_seeds);
-        let mut rounds = Vec::with_capacity(n_seeds);
-        for si in 0..n_seeds {
-            let (w, r) = slots[pi * n_seeds + si];
-            times.push(w);
-            rounds.push(r);
-        }
-        out.push(CellResult {
-            policy: spec.clone(),
-            times,
-            rounds,
-            traces: Vec::new(),
-            unconverged: 0,
-        });
-    }
-    Ok(out)
-}
-
-/// The DES sweep grid: every (scenario × discipline × policy × seed)
-/// combination is one cell.
-#[derive(Clone, Debug)]
-pub struct SweepSpec {
-    pub m: usize,
-    pub scenarios: Vec<ScenarioKind>,
-    pub disciplines: Vec<Discipline>,
-    pub policies: Vec<String>,
-    pub seeds: Vec<u64>,
-    pub faults: FaultModel,
-    pub k_eps: f64,
-    pub max_rounds: usize,
-}
-
-impl SweepSpec {
-    fn dims(&self) -> (usize, usize, usize, usize) {
-        (
-            self.scenarios.len(),
-            self.disciplines.len(),
-            self.policies.len(),
-            self.seeds.len(),
-        )
-    }
-
-    fn n_tasks(&self) -> usize {
-        let (ns, nd, np, nk) = self.dims();
-        ns * nd * np * nk
-    }
-}
-
-/// One finished sweep cell.
-#[derive(Clone, Debug)]
-pub struct SweepCell {
-    pub scenario: String,
-    pub discipline: String,
-    pub policy: String,
-    pub seed: u64,
-    pub result: DesResult,
-}
-
-fn run_sweep_task(ctx: &PolicyCtx, spec: &SweepSpec, i: usize) -> Result<SweepCell> {
-    let (_, nd, np, nk) = spec.dims();
-    let si = i / (nd * np * nk);
-    let di = (i / (np * nk)) % nd;
-    let pi = (i / nk) % np;
-    let ki = i % nk;
-
-    let kind = spec.scenarios[si];
-    let discipline = spec.disciplines[di];
-    let seed = spec.seeds[ki];
-    let env = PolicyEnv::for_cell(ctx, kind, spec.m, seed);
-    let mut policy = PolicySpec::parse(&spec.policies[pi])?.build(&env)?;
-    let mut process = Scenario::paired_process(kind, spec.m, seed)
-        .context("instantiating congestion process")?;
-    // Fault stream is a pure function of the cell coordinates, so the
-    // sweep is reproducible under any thread count or steal order.
-    let fault_rng = Rng::new(seed).derive("des-fault", (si * nd + di) as u64);
-    let cfg = DesConfig {
-        discipline,
-        faults: spec.faults.clone(),
-        k_eps: spec.k_eps,
-        max_rounds: spec.max_rounds,
-    };
-    let result = simulate_des(ctx, policy.as_mut(), &mut process, &cfg, fault_rng)?;
-    Ok(SweepCell {
-        scenario: kind.label(),
-        discipline: discipline.label(),
-        policy: spec.policies[pi].clone(),
-        seed,
-        result,
-    })
-}
-
-/// Run the sweep with `threads` workers (0 = all cores); cells return in
-/// task-index order (seed fastest, then policy, discipline, scenario).
-pub fn run_sweep(ctx: &PolicyCtx, spec: &SweepSpec, threads: usize) -> Result<Vec<SweepCell>> {
-    let n_tasks = spec.n_tasks();
-    if n_tasks == 0 {
-        return Err(anyhow!("empty sweep: scenarios/disciplines/policies/seeds required"));
-    }
-    let threads = resolve_threads(threads);
-    if threads <= 1 || n_tasks == 1 {
-        return (0..n_tasks).map(|i| run_sweep_task(ctx, spec, i)).collect();
-    }
-    run_tasks(n_tasks, threads, |i| run_sweep_task(ctx, spec, i), |_, _| {})
-}
-
-/// Merge a finished sweep into one table: a row per (scenario,
-/// discipline), a column per policy, mean wall across seeds at one
-/// shared power-of-ten scale.
-pub fn sweep_table(title: &str, spec: &SweepSpec, cells: &[SweepCell]) -> Result<TableWriter> {
-    let (ns, nd, np, nk) = spec.dims();
-    if cells.len() != spec.n_tasks() {
-        return Err(anyhow!("sweep has {} cells, spec wants {}", cells.len(), spec.n_tasks()));
-    }
-    let mut means = vec![vec![0.0f64; np]; ns * nd];
-    for si in 0..ns {
-        for di in 0..nd {
-            for pi in 0..np {
-                let base = ((si * nd + di) * np + pi) * nk;
-                let walls: Vec<f64> =
-                    cells[base..base + nk].iter().map(|c| c.result.wall).collect();
-                means[si * nd + di][pi] = mean(&walls);
-            }
-        }
-    }
-    let max_mean = means
-        .iter()
-        .flatten()
-        .copied()
-        .filter(|m| m.is_finite())
-        .fold(0.0f64, f64::max);
-    let scale = TableWriter::pow10_scale(max_mean);
-    let cols: Vec<&str> = spec.policies.iter().map(String::as_str).collect();
-    let mut t = TableWriter::new(
-        format!("{title}  [units of {scale:.0e} simulated seconds]"),
-        &cols,
-    );
-    for si in 0..ns {
-        for di in 0..nd {
-            let label =
-                format!("{} {}", spec.scenarios[si].label(), spec.disciplines[di].label());
-            t.row(
-                label,
-                means[si * nd + di]
-                    .iter()
-                    .map(|&v| TableWriter::scaled(v, scale))
-                    .collect(),
-            );
-        }
-    }
-    Ok(t)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::exp::runner::table_for;
-
-    fn small_cfg() -> ExperimentConfig {
-        let mut cfg = ExperimentConfig::paper();
-        cfg.seeds = (0..5).collect();
-        cfg
-    }
 
     #[test]
     fn resolve_threads_precedence_is_flag_then_env_then_cores() {
@@ -328,86 +126,27 @@ mod tests {
     }
 
     #[test]
-    fn parallel_cell_matches_sequential_bitwise() {
-        let cfg = small_cfg();
-        let tier = Tier::Analytic { k_eps: 60.0 };
-        let seq = run_cell(&cfg, tier, |_, _, _| {}).unwrap();
-        let par = run_cell_parallel(&cfg, tier, 4, |_, _, _| {}).unwrap();
-        assert_eq!(seq.len(), par.len());
-        for (a, b) in seq.iter().zip(par.iter()) {
-            assert_eq!(a.policy, b.policy);
-            assert_eq!(a.times, b.times, "times must be bit-identical for {}", a.policy);
-            assert_eq!(a.rounds, b.rounds);
+    fn run_tasks_returns_index_ordered_results_under_any_thread_count() {
+        for threads in [1usize, 2, 4, 9] {
+            let mut streamed = 0usize;
+            let out = run_tasks(17, threads, |i| Ok(i * 3), |_, _| streamed += 1).unwrap();
+            assert_eq!(out, (0..17).map(|i| i * 3).collect::<Vec<_>>());
+            assert_eq!(streamed, 17, "on_result fires once per task");
         }
-        let ts = table_for("t", &seq).unwrap().render();
-        let tp = table_for("t", &par).unwrap().render();
-        assert_eq!(ts, tp, "rendered tables must be bit-identical");
+        // Zero tasks is a clean no-op.
+        let out = run_tasks(0, 4, |i| Ok(i), |_, _| {}).unwrap();
+        assert!(out.is_empty());
     }
 
     #[test]
-    fn single_thread_delegates_to_sequential() {
-        let cfg = small_cfg();
-        let tier = Tier::Analytic { k_eps: 40.0 };
-        let seq = run_cell(&cfg, tier, |_, _, _| {}).unwrap();
-        let one = run_cell_parallel(&cfg, tier, 1, |_, _, _| {}).unwrap();
-        for (a, b) in seq.iter().zip(one.iter()) {
-            assert_eq!(a.times, b.times);
-        }
-    }
-
-    #[test]
-    fn sweep_covers_the_full_grid_deterministically() {
-        let cfg = small_cfg();
-        let ctx = cfg.policy_ctx();
-        let spec = SweepSpec {
-            m: cfg.m,
-            scenarios: vec![
-                ScenarioKind::HomogeneousIndependent { sigma_sq: 1.0 },
-                ScenarioKind::HeterogeneousIndependent,
-            ],
-            disciplines: vec![
-                Discipline::Sync,
-                Discipline::SemiSync { k: 7 },
-                Discipline::Async { staleness_exp: 0.5 },
-            ],
-            policies: vec!["fixed:2".into(), "nacfl:1".into()],
-            seeds: (0..3).collect(),
-            faults: FaultModel::none(),
-            k_eps: 40.0,
-            max_rounds: 200_000,
-        };
-        let cells_a = run_sweep(&ctx, &spec, 4).unwrap();
-        let cells_b = run_sweep(&ctx, &spec, 2).unwrap();
-        assert_eq!(cells_a.len(), 2 * 3 * 2 * 3);
-        for (a, b) in cells_a.iter().zip(cells_b.iter()) {
-            assert_eq!(a.scenario, b.scenario);
-            assert_eq!(a.discipline, b.discipline);
-            assert_eq!(a.policy, b.policy);
-            assert_eq!(a.seed, b.seed);
-            assert_eq!(a.result.wall, b.result.wall, "thread count must not change results");
-        }
-        let t = sweep_table("sweep", &spec, &cells_a).unwrap();
-        let body = t.render();
-        assert!(body.contains("semi-sync:7") && body.contains("async:0.5"));
-        assert_eq!(t.rows.len(), 2 * 3);
-    }
-
-    #[test]
-    fn sweep_rejects_empty_and_mismatched_input() {
-        let cfg = small_cfg();
-        let ctx = cfg.policy_ctx();
-        let mut spec = SweepSpec {
-            m: cfg.m,
-            scenarios: vec![],
-            disciplines: vec![Discipline::Sync],
-            policies: vec!["fixed:1".into()],
-            seeds: vec![0],
-            faults: FaultModel::none(),
-            k_eps: 40.0,
-            max_rounds: 1000,
-        };
-        assert!(run_sweep(&ctx, &spec, 2).is_err());
-        spec.scenarios = vec![ScenarioKind::HeterogeneousIndependent];
-        assert!(sweep_table("t", &spec, &[]).is_err());
+    fn run_tasks_propagates_task_errors() {
+        let err = run_tasks(
+            64,
+            4,
+            |i| if i == 13 { Err(anyhow!("boom")) } else { Ok(i) },
+            |_, _| {},
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("boom"));
     }
 }

@@ -1,20 +1,30 @@
-//! Experiment layer: declarative campaigns over one execution engine.
+//! Experiment layer: declarative campaigns over one execution engine,
+//! distributable across machines.
 //!
 //! * [`plan`] — [`ExperimentPlan`]: the typed cross product of axes
-//!   (scenarios × compressors × tiers × disciplines × roster × seeds),
-//!   built fluently, parsed from a `[campaign]` TOML manifest, printed
-//!   back to it (round-trip Display over the `util::spec` grammar).
+//!   (scenarios × compressors × tiers × disciplines × roster ×
+//!   data seeds × seeds), built fluently, parsed from a `[campaign]`
+//!   TOML manifest, printed back as one self-contained file (round-trip
+//!   Display over the `util::spec` grammar + `ExperimentConfig::
+//!   to_doc`).
 //! * [`exec`] — the one engine: expands any plan, fans analytic/DES
 //!   runs over the work-stealing pool, streams [`RunRecord`]s, resumes
-//!   from the JSONL ledger.
+//!   from the JSONL ledger, executes one `--shard i/n` of a campaign
+//!   and (optionally) steals expired-lease runs from dead workers.
+//! * [`dist`] — the distributed layer: plan-identity ledger headers,
+//!   claim/lease records, hash sharding, and the cross-machine
+//!   `nacfl merge` engine (DESIGN.md §11).
 //! * [`sink`] — composable [`ResultSink`]s: JSONL ledger, CSV,
 //!   in-memory, paper-table writer, progress.
-//! * [`runner`] / [`grid`] / [`presets`] — the retained legacy path
-//!   (`run_cell`, `run_cell_parallel`, `run_sweep`, table presets);
-//!   kept for one release as the bit-identity parity anchor for the
-//!   paper tables (see the `campaign_system` integration test and
-//!   DESIGN.md §10).
+//! * [`runner`] / [`grid`] / [`presets`] — tier definitions, the frozen
+//!   analytic float path, paper-table shapes, the work-stealing task
+//!   pool, and the `nacfl exp` presets.  (The legacy drivers
+//!   `run_cell`, `run_cell_parallel`, `run_sweep` and `sweep_table`
+//!   completed their one-release deprecation and are gone; the
+//!   `campaign_system` parity test pins the engine to an inline copy of
+//!   the legacy sequential loop instead.)
 
+pub mod dist;
 pub mod exec;
 pub mod grid;
 pub mod plan;
@@ -22,14 +32,15 @@ pub mod presets;
 pub mod runner;
 pub mod sink;
 
-pub use exec::{campaign_table, execute, CampaignSummary, ExecOptions};
-pub use grid::{
-    default_threads, resolve_threads, resolve_threads_from, run_cell_parallel, run_sweep,
-    sweep_table, SweepCell, SweepSpec,
+pub use dist::{
+    merge_ledgers, read_dist_ledger, shard_of, write_ledger, ClaimRecord, DistLedger,
+    MergeOutcome, PlanHeader, ShardSpec,
 };
+pub use exec::{campaign_table, execute, CampaignSummary, ExecOptions, DEFAULT_LEASE_S};
+pub use grid::{default_threads, resolve_threads, resolve_threads_from};
 pub use plan::{ExperimentPlan, PlanBuilder, PlanCell};
 pub use presets::{fig3_cells, table_cells, table_plans};
-pub use runner::{run_cell, table_for, CellResult, Tier};
+pub use runner::{table_for, CellResult, Tier};
 pub use sink::{
     build_tables, cell_results, read_ledger, CsvSink, JsonlSink, MemorySink, ProgressSink,
     ResultSink, RunRecord, TableSink,

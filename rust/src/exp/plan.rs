@@ -10,18 +10,20 @@
 //!   `nacfl run plan.toml`), whose axis values are the same
 //!   `util::spec` strings the CLI flags use;
 //! * the legacy-shaped constructors [`ExperimentPlan::run_cell_plan`]
-//!   (one cell, sync + fault-free, exactly `exp::runner::run_cell`
-//!   semantics) and [`ExperimentPlan::from_config`] (one cell
+//!   (one cell, sync + fault-free — the semantics of the retired
+//!   `run_cell` driver) and [`ExperimentPlan::from_config`] (one cell
 //!   inheriting the config's discipline and fault settings).
 //!
-//! `Display` prints the canonical `[campaign]` section
-//! (`config::toml_lite::render`) — the **axes only**, which round-trip
-//! through the spec grammar.  A non-default base config is *not*
-//! serialized: it travels in the other sections of the manifest file
-//! the plan was loaded from (re-serializing a full config is a ROADMAP
-//! follow-on), and [`ExperimentPlan::config_fingerprint`] guards
-//! resume against the two drifting apart.  The one execution engine
-//! (`exp::exec`) consumes any plan; see DESIGN.md §10.
+//! `Display` prints the canonical **self-contained** manifest
+//! (`config::toml_lite::render`): the `[campaign]` axes (round-trip
+//! spec strings) *plus* the fully-serialized base config
+//! (`ExperimentConfig::to_doc`), so a loaded plan — base overrides
+//! included — re-emits as one file that any worker can execute
+//! (`nacfl run --emit-manifest`).  [`ExperimentPlan::config_fingerprint`]
+//! guards resume against base drift, and [`ExperimentPlan::plan_hash`]
+//! (axes + fingerprint) identifies the whole campaign in distributed
+//! ledger headers (`exp::dist`).  The one execution engine
+//! (`exp::exec`) consumes any plan; see DESIGN.md §10–11.
 
 use crate::config::toml_lite::{self, Doc, Value};
 use crate::config::ExperimentConfig;
@@ -36,7 +38,7 @@ use std::path::Path;
 
 /// One fully-resolved run coordinate — a point of the plan's cross
 /// product.  `seed` varies fastest in [`ExperimentPlan::cells`] order,
-/// then policy, discipline, tier, compressor, scenario.
+/// then data seed, policy, discipline, tier, compressor, scenario.
 #[derive(Clone, Debug, PartialEq)]
 pub struct PlanCell {
     pub scenario: ScenarioKind,
@@ -44,6 +46,8 @@ pub struct PlanCell {
     pub tier: Tier,
     pub discipline: Discipline,
     pub policy: String,
+    /// Dataset/partition seed (ml tier; analytic cells ignore it).
+    pub data_seed: u64,
     pub seed: u64,
 }
 
@@ -53,12 +57,13 @@ impl PlanCell {
     /// cell produces.
     pub fn key(&self) -> String {
         format!(
-            "{}|{}|{}|{}|{}|{}",
+            "{}|{}|{}|{}|{}|{}|{}",
             self.scenario.label(),
             self.compressor,
             self.tier.label(),
             self.discipline.label(),
             self.policy,
+            self.data_seed,
             self.seed
         )
     }
@@ -79,6 +84,10 @@ pub struct ExperimentPlan {
     pub tiers: Vec<Tier>,
     pub disciplines: Vec<Discipline>,
     pub policies: Vec<String>,
+    /// Dataset/partition seeds (an ml-tier axis; defaults to the base
+    /// config's single `data_seed`).  Backed by the campaign-level keyed
+    /// data cache in `exp::exec`.
+    pub data_seeds: Vec<u64>,
     pub seeds: Vec<u64>,
 }
 
@@ -90,6 +99,7 @@ const CAMPAIGN_KEYS: &[&str] = &[
     "tiers",
     "disciplines",
     "policies",
+    "data_seeds",
     "seeds",
 ];
 
@@ -105,14 +115,16 @@ impl ExperimentPlan {
             tiers: None,
             disciplines: None,
             policies: None,
+            data_seeds: None,
             seeds: None,
         }
     }
 
-    /// The plan equivalent of the legacy `exp::runner::run_cell` cell:
-    /// one scenario/compressor, sync discipline, faults cleared — the
-    /// analytic (or ML) tier exactly as the retained legacy path runs
-    /// it, so tables stay bit-identical through the engine.
+    /// The plan equivalent of the retired `run_cell` driver's cell: one
+    /// scenario/compressor, sync discipline, faults cleared — the
+    /// analytic (or ML) tier exactly as the legacy path ran it, so
+    /// tables stay bit-identical through the engine (pinned by the
+    /// `campaign_system` inline reference).
     pub fn run_cell_plan(name: impl Into<String>, cfg: &ExperimentConfig, tier: Tier) -> Self {
         let mut base = cfg.clone();
         base.discipline = Discipline::Sync;
@@ -125,6 +137,7 @@ impl ExperimentPlan {
             tiers: vec![tier],
             disciplines: vec![Discipline::Sync],
             policies: base.policies.clone(),
+            data_seeds: vec![base.data_seed],
             seeds: base.seeds.clone(),
             base,
         }
@@ -142,11 +155,13 @@ impl ExperimentPlan {
             tiers: vec![tier],
             disciplines: vec![cfg.discipline],
             policies: cfg.policies.clone(),
+            data_seeds: vec![cfg.data_seed],
             seeds: cfg.seeds.clone(),
         }
     }
 
-    /// Materialize the cross product in canonical order (seed fastest).
+    /// Materialize the cross product in canonical order (seed fastest,
+    /// data seed next).
     pub fn cells(&self) -> Vec<PlanCell> {
         let mut out = Vec::with_capacity(self.n_runs());
         for &scenario in &self.scenarios {
@@ -154,15 +169,18 @@ impl ExperimentPlan {
                 for &tier in &self.tiers {
                     for &discipline in &self.disciplines {
                         for policy in &self.policies {
-                            for &seed in &self.seeds {
-                                out.push(PlanCell {
-                                    scenario,
-                                    compressor: compressor.clone(),
-                                    tier,
-                                    discipline,
-                                    policy: policy.clone(),
-                                    seed,
-                                });
+                            for &data_seed in &self.data_seeds {
+                                for &seed in &self.seeds {
+                                    out.push(PlanCell {
+                                        scenario,
+                                        compressor: compressor.clone(),
+                                        tier,
+                                        discipline,
+                                        policy: policy.clone(),
+                                        data_seed,
+                                        seed,
+                                    });
+                                }
                             }
                         }
                     }
@@ -179,6 +197,7 @@ impl ExperimentPlan {
             * self.tiers.len()
             * self.disciplines.len()
             * self.policies.len()
+            * self.data_seeds.len()
             * self.seeds.len()
     }
 
@@ -196,12 +215,13 @@ impl ExperimentPlan {
     }
 
     /// Per-cell configuration: the base with the cell's scenario,
-    /// compressor and discipline applied.
+    /// compressor, discipline and data seed applied.
     pub fn cell_config(&self, cell: &PlanCell) -> ExperimentConfig {
         let mut c = self.base.clone();
         c.scenario = cell.scenario;
         c.compressor = cell.compressor.clone();
         c.discipline = cell.discipline;
+        c.data_seed = cell.data_seed;
         c
     }
 
@@ -217,6 +237,7 @@ impl ExperimentPlan {
             ("tiers", self.tiers.is_empty()),
             ("disciplines", self.disciplines.is_empty()),
             ("policies", self.policies.is_empty()),
+            ("data_seeds", self.data_seeds.is_empty()),
             ("seeds", self.seeds.is_empty()),
         ] {
             if empty {
@@ -250,6 +271,13 @@ impl ExperimentPlan {
                 self.name
             ));
         }
+        if self.data_seeds.len() > 1 && !has_ml {
+            return Err(anyhow!(
+                "campaign `{}`: the data_seeds axis only varies the ml tier \
+                 (analytic cells ignore the dataset); drop it or add the ml tier",
+                self.name
+            ));
+        }
         Ok(())
     }
 
@@ -259,13 +287,13 @@ impl ExperimentPlan {
     /// still matches, so editing a `[fl]`/`[quant]`/`[des]`/`[data]`/
     /// `[engine]` section re-executes instead of silently serving stale
     /// results.  Axes (scenario, compressor, tier, discipline, policy,
-    /// seed) live in the record key; output paths and thread counts are
-    /// deliberately excluded.
+    /// data seed, seed) live in the record key; output paths and thread
+    /// counts are deliberately excluded.
     pub fn config_fingerprint(&self) -> String {
         let b = &self.base;
         let repr = format!(
             "{:?}|{:?}|{:?}|{:?}|{:?}|{:?}|{:?}|{:?}|{:?}|{:?}|{:?}|{:?}|{:?}|{:?}|{:?}|\
-             {:?}|{:?}|{:?}|{:?}|{:?}|{:?}|{:?}",
+             {:?}|{:?}|{:?}|{:?}|{:?}|{:?}",
             b.m,
             b.partition,
             b.delay,
@@ -284,10 +312,36 @@ impl ExperimentPlan {
             b.alpha,
             b.train_n,
             b.test_n,
-            b.data_seed,
             b.data_dir,
             b.engine,
             (b.dropout, &b.stragglers, b.straggler_mult),
+        );
+        format!("{:016x}", crate::util::rng::fnv1a(repr.as_bytes()))
+    }
+
+    /// FNV-1a content hash (hex) of the fully-resolved plan: every axis
+    /// in order plus the base-config fingerprint.  This is the campaign
+    /// *identity* stamped in the distributed ledger header (`exp::dist::
+    /// PlanHeader`): a worker refuses to resume — and the merge engine
+    /// refuses to combine — ledgers whose plan hash differs.  The
+    /// campaign *name* is deliberately excluded (renaming a campaign
+    /// does not orphan its ledgers, matching the record-key convention).
+    pub fn plan_hash(&self) -> String {
+        let join = |xs: &[String]| xs.join(",");
+        let nums = |xs: &[u64]| {
+            xs.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(",")
+        };
+        let repr = format!(
+            "config={};scenarios={};compressors={};tiers={};disciplines={};policies={};\
+             data_seeds={};seeds={}",
+            self.config_fingerprint(),
+            join(&self.scenarios.iter().map(|s| s.label()).collect::<Vec<_>>()),
+            join(&self.compressors),
+            join(&self.tiers.iter().map(|t| t.label()).collect::<Vec<_>>()),
+            join(&self.disciplines.iter().map(|d| d.label()).collect::<Vec<_>>()),
+            join(&self.policies),
+            nums(&self.data_seeds),
+            nums(&self.seeds),
         );
         format!("{:016x}", crate::util::rng::fnv1a(repr.as_bytes()))
     }
@@ -374,34 +428,42 @@ impl ExperimentPlan {
         if let Some(xs) = str_list("policies")? {
             b = b.policies(xs);
         }
-        match sec.get("seeds") {
-            None => {}
-            Some(Value::Int(n)) if *n >= 0 => b = b.seed_count(*n as u64),
-            Some(Value::Array(a)) => {
-                let seeds = a
+        // Seed axes accept a count (`seeds = 20` -> 0..20) or an
+        // explicit int array.
+        let seed_list = |key: &str| -> Result<Option<Vec<u64>>> {
+            match sec.get(key) {
+                None => Ok(None),
+                Some(Value::Int(n)) if *n >= 0 => Ok(Some((0..*n as u64).collect())),
+                Some(Value::Array(a)) => a
                     .iter()
                     .map(|x| x.as_i64().filter(|&i| i >= 0).map(|i| i as u64))
                     .collect::<Option<Vec<_>>>()
+                    .map(Some)
                     .ok_or_else(|| {
-                        anyhow!("campaign::seeds array must be non-negative integers")
-                    })?;
-                b = b.seeds(seeds);
+                        anyhow!("campaign::{key} array must be non-negative integers")
+                    }),
+                Some(_) => Err(anyhow!(
+                    "campaign::{key} must be a seed count or an int array"
+                )),
             }
-            Some(_) => {
-                return Err(anyhow!(
-                    "campaign::seeds must be a seed count or an int array"
-                ))
-            }
+        };
+        if let Some(xs) = seed_list("seeds")? {
+            b = b.seeds(xs);
+        }
+        if let Some(xs) = seed_list("data_seeds")? {
+            b = b.data_seeds(xs);
         }
         b.build()
     }
 
-    /// The `[campaign]` section as a `toml_lite` document — axes only;
-    /// the base config travels in the manifest's other sections when the
-    /// plan is loaded from disk.
+    /// The full manifest as a `toml_lite` document: the serialized base
+    /// config (`ExperimentConfig::to_doc`) plus the `[campaign]` axes —
+    /// one self-contained file, base overrides included.
     pub fn to_doc(&self) -> Doc {
         let strs =
             |xs: Vec<String>| Value::Array(xs.into_iter().map(Value::Str).collect::<Vec<_>>());
+        let ints =
+            |xs: &[u64]| Value::Array(xs.iter().map(|&s| Value::Int(s as i64)).collect());
         let mut sec = BTreeMap::new();
         sec.insert("name".to_string(), Value::Str(self.name.clone()));
         sec.insert(
@@ -418,18 +480,17 @@ impl ExperimentPlan {
             strs(self.disciplines.iter().map(|d| d.label()).collect()),
         );
         sec.insert("policies".to_string(), strs(self.policies.clone()));
-        sec.insert(
-            "seeds".to_string(),
-            Value::Array(self.seeds.iter().map(|&s| Value::Int(s as i64)).collect()),
-        );
-        let mut doc: Doc = BTreeMap::new();
+        sec.insert("data_seeds".to_string(), ints(&self.data_seeds));
+        sec.insert("seeds".to_string(), ints(&self.seeds));
+        let mut doc = self.base.to_doc();
         doc.insert("campaign".to_string(), sec);
         doc
     }
 
-    /// Canonical `[campaign]` manifest text — axes only (see the module
-    /// docs); re-parses to an equivalent plan for a default base via
-    /// [`ExperimentPlan::parse_manifest`].
+    /// Canonical self-contained manifest text (see the module docs):
+    /// re-parses to an equivalent plan — base overrides included — via
+    /// [`ExperimentPlan::parse_manifest`], pinned by a parse → emit →
+    /// parse round-trip test.  `nacfl run --emit-manifest` writes this.
     pub fn manifest(&self) -> String {
         toml_lite::render(&self.to_doc())
     }
@@ -451,6 +512,7 @@ pub struct PlanBuilder {
     tiers: Option<Vec<Tier>>,
     disciplines: Option<Vec<Discipline>>,
     policies: Option<Vec<String>>,
+    data_seeds: Option<Vec<u64>>,
     seeds: Option<Vec<u64>>,
 }
 
@@ -496,6 +558,13 @@ impl PlanBuilder {
         self
     }
 
+    /// Dataset/partition seed axis (ml tier; defaults to the base
+    /// config's single `data_seed`).
+    pub fn data_seeds(mut self, v: impl IntoIterator<Item = u64>) -> Self {
+        self.data_seeds = Some(v.into_iter().collect());
+        self
+    }
+
     /// Resolve defaults from the base and validate.
     pub fn build(self) -> Result<ExperimentPlan> {
         let base = self.base;
@@ -510,6 +579,7 @@ impl PlanBuilder {
                 .unwrap_or_else(|| vec![Tier::Analytic { k_eps: 100.0 }]),
             disciplines: self.disciplines.unwrap_or_else(|| vec![base.discipline]),
             policies: self.policies.unwrap_or_else(|| base.policies.clone()),
+            data_seeds: self.data_seeds.unwrap_or_else(|| vec![base.data_seed]),
             seeds: self.seeds.unwrap_or_else(|| base.seeds.clone()),
             base,
         };
@@ -529,6 +599,7 @@ mod tests {
         assert_eq!(plan.scenarios, vec![base.scenario]);
         assert_eq!(plan.policies, base.policies);
         assert_eq!(plan.seeds, base.seeds);
+        assert_eq!(plan.data_seeds, vec![base.data_seed]);
         assert_eq!(plan.n_runs(), base.policies.len() * base.seeds.len());
         assert_eq!(plan.n_groups(), 1);
 
@@ -586,6 +657,22 @@ mod tests {
             .tiers(vec![Tier::Ml])
             .build()
             .is_err());
+        // A multi-valued data_seeds axis needs the ml tier (analytic
+        // cells ignore the dataset)...
+        assert!(ExperimentPlan::builder("t")
+            .data_seeds(vec![0, 1])
+            .build()
+            .is_err());
+        // ...and an empty axis is rejected like any other.
+        assert!(ExperimentPlan::builder("t")
+            .data_seeds(Vec::<u64>::new())
+            .build()
+            .is_err());
+        assert!(ExperimentPlan::builder("t")
+            .tiers(vec![Tier::Ml])
+            .data_seeds(vec![0, 1])
+            .build()
+            .is_ok());
     }
 
     #[test]
@@ -601,11 +688,28 @@ mod tests {
             .unwrap();
         let text = plan.to_string();
         assert!(text.contains("[campaign]"), "manifest: {text}");
+        // The manifest is self-contained: base sections ride along.
+        assert!(text.contains("[fl]") && text.contains("[quant]"), "manifest: {text}");
         let back = ExperimentPlan::parse_manifest(&text).unwrap();
         assert_eq!(back.name, plan.name);
         assert_eq!(back.cells(), plan.cells());
+        assert_eq!(back.config_fingerprint(), plan.config_fingerprint());
+        assert_eq!(back.plan_hash(), plan.plan_hash());
         // Display is idempotent through a parse cycle.
         assert_eq!(back.to_string(), text);
+
+        // A non-default base survives the emit -> parse cycle too.
+        let mut base = ExperimentConfig::paper();
+        base.c_q = 12.5;
+        base.max_rounds = 123;
+        base.data_seed = 9;
+        let plan = ExperimentPlan::builder("full").base(base).build().unwrap();
+        let back = ExperimentPlan::parse_manifest(&plan.to_string()).unwrap();
+        assert_eq!(back.base.c_q, 12.5);
+        assert_eq!(back.base.max_rounds, 123);
+        assert_eq!(back.data_seeds, vec![9]);
+        assert_eq!(back.plan_hash(), plan.plan_hash());
+        assert_eq!(back.to_string(), plan.to_string());
     }
 
     #[test]
@@ -635,6 +739,22 @@ name = "defaults"
         )
         .unwrap();
         assert_eq!(plan.seeds, vec![3, 5]);
+
+        // data_seeds: count form and array form, ml tier required for >1.
+        let plan = ExperimentPlan::parse_manifest(
+            "[campaign]\nname = \"d\"\ntiers = [\"ml\"]\ndata_seeds = 2\n",
+        )
+        .unwrap();
+        assert_eq!(plan.data_seeds, vec![0, 1]);
+        let plan = ExperimentPlan::parse_manifest(
+            "[campaign]\nname = \"d\"\ntiers = [\"ml\"]\ndata_seeds = [4, 9]\n",
+        )
+        .unwrap();
+        assert_eq!(plan.data_seeds, vec![4, 9]);
+        assert!(
+            ExperimentPlan::parse_manifest("[campaign]\ndata_seeds = [4, 9]\n").is_err(),
+            "multi data_seeds without the ml tier"
+        );
 
         assert!(ExperimentPlan::parse_manifest("seeds = 2").is_err(), "no [campaign]");
         assert!(
@@ -676,6 +796,11 @@ name = "defaults"
         axes.policies = vec!["fixed:1".into()];
         axes.seeds = vec![9];
         assert_eq!(axes.config_fingerprint(), fp);
+        // ...the data seed is an axis now, not a fingerprint input...
+        let mut dseed = plan.clone();
+        dseed.base.data_seed = 99;
+        dseed.data_seeds = vec![99];
+        assert_eq!(dseed.config_fingerprint(), fp);
         // ...but base-config edits change it.
         let mut edited = plan.clone();
         edited.base.c_q *= 2.0;
@@ -686,6 +811,29 @@ name = "defaults"
     }
 
     #[test]
+    fn plan_hash_tracks_axes_and_config_but_not_the_name() {
+        let plan = ExperimentPlan::builder("ph").build().unwrap();
+        let h = plan.plan_hash();
+        assert_eq!(h.len(), 16, "hex u64");
+        assert_eq!(h, plan.plan_hash(), "deterministic");
+        // Renaming the campaign keeps the identity (ledgers survive).
+        let mut renamed = plan.clone();
+        renamed.name = "other".into();
+        assert_eq!(renamed.plan_hash(), h);
+        // Any axis edit is a different campaign...
+        let mut axes = plan.clone();
+        axes.seeds = vec![0];
+        assert_ne!(axes.plan_hash(), h);
+        let mut roster = plan.clone();
+        roster.policies = vec!["fixed:1".into()];
+        assert_ne!(roster.plan_hash(), h);
+        // ...and so is a base-config edit.
+        let mut edited = plan.clone();
+        edited.base.c_q *= 2.0;
+        assert_ne!(edited.plan_hash(), h);
+    }
+
+    #[test]
     fn cell_key_is_coordinate_stable() {
         let cell = PlanCell {
             scenario: ScenarioKind::HomogeneousIndependent { sigma_sq: 2.0 },
@@ -693,8 +841,9 @@ name = "defaults"
             tier: Tier::Analytic { k_eps: 100.0 },
             discipline: Discipline::SemiSync { k: 7 },
             policy: "nacfl:1".into(),
+            data_seed: 7,
             seed: 3,
         };
-        assert_eq!(cell.key(), "homog:2|topk:0.05|sim:100|semi-sync:7|nacfl:1|3");
+        assert_eq!(cell.key(), "homog:2|topk:0.05|sim:100|semi-sync:7|nacfl:1|7|3");
     }
 }

@@ -60,9 +60,9 @@ pub fn table_cells(table: &str, base: &ExperimentConfig) -> Result<Vec<(String, 
 }
 
 /// Plan constructors over the table presets: one single-group
-/// [`ExperimentPlan`] per labeled cell, with legacy `run_cell`
-/// semantics (sync, fault-free), for the unified engine (`nacfl exp`,
-/// the table bench regenerators).
+/// [`ExperimentPlan`] per labeled cell, with the retired `run_cell`
+/// driver's semantics (sync, fault-free), for the unified engine
+/// (`nacfl exp`, the table bench regenerators).
 pub fn table_plans(
     table: &str,
     base: &ExperimentConfig,

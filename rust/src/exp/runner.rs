@@ -1,4 +1,5 @@
-//! Multi-seed experiment execution.
+//! Tier definitions, the frozen analytic float path, and the paper's
+//! table shapes.
 //!
 //! A *cell* is (scenario, policy roster, seeds); its result is, per
 //! policy, the per-seed time to reach the target — simulated wall-clock
@@ -11,10 +12,17 @@
 //!
 //! Policies are *sample-path paired* (same seed → same congestion path,
 //! same data, same init) exactly as the paper's gain metric requires.
+//! `run_analytic_once` is the single float path every analytic run
+//! takes; the campaign engine (`exp::exec`) routes through it, and the
+//! `campaign_system` parity test pins the engine's tables to an inline
+//! copy of the legacy sequential loop over it.  The legacy multi-seed
+//! drivers (`run_cell`, `run_cell_parallel`, `run_sweep`, `sweep_table`)
+//! were retired after their one-release deprecation window — build an
+//! `ExperimentPlan` and call `exp::exec::execute` instead (DESIGN.md
+//! §10 migration table).
 
 use crate::config::ExperimentConfig;
-use crate::coordinator::{Coordinator, FailureConfig};
-use crate::data::{mnist, partition, synth, Dataset};
+use crate::data::{mnist, synth, Dataset};
 use crate::metrics::{gain_vs, RunTrace, Summary, TableWriter};
 use crate::policy::{PolicyCtx, PolicyEnv, PolicySpec};
 use crate::sim::simulate;
@@ -22,12 +30,12 @@ use crate::util::spec::Spec;
 use anyhow::Result;
 use std::sync::Arc;
 
-/// Round budget for analytic-tier runs (sequential and parallel grid).
+/// Round budget for analytic-tier runs.
 pub(crate) const ANALYTIC_ROUND_CAP: usize = 10_000_000;
 
-/// One analytic-tier run for (policy spec, seed) — the single float path
-/// shared by [`run_cell`] and `exp::grid::run_cell_parallel`, so the
-/// sequential and parallel tables can never diverge.
+/// One analytic-tier run for (policy spec, seed) — the single float
+/// path of every analytic cell (`exp::exec` routes through it), so no
+/// two executors can ever diverge.
 pub(crate) fn run_analytic_once(
     ctx: &PolicyCtx,
     cfg: &ExperimentConfig,
@@ -118,68 +126,6 @@ pub fn load_data(cfg: &ExperimentConfig) -> (Arc<Dataset>, Arc<Dataset>) {
     (Arc::new(train), Arc::new(test))
 }
 
-/// Run one cell; `progress` gets one callback per finished (policy, seed).
-pub fn run_cell(
-    cfg: &ExperimentConfig,
-    tier: Tier,
-    mut progress: impl FnMut(&str, u64, f64),
-) -> Result<Vec<CellResult>> {
-    let ctx = cfg.policy_ctx();
-    let mut out = Vec::with_capacity(cfg.policies.len());
-
-    // ML tier: share data across policies/seeds (paired comparisons).
-    let data = matches!(tier, Tier::Ml).then(|| {
-        let (train, test) = load_data(cfg);
-        let part = partition(&train, cfg.m, cfg.partition, cfg.data_seed);
-        (train, test, part)
-    });
-
-    for spec in &cfg.policies {
-        let mut times = Vec::with_capacity(cfg.seeds.len());
-        let mut rounds = Vec::with_capacity(cfg.seeds.len());
-        let mut traces = Vec::new();
-        let mut unconverged = 0usize;
-        for &seed in &cfg.seeds {
-            match tier {
-                Tier::Analytic { k_eps } => {
-                    let (wall, r) = run_analytic_once(&ctx, cfg, spec, seed, k_eps)?;
-                    progress(spec, seed, wall);
-                    times.push(wall);
-                    rounds.push(r);
-                }
-                Tier::Ml => {
-                    let env = PolicyEnv::for_cell(&ctx, cfg.scenario, cfg.m, seed);
-                    let mut policy = PolicySpec::parse(spec)?.build(&env)?;
-                    let mut process = cfg.congestion_process(seed)?;
-                    let (train, test, part) = data.as_ref().unwrap();
-                    let mut co = Coordinator::new(
-                        cfg,
-                        Arc::clone(train),
-                        Arc::clone(test),
-                        part,
-                        seed,
-                        &FailureConfig::default(),
-                    )?;
-                    let trace = co.run(policy.as_mut(), &mut process)?;
-                    let t = match trace.time_to_accuracy(cfg.target_acc) {
-                        Some(t) => t,
-                        None => {
-                            unconverged += 1;
-                            trace.points.last().map(|p| p.wall).unwrap_or(f64::NAN)
-                        }
-                    };
-                    progress(spec, seed, t);
-                    times.push(t);
-                    rounds.push(trace.points.last().map(|p| p.round).unwrap_or(0));
-                    traces.push(trace);
-                }
-            }
-        }
-        out.push(CellResult { policy: spec.clone(), times, rounds, traces, unconverged });
-    }
-    Ok(out)
-}
-
 /// Render a cell as a paper-style table (Mean / 90th / 10th / Gain rows).
 /// Errors when the roster lacks a `nacfl` entry (the gain baseline).
 pub fn table_for(title: &str, results: &[CellResult]) -> Result<TableWriter> {
@@ -248,11 +194,36 @@ mod tests {
         assert_eq!(Tier::parse("sim").unwrap().label(), "sim:100");
     }
 
+    /// The legacy `run_cell` loop, inlined: per policy, per seed, one
+    /// `run_analytic_once` — the frozen float path.
+    fn analytic_cell(cfg: &ExperimentConfig, k_eps: f64) -> Vec<CellResult> {
+        let ctx = cfg.policy_ctx();
+        cfg.policies
+            .iter()
+            .map(|spec| {
+                let mut times = Vec::new();
+                let mut rounds = Vec::new();
+                for &seed in &cfg.seeds {
+                    let (wall, r) = run_analytic_once(&ctx, cfg, spec, seed, k_eps).unwrap();
+                    times.push(wall);
+                    rounds.push(r);
+                }
+                CellResult {
+                    policy: spec.clone(),
+                    times,
+                    rounds,
+                    traces: Vec::new(),
+                    unconverged: 0,
+                }
+            })
+            .collect()
+    }
+
     #[test]
     fn analytic_cell_produces_paper_shaped_table() {
         let mut cfg = ExperimentConfig::paper();
         cfg.seeds = (0..6).collect();
-        let results = run_cell(&cfg, Tier::Analytic { k_eps: 100.0 }, |_, _, _| {}).unwrap();
+        let results = analytic_cell(&cfg, 100.0);
         assert_eq!(results.len(), 5);
         let table = table_for("Table I (test)", &results).unwrap();
         let body = table.render();
@@ -272,12 +243,16 @@ mod tests {
     #[test]
     fn pairing_is_sample_path_consistent() {
         // Same seed, same scenario -> identical congestion path across
-        // policies; fixed:1 and fixed:2 then have deterministic ratio of
-        // round-1 durations = s(1)/s(2) when paths match.
+        // policies; rerunning the same (policy, seed) twice must land on
+        // bit-identical walls (the determinism the ledger relies on).
         let mut cfg = ExperimentConfig::paper();
         cfg.seeds = vec![42];
-        let r = run_cell(&cfg, Tier::Analytic { k_eps: 30.0 }, |_, _, _| {}).unwrap();
-        assert!(r.iter().all(|c| c.times.len() == 1));
+        let a = analytic_cell(&cfg, 30.0);
+        let b = analytic_cell(&cfg, 30.0);
+        assert!(a.iter().all(|c| c.times.len() == 1));
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.times[0].to_bits(), y.times[0].to_bits(), "{}", x.policy);
+        }
     }
 
     #[test]

@@ -45,6 +45,8 @@ pub struct RunRecord {
     pub tier: String,
     pub discipline: String,
     pub policy: String,
+    /// Dataset/partition seed (the `data_seeds` plan axis).
+    pub data_seed: u64,
     pub seed: u64,
     /// Fingerprint (hex) of the plan's base config
     /// ([`ExperimentPlan::config_fingerprint`]): resume only reuses a
@@ -73,23 +75,31 @@ impl RunRecord {
     /// campaign does not orphan its ledger).
     pub fn key(&self) -> String {
         format!(
-            "{}|{}|{}|{}|{}|{}",
-            self.scenario, self.compressor, self.tier, self.discipline, self.policy, self.seed
+            "{}|{}|{}|{}|{}|{}|{}",
+            self.scenario,
+            self.compressor,
+            self.tier,
+            self.discipline,
+            self.policy,
+            self.data_seed,
+            self.seed
         )
     }
 
     /// One flat JSON object (a single ledger line, no trailing newline).
     pub fn to_json(&self) -> String {
         format!(
-            "{{\"schema\":1,\"campaign\":{},\"scenario\":{},\"compressor\":{},\"tier\":{},\
-             \"discipline\":{},\"policy\":{},\"seed\":{},\"config\":{},\"wall\":{},\
-             \"rounds\":{},\"converged\":{},\"aggregations\":{},\"dropped\":{},\"late\":{}}}",
+            "{{\"schema\":2,\"campaign\":{},\"scenario\":{},\"compressor\":{},\"tier\":{},\
+             \"discipline\":{},\"policy\":{},\"data_seed\":{},\"seed\":{},\"config\":{},\
+             \"wall\":{},\"rounds\":{},\"converged\":{},\"aggregations\":{},\"dropped\":{},\
+             \"late\":{}}}",
             json::string(&self.campaign),
             json::string(&self.scenario),
             json::string(&self.compressor),
             json::string(&self.tier),
             json::string(&self.discipline),
             json::string(&self.policy),
+            self.data_seed,
             self.seed,
             json::string(&self.config),
             json::num(self.wall),
@@ -104,7 +114,12 @@ impl RunRecord {
     /// Parse one ledger line (inverse of [`RunRecord::to_json`]; floats
     /// use shortest round-trip formatting, so `wall` is bit-exact).
     pub fn from_json(line: &str) -> Result<Self> {
-        let obj = parse_flat_object(line)?;
+        Self::from_obj(&parse_flat_object(line)?)
+    }
+
+    /// Build a record from an already-scanned flat object (shared with
+    /// the distributed-ledger line dispatcher, `exp::dist::ledger`).
+    pub(crate) fn from_obj(obj: &HashMap<String, JsonVal>) -> Result<Self> {
         let s = |k: &str| -> Result<String> {
             match obj.get(k) {
                 Some(JsonVal::Str(v)) => Ok(v.clone()),
@@ -134,7 +149,12 @@ impl RunRecord {
             }
         };
         match obj.get("schema") {
-            Some(JsonVal::Num(v)) if *v == 1.0 => {}
+            Some(JsonVal::Num(v)) if *v == 2.0 => {}
+            Some(JsonVal::Num(v)) if *v == 1.0 => {
+                return Err(anyhow!(
+                    "ledger schema 1 predates the data_seeds axis; its runs re-execute"
+                ))
+            }
             other => return Err(anyhow!("unsupported ledger schema {other:?}")),
         }
         Ok(RunRecord {
@@ -144,6 +164,7 @@ impl RunRecord {
             tier: s("tier")?,
             discipline: s("discipline")?,
             policy: s("policy")?,
+            data_seed: u("data_seed")?,
             seed: u("seed")?,
             config: s("config")?,
             wall: n("wall")?,
@@ -158,11 +179,29 @@ impl RunRecord {
 }
 
 #[derive(Clone, Debug)]
-enum JsonVal {
+pub(crate) enum JsonVal {
     Str(String),
     Num(f64),
     Bool(bool),
     Null,
+}
+
+impl JsonVal {
+    pub(crate) fn as_str(&self) -> Option<&str> {
+        match self {
+            JsonVal::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub(crate) fn as_u64(&self) -> Option<u64> {
+        match self {
+            JsonVal::Num(v) if v.is_finite() && *v >= 0.0 && v.fract() == 0.0 => {
+                Some(*v as u64)
+            }
+            _ => None,
+        }
+    }
 }
 
 /// Minimal scanner for one *flat* JSON object (string / number / bool /
@@ -264,7 +303,7 @@ impl Scanner {
     }
 }
 
-fn parse_flat_object(line: &str) -> Result<HashMap<String, JsonVal>> {
+pub(crate) fn parse_flat_object(line: &str) -> Result<HashMap<String, JsonVal>> {
     let mut sc = Scanner::new(line);
     sc.skip_ws();
     sc.expect('{')?;
@@ -290,11 +329,13 @@ fn parse_flat_object(line: &str) -> Result<HashMap<String, JsonVal>> {
     Ok(out)
 }
 
-/// Read a JSONL ledger, skipping blank lines.  A line that fails to
-/// parse — the torn tail of a mid-write kill, or foreign garbage — is
-/// skipped with a warning: its run simply re-executes and re-appends,
-/// so a damaged ledger degrades to repeated work, never to a wedged
-/// campaign.
+/// Read the run records of a JSONL ledger, skipping blank lines and the
+/// distributed-execution control lines (`"kind"`-tagged plan headers and
+/// claim/lease records — see `exp::dist`).  A line that fails to parse —
+/// the torn tail of a mid-write kill, or foreign garbage — is skipped
+/// with a warning: its run simply re-executes and re-appends, so a
+/// damaged ledger degrades to repeated work, never to a wedged campaign.
+/// For header validation and claims use `exp::dist::read_dist_ledger`.
 pub fn read_ledger(path: impl AsRef<Path>) -> Result<Vec<RunRecord>> {
     let path = path.as_ref();
     let text = std::fs::read_to_string(path)
@@ -304,18 +345,25 @@ pub fn read_ledger(path: impl AsRef<Path>) -> Result<Vec<RunRecord>> {
         if line.trim().is_empty() {
             continue;
         }
-        match RunRecord::from_json(line) {
-            Ok(rec) => out.push(rec),
-            Err(e) => {
-                eprintln!(
-                    "ledger {} line {}: skipping unparseable line (interrupted write?): {e}",
-                    path.display(),
-                    i + 1
-                );
-            }
+        match parse_flat_object(line) {
+            // Control lines (plan header, claims) are not runs.
+            Ok(obj) if obj.contains_key("kind") => continue,
+            Ok(obj) => match RunRecord::from_obj(&obj) {
+                Ok(rec) => out.push(rec),
+                Err(e) => warn_torn(path, i, &e),
+            },
+            Err(e) => warn_torn(path, i, &e),
         }
     }
     Ok(out)
+}
+
+fn warn_torn(path: &Path, line_idx: usize, e: &anyhow::Error) {
+    eprintln!(
+        "ledger {} line {}: skipping unparseable line (interrupted write?): {e}",
+        path.display(),
+        line_idx + 1
+    );
 }
 
 /// A streaming consumer of campaign results.  All methods default to
@@ -378,6 +426,15 @@ impl JsonlSink {
         }
         Ok(JsonlSink { out })
     }
+
+    /// Append one pre-rendered JSONL line and flush — used by the
+    /// distributed layer for plan-header and claim/lease lines
+    /// (`exp::dist`), which share the run ledger file.
+    pub fn raw_line(&mut self, line: &str) -> Result<()> {
+        writeln!(self.out, "{line}")?;
+        self.out.flush()?;
+        Ok(())
+    }
 }
 
 impl ResultSink for JsonlSink {
@@ -400,7 +457,7 @@ impl CsvSink {
         let mut out = BufWriter::new(f);
         writeln!(
             out,
-            "campaign,scenario,compressor,tier,discipline,policy,seed,wall,rounds,\
+            "campaign,scenario,compressor,tier,discipline,policy,data_seed,seed,wall,rounds,\
              converged,aggregations,dropped,late"
         )?;
         Ok(CsvSink { out })
@@ -411,13 +468,14 @@ impl ResultSink for CsvSink {
     fn on_record(&mut self, rec: &RunRecord) -> Result<()> {
         writeln!(
             self.out,
-            "{},{},{},{},{},{},{},{:?},{},{},{},{},{}",
+            "{},{},{},{},{},{},{},{},{:?},{},{},{},{},{}",
             csv_escape(&rec.campaign),
             csv_escape(&rec.scenario),
             csv_escape(&rec.compressor),
             csv_escape(&rec.tier),
             csv_escape(&rec.discipline),
             csv_escape(&rec.policy),
+            rec.data_seed,
             rec.seed,
             rec.wall,
             rec.rounds,
@@ -623,6 +681,7 @@ mod tests {
             tier: "sim:100".into(),
             discipline: "sync".into(),
             policy: policy.into(),
+            data_seed: 7,
             seed,
             config: "deadbeef".into(),
             wall,
@@ -644,6 +703,7 @@ mod tests {
         assert_eq!(back.campaign, r.campaign);
         assert_eq!(back.policy, r.policy);
         assert_eq!(back.seed, r.seed);
+        assert_eq!(back.data_seed, r.data_seed);
         assert_eq!(back.config, r.config);
         assert_eq!(back.wall.to_bits(), r.wall.to_bits(), "shortest float repr is exact");
         assert_eq!(back.rounds, r.rounds);
@@ -663,8 +723,9 @@ mod tests {
     #[test]
     fn from_json_rejects_malformed_lines() {
         assert!(RunRecord::from_json("").is_err());
-        assert!(RunRecord::from_json("{\"schema\":1").is_err(), "truncated");
-        assert!(RunRecord::from_json("{\"schema\":2}").is_err(), "wrong schema");
+        assert!(RunRecord::from_json("{\"schema\":2").is_err(), "truncated");
+        assert!(RunRecord::from_json("{\"schema\":3}").is_err(), "future schema");
+        assert!(RunRecord::from_json("{\"schema\":1}").is_err(), "pre-data_seed schema");
         let r = rec("fixed:2", 0, 1.0);
         let line = r.to_json();
         assert!(RunRecord::from_json(&line[..line.len() / 2]).is_err(), "torn line");
@@ -700,6 +761,22 @@ mod tests {
         let recs = read_ledger(&path).unwrap();
         assert_eq!(recs.len(), 1);
         assert_eq!(recs[0].seed, 1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn read_ledger_skips_dist_control_lines() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("nacfl_ctl_{}.jsonl", std::process::id()));
+        let header = "{\"schema\":2,\"kind\":\"plan\",\"campaign\":\"t\",\
+                      \"plan\":\"abc\",\"config\":\"def\",\"n_runs\":2}";
+        let claim = "{\"schema\":2,\"kind\":\"claim\",\"key\":\"k\",\
+                     \"worker\":\"w\",\"ts\":1,\"lease_s\":600}";
+        let run = rec("fixed:2", 0, 1.0).to_json();
+        std::fs::write(&path, format!("{header}\n{claim}\n{run}\n")).unwrap();
+        let recs = read_ledger(&path).unwrap();
+        assert_eq!(recs.len(), 1, "only the run line is a record");
+        assert_eq!(recs[0].policy, "fixed:2");
         std::fs::remove_file(&path).ok();
     }
 

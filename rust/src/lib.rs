@@ -9,9 +9,11 @@
 //!   baselines), simulated wall-clock accounting, metrics, config, CLI,
 //!   the discrete-event simulation tier (`des`) for async/semi-sync
 //!   rounds, and the declarative campaign layer (`exp::{plan, exec,
-//!   sink}`): one `ExperimentPlan` cross product, one work-stealing
-//!   execution engine, streaming `RunRecord` sinks with a resumable
-//!   JSONL ledger.
+//!   sink, dist}`): one `ExperimentPlan` cross product, one
+//!   work-stealing execution engine, streaming `RunRecord` sinks with a
+//!   resumable JSONL ledger, and distributed campaign execution —
+//!   plan-identity headers, `--shard i/n` hash sharding with
+//!   claim/lease work stealing, and cross-machine `nacfl merge`.
 //! * **L2/L1 (`python/compile`)** — FedCOM-V compute graphs + Pallas
 //!   quantizer/dense kernels, AOT-lowered once to `artifacts/*.hlo.txt`.
 //! * **runtime** — PJRT CPU loader/executor for those artifacts; python

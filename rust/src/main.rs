@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   run <plan.toml>                 execute a declarative campaign manifest
+//!   merge <a.jsonl> <b.jsonl> ...   merge fleet ledgers into one campaign
 //!   exp <table1..table4|theorem1|fig3|all>   regenerate a paper table / figure
 //!   train                           one full FedCOM-V training run
 //!   sim                             one analytic-tier cell (fast)
@@ -11,12 +12,20 @@
 //!
 //! Every subcommand is a thin *plan constructor*: it builds an
 //! `exp::ExperimentPlan` (a declarative cross product of scenarios x
-//! compressors x tiers x disciplines x policies x seeds) and hands it to
-//! the one execution engine (`exp::execute`), which streams `RunRecord`s
-//! into composable sinks — progress lines, paper tables, CSV, and the
-//! JSONL campaign ledger.  `nacfl run` executes a `[campaign]` TOML
-//! manifest directly and *resumes* from its ledger: rerun after a kill
-//! and completed runs are skipped (see DESIGN.md §10).
+//! compressors x tiers x disciplines x policies x data seeds x seeds)
+//! and hands it to the one execution engine (`exp::execute`), which
+//! streams `RunRecord`s into composable sinks — progress lines, paper
+//! tables, CSV, and the JSONL campaign ledger.  `nacfl run` executes a
+//! `[campaign]` TOML manifest directly and *resumes* from its ledger:
+//! rerun after a kill and completed runs are skipped (DESIGN.md §10).
+//!
+//! One campaign can be split across machines (DESIGN.md §11): each
+//! worker runs `--shard i/n` (a deterministic hash partition of the
+//! pending runs) into its own ledger, `--steal` reclaims expired-lease
+//! runs from dead workers on a shared ledger, and `nacfl merge`
+//! validates the ledgers' plan headers, dedups runs, reports coverage,
+//! and regenerates the paper tables bit-identically to a single-machine
+//! run.
 //!
 //! Every flag that names an object takes a unified `name[:arg]` spec
 //! with round-trip Display: policies `nacfl:2 | fixed:3 | error:5.25 |
@@ -29,10 +38,12 @@
 //!   nacfl run examples/campaign.toml --out results
 //!   nacfl run examples/campaign.toml --out results      # resumes from the ledger
 //!   nacfl run examples/campaign.toml --fresh            # ignore the ledger
+//!   nacfl run examples/campaign.toml --emit-manifest plan_full.toml
+//!   nacfl run plan.toml --shard 0/2 --ledger w0.jsonl   # machine A
+//!   nacfl run plan.toml --shard 1/2 --ledger w1.jsonl   # machine B
+//!   nacfl merge w0.jsonl w1.jsonl --plan plan.toml --output merged.jsonl
 //!   nacfl sim --scenario perf:4 --seeds 20
-//!   nacfl sim --compressor topk:0.05 --seeds 10
 //!   nacfl des --scenario heterog --discipline semi-sync:7 --stragglers 8,9 --straggle-mult 8
-//!   nacfl des --compressor errbound:1.5625 --seeds 10
 //!   nacfl exp theorem1 --tier sim --seeds 10 --out results
 //!   nacfl train --policy nacfl --scenario homog:2 --engine xla
 //!   nacfl exp table3 --tier sim --seeds 20 --out results
@@ -42,8 +53,9 @@ use nacfl::config::ExperimentConfig;
 use nacfl::data::PartitionKind;
 use nacfl::des::Discipline;
 use nacfl::exp::{
-    campaign_table, execute, fig3_cells, resolve_threads, run_cell, table_plans, CsvSink,
-    ExecOptions, ExperimentPlan, ProgressSink, TableSink, Tier,
+    build_tables, campaign_table, execute, fig3_cells, merge_ledgers, resolve_threads,
+    table_plans, write_ledger, CsvSink, ExecOptions, ExperimentPlan, MemorySink, ProgressSink,
+    ResultSink, ShardSpec, TableSink, Tier,
 };
 use nacfl::netsim::ScenarioKind;
 use nacfl::policy::{NacFl, OraclePolicy};
@@ -81,6 +93,14 @@ fn flags() -> Vec<nacfl::util::cli::FlagSpec> {
         flag("straggle-mult", "straggler transfer slowdown multiplier >= 1 (des only)", None),
         flag("ledger", "campaign ledger path (run only; default <out>/<name>.jsonl)", None),
         bool_flag("fresh", "ignore an existing campaign ledger (run only)"),
+        flag("shard", "worker shard i/n: hash-partition of pending runs (run only)", None),
+        bool_flag("steal", "after own shard, reclaim expired-lease runs (run only)"),
+        flag("worker", "worker id stamped on ledger claims (default <host>-pid<n>-<nonce>)", None),
+        flag("lease", "claim lease seconds before a silent worker counts as dead", Some("600")),
+        flag("emit-manifest", "write the fully-resolved manifest and exit (run only)", None),
+        flag("plan", "campaign manifest for coverage checks + tables (merge only)", None),
+        flag("output", "merged ledger path (merge only)", None),
+        flag("csv", "merged per-run CSV path (merge only)", None),
         bool_flag("quiet", "suppress per-run progress"),
     ]
 }
@@ -159,10 +179,15 @@ fn file_slug(label: &str) -> String {
 /// `nacfl run <plan.toml>`: execute a `[campaign]` manifest through the
 /// engine, streaming the JSONL ledger (resume on rerun), a per-run CSV,
 /// and paper-style tables per (scenario, compressor, tier, discipline)
-/// group.
+/// group.  `--shard i/n` executes one hash shard of the campaign (the
+/// fleet's ledgers then combine via `nacfl merge`); tables print only
+/// when this worker's ledger covers the whole plan.
 fn cmd_run(args: &Args) -> Result<()> {
     let path = args.positionals.first().ok_or_else(|| {
-        anyhow::anyhow!("usage: nacfl run <plan.toml> [--out dir] [--threads n] [--fresh]")
+        anyhow::anyhow!(
+            "usage: nacfl run <plan.toml> [--out dir] [--threads n] [--fresh] \
+             [--shard i/n] [--steal] [--emit-manifest path]"
+        )
     })?;
     let mut plan = ExperimentPlan::load(path)?;
     // CLI overrides (flag > manifest).
@@ -175,6 +200,20 @@ fn cmd_run(args: &Args) -> Result<()> {
     };
     plan.validate()?;
 
+    if let Some(out) = args.get("emit-manifest") {
+        std::fs::write(out, plan.manifest())?;
+        eprintln!(
+            "campaign `{}`: self-contained manifest -> {out} (plan hash {})",
+            plan.name,
+            plan.plan_hash()
+        );
+        return Ok(());
+    }
+
+    let shard = match args.get("shard") {
+        Some(s) => ShardSpec::parse(s)?,
+        None => ShardSpec::solo(),
+    };
     let out_dir = args.get_str("out")?;
     std::fs::create_dir_all(&out_dir)?;
     let slug = file_slug(&plan.name);
@@ -186,34 +225,118 @@ fn cmd_run(args: &Args) -> Result<()> {
         std::fs::remove_file(&ledger)?;
     }
     eprintln!(
-        "campaign `{}`: {} runs in {} groups, ledger -> {ledger}",
+        "campaign `{}` (plan hash {}): {} runs in {} groups, shard {shard}, \
+         ledger -> {ledger}",
         plan.name,
+        plan.plan_hash(),
         plan.n_runs(),
         plan.n_groups()
     );
 
     let mut progress = ProgressSink::new(plan.name.clone(), args.get_bool("quiet"));
     let mut tables = TableSink::new(None);
-    let csv_path = format!("{out_dir}/{slug}_runs.csv");
+    // Per-shard CSV stem: workers sharing one --out dir must not
+    // truncate each other's rows.
+    let csv_path = if shard.count > 1 {
+        format!("{out_dir}/{slug}_runs_shard{}_{}.csv", shard.index, shard.count)
+    } else {
+        format!("{out_dir}/{slug}_runs.csv")
+    };
     let mut csv = CsvSink::create(&csv_path)?;
     let started = std::time::Instant::now();
-    let summary = execute(
-        &plan,
-        &ExecOptions { threads, ledger: Some(ledger.clone()) },
-        &mut [&mut progress, &mut tables, &mut csv],
-    )?;
-    for t in &tables.tables {
-        println!("{}", t.render());
+    let opts = ExecOptions {
+        threads,
+        ledger: Some(ledger.clone()),
+        shard,
+        steal: args.get_bool("steal"),
+        worker: args.get("worker").map(str::to_string),
+        lease_s: args.get_u64("lease")?,
+    };
+    let summary = execute(&plan, &opts, &mut [&mut progress, &mut tables, &mut csv])?;
+    if summary.n_skipped == 0 {
+        for t in &tables.tables {
+            println!("{}", t.render());
+        }
+    } else {
+        eprintln!(
+            "shard {shard}: {}/{} runs in this ledger; merge the fleet's ledgers \
+             (`nacfl merge ... --plan {path}`) for the tables",
+            summary.records.len(),
+            plan.n_runs()
+        );
     }
     eprintln!(
-        "campaign `{}` done in {:.2?}: {} runs ({} resumed from ledger, {} executed); \
+        "campaign `{}` done in {:.2?}: {} runs ({} resumed from ledger, {} executed{}); \
          ledger -> {ledger}, runs csv -> {csv_path}",
         plan.name,
         started.elapsed(),
         summary.records.len(),
         summary.n_cached,
-        summary.n_executed
+        summary.n_executed,
+        if summary.n_skipped > 0 {
+            format!(", {} left to other shards", summary.n_skipped)
+        } else {
+            String::new()
+        }
     );
+    Ok(())
+}
+
+/// `nacfl merge <a.jsonl> <b.jsonl> ...`: combine fleet ledgers.
+/// Headers must agree (same plan hash); runs dedup by coordinate key.
+/// With `--plan`, coverage is checked against the manifest and —
+/// when complete — the paper tables print bit-identically to a
+/// single-machine `nacfl run`.
+fn cmd_merge(args: &Args) -> Result<()> {
+    if args.positionals.is_empty() {
+        anyhow::bail!(
+            "usage: nacfl merge <a.jsonl> <b.jsonl> ... [--plan plan.toml] \
+             [--output merged.jsonl] [--csv runs.csv]"
+        );
+    }
+    let plan = match args.get("plan") {
+        Some(p) => Some(ExperimentPlan::load(p)?),
+        None => None,
+    };
+    let outcome = merge_ledgers(&args.positionals, plan.as_ref())?;
+    eprintln!(
+        "merged {} ledgers: {} runs ({} duplicates dropped, {} torn lines skipped, \
+         {} schema-1 legacy lines skipped, {} foreign/stale records ignored)",
+        outcome.n_inputs,
+        outcome.records.len(),
+        outcome.n_duplicates,
+        outcome.n_torn,
+        outcome.n_legacy,
+        outcome.n_foreign
+    );
+    if let Some(out) = args.get("output") {
+        write_ledger(out, outcome.header.as_ref(), &outcome.records)?;
+        eprintln!("merged ledger -> {out}");
+    }
+    if let Some(path) = args.get("csv") {
+        let mut csv = CsvSink::create(path)?;
+        for rec in &outcome.records {
+            csv.on_record(rec)?;
+        }
+        csv.on_finish(&outcome.records)?;
+        eprintln!("merged runs csv -> {path}");
+    }
+    if let Some(plan) = &plan {
+        if outcome.complete() {
+            for t in build_tables(None, &outcome.records)? {
+                println!("{}", t.render());
+            }
+        } else {
+            let show = outcome.missing.len().min(5);
+            anyhow::bail!(
+                "coverage incomplete for `{}`: {} of {} runs missing (e.g. {:?})",
+                plan.name,
+                outcome.missing.len(),
+                plan.n_runs(),
+                &outcome.missing[..show]
+            );
+        }
+    }
     Ok(())
 }
 
@@ -240,7 +363,7 @@ fn cmd_exp(args: &Args, which: &str) -> Result<()> {
             let mut table_sink = TableSink::new(Some(label.clone()));
             let summary = execute(
                 &plan,
-                &ExecOptions { threads: cfg.grid_threads, ledger: None },
+                &ExecOptions::with_threads(cfg.grid_threads),
                 &mut [&mut progress, &mut table_sink],
             )?;
             for table in &table_sink.tables {
@@ -305,9 +428,14 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.scenario.label(),
         cfg.engine
     );
-    let results = run_cell(&cfg, Tier::Ml, |_, _, _| {})?;
-    let r = &results[0];
-    let trace = &r.traces[0];
+    // A one-cell ml plan through the engine; the trace rides on the record.
+    let plan = ExperimentPlan::run_cell_plan(format!("train {spec}"), &cfg, Tier::Ml);
+    let mut mem = MemorySink::default();
+    execute(&plan, &ExecOptions::default(), &mut [&mut mem])?;
+    let trace = mem.records[0]
+        .trace
+        .as_ref()
+        .expect("ml runs record a trace");
     for p in &trace.points {
         println!(
             "round {:>5}  wall {:>12.4e}  loss {:>8.4}  acc {:>6.3}  bits {:>5.2}",
@@ -332,7 +460,7 @@ fn cmd_sim(args: &Args) -> Result<()> {
     let mut table_sink = TableSink::new(Some(title));
     execute(
         &plan,
-        &ExecOptions { threads: cfg.grid_threads, ledger: None },
+        &ExecOptions::with_threads(cfg.grid_threads),
         &mut [&mut table_sink],
     )?;
     for table in &table_sink.tables {
@@ -370,7 +498,7 @@ fn cmd_des(args: &Args) -> Result<()> {
         .build()?;
     let started = std::time::Instant::now();
     let threads = resolve_threads(cfg.grid_threads);
-    let summary = execute(&plan, &ExecOptions { threads, ledger: None }, &mut [])?;
+    let summary = execute(&plan, &ExecOptions::with_threads(threads), &mut [])?;
     let table = campaign_table("DES sweep: mean time-to-target", &plan, &summary.records)?;
     println!("{}", table.render());
     let unconverged = summary.records.iter().filter(|c| !c.converged).count();
@@ -483,7 +611,8 @@ fn main() {
         }
     };
     let subcommands = [
-        ("run", "execute a declarative [campaign] manifest (resumes from its ledger)"),
+        ("run", "execute a declarative [campaign] manifest (resumes; --shard i/n to split)"),
+        ("merge", "merge fleet ledgers: validate headers, dedup runs, render tables"),
         ("exp", "regenerate a paper table/figure (table1..table4, theorem1, fig3, all)"),
         ("train", "one full FedCOM-V training run"),
         ("sim", "one analytic-tier cell"),
@@ -493,6 +622,7 @@ fn main() {
     ];
     let result = match args.subcommand.as_deref() {
         Some("run") => cmd_run(&args),
+        Some("merge") => cmd_merge(&args),
         Some("exp") => {
             let which = args
                 .positionals

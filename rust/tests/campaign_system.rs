@@ -1,51 +1,83 @@
-//! System tests for the declarative campaign layer (ISSUE-4):
+//! System tests for the declarative campaign layer (ISSUE-4/5):
 //!
-//! * paper-table parity — every `nacfl exp` preset produces
-//!   bit-identical tables through the unified engine and the retained
-//!   legacy `run_cell` path;
+//! * paper-table parity — every `nacfl exp` preset produces tables
+//!   byte-identical to the *pinned reference*: an inline copy of the
+//!   retired `run_cell` sequential loop (per policy, per seed, one
+//!   `sim::simulate` over the paired congestion process).  This froze
+//!   the legacy float path when the legacy drivers were deleted;
 //! * manifest execution — a `[campaign]` TOML manifest parses, round-
 //!   trips through Display, and executes a mixed analytic + DES
 //!   campaign;
 //! * ledger resume — a campaign interrupted mid-run (torn trailing
 //!   ledger line included) resumes from its JSONL ledger and finishes
-//!   bit-identically to an uninterrupted run.
+//!   bit-identically to an uninterrupted run; a base-config edit is a
+//!   different campaign (plan-hash header) and is refused.
 
 use nacfl::config::ExperimentConfig;
 use nacfl::des::Discipline;
 use nacfl::exp::{
-    execute, run_cell, table_cells, table_for, table_plans, ExecOptions, ExperimentPlan,
+    execute, table_cells, table_for, table_plans, CellResult, ExecOptions, ExperimentPlan,
     MemorySink, ResultSink, TableSink, Tier,
 };
 use nacfl::netsim::ScenarioKind;
+use nacfl::policy::{PolicyEnv, PolicySpec};
+use nacfl::sim::simulate;
 
 fn temp_path(tag: &str) -> std::path::PathBuf {
     std::env::temp_dir().join(format!("nacfl_{tag}_{}", std::process::id()))
 }
 
+/// The pinned reference: the legacy `run_cell` analytic loop, inlined.
+/// Per policy, per seed — policy-major, seed-minor — one analytic
+/// simulation on the seed-paired congestion process.  Every float here
+/// is the exact path the paper tables shipped with.
+fn reference_cell(cfg: &ExperimentConfig, k_eps: f64) -> Vec<CellResult> {
+    let ctx = cfg.policy_ctx();
+    cfg.policies
+        .iter()
+        .map(|spec| {
+            let mut times = Vec::with_capacity(cfg.seeds.len());
+            let mut rounds = Vec::with_capacity(cfg.seeds.len());
+            for &seed in &cfg.seeds {
+                let env = PolicyEnv::for_cell(&ctx, cfg.scenario, cfg.m, seed);
+                let mut policy = PolicySpec::parse(spec).unwrap().build(&env).unwrap();
+                let mut process = cfg.congestion_process(seed).unwrap();
+                let r = simulate(&ctx, policy.as_mut(), &mut process, k_eps, 10_000_000);
+                times.push(r.wall);
+                rounds.push(r.rounds);
+            }
+            CellResult {
+                policy: spec.clone(),
+                times,
+                rounds,
+                traces: Vec::new(),
+                unconverged: 0,
+            }
+        })
+        .collect()
+}
+
 #[test]
-fn engine_tables_are_bit_identical_to_legacy_for_all_presets() {
+fn engine_tables_are_bit_identical_to_the_pinned_reference_for_all_presets() {
     let mut base = ExperimentConfig::paper();
     base.seeds = (0..4).collect();
-    let tier = Tier::Analytic { k_eps: 80.0 };
+    let k_eps = 80.0;
+    let tier = Tier::Analytic { k_eps };
     for table in ["table1", "table2", "table3", "table4", "theorem1"] {
         let cells = table_cells(table, &base).unwrap();
         let plans = table_plans(table, &base, tier).unwrap();
         assert_eq!(cells.len(), plans.len());
         for ((label, cfg), (_, plan)) in cells.iter().zip(plans.iter()) {
-            let legacy = run_cell(cfg, tier, |_, _, _| {}).unwrap();
-            let legacy_render = table_for(label, &legacy).unwrap().render();
+            let reference = reference_cell(cfg, k_eps);
+            let reference_render = table_for(label, &reference).unwrap().render();
 
             let mut sink = TableSink::new(Some(label.clone()));
-            let summary = execute(
-                plan,
-                &ExecOptions { threads: 4, ledger: None },
-                &mut [&mut sink],
-            )
-            .unwrap();
+            let summary =
+                execute(plan, &ExecOptions::with_threads(4), &mut [&mut sink]).unwrap();
 
             // Per-run walls are bit-identical, policy-major seed-minor.
             let mut it = summary.records.iter();
-            for cr in &legacy {
+            for cr in &reference {
                 for (si, &wall) in cr.times.iter().enumerate() {
                     let rec = it.next().unwrap();
                     assert_eq!(rec.policy, cr.policy, "{table} {label}");
@@ -64,7 +96,7 @@ fn engine_tables_are_bit_identical_to_legacy_for_all_presets() {
 
             // And the rendered paper table is byte-identical.
             assert_eq!(sink.tables.len(), 1, "{table} {label}");
-            assert_eq!(sink.tables[0].render(), legacy_render, "{table} {label}");
+            assert_eq!(sink.tables[0].render(), reference_render, "{table} {label}");
         }
     }
 }
@@ -85,9 +117,11 @@ seeds = 2
     let plan = ExperimentPlan::parse_manifest(text).unwrap();
     assert_eq!(plan.n_runs(), 8, "2 disciplines x 2 policies x 2 seeds");
 
-    // Display round-trips to an equivalent plan.
+    // Display round-trips to an equivalent plan (now self-contained:
+    // the base config sections ride along).
     let back = ExperimentPlan::parse_manifest(&plan.to_string()).unwrap();
     assert_eq!(back.cells(), plan.cells());
+    assert_eq!(back.plan_hash(), plan.plan_hash());
 
     let mut mem = MemorySink::default();
     let mut sinks: Vec<&mut dyn ResultSink> = vec![&mut mem];
@@ -96,13 +130,13 @@ seeds = 2
     assert_eq!(mem.records.len(), plan.n_runs());
 
     // The sync half is the analytic tier exactly: compare against the
-    // legacy run_cell on the equivalent config.
+    // pinned reference on the equivalent config.
     let mut cfg = plan.base.clone();
     cfg.scenario = ScenarioKind::HomogeneousIndependent { sigma_sq: 2.0 };
     cfg.policies = plan.policies.clone();
     cfg.seeds = plan.seeds.clone();
-    let legacy = run_cell(&cfg, Tier::Analytic { k_eps: 60.0 }, |_, _, _| {}).unwrap();
-    for cr in &legacy {
+    let reference = reference_cell(&cfg, 60.0);
+    for cr in &reference {
         for (si, &wall) in cr.times.iter().enumerate() {
             let rec = summary
                 .records
@@ -143,36 +177,31 @@ fn campaign_resumes_bit_identically_from_a_torn_ledger() {
     let n = plan.n_runs();
     assert_eq!(n, 12);
 
+    let opts = |threads: usize| ExecOptions {
+        threads,
+        ledger: Some(ledger.clone()),
+        ..Default::default()
+    };
+
     // Uninterrupted reference run, streaming the ledger.
-    let mut sinks: Vec<&mut dyn ResultSink> = Vec::new();
-    let full = execute(
-        &plan,
-        &ExecOptions { threads: 2, ledger: Some(ledger.clone()) },
-        &mut sinks,
-    )
-    .unwrap();
+    let full = execute(&plan, &opts(2), &mut []).unwrap();
     assert_eq!(full.n_executed, n);
     assert_eq!(full.n_cached, 0);
 
-    // Simulate a mid-run kill: keep 5 complete ledger lines plus one
-    // torn half-line (the write that was interrupted).
+    // Simulate a mid-run kill: keep the plan header + 5 complete run
+    // lines plus one torn half-line (the write that was interrupted).
     let text = std::fs::read_to_string(&ledger).unwrap();
     let lines: Vec<&str> = text.lines().collect();
-    assert_eq!(lines.len(), n, "one ledger line per run");
-    let mut torn = lines[..5].join("\n");
+    assert_eq!(lines.len(), n + 1, "plan header + one ledger line per run");
+    assert!(lines[0].contains("\"kind\":\"plan\""), "first line is the header");
+    let mut torn = lines[..6].join("\n");
     torn.push('\n');
-    torn.push_str(&lines[5][..lines[5].len() / 2]);
+    torn.push_str(&lines[6][..lines[6].len() / 2]);
     std::fs::write(&ledger, &torn).unwrap();
 
     // Resume: 5 runs come from the ledger, the rest re-execute, and the
     // final records are bit-identical to the uninterrupted run.
-    let mut sinks: Vec<&mut dyn ResultSink> = Vec::new();
-    let resumed = execute(
-        &plan,
-        &ExecOptions { threads: 2, ledger: Some(ledger.clone()) },
-        &mut sinks,
-    )
-    .unwrap();
+    let resumed = execute(&plan, &opts(2), &mut []).unwrap();
     assert_eq!(resumed.n_cached, 5);
     assert_eq!(resumed.n_executed, n - 5);
     assert_eq!(resumed.records.len(), n);
@@ -189,34 +218,36 @@ fn campaign_resumes_bit_identically_from_a_torn_ledger() {
     }
 
     // A third invocation is fully cached (skip-completed on rerun).
-    let mut sinks: Vec<&mut dyn ResultSink> = Vec::new();
-    let third = execute(
-        &plan,
-        &ExecOptions { threads: 1, ledger: Some(ledger.clone()) },
-        &mut sinks,
-    )
-    .unwrap();
+    let third = execute(&plan, &opts(1), &mut []).unwrap();
     assert_eq!(third.n_cached, n);
     assert_eq!(third.n_executed, 0);
     for (a, b) in full.records.iter().zip(third.records.iter()) {
         assert_eq!(a.wall.to_bits(), b.wall.to_bits());
     }
 
-    // Editing the base config invalidates every cached record (the
-    // fingerprint no longer matches), so nothing stale is served.
+    // Editing the base config changes the plan hash: the ledger header
+    // no longer matches, so resuming is refused instead of silently
+    // mixing campaigns (use --fresh or a new ledger path).
     let mut edited = plan.clone();
     edited.base.c_q *= 2.0;
-    let mut sinks: Vec<&mut dyn ResultSink> = Vec::new();
-    let fourth = execute(
-        &edited,
-        &ExecOptions { threads: 1, ledger: Some(ledger.clone()) },
-        &mut sinks,
-    )
-    .unwrap();
+    let err = execute(&edited, &opts(1), &mut []).unwrap_err();
+    assert!(
+        err.to_string().contains("different campaign"),
+        "edited base must be refused: {err}"
+    );
+    // On a fresh ledger the edited campaign executes from scratch.
+    let fresh = temp_path("resume_fresh");
+    let fresh_opts = ExecOptions {
+        threads: 1,
+        ledger: Some(fresh.to_str().unwrap().to_string()),
+        ..Default::default()
+    };
+    let fourth = execute(&edited, &fresh_opts, &mut []).unwrap();
     assert_eq!(fourth.n_cached, 0, "changed base config must re-execute");
     assert_eq!(fourth.n_executed, n);
 
     std::fs::remove_file(&ledger).ok();
+    std::fs::remove_file(&fresh).ok();
 }
 
 #[test]
@@ -231,7 +262,7 @@ fn compressor_axis_fans_out_within_one_campaign() {
         .build()
         .unwrap();
     let mut sinks: Vec<&mut dyn ResultSink> = Vec::new();
-    let summary = execute(&plan, &ExecOptions { threads: 2, ledger: None }, &mut sinks).unwrap();
+    let summary = execute(&plan, &ExecOptions::with_threads(2), &mut sinks).unwrap();
     assert_eq!(summary.records.len(), 3 * 2 * 2);
     // Each compressor family prices differently, so the same (policy,
     // seed) cell must not produce identical walls across all families.

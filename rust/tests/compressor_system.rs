@@ -1,15 +1,17 @@
 //! End-to-end regression per compressor family (ISSUE-2 acceptance):
 //! `topk` and `errbound` must drive the full paper roster through BOTH
-//! tiers — the analytic experiment path (`nacfl exp`/`sim`, i.e.
-//! `run_cell_parallel`) and the DES path (`nacfl des`, i.e.
-//! `run_sweep`) — converging and preserving the tiers' parity
-//! invariants; and the spec-built `oracle:<states>` policy must run
-//! inside a roster like any other policy (Theorem-1 preset).
+//! engine routes — the analytic closed form (`nacfl exp`/`sim` cells)
+//! and the DES path (a disciplines-axis plan, the `nacfl des` shape) —
+//! converging and preserving the tiers' parity invariants; and the
+//! spec-built `oracle:<states>` policy must run inside a roster like
+//! any other policy (Theorem-1 preset).  Everything routes through
+//! `exp::exec::execute` (the legacy drivers are gone).
 
 use nacfl::config::ExperimentConfig;
-use nacfl::des::{Discipline, FaultModel};
+use nacfl::des::Discipline;
 use nacfl::exp::{
-    run_cell, run_cell_parallel, run_sweep, sweep_table, table_cells, table_for, SweepSpec, Tier,
+    campaign_table, cell_results, execute, table_cells, table_for, CellResult, ExecOptions,
+    ExperimentPlan, RunRecord, Tier,
 };
 use nacfl::metrics::Summary;
 use nacfl::netsim::ScenarioKind;
@@ -22,14 +24,22 @@ fn cfg_for(compressor: &str) -> ExperimentConfig {
     cfg
 }
 
-/// The analytic `nacfl exp` path: full roster, parallel grid, rendered
-/// table — once per new compressor family.
+/// Engine run -> legacy-shaped per-policy results (plan order).
+fn engine_cell(cfg: &ExperimentConfig, tier: Tier, threads: usize) -> Vec<CellResult> {
+    let plan = ExperimentPlan::run_cell_plan("cell", cfg, tier);
+    let summary = execute(&plan, &ExecOptions::with_threads(threads), &mut []).unwrap();
+    let refs: Vec<&RunRecord> = summary.records.iter().collect();
+    cell_results(&refs)
+}
+
+/// The analytic `nacfl exp` path: full roster, threaded engine,
+/// rendered table — once per new compressor family.
 #[test]
 fn topk_and_errbound_run_the_analytic_exp_path_end_to_end() {
     for compressor in ["topk:0.05", "errbound:1.5625"] {
         let cfg = cfg_for(compressor);
         let tier = Tier::Analytic { k_eps: 60.0 };
-        let results = run_cell_parallel(&cfg, tier, 4, |_, _, _| {}).unwrap();
+        let results = engine_cell(&cfg, tier, 4);
         assert_eq!(results.len(), 5, "{compressor}: full paper roster");
         for r in &results {
             assert_eq!(r.times.len(), cfg.seeds.len());
@@ -59,41 +69,40 @@ fn topk_and_errbound_run_the_analytic_exp_path_end_to_end() {
         let table = table_for(&format!("{compressor} cell"), &results).unwrap();
         assert!(table.render().contains("Gain"));
 
-        // Parallel grid parity holds for the new families too.
-        let seq = run_cell(&cfg, tier, |_, _, _| {}).unwrap();
+        // Thread-count parity holds for the new families too.
+        let seq = engine_cell(&cfg, tier, 1);
         for (a, b) in seq.iter().zip(results.iter()) {
             assert_eq!(a.times, b.times, "{compressor} {}: grid parity", a.policy);
         }
     }
 }
 
-/// The `nacfl des` path: sweep all three disciplines per family.
+/// The DES path: a disciplines-axis plan per family (the `nacfl des`
+/// shape), through the same engine.
 #[test]
 fn topk_and_errbound_run_the_des_sweep_end_to_end() {
     for compressor in ["topk:0.05", "errbound:1.5625"] {
-        let cfg = cfg_for(compressor);
-        let ctx = cfg.policy_ctx();
-        let spec = SweepSpec {
-            m: cfg.m,
-            scenarios: vec![ScenarioKind::HeterogeneousIndependent],
-            disciplines: vec![
+        let mut cfg = cfg_for(compressor);
+        cfg.policies = vec!["fixed:2".into(), "nacfl:1".into()];
+        cfg.seeds = (0..3).collect();
+        cfg.scenario = ScenarioKind::HeterogeneousIndependent;
+        let plan = ExperimentPlan::builder(format!("des {compressor}"))
+            .base(cfg)
+            .tiers(vec![Tier::Analytic { k_eps: 40.0 }])
+            .disciplines(vec![
                 Discipline::Sync,
                 Discipline::SemiSync { k: 7 },
                 Discipline::Async { staleness_exp: 0.5 },
-            ],
-            policies: vec!["fixed:2".into(), "nacfl:1".into()],
-            seeds: (0..3).collect(),
-            faults: FaultModel::none(),
-            k_eps: 40.0,
-            max_rounds: 500_000,
-        };
-        let cells = run_sweep(&ctx, &spec, 4).unwrap();
-        assert_eq!(cells.len(), 3 * 2 * 3, "{compressor}");
-        for c in &cells {
-            assert!(c.result.converged, "{compressor} {} {}: unconverged", c.discipline, c.policy);
-            assert!(c.result.wall > 0.0 && c.result.aggregations > 0);
+            ])
+            .build()
+            .unwrap();
+        let summary = execute(&plan, &ExecOptions::with_threads(4), &mut []).unwrap();
+        assert_eq!(summary.records.len(), 3 * 2 * 3, "{compressor}");
+        for r in &summary.records {
+            assert!(r.converged, "{compressor} {} {}: unconverged", r.discipline, r.policy);
+            assert!(r.wall > 0.0 && r.aggregations > 0);
         }
-        let table = sweep_table("des", &spec, &cells).unwrap();
+        let table = campaign_table("des", &plan, &summary.records).unwrap();
         assert!(table.render().contains("semi-sync:7"));
     }
 }
@@ -126,7 +135,7 @@ fn sync_des_parity_holds_for_new_compressor_families() {
 }
 
 /// The Theorem-1 preset: `oracle:8` built from its spec inside a normal
-/// roster, through the same analytic cell path as everything else.
+/// roster, through the same engine path as everything else.
 #[test]
 fn oracle_spec_runs_inside_the_theorem1_roster() {
     let base = {
@@ -137,12 +146,12 @@ fn oracle_spec_runs_inside_the_theorem1_roster() {
     let cells = table_cells("theorem1", &base).unwrap();
     let (label, cfg) = &cells[0];
     assert!(label.contains("Theorem 1"));
-    let results = run_cell_parallel(cfg, Tier::Analytic { k_eps: 60.0 }, 4, |_, _, _| {}).unwrap();
+    let results = engine_cell(cfg, Tier::Analytic { k_eps: 60.0 }, 4);
     assert_eq!(results.len(), 6);
     let oracle = results.iter().find(|r| r.policy.starts_with("oracle")).unwrap();
     assert!(oracle.times.iter().all(|t| t.is_finite() && *t > 0.0));
     // Determinism under threading: oracle cells must match sequential.
-    let seq = run_cell(cfg, Tier::Analytic { k_eps: 60.0 }, |_, _, _| {}).unwrap();
+    let seq = engine_cell(cfg, Tier::Analytic { k_eps: 60.0 }, 1);
     let oracle_seq = seq.iter().find(|r| r.policy.starts_with("oracle")).unwrap();
     assert_eq!(oracle.times, oracle_seq.times);
     // The gain table renders with the oracle column present.
@@ -151,8 +160,8 @@ fn oracle_spec_runs_inside_the_theorem1_roster() {
 }
 
 /// Legacy guard: the default config still registers the paper quantizer
-/// and the roster's analytic numbers remain deterministic across
-/// executors (the bit-identity regression the redesign must preserve).
+/// and the roster's analytic numbers remain deterministic across thread
+/// counts (the bit-identity regression every redesign must preserve).
 #[test]
 fn default_compressor_is_the_paper_quantizer_and_tables_are_stable() {
     let cfg = {
@@ -163,9 +172,9 @@ fn default_compressor_is_the_paper_quantizer_and_tables_are_stable() {
     assert_eq!(cfg.compressor, "quant:inf");
     assert_eq!(cfg.policy_ctx().compressor.spec(), "quant:inf");
     let tier = Tier::Analytic { k_eps: 80.0 };
-    let seq = run_cell(&cfg, tier, |_, _, _| {}).unwrap();
+    let seq = engine_cell(&cfg, tier, 1);
     for threads in [2usize, 8] {
-        let par = run_cell_parallel(&cfg, tier, threads, |_, _, _| {}).unwrap();
+        let par = engine_cell(&cfg, tier, threads);
         for (a, b) in seq.iter().zip(par.iter()) {
             assert_eq!(a.times, b.times, "{} with {threads} threads", a.policy);
             assert_eq!(a.rounds, b.rounds);

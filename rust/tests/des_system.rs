@@ -6,12 +6,12 @@
 //!   and policies.
 //! * `semi-sync:K` strictly shortens mean round duration vs `sync` under
 //!   the heterogeneous-independent scenario with straggler injection.
-//! * The work-stealing grid produces bit-identical tables to the
-//!   sequential `run_cell` path for a fixed seed set.
+//! * The work-stealing engine produces bit-identical tables under any
+//!   thread count for a fixed seed set.
 
 use nacfl::config::ExperimentConfig;
 use nacfl::des::{simulate_des, DesConfig, Discipline, FaultModel};
-use nacfl::exp::{run_cell, run_cell_parallel, table_for, Tier};
+use nacfl::exp::{execute, ExecOptions, ExperimentPlan, TableSink, Tier};
 use nacfl::netsim::{Scenario, ScenarioKind};
 use nacfl::policy::parse_policy;
 use nacfl::sim::simulate;
@@ -159,20 +159,30 @@ fn policies_run_unmodified_across_disciplines() {
 }
 
 #[test]
-fn grid_tables_are_bit_identical_to_sequential_for_fixed_seeds() {
+fn engine_tables_are_bit_identical_under_any_thread_count() {
     let mut cfg = ExperimentConfig::paper();
     cfg.seeds = (0..8).collect();
     let tier = Tier::Analytic { k_eps: 80.0 };
-    let seq = run_cell(&cfg, tier, |_, _, _| {}).unwrap();
+    let plan = ExperimentPlan::run_cell_plan("parity", &cfg, tier);
+    let run = |threads: usize| {
+        let mut sink = TableSink::new(Some("parity".to_string()));
+        let summary =
+            execute(&plan, &ExecOptions::with_threads(threads), &mut [&mut sink]).unwrap();
+        (summary.records, sink.tables[0].render())
+    };
+    let (seq, seq_table) = run(1);
     for threads in [2usize, 4, 8] {
-        let par = run_cell_parallel(&cfg, tier, threads, |_, _, _| {}).unwrap();
+        let (par, par_table) = run(threads);
         for (a, b) in seq.iter().zip(par.iter()) {
-            assert_eq!(a.policy, b.policy);
-            assert_eq!(a.times, b.times, "{} with {threads} threads", a.policy);
+            assert_eq!(a.key(), b.key());
+            assert_eq!(
+                a.wall.to_bits(),
+                b.wall.to_bits(),
+                "{} with {threads} threads",
+                a.key()
+            );
             assert_eq!(a.rounds, b.rounds);
         }
-        let ts = table_for("parity", &seq).unwrap().render();
-        let tp = table_for("parity", &par).unwrap().render();
-        assert_eq!(ts, tp, "{threads}-thread table differs from sequential");
+        assert_eq!(seq_table, par_table, "{threads}-thread table differs from sequential");
     }
 }

@@ -1,0 +1,278 @@
+//! System tests for distributed campaign execution (ISSUE-5):
+//!
+//! * shard workers jointly cover the plan, disjointly, and `merge`
+//!   regenerates tables **byte-identical** to a single-machine run —
+//!   including after killing and resuming one shard mid-campaign;
+//! * the plan-identity ledger header rejects resuming or merging a
+//!   different campaign;
+//! * work stealing reclaims runs whose claims expired (dead workers)
+//!   while respecting live foreign leases;
+//! * overlapping ledgers dedup by coordinate key and a merged ledger is
+//!   itself a fully-resumable single-machine ledger.
+
+use nacfl::config::ExperimentConfig;
+use nacfl::exp::dist::now_unix;
+use nacfl::exp::{
+    build_tables, execute, merge_ledgers, read_dist_ledger, write_ledger, ClaimRecord,
+    ExecOptions, ExperimentPlan, PlanHeader, ShardSpec, Tier,
+};
+
+fn temp(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("nacfl_dist_sys_{tag}_{}.jsonl", std::process::id()))
+        .to_str()
+        .unwrap()
+        .to_string()
+}
+
+/// 12 analytic runs (2 policies x 3 seeds x 2 disciplines) — small
+/// enough to be fast, mixed enough to route through both the closed
+/// form and the DES engine.
+fn test_plan() -> ExperimentPlan {
+    let mut base = ExperimentConfig::paper();
+    base.seeds = (0..3).collect();
+    base.policies = vec!["fixed:2".into(), "nacfl:1".into()];
+    ExperimentPlan::builder("dist demo")
+        .base(base)
+        .tiers(vec![Tier::Analytic { k_eps: 50.0 }])
+        .disciplines(vec![
+            nacfl::des::Discipline::Sync,
+            nacfl::des::Discipline::SemiSync { k: 7 },
+        ])
+        .build()
+        .unwrap()
+}
+
+fn opts_for(ledger: &str, shard: ShardSpec) -> ExecOptions {
+    ExecOptions {
+        threads: 2,
+        ledger: Some(ledger.to_string()),
+        shard,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn sharded_workers_merge_bit_identically_to_a_single_machine_run() {
+    let plan = test_plan();
+    let n = plan.n_runs();
+
+    // Single-machine reference: one worker, one ledger, full coverage.
+    let single = temp("single");
+    let _ = std::fs::remove_file(&single);
+    let full = execute(&plan, &opts_for(&single, ShardSpec::solo()), &mut []).unwrap();
+    assert_eq!(full.records.len(), n);
+    let single_tables: Vec<String> = build_tables(None, &full.records)
+        .unwrap()
+        .iter()
+        .map(|t| t.render())
+        .collect();
+
+    // Fleet: two workers, separate ledgers, one hash shard each.
+    let la = temp("w0");
+    let lb = temp("w1");
+    let _ = std::fs::remove_file(&la);
+    let _ = std::fs::remove_file(&lb);
+    let a = execute(&plan, &opts_for(&la, ShardSpec::parse("0/2").unwrap()), &mut []).unwrap();
+    let b = execute(&plan, &opts_for(&lb, ShardSpec::parse("1/2").unwrap()), &mut []).unwrap();
+    assert!(a.n_skipped > 0 && b.n_skipped > 0, "both shards must be partial");
+    assert_eq!(a.records.len() + b.records.len(), n, "disjoint and exhaustive");
+
+    // Merge the fleet's ledgers against the plan: complete coverage and
+    // byte-identical paper tables.
+    let merged = merge_ledgers(&[&la, &lb], Some(&plan)).unwrap();
+    assert!(merged.complete(), "missing: {:?}", merged.missing);
+    assert_eq!(merged.n_duplicates, 0);
+    for (x, y) in full.records.iter().zip(merged.records.iter()) {
+        assert_eq!(x.key(), y.key(), "merge must return plan order");
+        assert_eq!(x.wall.to_bits(), y.wall.to_bits(), "{}", x.key());
+    }
+    let merged_tables: Vec<String> = build_tables(None, &merged.records)
+        .unwrap()
+        .iter()
+        .map(|t| t.render())
+        .collect();
+    assert_eq!(merged_tables, single_tables, "fleet tables == single-machine tables");
+
+    // A written-out merged ledger is a fully-resumable single-machine
+    // ledger: rerunning the plan against it executes nothing.
+    let mpath = temp("merged");
+    write_ledger(&mpath, merged.header.as_ref(), &merged.records).unwrap();
+    let resumed = execute(&plan, &opts_for(&mpath, ShardSpec::solo()), &mut []).unwrap();
+    assert_eq!(resumed.n_cached, n);
+    assert_eq!(resumed.n_executed, 0);
+
+    for p in [&single, &la, &lb, &mpath] {
+        std::fs::remove_file(p).ok();
+    }
+}
+
+#[test]
+fn killed_shard_resumes_and_merged_tables_stay_bit_identical() {
+    let plan = test_plan();
+    let n = plan.n_runs();
+    let single = temp("kill_single");
+    let la = temp("kill_w0");
+    let lb = temp("kill_w1");
+    for p in [&single, &la, &lb] {
+        let _ = std::fs::remove_file(p);
+    }
+
+    let full = execute(&plan, &opts_for(&single, ShardSpec::solo()), &mut []).unwrap();
+    let shard0 = ShardSpec::parse("0/2").unwrap();
+    let shard1 = ShardSpec::parse("1/2").unwrap();
+    let a = execute(&plan, &opts_for(&la, shard0), &mut []).unwrap();
+    execute(&plan, &opts_for(&lb, shard1), &mut []).unwrap();
+    assert!(a.records.len() >= 2, "shard 0 needs >= 2 runs for the kill");
+
+    // Kill worker 0 mid-campaign: the header, its claim lines, one
+    // complete run and a torn half-written run survive on disk.
+    let text = std::fs::read_to_string(&la).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    let run_idx: Vec<usize> = lines
+        .iter()
+        .enumerate()
+        .filter(|(_, l)| !l.contains("\"kind\":"))
+        .map(|(i, _)| i)
+        .collect();
+    assert!(run_idx.len() >= 2, "need two run lines to tear one");
+    let mut torn = lines[..=run_idx[0]].join("\n");
+    torn.push('\n');
+    let second = lines[run_idx[1]];
+    torn.push_str(&second[..second.len() / 2]);
+    std::fs::write(&la, &torn).unwrap();
+
+    // Before the resume, the merge reports exactly the lost runs.
+    let gap = merge_ledgers(&[&la, &lb], Some(&plan)).unwrap();
+    assert_eq!(gap.missing.len(), a.records.len() - 1, "torn runs are the gap");
+
+    // The restarted worker resumes its shard: 1 cached, rest re-run.
+    let resumed = execute(&plan, &opts_for(&la, shard0), &mut []).unwrap();
+    assert_eq!(resumed.n_cached, 1);
+    assert_eq!(resumed.n_executed, a.records.len() - 1);
+
+    // And the fleet still merges byte-identically.
+    let merged = merge_ledgers(&[&la, &lb], Some(&plan)).unwrap();
+    assert!(merged.complete());
+    assert_eq!(merged.records.len(), n);
+    for (x, y) in full.records.iter().zip(merged.records.iter()) {
+        assert_eq!(x.wall.to_bits(), y.wall.to_bits(), "{}", x.key());
+    }
+    let single_tables: Vec<String> =
+        build_tables(None, &full.records).unwrap().iter().map(|t| t.render()).collect();
+    let merged_tables: Vec<String> =
+        build_tables(None, &merged.records).unwrap().iter().map(|t| t.render()).collect();
+    assert_eq!(merged_tables, single_tables);
+
+    for p in [&single, &la, &lb] {
+        std::fs::remove_file(p).ok();
+    }
+}
+
+#[test]
+fn header_hash_mismatch_is_rejected_on_resume_and_merge() {
+    let plan = test_plan();
+    let la = temp("hdr_a");
+    let _ = std::fs::remove_file(&la);
+    execute(&plan, &opts_for(&la, ShardSpec::solo()), &mut []).unwrap();
+
+    // A different campaign (here: a different seed axis) must not
+    // resume from this ledger...
+    let mut other = plan.clone();
+    other.seeds = vec![0];
+    let err = execute(&other, &opts_for(&la, ShardSpec::solo()), &mut []).unwrap_err();
+    assert!(err.to_string().contains("different campaign"), "err: {err}");
+
+    // ...must not merge against it...
+    let err = merge_ledgers(&[&la], Some(&other)).unwrap_err();
+    assert!(err.to_string().contains("different campaign"), "err: {err}");
+
+    // ...and two different campaigns' ledgers must not merge together.
+    let lb = temp("hdr_b");
+    write_ledger(&lb, Some(&PlanHeader::for_plan(&other)), &[]).unwrap();
+    let err = merge_ledgers(&[&la, &lb], None).unwrap_err();
+    assert!(err.to_string().contains("different campaigns"), "err: {err}");
+
+    std::fs::remove_file(&la).ok();
+    std::fs::remove_file(&lb).ok();
+}
+
+#[test]
+fn steal_reclaims_expired_claims_but_respects_live_leases() {
+    let plan = test_plan();
+    let n = plan.n_runs();
+    let shard0 = ShardSpec::parse("0/2").unwrap();
+    let foreign: Vec<String> = plan
+        .cells()
+        .iter()
+        .map(|c| c.key())
+        .filter(|k| !shard0.contains(k))
+        .collect();
+    assert!(foreign.len() >= 2, "test plan must spread across both shards");
+    let dead_key = &foreign[0]; // expired lease -> stealable
+    let live_key = &foreign[1]; // live foreign lease -> left alone
+
+    // Shared ledger pre-populated with the header and the two claims.
+    let ls = temp("steal");
+    let _ = std::fs::remove_file(&ls);
+    let mut body = format!("{}\n", PlanHeader::for_plan(&plan).to_json());
+    body.push_str(&ClaimRecord::new(dead_key.clone(), "dead-worker", 1, 1).to_json());
+    body.push('\n');
+    body.push_str(&ClaimRecord::new(live_key.clone(), "other", now_unix(), 3600).to_json());
+    body.push('\n');
+    std::fs::write(&ls, &body).unwrap();
+
+    let opts = ExecOptions {
+        threads: 2,
+        ledger: Some(ls.clone()),
+        shard: shard0,
+        steal: true,
+        worker: Some("w0".into()),
+        ..Default::default()
+    };
+    let summary = execute(&plan, &opts, &mut []).unwrap();
+    // Everything except the live-leased run completed: own shard, plus
+    // all unclaimed foreign keys, plus the dead worker's expired claim.
+    assert_eq!(summary.n_skipped, 1, "only the live lease is left alone");
+    assert_eq!(summary.records.len(), n - 1);
+    let done: Vec<String> = summary.records.iter().map(|r| r.key()).collect();
+    assert!(done.contains(dead_key), "expired claim was reclaimed");
+    assert!(!done.contains(live_key), "live foreign lease was respected");
+
+    // The thief stamped its own claims into the shared ledger.
+    let led = read_dist_ledger(&ls).unwrap();
+    assert_eq!(led.claims[dead_key].worker, "w0", "reclaim is announced");
+    assert_eq!(led.claims[live_key].worker, "other", "live lease untouched");
+    assert_eq!(led.runs.len(), n - 1);
+
+    std::fs::remove_file(&ls).ok();
+}
+
+#[test]
+fn overlapping_ledgers_dedup_to_bit_identical_tables() {
+    let plan = test_plan();
+    let n = plan.n_runs();
+    let lfull = temp("ovl_full");
+    let la = temp("ovl_a");
+    for p in [&lfull, &la] {
+        let _ = std::fs::remove_file(p);
+    }
+    // One worker ran everything; another (redundantly) ran shard 0 —
+    // every shard-0 run exists twice across the fleet.
+    let full = execute(&plan, &opts_for(&lfull, ShardSpec::solo()), &mut []).unwrap();
+    let a = execute(&plan, &opts_for(&la, ShardSpec::parse("0/2").unwrap()), &mut [])
+        .unwrap();
+    let merged = merge_ledgers(&[&la, &lfull], Some(&plan)).unwrap();
+    assert!(merged.complete());
+    assert_eq!(merged.n_duplicates, a.records.len(), "overlap deduped by key");
+    assert_eq!(merged.records.len(), n);
+    let t1: Vec<String> =
+        build_tables(None, &full.records).unwrap().iter().map(|t| t.render()).collect();
+    let t2: Vec<String> =
+        build_tables(None, &merged.records).unwrap().iter().map(|t| t.render()).collect();
+    assert_eq!(t1, t2, "duplicates must not change a single byte");
+
+    for p in [&lfull, &la] {
+        std::fs::remove_file(p).ok();
+    }
+}

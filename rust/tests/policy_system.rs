@@ -2,7 +2,7 @@
 //! checked on the analytic tier (fast, deterministic).
 
 use nacfl::config::ExperimentConfig;
-use nacfl::exp::{run_cell, Tier};
+use nacfl::exp::{cell_results, execute, ExecOptions, ExperimentPlan, RunRecord, Tier};
 use nacfl::metrics::{gain_vs, Summary};
 use nacfl::netsim::{MarkovChain, NetworkProcess, ScenarioKind};
 use nacfl::policy::{CompressionPolicy, NacFl, OraclePolicy};
@@ -12,7 +12,12 @@ fn cell(scenario: ScenarioKind, seeds: u64) -> Vec<nacfl::exp::CellResult> {
     let mut cfg = ExperimentConfig::paper();
     cfg.scenario = scenario;
     cfg.seeds = (0..seeds).collect();
-    run_cell(&cfg, Tier::Analytic { k_eps: 100.0 }, |_, _, _| {}).unwrap()
+    let plan = ExperimentPlan::run_cell_plan("cell", &cfg, Tier::Analytic { k_eps: 100.0 });
+    // Plan-ordered records keep the per-policy times seed-ordered, which
+    // the sample-path-paired gain metric below relies on.
+    let summary = execute(&plan, &ExecOptions::default(), &mut []).unwrap();
+    let refs: Vec<&RunRecord> = summary.records.iter().collect();
+    cell_results(&refs)
 }
 
 fn mean_time(results: &[nacfl::exp::CellResult], policy_prefix: &str) -> f64 {
