@@ -96,6 +96,23 @@ fn main() {
     println!("{}", s.report());
     report.record("nacfl_choose", &s);
 
+    // The same choose with telemetry enabled (solver timing on): the
+    // delta vs `nacfl_choose` is the observability overhead budget
+    // (DESIGN.md §12), and the solver counters give the workload size
+    // behind every ns/op in this file.
+    let mut pt = nac.clone();
+    pt.set_telemetry(true);
+    let s = bench("nacfl_choose (telemetry on, m=10)", budget, || {
+        black_box(pt.choose(&ctx, &c));
+    });
+    println!("{}", s.report());
+    report.record("nacfl_choose_telemetry", &s);
+    if let Some(st) = pt.solver_stats() {
+        report.record_counter("solver_solves", st.solves);
+        report.record_counter("solver_sweep_candidates", st.candidates);
+        report.record_counter("solver_solve_ns", st.ns);
+    }
+
     // The solver alone: workspace event sweep vs the retained direct
     // reference (same warmed coefficients), so this run witnesses the
     // allocation-free speedup directly.

@@ -39,6 +39,7 @@
 use super::event::EventQueue;
 use super::faults::FaultModel;
 use crate::netsim::{DelayModel, NetworkProcess};
+use crate::obs::Telemetry;
 use crate::policy::{mean_level, CompressionChoice, CompressionPolicy, PolicyCtx, RoundsModel};
 use crate::sim::StoppingRule;
 use crate::util::rng::Rng;
@@ -148,6 +149,17 @@ pub struct DesResult {
     pub late_updates: usize,
     /// Whether the stopping rule fired before the round cap.
     pub converged: bool,
+    /// Delay decomposition: mean-client transmit seconds across every
+    /// transfer *started* (cancelled semi-sync transfers included), net
+    /// of the compute term.  `upload_s + compute_s + wait_s == wall` up
+    /// to float rounding; `wait_s` can go negative under early-close
+    /// disciplines, where started-but-cancelled transfers are charged
+    /// transmit time the wall clock never waited for.
+    pub upload_s: f64,
+    /// Compute term: `theta * tau` per started transfer per client.
+    pub compute_s: f64,
+    /// Remainder `wall - compute_s - upload_s`.
+    pub wait_s: f64,
 }
 
 impl DesResult {
@@ -187,14 +199,30 @@ pub fn simulate_des(
     cfg: &DesConfig,
     fault_rng: Rng,
 ) -> Result<DesResult> {
+    simulate_des_with(ctx, policy, process, cfg, fault_rng, &mut Telemetry::off())
+}
+
+/// [`simulate_des`] with a telemetry handle: counts rounds and popped
+/// events, tracks the event-queue high-water mark, and records the
+/// per-discipline simulated round-duration histogram.  An off handle
+/// makes every telemetry call a no-op; the event core and its float
+/// paths are identical either way.
+pub fn simulate_des_with(
+    ctx: &PolicyCtx,
+    policy: &mut dyn CompressionPolicy,
+    process: &mut dyn NetworkProcess,
+    cfg: &DesConfig,
+    fault_rng: Rng,
+    telem: &mut Telemetry,
+) -> Result<DesResult> {
     if process.dim() == 0 {
         return Err(anyhow!("network process has zero clients"));
     }
     match cfg.discipline {
         Discipline::Async { staleness_exp } => {
-            run_async(ctx, policy, process, cfg, fault_rng, staleness_exp)
+            run_async(ctx, policy, process, cfg, fault_rng, staleness_exp, telem)
         }
-        _ => run_round_based(ctx, policy, process, cfg, fault_rng),
+        _ => run_round_based(ctx, policy, process, cfg, fault_rng, telem),
     }
 }
 
@@ -204,6 +232,7 @@ fn run_round_based(
     process: &mut dyn NetworkProcess,
     cfg: &DesConfig,
     mut rng: Rng,
+    telem: &mut Telemetry,
 ) -> Result<DesResult> {
     let m = process.dim();
     let need = match cfg.discipline {
@@ -217,6 +246,12 @@ fn run_round_based(
         Discipline::Async { .. } => unreachable!("async dispatches to run_async"),
     };
     let tdma = matches!(ctx.delay, DelayModel::TdmaSum { .. });
+    let theta_tau = ctx.delay.theta() * ctx.tau as f64;
+    let round_span = match cfg.discipline {
+        Discipline::Sync => "des.round_s.sync",
+        Discipline::SemiSync { .. } => "des.round_s.semi_sync",
+        Discipline::Async { .. } => unreachable!("async dispatches to run_async"),
+    };
 
     let mut q: EventQueue<usize> = EventQueue::new();
     let mut lost = vec![false; m];
@@ -224,6 +259,8 @@ fn run_round_based(
     // Per-round delivered-choices buffer, reused across rounds.
     let mut delivered: Vec<CompressionChoice> = Vec::with_capacity(m);
     let mut wall = 0.0f64;
+    // Decomposition accumulator (separate from the `wall` float path).
+    let mut delay_sum = 0.0f64;
     let mut rule = StoppingRule::new(cfg.k_eps);
     let mut aggregations = 0usize;
     let mut rounds = 0usize;
@@ -244,6 +281,7 @@ fn run_round_based(
         let mut offset = 0.0f64;
         for j in 0..m {
             let d = ctx.client_delay(choices[j].level, c[j] * cfg.faults.slowdown_of(j));
+            delay_sum += d;
             let at = if tdma {
                 offset += d;
                 offset
@@ -253,6 +291,7 @@ fn run_round_based(
             lost[j] = cfg.faults.draw_drop(&mut rng);
             q.push(at, j);
         }
+        telem.gauge_max("des.queue_high_water", q.len() as u64);
 
         // Pop arrivals until the discipline closes the round.
         for g in got.iter_mut() {
@@ -268,6 +307,9 @@ fn run_round_based(
         }
         late += m - popped;
         wall += dur;
+        telem.count("des.rounds", 1);
+        telem.count("des.events_popped", popped as u64);
+        telem.sim_span(round_span, dur);
 
         // Collect delivered choices in client order: deterministic, and
         // for full delivery the float order matches `PolicyCtx::rho`
@@ -284,6 +326,8 @@ fn run_round_based(
         }
     }
 
+    let compute_s = rounds as f64 * theta_tau;
+    let upload_s = delay_sum / m as f64 - compute_s;
     Ok(DesResult {
         wall,
         rounds,
@@ -294,6 +338,9 @@ fn run_round_based(
         dropped_updates: dropped,
         late_updates: late,
         converged,
+        upload_s,
+        compute_s,
+        wait_s: wall - compute_s - upload_s,
     })
 }
 
@@ -309,7 +356,7 @@ struct AsyncArrival {
 /// Begin one async client-round at `now`: draw the network state, let the
 /// policy pick bits (it sees the full vector, as always), and schedule
 /// the client's arrival.  Returns the across-client mean of the chosen
-/// bits (diagnostics).
+/// bits (diagnostics) and the scheduled transfer delay (decomposition).
 #[allow(clippy::too_many_arguments)]
 fn start_async_round(
     ctx: &PolicyCtx,
@@ -321,7 +368,7 @@ fn start_async_round(
     j: usize,
     now: f64,
     version: u64,
-) -> f64 {
+) -> (f64, f64) {
     let c = process.next_state();
     let choices = policy.choose(ctx, &c);
     let d = ctx.client_delay(choices[j].level, c[j] * faults.slowdown_of(j));
@@ -330,9 +377,10 @@ fn start_async_round(
         now + d,
         AsyncArrival { client: j, read_version: version, choice: choices[j], lost },
     );
-    mean_level(&choices)
+    (mean_level(&choices), d)
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_async(
     ctx: &PolicyCtx,
     policy: &mut dyn CompressionPolicy,
@@ -340,11 +388,15 @@ fn run_async(
     cfg: &DesConfig,
     mut rng: Rng,
     staleness_exp: f64,
+    telem: &mut Telemetry,
 ) -> Result<DesResult> {
     let m = process.dim();
+    let theta_tau = ctx.delay.theta() * ctx.tau as f64;
     let mut q: EventQueue<AsyncArrival> = EventQueue::new();
     let mut version: u64 = 0;
     let mut wall = 0.0f64;
+    // Decomposition accumulator (separate from the `wall` float path).
+    let mut delay_sum = 0.0f64;
     let mut rule = StoppingRule::new(cfg.k_eps);
     let mut aggregations = 0usize;
     let mut rounds = 0usize;
@@ -355,12 +407,18 @@ fn run_async(
     let max_starts = cfg.max_rounds.saturating_mul(m);
 
     for j in 0..m {
-        bits_sum +=
+        let (mb, d) =
             start_async_round(ctx, policy, process, &cfg.faults, &mut rng, &mut q, j, 0.0, version);
+        bits_sum += mb;
+        delay_sum += d;
         rounds += 1;
     }
+    telem.count("des.rounds", m as u64);
+    telem.gauge_max("des.queue_high_water", q.len() as u64);
 
     while let Some((t, arr)) = q.pop() {
+        telem.count("des.events_popped", 1);
+        telem.sim_span("des.round_s.async", t - wall);
         wall = t;
         if arr.lost {
             dropped += 1;
@@ -379,7 +437,7 @@ fn run_async(
             // Budget exhausted: drain nothing further, report unconverged.
             break;
         }
-        bits_sum += start_async_round(
+        let (mb, d) = start_async_round(
             ctx,
             policy,
             process,
@@ -390,9 +448,15 @@ fn run_async(
             t,
             version,
         );
+        bits_sum += mb;
+        delay_sum += d;
         rounds += 1;
+        telem.count("des.rounds", 1);
+        telem.gauge_max("des.queue_high_water", q.len() as u64);
     }
 
+    let compute_s = rounds as f64 / m as f64 * theta_tau;
+    let upload_s = delay_sum / m as f64 - compute_s;
     Ok(DesResult {
         wall,
         rounds,
@@ -403,6 +467,9 @@ fn run_async(
         dropped_updates: dropped,
         late_updates: 0,
         converged,
+        upload_s,
+        compute_s,
+        wait_s: wall - compute_s - upload_s,
     })
 }
 
@@ -501,6 +568,44 @@ mod tests {
         // One aggregation per non-lost arrival; every start eventually
         // arrives or remains in flight at stop.
         assert!(r.aggregations <= r.rounds);
+    }
+
+    #[test]
+    fn decomposition_and_telemetry_leave_the_event_core_untouched() {
+        let ctx = ctx();
+        for disc in [
+            Discipline::Sync,
+            Discipline::SemiSync { k: 6 },
+            Discipline::Async { staleness_exp: 0.5 },
+        ] {
+            let mut p1 = parse_policy("fixed:2").unwrap();
+            let mut p2 = parse_policy("fixed:2").unwrap();
+            let mut n1 = process(6);
+            let mut n2 = process(6);
+            let cfg = DesConfig::new(disc, 60.0);
+            let plain = simulate_des(&ctx, p1.as_mut(), &mut n1, &cfg, Rng::new(2)).unwrap();
+            let mut telem = Telemetry::on();
+            let watched =
+                simulate_des_with(&ctx, p2.as_mut(), &mut n2, &cfg, Rng::new(2), &mut telem)
+                    .unwrap();
+            assert_eq!(plain.wall.to_bits(), watched.wall.to_bits(), "{disc}");
+            assert_eq!(plain.rounds, watched.rounds, "{disc}");
+            let sum = watched.upload_s + watched.compute_s + watched.wait_s;
+            assert!(
+                (sum - watched.wall).abs() <= 1e-9 * watched.wall.abs().max(1.0),
+                "{disc}: {sum} vs {}",
+                watched.wall
+            );
+            assert!(telem.counter("des.events_popped") > 0, "{disc}");
+            assert_eq!(telem.counter("des.rounds"), watched.rounds as u64, "{disc}");
+            assert!(telem.counter("des.queue_high_water") >= 1, "{disc}");
+            let span = match disc {
+                Discipline::Sync => "des.round_s.sync",
+                Discipline::SemiSync { .. } => "des.round_s.semi_sync",
+                Discipline::Async { .. } => "des.round_s.async",
+            };
+            assert!(telem.histogram(span).is_some(), "{disc}");
+        }
     }
 
     #[test]

@@ -35,6 +35,6 @@ pub mod engine;
 pub mod event;
 pub mod faults;
 
-pub use engine::{simulate_des, DesConfig, DesResult, Discipline};
+pub use engine::{simulate_des, simulate_des_with, DesConfig, DesResult, Discipline};
 pub use event::EventQueue;
 pub use faults::FaultModel;

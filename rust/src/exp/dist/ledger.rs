@@ -1,6 +1,6 @@
-//! Distributed ledger line types and the three-way line dispatcher.
+//! Distributed ledger line types and the `"kind"` line dispatcher.
 //!
-//! A distributed ledger is the ordinary campaign JSONL ledger plus two
+//! A distributed ledger is the ordinary campaign JSONL ledger plus
 //! `"kind"`-tagged control line types sharing the same flat-object
 //! grammar (`exp::sink`'s scanner):
 //!
@@ -8,7 +8,10 @@
 //!   campaign identity ([`ExperimentPlan::plan_hash`]) + base-config
 //!   fingerprint + expected run count;
 //! * `"kind":"claim"` — a [`ClaimRecord`]: worker id, wall-clock
-//!   timestamp and lease duration for one pending coordinate key.
+//!   timestamp and lease duration for one pending coordinate key;
+//! * `"kind":"telem"` — an observability line ([`crate::obs::TelemLine`]):
+//!   per-run or campaign-scope counters and histograms, written only
+//!   when telemetry is enabled and never consulted by resume/merge.
 //!
 //! Untagged lines are [`RunRecord`]s exactly as before.  All three are
 //! append-only; readers resolve conflicts by *last-writer-wins per key*
@@ -17,6 +20,7 @@
 
 use crate::exp::plan::ExperimentPlan;
 use crate::exp::sink::{parse_flat_object, JsonVal, RunRecord};
+use crate::obs::TelemLine;
 use crate::util::json;
 use anyhow::{anyhow, Context, Result};
 use std::collections::HashMap;
@@ -155,6 +159,10 @@ pub struct DistLedger {
     /// Run records in file order (duplicates preserved; callers dedup
     /// by key, last wins).
     pub runs: Vec<RunRecord>,
+    /// `"kind":"telem"` observability lines in file order (`crate::obs`;
+    /// invisible to resume/merge keying, consumed by `nacfl top` /
+    /// `nacfl report`).
+    pub telem: Vec<TelemLine>,
     /// Unparseable lines skipped (torn writes, foreign garbage).
     pub n_torn: usize,
     /// Valid-but-outdated schema-1 run lines (pre-`data_seed`); their
@@ -210,6 +218,10 @@ pub fn read_dist_ledger(path: impl AsRef<Path>) -> Result<DistLedger> {
                 Ok(c) => {
                     out.claims.insert(c.key.clone(), c);
                 }
+                Err(_) => out.n_torn += 1,
+            },
+            Some("telem") => match TelemLine::from_obj(&obj) {
+                Ok(t) => out.telem.push(t),
                 Err(_) => out.n_torn += 1,
             },
             Some(_) => out.n_torn += 1,
@@ -278,6 +290,11 @@ mod tests {
         let c1 = ClaimRecord::new("k1", "w1", 10, 60);
         let c2 = ClaimRecord::new("k1", "w2", 20, 60);
         let mut body = format!("{}\n{}\n{}\n", h.to_json(), c1.to_json(), c2.to_json());
+        body.push_str(
+            "{\"schema\":2,\"kind\":\"telem\",\"v\":1,\"scope\":\"run\",\"key\":\"k1\",\
+             \"metric\":\"des.rounds\",\"type\":\"counter\",\"value\":7}",
+        );
+        body.push('\n');
         body.push_str("{\"torn\":tru");
         body.push('\n');
         // A pre-data_seed (schema 1) record: outdated, not corrupted.
@@ -289,6 +306,9 @@ mod tests {
         assert_eq!(led.claims.len(), 1);
         assert_eq!(led.claims["k1"].worker, "w2", "last claim wins");
         assert_eq!(led.runs.len(), 0);
+        assert_eq!(led.telem.len(), 1, "telem lines dispatch to their own bucket");
+        assert_eq!(led.telem[0].metric, "des.rounds");
+        assert_eq!(led.telem[0].counter, Some(7));
         assert_eq!(led.n_torn, 1, "schema-1 lines are legacy, not torn");
         assert_eq!(led.n_legacy, 1);
         std::fs::remove_file(&path).ok();

@@ -193,6 +193,9 @@ mod tests {
             aggregations: 5,
             dropped: 0,
             late: 0,
+            upload_s: wall,
+            compute_s: 0.0,
+            wait_s: 0.0,
             trace: None,
         }
     }

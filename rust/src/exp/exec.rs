@@ -42,14 +42,16 @@ use super::sink::{JsonlSink, ResultSink, RunRecord};
 use crate::config::ExperimentConfig;
 use crate::coordinator::{Coordinator, FailureConfig};
 use crate::data::{partition, Dataset, Partition, PartitionKind};
-use crate::des::{simulate_des, DesConfig, Discipline};
+use crate::des::{simulate_des_with, DesConfig, Discipline};
 use crate::metrics::TableWriter;
+use crate::obs::Telemetry;
 use crate::policy::{PolicyCtx, PolicyEnv, PolicySpec};
 use crate::util::rng::Rng;
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
 use std::path::Path;
 use std::sync::Arc;
+use std::time::Instant;
 
 /// Round cap for DES-tier campaign runs (matches the legacy `nacfl des`
 /// sweep).
@@ -84,12 +86,19 @@ pub struct ExecOptions {
     /// when sharding or stealing; claims are only written when an id is
     /// in effect).
     pub worker: Option<String>,
-    /// Claim lease duration in seconds.  Claims are stamped once per
-    /// batch (not renewed per run), so on a shared steal ledger the
-    /// lease should exceed the expected *batch* duration, not one
-    /// run's — a too-short lease costs duplicated (bit-identical) work,
-    /// never correctness.  Per-run renewal is a ROADMAP follow-on.
+    /// Claim lease duration in seconds.  Claims are stamped at batch
+    /// start and *renewed from the collector thread* whenever half the
+    /// lease has elapsed with runs still pending, so a long batch can
+    /// no longer outlive its lease and be double-executed.  A too-short
+    /// lease still only costs duplicated (bit-identical) work, never
+    /// correctness.
     pub lease_s: u64,
+    /// Collect and stream telemetry: per-run and campaign-scope
+    /// `"kind":"telem"` lines appended to the ledger, solver timing
+    /// enabled on solver-backed policies.  Off by default; with it off
+    /// every telemetry call is a no-op on a null handle and the record
+    /// stream is byte-identical to pre-telemetry builds.
+    pub telemetry: bool,
 }
 
 impl Default for ExecOptions {
@@ -101,6 +110,7 @@ impl Default for ExecOptions {
             steal: false,
             worker: None,
             lease_s: DEFAULT_LEASE_S,
+            telemetry: false,
         }
     }
 }
@@ -276,11 +286,23 @@ pub fn execute(
         .clone()
         .or_else(|| (opts.steal || opts.shard.count > 1).then(default_worker_id));
 
-    let bc = BatchCtx { plan, cells: &cells, ctxs: &ctxs, fp: &fp, threads: opts.threads };
+    // Campaign-scope telemetry (worker liveness, steal accounting,
+    // ledger latency).  Per-run handles are created inside the batch.
+    let mut telem = Telemetry::new(opts.telemetry);
+    let bc = BatchCtx {
+        plan,
+        cells: &cells,
+        ctxs: &ctxs,
+        fp: &fp,
+        threads: opts.threads,
+        telemetry: opts.telemetry,
+        worker: worker.clone(),
+        lease_s: opts.lease_s,
+    };
     let mut data = DataCache::default();
     let mut n_executed = 0usize;
     write_claims(&mut ledger, worker.as_deref(), opts.lease_s, &cells, &mine)?;
-    n_executed += execute_batch(&bc, &mine, &mut data, &mut ledger, sinks, &mut slots)?;
+    n_executed += execute_batch(&bc, &mine, &mut data, &mut ledger, sinks, &mut slots, &mut telem)?;
 
     // Work stealing: adopt other workers' finished runs from the shared
     // ledger, then take over pending keys with no live foreign claim.
@@ -314,15 +336,24 @@ pub fn execute(
                     }
                     match led.claims.get(&key) {
                         Some(c) if c.worker != me && c.live(now) => {}
+                        Some(c) if c.worker != me => {
+                            // Reclaiming a dead worker's expired claim.
+                            telem.observe(
+                                "dist.lease_age_s",
+                                now.saturating_sub(c.ts) as f64,
+                            );
+                            steal.push(i);
+                        }
                         _ => steal.push(i),
                     }
                 }
                 if steal.is_empty() {
                     break;
                 }
+                telem.count("dist.steals", steal.len() as u64);
                 write_claims(&mut ledger, worker.as_deref(), opts.lease_s, &cells, &steal)?;
                 n_executed +=
-                    execute_batch(&bc, &steal, &mut data, &mut ledger, sinks, &mut slots)?;
+                    execute_batch(&bc, &steal, &mut data, &mut ledger, sinks, &mut slots, &mut telem)?;
             }
         }
     }
@@ -338,6 +369,16 @@ pub fn execute(
         }
     }
     let n_skipped = n - records.len();
+    // Stream the campaign-scope telemetry into the ledger, keyed by the
+    // worker id so a multi-worker fleet's lines stay distinguishable.
+    telem.count("exp.runs_completed", n_executed as u64);
+    telem.count("exp.runs_cached", n_cached as u64);
+    if let Some(l) = ledger.as_mut() {
+        let scope_key = worker.as_deref().unwrap_or("local");
+        for line in telem.lines("campaign", scope_key) {
+            l.raw_line(&line.to_json())?;
+        }
+    }
     for s in sinks.iter_mut() {
         s.on_finish(&records)?;
     }
@@ -364,6 +405,12 @@ struct BatchCtx<'a> {
     ctxs: &'a HashMap<String, PolicyCtx>,
     fp: &'a str,
     threads: usize,
+    /// Per-run telemetry handles are live (and stream `"kind":"telem"`
+    /// lines per finished run) iff set.
+    telemetry: bool,
+    /// Claim identity for mid-batch lease renewal (None: no claims).
+    worker: Option<String>,
+    lease_s: u64,
 }
 
 /// Append claim lines for a batch of cells (no-op without a ledger or a
@@ -396,10 +443,12 @@ fn execute_batch(
     ledger: &mut Option<JsonlSink>,
     sinks: &mut [&mut dyn ResultSink],
     slots: &mut [Option<RunRecord>],
+    telem: &mut Telemetry,
 ) -> Result<usize> {
     if idxs.is_empty() {
         return Ok(0);
     }
+    telem.count("exp.runs_started", idxs.len() as u64);
     let (ml, grid): (Vec<usize>, Vec<usize>) = idxs
         .iter()
         .copied()
@@ -407,54 +456,87 @@ fn execute_batch(
 
     if !grid.is_empty() {
         let threads = resolve_threads(bc.threads);
+        // Collector-side lease renewal: whenever half the lease elapses
+        // with runs still pending, re-stamp claims for the remainder so
+        // a long batch cannot outlive its lease and be double-executed.
+        let mut pending_grid: Vec<bool> = vec![true; grid.len()];
+        let mut last_claim = Instant::now();
+        let renew_after_s = bc.lease_s / 2;
         let mut sink_err: Option<anyhow::Error> = None;
         let recs = if threads <= 1 || grid.len() == 1 {
             let mut out = Vec::with_capacity(grid.len());
-            for &i in &grid {
+            for (k, &i) in grid.iter().enumerate() {
                 let cell = &bc.cells[i];
-                let rec =
-                    execute_grid_run(bc.plan, cell, &bc.ctxs[cell.compressor.as_str()], bc.fp)?;
-                emit(ledger, sinks, &rec)?;
+                let rec = execute_grid_run(
+                    bc.plan,
+                    cell,
+                    &bc.ctxs[cell.compressor.as_str()],
+                    bc.fp,
+                    bc.telemetry,
+                )?;
+                emit_timed(ledger, sinks, &rec, telem)?;
+                pending_grid[k] = false;
+                renew_leases(bc, &grid, &pending_grid, &mut last_claim, renew_after_s, ledger, telem)?;
                 out.push(rec);
             }
             out
         } else {
-            run_tasks(
+            let res = run_tasks(
                 grid.len(),
                 threads,
                 |k| {
                     let cell = &bc.cells[grid[k]];
-                    execute_grid_run(bc.plan, cell, &bc.ctxs[cell.compressor.as_str()], bc.fp)
+                    execute_grid_run(
+                        bc.plan,
+                        cell,
+                        &bc.ctxs[cell.compressor.as_str()],
+                        bc.fp,
+                        bc.telemetry,
+                    )
                 },
-                |_, rec| {
+                |k, rec| {
                     // The ledger write is independent of the display
                     // sinks: even after a sink error, finished runs
                     // keep landing in the ledger so the compute already
                     // spent survives into the next (resumed) invocation.
-                    if let Some(l) = ledger.as_mut() {
-                        if let Err(e) = l.on_record(rec) {
-                            if sink_err.is_none() {
-                                sink_err = Some(e);
-                            }
-                            return;
+                    if let Err(e) = emit_timed(ledger, &mut [], rec, telem) {
+                        if sink_err.is_none() {
+                            sink_err = Some(e);
                         }
+                        return;
+                    }
+                    pending_grid[k] = false;
+                    if let Err(e) = renew_leases(
+                        bc,
+                        &grid,
+                        &pending_grid,
+                        &mut last_claim,
+                        renew_after_s,
+                        ledger,
+                        telem,
+                    ) {
+                        if sink_err.is_none() {
+                            sink_err = Some(e);
+                        }
+                        return;
                     }
                     if sink_err.is_none() {
                         for s in sinks.iter_mut() {
-                            if let Err(e) = s.on_record(rec) {
+                            if let Err(e) = s.on_record(&rec.0) {
                                 sink_err = Some(e);
                                 break;
                             }
                         }
                     }
                 },
-            )?
+            )?;
+            res
         };
         if let Some(e) = sink_err {
             return Err(e);
         }
         for (k, rec) in recs.into_iter().enumerate() {
-            slots[grid[k]] = Some(rec);
+            slots[grid[k]] = Some(rec.0);
         }
     }
 
@@ -492,24 +574,75 @@ fn execute_batch(
         rec.rounds = rounds;
         rec.converged = converged;
         rec.aggregations = rounds;
+        // The coordinator does not expose a per-round delay split yet:
+        // the whole wall lands in the undecomposed remainder.
+        rec.upload_s = 0.0;
+        rec.compute_s = 0.0;
+        rec.wait_s = wall;
         rec.trace = Some(trace);
-        emit(ledger, sinks, &rec)?;
-        slots[i] = Some(rec);
+        let run = (rec, Telemetry::off());
+        emit_timed(ledger, sinks, &run, telem)?;
+        slots[i] = Some(run.0);
     }
     Ok(idxs.len())
 }
 
-fn emit(
+/// Write one finished run — its record line, then its per-run telem
+/// lines — to the ledger (append timed into `telem` when telemetry is
+/// on), then fan the record out to the display sinks.
+fn emit_timed(
     ledger: &mut Option<JsonlSink>,
     sinks: &mut [&mut dyn ResultSink],
-    rec: &RunRecord,
+    run: &(RunRecord, Telemetry),
+    telem: &mut Telemetry,
 ) -> Result<()> {
+    let (rec, run_telem) = run;
     if let Some(l) = ledger.as_mut() {
+        let t0 = telem.is_on().then(Instant::now);
         l.on_record(rec)?;
+        for line in run_telem.lines("run", &rec.key()) {
+            l.raw_line(&line.to_json())?;
+        }
+        if let Some(t0) = t0 {
+            telem.observe("exp.ledger_append_ns", t0.elapsed().as_nanos() as f64);
+        }
     }
     for s in sinks.iter_mut() {
         s.on_record(rec)?;
     }
+    Ok(())
+}
+
+/// Collector-thread lease renewal: once at least half the lease has
+/// elapsed since the last claim stamp, re-stamp claims for the batch
+/// members still pending (no-op without a worker id and ledger).
+fn renew_leases(
+    bc: &BatchCtx<'_>,
+    grid: &[usize],
+    pending: &[bool],
+    last_claim: &mut Instant,
+    renew_after_s: u64,
+    ledger: &mut Option<JsonlSink>,
+    telem: &mut Telemetry,
+) -> Result<()> {
+    let (Some(w), Some(l)) = (bc.worker.as_deref(), ledger.as_mut()) else {
+        return Ok(());
+    };
+    if last_claim.elapsed().as_secs() < renew_after_s {
+        return Ok(());
+    }
+    let now = now_unix();
+    let mut renewed = 0u64;
+    for (k, &i) in grid.iter().enumerate() {
+        if pending[k] {
+            l.raw_line(&ClaimRecord::new(bc.cells[i].key(), w, now, bc.lease_s).to_json())?;
+            renewed += 1;
+        }
+    }
+    if renewed > 0 {
+        telem.count("dist.lease_renewals", renewed);
+    }
+    *last_claim = Instant::now();
     Ok(())
 }
 
@@ -530,6 +663,9 @@ fn base_record(plan: &ExperimentPlan, cell: &PlanCell, fp: &str) -> RunRecord {
         aggregations: 0,
         dropped: 0,
         late: 0,
+        upload_s: f64::NAN,
+        compute_s: f64::NAN,
+        wait_s: f64::NAN,
         trace: None,
     }
 }
@@ -541,30 +677,38 @@ fn fault_stream_id(scenario: &str, discipline: &str) -> u64 {
     crate::util::rng::fnv1a(format!("{scenario}|{discipline}").as_bytes())
 }
 
-/// One analytic- or DES-tier run (the parallel task body).
+/// One analytic- or DES-tier run (the parallel task body).  Returns the
+/// record together with the run's own telemetry handle (a no-op null
+/// handle unless `telemetry`), which the collector streams to the
+/// ledger as per-run `"kind":"telem"` lines.
 fn execute_grid_run(
     plan: &ExperimentPlan,
     cell: &PlanCell,
     ctx: &PolicyCtx,
     fp: &str,
-) -> Result<RunRecord> {
+    telemetry: bool,
+) -> Result<(RunRecord, Telemetry)> {
     let k_eps = match cell.tier {
         Tier::Analytic { k_eps } => k_eps,
         Tier::Ml => return Err(anyhow!("ml cells are not grid tasks")),
     };
     let cfg = plan.cell_config(cell);
+    let mut telem = Telemetry::new(telemetry);
     let mut rec = base_record(plan, cell, fp);
     if cell.discipline == Discipline::Sync && !plan.has_faults() {
         // The exact single-run float path the legacy tables use.
-        let (wall, rounds) =
-            run_analytic_once(ctx, &cfg, &cell.policy, cell.seed, k_eps)?;
-        rec.wall = wall;
-        rec.rounds = rounds;
-        rec.converged = rounds < ANALYTIC_ROUND_CAP;
-        rec.aggregations = rounds;
+        let r = run_analytic_once(ctx, &cfg, &cell.policy, cell.seed, k_eps, &mut telem)?;
+        rec.wall = r.wall;
+        rec.rounds = r.rounds;
+        rec.converged = r.rounds < ANALYTIC_ROUND_CAP;
+        rec.aggregations = r.rounds;
+        rec.upload_s = r.upload_s;
+        rec.compute_s = r.compute_s;
+        rec.wait_s = r.wait_s;
     } else {
         let env = PolicyEnv::for_cell(ctx, cfg.scenario, cfg.m, cell.seed);
         let mut policy = PolicySpec::parse(&cell.policy)?.build(&env)?;
+        policy.set_telemetry(telem.is_on());
         let mut process = cfg.congestion_process(cell.seed)?;
         let des = DesConfig {
             discipline: cell.discipline,
@@ -574,15 +718,24 @@ fn execute_grid_run(
         };
         let fault_rng = Rng::new(cell.seed)
             .derive("des-fault", fault_stream_id(&rec.scenario, &rec.discipline));
-        let r = simulate_des(ctx, policy.as_mut(), &mut process, &des, fault_rng)?;
+        let r =
+            simulate_des_with(ctx, policy.as_mut(), &mut process, &des, fault_rng, &mut telem)?;
+        if let Some(s) = policy.solver_stats() {
+            telem.count("solver.solves", s.solves);
+            telem.count("solver.sweep_candidates", s.candidates);
+            telem.count("solver.solve_ns", s.ns);
+        }
         rec.wall = r.wall;
         rec.rounds = r.rounds;
         rec.converged = r.converged;
         rec.aggregations = r.aggregations;
         rec.dropped = r.dropped_updates;
         rec.late = r.late_updates;
+        rec.upload_s = r.upload_s;
+        rec.compute_s = r.compute_s;
+        rec.wait_s = r.wait_s;
     }
-    Ok(rec)
+    Ok((rec, telem))
 }
 
 /// Merged sweep-style table over a finished campaign: one row per table

@@ -89,6 +89,12 @@ pub struct ExperimentPlan {
     /// data cache in `exp::exec`.
     pub data_seeds: Vec<u64>,
     pub seeds: Vec<u64>,
+    /// Default for [`crate::exp::ExecOptions::telemetry`] (`[campaign]
+    /// telemetry` key; the `--telemetry` flag forces it on).  Not part
+    /// of the plan identity: it changes what observability lines are
+    /// streamed, never a result byte, so toggling it neither invalidates
+    /// a ledger nor re-executes a run.
+    pub telemetry: bool,
 }
 
 /// Keys accepted in a `[campaign]` manifest section.
@@ -101,6 +107,7 @@ const CAMPAIGN_KEYS: &[&str] = &[
     "policies",
     "data_seeds",
     "seeds",
+    "telemetry",
 ];
 
 impl ExperimentPlan {
@@ -117,6 +124,7 @@ impl ExperimentPlan {
             policies: None,
             data_seeds: None,
             seeds: None,
+            telemetry: None,
         }
     }
 
@@ -139,6 +147,7 @@ impl ExperimentPlan {
             policies: base.policies.clone(),
             data_seeds: vec![base.data_seed],
             seeds: base.seeds.clone(),
+            telemetry: false,
             base,
         }
     }
@@ -157,6 +166,7 @@ impl ExperimentPlan {
             policies: cfg.policies.clone(),
             data_seeds: vec![cfg.data_seed],
             seeds: cfg.seeds.clone(),
+            telemetry: false,
         }
     }
 
@@ -453,6 +463,12 @@ impl ExperimentPlan {
         if let Some(xs) = seed_list("data_seeds")? {
             b = b.data_seeds(xs);
         }
+        if let Some(v) = sec.get("telemetry") {
+            let on = v
+                .as_bool()
+                .ok_or_else(|| anyhow!("campaign::telemetry must be a boolean"))?;
+            b = b.telemetry(on);
+        }
         b.build()
     }
 
@@ -482,6 +498,12 @@ impl ExperimentPlan {
         sec.insert("policies".to_string(), strs(self.policies.clone()));
         sec.insert("data_seeds".to_string(), ints(&self.data_seeds));
         sec.insert("seeds".to_string(), ints(&self.seeds));
+        // Emitted only when set: the default-off key stays out of
+        // manifests so Display round-trips byte-identically on pre-obs
+        // plans.
+        if self.telemetry {
+            sec.insert("telemetry".to_string(), Value::Bool(true));
+        }
         let mut doc = self.base.to_doc();
         doc.insert("campaign".to_string(), sec);
         doc
@@ -514,6 +536,7 @@ pub struct PlanBuilder {
     policies: Option<Vec<String>>,
     data_seeds: Option<Vec<u64>>,
     seeds: Option<Vec<u64>>,
+    telemetry: Option<bool>,
 }
 
 impl PlanBuilder {
@@ -565,6 +588,12 @@ impl PlanBuilder {
         self
     }
 
+    /// Campaign-default telemetry collection (off unless set).
+    pub fn telemetry(mut self, on: bool) -> Self {
+        self.telemetry = Some(on);
+        self
+    }
+
     /// Resolve defaults from the base and validate.
     pub fn build(self) -> Result<ExperimentPlan> {
         let base = self.base;
@@ -581,6 +610,7 @@ impl PlanBuilder {
             policies: self.policies.unwrap_or_else(|| base.policies.clone()),
             data_seeds: self.data_seeds.unwrap_or_else(|| vec![base.data_seed]),
             seeds: self.seeds.unwrap_or_else(|| base.seeds.clone()),
+            telemetry: self.telemetry.unwrap_or(false),
             base,
         };
         plan.validate()?;

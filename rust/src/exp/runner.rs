@@ -24,8 +24,9 @@
 use crate::config::ExperimentConfig;
 use crate::data::{mnist, synth, Dataset};
 use crate::metrics::{gain_vs, RunTrace, Summary, TableWriter};
+use crate::obs::Telemetry;
 use crate::policy::{PolicyCtx, PolicyEnv, PolicySpec};
-use crate::sim::simulate;
+use crate::sim::{Session, SimResult};
 use crate::util::spec::Spec;
 use anyhow::Result;
 use std::sync::Arc;
@@ -35,19 +36,32 @@ pub(crate) const ANALYTIC_ROUND_CAP: usize = 10_000_000;
 
 /// One analytic-tier run for (policy spec, seed) — the single float
 /// path of every analytic cell (`exp::exec` routes through it), so no
-/// two executors can ever diverge.
+/// two executors can ever diverge.  The telemetry handle observes the
+/// round loop and (for solver-backed policies) collects solver stats;
+/// an off handle leaves the float path exactly as before.
 pub(crate) fn run_analytic_once(
     ctx: &PolicyCtx,
     cfg: &ExperimentConfig,
     spec: &str,
     seed: u64,
     k_eps: f64,
-) -> Result<(f64, usize)> {
+    telem: &mut Telemetry,
+) -> Result<SimResult> {
     let env = PolicyEnv::for_cell(ctx, cfg.scenario, cfg.m, seed);
     let mut policy = PolicySpec::parse(spec)?.build(&env)?;
+    policy.set_telemetry(telem.is_on());
     let mut process = cfg.congestion_process(seed)?;
-    let r = simulate(ctx, policy.as_mut(), &mut process, k_eps, ANALYTIC_ROUND_CAP);
-    Ok((r.wall, r.rounds))
+    let r = Session::new(ctx, k_eps, ANALYTIC_ROUND_CAP).run_with(
+        policy.as_mut(),
+        &mut process,
+        telem,
+    );
+    if let Some(s) = policy.solver_stats() {
+        telem.count("solver.solves", s.solves);
+        telem.count("solver.sweep_candidates", s.candidates);
+        telem.count("solver.solve_ns", s.ns);
+    }
+    Ok(r)
 }
 
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -204,9 +218,17 @@ mod tests {
                 let mut times = Vec::new();
                 let mut rounds = Vec::new();
                 for &seed in &cfg.seeds {
-                    let (wall, r) = run_analytic_once(&ctx, cfg, spec, seed, k_eps).unwrap();
-                    times.push(wall);
-                    rounds.push(r);
+                    let r = run_analytic_once(
+                        &ctx,
+                        cfg,
+                        spec,
+                        seed,
+                        k_eps,
+                        &mut Telemetry::off(),
+                    )
+                    .unwrap();
+                    times.push(r.wall);
+                    rounds.push(r.rounds);
                 }
                 CellResult {
                     policy: spec.clone(),

@@ -65,6 +65,19 @@ pub struct RunRecord {
     pub dropped: usize,
     /// DES only: updates abandoned at early round close.
     pub late: usize,
+    /// Delay decomposition (DESIGN.md §12): simulated seconds the *mean
+    /// client* spent transmitting updates.  Always computed (telemetry
+    /// on or off); `upload_s + compute_s + wait_s == wall` to 1e-9.
+    pub upload_s: f64,
+    /// Mean-client simulated compute seconds (`theta * tau` per round;
+    /// 0 under the paper's default `theta = 0`).
+    pub compute_s: f64,
+    /// The remainder: simulated seconds the mean client spent waiting
+    /// for stragglers / round close.  Negative under early-close
+    /// disciplines (semi-sync/async), where abandoned transfers keep
+    /// transmitting past the round boundary.  ML-tier runs put their
+    /// whole (undecomposed) wall here.
+    pub wait_s: f64,
     /// ML tier only: the full trace (not serialized to the ledger).
     pub trace: Option<RunTrace>,
 }
@@ -92,7 +105,7 @@ impl RunRecord {
             "{{\"schema\":2,\"campaign\":{},\"scenario\":{},\"compressor\":{},\"tier\":{},\
              \"discipline\":{},\"policy\":{},\"data_seed\":{},\"seed\":{},\"config\":{},\
              \"wall\":{},\"rounds\":{},\"converged\":{},\"aggregations\":{},\"dropped\":{},\
-             \"late\":{}}}",
+             \"late\":{},\"upload_s\":{},\"compute_s\":{},\"wait_s\":{}}}",
             json::string(&self.campaign),
             json::string(&self.scenario),
             json::string(&self.compressor),
@@ -108,6 +121,9 @@ impl RunRecord {
             self.aggregations,
             self.dropped,
             self.late,
+            json::num(self.upload_s),
+            json::num(self.compute_s),
+            json::num(self.wait_s),
         )
     }
 
@@ -148,6 +164,15 @@ impl RunRecord {
                 _ => Err(anyhow!("ledger line missing bool field `{k}`")),
             }
         };
+        // Decomposition fields arrived mid-schema-2 (DESIGN.md §12):
+        // absent on older lines, which stay resumable — a missing field
+        // degrades to NaN, never to a re-executed run.
+        let n_opt = |k: &str| -> f64 {
+            match obj.get(k) {
+                Some(JsonVal::Num(v)) => *v,
+                _ => f64::NAN,
+            }
+        };
         match obj.get("schema") {
             Some(JsonVal::Num(v)) if *v == 2.0 => {}
             Some(JsonVal::Num(v)) if *v == 1.0 => {
@@ -173,6 +198,9 @@ impl RunRecord {
             aggregations: u("aggregations")? as usize,
             dropped: u("dropped")? as usize,
             late: u("late")? as usize,
+            upload_s: n_opt("upload_s"),
+            compute_s: n_opt("compute_s"),
+            wait_s: n_opt("wait_s"),
             trace: None,
         })
     }
@@ -458,7 +486,7 @@ impl CsvSink {
         writeln!(
             out,
             "campaign,scenario,compressor,tier,discipline,policy,data_seed,seed,wall,rounds,\
-             converged,aggregations,dropped,late"
+             converged,aggregations,dropped,late,upload_s,compute_s,wait_s"
         )?;
         Ok(CsvSink { out })
     }
@@ -468,7 +496,7 @@ impl ResultSink for CsvSink {
     fn on_record(&mut self, rec: &RunRecord) -> Result<()> {
         writeln!(
             self.out,
-            "{},{},{},{},{},{},{},{},{:?},{},{},{},{},{}",
+            "{},{},{},{},{},{},{},{},{:?},{},{},{},{},{},{:?},{:?},{:?}",
             csv_escape(&rec.campaign),
             csv_escape(&rec.scenario),
             csv_escape(&rec.compressor),
@@ -483,6 +511,9 @@ impl ResultSink for CsvSink {
             rec.aggregations,
             rec.dropped,
             rec.late,
+            rec.upload_s,
+            rec.compute_s,
+            rec.wait_s,
         )?;
         Ok(())
     }
@@ -690,6 +721,9 @@ mod tests {
             aggregations: 7,
             dropped: 0,
             late: 0,
+            upload_s: 0.75 * wall,
+            compute_s: 0.0,
+            wait_s: 0.25 * wall,
             trace: None,
         }
     }
@@ -709,6 +743,24 @@ mod tests {
         assert_eq!(back.rounds, r.rounds);
         assert!(back.converged);
         assert_eq!(back.key(), r.key());
+        assert_eq!(back.upload_s.to_bits(), r.upload_s.to_bits());
+        assert_eq!(back.compute_s.to_bits(), r.compute_s.to_bits());
+        assert_eq!(back.wait_s.to_bits(), r.wait_s.to_bits());
+    }
+
+    #[test]
+    fn pre_decomposition_schema2_lines_stay_parseable() {
+        // Ledgers written before the delay decomposition existed lack
+        // upload_s/compute_s/wait_s; they must still resume (NaN fields)
+        // rather than force a re-execution of every run.
+        let line = "{\"schema\":2,\"campaign\":\"t\",\"scenario\":\"homog:2\",\
+                    \"compressor\":\"quant:inf\",\"tier\":\"sim:100\",\"discipline\":\"sync\",\
+                    \"policy\":\"fixed:2\",\"data_seed\":7,\"seed\":0,\"config\":\"deadbeef\",\
+                    \"wall\":1.5,\"rounds\":7,\"converged\":true,\"aggregations\":7,\
+                    \"dropped\":0,\"late\":0}";
+        let back = RunRecord::from_json(line).unwrap();
+        assert_eq!(back.wall, 1.5);
+        assert!(back.upload_s.is_nan() && back.compute_s.is_nan() && back.wait_s.is_nan());
     }
 
     #[test]

@@ -13,7 +13,11 @@
 //!   work-stealing execution engine, streaming `RunRecord` sinks with a
 //!   resumable JSONL ledger, and distributed campaign execution —
 //!   plan-identity headers, `--shard i/n` hash sharding with
-//!   claim/lease work stealing, and cross-machine `nacfl merge`.
+//!   claim/lease work stealing, and cross-machine `nacfl merge` — plus
+//!   the telemetry subsystem (`obs`): counters / log-bucket histograms
+//!   / spans threaded through the hot layers, `"kind":"telem"` ledger
+//!   lines, per-run delay decomposition, and the `nacfl top` /
+//!   `nacfl report` observability surfaces.
 //! * **L2/L1 (`python/compile`)** — FedCOM-V compute graphs + Pallas
 //!   quantizer/dense kernels, AOT-lowered once to `artifacts/*.hlo.txt`.
 //! * **runtime** — PJRT CPU loader/executor for those artifacts; python
@@ -30,6 +34,7 @@ pub mod fl;
 pub mod metrics;
 pub mod model;
 pub mod netsim;
+pub mod obs;
 pub mod policy;
 pub mod quant;
 pub mod runtime;

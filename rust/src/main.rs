@@ -3,6 +3,8 @@
 //! Subcommands:
 //!   run <plan.toml>                 execute a declarative campaign manifest
 //!   merge <a.jsonl> <b.jsonl> ...   merge fleet ledgers into one campaign
+//!   top <ledger.jsonl>              live fleet TUI over a (shared) ledger
+//!   report <a.jsonl> ...            offline campaign health report
 //!   exp <table1..table4|theorem1|fig3|all>   regenerate a paper table / figure
 //!   train                           one full FedCOM-V training run
 //!   sim                             one analytic-tier cell (fast)
@@ -42,6 +44,9 @@
 //!   nacfl run plan.toml --shard 0/2 --ledger w0.jsonl   # machine A
 //!   nacfl run plan.toml --shard 1/2 --ledger w1.jsonl   # machine B
 //!   nacfl merge w0.jsonl w1.jsonl --plan plan.toml --output merged.jsonl
+//!   nacfl run plan.toml --telemetry             # stream "kind":"telem" lines
+//!   nacfl top results/campaign.jsonl --plan plan.toml   # watch the fleet live
+//!   nacfl report w0.jsonl w1.jsonl --plan plan.toml     # health + coverage
 //!   nacfl sim --scenario perf:4 --seeds 20
 //!   nacfl des --scenario heterog --discipline semi-sync:7 --stragglers 8,9 --straggle-mult 8
 //!   nacfl exp theorem1 --tier sim --seeds 10 --out results
@@ -98,9 +103,13 @@ fn flags() -> Vec<nacfl::util::cli::FlagSpec> {
         flag("worker", "worker id stamped on ledger claims (default <host>-pid<n>-<nonce>)", None),
         flag("lease", "claim lease seconds before a silent worker counts as dead", Some("600")),
         flag("emit-manifest", "write the fully-resolved manifest and exit (run only)", None),
-        flag("plan", "campaign manifest for coverage checks + tables (merge only)", None),
+        flag("plan", "campaign manifest for coverage checks + tables (merge/top/report)", None),
         flag("output", "merged ledger path (merge only)", None),
         flag("csv", "merged per-run CSV path (merge only)", None),
+        bool_flag("telemetry", "collect + stream \"kind\":\"telem\" observability lines (run only)"),
+        flag("interval", "refresh seconds between frames (top only)", Some("1")),
+        flag("frames", "stop after N frames, 0 = until complete (top only)", Some("0")),
+        bool_flag("once", "render a single frame and exit (top only)"),
         bool_flag("quiet", "suppress per-run progress"),
     ]
 }
@@ -251,6 +260,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         steal: args.get_bool("steal"),
         worker: args.get("worker").map(str::to_string),
         lease_s: args.get_u64("lease")?,
+        telemetry: args.get_bool("telemetry") || plan.telemetry,
     };
     let summary = execute(&plan, &opts, &mut [&mut progress, &mut tables, &mut csv])?;
     if summary.n_skipped == 0 {
@@ -336,6 +346,52 @@ fn cmd_merge(args: &Args) -> Result<()> {
                 &outcome.missing[..show]
             );
         }
+    }
+    Ok(())
+}
+
+/// `nacfl top <ledger.jsonl>`: live fleet TUI — tails the (possibly
+/// multi-worker) ledger and redraws per-group completion bars, running
+/// means, worker liveness/lease ages and a wall-per-run canvas until
+/// the campaign completes.  Safe to start before the ledger exists.
+fn cmd_top(args: &Args) -> Result<()> {
+    let path = args.positionals.first().ok_or_else(|| {
+        anyhow::anyhow!(
+            "usage: nacfl top <ledger.jsonl> [--plan plan.toml] [--interval s] \
+             [--frames n] [--once]"
+        )
+    })?;
+    let plan = match args.get("plan") {
+        Some(p) => Some(ExperimentPlan::load(p)?),
+        None => None,
+    };
+    nacfl::obs::top::run_top(
+        std::path::Path::new(path),
+        plan.as_ref(),
+        args.get_f64("interval")?,
+        args.get_usize("frames")?,
+        args.get_bool("once"),
+    )
+}
+
+/// `nacfl report <a.jsonl> ...`: offline campaign health report —
+/// throughput and wall stats, delay decomposition, straggler histogram,
+/// steal/duplicate/torn accounting, aggregated telemetry, and coverage
+/// against `--plan` (nonzero exit on gaps).
+fn cmd_report(args: &Args) -> Result<()> {
+    if args.positionals.is_empty() {
+        anyhow::bail!("usage: nacfl report <a.jsonl> [b.jsonl ...] [--plan plan.toml]");
+    }
+    let plan = match args.get("plan") {
+        Some(p) => Some(ExperimentPlan::load(p)?),
+        None => None,
+    };
+    let paths: Vec<&std::path::Path> =
+        args.positionals.iter().map(std::path::Path::new).collect();
+    let report = nacfl::obs::report::run_report(&paths, plan.as_ref())?;
+    print!("{}", report.text);
+    if plan.is_some() && report.gaps > 0 {
+        anyhow::bail!("coverage incomplete: {} run(s) missing", report.gaps);
     }
     Ok(())
 }
@@ -613,6 +669,8 @@ fn main() {
     let subcommands = [
         ("run", "execute a declarative [campaign] manifest (resumes; --shard i/n to split)"),
         ("merge", "merge fleet ledgers: validate headers, dedup runs, render tables"),
+        ("top", "live fleet TUI: tail a campaign ledger, bars + workers + telemetry"),
+        ("report", "offline health report: coverage, stragglers, telemetry rollup"),
         ("exp", "regenerate a paper table/figure (table1..table4, theorem1, fig3, all)"),
         ("train", "one full FedCOM-V training run"),
         ("sim", "one analytic-tier cell"),
@@ -623,6 +681,8 @@ fn main() {
     let result = match args.subcommand.as_deref() {
         Some("run") => cmd_run(&args),
         Some("merge") => cmd_merge(&args),
+        Some("top") => cmd_top(&args),
+        Some("report") => cmd_report(&args),
         Some("exp") => {
             let which = args
                 .positionals

@@ -1,0 +1,599 @@
+//! Observability: counters, log-bucket histograms, spans, and the
+//! `"kind":"telem"` ledger line (DESIGN.md §12).
+//!
+//! The paper's objective is *wall-clock training time*, but until this
+//! module the platform recorded exactly one end-of-run scalar per cell.
+//! [`Telemetry`] is a zero-dependency, allocation-conscious handle
+//! threaded through the four hot layers (`des::engine`, `policy::
+//! solver`, `sim::Session`, `exp::exec`/`exp::dist`):
+//!
+//! * **counters** — monotone `u64` sums under `&'static str` names
+//!   (`des.events_popped`, `exp.runs_completed`, …) plus max-gauges
+//!   (`des.queue_high_water`);
+//! * **histograms** — fixed 64-bucket base-2 log histograms
+//!   ([`Histogram`]): bucket `i` covers `[2^(i-32), 2^(i-31))`, so one
+//!   array spans nanoseconds to days with no configuration and no
+//!   allocation;
+//! * **spans** — [`Telemetry::span_begin`]/[`Telemetry::span_end`]
+//!   measure monotonic wall time (ns) into a histogram per span name;
+//!   [`Telemetry::sim_span`] records *simulated*-seconds durations the
+//!   same way (the engines' per-round breakdown).
+//!
+//! The handle is **runtime-off by default**: [`Telemetry::off`] holds no
+//! allocation and every method is one branch on a `None` — the engines
+//! keep their bit-identical, allocation-free hot paths (pinned by
+//! `tests/obs_system.rs`).  When enabled, per-run aggregates stream into
+//! the campaign ledger as flat `"kind":"telem"` JSONL lines
+//! ([`TelemLine`]) which the resume/merge machinery ignores by
+//! construction (every reader dispatches on `"kind"`), and `nacfl top` /
+//! `nacfl report` (this module's [`top`] / [`report`]) read them back.
+
+pub mod report;
+pub mod top;
+
+use crate::util::json;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// Number of log-2 buckets in a [`Histogram`].  Bucket `i` covers
+/// `[2^(i-32), 2^(i-31))`; values `<= 0` (and sub-`2^-32` values) land
+/// in bucket 0, values `>= 2^31` clamp into the last bucket.
+pub const N_BUCKETS: usize = 64;
+
+/// Allocation-free log-2 bucket histogram (count / sum / min / max +
+/// fixed bucket array).  `#[derive(Default)]` would zero min/max, so the
+/// empty state is constructed explicitly.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Histogram {
+    pub count: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+    pub buckets: [u64; N_BUCKETS],
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            buckets: [0; N_BUCKETS],
+        }
+    }
+}
+
+/// The bucket index for a value: `floor(log2(v)) + 32`, clamped to the
+/// array.  Non-positive and non-finite values go to bucket 0.
+pub fn bucket_of(v: f64) -> usize {
+    if !(v.is_finite() && v > 0.0) {
+        return 0;
+    }
+    (v.log2().floor() as i64 + 32).clamp(0, N_BUCKETS as i64 - 1) as usize
+}
+
+impl Histogram {
+    pub fn observe(&mut self, v: f64) {
+        if v.is_nan() {
+            return;
+        }
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        self.buckets[bucket_of(v)] += 1;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Fold another histogram into this one (report aggregation across
+    /// ledgers / workers).
+    pub fn merge(&mut self, other: &Histogram) {
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+    }
+
+    /// Sparse `"idx:count,idx:count"` form (the ledger is flat JSON, so
+    /// the bucket array travels as one string).
+    fn buckets_compact(&self) -> String {
+        let mut out = String::new();
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if !out.is_empty() {
+                out.push(',');
+            }
+            out.push_str(&format!("{i}:{c}"));
+        }
+        out
+    }
+
+    fn from_compact(s: &str) -> Result<[u64; N_BUCKETS]> {
+        let mut buckets = [0u64; N_BUCKETS];
+        if s.is_empty() {
+            return Ok(buckets);
+        }
+        for part in s.split(',') {
+            let (i, c) = part
+                .split_once(':')
+                .ok_or_else(|| anyhow!("bad bucket entry `{part}`"))?;
+            let i: usize = i.parse().map_err(|e| anyhow!("bad bucket index `{i}`: {e}"))?;
+            if i >= N_BUCKETS {
+                return Err(anyhow!("bucket index {i} out of range"));
+            }
+            buckets[i] = c.parse().map_err(|e| anyhow!("bad bucket count `{c}`: {e}"))?;
+        }
+        Ok(buckets)
+    }
+}
+
+/// Everything a live handle tracks.  Kept behind a `Box` so the
+/// off-state [`Telemetry`] is a single `None` word.
+#[derive(Clone, Debug, Default)]
+struct Inner {
+    counters: Vec<(&'static str, u64)>,
+    maxima: Vec<(&'static str, u64)>,
+    hists: Vec<(&'static str, Histogram)>,
+    /// Open wall-clock spans, LIFO.
+    open: Vec<(&'static str, Instant)>,
+    /// `span_end` calls that did not match the innermost open span.
+    mismatches: u64,
+}
+
+fn bump(table: &mut Vec<(&'static str, u64)>, name: &'static str, delta: u64, max: bool) {
+    for (k, v) in table.iter_mut() {
+        if *k == name {
+            *v = if max { (*v).max(delta) } else { *v + delta };
+            return;
+        }
+    }
+    table.push((name, delta));
+}
+
+/// The telemetry handle.  [`Telemetry::off`] is free to construct and
+/// every method on it is a no-op; [`Telemetry::on`] allocates one inner
+/// block and small name-keyed tables (linear scan — the metric
+/// namespace is a few dozen static names, not a registry).
+#[derive(Clone, Debug, Default)]
+pub struct Telemetry {
+    inner: Option<Box<Inner>>,
+}
+
+impl Telemetry {
+    /// The disabled handle: no allocation, every method a no-op.
+    pub fn off() -> Self {
+        Telemetry { inner: None }
+    }
+
+    /// An enabled handle.
+    pub fn on() -> Self {
+        Telemetry { inner: Some(Box::default()) }
+    }
+
+    /// Enabled (`on`) or disabled (`off`) by flag.
+    pub fn new(enabled: bool) -> Self {
+        if enabled {
+            Self::on()
+        } else {
+            Self::off()
+        }
+    }
+
+    pub fn is_on(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Add `delta` to the counter `name`.
+    pub fn count(&mut self, name: &'static str, delta: u64) {
+        if let Some(inner) = &mut self.inner {
+            bump(&mut inner.counters, name, delta, false);
+        }
+    }
+
+    /// Track the maximum of `v` seen under `name` (queue high-water
+    /// marks and the like; serialized as a counter line).
+    pub fn gauge_max(&mut self, name: &'static str, v: u64) {
+        if let Some(inner) = &mut self.inner {
+            bump(&mut inner.maxima, name, v, true);
+        }
+    }
+
+    /// Record `v` into the histogram `name`.
+    pub fn observe(&mut self, name: &'static str, v: f64) {
+        if let Some(inner) = &mut self.inner {
+            hist_mut(&mut inner.hists, name).observe(v);
+        }
+    }
+
+    /// Open a monotonic-clock span.  Spans nest LIFO; the elapsed
+    /// nanoseconds are recorded into the histogram `name` on the
+    /// matching [`Telemetry::span_end`].
+    pub fn span_begin(&mut self, name: &'static str) {
+        if let Some(inner) = &mut self.inner {
+            inner.open.push((name, Instant::now()));
+        }
+    }
+
+    /// Close the innermost open span.  A `name` that does not match the
+    /// innermost span (or an empty stack) increments a mismatch counter
+    /// instead of panicking — telemetry must never take the engine down.
+    pub fn span_end(&mut self, name: &'static str) {
+        if let Some(inner) = &mut self.inner {
+            match inner.open.last() {
+                Some((open_name, _)) if *open_name == name => {
+                    let (_, t0) = inner.open.pop().unwrap();
+                    let ns = t0.elapsed().as_nanos().min(u64::MAX as u128) as f64;
+                    hist_mut(&mut inner.hists, name).observe(ns);
+                }
+                _ => inner.mismatches += 1,
+            }
+        }
+    }
+
+    /// Record a *simulated-time* span: `seconds` of simulated wall time
+    /// attributed to `name` (one histogram observation).
+    pub fn sim_span(&mut self, name: &'static str, seconds: f64) {
+        self.observe(name, seconds);
+    }
+
+    /// Current value of a counter (0 when off / never bumped).
+    pub fn counter(&self, name: &str) -> u64 {
+        let Some(inner) = &self.inner else { return 0 };
+        inner
+            .counters
+            .iter()
+            .chain(inner.maxima.iter())
+            .find(|(k, _)| *k == name)
+            .map(|(_, v)| *v)
+            .unwrap_or(0)
+    }
+
+    /// The histogram under `name`, if any value was observed.
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.inner
+            .as_ref()?
+            .hists
+            .iter()
+            .find(|(k, h)| *k == name && h.count > 0)
+            .map(|(_, h)| h)
+    }
+
+    /// Mismatched `span_end` calls (0 means the span nesting was clean).
+    pub fn span_mismatches(&self) -> u64 {
+        self.inner.as_ref().map(|i| i.mismatches).unwrap_or(0)
+    }
+
+    /// Export every non-empty metric as a [`TelemLine`] under the given
+    /// scope/key (insertion order — deterministic for a deterministic
+    /// engine flow).  Still-open spans are NOT flushed; `span.open` and
+    /// `span.mismatch` counters surface bookkeeping errors instead.
+    pub fn lines(&self, scope: &str, key: &str) -> Vec<TelemLine> {
+        let Some(inner) = &self.inner else { return Vec::new() };
+        let mut out = Vec::new();
+        let mk = |metric: &str| TelemLine {
+            scope: scope.to_string(),
+            key: key.to_string(),
+            metric: metric.to_string(),
+            counter: None,
+            hist: None,
+        };
+        for (name, v) in inner.counters.iter().chain(inner.maxima.iter()) {
+            let mut l = mk(name);
+            l.counter = Some(*v);
+            out.push(l);
+        }
+        if inner.mismatches > 0 {
+            let mut l = mk("obs.span_mismatch");
+            l.counter = Some(inner.mismatches);
+            out.push(l);
+        }
+        if !inner.open.is_empty() {
+            let mut l = mk("obs.span_open");
+            l.counter = Some(inner.open.len() as u64);
+            out.push(l);
+        }
+        for (name, h) in &inner.hists {
+            if h.count == 0 {
+                continue;
+            }
+            let mut l = mk(name);
+            l.hist = Some(*h);
+            out.push(l);
+        }
+        out
+    }
+}
+
+fn hist_mut<'a>(
+    table: &'a mut Vec<(&'static str, Histogram)>,
+    name: &'static str,
+) -> &'a mut Histogram {
+    if let Some(i) = table.iter().position(|(k, _)| *k == name) {
+        return &mut table[i].1;
+    }
+    table.push((name, Histogram::default()));
+    &mut table.last_mut().unwrap().1
+}
+
+/// One flat `"kind":"telem"` ledger line: a counter or a histogram
+/// snapshot, scoped to a run (key = the run's coordinate key) or to the
+/// whole campaign (key = worker id).  Schema-versioned alongside the
+/// ledger (`"schema":2`, `"v":1`); every ledger reader dispatches on
+/// `"kind"` first, so telem lines are invisible to resume/merge keying.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TelemLine {
+    /// `"run"` or `"campaign"`.
+    pub scope: String,
+    /// Run coordinate key, or worker id for campaign scope.
+    pub key: String,
+    /// Dotted metric name (`des.events_popped`, `solver.solve_ns`, …).
+    pub metric: String,
+    /// Counter value (`"type":"counter"` lines).
+    pub counter: Option<u64>,
+    /// Histogram snapshot (`"type":"hist"` lines).
+    pub hist: Option<Histogram>,
+}
+
+impl TelemLine {
+    /// One flat JSON object (a single ledger line, no trailing newline).
+    /// Floats use the shared shortest-round-trip policy (`util::json`),
+    /// so `from_json(to_json(x)) == x` byte-for-byte.
+    pub fn to_json(&self) -> String {
+        let mut out = format!(
+            "{{\"schema\":2,\"kind\":\"telem\",\"v\":1,\"scope\":{},\"key\":{},\"metric\":{}",
+            json::string(&self.scope),
+            json::string(&self.key),
+            json::string(&self.metric),
+        );
+        if let Some(h) = &self.hist {
+            out.push_str(&format!(
+                ",\"type\":\"hist\",\"count\":{},\"sum\":{},\"min\":{},\"max\":{},\"buckets\":{}",
+                h.count,
+                json::num(h.sum),
+                json::num(h.min),
+                json::num(h.max),
+                json::string(&h.buckets_compact()),
+            ));
+        } else {
+            out.push_str(&format!(
+                ",\"type\":\"counter\",\"value\":{}",
+                self.counter.unwrap_or(0)
+            ));
+        }
+        out.push('}');
+        out
+    }
+
+    pub fn from_json(line: &str) -> Result<Self> {
+        Self::from_obj(&crate::exp::sink::parse_flat_object(line)?)
+    }
+
+    /// Build from an already-scanned flat object (shared with the
+    /// distributed-ledger line dispatcher, `exp::dist::ledger`).
+    pub(crate) fn from_obj(
+        obj: &HashMap<String, crate::exp::sink::JsonVal>,
+    ) -> Result<Self> {
+        use crate::exp::sink::JsonVal;
+        let s = |k: &str| -> Result<String> {
+            obj.get(k)
+                .and_then(JsonVal::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("telem line missing string field `{k}`"))
+        };
+        let u = |k: &str| -> Result<u64> {
+            obj.get(k)
+                .and_then(JsonVal::as_u64)
+                .ok_or_else(|| anyhow!("telem line field `{k}` must be a non-negative integer"))
+        };
+        if obj.get("kind").and_then(JsonVal::as_str) != Some("telem") {
+            return Err(anyhow!("not a telem line"));
+        }
+        match obj.get("v").and_then(JsonVal::as_u64) {
+            Some(1) => {}
+            other => return Err(anyhow!("unsupported telem line version {other:?}")),
+        }
+        let mut line = TelemLine {
+            scope: s("scope")?,
+            key: s("key")?,
+            metric: s("metric")?,
+            counter: None,
+            hist: None,
+        };
+        match obj.get("type").and_then(JsonVal::as_str) {
+            Some("counter") => line.counter = Some(u("value")?),
+            Some("hist") => {
+                let n = |k: &str| -> Result<f64> {
+                    match obj.get(k) {
+                        Some(JsonVal::Num(v)) => Ok(*v),
+                        Some(JsonVal::Null) => Ok(f64::NAN),
+                        _ => Err(anyhow!("telem line missing numeric field `{k}`")),
+                    }
+                };
+                line.hist = Some(Histogram {
+                    count: u("count")?,
+                    sum: n("sum")?,
+                    min: n("min")?,
+                    max: n("max")?,
+                    buckets: Histogram::from_compact(&s("buckets")?)?,
+                });
+            }
+            other => return Err(anyhow!("unsupported telem line type {other:?}")),
+        }
+        Ok(line)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucketing_covers_powers_of_two_and_clamps() {
+        // Bucket i covers [2^(i-32), 2^(i-31)).
+        assert_eq!(bucket_of(1.0), 32);
+        assert_eq!(bucket_of(1.5), 32);
+        assert_eq!(bucket_of(2.0), 33);
+        assert_eq!(bucket_of(0.5), 31);
+        assert_eq!(bucket_of(0.75), 31);
+        // Degenerate inputs land in bucket 0 instead of panicking.
+        assert_eq!(bucket_of(0.0), 0);
+        assert_eq!(bucket_of(-3.0), 0);
+        assert_eq!(bucket_of(f64::INFINITY), 0);
+        // Clamped at both ends.
+        assert_eq!(bucket_of(1e-300), 0);
+        assert_eq!(bucket_of(1e300), N_BUCKETS - 1);
+        // Nanosecond-scale span values stay well inside the array.
+        assert_eq!(bucket_of(1e9), 61);
+    }
+
+    #[test]
+    fn histogram_tracks_count_sum_min_max() {
+        let mut h = Histogram::default();
+        for v in [1.0, 4.0, 0.25] {
+            h.observe(v);
+        }
+        h.observe(f64::NAN); // ignored
+        assert_eq!(h.count, 3);
+        assert_eq!(h.sum, 5.25);
+        assert_eq!(h.min, 0.25);
+        assert_eq!(h.max, 4.0);
+        assert_eq!(h.buckets[32], 1);
+        assert_eq!(h.buckets[34], 1);
+        assert_eq!(h.buckets[30], 1);
+        let mut other = Histogram::default();
+        other.observe(4.0);
+        h.merge(&other);
+        assert_eq!(h.count, 4);
+        assert_eq!(h.buckets[34], 2);
+    }
+
+    #[test]
+    fn off_handle_is_a_no_op_and_allocation_free() {
+        let mut t = Telemetry::off();
+        assert!(!t.is_on());
+        t.count("x", 3);
+        t.observe("y", 1.0);
+        t.span_begin("z");
+        t.span_end("z");
+        t.sim_span("w", 2.0);
+        assert_eq!(t.counter("x"), 0);
+        assert!(t.histogram("y").is_none());
+        assert!(t.lines("run", "k").is_empty());
+        // The off handle is one Option word — nothing boxed.
+        assert!(std::mem::size_of::<Telemetry>() <= std::mem::size_of::<usize>());
+    }
+
+    #[test]
+    fn counters_and_gauges_accumulate() {
+        let mut t = Telemetry::on();
+        t.count("a", 1);
+        t.count("a", 2);
+        t.count("b", 5);
+        t.gauge_max("hw", 3);
+        t.gauge_max("hw", 9);
+        t.gauge_max("hw", 4);
+        assert_eq!(t.counter("a"), 3);
+        assert_eq!(t.counter("b"), 5);
+        assert_eq!(t.counter("hw"), 9);
+        assert_eq!(t.counter("missing"), 0);
+    }
+
+    #[test]
+    fn spans_nest_lifo_and_mismatches_are_counted_not_fatal() {
+        let mut t = Telemetry::on();
+        t.span_begin("outer");
+        t.span_begin("inner");
+        t.span_end("inner");
+        t.span_end("outer");
+        assert_eq!(t.span_mismatches(), 0);
+        let inner = t.histogram("inner").unwrap();
+        let outer = t.histogram("outer").unwrap();
+        assert_eq!(inner.count, 1);
+        assert_eq!(outer.count, 1);
+        assert!(outer.min >= inner.min * 0.0, "spans record non-negative ns");
+
+        // Ending a span that is not the innermost one must not panic,
+        // must not record, and must be visible in the mismatch counter.
+        t.span_begin("a");
+        t.span_end("not-a");
+        assert_eq!(t.span_mismatches(), 1);
+        t.span_end("a");
+        assert_eq!(t.span_mismatches(), 1);
+        t.span_end("a"); // empty stack
+        assert_eq!(t.span_mismatches(), 2);
+        let lines = t.lines("run", "k");
+        assert!(lines
+            .iter()
+            .any(|l| l.metric == "obs.span_mismatch" && l.counter == Some(2)));
+    }
+
+    #[test]
+    fn telem_lines_round_trip_through_util_json() {
+        let mut t = Telemetry::on();
+        t.count("des.events_popped", 123);
+        t.gauge_max("des.queue_high_water", 17);
+        t.observe("solver.solve_ns", 1500.0);
+        t.observe("solver.solve_ns", 64.0);
+        t.sim_span("sim.round_s", 2.5);
+        let lines = t.lines("run", "homog:2|quant:inf|sim:60|sync|nacfl:1|0|0");
+        assert_eq!(lines.len(), 4);
+        for line in &lines {
+            let text = line.to_json();
+            let back = TelemLine::from_json(&text).unwrap();
+            assert_eq!(&back, line, "parse must invert serialization");
+            assert_eq!(back.to_json(), text, "byte-stable round trip");
+        }
+        // Spot-check the wire shape of one counter and one hist line.
+        let counter = &lines[0];
+        let text = counter.to_json();
+        assert!(text.contains("\"kind\":\"telem\""), "{text}");
+        assert!(text.contains("\"type\":\"counter\""), "{text}");
+        assert!(text.contains("\"value\":123"), "{text}");
+        let hist = lines.iter().find(|l| l.hist.is_some()).unwrap();
+        let text = hist.to_json();
+        assert!(text.contains("\"type\":\"hist\""), "{text}");
+        assert!(text.contains("\"count\":2"), "{text}");
+        assert!(text.contains("\"buckets\":\""), "{text}");
+    }
+
+    #[test]
+    fn telem_from_json_rejects_malformed_lines() {
+        assert!(TelemLine::from_json("").is_err());
+        assert!(TelemLine::from_json("{\"kind\":\"claim\"}").is_err(), "wrong kind");
+        let good = TelemLine {
+            scope: "run".into(),
+            key: "k".into(),
+            metric: "m".into(),
+            counter: Some(1),
+            hist: None,
+        }
+        .to_json();
+        assert!(TelemLine::from_json(&good).is_ok());
+        assert!(TelemLine::from_json(&good[..good.len() / 2]).is_err(), "torn line");
+        let v2 = good.replace("\"v\":1", "\"v\":2");
+        assert!(TelemLine::from_json(&v2).is_err(), "future telem version");
+        let bad_buckets = TelemLine {
+            scope: "run".into(),
+            key: "k".into(),
+            metric: "m".into(),
+            counter: None,
+            hist: Some(Histogram::default()),
+        };
+        let text = bad_buckets.to_json().replace("\"buckets\":\"\"", "\"buckets\":\"99:x\"");
+        assert!(TelemLine::from_json(&text).is_err(), "bad bucket entry");
+    }
+}

@@ -1,0 +1,338 @@
+//! `nacfl report` — offline campaign health report over one or more
+//! ledgers.
+//!
+//! Reads every ledger through the `"kind"` dispatcher
+//! ([`read_dist_ledger`]), dedups runs by coordinate key across files,
+//! and prints: per-ledger line accounting, throughput and wall
+//! statistics, the per-run delay decomposition totals, a straggler
+//! histogram (each run's `wait_s / wall` share, log-bucketed by
+//! [`Histogram`]), aggregated telemetry counters and span histograms,
+//! and — machine-greppable for CI — `coverage gaps: N` and
+//! `span observations: N` summary lines.  With a plan the gap count is
+//! exact (missing coordinate keys are listed); without one it falls
+//! back to the ledger's own plan header.
+
+use crate::exp::dist::ledger::{read_dist_ledger, DistLedger};
+use crate::exp::plan::ExperimentPlan;
+use crate::exp::sink::RunRecord;
+use crate::obs::{Histogram, TelemLine};
+use anyhow::Result;
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
+
+/// A rendered report plus the counts CI branches on.
+pub struct Report {
+    pub text: String,
+    /// Expected-but-missing runs (0 when no expectation is known).
+    pub gaps: usize,
+    /// Total span/histogram observations across all telem lines.
+    pub span_observations: usize,
+}
+
+/// Whether a telem metric is a span-style duration histogram (wall ns
+/// or simulated per-round seconds).
+fn is_span_metric(metric: &str) -> bool {
+    metric.ends_with("_ns") || metric.contains("round_s")
+}
+
+fn wall_stats(runs: &[&RunRecord]) -> String {
+    let walls: Vec<f64> = runs.iter().map(|r| r.wall).filter(|w| w.is_finite()).collect();
+    if walls.is_empty() {
+        return "wall: no finite values".into();
+    }
+    let sum: f64 = walls.iter().sum();
+    let min = walls.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = walls.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    format!(
+        "wall: mean {:.3e} s, min {:.3e} s, max {:.3e} s over {} runs",
+        sum / walls.len() as f64,
+        min,
+        max,
+        walls.len()
+    )
+}
+
+/// Render the non-empty buckets of a histogram as `[lo, hi) count` rows
+/// (log-2 edges, the `obs` bucket geometry).
+fn hist_rows(h: &Histogram) -> String {
+    let mut out = String::new();
+    let peak = h.buckets.iter().copied().max().unwrap_or(0).max(1);
+    for (i, &c) in h.buckets.iter().enumerate() {
+        if c == 0 {
+            continue;
+        }
+        let lo = 2f64.powi(i as i32 - 32);
+        let hi = 2f64.powi(i as i32 - 31);
+        let bar = "#".repeat(((c as f64 / peak as f64) * 30.0).ceil() as usize);
+        out.push_str(&format!("  [{lo:9.3e}, {hi:9.3e})  {c:>6}  {bar}\n"));
+    }
+    out
+}
+
+/// Build the report from already-read `(label, ledger)` pairs (pure;
+/// `run_report` and the tests share it).  The label names each ledger
+/// in the per-file accounting section.
+pub fn build_report(
+    ledgers: &[(String, DistLedger)],
+    plan: Option<&ExperimentPlan>,
+) -> Report {
+    let mut out = String::new();
+
+    // Per-ledger accounting + pooled lines.
+    let mut by_key: BTreeMap<String, &RunRecord> = BTreeMap::new();
+    let mut telem: Vec<&TelemLine> = Vec::new();
+    let mut n_run_lines = 0usize;
+    let mut n_torn = 0usize;
+    let mut header = None;
+    for (label, led) in ledgers {
+        out.push_str(&format!(
+            "{label}: {} run, {} claim, {} telem, {} torn, {} legacy line(s)\n",
+            led.runs.len(),
+            led.claims.len(),
+            led.telem.len(),
+            led.n_torn,
+            led.n_legacy
+        ));
+        n_run_lines += led.runs.len();
+        n_torn += led.n_torn;
+        for r in &led.runs {
+            by_key.insert(r.key(), r);
+        }
+        telem.extend(led.telem.iter());
+        if header.is_none() {
+            header = led.header.as_ref();
+        }
+    }
+    let runs: Vec<&RunRecord> = by_key.values().copied().collect();
+    let duplicates = n_run_lines - runs.len();
+    let converged = runs.iter().filter(|r| r.converged).count();
+    out.push_str(&format!(
+        "\nunique runs: {} ({duplicates} duplicate line(s) across ledgers)\n",
+        runs.len()
+    ));
+    out.push_str(&format!("converged: {converged}/{}\n", runs.len()));
+    out.push_str(&format!("{}\n", wall_stats(&runs)));
+
+    // Delay decomposition totals (runs that predate the decomposition
+    // serialize NaN and are skipped).
+    let (mut up, mut comp, mut wait, mut n_dec) = (0.0f64, 0.0f64, 0.0f64, 0usize);
+    for r in &runs {
+        if r.upload_s.is_finite() && r.compute_s.is_finite() && r.wait_s.is_finite() {
+            up += r.upload_s;
+            comp += r.compute_s;
+            wait += r.wait_s;
+            n_dec += 1;
+        }
+    }
+    if n_dec > 0 {
+        let total = up + comp + wait;
+        let pct = |v: f64| if total.abs() > 0.0 { v / total * 100.0 } else { 0.0 };
+        out.push_str(&format!(
+            "delay decomposition ({n_dec} runs): upload {up:.3e} s ({:.0}%), \
+             compute {comp:.3e} s ({:.0}%), wait {wait:.3e} s ({:.0}%)\n",
+            pct(up),
+            pct(comp),
+            pct(wait)
+        ));
+    }
+
+    // Straggler histogram: each run's wait share of its wall.  A share
+    // near 0 means upload-bound; near 1 means one slow client dominates.
+    let mut straggler = Histogram::default();
+    for r in &runs {
+        if r.wall.is_finite() && r.wall > 0.0 && r.wait_s.is_finite() {
+            straggler.observe((r.wait_s / r.wall).max(0.0));
+        }
+    }
+    if straggler.count > 0 {
+        out.push_str(&format!(
+            "\nstraggler shares (wait_s / wall, {} runs, mean {:.3}):\n",
+            straggler.count,
+            straggler.mean()
+        ));
+        out.push_str(&hist_rows(&straggler));
+    }
+
+    // Aggregated telemetry: counters summed per metric, histograms
+    // merged per metric (across runs, workers and ledgers).
+    let mut counters: BTreeMap<&str, u64> = BTreeMap::new();
+    let mut hists: BTreeMap<&str, Histogram> = BTreeMap::new();
+    let mut steals = 0u64;
+    for t in &telem {
+        if let Some(v) = t.counter {
+            *counters.entry(&t.metric).or_insert(0) += v;
+            if t.metric == "dist.steals" {
+                steals += v;
+            }
+        }
+        if let Some(h) = &t.hist {
+            hists.entry(&t.metric).or_insert_with(Histogram::default).merge(h);
+        }
+    }
+    if !counters.is_empty() || !hists.is_empty() {
+        out.push_str("\ntelemetry:\n");
+        for (m, v) in &counters {
+            out.push_str(&format!("  {m}: {v}\n"));
+        }
+        for (m, h) in &hists {
+            out.push_str(&format!(
+                "  {m}: n {} mean {:.3e} min {:.3e} max {:.3e}\n",
+                h.count,
+                h.mean(),
+                h.min,
+                h.max
+            ));
+        }
+    }
+
+    // Coverage: exact against a plan, count-only against a header.
+    let gaps = if let Some(p) = plan {
+        let have: BTreeSet<String> = by_key.keys().cloned().collect();
+        let missing: Vec<String> =
+            p.cells().iter().map(|c| c.key()).filter(|k| !have.contains(k)).collect();
+        if !missing.is_empty() {
+            out.push_str("\nmissing runs:\n");
+            for k in missing.iter().take(10) {
+                out.push_str(&format!("  {k}\n"));
+            }
+            if missing.len() > 10 {
+                out.push_str(&format!("  ... and {} more\n", missing.len() - 10));
+            }
+        }
+        missing.len()
+    } else if let Some(h) = header {
+        h.n_runs.saturating_sub(runs.len())
+    } else {
+        0
+    };
+    let span_observations: usize = hists
+        .iter()
+        .filter(|(m, _)| is_span_metric(m))
+        .map(|(_, h)| h.count as usize)
+        .sum();
+    out.push_str(&format!(
+        "\ncoverage gaps: {gaps}\nspan observations: {span_observations}\n\
+         duplicate records: {duplicates}\nsteals: {steals}\ntorn lines: {n_torn}\n"
+    ));
+
+    Report { text: out, gaps, span_observations }
+}
+
+/// Read `paths` and build the report (the `nacfl report` entry point).
+pub fn run_report(paths: &[&Path], plan: Option<&ExperimentPlan>) -> Result<Report> {
+    let mut ledgers = Vec::with_capacity(paths.len());
+    for p in paths {
+        ledgers.push((p.display().to_string(), read_dist_ledger(p)?));
+    }
+    Ok(build_report(&ledgers, plan))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(policy: &str, seed: u64, wall: f64) -> RunRecord {
+        RunRecord {
+            campaign: "t".into(),
+            scenario: "homog:2".into(),
+            compressor: "quant:inf".into(),
+            tier: "sim:60".into(),
+            discipline: "sync".into(),
+            policy: policy.into(),
+            data_seed: 0,
+            seed,
+            config: "fp".into(),
+            wall,
+            rounds: 10,
+            converged: true,
+            aggregations: 10,
+            dropped: 0,
+            late: 0,
+            upload_s: wall * 0.75,
+            compute_s: 0.0,
+            wait_s: wall * 0.25,
+            trace: None,
+        }
+    }
+
+    #[test]
+    fn report_dedups_and_counts_gaps_against_plan() {
+        let plan = ExperimentPlan::builder("t")
+            .policies(["fixed:2", "nacfl:1"])
+            .seeds([0, 1])
+            .build()
+            .unwrap();
+        // Two ledgers covering 3 of the cells, one duplicated.
+        let mut a = DistLedger::default();
+        let mut b = DistLedger::default();
+        let cells = plan.cells();
+        let mk = |c: &crate::exp::plan::PlanCell| {
+            let mut r = rec(&c.policy, c.seed, 100.0);
+            r.scenario = c.scenario.label();
+            r.compressor = c.compressor.clone();
+            r.tier = c.tier.label();
+            r.discipline = c.discipline.label();
+            r.data_seed = c.data_seed;
+            r
+        };
+        a.runs.push(mk(&cells[0]));
+        a.runs.push(mk(&cells[1]));
+        b.runs.push(mk(&cells[1]));
+        b.runs.push(mk(&cells[2]));
+        let n = plan.n_runs();
+        let report = build_report(
+            &[("a".into(), a), ("b".into(), b)],
+            Some(&plan),
+        );
+        assert_eq!(report.gaps, n - 3, "every uncovered cell is a gap");
+        assert!(report.text.contains("unique runs: 3 (1 duplicate line(s)"), "{}", report.text);
+        assert!(report.text.contains(&format!("coverage gaps: {}", n - 3)), "{}", report.text);
+        assert!(report.text.contains("missing runs:"), "{}", report.text);
+        assert!(report.text.contains("straggler shares"), "{}", report.text);
+        assert!(report.text.contains("delay decomposition (3 runs)"), "{}", report.text);
+    }
+
+    #[test]
+    fn span_observations_count_duration_histograms_only() {
+        let mut led = DistLedger::default();
+        let mut spans = Histogram::default();
+        spans.observe(1.0);
+        spans.observe(2.0);
+        let mut other = Histogram::default();
+        other.observe(5.0);
+        let line = |metric: &str, hist| TelemLine {
+            scope: "run".into(),
+            key: "k".into(),
+            metric: metric.into(),
+            counter: None,
+            hist: Some(hist),
+        };
+        led.telem.push(line("sim.round_s", spans));
+        led.telem.push(line("solver.solve_ns", spans));
+        led.telem.push(line("dist.lease_age_s", other));
+        led.telem.push(TelemLine {
+            scope: "campaign".into(),
+            key: "w".into(),
+            metric: "dist.steals".into(),
+            counter: Some(3),
+            hist: None,
+        });
+        let report = build_report(&[("l".into(), led)], None);
+        assert_eq!(report.span_observations, 4, "round_s + _ns, not lease ages");
+        assert!(report.text.contains("span observations: 4"), "{}", report.text);
+        assert!(report.text.contains("steals: 3"), "{}", report.text);
+        assert_eq!(report.gaps, 0, "no plan, no header -> no expectation");
+        assert!(report.text.contains("coverage gaps: 0"), "{}", report.text);
+    }
+
+    #[test]
+    fn header_fallback_counts_gaps_without_listing_keys() {
+        let plan = ExperimentPlan::builder("t").build().unwrap();
+        let mut led = DistLedger::default();
+        led.header = Some(crate::exp::dist::PlanHeader::for_plan(&plan));
+        led.runs.push(rec("nacfl:1", 0, 1.0));
+        let report = build_report(&[("l".into(), led)], None);
+        assert_eq!(report.gaps, plan.n_runs() - 1);
+        assert!(!report.text.contains("missing runs:"), "{}", report.text);
+    }
+}

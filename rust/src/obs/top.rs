@@ -1,0 +1,306 @@
+//! `nacfl top` — a live fleet view over a campaign ledger.
+//!
+//! Tails a (possibly multi-worker, concurrently-appended) distributed
+//! ledger and renders one terminal frame per refresh: per-group
+//! completion bars with running mean walls, worker liveness and lease
+//! ages from the claim lines, campaign-scope telemetry counters, and a
+//! wall-clock-per-run canvas on the `metrics::plot` renderer.  Reading
+//! is the ordinary [`read_dist_ledger`] dispatcher, so torn lines from
+//! a worker mid-write are skipped, never fatal — `top` can be started
+//! *before* the first worker creates the file ("waiting for ledger").
+
+use crate::exp::dist::ledger::{now_unix, read_dist_ledger, DistLedger};
+use crate::exp::plan::ExperimentPlan;
+use crate::exp::sink::RunRecord;
+use crate::metrics::plot::{render, Series};
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Width of the per-group completion bars.
+const BAR_W: usize = 24;
+
+/// The group axis shown in the bars: every coordinate except policy and
+/// seeds (matches the paper-table grouping in `exp::sink`).
+fn group_key(r: &RunRecord) -> String {
+    format!("{}|{}|{}|{}", r.scenario, r.compressor, r.tier, r.discipline)
+}
+
+fn bar(done: usize, total: usize) -> String {
+    let filled = if total == 0 {
+        0
+    } else {
+        ((done as f64 / total as f64) * BAR_W as f64).round() as usize
+    }
+    .min(BAR_W);
+    format!("[{}{}]", "#".repeat(filled), "-".repeat(BAR_W - filled))
+}
+
+/// Render one frame from an already-read ledger.  Returns the frame
+/// text and whether the campaign is complete (every expected run has a
+/// record).  Pure — the `tests` below and `run_top` share it.
+pub fn render_frame(
+    led: &DistLedger,
+    plan: Option<&ExperimentPlan>,
+    now: u64,
+) -> (String, bool) {
+    // Dedup runs by coordinate key, last writer wins (records are
+    // idempotent bits, so "last" is cosmetic).
+    let mut by_key: BTreeMap<String, &RunRecord> = BTreeMap::new();
+    for r in &led.runs {
+        by_key.insert(r.key(), r);
+    }
+    let done = by_key.len();
+    let total = plan
+        .map(|p| p.n_runs())
+        .or_else(|| led.header.as_ref().map(|h| h.n_runs))
+        .unwrap_or(0);
+    let name = plan
+        .map(|p| p.name.clone())
+        .or_else(|| led.header.as_ref().map(|h| h.campaign.clone()))
+        .unwrap_or_else(|| "campaign".into());
+
+    let mut out = String::new();
+    if total > 0 {
+        out.push_str(&format!(
+            "{name}: {done}/{total} runs ({:.0}%)\n",
+            done as f64 / total as f64 * 100.0
+        ));
+    } else {
+        out.push_str(&format!("{name}: {done} runs (total unknown — pass --plan)\n"));
+    }
+    out.push_str(&format!(
+        "lines: {} run, {} claim, {} telem, {} torn\n\n",
+        led.runs.len(),
+        led.claims.len(),
+        led.telem.len(),
+        led.n_torn
+    ));
+
+    // Per-group bars: expected counts from the plan when we have one,
+    // else groups observed so far with unknown totals.
+    let mut expected: BTreeMap<String, usize> = BTreeMap::new();
+    if let Some(p) = plan {
+        for cell in p.cells() {
+            let r = format!(
+                "{}|{}|{}|{}",
+                cell.scenario.label(),
+                cell.compressor,
+                cell.tier.label(),
+                cell.discipline.label()
+            );
+            *expected.entry(r).or_insert(0) += 1;
+        }
+    }
+    let mut got: BTreeMap<String, (usize, f64, usize)> = BTreeMap::new();
+    for r in by_key.values() {
+        let e = got.entry(group_key(r)).or_insert((0, 0.0, 0));
+        e.0 += 1;
+        if r.wall.is_finite() {
+            e.1 += r.wall;
+            e.2 += 1;
+        }
+    }
+    for g in got.keys() {
+        expected.entry(g.clone()).or_insert(0);
+    }
+    for (g, n_exp) in &expected {
+        let (n, wall_sum, n_wall) = got.get(g).copied().unwrap_or((0, 0.0, 0));
+        let mean = if n_wall > 0 {
+            format!("mean {:.3e} s", wall_sum / n_wall as f64)
+        } else {
+            "mean -".into()
+        };
+        if *n_exp > 0 {
+            out.push_str(&format!("{} {n:>4}/{n_exp:<4} {mean:<16} {g}\n", bar(n, *n_exp)));
+        } else {
+            out.push_str(&format!("{} {n:>4}      {mean:<16} {g}\n", bar(1, 1)));
+        }
+    }
+
+    // Worker table from the claim lines: live/expired leases + ages.
+    let mut workers: BTreeMap<&str, (usize, u64, bool)> = BTreeMap::new();
+    for c in led.claims.values() {
+        let e = workers.entry(&c.worker).or_insert((0, 0, false));
+        e.0 += 1;
+        e.1 = e.1.max(c.ts);
+        e.2 |= c.live(now);
+    }
+    if !workers.is_empty() {
+        out.push('\n');
+        for (w, (n_claims, last_ts, live)) in &workers {
+            out.push_str(&format!(
+                "worker {w}: {n_claims} claim(s), lease age {}s, {}\n",
+                now.saturating_sub(*last_ts),
+                if *live { "LIVE" } else { "expired" }
+            ));
+        }
+    }
+
+    // Campaign-scope telemetry (per-worker runs started/completed/
+    // stolen, lease renewals) — counters only, summed per metric.
+    let mut counters: BTreeMap<&str, u64> = BTreeMap::new();
+    for t in &led.telem {
+        if t.scope == "campaign" {
+            if let Some(v) = t.counter {
+                *counters.entry(&t.metric).or_insert(0) += v;
+            }
+        }
+    }
+    if !counters.is_empty() {
+        out.push('\n');
+        for (m, v) in &counters {
+            out.push_str(&format!("{m}: {v}\n"));
+        }
+    }
+
+    // Wall-per-completed-run canvas (file order): a live straggler
+    // spotter — spikes are the runs dominating the remaining time.
+    let points: Vec<(f64, f64)> = by_key
+        .values()
+        .enumerate()
+        .filter(|(_, r)| r.wall.is_finite())
+        .map(|(i, r)| (i as f64, r.wall))
+        .collect();
+    if !points.is_empty() {
+        out.push('\n');
+        out.push_str(&render(
+            &[Series { label: "wall s per completed run".into(), points, glyph: '*' }],
+            60,
+            8,
+        ));
+    }
+
+    let complete = total > 0 && done >= total;
+    (out, complete)
+}
+
+/// The `nacfl top` loop: clear the terminal, render a frame, sleep,
+/// repeat — until the campaign completes, `frames` frames have been
+/// drawn (`0` = unbounded), or `once` short-circuits after one frame.
+/// A missing or unreadable ledger renders a waiting frame instead of
+/// erroring, so `top` can start before the first worker.
+pub fn run_top(
+    path: &Path,
+    plan: Option<&ExperimentPlan>,
+    interval_s: f64,
+    frames: usize,
+    once: bool,
+) -> Result<()> {
+    let mut drawn = 0usize;
+    loop {
+        let frame = match read_dist_ledger(path) {
+            Ok(led) => render_frame(&led, plan, now_unix()),
+            Err(_) => (
+                format!("waiting for ledger {} ...\n", path.display()),
+                false,
+            ),
+        };
+        if !once {
+            // ANSI clear + home; harmless when piped to a file.
+            print!("\x1b[2J\x1b[H");
+        }
+        print!("{}", frame.0);
+        use std::io::Write;
+        std::io::stdout().flush().ok();
+        drawn += 1;
+        if frame.1 || once || (frames > 0 && drawn >= frames) {
+            return Ok(());
+        }
+        std::thread::sleep(std::time::Duration::from_secs_f64(interval_s.max(0.05)));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exp::dist::ledger::ClaimRecord;
+    use crate::obs::TelemLine;
+
+    fn rec(policy: &str, seed: u64, wall: f64) -> RunRecord {
+        RunRecord {
+            campaign: "t".into(),
+            scenario: "homog:2".into(),
+            compressor: "quant:inf".into(),
+            tier: "sim:60".into(),
+            discipline: "sync".into(),
+            policy: policy.into(),
+            data_seed: 0,
+            seed,
+            config: "fp".into(),
+            wall,
+            rounds: 10,
+            converged: true,
+            aggregations: 10,
+            dropped: 0,
+            late: 0,
+            upload_s: wall,
+            compute_s: 0.0,
+            wait_s: 0.0,
+            trace: None,
+        }
+    }
+
+    #[test]
+    fn frame_renders_progress_workers_and_telem() {
+        let mut led = DistLedger::default();
+        led.runs.push(rec("fixed:2", 0, 100.0));
+        led.runs.push(rec("nacfl:1", 0, 50.0));
+        led.runs.push(rec("nacfl:1", 0, 50.0)); // duplicate bits — dedup
+        led.claims.insert(
+            "k".into(),
+            ClaimRecord::new("k", "w0", 1000, 600),
+        );
+        led.telem.push(TelemLine {
+            scope: "campaign".into(),
+            key: "w0".into(),
+            metric: "exp.runs_completed".into(),
+            counter: Some(2),
+            hist: None,
+        });
+        let (frame, complete) = render_frame(&led, None, 1100);
+        assert!(frame.contains("2 runs"), "dedup by key: {frame}");
+        assert!(frame.contains("worker w0"), "{frame}");
+        assert!(frame.contains("lease age 100s"), "{frame}");
+        assert!(frame.contains("LIVE"), "{frame}");
+        assert!(frame.contains("exp.runs_completed: 2"), "{frame}");
+        assert!(frame.contains("homog:2|quant:inf|sim:60|sync"), "{frame}");
+        assert!(frame.contains('*'), "canvas renders: {frame}");
+        assert!(!complete, "no plan/header -> total unknown -> never complete");
+    }
+
+    #[test]
+    fn frame_with_plan_tracks_completion_and_group_totals() {
+        let plan = ExperimentPlan::builder("t")
+            .policies(["fixed:2", "nacfl:1"])
+            .build()
+            .unwrap();
+        let n = plan.n_runs();
+        let mut led = DistLedger::default();
+        let (frame, complete) = render_frame(&led, Some(&plan), 0);
+        assert!(frame.contains(&format!("0/{n} runs")), "{frame}");
+        assert!(!complete);
+        for cell in plan.cells() {
+            let mut r = rec(&cell.policy, cell.seed, 1.0);
+            r.scenario = cell.scenario.label();
+            r.compressor = cell.compressor.clone();
+            r.tier = cell.tier.label();
+            r.discipline = cell.discipline.label();
+            r.data_seed = cell.data_seed;
+            led.runs.push(r);
+        }
+        let (frame, complete) = render_frame(&led, Some(&plan), 0);
+        assert!(frame.contains(&format!("{n}/{n} runs (100%)")), "{frame}");
+        assert!(complete);
+        assert!(frame.contains(&"#".repeat(BAR_W)), "full bar: {frame}");
+    }
+
+    #[test]
+    fn bar_clamps_and_scales() {
+        assert_eq!(bar(0, 4), format!("[{}]", "-".repeat(BAR_W)));
+        assert_eq!(bar(4, 4), format!("[{}]", "#".repeat(BAR_W)));
+        assert_eq!(bar(0, 0), format!("[{}]", "-".repeat(BAR_W)));
+        let half = bar(2, 4);
+        assert_eq!(half.matches('#').count(), BAR_W / 2);
+    }
+}

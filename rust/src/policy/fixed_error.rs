@@ -3,7 +3,7 @@
 //! normalized variance staying under a fixed budget q (paper: q = 5.25).
 //! Exploits congestion diversity *across clients* but not across time.
 
-use super::solver::SolverWorkspace;
+use super::solver::{SolverStats, SolverWorkspace};
 use super::{CompressionChoice, CompressionPolicy, PolicyCtx};
 
 #[derive(Clone, Debug)]
@@ -27,6 +27,14 @@ impl CompressionPolicy for FixedError {
 
     fn choose(&mut self, ctx: &PolicyCtx, c: &[f64]) -> Vec<CompressionChoice> {
         self.ws.min_duration_with_error_budget(ctx, c, self.q_budget)
+    }
+
+    fn solver_stats(&self) -> Option<SolverStats> {
+        Some(self.ws.stats())
+    }
+
+    fn set_telemetry(&mut self, on: bool) {
+        self.ws.set_timed(on);
     }
 }
 

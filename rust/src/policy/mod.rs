@@ -31,6 +31,7 @@ pub use fixed_error::FixedError;
 pub use nacfl::NacFl;
 pub use oracle::OraclePolicy;
 pub use rounds_model::RoundsModel;
+pub use solver::SolverStats;
 
 pub use crate::quant::{mean_level, uniform_choices, CompressionChoice};
 
@@ -218,6 +219,14 @@ pub trait CompressionPolicy: Send {
     /// Choose per-client levels for round `n` (1-based) given network
     /// state `c`.
     fn choose(&mut self, ctx: &PolicyCtx, c: &[f64]) -> Vec<CompressionChoice>;
+    /// Cumulative [`SolverStats`] for solver-backed policies (`None` for
+    /// table/closed-form policies with no inner solver).
+    fn solver_stats(&self) -> Option<SolverStats> {
+        None
+    }
+    /// Enable wall-clock timing of inner solves (telemetry; no-op for
+    /// policies without a solver).  Counting is always on.
+    fn set_telemetry(&mut self, _on: bool) {}
 }
 
 /// A parsed-but-not-yet-instantiated policy: the syntax layer of the

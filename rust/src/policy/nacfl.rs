@@ -20,7 +20,7 @@
 //! which is our default.  A constant step size beta is also supported
 //! (the Theorem-1 regime and the §III-C remark ablation).
 
-use super::solver::SolverWorkspace;
+use super::solver::{SolverStats, SolverWorkspace};
 use super::{uniform_choices, CompressionChoice, CompressionPolicy, PolicyCtx};
 
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -106,6 +106,14 @@ impl CompressionPolicy for NacFl {
         self.r_hat = (1.0 - beta) * self.r_hat + beta * rho;
         self.d_hat = (1.0 - beta) * self.d_hat + beta * dur;
         ch
+    }
+
+    fn solver_stats(&self) -> Option<SolverStats> {
+        Some(self.ws.stats())
+    }
+
+    fn set_telemetry(&mut self, on: bool) {
+        self.ws.set_timed(on);
     }
 }
 

@@ -100,6 +100,21 @@ struct SweepEvent {
     level: u8,
 }
 
+/// Cumulative per-workspace solver telemetry: solves performed,
+/// candidate points priced, and (only while timing is enabled via
+/// [`SolverWorkspace::set_timed`]) monotonic-clock solve nanoseconds.
+/// Candidate/solve counting is two u64 adds per solve — always on.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SolverStats {
+    /// Top-level solver invocations (either program, either model).
+    pub solves: u64,
+    /// Candidate points priced: max-model anchor candidates prepared per
+    /// sweep, TDMA coordinate-descent moves priced, greedy scan steps.
+    pub candidates: u64,
+    /// Wall-clock ns across timed solves (0 unless `set_timed(true)`).
+    pub ns: u64,
+}
+
 /// Reusable scratch for the per-round argmin solvers.  Owned by each
 /// policy across rounds so the hot path allocates nothing after the
 /// first round (all buffers retain capacity).
@@ -117,11 +132,26 @@ pub struct SolverWorkspace {
     got: Vec<bool>,
     /// TDMA: flat `m x n_levels` per-client delay table.
     delays: Vec<f64>,
+    /// Cumulative telemetry (counted always; ns only when `timed`).
+    stats: SolverStats,
+    /// Charge each solve's wall-clock ns to `stats.ns` (off by default —
+    /// the clock read is the only telemetry cost worth gating).
+    timed: bool,
 }
 
 impl SolverWorkspace {
     pub fn new() -> Self {
         SolverWorkspace::default()
+    }
+
+    /// Cumulative solver telemetry since construction.
+    pub fn stats(&self) -> SolverStats {
+        self.stats
+    }
+
+    /// Enable/disable wall-clock timing of each solve (`stats().ns`).
+    pub fn set_timed(&mut self, timed: bool) {
+        self.timed = timed;
     }
 
     /// Exact argmin of `a_coef * d(ch, c) + b_coef * rho(ch)`.
@@ -132,10 +162,16 @@ impl SolverWorkspace {
         a_coef: f64,
         b_coef: f64,
     ) -> Vec<CompressionChoice> {
-        match ctx.delay {
+        self.stats.solves += 1;
+        let t0 = self.timed.then(std::time::Instant::now);
+        let out = match ctx.delay {
             DelayModel::Max { .. } => self.argmin_cost_max(ctx, c, a_coef, b_coef),
             DelayModel::TdmaSum { .. } => self.argmin_cost_tdma(ctx, c, a_coef, b_coef),
+        };
+        if let Some(t0) = t0 {
+            self.stats.ns += t0.elapsed().as_nanos() as u64;
         }
+        out
     }
 
     /// Fixed-Error program: minimize duration subject to `q_bar <=
@@ -146,10 +182,16 @@ impl SolverWorkspace {
         c: &[f64],
         q_budget: f64,
     ) -> Vec<CompressionChoice> {
-        match ctx.delay {
+        self.stats.solves += 1;
+        let t0 = self.timed.then(std::time::Instant::now);
+        let out = match ctx.delay {
             DelayModel::Max { .. } => self.min_duration_max(ctx, c, q_budget),
             DelayModel::TdmaSum { .. } => self.min_duration_tdma(ctx, c, q_budget),
+        };
+        if let Some(t0) = t0 {
+            self.stats.ns += t0.elapsed().as_nanos() as u64;
         }
+        out
     }
 
     /// Build the sorted event list + candidate anchors for `c`.  The
@@ -186,6 +228,7 @@ impl SolverWorkspace {
         self.cands.push(floor);
         self.cands.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
         self.cands.dedup_by(|a, b| (*a - *b).abs() < TIE_EPS);
+        self.stats.candidates += self.cands.len() as u64;
     }
 
     /// The one event sweep behind every max-model solver: visits each
@@ -428,6 +471,7 @@ impl SolverWorkspace {
                         best_l = l;
                     }
                 }
+                self.stats.candidates += nl as u64 - 1;
                 if best_l != saved {
                     self.lev[j] = best_l;
                     let (d, q) = fresh_sums(&self.lev, &self.delays);
@@ -477,6 +521,7 @@ impl SolverWorkspace {
                     best = Some((score, j));
                 }
             }
+            self.stats.candidates += m as u64;
             match best {
                 Some((_, j)) => self.lev[j] += 1,
                 None => break, // everyone at the top level
@@ -727,6 +772,27 @@ mod tests {
             _ => Arc::new(ErrorBoundQuantizer::new(4096, 1.5625).unwrap()),
         };
         PolicyCtx::new(2, delay, comp)
+    }
+
+    #[test]
+    fn solver_stats_count_solves_and_candidates_without_changing_choices() {
+        for delay in [DelayModel::Max { theta: 0.0 }, DelayModel::TdmaSum { theta: 0.0 }] {
+            let ctx = ctx(delay, 4096);
+            let c = [1.0, 2.5, 0.7, 4.0];
+            let mut plain = SolverWorkspace::new();
+            let mut timed = SolverWorkspace::new();
+            timed.set_timed(true);
+            let a = plain.argmin_cost(&ctx, &c, 1.0, 0.3);
+            let b = timed.argmin_cost(&ctx, &c, 1.0, 0.3);
+            assert_eq!(a, b, "timing must not change the argmin");
+            for ws in [&plain, &timed] {
+                assert_eq!(ws.stats().solves, 1);
+                assert!(ws.stats().candidates > 0);
+            }
+            assert_eq!(plain.stats().ns, 0, "untimed workspace never reads the clock");
+            let _ = plain.min_duration_with_error_budget(&ctx, &c, 5.0);
+            assert_eq!(plain.stats().solves, 2);
+        }
     }
 
     #[test]

@@ -40,6 +40,7 @@
 use crate::des::FaultModel;
 use crate::metrics::{RunTrace, TracePoint};
 use crate::netsim::{NetworkProcess, ProbeEstimator};
+use crate::obs::Telemetry;
 use crate::policy::{mean_level, CompressionChoice, CompressionPolicy, PolicyCtx};
 
 /// The Assumption-1 stopping rule, generalized to weighted aggregations:
@@ -231,6 +232,19 @@ pub struct SimResult {
     /// Mean across-client compression level (diagnostic; bit-width for
     /// the paper's quantizer, historically named).
     pub mean_bits: f64,
+    /// Delay decomposition: mean-client transmit seconds over the run
+    /// (`sum_j client_delay / m`, minus the compute term).  Together
+    /// with `compute_s` and `wait_s` this sums to `wall` up to float
+    /// rounding; the accumulation is a separate pass, so `wall` itself
+    /// stays bit-identical to the pre-decomposition loop.
+    pub upload_s: f64,
+    /// Compute term of the decomposition: `theta * tau` per round per
+    /// client (0 under the paper-default theta = 0).
+    pub compute_s: f64,
+    /// Synchronization remainder: `wall - compute_s - upload_s` — time
+    /// the mean client spent waiting on stragglers (Max fold) or for
+    /// its TDMA slot (Sum fold).
+    pub wait_s: f64,
 }
 
 /// The one analytic round loop, parameterized by hooks.
@@ -254,14 +268,31 @@ impl<'a> Session<'a> {
 
     /// Run until the Assumption-1 stopping rule fires (or max_rounds).
     pub fn run(
-        mut self,
+        self,
         policy: &mut dyn CompressionPolicy,
         process: &mut dyn NetworkProcess,
     ) -> SimResult {
+        self.run_with(policy, process, &mut Telemetry::off())
+    }
+
+    /// [`Session::run`] with a telemetry handle: counts rounds and
+    /// records the per-round simulated-time span.  An off handle makes
+    /// every telemetry call a no-op, and the wall-clock accumulation is
+    /// untouched either way — `run` simply delegates here.
+    pub fn run_with(
+        mut self,
+        policy: &mut dyn CompressionPolicy,
+        process: &mut dyn NetworkProcess,
+        telem: &mut Telemetry,
+    ) -> SimResult {
         let ctx = self.ctx;
+        let theta_tau = ctx.delay.theta() * ctx.tau as f64;
         let mut rule = StoppingRule::new(self.k_eps);
         let mut wall = 0.0f64;
         let mut level_sum = 0.0f64;
+        // Decomposition accumulators (kept out of the `wall` float path).
+        let mut delay_sum = 0.0f64;
+        let mut m = 1usize;
         let mut r = 0usize;
         // Observation-chain buffers, reused across rounds (hooks write
         // their remapped views into these; no per-round allocation).
@@ -288,6 +319,12 @@ impl<'a> Session<'a> {
             level_sum += mean_level(&choices);
             let duration = ctx.duration(&choices, &c_true);
             wall += duration;
+            m = c_true.len();
+            for (j, ch) in choices.iter().enumerate() {
+                delay_sum += ctx.client_delay(ch.level, c_true[j]);
+            }
+            telem.count("sim.rounds", 1);
+            telem.sim_span("sim.round_s", duration);
             // Assumption 1: stop when r^2 > K_eps * sum rho.
             let stop = rule.record(1.0, rho);
             if !self.hooks.is_empty() {
@@ -309,11 +346,16 @@ impl<'a> Session<'a> {
                 break;
             }
         }
+        let compute_s = r as f64 * theta_tau;
+        let upload_s = delay_sum / m as f64 - compute_s;
         SimResult {
             wall,
             rounds: r,
             mean_rho: rule.rho_sum() / r as f64,
             mean_bits: level_sum / r as f64,
+            upload_s,
+            compute_s,
+            wait_s: wall - compute_s - upload_s,
         }
     }
 }
@@ -520,6 +562,37 @@ mod tests {
             slowed.wall,
             plain.wall
         );
+    }
+
+    #[test]
+    fn decomposition_sums_to_wall_and_theta_zero_means_no_compute() {
+        let ctx = ctx();
+        let mut p = parse_policy("nacfl:1").unwrap();
+        let mut net = process(7);
+        let r = simulate(&ctx, p.as_mut(), &mut net, 80.0, 100_000);
+        let sum = r.upload_s + r.compute_s + r.wait_s;
+        assert!((sum - r.wall).abs() <= 1e-9 * r.wall.max(1.0), "{sum} vs {}", r.wall);
+        assert_eq!(r.compute_s, 0.0, "paper default theta = 0");
+        // Max fold: the wall charges the max client, the upload term the
+        // mean client, so the straggler wait is strictly positive.
+        assert!(r.upload_s > 0.0 && r.wait_s > 0.0);
+    }
+
+    #[test]
+    fn telemetry_observes_the_loop_without_touching_the_clock() {
+        let ctx = ctx();
+        let mut p1 = parse_policy("nacfl:1").unwrap();
+        let mut p2 = parse_policy("nacfl:1").unwrap();
+        let mut n1 = process(11);
+        let mut n2 = process(11);
+        let plain = simulate(&ctx, p1.as_mut(), &mut n1, 60.0, 100_000);
+        let mut telem = Telemetry::on();
+        let watched = Session::new(&ctx, 60.0, 100_000).run_with(p2.as_mut(), &mut n2, &mut telem);
+        assert_eq!(plain.wall.to_bits(), watched.wall.to_bits());
+        assert_eq!(telem.counter("sim.rounds"), watched.rounds as u64);
+        let h = telem.histogram("sim.round_s").unwrap();
+        assert_eq!(h.count, watched.rounds as u64);
+        assert!((h.sum - watched.wall).abs() <= 1e-9 * watched.wall.max(1.0));
     }
 
     #[test]

@@ -47,11 +47,20 @@ impl BenchStats {
 pub struct BenchJson {
     bench: String,
     components: Vec<(String, BenchStats, Option<f64>)>,
+    /// Observability counters alongside the timings (solver sweep
+    /// candidates, solve ns, …): workload-size context that makes a
+    /// `ns_per_op` shift interpretable across PRs.
+    counters: Vec<(String, u64)>,
 }
 
 impl BenchJson {
     pub fn new(bench: &str) -> Self {
-        BenchJson { bench: bench.to_string(), components: Vec::new() }
+        BenchJson { bench: bench.to_string(), components: Vec::new(), counters: Vec::new() }
+    }
+
+    /// Record an observability counter (emitted under `"counters"`).
+    pub fn record_counter(&mut self, key: &str, value: u64) {
+        self.counters.push((key.to_string(), value));
     }
 
     /// Record a component's stats under a stable machine key.
@@ -105,7 +114,19 @@ impl BenchJson {
             }
             out.push('\n');
         }
-        out.push_str("  }\n}\n");
+        out.push_str("  }");
+        if !self.counters.is_empty() {
+            out.push_str(",\n  \"counters\": {\n");
+            for (i, (key, v)) in self.counters.iter().enumerate() {
+                out.push_str(&format!("    \"{}\": {v}", esc(key)));
+                if i + 1 < self.counters.len() {
+                    out.push(',');
+                }
+                out.push('\n');
+            }
+            out.push_str("  }");
+        }
+        out.push_str("\n}\n");
         out
     }
 
@@ -176,6 +197,8 @@ mod tests {
         let mut j = BenchJson::new("hotpath");
         j.record("nacfl_choose", &s);
         j.record_throughput("quantize_into", &s, 1_000_000);
+        j.record_counter("solver_solves", 42);
+        j.record_counter("solver_sweep_candidates", 9000);
         let doc = j.to_json();
         for needle in [
             "\"bench\": \"hotpath\"",
@@ -184,6 +207,9 @@ mod tests {
             "\"quantize_into\"",
             "\"ns_per_op\"",
             "\"gb_per_s\"",
+            "\"counters\"",
+            "\"solver_solves\": 42",
+            "\"solver_sweep_candidates\": 9000",
         ] {
             assert!(doc.contains(needle), "missing {needle} in {doc}");
         }
@@ -194,7 +220,11 @@ mod tests {
             "unbalanced braces: {doc}"
         );
         // No trailing comma before a closing brace.
-        assert!(!doc.contains(",\n  }"), "trailing comma: {doc}");
+        assert!(!doc.contains(",\n  }\n"), "trailing comma: {doc}");
+        // Counterless documents keep the original shape.
+        let mut plain = BenchJson::new("plain");
+        plain.record("only", &s);
+        assert!(!plain.to_json().contains("counters"), "{}", plain.to_json());
     }
 
     #[test]

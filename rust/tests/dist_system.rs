@@ -249,6 +249,49 @@ fn steal_reclaims_expired_claims_but_respects_live_leases() {
 }
 
 #[test]
+fn collector_renews_leases_mid_batch_and_telemetry_counts_it() {
+    // lease_s = 0 makes the half-lease renewal threshold 0 seconds, so
+    // the collector re-stamps claims for the still-pending runs after
+    // every completion — the degenerate setting turns "renew before the
+    // lease can expire" into something a fast test can observe.
+    let plan = test_plan();
+    let n = plan.n_runs();
+    let ls = temp("renew");
+    let _ = std::fs::remove_file(&ls);
+    let opts = ExecOptions {
+        threads: 2,
+        ledger: Some(ls.clone()),
+        worker: Some("w0".into()),
+        lease_s: 0,
+        telemetry: true,
+        ..Default::default()
+    };
+    let summary = execute(&plan, &opts, &mut []).unwrap();
+    assert_eq!(summary.records.len(), n);
+    let text = std::fs::read_to_string(&ls).unwrap();
+    let n_claims = text.matches("\"kind\":\"claim\"").count();
+    assert!(
+        n_claims > n,
+        "expected the {n} batch-start claims plus mid-batch renewals, got {n_claims}"
+    );
+    let led = read_dist_ledger(&ls).unwrap();
+    assert_eq!(led.runs.len(), n);
+    assert_eq!(led.n_torn, 0, "telem lines must parse, not count as torn");
+    let renewals: u64 = led
+        .telem
+        .iter()
+        .filter(|t| t.metric == "dist.lease_renewals")
+        .filter_map(|t| t.counter)
+        .sum();
+    assert!(renewals > 0, "renewals surface as a campaign telemetry counter");
+    // Campaign-scope lines are keyed by the worker id; per-run lines by
+    // the run's coordinate key.
+    assert!(led.telem.iter().any(|t| t.scope == "campaign" && t.key == "w0"));
+    assert!(led.telem.iter().any(|t| t.scope == "run"));
+    std::fs::remove_file(&ls).ok();
+}
+
+#[test]
 fn overlapping_ledgers_dedup_to_bit_identical_tables() {
     let plan = test_plan();
     let n = plan.n_runs();

@@ -1,0 +1,199 @@
+//! System tests for the telemetry subsystem (ISSUE-6):
+//!
+//! * telemetry **off vs on** leaves every run record, every ledger
+//!   record line, and every paper table byte-identical — observation
+//!   must not perturb the engines' frozen float paths;
+//! * every record's delay decomposition sums back to its wall clock
+//!   within 1e-9 across the closed form and all three DES disciplines;
+//! * `"kind":"telem"` lines survive a full trip through the distributed
+//!   ledger reader and re-serialize byte-for-byte;
+//! * the resume machinery never mistakes a telem line for a run.
+
+use nacfl::config::ExperimentConfig;
+use nacfl::exp::{build_tables, execute, read_dist_ledger, ExecOptions, ExperimentPlan, Tier};
+use nacfl::obs::TelemLine;
+
+fn temp(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("nacfl_obs_sys_{tag}_{}.jsonl", std::process::id()))
+        .to_str()
+        .unwrap()
+        .to_string()
+}
+
+/// 18 analytic runs (2 policies x 3 seeds x 3 disciplines): the sync
+/// closed form plus the DES engine under every aggregation discipline,
+/// so the decomposition invariant is exercised on each wall-clock path.
+fn test_plan() -> ExperimentPlan {
+    let mut base = ExperimentConfig::paper();
+    base.seeds = (0..3).collect();
+    base.policies = vec!["fixed:2".into(), "nacfl:1".into()];
+    ExperimentPlan::builder("obs demo")
+        .base(base)
+        .tiers(vec![Tier::Analytic { k_eps: 50.0 }])
+        .disciplines(vec![
+            nacfl::des::Discipline::Sync,
+            nacfl::des::Discipline::SemiSync { k: 7 },
+            nacfl::des::Discipline::Async { staleness_exp: 1.0 },
+        ])
+        .build()
+        .unwrap()
+}
+
+fn opts(ledger: &str, telemetry: bool) -> ExecOptions {
+    ExecOptions {
+        // Single-threaded => deterministic completion (and ledger line)
+        // order, so the off/on ledgers are comparable line by line.
+        threads: 1,
+        ledger: Some(ledger.to_string()),
+        telemetry,
+        ..Default::default()
+    }
+}
+
+/// The record lines of a ledger: everything that is not kind-tagged
+/// (plan header / claim / telem lines all carry `"kind"`).
+fn record_lines(text: &str) -> Vec<&str> {
+    text.lines()
+        .filter(|l| !l.trim().is_empty() && !l.contains("\"kind\":"))
+        .collect()
+}
+
+#[test]
+fn telemetry_off_and_on_produce_bit_identical_records_and_tables() {
+    let plan = test_plan();
+    let n = plan.n_runs();
+
+    let l_off = temp("off");
+    let l_on = temp("on");
+    let _ = std::fs::remove_file(&l_off);
+    let _ = std::fs::remove_file(&l_on);
+
+    let off = execute(&plan, &opts(&l_off, false), &mut []).unwrap();
+    let on = execute(&plan, &opts(&l_on, true), &mut []).unwrap();
+    assert_eq!(off.records.len(), n);
+    assert_eq!(on.records.len(), n);
+
+    // Ledger record lines: byte-identical, in identical order.
+    let t_off = std::fs::read_to_string(&l_off).unwrap();
+    let t_on = std::fs::read_to_string(&l_on).unwrap();
+    let r_off = record_lines(&t_off);
+    let r_on = record_lines(&t_on);
+    assert_eq!(r_off.len(), n);
+    assert_eq!(
+        r_off, r_on,
+        "telemetry must not perturb a single record byte"
+    );
+
+    // Only the telemetry run streams telem lines.
+    assert!(!t_off.contains("\"kind\":\"telem\""), "off => no telem lines");
+    assert!(t_on.contains("\"kind\":\"telem\""), "on => telem lines stream");
+
+    // Paper tables regenerate byte-identically from either summary.
+    let tab = |records| -> Vec<String> {
+        build_tables(None, records)
+            .unwrap()
+            .iter()
+            .map(|t| t.render())
+            .collect()
+    };
+    assert_eq!(tab(&off.records), tab(&on.records));
+
+    std::fs::remove_file(&l_off).ok();
+    std::fs::remove_file(&l_on).ok();
+}
+
+#[test]
+fn delay_decomposition_sums_to_wall_on_every_path() {
+    let plan = test_plan();
+    let in_memory = ExecOptions { threads: 2, ..Default::default() };
+    let summary = execute(&plan, &in_memory, &mut []).unwrap();
+    assert_eq!(summary.records.len(), plan.n_runs());
+    for r in &summary.records {
+        let sum = r.upload_s + r.compute_s + r.wait_s;
+        assert!(
+            (sum - r.wall).abs() <= 1e-9 * r.wall.abs().max(1.0),
+            "{}: upload {} + compute {} + wait {} = {} != wall {}",
+            r.key(),
+            r.upload_s,
+            r.compute_s,
+            r.wait_s,
+            sum,
+            r.wall
+        );
+        assert!(r.upload_s.is_finite() && r.compute_s.is_finite() && r.wait_s.is_finite());
+        // Transmission time is physical on every analytic/DES path.
+        assert!(r.upload_s >= 0.0, "{}: negative upload_s {}", r.key(), r.upload_s);
+    }
+    // Early-close disciplines must exist in the mix (they are the
+    // reason wait_s is allowed to go negative).
+    assert!(summary.records.iter().any(|r| r.discipline != "sync"));
+}
+
+#[test]
+fn telem_lines_round_trip_through_the_dist_ledger_reader() {
+    let plan = test_plan();
+    let n = plan.n_runs();
+    let ls = temp("trip");
+    let _ = std::fs::remove_file(&ls);
+    let summary = execute(&plan, &opts(&ls, true), &mut []).unwrap();
+    assert_eq!(summary.records.len(), n);
+
+    let led = read_dist_ledger(&ls).unwrap();
+    assert_eq!(led.runs.len(), n);
+    assert_eq!(led.n_torn, 0, "telem lines must parse cleanly");
+    assert!(!led.telem.is_empty(), "telemetry run must stream telem lines");
+
+    // Per-run scope keyed by run coordinates; campaign scope keyed by
+    // worker id ("local" when none was set).
+    let keys: std::collections::BTreeSet<_> =
+        led.runs.iter().map(|r| r.key()).collect();
+    assert!(led
+        .telem
+        .iter()
+        .filter(|t| t.scope == "run")
+        .all(|t| keys.contains(&t.key)));
+    assert!(led
+        .telem
+        .iter()
+        .any(|t| t.scope == "campaign" && t.key == "local"));
+
+    // The metric namespace covers all instrumented layers: session
+    // round loop, DES engine, solver, and the execution engine.
+    for metric in [
+        "sim.rounds",
+        "des.rounds",
+        "des.events_popped",
+        "solver.solves",
+        "exp.runs_started",
+        "exp.runs_completed",
+    ] {
+        assert!(
+            led.telem.iter().any(|t| t.metric == metric),
+            "missing metric {metric} in {:?}",
+            led.telem.iter().map(|t| &t.metric).collect::<Vec<_>>()
+        );
+    }
+
+    // Byte-stable round trip for every line the engine wrote.
+    let text = std::fs::read_to_string(&ls).unwrap();
+    let wire: Vec<&str> = text
+        .lines()
+        .filter(|l| l.contains("\"kind\":\"telem\""))
+        .collect();
+    assert_eq!(wire.len(), led.telem.len());
+    for (line, parsed) in wire.iter().zip(led.telem.iter()) {
+        assert_eq!(&parsed.to_json(), line, "re-serialization must be byte-stable");
+        assert_eq!(&TelemLine::from_json(line).unwrap(), parsed);
+    }
+
+    // Resume sees only the records: a second pass re-executes nothing
+    // and appends no duplicate records.
+    let resumed = execute(&plan, &opts(&ls, false), &mut []).unwrap();
+    assert_eq!(resumed.n_cached, n, "telem lines are invisible to resume");
+    assert_eq!(resumed.n_executed, 0);
+    let led2 = read_dist_ledger(&ls).unwrap();
+    assert_eq!(led2.runs.len(), n, "no duplicate records on resume");
+
+    std::fs::remove_file(&ls).ok();
+}
