@@ -22,7 +22,8 @@ use nacfl::data::synth::{generate, SynthConfig};
 use nacfl::data::{partition, PartitionKind};
 use nacfl::fl::engine::{make_engine, ComputeEngine, RustEngine};
 use nacfl::model::{Mlp, MlpDims};
-use nacfl::netsim::{DelayModel, NetworkProcess, Scenario, ScenarioKind};
+use nacfl::netsim::{DelayModel, FlowNet, FlowPreset, NetworkProcess, Scenario, ScenarioKind};
+use nacfl::obs::Telemetry;
 use nacfl::policy::solver::{reference, SolverWorkspace};
 use nacfl::policy::{parse_policy, CompressionPolicy, NacFl, PolicyCtx};
 use nacfl::quant::stochastic::quantize_into;
@@ -165,6 +166,34 @@ fn main() {
     });
     println!("{}", s.report());
     report.record("netsim_step", &s);
+
+    // Flow-network fair-share allocator (DESIGN.md §13): one fully
+    // contended round on a 4x16 tower topology — begin_round, admit
+    // all 64 uploads, drain every completion through the repricer.
+    let preset = FlowPreset::parse("tower:4x16").unwrap();
+    let m_flow = 64usize;
+    let jobs: Vec<(f64, f64)> = {
+        let mut jrng = Rng::new(5);
+        (0..m_flow)
+            .map(|_| (1000.0 * (1.0 + jrng.uniform()), 0.5 + 4.0 * jrng.uniform()))
+            .collect()
+    };
+    let frng = Rng::new(6);
+    let mut net = FlowNet::new(&preset, m_flow, &frng, 1.0).unwrap();
+    let mut telem = Telemetry::off();
+    let s = bench("flow_fair_share (tower:4x16, m=64 round)", budget, || {
+        net.begin_round(0.0, &mut telem);
+        for (j, &(bits, solo)) in jobs.iter().enumerate() {
+            net.admit(j, bits, solo, &mut telem);
+        }
+        let mut last = 0.0f64;
+        while let Some((t, _, _)) = net.next_completion(&mut telem) {
+            last = t;
+        }
+        black_box(last);
+    });
+    println!("{}", s.report());
+    report.record("flow_fair_share", &s);
 
     // Rust quantizer throughput on a full update vector.
     let v: Vec<f32> = (0..dims::P).map(|_| rng.normal() as f32).collect();

@@ -160,6 +160,13 @@ pub struct DesResult {
     pub compute_s: f64,
     /// Remainder `wall - compute_s - upload_s`.
     pub wait_s: f64,
+    /// Mean-client seconds spent rate-limited below solo access
+    /// capacity by a shared bottleneck (flow scenarios only; the
+    /// exogenous engine has no shared links, so this is 0).  *Not* a
+    /// term of the `upload_s + compute_s + wait_s == wall`
+    /// decomposition — congestion seconds are a subset of upload
+    /// seconds, reported separately.
+    pub congestion_s: f64,
 }
 
 impl DesResult {
@@ -177,7 +184,11 @@ impl DesResult {
 /// Effective rounds-proxy for an aggregate of `delivered` updates out of
 /// `m` clients (module docs): `sqrt(1 + (m/k) q_bar_k)`.  For k = m this
 /// is exactly `PolicyCtx::rho`, float-op for float-op.
-fn rho_effective(ctx: &PolicyCtx, delivered: &[CompressionChoice], m: usize) -> f64 {
+pub(crate) fn rho_effective(
+    ctx: &PolicyCtx,
+    delivered: &[CompressionChoice],
+    m: usize,
+) -> f64 {
     debug_assert!(!delivered.is_empty());
     let kd = delivered.len() as f64;
     let q_bar_k = delivered
@@ -341,6 +352,7 @@ fn run_round_based(
         upload_s,
         compute_s,
         wait_s: wall - compute_s - upload_s,
+        congestion_s: 0.0,
     })
 }
 
@@ -470,6 +482,7 @@ fn run_async(
         upload_s,
         compute_s,
         wait_s: wall - compute_s - upload_s,
+        congestion_s: 0.0,
     })
 }
 

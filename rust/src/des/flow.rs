@@ -1,0 +1,634 @@
+//! DES integration of the flow-level network (`flow:<preset>` tier).
+//!
+//! The exogenous engine schedules each transfer at a *fixed* delay
+//! drawn from the network process.  Here the process still supplies
+//! each client's private access-link BTD, but the transfer itself runs
+//! through [`FlowNet`]: its completion time emerges from max-min fair
+//! sharing of the preset's bottleneck links, repriced whenever the
+//! active-flow set or cross-traffic state changes (rate-change
+//! events).  Compression choices therefore feed back into the delays
+//! other clients see — the closed congestion loop of the paper's
+//! abstract.
+//!
+//! ## Probe feedback
+//!
+//! On presets with shared links the policy does *not* see the true
+//! access BTDs: it sees an in-band [`ProbeEstimator`] EWMA of the
+//! *observed effective* BTDs of completed transfers (total transfer
+//! time over wire bits).  NAC-FL thus adapts to congestion it helps
+//! create; on `flow:solo` there is nothing shared, the policy sees
+//! the raw state, and the sync path reproduces the exogenous engine
+//! bit-for-bit (the parity pin in the tests below).
+//!
+//! ## Decomposition
+//!
+//! `upload_s`/`compute_s`/`wait_s` mirror the exogenous engine.  For
+//! round-based disciplines a transfer still in flight when the round
+//! closes is charged the seconds it actually spent in flight.  The
+//! async path admits a client's next upload at the instant its
+//! previous one completes, folding the compute term into the
+//! decomposition but not the event clock (exact under the
+//! paper-default `theta = 0`).  `congestion_s` is the new column:
+//! mean-per-client seconds flows spent rate-limited below their solo
+//! access capacity — a subset of upload seconds, not a fourth term.
+
+use super::engine::{rho_effective, DesConfig, DesResult, Discipline};
+use super::faults::FaultModel;
+use crate::netsim::flow::{FlowNet, FlowPreset, REF_BTD};
+use crate::netsim::{DelayModel, NetworkProcess, ProbeEstimator};
+use crate::obs::Telemetry;
+use crate::policy::{mean_level, CompressionChoice, CompressionPolicy, PolicyCtx};
+use crate::sim::StoppingRule;
+use crate::util::rng::Rng;
+use anyhow::{anyhow, Result};
+
+/// EWMA smoothing of the in-band effective-BTD probe (§V uses the same
+/// estimator; congestion observations are noiseless but lagged).
+const PROBE_ALPHA: f64 = 0.5;
+
+/// Mean on/off holding time of the cross-traffic modulation: the solo
+/// transfer time of a 1-bit-level update at the reference BTD, so
+/// toggles land at the same timescale as the transfers they perturb.
+fn cross_hold_s(ctx: &PolicyCtx) -> f64 {
+    ctx.wire_bits(1) * REF_BTD
+}
+
+/// Run the flow-network DES tier until the generalized stopping rule
+/// fires (or the round cap).  `fault_rng` drives dropout draws only;
+/// `net_rng` seeds the cross-traffic streams and the probe estimator,
+/// so fault-free solo runs consume neither and stay sample-path
+/// aligned with the exogenous tiers through the shared `process`.
+pub fn simulate_flow_des(
+    ctx: &PolicyCtx,
+    policy: &mut dyn CompressionPolicy,
+    process: &mut dyn NetworkProcess,
+    preset: &FlowPreset,
+    cfg: &DesConfig,
+    fault_rng: Rng,
+    net_rng: Rng,
+) -> Result<DesResult> {
+    simulate_flow_des_with(
+        ctx,
+        policy,
+        process,
+        preset,
+        cfg,
+        fault_rng,
+        net_rng,
+        &mut Telemetry::off(),
+    )
+}
+
+/// [`simulate_flow_des`] with a telemetry handle: everything the
+/// exogenous engine records, plus `net.rate_changes`,
+/// `net.link_util`, and `net.cross_toggles` from the flow network.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_flow_des_with(
+    ctx: &PolicyCtx,
+    policy: &mut dyn CompressionPolicy,
+    process: &mut dyn NetworkProcess,
+    preset: &FlowPreset,
+    cfg: &DesConfig,
+    fault_rng: Rng,
+    net_rng: Rng,
+    telem: &mut Telemetry,
+) -> Result<DesResult> {
+    if process.dim() == 0 {
+        return Err(anyhow!("network process has zero clients"));
+    }
+    if matches!(ctx.delay, DelayModel::TdmaSum { .. }) {
+        return Err(anyhow!(
+            "flow scenarios model concurrent transfers sharing links; \
+             the TDMA-sum delay model does not apply"
+        ));
+    }
+    match cfg.discipline {
+        Discipline::Async { staleness_exp } => run_async_flow(
+            ctx,
+            policy,
+            process,
+            preset,
+            cfg,
+            fault_rng,
+            staleness_exp,
+            net_rng,
+            telem,
+        ),
+        _ => run_round_based_flow(ctx, policy, process, preset, cfg, fault_rng, net_rng, telem),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_round_based_flow(
+    ctx: &PolicyCtx,
+    policy: &mut dyn CompressionPolicy,
+    process: &mut dyn NetworkProcess,
+    preset: &FlowPreset,
+    cfg: &DesConfig,
+    mut rng: Rng,
+    net_rng: Rng,
+    telem: &mut Telemetry,
+) -> Result<DesResult> {
+    let m = process.dim();
+    let need = match cfg.discipline {
+        Discipline::Sync => m,
+        Discipline::SemiSync { k } => {
+            if k == 0 || k > m {
+                return Err(anyhow!("semi-sync K must be in 1..={m}, got {k}"));
+            }
+            k
+        }
+        Discipline::Async { .. } => unreachable!("async dispatches to run_async_flow"),
+    };
+    let theta_tau = ctx.delay.theta() * ctx.tau as f64;
+    let round_span = match cfg.discipline {
+        Discipline::Sync => "des.round_s.sync",
+        Discipline::SemiSync { .. } => "des.round_s.semi_sync",
+        Discipline::Async { .. } => unreachable!("async dispatches to run_async_flow"),
+    };
+
+    let mut net = FlowNet::new(preset, m, &net_rng, cross_hold_s(ctx))?;
+    let mut probe = if preset.has_shared() {
+        Some(ProbeEstimator::new(m, PROBE_ALPHA, 0.0, net_rng.derive("probe", 0)))
+    } else {
+        None
+    };
+    // Last observed effective BTD per client (seeded with the true
+    // state of the first round); empty until the probe path is live.
+    let mut observed: Vec<f64> = Vec::new();
+    let mut c_obs: Vec<f64> = Vec::with_capacity(m);
+
+    let mut lost = vec![false; m];
+    let mut got = vec![false; m];
+    // Per-round completion times, round-relative (in-flight transfers
+    // charged their time-in-flight at the barrier).
+    let mut comp_t = vec![0.0f64; m];
+    let mut delivered: Vec<CompressionChoice> = Vec::with_capacity(m);
+    let mut wall = 0.0f64;
+    let mut delay_sum = 0.0f64;
+    let mut rule = StoppingRule::new(cfg.k_eps);
+    let mut aggregations = 0usize;
+    let mut rounds = 0usize;
+    let mut bits_sum = 0.0f64;
+    let mut dropped = 0usize;
+    let mut late = 0usize;
+    let mut converged = false;
+
+    while rounds < cfg.max_rounds {
+        rounds += 1;
+        let c = process.next_state();
+        let use_probe = probe.is_some() && !observed.is_empty();
+        let choices = if use_probe {
+            let est = probe.as_mut().expect("use_probe checked is_some");
+            est.observe_into(&observed, &mut c_obs);
+            policy.choose(ctx, &c_obs)
+        } else {
+            policy.choose(ctx, &c)
+        };
+        if probe.is_some() && observed.is_empty() {
+            observed.extend_from_slice(&c);
+        }
+        bits_sum += mean_level(&choices);
+
+        // Admit this round's uploads; the network clock is
+        // round-relative (everyone re-syncs at the barrier), the
+        // cross-traffic modulation runs on the global clock.
+        net.begin_round(wall, telem);
+        for j in 0..m {
+            lost[j] = cfg.faults.draw_drop(&mut rng);
+            net.admit(
+                j,
+                ctx.wire_bits(choices[j].level),
+                c[j] * cfg.faults.slowdown_of(j),
+                telem,
+            );
+        }
+        telem.gauge_max("des.queue_high_water", m as u64);
+
+        // Pop completions until the discipline closes the round.
+        for g in got.iter_mut() {
+            *g = false;
+        }
+        let mut popped = 0usize;
+        let mut last_t = 0.0f64;
+        while popped < need {
+            let Some((t, j, eff)) = net.next_completion(telem) else { break };
+            got[j] = true;
+            popped += 1;
+            last_t = t;
+            comp_t[j] = t;
+            if !observed.is_empty() {
+                observed[j] = eff;
+            }
+        }
+        for j in 0..m {
+            if !got[j] {
+                comp_t[j] = last_t;
+            }
+        }
+        for &t in comp_t.iter() {
+            delay_sum += theta_tau + t;
+        }
+        let dur = if popped > 0 { theta_tau + last_t } else { 0.0 };
+        late += m - popped;
+        wall += dur;
+        telem.count("des.rounds", 1);
+        telem.count("des.events_popped", popped as u64);
+        telem.sim_span(round_span, dur);
+
+        delivered.clear();
+        delivered.extend((0..m).filter(|&j| got[j] && !lost[j]).map(|j| choices[j]));
+        dropped += popped - delivered.len();
+        if !delivered.is_empty() {
+            aggregations += 1;
+            if rule.record(1.0, rho_effective(ctx, &delivered, m)) {
+                converged = true;
+                break;
+            }
+        }
+    }
+
+    let compute_s = rounds as f64 * theta_tau;
+    let upload_s = delay_sum / m as f64 - compute_s;
+    Ok(DesResult {
+        wall,
+        rounds,
+        aggregations,
+        effective_rounds: rule.progress(),
+        mean_rho: rule.mean_rho(),
+        mean_bits: bits_sum / rounds.max(1) as f64,
+        dropped_updates: dropped,
+        late_updates: late,
+        converged,
+        upload_s,
+        compute_s,
+        wait_s: wall - compute_s - upload_s,
+        congestion_s: net.congestion_s() / m as f64,
+    })
+}
+
+/// Begin one async client-round at the network's current clock: draw
+/// the state, choose bits (on the probe estimate once observations
+/// exist), and admit client `j`'s upload.  Returns the across-client
+/// mean of the chosen bits and what the aggregation at completion
+/// needs (`(read_version, choice, lost)`).
+#[allow(clippy::too_many_arguments)]
+fn start_flow_round(
+    ctx: &PolicyCtx,
+    policy: &mut dyn CompressionPolicy,
+    process: &mut dyn NetworkProcess,
+    probe: &mut Option<ProbeEstimator>,
+    observed: &mut Vec<f64>,
+    c_obs: &mut Vec<f64>,
+    net: &mut FlowNet,
+    faults: &FaultModel,
+    rng: &mut Rng,
+    j: usize,
+    version: u64,
+    telem: &mut Telemetry,
+) -> (f64, (u64, CompressionChoice, bool)) {
+    let c = process.next_state();
+    let use_probe = probe.is_some() && !observed.is_empty();
+    let choices = if use_probe {
+        let est = probe.as_mut().expect("use_probe checked is_some");
+        est.observe_into(observed, c_obs);
+        policy.choose(ctx, c_obs)
+    } else {
+        policy.choose(ctx, &c)
+    };
+    if probe.is_some() && observed.is_empty() {
+        observed.extend_from_slice(&c);
+    }
+    let lost = faults.draw_drop(rng);
+    net.admit(
+        j,
+        ctx.wire_bits(choices[j].level),
+        c[j] * faults.slowdown_of(j),
+        telem,
+    );
+    (mean_level(&choices), (version, choices[j], lost))
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_async_flow(
+    ctx: &PolicyCtx,
+    policy: &mut dyn CompressionPolicy,
+    process: &mut dyn NetworkProcess,
+    preset: &FlowPreset,
+    cfg: &DesConfig,
+    mut rng: Rng,
+    staleness_exp: f64,
+    net_rng: Rng,
+    telem: &mut Telemetry,
+) -> Result<DesResult> {
+    let m = process.dim();
+    let theta_tau = ctx.delay.theta() * ctx.tau as f64;
+    let mut net = FlowNet::new(preset, m, &net_rng, cross_hold_s(ctx))?;
+    let mut probe = if preset.has_shared() {
+        Some(ProbeEstimator::new(m, PROBE_ALPHA, 0.0, net_rng.derive("probe", 0)))
+    } else {
+        None
+    };
+    let mut observed: Vec<f64> = Vec::new();
+    let mut c_obs: Vec<f64> = Vec::with_capacity(m);
+
+    // What each client's in-flight upload will aggregate as on
+    // completion, and when it was admitted (decomposition).
+    let mut pending: Vec<(u64, CompressionChoice, bool)> =
+        vec![(0, CompressionChoice::new(1), false); m];
+    let mut admit_t = vec![0.0f64; m];
+    let mut version: u64 = 0;
+    let mut wall = 0.0f64;
+    let mut delay_sum = 0.0f64;
+    let mut rule = StoppingRule::new(cfg.k_eps);
+    let mut aggregations = 0usize;
+    let mut rounds = 0usize;
+    let mut bits_sum = 0.0f64;
+    let mut dropped = 0usize;
+    let mut converged = false;
+    let max_starts = cfg.max_rounds.saturating_mul(m);
+
+    // Async has no barriers: one round-relative clock for the whole
+    // run, so round-relative and global time coincide.
+    net.begin_round(0.0, telem);
+    for j in 0..m {
+        let (mb, p) = start_flow_round(
+            ctx,
+            policy,
+            process,
+            &mut probe,
+            &mut observed,
+            &mut c_obs,
+            &mut net,
+            &cfg.faults,
+            &mut rng,
+            j,
+            version,
+            telem,
+        );
+        bits_sum += mb;
+        pending[j] = p;
+        admit_t[j] = 0.0;
+        rounds += 1;
+    }
+    telem.count("des.rounds", m as u64);
+    telem.gauge_max("des.queue_high_water", m as u64);
+
+    while let Some((t, j, eff)) = net.next_completion(telem) {
+        telem.count("des.events_popped", 1);
+        telem.sim_span("des.round_s.async", t - wall);
+        wall = t;
+        delay_sum += theta_tau + (t - admit_t[j]);
+        if !observed.is_empty() {
+            observed[j] = eff;
+        }
+        let (read_version, choice, was_lost) = pending[j];
+        if was_lost {
+            dropped += 1;
+        } else {
+            let stale = (version - read_version) as f64;
+            let u = (1.0 + stale).powf(-staleness_exp) / m as f64;
+            let fired = rule.record(u, rho_effective(ctx, &[choice], m));
+            version += 1;
+            aggregations += 1;
+            if fired {
+                converged = true;
+                break;
+            }
+        }
+        if rounds >= max_starts {
+            break;
+        }
+        let (mb, p) = start_flow_round(
+            ctx,
+            policy,
+            process,
+            &mut probe,
+            &mut observed,
+            &mut c_obs,
+            &mut net,
+            &cfg.faults,
+            &mut rng,
+            j,
+            version,
+            telem,
+        );
+        bits_sum += mb;
+        pending[j] = p;
+        admit_t[j] = t;
+        rounds += 1;
+        telem.count("des.rounds", 1);
+    }
+
+    let compute_s = rounds as f64 / m as f64 * theta_tau;
+    let upload_s = delay_sum / m as f64 - compute_s;
+    Ok(DesResult {
+        wall,
+        rounds,
+        aggregations,
+        effective_rounds: rule.progress(),
+        mean_rho: rule.mean_rho(),
+        mean_bits: bits_sum / rounds.max(1) as f64,
+        dropped_updates: dropped,
+        late_updates: 0,
+        converged,
+        upload_s,
+        compute_s,
+        wait_s: wall - compute_s - upload_s,
+        congestion_s: net.congestion_s() / m as f64,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::des::engine::simulate_des;
+    use crate::netsim::btd::IidLogNormal;
+    use crate::policy::parse_policy;
+
+    fn ctx() -> PolicyCtx {
+        PolicyCtx::paper_default(198_760)
+    }
+
+    fn process(seed: u64) -> IidLogNormal {
+        IidLogNormal { m: 10, mu: 1.0, sigma: 1.0, rng: Rng::new(seed) }
+    }
+
+    fn preset(s: &str) -> FlowPreset {
+        FlowPreset::parse(s).unwrap()
+    }
+
+    #[test]
+    fn solo_sync_reproduces_the_exogenous_engine_bit_for_bit() {
+        let ctx = ctx();
+        for seed in [0u64, 3, 11] {
+            for spec in ["fixed:2", "nacfl:1", "error:5.25"] {
+                let mut p1 = parse_policy(spec).unwrap();
+                let mut p2 = parse_policy(spec).unwrap();
+                let mut n1 = process(seed);
+                let mut n2 = process(seed); // paired sample path
+                let cfg = DesConfig::new(Discipline::Sync, 100.0).with_max_rounds(100_000);
+                let r_exo = simulate_des(&ctx, p1.as_mut(), &mut n1, &cfg, Rng::new(999)).unwrap();
+                let r_flow = simulate_flow_des(
+                    &ctx,
+                    p2.as_mut(),
+                    &mut n2,
+                    &preset("solo"),
+                    &cfg,
+                    Rng::new(999),
+                    Rng::new(5),
+                )
+                .unwrap();
+                assert_eq!(r_flow.rounds, r_exo.rounds, "{spec} seed {seed}");
+                assert_eq!(
+                    r_flow.wall.to_bits(),
+                    r_exo.wall.to_bits(),
+                    "{spec} seed {seed}: {} vs {}",
+                    r_flow.wall,
+                    r_exo.wall
+                );
+                assert_eq!(r_flow.upload_s.to_bits(), r_exo.upload_s.to_bits(), "{spec}");
+                assert_eq!(r_flow.congestion_s, 0.0, "solo has no shared links");
+                assert!(r_flow.converged);
+            }
+        }
+    }
+
+    #[test]
+    fn shared_tower_congestion_stretches_rounds() {
+        let ctx = ctx();
+        let cfg = DesConfig::new(Discipline::Sync, 60.0);
+        let mut p1 = parse_policy("fixed:2").unwrap();
+        let mut p2 = parse_policy("fixed:2").unwrap();
+        let mut n1 = process(4);
+        let mut n2 = process(4);
+        let solo = simulate_flow_des(
+            &ctx, p1.as_mut(), &mut n1, &preset("solo"), &cfg, Rng::new(0), Rng::new(1),
+        )
+        .unwrap();
+        let tower = simulate_flow_des(
+            &ctx, p2.as_mut(), &mut n2, &preset("tower:1x10"), &cfg, Rng::new(0), Rng::new(1),
+        )
+        .unwrap();
+        assert!(tower.congestion_s > 0.0, "shared uplink must rate-limit someone");
+        assert!(
+            tower.mean_round_duration() > solo.mean_round_duration(),
+            "tower {:.3e} vs solo {:.3e}",
+            tower.mean_round_duration(),
+            solo.mean_round_duration()
+        );
+    }
+
+    #[test]
+    fn cross_traffic_slows_the_fixed_policy_and_fires_rate_changes() {
+        let ctx = ctx();
+        let cfg = DesConfig::new(Discipline::Sync, 60.0);
+        let mut p1 = parse_policy("fixed:2").unwrap();
+        let mut p2 = parse_policy("fixed:2").unwrap();
+        let mut n1 = process(8);
+        let mut n2 = process(8);
+        let mut telem = Telemetry::on();
+        let plain = simulate_flow_des(
+            &ctx, p1.as_mut(), &mut n1, &preset("ingress"), &cfg, Rng::new(0), Rng::new(2),
+        )
+        .unwrap();
+        let crossed = simulate_flow_des_with(
+            &ctx,
+            p2.as_mut(),
+            &mut n2,
+            &preset("ingress:x2"),
+            &cfg,
+            Rng::new(0),
+            Rng::new(2),
+            &mut telem,
+        )
+        .unwrap();
+        assert!(telem.counter("net.rate_changes") > 0, "toggles must reprice flows");
+        assert!(telem.counter("net.cross_toggles") > 0);
+        assert!(
+            crossed.wall > plain.wall,
+            "cross-traffic {:.3e} vs plain {:.3e}",
+            crossed.wall,
+            plain.wall
+        );
+    }
+
+    #[test]
+    fn async_flow_converges_and_counts_congestion() {
+        let ctx = ctx();
+        let cfg = DesConfig::new(Discipline::Async { staleness_exp: 0.5 }, 50.0);
+        let mut p = parse_policy("fixed:2").unwrap();
+        let mut n = process(9);
+        let r = simulate_flow_des(
+            &ctx, p.as_mut(), &mut n, &preset("tower:2x5"), &cfg, Rng::new(1), Rng::new(3),
+        )
+        .unwrap();
+        assert!(r.converged, "async flow should converge: {r:?}");
+        assert!(r.aggregations > 0);
+        assert!(r.wall > 0.0);
+        assert!(r.congestion_s >= 0.0);
+        let sum = r.upload_s + r.compute_s + r.wait_s;
+        assert!((sum - r.wall).abs() <= 1e-9 * r.wall.abs().max(1.0), "{sum} vs {}", r.wall);
+    }
+
+    #[test]
+    fn telemetry_leaves_the_flow_event_core_untouched() {
+        let ctx = ctx();
+        for disc in [
+            Discipline::Sync,
+            Discipline::SemiSync { k: 6 },
+            Discipline::Async { staleness_exp: 0.5 },
+        ] {
+            let mut p1 = parse_policy("nacfl:1").unwrap();
+            let mut p2 = parse_policy("nacfl:1").unwrap();
+            let mut n1 = process(6);
+            let mut n2 = process(6);
+            let cfg = DesConfig::new(disc, 60.0);
+            let pre = preset("tower:2x5:x1");
+            let plain = simulate_flow_des(
+                &ctx, p1.as_mut(), &mut n1, &pre, &cfg, Rng::new(2), Rng::new(7),
+            )
+            .unwrap();
+            let mut telem = Telemetry::on();
+            let watched = simulate_flow_des_with(
+                &ctx,
+                p2.as_mut(),
+                &mut n2,
+                &pre,
+                &cfg,
+                Rng::new(2),
+                Rng::new(7),
+                &mut telem,
+            )
+            .unwrap();
+            assert_eq!(plain.wall.to_bits(), watched.wall.to_bits(), "{disc}");
+            assert_eq!(plain.rounds, watched.rounds, "{disc}");
+            assert_eq!(
+                plain.congestion_s.to_bits(),
+                watched.congestion_s.to_bits(),
+                "{disc}"
+            );
+            assert!(telem.counter("des.events_popped") > 0, "{disc}");
+            assert!(telem.histogram("net.link_util").is_some(), "{disc}");
+        }
+    }
+
+    #[test]
+    fn tdma_delay_model_is_rejected() {
+        let mut ctx = ctx();
+        ctx.delay = DelayModel::TdmaSum { theta: 0.0 };
+        let mut p = parse_policy("fixed:2").unwrap();
+        let mut n = process(0);
+        let cfg = DesConfig::new(Discipline::Sync, 50.0);
+        assert!(simulate_flow_des(
+            &ctx,
+            p.as_mut(),
+            &mut n,
+            &preset("solo"),
+            &cfg,
+            Rng::new(0),
+            Rng::new(0)
+        )
+        .is_err());
+    }
+}

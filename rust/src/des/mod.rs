@@ -30,11 +30,19 @@
 //! Convergence accounting generalizes the Assumption-1 stopping rule to
 //! partial/weighted aggregation; see `engine` for the exact rule and
 //! DESIGN.md §DES for the derivation.
+//!
+//! [`flow`] swaps the fixed-delay transfer events for the flow-level
+//! bandwidth-sharing network of `netsim::flow` (`flow:<preset>`
+//! scenarios): completions are repriced whenever the active-flow set
+//! changes, and policies see probe-estimated *effective* BTDs instead
+//! of the raw state — the closed congestion loop (DESIGN.md §13).
 
 pub mod engine;
 pub mod event;
 pub mod faults;
+pub mod flow;
 
 pub use engine::{simulate_des, simulate_des_with, DesConfig, DesResult, Discipline};
 pub use event::EventQueue;
 pub use faults::FaultModel;
+pub use flow::{simulate_flow_des, simulate_flow_des_with};

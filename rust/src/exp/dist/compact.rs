@@ -1,0 +1,259 @@
+//! Ledger compaction: rewrite a distributed ledger without its
+//! superseded lines.
+//!
+//! Long or shared campaigns accumulate lines no reader consults: claim
+//! lines for runs that have since completed (a completed record always
+//! supersedes any claim), older claims for a key that was re-claimed
+//! (last-writer-wins), duplicated run records from workers racing on a
+//! shared file (bit-identical by coordinate purity; the last wins), and
+//! per-run telemetry attached to superseded duplicates.
+//! [`compact_ledger`] rewrites the file keeping only the surviving
+//! lines, preserving every invariant the readers rely on:
+//!
+//! * the plan header stays the first line;
+//! * the latest run record per coordinate key survives, re-emitted
+//!   through the same float-exact `to_json` the ledger was written
+//!   with, in the order the surviving records appear in the file;
+//! * each surviving record is followed by its per-run telemetry
+//!   (latest line per `(key, metric)`), matching the writer's layout;
+//! * claims survive only for keys with no completed run (sorted by key
+//!   — claim order is advisory and carries no information);
+//! * campaign-scope telemetry is kept in file order.
+//!
+//! The rewrite goes through a temp file and an atomic rename, so a
+//! crash mid-compaction leaves the original ledger untouched.  Torn
+//! and legacy (schema-1) lines are dropped — exactly the lines the
+//! readers already skip.
+
+use super::ledger::DistLedger;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// What a compaction pass did (`nacfl compact` prints it).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CompactOutcome {
+    /// Lines in the rewritten ledger.
+    pub kept: usize,
+    /// Superseded / duplicate / torn lines dropped.
+    pub dropped: usize,
+    /// Distinct completed runs surviving.
+    pub runs: usize,
+    /// Claims surviving (pending keys only).
+    pub claims: usize,
+}
+
+/// Compact the ledger at `path` in place (see the module docs for what
+/// survives).  Returns the line accounting; compacting an
+/// already-compact ledger is a no-op that rewrites identical bytes.
+pub fn compact_ledger(path: impl AsRef<Path>) -> Result<CompactOutcome> {
+    let path = path.as_ref();
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading campaign ledger {}", path.display()))?;
+    let mut led = DistLedger::default();
+    let mut n_in = 0usize;
+    for line in text.lines() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        n_in += 1;
+        led.ingest_line(line)
+            .with_context(|| format!("ledger {}", path.display()))?;
+    }
+
+    // Survivor indices: the last run record per key, and the last
+    // per-run telemetry line per (key, metric) — grouped under its key
+    // so the output interleaves records with their telemetry the way
+    // the writer does.
+    let mut last_run: HashMap<String, usize> = HashMap::new();
+    for (i, r) in led.runs.iter().enumerate() {
+        last_run.insert(r.key(), i);
+    }
+    let mut last_telem: HashMap<(String, String), usize> = HashMap::new();
+    for (i, t) in led.telem.iter().enumerate() {
+        if t.scope == "run" {
+            last_telem.insert((t.key.clone(), t.metric.clone()), i);
+        }
+    }
+    let mut telem_of: HashMap<String, Vec<usize>> = HashMap::new();
+    for (i, t) in led.telem.iter().enumerate() {
+        if t.scope == "run"
+            && last_telem.get(&(t.key.clone(), t.metric.clone())) == Some(&i)
+            && last_run.contains_key(&t.key)
+        {
+            telem_of.entry(t.key.clone()).or_default().push(i);
+        }
+    }
+
+    let mut out = String::new();
+    let mut kept = 0usize;
+    let mut push = |buf: &mut String, line: String, kept: &mut usize| {
+        buf.push_str(&line);
+        buf.push('\n');
+        *kept += 1;
+    };
+    if let Some(h) = &led.header {
+        push(&mut out, h.to_json(), &mut kept);
+    }
+    // Pending keys only: a completed record supersedes any claim.
+    let mut claim_keys: Vec<&String> = led
+        .claims
+        .keys()
+        .filter(|k| !last_run.contains_key(*k))
+        .collect();
+    claim_keys.sort();
+    let claims = claim_keys.len();
+    for k in claim_keys {
+        push(&mut out, led.claims[k].to_json(), &mut kept);
+    }
+    for (i, r) in led.runs.iter().enumerate() {
+        let key = r.key();
+        if last_run[&key] != i {
+            continue;
+        }
+        push(&mut out, r.to_json(), &mut kept);
+        if let Some(idxs) = telem_of.get(&key) {
+            for &ti in idxs {
+                push(&mut out, led.telem[ti].to_json(), &mut kept);
+            }
+        }
+    }
+    for t in &led.telem {
+        if t.scope != "run" {
+            push(&mut out, t.to_json(), &mut kept);
+        }
+    }
+
+    let tmp = path.with_extension("jsonl.compacting");
+    std::fs::write(&tmp, &out)
+        .with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("replacing {}", path.display()))?;
+    Ok(CompactOutcome {
+        kept,
+        dropped: n_in.saturating_sub(kept),
+        runs: last_run.len(),
+        claims,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exp::dist::ledger::{read_dist_ledger, ClaimRecord, PlanHeader};
+    use crate::exp::plan::ExperimentPlan;
+    use crate::exp::sink::RunRecord;
+    use crate::obs::TelemLine;
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("nacfl_compact_{tag}_{}.jsonl", std::process::id()))
+    }
+
+    fn rec(policy: &str, seed: u64, wall: f64) -> RunRecord {
+        RunRecord {
+            campaign: "t".into(),
+            scenario: "flow:tower:2x5".into(),
+            compressor: "quant:inf".into(),
+            tier: "sim:60".into(),
+            discipline: "sync".into(),
+            policy: policy.into(),
+            data_seed: 0,
+            seed,
+            config: "fp".into(),
+            wall,
+            rounds: 10,
+            converged: true,
+            aggregations: 10,
+            dropped: 0,
+            late: 0,
+            upload_s: wall,
+            compute_s: 0.0,
+            wait_s: 0.0,
+            congestion_s: 0.1 * wall,
+            trace: None,
+        }
+    }
+
+    fn run_telem(key: &str, metric: &str, v: u64) -> TelemLine {
+        TelemLine {
+            scope: "run".into(),
+            key: key.into(),
+            metric: metric.into(),
+            counter: Some(v),
+            hist: None,
+        }
+    }
+
+    #[test]
+    fn compaction_drops_superseded_lines_and_keeps_the_rest_bitwise() {
+        let path = tmp("drop");
+        let plan = ExperimentPlan::builder("c").build().unwrap();
+        let h = PlanHeader::for_plan(&plan);
+        let done = rec("nacfl:1", 0, 10.0);
+        let redone = rec("nacfl:1", 0, 10.0);
+        let pending_key = rec("fixed:2", 1, 0.0).key();
+        let mut body = String::new();
+        body.push_str(&h.to_json());
+        body.push('\n');
+        // Claims: one superseded by a record, one re-claimed, one live.
+        body.push_str(&ClaimRecord::new(done.key(), "w1", 10, 60).to_json());
+        body.push('\n');
+        body.push_str(&ClaimRecord::new(&pending_key, "w1", 10, 60).to_json());
+        body.push('\n');
+        body.push_str(&ClaimRecord::new(&pending_key, "w2", 20, 60).to_json());
+        body.push('\n');
+        // A duplicated record (shared-ledger race) with stale telemetry.
+        body.push_str(&done.to_json());
+        body.push('\n');
+        body.push_str(&run_telem(&done.key(), "des.rounds", 7).to_json());
+        body.push('\n');
+        body.push_str("{\"torn\":tru\n");
+        body.push_str(&redone.to_json());
+        body.push('\n');
+        body.push_str(&run_telem(&done.key(), "des.rounds", 9).to_json());
+        body.push('\n');
+        std::fs::write(&path, &body).unwrap();
+
+        let outcome = compact_ledger(&path).unwrap();
+        assert_eq!(outcome.runs, 1);
+        assert_eq!(outcome.claims, 1, "only the pending key keeps a claim");
+        // header + claim + record + telem survive.
+        assert_eq!(outcome.kept, 4);
+        assert_eq!(outcome.dropped, 5, "dupes, superseded claims, stale telem, torn");
+
+        let led = read_dist_ledger(&path).unwrap();
+        assert_eq!(led.header.unwrap().plan, h.plan);
+        assert_eq!(led.runs.len(), 1);
+        assert_eq!(led.runs[0].to_json(), done.to_json(), "record bytes survive");
+        assert_eq!(
+            led.runs[0].congestion_s.to_bits(),
+            done.congestion_s.to_bits()
+        );
+        assert_eq!(led.claims.len(), 1);
+        assert_eq!(led.claims[&pending_key].worker, "w2", "latest claim survives");
+        assert_eq!(led.telem.len(), 1);
+        assert_eq!(led.telem[0].counter, Some(9), "latest telemetry survives");
+        assert_eq!(led.n_torn, 0, "torn lines are gone");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn compaction_is_idempotent() {
+        let path = tmp("idem");
+        let plan = ExperimentPlan::builder("c").build().unwrap();
+        let mut body = format!("{}\n", PlanHeader::for_plan(&plan).to_json());
+        for seed in 0..3 {
+            body.push_str(&rec("nacfl:1", seed, 7.5 * (seed + 1) as f64).to_json());
+            body.push('\n');
+        }
+        std::fs::write(&path, &body).unwrap();
+        compact_ledger(&path).unwrap();
+        let first = std::fs::read_to_string(&path).unwrap();
+        let outcome = compact_ledger(&path).unwrap();
+        let second = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(first, second, "compacting twice is byte-stable");
+        assert_eq!(outcome.dropped, 0);
+        assert_eq!(outcome.kept, 4);
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -171,65 +171,80 @@ pub struct DistLedger {
     pub n_legacy: usize,
 }
 
-/// Read and dispatch a distributed ledger.  Torn lines are counted and
-/// skipped (their runs re-execute); schema-1 run lines are counted as
-/// `n_legacy` with one warning per file.  Conflicting plan headers in
-/// one file — e.g. two campaigns' ledgers `cat`-ed together — are an
-/// error; duplicated *identical* headers (a benign double-write from
-/// two workers racing on a fresh shared ledger) are accepted.
+impl DistLedger {
+    /// Dispatch one ledger line into the accumulated state — the single
+    /// shared line grammar behind [`read_dist_ledger`], the incremental
+    /// tail reader in `nacfl top`, and the compactor.  Unparseable or
+    /// unknown-kind lines bump `n_torn`; schema-1 run lines bump
+    /// `n_legacy`; empty lines are ignored.  The only error is a plan
+    /// header that conflicts with one already ingested — e.g. two
+    /// campaigns' ledgers `cat`-ed together; duplicated *identical*
+    /// headers (a benign double-write from two workers racing on a
+    /// fresh shared ledger) are accepted.
+    pub fn ingest_line(&mut self, line: &str) -> Result<()> {
+        if line.trim().is_empty() {
+            return Ok(());
+        }
+        let obj = match parse_flat_object(line) {
+            Ok(obj) => obj,
+            Err(_) => {
+                self.n_torn += 1;
+                return Ok(());
+            }
+        };
+        if matches!(obj.get("schema"), Some(JsonVal::Num(v)) if *v == 1.0) {
+            self.n_legacy += 1;
+            return Ok(());
+        }
+        match obj.get("kind").and_then(JsonVal::as_str) {
+            Some("plan") => match PlanHeader::from_obj(&obj) {
+                Ok(h) => match &self.header {
+                    None => self.header = Some(h),
+                    Some(first) if first.same_campaign(&h) => {}
+                    Some(first) => {
+                        return Err(anyhow!(
+                            "conflicting plan headers ({} vs {}) — refusing to mix \
+                             campaigns in one file",
+                            first.plan,
+                            h.plan
+                        ))
+                    }
+                },
+                Err(_) => self.n_torn += 1,
+            },
+            Some("claim") => match ClaimRecord::from_obj(&obj) {
+                Ok(c) => {
+                    self.claims.insert(c.key.clone(), c);
+                }
+                Err(_) => self.n_torn += 1,
+            },
+            Some("telem") => match TelemLine::from_obj(&obj) {
+                Ok(t) => self.telem.push(t),
+                Err(_) => self.n_torn += 1,
+            },
+            Some(_) => self.n_torn += 1,
+            None => match RunRecord::from_obj(&obj) {
+                Ok(r) => self.runs.push(r),
+                Err(_) => self.n_torn += 1,
+            },
+        }
+        Ok(())
+    }
+}
+
+/// Read and dispatch a distributed ledger (see
+/// [`DistLedger::ingest_line`] for the line grammar and conflict
+/// rules).  Torn lines are counted and skipped (their runs re-execute);
+/// schema-1 run lines are counted as `n_legacy` with one warning per
+/// file.
 pub fn read_dist_ledger(path: impl AsRef<Path>) -> Result<DistLedger> {
     let path = path.as_ref();
     let text = std::fs::read_to_string(path)
         .with_context(|| format!("reading campaign ledger {}", path.display()))?;
     let mut out = DistLedger::default();
     for line in text.lines() {
-        if line.trim().is_empty() {
-            continue;
-        }
-        let obj = match parse_flat_object(line) {
-            Ok(obj) => obj,
-            Err(_) => {
-                out.n_torn += 1;
-                continue;
-            }
-        };
-        if matches!(obj.get("schema"), Some(JsonVal::Num(v)) if *v == 1.0) {
-            out.n_legacy += 1;
-            continue;
-        }
-        match obj.get("kind").and_then(JsonVal::as_str) {
-            Some("plan") => match PlanHeader::from_obj(&obj) {
-                Ok(h) => match &out.header {
-                    None => out.header = Some(h),
-                    Some(first) if first.same_campaign(&h) => {}
-                    Some(first) => {
-                        return Err(anyhow!(
-                            "ledger {}: conflicting plan headers ({} vs {}) — refusing to \
-                             mix campaigns in one file",
-                            path.display(),
-                            first.plan,
-                            h.plan
-                        ))
-                    }
-                },
-                Err(_) => out.n_torn += 1,
-            },
-            Some("claim") => match ClaimRecord::from_obj(&obj) {
-                Ok(c) => {
-                    out.claims.insert(c.key.clone(), c);
-                }
-                Err(_) => out.n_torn += 1,
-            },
-            Some("telem") => match TelemLine::from_obj(&obj) {
-                Ok(t) => out.telem.push(t),
-                Err(_) => out.n_torn += 1,
-            },
-            Some(_) => out.n_torn += 1,
-            None => match RunRecord::from_obj(&obj) {
-                Ok(r) => out.runs.push(r),
-                Err(_) => out.n_torn += 1,
-            },
-        }
+        out.ingest_line(line)
+            .with_context(|| format!("ledger {}", path.display()))?;
     }
     if out.n_legacy > 0 {
         eprintln!(

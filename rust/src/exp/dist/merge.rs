@@ -196,6 +196,7 @@ mod tests {
             upload_s: wall,
             compute_s: 0.0,
             wait_s: 0.0,
+            congestion_s: 0.0,
             trace: None,
         }
     }

@@ -23,6 +23,11 @@
 //!   With `--steal`, a worker that finishes its shard re-reads the
 //!   (shared) ledger and reclaims pending keys whose claims have
 //!   expired — reclaiming runs from dead workers.
+//! * [`compact`] — `nacfl compact ledger.jsonl` (or `nacfl run
+//!   --compact`) rewrites a ledger without its superseded lines:
+//!   claims overtaken by completed records or newer claims, duplicated
+//!   run records, stale per-run telemetry, torn lines.  Append-only
+//!   growth stays bounded without giving up any resume information.
 //! * [`merge`] — `nacfl merge a.jsonl b.jsonl … --output merged.jsonl`
 //!   validates that all headers carry the same plan hash, dedups run
 //!   records by coordinate key, reports coverage gaps against the plan,
@@ -33,10 +38,12 @@
 //! [`ExperimentPlan`]: crate::exp::plan::ExperimentPlan
 //! [`ExperimentPlan::plan_hash`]: crate::exp::plan::ExperimentPlan::plan_hash
 
+pub mod compact;
 pub mod ledger;
 pub mod merge;
 pub mod shard;
 
+pub use compact::{compact_ledger, CompactOutcome};
 pub use ledger::{now_unix, read_dist_ledger, ClaimRecord, DistLedger, PlanHeader};
 pub use merge::{merge_ledgers, write_ledger, MergeOutcome};
 pub use shard::{shard_of, ShardSpec};

@@ -42,7 +42,7 @@ use super::sink::{JsonlSink, ResultSink, RunRecord};
 use crate::config::ExperimentConfig;
 use crate::coordinator::{Coordinator, FailureConfig};
 use crate::data::{partition, Dataset, Partition, PartitionKind};
-use crate::des::{simulate_des_with, DesConfig, Discipline};
+use crate::des::{simulate_des_with, simulate_flow_des_with, DesConfig, Discipline};
 use crate::metrics::TableWriter;
 use crate::obs::Telemetry;
 use crate::policy::{PolicyCtx, PolicyEnv, PolicySpec};
@@ -666,6 +666,7 @@ fn base_record(plan: &ExperimentPlan, cell: &PlanCell, fp: &str) -> RunRecord {
         upload_s: f64::NAN,
         compute_s: f64::NAN,
         wait_s: f64::NAN,
+        congestion_s: f64::NAN,
         trace: None,
     }
 }
@@ -695,8 +696,10 @@ fn execute_grid_run(
     let cfg = plan.cell_config(cell);
     let mut telem = Telemetry::new(telemetry);
     let mut rec = base_record(plan, cell, fp);
-    if cell.discipline == Discipline::Sync && !plan.has_faults() {
-        // The exact single-run float path the legacy tables use.
+    if cell.discipline == Discipline::Sync && !plan.has_faults() && !cell.scenario.is_flow() {
+        // The exact single-run float path the legacy tables use.  Flow
+        // scenarios never take it: shared-bottleneck delays only exist
+        // inside the event engine.
         let r = run_analytic_once(ctx, &cfg, &cell.policy, cell.seed, k_eps, &mut telem)?;
         rec.wall = r.wall;
         rec.rounds = r.rounds;
@@ -705,6 +708,7 @@ fn execute_grid_run(
         rec.upload_s = r.upload_s;
         rec.compute_s = r.compute_s;
         rec.wait_s = r.wait_s;
+        rec.congestion_s = 0.0;
     } else {
         let env = PolicyEnv::for_cell(ctx, cfg.scenario, cfg.m, cell.seed);
         let mut policy = PolicySpec::parse(&cell.policy)?.build(&env)?;
@@ -718,8 +722,23 @@ fn execute_grid_run(
         };
         let fault_rng = Rng::new(cell.seed)
             .derive("des-fault", fault_stream_id(&rec.scenario, &rec.discipline));
-        let r =
-            simulate_des_with(ctx, policy.as_mut(), &mut process, &des, fault_rng, &mut telem)?;
+        let r = if let Some(preset) = cell.scenario.flow_preset() {
+            // Flow cells: same fault stream, plus a dedicated cross-traffic
+            // stream derived purely from the run seed.
+            let net_rng = Rng::new(cell.seed).derive("flow", 0);
+            simulate_flow_des_with(
+                ctx,
+                policy.as_mut(),
+                &mut process,
+                &preset,
+                &des,
+                fault_rng,
+                net_rng,
+                &mut telem,
+            )?
+        } else {
+            simulate_des_with(ctx, policy.as_mut(), &mut process, &des, fault_rng, &mut telem)?
+        };
         if let Some(s) = policy.solver_stats() {
             telem.count("solver.solves", s.solves);
             telem.count("solver.sweep_candidates", s.candidates);
@@ -734,6 +753,7 @@ fn execute_grid_run(
         rec.upload_s = r.upload_s;
         rec.compute_s = r.compute_s;
         rec.wait_s = r.wait_s;
+        rec.congestion_s = r.congestion_s;
     }
     Ok((rec, telem))
 }
@@ -978,6 +998,39 @@ mod tests {
         let body = t.render();
         assert!(body.contains("async:0.5") && body.contains("heterog"), "body: {body}");
         assert!(campaign_table("sweep", &plan, &summary.records[1..]).is_err());
+    }
+
+    #[test]
+    fn flow_cells_route_to_the_flow_des_even_when_sync_and_fault_free() {
+        let mut cfg = small_cfg();
+        cfg.policies = vec!["fixed:2".into(), "nacfl:1".into()];
+        cfg.seeds = (0..2).collect();
+        let plan = ExperimentPlan::builder("flow")
+            .base(cfg)
+            .scenarios(vec![ScenarioKind::parse("flow:tower:2x5").unwrap()])
+            .tiers(vec![Tier::Analytic { k_eps: 40.0 }])
+            .build()
+            .unwrap();
+        let summary = execute(&plan, &ExecOptions::default(), &mut []).unwrap();
+        assert_eq!(summary.records.len(), 2 * 2);
+        for r in &summary.records {
+            assert_eq!(r.scenario, "flow:tower:2x5");
+            assert_eq!(r.discipline, "sync");
+            assert!(r.wall.is_finite() && r.rounds > 0);
+            // Flow runs decompose congestion; it is a real number here,
+            // never the NaN backfill reserved for pre-flow ledgers.
+            assert!(r.congestion_s >= 0.0, "{}", r.key());
+        }
+        // Tower cells share a bottleneck, so some run must actually have
+        // been stretched beyond its solo transfer time.
+        assert!(summary.records.iter().any(|r| r.congestion_s > 0.0));
+        // Routing is deterministic: thread count changes nothing.
+        let again = execute(&plan, &ExecOptions::with_threads(3), &mut []).unwrap();
+        for (a, b) in summary.records.iter().zip(again.records.iter()) {
+            assert_eq!(a.key(), b.key());
+            assert_eq!(a.wall.to_bits(), b.wall.to_bits(), "{}", a.key());
+            assert_eq!(a.congestion_s.to_bits(), b.congestion_s.to_bits());
+        }
     }
 
     #[test]

@@ -12,8 +12,9 @@
 //!   from the JSONL ledger, executes one `--shard i/n` of a campaign
 //!   and (optionally) steals expired-lease runs from dead workers.
 //! * [`dist`] — the distributed layer: plan-identity ledger headers,
-//!   claim/lease records, hash sharding, and the cross-machine
-//!   `nacfl merge` engine (DESIGN.md §11).
+//!   claim/lease records, hash sharding, the cross-machine
+//!   `nacfl merge` engine, and `nacfl compact` ledger compaction
+//!   (DESIGN.md §11).
 //! * [`sink`] — composable [`ResultSink`]s: JSONL ledger, CSV,
 //!   in-memory, paper-table writer, progress.  With `--telemetry`, the
 //!   engine also streams `"kind":"telem"` observability lines
@@ -37,8 +38,8 @@ pub mod runner;
 pub mod sink;
 
 pub use dist::{
-    merge_ledgers, read_dist_ledger, shard_of, write_ledger, ClaimRecord, DistLedger,
-    MergeOutcome, PlanHeader, ShardSpec,
+    compact_ledger, merge_ledgers, read_dist_ledger, shard_of, write_ledger, ClaimRecord,
+    CompactOutcome, DistLedger, MergeOutcome, PlanHeader, ShardSpec,
 };
 pub use exec::{campaign_table, execute, CampaignSummary, ExecOptions, DEFAULT_LEASE_S};
 pub use grid::{default_threads, resolve_threads, resolve_threads_from};

@@ -29,7 +29,7 @@ use crate::config::toml_lite::{self, Doc, Value};
 use crate::config::ExperimentConfig;
 use crate::des::Discipline;
 use crate::exp::runner::Tier;
-use crate::netsim::ScenarioKind;
+use crate::netsim::{DelayModel, ScenarioKind};
 use crate::policy::PolicySpec;
 use crate::quant::parse_compressor;
 use anyhow::{anyhow, Context, Result};
@@ -278,6 +278,21 @@ impl ExperimentPlan {
             return Err(anyhow!(
                 "campaign `{}`: the ml tier runs through the (sync-only) coordinator; \
                  drop non-sync disciplines and fault settings, or use the sim tier",
+                self.name
+            ));
+        }
+        let has_flow = self.scenarios.iter().any(|s| s.is_flow());
+        if has_flow && has_ml {
+            return Err(anyhow!(
+                "campaign `{}`: flow:* scenarios only run through the event engine \
+                 (sim tier); drop the ml tier or the flow scenarios",
+                self.name
+            ));
+        }
+        if has_flow && matches!(self.base.delay, DelayModel::TdmaSum { .. }) {
+            return Err(anyhow!(
+                "campaign `{}`: flow:* scenarios model concurrent transfers sharing \
+                 links; the TDMA-sum delay model does not apply (use delay = \"max:<theta>\")",
                 self.name
             ));
         }
@@ -687,6 +702,24 @@ mod tests {
             .tiers(vec![Tier::Ml])
             .build()
             .is_err());
+        // Flow scenarios are sim-tier only...
+        assert!(ExperimentPlan::builder("t")
+            .scenarios(vec![ScenarioKind::parse("flow:ingress").unwrap()])
+            .tiers(vec![Tier::Ml])
+            .build()
+            .is_err());
+        // ...and incompatible with the TDMA-sum delay model.
+        let mut tdma = ExperimentConfig::paper();
+        tdma.delay = DelayModel::TdmaSum { theta: 0.0 };
+        assert!(ExperimentPlan::builder("t")
+            .base(tdma)
+            .scenarios(vec![ScenarioKind::parse("flow:tower:2x5").unwrap()])
+            .build()
+            .is_err());
+        assert!(ExperimentPlan::builder("t")
+            .scenarios(vec![ScenarioKind::parse("flow:tower:2x5").unwrap()])
+            .build()
+            .is_ok());
         // A multi-valued data_seeds axis needs the ml tier (analytic
         // cells ignore the dataset)...
         assert!(ExperimentPlan::builder("t")

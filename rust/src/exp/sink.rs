@@ -78,6 +78,12 @@ pub struct RunRecord {
     /// transmitting past the round boundary.  ML-tier runs put their
     /// whole (undecomposed) wall here.
     pub wait_s: f64,
+    /// Flow scenarios (DESIGN.md §13): mean-client simulated seconds
+    /// spent rate-limited below solo access capacity by a shared
+    /// bottleneck.  A *subset* of `upload_s`, not a decomposition term;
+    /// 0 for exogenous DES/analytic runs, NaN on pre-flow ledger lines
+    /// and undecomposed ML runs.
+    pub congestion_s: f64,
     /// ML tier only: the full trace (not serialized to the ledger).
     pub trace: Option<RunTrace>,
 }
@@ -105,7 +111,7 @@ impl RunRecord {
             "{{\"schema\":2,\"campaign\":{},\"scenario\":{},\"compressor\":{},\"tier\":{},\
              \"discipline\":{},\"policy\":{},\"data_seed\":{},\"seed\":{},\"config\":{},\
              \"wall\":{},\"rounds\":{},\"converged\":{},\"aggregations\":{},\"dropped\":{},\
-             \"late\":{},\"upload_s\":{},\"compute_s\":{},\"wait_s\":{}}}",
+             \"late\":{},\"upload_s\":{},\"compute_s\":{},\"wait_s\":{},\"congestion_s\":{}}}",
             json::string(&self.campaign),
             json::string(&self.scenario),
             json::string(&self.compressor),
@@ -124,6 +130,7 @@ impl RunRecord {
             json::num(self.upload_s),
             json::num(self.compute_s),
             json::num(self.wait_s),
+            json::num(self.congestion_s),
         )
     }
 
@@ -201,6 +208,7 @@ impl RunRecord {
             upload_s: n_opt("upload_s"),
             compute_s: n_opt("compute_s"),
             wait_s: n_opt("wait_s"),
+            congestion_s: n_opt("congestion_s"),
             trace: None,
         })
     }
@@ -486,7 +494,7 @@ impl CsvSink {
         writeln!(
             out,
             "campaign,scenario,compressor,tier,discipline,policy,data_seed,seed,wall,rounds,\
-             converged,aggregations,dropped,late,upload_s,compute_s,wait_s"
+             converged,aggregations,dropped,late,upload_s,compute_s,wait_s,congestion_s"
         )?;
         Ok(CsvSink { out })
     }
@@ -496,7 +504,7 @@ impl ResultSink for CsvSink {
     fn on_record(&mut self, rec: &RunRecord) -> Result<()> {
         writeln!(
             self.out,
-            "{},{},{},{},{},{},{},{},{:?},{},{},{},{},{},{:?},{:?},{:?}",
+            "{},{},{},{},{},{},{},{},{:?},{},{},{},{},{},{:?},{:?},{:?},{:?}",
             csv_escape(&rec.campaign),
             csv_escape(&rec.scenario),
             csv_escape(&rec.compressor),
@@ -514,6 +522,7 @@ impl ResultSink for CsvSink {
             rec.upload_s,
             rec.compute_s,
             rec.wait_s,
+            rec.congestion_s,
         )?;
         Ok(())
     }
@@ -724,6 +733,7 @@ mod tests {
             upload_s: 0.75 * wall,
             compute_s: 0.0,
             wait_s: 0.25 * wall,
+            congestion_s: 0.0,
             trace: None,
         }
     }
@@ -746,6 +756,7 @@ mod tests {
         assert_eq!(back.upload_s.to_bits(), r.upload_s.to_bits());
         assert_eq!(back.compute_s.to_bits(), r.compute_s.to_bits());
         assert_eq!(back.wait_s.to_bits(), r.wait_s.to_bits());
+        assert_eq!(back.congestion_s.to_bits(), r.congestion_s.to_bits());
     }
 
     #[test]
@@ -761,6 +772,7 @@ mod tests {
         let back = RunRecord::from_json(line).unwrap();
         assert_eq!(back.wall, 1.5);
         assert!(back.upload_s.is_nan() && back.compute_s.is_nan() && back.wait_s.is_nan());
+        assert!(back.congestion_s.is_nan(), "pre-flow lines backfill congestion as NaN");
     }
 
     #[test]

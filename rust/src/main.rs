@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   run <plan.toml>                 execute a declarative campaign manifest
 //!   merge <a.jsonl> <b.jsonl> ...   merge fleet ledgers into one campaign
+//!   compact <ledger.jsonl>          drop superseded ledger lines in place
 //!   top <ledger.jsonl>              live fleet TUI over a (shared) ledger
 //!   report <a.jsonl> ...            offline campaign health report
 //!   exp <table1..table4|theorem1|fig3|all>   regenerate a paper table / figure
@@ -32,8 +33,13 @@
 //! Every flag that names an object takes a unified `name[:arg]` spec
 //! with round-trip Display: policies `nacfl:2 | fixed:3 | error:5.25 |
 //! oracle:8`, compressors `quant:inf | topk:0.05 | errbound:1.5625`,
-//! scenarios `homog:2 | heterog | perf:4 | part:4`, tiers `ml |
-//! sim:100`, disciplines `sync | semi-sync:7 | async:0.5`.
+//! scenarios `homog:2 | heterog | perf:4 | part:4 | flow:<preset>`,
+//! tiers `ml | sim:100`, disciplines `sync | semi-sync:7 | async:0.5`.
+//! Flow presets (`netsim::flow`) put the uploads on a shared
+//! bandwidth-sharing bottleneck topology: `flow:solo`,
+//! `flow:tower:<groups>x<per>`, `flow:ingress`, `flow:shared:<frac>`,
+//! each with an optional `:x<intensity>` cross-traffic suffix, e.g.
+//! `flow:tower:4x8:x1.5`.
 //!
 //! Examples:
 //!   nacfl check
@@ -47,7 +53,11 @@
 //!   nacfl run plan.toml --telemetry             # stream "kind":"telem" lines
 //!   nacfl top results/campaign.jsonl --plan plan.toml   # watch the fleet live
 //!   nacfl report w0.jsonl w1.jsonl --plan plan.toml     # health + coverage
+//!   nacfl run examples/campaign_flow.toml --out results  # shared-bottleneck flow campaign
+//!   nacfl run plan.toml --compact               # compact the ledger after the run
+//!   nacfl compact results/campaign.jsonl        # compact a ledger in place
 //!   nacfl sim --scenario perf:4 --seeds 20
+//!   nacfl sim --scenario flow:tower:4x8:x1 --seeds 20
 //!   nacfl des --scenario heterog --discipline semi-sync:7 --stragglers 8,9 --straggle-mult 8
 //!   nacfl exp theorem1 --tier sim --seeds 10 --out results
 //!   nacfl train --policy nacfl --scenario homog:2 --engine xla
@@ -58,9 +68,9 @@ use nacfl::config::ExperimentConfig;
 use nacfl::data::PartitionKind;
 use nacfl::des::Discipline;
 use nacfl::exp::{
-    build_tables, campaign_table, execute, fig3_cells, merge_ledgers, resolve_threads,
-    table_plans, write_ledger, CsvSink, ExecOptions, ExperimentPlan, MemorySink, ProgressSink,
-    ResultSink, ShardSpec, TableSink, Tier,
+    build_tables, campaign_table, compact_ledger, execute, fig3_cells, merge_ledgers,
+    resolve_threads, table_plans, write_ledger, CsvSink, ExecOptions, ExperimentPlan,
+    MemorySink, ProgressSink, ResultSink, ShardSpec, TableSink, Tier,
 };
 use nacfl::netsim::ScenarioKind;
 use nacfl::policy::{NacFl, OraclePolicy};
@@ -72,7 +82,11 @@ fn flags() -> Vec<nacfl::util::cli::FlagSpec> {
         flag("config", "experiment config file (TOML subset)", None),
         flag("tier", "ml | sim[:k_eps]", Some("sim")),
         flag("seeds", "number of seeds", None),
-        flag("scenario", "homog[:s2] | heterog | perf[:si2] | part[:si2]", None),
+        flag(
+            "scenario",
+            "homog[:s2] | heterog | perf[:si2] | part[:si2] | flow:<preset>",
+            None,
+        ),
         flag(
             "policy",
             "policy spec for `train` (nacfl[:a] | fixed:<l> | error[:q] | oracle[:k])",
@@ -107,6 +121,7 @@ fn flags() -> Vec<nacfl::util::cli::FlagSpec> {
         flag("output", "merged ledger path (merge only)", None),
         flag("csv", "merged per-run CSV path (merge only)", None),
         bool_flag("telemetry", "collect + stream \"kind\":\"telem\" observability lines (run only)"),
+        bool_flag("compact", "compact the ledger after the campaign finishes (run only)"),
         flag("interval", "refresh seconds between frames (top only)", Some("1")),
         flag("frames", "stop after N frames, 0 = until complete (top only)", Some("0")),
         bool_flag("once", "render a single frame and exit (top only)"),
@@ -289,6 +304,33 @@ fn cmd_run(args: &Args) -> Result<()> {
             String::new()
         }
     );
+    if args.get_bool("compact") {
+        let o = compact_ledger(&ledger)?;
+        eprintln!(
+            "compacted {ledger}: {} lines kept ({} runs, {} claims), {} dropped",
+            o.kept, o.runs, o.claims, o.dropped
+        );
+    }
+    Ok(())
+}
+
+/// `nacfl compact <ledger.jsonl>`: rewrite a campaign ledger in place
+/// without its superseded lines — claims overtaken by completed records
+/// or newer claims, duplicated run records (last-writer-wins), stale
+/// per-run telemetry, torn lines.  Resume/merge/top read the compacted
+/// file identically; the rewrite is temp-file + rename, so a crash
+/// leaves the original untouched.
+fn cmd_compact(args: &Args) -> Result<()> {
+    if args.positionals.is_empty() {
+        anyhow::bail!("usage: nacfl compact <ledger.jsonl> [...]");
+    }
+    for path in &args.positionals {
+        let o = compact_ledger(path)?;
+        eprintln!(
+            "compacted {path}: {} lines kept ({} runs, {} claims), {} dropped",
+            o.kept, o.runs, o.claims, o.dropped
+        );
+    }
     Ok(())
 }
 
@@ -669,6 +711,7 @@ fn main() {
     let subcommands = [
         ("run", "execute a declarative [campaign] manifest (resumes; --shard i/n to split)"),
         ("merge", "merge fleet ledgers: validate headers, dedup runs, render tables"),
+        ("compact", "rewrite a campaign ledger in place without superseded lines"),
         ("top", "live fleet TUI: tail a campaign ledger, bars + workers + telemetry"),
         ("report", "offline health report: coverage, stragglers, telemetry rollup"),
         ("exp", "regenerate a paper table/figure (table1..table4, theorem1, fig3, all)"),
@@ -681,6 +724,7 @@ fn main() {
     let result = match args.subcommand.as_deref() {
         Some("run") => cmd_run(&args),
         Some("merge") => cmd_merge(&args),
+        Some("compact") => cmd_compact(&args),
         Some("top") => cmd_top(&args),
         Some("report") => cmd_report(&args),
         Some("exp") => {

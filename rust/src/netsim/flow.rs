@@ -1,0 +1,800 @@
+//! Flow-level bandwidth-sharing network model (ROADMAP direction 2).
+//!
+//! Every scenario before this one draws delays from an *exogenous*
+//! process: what a client sends never changes what another client
+//! waits on.  The `flow:<preset>` family closes the loop.  Clients
+//! upload through a small topology of links — a private access link
+//! each, plus shared bottlenecks depending on the preset — and every
+//! in-flight upload is a *flow* whose instantaneous rate is the
+//! weighted max-min fair share across every link it crosses.  Upload
+//! delay is not drawn; it *emerges* from integrating the flow's rate
+//! as concurrent transfers start and finish, so compression choices
+//! feed back into the delays other clients see.
+//!
+//! ## Presets (spec grammar `flow:<preset>[:x<f>]`)
+//!
+//! * `flow:solo` — access links only, nothing shared: the parity
+//!   anchor.  Through the DES sync path it reproduces the exogenous
+//!   `homog:1` delay path bit-identically.
+//! * `flow:tower:<G>x<P>` — clients partitioned contiguously behind
+//!   `G` tower uplinks of `P` clients each; each uplink's capacity is
+//!   `P / (2 * REF_BTD)`, so a fully contended tower halves every
+//!   client's typical solo rate.
+//! * `flow:ingress` — one server-ingress link of capacity
+//!   `M / (2 * REF_BTD)` crossed by every client.
+//! * `flow:shared:<frac>` — multi-tenant mode: the ingress topology
+//!   plus a persistent elastic tenant flow whose weight is sized to
+//!   absorb fraction `frac` of the bottleneck when all M clients are
+//!   active (several campaigns competing for the same links).
+//!
+//! A trailing `:x<f>` adds on/off Markov-modulated cross-traffic to
+//! every shared link: an alternating renewal process with exponential
+//! holding times that, while "on", joins the link's fair-share
+//! contest with weight `f`.
+//!
+//! ## Determinism and the rate-change event
+//!
+//! Flows are keyed by client id and the progressive-filling allocator
+//! iterates links and flows in index order, so the allocation is a
+//! pure function of the *active set* — never of admission order.
+//! Completions are epoch-stamped [`rate-change events`](FlowNet):
+//! whenever the active set (or cross-traffic state) changes, the
+//! allocator reprices, and each flow whose price changed has its
+//! progress integrated at the old rate and a fresh completion event
+//! scheduled under a new epoch; the superseded event pops as a no-op.
+//! A flow that is never repriced keeps its original completion time
+//! `admit + bits * solo_btd` bit-exactly — that is the solo parity
+//! pin (`x * 1.0 == x`, and no `(t0 + x) - t0` round-trips happen on
+//! the unchanged path).
+
+use crate::des::event::EventQueue;
+use crate::obs::Telemetry;
+use crate::util::rng::Rng;
+use anyhow::{anyhow, Result};
+
+/// Reference seconds-per-bit scale: the median BTD of the `homog:1`
+/// base process (`exp(Z)`, `Z ~ N(1, 1)`), used to size shared-link
+/// capacities relative to typical access links.
+pub const REF_BTD: f64 = std::f64::consts::E;
+
+/// Shared-link shape of a flow scenario.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FlowTopo {
+    /// Access links only — nothing shared (parity anchor).
+    Solo,
+    /// `groups` tower uplinks, `per` clients each (contiguous blocks).
+    Tower { groups: usize, per: usize },
+    /// One server-ingress link crossed by every client.
+    Ingress,
+    /// Ingress plus a persistent tenant flow absorbing `frac` of it.
+    Shared { frac: f64 },
+}
+
+/// A parsed `flow:<preset>` scenario argument.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FlowPreset {
+    pub topo: FlowTopo,
+    /// On/off cross-traffic weight per shared link (0 = none).
+    pub cross: f64,
+}
+
+impl FlowPreset {
+    pub const USAGE: &'static str =
+        "flow:solo | flow:tower:<G>x<P>[:x<f>] | flow:ingress[:x<f>] | flow:shared:<frac>[:x<f>]";
+
+    /// Parse the part after `flow:`, e.g. `tower:4x8:x0.5`.
+    pub fn parse(arg: &str) -> Result<Self> {
+        let mut parts: Vec<&str> = arg.split(':').collect();
+        let mut cross = 0.0f64;
+        let cross_part = if parts.len() > 1 {
+            parts.last().and_then(|p| p.strip_prefix('x'))
+        } else {
+            None
+        };
+        if let Some(f) = cross_part {
+            cross = f.parse().map_err(|e| anyhow!("flow cross-traffic weight: {e}"))?;
+            if !cross.is_finite() || cross < 0.0 {
+                return Err(anyhow!("flow cross-traffic weight must be finite and >= 0"));
+            }
+            parts.pop();
+        }
+        let topo = match parts.as_slice() {
+            ["solo"] => {
+                if cross > 0.0 {
+                    return Err(anyhow!(
+                        "flow:solo has no shared links to carry cross-traffic"
+                    ));
+                }
+                FlowTopo::Solo
+            }
+            ["tower", gp] => {
+                let (g, p) = gp
+                    .split_once('x')
+                    .ok_or_else(|| anyhow!("flow tower preset wants <groups>x<per>, got `{gp}`"))?;
+                let groups: usize = g.parse().map_err(|e| anyhow!("flow tower groups: {e}"))?;
+                let per: usize = p.parse().map_err(|e| anyhow!("flow tower per-group: {e}"))?;
+                if groups == 0 || per == 0 {
+                    return Err(anyhow!("flow tower groups and per-group must be >= 1"));
+                }
+                FlowTopo::Tower { groups, per }
+            }
+            ["ingress"] => FlowTopo::Ingress,
+            ["shared", f] => {
+                let frac: f64 = f.parse().map_err(|e| anyhow!("flow shared fraction: {e}"))?;
+                if !(frac > 0.0 && frac < 1.0) {
+                    return Err(anyhow!("flow shared fraction must be in (0, 1), got {frac}"));
+                }
+                FlowTopo::Shared { frac }
+            }
+            _ => return Err(anyhow!("unknown flow preset `{arg}` ({})", Self::USAGE)),
+        };
+        Ok(FlowPreset { topo, cross })
+    }
+
+    /// Canonical label after `flow:` — round-trips through [`parse`].
+    ///
+    /// [`parse`]: FlowPreset::parse
+    pub fn label(&self) -> String {
+        let base = match self.topo {
+            FlowTopo::Solo => "solo".to_string(),
+            FlowTopo::Tower { groups, per } => format!("tower:{groups}x{per}"),
+            FlowTopo::Ingress => "ingress".into(),
+            FlowTopo::Shared { frac } => format!("shared:{frac}"),
+        };
+        if self.cross > 0.0 {
+            format!("{base}:x{}", self.cross)
+        } else {
+            base
+        }
+    }
+
+    /// True when the preset has at least one shared link (everything
+    /// except `solo`) — the condition for probe-estimated BTD feedback
+    /// and for cross-traffic to exist at all.
+    pub fn has_shared(&self) -> bool {
+        !matches!(self.topo, FlowTopo::Solo)
+    }
+}
+
+impl std::fmt::Display for FlowPreset {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.label())
+    }
+}
+
+/// A compiled topology: shared-link capacities and per-client paths.
+/// Access links are per-flow (one client each) and are represented by
+/// the flow's own `solo_btd` rather than as shared links.
+#[derive(Clone, Debug)]
+pub struct FlowTopology {
+    pub m: usize,
+    /// Capacity (bits per second) of each shared link.
+    pub cap: Vec<f64>,
+    /// Shared links crossed by each client's uploads.
+    pub path: Vec<Vec<usize>>,
+    /// Persistent elastic tenant weight per shared link (multi-tenant
+    /// `shared:<frac>` mode; 0 elsewhere).
+    pub tenant: Vec<f64>,
+}
+
+impl FlowTopology {
+    pub fn build(preset: &FlowPreset, m: usize) -> Self {
+        let (cap, path, tenant) = match preset.topo {
+            FlowTopo::Solo => (Vec::new(), vec![Vec::new(); m], Vec::new()),
+            FlowTopo::Tower { groups, per } => {
+                let cap = vec![per as f64 / (2.0 * REF_BTD); groups];
+                let path = (0..m).map(|j| vec![(j / per).min(groups - 1)]).collect();
+                (cap, path, vec![0.0; groups])
+            }
+            FlowTopo::Ingress => {
+                (vec![m as f64 / (2.0 * REF_BTD)], vec![vec![0]; m], vec![0.0])
+            }
+            FlowTopo::Shared { frac } => (
+                vec![m as f64 / (2.0 * REF_BTD)],
+                vec![vec![0]; m],
+                vec![frac / (1.0 - frac) * m as f64],
+            ),
+        };
+        FlowTopology { m, cap, path, tenant }
+    }
+
+    pub fn n_links(&self) -> usize {
+        self.cap.len()
+    }
+}
+
+/// Event payloads of the transfer engine.
+#[derive(Clone, Copy, Debug)]
+enum FlowEvent {
+    /// Transfer completion, valid only at the stamped epoch — a
+    /// reprice bumps the flow's epoch, turning the superseded
+    /// completion into a no-op (the "rate-change event").
+    Complete { client: usize, epoch: u64 },
+    /// Cross-traffic on/off toggle on one shared link.
+    CrossToggle { link: usize },
+}
+
+/// One in-flight upload.
+#[derive(Clone, Debug)]
+struct Flow {
+    bits: f64,
+    remaining: f64,
+    /// Access-link seconds-per-bit (the exogenous draw, straggler
+    /// slowdown folded in).
+    solo_btd: f64,
+    /// Current effective seconds-per-bit; bit-equal to `solo_btd`
+    /// whenever no shared link constrains the flow.
+    btd_eff: f64,
+    /// Currently rate-limited below solo capacity by a shared link.
+    limited: bool,
+    ever_limited: bool,
+    epoch: u64,
+    admit_t: f64,
+    /// Last time `remaining` and congestion accrual were brought
+    /// current (only changed flows are touched — see module docs).
+    synced_t: f64,
+}
+
+/// The flow-level transfer engine: admit uploads, pop completions.
+///
+/// Call [`begin_round`](FlowNet::begin_round) before the first admit.
+/// Round-based disciplines call it every round (round-relative clock,
+/// in-flight flows dropped at the barrier); async calls it once with
+/// `global_start = 0` and lets the clock run.
+pub struct FlowNet {
+    topo: FlowTopology,
+    cross: f64,
+    flows: Vec<Option<Flow>>,
+    active: usize,
+    queue: EventQueue<FlowEvent>,
+    now: f64,
+    epoch: u64,
+    round_start: f64,
+    /// Cross-traffic modulation: per-link on/off state, next toggle in
+    /// *global* time, and the per-link toggle stream.
+    cross_on: Vec<bool>,
+    next_toggle: Vec<f64>,
+    cross_rng: Vec<Rng>,
+    hold_s: f64,
+    /// Total client-flow seconds spent rate-limited below solo
+    /// capacity (sum over flows; divide by M for a per-client mean).
+    congested_s: f64,
+    rate_changes: u64,
+    // Allocator scratch, reused across reprices.
+    rem_cap: Vec<f64>,
+    rem_w: Vec<f64>,
+    n_cli: Vec<usize>,
+    saturated: Vec<bool>,
+    frozen: Vec<bool>,
+    new_btd: Vec<f64>,
+    new_lim: Vec<bool>,
+}
+
+/// Exponential holding time with mean `scale` (guarded against the
+/// measure-zero zero draw, which would stall the toggle clock).
+fn exp_hold(rng: &mut Rng, scale: f64) -> f64 {
+    let h = -(1.0 - rng.uniform()).ln() * scale;
+    if h > 0.0 {
+        h
+    } else {
+        scale
+    }
+}
+
+impl FlowNet {
+    /// `rng` seeds the per-link cross-traffic toggle streams;
+    /// `hold_s` is the mean on/off holding time of the modulation.
+    pub fn new(preset: &FlowPreset, m: usize, rng: &Rng, hold_s: f64) -> Result<Self> {
+        if m == 0 {
+            return Err(anyhow!("flow network needs at least one client"));
+        }
+        if preset.cross > 0.0 && !(hold_s > 0.0 && hold_s.is_finite()) {
+            return Err(anyhow!("cross-traffic holding time must be finite and > 0"));
+        }
+        let topo = FlowTopology::build(preset, m);
+        let nl = topo.n_links();
+        let mut cross_rng: Vec<Rng> =
+            (0..nl).map(|l| rng.derive("flow-cross", l as u64)).collect();
+        let next_toggle: Vec<f64> = if preset.cross > 0.0 {
+            cross_rng.iter_mut().map(|r| exp_hold(r, hold_s)).collect()
+        } else {
+            vec![f64::INFINITY; nl]
+        };
+        Ok(FlowNet {
+            topo,
+            cross: preset.cross,
+            flows: (0..m).map(|_| None).collect(),
+            active: 0,
+            queue: EventQueue::new(),
+            now: 0.0,
+            epoch: 0,
+            round_start: 0.0,
+            cross_on: vec![false; nl],
+            next_toggle,
+            cross_rng,
+            hold_s,
+            congested_s: 0.0,
+            rate_changes: 0,
+            rem_cap: vec![0.0; nl],
+            rem_w: vec![0.0; nl],
+            n_cli: vec![0; nl],
+            saturated: vec![false; nl],
+            frozen: vec![false; m],
+            new_btd: vec![0.0; m],
+            new_lim: vec![false; m],
+        })
+    }
+
+    /// Reset the transfer clock to a round-relative zero at global
+    /// time `global_start`, drop any in-flight flows (round barrier),
+    /// and advance the cross-traffic modulation to the round start.
+    pub fn begin_round(&mut self, global_start: f64, telem: &mut Telemetry) {
+        self.queue.clear();
+        for f in self.flows.iter_mut() {
+            *f = None;
+        }
+        self.active = 0;
+        self.now = 0.0;
+        self.round_start = global_start;
+        if self.cross > 0.0 {
+            for l in 0..self.topo.n_links() {
+                while self.next_toggle[l] <= global_start {
+                    self.cross_on[l] = !self.cross_on[l];
+                    telem.count("net.cross_toggles", 1);
+                    self.next_toggle[l] += exp_hold(&mut self.cross_rng[l], self.hold_s);
+                }
+                self.queue
+                    .push(self.next_toggle[l] - global_start, FlowEvent::CrossToggle { link: l });
+            }
+        }
+    }
+
+    /// Admit client `j`'s upload of `bits` at the current clock; its
+    /// private access link carries `solo_btd` seconds per bit.
+    pub fn admit(&mut self, j: usize, bits: f64, solo_btd: f64, telem: &mut Telemetry) {
+        assert!(self.flows[j].is_none(), "client {j} already has a flow in flight");
+        assert!(
+            bits > 0.0 && bits.is_finite() && solo_btd > 0.0 && solo_btd.is_finite(),
+            "flow admit wants positive finite bits/btd, got {bits} bits at {solo_btd} s/bit"
+        );
+        self.flows[j] = Some(Flow {
+            bits,
+            remaining: bits,
+            solo_btd,
+            btd_eff: f64::INFINITY,
+            limited: false,
+            ever_limited: false,
+            epoch: 0,
+            admit_t: self.now,
+            synced_t: self.now,
+        });
+        self.active += 1;
+        self.reprice(telem);
+    }
+
+    /// Pop events until the next real completion: returns its
+    /// (clock-relative) time, the client, and the observed effective
+    /// BTD of the whole transfer — what the in-band probe estimator
+    /// feeds back to the policy.  Cross toggles and superseded
+    /// completions are handled internally.  `None` once no flow is in
+    /// flight.
+    pub fn next_completion(&mut self, telem: &mut Telemetry) -> Option<(f64, usize, f64)> {
+        while self.active > 0 {
+            let (t, ev) = self.queue.pop().expect("active flows always have a completion");
+            match ev {
+                FlowEvent::CrossToggle { link } => {
+                    self.now = t;
+                    self.cross_on[link] = !self.cross_on[link];
+                    telem.count("net.cross_toggles", 1);
+                    let h = exp_hold(&mut self.cross_rng[link], self.hold_s);
+                    self.next_toggle[link] = self.round_start + t + h;
+                    self.queue.push(t + h, FlowEvent::CrossToggle { link });
+                    self.reprice(telem);
+                }
+                FlowEvent::Complete { client, epoch } => {
+                    let stale = match &self.flows[client] {
+                        Some(f) => f.epoch != epoch,
+                        None => true,
+                    };
+                    if stale {
+                        continue;
+                    }
+                    self.now = t;
+                    let f = self.flows[client].take().expect("checked above");
+                    self.active -= 1;
+                    if f.limited {
+                        self.congested_s += t - f.synced_t;
+                    }
+                    let eff = if f.ever_limited {
+                        (t - f.admit_t) / f.bits
+                    } else {
+                        f.solo_btd
+                    };
+                    self.reprice(telem);
+                    return Some((t, client, eff));
+                }
+            }
+        }
+        None
+    }
+
+    /// Current price of client `j`'s in-flight flow as
+    /// `(btd_eff, limited)` — test/diagnostic hook.
+    pub fn price_of(&self, j: usize) -> Option<(f64, bool)> {
+        self.flows[j].as_ref().map(|f| (f.btd_eff, f.limited))
+    }
+
+    /// Per-shared-link `(allocated client rate, capacity)` under the
+    /// current allocation — the fairness-invariant surface the
+    /// property tests check.
+    pub fn link_loads(&self) -> Vec<(f64, f64)> {
+        let mut load = vec![0.0; self.topo.n_links()];
+        for (j, f) in self.flows.iter().enumerate() {
+            if let Some(f) = f {
+                for &l in &self.topo.path[j] {
+                    load[l] += 1.0 / f.btd_eff;
+                }
+            }
+        }
+        load.into_iter().zip(self.topo.cap.iter().copied()).collect()
+    }
+
+    /// Total client-flow seconds spent rate-limited below solo
+    /// capacity, accumulated since construction.
+    pub fn congestion_s(&self) -> f64 {
+        self.congested_s
+    }
+
+    /// Reprices performed on already-priced flows since construction.
+    pub fn rate_changes(&self) -> u64 {
+        self.rate_changes
+    }
+
+    pub fn topology(&self) -> &FlowTopology {
+        &self.topo
+    }
+
+    /// Recompute the weighted max-min allocation over the active set
+    /// (progressive filling), then integrate and reschedule exactly
+    /// the flows whose price changed.
+    fn reprice(&mut self, telem: &mut Telemetry) {
+        let FlowNet {
+            topo,
+            cross,
+            flows,
+            queue,
+            now,
+            epoch,
+            cross_on,
+            congested_s,
+            rate_changes,
+            rem_cap,
+            rem_w,
+            n_cli,
+            saturated,
+            frozen,
+            new_btd,
+            new_lim,
+            ..
+        } = self;
+        let nl = topo.n_links();
+        for l in 0..nl {
+            rem_cap[l] = topo.cap[l];
+            rem_w[l] = topo.tenant[l] + if cross_on[l] { *cross } else { 0.0 };
+            n_cli[l] = 0;
+            saturated[l] = false;
+        }
+        let mut unfrozen = 0usize;
+        for j in 0..topo.m {
+            frozen[j] = flows[j].is_none();
+            if !frozen[j] {
+                unfrozen += 1;
+                for &l in &topo.path[j] {
+                    rem_w[l] += 1.0;
+                    n_cli[l] += 1;
+                }
+            }
+        }
+
+        // Progressive filling: repeatedly freeze at the smallest
+        // per-weight fair share.  Access links are checked first so an
+        // exact tie freezes at the bit-exact solo rate.
+        while unfrozen > 0 {
+            let mut best = f64::INFINITY;
+            let mut best_access: Option<usize> = None;
+            let mut best_link: Option<usize> = None;
+            for (j, f) in flows.iter().enumerate() {
+                if !frozen[j] {
+                    let cap = 1.0 / f.as_ref().expect("unfrozen implies active").solo_btd;
+                    if cap < best {
+                        best = cap;
+                        best_access = Some(j);
+                        best_link = None;
+                    }
+                }
+            }
+            for l in 0..nl {
+                if !saturated[l] && n_cli[l] > 0 && rem_w[l] > 0.0 {
+                    let fair = rem_cap[l] / rem_w[l];
+                    if fair > 0.0 && fair < best {
+                        best = fair;
+                        best_access = None;
+                        best_link = Some(l);
+                    }
+                }
+            }
+            if let Some(j) = best_access {
+                // Frozen by its own access link: full solo rate, and
+                // the *exact* solo BTD (no 1/(1/x) round trip).
+                let rate = best;
+                new_btd[j] = flows[j].as_ref().expect("active").solo_btd;
+                new_lim[j] = false;
+                frozen[j] = true;
+                unfrozen -= 1;
+                for &l in &topo.path[j] {
+                    rem_cap[l] = (rem_cap[l] - rate).max(0.0);
+                    rem_w[l] -= 1.0;
+                    n_cli[l] -= 1;
+                }
+            } else if let Some(l) = best_link {
+                let fair = best;
+                for j in 0..topo.m {
+                    if !frozen[j] && topo.path[j].contains(&l) {
+                        new_btd[j] = 1.0 / fair;
+                        new_lim[j] = true;
+                        frozen[j] = true;
+                        unfrozen -= 1;
+                        for &l2 in &topo.path[j] {
+                            if l2 != l {
+                                rem_cap[l2] = (rem_cap[l2] - fair).max(0.0);
+                                rem_w[l2] -= 1.0;
+                                n_cli[l2] -= 1;
+                            }
+                        }
+                    }
+                }
+                rem_cap[l] = 0.0;
+                n_cli[l] = 0;
+                saturated[l] = true;
+            } else {
+                break; // no finite candidate — cannot happen with active flows
+            }
+        }
+
+        // Apply: integrate and reschedule exactly the changed flows.
+        let mut changed = 0u64;
+        for (j, slot) in flows.iter_mut().enumerate() {
+            if let Some(f) = slot {
+                let (btd, limited) = (new_btd[j], new_lim[j]);
+                if btd.to_bits() == f.btd_eff.to_bits() && limited == f.limited {
+                    continue;
+                }
+                if f.btd_eff.is_finite() {
+                    // Bring progress current at the old price.
+                    let dt = *now - f.synced_t;
+                    f.remaining = (f.remaining - dt / f.btd_eff).max(0.0);
+                    if f.limited {
+                        *congested_s += dt;
+                    }
+                    changed += 1;
+                }
+                f.synced_t = *now;
+                f.btd_eff = btd;
+                f.limited = limited;
+                f.ever_limited |= limited;
+                *epoch += 1;
+                f.epoch = *epoch;
+                let at = *now + f.remaining * btd;
+                queue.push(at, FlowEvent::Complete { client: j, epoch: *epoch });
+            }
+        }
+        if changed > 0 {
+            *rate_changes += changed;
+            telem.count("net.rate_changes", changed);
+        }
+        // Per-link utilization sample: an elastic background flow
+        // (tenant or cross-traffic) absorbs any leftover, so links
+        // carrying one run saturated.
+        for l in 0..nl {
+            let bg = topo.tenant[l] + if cross_on[l] { *cross } else { 0.0 };
+            let util = if saturated[l] || bg > 0.0 {
+                1.0
+            } else {
+                (topo.cap[l] - rem_cap[l]) / topo.cap[l]
+            };
+            telem.observe("net.link_util", util);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn telem() -> Telemetry {
+        Telemetry::off()
+    }
+
+    #[test]
+    fn parse_and_label_round_trip() {
+        for s in [
+            "solo",
+            "tower:4x8",
+            "tower:2x5:x0.5",
+            "ingress",
+            "ingress:x1.5",
+            "shared:0.25",
+            "shared:0.5:x2",
+        ] {
+            let p = FlowPreset::parse(s).unwrap();
+            assert_eq!(p.label(), s, "round trip");
+            assert_eq!(FlowPreset::parse(&p.label()).unwrap(), p);
+        }
+        for bad in [
+            "", "nope", "tower", "tower:4", "tower:0x3", "tower:3x0", "shared:0",
+            "shared:1", "shared:1.5", "solo:x0.5", "ingress:x-1",
+        ] {
+            assert!(FlowPreset::parse(bad).is_err(), "`{bad}` should fail");
+        }
+    }
+
+    #[test]
+    fn topology_shapes_match_presets() {
+        let t = FlowTopology::build(&FlowPreset::parse("tower:3x4").unwrap(), 12);
+        assert_eq!(t.n_links(), 3);
+        assert_eq!(t.path[0], vec![0]);
+        assert_eq!(t.path[3], vec![0]);
+        assert_eq!(t.path[4], vec![1]);
+        assert_eq!(t.path[11], vec![2]);
+        assert!((t.cap[0] - 4.0 / (2.0 * REF_BTD)).abs() < 1e-12);
+
+        let t = FlowTopology::build(&FlowPreset::parse("ingress").unwrap(), 5);
+        assert_eq!(t.n_links(), 1);
+        assert!(t.path.iter().all(|p| p == &vec![0]));
+        assert_eq!(t.tenant, vec![0.0]);
+
+        let t = FlowTopology::build(&FlowPreset::parse("shared:0.5").unwrap(), 4);
+        assert!((t.tenant[0] - 4.0).abs() < 1e-12, "frac/(1-frac) * m");
+
+        let t = FlowTopology::build(&FlowPreset::parse("solo").unwrap(), 3);
+        assert_eq!(t.n_links(), 0);
+    }
+
+    #[test]
+    fn solo_flow_completes_at_the_exact_exogenous_delay() {
+        let mut tm = telem();
+        let preset = FlowPreset::parse("solo").unwrap();
+        let mut net = FlowNet::new(&preset, 3, &Rng::new(0), 1.0).unwrap();
+        net.begin_round(0.0, &mut tm);
+        let (bits, btd) = (198_760.0f64, 2.718_281_828_459_045f64);
+        net.admit(1, bits, btd, &mut tm);
+        let (t, j, eff) = net.next_completion(&mut tm).unwrap();
+        assert_eq!(j, 1);
+        assert_eq!(t.to_bits(), (bits * btd).to_bits(), "bit-exact solo completion");
+        assert_eq!(eff.to_bits(), btd.to_bits(), "observed BTD is the exogenous draw");
+        assert_eq!(net.rate_changes(), 0, "solo flows are never repriced");
+        assert_eq!(net.congestion_s(), 0.0);
+        assert!(net.next_completion(&mut tm).is_none());
+    }
+
+    #[test]
+    fn contended_tower_link_splits_fairly_and_counts_congestion() {
+        let mut tm = telem();
+        let preset = FlowPreset::parse("tower:1x2").unwrap();
+        let mut net = FlowNet::new(&preset, 2, &Rng::new(0), 1.0).unwrap();
+        net.begin_round(0.0, &mut tm);
+        // Both access links are far faster than half the tower uplink
+        // (cap = 2/(2e) = 1/e), so each flow is limited to cap/2.
+        net.admit(0, 1.0, 0.01, &mut tm);
+        net.admit(1, 1.0, 0.01, &mut tm);
+        let expect_btd = 2.0 * REF_BTD; // 1 / (cap / 2)
+        for j in [0, 1] {
+            let (btd, limited) = net.price_of(j).unwrap();
+            assert!(limited, "client {j} should be shared-link limited");
+            assert!((btd - expect_btd).abs() < 1e-12, "client {j}: {btd} vs {expect_btd}");
+        }
+        for (load, cap) in net.link_loads() {
+            assert!(load <= cap * (1.0 + 1e-12), "allocated {load} exceeds cap {cap}");
+        }
+        let (t0, c0, e0) = net.next_completion(&mut tm).unwrap();
+        let (t1, c1, e1) = net.next_completion(&mut tm).unwrap();
+        assert_eq!((c0, c1), (0, 1), "FIFO tie-break pops in client order");
+        assert_eq!(t0.to_bits(), t1.to_bits(), "symmetric flows finish together");
+        assert!((e0 - expect_btd).abs() < 1e-9 && (e1 - expect_btd).abs() < 1e-9);
+        assert!(net.congestion_s() > 0.0, "both flows ran below solo capacity");
+        assert!((net.congestion_s() - 2.0 * t0).abs() <= 1e-9 * (2.0 * t0));
+    }
+
+    #[test]
+    fn max_min_gives_the_leftover_to_the_unconstrained_flow() {
+        let mut tm = telem();
+        let preset = FlowPreset::parse("tower:1x2").unwrap();
+        let mut net = FlowNet::new(&preset, 2, &Rng::new(0), 1.0).unwrap();
+        net.begin_round(0.0, &mut tm);
+        let cap = 2.0 / (2.0 * REF_BTD);
+        // Client 0's slow access link uses only a fifth of its fair
+        // share; client 1 gets everything left over.
+        let slow_btd = 10.0 / cap; // rate cap/10 < cap/2
+        net.admit(0, 1.0, slow_btd, &mut tm);
+        net.admit(1, 1.0, 1e-6, &mut tm);
+        let (btd0, lim0) = net.price_of(0).unwrap();
+        let (btd1, lim1) = net.price_of(1).unwrap();
+        assert!(!lim0 && lim1);
+        assert_eq!(btd0.to_bits(), slow_btd.to_bits(), "access-frozen flow keeps exact BTD");
+        let leftover = cap - cap / 10.0;
+        assert!((btd1 - 1.0 / leftover).abs() < 1e-12, "{btd1} vs {}", 1.0 / leftover);
+    }
+
+    #[test]
+    fn allocation_is_independent_of_admission_order() {
+        let mut tm = telem();
+        let preset = FlowPreset::parse("tower:2x2").unwrap();
+        let btds = [0.3, 8.0, 0.05, 0.6];
+        let mut forward = FlowNet::new(&preset, 4, &Rng::new(0), 1.0).unwrap();
+        let mut backward = FlowNet::new(&preset, 4, &Rng::new(0), 1.0).unwrap();
+        forward.begin_round(0.0, &mut tm);
+        backward.begin_round(0.0, &mut tm);
+        for j in 0..4 {
+            forward.admit(j, 1.0, btds[j], &mut tm);
+        }
+        for j in (0..4).rev() {
+            backward.admit(j, 1.0, btds[j], &mut tm);
+        }
+        for j in 0..4 {
+            let (a, la) = forward.price_of(j).unwrap();
+            let (b, lb) = backward.price_of(j).unwrap();
+            assert_eq!(a.to_bits(), b.to_bits(), "client {j} price depends on order");
+            assert_eq!(la, lb, "client {j} limited flag depends on order");
+        }
+    }
+
+    #[test]
+    fn tenant_flow_takes_its_configured_fraction() {
+        let mut tm = telem();
+        let preset = FlowPreset::parse("shared:0.5").unwrap();
+        let mut net = FlowNet::new(&preset, 2, &Rng::new(0), 1.0).unwrap();
+        net.begin_round(0.0, &mut tm);
+        let cap = 2.0 / (2.0 * REF_BTD);
+        net.admit(0, 1.0, 1e-6, &mut tm);
+        net.admit(1, 1.0, 1e-6, &mut tm);
+        // Tenant weight = 0.5/0.5 * 2 = 2, total weight 4: each client
+        // gets cap/4, the tenant the other half.
+        let (btd, limited) = net.price_of(0).unwrap();
+        assert!(limited);
+        assert!((btd - 1.0 / (cap / 4.0)).abs() < 1e-9, "{btd}");
+    }
+
+    #[test]
+    fn cross_traffic_toggles_reprice_midflight() {
+        let mut tm = telem();
+        let preset = FlowPreset::parse("ingress:x1").unwrap();
+        let mut net = FlowNet::new(&preset, 1, &Rng::new(7), 1.0).unwrap();
+        net.begin_round(0.0, &mut tm);
+        let cap = 1.0 / (2.0 * REF_BTD);
+        // Long transfer (~543 s solo at the link floor) across a ~1 s
+        // on/off modulation: many toggles land mid-flight.
+        net.admit(0, 100.0, 1.0, &mut tm);
+        let (t, _, eff) = net.next_completion(&mut tm).unwrap();
+        assert!(net.rate_changes() > 0, "toggles must reprice the flow");
+        assert!(net.congestion_s() > 0.0);
+        let (fast, slow) = (100.0 / cap, 100.0 / (cap / 2.0));
+        assert!(t >= fast - 1e-9 && t <= slow + 1e-9, "{t} outside [{fast}, {slow}]");
+        assert!(eff >= 1.0 / cap - 1e-9, "effective BTD at or above the link floor");
+    }
+
+    #[test]
+    fn round_barrier_drops_inflight_flows_and_advances_cross_state() {
+        let mut tm = telem();
+        let preset = FlowPreset::parse("ingress:x1").unwrap();
+        let mut net = FlowNet::new(&preset, 2, &Rng::new(3), 0.5).unwrap();
+        net.begin_round(0.0, &mut tm);
+        net.admit(0, 1.0, 1.0, &mut tm);
+        assert!(net.price_of(0).is_some());
+        net.begin_round(100.0, &mut tm);
+        assert!(net.price_of(0).is_none(), "barrier drops in-flight flows");
+        // The modulation advanced through ~200 expected holds without
+        // queueing them; the next toggle is beyond the round start.
+        net.admit(0, 1.0, 1.0, &mut tm);
+        assert!(net.next_completion(&mut tm).is_some());
+    }
+}

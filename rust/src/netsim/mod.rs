@@ -14,11 +14,18 @@
 //! [`delay`] implements the round-duration function
 //! `d(tau, b, c) = max_j [theta*tau + c_j * s(b_j)]` (and a TDMA-sum
 //! variant), and [`estimator`] the in-band BTD probing of §V.
+//!
+//! [`flow`] is the *endogenous* alternative to all of the above: a
+//! flow-level bandwidth-sharing network (`flow:<preset>` scenarios)
+//! where upload delays emerge from max-min fair sharing of bottleneck
+//! links instead of being drawn from a process — FL traffic as the
+//! cause of congestion, not just its victim (DESIGN.md §13).
 
 pub mod ar1;
 pub mod btd;
 pub mod delay;
 pub mod estimator;
+pub mod flow;
 pub mod markov;
 pub mod scenarios;
 pub mod trace_io;
@@ -27,6 +34,7 @@ pub use ar1::Ar1Process;
 pub use btd::{BtdProcess, NetworkProcess, TraceProcess};
 pub use delay::DelayModel;
 pub use estimator::ProbeEstimator;
+pub use flow::{FlowNet, FlowPreset, FlowTopo, FlowTopology};
 pub use markov::MarkovChain;
 pub use scenarios::{Scenario, ScenarioKind};
 pub use trace_io::{load_trace, parse_trace, save_trace};

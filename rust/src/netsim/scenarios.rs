@@ -4,6 +4,7 @@
 
 use super::ar1::Ar1Process;
 use super::btd::BtdProcess;
+use super::flow::FlowPreset;
 use crate::util::linalg::Mat;
 use crate::util::rng::Rng;
 use anyhow::{anyhow, Result};
@@ -20,10 +21,15 @@ pub enum ScenarioKind {
     /// A_ij = a/m, mu = 0, Sigma_ii = 1, Sigma_ij = 1/2 — positive but
     /// partial correlation across clients, correlated across time.
     PartiallyCorrelated { sigma_inf_sq: f64 },
+    /// Closed-loop congestion (`flow:<preset>`): the base process only
+    /// supplies per-client *access-link* BTDs (the `homog:1`
+    /// parameterization); upload delays emerge from max-min fair
+    /// sharing of the preset's bottleneck links in `netsim::flow`.
+    Flow(FlowPreset),
 }
 
 impl ScenarioKind {
-    /// Parse "homog:2", "heterog", "perf:4", "part:4".
+    /// Parse "homog:2", "heterog", "perf:4", "part:4", "flow:<preset>".
     pub fn parse(s: &str) -> Result<Self> {
         let (name, arg) = match s.split_once(':') {
             Some((n, a)) => (n, Some(a)),
@@ -38,8 +44,15 @@ impl ScenarioKind {
             "heterog" => Ok(ScenarioKind::HeterogeneousIndependent),
             "perf" => Ok(ScenarioKind::PerfectlyCorrelated { sigma_inf_sq: num(4.0)? }),
             "part" => Ok(ScenarioKind::PartiallyCorrelated { sigma_inf_sq: num(4.0)? }),
+            "flow" => {
+                let arg = arg.ok_or_else(|| {
+                    anyhow!("flow scenario wants a preset ({})", FlowPreset::USAGE)
+                })?;
+                Ok(ScenarioKind::Flow(FlowPreset::parse(arg)?))
+            }
             _ => Err(anyhow!(
-                "unknown scenario `{s}` (expect homog[:s2] | heterog | perf[:si2] | part[:si2])"
+                "unknown scenario `{s}` (expect homog[:s2] | heterog | perf[:si2] | part[:si2] \
+                 | flow:<preset>)"
             )),
         }
     }
@@ -50,6 +63,21 @@ impl ScenarioKind {
             ScenarioKind::HeterogeneousIndependent => "heterog".into(),
             ScenarioKind::PerfectlyCorrelated { sigma_inf_sq } => format!("perf:{sigma_inf_sq}"),
             ScenarioKind::PartiallyCorrelated { sigma_inf_sq } => format!("part:{sigma_inf_sq}"),
+            ScenarioKind::Flow(preset) => format!("flow:{}", preset.label()),
+        }
+    }
+
+    /// True for the closed-loop `flow:<preset>` family, which routes
+    /// through the flow DES engine instead of the exogenous tiers.
+    pub fn is_flow(&self) -> bool {
+        matches!(self, ScenarioKind::Flow(_))
+    }
+
+    /// The flow preset, when this is a flow scenario.
+    pub fn flow_preset(&self) -> Option<FlowPreset> {
+        match self {
+            ScenarioKind::Flow(preset) => Some(*preset),
+            _ => None,
         }
     }
 }
@@ -105,6 +133,9 @@ impl Scenario {
                 }
                 (Mat::constant(m, m, a / m as f64), vec![0.0; m], s)
             }
+            // Flow scenarios draw access-link BTDs from the homog:1
+            // base process; the shared links live in `netsim::flow`.
+            ScenarioKind::Flow(_) => (Mat::zeros(m, m), vec![1.0; m], Mat::eye(m)),
         };
         Scenario { kind, m, a, mu, sigma }
     }
@@ -140,12 +171,39 @@ mod tests {
 
     #[test]
     fn parse_round_trips() {
-        for s in ["homog:2", "heterog", "perf:4", "part:16"] {
+        for s in [
+            "homog:2",
+            "heterog",
+            "perf:4",
+            "part:16",
+            "flow:solo",
+            "flow:tower:4x8",
+            "flow:tower:2x5:x0.5",
+            "flow:ingress:x1.5",
+            "flow:shared:0.25",
+        ] {
             let k = ScenarioKind::parse(s).unwrap();
             assert_eq!(k.label(), s);
             assert_eq!(ScenarioKind::parse(&k.to_string()).unwrap(), k);
         }
         assert!(ScenarioKind::parse("nope").is_err());
+        assert!(ScenarioKind::parse("flow").is_err(), "flow wants a preset");
+        assert!(ScenarioKind::parse("flow:tower:0x3").is_err());
+    }
+
+    #[test]
+    fn flow_kind_exposes_its_preset_and_a_homog_base_process() {
+        let k = ScenarioKind::parse("flow:tower:2x5").unwrap();
+        assert!(k.is_flow());
+        assert!(k.flow_preset().unwrap().has_shared());
+        assert!(!ScenarioKind::parse("homog:1").unwrap().is_flow());
+        // The access-link base process is the homog:1 parameterization,
+        // so paired flow/homog streams stay sample-path aligned.
+        let flow = Scenario::new(k, M);
+        let homog = Scenario::new(ScenarioKind::HomogeneousIndependent { sigma_sq: 1.0 }, M);
+        assert_eq!(flow.a, homog.a);
+        assert_eq!(flow.mu, homog.mu);
+        assert_eq!(flow.sigma, homog.sigma);
     }
 
     #[test]

@@ -251,6 +251,7 @@ mod tests {
             upload_s: wall * 0.75,
             compute_s: 0.0,
             wait_s: wall * 0.25,
+            congestion_s: 0.0,
             trace: None,
         }
     }

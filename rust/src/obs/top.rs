@@ -4,16 +4,24 @@
 //! ledger and renders one terminal frame per refresh: per-group
 //! completion bars with running mean walls, worker liveness and lease
 //! ages from the claim lines, campaign-scope telemetry counters, and a
-//! wall-clock-per-run canvas on the `metrics::plot` renderer.  Reading
-//! is the ordinary [`read_dist_ledger`] dispatcher, so torn lines from
-//! a worker mid-write are skipped, never fatal — `top` can be started
-//! *before* the first worker creates the file ("waiting for ledger").
+//! wall-clock-per-run canvas on the `metrics::plot` renderer.  Lines
+//! go through the ordinary [`DistLedger::ingest_line`] dispatcher, so
+//! torn lines from a worker mid-write are skipped, never fatal — `top`
+//! can be started *before* the first worker creates the file ("waiting
+//! for ledger").
+//!
+//! Reading is **incremental** ([`LedgerTail`]): the loop keeps the
+//! dispatched state and a byte cursor, and each frame parses only the
+//! lines appended since the previous one — a frame over a long fleet
+//! ledger costs the new lines, not a full re-read.  Truncation (the
+//! ledger compacted or rotated underneath us) is detected by the file
+//! shrinking below the cursor and triggers one full re-read.
 
-use crate::exp::dist::ledger::{now_unix, read_dist_ledger, DistLedger};
+use crate::exp::dist::ledger::{now_unix, DistLedger};
 use crate::exp::plan::ExperimentPlan;
 use crate::exp::sink::RunRecord;
 use crate::metrics::plot::{render, Series};
-use anyhow::Result;
+use anyhow::{Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
 
@@ -175,11 +183,72 @@ pub fn render_frame(
     (out, complete)
 }
 
+/// Incremental ledger reader: the dispatched [`DistLedger`] state plus
+/// a byte cursor.  [`LedgerTail::poll`] ingests only the bytes appended
+/// since the last poll, advancing the cursor past *complete* lines only
+/// — a torn final line (a worker mid-write) is retried whole on the
+/// next poll once its newline lands, instead of being half-consumed.
+/// A file shorter than the cursor means the ledger was compacted or
+/// rotated underneath us: the state resets and the file is re-read
+/// from the start.
+#[derive(Default)]
+pub struct LedgerTail {
+    led: DistLedger,
+    cursor: u64,
+}
+
+impl LedgerTail {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Byte offset of the first unconsumed byte (diagnostics/tests).
+    pub fn cursor(&self) -> u64 {
+        self.cursor
+    }
+
+    /// Ingest everything appended since the previous poll and return
+    /// the up-to-date state.  Errors mirror `read_dist_ledger`: an
+    /// unreadable file or conflicting plan headers.
+    pub fn poll(&mut self, path: &Path) -> Result<&DistLedger> {
+        use std::io::{Read, Seek, SeekFrom};
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("reading campaign ledger {}", path.display()))?;
+        let len = f.metadata().map(|m| m.len()).unwrap_or(0);
+        if len < self.cursor {
+            self.led = DistLedger::default();
+            self.cursor = 0;
+        }
+        if len == self.cursor {
+            return Ok(&self.led);
+        }
+        f.seek(SeekFrom::Start(self.cursor))
+            .with_context(|| format!("seeking in {}", path.display()))?;
+        let mut buf = Vec::with_capacity((len - self.cursor) as usize);
+        f.take(len - self.cursor)
+            .read_to_end(&mut buf)
+            .with_context(|| format!("reading {}", path.display()))?;
+        // Consume up to the last newline; the remainder is a line still
+        // being written and stays for the next poll.
+        let Some(last_nl) = buf.iter().rposition(|&b| b == b'\n') else {
+            return Ok(&self.led);
+        };
+        for line in String::from_utf8_lossy(&buf[..last_nl]).lines() {
+            self.led
+                .ingest_line(line)
+                .with_context(|| format!("ledger {}", path.display()))?;
+        }
+        self.cursor += last_nl as u64 + 1;
+        Ok(&self.led)
+    }
+}
+
 /// The `nacfl top` loop: clear the terminal, render a frame, sleep,
 /// repeat — until the campaign completes, `frames` frames have been
 /// drawn (`0` = unbounded), or `once` short-circuits after one frame.
 /// A missing or unreadable ledger renders a waiting frame instead of
-/// erroring, so `top` can start before the first worker.
+/// erroring, so `top` can start before the first worker.  Frames after
+/// the first parse only the appended ledger lines ([`LedgerTail`]).
 pub fn run_top(
     path: &Path,
     plan: Option<&ExperimentPlan>,
@@ -188,9 +257,10 @@ pub fn run_top(
     once: bool,
 ) -> Result<()> {
     let mut drawn = 0usize;
+    let mut tail = LedgerTail::new();
     loop {
-        let frame = match read_dist_ledger(path) {
-            Ok(led) => render_frame(&led, plan, now_unix()),
+        let frame = match tail.poll(path) {
+            Ok(led) => render_frame(led, plan, now_unix()),
             Err(_) => (
                 format!("waiting for ledger {} ...\n", path.display()),
                 false,
@@ -237,6 +307,7 @@ mod tests {
             upload_s: wall,
             compute_s: 0.0,
             wait_s: 0.0,
+            congestion_s: 0.0,
             trace: None,
         }
     }
@@ -293,6 +364,46 @@ mod tests {
         assert!(frame.contains(&format!("{n}/{n} runs (100%)")), "{frame}");
         assert!(complete);
         assert!(frame.contains(&"#".repeat(BAR_W)), "full bar: {frame}");
+    }
+
+    #[test]
+    fn tail_parses_only_appended_lines_and_survives_torn_tails() {
+        use std::io::Write;
+        let path = std::env::temp_dir()
+            .join(format!("nacfl_top_tail_{}.jsonl", std::process::id()));
+        let line = |r: &RunRecord| format!("{}\n", r.to_json());
+        std::fs::write(&path, line(&rec("fixed:2", 0, 1.0))).unwrap();
+        let mut tail = LedgerTail::new();
+        assert_eq!(tail.poll(&path).unwrap().runs.len(), 1);
+        let after_one = tail.cursor();
+        assert!(after_one > 0);
+        // Nothing appended: the cursor holds, the state is reused.
+        assert_eq!(tail.poll(&path).unwrap().runs.len(), 1);
+        assert_eq!(tail.cursor(), after_one);
+        // A torn tail (no newline yet) is not consumed...
+        let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+        let full = line(&rec("fixed:2", 1, 2.0));
+        let (head, rest) = full.split_at(10);
+        f.write_all(head.as_bytes()).unwrap();
+        f.flush().unwrap();
+        let led = tail.poll(&path).unwrap();
+        assert_eq!(led.runs.len(), 1);
+        assert_eq!(led.n_torn, 0, "partial line is deferred, not counted torn");
+        assert_eq!(tail.cursor(), after_one);
+        // ...and ingests whole once its newline lands.
+        f.write_all(rest.as_bytes()).unwrap();
+        f.flush().unwrap();
+        drop(f);
+        let led = tail.poll(&path).unwrap();
+        assert_eq!(led.runs.len(), 2);
+        assert_eq!(led.runs[1].seed, 1);
+        assert_eq!(tail.cursor(), after_one + full.len() as u64);
+        // Truncation (compaction/rotation) resets and re-reads.
+        std::fs::write(&path, line(&rec("nacfl:1", 7, 3.0))).unwrap();
+        let led = tail.poll(&path).unwrap();
+        assert_eq!(led.runs.len(), 1, "shrunk file -> full re-read");
+        assert_eq!(led.runs[0].seed, 7);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -1,0 +1,152 @@
+//! Property tests for the flow-level bandwidth-sharing network
+//! (DESIGN.md §13): the weighted max-min allocation never oversubscribes
+//! a link, the allocation is independent of admission order, and a
+//! topology with no shared links reproduces the exogenous analytic
+//! delay path bit-identically through the campaign engine.
+
+use nacfl::config::ExperimentConfig;
+use nacfl::exp::{execute, ExecOptions, ExperimentPlan, RunRecord, Tier};
+use nacfl::netsim::{FlowNet, FlowPreset, ScenarioKind};
+use nacfl::obs::Telemetry;
+use nacfl::util::rng::Rng;
+use std::collections::HashMap;
+
+/// Every shared link's allocated client rate stays within capacity
+/// (cross-traffic only ever shrinks the client share, never inflates it).
+fn assert_caps(net: &FlowNet, tag: &str) {
+    for (l, (load, cap)) in net.link_loads().into_iter().enumerate() {
+        assert!(cap > 0.0 && cap.is_finite(), "{tag}: link {l} capacity {cap}");
+        assert!(load.is_finite(), "{tag}: link {l} load {load}");
+        assert!(
+            load <= cap * (1.0 + 1e-9),
+            "{tag}: link {l} oversubscribed: load {load} > cap {cap}"
+        );
+    }
+}
+
+#[test]
+fn max_min_allocation_never_oversubscribes_any_link() {
+    let m = 12usize;
+    let presets = ["tower:2x3", "tower:4x8:x1.5", "ingress", "ingress:x2", "shared:0.5"];
+    for spec in presets {
+        let preset = FlowPreset::parse(spec).unwrap();
+        let mut reprices = 0u64;
+        for seed in 0..5u64 {
+            let mut telem = Telemetry::off();
+            let rng = Rng::new(seed).derive("flow", 0);
+            let mut net = FlowNet::new(&preset, m, &rng, 1.0).unwrap();
+            let mut draws = Rng::new(seed).derive("jobs", 0);
+            net.begin_round(0.0, &mut telem);
+            // The invariant must hold at every allocation change: after
+            // each admission and after each completion/cross toggle.
+            for j in 0..m {
+                let bits = 1000.0 * (1.0 + draws.uniform());
+                let solo_btd = 0.5 + 4.0 * draws.uniform();
+                net.admit(j, bits, solo_btd, &mut telem);
+                assert_caps(&net, spec);
+            }
+            while net.next_completion(&mut telem).is_some() {
+                assert_caps(&net, spec);
+            }
+            assert!(
+                net.congestion_s().is_finite() && net.congestion_s() >= 0.0,
+                "{spec}: congestion accumulator stays a real nonnegative total"
+            );
+            reprices += net.rate_changes();
+        }
+        // All of these presets share a bottleneck, so across five seeded
+        // rounds of twelve concurrent uploads somebody must be repriced.
+        assert!(reprices > 0, "{spec}: shared preset never repriced a flow");
+    }
+}
+
+#[test]
+fn max_min_shares_are_independent_of_admission_order() {
+    let m = 12usize;
+    let preset = FlowPreset::parse("tower:3x4").unwrap();
+    for seed in 0..8u64 {
+        let mut draws = Rng::new(900 + seed);
+        let jobs: Vec<(f64, f64)> = (0..m)
+            .map(|_| (1000.0 * (1.0 + draws.uniform()), 0.5 + 4.0 * draws.uniform()))
+            .collect();
+        let rng = Rng::new(seed).derive("flow", 0);
+        let mut fwd = FlowNet::new(&preset, m, &rng, 1.0).unwrap();
+        let mut rev = FlowNet::new(&preset, m, &rng, 1.0).unwrap();
+        let mut telem = Telemetry::off();
+        fwd.begin_round(0.0, &mut telem);
+        rev.begin_round(0.0, &mut telem);
+        for j in 0..m {
+            fwd.admit(j, jobs[j].0, jobs[j].1, &mut telem);
+        }
+        for j in (0..m).rev() {
+            rev.admit(j, jobs[j].0, jobs[j].1, &mut telem);
+        }
+        // Same active set => bitwise the same prices, whatever the
+        // admission order (all admits share one clock instant, so no
+        // bits drain in between).
+        for j in 0..m {
+            let (pa, la) = fwd.price_of(j).unwrap();
+            let (pb, lb) = rev.price_of(j).unwrap();
+            assert_eq!(pa.to_bits(), pb.to_bits(), "seed {seed} client {j} price");
+            assert_eq!(la, lb, "seed {seed} client {j} limited flag");
+        }
+        // ... and the whole drain stays bitwise identical per client.
+        let mut ta = vec![f64::NAN; m];
+        let mut tb = vec![f64::NAN; m];
+        while let Some((t, j, _)) = fwd.next_completion(&mut telem) {
+            ta[j] = t;
+        }
+        while let Some((t, j, _)) = rev.next_completion(&mut telem) {
+            tb[j] = t;
+        }
+        for (j, (a, b)) in ta.iter().zip(tb.iter()).enumerate() {
+            assert!(a.is_finite(), "seed {seed} client {j} never completed");
+            assert_eq!(a.to_bits(), b.to_bits(), "seed {seed} client {j} completion time");
+        }
+        assert_eq!(
+            fwd.congestion_s().to_bits(),
+            rev.congestion_s().to_bits(),
+            "seed {seed} congestion total"
+        );
+    }
+}
+
+/// `flow:solo` has no shared links, so nothing is ever rate-limited:
+/// through the campaign engine it must reproduce the exogenous
+/// `homog:1` analytic path bit-identically (wall and round count),
+/// with zero congestion on both sides.
+#[test]
+fn solo_topology_reproduces_the_exogenous_analytic_path_bitwise() {
+    let plan_for = |scn: &str| {
+        let mut cfg = ExperimentConfig::paper();
+        cfg.compressor = "quant:inf".into();
+        cfg.policies = vec!["fixed:2".into(), "nacfl:1".into(), "error:5.25".into()];
+        cfg.seeds = (0..3).collect();
+        ExperimentPlan::builder("flow-parity")
+            .base(cfg)
+            .scenarios(vec![ScenarioKind::parse(scn).unwrap()])
+            .tiers(vec![Tier::Analytic { k_eps: 60.0 }])
+            .build()
+            .unwrap()
+    };
+    let base = execute(&plan_for("homog:1"), &ExecOptions::default(), &mut []).unwrap();
+    let flow = execute(&plan_for("flow:solo"), &ExecOptions::default(), &mut []).unwrap();
+    assert_eq!(base.records.len(), 3 * 3);
+    assert_eq!(flow.records.len(), base.records.len());
+    let by_coord = |records: &[RunRecord]| -> HashMap<(String, u64), (u64, usize, f64)> {
+        records
+            .iter()
+            .map(|r| ((r.policy.clone(), r.seed), (r.wall.to_bits(), r.rounds, r.congestion_s)))
+            .collect()
+    };
+    let a = by_coord(&base.records);
+    let b = by_coord(&flow.records);
+    assert_eq!(a.len(), 9);
+    for (coord, (wall_bits, rounds, congestion)) in &a {
+        let (fw, fr, fc) = b[coord];
+        assert_eq!(fw, *wall_bits, "{coord:?}: wall clock diverged across paths");
+        assert_eq!(fr, *rounds, "{coord:?}: round count diverged across paths");
+        assert_eq!(*congestion, 0.0, "{coord:?}: analytic path reports congestion");
+        assert_eq!(fc, 0.0, "{coord:?}: solo topology reports congestion");
+    }
+}
