@@ -18,6 +18,7 @@
 
 use nacfl::config::ExperimentConfig;
 use nacfl::coordinator::{Coordinator, FailureConfig};
+use nacfl::des::{simulate_des, DesConfig, Discipline, FaultModel};
 use nacfl::data::synth::{generate, SynthConfig};
 use nacfl::data::{partition, PartitionKind};
 use nacfl::fl::engine::{make_engine, ComputeEngine, RustEngine};
@@ -166,6 +167,30 @@ fn main() {
     });
     println!("{}", s.report());
     report.record("netsim_step", &s);
+
+    // Faulty DES rounds (DESIGN.md §14): an 8-round event-engine
+    // simulation under packet loss with retransmission, a round
+    // deadline with quorum, and crash-recover clients — prices the
+    // fault machinery (attempt draws, backoff scheduling, deadline
+    // cuts, crash windows) on top of the plain per-round path.
+    let fault_cfg = DesConfig {
+        discipline: Discipline::Sync,
+        faults: FaultModel::parse(
+            "loss:0.1:retry2+deadline:4000000:quorum0.5+crash:40000000x4000000",
+        )
+        .unwrap(),
+        k_eps: 50.0,
+        max_rounds: 8,
+    };
+    let mut fault_pol = parse_policy("fixed:2").unwrap();
+    let s = bench("des_fault_round (loss+deadline+crash, 8-round sim)", budget, || {
+        let mut fproc = sc.process(Rng::new(7)).unwrap();
+        black_box(
+            simulate_des(&ctx, fault_pol.as_mut(), &mut fproc, &fault_cfg, Rng::new(8)).unwrap(),
+        );
+    });
+    println!("{}", s.report());
+    report.record("des_fault_round", &s);
 
     // Flow-network fair-share allocator (DESIGN.md §13): one fully
     // contended round on a 4x16 tower topology — begin_round, admit

@@ -67,6 +67,12 @@ pub struct ExperimentConfig {
 
     // DES tier (aggregation discipline + fault injection).
     pub discipline: Discipline,
+    /// Composable fault spec (`des::FaultModel::parse`): `none` |
+    /// `drop:<p>` | `loss:<p>[:retry<K>]` | `deadline:<s>[:quorum<frac>]`
+    /// | `crash:<mtbf>x<mttr>`, `+`-combinable.  Axis-carried by
+    /// campaigns (like `discipline`), so it is *not* part of the config
+    /// fingerprint.
+    pub faults: String,
     /// Per-(client, round) update-loss probability.
     pub dropout: f64,
     /// Client ids slowed by `straggler_mult`.
@@ -109,6 +115,7 @@ impl ExperimentConfig {
             artifact_dir: "artifacts".into(),
             workers: 0,
             discipline: Discipline::Sync,
+            faults: "none".into(),
             dropout: 0.0,
             stragglers: Vec::new(),
             straggler_mult: 1.0,
@@ -152,8 +159,9 @@ impl ExperimentConfig {
             .context("instantiating congestion process")
     }
 
-    /// Fault model for the DES tier, from the config's dropout/straggler
-    /// settings (call after [`ExperimentConfig::validate`]).
+    /// Fault model for the DES tier: the base dropout/straggler settings
+    /// with the `faults` spec applied on top (spec channels override the
+    /// base; call after [`ExperimentConfig::validate`]).
     pub fn fault_model(&self) -> FaultModel {
         let mut f = FaultModel::none();
         if self.dropout > 0.0 {
@@ -162,6 +170,8 @@ impl ExperimentConfig {
         if !self.stragglers.is_empty() {
             f = f.with_stragglers(self.m, &self.stragglers, self.straggler_mult);
         }
+        f.apply_spec(&self.faults)
+            .expect("fault spec must be validated before fault_model()");
         f
     }
 
@@ -272,6 +282,12 @@ impl ExperimentConfig {
                 v.as_str().ok_or_else(|| anyhow!("des::discipline must be a string"))?,
             )?;
         }
+        if let Some(v) = get("des", "faults") {
+            c.faults = v
+                .as_str()
+                .ok_or_else(|| anyhow!("des::faults must be a string"))?
+                .into();
+        }
         set_f64!("des", "dropout", c.dropout);
         set_f64!("des", "straggler_mult", c.straggler_mult);
         if let Some(v) = get("des", "stragglers") {
@@ -349,6 +365,10 @@ impl ExperimentConfig {
 
         let mut des = std::collections::BTreeMap::new();
         des.insert("discipline".into(), Value::Str(self.discipline.label()));
+        // Emitted only when set, so pre-fault manifests stay byte-stable.
+        if self.faults != "none" {
+            des.insert("faults".into(), Value::Str(self.faults.clone()));
+        }
         des.insert("dropout".into(), Value::Float(self.dropout));
         des.insert(
             "stragglers".into(),
@@ -384,9 +404,11 @@ impl ExperimentConfig {
             PolicySpec::parse(p)?;
         }
         parse_compressor(&self.compressor, &self.compressor_env())?;
-        if !(0.0..1.0).contains(&self.dropout) {
-            return Err(anyhow!("des::dropout must be in [0, 1)"));
+        if !(0.0..=1.0).contains(&self.dropout) {
+            return Err(anyhow!("des::dropout must be in [0, 1]"));
         }
+        FaultModel::parse(&self.faults)
+            .map_err(|e| anyhow!("des::faults: {e}"))?;
         if self.straggler_mult < 1.0 {
             return Err(anyhow!("des::straggler_mult must be >= 1"));
         }
@@ -478,6 +500,26 @@ threads = 2
         assert!(ExperimentConfig::from_doc(&doc).is_err());
         let doc = toml_lite::parse("[des]\ndropout = 1.5").unwrap();
         assert!(ExperimentConfig::from_doc(&doc).is_err());
+        // p = 1 is now a legal (closed-endpoint) probability.
+        let doc = toml_lite::parse("[des]\ndropout = 1.0").unwrap();
+        ExperimentConfig::from_doc(&doc).unwrap();
+    }
+
+    #[test]
+    fn fault_spec_parses_and_composes_with_base_channels() {
+        let doc = toml_lite::parse(
+            "[des]\nfaults = \"loss:0.1:retry2+deadline:30:quorum0.5\"\nstragglers = [1]\nstraggler_mult = 3.0",
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_doc(&doc).unwrap();
+        let f = c.fault_model();
+        assert!((f.loss_prob - 0.1).abs() < 1e-12);
+        assert_eq!(f.max_retries, 2);
+        assert!((f.deadline_s - 30.0).abs() < 1e-12);
+        assert!((f.quorum_frac - 0.5).abs() < 1e-12);
+        assert_eq!(f.slowdown_of(1), 3.0, "base stragglers compose with the spec");
+        let doc = toml_lite::parse("[des]\nfaults = \"loss:2\"").unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_err());
     }
 
     #[test]
@@ -521,6 +563,7 @@ threads = 2
         c.data_dir = Some("mnist-idx".into());
         c.engine = "rust".into();
         c.discipline = Discipline::SemiSync { k: 7 };
+        c.faults = "loss:0.1+deadline:25".into();
         c.dropout = 0.1;
         c.stragglers = vec![0, 3];
         c.straggler_mult = 4.0;
@@ -549,6 +592,14 @@ threads = 2
         let doc2 = no_dir.to_doc();
         assert!(!doc2["data"].contains_key("dir"));
         assert_eq!(ExperimentConfig::from_doc(&doc2).unwrap().data_dir, None);
+
+        // faults = "none" likewise omits the key (pre-fault manifests
+        // stay byte-stable).
+        let mut no_faults = c.clone();
+        no_faults.faults = "none".into();
+        let doc3 = no_faults.to_doc();
+        assert!(!doc3["des"].contains_key("faults"));
+        assert_eq!(ExperimentConfig::from_doc(&doc3).unwrap().faults, "none");
     }
 
     #[test]

@@ -37,7 +37,7 @@
 //! analytic tier's [`StoppingRule`], reused with non-unit weights.
 
 use super::event::EventQueue;
-use super::faults::FaultModel;
+use super::faults::{CrashState, FaultModel};
 use crate::netsim::{DelayModel, NetworkProcess};
 use crate::obs::Telemetry;
 use crate::policy::{mean_level, CompressionChoice, CompressionPolicy, PolicyCtx, RoundsModel};
@@ -167,6 +167,20 @@ pub struct DesResult {
     /// decomposition — congestion seconds are a subset of upload
     /// seconds, reported separately.
     pub congestion_s: f64,
+    /// Mean-client seconds spent on retransmissions + backoff under the
+    /// `loss` channel (a subset of `upload_s`, reported separately like
+    /// `congestion_s`; 0 without loss).
+    pub retrans_s: f64,
+    /// Mean fraction of the roster delivered per aggregation (1.0 for
+    /// fault-free sync; lower under loss/deadline/crash).
+    pub quorum_frac: f64,
+    /// Retransmissions performed under the `loss` channel.
+    pub retries: u64,
+    /// Uploads discarded because the round (or per-upload budget)
+    /// closed at a `deadline`.
+    pub deadline_misses: u64,
+    /// (client, round) pairs skipped because the client was crashed.
+    pub crash_rounds: u64,
 }
 
 impl DesResult {
@@ -264,6 +278,15 @@ fn run_round_based(
         Discipline::Async { .. } => unreachable!("async dispatches to run_async"),
     };
 
+    // Fault streams (module docs in `faults`): loss draws on a derived
+    // stream, crash renewals on per-client derived streams, so enabling
+    // either never perturbs the dropout stream below.  `derive` is
+    // non-consuming, so fault-free runs still draw nothing from `rng`.
+    let mut loss_rng = rng.derive("loss", 0);
+    let mut crash = cfg.faults.crash_state(m, &rng);
+    let deadline = cfg.faults.deadline_s;
+    let quorum_min = cfg.faults.quorum_need(m);
+
     let mut q: EventQueue<usize> = EventQueue::new();
     let mut lost = vec![false; m];
     let mut got = vec![false; m];
@@ -279,6 +302,11 @@ fn run_round_based(
     let mut dropped = 0usize;
     let mut late = 0usize;
     let mut converged = false;
+    let mut retrans_sum = 0.0f64;
+    let mut qf_sum = 0.0f64;
+    let mut retries = 0u64;
+    let mut deadline_misses = 0u64;
+    let mut crash_rounds = 0u64;
 
     while rounds < cfg.max_rounds {
         rounds += 1;
@@ -288,36 +316,90 @@ fn run_round_based(
 
         // Schedule this round's arrivals; per-client virtual clocks are
         // round-relative (everyone re-syncs at the aggregation barrier).
+        // Crashed clients sit the round out; an upload whose loss budget
+        // is exhausted pays its transfer time but never arrives.
         q.clear();
         let mut offset = 0.0f64;
+        // Slowest transmit offset this round (close time when every
+        // possible arrival is in but the discipline still wants more).
+        let mut spent_max = 0.0f64;
         for j in 0..m {
+            if crash.is_down(j, wall) {
+                crash_rounds += 1;
+                // Streams stay one-draw-per-(client, round) regardless
+                // of crash state (alignment contract).
+                lost[j] = cfg.faults.draw_drop(&mut rng);
+                let _ = cfg.faults.draw_attempts(&mut loss_rng);
+                continue;
+            }
             let d = ctx.client_delay(choices[j].level, c[j] * cfg.faults.slowdown_of(j));
-            delay_sum += d;
-            let at = if tdma {
-                offset += d;
-                offset
+            let (attempts, ok) = cfg.faults.draw_attempts(&mut loss_rng);
+            let d_total = if attempts > 1 {
+                // Retries re-pay the transfer term only (compute is done).
+                let extra = FaultModel::retrans_extra(d - theta_tau, attempts);
+                retries += (attempts - 1) as u64;
+                retrans_sum += extra;
+                d + extra
             } else {
                 d
             };
+            delay_sum += d_total;
+            let at = if tdma {
+                offset += d_total;
+                offset
+            } else {
+                d_total
+            };
+            spent_max = spent_max.max(at);
             lost[j] = cfg.faults.draw_drop(&mut rng);
-            q.push(at, j);
+            if ok {
+                q.push(at, j);
+            } else {
+                dropped += 1;
+            }
         }
         telem.gauge_max("des.queue_high_water", q.len() as u64);
 
-        // Pop arrivals until the discipline closes the round.
+        // Pop arrivals until the discipline closes the round.  With a
+        // deadline, arrivals past it are discarded once the quorum is
+        // in (the server waits past the deadline only while short of
+        // `quorum_min` arrivals).
         for g in got.iter_mut() {
             *g = false;
         }
+        let expected = q.len();
         let mut popped = 0usize;
         let mut dur = 0.0f64;
+        let mut cut = false;
         while popped < need {
             let Some((t, j)) = q.pop() else { break };
+            if t > deadline && popped >= quorum_min {
+                // Round closed at the deadline: this arrival and
+                // everything still in flight missed the cut.
+                deadline_misses += 1 + q.len() as u64;
+                cut = true;
+                break;
+            }
             got[j] = true;
             popped += 1;
             dur = t;
         }
-        late += m - popped;
+        if cut {
+            // Quorum waits can push the close past the deadline.
+            dur = dur.max(deadline);
+        } else if popped < need {
+            // Every possible arrival is in; the server gives up at the
+            // deadline (or when the slowest given-up transmitter went
+            // quiet).  Unreachable fault-free: `expected == m >= need`.
+            dur = if deadline.is_finite() { dur.max(deadline) } else { dur.max(spent_max) };
+        }
+        late += expected - popped;
         wall += dur;
+        if expected == 0 && !crash.is_inert() {
+            // Whole-fleet outage: jump to the first recovery instead of
+            // spinning zero-duration rounds (no-op while anyone is up).
+            wall = crash.earliest_up(wall);
+        }
         telem.count("des.rounds", 1);
         telem.count("des.events_popped", popped as u64);
         telem.sim_span(round_span, dur);
@@ -330,6 +412,7 @@ fn run_round_based(
         dropped += popped - delivered.len();
         if !delivered.is_empty() {
             aggregations += 1;
+            qf_sum += delivered.len() as f64 / m as f64;
             if rule.record(1.0, rho_effective(ctx, &delivered, m)) {
                 converged = true;
                 break;
@@ -337,7 +420,23 @@ fn run_round_based(
         }
     }
 
-    let compute_s = rounds as f64 * theta_tau;
+    if retries > 0 {
+        telem.count("net.retries", retries);
+    }
+    if deadline_misses > 0 {
+        telem.count("net.deadline_misses", deadline_misses);
+    }
+    if crash_rounds > 0 {
+        telem.count("net.crash_rounds", crash_rounds);
+    }
+    // Crash-free compute stays the legacy single-multiply float path
+    // (ledger byte-stability); crashed (client, round) pairs do no
+    // local work, so they are netted out of the mean.
+    let compute_s = if crash_rounds == 0 {
+        rounds as f64 * theta_tau
+    } else {
+        (rounds as f64 * m as f64 - crash_rounds as f64) * theta_tau / m as f64
+    };
     let upload_s = delay_sum / m as f64 - compute_s;
     Ok(DesResult {
         wall,
@@ -353,6 +452,11 @@ fn run_round_based(
         compute_s,
         wait_s: wall - compute_s - upload_s,
         congestion_s: 0.0,
+        retrans_s: retrans_sum / m as f64,
+        quorum_frac: if aggregations > 0 { qf_sum / aggregations as f64 } else { 0.0 },
+        retries,
+        deadline_misses,
+        crash_rounds,
     })
 }
 
@@ -363,12 +467,27 @@ struct AsyncArrival {
     read_version: u64,
     choice: CompressionChoice,
     lost: bool,
+    /// Crash-recovery marker: not an upload at all, just the client
+    /// rejoining when its repair completes.
+    rejoin: bool,
+}
+
+/// Fault accounting shared by the async start/drain loops.
+#[derive(Default)]
+struct AsyncFaultCounters {
+    retries: u64,
+    deadline_misses: u64,
+    crash_rounds: u64,
+    retrans_sum: f64,
 }
 
 /// Begin one async client-round at `now`: draw the network state, let the
 /// policy pick bits (it sees the full vector, as always), and schedule
 /// the client's arrival.  Returns the across-client mean of the chosen
-/// bits (diagnostics) and the scheduled transfer delay (decomposition).
+/// bits (diagnostics) and the client's busy seconds (decomposition; 0
+/// for a crashed client, which schedules only its rejoin).  Network,
+/// policy, dropout and loss streams advance uniformly per start whether
+/// or not the client is crashed (alignment contract).
 #[allow(clippy::too_many_arguments)]
 fn start_async_round(
     ctx: &PolicyCtx,
@@ -376,6 +495,9 @@ fn start_async_round(
     process: &mut dyn NetworkProcess,
     faults: &FaultModel,
     rng: &mut Rng,
+    loss_rng: &mut Rng,
+    crash: &mut CrashState,
+    counters: &mut AsyncFaultCounters,
     q: &mut EventQueue<AsyncArrival>,
     j: usize,
     now: f64,
@@ -385,11 +507,43 @@ fn start_async_round(
     let choices = policy.choose(ctx, &c);
     let d = ctx.client_delay(choices[j].level, c[j] * faults.slowdown_of(j));
     let lost = faults.draw_drop(rng);
+    let (attempts, ok) = faults.draw_attempts(loss_rng);
+    if crash.is_down(j, now) {
+        counters.crash_rounds += 1;
+        q.push(
+            crash.recovery_time(j).max(now),
+            AsyncArrival {
+                client: j,
+                read_version: version,
+                choice: choices[j],
+                lost: true,
+                rejoin: true,
+            },
+        );
+        return (mean_level(&choices), 0.0);
+    }
+    let d_total = if attempts > 1 {
+        // Retries re-pay the transfer term only (compute is done).
+        let extra = FaultModel::retrans_extra(d - ctx.delay.theta() * ctx.tau as f64, attempts);
+        counters.retries += (attempts - 1) as u64;
+        counters.retrans_sum += extra;
+        d + extra
+    } else {
+        d
+    };
+    // Per-upload deadline: the server discards anything slower than the
+    // budget; the client abandons the transfer at the cut and restarts.
+    let (at, busy, lost) = if d_total > faults.deadline_s {
+        counters.deadline_misses += 1;
+        (now + faults.deadline_s, faults.deadline_s, true)
+    } else {
+        (now + d_total, d_total, lost || !ok)
+    };
     q.push(
-        now + d,
-        AsyncArrival { client: j, read_version: version, choice: choices[j], lost },
+        at,
+        AsyncArrival { client: j, read_version: version, choice: choices[j], lost, rejoin: false },
     );
-    (mean_level(&choices), d)
+    (mean_level(&choices), busy)
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -404,6 +558,10 @@ fn run_async(
 ) -> Result<DesResult> {
     let m = process.dim();
     let theta_tau = ctx.delay.theta() * ctx.tau as f64;
+    // Fault streams — see `run_round_based` / the `faults` module docs.
+    let mut loss_rng = rng.derive("loss", 0);
+    let mut crash = cfg.faults.crash_state(m, &rng);
+    let mut counters = AsyncFaultCounters::default();
     let mut q: EventQueue<AsyncArrival> = EventQueue::new();
     let mut version: u64 = 0;
     let mut wall = 0.0f64;
@@ -419,8 +577,20 @@ fn run_async(
     let max_starts = cfg.max_rounds.saturating_mul(m);
 
     for j in 0..m {
-        let (mb, d) =
-            start_async_round(ctx, policy, process, &cfg.faults, &mut rng, &mut q, j, 0.0, version);
+        let (mb, d) = start_async_round(
+            ctx,
+            policy,
+            process,
+            &cfg.faults,
+            &mut rng,
+            &mut loss_rng,
+            &mut crash,
+            &mut counters,
+            &mut q,
+            j,
+            0.0,
+            version,
+        );
         bits_sum += mb;
         delay_sum += d;
         rounds += 1;
@@ -432,7 +602,9 @@ fn run_async(
         telem.count("des.events_popped", 1);
         telem.sim_span("des.round_s.async", t - wall);
         wall = t;
-        if arr.lost {
+        if arr.rejoin {
+            // Crash repair completed; nothing arrived — just restart.
+        } else if arr.lost {
             dropped += 1;
         } else {
             let stale = (version - arr.read_version) as f64;
@@ -455,6 +627,9 @@ fn run_async(
             process,
             &cfg.faults,
             &mut rng,
+            &mut loss_rng,
+            &mut crash,
+            &mut counters,
             &mut q,
             arr.client,
             t,
@@ -467,7 +642,22 @@ fn run_async(
         telem.gauge_max("des.queue_high_water", q.len() as u64);
     }
 
-    let compute_s = rounds as f64 / m as f64 * theta_tau;
+    if counters.retries > 0 {
+        telem.count("net.retries", counters.retries);
+    }
+    if counters.deadline_misses > 0 {
+        telem.count("net.deadline_misses", counters.deadline_misses);
+    }
+    if counters.crash_rounds > 0 {
+        telem.count("net.crash_rounds", counters.crash_rounds);
+    }
+    // Crash-free compute stays the legacy float path (byte-stability);
+    // crashed starts do no local work.
+    let compute_s = if counters.crash_rounds == 0 {
+        rounds as f64 / m as f64 * theta_tau
+    } else {
+        (rounds as f64 - counters.crash_rounds as f64) / m as f64 * theta_tau
+    };
     let upload_s = delay_sum / m as f64 - compute_s;
     Ok(DesResult {
         wall,
@@ -483,6 +673,11 @@ fn run_async(
         compute_s,
         wait_s: wall - compute_s - upload_s,
         congestion_s: 0.0,
+        retrans_s: counters.retrans_sum / m as f64,
+        quorum_frac: if aggregations > 0 { 1.0 / m as f64 } else { 0.0 },
+        retries: counters.retries,
+        deadline_misses: counters.deadline_misses,
+        crash_rounds: counters.crash_rounds,
     })
 }
 
@@ -637,6 +832,105 @@ mod tests {
         let clean = DesConfig::new(Discipline::Sync, 60.0);
         let r_clean = simulate_des(&ctx, p2.as_mut(), &mut n2, &clean, Rng::new(12)).unwrap();
         assert!(r.rounds >= r_clean.rounds);
+    }
+
+    #[test]
+    fn packet_loss_pays_retransmission_time() {
+        let ctx = ctx();
+        let mut p1 = parse_policy("fixed:2").unwrap();
+        let mut p2 = parse_policy("fixed:2").unwrap();
+        let mut n1 = process(8);
+        let mut n2 = process(8);
+        let clean = DesConfig::new(Discipline::Sync, 60.0);
+        let lossy = DesConfig::new(Discipline::Sync, 60.0)
+            .with_faults(FaultModel::parse("loss:0.2").unwrap());
+        let r_clean = simulate_des(&ctx, p1.as_mut(), &mut n1, &clean, Rng::new(3)).unwrap();
+        let r_lossy = simulate_des(&ctx, p2.as_mut(), &mut n2, &lossy, Rng::new(3)).unwrap();
+        assert!(r_lossy.retries > 0);
+        assert!(r_lossy.retrans_s > 0.0);
+        assert!(r_lossy.converged);
+        // Retransmissions stretch rounds vs the paired clean run.
+        assert!(r_lossy.mean_round_duration() > r_clean.mean_round_duration());
+        assert_eq!(r_clean.retries, 0);
+        assert_eq!(r_clean.retrans_s, 0.0);
+        assert!((r_clean.quorum_frac - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deadline_closes_rounds_and_quorum_extends_them() {
+        let ctx = ctx();
+        // Find a deadline below the clean mean round duration so some
+        // arrivals miss the cut.
+        let mut p0 = parse_policy("fixed:2").unwrap();
+        let mut n0 = process(13);
+        let clean = DesConfig::new(Discipline::Sync, 60.0);
+        let r0 = simulate_des(&ctx, p0.as_mut(), &mut n0, &clean, Rng::new(4)).unwrap();
+        let cut = r0.mean_round_duration() * 0.6;
+
+        let spec = format!("deadline:{cut}");
+        let mut p1 = parse_policy("fixed:2").unwrap();
+        let mut n1 = process(13);
+        let cfg = DesConfig::new(Discipline::Sync, 60.0)
+            .with_faults(FaultModel::parse(&spec).unwrap());
+        let r = simulate_des(&ctx, p1.as_mut(), &mut n1, &cfg, Rng::new(4)).unwrap();
+        assert!(r.deadline_misses > 0, "{r:?}");
+        assert!(r.quorum_frac < 1.0, "{r:?}");
+        assert!(r.converged);
+        // No round runs past the deadline with quorum 0.
+        assert!(r.mean_round_duration() <= cut * (1.0 + 1e-12));
+
+        // A full quorum turns the deadline into a no-op for sync.
+        let mut p2 = parse_policy("fixed:2").unwrap();
+        let mut n2 = process(13);
+        let cfg2 = DesConfig::new(Discipline::Sync, 60.0)
+            .with_faults(FaultModel::parse(&format!("{spec}:quorum1")).unwrap());
+        let r2 = simulate_des(&ctx, p2.as_mut(), &mut n2, &cfg2, Rng::new(4)).unwrap();
+        let mut p3 = parse_policy("fixed:2").unwrap();
+        let mut n3 = process(13);
+        let r3 = simulate_des(&ctx, p3.as_mut(), &mut n3, &clean, Rng::new(4)).unwrap();
+        assert_eq!(r2.wall.to_bits(), r3.wall.to_bits());
+        assert_eq!(r2.deadline_misses, 0);
+    }
+
+    #[test]
+    fn crashed_clients_miss_rounds_and_rejoin() {
+        let ctx = ctx();
+        let mut p = parse_policy("fixed:2").unwrap();
+        let mut n = process(6);
+        let cfg = DesConfig::new(Discipline::Sync, 60.0)
+            .with_faults(FaultModel::parse("crash:2000x500").unwrap());
+        let r = simulate_des(&ctx, p.as_mut(), &mut n, &cfg, Rng::new(5)).unwrap();
+        assert!(r.crash_rounds > 0, "{r:?}");
+        assert!(r.converged, "{r:?}");
+        assert!(r.quorum_frac < 1.0, "aggregates shrink while clients are down");
+    }
+
+    #[test]
+    fn faulty_runs_are_deterministic_per_discipline() {
+        let ctx = ctx();
+        // Scales matched to the paper delay model (uploads ~1e6 s sim):
+        // the deadline cuts the slow tail, crashes land every ~20 rounds.
+        let f = FaultModel::parse("loss:0.15+deadline:5000000:quorum0.5+crash:50000000x5000000")
+            .unwrap();
+        for disc in [
+            Discipline::Sync,
+            Discipline::SemiSync { k: 6 },
+            Discipline::Async { staleness_exp: 0.5 },
+        ] {
+            let cfg = DesConfig::new(disc, 60.0).with_faults(f.clone());
+            let mut p1 = parse_policy("nacfl:1").unwrap();
+            let mut p2 = parse_policy("nacfl:1").unwrap();
+            let mut n1 = process(7);
+            let mut n2 = process(7);
+            let a = simulate_des(&ctx, p1.as_mut(), &mut n1, &cfg, Rng::new(21)).unwrap();
+            let b = simulate_des(&ctx, p2.as_mut(), &mut n2, &cfg, Rng::new(21)).unwrap();
+            assert_eq!(a.wall.to_bits(), b.wall.to_bits(), "{disc}");
+            assert_eq!(a.rounds, b.rounds, "{disc}");
+            assert_eq!(a.retries, b.retries, "{disc}");
+            assert_eq!(a.deadline_misses, b.deadline_misses, "{disc}");
+            assert_eq!(a.crash_rounds, b.crash_rounds, "{disc}");
+            assert_eq!(a.retrans_s.to_bits(), b.retrans_s.to_bits(), "{disc}");
+        }
     }
 
     #[test]

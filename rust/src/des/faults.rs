@@ -1,25 +1,106 @@
-//! Client fault injection for the DES tier.
+//! Client fault injection for the DES tier: the composable
+//! `faults:<spec>` family.
 //!
-//! Two orthogonal fault channels, composing with every discipline:
+//! A fault model is the `+`-combination of independent channels, each
+//! a `util::spec` atom (the `+` combinator is split *above*
+//! `Spec::parse`, so atom arguments keep the plain `name:arg` grammar):
 //!
-//! * **dropout** — with probability `dropout_prob`, a client's update for
-//!   a given round is lost.  Matching the coordinator's semantics, the
-//!   transfer still happens (time is still paid, the arrival event still
-//!   fires); only the payload is discarded at aggregation.
-//! * **stragglers** — per-client multiplicative slowdown on the
-//!   *transfer* term (`c_j * s(b_j)`; the `theta*tau` compute term is
-//!   untouched), modelling persistently slow links beyond what the BTD
-//!   process already captures.
+//! * `none` — the identity; injects nothing and consumes no randomness.
+//! * `drop:<p>` — with probability `p ∈ [0, 1]`, a client's update for
+//!   a round is lost *after* transfer: time is still paid, the arrival
+//!   event still fires, only the payload is discarded at aggregation
+//!   (the coordinator's historical dropout semantics).
+//! * `loss:<p>[:retry<K>]` — per-transmission packet loss: each
+//!   transmission attempt is lost with probability `p ∈ [0, 1)` and
+//!   retransmitted under exponential backoff, at most `K` retries
+//!   (default 3).  Every retry re-pays the transfer time plus a
+//!   backoff of `BACKOFF_FRAC · d · 2^(i-1)` after the i-th failure;
+//!   an upload whose `K+1` attempts all fail never reaches the server.
+//! * `deadline:<s>[:quorum<frac>]` — round deadline: the server closes
+//!   a round at `s` simulated seconds, aggregating whichever quorum
+//!   arrived (arrivals cut off by the deadline count as misses), but
+//!   never before `ceil(frac · m)` updates have arrived (default 0 —
+//!   a pure deadline).
+//! * `crash:<mtbf>x<mttr>` — crash–recover clients: each client
+//!   alternates up-time drawn `Exp(mtbf)` and a deterministic repair
+//!   time `mttr`; while down it misses whole rounds and rejoins once
+//!   repaired.
+//!
+//! Stragglers (per-client slowdown multipliers) remain a base-config
+//! channel (`--stragglers`), composing with any spec.
+//!
+//! ## RNG stream alignment contract
+//!
+//! Determinism across resume/shard/merge requires that enabling one
+//! fault channel never perturbs another channel's sample path, and
+//! that `faults:none` consumes **no** fault randomness at all:
+//!
+//! * [`FaultModel::draw_drop`] draws from the *undived* fault stream
+//!   the engine passes in (the PR-1 dropout stream), and consumes
+//!   nothing when `dropout_prob == 0`.
+//! * [`FaultModel::draw_attempts`] must be fed a stream derived as
+//!   `fault_rng.derive("loss", 0)`, and consumes nothing when
+//!   `loss_prob == 0`.
+//! * [`CrashState`] owns per-client streams derived as
+//!   `fault_rng.derive("crash", j)`, advanced lazily per client, so
+//!   crash draws are independent of both the query order across
+//!   clients and every other channel.
+//! * Deadlines are deterministic and consume no randomness.
+//!
+//! `Rng::derive` is non-consuming (`&self`), so deriving the loss and
+//! crash streams is free even when those channels are disabled.
 
 use crate::util::rng::Rng;
+use crate::util::spec::Spec;
+use anyhow::{anyhow, Result};
 
-#[derive(Clone, Debug, Default)]
+/// Backoff scale: after the i-th failed transmission of a transfer
+/// that takes `d` seconds per attempt, the client waits
+/// `BACKOFF_FRAC * d * 2^(i-1)` before retransmitting.
+pub const BACKOFF_FRAC: f64 = 0.5;
+
+/// Default retransmission budget of `loss:<p>` (overridable with
+/// `:retry<K>`).
+pub const DEFAULT_RETRIES: u32 = 3;
+
+#[derive(Clone, Debug)]
 pub struct FaultModel {
-    /// Per-(client, round) probability that the produced update is lost.
+    /// Per-(client, round) probability that the produced update is lost
+    /// at aggregation (`drop:<p>`; transfer time still paid).
     pub dropout_prob: f64,
+    /// Per-transmission packet-loss probability (`loss:<p>`).
+    pub loss_prob: f64,
+    /// Retransmission budget under `loss` (attempts = retries + 1).
+    pub max_retries: u32,
+    /// Round deadline in simulated seconds (`deadline:<s>`;
+    /// `INFINITY` = no deadline).
+    pub deadline_s: f64,
+    /// Minimum fraction of the roster the server waits for past the
+    /// deadline (`:quorum<frac>`; 0 = pure deadline).
+    pub quorum_frac: f64,
+    /// Mean up-time between crashes (`crash:<mtbf>x<mttr>`;
+    /// `INFINITY` = no crashes).
+    pub crash_mtbf: f64,
+    /// Deterministic repair time after a crash.
+    pub crash_mttr: f64,
     /// Per-client multiplicative slowdown on the transfer term
     /// (empty = no slowdown anywhere).
     pub slowdown: Vec<f64>,
+}
+
+impl Default for FaultModel {
+    fn default() -> Self {
+        FaultModel {
+            dropout_prob: 0.0,
+            loss_prob: 0.0,
+            max_retries: DEFAULT_RETRIES,
+            deadline_s: f64::INFINITY,
+            quorum_frac: 0.0,
+            crash_mtbf: f64::INFINITY,
+            crash_mttr: 0.0,
+            slowdown: Vec::new(),
+        }
+    }
 }
 
 impl FaultModel {
@@ -30,8 +111,176 @@ impl FaultModel {
         Self::default()
     }
 
+    /// Parse a `faults:<spec>` value: `+`-combined atoms from
+    /// `none | drop:<p> | loss:<p>[:retry<K>] | deadline:<s>[:quorum<frac>]
+    /// | crash:<mtbf>x<mttr>`.  The combinator is split here, above
+    /// `Spec::parse`; atoms may appear in any order, at most once each.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut f = FaultModel::none();
+        f.apply_spec(spec)?;
+        Ok(f)
+    }
+
+    /// Apply a `faults:<spec>` string on top of this model (base-config
+    /// channels like stragglers are preserved; spec channels override).
+    pub fn apply_spec(&mut self, spec: &str) -> Result<()> {
+        let spec = spec.trim();
+        if spec.is_empty() {
+            return Err(anyhow!("empty fault spec (use `none`)"));
+        }
+        let mut seen: Vec<&str> = Vec::new();
+        for atom in spec.split('+') {
+            let sp = Spec::parse(atom.trim())
+                .map_err(|e| anyhow!("fault spec `{spec}`: {e}"))?;
+            if seen.contains(&sp.name.as_str()) {
+                return Err(anyhow!(
+                    "fault spec `{spec}` repeats the `{}` channel",
+                    sp.name
+                ));
+            }
+            match sp.name.as_str() {
+                "none" => {
+                    sp.max_args(0)?;
+                    if spec.contains('+') {
+                        return Err(anyhow!(
+                            "`none` cannot combine with other fault channels"
+                        ));
+                    }
+                }
+                "drop" => {
+                    sp.max_args(1)?;
+                    let p: f64 = sp.req(0, "a drop probability")?;
+                    if !(0.0..=1.0).contains(&p) {
+                        return Err(anyhow!("drop probability must be in [0, 1], got {p}"));
+                    }
+                    self.dropout_prob = p;
+                }
+                "loss" => {
+                    sp.max_args(2)?;
+                    let p: f64 = sp.req(0, "a per-transmission loss probability")?;
+                    if !(0.0..1.0).contains(&p) {
+                        return Err(anyhow!(
+                            "loss probability must be in [0, 1), got {p}"
+                        ));
+                    }
+                    let k = match sp.arg(1) {
+                        None => DEFAULT_RETRIES,
+                        Some(a) => a
+                            .strip_prefix("retry")
+                            .ok_or_else(|| {
+                                anyhow!("loss wants `retry<K>`, got `{a}`")
+                            })?
+                            .parse()
+                            .map_err(|e| anyhow!("loss retry budget: {e}"))?,
+                    };
+                    self.loss_prob = p;
+                    self.max_retries = k;
+                }
+                "deadline" => {
+                    sp.max_args(2)?;
+                    let s: f64 = sp.req(0, "a deadline in seconds")?;
+                    if !(s.is_finite() && s > 0.0) {
+                        return Err(anyhow!(
+                            "deadline must be finite and > 0 seconds, got {s}"
+                        ));
+                    }
+                    let q = match sp.arg(1) {
+                        None => 0.0,
+                        Some(a) => {
+                            let q: f64 = a
+                                .strip_prefix("quorum")
+                                .ok_or_else(|| {
+                                    anyhow!("deadline wants `quorum<frac>`, got `{a}`")
+                                })?
+                                .parse()
+                                .map_err(|e| anyhow!("deadline quorum fraction: {e}"))?;
+                            if !(0.0..=1.0).contains(&q) {
+                                return Err(anyhow!(
+                                    "quorum fraction must be in [0, 1], got {q}"
+                                ));
+                            }
+                            q
+                        }
+                    };
+                    self.deadline_s = s;
+                    self.quorum_frac = q;
+                }
+                "crash" => {
+                    sp.max_args(1)?;
+                    let arg = sp.arg(0).ok_or_else(|| {
+                        anyhow!("crash wants `<mtbf>x<mttr>` (seconds)")
+                    })?;
+                    let (mtbf, mttr) = arg.split_once('x').ok_or_else(|| {
+                        anyhow!("crash wants `<mtbf>x<mttr>`, got `{arg}`")
+                    })?;
+                    let mtbf: f64 =
+                        mtbf.parse().map_err(|e| anyhow!("crash mtbf: {e}"))?;
+                    let mttr: f64 =
+                        mttr.parse().map_err(|e| anyhow!("crash mttr: {e}"))?;
+                    if !(mtbf.is_finite() && mtbf > 0.0 && mttr.is_finite() && mttr > 0.0) {
+                        return Err(anyhow!(
+                            "crash mtbf/mttr must be finite and > 0, got {mtbf}x{mttr}"
+                        ));
+                    }
+                    self.crash_mtbf = mtbf;
+                    self.crash_mttr = mttr;
+                }
+                other => {
+                    return Err(anyhow!(
+                        "unknown fault channel `{other}` (none | drop:<p> | \
+                         loss:<p>[:retry<K>] | deadline:<s>[:quorum<frac>] | \
+                         crash:<mtbf>x<mttr>, `+`-combinable)"
+                    ));
+                }
+            }
+            seen.push(match sp.name.as_str() {
+                "drop" => "drop",
+                "loss" => "loss",
+                "deadline" => "deadline",
+                "crash" => "crash",
+                _ => "none",
+            });
+        }
+        Ok(())
+    }
+
+    /// Canonical spec label — round-trips through [`FaultModel::parse`]
+    /// (channels emitted in `drop+loss+deadline+crash` order, defaults
+    /// omitted; `none` when nothing is set).  Stragglers are a
+    /// base-config channel and are not part of the label.
+    pub fn label(&self) -> String {
+        let mut parts: Vec<String> = Vec::new();
+        if self.dropout_prob > 0.0 {
+            parts.push(format!("drop:{}", self.dropout_prob));
+        }
+        if self.loss_prob > 0.0 {
+            if self.max_retries == DEFAULT_RETRIES {
+                parts.push(format!("loss:{}", self.loss_prob));
+            } else {
+                parts.push(format!("loss:{}:retry{}", self.loss_prob, self.max_retries));
+            }
+        }
+        if self.deadline_s.is_finite() {
+            if self.quorum_frac > 0.0 {
+                parts.push(format!("deadline:{}:quorum{}", self.deadline_s, self.quorum_frac));
+            } else {
+                parts.push(format!("deadline:{}", self.deadline_s));
+            }
+        }
+        if self.crash_mtbf.is_finite() {
+            parts.push(format!("crash:{}x{}", self.crash_mtbf, self.crash_mttr));
+        }
+        if parts.is_empty() {
+            "none".into()
+        } else {
+            parts.join("+")
+        }
+    }
+
+    /// Accepts the full closed probability range `[0, 1]` (`p = 1`
+    /// loses every update — a legal, if bleak, configuration).
     pub fn with_dropout(mut self, p: f64) -> Self {
-        assert!((0.0..1.0).contains(&p), "dropout_prob must be in [0, 1), got {p}");
+        assert!((0.0..=1.0).contains(&p), "dropout_prob must be in [0, 1], got {p}");
         self.dropout_prob = p;
         self
     }
@@ -56,14 +305,183 @@ impl FaultModel {
 
     /// True when this model injects nothing.
     pub fn is_none(&self) -> bool {
-        self.dropout_prob == 0.0 && self.slowdown.iter().all(|&s| s == 1.0)
+        self.dropout_prob == 0.0
+            && self.loss_prob == 0.0
+            && !self.deadline_s.is_finite()
+            && !self.crash_mtbf.is_finite()
+            && self.slowdown.iter().all(|&s| s == 1.0)
     }
 
-    /// Draw whether one (client, round) update is lost.  Consumes no
-    /// randomness when dropout is disabled.
+    /// Draw whether one (client, round) update is lost at aggregation.
+    /// Consumes no randomness when dropout is disabled (see the module
+    /// docs for the stream-alignment contract).
     #[inline]
     pub fn draw_drop(&self, rng: &mut Rng) -> bool {
         self.dropout_prob > 0.0 && rng.uniform() < self.dropout_prob
+    }
+
+    /// Draw one upload's transmission count under per-packet loss:
+    /// `(attempts, delivered)` with `attempts ∈ 1..=max_retries+1`.
+    /// `delivered = false` means every attempt was lost and the upload
+    /// never reaches the server.  Feed this the `derive("loss", 0)`
+    /// stream; consumes no randomness when loss is disabled, and one
+    /// uniform per attempt otherwise.
+    #[inline]
+    pub fn draw_attempts(&self, rng: &mut Rng) -> (u32, bool) {
+        if self.loss_prob == 0.0 {
+            return (1, true);
+        }
+        let mut attempts = 1u32;
+        loop {
+            if rng.uniform() >= self.loss_prob {
+                return (attempts, true);
+            }
+            if attempts > self.max_retries {
+                return (attempts, false);
+            }
+            attempts += 1;
+        }
+    }
+
+    /// Extra transfer seconds beyond one clean attempt for an upload
+    /// whose single-attempt time is `d` and which took `attempts`
+    /// transmissions: the repaid transfer times plus the exponential
+    /// backoff waits (`BACKOFF_FRAC · d · (2^(attempts-1) - 1)` total).
+    #[inline]
+    pub fn retrans_extra(d: f64, attempts: u32) -> f64 {
+        if attempts <= 1 {
+            return 0.0;
+        }
+        let failures = (attempts - 1) as f64;
+        failures * d + BACKOFF_FRAC * d * ((attempts - 1) as f64).exp2() - BACKOFF_FRAC * d
+    }
+
+    /// Backoff wait after the `i`-th (1-indexed) failed transmission of
+    /// a transfer taking `d` seconds per attempt.
+    #[inline]
+    pub fn backoff_after(d: f64, i: u32) -> f64 {
+        BACKOFF_FRAC * d * ((i - 1) as f64).exp2()
+    }
+
+    /// Expected transmissions per upload under the loss channel —
+    /// `(1 - p^(K+1)) / (1 - p)`, the wire-time inflation factor the
+    /// loss-aware policies price with (1.0 when loss is off, so the
+    /// zero-loss pricing path is bit-untouched).
+    pub fn expected_transmissions(&self) -> f64 {
+        if self.loss_prob == 0.0 {
+            return 1.0;
+        }
+        let p = self.loss_prob;
+        let k1 = (self.max_retries + 1) as f64;
+        (1.0 - p.powf(k1)) / (1.0 - p)
+    }
+
+    /// Minimum arrivals the server waits for past a deadline.
+    pub fn quorum_need(&self, m: usize) -> usize {
+        if !self.deadline_s.is_finite() {
+            return 0;
+        }
+        ((self.quorum_frac * m as f64).ceil() as usize).min(m)
+    }
+
+    /// The crash–recover renewal process for `m` clients, seeded from
+    /// the run's fault stream (per-client `derive("crash", j)` streams;
+    /// inert when the crash channel is off).
+    pub fn crash_state(&self, m: usize, fault_rng: &Rng) -> CrashState {
+        if !self.crash_mtbf.is_finite() {
+            return CrashState {
+                mtbf: f64::INFINITY,
+                mttr: 0.0,
+                next_crash: Vec::new(),
+                down_until: Vec::new(),
+                rngs: Vec::new(),
+            };
+        }
+        let mut rngs: Vec<Rng> =
+            (0..m).map(|j| fault_rng.derive("crash", j as u64)).collect();
+        let next_crash: Vec<f64> =
+            rngs.iter_mut().map(|r| exp_draw(r, self.crash_mtbf)).collect();
+        CrashState {
+            mtbf: self.crash_mtbf,
+            mttr: self.crash_mttr,
+            next_crash,
+            down_until: vec![f64::NEG_INFINITY; m],
+            rngs,
+        }
+    }
+}
+
+impl std::fmt::Display for FaultModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.label())
+    }
+}
+
+/// Exponential draw with mean `scale`, guarded against the
+/// measure-zero zero draw.
+fn exp_draw(rng: &mut Rng, scale: f64) -> f64 {
+    let h = -(1.0 - rng.uniform()).ln() * scale;
+    if h > 0.0 {
+        h
+    } else {
+        scale
+    }
+}
+
+/// Per-client alternating-renewal crash process: up-times drawn
+/// `Exp(mtbf)`, deterministic `mttr` repair.  Each client advances
+/// lazily on its own derived stream, so draw order is independent of
+/// query order (see the module-docs stream contract).
+#[derive(Clone, Debug)]
+pub struct CrashState {
+    mtbf: f64,
+    mttr: f64,
+    /// Next crash instant per client (global simulated time).
+    next_crash: Vec<f64>,
+    /// Repair-complete instant of the most recent crash per client.
+    down_until: Vec<f64>,
+    rngs: Vec<Rng>,
+}
+
+impl CrashState {
+    /// True when the crash channel is disabled (no queries draw).
+    pub fn is_inert(&self) -> bool {
+        self.next_crash.is_empty()
+    }
+
+    /// Is client `j` down at simulated time `t`?  Advances `j`'s
+    /// renewal process through every crash cycle at or before `t`.
+    pub fn is_down(&mut self, j: usize, t: f64) -> bool {
+        if self.is_inert() {
+            return false;
+        }
+        while self.next_crash[j] <= t {
+            self.down_until[j] = self.next_crash[j] + self.mttr;
+            self.next_crash[j] =
+                self.down_until[j] + exp_draw(&mut self.rngs[j], self.mtbf);
+        }
+        t < self.down_until[j]
+    }
+
+    /// Repair-complete instant of client `j`'s most recent crash —
+    /// meaningful right after [`CrashState::is_down`] returned `true`
+    /// for `j` (the instant it rejoins).
+    pub fn recovery_time(&self, j: usize) -> f64 {
+        self.down_until[j]
+    }
+
+    /// Earliest instant at or after `t` when at least one client is up
+    /// (the whole-fleet-down escape hatch: every client currently down
+    /// recovers by its `down_until`).  Call after [`is_down`] has been
+    /// queried for every client at `t`.
+    ///
+    /// [`is_down`]: CrashState::is_down
+    pub fn earliest_up(&self, t: f64) -> f64 {
+        self.down_until
+            .iter()
+            .copied()
+            .fold(f64::INFINITY, f64::min)
+            .max(t)
     }
 }
 
@@ -77,11 +495,66 @@ mod tests {
         assert!(f.is_none());
         assert_eq!(f.slowdown_of(0), 1.0);
         assert_eq!(f.slowdown_of(99), 1.0);
+        assert_eq!(f.label(), "none");
+        assert_eq!(f.expected_transmissions(), 1.0);
         let mut rng = Rng::new(0);
         let before = rng.clone().next_u64();
         assert!(!f.draw_drop(&mut rng));
-        // No randomness consumed.
+        assert_eq!(f.draw_attempts(&mut rng), (1, true));
+        // No randomness consumed by any disabled channel.
         assert_eq!(rng.next_u64(), before);
+    }
+
+    #[test]
+    fn spec_parse_and_label_round_trip() {
+        for s in [
+            "none",
+            "drop:0.25",
+            "drop:1",
+            "loss:0.1",
+            "loss:0.1:retry5",
+            "loss:0.1:retry0",
+            "deadline:40",
+            "deadline:40:quorum0.5",
+            "crash:500x50",
+            "drop:0.1+loss:0.05",
+            "loss:0.2:retry2+deadline:30:quorum0.7+crash:1000x100",
+            "drop:0.1+loss:0.05+deadline:25+crash:800x40",
+        ] {
+            let f = FaultModel::parse(s).unwrap();
+            assert_eq!(f.label(), s, "canonical round trip of `{s}`");
+            let back = FaultModel::parse(&f.label()).unwrap();
+            assert_eq!(back.label(), f.label());
+        }
+        // Any atom order parses; the label is canonical order.
+        let f = FaultModel::parse("crash:500x50+loss:0.1").unwrap();
+        assert_eq!(f.label(), "loss:0.1+crash:500x50");
+    }
+
+    #[test]
+    fn spec_rejects_malformed() {
+        for bad in [
+            "",
+            "oops",
+            "drop",
+            "drop:1.5",
+            "drop:-0.1",
+            "loss:1",
+            "loss:0.1:5",
+            "loss:0.1:retryx",
+            "deadline:0",
+            "deadline:inf",
+            "deadline:10:0.5",
+            "deadline:10:quorum1.5",
+            "crash:500",
+            "crash:0x50",
+            "crash:500x0",
+            "none+drop:0.1",
+            "drop:0.1+drop:0.2",
+            "drop:0.1+",
+        ] {
+            assert!(FaultModel::parse(bad).is_err(), "`{bad}` should fail");
+        }
     }
 
     #[test]
@@ -92,6 +565,8 @@ mod tests {
         assert_eq!(f.slowdown_of(3), 8.0);
         assert_eq!(f.slowdown_of(4), 1.0);
         assert!(!f.is_none());
+        // The label covers spec channels only; stragglers ride the config.
+        assert_eq!(f.label(), "none");
     }
 
     #[test]
@@ -105,6 +580,14 @@ mod tests {
     }
 
     #[test]
+    fn closed_endpoint_dropout_is_a_probability() {
+        // p = 1 is a legal probability: every update is lost.
+        let f = FaultModel::none().with_dropout(1.0);
+        let mut rng = Rng::new(3);
+        assert!((0..100).all(|_| f.draw_drop(&mut rng)));
+    }
+
+    #[test]
     #[should_panic]
     fn rejects_out_of_range_dropout() {
         let _ = FaultModel::none().with_dropout(1.5);
@@ -114,5 +597,109 @@ mod tests {
     #[should_panic]
     fn rejects_out_of_range_straggler() {
         let _ = FaultModel::none().with_stragglers(3, &[3], 2.0);
+    }
+
+    #[test]
+    fn attempts_match_the_loss_rate() {
+        let f = FaultModel::parse("loss:0.3:retry2").unwrap();
+        let mut rng = Rng::new(11);
+        let n = 50_000;
+        let mut total = 0u64;
+        let mut failed = 0usize;
+        for _ in 0..n {
+            let (a, ok) = f.draw_attempts(&mut rng);
+            assert!(a >= 1 && a <= 3, "attempts {a} out of 1..=K+1");
+            total += a as u64;
+            if !ok {
+                failed += 1;
+            }
+        }
+        let mean = total as f64 / n as f64;
+        let expect = f.expected_transmissions();
+        assert!((mean - expect).abs() < 0.02, "mean {mean} vs E {expect}");
+        let p_fail = failed as f64 / n as f64;
+        assert!((p_fail - 0.3f64.powi(3)).abs() < 0.01, "total-loss rate {p_fail}");
+    }
+
+    #[test]
+    fn retrans_time_accounting() {
+        assert_eq!(FaultModel::retrans_extra(2.0, 1), 0.0);
+        // One failure: repay d once, back off d/2 before the retry.
+        assert_eq!(FaultModel::retrans_extra(2.0, 2), 2.0 + 1.0);
+        // Two failures: 2d repaid + (0.5 + 1.0)·d backoff.
+        assert_eq!(FaultModel::retrans_extra(2.0, 3), 4.0 + 3.0);
+        assert_eq!(FaultModel::backoff_after(2.0, 1), 1.0);
+        assert_eq!(FaultModel::backoff_after(2.0, 2), 2.0);
+    }
+
+    #[test]
+    fn expected_transmissions_formula() {
+        let f = FaultModel::parse("loss:0.5:retry1").unwrap();
+        // 1 + p = 1.5 expected transmissions with one retry at p = 0.5.
+        assert!((f.expected_transmissions() - 1.5).abs() < 1e-12);
+        let f = FaultModel::parse("loss:0.5:retry0").unwrap();
+        assert!((f.expected_transmissions() - 1.0).abs() < 1e-12);
+        assert_eq!(FaultModel::none().expected_transmissions(), 1.0);
+    }
+
+    #[test]
+    fn quorum_need_rounds_up() {
+        let f = FaultModel::parse("deadline:10:quorum0.5").unwrap();
+        assert_eq!(f.quorum_need(10), 5);
+        assert_eq!(f.quorum_need(9), 5);
+        let f = FaultModel::parse("deadline:10").unwrap();
+        assert_eq!(f.quorum_need(10), 0);
+        assert_eq!(FaultModel::none().quorum_need(10), 0);
+    }
+
+    #[test]
+    fn crash_state_alternates_and_is_query_order_independent() {
+        let f = FaultModel::parse("crash:100x10").unwrap();
+        let rng = Rng::new(5);
+        let mut a = f.crash_state(4, &rng);
+        let mut b = f.crash_state(4, &rng);
+        // Forward vs reverse client query order: identical answers,
+        // because each client advances on its own derived stream.
+        let ts = [0.0, 50.0, 130.0, 400.0, 1000.0, 5000.0];
+        for &t in &ts {
+            let fwd: Vec<bool> = (0..4).map(|j| a.is_down(j, t)).collect();
+            let rev: Vec<bool> = (0..4).rev().map(|j| b.is_down(j, t)).collect();
+            let rev: Vec<bool> = rev.into_iter().rev().collect();
+            assert_eq!(fwd, rev, "t = {t}");
+        }
+        // Some client crashes eventually at these scales.
+        let mut c = f.crash_state(4, &rng);
+        let mut saw_down = false;
+        for i in 0..2000 {
+            let t = i as f64;
+            for j in 0..4 {
+                saw_down |= c.is_down(j, t);
+            }
+        }
+        assert!(saw_down, "mtbf=100 over 2000s must produce downtime");
+        // Inert state never reports down and never draws.
+        let mut inert = FaultModel::none().crash_state(4, &rng);
+        assert!(inert.is_inert());
+        assert!(!inert.is_down(0, 1e9));
+    }
+
+    #[test]
+    fn earliest_up_escapes_a_whole_fleet_outage() {
+        let f = FaultModel::parse("crash:1x1000").unwrap();
+        let rng = Rng::new(9);
+        let mut c = f.crash_state(2, &rng);
+        // Advance far enough that both clients are down.
+        let mut t = 0.0;
+        loop {
+            let all_down = (0..2).all(|j| c.is_down(j, t));
+            if all_down {
+                break;
+            }
+            t += 0.5;
+            assert!(t < 1e5, "tiny mtbf must take the fleet down");
+        }
+        let up = c.earliest_up(t);
+        assert!(up > t, "recovery strictly later than the outage instant");
+        assert!((0..2).any(|j| !c.is_down(j, up)), "someone is back at earliest_up");
     }
 }

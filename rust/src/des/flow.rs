@@ -31,9 +31,28 @@
 //! paper-default `theta = 0`).  `congestion_s` is the new column:
 //! mean-per-client seconds flows spent rate-limited below their solo
 //! access capacity — a subset of upload seconds, not a fourth term.
+//!
+//! ## Faults on flow scenarios
+//!
+//! The composable `faults:<spec>` family applies here with one twist:
+//! a `loss:<p>` retransmission is *re-admitted as a new flow* after
+//! its exponential backoff ([`FlowNet::admit_at`]), so lost uploads
+//! keep occupying shared links and loss feeds congestion — retries on
+//! a contended tower slow everyone down, which causes more deadline
+//! pressure, which the loss-aware policy prices in.  Each attempt's
+//! backoff scales with the *emergent* duration of the attempt it
+//! follows, and `retrans_s` accrues the emergent seconds from the
+//! first attempt's completion to the final one.  Because flow
+//! durations only emerge at completion, per-upload deadlines on the
+//! async discipline use a discard-at-completion approximation: an
+//! upload whose total time exceeds the deadline is discarded when it
+//! completes (it occupied the network meanwhile) rather than being
+//! cut off mid-flight.  Crash–recover clients rejoin via a deferred
+//! admission at their recovery time; the rejoin upload re-syncs state
+//! and is discarded without counting as a drop.
 
 use super::engine::{rho_effective, DesConfig, DesResult, Discipline};
-use super::faults::FaultModel;
+use super::faults::{CrashState, FaultModel};
 use crate::netsim::flow::{FlowNet, FlowPreset, REF_BTD};
 use crate::netsim::{DelayModel, NetworkProcess, ProbeEstimator};
 use crate::obs::Telemetry;
@@ -174,6 +193,29 @@ fn run_round_based_flow(
     let mut late = 0usize;
     let mut converged = false;
 
+    // Fault channels: the loss stream is derived so fault-free runs
+    // consume nothing from it, crash streams are per-client (see the
+    // stream-alignment contract in `des::faults`).
+    let mut loss_rng = rng.derive("loss", 0);
+    let mut crash = cfg.faults.crash_state(m, &rng);
+    let deadline = cfg.faults.deadline_s;
+    let quorum_min = cfg.faults.quorum_need(m);
+    let mut retrans_sum = 0.0f64;
+    let mut qf_sum = 0.0f64;
+    let mut retries = 0u64;
+    let mut deadline_misses = 0u64;
+    let mut crash_rounds = 0u64;
+    // Per-round upload sagas: planned attempts, progress, and the
+    // wire size / access BTD needed to re-admit a retry.
+    let mut att = vec![1u32; m];
+    let mut done = vec![0u32; m];
+    let mut okv = vec![true; m];
+    let mut crashed = vec![false; m];
+    let mut first_comp = vec![0.0f64; m];
+    let mut attempt_start = vec![0.0f64; m];
+    let mut bits_v = vec![0.0f64; m];
+    let mut btd_v = vec![0.0f64; m];
+
     while rounds < cfg.max_rounds {
         rounds += 1;
         let c = process.next_state();
@@ -192,55 +234,125 @@ fn run_round_based_flow(
 
         // Admit this round's uploads; the network clock is
         // round-relative (everyone re-syncs at the barrier), the
-        // cross-traffic modulation runs on the global clock.
+        // cross-traffic modulation runs on the global clock.  Crashed
+        // clients sit the round out but still burn their fault draws
+        // so every client's streams stay aligned.
         net.begin_round(wall, telem);
+        let mut admitted = 0usize;
+        let mut expected = 0usize;
         for j in 0..m {
             lost[j] = cfg.faults.draw_drop(&mut rng);
-            net.admit(
-                j,
-                ctx.wire_bits(choices[j].level),
-                c[j] * cfg.faults.slowdown_of(j),
-                telem,
-            );
+            let (a, ok) = cfg.faults.draw_attempts(&mut loss_rng);
+            crashed[j] = crash.is_down(j, wall);
+            if crashed[j] {
+                crash_rounds += 1;
+                continue;
+            }
+            att[j] = a;
+            okv[j] = ok;
+            done[j] = 0;
+            first_comp[j] = 0.0;
+            attempt_start[j] = 0.0;
+            bits_v[j] = ctx.wire_bits(choices[j].level);
+            btd_v[j] = c[j] * cfg.faults.slowdown_of(j);
+            net.admit(j, bits_v[j], btd_v[j], telem);
+            admitted += 1;
+            if ok {
+                expected += 1;
+            }
         }
-        telem.gauge_max("des.queue_high_water", m as u64);
+        telem.gauge_max("des.queue_high_water", admitted as u64);
 
-        // Pop completions until the discipline closes the round.
+        // Pop completions until the discipline closes the round.  A
+        // completion of a non-final attempt is a lost packet: the
+        // upload re-enters the contest after its backoff, so loss
+        // feeds congestion.
         for g in got.iter_mut() {
             *g = false;
         }
         let mut popped = 0usize;
         let mut last_t = 0.0f64;
+        let mut last_event_t = 0.0f64;
+        let mut cut = false;
         while popped < need {
             let Some((t, j, eff)) = net.next_completion(telem) else { break };
+            if theta_tau + t > deadline && popped >= quorum_min {
+                // Deadline with quorum met: everything still in
+                // flight (or in backoff) missed the round.
+                deadline_misses += (expected - popped) as u64;
+                cut = true;
+                break;
+            }
+            last_event_t = t;
+            if !observed.is_empty() {
+                observed[j] = eff;
+            }
+            done[j] += 1;
+            if done[j] == 1 {
+                first_comp[j] = t;
+            }
+            if done[j] < att[j] {
+                retries += 1;
+                let back = FaultModel::backoff_after(t - attempt_start[j], done[j]);
+                attempt_start[j] = t + back;
+                net.admit_at(j, bits_v[j], btd_v[j], t + back);
+                continue;
+            }
+            retrans_sum += t - first_comp[j];
+            if !okv[j] {
+                // Every attempt was lost in transit; the time was
+                // spent but nothing arrived.
+                dropped += 1;
+                comp_t[j] = t;
+                continue;
+            }
             got[j] = true;
             popped += 1;
             last_t = t;
             comp_t[j] = t;
-            if !observed.is_empty() {
-                observed[j] = eff;
+        }
+        // Clients still in flight are charged their time-in-flight at
+        // whichever barrier closed the round.
+        let net_end = if cut { (deadline - theta_tau).max(0.0) } else { last_t };
+        for j in 0..m {
+            if !crashed[j] && done[j] < att[j] {
+                comp_t[j] = net_end;
             }
         }
         for j in 0..m {
-            if !got[j] {
-                comp_t[j] = last_t;
+            if !crashed[j] {
+                delay_sum += theta_tau + comp_t[j];
             }
         }
-        for &t in comp_t.iter() {
-            delay_sum += theta_tau + t;
+        let mut dur = if popped > 0 { theta_tau + last_t } else { 0.0 };
+        if cut {
+            dur = dur.max(deadline);
+        } else if popped < need {
+            // Arrivals ran dry short of the discipline's quota (loss
+            // exhaustion or crashes): the server holds to the
+            // deadline if there is one, else to the last transfer.
+            dur = if deadline.is_finite() {
+                dur.max(deadline)
+            } else {
+                dur.max(theta_tau + last_event_t)
+            };
         }
-        let dur = if popped > 0 { theta_tau + last_t } else { 0.0 };
-        late += m - popped;
+        late += expected - popped;
         wall += dur;
         telem.count("des.rounds", 1);
         telem.count("des.events_popped", popped as u64);
         telem.sim_span(round_span, dur);
+        if expected == 0 && !crash.is_inert() {
+            // Whole-fleet outage: jump to the first recovery.
+            wall = crash.earliest_up(wall);
+        }
 
         delivered.clear();
         delivered.extend((0..m).filter(|&j| got[j] && !lost[j]).map(|j| choices[j]));
         dropped += popped - delivered.len();
         if !delivered.is_empty() {
             aggregations += 1;
+            qf_sum += delivered.len() as f64 / m as f64;
             if rule.record(1.0, rho_effective(ctx, &delivered, m)) {
                 converged = true;
                 break;
@@ -248,7 +360,20 @@ fn run_round_based_flow(
         }
     }
 
-    let compute_s = rounds as f64 * theta_tau;
+    if retries > 0 {
+        telem.count("net.retries", retries);
+    }
+    if deadline_misses > 0 {
+        telem.count("net.deadline_misses", deadline_misses);
+    }
+    if crash_rounds > 0 {
+        telem.count("net.crash_rounds", crash_rounds);
+    }
+    let compute_s = if crash_rounds == 0 {
+        rounds as f64 * theta_tau
+    } else {
+        (rounds as f64 * m as f64 - crash_rounds as f64) * theta_tau / m as f64
+    };
     let upload_s = delay_sum / m as f64 - compute_s;
     Ok(DesResult {
         wall,
@@ -264,14 +389,38 @@ fn run_round_based_flow(
         compute_s,
         wait_s: wall - compute_s - upload_s,
         congestion_s: net.congestion_s() / m as f64,
+        retrans_s: retrans_sum / m as f64,
+        quorum_frac: if aggregations > 0 { qf_sum / aggregations as f64 } else { 0.0 },
+        retries,
+        deadline_misses,
+        crash_rounds,
     })
+}
+
+/// One client's in-flight upload saga: planned attempts (drawn
+/// upfront from the loss stream), progress, and what a retry needs to
+/// re-admit itself.
+#[derive(Clone, Debug, Default)]
+struct UploadSaga {
+    /// Planned transmission attempts (1 = clean).
+    att: u32,
+    done: u32,
+    /// Final attempt delivers; `false` means all attempts are lost.
+    ok: bool,
+    bits: f64,
+    btd: f64,
+    attempt_start: f64,
+    round_start: f64,
+    first_comp: f64,
 }
 
 /// Begin one async client-round at the network's current clock: draw
 /// the state, choose bits (on the probe estimate once observations
-/// exist), and admit client `j`'s upload.  Returns the across-client
-/// mean of the chosen bits and what the aggregation at completion
-/// needs (`(read_version, choice, lost)`).
+/// exist), and admit client `j`'s upload.  A crashed client instead
+/// gets a deferred admission at its recovery time, flagged as a
+/// rejoin.  Returns the across-client mean of the chosen bits and
+/// what the aggregation at completion needs
+/// (`(read_version, choice, lost, rejoin)`).
 #[allow(clippy::too_many_arguments)]
 fn start_flow_round(
     ctx: &PolicyCtx,
@@ -283,10 +432,15 @@ fn start_flow_round(
     net: &mut FlowNet,
     faults: &FaultModel,
     rng: &mut Rng,
+    loss_rng: &mut Rng,
+    crash: &mut CrashState,
+    crash_rounds: &mut u64,
+    sagas: &mut [UploadSaga],
     j: usize,
+    now: f64,
     version: u64,
     telem: &mut Telemetry,
-) -> (f64, (u64, CompressionChoice, bool)) {
+) -> (f64, (u64, CompressionChoice, bool, bool)) {
     let c = process.next_state();
     let use_probe = probe.is_some() && !observed.is_empty();
     let choices = if use_probe {
@@ -300,13 +454,37 @@ fn start_flow_round(
         observed.extend_from_slice(&c);
     }
     let lost = faults.draw_drop(rng);
-    net.admit(
-        j,
-        ctx.wire_bits(choices[j].level),
-        c[j] * faults.slowdown_of(j),
-        telem,
-    );
-    (mean_level(&choices), (version, choices[j], lost))
+    let (att, ok) = faults.draw_attempts(loss_rng);
+    let bits = ctx.wire_bits(choices[j].level);
+    let btd = c[j] * faults.slowdown_of(j);
+    if crash.is_down(j, now) {
+        *crash_rounds += 1;
+        let at = crash.recovery_time(j).max(now);
+        sagas[j] = UploadSaga {
+            att: 1,
+            done: 0,
+            ok: true,
+            bits,
+            btd,
+            attempt_start: at,
+            round_start: at,
+            first_comp: 0.0,
+        };
+        net.admit_at(j, bits, btd, at);
+        return (mean_level(&choices), (version, choices[j], true, true));
+    }
+    sagas[j] = UploadSaga {
+        att,
+        done: 0,
+        ok,
+        bits,
+        btd,
+        attempt_start: now,
+        round_start: now,
+        first_comp: 0.0,
+    };
+    net.admit(j, bits, btd, telem);
+    (mean_level(&choices), (version, choices[j], lost, false))
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -333,10 +511,11 @@ fn run_async_flow(
     let mut c_obs: Vec<f64> = Vec::with_capacity(m);
 
     // What each client's in-flight upload will aggregate as on
-    // completion, and when it was admitted (decomposition).
-    let mut pending: Vec<(u64, CompressionChoice, bool)> =
-        vec![(0, CompressionChoice::new(1), false); m];
-    let mut admit_t = vec![0.0f64; m];
+    // completion (`(read_version, choice, lost, rejoin)`), plus its
+    // saga state (attempts, re-admission parameters, start times).
+    let mut pending: Vec<(u64, CompressionChoice, bool, bool)> =
+        vec![(0, CompressionChoice::new(1), false, false); m];
+    let mut sagas: Vec<UploadSaga> = vec![UploadSaga::default(); m];
     let mut version: u64 = 0;
     let mut wall = 0.0f64;
     let mut delay_sum = 0.0f64;
@@ -347,6 +526,12 @@ fn run_async_flow(
     let mut dropped = 0usize;
     let mut converged = false;
     let max_starts = cfg.max_rounds.saturating_mul(m);
+    let mut loss_rng = rng.derive("loss", 0);
+    let mut crash = cfg.faults.crash_state(m, &rng);
+    let mut retrans_sum = 0.0f64;
+    let mut retries = 0u64;
+    let mut deadline_misses = 0u64;
+    let mut crash_rounds = 0u64;
 
     // Async has no barriers: one round-relative clock for the whole
     // run, so round-relative and global time coincide.
@@ -362,38 +547,69 @@ fn run_async_flow(
             &mut net,
             &cfg.faults,
             &mut rng,
+            &mut loss_rng,
+            &mut crash,
+            &mut crash_rounds,
+            &mut sagas,
             j,
+            0.0,
             version,
             telem,
         );
         bits_sum += mb;
         pending[j] = p;
-        admit_t[j] = 0.0;
         rounds += 1;
     }
     telem.count("des.rounds", m as u64);
     telem.gauge_max("des.queue_high_water", m as u64);
 
     while let Some((t, j, eff)) = net.next_completion(telem) {
-        telem.count("des.events_popped", 1);
-        telem.sim_span("des.round_s.async", t - wall);
-        wall = t;
-        delay_sum += theta_tau + (t - admit_t[j]);
         if !observed.is_empty() {
             observed[j] = eff;
         }
-        let (read_version, choice, was_lost) = pending[j];
-        if was_lost {
-            dropped += 1;
+        sagas[j].done += 1;
+        if sagas[j].done == 1 {
+            sagas[j].first_comp = t;
+        }
+        if sagas[j].done < sagas[j].att {
+            // Lost packet: the upload re-enters the fair-share
+            // contest after its backoff, occupying links meanwhile.
+            retries += 1;
+            let back = FaultModel::backoff_after(t - sagas[j].attempt_start, sagas[j].done);
+            sagas[j].attempt_start = t + back;
+            net.admit_at(j, sagas[j].bits, sagas[j].btd, t + back);
+            continue;
+        }
+        retrans_sum += t - sagas[j].first_comp;
+        telem.count("des.events_popped", 1);
+        telem.sim_span("des.round_s.async", t - wall);
+        wall = t;
+        let (read_version, choice, was_lost, rejoin) = pending[j];
+        if rejoin {
+            // The rejoin upload re-synced a recovered client; its
+            // payload is stale by construction and is discarded
+            // without counting as a drop.
         } else {
-            let stale = (version - read_version) as f64;
-            let u = (1.0 + stale).powf(-staleness_exp) / m as f64;
-            let fired = rule.record(u, rho_effective(ctx, &[choice], m));
-            version += 1;
-            aggregations += 1;
-            if fired {
-                converged = true;
-                break;
+            delay_sum += theta_tau + (t - sagas[j].round_start);
+            let mut lost = was_lost || !sagas[j].ok;
+            // Discard-at-completion deadline (see module docs): the
+            // transfer's emergent duration is only known now.
+            if theta_tau + (t - sagas[j].round_start) > cfg.faults.deadline_s {
+                deadline_misses += 1;
+                lost = true;
+            }
+            if lost {
+                dropped += 1;
+            } else {
+                let stale = (version - read_version) as f64;
+                let u = (1.0 + stale).powf(-staleness_exp) / m as f64;
+                let fired = rule.record(u, rho_effective(ctx, &[choice], m));
+                version += 1;
+                aggregations += 1;
+                if fired {
+                    converged = true;
+                    break;
+                }
             }
         }
         if rounds >= max_starts {
@@ -409,18 +625,35 @@ fn run_async_flow(
             &mut net,
             &cfg.faults,
             &mut rng,
+            &mut loss_rng,
+            &mut crash,
+            &mut crash_rounds,
+            &mut sagas,
             j,
+            t,
             version,
             telem,
         );
         bits_sum += mb;
         pending[j] = p;
-        admit_t[j] = t;
         rounds += 1;
         telem.count("des.rounds", 1);
     }
 
-    let compute_s = rounds as f64 / m as f64 * theta_tau;
+    if retries > 0 {
+        telem.count("net.retries", retries);
+    }
+    if deadline_misses > 0 {
+        telem.count("net.deadline_misses", deadline_misses);
+    }
+    if crash_rounds > 0 {
+        telem.count("net.crash_rounds", crash_rounds);
+    }
+    let compute_s = if crash_rounds == 0 {
+        rounds as f64 / m as f64 * theta_tau
+    } else {
+        (rounds as f64 - crash_rounds as f64) / m as f64 * theta_tau
+    };
     let upload_s = delay_sum / m as f64 - compute_s;
     Ok(DesResult {
         wall,
@@ -436,6 +669,11 @@ fn run_async_flow(
         compute_s,
         wait_s: wall - compute_s - upload_s,
         congestion_s: net.congestion_s() / m as f64,
+        retrans_s: retrans_sum / m as f64,
+        quorum_frac: if aggregations > 0 { 1.0 / m as f64 } else { 0.0 },
+        retries,
+        deadline_misses,
+        crash_rounds,
     })
 }
 
@@ -610,6 +848,157 @@ mod tests {
             );
             assert!(telem.counter("des.events_popped") > 0, "{disc}");
             assert!(telem.histogram("net.link_util").is_some(), "{disc}");
+        }
+    }
+
+    #[test]
+    fn loss_on_a_shared_tower_feeds_congestion() {
+        let ctx = ctx();
+        let cfg_clean = DesConfig::new(Discipline::Sync, 60.0);
+        let cfg_lossy = DesConfig::new(Discipline::Sync, 60.0)
+            .with_faults(FaultModel::parse("loss:0.3").unwrap());
+        let mut p1 = parse_policy("fixed:2").unwrap();
+        let mut p2 = parse_policy("fixed:2").unwrap();
+        let mut n1 = process(5);
+        let mut n2 = process(5);
+        let pre = preset("tower:1x10");
+        let clean = simulate_flow_des(
+            &ctx, p1.as_mut(), &mut n1, &pre, &cfg_clean, Rng::new(0), Rng::new(1),
+        )
+        .unwrap();
+        let lossy = simulate_flow_des(
+            &ctx, p2.as_mut(), &mut n2, &pre, &cfg_lossy, Rng::new(0), Rng::new(1),
+        )
+        .unwrap();
+        assert_eq!(clean.retries, 0);
+        assert_eq!(clean.retrans_s, 0.0);
+        assert!(lossy.retries > 0, "{lossy:?}");
+        assert!(lossy.retrans_s > 0.0);
+        assert!(
+            lossy.wall > clean.wall,
+            "retries must stretch the campaign: {} vs {}",
+            lossy.wall,
+            clean.wall
+        );
+        assert!(
+            lossy.congestion_s > clean.congestion_s,
+            "re-admitted retries must occupy the shared uplink: {} vs {}",
+            lossy.congestion_s,
+            clean.congestion_s
+        );
+    }
+
+    #[test]
+    fn solo_loss_matches_the_exogenous_engine_closely() {
+        // On `flow:solo` an attempt's emergent duration equals the
+        // exogenous transfer term, so the retransmission schedule is
+        // the same up to summation order.
+        let ctx = ctx();
+        let f = FaultModel::parse("loss:0.25:retry2").unwrap();
+        let cfg = DesConfig::new(Discipline::Sync, 80.0).with_faults(f);
+        let mut p1 = parse_policy("fixed:2").unwrap();
+        let mut p2 = parse_policy("fixed:2").unwrap();
+        let mut n1 = process(3);
+        let mut n2 = process(3);
+        let exo = simulate_des(&ctx, p1.as_mut(), &mut n1, &cfg, Rng::new(42)).unwrap();
+        let flow = simulate_flow_des(
+            &ctx, p2.as_mut(), &mut n2, &preset("solo"), &cfg, Rng::new(42), Rng::new(5),
+        )
+        .unwrap();
+        assert_eq!(flow.rounds, exo.rounds);
+        assert_eq!(flow.retries, exo.retries);
+        assert!(
+            (flow.wall - exo.wall).abs() <= 1e-9 * exo.wall,
+            "{} vs {}",
+            flow.wall,
+            exo.wall
+        );
+        assert!((flow.retrans_s - exo.retrans_s).abs() <= 1e-9 * exo.retrans_s.max(1.0));
+    }
+
+    #[test]
+    fn flow_deadline_cuts_rounds_at_quorum() {
+        let ctx = ctx();
+        let mut p1 = parse_policy("fixed:2").unwrap();
+        let mut n1 = process(7);
+        let base = DesConfig::new(Discipline::Sync, 60.0);
+        let clean = simulate_flow_des(
+            &ctx, p1.as_mut(), &mut n1, &preset("solo"), &base, Rng::new(0), Rng::new(2),
+        )
+        .unwrap();
+        let cut = clean.mean_round_duration() * 0.6;
+        let spec = format!("deadline:{cut}:quorum0.4");
+        let cfg =
+            DesConfig::new(Discipline::Sync, 60.0).with_faults(FaultModel::parse(&spec).unwrap());
+        let mut p2 = parse_policy("fixed:2").unwrap();
+        let mut n2 = process(7);
+        let r = simulate_flow_des(
+            &ctx, p2.as_mut(), &mut n2, &preset("solo"), &cfg, Rng::new(0), Rng::new(2),
+        )
+        .unwrap();
+        assert!(r.deadline_misses > 0, "{r:?}");
+        assert!(r.quorum_frac < 1.0, "{}", r.quorum_frac);
+        assert!(
+            r.mean_round_duration() <= cut * (1.0 + 1e-6),
+            "{} vs {cut}",
+            r.mean_round_duration()
+        );
+    }
+
+    #[test]
+    fn async_flow_crash_recovery_converges() {
+        let ctx = ctx();
+        let cfg = DesConfig::new(Discipline::Async { staleness_exp: 0.5 }, 50.0)
+            .with_faults(FaultModel::parse("crash:2000x500").unwrap());
+        let mut p = parse_policy("fixed:2").unwrap();
+        let mut n = process(9);
+        let r = simulate_flow_des(
+            &ctx, p.as_mut(), &mut n, &preset("tower:2x5"), &cfg, Rng::new(1), Rng::new(3),
+        )
+        .unwrap();
+        assert!(r.crash_rounds > 0, "{r:?}");
+        assert!(r.converged, "crash-recover must still converge: {r:?}");
+        assert!(r.aggregations > 0);
+    }
+
+    #[test]
+    fn faulty_flow_runs_are_deterministic() {
+        let ctx = ctx();
+        // Fault scales sized to the paper delay model (uploads are
+        // ~1e6 simulated seconds) so every channel actually fires.
+        let f = FaultModel::parse("loss:0.15+deadline:5000000:quorum0.5+crash:50000000x5000000")
+            .unwrap();
+        for disc in [
+            Discipline::Sync,
+            Discipline::SemiSync { k: 6 },
+            Discipline::Async { staleness_exp: 0.5 },
+        ] {
+            let mut results = Vec::new();
+            for _ in 0..2 {
+                let mut p = parse_policy("nacfl:1").unwrap();
+                let mut n = process(6);
+                let cfg =
+                    DesConfig::new(disc, 60.0).with_faults(f.clone()).with_max_rounds(3000);
+                results.push(
+                    simulate_flow_des(
+                        &ctx,
+                        p.as_mut(),
+                        &mut n,
+                        &preset("tower:2x5"),
+                        &cfg,
+                        Rng::new(2),
+                        Rng::new(7),
+                    )
+                    .unwrap(),
+                );
+            }
+            let (a, b) = (&results[0], &results[1]);
+            assert_eq!(a.wall.to_bits(), b.wall.to_bits(), "{disc}");
+            assert_eq!(a.rounds, b.rounds, "{disc}");
+            assert_eq!(a.retries, b.retries, "{disc}");
+            assert_eq!(a.deadline_misses, b.deadline_misses, "{disc}");
+            assert_eq!(a.crash_rounds, b.crash_rounds, "{disc}");
+            assert_eq!(a.retrans_s.to_bits(), b.retrans_s.to_bits(), "{disc}");
         }
     }
 

@@ -22,10 +22,15 @@
 //!   weight `(1 + staleness)^-g`; clients immediately begin their next
 //!   local round.  No client ever waits on another.
 //!
-//! Client faults ([`faults::FaultModel`]) — per-round update-loss
-//! (dropout) probability and per-client straggler slowdown multipliers —
-//! compose with every discipline.  Policies see the usual
-//! `PolicyCtx`-shaped interface and run unmodified.
+//! Client faults ([`faults::FaultModel`]) — the composable
+//! `faults:<spec>` family (`drop:<p>`, `loss:<p>[:retry<K>]` packet loss
+//! with bounded exponential-backoff retransmission,
+//! `deadline:<s>[:quorum<frac>]` round deadlines with quorum
+//! aggregation, `crash:<mtbf>x<mttr>` crash–recover clients) plus
+//! per-client straggler slowdown multipliers — compose with every
+//! discipline.  Policies see the usual `PolicyCtx`-shaped interface and
+//! run unmodified (loss-aware pricing enters through
+//! `PolicyCtx::with_wire_factor`, not the policy code).
 //!
 //! Convergence accounting generalizes the Assumption-1 stopping rule to
 //! partial/weighted aggregation; see `engine` for the exact rule and
@@ -44,5 +49,5 @@ pub mod flow;
 
 pub use engine::{simulate_des, simulate_des_with, DesConfig, DesResult, Discipline};
 pub use event::EventQueue;
-pub use faults::FaultModel;
+pub use faults::{CrashState, FaultModel};
 pub use flow::{simulate_flow_des, simulate_flow_des_with};

@@ -156,6 +156,7 @@ mod tests {
             compressor: "quant:inf".into(),
             tier: "sim:60".into(),
             discipline: "sync".into(),
+            faults: "none".into(),
             policy: policy.into(),
             data_seed: 0,
             seed,
@@ -170,6 +171,8 @@ mod tests {
             compute_s: 0.0,
             wait_s: 0.0,
             congestion_s: 0.1 * wall,
+            retrans_s: f64::NAN,
+            quorum_frac: f64::NAN,
             trace: None,
         }
     }

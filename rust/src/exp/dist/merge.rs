@@ -183,6 +183,7 @@ mod tests {
             compressor: cell.compressor.clone(),
             tier: cell.tier.label(),
             discipline: cell.discipline.label(),
+            faults: cell.faults.clone(),
             policy: cell.policy.clone(),
             data_seed: cell.data_seed,
             seed: cell.seed,
@@ -197,6 +198,8 @@ mod tests {
             compute_s: 0.0,
             wait_s: 0.0,
             congestion_s: 0.0,
+            retrans_s: f64::NAN,
+            quorum_frac: f64::NAN,
             trace: None,
         }
     }

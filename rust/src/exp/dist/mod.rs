@@ -17,9 +17,13 @@
 //!   records are idempotent by coordinate purity and always win
 //!   (last-writer-wins on identical bits).
 //! * [`shard`] — deterministic work assignment.  `nacfl run plan.toml
-//!   --shard i/n` gives each worker the pending keys whose FNV-1a hash
-//!   falls in its range ([`ShardSpec`]); shards are disjoint and jointly
-//!   exhaustive by construction, with no coordination channel needed.
+//!   --shard i/n` splits the plan *tier-weighted*: each cell is
+//!   classified by relative cost ([`CostClass`]: ml ≫ des ≫ analytic)
+//!   and round-robined within its class over the plan order, so every
+//!   worker gets an equal share of the expensive runs — disjoint and
+//!   jointly exhaustive by construction, with no coordination channel
+//!   needed.  (The original FNV-1a hash partition, [`shard_of`],
+//!   remains for key-addressed consumers.)
 //!   With `--steal`, a worker that finishes its shard re-reads the
 //!   (shared) ledger and reclaims pending keys whose claims have
 //!   expired — reclaiming runs from dead workers.
@@ -46,4 +50,4 @@ pub mod shard;
 pub use compact::{compact_ledger, CompactOutcome};
 pub use ledger::{now_unix, read_dist_ledger, ClaimRecord, DistLedger, PlanHeader};
 pub use merge::{merge_ledgers, write_ledger, MergeOutcome};
-pub use shard::{shard_of, ShardSpec};
+pub use shard::{shard_of, weighted_assignments, CostClass, ShardSpec};

@@ -1,14 +1,59 @@
 //! Deterministic shard assignment over coordinate keys.
 //!
-//! `--shard i/n` hash-partitions the plan's *pending* coordinate keys:
-//! key `k` belongs to shard `fnv1a(k) mod n`.  Every key lands in
-//! exactly one shard for any `n` (disjoint and jointly exhaustive by
-//! construction), the assignment is a pure function of the key — no
-//! coordination channel, no shared state — and it is stable under
-//! resume: a re-run worker gets exactly the keys it had before.
+//! Two assignment schemes, both pure functions with no coordination
+//! channel and both stable under resume (a re-run worker gets exactly
+//! the keys it had before):
+//!
+//! * **Hash partition** ([`shard_of`] / [`ShardSpec::contains`]): key
+//!   `k` belongs to shard `fnv1a(k) mod n`.  Disjoint and jointly
+//!   exhaustive for any `n`, but it balances *counts*, not cost — a
+//!   mixed-tier campaign can pile every ml cell onto one worker.
+//! * **Tier-weighted partition** ([`weighted_assignments`]): the
+//!   campaign engine classifies each cell by relative cost
+//!   ([`CostClass`]: ml training ≫ DES runs ≫ analytic closed forms)
+//!   and round-robins *within each class* over the plan order, so
+//!   every shard receives an equal (±1) share of each class.  This is
+//!   what `nacfl run --shard i/n` uses; the hash partition remains for
+//!   key-addressed consumers (and as the tie-free fallback semantics
+//!   the ledger tooling was built against).
 
 use crate::util::rng::fnv1a;
 use anyhow::{anyhow, Result};
+
+/// Relative cost class of one plan cell, for tier-weighted sharding.
+/// The exact run times don't matter — only that the classes differ by
+/// orders of magnitude, so balancing each class independently balances
+/// total cost.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum CostClass {
+    /// Closed-form analytic runs: microseconds each.
+    Analytic = 0,
+    /// DES-engine runs (non-sync disciplines, flow scenarios, faults):
+    /// milliseconds to seconds each.
+    Des = 1,
+    /// Full ML training runs: dominate everything else.
+    Ml = 2,
+}
+
+/// Tier-weighted shard assignment: stratified round-robin over the
+/// plan order.  The `k`-th cell *of its class* lands on shard
+/// `k mod count`, so each shard gets an equal (±1) share of every
+/// class.  A pure function of the full cell sequence — never of the
+/// pending subset — so assignments are identical across workers and
+/// across resumed invocations of the same plan.
+pub fn weighted_assignments(classes: &[CostClass], count: u32) -> Vec<u32> {
+    debug_assert!(count >= 1);
+    let mut rank = [0u32; 3];
+    classes
+        .iter()
+        .map(|&c| {
+            let r = &mut rank[c as usize];
+            let shard = *r % count;
+            *r += 1;
+            shard
+        })
+        .collect()
+}
 
 /// Which shard a key belongs to when the campaign is split `n` ways.
 pub fn shard_of(key: &str, count: u32) -> u32 {
@@ -98,5 +143,45 @@ mod tests {
         }
         // The solo shard owns everything.
         assert!(keys.iter().all(|k| ShardSpec::solo().contains(k)));
+    }
+
+    #[test]
+    fn weighted_assignments_balance_every_cost_class() {
+        use CostClass::*;
+        // A hostile plan order: all the ml cells clustered at the end,
+        // where a plain round-robin over the whole sequence would tilt.
+        let classes: Vec<CostClass> = std::iter::repeat(Analytic)
+            .take(10)
+            .chain(std::iter::repeat(Des).take(7))
+            .chain(std::iter::repeat(Ml).take(5))
+            .collect();
+        for n in 1..=4u32 {
+            let assign = weighted_assignments(&classes, n);
+            assert_eq!(assign.len(), classes.len());
+            assert!(assign.iter().all(|&s| s < n), "shards in range");
+            for class in [Analytic, Des, Ml] {
+                let per_shard: Vec<usize> = (0..n)
+                    .map(|s| {
+                        classes
+                            .iter()
+                            .zip(&assign)
+                            .filter(|&(&c, &a)| c == class && a == s)
+                            .count()
+                    })
+                    .collect();
+                let (lo, hi) = (
+                    per_shard.iter().min().unwrap(),
+                    per_shard.iter().max().unwrap(),
+                );
+                assert!(
+                    hi - lo <= 1,
+                    "{class:?} split {per_shard:?} across {n} shards is not ±1"
+                );
+            }
+            // Pure function: same input, same assignment.
+            assert_eq!(assign, weighted_assignments(&classes, n));
+        }
+        // Solo degenerates to "everything on shard 0".
+        assert!(weighted_assignments(&classes, 1).iter().all(|&s| s == 0));
     }
 }

@@ -11,12 +11,17 @@
 //!
 //! Per-cell routing:
 //!
-//! * `sim` tier, sync discipline, fault-free → the analytic closed form
-//!   (`exp::runner::run_analytic_once`, the exact float path of the
-//!   legacy table benches);
+//! * `sim` tier, sync discipline, fault-free cell (no base-config
+//!   dropout/stragglers *and* `faults == "none"` for that cell) → the
+//!   analytic closed form (`exp::runner::run_analytic_once`, the exact
+//!   float path of the legacy table benches);
 //! * `sim` tier otherwise → the DES engine (`des::simulate_des`), with
-//!   a fault stream derived purely from the cell coordinates so results
-//!   never depend on plan shape, thread count or steal order;
+//!   a fault stream derived purely from the cell coordinates —
+//!   including the cell's `faults` label when non-trivial — so results
+//!   never depend on plan shape, thread count or steal order.  Cells
+//!   with a lossy fault spec price compression levels through
+//!   `PolicyCtx::with_wire_factor` (expected transmissions per upload),
+//!   so solver-backed policies see the true expected wire cost;
 //! * `ml` tier → full FedCOM-V training through the coordinator,
 //!   sequential (the coordinator already parallelizes across client
 //!   workers), with datasets/partitions served by a campaign-level
@@ -34,7 +39,10 @@
 //! adds a work-stealing phase that reclaims expired-lease runs from
 //! dead workers on a shared ledger.  See DESIGN.md §11.
 
-use super::dist::{now_unix, read_dist_ledger, ClaimRecord, PlanHeader, ShardSpec};
+use super::dist::{
+    now_unix, read_dist_ledger, weighted_assignments, ClaimRecord, CostClass, PlanHeader,
+    ShardSpec,
+};
 use super::grid::{resolve_threads, run_tasks};
 use super::plan::{ExperimentPlan, PlanCell};
 use super::runner::{load_data, run_analytic_once, Tier, ANALYTIC_ROUND_CAP};
@@ -269,12 +277,22 @@ pub fn execute(
         }
     }
 
-    // This worker's slice of the pending keys.
-    let mine: Vec<usize> = pending
-        .iter()
-        .copied()
-        .filter(|&i| opts.shard.contains(&cells[i].key()))
-        .collect();
+    // This worker's slice of the pending runs: tier-weighted, so a
+    // mixed-tier campaign splits its expensive cells evenly across the
+    // fleet instead of wherever the key hash happens to pile them.
+    // Assignments are a pure function of the *full* cell sequence —
+    // stable across resumes and identical on every worker.
+    let mine: Vec<usize> = if opts.shard.count <= 1 {
+        pending.clone()
+    } else {
+        let classes: Vec<CostClass> = cells.iter().map(|c| cost_class(plan, c)).collect();
+        let assign = weighted_assignments(&classes, opts.shard.count);
+        pending
+            .iter()
+            .copied()
+            .filter(|&i| assign[i] == opts.shard.index)
+            .collect()
+    };
 
     // Claim identity: explicit id, or derived once claims matter.  The
     // derived id mixes hostname, pid and a time nonce — pids alone
@@ -653,6 +671,7 @@ fn base_record(plan: &ExperimentPlan, cell: &PlanCell, fp: &str) -> RunRecord {
         compressor: cell.compressor.clone(),
         tier: cell.tier.label(),
         discipline: cell.discipline.label(),
+        faults: cell.faults.clone(),
         policy: cell.policy.clone(),
         data_seed: cell.data_seed,
         seed: cell.seed,
@@ -667,15 +686,48 @@ fn base_record(plan: &ExperimentPlan, cell: &PlanCell, fp: &str) -> RunRecord {
         compute_s: f64::NAN,
         wait_s: f64::NAN,
         congestion_s: f64::NAN,
+        retrans_s: f64::NAN,
+        quorum_frac: f64::NAN,
         trace: None,
     }
 }
 
-/// Hash of the cell's (scenario, discipline) labels: the DES fault
-/// stream index.  A pure function of the coordinates, so fault draws
-/// never depend on the plan's shape, the thread count or steal order.
-fn fault_stream_id(scenario: &str, discipline: &str) -> u64 {
-    crate::util::rng::fnv1a(format!("{scenario}|{discipline}").as_bytes())
+/// Whether a grid cell takes the exact analytic closed form: sync
+/// discipline, no flow bottleneck, and no fault channel anywhere (base
+/// config or the cell's own `faults` coordinate).  Per-cell, so the
+/// `faults:none` cells of a mixed-fault plan still hit the frozen
+/// float path bit-for-bit.
+fn routes_analytic(plan: &ExperimentPlan, cell: &PlanCell) -> bool {
+    cell.discipline == Discipline::Sync
+        && !cell.scenario.is_flow()
+        && cell.faults == "none"
+        && plan.base.dropout == 0.0
+        && plan.base.stragglers.is_empty()
+}
+
+/// Relative cost class for tier-weighted sharding (ml training ≫ DES
+/// runs ≫ analytic closed forms).
+fn cost_class(plan: &ExperimentPlan, cell: &PlanCell) -> CostClass {
+    match cell.tier {
+        Tier::Ml => CostClass::Ml,
+        Tier::Analytic { .. } if routes_analytic(plan, cell) => CostClass::Analytic,
+        Tier::Analytic { .. } => CostClass::Des,
+    }
+}
+
+/// Hash of the cell's (scenario, discipline[, faults]) labels: the DES
+/// fault stream index.  A pure function of the coordinates, so fault
+/// draws never depend on the plan's shape, the thread count or steal
+/// order.  The faults label is mixed in only when non-trivial, keeping
+/// every pre-fault stream — and therefore every fault-free ledger —
+/// byte-stable.
+fn fault_stream_id(scenario: &str, discipline: &str, faults: &str) -> u64 {
+    let repr = if faults == "none" {
+        format!("{scenario}|{discipline}")
+    } else {
+        format!("{scenario}|{discipline}|{faults}")
+    };
+    crate::util::rng::fnv1a(repr.as_bytes())
 }
 
 /// One analytic- or DES-tier run (the parallel task body).  Returns the
@@ -696,7 +748,7 @@ fn execute_grid_run(
     let cfg = plan.cell_config(cell);
     let mut telem = Telemetry::new(telemetry);
     let mut rec = base_record(plan, cell, fp);
-    if cell.discipline == Discipline::Sync && !plan.has_faults() && !cell.scenario.is_flow() {
+    if routes_analytic(plan, cell) {
         // The exact single-run float path the legacy tables use.  Flow
         // scenarios never take it: shared-bottleneck delays only exist
         // inside the event engine.
@@ -710,18 +762,33 @@ fn execute_grid_run(
         rec.wait_s = r.wait_s;
         rec.congestion_s = 0.0;
     } else {
+        let faults = cfg.fault_model();
+        // Loss-aware pricing: inflate the policy's per-level wire times
+        // by the expected transmissions per upload, so solver-backed
+        // policies budget for retries.  Exactly 1.0 (and the shared ctx
+        // untouched) when the loss channel is off.
+        let wire_factor = faults.expected_transmissions();
+        let priced;
+        let ctx = if wire_factor != 1.0 {
+            priced = ctx.clone().with_wire_factor(wire_factor);
+            &priced
+        } else {
+            ctx
+        };
         let env = PolicyEnv::for_cell(ctx, cfg.scenario, cfg.m, cell.seed);
         let mut policy = PolicySpec::parse(&cell.policy)?.build(&env)?;
         policy.set_telemetry(telem.is_on());
         let mut process = cfg.congestion_process(cell.seed)?;
         let des = DesConfig {
             discipline: cell.discipline,
-            faults: cfg.fault_model(),
+            faults,
             k_eps,
             max_rounds: DES_ROUND_CAP,
         };
-        let fault_rng = Rng::new(cell.seed)
-            .derive("des-fault", fault_stream_id(&rec.scenario, &rec.discipline));
+        let fault_rng = Rng::new(cell.seed).derive(
+            "des-fault",
+            fault_stream_id(&rec.scenario, &rec.discipline, &cell.faults),
+        );
         let r = if let Some(preset) = cell.scenario.flow_preset() {
             // Flow cells: same fault stream, plus a dedicated cross-traffic
             // stream derived purely from the run seed.
@@ -754,6 +821,8 @@ fn execute_grid_run(
         rec.compute_s = r.compute_s;
         rec.wait_s = r.wait_s;
         rec.congestion_s = r.congestion_s;
+        rec.retrans_s = r.retrans_s;
+        rec.quorum_frac = r.quorum_frac;
     }
     Ok((rec, telem))
 }
@@ -780,39 +849,45 @@ pub fn campaign_table(
         for compressor in &plan.compressors {
             for &tier in &plan.tiers {
                 for &discipline in &plan.disciplines {
-                    let mut label = format!("{} {}", scenario.label(), discipline.label());
-                    if plan.compressors.len() > 1 {
-                        label = format!("{label} {compressor}");
-                    }
-                    if plan.tiers.len() > 1 {
-                        label = format!("{label} {}", tier.label());
-                    }
-                    let mut means = Vec::with_capacity(plan.policies.len());
-                    for policy in &plan.policies {
-                        let mut acc = 0.0f64;
-                        for &data_seed in &plan.data_seeds {
-                            for &seed in &plan.seeds {
-                                let cell = PlanCell {
-                                    scenario,
-                                    compressor: compressor.clone(),
-                                    tier,
-                                    discipline,
-                                    policy: policy.clone(),
-                                    data_seed,
-                                    seed,
-                                };
-                                let key = cell.key();
-                                acc += walls
-                                    .get(&key)
-                                    .copied()
-                                    .ok_or_else(|| anyhow!("campaign is missing run {key}"))?;
-                            }
+                    for faults in &plan.faults {
+                        let mut label =
+                            format!("{} {}", scenario.label(), discipline.label());
+                        if plan.compressors.len() > 1 {
+                            label = format!("{label} {compressor}");
                         }
-                        means.push(
-                            acc / (plan.seeds.len() * plan.data_seeds.len()) as f64,
-                        );
+                        if plan.tiers.len() > 1 {
+                            label = format!("{label} {}", tier.label());
+                        }
+                        if plan.faults.len() > 1 {
+                            label = format!("{label} {faults}");
+                        }
+                        let mut means = Vec::with_capacity(plan.policies.len());
+                        for policy in &plan.policies {
+                            let mut acc = 0.0f64;
+                            for &data_seed in &plan.data_seeds {
+                                for &seed in &plan.seeds {
+                                    let cell = PlanCell {
+                                        scenario,
+                                        compressor: compressor.clone(),
+                                        tier,
+                                        discipline,
+                                        faults: faults.clone(),
+                                        policy: policy.clone(),
+                                        data_seed,
+                                        seed,
+                                    };
+                                    let key = cell.key();
+                                    acc += walls.get(&key).copied().ok_or_else(
+                                        || anyhow!("campaign is missing run {key}"),
+                                    )?;
+                                }
+                            }
+                            means.push(
+                                acc / (plan.seeds.len() * plan.data_seeds.len()) as f64,
+                            );
+                        }
+                        rows.push((label, means));
                     }
-                    rows.push((label, means));
                 }
             }
         }
@@ -1034,10 +1109,67 @@ mod tests {
     }
 
     #[test]
+    fn fault_axis_routes_per_cell_and_preserves_trivial_cells() {
+        let mut cfg = small_cfg();
+        cfg.policies = vec!["fixed:2".into()];
+        cfg.seeds = (0..2).collect();
+        let plain = ExperimentPlan::builder("plain")
+            .base(cfg.clone())
+            .tiers(vec![Tier::Analytic { k_eps: 50.0 }])
+            .build()
+            .unwrap();
+        let mixed = ExperimentPlan::builder("mixed")
+            .base(cfg)
+            .tiers(vec![Tier::Analytic { k_eps: 50.0 }])
+            .faults(["none", "loss:0.3:retry2"])
+            .build()
+            .unwrap();
+        let base = execute(&plain, &ExecOptions::default(), &mut []).unwrap();
+        let both = execute(&mixed, &ExecOptions::default(), &mut []).unwrap();
+        assert_eq!(both.records.len(), 2 * base.records.len());
+        // The `none` cells of the mixed plan ARE the plain plan, bit for
+        // bit: analytic routing is per-cell, not per-plan.
+        for rec in &base.records {
+            let twin = both
+                .records
+                .iter()
+                .find(|r| r.key() == rec.key())
+                .expect("every plain cell has a faults:none twin");
+            assert_eq!(twin.wall.to_bits(), rec.wall.to_bits(), "{}", rec.key());
+            assert_eq!(twin.faults, "none");
+        }
+        // The lossy cells went through the DES engine and paid for it.
+        let faulty: Vec<_> = both.records.iter().filter(|r| r.faults != "none").collect();
+        assert_eq!(faulty.len(), base.records.len());
+        assert!(
+            faulty.iter().any(|r| r.retrans_s > 0.0),
+            "loss:0.3 over a whole campaign must retransmit somewhere"
+        );
+        for r in &faulty {
+            assert!(r.wall.is_finite() && r.rounds > 0, "{}", r.key());
+            assert!(
+                r.quorum_frac.is_finite() && r.quorum_frac <= 1.0,
+                "quorum_frac {} for {}",
+                r.quorum_frac,
+                r.key()
+            );
+        }
+    }
+
+    #[test]
     fn fault_stream_id_is_coordinate_pure() {
-        let a = fault_stream_id("homog:2", "sync");
-        assert_eq!(a, fault_stream_id("homog:2", "sync"));
-        assert_ne!(a, fault_stream_id("homog:2", "semi-sync:7"));
-        assert_ne!(a, fault_stream_id("perf:4", "sync"));
+        let a = fault_stream_id("homog:2", "sync", "none");
+        assert_eq!(a, fault_stream_id("homog:2", "sync", "none"));
+        assert_ne!(a, fault_stream_id("homog:2", "semi-sync:7", "none"));
+        assert_ne!(a, fault_stream_id("perf:4", "sync", "none"));
+        // The faults coordinate splits the stream, but the trivial label
+        // maps to the exact pre-fault hash (fnv1a of the 2-part repr),
+        // keeping fault-free ledgers byte-stable.
+        assert_ne!(a, fault_stream_id("homog:2", "sync", "loss:0.1"));
+        assert_eq!(
+            a,
+            crate::util::rng::fnv1a("homog:2|sync".as_bytes()),
+            "trivial faults must not perturb the legacy stream"
+        );
     }
 }

@@ -27,7 +27,7 @@
 
 use crate::config::toml_lite::{self, Doc, Value};
 use crate::config::ExperimentConfig;
-use crate::des::Discipline;
+use crate::des::{Discipline, FaultModel};
 use crate::exp::runner::Tier;
 use crate::netsim::{DelayModel, ScenarioKind};
 use crate::policy::PolicySpec;
@@ -45,6 +45,8 @@ pub struct PlanCell {
     pub compressor: String,
     pub tier: Tier,
     pub discipline: Discipline,
+    /// Canonical `faults:<spec>` label (`"none"` = fault-free).
+    pub faults: String,
     pub policy: String,
     /// Dataset/partition seed (ml tier; analytic cells ignore it).
     pub data_seed: u64,
@@ -54,9 +56,10 @@ pub struct PlanCell {
 impl PlanCell {
     /// The resume/ledger key: every coordinate `|`-joined (spec strings
     /// never contain `|`).  Matches `RunRecord::key` for the record the
-    /// cell produces.
+    /// cell produces.  The fault coordinate is appended only when set,
+    /// so pre-fault ledgers keep resolving byte-identically.
     pub fn key(&self) -> String {
-        format!(
+        let mut k = format!(
             "{}|{}|{}|{}|{}|{}|{}",
             self.scenario.label(),
             self.compressor,
@@ -65,7 +68,12 @@ impl PlanCell {
             self.policy,
             self.data_seed,
             self.seed
-        )
+        );
+        if self.faults != "none" {
+            k.push('|');
+            k.push_str(&self.faults);
+        }
+        k
     }
 }
 
@@ -83,6 +91,10 @@ pub struct ExperimentPlan {
     pub compressors: Vec<String>,
     pub tiers: Vec<Tier>,
     pub disciplines: Vec<Discipline>,
+    /// Fault-injection axis: composable `faults:<spec>` labels
+    /// (`"none"`, `"loss:0.1+deadline:25"`, …), canonicalized at build
+    /// time.  Defaults to the base config's `des.faults`.
+    pub faults: Vec<String>,
     pub policies: Vec<String>,
     /// Dataset/partition seeds (an ml-tier axis; defaults to the base
     /// config's single `data_seed`).  Backed by the campaign-level keyed
@@ -104,11 +116,18 @@ const CAMPAIGN_KEYS: &[&str] = &[
     "compressors",
     "tiers",
     "disciplines",
+    "faults",
     "policies",
     "data_seeds",
     "seeds",
     "telemetry",
 ];
+
+/// Canonical spelling of a `faults:<spec>` label; malformed specs pass
+/// through untouched so [`ExperimentPlan::validate`] reports them.
+fn canonical_faults(s: &str) -> String {
+    FaultModel::parse(s).map(|f| f.label()).unwrap_or_else(|_| s.to_string())
+}
 
 impl ExperimentPlan {
     /// Start a builder with the paper's base config; every unset axis
@@ -121,6 +140,7 @@ impl ExperimentPlan {
             compressors: None,
             tiers: None,
             disciplines: None,
+            faults: None,
             policies: None,
             data_seeds: None,
             seeds: None,
@@ -138,12 +158,14 @@ impl ExperimentPlan {
         base.discipline = Discipline::Sync;
         base.dropout = 0.0;
         base.stragglers = Vec::new();
+        base.faults = "none".into();
         ExperimentPlan {
             name: name.into(),
             scenarios: vec![base.scenario],
             compressors: vec![base.compressor.clone()],
             tiers: vec![tier],
             disciplines: vec![Discipline::Sync],
+            faults: vec!["none".into()],
             policies: base.policies.clone(),
             data_seeds: vec![base.data_seed],
             seeds: base.seeds.clone(),
@@ -163,6 +185,7 @@ impl ExperimentPlan {
             compressors: vec![cfg.compressor.clone()],
             tiers: vec![tier],
             disciplines: vec![cfg.discipline],
+            faults: vec![canonical_faults(&cfg.faults)],
             policies: cfg.policies.clone(),
             data_seeds: vec![cfg.data_seed],
             seeds: cfg.seeds.clone(),
@@ -178,18 +201,21 @@ impl ExperimentPlan {
             for compressor in &self.compressors {
                 for &tier in &self.tiers {
                     for &discipline in &self.disciplines {
-                        for policy in &self.policies {
-                            for &data_seed in &self.data_seeds {
-                                for &seed in &self.seeds {
-                                    out.push(PlanCell {
-                                        scenario,
-                                        compressor: compressor.clone(),
-                                        tier,
-                                        discipline,
-                                        policy: policy.clone(),
-                                        data_seed,
-                                        seed,
-                                    });
+                        for faults in &self.faults {
+                            for policy in &self.policies {
+                                for &data_seed in &self.data_seeds {
+                                    for &seed in &self.seeds {
+                                        out.push(PlanCell {
+                                            scenario,
+                                            compressor: compressor.clone(),
+                                            tier,
+                                            discipline,
+                                            faults: faults.clone(),
+                                            policy: policy.clone(),
+                                            data_seed,
+                                            seed,
+                                        });
+                                    }
                                 }
                             }
                         }
@@ -206,6 +232,7 @@ impl ExperimentPlan {
             * self.compressors.len()
             * self.tiers.len()
             * self.disciplines.len()
+            * self.faults.len()
             * self.policies.len()
             * self.data_seeds.len()
             * self.seeds.len()
@@ -214,23 +241,31 @@ impl ExperimentPlan {
     /// Table groups (the cross product sans the policy and seed axes):
     /// one paper-style table per group.
     pub fn n_groups(&self) -> usize {
-        self.scenarios.len() * self.compressors.len() * self.tiers.len() * self.disciplines.len()
+        self.scenarios.len()
+            * self.compressors.len()
+            * self.tiers.len()
+            * self.disciplines.len()
+            * self.faults.len()
     }
 
-    /// Whether the base config injects faults (dropout / stragglers);
-    /// faulty sync cells run through the DES engine, not the analytic
+    /// Whether the plan injects faults anywhere: base-config channels
+    /// (dropout / stragglers) or a non-trivial `faults` axis value.
+    /// Faulty sync cells run through the DES engine, not the analytic
     /// closed form.
     pub fn has_faults(&self) -> bool {
-        self.base.dropout > 0.0 || !self.base.stragglers.is_empty()
+        self.base.dropout > 0.0
+            || !self.base.stragglers.is_empty()
+            || self.faults.iter().any(|f| f != "none")
     }
 
     /// Per-cell configuration: the base with the cell's scenario,
-    /// compressor, discipline and data seed applied.
+    /// compressor, discipline, fault spec and data seed applied.
     pub fn cell_config(&self, cell: &PlanCell) -> ExperimentConfig {
         let mut c = self.base.clone();
         c.scenario = cell.scenario;
         c.compressor = cell.compressor.clone();
         c.discipline = cell.discipline;
+        c.faults = cell.faults.clone();
         c.data_seed = cell.data_seed;
         c
     }
@@ -246,6 +281,7 @@ impl ExperimentPlan {
             ("compressors", self.compressors.is_empty()),
             ("tiers", self.tiers.is_empty()),
             ("disciplines", self.disciplines.is_empty()),
+            ("faults", self.faults.is_empty()),
             ("policies", self.policies.is_empty()),
             ("data_seeds", self.data_seeds.is_empty()),
             ("seeds", self.seeds.is_empty()),
@@ -256,6 +292,19 @@ impl ExperimentPlan {
         }
         for p in &self.policies {
             PolicySpec::parse(p)?;
+        }
+        for f in &self.faults {
+            let parsed = FaultModel::parse(f)
+                .with_context(|| format!("campaign `{}`: faults axis entry `{f}`", self.name))?;
+            // Cell keys and RNG stream ids derive from the label, so
+            // every spelling must already be canonical.
+            let canon = parsed.label();
+            if *f != canon {
+                return Err(anyhow!(
+                    "campaign `{}`: faults axis entry `{f}` is not canonical (use `{canon}`)",
+                    self.name
+                ));
+            }
         }
         for c in &self.compressors {
             parse_compressor(c, &self.base.compressor_env())?;
@@ -356,7 +405,7 @@ impl ExperimentPlan {
         let nums = |xs: &[u64]| {
             xs.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(",")
         };
-        let repr = format!(
+        let mut repr = format!(
             "config={};scenarios={};compressors={};tiers={};disciplines={};policies={};\
              data_seeds={};seeds={}",
             self.config_fingerprint(),
@@ -368,6 +417,13 @@ impl ExperimentPlan {
             nums(&self.data_seeds),
             nums(&self.seeds),
         );
+        // Appended only when the axis is non-trivial: every pre-fault
+        // campaign keeps its published hash, so existing distributed
+        // ledgers still resume and merge.
+        if self.faults != ["none"] {
+            repr.push_str(";faults=");
+            repr.push_str(&join(&self.faults));
+        }
         format!("{:016x}", crate::util::rng::fnv1a(repr.as_bytes()))
     }
 
@@ -450,6 +506,9 @@ impl ExperimentPlan {
                     .collect::<Result<Vec<_>>>()?,
             );
         }
+        if let Some(xs) = str_list("faults")? {
+            b = b.faults(xs);
+        }
         if let Some(xs) = str_list("policies")? {
             b = b.policies(xs);
         }
@@ -510,6 +569,11 @@ impl ExperimentPlan {
             "disciplines".to_string(),
             strs(self.disciplines.iter().map(|d| d.label()).collect()),
         );
+        // Like telemetry below, the trivial axis stays out of the
+        // manifest so pre-fault plans re-emit byte-identically.
+        if self.faults != ["none"] {
+            sec.insert("faults".to_string(), strs(self.faults.clone()));
+        }
         sec.insert("policies".to_string(), strs(self.policies.clone()));
         sec.insert("data_seeds".to_string(), ints(&self.data_seeds));
         sec.insert("seeds".to_string(), ints(&self.seeds));
@@ -548,6 +612,7 @@ pub struct PlanBuilder {
     compressors: Option<Vec<String>>,
     tiers: Option<Vec<Tier>>,
     disciplines: Option<Vec<Discipline>>,
+    faults: Option<Vec<String>>,
     policies: Option<Vec<String>>,
     data_seeds: Option<Vec<u64>>,
     seeds: Option<Vec<u64>>,
@@ -577,6 +642,13 @@ impl PlanBuilder {
 
     pub fn disciplines(mut self, v: impl IntoIterator<Item = Discipline>) -> Self {
         self.disciplines = Some(v.into_iter().collect());
+        self
+    }
+
+    /// Fault-injection axis (`faults:<spec>` labels); spellings are
+    /// canonicalized at [`PlanBuilder::build`] time.
+    pub fn faults<S: Into<String>>(mut self, v: impl IntoIterator<Item = S>) -> Self {
+        self.faults = Some(v.into_iter().map(Into::into).collect());
         self
     }
 
@@ -622,6 +694,12 @@ impl PlanBuilder {
                 .tiers
                 .unwrap_or_else(|| vec![Tier::Analytic { k_eps: 100.0 }]),
             disciplines: self.disciplines.unwrap_or_else(|| vec![base.discipline]),
+            faults: self
+                .faults
+                .unwrap_or_else(|| vec![base.faults.clone()])
+                .iter()
+                .map(|s| canonical_faults(s))
+                .collect(),
             policies: self.policies.unwrap_or_else(|| base.policies.clone()),
             data_seeds: self.data_seeds.unwrap_or_else(|| vec![base.data_seed]),
             seeds: self.seeds.unwrap_or_else(|| base.seeds.clone()),
@@ -898,15 +976,67 @@ name = "defaults"
 
     #[test]
     fn cell_key_is_coordinate_stable() {
-        let cell = PlanCell {
+        let mut cell = PlanCell {
             scenario: ScenarioKind::HomogeneousIndependent { sigma_sq: 2.0 },
             compressor: "topk:0.05".into(),
             tier: Tier::Analytic { k_eps: 100.0 },
             discipline: Discipline::SemiSync { k: 7 },
+            faults: "none".into(),
             policy: "nacfl:1".into(),
             data_seed: 7,
             seed: 3,
         };
+        // Fault-free keys are byte-identical to the pre-fault format.
         assert_eq!(cell.key(), "homog:2|topk:0.05|sim:100|semi-sync:7|nacfl:1|7|3");
+        cell.faults = "loss:0.1+deadline:25".into();
+        assert_eq!(
+            cell.key(),
+            "homog:2|topk:0.05|sim:100|semi-sync:7|nacfl:1|7|3|loss:0.1+deadline:25"
+        );
+    }
+
+    #[test]
+    fn faults_axis_multiplies_the_cross_product_and_guards_identity() {
+        let plain = ExperimentPlan::builder("f").build().unwrap();
+        assert_eq!(plain.faults, vec!["none".to_string()]);
+        let h = plain.plan_hash();
+
+        let faulty = ExperimentPlan::builder("f")
+            .faults(vec!["none", "loss:0.1:retry3+deadline:25"])
+            .build()
+            .unwrap();
+        // Spellings canonicalize (retry3 is the default and drops out).
+        assert_eq!(
+            faulty.faults,
+            vec!["none".to_string(), "loss:0.1+deadline:25".to_string()]
+        );
+        assert_eq!(faulty.n_runs(), 2 * plain.n_runs());
+        assert_eq!(faulty.n_groups(), 2 * plain.n_groups());
+        assert!(faulty.has_faults());
+        assert_ne!(faulty.plan_hash(), h, "fault axis is campaign identity");
+        // An explicit trivial axis is the same campaign as no axis.
+        let trivial = ExperimentPlan::builder("f").faults(vec!["none"]).build().unwrap();
+        assert_eq!(trivial.plan_hash(), h);
+        assert!(!trivial.has_faults());
+        assert!(!trivial.manifest().contains("faults"), "trivial axis stays out");
+
+        // The faulty manifest round-trips.
+        let back = ExperimentPlan::parse_manifest(&faulty.manifest()).unwrap();
+        assert_eq!(back.faults, faulty.faults);
+        assert_eq!(back.plan_hash(), faulty.plan_hash());
+        assert_eq!(back.cells(), faulty.cells());
+
+        // Cell configs carry the spec into the DES config.
+        let cells = faulty.cells();
+        let with_fault = cells.iter().find(|c| c.faults != "none").unwrap();
+        assert_eq!(faulty.cell_config(with_fault).faults, "loss:0.1+deadline:25");
+
+        // Malformed specs are rejected, and the ml tier refuses faults.
+        assert!(ExperimentPlan::builder("f").faults(vec!["loss:2"]).build().is_err());
+        assert!(ExperimentPlan::builder("f")
+            .tiers(vec![Tier::Ml])
+            .faults(vec!["loss:0.1"])
+            .build()
+            .is_err());
     }
 }

@@ -44,6 +44,9 @@ pub struct RunRecord {
     pub compressor: String,
     pub tier: String,
     pub discipline: String,
+    /// Canonical `faults:<spec>` label for the cell's fault coordinate
+    /// (`"none"` = fault-free; pre-fault ledger lines backfill `"none"`).
+    pub faults: String,
     pub policy: String,
     /// Dataset/partition seed (the `data_seeds` plan axis).
     pub data_seed: u64,
@@ -84,6 +87,17 @@ pub struct RunRecord {
     /// 0 for exogenous DES/analytic runs, NaN on pre-flow ledger lines
     /// and undecomposed ML runs.
     pub congestion_s: f64,
+    /// DES runs (DESIGN.md §14): mean-client simulated seconds spent on
+    /// retransmissions and backoff beyond the first delivery attempt.
+    /// Serialized (and resumable) only on cells with a non-trivial
+    /// `faults` coordinate; NaN on analytic runs and as the backfill on
+    /// fault-free or pre-fault ledger lines (like `congestion_s` on
+    /// pre-flow lines).
+    pub retrans_s: f64,
+    /// DES runs: mean fraction of the fleet whose update made it into
+    /// each aggregation (1.0 = every round aggregated everyone).  Same
+    /// serialization and NaN-backfill rules as `retrans_s`.
+    pub quorum_frac: f64,
     /// ML tier only: the full trace (not serialized to the ledger).
     pub trace: Option<RunTrace>,
 }
@@ -91,9 +105,10 @@ pub struct RunRecord {
 impl RunRecord {
     /// The resume key — must match `PlanCell::key` for the producing
     /// cell (the campaign name is deliberately excluded so renaming a
-    /// campaign does not orphan its ledger).
+    /// campaign does not orphan its ledger).  The `faults` coordinate
+    /// joins only when non-trivial, so pre-fault ledgers keep resolving.
     pub fn key(&self) -> String {
-        format!(
+        let mut k = format!(
             "{}|{}|{}|{}|{}|{}|{}",
             self.scenario,
             self.compressor,
@@ -102,16 +117,24 @@ impl RunRecord {
             self.policy,
             self.data_seed,
             self.seed
-        )
+        );
+        if self.faults != "none" {
+            k.push('|');
+            k.push_str(&self.faults);
+        }
+        k
     }
 
     /// One flat JSON object (a single ledger line, no trailing newline).
+    /// The fault fields (`faults`, `retrans_s`, `quorum_frac`) are
+    /// emitted only on faulty cells, so fault-free campaigns write
+    /// byte-identical lines to pre-fault builds.
     pub fn to_json(&self) -> String {
-        format!(
+        let mut line = format!(
             "{{\"schema\":2,\"campaign\":{},\"scenario\":{},\"compressor\":{},\"tier\":{},\
              \"discipline\":{},\"policy\":{},\"data_seed\":{},\"seed\":{},\"config\":{},\
              \"wall\":{},\"rounds\":{},\"converged\":{},\"aggregations\":{},\"dropped\":{},\
-             \"late\":{},\"upload_s\":{},\"compute_s\":{},\"wait_s\":{},\"congestion_s\":{}}}",
+             \"late\":{},\"upload_s\":{},\"compute_s\":{},\"wait_s\":{},\"congestion_s\":{}",
             json::string(&self.campaign),
             json::string(&self.scenario),
             json::string(&self.compressor),
@@ -131,7 +154,17 @@ impl RunRecord {
             json::num(self.compute_s),
             json::num(self.wait_s),
             json::num(self.congestion_s),
-        )
+        );
+        if self.faults != "none" {
+            line.push_str(&format!(
+                ",\"faults\":{},\"retrans_s\":{},\"quorum_frac\":{}",
+                json::string(&self.faults),
+                json::num(self.retrans_s),
+                json::num(self.quorum_frac),
+            ));
+        }
+        line.push('}');
+        line
     }
 
     /// Parse one ledger line (inverse of [`RunRecord::to_json`]; floats
@@ -195,6 +228,12 @@ impl RunRecord {
             compressor: s("compressor")?,
             tier: s("tier")?,
             discipline: s("discipline")?,
+            // Fault-free and pre-fault lines carry no `faults` field:
+            // backfill the trivial coordinate, never an error.
+            faults: match obj.get("faults") {
+                Some(JsonVal::Str(v)) => v.clone(),
+                _ => "none".into(),
+            },
             policy: s("policy")?,
             data_seed: u("data_seed")?,
             seed: u("seed")?,
@@ -209,6 +248,8 @@ impl RunRecord {
             compute_s: n_opt("compute_s"),
             wait_s: n_opt("wait_s"),
             congestion_s: n_opt("congestion_s"),
+            retrans_s: n_opt("retrans_s"),
+            quorum_frac: n_opt("quorum_frac"),
             trace: None,
         })
     }
@@ -493,8 +534,9 @@ impl CsvSink {
         let mut out = BufWriter::new(f);
         writeln!(
             out,
-            "campaign,scenario,compressor,tier,discipline,policy,data_seed,seed,wall,rounds,\
-             converged,aggregations,dropped,late,upload_s,compute_s,wait_s,congestion_s"
+            "campaign,scenario,compressor,tier,discipline,faults,policy,data_seed,seed,wall,\
+             rounds,converged,aggregations,dropped,late,upload_s,compute_s,wait_s,congestion_s,\
+             retrans_s,quorum_frac"
         )?;
         Ok(CsvSink { out })
     }
@@ -504,12 +546,13 @@ impl ResultSink for CsvSink {
     fn on_record(&mut self, rec: &RunRecord) -> Result<()> {
         writeln!(
             self.out,
-            "{},{},{},{},{},{},{},{},{:?},{},{},{},{},{},{:?},{:?},{:?},{:?}",
+            "{},{},{},{},{},{},{},{},{},{:?},{},{},{},{},{},{:?},{:?},{:?},{:?},{:?},{:?}",
             csv_escape(&rec.campaign),
             csv_escape(&rec.scenario),
             csv_escape(&rec.compressor),
             csv_escape(&rec.tier),
             csv_escape(&rec.discipline),
+            csv_escape(&rec.faults),
             csv_escape(&rec.policy),
             rec.data_seed,
             rec.seed,
@@ -523,6 +566,8 @@ impl ResultSink for CsvSink {
             rec.compute_s,
             rec.wait_s,
             rec.congestion_s,
+            rec.retrans_s,
+            rec.quorum_frac,
         )?;
         Ok(())
     }
@@ -648,7 +693,12 @@ pub fn cell_results(recs: &[&RunRecord]) -> Vec<CellResult> {
 }
 
 fn group_key(r: &RunRecord) -> String {
-    format!("{}|{}|{}|{}", r.scenario, r.compressor, r.tier, r.discipline)
+    let mut k = format!("{}|{}|{}|{}", r.scenario, r.compressor, r.tier, r.discipline);
+    if r.faults != "none" {
+        k.push('|');
+        k.push_str(&r.faults);
+    }
+    k
 }
 
 /// Build one paper-style table per record group (records must be in
@@ -671,13 +721,16 @@ pub fn build_tables(title: Option<&str>, records: &[RunRecord]) -> Result<Vec<Ta
     for (_, recs) in &groups {
         let cells = cell_results(recs);
         let r0 = recs[0];
-        let table_title = match (title, single) {
+        let mut table_title = match (title, single) {
             (Some(t), true) => t.to_string(),
             _ => format!(
                 "{} · {} {} {} {}",
                 r0.campaign, r0.scenario, r0.compressor, r0.tier, r0.discipline
             ),
         };
+        if r0.faults != "none" && !(single && title.is_some()) {
+            table_title = format!("{table_title} {}", r0.faults);
+        }
         if cells.iter().any(|c| c.policy.starts_with("nacfl")) {
             out.push(table_for(&table_title, &cells)?);
         } else {
@@ -720,6 +773,7 @@ mod tests {
             compressor: "quant:inf".into(),
             tier: "sim:100".into(),
             discipline: "sync".into(),
+            faults: "none".into(),
             policy: policy.into(),
             data_seed: 7,
             seed,
@@ -734,6 +788,8 @@ mod tests {
             compute_s: 0.0,
             wait_s: 0.25 * wall,
             congestion_s: 0.0,
+            retrans_s: f64::NAN,
+            quorum_frac: f64::NAN,
             trace: None,
         }
     }
@@ -773,6 +829,40 @@ mod tests {
         assert_eq!(back.wall, 1.5);
         assert!(back.upload_s.is_nan() && back.compute_s.is_nan() && back.wait_s.is_nan());
         assert!(back.congestion_s.is_nan(), "pre-flow lines backfill congestion as NaN");
+    }
+
+    #[test]
+    fn fault_fields_are_gated_on_the_faults_coordinate() {
+        // Fault-free records serialize the exact pre-fault line — the
+        // byte-identity guarantee for faults:none campaigns.
+        let clean = rec("fixed:2", 0, 2.0);
+        let line = clean.to_json();
+        assert!(
+            !line.contains("faults") && !line.contains("retrans_s"),
+            "trivial coordinate must not appear: {line}"
+        );
+        assert!(line.ends_with("\"congestion_s\":0.0}"), "line: {line}");
+        let back = RunRecord::from_json(&line).unwrap();
+        assert_eq!(back.faults, "none", "absent field backfills the trivial label");
+        assert!(back.retrans_s.is_nan() && back.quorum_frac.is_nan());
+        assert_eq!(back.key(), clean.key(), "no faults suffix on the resume key");
+
+        // Faulty records carry all three fields and round-trip bitwise,
+        // with the faults label joining the resume key like PlanCell's.
+        let mut faulty = rec("nacfl:1", 3, 5.0);
+        faulty.faults = "loss:0.1:retry5+deadline:30".into();
+        faulty.retrans_s = 0.1875;
+        faulty.quorum_frac = 0.921875;
+        let line = faulty.to_json();
+        assert!(line.contains("\"faults\":\"loss:0.1:retry5+deadline:30\""), "{line}");
+        let back = RunRecord::from_json(&line).unwrap();
+        assert_eq!(back.faults, faulty.faults);
+        assert_eq!(back.retrans_s.to_bits(), faulty.retrans_s.to_bits());
+        assert_eq!(back.quorum_frac.to_bits(), faulty.quorum_frac.to_bits());
+        assert!(back.key().ends_with("|loss:0.1:retry5+deadline:30"), "{}", back.key());
+        assert_eq!(back.key(), faulty.key());
+        // Faulty groups table separately from their fault-free twins.
+        assert_ne!(group_key(&faulty), group_key(&clean));
     }
 
     #[test]

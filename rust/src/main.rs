@@ -34,7 +34,10 @@
 //! with round-trip Display: policies `nacfl:2 | fixed:3 | error:5.25 |
 //! oracle:8`, compressors `quant:inf | topk:0.05 | errbound:1.5625`,
 //! scenarios `homog:2 | heterog | perf:4 | part:4 | flow:<preset>`,
-//! tiers `ml | sim:100`, disciplines `sync | semi-sync:7 | async:0.5`.
+//! tiers `ml | sim:100`, disciplines `sync | semi-sync:7 | async:0.5`,
+//! fault specs `none | drop:<p> | loss:<p>[:retry<K>] |
+//! deadline:<s>[:quorum<frac>] | crash:<mtbf>x<mttr>` (channels
+//! combinable with `+`, e.g. `loss:0.2:retry5+deadline:4e6:quorum0.5`).
 //! Flow presets (`netsim::flow`) put the uploads on a shared
 //! bandwidth-sharing bottleneck topology: `flow:solo`,
 //! `flow:tower:<groups>x<per>`, `flow:ingress`, `flow:shared:<frac>`,
@@ -59,6 +62,9 @@
 //!   nacfl sim --scenario perf:4 --seeds 20
 //!   nacfl sim --scenario flow:tower:4x8:x1 --seeds 20
 //!   nacfl des --scenario heterog --discipline semi-sync:7 --stragglers 8,9 --straggle-mult 8
+//!   nacfl des --scenario homog:2 --faults loss:0.2+deadline:4000000:quorum0.5
+//!   nacfl run examples/campaign_faults.toml --out results  # fault-axis campaign
+//!   nacfl run plan.toml --faults none,loss:0.3   # override the fault axis
 //!   nacfl exp theorem1 --tier sim --seeds 10 --out results
 //!   nacfl train --policy nacfl --scenario homog:2 --engine xla
 //!   nacfl exp table3 --tier sim --seeds 20 --out results
@@ -66,7 +72,7 @@
 use anyhow::Result;
 use nacfl::config::ExperimentConfig;
 use nacfl::data::PartitionKind;
-use nacfl::des::Discipline;
+use nacfl::des::{Discipline, FaultModel};
 use nacfl::exp::{
     build_tables, campaign_table, compact_ledger, execute, fig3_cells, merge_ledgers,
     resolve_threads, table_plans, write_ledger, CsvSink, ExecOptions, ExperimentPlan,
@@ -110,6 +116,12 @@ fn flags() -> Vec<nacfl::util::cli::FlagSpec> {
         flag("dropout", "per-round client update-loss probability (des only)", None),
         flag("stragglers", "comma-separated straggler client ids (des only)", None),
         flag("straggle-mult", "straggler transfer slowdown multiplier >= 1 (des only)", None),
+        flag(
+            "faults",
+            "fault spec: none | drop:<p> | loss:<p>[:retry<K>] | deadline:<s>[:quorum<frac>] \
+             | crash:<mtbf>x<mttr>, combinable with `+` (des/run; comma-separated axis for run)",
+            None,
+        ),
         flag("ledger", "campaign ledger path (run only; default <out>/<name>.jsonl)", None),
         bool_flag("fresh", "ignore an existing campaign ledger (run only)"),
         flag("shard", "worker shard i/n: hash-partition of pending runs (run only)", None),
@@ -191,6 +203,9 @@ fn build_config(args: &Args) -> Result<ExperimentConfig> {
     if let Some(m) = args.get("straggle-mult") {
         cfg.straggler_mult = m.parse()?;
     }
+    if let Some(f) = args.get("faults") {
+        cfg.faults = f.to_string();
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -217,6 +232,14 @@ fn cmd_run(args: &Args) -> Result<()> {
     // CLI overrides (flag > manifest).
     if let Some(n) = args.get("seeds") {
         plan.seeds = (0..n.parse::<u64>()?).collect();
+    }
+    if let Some(f) = args.get("faults") {
+        // Comma-separated fault axis; specs canonicalize so the ledger
+        // keys match the manifest grammar exactly.
+        plan.faults = f
+            .split(',')
+            .map(|s| FaultModel::parse(s.trim()).map(|m| m.label()))
+            .collect::<Result<Vec<_>>>()?;
     }
     let threads = match args.get("threads") {
         Some(t) => t.parse()?,

@@ -212,6 +212,9 @@ enum FlowEvent {
     Complete { client: usize, epoch: u64 },
     /// Cross-traffic on/off toggle on one shared link.
     CrossToggle { link: usize },
+    /// Deferred admission (retransmission backoff): the client's
+    /// pending upload joins the fair-share contest at this time.
+    Admit { client: usize },
 }
 
 /// One in-flight upload.
@@ -246,6 +249,11 @@ pub struct FlowNet {
     cross: f64,
     flows: Vec<Option<Flow>>,
     active: usize,
+    /// `(bits, solo_btd)` of uploads scheduled via
+    /// [`admit_at`](FlowNet::admit_at) whose start time has not
+    /// arrived yet.
+    pending_admit: Vec<Option<(f64, f64)>>,
+    pending_admits: usize,
     queue: EventQueue<FlowEvent>,
     now: f64,
     epoch: u64,
@@ -305,6 +313,8 @@ impl FlowNet {
             cross: preset.cross,
             flows: (0..m).map(|_| None).collect(),
             active: 0,
+            pending_admit: vec![None; m],
+            pending_admits: 0,
             queue: EventQueue::new(),
             now: 0.0,
             epoch: 0,
@@ -334,6 +344,10 @@ impl FlowNet {
             *f = None;
         }
         self.active = 0;
+        for p in self.pending_admit.iter_mut() {
+            *p = None;
+        }
+        self.pending_admits = 0;
         self.now = 0.0;
         self.round_start = global_start;
         if self.cross > 0.0 {
@@ -372,6 +386,23 @@ impl FlowNet {
         self.reprice(telem);
     }
 
+    /// Schedule client `j`'s upload of `bits` to be admitted at the
+    /// (clock-relative) time `at` — the retransmission hook: a lost
+    /// upload re-enters the fair-share contest only once its backoff
+    /// expires, so the released bandwidth meanwhile belongs to the
+    /// surviving flows (loss feeds congestion, and vice versa).
+    pub fn admit_at(&mut self, j: usize, bits: f64, solo_btd: f64, at: f64) {
+        assert!(self.flows[j].is_none(), "client {j} already has a flow in flight");
+        assert!(
+            self.pending_admit[j].is_none(),
+            "client {j} already has a pending admission"
+        );
+        assert!(at >= self.now, "admission at {at} precedes the clock {}", self.now);
+        self.pending_admit[j] = Some((bits, solo_btd));
+        self.pending_admits += 1;
+        self.queue.push(at, FlowEvent::Admit { client: j });
+    }
+
     /// Pop events until the next real completion: returns its
     /// (clock-relative) time, the client, and the observed effective
     /// BTD of the whole transfer — what the in-band probe estimator
@@ -379,9 +410,17 @@ impl FlowNet {
     /// completions are handled internally.  `None` once no flow is in
     /// flight.
     pub fn next_completion(&mut self, telem: &mut Telemetry) -> Option<(f64, usize, f64)> {
-        while self.active > 0 {
+        while self.active + self.pending_admits > 0 {
             let (t, ev) = self.queue.pop().expect("active flows always have a completion");
             match ev {
+                FlowEvent::Admit { client } => {
+                    self.now = t;
+                    let (bits, solo_btd) = self.pending_admit[client]
+                        .take()
+                        .expect("admit event implies a pending admission");
+                    self.pending_admits -= 1;
+                    self.admit(client, bits, solo_btd, telem);
+                }
                 FlowEvent::CrossToggle { link } => {
                     self.now = t;
                     self.cross_on[link] = !self.cross_on[link];
@@ -780,6 +819,43 @@ mod tests {
         let (fast, slow) = (100.0 / cap, 100.0 / (cap / 2.0));
         assert!(t >= fast - 1e-9 && t <= slow + 1e-9, "{t} outside [{fast}, {slow}]");
         assert!(eff >= 1.0 / cap - 1e-9, "effective BTD at or above the link floor");
+    }
+
+    #[test]
+    fn deferred_admission_completes_at_the_exact_offset_delay() {
+        let mut tm = telem();
+        let preset = FlowPreset::parse("solo").unwrap();
+        let mut net = FlowNet::new(&preset, 2, &Rng::new(0), 1.0).unwrap();
+        net.begin_round(0.0, &mut tm);
+        let (bits, btd) = (100.0f64, 2.5f64);
+        net.admit_at(1, bits, btd, 7.0);
+        let (t, j, eff) = net.next_completion(&mut tm).unwrap();
+        assert_eq!(j, 1);
+        assert_eq!(t.to_bits(), (7.0 + bits * btd).to_bits(), "bit-exact deferred solo finish");
+        assert_eq!(eff.to_bits(), btd.to_bits());
+        assert!(net.next_completion(&mut tm).is_none());
+    }
+
+    #[test]
+    fn deferred_admission_contends_only_after_its_start_time() {
+        let mut tm = telem();
+        let preset = FlowPreset::parse("tower:1x2").unwrap();
+        let mut net = FlowNet::new(&preset, 2, &Rng::new(0), 1.0).unwrap();
+        net.begin_round(0.0, &mut tm);
+        let cap = 2.0 / (2.0 * REF_BTD);
+        // Client 0 would need 10/cap seconds alone at the full link;
+        // client 1 joins at t = 4/cap, after which both run at cap/2.
+        net.admit(0, 10.0, 1e-6, &mut tm);
+        net.admit_at(1, 10.0, 1e-6, 4.0 / cap);
+        let (t0, c0, _) = net.next_completion(&mut tm).unwrap();
+        assert_eq!(c0, 0);
+        // 4 bits at cap, then the remaining 6 at cap/2.
+        assert!((t0 - 16.0 / cap).abs() < 1e-9, "{t0} vs {}", 16.0 / cap);
+        let (t1, c1, _) = net.next_completion(&mut tm).unwrap();
+        assert_eq!(c1, 1);
+        // Client 1: 6 bits at cap/2 until t0, then 4 alone at cap.
+        assert!((t1 - (t0 + 4.0 / cap)).abs() < 1e-9, "{t1}");
+        assert!(net.congestion_s() > 0.0);
     }
 
     #[test]

@@ -136,6 +136,31 @@ pub fn build_report(
         ));
     }
 
+    // Fault-channel health (DESIGN.md §14): runs carrying a non-trivial
+    // `faults` coordinate report their retransmission cost and mean
+    // aggregation quorum.  NaN fields (pre-fault or backfilled lines)
+    // are skipped, mirroring the decomposition's rule.
+    let faulty: Vec<&RunRecord> = runs.iter().copied().filter(|r| r.faults != "none").collect();
+    if !faulty.is_empty() {
+        let retrans: Vec<f64> =
+            faulty.iter().map(|r| r.retrans_s).filter(|v| v.is_finite()).collect();
+        let quorum: Vec<f64> =
+            faulty.iter().map(|r| r.quorum_frac).filter(|v| v.is_finite()).collect();
+        let rsum: f64 = retrans.iter().sum();
+        out.push_str(&format!(
+            "faults: {} faulty run(s); retrans {rsum:.3e} s over {} run(s)",
+            faulty.len(),
+            retrans.len()
+        ));
+        if !quorum.is_empty() {
+            out.push_str(&format!(
+                ", mean quorum {:.3}",
+                quorum.iter().sum::<f64>() / quorum.len() as f64
+            ));
+        }
+        out.push('\n');
+    }
+
     // Straggler histogram: each run's wait share of its wall.  A share
     // near 0 means upload-bound; near 1 means one slow client dominates.
     let mut straggler = Histogram::default();
@@ -238,6 +263,7 @@ mod tests {
             compressor: "quant:inf".into(),
             tier: "sim:60".into(),
             discipline: "sync".into(),
+            faults: "none".into(),
             policy: policy.into(),
             data_seed: 0,
             seed,
@@ -252,6 +278,8 @@ mod tests {
             compute_s: 0.0,
             wait_s: wall * 0.25,
             congestion_s: 0.0,
+            retrans_s: f64::NAN,
+            quorum_frac: f64::NAN,
             trace: None,
         }
     }
@@ -291,6 +319,35 @@ mod tests {
         assert!(report.text.contains("missing runs:"), "{}", report.text);
         assert!(report.text.contains("straggler shares"), "{}", report.text);
         assert!(report.text.contains("delay decomposition (3 runs)"), "{}", report.text);
+    }
+
+    #[test]
+    fn fault_section_appears_only_for_faulty_runs_and_skips_nan() {
+        // A fault-free ledger has no fault section at all.
+        let mut clean = DistLedger::default();
+        clean.runs.push(rec("fixed:2", 0, 10.0));
+        let report = build_report(&[("l".into(), clean)], None);
+        assert!(!report.text.contains("faults:"), "{}", report.text);
+
+        // Two faulty runs, one resumed from a line written before the
+        // fault fields existed (NaN backfill): counted as faulty, but
+        // excluded from the retrans total and the quorum mean.
+        let mut led = DistLedger::default();
+        let mut fresh = rec("fixed:2", 1, 10.0);
+        fresh.faults = "loss:0.2".into();
+        fresh.retrans_s = 3.0;
+        fresh.quorum_frac = 0.5;
+        let mut stale = rec("fixed:2", 2, 10.0);
+        stale.faults = "loss:0.2".into(); // retrans_s/quorum_frac stay NaN
+        led.runs.push(fresh);
+        led.runs.push(stale);
+        let report = build_report(&[("l".into(), led)], None);
+        assert!(
+            report.text.contains("faults: 2 faulty run(s); retrans 3.000e0 s over 1 run(s)"),
+            "{}",
+            report.text
+        );
+        assert!(report.text.contains("mean quorum 0.500"), "{}", report.text);
     }
 
     #[test]

@@ -29,9 +29,15 @@ use std::path::Path;
 const BAR_W: usize = 24;
 
 /// The group axis shown in the bars: every coordinate except policy and
-/// seeds (matches the paper-table grouping in `exp::sink`).
+/// seeds (matches the paper-table grouping in `exp::sink`, including
+/// the faults suffix on non-trivial fault coordinates).
 fn group_key(r: &RunRecord) -> String {
-    format!("{}|{}|{}|{}", r.scenario, r.compressor, r.tier, r.discipline)
+    let mut k = format!("{}|{}|{}|{}", r.scenario, r.compressor, r.tier, r.discipline);
+    if r.faults != "none" {
+        k.push('|');
+        k.push_str(&r.faults);
+    }
+    k
 }
 
 fn bar(done: usize, total: usize) -> String {
@@ -90,13 +96,17 @@ pub fn render_frame(
     let mut expected: BTreeMap<String, usize> = BTreeMap::new();
     if let Some(p) = plan {
         for cell in p.cells() {
-            let r = format!(
+            let mut r = format!(
                 "{}|{}|{}|{}",
                 cell.scenario.label(),
                 cell.compressor,
                 cell.tier.label(),
                 cell.discipline.label()
             );
+            if cell.faults != "none" {
+                r.push('|');
+                r.push_str(&cell.faults);
+            }
             *expected.entry(r).or_insert(0) += 1;
         }
     }
@@ -124,6 +134,25 @@ pub fn render_frame(
         } else {
             out.push_str(&format!("{} {n:>4}      {mean:<16} {g}\n", bar(1, 1)));
         }
+    }
+
+    // Fault-channel rollup over completed faulty runs (retrans totals
+    // and mean quorum, NaN backfill skipped like the report's).
+    let faulty: Vec<&&RunRecord> = by_key.values().filter(|r| r.faults != "none").collect();
+    if !faulty.is_empty() {
+        let retrans: f64 =
+            faulty.iter().map(|r| r.retrans_s).filter(|v| v.is_finite()).sum();
+        let quorum: Vec<f64> =
+            faulty.iter().map(|r| r.quorum_frac).filter(|v| v.is_finite()).collect();
+        let q = if quorum.is_empty() {
+            "-".into()
+        } else {
+            format!("{:.3}", quorum.iter().sum::<f64>() / quorum.len() as f64)
+        };
+        out.push_str(&format!(
+            "\nfaults: {} run(s), retrans {retrans:.3e} s, mean quorum {q}\n",
+            faulty.len()
+        ));
     }
 
     // Worker table from the claim lines: live/expired leases + ages.
@@ -294,6 +323,7 @@ mod tests {
             compressor: "quant:inf".into(),
             tier: "sim:60".into(),
             discipline: "sync".into(),
+            faults: "none".into(),
             policy: policy.into(),
             data_seed: 0,
             seed,
@@ -308,6 +338,8 @@ mod tests {
             compute_s: 0.0,
             wait_s: 0.0,
             congestion_s: 0.0,
+            retrans_s: f64::NAN,
+            quorum_frac: f64::NAN,
             trace: None,
         }
     }
@@ -364,6 +396,34 @@ mod tests {
         assert!(frame.contains(&format!("{n}/{n} runs (100%)")), "{frame}");
         assert!(complete);
         assert!(frame.contains(&"#".repeat(BAR_W)), "full bar: {frame}");
+    }
+
+    #[test]
+    fn frame_splits_fault_groups_and_rolls_up_fault_health() {
+        let mut led = DistLedger::default();
+        led.runs.push(rec("fixed:2", 0, 100.0));
+        let mut f = rec("fixed:2", 0, 150.0);
+        f.faults = "loss:0.2+deadline:40".into();
+        f.retrans_s = 12.5;
+        f.quorum_frac = 0.75;
+        led.runs.push(f);
+        let (frame, _) = render_frame(&led, None, 0);
+        // Same (scenario, …, discipline) but distinct fault coordinates:
+        // two separate group bars, and the key carries the spec.
+        assert!(
+            frame.contains("homog:2|quant:inf|sim:60|sync|loss:0.2+deadline:40"),
+            "{frame}"
+        );
+        assert!(frame.contains("2 runs"), "fault twin is a distinct key: {frame}");
+        assert!(
+            frame.contains("faults: 1 run(s), retrans 1.250e1 s, mean quorum 0.750"),
+            "{frame}"
+        );
+        // Fault-free ledgers render no fault line at all.
+        let mut clean = DistLedger::default();
+        clean.runs.push(rec("fixed:2", 0, 100.0));
+        let (frame, _) = render_frame(&clean, None, 0);
+        assert!(!frame.contains("faults:"), "{frame}");
     }
 
     #[test]

@@ -112,6 +112,9 @@ pub struct PolicyCtx {
     pub delay: DelayModel,
     pub compressor: Arc<dyn Compressor>,
     tables: Arc<LevelTables>,
+    /// Expected-transmissions inflation on every wire size (loss-aware
+    /// pricing; 1.0 = lossless, the bit-exact legacy path).
+    wire_factor: f64,
 }
 
 impl fmt::Debug for PolicyCtx {
@@ -120,6 +123,7 @@ impl fmt::Debug for PolicyCtx {
             .field("tau", &self.tau)
             .field("delay", &self.delay)
             .field("compressor", &self.compressor.spec())
+            .field("wire_factor", &self.wire_factor)
             .finish()
     }
 }
@@ -127,7 +131,36 @@ impl fmt::Debug for PolicyCtx {
 impl PolicyCtx {
     pub fn new(tau: usize, delay: DelayModel, compressor: Arc<dyn Compressor>) -> Self {
         let tables = Arc::new(LevelTables::snapshot(compressor.as_ref()));
-        PolicyCtx { tau, delay, compressor, tables }
+        PolicyCtx { tau, delay, compressor, tables, wire_factor: 1.0 }
+    }
+
+    /// Price every wire size as `factor ×` the compressor's — the
+    /// expected-transmissions inflation under per-packet loss
+    /// ([`crate::des::FaultModel::expected_transmissions`]), so
+    /// loss-aware policies trade compression against retransmission
+    /// cost.  `factor == 1.0` leaves the tables untouched (bit-exact
+    /// with [`PolicyCtx::new`], pinned by test); the variance proxy `q`
+    /// is never inflated — loss changes time, not quality.
+    pub fn with_wire_factor(mut self, factor: f64) -> Self {
+        assert!(
+            factor.is_finite() && factor >= 1.0,
+            "wire factor must be finite and >= 1, got {factor}"
+        );
+        if factor > 1.0 {
+            let mut t = (*self.tables).clone();
+            for w in &mut t.wire {
+                *w *= factor;
+            }
+            self.tables = Arc::new(t);
+            self.wire_factor = factor;
+        }
+        self
+    }
+
+    /// The wire-time inflation this context prices with (1.0 = lossless).
+    #[inline]
+    pub fn wire_factor(&self) -> f64 {
+        self.wire_factor
     }
 
     /// Paper defaults: max delay model, ∞-norm quantizer with c_q = 6.25.
@@ -151,14 +184,30 @@ impl PolicyCtx {
         (self.tables.lo, self.tables.hi)
     }
 
-    /// Wire size in bits at a level (cached table lookup in range,
-    /// compressor call outside it — same floats either way).
+    /// Wire size in bits at a level, inflated by the wire factor
+    /// (cached table lookup in range, compressor call outside it — same
+    /// floats either way; the factor multiply only happens off-table
+    /// when pricing is inflated, mirroring the table snapshot).
     #[inline]
     pub fn wire_bits(&self, level: u8) -> f64 {
         if self.tables.contains(level) {
             self.tables.wire_at(level)
+        } else if self.wire_factor > 1.0 {
+            self.compressor.wire_bits(level) * self.wire_factor
         } else {
             self.compressor.wire_bits(level)
+        }
+    }
+
+    /// Largest level whose *inflated* wire size fits `budget_bits`
+    /// (the solvers' feasibility inversion).  At factor 1.0 this is the
+    /// compressor's own closed form, bit-exact with the legacy path.
+    #[inline]
+    pub fn max_level_within(&self, budget_bits: f64) -> Option<u8> {
+        if self.wire_factor > 1.0 {
+            self.compressor.max_level_within(budget_bits / self.wire_factor)
+        } else {
+            self.compressor.max_level_within(budget_bits)
         }
     }
 
@@ -442,6 +491,36 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn wire_factor_inflates_time_but_not_quality() {
+        let base = PolicyCtx::paper_default(1000);
+        // Factor 1.0 is the identity: bit-exact tables, same closed form.
+        let id = base.clone().with_wire_factor(1.0);
+        assert_eq!(id.wire_factor(), 1.0);
+        for l in base.level_range().0..=base.level_range().1 {
+            assert_eq!(id.wire_bits(l).to_bits(), base.wire_bits(l).to_bits());
+        }
+        assert_eq!(id.max_level_within(5000.0), base.max_level_within(5000.0));
+
+        // Factor > 1 scales every wire size and only wire sizes.
+        let e = 1.25;
+        let lossy = base.clone().with_wire_factor(e);
+        assert_eq!(lossy.wire_factor(), e);
+        for l in base.level_range().0..=base.level_range().1 {
+            assert_eq!(
+                lossy.wire_bits(l).to_bits(),
+                (base.wire_bits(l) * e).to_bits(),
+                "level {l}"
+            );
+            assert_eq!(lossy.q_of_level(l).to_bits(), base.q_of_level(l).to_bits());
+        }
+        // A budget that fits level L losslessly fits only a lower level
+        // once every transmission is expected to repeat.
+        let b = base.wire_bits(3) + 1.0;
+        assert_eq!(base.max_level_within(b), Some(3));
+        assert!(lossy.max_level_within(b) < Some(3));
     }
 
     #[test]

@@ -372,7 +372,7 @@ impl SolverWorkspace {
         let d_max = anchor * (1.0 + TIE_EPS);
         let mut out = Vec::with_capacity(c.len());
         for &cj in c {
-            match ctx.compressor.max_level_within(d_max / cj) {
+            match ctx.max_level_within(d_max / cj) {
                 Some(l) => out.push(CompressionChoice::new(l)),
                 None => {
                     // Quotient-vs-product rounding disagreed by an ulp at
@@ -621,7 +621,7 @@ pub mod reference {
     ) -> Option<Vec<CompressionChoice>> {
         let mut ch = Vec::with_capacity(c.len());
         for &cj in c {
-            match ctx.compressor.max_level_within(d_max / cj) {
+            match ctx.max_level_within(d_max / cj) {
                 Some(l) => ch.push(CompressionChoice::new(l)),
                 None => return None,
             }

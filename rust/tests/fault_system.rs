@@ -1,0 +1,296 @@
+//! System tests for the fault axis (ISSUE-8):
+//!
+//! * a faulty campaign (`loss+deadline+crash`) double-runs to
+//!   **byte-identical** ledgers across sync / semi-sync / async
+//!   disciplines — fault draws are coordinate-pure, not schedule-bound;
+//! * a plan with no fault axis and a plan with an explicit
+//!   `faults = ["none"]` axis share a plan hash and produce
+//!   byte-identical, fault-field-free ledgers (pre-fault byte shape);
+//! * tier-weighted sharding splits every cost class ±1 across workers
+//!   and the fleet's ledgers merge bit-identically to a solo run;
+//! * ledger crash recovery holds under seeded fuzz — torn lines,
+//!   duplicated records, interleaved ghost claims: readers never lose a
+//!   completed record, resume re-executes exactly the lost runs, and
+//!   compaction is idempotent and lossless.
+
+use std::collections::{HashMap, HashSet};
+
+use nacfl::config::ExperimentConfig;
+use nacfl::des::Discipline;
+use nacfl::exp::{
+    build_tables, compact_ledger, execute, merge_ledgers, read_dist_ledger, ClaimRecord,
+    ExecOptions, ExperimentPlan, ShardSpec, Tier,
+};
+use nacfl::util::rng::Rng;
+
+fn temp(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("nacfl_fault_sys_{tag}_{}.jsonl", std::process::id()))
+        .to_str()
+        .unwrap()
+        .to_string()
+}
+
+fn small_base() -> ExperimentConfig {
+    let mut base = ExperimentConfig::paper();
+    base.seeds = (0..2).collect();
+    base.policies = vec!["fixed:2".into(), "nacfl:1".into()];
+    base
+}
+
+fn opts_for(ledger: &str, threads: usize) -> ExecOptions {
+    ExecOptions {
+        threads,
+        ledger: Some(ledger.to_string()),
+        ..Default::default()
+    }
+}
+
+/// Uploads on the paper scenarios take O(1e6) simulated seconds, so the
+/// deadline sits at a few uploads' worth and crashes arrive every few
+/// tens of rounds — all three fault channels fire without starving the
+/// rounds outright.
+const FAULTS: &str = "loss:0.15:retry2+deadline:4000000:quorum0.5+crash:40000000x4000000";
+
+#[test]
+fn faulty_campaign_double_runs_byte_identically_across_disciplines() {
+    let plan = ExperimentPlan::builder("fault determinism")
+        .base(small_base())
+        .tiers(vec![Tier::Analytic { k_eps: 50.0 }])
+        .disciplines(vec![
+            Discipline::Sync,
+            Discipline::SemiSync { k: 7 },
+            Discipline::Async { staleness_exp: 0.5 },
+        ])
+        .faults([FAULTS])
+        .build()
+        .unwrap();
+
+    let la = temp("det_a");
+    let lb = temp("det_b");
+    for p in [&la, &lb] {
+        let _ = std::fs::remove_file(p);
+    }
+    // Single-threaded so the ledger's line order is execution order —
+    // the byte comparison then pins the records *and* their layout.
+    let a = execute(&plan, &opts_for(&la, 1), &mut []).unwrap();
+    execute(&plan, &opts_for(&lb, 1), &mut []).unwrap();
+    let bytes_a = std::fs::read_to_string(&la).unwrap();
+    let bytes_b = std::fs::read_to_string(&lb).unwrap();
+    assert_eq!(bytes_a, bytes_b, "double run must be byte-identical");
+
+    // The fault coordinate and its health fields ride on every record.
+    assert_eq!(a.records.len(), plan.n_runs());
+    assert!(bytes_a.contains("\"faults\":\"loss:0.15:retry2"));
+    assert!(bytes_a.contains("\"retrans_s\":"));
+    assert!(bytes_a.contains("\"quorum_frac\":"));
+    assert!(
+        a.records.iter().any(|r| r.retrans_s > 0.0),
+        "15% loss must charge retransmission time somewhere"
+    );
+    for r in &a.records {
+        assert!(r.retrans_s.is_finite() && r.retrans_s >= 0.0, "{}", r.key());
+        assert!(
+            r.quorum_frac.is_finite() && (0.0..=1.0).contains(&r.quorum_frac),
+            "{}: quorum_frac {}",
+            r.key(),
+            r.quorum_frac
+        );
+    }
+
+    // With telemetry on, retransmissions surface as a counter.
+    let lt = temp("det_telem");
+    let _ = std::fs::remove_file(&lt);
+    let opts = ExecOptions {
+        telemetry: true,
+        ..opts_for(&lt, 2)
+    };
+    execute(&plan, &opts, &mut []).unwrap();
+    let telem = std::fs::read_to_string(&lt).unwrap();
+    assert!(telem.contains("net.retries"), "retries must be counted");
+
+    for p in [&la, &lb, &lt] {
+        std::fs::remove_file(p).ok();
+    }
+}
+
+#[test]
+fn axis_free_and_explicit_none_plans_share_bytes_and_hash() {
+    let plain = ExperimentPlan::builder("fault parity")
+        .base(small_base())
+        .tiers(vec![Tier::Analytic { k_eps: 50.0 }])
+        .build()
+        .unwrap();
+    let explicit = ExperimentPlan::builder("fault parity")
+        .base(small_base())
+        .tiers(vec![Tier::Analytic { k_eps: 50.0 }])
+        .faults(["none"])
+        .build()
+        .unwrap();
+    assert_eq!(
+        plain.plan_hash(),
+        explicit.plan_hash(),
+        "a trivial fault axis must not re-key the campaign"
+    );
+
+    let la = temp("none_a");
+    let lb = temp("none_b");
+    for p in [&la, &lb] {
+        let _ = std::fs::remove_file(p);
+    }
+    execute(&plain, &opts_for(&la, 1), &mut []).unwrap();
+    execute(&explicit, &opts_for(&lb, 1), &mut []).unwrap();
+    let bytes_a = std::fs::read_to_string(&la).unwrap();
+    let bytes_b = std::fs::read_to_string(&lb).unwrap();
+    assert_eq!(bytes_a, bytes_b);
+    // Fault-free ledgers keep the pre-fault byte shape: no fault fields
+    // on any line, keys without a faults suffix.
+    assert!(!bytes_a.contains("\"faults\""));
+    assert!(!bytes_a.contains("retrans_s"));
+
+    for p in [&la, &lb] {
+        std::fs::remove_file(p).ok();
+    }
+}
+
+#[test]
+fn weighted_shards_balance_cost_classes_and_merge_bit_identically() {
+    // A mixed fault axis puts half the cells on the analytic closed
+    // form and half on the DES engine — exactly the split the
+    // tier-weighted sharder must balance (a count-only split could hand
+    // one worker all the slow DES cells).
+    let plan = ExperimentPlan::builder("fault shards")
+        .base(small_base())
+        .tiers(vec![Tier::Analytic { k_eps: 50.0 }])
+        .faults(["none", "loss:0.2:retry2"])
+        .build()
+        .unwrap();
+    let n = plan.n_runs();
+    assert_eq!(n, 8);
+
+    let lfull = temp("shard_full");
+    let la = temp("shard_w0");
+    let lb = temp("shard_w1");
+    for p in [&lfull, &la, &lb] {
+        let _ = std::fs::remove_file(p);
+    }
+    let full = execute(&plan, &opts_for(&lfull, 2), &mut []).unwrap();
+    let mk = |ledger: &str, spec: &str| ExecOptions {
+        shard: ShardSpec::parse(spec).unwrap(),
+        ..opts_for(ledger, 2)
+    };
+    let a = execute(&plan, &mk(&la, "0/2"), &mut []).unwrap();
+    let b = execute(&plan, &mk(&lb, "1/2"), &mut []).unwrap();
+    assert_eq!(a.records.len() + b.records.len(), n, "disjoint and exhaustive");
+    // Each worker gets its fair share of *each* cost class, ±1.
+    for shard in [&a, &b] {
+        let des = shard.records.iter().filter(|r| r.faults != "none").count();
+        let analytic = shard.records.len() - des;
+        assert_eq!(des, 2, "DES cells split evenly");
+        assert_eq!(analytic, 2, "analytic cells split evenly");
+    }
+
+    let merged = merge_ledgers(&[&la, &lb], Some(&plan)).unwrap();
+    assert!(merged.complete(), "missing: {:?}", merged.missing);
+    for (x, y) in full.records.iter().zip(merged.records.iter()) {
+        assert_eq!(x.key(), y.key(), "merge must return plan order");
+        assert_eq!(x.wall.to_bits(), y.wall.to_bits(), "{}", x.key());
+        assert_eq!(x.retrans_s.to_bits(), y.retrans_s.to_bits(), "{}", x.key());
+    }
+    let t1: Vec<String> =
+        build_tables(None, &full.records).unwrap().iter().map(|t| t.render()).collect();
+    let t2: Vec<String> =
+        build_tables(None, &merged.records).unwrap().iter().map(|t| t.render()).collect();
+    assert_eq!(t1, t2, "fleet tables == single-machine tables");
+
+    for p in [&lfull, &la, &lb] {
+        std::fs::remove_file(p).ok();
+    }
+}
+
+#[test]
+fn ledger_recovery_survives_fuzzed_truncation_duplication_and_claims() {
+    let plan = ExperimentPlan::builder("fault fuzz")
+        .base({
+            let mut b = small_base();
+            b.seeds = (0..3).collect();
+            b
+        })
+        .tiers(vec![Tier::Analytic { k_eps: 50.0 }])
+        .build()
+        .unwrap();
+    let n = plan.n_runs();
+    let cells = plan.cells();
+
+    let lref = temp("fuzz_ref");
+    let _ = std::fs::remove_file(&lref);
+    let full = execute(&plan, &opts_for(&lref, 1), &mut []).unwrap();
+    assert_eq!(full.records.len(), n);
+    let by_key: HashMap<String, &nacfl::exp::RunRecord> =
+        full.records.iter().map(|r| (r.key(), r)).collect();
+    let reference = std::fs::read_to_string(&lref).unwrap();
+    let ref_lines: Vec<&str> = reference.lines().collect();
+    assert_eq!(ref_lines.len(), n + 1, "header + one record per run");
+
+    let lf = temp("fuzz_work");
+    for fuzz_seed in 0..8u64 {
+        let mut rng = Rng::new(0xFA01).derive("fuzz", fuzz_seed);
+        let mut lines: Vec<String> = ref_lines.iter().map(|s| s.to_string()).collect();
+
+        // Crash mid-write: one run line is torn at a random byte.
+        let ti = 1 + (rng.next_u64() as usize) % n;
+        let cut = 1 + (rng.next_u64() as usize) % (lines[ti].len() - 1);
+        lines[ti].truncate(cut);
+        // Racing workers: a surviving run line lands twice.
+        let di = 1 + (rng.next_u64() as usize) % n;
+        if di != ti {
+            lines.push(lines[di].clone());
+        }
+        // A dead worker's expired claim, interleaved anywhere after the
+        // header.
+        let key = cells[(rng.next_u64() as usize) % cells.len()].key();
+        let pos = 1 + (rng.next_u64() as usize) % lines.len();
+        lines.insert(pos, ClaimRecord::new(key, "ghost", 1, 1).to_json());
+        // And a torn tail from the final crash.
+        lines.push("{\"kind\":\"telem\",\"scope\":\"run".into());
+        std::fs::write(&lf, lines.join("\n") + "\n").unwrap();
+
+        // Readers drop exactly the garbage; every surviving record is
+        // bit-identical to the reference.
+        let led = read_dist_ledger(&lf).unwrap();
+        assert!(led.n_torn >= 2, "seed {fuzz_seed}: torn line + tail");
+        let survivors: HashSet<String> = led.runs.iter().map(|r| r.key()).collect();
+        for r in &led.runs {
+            let want = by_key[&r.key()];
+            assert_eq!(r.wall.to_bits(), want.wall.to_bits(), "seed {fuzz_seed}");
+            assert_eq!(r.to_json(), want.to_json(), "seed {fuzz_seed}");
+        }
+
+        // Resume executes exactly the lost runs (the ghost claim never
+        // blocks — only `--steal` consults claims).
+        let resumed = execute(&plan, &opts_for(&lf, 2), &mut []).unwrap();
+        assert_eq!(resumed.n_cached, survivors.len(), "seed {fuzz_seed}");
+        assert_eq!(resumed.n_executed, n - survivors.len(), "seed {fuzz_seed}");
+
+        // Compaction drops the claim and the duplicates, keeps all n
+        // runs, and is idempotent.
+        compact_ledger(&lf).unwrap();
+        let once = std::fs::read_to_string(&lf).unwrap();
+        let second = compact_ledger(&lf).unwrap();
+        assert_eq!(once, std::fs::read_to_string(&lf).unwrap(), "seed {fuzz_seed}");
+        assert_eq!(second.dropped, 0, "seed {fuzz_seed}: already compact");
+        let led = read_dist_ledger(&lf).unwrap();
+        assert_eq!(led.runs.len(), n, "seed {fuzz_seed}: no completed run lost");
+        assert!(led.claims.is_empty(), "seed {fuzz_seed}: claims superseded");
+        assert_eq!(led.n_torn, 0, "seed {fuzz_seed}");
+
+        let merged = merge_ledgers(&[&lf], Some(&plan)).unwrap();
+        assert!(merged.complete(), "seed {fuzz_seed}");
+        for (x, y) in full.records.iter().zip(merged.records.iter()) {
+            assert_eq!(x.wall.to_bits(), y.wall.to_bits(), "seed {fuzz_seed}: {}", x.key());
+        }
+    }
+
+    std::fs::remove_file(&lref).ok();
+    std::fs::remove_file(&lf).ok();
+}
