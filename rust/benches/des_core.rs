@@ -1,0 +1,173 @@
+//! DES core + population-scale benchmarks (DESIGN.md §15 / §9).
+//!
+//! Times the calendar-queue scheduler against the retained binary-heap
+//! reference on the round-shaped event workload, the O(K) cohort
+//! sampling path, and — the headline — `des_million_round`: a complete
+//! DES campaign cell over a **million-client** population with a
+//! 1000-client sampled cohort per round.  The wall clock of that
+//! component witnesses the scale contract: cost per round is O(K) in
+//! the cohort, never O(N) in the population (the `counters` object
+//! records the rounds and sampled volume behind the timing).
+//!
+//! Flags (after `cargo bench --bench des_core --`):
+//!   --json <path>     write the machine-readable report (BENCH_des
+//!                     schema: component -> ns/op) for the perf
+//!                     trajectory tracked across PRs;
+//!   --budget-ms <n>   per-component wall-time budget (default 400;
+//!                     CI smoke uses a tiny budget).
+
+use nacfl::config::ExperimentConfig;
+use nacfl::des::{simulate_des, DesConfig, Discipline, EventQueue, SchedulerKind};
+use nacfl::netsim::ScenarioKind;
+use nacfl::policy::parse_policy;
+use nacfl::pop::{sample_k_of_n, CohortProcess, PopSpec};
+use nacfl::util::bench::{bench, black_box, BenchJson};
+use nacfl::util::rng::Rng;
+use std::time::Duration;
+
+struct Options {
+    json: Option<String>,
+    budget: Duration,
+}
+
+fn parse_args() -> Options {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut json = None;
+    let mut budget_ms: u64 = 400;
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--json" => {
+                let Some(path) = argv.get(i + 1) else {
+                    eprintln!("--json needs a path");
+                    std::process::exit(2);
+                };
+                json = Some(path.clone());
+                i += 2;
+            }
+            "--budget-ms" => {
+                let Some(ms) = argv.get(i + 1).and_then(|s| s.parse().ok()) else {
+                    eprintln!("--budget-ms needs an integer");
+                    std::process::exit(2);
+                };
+                budget_ms = ms;
+                i += 2;
+            }
+            // cargo bench passes --bench through to harness=false targets.
+            "--bench" => i += 1,
+            other => {
+                eprintln!("(des_core: ignoring argument `{other}`)");
+                i += 1;
+            }
+        }
+    }
+    Options { json, budget: Duration::from_millis(budget_ms.max(1)) }
+}
+
+/// One round-shaped scheduler workload: push K quantized (tie-heavy)
+/// arrival times, drain them all — the event pattern of one DES round.
+fn round_workload(kind: SchedulerKind, k: usize, rounds: usize) -> f64 {
+    let mut q = EventQueue::with_kind(kind);
+    let mut rng = Rng::new(11);
+    let mut now = 0.0f64;
+    for _ in 0..rounds {
+        for j in 0..k {
+            let dt = (rng.below(1000) as f64) * 12.5;
+            q.push(now + dt, j);
+        }
+        let mut last = now;
+        while let Some((t, _)) = q.pop() {
+            last = t;
+        }
+        now = last + 1.0;
+    }
+    now
+}
+
+fn main() {
+    let opts = parse_args();
+    let cfg = ExperimentConfig::paper();
+    let ctx = cfg.policy_ctx();
+    let budget = opts.budget;
+    let mut report = BenchJson::new("des");
+    println!("== DES scheduler core ==");
+
+    // Scheduler shoot-out on the K=1000 round shape: the wheel's O(1)
+    // amortized push/pop vs the heap's O(log n).
+    const K: usize = 1000;
+    let s = bench("wheel_round (K=1000 push+drain x4)", budget, || {
+        black_box(round_workload(SchedulerKind::Wheel, K, 4));
+    });
+    println!("{}", s.report());
+    report.record("wheel_round", &s);
+    let s = bench("heap_round (K=1000 push+drain x4)", budget, || {
+        black_box(round_workload(SchedulerKind::Heap, K, 4));
+    });
+    println!("{}", s.report());
+    report.record("heap_round", &s);
+
+    println!("\n== population sampling path ==");
+
+    // Floyd's cohort sampler: K=1000 of N=10^6 per op (exactly K RNG
+    // draws; O(K) time independent of N).
+    let mut srng = Rng::new(3).derive("pop-sample", 1);
+    let mut cohort = Vec::with_capacity(K);
+    let s = bench("pop_sample (k=1000 of n=1e6)", budget, || {
+        sample_k_of_n(&mut srng, 1_000_000, K, &mut cohort);
+        black_box(cohort.len());
+    });
+    println!("{}", s.report());
+    report.record("pop_sample", &s);
+
+    // Full per-round cohort materialization: sample + class resolution +
+    // per-slot BTD draws (the `next_state` the engine sees each round).
+    let spec = PopSpec::parse("pop:1000000:k1000:classeshilo").unwrap();
+    let mut proc_ = CohortProcess::new(
+        spec,
+        ScenarioKind::HomogeneousIndependent { sigma_sq: 1.0 },
+        5,
+    )
+    .unwrap();
+    let s = bench("cohort_next_state (k=1000, hilo)", budget, || {
+        black_box(proc_.next_state());
+    });
+    println!("{}", s.report());
+    report.record("cohort_next_state", &s);
+
+    println!("\n== million-client campaign cell ==");
+
+    // The headline: a complete DES run over pop:1000000:k1000 — every
+    // round samples a fresh 1000-client cohort from the million-client
+    // population and dispatches it through the calendar queue.  ns/op
+    // here is the wall clock of the whole cell; the counters record the
+    // rounds and sampled (client, round) volume behind it.
+    let mut rounds = 0u64;
+    let mut sampled = 0u64;
+    let s = bench("des_million_round (pop:1000000:k1000, sync)", budget, || {
+        let spec = PopSpec::parse("pop:1000000:k1000").unwrap();
+        let mut p = CohortProcess::new(
+            spec,
+            ScenarioKind::HomogeneousIndependent { sigma_sq: 1.0 },
+            3,
+        )
+        .unwrap();
+        let mut policy = parse_policy("fixed:2").unwrap();
+        let des = DesConfig::new(Discipline::Sync, 60.0);
+        let r = simulate_des(&ctx, policy.as_mut(), &mut p, &des, Rng::new(1)).unwrap();
+        rounds = r.rounds as u64;
+        sampled = p.sampled_total();
+        black_box(r.wall);
+    });
+    println!("{}", s.report());
+    report.record("des_million_round", &s);
+    report.record_counter("million_cell_rounds", rounds);
+    report.record_counter("million_cell_sampled", sampled);
+
+    if let Some(path) = &opts.json {
+        report.write(path).unwrap_or_else(|e| {
+            eprintln!("error writing {path}: {e}");
+            std::process::exit(1);
+        });
+        println!("\nmachine-readable report -> {path}");
+    }
+}

@@ -173,15 +173,12 @@ fn main() {
     // deadline with quorum, and crash-recover clients — prices the
     // fault machinery (attempt draws, backoff scheduling, deadline
     // cuts, crash windows) on top of the plain per-round path.
-    let fault_cfg = DesConfig {
-        discipline: Discipline::Sync,
-        faults: FaultModel::parse(
-            "loss:0.1:retry2+deadline:4000000:quorum0.5+crash:40000000x4000000",
+    let fault_cfg = DesConfig::new(Discipline::Sync, 50.0)
+        .with_faults(
+            FaultModel::parse("loss:0.1:retry2+deadline:4000000:quorum0.5+crash:40000000x4000000")
+                .unwrap(),
         )
-        .unwrap(),
-        k_eps: 50.0,
-        max_rounds: 8,
-    };
+        .with_max_rounds(8);
     let mut fault_pol = parse_policy("fixed:2").unwrap();
     let s = bench("des_fault_round (loss+deadline+crash, 8-round sim)", budget, || {
         let mut fproc = sc.process(Rng::new(7)).unwrap();

@@ -36,7 +36,7 @@
 //! k = M and u = 1 this is Assumption 1 verbatim.  The accounting is the
 //! analytic tier's [`StoppingRule`], reused with non-unit weights.
 
-use super::event::EventQueue;
+use super::event::{EventQueue, SchedulerKind};
 use super::faults::{CrashState, FaultModel};
 use crate::netsim::{DelayModel, NetworkProcess};
 use crate::obs::Telemetry;
@@ -110,11 +110,21 @@ pub struct DesConfig {
     pub k_eps: f64,
     /// Round cap (async: per-client round-start cap).
     pub max_rounds: usize,
+    /// Event-dispatch structure (calendar wheel by default; the retained
+    /// binary heap is the bit-identity reference — both pop in the same
+    /// `(time, seq)` order, pinned by `tests/pop_system.rs`).
+    pub scheduler: SchedulerKind,
 }
 
 impl DesConfig {
     pub fn new(discipline: Discipline, k_eps: f64) -> Self {
-        DesConfig { discipline, faults: FaultModel::none(), k_eps, max_rounds: 10_000_000 }
+        DesConfig {
+            discipline,
+            faults: FaultModel::none(),
+            k_eps,
+            max_rounds: 10_000_000,
+            scheduler: SchedulerKind::Wheel,
+        }
     }
 
     pub fn with_faults(mut self, faults: FaultModel) -> Self {
@@ -124,6 +134,11 @@ impl DesConfig {
 
     pub fn with_max_rounds(mut self, max_rounds: usize) -> Self {
         self.max_rounds = max_rounds;
+        self
+    }
+
+    pub fn with_scheduler(mut self, scheduler: SchedulerKind) -> Self {
+        self.scheduler = scheduler;
         self
     }
 }
@@ -287,7 +302,7 @@ fn run_round_based(
     let deadline = cfg.faults.deadline_s;
     let quorum_min = cfg.faults.quorum_need(m);
 
-    let mut q: EventQueue<usize> = EventQueue::new();
+    let mut q: EventQueue<usize> = EventQueue::with_kind(cfg.scheduler);
     let mut lost = vec![false; m];
     let mut got = vec![false; m];
     // Per-round delivered-choices buffer, reused across rounds.
@@ -420,6 +435,9 @@ fn run_round_based(
         }
     }
 
+    if q.wheel_ops() > 0 {
+        telem.count("des.wheel_ops", q.wheel_ops());
+    }
     if retries > 0 {
         telem.count("net.retries", retries);
     }
@@ -562,7 +580,7 @@ fn run_async(
     let mut loss_rng = rng.derive("loss", 0);
     let mut crash = cfg.faults.crash_state(m, &rng);
     let mut counters = AsyncFaultCounters::default();
-    let mut q: EventQueue<AsyncArrival> = EventQueue::new();
+    let mut q: EventQueue<AsyncArrival> = EventQueue::with_kind(cfg.scheduler);
     let mut version: u64 = 0;
     let mut wall = 0.0f64;
     // Decomposition accumulator (separate from the `wall` float path).
@@ -642,6 +660,9 @@ fn run_async(
         telem.gauge_max("des.queue_high_water", q.len() as u64);
     }
 
+    if q.wheel_ops() > 0 {
+        telem.count("des.wheel_ops", q.wheel_ops());
+    }
     if counters.retries > 0 {
         telem.count("net.retries", counters.retries);
     }

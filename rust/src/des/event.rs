@@ -1,10 +1,27 @@
-//! Deterministic event queue: a binary min-heap of timestamped events.
+//! Deterministic event queue: a calendar-queue timing wheel with a
+//! retained binary-heap reference implementation.
 //!
-//! Determinism contract: events are ordered by `(time, insertion
-//! sequence)` with `f64::total_cmp` on time, so (a) NaN/infinity can never
-//! poison the ordering (pushes assert finiteness), and (b) simultaneous
-//! events pop in insertion order — the pop sequence is a pure function of
-//! the push sequence, never of heap internals or thread timing.
+//! Determinism contract (identical for both schedulers): events are
+//! ordered by `(time, insertion sequence)` with `f64::total_cmp` on time,
+//! so (a) NaN/infinity can never poison the ordering (pushes assert
+//! finiteness), and (b) simultaneous events pop in insertion order — the
+//! pop sequence is a pure function of the push sequence, never of queue
+//! internals or thread timing.
+//!
+//! The default scheduler is the calendar queue ([Brown 1988]): events
+//! hash into `n_buckets` time-sliced buckets of width `width`, each kept
+//! sorted by `(time, seq)`.  With the bucket count tracking the queue
+//! population (doubling/halving on resize) and the width tracking the
+//! average inter-event gap, push and pop are O(1) amortized — the
+//! property that lets a sampled-cohort round over a million-client
+//! population dispatch in O(K) rather than O(K log K) heap time.  Two
+//! events with equal time always land in the same bucket (the bucket
+//! index is a pure function of time), so FIFO tie-breaking needs no
+//! cross-bucket comparison; a full-rotation fallback scan guards the
+//! float-boundary edge cases.  The previous `BinaryHeap` scheduler is
+//! retained verbatim as [`HeapQueue`] and selectable via
+//! [`SchedulerKind::Heap`] — the bit-identity reference for property
+//! tests (`tests/pop_system.rs`).
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -40,15 +57,32 @@ impl<T> Ord for Entry<T> {
     }
 }
 
-/// Min-heap of `(time, payload)` events with FIFO tie-breaking.
-pub struct EventQueue<T> {
+/// Which event-dispatch structure backs an [`EventQueue`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedulerKind {
+    /// Calendar-queue timing wheel (default): O(1) amortized push/pop.
+    Wheel,
+    /// Binary min-heap (the pre-population-model scheduler), retained as
+    /// the bit-identity reference: O(log n) push/pop.
+    Heap,
+}
+
+impl Default for SchedulerKind {
+    fn default() -> Self {
+        SchedulerKind::Wheel
+    }
+}
+
+/// Min-heap of `(time, payload)` events with FIFO tie-breaking — the
+/// reference scheduler ([`SchedulerKind::Heap`]).
+pub struct HeapQueue<T> {
     heap: BinaryHeap<Entry<T>>,
     seq: u64,
 }
 
-impl<T> EventQueue<T> {
+impl<T> HeapQueue<T> {
     pub fn new() -> Self {
-        EventQueue { heap: BinaryHeap::new(), seq: 0 }
+        HeapQueue { heap: BinaryHeap::new(), seq: 0 }
     }
 
     /// Schedule `payload` at absolute time `time` (must be finite).
@@ -84,6 +118,260 @@ impl<T> EventQueue<T> {
     }
 }
 
+impl<T> Default for HeapQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+const MIN_BUCKETS: usize = 16;
+
+/// Calendar-queue timing wheel: `n_buckets` time slices of width
+/// `width`, each a `(time, seq)`-sorted vector.  Pop order is exactly
+/// the [`HeapQueue`] order (pinned by parity tests).
+struct CalendarQueue<T> {
+    buckets: Vec<Vec<Entry<T>>>,
+    /// Bucket time width (seconds per slice); always finite and > 0.
+    width: f64,
+    len: usize,
+    seq: u64,
+    /// Lower bound on the earliest pending event's time: the last popped
+    /// time, rewound by any push scheduled before it.  Seeds the wheel
+    /// scan so pops don't rescan past slices.
+    floor_time: f64,
+    /// Bucket touches (pushes + scan steps + resize moves) — exported as
+    /// the `des.wheel_ops` telemetry counter.
+    ops: u64,
+}
+
+impl<T> CalendarQueue<T> {
+    fn new() -> Self {
+        CalendarQueue {
+            buckets: (0..MIN_BUCKETS).map(|_| Vec::new()).collect(),
+            width: 1.0,
+            len: 0,
+            seq: 0,
+            floor_time: 0.0,
+            ops: 0,
+        }
+    }
+
+    /// Bucket index for an event time — a pure function of `time` (and
+    /// the current geometry), so equal times always share a bucket.
+    fn bucket_of(&self, time: f64) -> usize {
+        let n = self.buckets.len() as i64;
+        // Saturating float->int cast keeps extreme times deterministic;
+        // rem_euclid keeps (rare) negative times in range.
+        (((time / self.width).floor()) as i64).rem_euclid(n) as usize
+    }
+
+    fn push(&mut self, time: f64, payload: T) {
+        assert!(time.is_finite(), "event time must be finite, got {time}");
+        let seq = self.seq;
+        self.seq += 1;
+        if self.len == 0 || time < self.floor_time {
+            // Empty wheel (floor may be stale) or a rewind push: restart
+            // the scan cursor at this event.
+            self.floor_time = time;
+        }
+        let idx = self.bucket_of(time);
+        let bucket = &mut self.buckets[idx];
+        // Sorted insertion by (time, seq); pushes carry increasing seq,
+        // so same-time events append after their elders (FIFO).
+        let at = bucket.partition_point(|e| {
+            e.time.total_cmp(&time).then_with(|| e.seq.cmp(&seq)) == Ordering::Less
+        });
+        bucket.insert(at, Entry { time, seq, payload });
+        self.len += 1;
+        self.ops += 1;
+        if self.len > 2 * self.buckets.len() {
+            let n = self.buckets.len() * 2;
+            self.resize(n);
+        }
+    }
+
+    /// Bucket index holding the global minimum `(time, seq)` entry, or
+    /// `None` when empty.
+    fn min_bucket(&mut self) -> Option<usize> {
+        if self.len == 0 {
+            return None;
+        }
+        let n = self.buckets.len();
+        // Wheel scan: starting at the slice containing floor_time, the
+        // first bucket whose head event falls inside its *current-year*
+        // window holds the global minimum (equal times share a bucket,
+        // so no cross-bucket tie is possible).
+        let mut vslice = (self.floor_time / self.width).floor();
+        for _ in 0..n {
+            let idx = ((vslice as i64).rem_euclid(n as i64)) as usize;
+            self.ops += 1;
+            if let Some(e) = self.buckets[idx].first() {
+                if e.time < (vslice + 1.0) * self.width {
+                    return Some(idx);
+                }
+            }
+            vslice += 1.0;
+        }
+        // Full rotation found nothing inside its window (events sparser
+        // than one wheel revolution, or a float boundary edge): direct
+        // search over bucket heads — O(n_buckets), still population-free.
+        let mut best: Option<usize> = None;
+        for idx in 0..n {
+            self.ops += 1;
+            let Some(e) = self.buckets[idx].first() else { continue };
+            best = match best {
+                None => Some(idx),
+                Some(b) => {
+                    let eb = &self.buckets[b][0];
+                    if e.time.total_cmp(&eb.time).then_with(|| e.seq.cmp(&eb.seq))
+                        == Ordering::Less
+                    {
+                        Some(idx)
+                    } else {
+                        Some(b)
+                    }
+                }
+            };
+        }
+        best
+    }
+
+    fn pop(&mut self) -> Option<(f64, T)> {
+        let idx = self.min_bucket()?;
+        let e = self.buckets[idx].remove(0);
+        self.len -= 1;
+        self.floor_time = e.time;
+        if self.len < self.buckets.len() / 4 && self.buckets.len() > MIN_BUCKETS {
+            let n = (self.buckets.len() / 2).max(MIN_BUCKETS);
+            self.resize(n);
+        }
+        Some((e.time, e.payload))
+    }
+
+    fn peek_time(&mut self) -> Option<f64> {
+        let idx = self.min_bucket()?;
+        Some(self.buckets[idx][0].time)
+    }
+
+    /// Rebuild with `new_n` buckets and a width tracking the average
+    /// inter-event gap (deterministic: a pure function of the pending
+    /// set, no clocks or randomness).
+    fn resize(&mut self, new_n: usize) {
+        let mut all: Vec<Entry<T>> = Vec::with_capacity(self.len);
+        for b in &mut self.buckets {
+            all.append(b);
+        }
+        all.sort_by(|a, b| a.time.total_cmp(&b.time).then_with(|| a.seq.cmp(&b.seq)));
+        let mut width = 1.0;
+        if all.len() >= 2 {
+            let span = all[all.len() - 1].time - all[0].time;
+            // ~2 events per bucket on average.
+            let avg = 2.0 * span / (all.len() - 1) as f64;
+            if avg.is_finite() && avg > 0.0 {
+                width = avg;
+            }
+        }
+        self.width = width;
+        self.buckets = (0..new_n).map(|_| Vec::new()).collect();
+        // Entries arrive in global (time, seq) order, so plain appends
+        // leave every bucket sorted.
+        self.ops += all.len() as u64;
+        for e in all {
+            let idx = self.bucket_of(e.time);
+            self.buckets[idx].push(e);
+        }
+    }
+
+    fn clear(&mut self) {
+        for b in &mut self.buckets {
+            b.clear();
+        }
+        self.len = 0;
+        // seq keeps counting; floor_time is rewound by the next push.
+    }
+}
+
+enum Inner<T> {
+    Wheel(CalendarQueue<T>),
+    Heap(HeapQueue<T>),
+}
+
+/// Deterministic `(time, payload)` event queue with FIFO tie-breaking,
+/// backed by the scheduler chosen at construction ([`SchedulerKind`];
+/// calendar wheel by default).  Both backends pop in the identical
+/// `(time, insertion-sequence)` order.
+pub struct EventQueue<T> {
+    inner: Inner<T>,
+}
+
+impl<T> EventQueue<T> {
+    /// The default scheduler (calendar wheel).
+    pub fn new() -> Self {
+        Self::with_kind(SchedulerKind::Wheel)
+    }
+
+    pub fn with_kind(kind: SchedulerKind) -> Self {
+        let inner = match kind {
+            SchedulerKind::Wheel => Inner::Wheel(CalendarQueue::new()),
+            SchedulerKind::Heap => Inner::Heap(HeapQueue::new()),
+        };
+        EventQueue { inner }
+    }
+
+    /// Schedule `payload` at absolute time `time` (must be finite).
+    pub fn push(&mut self, time: f64, payload: T) {
+        match &mut self.inner {
+            Inner::Wheel(q) => q.push(time, payload),
+            Inner::Heap(q) => q.push(time, payload),
+        }
+    }
+
+    /// Pop the earliest event as `(time, payload)`.
+    pub fn pop(&mut self) -> Option<(f64, T)> {
+        match &mut self.inner {
+            Inner::Wheel(q) => q.pop(),
+            Inner::Heap(q) => q.pop(),
+        }
+    }
+
+    /// Timestamp of the next event without removing it.
+    pub fn peek_time(&mut self) -> Option<f64> {
+        match &mut self.inner {
+            Inner::Wheel(q) => q.peek_time(),
+            Inner::Heap(q) => q.peek_time(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.inner {
+            Inner::Wheel(q) => q.len,
+            Inner::Heap(q) => q.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop all pending events (semi-sync round cancellation). The
+    /// insertion sequence keeps counting so determinism is unaffected.
+    pub fn clear(&mut self) {
+        match &mut self.inner {
+            Inner::Wheel(q) => q.clear(),
+            Inner::Heap(q) => q.clear(),
+        }
+    }
+
+    /// Bucket touches accumulated by the wheel scheduler (0 for the
+    /// heap) — the `des.wheel_ops` telemetry counter.
+    pub fn wheel_ops(&self) -> u64 {
+        match &self.inner {
+            Inner::Wheel(q) => q.ops,
+            Inner::Heap(_) => 0,
+        }
+    }
+}
+
 impl<T> Default for EventQueue<T> {
     fn default() -> Self {
         Self::new()
@@ -93,41 +381,52 @@ impl<T> Default for EventQueue<T> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Rng;
+
+    fn kinds() -> [SchedulerKind; 2] {
+        [SchedulerKind::Wheel, SchedulerKind::Heap]
+    }
 
     #[test]
     fn pops_in_time_order() {
-        let mut q = EventQueue::new();
-        q.push(3.0, "c");
-        q.push(1.0, "a");
-        q.push(2.0, "b");
-        assert_eq!(q.peek_time(), Some(1.0));
-        assert_eq!(q.pop(), Some((1.0, "a")));
-        assert_eq!(q.pop(), Some((2.0, "b")));
-        assert_eq!(q.pop(), Some((3.0, "c")));
-        assert_eq!(q.pop(), None);
+        for kind in kinds() {
+            let mut q = EventQueue::with_kind(kind);
+            q.push(3.0, "c");
+            q.push(1.0, "a");
+            q.push(2.0, "b");
+            assert_eq!(q.peek_time(), Some(1.0));
+            assert_eq!(q.pop(), Some((1.0, "a")));
+            assert_eq!(q.pop(), Some((2.0, "b")));
+            assert_eq!(q.pop(), Some((3.0, "c")));
+            assert_eq!(q.pop(), None);
+        }
     }
 
     #[test]
     fn simultaneous_events_pop_fifo() {
-        let mut q = EventQueue::new();
-        for i in 0..50usize {
-            q.push(7.5, i);
+        for kind in kinds() {
+            let mut q = EventQueue::with_kind(kind);
+            for i in 0..50usize {
+                q.push(7.5, i);
+            }
+            let order: Vec<usize> = std::iter::from_fn(|| q.pop().map(|(_, p)| p)).collect();
+            assert_eq!(order, (0..50).collect::<Vec<_>>());
         }
-        let order: Vec<usize> = std::iter::from_fn(|| q.pop().map(|(_, p)| p)).collect();
-        assert_eq!(order, (0..50).collect::<Vec<_>>());
     }
 
     #[test]
     fn clear_empties_but_keeps_sequencing() {
-        let mut q = EventQueue::new();
-        q.push(1.0, 0u32);
-        q.clear();
-        assert!(q.is_empty());
-        q.push(5.0, 1);
-        q.push(5.0, 2);
-        assert_eq!(q.len(), 2);
-        assert_eq!(q.pop(), Some((5.0, 1)));
-        assert_eq!(q.pop(), Some((5.0, 2)));
+        for kind in kinds() {
+            let mut q = EventQueue::with_kind(kind);
+            q.push(1.0, 0u32);
+            q.clear();
+            assert!(q.is_empty());
+            q.push(5.0, 1);
+            q.push(5.0, 2);
+            assert_eq!(q.len(), 2);
+            assert_eq!(q.pop(), Some((5.0, 1)));
+            assert_eq!(q.pop(), Some((5.0, 2)));
+        }
     }
 
     #[test]
@@ -135,5 +434,82 @@ mod tests {
     fn rejects_non_finite_times() {
         let mut q = EventQueue::new();
         q.push(f64::NAN, ());
+    }
+
+    #[test]
+    #[should_panic]
+    fn heap_rejects_non_finite_times() {
+        let mut q = EventQueue::with_kind(SchedulerKind::Heap);
+        q.push(f64::NAN, ());
+    }
+
+    /// Interleaved pushes and pops: both schedulers produce the
+    /// identical (time, payload) sequence on a clustered workload with
+    /// heavy ties (the DES shape: round arrivals batch at equal times).
+    #[test]
+    fn wheel_matches_heap_on_random_interleavings() {
+        let mut rng = Rng::new(42);
+        let mut wheel = EventQueue::with_kind(SchedulerKind::Wheel);
+        let mut heap = EventQueue::with_kind(SchedulerKind::Heap);
+        let mut now = 0.0f64;
+        let mut popped = 0usize;
+        for i in 0..5000usize {
+            // Mostly pushes at now + clustered offsets; quantized so ties
+            // are common.
+            let dt = (rng.below(40) as f64) * 0.25;
+            wheel.push(now + dt, i);
+            heap.push(now + dt, i);
+            if rng.uniform() < 0.45 {
+                let a = wheel.pop();
+                let b = heap.pop();
+                assert_eq!(a, b, "divergence after {popped} pops");
+                if let Some((t, _)) = a {
+                    now = t;
+                }
+                popped += 1;
+            }
+        }
+        loop {
+            let a = wheel.pop();
+            let b = heap.pop();
+            assert_eq!(a, b);
+            if a.is_none() {
+                break;
+            }
+        }
+    }
+
+    /// Growth through several resizes and drain back down: order still
+    /// exact, and the wheel actually did bucket work.
+    #[test]
+    fn wheel_survives_resize_cycles() {
+        let mut rng = Rng::new(7);
+        let mut wheel = EventQueue::with_kind(SchedulerKind::Wheel);
+        let mut heap = EventQueue::with_kind(SchedulerKind::Heap);
+        for i in 0..4096usize {
+            let t = rng.uniform() * 1e6;
+            wheel.push(t, i);
+            heap.push(t, i);
+        }
+        assert_eq!(wheel.len(), 4096);
+        while let Some(a) = wheel.pop() {
+            assert_eq!(Some(a), heap.pop());
+        }
+        assert!(heap.pop().is_none());
+        assert!(wheel.wheel_ops() > 4096, "wheel must report bucket work");
+        assert_eq!(heap.wheel_ops(), 0);
+    }
+
+    /// A push earlier than the last popped time (not produced by the DES
+    /// engines, but part of the queue contract) rewinds the scan cursor.
+    #[test]
+    fn rewind_push_is_found() {
+        let mut q = EventQueue::new();
+        q.push(100.0, "late");
+        assert_eq!(q.pop(), Some((100.0, "late")));
+        q.push(1.0, "rewound");
+        q.push(200.0, "later");
+        assert_eq!(q.pop(), Some((1.0, "rewound")));
+        assert_eq!(q.pop(), Some((200.0, "later")));
     }
 }

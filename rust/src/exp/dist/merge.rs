@@ -200,6 +200,9 @@ mod tests {
             congestion_s: 0.0,
             retrans_s: f64::NAN,
             quorum_frac: f64::NAN,
+            pop: "none".into(),
+            sampled_k: f64::NAN,
+            participation: String::new(),
             trace: None,
         }
     }

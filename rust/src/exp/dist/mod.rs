@@ -18,12 +18,13 @@
 //!   (last-writer-wins on identical bits).
 //! * [`shard`] — deterministic work assignment.  `nacfl run plan.toml
 //!   --shard i/n` splits the plan *tier-weighted*: each cell is
-//!   classified by relative cost ([`CostClass`]: ml ≫ des ≫ analytic)
-//!   and round-robined within its class over the plan order, so every
-//!   worker gets an equal share of the expensive runs — disjoint and
-//!   jointly exhaustive by construction, with no coordination channel
-//!   needed.  (The original FNV-1a hash partition, [`shard_of`],
-//!   remains for key-addressed consumers.)
+//!   classified by relative cost ([`CostClass`]: ml ≫ pop/des ≫
+//!   analytic) with a size weight (sampled cohort size K for
+//!   `pop:<spec>` cells) and placed least-loaded within its class over
+//!   the plan order, so every worker gets an even share of the
+//!   expensive runs — disjoint and jointly exhaustive by construction,
+//!   with no coordination channel needed.  (The original FNV-1a hash
+//!   partition, [`shard_of`], remains for key-addressed consumers.)
 //!   With `--steal`, a worker that finishes its shard re-reads the
 //!   (shared) ledger and reclaims pending keys whose claims have
 //!   expired — reclaiming runs from dead workers.

@@ -10,12 +10,15 @@
 //!   mixed-tier campaign can pile every ml cell onto one worker.
 //! * **Tier-weighted partition** ([`weighted_assignments`]): the
 //!   campaign engine classifies each cell by relative cost
-//!   ([`CostClass`]: ml training ≫ DES runs ≫ analytic closed forms)
-//!   and round-robins *within each class* over the plan order, so
-//!   every shard receives an equal (±1) share of each class.  This is
-//!   what `nacfl run --shard i/n` uses; the hash partition remains for
-//!   key-addressed consumers (and as the tie-free fallback semantics
-//!   the ledger tooling was built against).
+//!   ([`CostClass`]: ml training ≫ population/DES runs ≫ analytic
+//!   closed forms) plus a size weight (the sampled cohort size K for
+//!   `pop:<spec>` cells, 1 otherwise) and places it on the least-loaded
+//!   shard *within its class* over the plan order, so every shard
+//!   receives an even share of each class's total cost — not just its
+//!   cell count.  This is what `nacfl run --shard i/n` uses; the hash
+//!   partition remains for key-addressed consumers (and as the
+//!   tie-free fallback semantics the ledger tooling was built
+//!   against).
 
 use crate::util::rng::fnv1a;
 use anyhow::{anyhow, Result};
@@ -31,26 +34,41 @@ pub enum CostClass {
     /// DES-engine runs (non-sync disciplines, flow scenarios, faults):
     /// milliseconds to seconds each.
     Des = 1,
+    /// Population cells (`pop:<spec>`): DES runs over a sampled cohort,
+    /// whose cost scales with the cohort size K — the per-cell weight
+    /// carries K so a `k1000` cell counts 100× a `k10` one.
+    Pop = 2,
     /// Full ML training runs: dominate everything else.
-    Ml = 2,
+    Ml = 3,
 }
 
-/// Tier-weighted shard assignment: stratified round-robin over the
-/// plan order.  The `k`-th cell *of its class* lands on shard
-/// `k mod count`, so each shard gets an equal (±1) share of every
-/// class.  A pure function of the full cell sequence — never of the
-/// pending subset — so assignments are identical across workers and
-/// across resumed invocations of the same plan.
-pub fn weighted_assignments(classes: &[CostClass], count: u32) -> Vec<u32> {
+const N_COST_CLASSES: usize = 4;
+
+/// Tier-weighted shard assignment: greedy least-loaded placement
+/// *within each class* over the plan order, where each cell carries a
+/// size weight (1 for analytic/DES/ml cells; the sampled cohort size K
+/// for population cells).  With uniform weights this degenerates to the
+/// original stratified round-robin — the `k`-th cell of its class lands
+/// on shard `k mod count` — so pre-pop campaigns shard exactly as
+/// before.  Ties break toward the lowest shard index, keeping the
+/// assignment a pure function of the full cell sequence — never of the
+/// pending subset — so it is identical across workers and across
+/// resumed invocations of the same plan.
+pub fn weighted_assignments(classes: &[(CostClass, u64)], count: u32) -> Vec<u32> {
     debug_assert!(count >= 1);
-    let mut rank = [0u32; 3];
+    let mut loads: Vec<Vec<u64>> = vec![vec![0u64; count as usize]; N_COST_CLASSES];
     classes
         .iter()
-        .map(|&c| {
-            let r = &mut rank[c as usize];
-            let shard = *r % count;
-            *r += 1;
-            shard
+        .map(|&(c, w)| {
+            let l = &mut loads[c as usize];
+            let mut best = 0usize;
+            for s in 1..l.len() {
+                if l[s] < l[best] {
+                    best = s;
+                }
+            }
+            l[best] += w.max(1);
+            best as u32
         })
         .collect()
 }
@@ -150,10 +168,10 @@ mod tests {
         use CostClass::*;
         // A hostile plan order: all the ml cells clustered at the end,
         // where a plain round-robin over the whole sequence would tilt.
-        let classes: Vec<CostClass> = std::iter::repeat(Analytic)
+        let classes: Vec<(CostClass, u64)> = std::iter::repeat((Analytic, 1))
             .take(10)
-            .chain(std::iter::repeat(Des).take(7))
-            .chain(std::iter::repeat(Ml).take(5))
+            .chain(std::iter::repeat((Des, 1)).take(7))
+            .chain(std::iter::repeat((Ml, 1)).take(5))
             .collect();
         for n in 1..=4u32 {
             let assign = weighted_assignments(&classes, n);
@@ -165,7 +183,7 @@ mod tests {
                         classes
                             .iter()
                             .zip(&assign)
-                            .filter(|&(&c, &a)| c == class && a == s)
+                            .filter(|&(&(c, _), &a)| c == class && a == s)
                             .count()
                     })
                     .collect();
@@ -180,8 +198,43 @@ mod tests {
             }
             // Pure function: same input, same assignment.
             assert_eq!(assign, weighted_assignments(&classes, n));
+            // Uniform weights degenerate to the original stratified
+            // round-robin: the k-th cell of its class lands on k mod n.
+            let mut rank = std::collections::HashMap::new();
+            for (&(c, _), &a) in classes.iter().zip(&assign) {
+                let r = rank.entry(c).or_insert(0u32);
+                assert_eq!(a, *r % n, "round-robin within {c:?}");
+                *r += 1;
+            }
         }
         // Solo degenerates to "everything on shard 0".
         assert!(weighted_assignments(&classes, 1).iter().all(|&s| s == 0));
+    }
+
+    #[test]
+    fn pop_weights_balance_cohort_size_not_cell_count() {
+        use CostClass::*;
+        // Four pop cells with wildly uneven cohorts: K = 1000, 10, 10,
+        // ... a count-balanced split over 2 shards could land the k1000
+        // cell plus half the small ones on one worker.  Least-loaded by
+        // weight puts the giant alone and packs the small ones opposite.
+        let classes: Vec<(CostClass, u64)> =
+            vec![(Pop, 1000), (Pop, 10), (Pop, 10), (Pop, 10), (Pop, 10)];
+        let assign = weighted_assignments(&classes, 2);
+        assert_eq!(assign[0], 0, "first (heaviest) cell on shard 0");
+        assert!(
+            assign[1..].iter().all(|&s| s == 1),
+            "every small cohort lands opposite the giant: {assign:?}"
+        );
+        // Interleaved classes stay independent: analytic cells keep
+        // their own round-robin regardless of pop weights.
+        let mixed: Vec<(CostClass, u64)> =
+            vec![(Analytic, 1), (Pop, 500), (Analytic, 1), (Pop, 5), (Pop, 5)];
+        let assign = weighted_assignments(&mixed, 2);
+        assert_eq!(assign[0], 0);
+        assert_eq!(assign[2], 1, "analytic round-robin is undisturbed");
+        assert_eq!(assign[1], 0);
+        assert_eq!(assign[3], 1);
+        assert_eq!(assign[4], 1);
     }
 }

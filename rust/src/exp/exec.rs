@@ -21,7 +21,12 @@
 //!   never depend on plan shape, thread count or steal order.  Cells
 //!   with a lossy fault spec price compression levels through
 //!   `PolicyCtx::with_wire_factor` (expected transmissions per upload),
-//!   so solver-backed policies see the true expected wire cost;
+//!   so solver-backed policies see the true expected wire cost.  Cells
+//!   with a `pop:<spec>` coordinate always take the DES path, replacing
+//!   the base-config fleet with a per-round sampled cohort
+//!   (`pop::CohortProcess`) of K participants drawn from an N-client
+//!   population — state is materialized only for the cohort, never
+//!   O(N) per round;
 //! * `ml` tier → full FedCOM-V training through the coordinator,
 //!   sequential (the coordinator already parallelizes across client
 //!   workers), with datasets/partitions served by a campaign-level
@@ -50,9 +55,11 @@ use super::sink::{JsonlSink, ResultSink, RunRecord};
 use crate::config::ExperimentConfig;
 use crate::coordinator::{Coordinator, FailureConfig};
 use crate::data::{partition, Dataset, Partition, PartitionKind};
-use crate::des::{simulate_des_with, simulate_flow_des_with, DesConfig, Discipline};
+use crate::des::{simulate_des_with, simulate_flow_des_with, DesConfig, Discipline, SchedulerKind};
 use crate::metrics::TableWriter;
+use crate::netsim::NetworkProcess;
 use crate::obs::Telemetry;
+use crate::pop::{CohortProcess, PopSpec, CLASS_COUNTERS};
 use crate::policy::{PolicyCtx, PolicyEnv, PolicySpec};
 use crate::util::rng::Rng;
 use anyhow::{anyhow, Result};
@@ -285,7 +292,7 @@ pub fn execute(
     let mine: Vec<usize> = if opts.shard.count <= 1 {
         pending.clone()
     } else {
-        let classes: Vec<CostClass> = cells.iter().map(|c| cost_class(plan, c)).collect();
+        let classes: Vec<(CostClass, u64)> = cells.iter().map(|c| cost_class(plan, c)).collect();
         let assign = weighted_assignments(&classes, opts.shard.count);
         pending
             .iter()
@@ -672,6 +679,7 @@ fn base_record(plan: &ExperimentPlan, cell: &PlanCell, fp: &str) -> RunRecord {
         tier: cell.tier.label(),
         discipline: cell.discipline.label(),
         faults: cell.faults.clone(),
+        pop: cell.pop.clone(),
         policy: cell.policy.clone(),
         data_seed: cell.data_seed,
         seed: cell.seed,
@@ -688,45 +696,60 @@ fn base_record(plan: &ExperimentPlan, cell: &PlanCell, fp: &str) -> RunRecord {
         congestion_s: f64::NAN,
         retrans_s: f64::NAN,
         quorum_frac: f64::NAN,
+        sampled_k: f64::NAN,
+        participation: String::new(),
         trace: None,
     }
 }
 
 /// Whether a grid cell takes the exact analytic closed form: sync
-/// discipline, no flow bottleneck, and no fault channel anywhere (base
-/// config or the cell's own `faults` coordinate).  Per-cell, so the
-/// `faults:none` cells of a mixed-fault plan still hit the frozen
-/// float path bit-for-bit.
+/// discipline, no flow bottleneck, no population coordinate, and no
+/// fault channel anywhere (base config or the cell's own `faults`
+/// coordinate).  Per-cell, so the `faults:none` cells of a mixed-fault
+/// plan still hit the frozen float path bit-for-bit.
 fn routes_analytic(plan: &ExperimentPlan, cell: &PlanCell) -> bool {
     cell.discipline == Discipline::Sync
         && !cell.scenario.is_flow()
         && cell.faults == "none"
+        && cell.pop == "none"
         && plan.base.dropout == 0.0
         && plan.base.stragglers.is_empty()
 }
 
-/// Relative cost class for tier-weighted sharding (ml training ≫ DES
-/// runs ≫ analytic closed forms).
-fn cost_class(plan: &ExperimentPlan, cell: &PlanCell) -> CostClass {
+/// Relative cost class plus size weight for tier-weighted sharding
+/// (ml training ≫ DES runs ≫ analytic closed forms).  Population cells
+/// scale with the sampled cohort size K — a `pop:1000000:k1000` cell
+/// simulates 100× the clients of a `k10` one, and an even `--shard i/n`
+/// split must account for that.
+fn cost_class(plan: &ExperimentPlan, cell: &PlanCell) -> (CostClass, u64) {
+    if cell.pop != "none" {
+        let k = PopSpec::parse(&cell.pop).map(|p| p.k as u64).unwrap_or(1).max(1);
+        return (CostClass::Pop, k);
+    }
     match cell.tier {
-        Tier::Ml => CostClass::Ml,
-        Tier::Analytic { .. } if routes_analytic(plan, cell) => CostClass::Analytic,
-        Tier::Analytic { .. } => CostClass::Des,
+        Tier::Ml => (CostClass::Ml, 1),
+        Tier::Analytic { .. } if routes_analytic(plan, cell) => (CostClass::Analytic, 1),
+        Tier::Analytic { .. } => (CostClass::Des, 1),
     }
 }
 
-/// Hash of the cell's (scenario, discipline[, faults]) labels: the DES
-/// fault stream index.  A pure function of the coordinates, so fault
-/// draws never depend on the plan's shape, the thread count or steal
-/// order.  The faults label is mixed in only when non-trivial, keeping
-/// every pre-fault stream — and therefore every fault-free ledger —
-/// byte-stable.
-fn fault_stream_id(scenario: &str, discipline: &str, faults: &str) -> u64 {
-    let repr = if faults == "none" {
-        format!("{scenario}|{discipline}")
-    } else {
-        format!("{scenario}|{discipline}|{faults}")
-    };
+/// Hash of the cell's (scenario, discipline[, faults][, pop]) labels:
+/// the DES fault stream index.  A pure function of the coordinates, so
+/// fault draws never depend on the plan's shape, the thread count or
+/// steal order.  The faults and pop labels are mixed in only when
+/// non-trivial, keeping every pre-fault (and pop-free) stream — and
+/// therefore every legacy ledger — byte-stable; population cells get
+/// per-cohort fault streams that compose with `faults:<spec>`.
+fn fault_stream_id(scenario: &str, discipline: &str, faults: &str, pop: &str) -> u64 {
+    let mut repr = format!("{scenario}|{discipline}");
+    if faults != "none" {
+        repr.push('|');
+        repr.push_str(faults);
+    }
+    if pop != "none" {
+        repr.push_str("|pop=");
+        repr.push_str(pop);
+    }
     crate::util::rng::fnv1a(repr.as_bytes())
 }
 
@@ -775,19 +798,39 @@ fn execute_grid_run(
         } else {
             ctx
         };
-        let env = PolicyEnv::for_cell(ctx, cfg.scenario, cfg.m, cell.seed);
+        // Population cells swap the base-config fleet for a per-round
+        // sampled cohort: the policy and the engine see K clients per
+        // round (never the N-client population), and fault channels act
+        // on cohort slots.  The sampling stream is coordinate-pure, so
+        // ledgers stay byte-identical across thread counts and shards.
+        let mut cohort = if cell.pop == "none" {
+            None
+        } else {
+            let spec = PopSpec::parse(&cell.pop)?;
+            Some(CohortProcess::new(spec, cell.scenario, cell.seed)?)
+        };
+        let m_eff = cohort.as_ref().map(|c| c.spec.k).unwrap_or(cfg.m);
+        let env = PolicyEnv::for_cell(ctx, cfg.scenario, m_eff, cell.seed);
         let mut policy = PolicySpec::parse(&cell.policy)?.build(&env)?;
         policy.set_telemetry(telem.is_on());
-        let mut process = cfg.congestion_process(cell.seed)?;
+        let mut base_process;
+        let process: &mut dyn NetworkProcess = match cohort.as_mut() {
+            Some(c) => c,
+            None => {
+                base_process = cfg.congestion_process(cell.seed)?;
+                &mut base_process
+            }
+        };
         let des = DesConfig {
             discipline: cell.discipline,
             faults,
             k_eps,
             max_rounds: DES_ROUND_CAP,
+            scheduler: SchedulerKind::Wheel,
         };
         let fault_rng = Rng::new(cell.seed).derive(
             "des-fault",
-            fault_stream_id(&rec.scenario, &rec.discipline, &cell.faults),
+            fault_stream_id(&rec.scenario, &rec.discipline, &cell.faults, &cell.pop),
         );
         let r = if let Some(preset) = cell.scenario.flow_preset() {
             // Flow cells: same fault stream, plus a dedicated cross-traffic
@@ -796,7 +839,7 @@ fn execute_grid_run(
             simulate_flow_des_with(
                 ctx,
                 policy.as_mut(),
-                &mut process,
+                process,
                 &preset,
                 &des,
                 fault_rng,
@@ -804,8 +847,18 @@ fn execute_grid_run(
                 &mut telem,
             )?
         } else {
-            simulate_des_with(ctx, policy.as_mut(), &mut process, &des, fault_rng, &mut telem)?
+            simulate_des_with(ctx, policy.as_mut(), process, &des, fault_rng, &mut telem)?
         };
+        if let Some(c) = cohort.as_ref() {
+            rec.sampled_k = c.spec.k as f64;
+            rec.participation = c.participation_label();
+            telem.count("pop.sampled", c.sampled_total());
+            for (i, &n) in c.participation.iter().enumerate() {
+                if n > 0 {
+                    telem.count(CLASS_COUNTERS[i], n);
+                }
+            }
+        }
         if let Some(s) = policy.solver_stats() {
             telem.count("solver.solves", s.solves);
             telem.count("solver.sweep_candidates", s.candidates);
@@ -850,43 +903,49 @@ pub fn campaign_table(
             for &tier in &plan.tiers {
                 for &discipline in &plan.disciplines {
                     for faults in &plan.faults {
-                        let mut label =
-                            format!("{} {}", scenario.label(), discipline.label());
-                        if plan.compressors.len() > 1 {
-                            label = format!("{label} {compressor}");
-                        }
-                        if plan.tiers.len() > 1 {
-                            label = format!("{label} {}", tier.label());
-                        }
-                        if plan.faults.len() > 1 {
-                            label = format!("{label} {faults}");
-                        }
-                        let mut means = Vec::with_capacity(plan.policies.len());
-                        for policy in &plan.policies {
-                            let mut acc = 0.0f64;
-                            for &data_seed in &plan.data_seeds {
-                                for &seed in &plan.seeds {
-                                    let cell = PlanCell {
-                                        scenario,
-                                        compressor: compressor.clone(),
-                                        tier,
-                                        discipline,
-                                        faults: faults.clone(),
-                                        policy: policy.clone(),
-                                        data_seed,
-                                        seed,
-                                    };
-                                    let key = cell.key();
-                                    acc += walls.get(&key).copied().ok_or_else(
-                                        || anyhow!("campaign is missing run {key}"),
-                                    )?;
-                                }
+                        for pop in &plan.pop {
+                            let mut label =
+                                format!("{} {}", scenario.label(), discipline.label());
+                            if plan.compressors.len() > 1 {
+                                label = format!("{label} {compressor}");
                             }
-                            means.push(
-                                acc / (plan.seeds.len() * plan.data_seeds.len()) as f64,
-                            );
+                            if plan.tiers.len() > 1 {
+                                label = format!("{label} {}", tier.label());
+                            }
+                            if plan.faults.len() > 1 {
+                                label = format!("{label} {faults}");
+                            }
+                            if plan.pop.len() > 1 {
+                                label = format!("{label} {pop}");
+                            }
+                            let mut means = Vec::with_capacity(plan.policies.len());
+                            for policy in &plan.policies {
+                                let mut acc = 0.0f64;
+                                for &data_seed in &plan.data_seeds {
+                                    for &seed in &plan.seeds {
+                                        let cell = PlanCell {
+                                            scenario,
+                                            compressor: compressor.clone(),
+                                            tier,
+                                            discipline,
+                                            faults: faults.clone(),
+                                            pop: pop.clone(),
+                                            policy: policy.clone(),
+                                            data_seed,
+                                            seed,
+                                        };
+                                        let key = cell.key();
+                                        acc += walls.get(&key).copied().ok_or_else(
+                                            || anyhow!("campaign is missing run {key}"),
+                                        )?;
+                                    }
+                                }
+                                means.push(
+                                    acc / (plan.seeds.len() * plan.data_seeds.len()) as f64,
+                                );
+                            }
+                            rows.push((label, means));
                         }
-                        rows.push((label, means));
                     }
                 }
             }
@@ -1158,18 +1217,75 @@ mod tests {
 
     #[test]
     fn fault_stream_id_is_coordinate_pure() {
-        let a = fault_stream_id("homog:2", "sync", "none");
-        assert_eq!(a, fault_stream_id("homog:2", "sync", "none"));
-        assert_ne!(a, fault_stream_id("homog:2", "semi-sync:7", "none"));
-        assert_ne!(a, fault_stream_id("perf:4", "sync", "none"));
+        let a = fault_stream_id("homog:2", "sync", "none", "none");
+        assert_eq!(a, fault_stream_id("homog:2", "sync", "none", "none"));
+        assert_ne!(a, fault_stream_id("homog:2", "semi-sync:7", "none", "none"));
+        assert_ne!(a, fault_stream_id("perf:4", "sync", "none", "none"));
         // The faults coordinate splits the stream, but the trivial label
         // maps to the exact pre-fault hash (fnv1a of the 2-part repr),
         // keeping fault-free ledgers byte-stable.
-        assert_ne!(a, fault_stream_id("homog:2", "sync", "loss:0.1"));
+        assert_ne!(a, fault_stream_id("homog:2", "sync", "loss:0.1", "none"));
         assert_eq!(
             a,
             crate::util::rng::fnv1a("homog:2|sync".as_bytes()),
             "trivial faults must not perturb the legacy stream"
         );
+        // Population cells split the stream per cohort, composing with
+        // the faults label; a trivial pop never perturbs it.
+        let p = fault_stream_id("homog:2", "sync", "none", "pop:1000:k100");
+        assert_ne!(a, p);
+        assert_ne!(p, fault_stream_id("homog:2", "sync", "none", "pop:1000:k10"));
+        assert_ne!(p, fault_stream_id("homog:2", "sync", "loss:0.1", "pop:1000:k100"));
+    }
+
+    #[test]
+    fn pop_cells_route_to_des_with_sampled_cohorts() {
+        let mut cfg = small_cfg();
+        cfg.policies = vec!["fixed:2".into()];
+        cfg.seeds = (0..2).collect();
+        let plan = ExperimentPlan::builder("popped")
+            .base(cfg.clone())
+            .tiers(vec![Tier::Analytic { k_eps: 50.0 }])
+            .pop(["none", "pop:5000:k25"])
+            .build()
+            .unwrap();
+        let plain = ExperimentPlan::builder("plain")
+            .base(cfg)
+            .tiers(vec![Tier::Analytic { k_eps: 50.0 }])
+            .build()
+            .unwrap();
+        let base = execute(&plain, &ExecOptions::default(), &mut []).unwrap();
+        let both = execute(&plan, &ExecOptions::default(), &mut []).unwrap();
+        assert_eq!(both.records.len(), 2 * base.records.len());
+        // Trivial cells ARE the pop-free plan, bit for bit, and carry
+        // the NaN/empty backfill in the pop columns.
+        for rec in &base.records {
+            let twin = both
+                .records
+                .iter()
+                .find(|r| r.key() == rec.key())
+                .expect("every plain cell has a pop:none twin");
+            assert_eq!(twin.wall.to_bits(), rec.wall.to_bits(), "{}", rec.key());
+            assert!(twin.sampled_k.is_nan() && twin.participation.is_empty());
+        }
+        // The pop cells simulated a 25-client cohort per round.
+        let popped: Vec<_> = both.records.iter().filter(|r| r.pop != "none").collect();
+        assert_eq!(popped.len(), base.records.len());
+        for r in &popped {
+            assert!(r.wall.is_finite() && r.rounds > 0, "{}", r.key());
+            assert_eq!(r.sampled_k, 25.0);
+            assert!(
+                r.participation.starts_with("0:"),
+                "uniform preset is single-class: {}",
+                r.participation
+            );
+        }
+        // Deterministic across thread counts, like every other route.
+        let again = execute(&plan, &ExecOptions::with_threads(3), &mut []).unwrap();
+        for (a, b) in both.records.iter().zip(again.records.iter()) {
+            assert_eq!(a.key(), b.key());
+            assert_eq!(a.wall.to_bits(), b.wall.to_bits(), "{}", a.key());
+            assert_eq!(a.participation, b.participation);
+        }
     }
 }

@@ -31,6 +31,7 @@ use crate::des::{Discipline, FaultModel};
 use crate::exp::runner::Tier;
 use crate::netsim::{DelayModel, ScenarioKind};
 use crate::policy::PolicySpec;
+use crate::pop::PopSpec;
 use crate::quant::parse_compressor;
 use anyhow::{anyhow, Context, Result};
 use std::collections::BTreeMap;
@@ -47,6 +48,9 @@ pub struct PlanCell {
     pub discipline: Discipline,
     /// Canonical `faults:<spec>` label (`"none"` = fault-free).
     pub faults: String,
+    /// Canonical `pop:<N>:k<K>[:classes<set>]` population label
+    /// (`"none"` = the base roster of m paper clients).
+    pub pop: String,
     pub policy: String,
     /// Dataset/partition seed (ml tier; analytic cells ignore it).
     pub data_seed: u64,
@@ -73,6 +77,10 @@ impl PlanCell {
             k.push('|');
             k.push_str(&self.faults);
         }
+        if self.pop != "none" {
+            k.push('|');
+            k.push_str(&self.pop);
+        }
         k
     }
 }
@@ -95,6 +103,10 @@ pub struct ExperimentPlan {
     /// (`"none"`, `"loss:0.1+deadline:25"`, …), canonicalized at build
     /// time.  Defaults to the base config's `des.faults`.
     pub faults: Vec<String>,
+    /// Population axis: canonical `pop:<N>:k<K>[:classes<set>]` labels
+    /// (`"none"` = the base m-client roster).  Population cells sample
+    /// K-client cohorts per round through the DES engine (`crate::pop`).
+    pub pop: Vec<String>,
     pub policies: Vec<String>,
     /// Dataset/partition seeds (an ml-tier axis; defaults to the base
     /// config's single `data_seed`).  Backed by the campaign-level keyed
@@ -117,6 +129,7 @@ const CAMPAIGN_KEYS: &[&str] = &[
     "tiers",
     "disciplines",
     "faults",
+    "pop",
     "policies",
     "data_seeds",
     "seeds",
@@ -127,6 +140,15 @@ const CAMPAIGN_KEYS: &[&str] = &[
 /// through untouched so [`ExperimentPlan::validate`] reports them.
 fn canonical_faults(s: &str) -> String {
     FaultModel::parse(s).map(|f| f.label()).unwrap_or_else(|_| s.to_string())
+}
+
+/// Canonical spelling of a `pop:<spec>` label; `"none"` and malformed
+/// specs pass through so [`ExperimentPlan::validate`] reports the latter.
+fn canonical_pop(s: &str) -> String {
+    if s == "none" {
+        return s.to_string();
+    }
+    PopSpec::parse(s).map(|p| p.label()).unwrap_or_else(|_| s.to_string())
 }
 
 impl ExperimentPlan {
@@ -141,6 +163,7 @@ impl ExperimentPlan {
             tiers: None,
             disciplines: None,
             faults: None,
+            pop: None,
             policies: None,
             data_seeds: None,
             seeds: None,
@@ -166,6 +189,7 @@ impl ExperimentPlan {
             tiers: vec![tier],
             disciplines: vec![Discipline::Sync],
             faults: vec!["none".into()],
+            pop: vec!["none".into()],
             policies: base.policies.clone(),
             data_seeds: vec![base.data_seed],
             seeds: base.seeds.clone(),
@@ -186,6 +210,7 @@ impl ExperimentPlan {
             tiers: vec![tier],
             disciplines: vec![cfg.discipline],
             faults: vec![canonical_faults(&cfg.faults)],
+            pop: vec!["none".into()],
             policies: cfg.policies.clone(),
             data_seeds: vec![cfg.data_seed],
             seeds: cfg.seeds.clone(),
@@ -202,19 +227,22 @@ impl ExperimentPlan {
                 for &tier in &self.tiers {
                     for &discipline in &self.disciplines {
                         for faults in &self.faults {
-                            for policy in &self.policies {
-                                for &data_seed in &self.data_seeds {
-                                    for &seed in &self.seeds {
-                                        out.push(PlanCell {
-                                            scenario,
-                                            compressor: compressor.clone(),
-                                            tier,
-                                            discipline,
-                                            faults: faults.clone(),
-                                            policy: policy.clone(),
-                                            data_seed,
-                                            seed,
-                                        });
+                            for pop in &self.pop {
+                                for policy in &self.policies {
+                                    for &data_seed in &self.data_seeds {
+                                        for &seed in &self.seeds {
+                                            out.push(PlanCell {
+                                                scenario,
+                                                compressor: compressor.clone(),
+                                                tier,
+                                                discipline,
+                                                faults: faults.clone(),
+                                                pop: pop.clone(),
+                                                policy: policy.clone(),
+                                                data_seed,
+                                                seed,
+                                            });
+                                        }
                                     }
                                 }
                             }
@@ -233,6 +261,7 @@ impl ExperimentPlan {
             * self.tiers.len()
             * self.disciplines.len()
             * self.faults.len()
+            * self.pop.len()
             * self.policies.len()
             * self.data_seeds.len()
             * self.seeds.len()
@@ -246,6 +275,7 @@ impl ExperimentPlan {
             * self.tiers.len()
             * self.disciplines.len()
             * self.faults.len()
+            * self.pop.len()
     }
 
     /// Whether the plan injects faults anywhere: base-config channels
@@ -256,6 +286,12 @@ impl ExperimentPlan {
         self.base.dropout > 0.0
             || !self.base.stragglers.is_empty()
             || self.faults.iter().any(|f| f != "none")
+    }
+
+    /// Whether any cell runs over a sampled population (population
+    /// cells always route through the DES engine).
+    pub fn has_pop(&self) -> bool {
+        self.pop.iter().any(|p| p != "none")
     }
 
     /// Per-cell configuration: the base with the cell's scenario,
@@ -282,6 +318,7 @@ impl ExperimentPlan {
             ("tiers", self.tiers.is_empty()),
             ("disciplines", self.disciplines.is_empty()),
             ("faults", self.faults.is_empty()),
+            ("pop", self.pop.is_empty()),
             ("policies", self.policies.is_empty()),
             ("data_seeds", self.data_seeds.is_empty()),
             ("seeds", self.seeds.is_empty()),
@@ -306,21 +343,56 @@ impl ExperimentPlan {
                 ));
             }
         }
+        let mut pop_ks: Vec<usize> = Vec::new();
+        for p in &self.pop {
+            if p == "none" {
+                pop_ks.push(self.base.m);
+                continue;
+            }
+            let parsed = PopSpec::parse(p)
+                .with_context(|| format!("campaign `{}`: pop axis entry `{p}`", self.name))?;
+            // Cell keys and RNG stream ids derive from the label, so
+            // every spelling must already be canonical.
+            let canon = parsed.label();
+            if *p != canon {
+                return Err(anyhow!(
+                    "campaign `{}`: pop axis entry `{p}` is not canonical (use `{canon}`)",
+                    self.name
+                ));
+            }
+            pop_ks.push(parsed.k);
+        }
         for c in &self.compressors {
             parse_compressor(c, &self.base.compressor_env())?;
         }
         for d in &self.disciplines {
             if let Discipline::SemiSync { k } = *d {
-                if k == 0 || k > self.base.m {
+                // Every discipline × pop combination must be runnable:
+                // a population cell's roster is its cohort size K, a
+                // `none` cell's is the base m.
+                if let Some(&roster) = pop_ks.iter().find(|&&roster| k == 0 || k > roster) {
                     return Err(anyhow!(
-                        "campaign `{}`: semi-sync K must be in 1..={}, got {k}",
+                        "campaign `{}`: semi-sync K must be in 1..={roster}, got {k}",
                         self.name,
-                        self.base.m
                     ));
                 }
             }
         }
+        if self.has_pop() && !self.base.stragglers.is_empty() {
+            return Err(anyhow!(
+                "campaign `{}`: per-client straggler ids don't apply to sampled \
+                 population cohorts; use a `classes` mixture instead",
+                self.name
+            ));
+        }
         let has_ml = self.tiers.iter().any(|t| matches!(t, Tier::Ml));
+        if self.has_pop() && has_ml {
+            return Err(anyhow!(
+                "campaign `{}`: population cells run through the event engine \
+                 (sim tier); drop the ml tier or the pop axis",
+                self.name
+            ));
+        }
         if has_ml
             && (self.disciplines.iter().any(|d| *d != Discipline::Sync) || self.has_faults())
         {
@@ -424,6 +496,10 @@ impl ExperimentPlan {
             repr.push_str(";faults=");
             repr.push_str(&join(&self.faults));
         }
+        if self.pop != ["none"] {
+            repr.push_str(";pop=");
+            repr.push_str(&join(&self.pop));
+        }
         format!("{:016x}", crate::util::rng::fnv1a(repr.as_bytes()))
     }
 
@@ -509,6 +585,9 @@ impl ExperimentPlan {
         if let Some(xs) = str_list("faults")? {
             b = b.faults(xs);
         }
+        if let Some(xs) = str_list("pop")? {
+            b = b.pop(xs);
+        }
         if let Some(xs) = str_list("policies")? {
             b = b.policies(xs);
         }
@@ -574,6 +653,9 @@ impl ExperimentPlan {
         if self.faults != ["none"] {
             sec.insert("faults".to_string(), strs(self.faults.clone()));
         }
+        if self.pop != ["none"] {
+            sec.insert("pop".to_string(), strs(self.pop.clone()));
+        }
         sec.insert("policies".to_string(), strs(self.policies.clone()));
         sec.insert("data_seeds".to_string(), ints(&self.data_seeds));
         sec.insert("seeds".to_string(), ints(&self.seeds));
@@ -613,6 +695,7 @@ pub struct PlanBuilder {
     tiers: Option<Vec<Tier>>,
     disciplines: Option<Vec<Discipline>>,
     faults: Option<Vec<String>>,
+    pop: Option<Vec<String>>,
     policies: Option<Vec<String>>,
     data_seeds: Option<Vec<u64>>,
     seeds: Option<Vec<u64>>,
@@ -649,6 +732,14 @@ impl PlanBuilder {
     /// canonicalized at [`PlanBuilder::build`] time.
     pub fn faults<S: Into<String>>(mut self, v: impl IntoIterator<Item = S>) -> Self {
         self.faults = Some(v.into_iter().map(Into::into).collect());
+        self
+    }
+
+    /// Population axis (`pop:<N>:k<K>[:classes<set>]` labels or
+    /// `"none"`); spellings are canonicalized at [`PlanBuilder::build`]
+    /// time.
+    pub fn pop<S: Into<String>>(mut self, v: impl IntoIterator<Item = S>) -> Self {
+        self.pop = Some(v.into_iter().map(Into::into).collect());
         self
     }
 
@@ -699,6 +790,12 @@ impl PlanBuilder {
                 .unwrap_or_else(|| vec![base.faults.clone()])
                 .iter()
                 .map(|s| canonical_faults(s))
+                .collect(),
+            pop: self
+                .pop
+                .unwrap_or_else(|| vec!["none".into()])
+                .iter()
+                .map(|s| canonical_pop(s))
                 .collect(),
             policies: self.policies.unwrap_or_else(|| base.policies.clone()),
             data_seeds: self.data_seeds.unwrap_or_else(|| vec![base.data_seed]),
@@ -982,6 +1079,7 @@ name = "defaults"
             tier: Tier::Analytic { k_eps: 100.0 },
             discipline: Discipline::SemiSync { k: 7 },
             faults: "none".into(),
+            pop: "none".into(),
             policy: "nacfl:1".into(),
             data_seed: 7,
             seed: 3,
@@ -993,6 +1091,80 @@ name = "defaults"
             cell.key(),
             "homog:2|topk:0.05|sim:100|semi-sync:7|nacfl:1|7|3|loss:0.1+deadline:25"
         );
+        // The population coordinate appends after the fault coordinate.
+        cell.pop = "pop:1000:k100".into();
+        assert_eq!(
+            cell.key(),
+            "homog:2|topk:0.05|sim:100|semi-sync:7|nacfl:1|7|3|loss:0.1+deadline:25|pop:1000:k100"
+        );
+        cell.faults = "none".into();
+        assert_eq!(
+            cell.key(),
+            "homog:2|topk:0.05|sim:100|semi-sync:7|nacfl:1|7|3|pop:1000:k100"
+        );
+    }
+
+    #[test]
+    fn pop_axis_multiplies_the_cross_product_and_guards_identity() {
+        let plain = ExperimentPlan::builder("p").build().unwrap();
+        assert_eq!(plain.pop, vec!["none".to_string()]);
+        let h = plain.plan_hash();
+
+        let popped = ExperimentPlan::builder("p")
+            .pop(vec!["none", "pop:100000:k64:classesuniform"])
+            .build()
+            .unwrap();
+        // Spellings canonicalize (the uniform class set drops out).
+        assert_eq!(
+            popped.pop,
+            vec!["none".to_string(), "pop:100000:k64".to_string()]
+        );
+        assert_eq!(popped.n_runs(), 2 * plain.n_runs());
+        assert_eq!(popped.n_groups(), 2 * plain.n_groups());
+        assert!(popped.has_pop());
+        assert_ne!(popped.plan_hash(), h, "pop axis is campaign identity");
+        // An explicit trivial axis is the same campaign as no axis.
+        let trivial = ExperimentPlan::builder("p").pop(vec!["none"]).build().unwrap();
+        assert_eq!(trivial.plan_hash(), h);
+        assert!(!trivial.has_pop());
+        assert!(!trivial.manifest().contains("pop"), "trivial axis stays out");
+
+        // The population manifest round-trips.
+        let back = ExperimentPlan::parse_manifest(&popped.manifest()).unwrap();
+        assert_eq!(back.pop, popped.pop);
+        assert_eq!(back.plan_hash(), popped.plan_hash());
+        assert_eq!(back.cells(), popped.cells());
+
+        // Non-canonical spellings are rejected on hand-built plans.
+        let mut bad = plain.clone();
+        bad.pop = vec!["pop:100:k10:classesuniform".into()];
+        assert!(bad.validate().is_err());
+        // Malformed specs are rejected; pop runs sim-tier only.
+        assert!(ExperimentPlan::builder("p").pop(vec!["pop:10:k20"]).build().is_err());
+        assert!(ExperimentPlan::builder("p")
+            .tiers(vec![Tier::Ml])
+            .pop(vec!["pop:1000:k10"])
+            .build()
+            .is_err());
+        // Per-client straggler ids don't compose with sampled cohorts.
+        let mut strag = ExperimentConfig::paper();
+        strag.stragglers = vec![1];
+        assert!(ExperimentPlan::builder("p")
+            .base(strag)
+            .pop(vec!["pop:1000:k10"])
+            .build()
+            .is_err());
+        // Semi-sync K is checked against the cohort size, not base m.
+        assert!(ExperimentPlan::builder("p")
+            .disciplines(vec![Discipline::SemiSync { k: 700 }])
+            .pop(vec!["pop:1000000:k1000"])
+            .build()
+            .is_ok());
+        assert!(ExperimentPlan::builder("p")
+            .disciplines(vec![Discipline::SemiSync { k: 700 }])
+            .pop(vec!["none", "pop:1000000:k1000"])
+            .build()
+            .is_err(), "the `none` cell still bounds K by base m");
     }
 
     #[test]

@@ -98,6 +98,18 @@ pub struct RunRecord {
     /// each aggregation (1.0 = every round aggregated everyone).  Same
     /// serialization and NaN-backfill rules as `retrans_s`.
     pub quorum_frac: f64,
+    /// Canonical `pop:<spec>` label for the cell's population
+    /// coordinate (`"none"` = base-config fleet; pre-pop ledger lines
+    /// backfill `"none"`).
+    pub pop: String,
+    /// Population cells (DESIGN.md §15): the sampled cohort size K per
+    /// round.  Serialized only on `pop` cells; NaN on everything else
+    /// and as the backfill on pre-pop ledger lines.
+    pub sampled_k: f64,
+    /// Population cells: per-class participation histogram over the
+    /// whole run (`"0:812,1:188"`, zero classes omitted).  Empty on
+    /// non-pop cells and pre-pop ledger lines.
+    pub participation: String,
     /// ML tier only: the full trace (not serialized to the ledger).
     pub trace: Option<RunTrace>,
 }
@@ -121,6 +133,10 @@ impl RunRecord {
         if self.faults != "none" {
             k.push('|');
             k.push_str(&self.faults);
+        }
+        if self.pop != "none" {
+            k.push('|');
+            k.push_str(&self.pop);
         }
         k
     }
@@ -161,6 +177,14 @@ impl RunRecord {
                 json::string(&self.faults),
                 json::num(self.retrans_s),
                 json::num(self.quorum_frac),
+            ));
+        }
+        if self.pop != "none" {
+            line.push_str(&format!(
+                ",\"pop\":{},\"sampled_k\":{},\"participation\":{}",
+                json::string(&self.pop),
+                json::num(self.sampled_k),
+                json::string(&self.participation),
             ));
         }
         line.push('}');
@@ -250,6 +274,17 @@ impl RunRecord {
             congestion_s: n_opt("congestion_s"),
             retrans_s: n_opt("retrans_s"),
             quorum_frac: n_opt("quorum_frac"),
+            // Pop-free and pre-pop lines carry no population fields:
+            // backfill the trivial coordinate / NaN / empty, like faults.
+            pop: match obj.get("pop") {
+                Some(JsonVal::Str(v)) => v.clone(),
+                _ => "none".into(),
+            },
+            sampled_k: n_opt("sampled_k"),
+            participation: match obj.get("participation") {
+                Some(JsonVal::Str(v)) => v.clone(),
+                _ => String::new(),
+            },
             trace: None,
         })
     }
@@ -536,7 +571,7 @@ impl CsvSink {
             out,
             "campaign,scenario,compressor,tier,discipline,faults,policy,data_seed,seed,wall,\
              rounds,converged,aggregations,dropped,late,upload_s,compute_s,wait_s,congestion_s,\
-             retrans_s,quorum_frac"
+             retrans_s,quorum_frac,pop,sampled_k,participation"
         )?;
         Ok(CsvSink { out })
     }
@@ -546,7 +581,7 @@ impl ResultSink for CsvSink {
     fn on_record(&mut self, rec: &RunRecord) -> Result<()> {
         writeln!(
             self.out,
-            "{},{},{},{},{},{},{},{},{},{:?},{},{},{},{},{},{:?},{:?},{:?},{:?},{:?},{:?}",
+            "{},{},{},{},{},{},{},{},{},{:?},{},{},{},{},{},{:?},{:?},{:?},{:?},{:?},{:?},{},{:?},{}",
             csv_escape(&rec.campaign),
             csv_escape(&rec.scenario),
             csv_escape(&rec.compressor),
@@ -568,6 +603,9 @@ impl ResultSink for CsvSink {
             rec.congestion_s,
             rec.retrans_s,
             rec.quorum_frac,
+            csv_escape(&rec.pop),
+            rec.sampled_k,
+            csv_escape(&rec.participation),
         )?;
         Ok(())
     }
@@ -698,6 +736,10 @@ fn group_key(r: &RunRecord) -> String {
         k.push('|');
         k.push_str(&r.faults);
     }
+    if r.pop != "none" {
+        k.push('|');
+        k.push_str(&r.pop);
+    }
     k
 }
 
@@ -730,6 +772,9 @@ pub fn build_tables(title: Option<&str>, records: &[RunRecord]) -> Result<Vec<Ta
         };
         if r0.faults != "none" && !(single && title.is_some()) {
             table_title = format!("{table_title} {}", r0.faults);
+        }
+        if r0.pop != "none" && !(single && title.is_some()) {
+            table_title = format!("{table_title} {}", r0.pop);
         }
         if cells.iter().any(|c| c.policy.starts_with("nacfl")) {
             out.push(table_for(&table_title, &cells)?);
@@ -790,6 +835,9 @@ mod tests {
             congestion_s: 0.0,
             retrans_s: f64::NAN,
             quorum_frac: f64::NAN,
+            pop: "none".into(),
+            sampled_k: f64::NAN,
+            participation: String::new(),
             trace: None,
         }
     }
@@ -863,6 +911,47 @@ mod tests {
         assert_eq!(back.key(), faulty.key());
         // Faulty groups table separately from their fault-free twins.
         assert_ne!(group_key(&faulty), group_key(&clean));
+    }
+
+    #[test]
+    fn pop_fields_are_gated_on_the_pop_coordinate() {
+        // Pop-free records serialize the exact pre-pop line — the
+        // byte-identity guarantee for pop:none campaigns.
+        let clean = rec("fixed:2", 0, 2.0);
+        let line = clean.to_json();
+        assert!(
+            !line.contains("\"pop\"") && !line.contains("sampled_k"),
+            "trivial coordinate must not appear: {line}"
+        );
+        let back = RunRecord::from_json(&line).unwrap();
+        assert_eq!(back.pop, "none", "absent field backfills the trivial label");
+        assert!(back.sampled_k.is_nan() && back.participation.is_empty());
+        assert_eq!(back.key(), clean.key(), "no pop suffix on the resume key");
+
+        // Pop records carry all three fields and round-trip bitwise,
+        // composing with a faults coordinate in the resume key.
+        let mut popped = rec("nacfl:1", 3, 5.0);
+        popped.faults = "loss:0.1".into();
+        popped.retrans_s = 0.25;
+        popped.quorum_frac = 1.0;
+        popped.pop = "pop:1000000:k1000:classeshilo".into();
+        popped.sampled_k = 1000.0;
+        popped.participation = "0:812,1:188".into();
+        let line = popped.to_json();
+        assert!(line.contains("\"pop\":\"pop:1000000:k1000:classeshilo\""), "{line}");
+        assert!(line.contains("\"participation\":\"0:812,1:188\""), "{line}");
+        let back = RunRecord::from_json(&line).unwrap();
+        assert_eq!(back.pop, popped.pop);
+        assert_eq!(back.sampled_k.to_bits(), popped.sampled_k.to_bits());
+        assert_eq!(back.participation, popped.participation);
+        assert!(
+            back.key().ends_with("|loss:0.1|pop:1000000:k1000:classeshilo"),
+            "{}",
+            back.key()
+        );
+        assert_eq!(back.key(), popped.key());
+        // Pop groups table separately from their pop-free twins.
+        assert_ne!(group_key(&popped), group_key(&clean));
     }
 
     #[test]

@@ -36,6 +36,7 @@ pub mod model;
 pub mod netsim;
 pub mod obs;
 pub mod policy;
+pub mod pop;
 pub mod quant;
 pub mod runtime;
 pub mod sim;

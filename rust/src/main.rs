@@ -37,7 +37,11 @@
 //! tiers `ml | sim:100`, disciplines `sync | semi-sync:7 | async:0.5`,
 //! fault specs `none | drop:<p> | loss:<p>[:retry<K>] |
 //! deadline:<s>[:quorum<frac>] | crash:<mtbf>x<mttr>` (channels
-//! combinable with `+`, e.g. `loss:0.2:retry5+deadline:4e6:quorum0.5`).
+//! combinable with `+`, e.g. `loss:0.2:retry5+deadline:4e6:quorum0.5`),
+//! population specs `none | pop:<N>:k<K>[:classes<preset-or-path>]`
+//! (presets `uniform | hilo | mobile`, or a `weight mu sigma` class
+//! file), e.g. `pop:1000000:k1000:classeshilo` — an N-client population
+//! with K participants sampled per round (DESIGN.md §15).
 //! Flow presets (`netsim::flow`) put the uploads on a shared
 //! bandwidth-sharing bottleneck topology: `flow:solo`,
 //! `flow:tower:<groups>x<per>`, `flow:ingress`, `flow:shared:<frac>`,
@@ -65,6 +69,8 @@
 //!   nacfl des --scenario homog:2 --faults loss:0.2+deadline:4000000:quorum0.5
 //!   nacfl run examples/campaign_faults.toml --out results  # fault-axis campaign
 //!   nacfl run plan.toml --faults none,loss:0.3   # override the fault axis
+//!   nacfl run examples/campaign_pop.toml --out results  # million-client population campaign
+//!   nacfl run plan.toml --pop none,pop:1000000:k1000   # override the population axis
 //!   nacfl exp theorem1 --tier sim --seeds 10 --out results
 //!   nacfl train --policy nacfl --scenario homog:2 --engine xla
 //!   nacfl exp table3 --tier sim --seeds 20 --out results
@@ -80,6 +86,7 @@ use nacfl::exp::{
 };
 use nacfl::netsim::ScenarioKind;
 use nacfl::policy::{NacFl, OraclePolicy};
+use nacfl::pop::PopSpec;
 use nacfl::util::cli::{bool_flag, flag, Args};
 use nacfl::util::rng::Rng;
 
@@ -120,6 +127,12 @@ fn flags() -> Vec<nacfl::util::cli::FlagSpec> {
             "faults",
             "fault spec: none | drop:<p> | loss:<p>[:retry<K>] | deadline:<s>[:quorum<frac>] \
              | crash:<mtbf>x<mttr>, combinable with `+` (des/run; comma-separated axis for run)",
+            None,
+        ),
+        flag(
+            "pop",
+            "population spec: none | pop:<N>:k<K>[:classes<preset-or-path>] \
+             (run; comma-separated axis)",
             None,
         ),
         flag("ledger", "campaign ledger path (run only; default <out>/<name>.jsonl)", None),
@@ -239,6 +252,21 @@ fn cmd_run(args: &Args) -> Result<()> {
         plan.faults = f
             .split(',')
             .map(|s| FaultModel::parse(s.trim()).map(|m| m.label()))
+            .collect::<Result<Vec<_>>>()?;
+    }
+    if let Some(p) = args.get("pop") {
+        // Comma-separated population axis, canonicalized like faults
+        // ("none" passes through as the trivial coordinate).
+        plan.pop = p
+            .split(',')
+            .map(|s| {
+                let s = s.trim();
+                if s == "none" {
+                    Ok(s.to_string())
+                } else {
+                    PopSpec::parse(s).map(|spec| spec.label())
+                }
+            })
             .collect::<Result<Vec<_>>>()?;
     }
     let threads = match args.get("threads") {

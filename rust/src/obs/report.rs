@@ -161,6 +161,46 @@ pub fn build_report(
         out.push('\n');
     }
 
+    // Population rollup (DESIGN.md §15): runs carrying a non-trivial
+    // `pop` coordinate report their sampled-K-per-round mean and the
+    // aggregate per-class participation histogram.  NaN/empty fields
+    // (pre-pop or backfilled lines) are skipped like the fault rules.
+    let popped: Vec<&RunRecord> = runs.iter().copied().filter(|r| r.pop != "none").collect();
+    if !popped.is_empty() {
+        let ks: Vec<f64> =
+            popped.iter().map(|r| r.sampled_k).filter(|v| v.is_finite()).collect();
+        out.push_str(&format!("pop: {} population run(s)", popped.len()));
+        if !ks.is_empty() {
+            out.push_str(&format!(
+                ", mean sampled K {:.0} over {} run(s)",
+                ks.iter().sum::<f64>() / ks.len() as f64,
+                ks.len()
+            ));
+        }
+        out.push('\n');
+        let mut classes: BTreeMap<usize, u64> = BTreeMap::new();
+        let mut sampled_total = 0u64;
+        for r in &popped {
+            for part in r.participation.split(',').filter(|p| !p.is_empty()) {
+                if let Some((c, n)) = part.split_once(':') {
+                    if let (Ok(c), Ok(n)) = (c.parse::<usize>(), n.parse::<u64>()) {
+                        *classes.entry(c).or_insert(0) += n;
+                        sampled_total += n;
+                    }
+                }
+            }
+        }
+        if sampled_total > 0 {
+            out.push_str("participation by class:\n");
+            for (c, n) in &classes {
+                out.push_str(&format!(
+                    "  class{c}: {n} ({:.1}%)\n",
+                    *n as f64 / sampled_total as f64 * 100.0
+                ));
+            }
+        }
+    }
+
     // Straggler histogram: each run's wait share of its wall.  A share
     // near 0 means upload-bound; near 1 means one slow client dominates.
     let mut straggler = Histogram::default();
@@ -280,6 +320,9 @@ mod tests {
             congestion_s: 0.0,
             retrans_s: f64::NAN,
             quorum_frac: f64::NAN,
+            pop: "none".into(),
+            sampled_k: f64::NAN,
+            participation: String::new(),
             trace: None,
         }
     }
@@ -348,6 +391,36 @@ mod tests {
             report.text
         );
         assert!(report.text.contains("mean quorum 0.500"), "{}", report.text);
+    }
+
+    #[test]
+    fn pop_section_appears_only_for_pop_runs_and_skips_backfill() {
+        // A pop-free ledger has no population section at all.
+        let mut clean = DistLedger::default();
+        clean.runs.push(rec("fixed:2", 0, 10.0));
+        let report = build_report(&[("l".into(), clean)], None);
+        assert!(!report.text.contains("pop:"), "{}", report.text);
+
+        // Two pop runs, one resumed from a line written before the pop
+        // fields existed (NaN/empty backfill): counted as population
+        // runs, excluded from the K mean and the class histogram.
+        let mut led = DistLedger::default();
+        let mut fresh = rec("fixed:2", 1, 10.0);
+        fresh.pop = "pop:1000000:k1000:classeshilo".into();
+        fresh.sampled_k = 1000.0;
+        fresh.participation = "0:750,1:250".into();
+        let mut stale = rec("fixed:2", 2, 10.0);
+        stale.pop = "pop:1000000:k1000:classeshilo".into(); // NaN/empty backfill
+        led.runs.push(fresh);
+        led.runs.push(stale);
+        let report = build_report(&[("l".into(), led)], None);
+        assert!(
+            report.text.contains("pop: 2 population run(s), mean sampled K 1000 over 1 run(s)"),
+            "{}",
+            report.text
+        );
+        assert!(report.text.contains("class0: 750 (75.0%)"), "{}", report.text);
+        assert!(report.text.contains("class1: 250 (25.0%)"), "{}", report.text);
     }
 
     #[test]

@@ -37,6 +37,10 @@ fn group_key(r: &RunRecord) -> String {
         k.push('|');
         k.push_str(&r.faults);
     }
+    if r.pop != "none" {
+        k.push('|');
+        k.push_str(&r.pop);
+    }
     k
 }
 
@@ -107,6 +111,10 @@ pub fn render_frame(
                 r.push('|');
                 r.push_str(&cell.faults);
             }
+            if cell.pop != "none" {
+                r.push('|');
+                r.push_str(&cell.pop);
+            }
             *expected.entry(r).or_insert(0) += 1;
         }
     }
@@ -152,6 +160,35 @@ pub fn render_frame(
         out.push_str(&format!(
             "\nfaults: {} run(s), retrans {retrans:.3e} s, mean quorum {q}\n",
             faulty.len()
+        ));
+    }
+
+    // Population rollup over completed pop runs: sampled-K per round
+    // and the aggregate per-class participation histogram.
+    let popped: Vec<&&RunRecord> = by_key.values().filter(|r| r.pop != "none").collect();
+    if !popped.is_empty() {
+        let ks: Vec<f64> = popped.iter().map(|r| r.sampled_k).filter(|v| v.is_finite()).collect();
+        let k = if ks.is_empty() {
+            "-".into()
+        } else {
+            format!("{:.0}", ks.iter().sum::<f64>() / ks.len() as f64)
+        };
+        let mut classes: BTreeMap<usize, u64> = BTreeMap::new();
+        for r in &popped {
+            for part in r.participation.split(',').filter(|p| !p.is_empty()) {
+                if let Some((c, n)) = part.split_once(':') {
+                    if let (Ok(c), Ok(n)) = (c.parse::<usize>(), n.parse::<u64>()) {
+                        *classes.entry(c).or_insert(0) += n;
+                    }
+                }
+            }
+        }
+        let hist: Vec<String> =
+            classes.iter().map(|(c, n)| format!("class{c} {n}")).collect();
+        out.push_str(&format!(
+            "\npop: {} run(s), mean sampled K {k}, participation {}\n",
+            popped.len(),
+            if hist.is_empty() { "-".into() } else { hist.join(", ") }
         ));
     }
 
@@ -340,6 +377,9 @@ mod tests {
             congestion_s: 0.0,
             retrans_s: f64::NAN,
             quorum_frac: f64::NAN,
+            pop: "none".into(),
+            sampled_k: f64::NAN,
+            participation: String::new(),
             trace: None,
         }
     }
@@ -424,6 +464,37 @@ mod tests {
         clean.runs.push(rec("fixed:2", 0, 100.0));
         let (frame, _) = render_frame(&clean, None, 0);
         assert!(!frame.contains("faults:"), "{frame}");
+    }
+
+    #[test]
+    fn frame_splits_pop_groups_and_rolls_up_participation() {
+        let mut led = DistLedger::default();
+        led.runs.push(rec("fixed:2", 0, 100.0));
+        let mut p = rec("fixed:2", 0, 150.0);
+        p.pop = "pop:1000000:k1000:classeshilo".into();
+        p.sampled_k = 1000.0;
+        p.participation = "0:812,1:188".into();
+        led.runs.push(p);
+        let mut p2 = rec("fixed:2", 1, 160.0);
+        p2.pop = "pop:1000000:k1000:classeshilo".into();
+        p2.sampled_k = 1000.0;
+        p2.participation = "0:790,1:210".into();
+        led.runs.push(p2);
+        let (frame, _) = render_frame(&led, None, 0);
+        // Distinct pop coordinates split the group bars, and the rollup
+        // sums per-class participation across runs.
+        assert!(
+            frame.contains("homog:2|quant:inf|sim:60|sync|pop:1000000:k1000:classeshilo"),
+            "{frame}"
+        );
+        assert!(frame.contains("pop: 2 run(s), mean sampled K 1000"), "{frame}");
+        assert!(frame.contains("class0 1602"), "812+790: {frame}");
+        assert!(frame.contains("class1 398"), "188+210: {frame}");
+        // Pop-free ledgers render no pop line at all.
+        let mut clean = DistLedger::default();
+        clean.runs.push(rec("fixed:2", 0, 100.0));
+        let (frame, _) = render_frame(&clean, None, 0);
+        assert!(!frame.contains("pop:"), "{frame}");
     }
 
     #[test]

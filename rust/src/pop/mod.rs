@@ -1,0 +1,535 @@
+//! Population model: million-client rosters with per-round cohort
+//! sampling (the standard cross-device FL shape).
+//!
+//! A `pop:<N>:k<K>[:classes<preset-or-path>]` plan axis describes a
+//! client population of size N partitioned into weighted **classes**
+//! with heterogeneous log-normal BTD marginals (compute+link speed
+//! tiers).  Every round samples K distinct participants from the
+//! population on a coordinate-pure stream — `Rng::new(seed).
+//! derive("pop-sample", fnv1a(label))`, mirroring the fault-stream
+//! contract — so ledgers are byte-identical across threads and shards.
+//!
+//! Scale contract: nothing here is ever O(N) per round.  Class
+//! membership of client `i` is a *pure function* of `i` (index ranges at
+//! the cumulative mixture weights, [`PopSpec::class_of`]), cohort
+//! sampling is Floyd's O(K) algorithm ([`sample_k_of_n`]), and the
+//! struct-of-arrays cohort state ([`CohortProcess`]) is materialized
+//! lazily for the K sampled slots only.  The DES engines see a plain
+//! [`NetworkProcess`] of dimension K, so every discipline, fault
+//! channel, policy and compressor composes unchanged; under `flow:`
+//! scenarios the sampled cohort is admitted behind the preset's shared
+//! links (the flow engine sizes its network from `dim()`).
+//!
+//! Scenario composition at population scale (DESIGN.md §15): `homog` /
+//! `heterog` / `flow` cells draw purely idiosyncratic per-slot BTDs
+//! from the class marginals; `perf:si2` / `part:si2` multiply every
+//! slot by a *common* scalar AR(1) log-factor (Table-III `a`) — the
+//! rank-1 approximation of the paper's correlated scenarios, the only
+//! form with O(1) cross-round state at N = 10^6.
+
+use crate::netsim::{NetworkProcess, ScenarioKind};
+use crate::util::rng::{fnv1a, Rng};
+use anyhow::{anyhow, Context, Result};
+
+/// Hard cap on class count: per-class telemetry counters need static
+/// names (`pop.class0` … `pop.class7`).
+pub const MAX_CLASSES: usize = 8;
+
+/// Static telemetry counter names, one per class slot.
+pub const CLASS_COUNTERS: [&str; MAX_CLASSES] = [
+    "pop.class0",
+    "pop.class1",
+    "pop.class2",
+    "pop.class3",
+    "pop.class4",
+    "pop.class5",
+    "pop.class6",
+    "pop.class7",
+];
+
+/// One population class: mixture weight + log-normal BTD marginal
+/// (`c = exp(N(mu, sigma^2))`, the paper's §IV-A2 form).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ClientClass {
+    pub weight: f64,
+    pub mu: f64,
+    pub sigma: f64,
+}
+
+/// Parsed `pop:<N>:k<K>[:classes<preset-or-path>]` population spec.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PopSpec {
+    /// Population size N.
+    pub n: u64,
+    /// Sampled cohort size K per round.
+    pub k: usize,
+    /// Class-set name: `uniform` (default), `hilo`, `mobile`, or a file
+    /// path (recognized by a `/` or a `.toml` suffix).
+    pub classes: String,
+    /// Resolved classes (weights normalized to sum 1).
+    pub class_set: Vec<ClientClass>,
+    /// Cumulative class boundaries scaled to N: client `i` belongs to
+    /// the first class `c` with `i < bounds[c]`; `bounds.last() == n`.
+    bounds: Vec<u64>,
+}
+
+impl PopSpec {
+    /// Parse a `pop:<N>:k<K>[:classes<preset-or-path>]` spec.  Class
+    /// files are plain text, one `weight mu sigma` triple per line
+    /// (`#` comments); presets are `uniform | hilo | mobile`.
+    pub fn parse(s: &str) -> Result<Self> {
+        const USAGE: &str = "pop:<N>:k<K>[:classes<uniform|hilo|mobile|path>]";
+        let rest = s
+            .strip_prefix("pop:")
+            .ok_or_else(|| anyhow!("population spec must start with `pop:` ({USAGE})"))?;
+        // The classes argument may itself contain `:` (paths), so split
+        // at most twice.
+        let mut parts = rest.splitn(3, ':');
+        let n: u64 = parts
+            .next()
+            .unwrap_or("")
+            .parse()
+            .map_err(|e| anyhow!("population size N: {e} ({USAGE})"))?;
+        if n == 0 {
+            return Err(anyhow!("population size N must be >= 1"));
+        }
+        let karg = parts.next().ok_or_else(|| anyhow!("missing k<K> argument ({USAGE})"))?;
+        let k: usize = karg
+            .strip_prefix('k')
+            .ok_or_else(|| anyhow!("second argument must be k<K>, got `{karg}` ({USAGE})"))?
+            .parse()
+            .map_err(|e| anyhow!("cohort size K: {e} ({USAGE})"))?;
+        if k == 0 || k as u64 > n {
+            return Err(anyhow!("cohort size K must be in 1..=N, got {k} of {n}"));
+        }
+        let classes = match parts.next() {
+            None => "uniform".to_string(),
+            Some(c) => c
+                .strip_prefix("classes")
+                .ok_or_else(|| anyhow!("third argument must be classes<...>, got `{c}` ({USAGE})"))?
+                .to_string(),
+        };
+        if classes.is_empty() {
+            return Err(anyhow!("empty class-set name ({USAGE})"));
+        }
+        let class_set = resolve_classes(&classes)?;
+        let bounds = class_bounds(&class_set, n);
+        Ok(PopSpec { n, k, classes, class_set, bounds })
+    }
+
+    /// Canonical label (round-trips through [`PopSpec::parse`]); the
+    /// default `uniform` class set is omitted, so pre-pop ledger keys
+    /// never grow spurious suffixes.
+    pub fn label(&self) -> String {
+        if self.classes == "uniform" {
+            format!("pop:{}:k{}", self.n, self.k)
+        } else {
+            format!("pop:{}:k{}:classes{}", self.n, self.k, self.classes)
+        }
+    }
+
+    /// Class index of client `i` — a pure function of `i`, O(log C),
+    /// never O(N) state.
+    pub fn class_of(&self, i: u64) -> usize {
+        debug_assert!(i < self.n);
+        self.bounds.partition_point(|&b| b <= i)
+    }
+
+    /// The coordinate-pure sampling stream for one experiment cell:
+    /// seed + spec label, independent of thread count and shard split
+    /// (the `fault_stream_id` contract).
+    pub fn sample_stream(&self, seed: u64) -> Rng {
+        Rng::new(seed).derive("pop-sample", fnv1a(self.label().as_bytes()))
+    }
+}
+
+impl std::fmt::Display for PopSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.label())
+    }
+}
+
+fn resolve_classes(name: &str) -> Result<Vec<ClientClass>> {
+    let raw = match name {
+        "uniform" => vec![ClientClass { weight: 1.0, mu: 1.0, sigma: 1.0 }],
+        // Fast majority + slow tail (the hi/lo device split).
+        "hilo" => vec![
+            ClientClass { weight: 0.8, mu: 0.8, sigma: 0.8 },
+            ClientClass { weight: 0.2, mu: 2.0, sigma: 1.2 },
+        ],
+        // wifi / cellular / edge device mix.
+        "mobile" => vec![
+            ClientClass { weight: 0.5, mu: 0.7, sigma: 0.6 },
+            ClientClass { weight: 0.35, mu: 1.2, sigma: 1.0 },
+            ClientClass { weight: 0.15, mu: 2.5, sigma: 1.4 },
+        ],
+        path if path.contains('/') || path.ends_with(".toml") => parse_class_file(path)?,
+        other => {
+            return Err(anyhow!(
+                "unknown class set `{other}` (uniform | hilo | mobile | a file path)"
+            ))
+        }
+    };
+    if raw.is_empty() {
+        return Err(anyhow!("class set must define at least one class"));
+    }
+    if raw.len() > MAX_CLASSES {
+        return Err(anyhow!("at most {MAX_CLASSES} classes supported, got {}", raw.len()));
+    }
+    let total: f64 = raw.iter().map(|c| c.weight).sum();
+    if !total.is_finite() || total <= 0.0 {
+        return Err(anyhow!("class weights must be positive and finite"));
+    }
+    for c in &raw {
+        if !(c.weight > 0.0 && c.weight.is_finite()) {
+            return Err(anyhow!("class weight must be positive and finite, got {}", c.weight));
+        }
+        if !c.mu.is_finite() || !c.sigma.is_finite() || c.sigma < 0.0 {
+            return Err(anyhow!("class (mu, sigma) must be finite with sigma >= 0"));
+        }
+    }
+    Ok(raw.iter().map(|c| ClientClass { weight: c.weight / total, ..*c }).collect())
+}
+
+/// Text class file: one `weight mu sigma` triple per whitespace-split
+/// line, `#` starts a comment.
+fn parse_class_file(path: &str) -> Result<Vec<ClientClass>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading population class file {path}"))?;
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let nums: Vec<f64> = line
+            .split_whitespace()
+            .map(|t| t.parse().map_err(|e| anyhow!("{path}:{}: {e}", lineno + 1)))
+            .collect::<Result<_>>()?;
+        if nums.len() != 3 {
+            return Err(anyhow!(
+                "{path}:{}: expected `weight mu sigma`, got {} field(s)",
+                lineno + 1,
+                nums.len()
+            ));
+        }
+        out.push(ClientClass { weight: nums[0], mu: nums[1], sigma: nums[2] });
+    }
+    Ok(out)
+}
+
+/// Cumulative class boundaries scaled to N (monotone, last == N).
+fn class_bounds(classes: &[ClientClass], n: u64) -> Vec<u64> {
+    let mut bounds = Vec::with_capacity(classes.len());
+    let mut cum = 0.0;
+    for (c, cl) in classes.iter().enumerate() {
+        cum += cl.weight;
+        let b = if c + 1 == classes.len() {
+            n
+        } else {
+            ((cum * n as f64).round() as u64).min(n)
+        };
+        let prev = bounds.last().copied().unwrap_or(0);
+        bounds.push(b.max(prev));
+    }
+    bounds
+}
+
+/// Sample K distinct indices from `0..n` into `out` (ascending) with
+/// Floyd's algorithm: exactly K RNG draws, O(K) time and space — never
+/// O(N).  The ascending sort makes the cohort order a pure function of
+/// the sampled *set* (hash-iteration order never leaks into ledgers).
+pub fn sample_k_of_n(rng: &mut Rng, n: u64, k: usize, out: &mut Vec<u64>) {
+    debug_assert!(k as u64 <= n && k > 0);
+    out.clear();
+    let mut seen = std::collections::HashSet::with_capacity(k * 2);
+    for j in (n - k as u64)..n {
+        let t = rng.below((j + 1) as usize) as u64;
+        if seen.insert(t) {
+            out.push(t);
+        } else {
+            seen.insert(j);
+            out.push(j);
+        }
+    }
+    out.sort_unstable();
+}
+
+/// Common cross-client AR(1) log-factor for the correlated scenarios
+/// (rank-1 approximation; O(1) state).
+#[derive(Clone, Debug)]
+struct CommonFactor {
+    a: f64,
+    scale: f64,
+    z: f64,
+    rng: Rng,
+}
+
+/// The sampled-cohort network process: a [`NetworkProcess`] of
+/// dimension K whose every `next_state` (a) resamples the cohort from
+/// the population, (b) materializes struct-of-arrays state (`indices`,
+/// `slot_class`) for the K slots only, and (c) returns per-slot BTDs
+/// from the class marginals.  The DES engines treat slot `j` as a
+/// client; fault channels (dropout/loss/crash/stragglers) therefore act
+/// on cohort *slots* — the documented population-scale approximation
+/// (a per-client crash ledger would be O(N) state).
+pub struct CohortProcess {
+    pub spec: PopSpec,
+    sample_rng: Rng,
+    common: Option<CommonFactor>,
+    /// Sampled population indices, ascending (slot -> client id).
+    pub indices: Vec<u64>,
+    /// Class of each cohort slot.
+    pub slot_class: Vec<u8>,
+    /// Rounds sampled so far.
+    pub rounds: u64,
+    /// Per-class participation counts across all rounds.
+    pub participation: [u64; MAX_CLASSES],
+}
+
+impl CohortProcess {
+    /// Build the cell's cohort process: sampling on the coordinate-pure
+    /// `pop-sample` stream, and (for `perf`/`part` scenarios) the
+    /// common congestion factor on an independent `pop-net` stream.
+    pub fn new(spec: PopSpec, scenario: ScenarioKind, seed: u64) -> Result<Self> {
+        let common = match scenario {
+            ScenarioKind::PerfectlyCorrelated { sigma_inf_sq }
+            | ScenarioKind::PartiallyCorrelated { sigma_inf_sq } => {
+                let a = crate::netsim::Ar1Process::a_for_asymptotic_variance(sigma_inf_sq);
+                // part: only half the per-client variance is common
+                // (Sigma_ij = 1/2), so the shared factor is damped.
+                let scale = if matches!(scenario, ScenarioKind::PartiallyCorrelated { .. }) {
+                    0.5f64.sqrt()
+                } else {
+                    1.0
+                };
+                Some(CommonFactor { a, scale, z: 0.0, rng: Rng::new(seed).derive("pop-net", 0) })
+            }
+            // homog/heterog/flow: purely idiosyncratic class marginals
+            // (flow cells get their shared-link coupling from the flow
+            // engine itself, not from the BTD process).
+            _ => None,
+        };
+        let sample_rng = spec.sample_stream(seed);
+        let k = spec.k;
+        Ok(CohortProcess {
+            spec,
+            sample_rng,
+            common,
+            indices: Vec::with_capacity(k),
+            slot_class: Vec::with_capacity(k),
+            rounds: 0,
+            participation: [0; MAX_CLASSES],
+        })
+    }
+
+    /// Total sampled (client, round) pairs so far: K * rounds.
+    pub fn sampled_total(&self) -> u64 {
+        self.spec.k as u64 * self.rounds
+    }
+
+    /// Compact `class:count` participation summary for the run record
+    /// (`0:123,1:456`; classes with zero participation omitted).
+    pub fn participation_label(&self) -> String {
+        let mut out = String::new();
+        for (c, &cnt) in self.participation.iter().enumerate() {
+            if cnt == 0 {
+                continue;
+            }
+            if !out.is_empty() {
+                out.push(',');
+            }
+            out.push_str(&format!("{c}:{cnt}"));
+        }
+        out
+    }
+}
+
+impl NetworkProcess for CohortProcess {
+    fn dim(&self) -> usize {
+        self.spec.k
+    }
+
+    fn next_state(&mut self) -> Vec<f64> {
+        self.rounds += 1;
+        sample_k_of_n(&mut self.sample_rng, self.spec.n, self.spec.k, &mut self.indices);
+        let zf = match &mut self.common {
+            Some(cf) => {
+                cf.z = cf.a * cf.z + cf.rng.normal();
+                (cf.z * cf.scale).exp()
+            }
+            None => 1.0,
+        };
+        self.slot_class.clear();
+        let mut c = Vec::with_capacity(self.spec.k);
+        for s in 0..self.indices.len() {
+            let cls = self.spec.class_of(self.indices[s]);
+            self.slot_class.push(cls as u8);
+            self.participation[cls] += 1;
+            let cc = self.spec.class_set[cls];
+            c.push(self.sample_rng.normal_ms(cc.mu, cc.sigma).exp() * zf);
+        }
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_label_round_trip() {
+        let p = PopSpec::parse("pop:1000000:k1000").unwrap();
+        assert_eq!(p.n, 1_000_000);
+        assert_eq!(p.k, 1000);
+        assert_eq!(p.classes, "uniform");
+        assert_eq!(p.label(), "pop:1000000:k1000");
+        assert_eq!(PopSpec::parse(&p.label()).unwrap(), p);
+
+        let p = PopSpec::parse("pop:5000:k64:classeshilo").unwrap();
+        assert_eq!(p.class_set.len(), 2);
+        assert_eq!(p.label(), "pop:5000:k64:classeshilo");
+        assert_eq!(PopSpec::parse(&p.label()).unwrap(), p);
+
+        // The default class set canonicalizes away.
+        let p = PopSpec::parse("pop:100:k10:classesuniform").unwrap();
+        assert_eq!(p.label(), "pop:100:k10");
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "pop",
+            "pop:0:k1",
+            "pop:100",
+            "pop:100:10",
+            "pop:100:k0",
+            "pop:100:k101",
+            "pop:100:k5:hilo",
+            "pop:100:k5:classes",
+            "pop:100:k5:classesnope",
+            "pop:x:k5",
+        ] {
+            assert!(PopSpec::parse(bad).is_err(), "{bad} should be rejected");
+        }
+    }
+
+    #[test]
+    fn class_file_parses_weight_mu_sigma_lines() {
+        let dir = std::env::temp_dir().join("nacfl_pop_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("classes.toml");
+        std::fs::write(&path, "# fleet\n3 0.5 0.6\n1 2.0 1.0 # slow\n").unwrap();
+        let spec = PopSpec::parse(&format!("pop:1000:k10:classes{}", path.display())).unwrap();
+        assert_eq!(spec.class_set.len(), 2);
+        assert!((spec.class_set[0].weight - 0.75).abs() < 1e-12, "weights normalize");
+        assert!((spec.class_set[1].mu - 2.0).abs() < 1e-12);
+        assert!(PopSpec::parse("pop:1000:k10:classes/no/such/file").is_err());
+    }
+
+    #[test]
+    fn class_of_follows_mixture_bounds() {
+        let spec = PopSpec::parse("pop:1000:k10:classeshilo").unwrap();
+        // hilo = 0.8 / 0.2 -> boundary at 800.
+        assert_eq!(spec.class_of(0), 0);
+        assert_eq!(spec.class_of(799), 0);
+        assert_eq!(spec.class_of(800), 1);
+        assert_eq!(spec.class_of(999), 1);
+    }
+
+    #[test]
+    fn floyd_sampling_is_k_distinct_sorted_and_deterministic() {
+        let mut rng = Rng::new(3).derive("pop-sample", 1);
+        let mut a = Vec::new();
+        sample_k_of_n(&mut rng, 1_000_000, 1000, &mut a);
+        assert_eq!(a.len(), 1000);
+        assert!(a.windows(2).all(|w| w[0] < w[1]), "ascending + distinct");
+        assert!(a.iter().all(|&i| i < 1_000_000));
+        let mut rng2 = Rng::new(3).derive("pop-sample", 1);
+        let mut b = Vec::new();
+        sample_k_of_n(&mut rng2, 1_000_000, 1000, &mut b);
+        assert_eq!(a, b, "same stream -> same cohort");
+        // k == n degenerates to the full roster.
+        let mut full = Vec::new();
+        sample_k_of_n(&mut rng, 10, 10, &mut full);
+        assert_eq!(full, (0..10).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn cohort_process_materializes_k_slots_and_counts_participation() {
+        let spec = PopSpec::parse("pop:10000:k50:classesmobile").unwrap();
+        let scen = ScenarioKind::HomogeneousIndependent { sigma_sq: 1.0 };
+        let mut p = CohortProcess::new(spec, scen, 7).unwrap();
+        assert_eq!(p.dim(), 50);
+        for _ in 0..20 {
+            let c = p.next_state();
+            assert_eq!(c.len(), 50);
+            assert!(c.iter().all(|&x| x > 0.0));
+            assert_eq!(p.indices.len(), 50);
+            assert_eq!(p.slot_class.len(), 50);
+        }
+        assert_eq!(p.rounds, 20);
+        assert_eq!(p.sampled_total(), 1000);
+        assert_eq!(p.participation.iter().sum::<u64>(), 1000);
+        // All three mobile classes should appear in 1000 draws.
+        assert!(p.participation[..3].iter().all(|&x| x > 0), "{:?}", p.participation);
+        let label = p.participation_label();
+        assert!(label.starts_with("0:"), "{label}");
+        assert_eq!(label.split(',').count(), 3);
+    }
+
+    #[test]
+    fn participation_tracks_mixture_weights() {
+        let spec = PopSpec::parse("pop:100000:k200:classeshilo").unwrap();
+        let scen = ScenarioKind::HomogeneousIndependent { sigma_sq: 1.0 };
+        let mut p = CohortProcess::new(spec, scen, 11).unwrap();
+        for _ in 0..200 {
+            p.next_state();
+        }
+        let total = p.participation.iter().sum::<u64>() as f64;
+        let frac0 = p.participation[0] as f64 / total;
+        assert!((frac0 - 0.8).abs() < 0.02, "class-0 frac {frac0} vs weight 0.8");
+    }
+
+    #[test]
+    fn correlated_scenarios_share_a_common_factor() {
+        let spec = PopSpec::parse("pop:1000:k100").unwrap();
+        let scen = ScenarioKind::PerfectlyCorrelated { sigma_inf_sq: 4.0 };
+        let mut hi = 0usize;
+        let mut p = CohortProcess::new(spec, scen, 5).unwrap();
+        // With a shared factor the per-round mean log-BTD should move
+        // together: measure cross-round variance of the round means and
+        // require it to exceed the idiosyncratic-only baseline.
+        let spec2 = PopSpec::parse("pop:1000:k100").unwrap();
+        let mut q =
+            CohortProcess::new(spec2, ScenarioKind::HomogeneousIndependent { sigma_sq: 1.0 }, 5)
+                .unwrap();
+        let round_mean = |c: &[f64]| c.iter().map(|x| x.ln()).sum::<f64>() / c.len() as f64;
+        let mut vp = Vec::new();
+        let mut vq = Vec::new();
+        for _ in 0..200 {
+            vp.push(round_mean(&p.next_state()));
+            vq.push(round_mean(&q.next_state()));
+        }
+        let var = |v: &[f64]| {
+            let m = v.iter().sum::<f64>() / v.len() as f64;
+            v.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / v.len() as f64
+        };
+        if var(&vp) > 4.0 * var(&vq) {
+            hi += 1;
+        }
+        assert_eq!(hi, 1, "common factor must dominate round-mean variance");
+    }
+
+    #[test]
+    fn sampling_stream_is_coordinate_pure() {
+        let spec = PopSpec::parse("pop:1000:k10").unwrap();
+        let a = spec.sample_stream(3).next_u64();
+        let b = spec.sample_stream(3).next_u64();
+        assert_eq!(a, b);
+        // Different seed or different spec -> different stream.
+        assert_ne!(a, spec.sample_stream(4).next_u64());
+        let other = PopSpec::parse("pop:1000:k20").unwrap();
+        assert_ne!(a, other.sample_stream(3).next_u64());
+    }
+}

@@ -1,0 +1,386 @@
+//! System tests for the population subsystem and the calendar-queue
+//! scheduler (ISSUE-9):
+//!
+//! * the timing wheel pops **bit-identically** to the retained
+//!   binary-heap reference on round-shaped workloads (clustered batch
+//!   arrivals, heavy ties, semi-sync cancellations), at the queue level
+//!   and through the DES engine (`DesConfig::with_scheduler`);
+//! * a plan with no pop axis and a plan with an explicit
+//!   `pop = ["none"]` axis share a plan hash and produce byte-identical,
+//!   pop-field-free ledgers (the pre-population byte shape);
+//! * pop campaigns double-run to byte-identical ledgers, keep record
+//!   bits across thread counts, split evenly across `--shard i/n` by
+//!   cohort size, and merge bit-identically to a solo run — cohort
+//!   sampling is coordinate-pure, never schedule-bound;
+//! * per-class participation in the ledger tracks the class mixture
+//!   weights, and a million-client cell stays O(K) per round.
+
+use nacfl::config::ExperimentConfig;
+use nacfl::des::{simulate_des, DesConfig, Discipline, EventQueue, SchedulerKind};
+use nacfl::exp::{execute, merge_ledgers, ExecOptions, ExperimentPlan, ShardSpec, Tier};
+use nacfl::netsim::{Scenario, ScenarioKind};
+use nacfl::policy::parse_policy;
+use nacfl::pop::{CohortProcess, PopSpec};
+use nacfl::util::rng::Rng;
+
+const K_EPS: f64 = 60.0;
+
+fn temp(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("nacfl_pop_sys_{tag}_{}.jsonl", std::process::id()))
+        .to_str()
+        .unwrap()
+        .to_string()
+}
+
+fn small_base() -> ExperimentConfig {
+    let mut base = ExperimentConfig::paper();
+    base.seeds = (0..2).collect();
+    base.policies = vec!["fixed:2".into(), "nacfl:1".into()];
+    base
+}
+
+fn opts_for(ledger: &str, threads: usize) -> ExecOptions {
+    ExecOptions {
+        threads,
+        ledger: Some(ledger.to_string()),
+        ..Default::default()
+    }
+}
+
+/// Queue-level wheel/heap parity on the DES event shape: rounds push
+/// batches of quantized (tie-heavy) arrival times, pops interleave with
+/// pushes, and semi-sync cancellations clear mid-stream.  The pop
+/// sequences must match entry for entry, through several wheel resizes.
+#[test]
+fn schedulers_agree_on_round_shaped_workloads() {
+    let mut rng = Rng::new(0x90F);
+    let mut wheel = EventQueue::with_kind(SchedulerKind::Wheel);
+    let mut heap = EventQueue::with_kind(SchedulerKind::Heap);
+    let mut now = 0.0f64;
+    let mut id = 0usize;
+    for round in 0..400usize {
+        const K: usize = 64;
+        for _ in 0..K {
+            // Quantized offsets make simultaneous arrivals common — the
+            // FIFO tie-break is the hard part of the parity contract.
+            let dt = (rng.below(1000) as f64) * 12.5;
+            wheel.push(now + dt, id);
+            heap.push(now + dt, id);
+            id += 1;
+        }
+        assert_eq!(wheel.len(), heap.len());
+        assert_eq!(wheel.peek_time(), heap.peek_time());
+        for _ in 0..rng.below(K + 1) {
+            let a = wheel.pop();
+            assert_eq!(a, heap.pop(), "divergence before event {id}");
+            if let Some((t, _)) = a {
+                now = t;
+            }
+        }
+        // Semi-sync round cancellation: both schedulers drop the
+        // pending set but keep sequencing.
+        if round % 97 == 96 {
+            wheel.clear();
+            heap.clear();
+        }
+    }
+    loop {
+        let a = wheel.pop();
+        assert_eq!(a, heap.pop());
+        if a.is_none() {
+            break;
+        }
+    }
+    assert!(wheel.wheel_ops() > 0, "wheel must report bucket work");
+}
+
+/// Engine-level parity: for cohort processes *and* the pre-population
+/// scenario processes, every discipline produces bit-identical
+/// wall/rounds/upload_s under `SchedulerKind::Wheel` and
+/// `SchedulerKind::Heap` — the scheduler swap is unobservable in results.
+#[test]
+fn engine_results_are_bit_identical_across_schedulers() {
+    let cfg = ExperimentConfig::paper();
+    let ctx = cfg.policy_ctx();
+    let run = |d: Discipline, kind: SchedulerKind, proc_: &mut dyn nacfl::netsim::NetworkProcess| {
+        let mut policy = parse_policy("fixed:2").unwrap();
+        let des = DesConfig::new(d, K_EPS).with_scheduler(kind);
+        simulate_des(&ctx, policy.as_mut(), proc_, &des, Rng::new(1)).unwrap()
+    };
+    for seed in [0u64, 7] {
+        // Sampled-cohort process (48 slots over a 50k population).
+        for d in [
+            Discipline::Sync,
+            Discipline::SemiSync { k: 32 },
+            Discipline::Async { staleness_exp: 0.5 },
+        ] {
+            let spec = PopSpec::parse("pop:50000:k48:classeshilo").unwrap();
+            let scen = ScenarioKind::HeterogeneousIndependent;
+            let mut pw = CohortProcess::new(spec.clone(), scen, seed).unwrap();
+            let mut ph = CohortProcess::new(spec, scen, seed).unwrap();
+            let rw = run(d, SchedulerKind::Wheel, &mut pw);
+            let rh = run(d, SchedulerKind::Heap, &mut ph);
+            assert_eq!(
+                rw.wall.to_bits(),
+                rh.wall.to_bits(),
+                "pop {} seed {seed}: wall {} vs {}",
+                d.label(),
+                rw.wall,
+                rh.wall
+            );
+            assert_eq!(rw.rounds, rh.rounds, "pop {} seed {seed}", d.label());
+            assert_eq!(rw.aggregations, rh.aggregations);
+            assert_eq!(rw.upload_s.to_bits(), rh.upload_s.to_bits());
+            assert_eq!(rw.wait_s.to_bits(), rh.wait_s.to_bits());
+        }
+        // Pre-population scenario process (the legacy 10-client fleet).
+        for d in [
+            Discipline::Sync,
+            Discipline::SemiSync { k: 7 },
+            Discipline::Async { staleness_exp: 0.5 },
+        ] {
+            let scenario = Scenario::new(ScenarioKind::HeterogeneousIndependent, cfg.m);
+            let mut pw = scenario.process(Rng::new(seed).derive("net", 0)).unwrap();
+            let mut ph = scenario.process(Rng::new(seed).derive("net", 0)).unwrap();
+            let rw = run(d, SchedulerKind::Wheel, &mut pw);
+            let rh = run(d, SchedulerKind::Heap, &mut ph);
+            assert_eq!(rw.wall.to_bits(), rh.wall.to_bits(), "base {} seed {seed}", d.label());
+            assert_eq!(rw.rounds, rh.rounds);
+            assert_eq!(rw.upload_s.to_bits(), rh.upload_s.to_bits());
+        }
+    }
+}
+
+#[test]
+fn pop_free_campaigns_keep_the_pre_population_byte_shape() {
+    let plain = ExperimentPlan::builder("pop parity")
+        .base(small_base())
+        .tiers(vec![Tier::Analytic { k_eps: 50.0 }])
+        .build()
+        .unwrap();
+    let explicit = ExperimentPlan::builder("pop parity")
+        .base(small_base())
+        .tiers(vec![Tier::Analytic { k_eps: 50.0 }])
+        .pop(["none"])
+        .build()
+        .unwrap();
+    assert_eq!(
+        plain.plan_hash(),
+        explicit.plan_hash(),
+        "a trivial pop axis must not re-key the campaign"
+    );
+
+    let la = temp("none_a");
+    let lb = temp("none_b");
+    for p in [&la, &lb] {
+        let _ = std::fs::remove_file(p);
+    }
+    execute(&plain, &opts_for(&la, 1), &mut []).unwrap();
+    execute(&explicit, &opts_for(&lb, 1), &mut []).unwrap();
+    let bytes_a = std::fs::read_to_string(&la).unwrap();
+    let bytes_b = std::fs::read_to_string(&lb).unwrap();
+    assert_eq!(bytes_a, bytes_b);
+    // Pop-free ledgers carry no population fields on any line, and keys
+    // keep the pre-pop shape.
+    assert!(!bytes_a.contains("\"pop\""));
+    assert!(!bytes_a.contains("sampled_k"));
+    assert!(!bytes_a.contains("participation"));
+
+    for p in [&la, &lb] {
+        std::fs::remove_file(p).ok();
+    }
+}
+
+#[test]
+fn pop_campaigns_are_deterministic_across_runs_threads_and_shards() {
+    const POP: &str = "pop:20000:k16:classeshilo";
+    let plan = ExperimentPlan::builder("pop determinism")
+        .base(small_base())
+        .tiers(vec![Tier::Analytic { k_eps: 50.0 }])
+        .pop(["none", POP])
+        .build()
+        .unwrap();
+    let n = plan.n_runs();
+    assert_eq!(n, 8);
+
+    let la = temp("det_a");
+    let lb = temp("det_b");
+    for p in [&la, &lb] {
+        let _ = std::fs::remove_file(p);
+    }
+    // Single-threaded double run: byte-identical ledgers (records *and*
+    // layout), exactly the fault-axis contract.
+    let full = execute(&plan, &opts_for(&la, 1), &mut []).unwrap();
+    execute(&plan, &opts_for(&lb, 1), &mut []).unwrap();
+    let bytes_a = std::fs::read_to_string(&la).unwrap();
+    let bytes_b = std::fs::read_to_string(&lb).unwrap();
+    assert_eq!(bytes_a, bytes_b, "double run must be byte-identical");
+
+    // Record shape: pop cells carry the coordinate, its cohort size and
+    // a participation summary; the pop:none twins stay backfill-clean.
+    assert_eq!(full.records.len(), n);
+    for r in &full.records {
+        if r.pop == "none" {
+            assert!(r.sampled_k.is_nan(), "{}", r.key());
+            assert!(r.participation.is_empty());
+        } else {
+            assert_eq!(r.pop, POP);
+            assert_eq!(r.sampled_k, 16.0, "{}", r.key());
+            assert!(r.key().ends_with(&format!("|{POP}")), "{}", r.key());
+            assert!(!r.participation.is_empty(), "{}", r.key());
+            assert!(r.wall > 0.0 && r.rounds > 0);
+        }
+    }
+
+    // Thread-count invariance: same record bits in plan order.
+    let lc = temp("det_c");
+    let _ = std::fs::remove_file(&lc);
+    let par = execute(&plan, &opts_for(&lc, 4), &mut []).unwrap();
+    for (a, b) in full.records.iter().zip(par.records.iter()) {
+        assert_eq!(a.key(), b.key());
+        assert_eq!(a.wall.to_bits(), b.wall.to_bits(), "4 threads: {}", a.key());
+        assert_eq!(a.participation, b.participation, "{}", a.key());
+    }
+
+    // Shard split: the Pop cost class splits its 4 cells 2/2 (cohort-
+    // size weighted), and the fleet merges bit-identically to solo.
+    let ls0 = temp("det_s0");
+    let ls1 = temp("det_s1");
+    for p in [&ls0, &ls1] {
+        let _ = std::fs::remove_file(p);
+    }
+    let mk = |ledger: &str, spec: &str| ExecOptions {
+        shard: ShardSpec::parse(spec).unwrap(),
+        ..opts_for(ledger, 2)
+    };
+    let s0 = execute(&plan, &mk(&ls0, "0/2"), &mut []).unwrap();
+    let s1 = execute(&plan, &mk(&ls1, "1/2"), &mut []).unwrap();
+    assert_eq!(s0.records.len() + s1.records.len(), n, "disjoint and exhaustive");
+    for shard in [&s0, &s1] {
+        let pop = shard.records.iter().filter(|r| r.pop != "none").count();
+        assert_eq!(pop, 2, "pop cells split evenly across shards");
+    }
+    let merged = merge_ledgers(&[&ls0, &ls1], Some(&plan)).unwrap();
+    assert!(merged.complete(), "missing: {:?}", merged.missing);
+    for (x, y) in full.records.iter().zip(merged.records.iter()) {
+        assert_eq!(x.key(), y.key(), "merge must return plan order");
+        assert_eq!(x.wall.to_bits(), y.wall.to_bits(), "{}", x.key());
+        assert_eq!(x.participation, y.participation, "{}", x.key());
+    }
+
+    // With telemetry on, sampling volume, per-class participation and
+    // wheel work all surface as counters.
+    let lt = temp("det_telem");
+    let _ = std::fs::remove_file(&lt);
+    let opts = ExecOptions {
+        telemetry: true,
+        ..opts_for(&lt, 2)
+    };
+    execute(&plan, &opts, &mut []).unwrap();
+    let telem = std::fs::read_to_string(&lt).unwrap();
+    assert!(telem.contains("pop.sampled"), "sampling volume must be counted");
+    assert!(telem.contains("pop.class0"), "per-class participation must be counted");
+    assert!(telem.contains("des.wheel_ops"), "wheel work must be counted");
+
+    for p in [&la, &lb, &lc, &ls0, &ls1, &lt] {
+        std::fs::remove_file(p).ok();
+    }
+}
+
+/// The ledger's participation summary reproduces the class mixture: on
+/// `classeshilo` (0.8 / 0.2), class 0's share of all sampled slots
+/// lands near 0.8.
+#[test]
+fn ledger_participation_matches_mixture_weights() {
+    let mut base = small_base();
+    base.seeds = vec![0];
+    base.policies = vec!["fixed:2".into()];
+    let plan = ExperimentPlan::builder("pop mixture")
+        .base(base)
+        .tiers(vec![Tier::Analytic { k_eps: 50.0 }])
+        .pop(["pop:100000:k200:classeshilo"])
+        .build()
+        .unwrap();
+    let ledger = temp("mixture");
+    let _ = std::fs::remove_file(&ledger);
+    let out = execute(&plan, &opts_for(&ledger, 1), &mut []).unwrap();
+    assert_eq!(out.records.len(), 1);
+    let r = &out.records[0];
+    let mut counts = [0u64; 2];
+    for part in r.participation.split(',') {
+        let (c, n) = part.split_once(':').expect("class:count");
+        counts[c.parse::<usize>().unwrap()] += n.parse::<u64>().unwrap();
+    }
+    let total = counts.iter().sum::<u64>();
+    assert!(total > 0 && total % 200 == 0, "K slots per sampled round, got {total}");
+    assert!(total >= 200 * r.rounds as u64, "at least one cohort per round");
+    let frac0 = counts[0] as f64 / total as f64;
+    assert!(
+        (frac0 - 0.8).abs() < 0.05,
+        "class-0 participation {frac0:.3} vs mixture weight 0.8 ({total} draws)"
+    );
+    std::fs::remove_file(&ledger).ok();
+}
+
+/// Fault channels compose with sampled cohorts: the per-cohort fault
+/// stream is coordinate-pure, and the record carries both gated blocks.
+#[test]
+fn pop_composes_with_the_fault_axis() {
+    let mut base = small_base();
+    base.seeds = vec![0];
+    base.policies = vec!["fixed:2".into()];
+    let plan = ExperimentPlan::builder("pop faults")
+        .base(base)
+        .tiers(vec![Tier::Analytic { k_eps: 50.0 }])
+        .faults(["loss:0.3:retry2"])
+        .pop(["pop:5000:k8"])
+        .build()
+        .unwrap();
+    let la = temp("faults_a");
+    let lb = temp("faults_b");
+    for p in [&la, &lb] {
+        let _ = std::fs::remove_file(p);
+    }
+    let a = execute(&plan, &opts_for(&la, 1), &mut []).unwrap();
+    execute(&plan, &opts_for(&lb, 1), &mut []).unwrap();
+    assert_eq!(
+        std::fs::read_to_string(&la).unwrap(),
+        std::fs::read_to_string(&lb).unwrap(),
+        "faulty pop cell must double-run byte-identically"
+    );
+    let r = &a.records[0];
+    assert_eq!(r.faults, "loss:0.3:retry2");
+    assert_eq!(r.pop, "pop:5000:k8");
+    assert!(r.key().ends_with("|loss:0.3:retry2|pop:5000:k8"), "{}", r.key());
+    assert!(r.retrans_s.is_finite() && r.retrans_s >= 0.0);
+    assert!(!r.participation.is_empty());
+    for p in [&la, &lb] {
+        std::fs::remove_file(p).ok();
+    }
+}
+
+/// A million-client cell runs in cohort time: state stays O(K), the
+/// sampled roster spreads across the whole population, and the engine
+/// converges like any other DES run.
+#[test]
+fn million_client_cell_stays_cohort_sized() {
+    let cfg = ExperimentConfig::paper();
+    let ctx = cfg.policy_ctx();
+    let spec = PopSpec::parse("pop:1000000:k1000").unwrap();
+    let mut proc_ =
+        CohortProcess::new(spec, ScenarioKind::HomogeneousIndependent { sigma_sq: 1.0 }, 3)
+            .unwrap();
+    let mut policy = parse_policy("fixed:2").unwrap();
+    let des = DesConfig::new(Discipline::Sync, K_EPS);
+    let r = simulate_des(&ctx, policy.as_mut(), &mut proc_, &des, Rng::new(1)).unwrap();
+    assert!(r.converged, "million-client cell must converge");
+    assert!(r.rounds > 0 && r.wall > 0.0);
+    // Cohort state never grows past K, regardless of N.
+    assert_eq!(proc_.indices.len(), 1000);
+    assert_eq!(proc_.slot_class.len(), 1000);
+    assert_eq!(proc_.sampled_total(), 1000 * proc_.rounds);
+    // Distinct rounds draw from far-apart corners of the population.
+    let span = proc_.indices.last().unwrap() - proc_.indices.first().unwrap();
+    assert!(span > 500_000, "cohort should span the population, got {span}");
+}
