@@ -1,0 +1,131 @@
+//! Observability-layer benchmarks (DESIGN.md §16).
+//!
+//! Times the round-series recorder — the one call every instrumented
+//! engine round pays with `--series` on — plus the disabled-handle
+//! no-op (the cost the *default* path pays), the bounded series-line
+//! serialization, and the trace recorder's duration-event push.  The
+//! `counters` object records the rounds fed through the recorder and
+//! the stride its decimation settled on, witnessing the O(cap) storage
+//! contract behind the timing.
+//!
+//! Flags (after `cargo bench --bench obs_series --`):
+//!   --json <path>     write the machine-readable report (BENCH_obs
+//!                     schema: component -> ns/op) for the perf
+//!                     trajectory tracked across PRs;
+//!   --budget-ms <n>   per-component wall-time budget (default 400;
+//!                     CI smoke uses a tiny budget).
+
+use nacfl::obs::{RoundSeries, Sample, TraceRecorder, SERIES_CAP};
+use nacfl::util::bench::{bench, black_box, BenchJson};
+use std::time::Duration;
+
+struct Options {
+    json: Option<String>,
+    budget: Duration,
+}
+
+fn parse_args() -> Options {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut json = None;
+    let mut budget_ms: u64 = 400;
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--json" => {
+                let Some(path) = argv.get(i + 1) else {
+                    eprintln!("--json needs a path");
+                    std::process::exit(2);
+                };
+                json = Some(path.clone());
+                i += 2;
+            }
+            "--budget-ms" => {
+                let Some(ms) = argv.get(i + 1).and_then(|s| s.parse().ok()) else {
+                    eprintln!("--budget-ms needs an integer");
+                    std::process::exit(2);
+                };
+                budget_ms = ms;
+                i += 2;
+            }
+            // cargo bench passes --bench through to harness=false targets.
+            "--bench" => i += 1,
+            other => {
+                eprintln!("(obs_series: ignoring argument `{other}`)");
+                i += 1;
+            }
+        }
+    }
+    Options { json, budget: Duration::from_millis(budget_ms.max(1)) }
+}
+
+fn main() {
+    let opts = parse_args();
+    let budget = opts.budget;
+    let mut report = BenchJson::new("obs");
+    println!("== round-series recorder ==");
+
+    // The per-round record cost, amortized across decimation passes:
+    // the recorder keeps absorbing rounds while stride doubling holds
+    // the kept set at <= SERIES_CAP, so ns/op here is exactly what an
+    // engine round pays with `--series` on.
+    let mut series = RoundSeries::on();
+    let mut sample = Sample::default();
+    let mut round = 0u64;
+    let s = bench("series_record (amortized per round)", budget, || {
+        sample.level_mean = (round % 16) as f64;
+        sample.wire_bits = 1.0e6 + round as f64;
+        sample.wall_s = round as f64;
+        series.record(sample);
+        round += 1;
+    });
+    println!("{}", s.report());
+    report.record("series_record", &s);
+    report.record_counter("series_rounds_recorded", series.rounds_total());
+    report.record_counter("series_stride", series.stride());
+    report.record_counter("series_kept", series.len() as u64);
+    assert!(series.len() <= SERIES_CAP, "decimation must hold the cap");
+
+    // The disabled handle: a single branch on None.  This is the
+    // overhead every default (series-off) engine round carries.
+    let mut off = RoundSeries::off();
+    let s = bench("series_record_off (disabled handle)", budget, || {
+        off.record(black_box(sample));
+    });
+    println!("{}", s.report());
+    report.record("series_record_off", &s);
+
+    // One ledger line from a full recorder: <= SERIES_CAP kept rounds
+    // across 12 channels, flat JSON.
+    let s = bench("series_line_json (<=128 kept rounds)", budget, || {
+        black_box(series.line("bench|cell").unwrap().to_json().len());
+    });
+    println!("{}", s.report());
+    report.record("series_line_json", &s);
+
+    println!("\n== event-trace recorder ==");
+
+    // Duration-event push on a warm recorder, cycled well under the
+    // event cap so every op takes the real record path (never the
+    // cheaper dropped-counter branch).
+    let mut tracer = TraceRecorder::on();
+    let mut i = 0u32;
+    let s = bench("trace_upload (duration event)", budget, || {
+        if i == 4096 {
+            tracer = TraceRecorder::on();
+            i = 0;
+        }
+        tracer.upload(3, i as f64, 1000.0);
+        i += 1;
+    });
+    println!("{}", s.report());
+    report.record("trace_upload", &s);
+    assert_eq!(tracer.dropped(), 0, "cycling must stay under the cap");
+
+    if let Some(path) = &opts.json {
+        report.write(path).unwrap_or_else(|e| {
+            eprintln!("error writing {path}: {e}");
+            std::process::exit(1);
+        });
+        println!("\nmachine-readable report -> {path}");
+    }
+}

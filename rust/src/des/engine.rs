@@ -39,7 +39,7 @@
 use super::event::{EventQueue, SchedulerKind};
 use super::faults::{CrashState, FaultModel};
 use crate::netsim::{DelayModel, NetworkProcess};
-use crate::obs::Telemetry;
+use crate::obs::{RoundSeries, Sample, Telemetry, TraceRecorder};
 use crate::policy::{mean_level, CompressionChoice, CompressionPolicy, PolicyCtx, RoundsModel};
 use crate::sim::StoppingRule;
 use crate::util::rng::Rng;
@@ -255,17 +255,47 @@ pub fn simulate_des_with(
     fault_rng: Rng,
     telem: &mut Telemetry,
 ) -> Result<DesResult> {
+    simulate_des_obs(
+        ctx,
+        policy,
+        process,
+        cfg,
+        fault_rng,
+        telem,
+        &mut RoundSeries::off(),
+        &mut TraceRecorder::off(),
+    )
+}
+
+/// [`simulate_des_with`] plus the round-series recorder and the
+/// event-trace recorder (`obs::series` / `obs::trace`): one [`Sample`]
+/// per round (per arrival for async) and one trace slice per upload
+/// when the respective handle is on.  All-off handles reduce this to
+/// exactly [`simulate_des`] — every recording site is guarded, so the
+/// event core and its float paths are untouched.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_des_obs(
+    ctx: &PolicyCtx,
+    policy: &mut dyn CompressionPolicy,
+    process: &mut dyn NetworkProcess,
+    cfg: &DesConfig,
+    fault_rng: Rng,
+    telem: &mut Telemetry,
+    series: &mut RoundSeries,
+    tracer: &mut TraceRecorder,
+) -> Result<DesResult> {
     if process.dim() == 0 {
         return Err(anyhow!("network process has zero clients"));
     }
     match cfg.discipline {
         Discipline::Async { staleness_exp } => {
-            run_async(ctx, policy, process, cfg, fault_rng, staleness_exp, telem)
+            run_async(ctx, policy, process, cfg, fault_rng, staleness_exp, telem, series, tracer)
         }
-        _ => run_round_based(ctx, policy, process, cfg, fault_rng, telem),
+        _ => run_round_based(ctx, policy, process, cfg, fault_rng, telem, series, tracer),
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_round_based(
     ctx: &PolicyCtx,
     policy: &mut dyn CompressionPolicy,
@@ -273,6 +303,8 @@ fn run_round_based(
     cfg: &DesConfig,
     mut rng: Rng,
     telem: &mut Telemetry,
+    series: &mut RoundSeries,
+    tracer: &mut TraceRecorder,
 ) -> Result<DesResult> {
     let m = process.dim();
     let need = match cfg.discipline {
@@ -310,6 +342,14 @@ fn run_round_based(
     let mut wall = 0.0f64;
     // Decomposition accumulator (separate from the `wall` float path).
     let mut delay_sum = 0.0f64;
+    // With a finite deadline the round can close while transfers are
+    // still in flight; charging their full transmit time would inflate
+    // `upload_s` past what the wall clock ever waited for (and push
+    // `wait_s` negative).  Buffer per-client charges and clamp each to
+    // the resolved round length.  Deadline-free runs keep the legacy
+    // in-loop accumulation so their float path stays bit-identical.
+    let clamp_charges = deadline.is_finite();
+    let mut charges: Vec<f64> = Vec::with_capacity(if clamp_charges { m } else { 0 });
     let mut rule = StoppingRule::new(cfg.k_eps);
     let mut aggregations = 0usize;
     let mut rounds = 0usize;
@@ -325,6 +365,8 @@ fn run_round_based(
 
     while rounds < cfg.max_rounds {
         rounds += 1;
+        let round_retries = retries;
+        let round_crashes = crash_rounds;
         let c = process.next_state();
         let choices = policy.choose(ctx, &c);
         bits_sum += mean_level(&choices);
@@ -341,6 +383,9 @@ fn run_round_based(
         for j in 0..m {
             if crash.is_down(j, wall) {
                 crash_rounds += 1;
+                if tracer.is_on() {
+                    tracer.instant("crash", wall, Some(j));
+                }
                 // Streams stay one-draw-per-(client, round) regardless
                 // of crash state (alignment contract).
                 lost[j] = cfg.faults.draw_drop(&mut rng);
@@ -358,7 +403,11 @@ fn run_round_based(
             } else {
                 d
             };
-            delay_sum += d_total;
+            if clamp_charges {
+                charges.push(d_total);
+            } else {
+                delay_sum += d_total;
+            }
             let at = if tdma {
                 offset += d_total;
                 offset
@@ -366,6 +415,15 @@ fn run_round_based(
                 d_total
             };
             spent_max = spent_max.max(at);
+            if tracer.is_on() {
+                // Arrival at round-relative `at`, transmit+compute spans
+                // the `d_total` seconds leading up to it (TDMA slots
+                // serialize, so the slice ends at the slot boundary).
+                tracer.upload(j, wall + at - d_total, d_total);
+                if attempts > 1 {
+                    tracer.instant("retransmit", wall + at, Some(j));
+                }
+            }
             lost[j] = cfg.faults.draw_drop(&mut rng);
             if ok {
                 q.push(at, j);
@@ -393,6 +451,9 @@ fn run_round_based(
                 // everything still in flight missed the cut.
                 deadline_misses += 1 + q.len() as u64;
                 cut = true;
+                if tracer.is_on() {
+                    tracer.instant("deadline_cut", wall + deadline, None);
+                }
                 break;
             }
             got[j] = true;
@@ -407,6 +468,14 @@ fn run_round_based(
             // deadline (or when the slowest given-up transmitter went
             // quiet).  Unreachable fault-free: `expected == m >= need`.
             dur = if deadline.is_finite() { dur.max(deadline) } else { dur.max(spent_max) };
+        }
+        if clamp_charges {
+            // Transfers the close abandoned only occupied the round up
+            // to `dur`; the rest of the burned time belongs to `wait_s`.
+            for &d in &charges {
+                delay_sum += d.min(dur);
+            }
+            charges.clear();
         }
         late += expected - popped;
         wall += dur;
@@ -425,6 +494,22 @@ fn run_round_based(
         delivered.clear();
         delivered.extend((0..m).filter(|&j| got[j] && !lost[j]).map(|j| choices[j]));
         dropped += popped - delivered.len();
+        if series.is_on() {
+            let m_f = m as f64;
+            series.record(Sample {
+                level_mean: mean_level(&choices),
+                level_max: choices.iter().map(|x| x.level as f64).fold(0.0, f64::max),
+                wire_bits: choices.iter().map(|x| ctx.wire_bits(x.level)).sum(),
+                btd_mean: c.iter().sum::<f64>() / m_f,
+                quorum_frac: delivered.len() as f64 / m_f,
+                retrans: (retries - round_retries) as f64,
+                queue_hw: expected as f64,
+                crashed: (crash_rounds - round_crashes) as f64,
+                wall_s: wall,
+                cohort_mix: process.cohort_mix(),
+                ..Sample::default()
+            });
+        }
         if !delivered.is_empty() {
             aggregations += 1;
             qf_sum += delivered.len() as f64 / m as f64;
@@ -520,6 +605,7 @@ fn start_async_round(
     j: usize,
     now: f64,
     version: u64,
+    tracer: &mut TraceRecorder,
 ) -> (f64, f64) {
     let c = process.next_state();
     let choices = policy.choose(ctx, &c);
@@ -528,6 +614,9 @@ fn start_async_round(
     let (attempts, ok) = faults.draw_attempts(loss_rng);
     if crash.is_down(j, now) {
         counters.crash_rounds += 1;
+        if tracer.is_on() {
+            tracer.instant("crash", now, Some(j));
+        }
         q.push(
             crash.recovery_time(j).max(now),
             AsyncArrival {
@@ -557,6 +646,15 @@ fn start_async_round(
     } else {
         (now + d_total, d_total, lost || !ok)
     };
+    if tracer.is_on() {
+        tracer.upload(j, now, busy);
+        if attempts > 1 {
+            tracer.instant("retransmit", at, Some(j));
+        }
+        if d_total > faults.deadline_s {
+            tracer.instant("deadline_cut", at, Some(j));
+        }
+    }
     q.push(
         at,
         AsyncArrival { client: j, read_version: version, choice: choices[j], lost, rejoin: false },
@@ -573,6 +671,8 @@ fn run_async(
     mut rng: Rng,
     staleness_exp: f64,
     telem: &mut Telemetry,
+    series: &mut RoundSeries,
+    tracer: &mut TraceRecorder,
 ) -> Result<DesResult> {
     let m = process.dim();
     let theta_tau = ctx.delay.theta() * ctx.tau as f64;
@@ -608,6 +708,7 @@ fn run_async(
             j,
             0.0,
             version,
+            tracer,
         );
         bits_sum += mb;
         delay_sum += d;
@@ -620,6 +721,21 @@ fn run_async(
         telem.count("des.events_popped", 1);
         telem.sim_span("des.round_s.async", t - wall);
         wall = t;
+        if series.is_on() {
+            // Async has no rounds; one sample per drained arrival keeps
+            // the same decimated storage bound.
+            let lv = arr.choice.level as f64;
+            series.record(Sample {
+                level_mean: lv,
+                level_max: lv,
+                quorum_frac: if arr.rejoin || arr.lost { 0.0 } else { 1.0 / m as f64 },
+                crashed: if arr.rejoin { 1.0 } else { 0.0 },
+                queue_hw: q.len() as f64,
+                wall_s: wall,
+                cohort_mix: process.cohort_mix(),
+                ..Sample::default()
+            });
+        }
         if arr.rejoin {
             // Crash repair completed; nothing arrived — just restart.
         } else if arr.lost {
@@ -652,6 +768,7 @@ fn run_async(
             arr.client,
             t,
             version,
+            tracer,
         );
         bits_sum += mb;
         delay_sum += d;
@@ -952,6 +1069,75 @@ mod tests {
             assert_eq!(a.crash_rounds, b.crash_rounds, "{disc}");
             assert_eq!(a.retrans_s.to_bits(), b.retrans_s.to_bits(), "{disc}");
         }
+    }
+
+    #[test]
+    fn series_and_trace_recorders_leave_the_event_core_untouched() {
+        let ctx = ctx();
+        for disc in [
+            Discipline::Sync,
+            Discipline::SemiSync { k: 6 },
+            Discipline::Async { staleness_exp: 0.5 },
+        ] {
+            let f = FaultModel::parse("loss:0.15+deadline:5000000:quorum0.5").unwrap();
+            let cfg = DesConfig::new(disc, 60.0).with_faults(f);
+            let mut p1 = parse_policy("nacfl:1").unwrap();
+            let mut p2 = parse_policy("nacfl:1").unwrap();
+            let mut n1 = process(7);
+            let mut n2 = process(7);
+            let plain = simulate_des(&ctx, p1.as_mut(), &mut n1, &cfg, Rng::new(21)).unwrap();
+            let mut series = RoundSeries::on();
+            let mut tracer = TraceRecorder::on();
+            let watched = simulate_des_obs(
+                &ctx,
+                p2.as_mut(),
+                &mut n2,
+                &cfg,
+                Rng::new(21),
+                &mut Telemetry::off(),
+                &mut series,
+                &mut tracer,
+            )
+            .unwrap();
+            assert_eq!(plain.wall.to_bits(), watched.wall.to_bits(), "{disc}");
+            assert_eq!(plain.rounds, watched.rounds, "{disc}");
+            assert!(!series.is_empty(), "{disc}");
+            assert!(!tracer.events().is_empty(), "{disc}");
+            if matches!(disc, Discipline::Async { .. }) {
+                // One sample per drained arrival (no crash component in
+                // the fault spec, so no rejoin pops).
+                assert_eq!(
+                    series.rounds_total() as usize,
+                    watched.aggregations + watched.dropped_updates,
+                    "{disc}"
+                );
+            } else {
+                assert_eq!(series.rounds_total() as usize, watched.rounds, "{disc}");
+            }
+            let line = series.line("k").unwrap().to_json();
+            assert!(line.contains("\"kind\":\"series\""), "{disc}");
+        }
+    }
+
+    #[test]
+    fn deadline_quorum_rounds_charge_wait_not_phantom_upload() {
+        // Sub-quorum rounds burn wall time waiting past the deadline;
+        // abandoned in-flight transfers must not be charged transmit
+        // time the round never spent (which used to push wait_s
+        // negative).  Heavy loss + tight deadline + quorum makes such
+        // rounds common.
+        let ctx = ctx();
+        let f = FaultModel::parse("loss:0.3+deadline:4000000:quorum0.5").unwrap();
+        let cfg = DesConfig::new(Discipline::Sync, 60.0).with_faults(f);
+        let mut p = parse_policy("fixed:2").unwrap();
+        let mut n = process(13);
+        let r = simulate_des(&ctx, p.as_mut(), &mut n, &cfg, Rng::new(4)).unwrap();
+        assert!(r.deadline_misses > 0, "{r:?}");
+        let sum = r.upload_s + r.compute_s + r.wait_s;
+        assert!((sum - r.wall).abs() <= 1e-9 * r.wall.abs().max(1.0), "{sum} vs {}", r.wall);
+        assert!(r.wait_s >= 0.0, "burned deadline time must land in wait_s: {r:?}");
+        // Per-client charged busy time never exceeds the wall clock.
+        assert!(r.upload_s + r.compute_s <= r.wall * (1.0 + 1e-12), "{r:?}");
     }
 
     #[test]

@@ -55,7 +55,7 @@ use super::engine::{rho_effective, DesConfig, DesResult, Discipline};
 use super::faults::{CrashState, FaultModel};
 use crate::netsim::flow::{FlowNet, FlowPreset, REF_BTD};
 use crate::netsim::{DelayModel, NetworkProcess, ProbeEstimator};
-use crate::obs::Telemetry;
+use crate::obs::{RoundSeries, Sample, Telemetry, TraceRecorder};
 use crate::policy::{mean_level, CompressionChoice, CompressionPolicy, PolicyCtx};
 use crate::sim::StoppingRule;
 use crate::util::rng::Rng;
@@ -112,6 +112,39 @@ pub fn simulate_flow_des_with(
     net_rng: Rng,
     telem: &mut Telemetry,
 ) -> Result<DesResult> {
+    simulate_flow_des_obs(
+        ctx,
+        policy,
+        process,
+        preset,
+        cfg,
+        fault_rng,
+        net_rng,
+        telem,
+        &mut RoundSeries::off(),
+        &mut TraceRecorder::off(),
+    )
+}
+
+/// [`simulate_flow_des_with`] plus the round-series and event-trace
+/// recorders.  The flow tier adds the closed-loop channels the
+/// exogenous engine cannot see: `btd_eff` (mean in-band effective BTD
+/// the policy adapts to), per-round `congestion_s` deltas, and a
+/// per-link utilization counter track in the trace.  All-off handles
+/// reduce this to exactly [`simulate_flow_des`].
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_flow_des_obs(
+    ctx: &PolicyCtx,
+    policy: &mut dyn CompressionPolicy,
+    process: &mut dyn NetworkProcess,
+    preset: &FlowPreset,
+    cfg: &DesConfig,
+    fault_rng: Rng,
+    net_rng: Rng,
+    telem: &mut Telemetry,
+    series: &mut RoundSeries,
+    tracer: &mut TraceRecorder,
+) -> Result<DesResult> {
     if process.dim() == 0 {
         return Err(anyhow!("network process has zero clients"));
     }
@@ -132,8 +165,31 @@ pub fn simulate_flow_des_with(
             staleness_exp,
             net_rng,
             telem,
+            series,
+            tracer,
         ),
-        _ => run_round_based_flow(ctx, policy, process, preset, cfg, fault_rng, net_rng, telem),
+        _ => run_round_based_flow(
+            ctx, policy, process, preset, cfg, fault_rng, net_rng, telem, series, tracer,
+        ),
+    }
+}
+
+/// Mean of a slice (NaN when empty) — the `btd_mean`/`btd_eff` series
+/// channels.
+fn mean_of(v: &[f64]) -> f64 {
+    if v.is_empty() {
+        f64::NAN
+    } else {
+        v.iter().sum::<f64>() / v.len() as f64
+    }
+}
+
+/// Emit one `link<i>.util` counter point per link onto the trace's
+/// link track (load over capacity, at time `t`).
+fn trace_link_util(tracer: &mut TraceRecorder, net: &FlowNet, t: f64) {
+    for (i, (load, cap)) in net.link_loads().into_iter().enumerate() {
+        let util = if cap > 0.0 { load / cap } else { 0.0 };
+        tracer.counter(format!("link{i}.util"), t, "util", util);
     }
 }
 
@@ -147,6 +203,8 @@ fn run_round_based_flow(
     mut rng: Rng,
     net_rng: Rng,
     telem: &mut Telemetry,
+    series: &mut RoundSeries,
+    tracer: &mut TraceRecorder,
 ) -> Result<DesResult> {
     let m = process.dim();
     let need = match cfg.discipline {
@@ -215,9 +273,13 @@ fn run_round_based_flow(
     let mut attempt_start = vec![0.0f64; m];
     let mut bits_v = vec![0.0f64; m];
     let mut btd_v = vec![0.0f64; m];
+    // Round-series deltas (only read when the recorder is on).
+    let mut congestion_seen = 0.0f64;
 
     while rounds < cfg.max_rounds {
         rounds += 1;
+        let round_retries = retries;
+        let round_crashes = crash_rounds;
         let c = process.next_state();
         let use_probe = probe.is_some() && !observed.is_empty();
         let choices = if use_probe {
@@ -246,6 +308,9 @@ fn run_round_based_flow(
             crashed[j] = crash.is_down(j, wall);
             if crashed[j] {
                 crash_rounds += 1;
+                if tracer.is_on() {
+                    tracer.instant("crash", wall, Some(j));
+                }
                 continue;
             }
             att[j] = a;
@@ -281,6 +346,9 @@ fn run_round_based_flow(
                 // flight (or in backoff) missed the round.
                 deadline_misses += (expected - popped) as u64;
                 cut = true;
+                if tracer.is_on() {
+                    tracer.instant("deadline_cut", wall + deadline, None);
+                }
                 break;
             }
             last_event_t = t;
@@ -291,11 +359,18 @@ fn run_round_based_flow(
             if done[j] == 1 {
                 first_comp[j] = t;
             }
+            if tracer.is_on() {
+                // One slice per completed attempt; emergent duration.
+                tracer.upload(j, wall + attempt_start[j], t - attempt_start[j]);
+            }
             if done[j] < att[j] {
                 retries += 1;
                 let back = FaultModel::backoff_after(t - attempt_start[j], done[j]);
                 attempt_start[j] = t + back;
                 net.admit_at(j, bits_v[j], btd_v[j], t + back);
+                if tracer.is_on() {
+                    tracer.instant("retransmit", wall + t, Some(j));
+                }
                 continue;
             }
             retrans_sum += t - first_comp[j];
@@ -350,6 +425,29 @@ fn run_round_based_flow(
         delivered.clear();
         delivered.extend((0..m).filter(|&j| got[j] && !lost[j]).map(|j| choices[j]));
         dropped += popped - delivered.len();
+        if series.is_on() {
+            let m_f = m as f64;
+            let cong = net.congestion_s();
+            series.record(Sample {
+                level_mean: mean_level(&choices),
+                level_max: choices.iter().map(|x| x.level as f64).fold(0.0, f64::max),
+                wire_bits: choices.iter().map(|x| ctx.wire_bits(x.level)).sum(),
+                btd_mean: mean_of(&c),
+                btd_eff: mean_of(&observed),
+                congestion_s: (cong - congestion_seen) / m_f,
+                quorum_frac: delivered.len() as f64 / m_f,
+                retrans: (retries - round_retries) as f64,
+                queue_hw: admitted as f64,
+                crashed: (crash_rounds - round_crashes) as f64,
+                wall_s: wall,
+                cohort_mix: process.cohort_mix(),
+                ..Sample::default()
+            });
+            congestion_seen = cong;
+        }
+        if tracer.is_on() {
+            trace_link_util(tracer, &net, wall);
+        }
         if !delivered.is_empty() {
             aggregations += 1;
             qf_sum += delivered.len() as f64 / m as f64;
@@ -440,6 +538,7 @@ fn start_flow_round(
     now: f64,
     version: u64,
     telem: &mut Telemetry,
+    tracer: &mut TraceRecorder,
 ) -> (f64, (u64, CompressionChoice, bool, bool)) {
     let c = process.next_state();
     let use_probe = probe.is_some() && !observed.is_empty();
@@ -459,6 +558,9 @@ fn start_flow_round(
     let btd = c[j] * faults.slowdown_of(j);
     if crash.is_down(j, now) {
         *crash_rounds += 1;
+        if tracer.is_on() {
+            tracer.instant("crash", now, Some(j));
+        }
         let at = crash.recovery_time(j).max(now);
         sagas[j] = UploadSaga {
             att: 1,
@@ -498,6 +600,8 @@ fn run_async_flow(
     staleness_exp: f64,
     net_rng: Rng,
     telem: &mut Telemetry,
+    series: &mut RoundSeries,
+    tracer: &mut TraceRecorder,
 ) -> Result<DesResult> {
     let m = process.dim();
     let theta_tau = ctx.delay.theta() * ctx.tau as f64;
@@ -532,6 +636,8 @@ fn run_async_flow(
     let mut retries = 0u64;
     let mut deadline_misses = 0u64;
     let mut crash_rounds = 0u64;
+    // Round-series delta (only read when the recorder is on).
+    let mut congestion_seen = 0.0f64;
 
     // Async has no barriers: one round-relative clock for the whole
     // run, so round-relative and global time coincide.
@@ -555,6 +661,7 @@ fn run_async_flow(
             0.0,
             version,
             telem,
+            tracer,
         );
         bits_sum += mb;
         pending[j] = p;
@@ -571,6 +678,9 @@ fn run_async_flow(
         if sagas[j].done == 1 {
             sagas[j].first_comp = t;
         }
+        if tracer.is_on() {
+            tracer.upload(j, sagas[j].attempt_start, t - sagas[j].attempt_start);
+        }
         if sagas[j].done < sagas[j].att {
             // Lost packet: the upload re-enters the fair-share
             // contest after its backoff, occupying links meanwhile.
@@ -578,6 +688,9 @@ fn run_async_flow(
             let back = FaultModel::backoff_after(t - sagas[j].attempt_start, sagas[j].done);
             sagas[j].attempt_start = t + back;
             net.admit_at(j, sagas[j].bits, sagas[j].btd, t + back);
+            if tracer.is_on() {
+                tracer.instant("retransmit", t, Some(j));
+            }
             continue;
         }
         retrans_sum += t - sagas[j].first_comp;
@@ -585,6 +698,26 @@ fn run_async_flow(
         telem.sim_span("des.round_s.async", t - wall);
         wall = t;
         let (read_version, choice, was_lost, rejoin) = pending[j];
+        if series.is_on() {
+            let lv = choice.level as f64;
+            let cong = net.congestion_s();
+            let arrived = !rejoin && !was_lost && sagas[j].ok;
+            series.record(Sample {
+                level_mean: lv,
+                level_max: lv,
+                btd_eff: mean_of(&observed),
+                congestion_s: (cong - congestion_seen) / m as f64,
+                quorum_frac: if arrived { 1.0 / m as f64 } else { 0.0 },
+                crashed: if rejoin { 1.0 } else { 0.0 },
+                wall_s: wall,
+                cohort_mix: process.cohort_mix(),
+                ..Sample::default()
+            });
+            congestion_seen = cong;
+        }
+        if tracer.is_on() {
+            trace_link_util(tracer, &net, t);
+        }
         if rejoin {
             // The rejoin upload re-synced a recovered client; its
             // payload is stale by construction and is discarded
@@ -597,6 +730,9 @@ fn run_async_flow(
             if theta_tau + (t - sagas[j].round_start) > cfg.faults.deadline_s {
                 deadline_misses += 1;
                 lost = true;
+                if tracer.is_on() {
+                    tracer.instant("deadline_cut", t, Some(j));
+                }
             }
             if lost {
                 dropped += 1;
@@ -633,6 +769,7 @@ fn run_async_flow(
             t,
             version,
             telem,
+            tracer,
         );
         bits_sum += mb;
         pending[j] = p;
@@ -848,6 +985,51 @@ mod tests {
             );
             assert!(telem.counter("des.events_popped") > 0, "{disc}");
             assert!(telem.histogram("net.link_util").is_some(), "{disc}");
+        }
+    }
+
+    #[test]
+    fn series_and_trace_leave_the_flow_event_core_untouched() {
+        let ctx = ctx();
+        for disc in [Discipline::Sync, Discipline::Async { staleness_exp: 0.5 }] {
+            let mut p1 = parse_policy("nacfl:1").unwrap();
+            let mut p2 = parse_policy("nacfl:1").unwrap();
+            let mut n1 = process(6);
+            let mut n2 = process(6);
+            let cfg = DesConfig::new(disc, 60.0);
+            let pre = preset("tower:2x5");
+            let plain = simulate_flow_des(
+                &ctx, p1.as_mut(), &mut n1, &pre, &cfg, Rng::new(2), Rng::new(7),
+            )
+            .unwrap();
+            let mut series = RoundSeries::on();
+            let mut tracer = TraceRecorder::on();
+            let watched = simulate_flow_des_obs(
+                &ctx,
+                p2.as_mut(),
+                &mut n2,
+                &pre,
+                &cfg,
+                Rng::new(2),
+                Rng::new(7),
+                &mut Telemetry::off(),
+                &mut series,
+                &mut tracer,
+            )
+            .unwrap();
+            assert_eq!(plain.wall.to_bits(), watched.wall.to_bits(), "{disc}");
+            assert_eq!(plain.rounds, watched.rounds, "{disc}");
+            assert!(!series.is_empty(), "{disc}");
+            // The closed-loop channels only the flow tier can fill.
+            let line = series.line("k").unwrap().to_json();
+            assert!(line.contains("\"btd_eff\""), "{disc}");
+            assert!(line.contains("\"congestion_s\""), "{disc}");
+            // Per-link utilization counters landed on the link track.
+            assert!(
+                tracer.events().iter().any(|e| e.ph == 'C' && e.name.starts_with("link")),
+                "{disc}"
+            );
+            assert!(tracer.events().iter().any(|e| e.ph == 'X'), "{disc}");
         }
     }
 

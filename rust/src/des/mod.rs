@@ -47,7 +47,7 @@ pub mod event;
 pub mod faults;
 pub mod flow;
 
-pub use engine::{simulate_des, simulate_des_with, DesConfig, DesResult, Discipline};
+pub use engine::{simulate_des, simulate_des_obs, simulate_des_with, DesConfig, DesResult, Discipline};
 pub use event::{EventQueue, HeapQueue, SchedulerKind};
 pub use faults::{CrashState, FaultModel};
-pub use flow::{simulate_flow_des, simulate_flow_des_with};
+pub use flow::{simulate_flow_des, simulate_flow_des_obs, simulate_flow_des_with};

@@ -15,7 +15,8 @@
 //!   through the same float-exact `to_json` the ledger was written
 //!   with, in the order the surviving records appear in the file;
 //! * each surviving record is followed by its per-run telemetry
-//!   (latest line per `(key, metric)`), matching the writer's layout;
+//!   (latest line per `(key, metric)`) and its round-series line
+//!   (latest per key), matching the writer's layout;
 //! * claims survive only for keys with no completed run (sorted by key
 //!   — claim order is advisory and carries no information);
 //! * campaign-scope telemetry is kept in file order.
@@ -84,6 +85,14 @@ pub fn compact_ledger(path: impl AsRef<Path>) -> Result<CompactOutcome> {
             telem_of.entry(t.key.clone()).or_default().push(i);
         }
     }
+    // Round-series lines: the latest per key, kept only for keys whose
+    // run record survives (a series line without its record is noise).
+    let mut series_of: HashMap<String, usize> = HashMap::new();
+    for (i, s) in led.series.iter().enumerate() {
+        if last_run.contains_key(&s.key) {
+            series_of.insert(s.key.clone(), i);
+        }
+    }
 
     let mut out = String::new();
     let mut kept = 0usize;
@@ -116,6 +125,9 @@ pub fn compact_ledger(path: impl AsRef<Path>) -> Result<CompactOutcome> {
             for &ti in idxs {
                 push(&mut out, led.telem[ti].to_json(), &mut kept);
             }
+        }
+        if let Some(&si) = series_of.get(&key) {
+            push(&mut out, led.series[si].to_json(), &mut kept);
         }
     }
     for t in &led.telem {
@@ -240,6 +252,47 @@ mod tests {
         assert_eq!(led.telem.len(), 1);
         assert_eq!(led.telem[0].counter, Some(9), "latest telemetry survives");
         assert_eq!(led.n_torn, 0, "torn lines are gone");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn compaction_keeps_the_latest_series_line_per_surviving_run() {
+        use crate::obs::{RoundSeries, Sample};
+        let path = tmp("series");
+        let plan = ExperimentPlan::builder("c").build().unwrap();
+        let done = rec("nacfl:1", 0, 10.0);
+        let mut ser = RoundSeries::on();
+        for r in 0..3 {
+            ser.record(Sample { wall_s: r as f64, ..Sample::default() });
+        }
+        let stale = ser.line(&done.key()).unwrap();
+        ser.record(Sample { wall_s: 3.0, ..Sample::default() });
+        let fresh = ser.line(&done.key()).unwrap();
+        // An orphan series line (no run record) must not survive.
+        let orphan = ser.line("no|such|run").unwrap();
+        let body = format!(
+            "{}\n{}\n{}\n{}\n{}\n{}\n",
+            PlanHeader::for_plan(&plan).to_json(),
+            done.to_json(),
+            stale.to_json(),
+            orphan.to_json(),
+            done.to_json(),
+            fresh.to_json(),
+        );
+        std::fs::write(&path, &body).unwrap();
+
+        let outcome = compact_ledger(&path).unwrap();
+        // header + record + latest series line.
+        assert_eq!(outcome.kept, 3);
+        assert_eq!(outcome.dropped, 3, "dupe record, stale series, orphan series");
+        let led = read_dist_ledger(&path).unwrap();
+        assert_eq!(led.series.len(), 1);
+        assert_eq!(led.series[0].to_json(), fresh.to_json(), "latest series survives");
+
+        // Idempotent through a second pass, series line included.
+        let first = std::fs::read_to_string(&path).unwrap();
+        compact_ledger(&path).unwrap();
+        assert_eq!(first, std::fs::read_to_string(&path).unwrap());
         std::fs::remove_file(&path).ok();
     }
 

@@ -11,7 +11,10 @@
 //!   timestamp and lease duration for one pending coordinate key;
 //! * `"kind":"telem"` — an observability line ([`crate::obs::TelemLine`]):
 //!   per-run or campaign-scope counters and histograms, written only
-//!   when telemetry is enabled and never consulted by resume/merge.
+//!   when telemetry is enabled and never consulted by resume/merge;
+//! * `"kind":"series"` — a round-series line ([`crate::obs::SeriesLine`]):
+//!   one decimated per-round time series per run, written only when
+//!   series recording is enabled and equally invisible to resume/merge.
 //!
 //! Untagged lines are [`RunRecord`]s exactly as before.  All three are
 //! append-only; readers resolve conflicts by *last-writer-wins per key*
@@ -20,7 +23,7 @@
 
 use crate::exp::plan::ExperimentPlan;
 use crate::exp::sink::{parse_flat_object, JsonVal, RunRecord};
-use crate::obs::TelemLine;
+use crate::obs::{SeriesLine, TelemLine};
 use crate::util::json;
 use anyhow::{anyhow, Context, Result};
 use std::collections::HashMap;
@@ -163,6 +166,10 @@ pub struct DistLedger {
     /// invisible to resume/merge keying, consumed by `nacfl top` /
     /// `nacfl report`).
     pub telem: Vec<TelemLine>,
+    /// `"kind":"series"` round-series lines in file order (one per run
+    /// when series recording is on; consumed by `nacfl series` /
+    /// `top` / `report`, invisible to resume/merge keying).
+    pub series: Vec<SeriesLine>,
     /// Unparseable lines skipped (torn writes, foreign garbage).
     pub n_torn: usize,
     /// Valid-but-outdated schema-1 run lines (pre-`data_seed`); their
@@ -220,6 +227,10 @@ impl DistLedger {
             },
             Some("telem") => match TelemLine::from_obj(&obj) {
                 Ok(t) => self.telem.push(t),
+                Err(_) => self.n_torn += 1,
+            },
+            Some("series") => match SeriesLine::from_obj(&obj) {
+                Ok(s) => self.series.push(s),
                 Err(_) => self.n_torn += 1,
             },
             Some(_) => self.n_torn += 1,
@@ -327,6 +338,28 @@ mod tests {
         assert_eq!(led.n_torn, 1, "schema-1 lines are legacy, not torn");
         assert_eq!(led.n_legacy, 1);
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn series_lines_dispatch_to_their_own_bucket() {
+        let mut s = crate::obs::RoundSeries::on();
+        for r in 0..5 {
+            s.record(crate::obs::Sample {
+                level_mean: r as f64,
+                ..crate::obs::Sample::default()
+            });
+        }
+        let line = s.line("k1").unwrap().to_json();
+        let mut led = DistLedger::default();
+        led.ingest_line(&line).unwrap();
+        assert_eq!(led.series.len(), 1);
+        assert_eq!(led.series[0].key, "k1");
+        assert_eq!(led.series[0].rounds_total, 5);
+        assert_eq!(led.n_torn, 0, "series lines are not torn lines");
+        assert!(led.runs.is_empty() && led.telem.is_empty());
+        // A truncated series line is torn, never a panic.
+        led.ingest_line(&line[..line.len() / 2]).unwrap();
+        assert_eq!(led.n_torn, 1);
     }
 
     #[test]

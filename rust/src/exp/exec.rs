@@ -55,10 +55,10 @@ use super::sink::{JsonlSink, ResultSink, RunRecord};
 use crate::config::ExperimentConfig;
 use crate::coordinator::{Coordinator, FailureConfig};
 use crate::data::{partition, Dataset, Partition, PartitionKind};
-use crate::des::{simulate_des_with, simulate_flow_des_with, DesConfig, Discipline, SchedulerKind};
+use crate::des::{simulate_des_obs, simulate_flow_des_obs, DesConfig, Discipline, SchedulerKind};
 use crate::metrics::TableWriter;
 use crate::netsim::NetworkProcess;
-use crate::obs::Telemetry;
+use crate::obs::{write_trace_file, RoundSeries, Telemetry, TraceRecorder};
 use crate::pop::{CohortProcess, PopSpec, CLASS_COUNTERS};
 use crate::policy::{PolicyCtx, PolicyEnv, PolicySpec};
 use crate::util::rng::Rng;
@@ -114,6 +114,15 @@ pub struct ExecOptions {
     /// every telemetry call is a no-op on a null handle and the record
     /// stream is byte-identical to pre-telemetry builds.
     pub telemetry: bool,
+    /// Record per-round series and stream one `"kind":"series"` line
+    /// per finished run (`obs::series`).  Same contract as `telemetry`:
+    /// off by default, and with it off the ledger byte stream is
+    /// identical to pre-series builds.
+    pub series: bool,
+    /// Write a Chrome `trace_event` / Perfetto JSON file of the DES
+    /// event history for every executed run to this path
+    /// (`obs::trace`).  `None` (default) records nothing.
+    pub trace: Option<String>,
 }
 
 impl Default for ExecOptions {
@@ -126,6 +135,8 @@ impl Default for ExecOptions {
             worker: None,
             lease_s: DEFAULT_LEASE_S,
             telemetry: false,
+            series: false,
+            trace: None,
         }
     }
 }
@@ -321,13 +332,18 @@ pub fn execute(
         fp: &fp,
         threads: opts.threads,
         telemetry: opts.telemetry,
+        series: opts.series || plan.series,
+        trace: opts.trace.is_some(),
         worker: worker.clone(),
         lease_s: opts.lease_s,
     };
     let mut data = DataCache::default();
+    let mut traces: Vec<(String, TraceRecorder)> = Vec::new();
     let mut n_executed = 0usize;
     write_claims(&mut ledger, worker.as_deref(), opts.lease_s, &cells, &mine)?;
-    n_executed += execute_batch(&bc, &mine, &mut data, &mut ledger, sinks, &mut slots, &mut telem)?;
+    n_executed += execute_batch(
+        &bc, &mine, &mut data, &mut ledger, sinks, &mut slots, &mut telem, &mut traces,
+    )?;
 
     // Work stealing: adopt other workers' finished runs from the shared
     // ledger, then take over pending keys with no live foreign claim.
@@ -377,10 +393,18 @@ pub fn execute(
                 }
                 telem.count("dist.steals", steal.len() as u64);
                 write_claims(&mut ledger, worker.as_deref(), opts.lease_s, &cells, &steal)?;
-                n_executed +=
-                    execute_batch(&bc, &steal, &mut data, &mut ledger, sinks, &mut slots, &mut telem)?;
+                n_executed += execute_batch(
+                    &bc, &steal, &mut data, &mut ledger, sinks, &mut slots, &mut telem,
+                    &mut traces,
+                )?;
             }
         }
+    }
+
+    // One Chrome trace_event file over everything this invocation
+    // executed (cached runs have no event history to export).
+    if let Some(path) = &opts.trace {
+        write_trace_file(path, &traces)?;
     }
 
     let mut records: Vec<RunRecord> = Vec::with_capacity(n);
@@ -433,10 +457,19 @@ struct BatchCtx<'a> {
     /// Per-run telemetry handles are live (and stream `"kind":"telem"`
     /// lines per finished run) iff set.
     telemetry: bool,
+    /// Per-run round-series recorders are live (and stream one
+    /// `"kind":"series"` line per finished run) iff set.
+    series: bool,
+    /// Per-run trace recorders are live iff set (`--trace <path>`).
+    trace: bool,
     /// Claim identity for mid-batch lease renewal (None: no claims).
     worker: Option<String>,
     lease_s: u64,
 }
+
+/// One finished grid run: its record plus the observability handles the
+/// collector streams/harvests (all three are one-word nulls when off).
+type GridRun = (RunRecord, Telemetry, RoundSeries, TraceRecorder);
 
 /// Append claim lines for a batch of cells (no-op without a ledger or a
 /// worker id).  Claims are advisory — see `exp::dist::ledger`.
@@ -460,7 +493,9 @@ fn write_claims(
 /// Execute one batch of cell indices: analytic + DES runs fan out over
 /// the work-stealing pool, ML runs go sequentially through the
 /// coordinator with the campaign [`DataCache`].  Fills `slots`, streams
-/// every record to the ledger and sinks, returns the batch size.
+/// every record to the ledger and sinks, harvests live trace recorders
+/// into `traces` (plan order), returns the batch size.
+#[allow(clippy::too_many_arguments)]
 fn execute_batch(
     bc: &BatchCtx<'_>,
     idxs: &[usize],
@@ -469,6 +504,7 @@ fn execute_batch(
     sinks: &mut [&mut dyn ResultSink],
     slots: &mut [Option<RunRecord>],
     telem: &mut Telemetry,
+    traces: &mut Vec<(String, TraceRecorder)>,
 ) -> Result<usize> {
     if idxs.is_empty() {
         return Ok(0);
@@ -498,6 +534,8 @@ fn execute_batch(
                     &bc.ctxs[cell.compressor.as_str()],
                     bc.fp,
                     bc.telemetry,
+                    bc.series,
+                    bc.trace,
                 )?;
                 emit_timed(ledger, sinks, &rec, telem)?;
                 pending_grid[k] = false;
@@ -517,6 +555,8 @@ fn execute_batch(
                         &bc.ctxs[cell.compressor.as_str()],
                         bc.fp,
                         bc.telemetry,
+                        bc.series,
+                        bc.trace,
                     )
                 },
                 |k, rec| {
@@ -561,6 +601,11 @@ fn execute_batch(
             return Err(e);
         }
         for (k, rec) in recs.into_iter().enumerate() {
+            // Harvest live trace recorders in task (= plan) order, so
+            // the exported file is deterministic across thread counts.
+            if rec.3.is_on() {
+                traces.push((bc.cells[grid[k]].key(), rec.3));
+            }
             slots[grid[k]] = Some(rec.0);
         }
     }
@@ -605,27 +650,30 @@ fn execute_batch(
         rec.compute_s = 0.0;
         rec.wait_s = wall;
         rec.trace = Some(trace);
-        let run = (rec, Telemetry::off());
+        let run = (rec, Telemetry::off(), RoundSeries::off(), TraceRecorder::off());
         emit_timed(ledger, sinks, &run, telem)?;
         slots[i] = Some(run.0);
     }
     Ok(idxs.len())
 }
 
-/// Write one finished run — its record line, then its per-run telem
-/// lines — to the ledger (append timed into `telem` when telemetry is
-/// on), then fan the record out to the display sinks.
+/// Write one finished run — its record line, its per-run telem lines,
+/// then its series line — to the ledger (append timed into `telem`
+/// when telemetry is on), then fan the record out to the display sinks.
 fn emit_timed(
     ledger: &mut Option<JsonlSink>,
     sinks: &mut [&mut dyn ResultSink],
-    run: &(RunRecord, Telemetry),
+    run: &GridRun,
     telem: &mut Telemetry,
 ) -> Result<()> {
-    let (rec, run_telem) = run;
+    let (rec, run_telem, run_series, _) = run;
     if let Some(l) = ledger.as_mut() {
         let t0 = telem.is_on().then(Instant::now);
         l.on_record(rec)?;
         for line in run_telem.lines("run", &rec.key()) {
+            l.raw_line(&line.to_json())?;
+        }
+        if let Some(line) = run_series.line(&rec.key()) {
             l.raw_line(&line.to_json())?;
         }
         if let Some(t0) = t0 {
@@ -754,28 +802,42 @@ fn fault_stream_id(scenario: &str, discipline: &str, faults: &str, pop: &str) ->
 }
 
 /// One analytic- or DES-tier run (the parallel task body).  Returns the
-/// record together with the run's own telemetry handle (a no-op null
-/// handle unless `telemetry`), which the collector streams to the
-/// ledger as per-run `"kind":"telem"` lines.
+/// record together with the run's own observability handles (no-op null
+/// handles unless enabled): telemetry and series are streamed to the
+/// ledger by the collector as `"kind":"telem"` / `"kind":"series"`
+/// lines, the trace recorder is harvested into the `--trace` export.
 fn execute_grid_run(
     plan: &ExperimentPlan,
     cell: &PlanCell,
     ctx: &PolicyCtx,
     fp: &str,
     telemetry: bool,
-) -> Result<(RunRecord, Telemetry)> {
+    series_on: bool,
+    trace_on: bool,
+) -> Result<GridRun> {
     let k_eps = match cell.tier {
         Tier::Analytic { k_eps } => k_eps,
         Tier::Ml => return Err(anyhow!("ml cells are not grid tasks")),
     };
     let cfg = plan.cell_config(cell);
     let mut telem = Telemetry::new(telemetry);
+    let mut series = RoundSeries::new(series_on);
+    let mut tracer = TraceRecorder::new(trace_on);
     let mut rec = base_record(plan, cell, fp);
     if routes_analytic(plan, cell) {
         // The exact single-run float path the legacy tables use.  Flow
         // scenarios never take it: shared-bottleneck delays only exist
-        // inside the event engine.
-        let r = run_analytic_once(ctx, &cfg, &cell.policy, cell.seed, k_eps, &mut telem)?;
+        // inside the event engine.  (The analytic loop has no transfer
+        // events, so the trace recorder stays empty here.)
+        let r = run_analytic_once(
+            ctx,
+            &cfg,
+            &cell.policy,
+            cell.seed,
+            k_eps,
+            &mut telem,
+            &mut series,
+        )?;
         rec.wall = r.wall;
         rec.rounds = r.rounds;
         rec.converged = r.rounds < ANALYTIC_ROUND_CAP;
@@ -836,7 +898,7 @@ fn execute_grid_run(
             // Flow cells: same fault stream, plus a dedicated cross-traffic
             // stream derived purely from the run seed.
             let net_rng = Rng::new(cell.seed).derive("flow", 0);
-            simulate_flow_des_with(
+            simulate_flow_des_obs(
                 ctx,
                 policy.as_mut(),
                 process,
@@ -845,9 +907,20 @@ fn execute_grid_run(
                 fault_rng,
                 net_rng,
                 &mut telem,
+                &mut series,
+                &mut tracer,
             )?
         } else {
-            simulate_des_with(ctx, policy.as_mut(), process, &des, fault_rng, &mut telem)?
+            simulate_des_obs(
+                ctx,
+                policy.as_mut(),
+                process,
+                &des,
+                fault_rng,
+                &mut telem,
+                &mut series,
+                &mut tracer,
+            )?
         };
         if let Some(c) = cohort.as_ref() {
             rec.sampled_k = c.spec.k as f64;
@@ -877,7 +950,7 @@ fn execute_grid_run(
         rec.retrans_s = r.retrans_s;
         rec.quorum_frac = r.quorum_frac;
     }
-    Ok((rec, telem))
+    Ok((rec, telem, series, tracer))
 }
 
 /// Merged sweep-style table over a finished campaign: one row per table

@@ -18,8 +18,10 @@
 //! * [`sink`] — composable [`ResultSink`]s: JSONL ledger, CSV,
 //!   in-memory, paper-table writer, progress.  With `--telemetry`, the
 //!   engine also streams `"kind":"telem"` observability lines
-//!   (`crate::obs`) into the ledger, read back by `nacfl top` /
-//!   `nacfl report`; every record carries a per-run delay decomposition
+//!   (`crate::obs`) into the ledger — and with `--series`,
+//!   `"kind":"series"` per-round time-series lines — read back by
+//!   `nacfl top` / `nacfl report` / `nacfl series`; every record
+//!   carries a per-run delay decomposition
 //!   (`upload_s`/`compute_s`/`wait_s`) telemetry on or off.
 //! * [`runner`] / [`grid`] / [`presets`] — tier definitions, the frozen
 //!   analytic float path, paper-table shapes, the work-stealing task

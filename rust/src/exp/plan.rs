@@ -119,6 +119,11 @@ pub struct ExperimentPlan {
     /// streamed, never a result byte, so toggling it neither invalidates
     /// a ledger nor re-executes a run.
     pub telemetry: bool,
+    /// Default for [`crate::exp::ExecOptions::series`] (`[campaign]
+    /// series` key; the `--series` flag forces it on).  Like `telemetry`
+    /// it is not part of the plan identity: round-series lines are
+    /// observability, never a result byte.
+    pub series: bool,
 }
 
 /// Keys accepted in a `[campaign]` manifest section.
@@ -134,6 +139,7 @@ const CAMPAIGN_KEYS: &[&str] = &[
     "data_seeds",
     "seeds",
     "telemetry",
+    "series",
 ];
 
 /// Canonical spelling of a `faults:<spec>` label; malformed specs pass
@@ -168,6 +174,7 @@ impl ExperimentPlan {
             data_seeds: None,
             seeds: None,
             telemetry: None,
+            series: None,
         }
     }
 
@@ -194,6 +201,7 @@ impl ExperimentPlan {
             data_seeds: vec![base.data_seed],
             seeds: base.seeds.clone(),
             telemetry: false,
+            series: false,
             base,
         }
     }
@@ -215,6 +223,7 @@ impl ExperimentPlan {
             data_seeds: vec![cfg.data_seed],
             seeds: cfg.seeds.clone(),
             telemetry: false,
+            series: false,
         }
     }
 
@@ -622,6 +631,12 @@ impl ExperimentPlan {
                 .ok_or_else(|| anyhow!("campaign::telemetry must be a boolean"))?;
             b = b.telemetry(on);
         }
+        if let Some(v) = sec.get("series") {
+            let on = v
+                .as_bool()
+                .ok_or_else(|| anyhow!("campaign::series must be a boolean"))?;
+            b = b.series(on);
+        }
         b.build()
     }
 
@@ -665,6 +680,9 @@ impl ExperimentPlan {
         if self.telemetry {
             sec.insert("telemetry".to_string(), Value::Bool(true));
         }
+        if self.series {
+            sec.insert("series".to_string(), Value::Bool(true));
+        }
         let mut doc = self.base.to_doc();
         doc.insert("campaign".to_string(), sec);
         doc
@@ -700,6 +718,7 @@ pub struct PlanBuilder {
     data_seeds: Option<Vec<u64>>,
     seeds: Option<Vec<u64>>,
     telemetry: Option<bool>,
+    series: Option<bool>,
 }
 
 impl PlanBuilder {
@@ -772,6 +791,12 @@ impl PlanBuilder {
         self
     }
 
+    /// Campaign-default round-series recording (off unless set).
+    pub fn series(mut self, on: bool) -> Self {
+        self.series = Some(on);
+        self
+    }
+
     /// Resolve defaults from the base and validate.
     pub fn build(self) -> Result<ExperimentPlan> {
         let base = self.base;
@@ -801,6 +826,7 @@ impl PlanBuilder {
             data_seeds: self.data_seeds.unwrap_or_else(|| vec![base.data_seed]),
             seeds: self.seeds.unwrap_or_else(|| base.seeds.clone()),
             telemetry: self.telemetry.unwrap_or(false),
+            series: self.series.unwrap_or(false),
             base,
         };
         plan.validate()?;
@@ -1002,6 +1028,24 @@ name = "defaults"
         assert!(
             ExperimentPlan::parse_manifest("[campaign]\ntiers = [\"warp:9\"]").is_err(),
             "bad tier spec"
+        );
+    }
+
+    #[test]
+    fn series_key_round_trips_and_stays_out_of_identity() {
+        let plain = ExperimentPlan::builder("s").build().unwrap();
+        assert!(!plain.series);
+        assert!(!plain.manifest().contains("series"), "default-off key stays out");
+        let on = ExperimentPlan::builder("s").series(true).build().unwrap();
+        assert!(on.series);
+        // Observability toggles are not campaign identity.
+        assert_eq!(on.plan_hash(), plain.plan_hash());
+        let back = ExperimentPlan::parse_manifest(&on.manifest()).unwrap();
+        assert!(back.series, "manifest: {}", on.manifest());
+        assert_eq!(back.to_string(), on.to_string());
+        assert!(
+            ExperimentPlan::parse_manifest("[campaign]\nseries = 3\n").is_err(),
+            "series must be a boolean"
         );
     }
 

@@ -24,7 +24,7 @@
 use crate::config::ExperimentConfig;
 use crate::data::{mnist, synth, Dataset};
 use crate::metrics::{gain_vs, RunTrace, Summary, TableWriter};
-use crate::obs::Telemetry;
+use crate::obs::{RoundSeries, Telemetry};
 use crate::policy::{PolicyCtx, PolicyEnv, PolicySpec};
 use crate::sim::{Session, SimResult};
 use crate::util::spec::Spec;
@@ -36,9 +36,10 @@ pub(crate) const ANALYTIC_ROUND_CAP: usize = 10_000_000;
 
 /// One analytic-tier run for (policy spec, seed) — the single float
 /// path of every analytic cell (`exp::exec` routes through it), so no
-/// two executors can ever diverge.  The telemetry handle observes the
-/// round loop and (for solver-backed policies) collects solver stats;
-/// an off handle leaves the float path exactly as before.
+/// two executors can ever diverge.  The telemetry and round-series
+/// handles observe the round loop and (for solver-backed policies)
+/// collect solver stats; off handles leave the float path exactly as
+/// before.
 pub(crate) fn run_analytic_once(
     ctx: &PolicyCtx,
     cfg: &ExperimentConfig,
@@ -46,15 +47,17 @@ pub(crate) fn run_analytic_once(
     seed: u64,
     k_eps: f64,
     telem: &mut Telemetry,
+    series: &mut RoundSeries,
 ) -> Result<SimResult> {
     let env = PolicyEnv::for_cell(ctx, cfg.scenario, cfg.m, seed);
     let mut policy = PolicySpec::parse(spec)?.build(&env)?;
     policy.set_telemetry(telem.is_on());
     let mut process = cfg.congestion_process(seed)?;
-    let r = Session::new(ctx, k_eps, ANALYTIC_ROUND_CAP).run_with(
+    let r = Session::new(ctx, k_eps, ANALYTIC_ROUND_CAP).run_with_obs(
         policy.as_mut(),
         &mut process,
         telem,
+        series,
     );
     if let Some(s) = policy.solver_stats() {
         telem.count("solver.solves", s.solves);
@@ -225,6 +228,7 @@ mod tests {
                         seed,
                         k_eps,
                         &mut Telemetry::off(),
+                        &mut RoundSeries::off(),
                     )
                     .unwrap();
                     times.push(r.wall);

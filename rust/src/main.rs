@@ -6,6 +6,7 @@
 //!   compact <ledger.jsonl>          drop superseded ledger lines in place
 //!   top <ledger.jsonl>              live fleet TUI over a (shared) ledger
 //!   report <a.jsonl> ...            offline campaign health report
+//!   series <ledger.jsonl>           inspect recorded round series (summary/CSV/plot)
 //!   exp <table1..table4|theorem1|fig3|all>   regenerate a paper table / figure
 //!   train                           one full FedCOM-V training run
 //!   sim                             one analytic-tier cell (fast)
@@ -58,6 +59,11 @@
 //!   nacfl run plan.toml --shard 1/2 --ledger w1.jsonl   # machine B
 //!   nacfl merge w0.jsonl w1.jsonl --plan plan.toml --output merged.jsonl
 //!   nacfl run plan.toml --telemetry             # stream "kind":"telem" lines
+//!   nacfl run plan.toml --series                # stream "kind":"series" round series
+//!   nacfl run plan.toml --series --trace trace.json  # + Chrome/Perfetto event trace
+//!   nacfl series results/campaign.jsonl --key flow --plot  # watch NAC-FL adapt
+//!   nacfl series results/campaign.jsonl --csv series.csv
+//!   nacfl des --scenario flow:tower:2x5 --trace des_trace.json
 //!   nacfl top results/campaign.jsonl --plan plan.toml   # watch the fleet live
 //!   nacfl report w0.jsonl w1.jsonl --plan plan.toml     # health + coverage
 //!   nacfl run examples/campaign_flow.toml --out results  # shared-bottleneck flow campaign
@@ -144,8 +150,12 @@ fn flags() -> Vec<nacfl::util::cli::FlagSpec> {
         flag("emit-manifest", "write the fully-resolved manifest and exit (run only)", None),
         flag("plan", "campaign manifest for coverage checks + tables (merge/top/report)", None),
         flag("output", "merged ledger path (merge only)", None),
-        flag("csv", "merged per-run CSV path (merge only)", None),
+        flag("csv", "CSV path: merged runs (merge) or long-form series rows (series)", None),
         bool_flag("telemetry", "collect + stream \"kind\":\"telem\" observability lines (run only)"),
+        bool_flag("series", "record + stream \"kind\":\"series\" round-series lines (run only)"),
+        flag("trace", "write a Chrome trace_event JSON of the DES event history (run/des)", None),
+        flag("key", "filter series rows to keys containing this substring (series only)", None),
+        bool_flag("plot", "render the level/congestion trajectories on a terminal canvas (series only)"),
         bool_flag("compact", "compact the ledger after the campaign finishes (run only)"),
         flag("interval", "refresh seconds between frames (top only)", Some("1")),
         flag("frames", "stop after N frames, 0 = until complete (top only)", Some("0")),
@@ -327,8 +337,13 @@ fn cmd_run(args: &Args) -> Result<()> {
         worker: args.get("worker").map(str::to_string),
         lease_s: args.get_u64("lease")?,
         telemetry: args.get_bool("telemetry") || plan.telemetry,
+        series: args.get_bool("series"),
+        trace: args.get("trace").map(str::to_string),
     };
     let summary = execute(&plan, &opts, &mut [&mut progress, &mut tables, &mut csv])?;
+    if let Some(t) = &opts.trace {
+        eprintln!("event trace -> {t} (open in chrome://tracing or ui.perfetto.dev)");
+    }
     if summary.n_skipped == 0 {
         for t in &tables.tables {
             println!("{}", t.render());
@@ -485,6 +500,83 @@ fn cmd_report(args: &Args) -> Result<()> {
     print!("{}", report.text);
     if plan.is_some() && report.gaps > 0 {
         anyhow::bail!("coverage incomplete: {} run(s) missing", report.gaps);
+    }
+    Ok(())
+}
+
+/// `nacfl series <ledger.jsonl>`: inspect the `"kind":"series"` round
+/// series recorded by `--series` runs.  Default prints one summary row
+/// per run; `--csv <path>` exports the long-form rows (one per kept
+/// round); `--plot` renders the compression-level and congestion
+/// trajectories on the `metrics::plot` canvas.  `--key <substr>`
+/// filters runs by coordinate key.
+fn cmd_series(args: &Args) -> Result<()> {
+    use nacfl::metrics::plot::{render, Series};
+    use nacfl::obs::{Sample, SeriesLine};
+    let path = args.positionals.first().ok_or_else(|| {
+        anyhow::anyhow!(
+            "usage: nacfl series <ledger.jsonl> [--key substr] [--csv rows.csv] [--plot]"
+        )
+    })?;
+    let led = nacfl::exp::read_dist_ledger(path)?;
+    // Latest series line per run key, in key order.
+    let mut by_key: std::collections::BTreeMap<&str, &SeriesLine> = Default::default();
+    for s in &led.series {
+        by_key.insert(&s.key, s);
+    }
+    if let Some(filter) = args.get("key") {
+        by_key.retain(|k, _| k.contains(filter));
+    }
+    if by_key.is_empty() {
+        anyhow::bail!(
+            "no series lines in {path}{} (record them with `nacfl run --series`)",
+            args.get("key")
+                .map(|k| format!(" matching key `{k}`"))
+                .unwrap_or_default()
+        );
+    }
+    if let Some(out) = args.get("csv") {
+        let mut text = SeriesLine::csv_header();
+        text.push('\n');
+        for s in by_key.values() {
+            text.push_str(&s.csv());
+        }
+        std::fs::write(out, text)?;
+        eprintln!("{} run series -> {out}", by_key.len());
+        return Ok(());
+    }
+    for (k, s) in &by_key {
+        println!(
+            "{k}: {} of {} round(s) kept (stride {})",
+            s.rounds.len(),
+            s.rounds_total,
+            s.stride
+        );
+        if !args.get_bool("plot") {
+            continue;
+        }
+        let chan = |f: fn(&Sample) -> f64| -> Vec<(f64, f64)> {
+            s.rounds
+                .iter()
+                .zip(s.samples.iter())
+                .map(|(&r, smp)| (r as f64, f(smp)))
+                .filter(|(_, y)| y.is_finite())
+                .collect()
+        };
+        let mut plots = Vec::new();
+        let level = chan(|x| x.level_mean);
+        if !level.is_empty() {
+            plots.push(Series { label: "mean compression level".into(), points: level, glyph: '*' });
+        }
+        let cong = chan(|x| x.congestion_s);
+        if !cong.is_empty() {
+            plots.push(Series { label: "congestion s/round".into(), points: cong, glyph: 'o' });
+        }
+        if plots.is_empty() {
+            println!("(no finite level/congestion channels to plot)");
+        } else {
+            print!("{}", render(&plots, 60, 10));
+        }
     }
     Ok(())
 }
@@ -647,7 +739,14 @@ fn cmd_des(args: &Args) -> Result<()> {
         .build()?;
     let started = std::time::Instant::now();
     let threads = resolve_threads(cfg.grid_threads);
-    let summary = execute(&plan, &ExecOptions::with_threads(threads), &mut [])?;
+    let opts = ExecOptions {
+        trace: args.get("trace").map(str::to_string),
+        ..ExecOptions::with_threads(threads)
+    };
+    let summary = execute(&plan, &opts, &mut [])?;
+    if let Some(t) = &opts.trace {
+        eprintln!("event trace -> {t} (open in chrome://tracing or ui.perfetto.dev)");
+    }
     let table = campaign_table("DES sweep: mean time-to-target", &plan, &summary.records)?;
     println!("{}", table.render());
     let unconverged = summary.records.iter().filter(|c| !c.converged).count();
@@ -765,6 +864,7 @@ fn main() {
         ("compact", "rewrite a campaign ledger in place without superseded lines"),
         ("top", "live fleet TUI: tail a campaign ledger, bars + workers + telemetry"),
         ("report", "offline health report: coverage, stragglers, telemetry rollup"),
+        ("series", "inspect recorded round series: summary, CSV export, terminal plot"),
         ("exp", "regenerate a paper table/figure (table1..table4, theorem1, fig3, all)"),
         ("train", "one full FedCOM-V training run"),
         ("sim", "one analytic-tier cell"),
@@ -778,6 +878,7 @@ fn main() {
         Some("compact") => cmd_compact(&args),
         Some("top") => cmd_top(&args),
         Some("report") => cmd_report(&args),
+        Some("series") => cmd_series(&args),
         Some("exp") => {
             let which = args
                 .positionals

@@ -13,6 +13,12 @@ pub trait NetworkProcess: Send {
     fn dim(&self) -> usize;
     /// Advance one round; returns the BTD vector `c^n` (seconds per bit).
     fn next_state(&mut self) -> Vec<f64>;
+    /// Mean class index of the current round's participants — a
+    /// round-series signal (`obs::series`).  `NaN` for processes with
+    /// no class structure (everything except `pop:` cohorts).
+    fn cohort_mix(&self) -> f64 {
+        f64::NAN
+    }
 }
 
 /// Log-normal BTD over an AR(1) latent process.

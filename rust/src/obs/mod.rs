@@ -29,7 +29,12 @@
 //! `nacfl report` (this module's [`top`] / [`report`]) read them back.
 
 pub mod report;
+pub mod series;
 pub mod top;
+pub mod trace;
+
+pub use series::{RoundSeries, Sample, SeriesLine, SERIES_CAP};
+pub use trace::{write_trace_file, TraceRecorder, TRACE_EVENT_CAP};
 
 use crate::util::json;
 use anyhow::{anyhow, Result};
@@ -37,8 +42,9 @@ use std::collections::HashMap;
 use std::time::Instant;
 
 /// Number of log-2 buckets in a [`Histogram`].  Bucket `i` covers
-/// `[2^(i-32), 2^(i-31))`; values `<= 0` (and sub-`2^-32` values) land
-/// in bucket 0, values `>= 2^31` clamp into the last bucket.
+/// `[2^(i-32), 2^(i-31))`; NaN, negative, zero and sub-`2^-32` values
+/// land in bucket 0, values `>= 2^31` (including `+inf`) clamp into the
+/// last bucket.
 pub const N_BUCKETS: usize = 64;
 
 /// Allocation-free log-2 bucket histogram (count / sum / min / max +
@@ -66,10 +72,15 @@ impl Default for Histogram {
 }
 
 /// The bucket index for a value: `floor(log2(v)) + 32`, clamped to the
-/// array.  Non-positive and non-finite values go to bucket 0.
+/// array.  Total for every `f64`: NaN and non-positive values go to
+/// bucket 0, `+inf` clamps into the last bucket like any over-range
+/// value — no input can panic or index out of bounds.
 pub fn bucket_of(v: f64) -> usize {
-    if !(v.is_finite() && v > 0.0) {
+    if v.is_nan() || v <= 0.0 {
         return 0;
+    }
+    if v == f64::INFINITY {
+        return N_BUCKETS - 1;
     }
     (v.log2().floor() as i64 + 32).clamp(0, N_BUCKETS as i64 - 1) as usize
 }
@@ -79,11 +90,12 @@ impl Histogram {
         if v.is_nan() {
             return;
         }
-        self.count += 1;
+        self.count = self.count.saturating_add(1);
         self.sum += v;
         self.min = self.min.min(v);
         self.max = self.max.max(v);
-        self.buckets[bucket_of(v)] += 1;
+        let b = bucket_of(v);
+        self.buckets[b] = self.buckets[b].saturating_add(1);
     }
 
     pub fn mean(&self) -> f64 {
@@ -95,14 +107,15 @@ impl Histogram {
     }
 
     /// Fold another histogram into this one (report aggregation across
-    /// ledgers / workers).
+    /// ledgers / workers).  Counts saturate instead of overflowing —
+    /// merged fleet histograms must never take the reader down.
     pub fn merge(&mut self, other: &Histogram) {
-        self.count += other.count;
+        self.count = self.count.saturating_add(other.count);
         self.sum += other.sum;
         self.min = self.min.min(other.min);
         self.max = self.max.max(other.max);
         for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
-            *a += b;
+            *a = a.saturating_add(*b);
         }
     }
 
@@ -157,7 +170,9 @@ struct Inner {
 fn bump(table: &mut Vec<(&'static str, u64)>, name: &'static str, delta: u64, max: bool) {
     for (k, v) in table.iter_mut() {
         if *k == name {
-            *v = if max { (*v).max(delta) } else { *v + delta };
+            // Saturating: a runaway counter pins at u64::MAX instead of
+            // panicking (debug) or wrapping to a lie (release).
+            *v = if max { (*v).max(delta) } else { v.saturating_add(delta) };
             return;
         }
     }
@@ -449,15 +464,69 @@ mod tests {
         assert_eq!(bucket_of(2.0), 33);
         assert_eq!(bucket_of(0.5), 31);
         assert_eq!(bucket_of(0.75), 31);
-        // Degenerate inputs land in bucket 0 instead of panicking.
+        // Degenerate inputs land in a bucket instead of panicking:
+        // non-positive and NaN in bucket 0, +inf clamped to the top.
         assert_eq!(bucket_of(0.0), 0);
         assert_eq!(bucket_of(-3.0), 0);
-        assert_eq!(bucket_of(f64::INFINITY), 0);
+        assert_eq!(bucket_of(-0.0), 0);
+        assert_eq!(bucket_of(f64::NAN), 0);
+        assert_eq!(bucket_of(f64::NEG_INFINITY), 0);
+        assert_eq!(bucket_of(f64::INFINITY), N_BUCKETS - 1);
         // Clamped at both ends.
         assert_eq!(bucket_of(1e-300), 0);
         assert_eq!(bucket_of(1e300), N_BUCKETS - 1);
+        assert_eq!(bucket_of(f64::MIN_POSITIVE), 0);
+        assert_eq!(bucket_of(f64::MAX), N_BUCKETS - 1);
         // Nanosecond-scale span values stay well inside the array.
         assert_eq!(bucket_of(1e9), 61);
+    }
+
+    #[test]
+    fn counts_saturate_instead_of_overflowing() {
+        // Counter near the ceiling: one more bump must pin, not wrap.
+        let mut t = Telemetry::on();
+        t.count("c", u64::MAX - 1);
+        t.count("c", 5);
+        assert_eq!(t.counter("c"), u64::MAX);
+        t.count("c", 1);
+        assert_eq!(t.counter("c"), u64::MAX, "stays pinned");
+
+        // Histogram merge with both counts near the ceiling.
+        let mut a = Histogram::default();
+        a.observe(1.0);
+        a.count = u64::MAX - 1;
+        a.buckets[32] = u64::MAX - 1;
+        let mut b = Histogram::default();
+        b.observe(1.0);
+        b.count = 7;
+        b.buckets[32] = 7;
+        a.merge(&b);
+        assert_eq!(a.count, u64::MAX);
+        assert_eq!(a.buckets[32], u64::MAX);
+
+        // observe() at the ceiling saturates too.
+        let mut h = Histogram::default();
+        h.count = u64::MAX;
+        h.buckets[32] = u64::MAX;
+        h.observe(1.0);
+        assert_eq!(h.count, u64::MAX);
+        assert_eq!(h.buckets[32], u64::MAX);
+    }
+
+    #[test]
+    fn degenerate_observations_stay_in_range() {
+        // +inf is observable (clamps into the top bucket); NaN is
+        // ignored; negatives land in bucket 0 — nothing panics.
+        let mut h = Histogram::default();
+        h.observe(f64::INFINITY);
+        assert_eq!(h.count, 1);
+        assert_eq!(h.buckets[N_BUCKETS - 1], 1);
+        h.observe(f64::NAN);
+        assert_eq!(h.count, 1, "NaN is not an observation");
+        h.observe(-2.0);
+        assert_eq!(h.count, 2);
+        assert_eq!(h.buckets[0], 1);
+        assert_eq!(h.min, -2.0);
     }
 
     #[test]

@@ -15,7 +15,7 @@
 use crate::exp::dist::ledger::{read_dist_ledger, DistLedger};
 use crate::exp::plan::ExperimentPlan;
 use crate::exp::sink::RunRecord;
-use crate::obs::{Histogram, TelemLine};
+use crate::obs::{Histogram, SeriesLine, TelemLine};
 use anyhow::Result;
 use std::collections::{BTreeMap, BTreeSet};
 use std::path::Path;
@@ -86,10 +86,11 @@ pub fn build_report(
     let mut header = None;
     for (label, led) in ledgers {
         out.push_str(&format!(
-            "{label}: {} run, {} claim, {} telem, {} torn, {} legacy line(s)\n",
+            "{label}: {} run, {} claim, {} telem, {} series, {} torn, {} legacy line(s)\n",
             led.runs.len(),
             led.claims.len(),
             led.telem.len(),
+            led.series.len(),
             led.n_torn,
             led.n_legacy
         ));
@@ -198,6 +199,34 @@ pub fn build_report(
                     *n as f64 / sampled_total as f64 * 100.0
                 ));
             }
+        }
+    }
+
+    // Round-series rollup: one row per recorded run (latest series line
+    // per key across ledgers) — storage accounting plus the compression
+    // level's trajectory endpoints, the quick "did the policy adapt"
+    // check without leaving the terminal.
+    let mut series_by_key: BTreeMap<&str, &SeriesLine> = BTreeMap::new();
+    for (_, led) in ledgers {
+        for s in &led.series {
+            series_by_key.insert(&s.key, s);
+        }
+    }
+    if !series_by_key.is_empty() {
+        out.push_str(&format!("\nround series ({} run(s)):\n", series_by_key.len()));
+        for (k, s) in series_by_key.iter().take(10) {
+            let lvl = |o: Option<&crate::obs::Sample>| o.map(|x| x.level_mean).unwrap_or(f64::NAN);
+            out.push_str(&format!(
+                "  {k}: {} of {} round(s) kept (stride {}), level {:.2} -> {:.2}\n",
+                s.rounds.len(),
+                s.rounds_total,
+                s.stride,
+                lvl(s.samples.first()),
+                lvl(s.samples.last())
+            ));
+        }
+        if series_by_key.len() > 10 {
+            out.push_str(&format!("  ... and {} more\n", series_by_key.len() - 10));
         }
     }
 
@@ -454,6 +483,37 @@ mod tests {
         assert!(report.text.contains("steals: 3"), "{}", report.text);
         assert_eq!(report.gaps, 0, "no plan, no header -> no expectation");
         assert!(report.text.contains("coverage gaps: 0"), "{}", report.text);
+    }
+
+    #[test]
+    fn series_section_lists_kept_rounds_per_run() {
+        use crate::obs::{RoundSeries, Sample};
+        let mut led = DistLedger::default();
+        let r = rec("nacfl:1", 0, 10.0);
+        let mut ser = RoundSeries::on();
+        for i in 0..5 {
+            ser.record(Sample {
+                level_mean: 2.0 + i as f64 * 0.5,
+                wall_s: i as f64,
+                ..Sample::default()
+            });
+        }
+        led.series.push(ser.line(&r.key()).unwrap());
+        led.runs.push(r);
+        let report = build_report(&[("l".into(), led)], None);
+        assert!(report.text.contains("1 series"), "{}", report.text);
+        assert!(report.text.contains("round series (1 run(s)):"), "{}", report.text);
+        assert!(
+            report.text.contains("5 of 5 round(s) kept (stride 1), level 2.00 -> 4.00"),
+            "{}",
+            report.text
+        );
+
+        // No series lines -> no section at all.
+        let mut clean = DistLedger::default();
+        clean.runs.push(rec("fixed:2", 0, 10.0));
+        let report = build_report(&[("l".into(), clean)], None);
+        assert!(!report.text.contains("round series"), "{}", report.text);
     }
 
     #[test]

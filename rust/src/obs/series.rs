@@ -1,0 +1,557 @@
+//! Per-round time series: the `"kind":"series"` ledger line (DESIGN.md
+//! §16).
+//!
+//! The paper's central claim is *dynamic adaptation* — NAC-FL varies
+//! per-client compression as congestion varies — yet every observable
+//! before this module was an end-of-run aggregate.  [`RoundSeries`] is a
+//! runtime-off recorder (same contract as [`crate::obs::Telemetry`]:
+//! the off handle is one `None` word and every method one branch)
+//! threaded through the round loops of `sim::Session`, `des::engine`
+//! and `des::flow`.  Each round the engine hands it one [`Sample`] of
+//! per-round signals; the recorder keeps them in **fixed-size storage**:
+//!
+//! * below [`SERIES_CAP`] kept rounds the series is exact (stride 1);
+//! * past the cap it decimates deterministically — drop every other
+//!   kept sample and double the stride — so a million-round
+//!   `pop:1000000` cell stays O(cap), and the kept rounds are a pure
+//!   function of the total round count (byte-identical across threads,
+//!   shards and reruns).
+//!
+//! One [`SeriesLine`] per run streams into the campaign ledger after
+//! the run's telemetry.  The ledger is flat JSON, so each channel
+//! travels as one comma-joined string; floats use the shared
+//! shortest-round-trip policy with the literal `NaN` for
+//! not-applicable slots (a flow-less run has no `congestion_s`, a
+//! quorum-less run no `quorum_frac`).  Resume, merge and `nacfl
+//! compact` dispatch on `"kind"` first, so series lines are invisible
+//! to run keying; series-off runs write ledgers byte-identical to
+//! pre-series builds (pinned by `tests/obs_system.rs`).
+
+use crate::util::json;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+
+/// Maximum kept samples per series (the fixed-size budget).  The line
+/// length is bounded by `cap * n_channels * ~25` bytes — well under
+/// 64 KiB.
+pub const SERIES_CAP: usize = 128;
+
+/// Channel names, in wire/CSV order.  Adding a channel is a schema
+/// extension: readers backfill missing channels with `NaN`.
+pub const CHANNELS: [&str; 12] = [
+    "level_mean",
+    "level_max",
+    "wire_bits",
+    "btd_mean",
+    "btd_eff",
+    "congestion_s",
+    "quorum_frac",
+    "retrans",
+    "queue_hw",
+    "crashed",
+    "wall_s",
+    "cohort_mix",
+];
+
+/// One round's worth of signals.  Engines fill what they can observe
+/// cheaply and leave the rest `NaN` (the analytic tier has no network,
+/// an exogenous-BTD run no congestion, …).
+#[derive(Clone, Copy, Debug)]
+pub struct Sample {
+    /// Mean chosen compression level across participating clients.
+    pub level_mean: f64,
+    /// Max chosen compression level across participating clients.
+    pub level_max: f64,
+    /// Total wire bits uploaded this round.
+    pub wire_bits: f64,
+    /// Mean solo bit-transmission-delay state across clients.
+    pub btd_mean: f64,
+    /// Mean *effective* BTD actually experienced (flow cells).
+    pub btd_eff: f64,
+    /// Congestion seconds accrued this round (flow cells).
+    pub congestion_s: f64,
+    /// Delivered / expected participation fraction this round.
+    pub quorum_frac: f64,
+    /// Retransmission attempts this round.
+    pub retrans: f64,
+    /// Event-queue high-water mark so far.
+    pub queue_hw: f64,
+    /// Clients down (crashed) at the round boundary.
+    pub crashed: f64,
+    /// Cumulative simulated wall clock at round end.
+    pub wall_s: f64,
+    /// Mean class index of the sampled cohort (`pop:` cells).
+    pub cohort_mix: f64,
+}
+
+impl Default for Sample {
+    fn default() -> Self {
+        Sample {
+            level_mean: f64::NAN,
+            level_max: f64::NAN,
+            wire_bits: f64::NAN,
+            btd_mean: f64::NAN,
+            btd_eff: f64::NAN,
+            congestion_s: f64::NAN,
+            quorum_frac: f64::NAN,
+            retrans: f64::NAN,
+            queue_hw: f64::NAN,
+            crashed: f64::NAN,
+            wall_s: f64::NAN,
+            cohort_mix: f64::NAN,
+        }
+    }
+}
+
+impl Sample {
+    /// Channel accessor by wire name (must be one of [`CHANNELS`]).
+    pub fn get(&self, channel: &str) -> f64 {
+        match channel {
+            "level_mean" => self.level_mean,
+            "level_max" => self.level_max,
+            "wire_bits" => self.wire_bits,
+            "btd_mean" => self.btd_mean,
+            "btd_eff" => self.btd_eff,
+            "congestion_s" => self.congestion_s,
+            "quorum_frac" => self.quorum_frac,
+            "retrans" => self.retrans,
+            "queue_hw" => self.queue_hw,
+            "crashed" => self.crashed,
+            "wall_s" => self.wall_s,
+            "cohort_mix" => self.cohort_mix,
+            _ => f64::NAN,
+        }
+    }
+
+    fn set(&mut self, channel: &str, v: f64) {
+        match channel {
+            "level_mean" => self.level_mean = v,
+            "level_max" => self.level_max = v,
+            "wire_bits" => self.wire_bits = v,
+            "btd_mean" => self.btd_mean = v,
+            "btd_eff" => self.btd_eff = v,
+            "congestion_s" => self.congestion_s = v,
+            "quorum_frac" => self.quorum_frac = v,
+            "retrans" => self.retrans = v,
+            "queue_hw" => self.queue_hw = v,
+            "crashed" => self.crashed = v,
+            "wall_s" => self.wall_s = v,
+            "cohort_mix" => self.cohort_mix = v,
+            _ => {}
+        }
+    }
+}
+
+/// Kept rounds + samples behind the live handle.  Boxed so the off
+/// state is a single `None` word (same pin as `Telemetry`).
+#[derive(Clone, Debug)]
+struct SeriesInner {
+    /// Current decimation stride: round `r` is kept iff `r % stride == 0`.
+    stride: u64,
+    /// Rounds recorded so far (kept or not).
+    rounds_total: u64,
+    /// Kept round indices (0-based), ascending.
+    rounds: Vec<u64>,
+    /// Kept samples, parallel to `rounds`.
+    samples: Vec<Sample>,
+}
+
+/// The per-run round-series recorder.  [`RoundSeries::off`] is free and
+/// every method on it is a no-op; the engines guard their sampling code
+/// with [`RoundSeries::is_on`] so the off path stays bit-identical and
+/// allocation-free.
+#[derive(Clone, Debug, Default)]
+pub struct RoundSeries {
+    inner: Option<Box<SeriesInner>>,
+}
+
+impl RoundSeries {
+    /// The disabled handle: no allocation, every method a no-op.
+    pub fn off() -> Self {
+        RoundSeries { inner: None }
+    }
+
+    /// An enabled handle (stride 1, empty storage).
+    pub fn on() -> Self {
+        RoundSeries {
+            inner: Some(Box::new(SeriesInner {
+                stride: 1,
+                rounds_total: 0,
+                rounds: Vec::new(),
+                samples: Vec::new(),
+            })),
+        }
+    }
+
+    /// Enabled (`on`) or disabled (`off`) by flag.
+    pub fn new(enabled: bool) -> Self {
+        if enabled {
+            Self::on()
+        } else {
+            Self::off()
+        }
+    }
+
+    pub fn is_on(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Rounds recorded so far (kept or decimated away).
+    pub fn rounds_total(&self) -> u64 {
+        self.inner.as_ref().map(|i| i.rounds_total).unwrap_or(0)
+    }
+
+    /// Kept samples right now.
+    pub fn len(&self) -> usize {
+        self.inner.as_ref().map(|i| i.rounds.len()).unwrap_or(0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Current decimation stride (1 while exact).
+    pub fn stride(&self) -> u64 {
+        self.inner.as_ref().map(|i| i.stride).unwrap_or(1)
+    }
+
+    /// Record one round.  Kept iff the 0-based round index is a multiple
+    /// of the current stride; when the kept count would exceed
+    /// [`SERIES_CAP`], every other kept sample is dropped and the stride
+    /// doubles — a pure function of the round count, so two recorders
+    /// fed the same sample sequence hold identical storage.
+    pub fn record(&mut self, s: Sample) {
+        let Some(inner) = &mut self.inner else { return };
+        let r = inner.rounds_total;
+        inner.rounds_total += 1;
+        if r % inner.stride != 0 {
+            return;
+        }
+        inner.rounds.push(r);
+        inner.samples.push(s);
+        if inner.rounds.len() > SERIES_CAP {
+            // Keep even positions: kept rounds stay ≡ 0 mod the doubled
+            // stride, so future keeps splice in consistently.
+            let mut w = 0usize;
+            for i in (0..inner.rounds.len()).step_by(2) {
+                inner.rounds[w] = inner.rounds[i];
+                inner.samples[w] = inner.samples[i];
+                w += 1;
+            }
+            inner.rounds.truncate(w);
+            inner.samples.truncate(w);
+            inner.stride *= 2;
+        }
+    }
+
+    /// Snapshot as one ledger line under the run's coordinate key.
+    /// `None` when the recorder is off or never saw a round (no line is
+    /// streamed — an empty series carries no information).
+    pub fn line(&self, key: &str) -> Option<SeriesLine> {
+        let inner = self.inner.as_ref()?;
+        if inner.rounds_total == 0 {
+            return None;
+        }
+        Some(SeriesLine {
+            scope: "run".to_string(),
+            key: key.to_string(),
+            cap: SERIES_CAP as u64,
+            stride: inner.stride,
+            rounds_total: inner.rounds_total,
+            rounds: inner.rounds.clone(),
+            samples: inner.samples.clone(),
+        })
+    }
+}
+
+/// A float inside a channel string: shortest exact round-trip for
+/// finite values, the literal `NaN` for anything else (channels never
+/// legitimately hold infinities).
+fn fmt_channel(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:?}")
+    } else {
+        "NaN".to_string()
+    }
+}
+
+fn parse_channel(s: &str) -> Result<f64> {
+    if s == "NaN" {
+        return Ok(f64::NAN);
+    }
+    s.parse::<f64>()
+        .map_err(|e| anyhow!("bad series channel value `{s}`: {e}"))
+}
+
+/// One flat `"kind":"series"` ledger line: a whole run's decimated
+/// round series.  Schema-versioned alongside the ledger (`"schema":2`,
+/// `"v":1`); every ledger reader dispatches on `"kind"` first, so
+/// series lines are invisible to resume/merge keying.  Channels travel
+/// as comma-joined strings (the ledger wire format is flat JSON).
+#[derive(Clone, Debug)]
+pub struct SeriesLine {
+    /// Always `"run"` today (scope field mirrors [`super::TelemLine`]).
+    pub scope: String,
+    /// Run coordinate key.
+    pub key: String,
+    /// The recorder's cap when the line was written.
+    pub cap: u64,
+    /// Final decimation stride.
+    pub stride: u64,
+    /// Total rounds the run executed.
+    pub rounds_total: u64,
+    /// Kept round indices, ascending.
+    pub rounds: Vec<u64>,
+    /// Kept samples, parallel to `rounds`.
+    pub samples: Vec<Sample>,
+}
+
+impl SeriesLine {
+    /// One flat JSON object (a single ledger line, no trailing newline).
+    /// `from_json(to_json(x))` re-serializes byte-for-byte.
+    pub fn to_json(&self) -> String {
+        let mut out = format!(
+            "{{\"schema\":2,\"kind\":\"series\",\"v\":1,\"scope\":{},\"key\":{},\"cap\":{},\"stride\":{},\"rounds_total\":{}",
+            json::string(&self.scope),
+            json::string(&self.key),
+            self.cap,
+            self.stride,
+            self.rounds_total,
+        );
+        let rounds: Vec<String> = self.rounds.iter().map(|r| r.to_string()).collect();
+        out.push_str(&format!(",\"rounds\":{}", json::string(&rounds.join(","))));
+        for ch in CHANNELS {
+            let vals: Vec<String> =
+                self.samples.iter().map(|s| fmt_channel(s.get(ch))).collect();
+            out.push_str(&format!(",\"{ch}\":{}", json::string(&vals.join(","))));
+        }
+        out.push('}');
+        out
+    }
+
+    pub fn from_json(line: &str) -> Result<Self> {
+        Self::from_obj(&crate::exp::sink::parse_flat_object(line)?)
+    }
+
+    /// Build from an already-scanned flat object (shared with the
+    /// distributed-ledger line dispatcher, `exp::dist::ledger`).
+    pub(crate) fn from_obj(
+        obj: &HashMap<String, crate::exp::sink::JsonVal>,
+    ) -> Result<Self> {
+        use crate::exp::sink::JsonVal;
+        if obj.get("kind").and_then(JsonVal::as_str) != Some("series") {
+            return Err(anyhow!("not a series line"));
+        }
+        match obj.get("v").and_then(JsonVal::as_u64) {
+            Some(1) => {}
+            other => return Err(anyhow!("unsupported series line version {other:?}")),
+        }
+        let s = |k: &str| -> Result<String> {
+            obj.get(k)
+                .and_then(JsonVal::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("series line missing string field `{k}`"))
+        };
+        let u = |k: &str| -> Result<u64> {
+            obj.get(k)
+                .and_then(JsonVal::as_u64)
+                .ok_or_else(|| anyhow!("series line field `{k}` must be a non-negative integer"))
+        };
+        let rounds_s = s("rounds")?;
+        let rounds: Vec<u64> = if rounds_s.is_empty() {
+            Vec::new()
+        } else {
+            rounds_s
+                .split(',')
+                .map(|p| p.parse::<u64>().map_err(|e| anyhow!("bad round index `{p}`: {e}")))
+                .collect::<Result<_>>()?
+        };
+        let mut samples = vec![Sample::default(); rounds.len()];
+        for ch in CHANNELS {
+            // Missing channels (older writers) backfill as NaN.
+            let Some(vals) = obj.get(ch).and_then(JsonVal::as_str) else { continue };
+            if vals.is_empty() {
+                continue;
+            }
+            let parts: Vec<&str> = vals.split(',').collect();
+            if parts.len() != rounds.len() {
+                return Err(anyhow!(
+                    "series channel `{ch}` has {} values for {} rounds",
+                    parts.len(),
+                    rounds.len()
+                ));
+            }
+            for (slot, p) in samples.iter_mut().zip(parts) {
+                slot.set(ch, parse_channel(p)?);
+            }
+        }
+        Ok(SeriesLine {
+            scope: s("scope")?,
+            key: s("key")?,
+            cap: u("cap")?,
+            stride: u("stride")?,
+            rounds_total: u("rounds_total")?,
+            rounds,
+            samples,
+        })
+    }
+
+    /// CSV header for [`SeriesLine::csv`] rows.
+    pub fn csv_header() -> String {
+        format!("key,round,{}", CHANNELS.join(","))
+    }
+
+    /// One CSV row per kept sample (no header; see
+    /// [`SeriesLine::csv_header`]).
+    pub fn csv(&self) -> String {
+        let mut out = String::new();
+        for (r, smp) in self.rounds.iter().zip(self.samples.iter()) {
+            out.push_str(&format!("{},{}", self.key, r));
+            for ch in CHANNELS {
+                out.push(',');
+                out.push_str(&fmt_channel(smp.get(ch)));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(v: f64) -> Sample {
+        Sample { level_mean: v, level_max: v + 1.0, wall_s: v * 2.0, ..Sample::default() }
+    }
+
+    #[test]
+    fn off_handle_is_a_no_op_and_allocation_free() {
+        let mut s = RoundSeries::off();
+        assert!(!s.is_on());
+        s.record(sample(1.0));
+        assert_eq!(s.rounds_total(), 0);
+        assert_eq!(s.len(), 0);
+        assert!(s.line("k").is_none());
+        // The off handle is one Option word — nothing boxed.
+        assert!(std::mem::size_of::<RoundSeries>() <= std::mem::size_of::<usize>());
+    }
+
+    #[test]
+    fn exact_below_cap() {
+        let mut s = RoundSeries::on();
+        for r in 0..100 {
+            s.record(sample(r as f64));
+        }
+        assert_eq!(s.len(), 100);
+        assert_eq!(s.stride(), 1);
+        let line = s.line("k").unwrap();
+        assert_eq!(line.rounds, (0..100).collect::<Vec<u64>>());
+        assert_eq!(line.samples[37].level_mean, 37.0);
+    }
+
+    #[test]
+    fn decimation_is_bounded_and_deterministic() {
+        let mut s = RoundSeries::on();
+        for r in 0..1_000_000u64 {
+            s.record(sample(r as f64));
+        }
+        assert_eq!(s.rounds_total(), 1_000_000);
+        assert!(s.len() <= SERIES_CAP, "len {} > cap", s.len());
+        assert!(s.stride().is_power_of_two());
+        assert!(s.stride() > 1, "a million rounds must decimate");
+        let line = s.line("k").unwrap();
+        // Every kept round is a stride multiple, ascending, starting at 0.
+        assert_eq!(line.rounds[0], 0);
+        for w in line.rounds.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        for &r in &line.rounds {
+            assert_eq!(r % line.stride, 0);
+            // The sample really is round r's sample.
+            let i = line.rounds.iter().position(|&x| x == r).unwrap();
+            assert_eq!(line.samples[i].level_mean, r as f64);
+        }
+        // Pure function of the round count: a second recorder fed the
+        // same sequence lands on identical bytes.
+        let mut s2 = RoundSeries::on();
+        for r in 0..1_000_000u64 {
+            s2.record(sample(r as f64));
+        }
+        assert_eq!(s2.line("k").unwrap().to_json(), line.to_json());
+    }
+
+    #[test]
+    fn line_size_is_bounded_for_long_runs() {
+        let mut s = RoundSeries::on();
+        for r in 0..2_000_000u64 {
+            // Worst-case-width floats in a few channels.
+            let v = (r as f64) * 1.000000000137e-7 + 1.0 / 3.0;
+            s.record(Sample {
+                level_mean: v,
+                level_max: v,
+                wire_bits: v * 1e9,
+                btd_mean: v,
+                btd_eff: v,
+                congestion_s: v,
+                quorum_frac: v,
+                retrans: v,
+                queue_hw: v * 1e6,
+                crashed: v,
+                wall_s: v * 1e5,
+                cohort_mix: v,
+            });
+        }
+        let text = s.line("k").unwrap().to_json();
+        assert!(text.len() < 64 * 1024, "series line {} bytes", text.len());
+    }
+
+    #[test]
+    fn series_line_round_trips_byte_stable() {
+        let mut s = RoundSeries::on();
+        for r in 0..10 {
+            let mut smp = sample(r as f64 / 3.0);
+            smp.congestion_s = f64::NAN; // N/A channels survive as NaN
+            smp.quorum_frac = 0.875;
+            s.record(smp);
+        }
+        let line = s.line("homog:2|quant:inf|sim:60|sync|nacfl:1|0|0").unwrap();
+        let text = line.to_json();
+        assert!(text.contains("\"kind\":\"series\""), "{text}");
+        assert!(text.contains("\"v\":1"), "{text}");
+        let back = SeriesLine::from_json(&text).unwrap();
+        assert_eq!(back.to_json(), text, "byte-stable round trip");
+        assert_eq!(back.rounds_total, 10);
+        assert!(back.samples[0].congestion_s.is_nan());
+        assert_eq!(back.samples[0].quorum_frac, 0.875);
+        assert!(back.samples[0].cohort_mix.is_nan(), "untouched channels stay NaN");
+    }
+
+    #[test]
+    fn from_json_rejects_malformed_lines() {
+        assert!(SeriesLine::from_json("").is_err());
+        assert!(SeriesLine::from_json("{\"kind\":\"telem\"}").is_err(), "wrong kind");
+        let mut s = RoundSeries::on();
+        s.record(sample(1.0));
+        let good = s.line("k").unwrap().to_json();
+        assert!(SeriesLine::from_json(&good).is_ok());
+        assert!(SeriesLine::from_json(&good[..good.len() / 2]).is_err(), "torn line");
+        let v2 = good.replace("\"v\":1", "\"v\":2");
+        assert!(SeriesLine::from_json(&v2).is_err(), "future series version");
+        let short = good.replace("\"rounds\":\"0\"", "\"rounds\":\"0,1\"");
+        assert!(SeriesLine::from_json(&short).is_err(), "channel length mismatch");
+    }
+
+    #[test]
+    fn csv_rows_match_kept_samples() {
+        let mut s = RoundSeries::on();
+        for r in 0..3 {
+            s.record(sample(r as f64));
+        }
+        let line = s.line("k").unwrap();
+        assert!(SeriesLine::csv_header().starts_with("key,round,level_mean,"));
+        let csv = line.csv();
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.starts_with("k,0,0.0,1.0,"), "{csv}");
+    }
+}

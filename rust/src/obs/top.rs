@@ -28,6 +28,32 @@ use std::path::Path;
 /// Width of the per-group completion bars.
 const BAR_W: usize = 24;
 
+/// Sparkline glyph ramp (eighth blocks, low to high).
+const SPARK: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+
+/// Max kept samples shown per sparkline (the newest ones).
+const SPARK_W: usize = 32;
+
+/// Render the last `width` finite values as a block sparkline, scaled
+/// to their own min..max (a flat series renders all-low).  Empty when
+/// nothing is finite.
+fn sparkline(vals: &[f64], width: usize) -> String {
+    let vals: Vec<f64> = vals.iter().copied().filter(|v| v.is_finite()).collect();
+    if vals.is_empty() {
+        return String::new();
+    }
+    let tail = &vals[vals.len().saturating_sub(width)..];
+    let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &v in tail {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    let span = (hi - lo).max(f64::EPSILON);
+    tail.iter()
+        .map(|&v| SPARK[(((v - lo) / span) * 7.0).round() as usize])
+        .collect()
+}
+
 /// The group axis shown in the bars: every coordinate except policy and
 /// seeds (matches the paper-table grouping in `exp::sink`, including
 /// the faults suffix on non-trivial fault coordinates).
@@ -88,10 +114,11 @@ pub fn render_frame(
         out.push_str(&format!("{name}: {done} runs (total unknown — pass --plan)\n"));
     }
     out.push_str(&format!(
-        "lines: {} run, {} claim, {} telem, {} torn\n\n",
+        "lines: {} run, {} claim, {} telem, {} series, {} torn\n\n",
         led.runs.len(),
         led.claims.len(),
         led.telem.len(),
+        led.series.len(),
         led.n_torn
     ));
 
@@ -141,6 +168,26 @@ pub fn render_frame(
             out.push_str(&format!("{} {n:>4}/{n_exp:<4} {mean:<16} {g}\n", bar(n, *n_exp)));
         } else {
             out.push_str(&format!("{} {n:>4}      {mean:<16} {g}\n", bar(1, 1)));
+        }
+    }
+
+    // Per-group compression-level sparkline from the latest round-series
+    // line whose run record landed in the group — watch the policy adapt
+    // live as the fleet streams `--series` lines.
+    let mut series_by_group: BTreeMap<String, &crate::obs::SeriesLine> = BTreeMap::new();
+    for s in &led.series {
+        if let Some(r) = by_key.get(&s.key) {
+            series_by_group.insert(group_key(r), s);
+        }
+    }
+    if !series_by_group.is_empty() {
+        out.push('\n');
+        for (g, s) in &series_by_group {
+            let levels: Vec<f64> = s.samples.iter().map(|x| x.level_mean).collect();
+            let sp = sparkline(&levels, SPARK_W);
+            if !sp.is_empty() {
+                out.push_str(&format!("level {sp} {g}\n"));
+            }
         }
     }
 
@@ -495,6 +542,88 @@ mod tests {
         clean.runs.push(rec("fixed:2", 0, 100.0));
         let (frame, _) = render_frame(&clean, None, 0);
         assert!(!frame.contains("pop:"), "{frame}");
+    }
+
+    #[test]
+    fn frame_draws_a_level_sparkline_from_series_lines() {
+        use crate::obs::{RoundSeries, Sample};
+        let mut led = DistLedger::default();
+        let r = rec("nacfl:1", 0, 100.0);
+        let mut ser = RoundSeries::on();
+        for i in 0..8 {
+            ser.record(Sample { level_mean: i as f64, ..Sample::default() });
+        }
+        led.series.push(ser.line(&r.key()).unwrap());
+        led.runs.push(r);
+        let (frame, _) = render_frame(&led, None, 0);
+        assert!(frame.contains("1 series"), "{frame}");
+        assert!(
+            frame.contains("level ▁") && frame.contains('█'),
+            "ramp renders low-to-high: {frame}"
+        );
+        // Eight evenly spaced levels hit every ramp glyph in order.
+        assert!(
+            frame.contains("level ▁▂▃▄▅▆▇█ homog:2|quant:inf|sim:60|sync"),
+            "sparkline sits on its group row: {frame}"
+        );
+        // A series line with no matching run record draws nothing.
+        let mut orphan = DistLedger::default();
+        let mut ser = RoundSeries::on();
+        ser.record(Sample { level_mean: 1.0, ..Sample::default() });
+        orphan.series.push(ser.line("no|such|run").unwrap());
+        let (frame, _) = render_frame(&orphan, None, 0);
+        assert!(!frame.contains("level ▁"), "{frame}");
+    }
+
+    #[test]
+    fn sparkline_scales_clamps_and_skips_nan() {
+        assert_eq!(sparkline(&[], 8), "");
+        assert_eq!(sparkline(&[f64::NAN, f64::NAN], 8), "");
+        assert_eq!(sparkline(&[5.0], 8), "▁", "flat series renders low");
+        let s = sparkline(&[0.0, 7.0], 8);
+        assert_eq!(s, "▁█");
+        // Width keeps only the newest values.
+        let long: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        assert_eq!(sparkline(&long, 4).chars().count(), 4);
+    }
+
+    #[test]
+    fn tail_survives_compaction_shrinking_the_file_underneath() {
+        use crate::exp::dist::compact_ledger;
+        use crate::exp::dist::ledger::PlanHeader;
+        use crate::obs::{RoundSeries, Sample};
+        let path = std::env::temp_dir()
+            .join(format!("nacfl_top_compact_{}.jsonl", std::process::id()));
+        let plan = ExperimentPlan::builder("t").build().unwrap();
+        let done = rec("nacfl:1", 0, 5.0);
+        let mut ser = RoundSeries::on();
+        ser.record(Sample { level_mean: 2.0, ..Sample::default() });
+        // Header, a superseded claim, a duplicated record, a series line.
+        let body = format!(
+            "{}\n{}\n{}\n{}\n{}\n",
+            PlanHeader::for_plan(&plan).to_json(),
+            ClaimRecord::new(done.key(), "w1", 10, 60).to_json(),
+            done.to_json(),
+            done.to_json(),
+            ser.line(&done.key()).unwrap().to_json(),
+        );
+        std::fs::write(&path, &body).unwrap();
+        let mut tail = LedgerTail::new();
+        let led = tail.poll(&path).unwrap();
+        assert_eq!(led.runs.len(), 2, "pre-compaction dup visible");
+        assert_eq!(led.series.len(), 1);
+        let pre = tail.cursor();
+
+        // Compaction rewrites the file shorter; the tail must detect the
+        // shrink, reset, and re-read the compacted state whole.
+        compact_ledger(&path).unwrap();
+        let led = tail.poll(&path).unwrap();
+        assert!(tail.cursor() < pre, "compacted ledger is shorter");
+        assert_eq!(led.runs.len(), 1, "dup gone after re-read");
+        assert_eq!(led.series.len(), 1, "series line survives compaction");
+        assert_eq!(led.claims.len(), 0, "superseded claim gone");
+        assert!(led.header.is_some());
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -1,0 +1,303 @@
+//! DES event-trace export: Chrome `trace_event` / Perfetto JSON
+//! (DESIGN.md §16).
+//!
+//! Where the round series (this module's sibling, [`super::series`])
+//! shows *per-round* adaptation, the trace shows *per-event* timing:
+//! every client upload as a duration slice on its own track,
+//! retransmissions / crashes / deadline cuts as instants, and flow-link
+//! utilization as counter tracks — openable directly in
+//! `chrome://tracing` or <https://ui.perfetto.dev>.
+//!
+//! [`TraceRecorder`] follows the platform's runtime-off handle contract
+//! (`Telemetry`, `RoundSeries`): the off handle is one `None` word,
+//! every method one branch, and the engines guard recording with
+//! [`TraceRecorder::is_on`] so traced-off runs stay bit-identical.
+//! Event storage is hard-capped at [`TRACE_EVENT_CAP`] per run — a
+//! long run drops the tail (counted, surfaced as a final metadata
+//! event) rather than growing without bound.
+//!
+//! The exporter maps simulated seconds to trace microseconds, one
+//! *process* per run (named by the run's coordinate key) and one
+//! *thread* per client (`tid = client + 1`; tid 0 carries round-level
+//! instants and counters).  The output is the plain JSON-array flavor
+//! of the trace-event format — no enclosing object needed.
+
+use crate::util::json;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Per-run event budget.  50k events ≈ a few MB of JSON — about what
+/// the trace viewers stay responsive on.
+pub const TRACE_EVENT_CAP: usize = 50_000;
+
+/// One trace event, pre-pid (the writer assigns pids per run).
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    /// Event name (slice label / counter name / instant label).
+    pub name: String,
+    /// Category tag (`"upload"`, `"net"`, `"fault"`).
+    pub cat: &'static str,
+    /// Phase: `'X'` duration, `'i'` instant, `'C'` counter.
+    pub ph: char,
+    /// Start, simulated microseconds.
+    pub ts_us: f64,
+    /// Duration, simulated microseconds (`'X'` only).
+    pub dur_us: f64,
+    /// Track: 0 = round/link track, `client + 1` = that client.
+    pub tid: u64,
+    /// Single argument (counter value, instant detail).
+    pub arg: Option<(&'static str, f64)>,
+}
+
+#[derive(Clone, Debug, Default)]
+struct TraceInner {
+    events: Vec<TraceEvent>,
+    dropped: u64,
+}
+
+/// The per-run trace recorder (runtime-off; see the module docs).
+#[derive(Clone, Debug, Default)]
+pub struct TraceRecorder {
+    inner: Option<Box<TraceInner>>,
+}
+
+const US: f64 = 1e6;
+
+impl TraceRecorder {
+    /// The disabled handle: no allocation, every method a no-op.
+    pub fn off() -> Self {
+        TraceRecorder { inner: None }
+    }
+
+    /// An enabled handle.
+    pub fn on() -> Self {
+        TraceRecorder { inner: Some(Box::default()) }
+    }
+
+    /// Enabled (`on`) or disabled (`off`) by flag.
+    pub fn new(enabled: bool) -> Self {
+        if enabled {
+            Self::on()
+        } else {
+            Self::off()
+        }
+    }
+
+    pub fn is_on(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    fn push(&mut self, ev: TraceEvent) {
+        if let Some(inner) = &mut self.inner {
+            if inner.events.len() >= TRACE_EVENT_CAP {
+                inner.dropped += 1;
+            } else {
+                inner.events.push(ev);
+            }
+        }
+    }
+
+    /// A client upload as a duration slice on the client's track.
+    pub fn upload(&mut self, client: usize, start_s: f64, dur_s: f64) {
+        if !self.is_on() {
+            return;
+        }
+        self.push(TraceEvent {
+            name: "upload".to_string(),
+            cat: "upload",
+            ph: 'X',
+            ts_us: start_s * US,
+            dur_us: dur_s.max(0.0) * US,
+            tid: client as u64 + 1,
+            arg: None,
+        });
+    }
+
+    /// An instantaneous event (retransmission, crash, deadline cut) on
+    /// a client's track, or on track 0 when `client` is `None`.
+    pub fn instant(&mut self, name: &'static str, t_s: f64, client: Option<usize>) {
+        if !self.is_on() {
+            return;
+        }
+        self.push(TraceEvent {
+            name: name.to_string(),
+            cat: "fault",
+            ph: 'i',
+            ts_us: t_s * US,
+            dur_us: 0.0,
+            tid: client.map(|c| c as u64 + 1).unwrap_or(0),
+            arg: None,
+        });
+    }
+
+    /// One counter-track observation (e.g. `link0` utilization).  The
+    /// viewer draws one counter track per distinct `name`.
+    pub fn counter(&mut self, name: String, t_s: f64, key: &'static str, v: f64) {
+        if !self.is_on() {
+            return;
+        }
+        self.push(TraceEvent {
+            name,
+            cat: "net",
+            ph: 'C',
+            ts_us: t_s * US,
+            dur_us: 0.0,
+            tid: 0,
+            arg: Some((key, if v.is_finite() { v } else { 0.0 })),
+        });
+    }
+
+    /// Events recorded so far.
+    pub fn events(&self) -> &[TraceEvent] {
+        self.inner.as_ref().map(|i| i.events.as_slice()).unwrap_or(&[])
+    }
+
+    /// Events discarded past [`TRACE_EVENT_CAP`].
+    pub fn dropped(&self) -> u64 {
+        self.inner.as_ref().map(|i| i.dropped).unwrap_or(0)
+    }
+}
+
+/// A non-finite-safe trace number (the format has no NaN literal).
+fn tnum(v: f64) -> String {
+    json::num(if v.is_finite() { v } else { 0.0 })
+}
+
+fn event_json(ev: &TraceEvent, pid: usize) -> String {
+    let mut out = format!(
+        "{{\"name\":{},\"cat\":{},\"ph\":\"{}\",\"ts\":{},\"pid\":{},\"tid\":{}",
+        json::string(&ev.name),
+        json::string(ev.cat),
+        ev.ph,
+        tnum(ev.ts_us),
+        pid,
+        ev.tid,
+    );
+    if ev.ph == 'X' {
+        out.push_str(&format!(",\"dur\":{}", tnum(ev.dur_us)));
+    }
+    if ev.ph == 'i' {
+        // Thread-scoped instant (the viewer default needs an explicit
+        // scope to render off-track instants).
+        out.push_str(",\"s\":\"t\"");
+    }
+    if let Some((k, v)) = &ev.arg {
+        out.push_str(&format!(",\"args\":{{\"{k}\":{}}}", tnum(*v)));
+    }
+    out.push('}');
+    out
+}
+
+/// Write one Chrome `trace_event` JSON-array file for a set of traced
+/// runs: process `i + 1` is run `i`, named by its coordinate key via a
+/// `process_name` metadata event.  Runs with no events still get their
+/// metadata row, so an empty trace is still a valid, openable file.
+pub fn write_trace_file(
+    path: impl AsRef<Path>,
+    runs: &[(String, TraceRecorder)],
+) -> Result<()> {
+    let path = path.as_ref();
+    let mut out = String::from("[");
+    let mut first = true;
+    let mut push = |line: String, out: &mut String, first: &mut bool| {
+        if !*first {
+            out.push(',');
+        }
+        out.push('\n');
+        out.push_str(&line);
+        *first = false;
+    };
+    for (i, (key, rec)) in runs.iter().enumerate() {
+        let pid = i + 1;
+        push(
+            format!(
+                "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{},\"tid\":0,\"args\":{{\"name\":{}}}}}",
+                pid,
+                json::string(key),
+            ),
+            &mut out,
+            &mut first,
+        );
+        for ev in rec.events() {
+            push(event_json(ev, pid), &mut out, &mut first);
+        }
+        if rec.dropped() > 0 {
+            push(
+                format!(
+                    "{{\"name\":\"trace_dropped_events\",\"ph\":\"M\",\"pid\":{},\"tid\":0,\"args\":{{\"name\":\"dropped {}\"}}}}",
+                    pid,
+                    rec.dropped(),
+                ),
+                &mut out,
+                &mut first,
+            );
+        }
+    }
+    out.push_str("\n]\n");
+    std::fs::write(path, out)
+        .with_context(|| format!("writing trace file {}", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_handle_is_a_no_op_and_allocation_free() {
+        let mut t = TraceRecorder::off();
+        assert!(!t.is_on());
+        t.upload(3, 1.0, 2.0);
+        t.instant("crash", 5.0, Some(1));
+        t.counter("link0".into(), 1.0, "util", 0.5);
+        assert!(t.events().is_empty());
+        assert_eq!(t.dropped(), 0);
+        assert!(std::mem::size_of::<TraceRecorder>() <= std::mem::size_of::<usize>());
+    }
+
+    #[test]
+    fn events_serialize_as_trace_event_json() {
+        let mut t = TraceRecorder::on();
+        t.upload(0, 1.5, 0.25);
+        t.instant("deadline", 2.0, None);
+        t.counter("link0".into(), 2.0, "util", 0.75);
+        let path = std::env::temp_dir()
+            .join(format!("nacfl_trace_{}.json", std::process::id()));
+        write_trace_file(&path, &[("run|key".to_string(), t)]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let trimmed = text.trim();
+        assert!(trimmed.starts_with('[') && trimmed.ends_with(']'), "{text}");
+        assert!(text.contains("\"ph\":\"M\"") && text.contains("run|key"), "{text}");
+        assert!(
+            text.contains("\"ph\":\"X\"") && text.contains("\"dur\":250000.0"),
+            "{text}"
+        );
+        assert!(text.contains("\"ph\":\"i\"") && text.contains("\"s\":\"t\""), "{text}");
+        assert!(
+            text.contains("\"ph\":\"C\"") && text.contains("\"args\":{\"util\":0.75}"),
+            "{text}"
+        );
+        // Upload lands on the client track, counter on track 0.
+        assert!(text.contains("\"tid\":1"), "{text}");
+        // Balanced braces — the file parses as one JSON array.
+        let opens = text.matches('{').count();
+        assert_eq!(opens, text.matches('}').count());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn event_cap_drops_the_tail_not_the_run() {
+        let mut t = TraceRecorder::on();
+        for i in 0..(TRACE_EVENT_CAP + 10) {
+            t.upload(i % 8, i as f64, 0.5);
+        }
+        assert_eq!(t.events().len(), TRACE_EVENT_CAP);
+        assert_eq!(t.dropped(), 10);
+        let path = std::env::temp_dir()
+            .join(format!("nacfl_trace_cap_{}.json", std::process::id()));
+        write_trace_file(&path, &[("k".to_string(), t)]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("dropped 10"), "drop count is surfaced");
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -350,6 +350,15 @@ impl NetworkProcess for CohortProcess {
         self.spec.k
     }
 
+    /// Mean class index of the *current* cohort (the round-series
+    /// `cohort_mix` channel); NaN before the first round.
+    fn cohort_mix(&self) -> f64 {
+        if self.slot_class.is_empty() {
+            return f64::NAN;
+        }
+        self.slot_class.iter().map(|&c| c as f64).sum::<f64>() / self.slot_class.len() as f64
+    }
+
     fn next_state(&mut self) -> Vec<f64> {
         self.rounds += 1;
         sample_k_of_n(&mut self.sample_rng, self.spec.n, self.spec.k, &mut self.indices);
@@ -476,6 +485,9 @@ mod tests {
         let label = p.participation_label();
         assert!(label.starts_with("0:"), "{label}");
         assert_eq!(label.split(',').count(), 3);
+        // cohort_mix: mean class index of the current cohort, in range.
+        let mix = p.cohort_mix();
+        assert!(mix.is_finite() && (0.0..3.0).contains(&mix), "mix {mix}");
     }
 
     #[test]

@@ -40,7 +40,7 @@
 use crate::des::FaultModel;
 use crate::metrics::{RunTrace, TracePoint};
 use crate::netsim::{NetworkProcess, ProbeEstimator};
-use crate::obs::Telemetry;
+use crate::obs::{RoundSeries, Sample, Telemetry};
 use crate::policy::{mean_level, CompressionChoice, CompressionPolicy, PolicyCtx};
 
 /// The Assumption-1 stopping rule, generalized to weighted aggregations:
@@ -280,10 +280,25 @@ impl<'a> Session<'a> {
     /// every telemetry call a no-op, and the wall-clock accumulation is
     /// untouched either way — `run` simply delegates here.
     pub fn run_with(
+        self,
+        policy: &mut dyn CompressionPolicy,
+        process: &mut dyn NetworkProcess,
+        telem: &mut Telemetry,
+    ) -> SimResult {
+        self.run_with_obs(policy, process, telem, &mut RoundSeries::off())
+    }
+
+    /// [`Session::run_with`] plus a round-series recorder: one
+    /// [`Sample`] per round (level stats, wire bits, BTD state, wall
+    /// clock) when the recorder is on.  Both off handles reduce this to
+    /// exactly the pre-observability loop — the sampling block is
+    /// guarded, so the frozen float path is untouched.
+    pub fn run_with_obs(
         mut self,
         policy: &mut dyn CompressionPolicy,
         process: &mut dyn NetworkProcess,
         telem: &mut Telemetry,
+        series: &mut RoundSeries,
     ) -> SimResult {
         let ctx = self.ctx;
         let theta_tau = ctx.delay.theta() * ctx.tau as f64;
@@ -325,6 +340,18 @@ impl<'a> Session<'a> {
             }
             telem.count("sim.rounds", 1);
             telem.sim_span("sim.round_s", duration);
+            if series.is_on() {
+                let m_f = c_true.len() as f64;
+                series.record(Sample {
+                    level_mean: mean_level(&choices),
+                    level_max: choices.iter().map(|x| x.level as f64).fold(0.0, f64::max),
+                    wire_bits: choices.iter().map(|x| ctx.wire_bits(x.level)).sum(),
+                    btd_mean: c_true.iter().sum::<f64>() / m_f,
+                    wall_s: wall,
+                    cohort_mix: process.cohort_mix(),
+                    ..Sample::default()
+                });
+            }
             // Assumption 1: stop when r^2 > K_eps * sum rho.
             let stop = rule.record(1.0, rho);
             if !self.hooks.is_empty() {
@@ -593,6 +620,33 @@ mod tests {
         let h = telem.histogram("sim.round_s").unwrap();
         assert_eq!(h.count, watched.rounds as u64);
         assert!((h.sum - watched.wall).abs() <= 1e-9 * watched.wall.max(1.0));
+    }
+
+    #[test]
+    fn round_series_observes_the_loop_without_touching_the_clock() {
+        let ctx = ctx();
+        let mut p1 = parse_policy("nacfl:1").unwrap();
+        let mut p2 = parse_policy("nacfl:1").unwrap();
+        let mut n1 = process(13);
+        let mut n2 = process(13);
+        let plain = simulate(&ctx, p1.as_mut(), &mut n1, 60.0, 100_000);
+        let mut series = RoundSeries::on();
+        let watched = Session::new(&ctx, 60.0, 100_000).run_with_obs(
+            p2.as_mut(),
+            &mut n2,
+            &mut Telemetry::off(),
+            &mut series,
+        );
+        assert_eq!(plain.wall.to_bits(), watched.wall.to_bits());
+        assert_eq!(series.rounds_total(), watched.rounds as u64);
+        let line = series.line("k").unwrap();
+        let last = line.samples.last().unwrap();
+        assert!(last.level_mean.is_finite() && last.level_max >= last.level_mean);
+        assert!(last.wire_bits > 0.0 && last.btd_mean > 0.0);
+        assert!(last.cohort_mix.is_nan(), "no class structure here");
+        // wall_s is cumulative and ends at (or before, under
+        // decimation) the final wall.
+        assert!(last.wall_s <= watched.wall * (1.0 + 1e-12));
     }
 
     #[test]

@@ -11,7 +11,10 @@
 //! * ledger crash recovery holds under seeded fuzz — torn lines,
 //!   duplicated records, interleaved ghost claims: readers never lose a
 //!   completed record, resume re-executes exactly the lost runs, and
-//!   compaction is idempotent and lossless.
+//!   compaction is idempotent and lossless;
+//! * under `deadline:<s>:quorum<frac>` the per-run delay decomposition
+//!   still sums to the wall clock — time burned by sub-quorum rounds is
+//!   charged to `wait_s`, never to phantom upload time.
 
 use std::collections::{HashMap, HashSet};
 
@@ -206,6 +209,72 @@ fn weighted_shards_balance_cost_classes_and_merge_bit_identically() {
     for p in [&lfull, &la, &lb] {
         std::fs::remove_file(p).ok();
     }
+}
+
+#[test]
+fn deadline_quorum_decomposition_sums_to_wall_across_disciplines() {
+    // Sub-quorum rounds burn wall-clock time with no aggregation; the
+    // engine charges that time to `wait_s` (never phantom upload for
+    // abandoned in-flight transfers), so the decomposition must sum to
+    // the wall on every discipline's path.  Heavy loss plus a tight
+    // deadline with a quorum makes such rounds common.
+    let plan = ExperimentPlan::builder("quorum decomposition")
+        .base(small_base())
+        .tiers(vec![Tier::Analytic { k_eps: 50.0 }])
+        .disciplines(vec![
+            Discipline::Sync,
+            Discipline::SemiSync { k: 7 },
+            Discipline::Async { staleness_exp: 0.5 },
+        ])
+        .faults(["loss:0.3+deadline:4000000:quorum0.5"])
+        .build()
+        .unwrap();
+    let summary = execute(
+        &plan,
+        &ExecOptions { threads: 2, ..Default::default() },
+        &mut [],
+    )
+    .unwrap();
+    assert_eq!(summary.records.len(), plan.n_runs());
+    for r in &summary.records {
+        let sum = r.upload_s + r.compute_s + r.wait_s;
+        assert!(
+            (sum - r.wall).abs() <= 1e-9 * r.wall.abs().max(1.0),
+            "{}: upload {} + compute {} + wait {} = {} != wall {}",
+            r.key(),
+            r.upload_s,
+            r.compute_s,
+            r.wait_s,
+            sum,
+            r.wall
+        );
+        assert!(r.quorum_frac.is_finite() && r.quorum_frac <= 1.0, "{}", r.key());
+        // Sync never closes a round early, so burned deadline time must
+        // surface as non-negative wait — charged busy time can never
+        // exceed the wall clock.  (Early-close disciplines legitimately
+        // overlap rounds, so wait_s may go negative there.)
+        if r.discipline == "sync" {
+            assert!(
+                r.wait_s >= 0.0,
+                "{}: burned deadline time must land in wait_s, got {}",
+                r.key(),
+                r.wait_s
+            );
+            assert!(
+                r.upload_s + r.compute_s <= r.wall * (1.0 + 1e-12),
+                "{}: phantom upload charge: {} + {} > wall {}",
+                r.key(),
+                r.upload_s,
+                r.compute_s,
+                r.wall
+            );
+        }
+    }
+    // The deadline channel actually bit somewhere in the grid.
+    assert!(
+        summary.records.iter().any(|r| r.quorum_frac < 1.0),
+        "deadline+quorum must shrink some aggregate"
+    );
 }
 
 #[test]

@@ -8,10 +8,29 @@
 //! * `"kind":"telem"` lines survive a full trip through the distributed
 //!   ledger reader and re-serialize byte-for-byte;
 //! * the resume machinery never mistakes a telem line for a run.
+//!
+//! PR-10 adds the round-series recorder and event-trace pins:
+//!
+//! * series/trace **off** leaves the ledger byte-identical run to run
+//!   (and free of `"kind":"series"` lines); series **on** adds exactly
+//!   one bounded series line per run without perturbing a record byte;
+//! * series bytes are identical across thread counts (pure function of
+//!   run coordinates);
+//! * a million-client population cell running hundreds of rounds still
+//!   fits one bounded ledger line, via deterministic stride-doubling
+//!   decimation;
+//! * `--trace` writes a valid Chrome `trace_event` JSON array with
+//!   client-upload duration events and a link-utilization counter
+//!   track for a `flow:` cell.
 
 use nacfl::config::ExperimentConfig;
+use nacfl::des::{simulate_des_obs, DesConfig, Discipline};
 use nacfl::exp::{build_tables, execute, read_dist_ledger, ExecOptions, ExperimentPlan, Tier};
-use nacfl::obs::TelemLine;
+use nacfl::netsim::ScenarioKind;
+use nacfl::obs::{RoundSeries, SeriesLine, TelemLine, Telemetry, TraceRecorder, SERIES_CAP};
+use nacfl::policy::{PolicyEnv, PolicySpec};
+use nacfl::pop::{CohortProcess, PopSpec};
+use nacfl::util::rng::Rng;
 
 fn temp(tag: &str) -> String {
     std::env::temp_dir()
@@ -196,4 +215,191 @@ fn telem_lines_round_trip_through_the_dist_ledger_reader() {
     assert_eq!(led2.runs.len(), n, "no duplicate records on resume");
 
     std::fs::remove_file(&ls).ok();
+}
+
+#[test]
+fn series_off_ledgers_are_byte_identical_and_on_adds_only_series_lines() {
+    let plan = test_plan();
+    let l_a = temp("soff_a");
+    let l_b = temp("soff_b");
+    let l_on = temp("son");
+    for l in [&l_a, &l_b, &l_on] {
+        let _ = std::fs::remove_file(l);
+    }
+
+    // Series off: two fresh runs produce the same ledger byte for byte
+    // (single-threaded, no worker id => no wall-clock claim stamps).
+    execute(&plan, &opts(&l_a, false), &mut []).unwrap();
+    execute(&plan, &opts(&l_b, false), &mut []).unwrap();
+    let t_a = std::fs::read_to_string(&l_a).unwrap();
+    let t_b = std::fs::read_to_string(&l_b).unwrap();
+    assert_eq!(t_a, t_b, "series-off ledgers must be byte-identical run to run");
+    assert!(!t_a.contains("\"kind\":\"series\""), "off => no series lines");
+
+    // Series on: the record stream is untouched; the only new bytes are
+    // `"kind":"series"` lines, one per run, each parse/print stable.
+    let on = ExecOptions { series: true, ..opts(&l_on, false) };
+    execute(&plan, &on, &mut []).unwrap();
+    let t_on = std::fs::read_to_string(&l_on).unwrap();
+    assert_eq!(
+        record_lines(&t_a),
+        record_lines(&t_on),
+        "series recording must not perturb a record byte"
+    );
+    assert!(t_on.contains("\"kind\":\"series\""), "on => series lines stream");
+    let led = read_dist_ledger(&l_on).unwrap();
+    assert_eq!(led.series.len(), plan.n_runs(), "one series line per run");
+    for line in t_on.lines().filter(|l| l.contains("\"kind\":\"series\"")) {
+        assert_eq!(
+            SeriesLine::from_json(line).unwrap().to_json(),
+            line,
+            "series re-serialization must be byte-stable"
+        );
+    }
+
+    // Resume sees only the records, exactly as with telem lines.
+    let resumed = execute(&plan, &opts(&l_on, false), &mut []).unwrap();
+    assert_eq!(resumed.n_cached, plan.n_runs(), "series lines are invisible to resume");
+    assert_eq!(resumed.n_executed, 0);
+
+    for l in [&l_a, &l_b, &l_on] {
+        std::fs::remove_file(l).ok();
+    }
+}
+
+#[test]
+fn series_lines_are_identical_across_thread_counts() {
+    let plan = test_plan();
+    let l1 = temp("thr1");
+    let l2 = temp("thr2");
+    for l in [&l1, &l2] {
+        let _ = std::fs::remove_file(l);
+    }
+    let o1 = ExecOptions { series: true, ..opts(&l1, false) };
+    let o2 = ExecOptions {
+        threads: 2,
+        series: true,
+        ledger: Some(l2.clone()),
+        ..Default::default()
+    };
+    execute(&plan, &o1, &mut []).unwrap();
+    execute(&plan, &o2, &mut []).unwrap();
+    let series_lines = |p: &str| -> Vec<String> {
+        let mut v: Vec<String> = std::fs::read_to_string(p)
+            .unwrap()
+            .lines()
+            .filter(|l| l.contains("\"kind\":\"series\""))
+            .map(str::to_string)
+            .collect();
+        v.sort();
+        v
+    };
+    let a = series_lines(&l1);
+    let b = series_lines(&l2);
+    assert_eq!(a.len(), plan.n_runs());
+    assert_eq!(a, b, "series bytes are a pure function of run coordinates");
+    for l in [&l1, &l2] {
+        std::fs::remove_file(l).ok();
+    }
+}
+
+#[test]
+fn million_client_series_line_stays_bounded_and_decimates_deterministically() {
+    let cfg = ExperimentConfig::paper();
+    let ctx = cfg.policy_ctx();
+    let scen = ScenarioKind::parse("homog:2").unwrap();
+    let run = || {
+        let spec = PopSpec::parse("pop:1000000:k1000").unwrap();
+        let k = spec.k;
+        let mut process = CohortProcess::new(spec, scen, 3).unwrap();
+        let env = PolicyEnv::for_cell(&ctx, scen, k, 3);
+        let mut policy = PolicySpec::parse("fixed:2").unwrap().build(&env).unwrap();
+        // A convergence target far out of reach: the run burns through
+        // the whole round cap, pushing the recorder well past SERIES_CAP
+        // so stride-doubling decimation has to kick in.
+        let des = DesConfig::new(Discipline::Sync, 1e12).with_max_rounds(4 * SERIES_CAP);
+        let mut series = RoundSeries::on();
+        simulate_des_obs(
+            &ctx,
+            policy.as_mut(),
+            &mut process,
+            &des,
+            Rng::new(3).derive("des-fault", 0),
+            &mut Telemetry::off(),
+            &mut series,
+            &mut TraceRecorder::off(),
+        )
+        .unwrap();
+        series
+    };
+    let a = run();
+    assert_eq!(a.rounds_total(), (4 * SERIES_CAP) as u64);
+    assert!(a.len() <= SERIES_CAP, "kept rounds stay under the cap");
+    assert!(a.stride() >= 4, "stride doubles as rounds accumulate");
+    let line = a.line("pop-cell").unwrap().to_json();
+    assert!(
+        line.len() < 64 * 1024,
+        "a million-client long run still fits one bounded ledger line ({} bytes)",
+        line.len()
+    );
+    let b = run();
+    assert_eq!(
+        b.line("pop-cell").unwrap().to_json(),
+        line,
+        "decimation is a pure function of the sample path"
+    );
+}
+
+#[test]
+fn trace_export_writes_valid_chrome_trace_events_for_a_flow_cell() {
+    let mut base = ExperimentConfig::paper();
+    base.seeds = vec![0];
+    base.policies = vec!["fixed:2".into()];
+    let plan = ExperimentPlan::builder("trace demo")
+        .base(base)
+        .scenarios([ScenarioKind::parse("flow:tower:2x5").unwrap()])
+        .tiers([Tier::Analytic { k_eps: 40.0 }])
+        .build()
+        .unwrap();
+    let ledger = temp("trace_led");
+    let trace = std::env::temp_dir()
+        .join(format!("nacfl_obs_sys_trace_{}.json", std::process::id()))
+        .to_str()
+        .unwrap()
+        .to_string();
+    let _ = std::fs::remove_file(&ledger);
+    let _ = std::fs::remove_file(&trace);
+
+    let o = ExecOptions { trace: Some(trace.clone()), ..opts(&ledger, false) };
+    execute(&plan, &o, &mut []).unwrap();
+
+    let text = std::fs::read_to_string(&trace).unwrap();
+    let t = text.trim();
+    assert!(t.starts_with('[') && t.ends_with(']'), "a JSON array of events");
+    assert_eq!(
+        t.matches('{').count(),
+        t.matches('}').count(),
+        "every event object closes"
+    );
+    // Per-run process metadata names the run, so multi-run traces get
+    // one labeled track group per run in the viewer.
+    assert!(text.contains("\"name\":\"process_name\""), "run metadata row");
+    assert!(text.contains("\"ph\":\"M\""));
+    // Client uploads land as duration events on per-client tracks.
+    assert!(text.contains("\"name\":\"upload\""), "upload spans: {text}");
+    assert!(text.contains("\"ph\":\"X\""));
+    assert!(text.contains("\"dur\":"));
+    // The shared bottleneck contributes a link-utilization counter track.
+    assert!(text.contains("\"name\":\"link0.util\""), "link counter: {text}");
+    assert!(text.contains("\"ph\":\"C\""));
+    assert!(text.contains("\"args\":{\"util\":"));
+    // The trace is a sidecar: the ledger record stream is unchanged.
+    let with_trace = std::fs::read_to_string(&ledger).unwrap();
+    let _ = std::fs::remove_file(&ledger);
+    execute(&plan, &opts(&ledger, false), &mut []).unwrap();
+    let without = std::fs::read_to_string(&ledger).unwrap();
+    assert_eq!(record_lines(&with_trace), record_lines(&without));
+
+    std::fs::remove_file(&ledger).ok();
+    std::fs::remove_file(&trace).ok();
 }
